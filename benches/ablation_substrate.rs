@@ -1,0 +1,96 @@
+//! Ablations beyond the paper's figures (DESIGN.md A1/A2):
+//!
+//! * **A1** — DCA over two-sided messages vs DCA over the one-sided RMA
+//!   window (the PDP'19 original): same distributed calculation, different
+//!   assignment substrate.
+//! * **A2** — the §7 future-work scenario: inject the delay into the chunk
+//!   **assignment** instead of the calculation. The paper predicts this
+//!   erases DCA's advantage (the assignment is synchronized in both models,
+//!   and DCA makes more synchronized accesses).
+//!
+//! A2 uses a deliberately *saturating* regime — fine chunks (SS), short
+//! iterations (Mandelbrot's mean 10.25 ms, constant to kill the
+//! chunk-alignment lottery), 128 ranks, dedicated master — because a delayed
+//! but unsaturated master simply hides the delay behind worker compute.
+
+use dca_dls::config::{ClusterConfig, ExecutionModel};
+use dca_dls::des::{simulate, DesConfig};
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::workload::IterationCost;
+
+fn run(
+    model: ExecutionModel,
+    tech: TechniqueKind,
+    delay: InjectedDelay,
+    cost: &IterationCost,
+    ranks: u32,
+    break_after: u32,
+    n: u64,
+) -> f64 {
+    let cluster = ClusterConfig {
+        nodes: ranks / 16,
+        ranks_per_node: 16,
+        break_after,
+        ..ClusterConfig::minihpc()
+    };
+    let cfg = DesConfig {
+        params: LoopParams::new(n, cluster.total_ranks()),
+        technique: tech,
+        model,
+        delay,
+        cluster,
+        cost: cost.clone(),
+        pe_speed: vec![],
+    };
+    simulate(&cfg).expect("sim").t_par()
+}
+
+fn main() {
+    let psia = IterationCost::psia_table3(0xAB1A);
+
+    println!("== A1: assignment substrate (PSIA, 64 ranks, N=65536, no delay) ==");
+    println!("{:<8} {:>10} {:>10} {:>10}", "tech", "CCA[s]", "DCA[s]", "DCA-RMA[s]");
+    for tech in [TechniqueKind::Gss, TechniqueKind::Fac2, TechniqueKind::Fiss, TechniqueKind::Tss]
+    {
+        let cca = run(ExecutionModel::Cca, tech, InjectedDelay::none(), &psia, 64, 1, 65_536);
+        let dca = run(ExecutionModel::Dca, tech, InjectedDelay::none(), &psia, 64, 1, 65_536);
+        let rma =
+            run(ExecutionModel::DcaRma, tech, InjectedDelay::none(), &psia, 64, 1, 65_536);
+        println!("{:<8} {cca:>10.3} {dca:>10.3} {rma:>10.3}", tech.name());
+        // RMA (no service personality to contend with) must not be slower
+        // than two-sided DCA beyond noise.
+        assert!(rma <= dca * 1.05, "{tech}: RMA {rma:.2} should not exceed DCA {dca:.2}");
+    }
+
+    // Saturating regime for the delay-site comparison.
+    let flat = IterationCost::Constant(0.01025);
+    let (ranks, ba, n) = (128u32, 0u32, 131_072u64);
+    let base = |m| run(m, TechniqueKind::Ss, InjectedDelay::none(), &flat, ranks, ba, n);
+    let cca0 = base(ExecutionModel::Cca);
+    let dca0 = base(ExecutionModel::Dca);
+
+    println!("\n== A2: delay site = ASSIGNMENT (100µs), SS, 128 ranks, dedicated master ==");
+    let d = InjectedDelay::assignment_only(100e-6);
+    let cca = run(ExecutionModel::Cca, TechniqueKind::Ss, d, &flat, ranks, ba, n);
+    let dca = run(ExecutionModel::Dca, TechniqueKind::Ss, d, &flat, ranks, ba, n);
+    println!("CCA: {cca0:.3} → {cca:.3}  ({:.2}x)", cca / cca0);
+    println!("DCA: {dca0:.3} → {dca:.3}  ({:.2}x)", dca / dca0);
+    assert!(
+        dca / dca0 >= cca / cca0 - 0.02,
+        "§7 prediction: assignment-site delay must hurt DCA at least as much as CCA"
+    );
+    println!("§7 prediction (assignment delay erases DCA's edge): HOLDS");
+
+    println!("\n== A2b: delay site = CALCULATION (100µs), same regime — the paper's main case ==");
+    let d = InjectedDelay::calculation_only(100e-6);
+    let cca_c = run(ExecutionModel::Cca, TechniqueKind::Ss, d, &flat, ranks, ba, n);
+    let dca_c = run(ExecutionModel::Dca, TechniqueKind::Ss, d, &flat, ranks, ba, n);
+    println!("CCA: {cca0:.3} → {cca_c:.3}  ({:.2}x)", cca_c / cca0);
+    println!("DCA: {dca0:.3} → {dca_c:.3}  ({:.2}x)", dca_c / dca0);
+    assert!(
+        cca_c / cca0 > dca_c / dca0 + 0.05,
+        "calculation-site delay must hurt CCA distinctly more (the paper's core claim)"
+    );
+    println!("core claim (calculation delay: DCA wins): HOLDS");
+}

@@ -1,0 +1,58 @@
+//! Regeneration of **Fig. 1**: chunk-size patterns (fixed / decreasing /
+//! increasing / irregular) over the scheduling steps, N=1000 P=4 —
+//! the paper's Mandelbrot example point.
+
+use dca_dls::report::figures::fig1_series;
+use dca_dls::techniques::{LoopParams, Pattern};
+
+fn main() {
+    let params = LoopParams::new(1000, 4);
+    let series = fig1_series(&params);
+
+    println!("== Fig 1: chunk size vs scheduling step (N=1000, P=4) ==");
+    for pattern in [Pattern::Fixed, Pattern::Decreasing, Pattern::Increasing, Pattern::Irregular]
+    {
+        println!("\n-- {pattern:?} --");
+        for (kind, sizes) in series.iter().filter(|(k, _)| k.pattern() == pattern) {
+            // Sparkline-style scaled plot (max 40 cols).
+            let max = *sizes.iter().max().unwrap() as f64;
+            let bars: String = sizes
+                .iter()
+                .take(40)
+                .map(|&s| {
+                    let lvl = (s as f64 / max * 7.0).round() as usize;
+                    ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'][lvl.min(7)]
+                })
+                .collect();
+            println!("{:<8} {:>5} chunks  {bars}", kind.name(), sizes.len());
+        }
+    }
+
+    // Pattern invariants (the figure's qualitative content).
+    for (kind, sizes) in &series {
+        match kind.pattern() {
+            Pattern::Fixed => {
+                let inner = &sizes[..sizes.len() - 1];
+                assert!(
+                    inner.windows(2).all(|w| w[0] == w[1]),
+                    "{kind}: fixed pattern must be constant (except the clipped tail)"
+                );
+            }
+            Pattern::Decreasing => {
+                assert!(
+                    sizes.windows(2).all(|w| w[0] >= w[1]),
+                    "{kind}: decreasing pattern must be non-increasing"
+                );
+            }
+            Pattern::Increasing => {
+                let inner = &sizes[..sizes.len() - 1];
+                assert!(
+                    inner.windows(2).all(|w| w[0] <= w[1]),
+                    "{kind}: increasing pattern must be non-decreasing (except the clipped tail)"
+                );
+            }
+            Pattern::Irregular => {}
+        }
+    }
+    println!("\npattern invariants: OK");
+}

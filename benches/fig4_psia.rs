@@ -1,0 +1,62 @@
+//! Regeneration of **Fig. 4**: PSIA `T_loop^par` across 12 techniques ×
+//! {CCA, DCA} × injected delays {0, 10, 100 µs} on the simulated 256-rank
+//! miniHPC, plus the paper-shape checks from §6's discussion.
+//!
+//! Repetitions default to 5 (paper: 20) to keep `cargo bench` quick; set
+//! `BENCH_REPS=20` for the full design.
+
+use std::time::Instant;
+
+use dca_dls::config::ExecutionModel;
+use dca_dls::report::figures::{run_figure, App, FigureConfig};
+use dca_dls::report::render_figure;
+use dca_dls::techniques::TechniqueKind;
+
+fn main() {
+    let mut cfg = FigureConfig::paper(App::Psia);
+    cfg.reps = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let t0 = Instant::now();
+    let rows = run_figure(&cfg).expect("fig4");
+    print!("{}", render_figure("Figure 4 (PSIA, 256 ranks, N=262144)", &rows));
+    println!("\n(regenerated in {:?}, {} reps/cell)", t0.elapsed(), cfg.reps);
+
+    let t = |tech: TechniqueKind, model: ExecutionModel, d: f64| {
+        rows.iter()
+            .find(|r| r.technique == tech && r.model == model && (r.delay - d).abs() < 1e-9)
+            .unwrap()
+            .runs
+            .t_par_mean
+    };
+
+    // §6: "the parallel loop execution time is 73.41 s with STATIC" —
+    // calibration puts us in the same regime (~75 s).
+    let static_cca = t(TechniqueKind::Static, ExecutionModel::Cca, 0.0);
+    assert!(
+        (70.0..82.0).contains(&static_cca),
+        "STATIC/CCA T_par {static_cca:.1}s out of the paper's regime"
+    );
+
+    // §6: no-delay CCA vs DCA differences are small (paper: 2–3%).
+    for tech in [TechniqueKind::Gss, TechniqueKind::Fac2, TechniqueKind::Tss] {
+        let c = t(tech, ExecutionModel::Cca, 0.0);
+        let d = t(tech, ExecutionModel::Dca, 0.0);
+        assert!(
+            (d / c - 1.0).abs() < 0.05,
+            "{tech}: no-delay CCA/DCA gap too large ({c:.2} vs {d:.2})"
+        );
+    }
+
+    // §6: with the largest delay, CCA is more sensitive than DCA.
+    let mut cca_worse = 0;
+    let mut total = 0;
+    for tech in TechniqueKind::EVALUATED {
+        let c = t(tech, ExecutionModel::Cca, 100e-6) / t(tech, ExecutionModel::Cca, 0.0);
+        let d = t(tech, ExecutionModel::Dca, 100e-6) / t(tech, ExecutionModel::Dca, 0.0);
+        total += 1;
+        if c >= d - 0.01 {
+            cca_worse += 1;
+        }
+    }
+    println!("paper-shape check: CCA at least as delay-sensitive as DCA in {cca_worse}/{total} techniques");
+    assert!(cca_worse * 3 >= total * 2, "CCA should degrade at least as much in most techniques");
+}

@@ -1,0 +1,58 @@
+//! Regeneration of **Fig. 5**: Mandelbrot `T_loop^par` across 12 techniques
+//! × {CCA, DCA} × injected delays {0, 10, 100 µs} on the simulated 256-rank
+//! miniHPC — including the paper's headline observation (Fig. 5c): **AF
+//! under CCA degrades dramatically at 100 µs** because AF's fine chunks
+//! multiply the serialized master-side delay, while AF under DCA pays the
+//! delay in parallel and barely moves.
+//!
+//! `BENCH_REPS=20` for the paper's full 20-repetition design (default 5).
+
+use std::time::Instant;
+
+use dca_dls::config::ExecutionModel;
+use dca_dls::report::figures::{run_figure, App, FigureConfig};
+use dca_dls::report::render_figure;
+use dca_dls::techniques::TechniqueKind;
+
+fn main() {
+    let mut cfg = FigureConfig::paper(App::Mandelbrot);
+    cfg.reps = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
+    let t0 = Instant::now();
+    let rows = run_figure(&cfg).expect("fig5");
+    print!("{}", render_figure("Figure 5 (Mandelbrot, 256 ranks, N=262144)", &rows));
+    println!("\n(regenerated in {:?}, {} reps/cell, CT scaled to {})", t0.elapsed(), cfg.reps, cfg.mandelbrot_ct);
+
+    let t = |tech: TechniqueKind, model: ExecutionModel, d: f64| {
+        rows.iter()
+            .find(|r| r.technique == tech && r.model == model && (r.delay - d).abs() < 1e-9)
+            .unwrap()
+            .runs
+            .t_par_mean
+    };
+
+    // Fig. 5c headline: AF-CCA degrades under the 100 µs delay; AF-DCA holds.
+    let af_cca = t(TechniqueKind::Af, ExecutionModel::Cca, 100e-6)
+        / t(TechniqueKind::Af, ExecutionModel::Cca, 0.0);
+    let af_dca = t(TechniqueKind::Af, ExecutionModel::Dca, 100e-6)
+        / t(TechniqueKind::Af, ExecutionModel::Dca, 0.0);
+    println!("AF degradation @100µs: CCA {af_cca:.2}x  DCA {af_dca:.2}x");
+    assert!(
+        af_cca > af_dca + 0.1,
+        "Fig 5c shape: AF-CCA ({af_cca:.2}x) must degrade more than AF-DCA ({af_dca:.2}x)"
+    );
+    assert!(af_dca < 1.15, "AF-DCA should be barely affected by the delay");
+
+    // AF produces far more chunks than coarse techniques (the mechanism).
+    let af_chunks = rows
+        .iter()
+        .find(|r| r.technique == TechniqueKind::Af && r.model == ExecutionModel::Cca && r.delay == 0.0)
+        .unwrap()
+        .chunks;
+    let fac_chunks = rows
+        .iter()
+        .find(|r| r.technique == TechniqueKind::Fac2 && r.model == ExecutionModel::Cca && r.delay == 0.0)
+        .unwrap()
+        .chunks;
+    println!("chunk counts: AF={af_chunks} FAC={fac_chunks}");
+    assert!(af_chunks > 5 * fac_chunks, "AF must schedule far finer than FAC");
+}

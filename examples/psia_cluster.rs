@@ -1,0 +1,80 @@
+//! PSIA (spin images) both ways:
+//!
+//! 1. **Paper scale** — 256 simulated ranks over the Table 3-calibrated
+//!    iteration-cost model (the Fig. 4 workload);
+//! 2. **Host scale** — a real multi-threaded run where chunks execute actual
+//!    spin-image computations over the synthetic point cloud.
+//!
+//! Run: `cargo run --release --example psia_cluster`
+
+use std::sync::Arc;
+
+use dca_dls::config::{ClusterConfig, ExecutionModel};
+use dca_dls::coordinator::{self, EngineConfig};
+use dca_dls::des::{simulate, DesConfig};
+use dca_dls::sched::verify_coverage;
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::workload::psia::Psia;
+use dca_dls::workload::{IterationCost, Workload};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. paper scale (DES) ---------------------------------------------
+    println!("== PSIA, 256 simulated ranks, N=262144, delay 100 µs ==\n");
+    println!("{:<8} {:>12} {:>12}", "tech", "CCA T_par[s]", "DCA T_par[s]");
+    for tech in [
+        TechniqueKind::Static,
+        TechniqueKind::Gss,
+        TechniqueKind::Fac2,
+        TechniqueKind::Tfss,
+        TechniqueKind::Af,
+    ] {
+        let mut t = vec![];
+        for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
+            let cluster = ClusterConfig::minihpc();
+            let cfg = DesConfig {
+                params: LoopParams::new(262_144, cluster.total_ranks()),
+                technique: tech,
+                model,
+                delay: InjectedDelay::calculation_only(100e-6),
+                cluster,
+                cost: IterationCost::psia_table3(0xF16_4),
+                pe_speed: vec![],
+            };
+            t.push(simulate(&cfg)?.t_par());
+        }
+        println!("{:<8} {:>12.3} {:>12.3}", tech.name(), t[0], t[1]);
+    }
+
+    // --- 2. host scale (real threads, real spin images) --------------------
+    let workers = std::thread::available_parallelism()
+        .map(|c| c.get() as u32)
+        .unwrap_or(4)
+        .clamp(2, 8);
+    let n = 2_048u64;
+    println!("\n== real spin-image execution, {workers} worker threads, N={n} ==\n");
+    let workload: Arc<dyn Workload> = Arc::new(Psia::synthetic(1_024, n, 0x5e1a));
+    let reference = workload.execute_range(0, n);
+    for (tech, model) in [
+        (TechniqueKind::Fac2, ExecutionModel::Cca),
+        (TechniqueKind::Fac2, ExecutionModel::Dca),
+        (TechniqueKind::Af, ExecutionModel::Dca),
+        (TechniqueKind::Gss, ExecutionModel::DcaRma),
+    ] {
+        let cfg = EngineConfig::new(LoopParams::new(n, workers), tech, model);
+        let t0 = std::time::Instant::now();
+        let r = coordinator::run(&cfg, Arc::clone(&workload))?;
+        verify_coverage(&r.sorted_assignments(), n)
+            .map_err(|e| anyhow::anyhow!("coverage: {e}"))?;
+        assert_eq!(r.checksum, reference, "checksum mismatch");
+        println!(
+            "{:<5} {:<8} wall={:.3}s chunks={:>4} messages={:>5}  checksum OK",
+            tech.name(),
+            model.name(),
+            t0.elapsed().as_secs_f64(),
+            r.stats.chunks,
+            r.stats.messages
+        );
+    }
+    Ok(())
+}

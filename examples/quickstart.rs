@@ -1,0 +1,81 @@
+//! Quickstart: the library in five minutes.
+//!
+//! 1. Generate a technique's chunk schedule in both forms (Table 2 style).
+//! 2. Self-schedule a real loop across threads with CCA and DCA.
+//! 3. Drive the LB4MPI-compatible API exactly like Listing 1.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use std::sync::Arc;
+use std::thread;
+
+use dca_dls::config::ExecutionModel;
+use dca_dls::coordinator::{self, EngineConfig};
+use dca_dls::lb4mpi::{
+    configure_chunk_calculation_mode, dls_end_chunk, dls_end_loop, dls_parameters_setup,
+    dls_start_chunk, dls_start_loop, dls_terminated, CalcMode,
+};
+use dca_dls::sched::{closed_form_schedule, recursive_schedule, verify_coverage};
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{LoopParams, Technique, TechniqueKind};
+use dca_dls::workload::synthetic::{CostShape, Synthetic};
+use dca_dls::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. chunk calculation, both forms --------------------------------
+    let params = LoopParams::new(1000, 4);
+    let gss = Technique::new(TechniqueKind::Gss, &params);
+
+    let closed = closed_form_schedule(&gss, &params); // DCA / Eq. 14
+    let recursive = recursive_schedule(&gss, &params); // CCA / Eq. 4
+    println!("GSS closed   : {:?}", closed.iter().map(|a| a.size).collect::<Vec<_>>());
+    println!("GSS recursive: {:?}", recursive.iter().map(|a| a.size).collect::<Vec<_>>());
+    verify_coverage(&closed, params.n).unwrap();
+    verify_coverage(&recursive, params.n).unwrap();
+
+    // --- 2. self-schedule a real loop over threads -----------------------
+    let workload: Arc<dyn Workload> =
+        Arc::new(Synthetic::new(20_000, 2e-6, CostShape::Jittered, 42));
+    for model in [ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma] {
+        let cfg = EngineConfig::new(
+            LoopParams::new(20_000, 4),
+            TechniqueKind::Fac2,
+            model,
+        );
+        let r = coordinator::run(&cfg, Arc::clone(&workload))?;
+        println!(
+            "{:<8} T_par={:.4}s chunks={:>3} messages={:>4} checksum={:#018x}",
+            model.name(),
+            r.stats.t_par,
+            r.stats.chunks,
+            r.stats.messages,
+            r.checksum
+        );
+    }
+
+    // --- 3. the LB4MPI API (Listing 1) ------------------------------------
+    let mut infos = dls_parameters_setup(4, InjectedDelay::none());
+    configure_chunk_calculation_mode(&infos[0], CalcMode::Decentralized);
+    let params = LoopParams::new(10_000, 4);
+    let handles: Vec<_> = infos
+        .drain(..)
+        .map(|mut info| {
+            let params = params.clone();
+            thread::spawn(move || {
+                dls_start_loop(&mut info, &params, TechniqueKind::Tss);
+                while !dls_terminated(&info) {
+                    if let Some((start, size)) = dls_start_chunk(&mut info) {
+                        // "execute" the chunk
+                        std::hint::black_box(start + size);
+                        dls_end_chunk(&mut info);
+                    }
+                }
+                dls_end_loop(&mut info)
+            })
+        })
+        .collect();
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap().0).sum();
+    println!("LB4MPI API: {total} iterations scheduled across 4 ranks (expected 10000)");
+    assert_eq!(total, 10_000);
+    Ok(())
+}

@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: Mandelbrot escape-count over a tile of loop iterations.
+
+One DLS loop iteration = one pixel (Listing 3). The rust coordinator assigns
+variable-size chunks; the kernel executes a fixed-shape TILE of linearized
+pixel indices with *masking*: lanes beyond the chunk get a constant ``c``
+outside the set (|c| > 2) which escapes at the first check, so masked lanes
+cost nearly nothing and the chunk semantics ("exactly these iterations")
+survive the fixed shape.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets a CPU
+cluster; on TPU the pixel loop becomes a lane-vectorized VPU kernel over an
+(8, 128) VMEM tile — the canonical float32 TPU tile — with the escape loop as
+a ``fori_loop``. ``interpret=True`` is mandatory for CPU-PJRT execution.
+
+Numerics are float64 (matching the rust-native implementation bit-for-bit:
+same operation order, same IEEE arithmetic), so the PJRT path and the native
+path produce identical escape counts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The canonical TPU float32 tile (sublane × lane).
+TILE_ROWS = 8
+TILE_COLS = 128
+TILE = TILE_ROWS * TILE_COLS
+
+
+def _kernel(start_ref, size_ref, o_ref, *, width, ct, x_min, x_max, y_min, y_max):
+    """Escape counts for pixels [start, start+TILE), masked beyond `size`."""
+    start = start_ref[0, 0]
+    size = size_ref[0, 0]
+    # int32 index math throughout — N = W² < 2³¹ always holds here, and TPU
+    # lanes are 32-bit (int64 would halve the effective vector width).
+    lane = jax.lax.broadcasted_iota(jnp.int32, (TILE_ROWS, TILE_COLS), 0) * TILE_COLS
+    lane = lane + jax.lax.broadcasted_iota(jnp.int32, (TILE_ROWS, TILE_COLS), 1)
+    idx = start + lane
+    active = lane < size
+
+    w = jnp.int32(width)
+    wf = jnp.float64(width)
+    x = (idx // w).astype(jnp.float64)
+    y = (idx % w).astype(jnp.float64)
+    cre = x_min + x / wf * (x_max - x_min)
+    cim = y_min + y / wf * (y_max - y_min)
+    # Masked lanes: c = (3, 0) → |z₁| = 3 ≥ 2 escapes immediately.
+    cre = jnp.where(active, cre, 3.0)
+    cim = jnp.where(active, cim, 0.0)
+
+    def body(_k, state):
+        zre, zim, count = state
+        r2 = zre * zre + zim * zim
+        live = r2 < 4.0
+        # z⁴ = (z²)² — identical operation order to the rust native path.
+        a2 = zre * zre - zim * zim
+        b2 = 2.0 * zre * zim
+        a4 = a2 * a2 - b2 * b2
+        b4 = 2.0 * a2 * b2
+        zre_n = a4 + cre
+        zim_n = b4 + cim
+        zre = jnp.where(live, zre_n, zre)
+        zim = jnp.where(live, zim_n, zim)
+        count = count + live.astype(jnp.int32)
+        return zre, zim, count
+
+    zre0 = jnp.zeros((TILE_ROWS, TILE_COLS), jnp.float64)
+    zim0 = jnp.zeros((TILE_ROWS, TILE_COLS), jnp.float64)
+    cnt0 = jnp.zeros((TILE_ROWS, TILE_COLS), jnp.int32)
+    _, _, count = jax.lax.fori_loop(0, ct, body, (zre0, zim0, cnt0))
+    o_ref[...] = count
+
+
+@functools.partial(
+    jax.jit, static_argnames=("width", "ct", "x_min", "x_max", "y_min", "y_max")
+)
+def mandelbrot_tile(start, size, *, width, ct, x_min=-2.0, x_max=1.0,
+                    y_min=-1.5, y_max=1.5):
+    """Escape counts for the chunk tile starting at `start` (`size` live lanes).
+
+    Args:
+      start: int32[1,1] — first linearized pixel index of the tile.
+      size:  int32[1,1] — live lanes (`≤ TILE`); the rest are masked.
+    Returns:
+      int32[TILE_ROWS, TILE_COLS] escape counts (masked lanes are 0 or 1).
+    """
+    kern = functools.partial(
+        _kernel, width=width, ct=ct, x_min=x_min, x_max=x_max, y_min=y_min, y_max=y_max
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((TILE_ROWS, TILE_COLS), jnp.int32),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(start, size)

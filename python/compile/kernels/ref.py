@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+These re-express Listings 2-3 directly in jax.numpy with no Pallas
+machinery; pytest (and hypothesis sweeps) compare kernel outputs against
+them exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def mandelbrot_ref(start, size, tile, *, width, ct, x_min=-2.0, x_max=1.0,
+                   y_min=-1.5, y_max=1.5):
+    """Escape counts for `tile` lanes starting at linear pixel `start`."""
+    lane = jnp.arange(tile, dtype=jnp.int32)
+    idx = jnp.int32(start) + lane
+    active = lane < jnp.int32(size)
+    w = jnp.int32(width)
+    wf = jnp.float64(width)
+    x = (idx // w).astype(jnp.float64)
+    y = (idx % w).astype(jnp.float64)
+    cre = jnp.where(active, x_min + x / wf * (x_max - x_min), 3.0)
+    cim = jnp.where(active, y_min + y / wf * (y_max - y_min), 0.0)
+
+    def body(_k, state):
+        zre, zim, count = state
+        live = zre * zre + zim * zim < 4.0
+        a2 = zre * zre - zim * zim
+        b2 = 2.0 * zre * zim
+        a4 = a2 * a2 - b2 * b2
+        b4 = 2.0 * a2 * b2
+        zre = jnp.where(live, a4 + cre, zre)
+        zim = jnp.where(live, b4 + cim, zim)
+        return zre, zim, count + live.astype(jnp.int32)
+
+    z0 = jnp.zeros(tile, jnp.float64)
+    c0 = jnp.zeros(tile, jnp.int32)
+    _, _, count = jax.lax.fori_loop(0, ct, body, (z0, z0, c0))
+    return count
+
+
+def spin_image_ref(points, normals, start, size, tile_i, *, image_width,
+                   bin_size, support_angle):
+    """W×W histograms for `tile_i` spin images starting at iteration `start`."""
+    m = points.shape[0]
+    w = image_width
+    img_idx = jnp.int64(start) + jnp.arange(tile_i, dtype=jnp.int64)
+    active = jnp.arange(tile_i) < size
+    sp_i = (img_idx % m).astype(jnp.int32)
+    sp = points[sp_i]
+    sn = normals[sp_i]
+    cos_support = jnp.float32(jnp.cos(support_angle))
+    dot_nn = jnp.einsum("ic,jc->ij", sn, normals)
+    accept = dot_nn >= cos_support
+    d = points[None, :, :] - sp[:, None, :]
+    beta = jnp.einsum("ic,ijc->ij", sn, d)
+    d2 = jnp.sum(d * d, axis=-1)
+    alpha = jnp.sqrt(jnp.maximum(d2 - beta * beta, 0.0))
+    half = jnp.float32(w) * jnp.float32(bin_size) / 2.0
+    k = jnp.ceil((half - beta) / jnp.float32(bin_size))
+    l = jnp.ceil(alpha / jnp.float32(bin_size))
+    ok = accept & (k >= 0) & (k < w) & (l >= 0) & (l < w) & active[:, None]
+    flat = jnp.where(ok, (k * w + l).astype(jnp.int32), -1)
+
+    # Histogram via bincount per image row (out-of-range → overflow cell).
+    def hist_row(row):
+        return jnp.bincount(jnp.where(row >= 0, row, w * w), length=w * w + 1)[: w * w]
+
+    return jax.vmap(hist_row)(flat).astype(jnp.int32)

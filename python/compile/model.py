@@ -1,0 +1,57 @@
+"""L2: the applications' compute graphs in JAX, calling the L1 kernels.
+
+These are the "models" the rust coordinator executes per assigned chunk —
+the full per-chunk computation of Listings 2-3 plus the application-level
+postprocessing (Mandelbrot's black/blue classification; the spin image's
+chunk checksum). Lowered once by `aot.py` to HLO text; Python never runs on
+the scheduling path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.mandelbrot import TILE, TILE_COLS, TILE_ROWS, mandelbrot_tile
+from compile.kernels.spin_image import TILE_I, spin_image_tile
+
+
+def mandelbrot_chunk_tile(start, size, *, width, ct):
+    """One tile of a Mandelbrot chunk.
+
+    Returns (escape counts int32[8,128], V int32[8,128], checksum i64[1,1]):
+    `V` is the visual classification of Listing 3 (1 = black/in-set,
+    0 = blue/escaped), and the checksum is the masked sum of escape counts —
+    the quantity the rust runtime cross-checks against the native path.
+    """
+    counts = mandelbrot_tile(start, size, width=width, ct=ct)
+    in_set = (counts >= jnp.int32(ct)).astype(jnp.int32)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (TILE_ROWS, TILE_COLS), 0) * TILE_COLS
+    lane = lane + jax.lax.broadcasted_iota(jnp.int32, (TILE_ROWS, TILE_COLS), 1)
+    active = lane < size[0, 0]
+    checksum = jnp.sum(
+        jnp.where(active, counts, 0).astype(jnp.int64), dtype=jnp.int64
+    ).reshape(1, 1)
+    return counts, in_set, checksum
+
+
+def spin_image_chunk_tile(points, normals, start, size, *, image_width,
+                          bin_size, support_angle, m):
+    """One tile of a PSIA chunk.
+
+    Returns (histograms int32[TILE_I, W²], checksum i64[1,1]). The checksum
+    is the position-weighted histogram sum, matching
+    `rust/src/workload/psia.rs::execute`.
+    """
+    hist = spin_image_tile(
+        points, normals, start, size,
+        image_width=image_width, bin_size=bin_size,
+        support_angle=support_angle, m=m,
+    )
+    w2 = image_width * image_width
+    weights = (jnp.arange(w2, dtype=jnp.int64) + 1)[None, :]
+    checksum = jnp.sum(hist.astype(jnp.int64) * weights, dtype=jnp.int64).reshape(1, 1)
+    return hist, checksum
+
+
+def tile_sizes():
+    """Static tile geometry baked into the artifacts (consumed by meta.json)."""
+    return {"mandelbrot_tile": TILE, "spin_image_tile": TILE_I}

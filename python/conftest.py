@@ -1,0 +1,10 @@
+"""Ensure `compile` is importable and float64 is on before any test runs."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,44 @@
+"""AOT path: lowering produces valid HLO text with the expected signature."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+
+def test_mandelbrot_lowers_to_hlo_text():
+    text = aot.to_hlo_text(aot.lower_mandelbrot())
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # Signature: two s32[1,1] params → (counts, V, checksum).
+    assert "(s32[1,1]{1,0}, s32[1,1]{1,0})" in text
+    assert "->(s32[8,128]{1,0}, s32[8,128]{1,0}, s64[1,1]{1,0})" in text
+
+
+def test_spin_image_lowers_to_hlo_text():
+    text = aot.to_hlo_text(aot.lower_spin_image())
+    assert text.startswith("HloModule")
+    m = aot.PSIA["m"]
+    assert f"f32[{m},3]" in text
+    # Signature: cloud + normals + two scalars.
+    assert f"(f32[{m},3]{{1,0}}, f32[{m},3]{{1,0}}, s32[1,1]{{1,0}}, s32[1,1]{{1,0}})" in text
+
+
+def test_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    for f in ["mandelbrot.hlo.txt", "spin_image.hlo.txt", "meta.json"]:
+        assert (out / f).exists(), f
+    meta = json.loads((out / "meta.json").read_text())
+    assert meta["mandelbrot"]["tile"] == 1024
+    assert meta["format"] == "hlo-text"

@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (exact equality),
+with hypothesis sweeps over chunk geometry."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.mandelbrot import TILE, mandelbrot_tile
+from compile.kernels.spin_image import TILE_I, spin_image_tile
+
+W, CT = 64, 128  # small test instance (kernel is shape-generic via statics)
+
+
+def scalar(v):
+    return jnp.full((1, 1), v, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Mandelbrot
+
+
+def mandel_kernel(start, size):
+    return np.asarray(
+        mandelbrot_tile(scalar(start), scalar(size), width=W, ct=CT)
+    ).reshape(-1)
+
+
+def mandel_oracle(start, size):
+    return np.asarray(ref.mandelbrot_ref(start, size, TILE, width=W, ct=CT))
+
+
+def test_mandelbrot_full_tile_matches_ref():
+    np.testing.assert_array_equal(mandel_kernel(0, TILE), mandel_oracle(0, TILE))
+
+
+def test_mandelbrot_masked_lanes_cost_nothing():
+    got = mandel_kernel(0, 7)
+    # Masked lanes escape at the first step: count ≤ 1.
+    assert (got[7:] <= 1).all()
+    np.testing.assert_array_equal(got[:7], mandel_oracle(0, 7)[:7])
+
+
+def test_mandelbrot_interior_hits_ct():
+    # A tile over the image centre contains in-set pixels (count == CT).
+    centre = (W // 2) * W + W // 2 - TILE // 2
+    got = mandel_kernel(centre, TILE)
+    assert got.max() == CT, "centre tile must contain converged pixels"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    start=st.integers(min_value=0, max_value=W * W - 1),
+    size=st.integers(min_value=0, max_value=TILE),
+)
+def test_mandelbrot_hypothesis_sweep(start, size):
+    np.testing.assert_array_equal(
+        mandel_kernel(start, size), mandel_oracle(start, size)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Spin image
+
+M = 256
+PSIA_KW = dict(image_width=5, bin_size=0.45, support_angle=0.5)
+
+
+@pytest.fixture(scope="module")
+def cloud():
+    rng = np.random.default_rng(42)
+    pts = rng.normal(size=(M, 3)).astype(np.float32)
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    nrm = pts.copy()
+    pts *= (1.0 + 0.05 * rng.uniform(-0.5, 0.5, size=(M, 1))).astype(np.float32)
+    return jnp.asarray(pts), jnp.asarray(nrm)
+
+
+def spin_kernel(cloud, start, size):
+    pts, nrm = cloud
+    return np.asarray(
+        spin_image_tile(pts, nrm, scalar(start), scalar(size), m=M, **PSIA_KW)
+    )
+
+
+def spin_oracle(cloud, start, size):
+    pts, nrm = cloud
+    return np.asarray(
+        ref.spin_image_ref(pts, nrm, start, size, TILE_I, **PSIA_KW)
+    )
+
+
+def test_spin_image_matches_ref(cloud):
+    np.testing.assert_array_equal(
+        spin_kernel(cloud, 0, TILE_I), spin_oracle(cloud, 0, TILE_I)
+    )
+
+
+def test_spin_image_masked_rows_zero(cloud):
+    got = spin_kernel(cloud, 0, 3)
+    assert (got[3:] == 0).all()
+    np.testing.assert_array_equal(got[:3], spin_oracle(cloud, 0, 3)[:3])
+
+
+def test_spin_image_nonempty(cloud):
+    # With the scaled bin the histograms must actually bin points.
+    assert spin_kernel(cloud, 0, TILE_I).sum() > 0
+
+
+def test_spin_image_iteration_cycles_cloud(cloud):
+    # Iteration index m maps to the same spin point as iteration 0.
+    np.testing.assert_array_equal(
+        spin_kernel(cloud, 0, 1)[0], spin_kernel(cloud, M, 1)[0]
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    start=st.integers(min_value=0, max_value=4 * M),
+    size=st.integers(min_value=0, max_value=TILE_I),
+)
+def test_spin_image_hypothesis_sweep(cloud, start, size):
+    np.testing.assert_array_equal(
+        spin_kernel(cloud, start, size), spin_oracle(cloud, start, size)
+    )

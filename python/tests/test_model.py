@@ -1,0 +1,64 @@
+"""L2 correctness: chunk-tile models (kernel + postprocessing)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels.mandelbrot import TILE
+from compile.kernels.spin_image import TILE_I
+
+W, CT = 64, 128
+
+
+def scalar(v):
+    return jnp.full((1, 1), v, jnp.int32)
+
+
+def test_mandelbrot_chunk_outputs():
+    counts, in_set, checksum = model.mandelbrot_chunk_tile(
+        scalar(0), scalar(TILE), width=W, ct=CT
+    )
+    counts = np.asarray(counts).reshape(-1)
+    in_set = np.asarray(in_set).reshape(-1)
+    assert counts.shape == (TILE,)
+    # Classification is consistent with the counts.
+    np.testing.assert_array_equal(in_set, (counts >= CT).astype(np.int32))
+    assert int(np.asarray(checksum)[0, 0]) == counts.sum()
+
+
+def test_mandelbrot_checksum_masks_dead_lanes():
+    _, _, cs_full = model.mandelbrot_chunk_tile(scalar(0), scalar(TILE), width=W, ct=CT)
+    counts_small, _, cs_small = model.mandelbrot_chunk_tile(
+        scalar(0), scalar(5), width=W, ct=CT
+    )
+    small = np.asarray(counts_small).reshape(-1)[:5].sum()
+    assert int(np.asarray(cs_small)[0, 0]) == small
+    assert int(np.asarray(cs_small)[0, 0]) <= int(np.asarray(cs_full)[0, 0])
+
+
+@pytest.fixture(scope="module")
+def cloud():
+    rng = np.random.default_rng(7)
+    pts = rng.normal(size=(128, 3)).astype(np.float32)
+    pts /= np.linalg.norm(pts, axis=1, keepdims=True)
+    return jnp.asarray(pts), jnp.asarray(pts.copy())
+
+
+def test_spin_image_chunk_outputs(cloud):
+    pts, nrm = cloud
+    kw = dict(image_width=5, bin_size=0.45, support_angle=0.5, m=128)
+    hist, checksum = model.spin_image_chunk_tile(
+        pts, nrm, scalar(0), scalar(TILE_I), **kw
+    )
+    hist = np.asarray(hist)
+    assert hist.shape == (TILE_I, 25)
+    weights = np.arange(25, dtype=np.int64) + 1
+    expect = (hist.astype(np.int64) * weights[None, :]).sum()
+    assert int(np.asarray(checksum)[0, 0]) == expect
+
+
+def test_tile_sizes_exported():
+    ts = model.tile_sizes()
+    assert ts["mandelbrot_tile"] == TILE
+    assert ts["spin_image_tile"] == TILE_I

@@ -1,0 +1,194 @@
+//! Experiment configuration — the encoded form of the paper's Table 4
+//! factorial design, serializable to/from JSON for the CLI and benches.
+
+use crate::techniques::{LoopParams, TechniqueKind};
+
+
+/// Which chunk-calculation approach drives the run (the paper's central
+/// comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecutionModel {
+    /// Centralized: master performs calculation **and** assignment (§3).
+    Cca,
+    /// Distributed over two-sided messages: coordinator assigns, workers
+    /// calculate (§4–5, this paper's contribution).
+    Dca,
+    /// Distributed over the one-sided RMA window (the PDP'19 predecessor).
+    DcaRma,
+}
+
+impl ExecutionModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecutionModel::Cca => "CCA",
+            ExecutionModel::Dca => "DCA",
+            ExecutionModel::DcaRma => "DCA-RMA",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_uppercase().as_str() {
+            "CCA" => Some(ExecutionModel::Cca),
+            "DCA" => Some(ExecutionModel::Dca),
+            "DCA-RMA" | "DCARMA" | "RMA" => Some(ExecutionModel::DcaRma),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ExecutionModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Where the injected slowdown lands (§6 injects it into the chunk
+/// *calculation*; §7 flags the *assignment* variant as future work — we
+/// implement both, see DESIGN.md experiment A2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DelaySite {
+    /// Delay the chunk-calculation function (paper's §6 scenarios).
+    Calculation,
+    /// Delay the chunk-assignment critical section (paper's §7 prediction:
+    /// this should favour CCA, which sends fewer messages).
+    Assignment,
+}
+
+/// Simulated cluster geometry and communication costs (miniHPC stand-in).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of physical nodes (paper: 16).
+    pub nodes: u32,
+    /// MPI ranks per node (paper: 16 ⇒ 256 total).
+    pub ranks_per_node: u32,
+    /// One-way message latency within a node, seconds.
+    pub intra_node_latency: f64,
+    /// One-way message latency across nodes, seconds.
+    pub inter_node_latency: f64,
+    /// Master/coordinator service time to handle one message, seconds
+    /// (dequeue + match + reply build; excludes chunk calculation).
+    pub service_time: f64,
+    /// Cost of evaluating one chunk-size formula, seconds (excludes the
+    /// injected delay).
+    pub calc_time: f64,
+    /// `breakAfter` — iterations the non-dedicated master/coordinator (rank
+    /// 0) executes between servicing rounds (the LB-tool parameter, §3).
+    /// `0` = dedicated master. The optimal value is application-dependent:
+    /// with long iterations (PSIA: 73 ms) anything above 1 starves the
+    /// request queue for seconds at a time (see the A3 ablation).
+    pub break_after: u32,
+}
+
+impl ClusterConfig {
+    /// The paper's miniHPC testbed: 16 dual-socket Xeon nodes × 16 ranks.
+    pub fn minihpc() -> Self {
+        ClusterConfig {
+            nodes: 16,
+            ranks_per_node: 16,
+            intra_node_latency: 0.5e-6,
+            inter_node_latency: 2.0e-6,
+            service_time: 0.5e-6,
+            calc_time: 0.2e-6,
+            break_after: 1,
+        }
+    }
+
+    /// A small geometry for unit tests and laptop runs.
+    pub fn small(ranks: u32) -> Self {
+        ClusterConfig {
+            nodes: 1,
+            ranks_per_node: ranks,
+            ..Self::minihpc()
+        }
+    }
+
+    pub fn total_ranks(&self) -> u32 {
+        self.nodes * self.ranks_per_node
+    }
+}
+
+/// One cell of the factorial design (Table 4): application × technique ×
+/// approach × injected delay.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Loop + technique parameters.
+    pub loop_params: LoopParams,
+    /// Scheduling technique under test.
+    pub technique: TechniqueKind,
+    /// CCA / DCA / DCA-RMA.
+    pub model: ExecutionModel,
+    /// Injected slowdown, seconds (paper: 0, 10e-6, 100e-6).
+    pub injected_delay: f64,
+    /// Where the delay is injected.
+    pub delay_site: DelaySite,
+    /// Cluster geometry.
+    pub cluster: ClusterConfig,
+    /// Experiment repetitions (paper: 20).
+    pub repetitions: u32,
+    /// Base RNG seed; repetition `r` uses `seed + r`.
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Paper-style experiment over `n` iterations on the miniHPC geometry.
+    pub fn paper_default(
+        n: u64,
+        technique: TechniqueKind,
+        model: ExecutionModel,
+        injected_delay: f64,
+    ) -> Self {
+        let cluster = ClusterConfig::minihpc();
+        ExperimentConfig {
+            loop_params: LoopParams::new(n, cluster.total_ranks()),
+            technique,
+            model,
+            injected_delay,
+            delay_site: DelaySite::Calculation,
+            cluster,
+            repetitions: 20,
+            seed: 0xD15_C0DE,
+        }
+    }
+
+    /// The paper's three slowdown scenarios, in seconds.
+    pub const DELAYS: [f64; 3] = [0.0, 10e-6, 100e-6];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minihpc_geometry() {
+        let c = ClusterConfig::minihpc();
+        assert_eq!(c.total_ranks(), 256);
+    }
+
+    #[test]
+    fn model_parse() {
+        assert_eq!(ExecutionModel::parse("cca"), Some(ExecutionModel::Cca));
+        assert_eq!(ExecutionModel::parse("DCA"), Some(ExecutionModel::Dca));
+        assert_eq!(ExecutionModel::parse("dca-rma"), Some(ExecutionModel::DcaRma));
+        assert_eq!(ExecutionModel::parse("???"), None);
+    }
+
+    #[test]
+    fn paper_default_wires_geometry_into_loop_params() {
+        let c = ExperimentConfig::paper_default(
+            262_144,
+            TechniqueKind::Gss,
+            ExecutionModel::Dca,
+            10e-6,
+        );
+        assert_eq!(c.loop_params.p, 256);
+        assert_eq!(c.repetitions, 20);
+        assert_eq!(c.technique, TechniqueKind::Gss);
+        assert_eq!(c.model, ExecutionModel::Dca);
+        assert_eq!(c.loop_params.n, 262_144);
+    }
+
+    #[test]
+    fn paper_delays() {
+        assert_eq!(ExperimentConfig::DELAYS, [0.0, 10e-6, 100e-6]);
+    }
+}

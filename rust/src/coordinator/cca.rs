@@ -1,0 +1,176 @@
+//! CCA — the centralized chunk-calculation master–worker model (§3): the
+//! execution scheme of the original LB tool / LB4MPI / DSS.
+//!
+//! The master owns the work queue and, for **every** request, evaluates the
+//! technique's (recursive) chunk formula *inside its service loop*. The §6
+//! injected delay lands there too — so with `S` total chunks the critical
+//! path absorbs `≈ S·d` of serialized delay, plus the queueing behind it.
+//! That serialization is exactly what Figs. 4c/5c show degrading CCA.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Instant;
+
+use super::protocol::{CoordMsg, Msg, PerfReport, WorkerMsg};
+use super::{execute_chunk, EngineConfig, RankSummary, RunResult};
+use crate::sched::WorkQueue;
+use crate::substrate::delay::spin_for;
+use crate::substrate::msg::{fabric, Endpoint};
+use crate::techniques::af::AfCalculator;
+use crate::techniques::{Technique, TechniqueKind};
+use crate::workload::Workload;
+
+/// Run the CCA master–worker engine: `P` worker threads + the master service
+/// loop on the calling thread (the master is rank `P` on the fabric — it is
+/// PE 0's "service personality"; the DES additionally models the
+/// non-dedicated master's `breakAfter` interleaving).
+pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<RunResult> {
+    let p = cfg.params.p;
+    anyhow::ensure!(p >= 1, "need at least one worker");
+    let (mut eps, sent) = fabric::<Msg>(p + 1);
+    let coord_ep = eps.pop().expect("coordinator endpoint");
+    let barrier = Arc::new(Barrier::new(p as usize + 1));
+
+    let mut handles = Vec::with_capacity(p as usize);
+    for ep in eps {
+        let w = Arc::clone(&workload);
+        let b = Arc::clone(&barrier);
+        handles.push(thread::spawn(move || worker_loop(ep, p, w, b)));
+    }
+
+    master_loop(cfg, coord_ep, &barrier)?;
+
+    let per_rank: Vec<RankSummary> =
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+    Ok(RunResult::assemble(per_rank, sent.load(Ordering::Relaxed)))
+}
+
+/// The master service loop: receive → (delay + calculate) → assign → reply.
+fn master_loop(
+    cfg: &EngineConfig,
+    ep: Endpoint<Msg>,
+    barrier: &Barrier,
+) -> anyhow::Result<()> {
+    let params = &cfg.params;
+    let technique = Technique::new(cfg.technique, params);
+    let is_af = cfg.technique == TechniqueKind::Af;
+    let mut af = is_af.then(|| AfCalculator::new(params));
+    let mut q = WorkQueue::from_params(params);
+    let mut st = technique.fresh_recursive();
+    let mut active = params.p;
+
+    barrier.wait();
+    while active > 0 {
+        let env = ep.recv()?;
+        let Msg::ToCoord(WorkerMsg::Request { rank, report }) = env.payload else {
+            anyhow::bail!("CCA master got unexpected message: {:?}", env.payload);
+        };
+        if let (Some(af), Some(PerfReport { iters, elapsed })) = (af.as_mut(), report) {
+            af.record(rank as usize, iters, elapsed);
+        }
+        // Chunk CALCULATION — centralized, so the injected slowdown
+        // serializes here, once per scheduling step.
+        spin_for(cfg.delay.calculation);
+        let k = match af.as_ref() {
+            Some(af) => af.chunk(rank as usize, q.remaining()),
+            None => technique.recursive_chunk(&mut st, q.remaining()),
+        };
+        // Chunk ASSIGNMENT (the §7-ablation delay site).
+        spin_for(cfg.delay.assignment);
+        match q.assign(k) {
+            Some(a) => ep.send(env.src, Msg::ToWorker(CoordMsg::Chunk(a)))?,
+            None => {
+                ep.send(env.src, Msg::ToWorker(CoordMsg::Done))?;
+                active -= 1;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Worker: request → execute → report, until `Done`.
+fn worker_loop(
+    ep: Endpoint<Msg>,
+    coord: u32,
+    workload: Arc<dyn Workload>,
+    barrier: Arc<Barrier>,
+) -> RankSummary {
+    let rank = ep.rank();
+    let mut out = RankSummary { rank, ..Default::default() };
+    let mut report = None;
+    barrier.wait();
+    let t0 = Instant::now();
+    loop {
+        let t_req = Instant::now();
+        ep.send(coord, Msg::ToCoord(WorkerMsg::Request { rank, report }))
+            .expect("master hung up early");
+        let env = ep.recv().expect("master hung up early");
+        out.sched_wait += t_req.elapsed().as_secs_f64();
+        match env.payload {
+            Msg::ToWorker(CoordMsg::Chunk(a)) => {
+                let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
+                out.checksum = out.checksum.wrapping_add(sum);
+                out.chunks += 1;
+                out.iters += a.size;
+                out.assignments.push(a);
+                report = Some(PerfReport { iters: a.size, elapsed });
+            }
+            Msg::ToWorker(CoordMsg::Done) => break,
+            other => panic!("worker {rank}: unexpected {other:?}"),
+        }
+    }
+    out.finish = t0.elapsed().as_secs_f64();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExecutionModel;
+    use crate::sched::verify_coverage;
+    use crate::techniques::LoopParams;
+    use crate::workload::synthetic::{CostShape, Synthetic};
+
+    fn run_kind(kind: TechniqueKind, n: u64, p: u32) -> RunResult {
+        let w: Arc<dyn Workload> =
+            Arc::new(Synthetic::new(n, 5e-8, CostShape::Uniform, 3));
+        let cfg = EngineConfig::new(LoopParams::new(n, p), kind, ExecutionModel::Cca);
+        run(&cfg, w).unwrap()
+    }
+
+    #[test]
+    fn gss_covers_and_counts_chunks() {
+        let r = run_kind(TechniqueKind::Gss, 10_000, 4);
+        verify_coverage(&r.sorted_assignments(), 10_000).unwrap();
+        // Recursive GSS at (10k, 4) produces ~30 chunks.
+        assert!(r.stats.chunks > 15 && r.stats.chunks < 60, "chunks={}", r.stats.chunks);
+        // 2 messages per chunk + P final Done round trips.
+        assert_eq!(r.stats.messages, 2 * r.stats.chunks + 2 * 4);
+    }
+
+    #[test]
+    fn af_adapts_and_covers() {
+        let r = run_kind(TechniqueKind::Af, 4_000, 4);
+        verify_coverage(&r.sorted_assignments(), 4_000).unwrap();
+        // AF bootstraps with unit chunks then grows.
+        let max = r.sorted_assignments().iter().map(|a| a.size).max().unwrap();
+        assert!(max > 1, "AF should grow past bootstrap chunks");
+    }
+
+    #[test]
+    fn single_worker_degenerates_fine() {
+        let r = run_kind(TechniqueKind::Fac2, 1_000, 1);
+        verify_coverage(&r.sorted_assignments(), 1_000).unwrap();
+        assert_eq!(r.per_rank.len(), 1);
+    }
+
+    #[test]
+    fn work_is_distributed() {
+        let r = run_kind(TechniqueKind::Ss, 2_000, 4);
+        // With SS every worker should get some chunks.
+        for rs in &r.per_rank {
+            assert!(rs.chunks > 0, "rank {} starved", rs.rank);
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! DCA over **two-sided** messages — this paper's headline contribution
+//! (§4–5): distributed chunk calculation on a substrate every MPI runtime
+//! supports.
+//!
+//! Per chunk the worker makes two round trips:
+//!
+//! 1. `GetStep → Step` — the coordinator *reserves* a step index `i`
+//!    (constant-time counter bump; no formula evaluation, no injected delay);
+//! 2. the worker evaluates the **straightforward** formula `K_i` locally —
+//!    this is where the §6 injected slowdown lands, and it runs in parallel
+//!    across all `P` workers;
+//! 3. `Commit → Chunk` — the coordinator grants the iteration range.
+//!
+//! AF (no closed form) rides the same protocol with the extra
+//! synchronization of §4: `Step` carries `R_i` (in the ticket) and the
+//! global `(D, E)` aggregates; the worker combines them with its *local* µ.
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Instant;
+
+use super::protocol::{AfInfo, CoordMsg, Msg, PerfReport, WorkerMsg};
+use super::{execute_chunk, EngineConfig, RankSummary, RunResult};
+use crate::sched::WorkQueue;
+use crate::substrate::delay::spin_for;
+use crate::substrate::msg::{fabric, Endpoint};
+use crate::techniques::af::{af_chunk, AfCalculator, PeStats};
+use crate::techniques::{Technique, TechniqueKind};
+use crate::workload::Workload;
+
+/// Run the DCA two-sided engine: `P` worker threads + the coordinator
+/// service loop on the calling thread.
+pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<RunResult> {
+    let p = cfg.params.p;
+    anyhow::ensure!(p >= 1, "need at least one worker");
+    let (mut eps, sent) = fabric::<Msg>(p + 1);
+    let coord_ep = eps.pop().expect("coordinator endpoint");
+    let barrier = Arc::new(Barrier::new(p as usize + 1));
+
+    let mut handles = Vec::with_capacity(p as usize);
+    for ep in eps {
+        let w = Arc::clone(&workload);
+        let b = Arc::clone(&barrier);
+        let c = cfg.clone();
+        handles.push(thread::spawn(move || worker_loop(&c, ep, p, w, b)));
+    }
+
+    coordinator_loop(cfg, coord_ep, &barrier)?;
+
+    let per_rank: Vec<RankSummary> =
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+    Ok(RunResult::assemble(per_rank, sent.load(Ordering::Relaxed)))
+}
+
+/// Coordinator service loop — assignment only, O(1) work per message.
+fn coordinator_loop(
+    cfg: &EngineConfig,
+    ep: Endpoint<Msg>,
+    barrier: &Barrier,
+) -> anyhow::Result<()> {
+    let params = &cfg.params;
+    let is_af = cfg.technique == TechniqueKind::Af;
+    let mut af = is_af.then(|| AfCalculator::new(params));
+    let mut q = WorkQueue::from_params(params);
+    let mut active = params.p;
+
+    barrier.wait();
+    while active > 0 {
+        let env = ep.recv()?;
+        match env.payload {
+            Msg::ToCoord(WorkerMsg::GetStep { rank, report }) => {
+                if let (Some(af), Some(PerfReport { iters, elapsed })) = (af.as_mut(), report)
+                {
+                    af.record(rank as usize, iters, elapsed);
+                }
+                match q.begin_step() {
+                    Some(ticket) => {
+                        let af_info = af
+                            .as_ref()
+                            .and_then(|a| a.globals())
+                            .map(|g| AfInfo { d: g.d, e: g.e });
+                        ep.send(env.src, Msg::ToWorker(CoordMsg::Step { ticket, af: af_info }))?;
+                    }
+                    None => {
+                        ep.send(env.src, Msg::ToWorker(CoordMsg::Done))?;
+                        active -= 1;
+                    }
+                }
+            }
+            Msg::ToCoord(WorkerMsg::Commit { ticket, size, .. }) => {
+                // Chunk ASSIGNMENT — the only synchronized operation (§3).
+                spin_for(cfg.delay.assignment);
+                // AF: re-cap against fresh R (stale-ticket protection, §4).
+                let size = if is_af {
+                    size.min(q.remaining().div_ceil(params.p as u64).max(1))
+                } else {
+                    size
+                };
+                match q.commit(ticket, size) {
+                    Some(a) => ep.send(env.src, Msg::ToWorker(CoordMsg::Chunk(a)))?,
+                    None => {
+                        ep.send(env.src, Msg::ToWorker(CoordMsg::Done))?;
+                        active -= 1;
+                    }
+                }
+            }
+            other => anyhow::bail!("DCA coordinator got unexpected message: {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+/// Worker: reserve step → calculate locally (parallel!) → commit → execute.
+fn worker_loop(
+    cfg: &EngineConfig,
+    ep: Endpoint<Msg>,
+    coord: u32,
+    workload: Arc<dyn Workload>,
+    barrier: Arc<Barrier>,
+) -> RankSummary {
+    let rank = ep.rank();
+    let technique = Technique::new(cfg.technique, &cfg.params);
+    let is_af = cfg.technique == TechniqueKind::Af;
+    let bootstrap = cfg.params.min_chunk.max(1);
+    let mut my_stats = PeStats::default(); // local µ for AF
+    let mut out = RankSummary { rank, ..Default::default() };
+    let mut report = None;
+    barrier.wait();
+    let t0 = Instant::now();
+    'outer: loop {
+        let t_req = Instant::now();
+        ep.send(coord, Msg::ToCoord(WorkerMsg::GetStep { rank, report }))
+            .expect("coordinator hung up early");
+        let env = ep.recv().expect("coordinator hung up early");
+        out.sched_wait += t_req.elapsed().as_secs_f64();
+        let (ticket, af_info) = match env.payload {
+            Msg::ToWorker(CoordMsg::Step { ticket, af }) => (ticket, af),
+            Msg::ToWorker(CoordMsg::Done) => break 'outer,
+            other => panic!("worker {rank}: unexpected {other:?}"),
+        };
+
+        // Chunk CALCULATION — distributed: happens here, on the worker,
+        // concurrently with every other worker's calculation. The injected
+        // slowdown is paid in parallel, not serialized at a master.
+        spin_for(cfg.delay.calculation);
+        let k = if is_af {
+            match (my_stats.measured().then(|| my_stats.mu()).flatten(), af_info) {
+                (Some(mu), Some(AfInfo { d, e })) => af_chunk(
+                    crate::techniques::af::AfGlobals { d, e },
+                    mu,
+                    ticket.remaining,
+                    cfg.params.p,
+                ),
+                _ => bootstrap,
+            }
+        } else {
+            technique.closed_chunk(ticket.step)
+        };
+
+        let t_commit = Instant::now();
+        ep.send(coord, Msg::ToCoord(WorkerMsg::Commit { rank, ticket, size: k }))
+            .expect("coordinator hung up early");
+        let env = ep.recv().expect("coordinator hung up early");
+        out.sched_wait += t_commit.elapsed().as_secs_f64();
+        match env.payload {
+            Msg::ToWorker(CoordMsg::Chunk(a)) => {
+                let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
+                out.checksum = out.checksum.wrapping_add(sum);
+                out.chunks += 1;
+                out.iters += a.size;
+                out.assignments.push(a);
+                my_stats.record(a.size, elapsed);
+                report = Some(PerfReport { iters: a.size, elapsed });
+            }
+            Msg::ToWorker(CoordMsg::Done) => break 'outer,
+            other => panic!("worker {rank}: unexpected {other:?}"),
+        }
+    }
+    out.finish = t0.elapsed().as_secs_f64();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExecutionModel;
+    use crate::sched::verify_coverage;
+    use crate::techniques::LoopParams;
+    use crate::workload::synthetic::{CostShape, Synthetic};
+
+    fn run_kind(kind: TechniqueKind, n: u64, p: u32) -> RunResult {
+        let w: Arc<dyn Workload> =
+            Arc::new(Synthetic::new(n, 5e-8, CostShape::Uniform, 3));
+        let cfg = EngineConfig::new(LoopParams::new(n, p), kind, ExecutionModel::Dca);
+        run(&cfg, w).unwrap()
+    }
+
+    #[test]
+    fn gss_covers() {
+        let r = run_kind(TechniqueKind::Gss, 10_000, 4);
+        verify_coverage(&r.sorted_assignments(), 10_000).unwrap();
+    }
+
+    #[test]
+    fn dca_sends_more_messages_than_cca() {
+        // §7: "DCA incurs more communication messages than CCA".
+        let w: Arc<dyn Workload> =
+            Arc::new(Synthetic::new(4_000, 5e-8, CostShape::Uniform, 3));
+        let params = LoopParams::new(4_000, 4);
+        let c = super::super::cca::run(
+            &EngineConfig::new(params.clone(), TechniqueKind::Tss, ExecutionModel::Cca),
+            Arc::clone(&w),
+        )
+        .unwrap();
+        let d = run(
+            &EngineConfig::new(params, TechniqueKind::Tss, ExecutionModel::Dca),
+            w,
+        )
+        .unwrap();
+        // TSS chunk counts are identical in both forms ⇒ strictly more msgs.
+        assert_eq!(c.stats.chunks, d.stats.chunks);
+        assert!(d.stats.messages > c.stats.messages);
+    }
+
+    #[test]
+    fn af_needs_no_closed_form_but_covers() {
+        let r = run_kind(TechniqueKind::Af, 4_000, 4);
+        verify_coverage(&r.sorted_assignments(), 4_000).unwrap();
+    }
+
+    #[test]
+    fn closed_form_sizes_track_table2() {
+        // The DCA engine evaluates the Table 2 closed forms per step; the
+        // *multiset* of sizes matches Table 2's head exactly (the tail can
+        // shift by commit-order clipping, which is legal — §3 only requires
+        // disjoint full coverage).
+        let r = run_kind(TechniqueKind::Gss, 1_000, 4);
+        let mut sizes: Vec<u64> = r.sorted_assignments().iter().map(|a| a.size).collect();
+        sizes.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(sizes.iter().sum::<u64>(), 1_000);
+        assert_eq!(&sizes[..6], &[250, 188, 141, 106, 80, 60], "head of {sizes:?}");
+        assert!((16..=21).contains(&(sizes.len() as u64)), "count {}", sizes.len());
+    }
+}

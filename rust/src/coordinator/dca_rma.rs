@@ -1,0 +1,127 @@
+//! DCA over the **one-sided RMA window** — the PDP'19 original (Fig. 3):
+//! no coordinator service loop at all. Workers reserve a step and claim an
+//! iteration range directly with passive-target atomics; the chunk
+//! calculation between the two accesses is fully parallel and lock-free.
+//!
+//! Only techniques with a straightforward formula are supported — exactly
+//! the limitation the paper ascribes to this variant (AF's `R_i`/(µ,σ)
+//! synchronization needs the message-based coordinator of [`super::dca`]).
+
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Instant;
+
+use super::{execute_chunk, EngineConfig, RankSummary, RunResult};
+use crate::substrate::delay::spin_for;
+use crate::substrate::rma::RmaWindow;
+use crate::techniques::{Technique, TechniqueKind};
+use crate::workload::Workload;
+
+/// Run the RMA-based DCA engine: `P` symmetric worker threads, no
+/// coordinator thread, zero scheduling messages.
+pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<RunResult> {
+    anyhow::ensure!(
+        cfg.technique != TechniqueKind::Af,
+        "AF has no straightforward chunk formula; DCA-RMA cannot schedule it \
+         (use ExecutionModel::Dca, which synchronizes R_i and (D,E) — §4)"
+    );
+    let p = cfg.params.p;
+    anyhow::ensure!(p >= 1, "need at least one worker");
+    let window = Arc::new(RmaWindow::new(cfg.params.n, cfg.params.min_chunk));
+    let barrier = Arc::new(Barrier::new(p as usize));
+
+    let handles: Vec<_> = (0..p)
+        .map(|rank| {
+            let w = Arc::clone(&workload);
+            let win = Arc::clone(&window);
+            let b = Arc::clone(&barrier);
+            let c = cfg.clone();
+            thread::spawn(move || worker_loop(&c, rank, win, w, b))
+        })
+        .collect();
+
+    let per_rank: Vec<RankSummary> =
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+    Ok(RunResult::assemble(per_rank, 0))
+}
+
+fn worker_loop(
+    cfg: &EngineConfig,
+    rank: u32,
+    window: Arc<RmaWindow>,
+    workload: Arc<dyn Workload>,
+    barrier: Arc<Barrier>,
+) -> RankSummary {
+    let technique = Technique::new(cfg.technique, &cfg.params);
+    let mut out = RankSummary { rank, ..Default::default() };
+    barrier.wait();
+    let t0 = Instant::now();
+    while let Some((step, _lp)) = {
+        let t_req = Instant::now();
+        let r = window.reserve_step();
+        out.sched_wait += t_req.elapsed().as_secs_f64();
+        r
+    } {
+        // Distributed chunk calculation — outside any critical section.
+        spin_for(cfg.delay.calculation);
+        let k = technique.closed_chunk(step);
+        // Assignment: one atomic claim (the §7-ablation delay applies here).
+        spin_for(cfg.delay.assignment);
+        let t_claim = Instant::now();
+        let Some(a) = window.claim(step, k) else { break };
+        out.sched_wait += t_claim.elapsed().as_secs_f64();
+        let (sum, _elapsed) = execute_chunk(workload.as_ref(), a);
+        out.checksum = out.checksum.wrapping_add(sum);
+        out.chunks += 1;
+        out.iters += a.size;
+        out.assignments.push(a);
+    }
+    out.finish = t0.elapsed().as_secs_f64();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExecutionModel;
+    use crate::sched::verify_coverage;
+    use crate::techniques::LoopParams;
+    use crate::workload::synthetic::{CostShape, Synthetic};
+
+    fn cfg(kind: TechniqueKind, n: u64, p: u32) -> EngineConfig {
+        EngineConfig::new(LoopParams::new(n, p), kind, ExecutionModel::DcaRma)
+    }
+
+    #[test]
+    fn covers_with_zero_messages() {
+        let w: Arc<dyn Workload> =
+            Arc::new(Synthetic::new(10_000, 5e-8, CostShape::Uniform, 3));
+        let r = run(&cfg(TechniqueKind::Fac2, 10_000, 8), w).unwrap();
+        verify_coverage(&r.sorted_assignments(), 10_000).unwrap();
+        assert_eq!(r.stats.messages, 0, "RMA path exchanges no messages");
+    }
+
+    #[test]
+    fn af_is_rejected_with_useful_error() {
+        let w: Arc<dyn Workload> =
+            Arc::new(Synthetic::new(100, 1e-8, CostShape::Uniform, 3));
+        let err = run(&cfg(TechniqueKind::Af, 100, 2), w).unwrap_err().to_string();
+        assert!(err.contains("straightforward"), "{err}");
+    }
+
+    #[test]
+    fn matches_two_sided_dca_chunk_totals() {
+        let w: Arc<dyn Workload> =
+            Arc::new(Synthetic::new(5_000, 5e-8, CostShape::Uniform, 3));
+        let rma = run(&cfg(TechniqueKind::Tss, 5_000, 4), Arc::clone(&w)).unwrap();
+        let two = super::super::dca::run(
+            &EngineConfig::new(LoopParams::new(5_000, 4), TechniqueKind::Tss, ExecutionModel::Dca),
+            w,
+        )
+        .unwrap();
+        assert_eq!(
+            rma.sorted_assignments().iter().map(|a| a.size).sum::<u64>(),
+            two.sorted_assignments().iter().map(|a| a.size).sum::<u64>(),
+        );
+    }
+}

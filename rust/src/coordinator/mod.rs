@@ -1,0 +1,174 @@
+//! The execution models (§3–§5) as real multi-threaded engines: `P` worker
+//! threads self-schedule a [`Workload`] through a master (CCA) or
+//! coordinator (DCA) — wall-clock measured, chunks actually executed.
+//!
+//! | model | calculation | assignment | messages/chunk |
+//! |---|---|---|---|
+//! | [`cca`]      | master, **serialized** (+injected delay) | master | 2 |
+//! | [`dca`]      | worker, **parallel** (+injected delay)   | coordinator (counter bump) | 4 |
+//! | [`dca_rma`]  | worker, **parallel**                     | atomic fetch-ops, no coordinator CPU | 0 |
+//!
+//! These engines validate the protocol end-to-end at host scale; the
+//! paper-scale (256-rank) numbers come from the calibrated DES in
+//! [`crate::des`], which models the same protocols event-by-event.
+
+pub mod cca;
+pub mod dca;
+pub mod dca_rma;
+pub mod protocol;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::ExecutionModel;
+use crate::metrics::LoopStats;
+use crate::sched::Assignment;
+use crate::substrate::delay::InjectedDelay;
+use crate::techniques::{LoopParams, TechniqueKind};
+use crate::workload::Workload;
+
+/// Configuration for one engine run.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Loop + technique parameters; `params.p` = number of worker threads.
+    pub params: LoopParams,
+    pub technique: TechniqueKind,
+    pub model: ExecutionModel,
+    pub delay: InjectedDelay,
+}
+
+impl EngineConfig {
+    pub fn new(params: LoopParams, technique: TechniqueKind, model: ExecutionModel) -> Self {
+        EngineConfig { params, technique, model, delay: InjectedDelay::none() }
+    }
+}
+
+/// Per-worker outcome, accumulated inside the worker thread.
+#[derive(Debug, Clone, Default)]
+pub struct RankSummary {
+    pub rank: u32,
+    /// Chunks this worker executed.
+    pub chunks: u64,
+    /// Iterations this worker executed.
+    pub iters: u64,
+    /// Seconds from the start barrier to this worker's termination.
+    pub finish: f64,
+    /// Seconds spent waiting on scheduling round trips.
+    pub sched_wait: f64,
+    /// Wrapping-sum checksum of executed iterations.
+    pub checksum: u64,
+    /// The chunks, for coverage verification.
+    pub assignments: Vec<Assignment>,
+}
+
+/// Outcome of one engine run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub stats: LoopStats,
+    pub per_rank: Vec<RankSummary>,
+    /// Combined checksum over all executed iterations (order-independent).
+    pub checksum: u64,
+}
+
+impl RunResult {
+    /// Assemble from worker summaries + the fabric's message counter.
+    pub(crate) fn assemble(mut per_rank: Vec<RankSummary>, messages: u64) -> Self {
+        per_rank.sort_by_key(|r| r.rank);
+        let finish: Vec<f64> = per_rank.iter().map(|r| r.finish).collect();
+        let chunks = per_rank.iter().map(|r| r.chunks).sum();
+        let wait = per_rank.iter().map(|r| r.sched_wait).sum();
+        let checksum = per_rank.iter().fold(0u64, |a, r| a.wrapping_add(r.checksum));
+        RunResult {
+            stats: LoopStats::from_finish_times(&finish, chunks, wait, messages),
+            per_rank,
+            checksum,
+        }
+    }
+
+    /// All assignments across ranks, sorted by `start` — for verification.
+    pub fn sorted_assignments(&self) -> Vec<Assignment> {
+        let mut v: Vec<Assignment> =
+            self.per_rank.iter().flat_map(|r| r.assignments.iter().copied()).collect();
+        v.sort_by_key(|a| a.start);
+        v
+    }
+}
+
+/// Execute one chunk against the workload, timing it.
+pub(crate) fn execute_chunk(workload: &dyn Workload, a: Assignment) -> (u64, f64) {
+    let t = Instant::now();
+    let checksum = workload.execute_range(a.start, a.size);
+    (checksum, t.elapsed().as_secs_f64())
+}
+
+/// Run a configured engine to completion.
+pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<RunResult> {
+    anyhow::ensure!(
+        cfg.params.n <= workload.n(),
+        "loop ({}) larger than workload ({})",
+        cfg.params.n,
+        workload.n()
+    );
+    match cfg.model {
+        ExecutionModel::Cca => cca::run(cfg, workload),
+        ExecutionModel::Dca => dca::run(cfg, workload),
+        ExecutionModel::DcaRma => dca_rma::run(cfg, workload),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::verify_coverage;
+    use crate::workload::synthetic::{CostShape, Synthetic};
+
+    fn tiny_workload() -> Arc<dyn Workload> {
+        Arc::new(Synthetic::new(5_000, 1e-7, CostShape::Jittered, 11))
+    }
+
+    /// Every (model × technique) combination schedules the full loop with
+    /// exact coverage and a consistent checksum.
+    #[test]
+    fn all_models_all_techniques_cover() {
+        let w = tiny_workload();
+        let reference = w.execute_range(0, 5_000);
+        for model in [ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma] {
+            for kind in TechniqueKind::ALL {
+                if kind == TechniqueKind::Af && model == ExecutionModel::DcaRma {
+                    continue; // unsupported by design (§4)
+                }
+                let params = LoopParams::new(5_000, 4);
+                let cfg = EngineConfig::new(params, kind, model);
+                let r = run(&cfg, Arc::clone(&w))
+                    .unwrap_or_else(|e| panic!("{model} {kind}: {e}"));
+                verify_coverage(&r.sorted_assignments(), 5_000)
+                    .unwrap_or_else(|e| panic!("{model} {kind}: {e}"));
+                assert_eq!(r.checksum, reference, "{model} {kind}: checksum");
+                assert!(r.stats.t_par > 0.0);
+                assert!(r.stats.chunks > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn af_rma_rejected() {
+        let w = tiny_workload();
+        let cfg = EngineConfig::new(
+            LoopParams::new(100, 2),
+            TechniqueKind::Af,
+            ExecutionModel::DcaRma,
+        );
+        assert!(run(&cfg, w).is_err());
+    }
+
+    #[test]
+    fn loop_larger_than_workload_rejected() {
+        let w = tiny_workload();
+        let cfg = EngineConfig::new(
+            LoopParams::new(10_000, 2),
+            TechniqueKind::Gss,
+            ExecutionModel::Cca,
+        );
+        assert!(run(&cfg, w).is_err());
+    }
+}

@@ -1,0 +1,86 @@
+//! Wire protocol between workers and the master/coordinator.
+//!
+//! The message shapes encode the paper's central distinction:
+//!
+//! * **CCA** needs one round trip per chunk — `Request → Chunk` — but the
+//!   master computes the chunk size inside the service loop (serialized).
+//! * **DCA** needs two round trips — `GetStep → Step`, then
+//!   `Commit → Chunk` — but the coordinator only bumps counters; the size
+//!   is computed worker-side between the two trips (parallel). This is the
+//!   "more communication messages than CCA" trade §7 discusses.
+
+use crate::sched::{Assignment, StepTicket};
+
+/// A worker's performance report for its previously executed chunk —
+/// piggybacked on scheduling requests so AF's per-PE (µ, σ) stay current
+/// without extra messages.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfReport {
+    /// Iterations in the finished chunk.
+    pub iters: u64,
+    /// Wall-clock seconds the chunk took.
+    pub elapsed: f64,
+}
+
+/// AF synchronization data carried on the DCA phase-1 reply: the global
+/// aggregates every PE needs to evaluate Eq. 11 (§4: "AF with DCA requires
+/// additional synchronization").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AfInfo {
+    /// `D = Σ σ_p²/µ_p`.
+    pub d: f64,
+    /// `E = (Σ 1/µ_p)⁻¹`.
+    pub e: f64,
+}
+
+/// Worker → master/coordinator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WorkerMsg {
+    /// CCA: "I am free — calculate and assign me a chunk."
+    Request { rank: u32, report: Option<PerfReport> },
+    /// DCA phase 1: "reserve me a scheduling step."
+    GetStep { rank: u32, report: Option<PerfReport> },
+    /// DCA phase 2: "I calculated `size` for my reserved step; assign it."
+    Commit { rank: u32, ticket: StepTicket, size: u64 },
+}
+
+impl WorkerMsg {
+    pub fn rank(&self) -> u32 {
+        match self {
+            WorkerMsg::Request { rank, .. }
+            | WorkerMsg::GetStep { rank, .. }
+            | WorkerMsg::Commit { rank, .. } => *rank,
+        }
+    }
+}
+
+/// Master/coordinator → worker.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CoordMsg {
+    /// An assigned chunk (CCA reply, or DCA commit reply).
+    Chunk(Assignment),
+    /// DCA phase-1 reply: the reserved step + AF aggregates when relevant.
+    Step { ticket: StepTicket, af: Option<AfInfo> },
+    /// No work left — terminate (the `DLS_Terminated` condition).
+    Done,
+}
+
+/// Both directions share one fabric payload type.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Msg {
+    ToCoord(WorkerMsg),
+    ToWorker(CoordMsg),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_extraction() {
+        let t = StepTicket { step: 3, remaining: 10 };
+        assert_eq!(WorkerMsg::Request { rank: 7, report: None }.rank(), 7);
+        assert_eq!(WorkerMsg::GetStep { rank: 8, report: None }.rank(), 8);
+        assert_eq!(WorkerMsg::Commit { rank: 9, ticket: t, size: 5 }.rank(), 9);
+    }
+}

@@ -1,0 +1,361 @@
+//! LB4MPI-compatible API facade (§5, Listing 1).
+//!
+//! The original C library drives scheduling through six calls, which §5
+//! preserves for backward compatibility and extends with a seventh that
+//! selects between CCA and DCA:
+//!
+//! ```c
+//! DLS_Parameters_Setup(...); Configure_Chunk_Calculation_Mode(...);
+//! DLS_StartLoop(...);
+//! while (!DLS_Terminated(...)) {
+//!     DLS_StartChunk(...); /* execute chunk */ DLS_EndChunk(...);
+//! }
+//! DLS_EndLoop(...);
+//! ```
+//!
+//! This module mirrors that call structure rank-for-rank (each "MPI rank" is
+//! a thread holding a [`DlsInfo`]). The two modes preserve the paper's
+//! semantic split exactly:
+//!
+//! * **CCA** — `DLS_StartChunk` evaluates the (recursive) formula *inside*
+//!   the shared critical section, like the centralized master would:
+//!   calculation serializes, injected delays compound.
+//! * **DCA** — `DLS_StartChunk` reserves the step under the lock, evaluates
+//!   the *straightforward* formula outside it, then commits: calculation
+//!   runs in parallel across ranks.
+//!
+//! Like the original library, data placement is the application's concern:
+//! each rank must be able to execute any iteration it is assigned (§5 —
+//! simplest via replication).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::sched::{Assignment, WorkQueue};
+use crate::substrate::delay::{spin_for, InjectedDelay};
+use crate::techniques::af::{AfCalculator, PeStats};
+use crate::techniques::{LoopParams, RecursiveState, Technique, TechniqueKind};
+
+/// Chunk-calculation mode, selected by [`configure_chunk_calculation_mode`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CalcMode {
+    Centralized,
+    Decentralized,
+}
+
+/// Scheduling state shared by all ranks for one parallel loop.
+struct LoopState {
+    technique: Technique,
+    queue: WorkQueue,
+    recursive: RecursiveState,
+    af: Option<AfCalculator>,
+    params: LoopParams,
+    /// Ranks that called `DLS_EndLoop` (state resets when all have).
+    ended: u32,
+}
+
+struct Inner {
+    p: u32,
+    mode: Mutex<CalcMode>,
+    state: Mutex<Option<LoopState>>,
+    cv: Condvar,
+    delay: InjectedDelay,
+}
+
+/// The library handle (`MPI_Comm` analogue) — clone one per rank.
+#[derive(Clone)]
+pub struct Lb4Mpi {
+    inner: Arc<Inner>,
+}
+
+/// Per-rank scheduling context (the `info` struct of Listing 1).
+pub struct DlsInfo {
+    lib: Lb4Mpi,
+    rank: u32,
+    current: Option<Assignment>,
+    chunk_started: Option<Instant>,
+    /// Iterations this rank executed in the current loop.
+    iters: u64,
+    /// Seconds this rank spent executing chunks.
+    work_time: f64,
+    /// Local µ/σ statistics (used by AF under DCA).
+    my_stats: PeStats,
+}
+
+/// `DLS_Parameters_Setup` — create the shared library state and one
+/// [`DlsInfo`] per rank. `delay` models the §6 injected slowdown.
+pub fn dls_parameters_setup(p: u32, delay: InjectedDelay) -> Vec<DlsInfo> {
+    assert!(p >= 1);
+    let lib = Lb4Mpi {
+        inner: Arc::new(Inner {
+            p,
+            mode: Mutex::new(CalcMode::Centralized),
+            state: Mutex::new(None),
+            cv: Condvar::new(),
+            delay,
+        }),
+    };
+    (0..p)
+        .map(|rank| DlsInfo {
+            lib: lib.clone(),
+            rank,
+            current: None,
+            chunk_started: None,
+            iters: 0,
+            work_time: 0.0,
+            my_stats: PeStats::default(),
+        })
+        .collect()
+}
+
+/// `Configure_Chunk_Calculation_Mode` — §5's new API: select CCA or DCA.
+/// Must be called between loops (not while one is active).
+pub fn configure_chunk_calculation_mode(info: &DlsInfo, mode: CalcMode) {
+    let state = info.lib.inner.state.lock().unwrap();
+    assert!(state.is_none(), "cannot switch modes inside an active loop");
+    *info.lib.inner.mode.lock().unwrap() = mode;
+}
+
+/// `DLS_StartLoop` — begin scheduling `n` iterations with `method`.
+/// The first rank to arrive initializes the shared state; all ranks must
+/// pass identical parameters.
+pub fn dls_start_loop(info: &mut DlsInfo, params: &LoopParams, method: TechniqueKind) {
+    assert_eq!(params.p, info.lib.inner.p, "LoopParams.p must equal the rank count");
+    let mut state = info.lib.inner.state.lock().unwrap();
+    if state.is_none() {
+        let technique = Technique::new(method, params);
+        *state = Some(LoopState {
+            recursive: technique.fresh_recursive(),
+            technique,
+            queue: WorkQueue::from_params(params),
+            af: (method == TechniqueKind::Af).then(|| AfCalculator::new(params)),
+            params: params.clone(),
+            ended: 0,
+        });
+    } else {
+        let s = state.as_ref().unwrap();
+        assert_eq!(s.params.n, params.n, "all ranks must start the same loop");
+        assert_eq!(s.technique.kind(), method, "all ranks must use the same method");
+    }
+    info.iters = 0;
+    info.work_time = 0.0;
+    info.current = None;
+    info.my_stats = PeStats::default();
+}
+
+/// `DLS_Terminated` — true once no unscheduled work remains (and this rank
+/// holds no chunk).
+pub fn dls_terminated(info: &DlsInfo) -> bool {
+    if info.current.is_some() {
+        return false;
+    }
+    let state = info.lib.inner.state.lock().unwrap();
+    match state.as_ref() {
+        Some(s) => s.queue.is_done(),
+        None => true,
+    }
+}
+
+/// `DLS_StartChunk` — obtain the next chunk `(start, size)`; `None` when the
+/// loop is exhausted. This is where CCA and DCA diverge (see module docs).
+pub fn dls_start_chunk(info: &mut DlsInfo) -> Option<(u64, u64)> {
+    assert!(info.current.is_none(), "DLS_EndChunk missing for previous chunk");
+    let mode = *info.lib.inner.mode.lock().unwrap();
+    let a = match mode {
+        CalcMode::Centralized => start_chunk_centralized(info),
+        CalcMode::Decentralized => start_chunk_decentralized(info),
+    }?;
+    info.current = Some(a);
+    info.chunk_started = Some(Instant::now());
+    Some((a.start, a.size))
+}
+
+/// The original LB4MPI path: calculation + assignment under the central
+/// lock (`DLS_StartChunk_Centralized`).
+fn start_chunk_centralized(info: &mut DlsInfo) -> Option<Assignment> {
+    let inner = &info.lib.inner;
+    let mut guard = inner.state.lock().unwrap();
+    let s = guard.as_mut()?;
+    // Injected slowdown hits the *centralized* calculation — while the lock
+    // is held, exactly like the delayed master serializing its queue.
+    spin_for(inner.delay.calculation);
+    let k = match s.af.as_ref() {
+        Some(af) => af.chunk(info.rank as usize, s.queue.remaining()),
+        None => {
+            let q_rem = s.queue.remaining();
+            s.technique.recursive_chunk(&mut s.recursive, q_rem)
+        }
+    };
+    spin_for(inner.delay.assignment);
+    s.queue.assign(k)
+}
+
+/// The §5 extension: `DLS_StartChunk_Decentralized` — reserve, calculate
+/// outside the lock, commit.
+fn start_chunk_decentralized(info: &mut DlsInfo) -> Option<Assignment> {
+    let inner = &info.lib.inner;
+    // Phase 1: reserve a step (short critical section).
+    let (ticket, af_globals, technique, bootstrap) = {
+        let mut guard = inner.state.lock().unwrap();
+        let s = guard.as_mut()?;
+        let t = s.queue.begin_step()?;
+        (
+            t,
+            s.af.as_ref().and_then(|a| a.globals()),
+            s.technique.clone(),
+            s.params.min_chunk.max(1),
+        )
+    };
+    // Distributed calculation — lock NOT held; delays parallelize.
+    spin_for(inner.delay.calculation);
+    let k = if technique.kind() == TechniqueKind::Af {
+        match (info.my_stats.measured().then(|| info.my_stats.mu()).flatten(), af_globals) {
+            (Some(mu), Some(g)) => crate::techniques::af::af_chunk(g, mu, ticket.remaining, technique.params().p),
+            _ => bootstrap,
+        }
+    } else {
+        technique.closed_chunk(ticket.step)
+    };
+    // Phase 2: commit (short critical section). For AF, re-apply the
+    // ⌈R/P⌉ cap against the fresh remaining count (stale-ticket protection).
+    let mut guard = inner.state.lock().unwrap();
+    let s = guard.as_mut()?;
+    spin_for(inner.delay.assignment);
+    let k = if technique.kind() == TechniqueKind::Af {
+        k.min(s.queue.remaining().div_ceil(s.params.p as u64).max(1))
+    } else {
+        k
+    };
+    s.queue.commit(ticket, k)
+}
+
+/// `DLS_EndChunk` — report the executed chunk (feeds AF's µ/σ learning).
+pub fn dls_end_chunk(info: &mut DlsInfo) {
+    let a = info.current.take().expect("DLS_EndChunk without DLS_StartChunk");
+    let elapsed = info.chunk_started.take().map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+    info.iters += a.size;
+    info.work_time += elapsed;
+    info.my_stats.record(a.size, elapsed);
+    let mut guard = info.lib.inner.state.lock().unwrap();
+    if let Some(s) = guard.as_mut() {
+        if let Some(af) = s.af.as_mut() {
+            af.record(info.rank as usize, a.size, elapsed);
+        }
+    }
+}
+
+/// `DLS_EndLoop` — returns `(iterations_executed, work_time_seconds)` for
+/// this rank. Blocks until all ranks have ended (a barrier, like the
+/// original), then the shared state resets for the next loop.
+pub fn dls_end_loop(info: &mut DlsInfo) -> (u64, f64) {
+    assert!(info.current.is_none(), "DLS_EndLoop with an open chunk");
+    let inner = &info.lib.inner;
+    let mut guard = inner.state.lock().unwrap();
+    if let Some(s) = guard.as_mut() {
+        s.ended += 1;
+        if s.ended == inner.p {
+            *guard = None;
+            inner.cv.notify_all();
+        } else {
+            let _unused = inner
+                .cv
+                .wait_while(guard, |g| g.is_some())
+                .unwrap();
+        }
+    }
+    (info.iters, info.work_time)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    /// The Listing-1 usage pattern, verbatim, across threads.
+    fn drive(p: u32, n: u64, method: TechniqueKind, mode: CalcMode) -> (u64, Vec<u64>) {
+        let mut infos = dls_parameters_setup(p, InjectedDelay::none());
+        configure_chunk_calculation_mode(&infos[0], mode);
+        let params = LoopParams::new(n, p);
+        let handles: Vec<_> = infos
+            .drain(..)
+            .map(|mut info| {
+                let params = params.clone();
+                thread::spawn(move || {
+                    dls_start_loop(&mut info, &params, method);
+                    let mut executed = vec![];
+                    while !dls_terminated(&info) {
+                        if let Some((start, size)) = dls_start_chunk(&mut info) {
+                            for i in start..start + size {
+                                executed.push(i);
+                            }
+                            dls_end_chunk(&mut info);
+                        }
+                    }
+                    let (iters, _wt) = dls_end_loop(&mut info);
+                    (iters, executed)
+                })
+            })
+            .collect();
+        let mut total = 0;
+        let mut all = vec![];
+        for h in handles {
+            let (iters, ex) = h.join().unwrap();
+            total += iters;
+            all.extend(ex);
+        }
+        all.sort_unstable();
+        (total, all)
+    }
+
+    #[test]
+    fn listing1_cca_covers() {
+        let (total, all) = drive(4, 1_000, TechniqueKind::Gss, CalcMode::Centralized);
+        assert_eq!(total, 1_000);
+        assert_eq!(all, (0..1_000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn listing1_dca_covers() {
+        let (total, all) = drive(4, 1_000, TechniqueKind::Fac2, CalcMode::Decentralized);
+        assert_eq!(total, 1_000);
+        assert_eq!(all, (0..1_000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn af_works_in_both_modes() {
+        for mode in [CalcMode::Centralized, CalcMode::Decentralized] {
+            let (total, all) = drive(4, 500, TechniqueKind::Af, mode);
+            assert_eq!(total, 500, "{mode:?}");
+            assert_eq!(all.len(), 500, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn reusable_across_loops() {
+        let mut infos = dls_parameters_setup(1, InjectedDelay::none());
+        let params = LoopParams::new(100, 1);
+        for method in [TechniqueKind::Static, TechniqueKind::Tss] {
+            let info = &mut infos[0];
+            dls_start_loop(info, &params, method);
+            let mut n = 0;
+            while !dls_terminated(info) {
+                if let Some((_s, size)) = dls_start_chunk(info) {
+                    n += size;
+                    dls_end_chunk(info);
+                }
+            }
+            assert_eq!(dls_end_loop(info).0, 100);
+            assert_eq!(n, 100);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "DLS_EndChunk missing")]
+    fn start_chunk_twice_panics() {
+        let mut infos = dls_parameters_setup(1, InjectedDelay::none());
+        let params = LoopParams::new(10, 1);
+        dls_start_loop(&mut infos[0], &params, TechniqueKind::Static);
+        dls_start_chunk(&mut infos[0]);
+        dls_start_chunk(&mut infos[0]); // panics
+    }
+}

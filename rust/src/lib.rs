@@ -1,0 +1,52 @@
+//! # dca-dls — Distributed Chunk Calculation for Dynamic Loop Self-Scheduling
+//!
+//! Reproduction of Eleliemy & Ciorba, *"A Distributed Chunk Calculation
+//! Approach for Self-scheduling of Parallel Applications on Distributed-memory
+//! Systems"* (2021), as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper separates the two operations of every self-scheduling step:
+//!
+//! * **chunk calculation** — a per-technique mathematical formula; needs *no*
+//!   synchronization when expressed in *straightforward* (closed) form, and can
+//!   therefore run on the requesting worker (DCA),
+//! * **chunk assignment** — advancing the central work queue; needs exclusive
+//!   access, and stays on a coordinator (or an atomic RMA window).
+//!
+//! Layer 3 (this crate) implements thirteen DLS techniques in both recursive
+//! (CCA) and closed (DCA) form, the CCA master–worker and DCA coordinator
+//! execution models over simulated MPI substrates, a deterministic
+//! discrete-event simulator that regenerates the paper's 256-rank experiments
+//! (Figs. 4–5), and a real multi-threaded engine that executes chunks through
+//! AOT-compiled JAX/Pallas artifacts via PJRT (layers 2/1, see `python/`).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use dca_dls::prelude::*;
+//!
+//! let params = LoopParams::new(1_000, 4);
+//! let tech = Technique::new(TechniqueKind::Gss, &params);
+//! let chunks = dca_dls::sched::closed_form_schedule(&tech, &params);
+//! assert_eq!(chunks.iter().map(|c| c.size).sum::<u64>(), 1_000);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod des;
+pub mod lb4mpi;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sched;
+pub mod substrate;
+pub mod techniques;
+pub mod workload;
+
+/// Commonly used items, re-exported for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{DelaySite, ExecutionModel, ExperimentConfig};
+    pub use crate::metrics::LoopStats;
+    pub use crate::sched::{Assignment, WorkQueue};
+    pub use crate::techniques::{LoopParams, Technique, TechniqueKind};
+    pub use crate::workload::{IterationCost, Workload};
+}

@@ -1,0 +1,363 @@
+//! `dca-dls` — CLI launcher for the DCA/DLS reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's artifacts (DESIGN.md §4):
+//! `table2`, `fig1`, `table3`, `fig4`, `fig5`, plus `simulate` (one factorial
+//! cell), `run` (real threaded engine, optionally through the PJRT
+//! artifacts), `sweep-breakafter` (A3 ablation) and `validate` (PJRT vs
+//! native cross-check).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use dca_dls::config::{ClusterConfig, DelaySite, ExecutionModel};
+use dca_dls::coordinator::{self, EngineConfig};
+use dca_dls::des::{simulate, DesConfig};
+use dca_dls::report::figures::{
+    fig1_series, run_figure, table2_rows, table3_rows, App, FigureConfig,
+};
+use dca_dls::report::json::Json;
+use dca_dls::report::{render_figure, render_table2, render_table3};
+use dca_dls::runtime::workload::{PjrtMandelbrot, PjrtPsia};
+use dca_dls::runtime::Runtime;
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::workload::mandelbrot::Mandelbrot;
+use dca_dls::workload::psia::Psia;
+use dca_dls::workload::Workload;
+
+const USAGE: &str = "\
+dca-dls — Distributed Chunk Calculation for DLS (Eleliemy & Ciorba 2021)
+
+USAGE: dca-dls <command> [--flag value]...
+
+COMMANDS
+  table2             chunk sequences, N=1000 P=4 (Table 2)   [--n --p]
+  fig1               chunk-size series per technique (Fig 1) [--n --p]
+  table3             loop characteristics (Table 3)          [--n --ct --cloud]
+  fig4               PSIA factorial experiment (Fig 4)       [--quick --reps --delay-site --json F]
+  fig5               Mandelbrot factorial experiment (Fig 5) [--quick --reps --delay-site --json F]
+  simulate           one DES cell  [--app --tech --model --delay-us --ranks --n]
+  run                real threaded engine [--app --tech --model --workers --n --pjrt --delay-us]
+  sweep-breakafter   A3 ablation: master breakAfter sweep [--app --tech]
+  select             SimAS-style CCA/DCA auto-selection (§7) [--app --tech --delay-us]
+  validate           PJRT artifacts vs native implementations
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, flags)) = parse(&args) else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let r = match cmd.as_str() {
+        "table2" => cmd_table2(&flags),
+        "fig1" => cmd_fig1(&flags),
+        "table3" => cmd_table3(&flags),
+        "fig4" => cmd_figure(App::Psia, "Figure 4 (PSIA)", &flags),
+        "fig5" => cmd_figure(App::Mandelbrot, "Figure 5 (Mandelbrot)", &flags),
+        "simulate" => cmd_simulate(&flags),
+        "run" => cmd_run(&flags),
+        "sweep-breakafter" => cmd_sweep_breakafter(&flags),
+        "select" => cmd_select(&flags),
+        "validate" => cmd_validate(),
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `cmd --k v --flag` → (cmd, {k: v, flag: ""}).
+fn parse(args: &[String]) -> Option<(String, HashMap<String, String>)> {
+    let cmd = args.first()?.clone();
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        let a = args[i].strip_prefix("--")?;
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            flags.insert(a.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            flags.insert(a.to_string(), String::new());
+            i += 1;
+        }
+    }
+    Some((cmd, flags))
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn params_from(flags: &HashMap<String, String>) -> LoopParams {
+    LoopParams::new(get(flags, "n", 1000u64), get(flags, "p", 4u32))
+}
+
+fn cmd_table2(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let params = params_from(flags);
+    print!("{}", render_table2(&table2_rows(&params)));
+    Ok(())
+}
+
+fn cmd_fig1(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let params = params_from(flags);
+    println!("== Fig 1: chunk sizes per scheduling step (N={}, P={}) ==", params.n, params.p);
+    for (kind, sizes) in fig1_series(&params) {
+        println!("{:<8} pattern={:?}", kind.name(), kind.pattern());
+        let pts: Vec<String> =
+            sizes.iter().enumerate().map(|(i, s)| format!("({i},{s})")).collect();
+        println!("  {}", pts.join(" "));
+    }
+    Ok(())
+}
+
+fn cmd_table3(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let n = get(flags, "n", 262_144u64);
+    let ct = get(flags, "ct", 2_000u32);
+    let cloud = get(flags, "cloud", 2_048usize);
+    println!("(Mandelbrot CT scaled to {ct}; paper used 1,000,000 — shape is CT-invariant)");
+    print!("{}", render_table3(&table3_rows(n, ct, cloud)));
+    Ok(())
+}
+
+fn cmd_figure(app: App, title: &str, flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let mut cfg = if flags.contains_key("quick") {
+        FigureConfig::quick(app)
+    } else {
+        FigureConfig::paper(app)
+    };
+    cfg.reps = get(flags, "reps", cfg.reps);
+    if let Some(site) = flags.get("delay-site") {
+        cfg.delay_site = match site.as_str() {
+            "assignment" => DelaySite::Assignment,
+            _ => DelaySite::Calculation,
+        };
+    }
+    let rows = run_figure(&cfg)?;
+    print!("{}", render_figure(title, &rows));
+    if let Some(path) = flags.get("json") {
+        let arr = Json::Arr(
+            rows.iter()
+                .map(|r| {
+                    Json::obj()
+                        .field("technique", r.technique.name())
+                        .field("model", r.model.name())
+                        .field("delay_us", r.delay * 1e6)
+                        .field("t_par_mean", r.runs.t_par_mean)
+                        .field("t_par_stddev", r.runs.t_par_stddev)
+                        .field("chunks", r.chunks)
+                })
+                .collect(),
+        );
+        std::fs::write(path, arr.render())?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+fn app_of(flags: &HashMap<String, String>) -> App {
+    match flags.get("app").map(String::as_str) {
+        Some("mandelbrot") => App::Mandelbrot,
+        _ => App::Psia,
+    }
+}
+
+fn tech_of(flags: &HashMap<String, String>) -> anyhow::Result<TechniqueKind> {
+    let name = flags.get("tech").map(String::as_str).unwrap_or("GSS");
+    TechniqueKind::parse(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown technique '{name}'"))
+}
+
+fn model_of(flags: &HashMap<String, String>) -> ExecutionModel {
+    flags
+        .get("model")
+        .and_then(|m| ExecutionModel::parse(m))
+        .unwrap_or(ExecutionModel::Dca)
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let app = app_of(flags);
+    let tech = tech_of(flags)?;
+    let model = model_of(flags);
+    let ranks = get(flags, "ranks", 256u32);
+    let n = get(flags, "n", 262_144u64);
+    let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
+    let cluster = if ranks == 256 {
+        ClusterConfig::minihpc()
+    } else {
+        ClusterConfig::small(ranks)
+    };
+    let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
+    let cfg = DesConfig {
+        params: LoopParams::new(n, cluster.total_ranks()),
+        technique: tech,
+        model,
+        delay: InjectedDelay::calculation_only(delay),
+        cluster,
+        cost,
+        pe_speed: vec![],
+    };
+    let r = simulate(&cfg)?;
+    println!(
+        "{} {} {} delay={}µs ranks={ranks} N={n}",
+        app.name(),
+        tech.name(),
+        model.name(),
+        delay * 1e6
+    );
+    println!(
+        "T_par = {:.3}s   chunks = {}   messages = {}   cov(finish) = {:.4}   imbalance = {:.4}",
+        r.t_par(),
+        r.stats.chunks,
+        r.stats.messages,
+        r.stats.cov_finish,
+        r.stats.imbalance
+    );
+    Ok(())
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let app = app_of(flags);
+    let tech = tech_of(flags)?;
+    let model = model_of(flags);
+    let workers = get(flags, "workers", 4u32);
+    let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
+    let pjrt = flags.contains_key("pjrt");
+    let workload: Arc<dyn Workload> = match (app, pjrt) {
+        (App::Mandelbrot, false) => {
+            let mut m = Mandelbrot::paper(get(flags, "ct", 256u32));
+            m.width = 128;
+            Arc::new(m)
+        }
+        (App::Mandelbrot, true) => Arc::new(PjrtMandelbrot::new(Runtime::default_dir())?),
+        (App::Psia, false) => Arc::new(Psia::synthetic(512, 4096, 7)),
+        (App::Psia, true) => Arc::new(PjrtPsia::new(Runtime::default_dir(), 4096, 7)?),
+    };
+    let n = get(flags, "n", workload.n().min(16_384));
+    let mut cfg = EngineConfig::new(LoopParams::new(n, workers), tech, model);
+    cfg.delay = InjectedDelay::calculation_only(delay);
+    let t0 = std::time::Instant::now();
+    let r = coordinator::run(&cfg, workload)?;
+    println!(
+        "{} [{}] {} {} workers={workers} N={n}",
+        app.name(),
+        if pjrt { "PJRT artifacts" } else { "native" },
+        tech.name(),
+        model.name()
+    );
+    println!(
+        "wall = {:.3}s   T_par = {:.3}s   chunks = {}   messages = {}   checksum = {:#x}",
+        t0.elapsed().as_secs_f64(),
+        r.stats.t_par,
+        r.stats.chunks,
+        r.stats.messages,
+        r.checksum
+    );
+    dca_dls::sched::verify_coverage(&r.sorted_assignments(), n)
+        .map_err(|e| anyhow::anyhow!("coverage violation: {e}"))?;
+    println!("coverage: OK (every iteration scheduled exactly once)");
+    Ok(())
+}
+
+fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let app = app_of(flags);
+    let tech = tech_of(flags)?;
+    let cost = app.cost_model(0xF1605, 2_000);
+    println!("== A3: breakAfter sweep ({}, {}, 64 ranks, N=65536) ==", app.name(), tech.name());
+    println!("{:<11} {:>12} {:>12}", "breakAfter", "CCA T_par[s]", "DCA T_par[s]");
+    for ba in [0u32, 1, 4, 16, 64, 256] {
+        let mut t = vec![];
+        for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
+            let cluster = ClusterConfig {
+                nodes: 4,
+                ranks_per_node: 16,
+                break_after: ba,
+                ..ClusterConfig::minihpc()
+            };
+            let cfg = DesConfig {
+                params: LoopParams::new(65_536, cluster.total_ranks()),
+                technique: tech,
+                model,
+                delay: InjectedDelay::none(),
+                cluster,
+                cost: cost.clone(),
+                pe_speed: vec![],
+            };
+            t.push(simulate(&cfg)?.t_par());
+        }
+        let label = if ba == 0 { "dedicated".to_string() } else { ba.to_string() };
+        println!("{label:<11} {:>12.3} {:>12.3}", t[0], t[1]);
+    }
+    Ok(())
+}
+
+fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let app = app_of(flags);
+    let tech = tech_of(flags)?;
+    let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
+    let cluster = ClusterConfig::minihpc();
+    let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
+    let s = dca_dls::report::selector::select_cca_or_dca(
+        tech,
+        262_144,
+        &cluster,
+        &cost,
+        InjectedDelay::calculation_only(delay),
+    )?;
+    println!("{} {} delay={}µs — predicted T_par on a {:.0}% prefix:", app.name(), tech.name(), delay * 1e6, s.prefix_fraction * 100.0);
+    for (m, t) in &s.predictions {
+        let mark = if *m == s.model { "  ← selected" } else { "" };
+        println!("  {:<8} {t:.3}s{mark}", m.name());
+    }
+    Ok(())
+}
+
+fn cmd_validate() -> anyhow::Result<()> {
+    let dir = Runtime::default_dir();
+    anyhow::ensure!(
+        dir.join("meta.json").exists(),
+        "artifacts not built — run `make artifacts`"
+    );
+    let rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // Mandelbrot: exact f64 cross-check over scattered tiles.
+    let w = PjrtMandelbrot::new(&dir)?;
+    let native = rt.meta.mandelbrot_native();
+    let mut checked = 0u64;
+    let mut diverged = 0u64;
+    for start in [0u64, 51_200, 130_048, 174_080, 200_704, 261_120] {
+        for lane in 0..1024u64 {
+            let got = w.execute(start + lane);
+            if got != native.escape_count(start + lane) as u64 {
+                diverged += 1;
+            }
+            checked += 1;
+        }
+    }
+    anyhow::ensure!(diverged <= 8, "{diverged}/{checked} pixels diverged from native");
+    println!(
+        "mandelbrot: {}/{checked} pixels bit-exact vs native f64 ({diverged} FMA-contraction boundary pixels) OK",
+        checked - diverged
+    );
+
+    // PSIA: tolerance on borderline f32 binning.
+    let p = PjrtPsia::new(&dir, 256, 0x5e1a_5e1a)?;
+    let mut mismatch = 0;
+    for i in 0..32u64 {
+        if p.execute(i) != p.native().execute(i) {
+            mismatch += 1;
+        }
+    }
+    anyhow::ensure!(mismatch <= 3, "{mismatch}/32 spin images diverged");
+    println!(
+        "spin_image: {}/32 images match native ({mismatch} borderline f32 bins) OK",
+        32 - mismatch
+    );
+    println!("validate: OK");
+    Ok(())
+}

@@ -1,0 +1,248 @@
+//! Measurement utilities: running statistics, loop-execution summaries, and
+//! the load-imbalance metrics the paper reports (Table 3, Figs. 4–5).
+
+
+
+/// Streaming univariate statistics (Welford's algorithm).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    sum: f64,
+}
+
+impl Default for Stats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY, sum: 0.0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn from_slice(xs: &[f64]) -> Self {
+        let mut s = Stats::new();
+        for &x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    /// Coefficient of variation σ/µ (Table 3's load-imbalance indicator).
+    pub fn cov(&self) -> f64 {
+        if self.mean() == 0.0 {
+            0.0
+        } else {
+            self.stddev() / self.mean()
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Merge another accumulator into this one (parallel reduction).
+    pub fn merge(&mut self, other: &Stats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Summary of one parallel loop execution — what Figs. 4–5 plot per bar.
+#[derive(Debug, Clone)]
+pub struct LoopStats {
+    /// `T_loop^par` — parallel loop time (max PE finish time), seconds.
+    pub t_par: f64,
+    /// Total scheduling steps `S` (number of chunks).
+    pub chunks: u64,
+    /// Mean PE finish time, seconds.
+    pub mean_finish: f64,
+    /// Load-imbalance metric: `max/mean − 1` over PE finish times.
+    pub imbalance: f64,
+    /// Coefficient of variation of PE finish times.
+    pub cov_finish: f64,
+    /// Total time PEs spent waiting on scheduling (queueing + service + comm).
+    pub sched_overhead: f64,
+    /// Messages exchanged with the master/coordinator.
+    pub messages: u64,
+}
+
+impl LoopStats {
+    /// Build from per-PE finish times and bookkeeping counters.
+    pub fn from_finish_times(
+        finish: &[f64],
+        chunks: u64,
+        sched_overhead: f64,
+        messages: u64,
+    ) -> Self {
+        let s = Stats::from_slice(finish);
+        LoopStats {
+            t_par: s.max(),
+            chunks,
+            mean_finish: s.mean(),
+            imbalance: if s.mean() > 0.0 { s.max() / s.mean() - 1.0 } else { 0.0 },
+            cov_finish: s.cov(),
+            sched_overhead,
+            messages,
+        }
+    }
+}
+
+/// Mean and spread over experiment repetitions (paper: 20 reps/experiment).
+#[derive(Debug, Clone)]
+pub struct RepeatedRuns {
+    pub t_par_mean: f64,
+    pub t_par_stddev: f64,
+    pub t_par_min: f64,
+    pub t_par_max: f64,
+    pub reps: u64,
+}
+
+impl RepeatedRuns {
+    pub fn from_runs(runs: &[LoopStats]) -> Self {
+        let s = Stats::from_slice(&runs.iter().map(|r| r.t_par).collect::<Vec<_>>());
+        RepeatedRuns {
+            t_par_mean: s.mean(),
+            t_par_stddev: s.stddev(),
+            t_par_min: s.min(),
+            t_par_max: s.max(),
+            reps: s.count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let s = Stats::from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 1.25).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.sum() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_bulk() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 3.0 + 5.0).collect();
+        let bulk = Stats::from_slice(&xs);
+        let mut a = Stats::from_slice(&xs[..37]);
+        let b = Stats::from_slice(&xs[37..]);
+        a.merge(&b);
+        assert!((a.mean() - bulk.mean()).abs() < 1e-9);
+        assert!((a.var() - bulk.var()).abs() < 1e-9);
+        assert_eq!(a.count(), bulk.count());
+    }
+
+    #[test]
+    fn cov_computation() {
+        let xs = [0.0, 0.0205]; // mean 0.01025, stddev 0.01025 ⇒ c.o.v. 1.0
+        let s = Stats::from_slice(&xs);
+        assert!((s.cov() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn loop_stats_imbalance() {
+        let l = LoopStats::from_finish_times(&[1.0, 1.0, 1.0, 2.0], 17, 0.1, 34);
+        assert_eq!(l.t_par, 2.0);
+        assert!((l.imbalance - 0.6).abs() < 1e-12); // 2/1.25 − 1
+        assert_eq!(l.chunks, 17);
+    }
+
+    #[test]
+    fn empty_stats_are_zeroed() {
+        let s = Stats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.cov(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+    }
+
+    #[test]
+    fn repeated_runs_summary() {
+        let runs: Vec<LoopStats> = [70.0, 72.0, 71.0]
+            .iter()
+            .map(|&t| LoopStats::from_finish_times(&[t], 10, 0.0, 20))
+            .collect();
+        let r = RepeatedRuns::from_runs(&runs);
+        assert_eq!(r.reps, 3);
+        assert!((r.t_par_mean - 71.0).abs() < 1e-12);
+        assert_eq!(r.t_par_min, 70.0);
+        assert_eq!(r.t_par_max, 72.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Experiment runners: one function per paper artifact (DESIGN.md §4).
+//!
+//! * [`table2_rows`] / [`fig1_series`] — chunk sequences (Fig. 1, Table 2);
+//! * [`table3_rows`] — loop characteristics (Table 3);
+//! * [`run_figure`] — the §6 factorial experiment (Figs. 4, 5): technique ×
+//!   approach × injected delay over the simulated 256-rank cluster.
+
+use std::sync::Arc;
+
+use super::FigureRow;
+use crate::config::{ClusterConfig, DelaySite, ExecutionModel};
+use crate::des::{simulate, DesConfig};
+use crate::metrics::{LoopStats, RepeatedRuns};
+use crate::sched::closed_form_schedule;
+use crate::substrate::delay::InjectedDelay;
+use crate::techniques::{LoopParams, Technique, TechniqueKind};
+use crate::workload::mandelbrot::Mandelbrot;
+use crate::workload::profile::gaussian_draw;
+use crate::workload::psia::Psia;
+use crate::workload::{characterize, IterationCost, LoopCharacteristics, Workload};
+
+/// The two §6 applications.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum App {
+    Psia,
+    Mandelbrot,
+}
+
+impl App {
+    pub fn name(&self) -> &'static str {
+        match self {
+            App::Psia => "PSIA",
+            App::Mandelbrot => "Mandelbrot",
+        }
+    }
+
+    /// Per-iteration cost model, calibrated to Table 3. `scale_ct` trades
+    /// Mandelbrot fidelity for build time (cost *shape* is CT-invariant).
+    pub fn cost_model(&self, seed: u64, scale_ct: u32) -> IterationCost {
+        match self {
+            App::Psia => IterationCost::psia_table3(seed),
+            App::Mandelbrot => {
+                IterationCost::record_mandelbrot(&Mandelbrot::paper(scale_ct))
+            }
+        }
+    }
+}
+
+/// Table 2: the closed-form (DCA) chunk sequence per technique at the
+/// paper's example point (N=1000, P=4 by default).
+pub fn table2_rows(params: &LoopParams) -> Vec<(TechniqueKind, Vec<u64>)> {
+    TechniqueKind::ALL
+        .iter()
+        .filter(|k| k.has_closed_form())
+        .map(|&kind| {
+            let t = Technique::new(kind, params);
+            let sizes =
+                closed_form_schedule(&t, params).iter().map(|a| a.size).collect::<Vec<_>>();
+            (kind, sizes)
+        })
+        .collect()
+}
+
+/// Fig. 1: chunk-size series (chunk index → size) for plotting.
+pub fn fig1_series(params: &LoopParams) -> Vec<(TechniqueKind, Vec<u64>)> {
+    table2_rows(params)
+}
+
+/// Table 3: characteristics of the two applications' main loops.
+/// `mandelbrot_ct` scales the conversion threshold (paper: 1,000,000).
+pub fn table3_rows(n: u64, mandelbrot_ct: u32, psia_cloud: usize) -> Vec<LoopCharacteristics> {
+    let mut psia = Psia::paper(psia_cloud);
+    psia.n_images = n;
+    let mut mandel = Mandelbrot::paper(mandelbrot_ct);
+    // Match N by shrinking the image if asked for fewer iterations.
+    if n < mandel.n() {
+        let w = (n as f64).sqrt() as u32;
+        mandel.width = w.max(8);
+    }
+    vec![characterize(&psia), characterize(&mandel)]
+}
+
+/// Configuration for a Figs. 4–5 regeneration run.
+#[derive(Debug, Clone)]
+pub struct FigureConfig {
+    pub app: App,
+    /// Loop size (paper: 262,144).
+    pub n: u64,
+    /// Cluster geometry (paper: 16×16 = 256 ranks).
+    pub cluster: ClusterConfig,
+    /// Repetitions per cell (paper: 20).
+    pub reps: u32,
+    pub techniques: Vec<TechniqueKind>,
+    pub models: Vec<ExecutionModel>,
+    /// Injected delays in seconds (paper: 0, 10µs, 100µs).
+    pub delays: Vec<f64>,
+    pub delay_site: DelaySite,
+    /// Base seed; repetition r perturbs PE speeds with seed+r.
+    pub seed: u64,
+    /// Std-dev of per-PE speed jitter across repetitions (system noise).
+    pub speed_jitter: f64,
+    /// Mandelbrot CT used for the cost profile (scaled from 1e6).
+    pub mandelbrot_ct: u32,
+}
+
+impl FigureConfig {
+    /// The paper's full factorial cell set for one application.
+    pub fn paper(app: App) -> Self {
+        FigureConfig {
+            app,
+            n: 262_144,
+            cluster: ClusterConfig::minihpc(),
+            reps: 20,
+            techniques: TechniqueKind::EVALUATED.to_vec(),
+            models: vec![ExecutionModel::Cca, ExecutionModel::Dca],
+            delays: vec![0.0, 10e-6, 100e-6],
+            delay_site: DelaySite::Calculation,
+            seed: 0xF1605,
+            speed_jitter: 0.005,
+            mandelbrot_ct: 2_000,
+        }
+    }
+
+    /// A scaled-down configuration for quick runs and tests.
+    pub fn quick(app: App) -> Self {
+        let cluster = ClusterConfig { nodes: 4, ranks_per_node: 4, ..ClusterConfig::minihpc() };
+        FigureConfig {
+            n: 16_384,
+            cluster,
+            reps: 3,
+            mandelbrot_ct: 500,
+            ..Self::paper(app)
+        }
+    }
+}
+
+/// Run the factorial experiment; returns one row per (technique × model ×
+/// delay) cell. Skips AF×DCA-RMA (unsupported by design).
+pub fn run_figure(cfg: &FigureConfig) -> anyhow::Result<Vec<FigureRow>> {
+    // Build (or record) the cost model once; repetitions share it and vary
+    // only the PE-speed jitter, like repeated runs on the same inputs.
+    let base_cost = Arc::new(cfg.app.cost_model(cfg.seed, cfg.mandelbrot_ct));
+    let mut rows = Vec::new();
+    for &technique in &cfg.techniques {
+        for &model in &cfg.models {
+            if technique == TechniqueKind::Af && model == ExecutionModel::DcaRma {
+                continue;
+            }
+            for &d in &cfg.delays {
+                let mut runs: Vec<LoopStats> = Vec::with_capacity(cfg.reps as usize);
+                let mut chunks = 0;
+                for rep in 0..cfg.reps {
+                    let params = LoopParams::new(cfg.n, cfg.cluster.total_ranks());
+                    let delay = match cfg.delay_site {
+                        DelaySite::Calculation => InjectedDelay::calculation_only(d),
+                        DelaySite::Assignment => InjectedDelay::assignment_only(d),
+                    };
+                    let pe_speed: Vec<f64> = (0..cfg.cluster.total_ranks() as u64)
+                        .map(|pe| {
+                            1.0 + cfg.speed_jitter
+                                * gaussian_draw(cfg.seed ^ (rep as u64) << 32, pe)
+                        })
+                        .collect();
+                    let des = DesConfig {
+                        params,
+                        technique,
+                        model,
+                        delay,
+                        cluster: cfg.cluster.clone(),
+                        cost: (*base_cost).clone(),
+                        pe_speed,
+                    };
+                    let r = simulate(&des)?;
+                    if rep == 0 {
+                        chunks = r.stats.chunks;
+                    }
+                    runs.push(r.stats);
+                }
+                rows.push(FigureRow {
+                    technique,
+                    model,
+                    delay: d,
+                    runs: RepeatedRuns::from_runs(&runs),
+                    chunks,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_twelve_closed_rows() {
+        let rows = table2_rows(&LoopParams::new(1000, 4));
+        assert_eq!(rows.len(), 12); // 13 techniques − AF
+        for (kind, sizes) in &rows {
+            assert_eq!(sizes.iter().sum::<u64>(), 1000, "{kind}");
+        }
+    }
+
+    #[test]
+    fn quick_psia_figure_shape() {
+        let mut cfg = FigureConfig::quick(App::Psia);
+        cfg.techniques = vec![TechniqueKind::Static, TechniqueKind::Gss];
+        cfg.delays = vec![0.0, 100e-6];
+        cfg.reps = 2;
+        let rows = run_figure(&cfg).unwrap();
+        assert_eq!(rows.len(), 2 * 2 * 2);
+        for r in &rows {
+            assert!(r.runs.t_par_mean > 0.0);
+            assert_eq!(r.runs.reps, 2);
+        }
+        // Paper shape: under 100 µs delay, DCA ≤ CCA for GSS.
+        let find = |m, d: f64| {
+            rows.iter()
+                .find(|r| {
+                    r.technique == TechniqueKind::Gss
+                        && r.model == m
+                        && (r.delay - d).abs() < 1e-9
+                })
+                .unwrap()
+                .runs
+                .t_par_mean
+        };
+        let cca = find(ExecutionModel::Cca, 100e-6);
+        let dca = find(ExecutionModel::Dca, 100e-6);
+        assert!(dca <= cca * 1.02, "DCA {dca} should not exceed CCA {cca}");
+    }
+
+    #[test]
+    fn table3_shape_matches_paper() {
+        let rows = table3_rows(4096, 300, 256);
+        assert_eq!(rows.len(), 2);
+        let psia = &rows[0];
+        let mandel = &rows[1];
+        assert_eq!(psia.name, "PSIA");
+        assert!(psia.cov < 0.5, "PSIA c.o.v. low, got {}", psia.cov);
+        assert!(mandel.cov > 1.0, "Mandelbrot c.o.v. high, got {}", mandel.cov);
+    }
+}

@@ -1,0 +1,364 @@
+//! Minimal JSON emission (the build environment has no serde): enough to
+//! export experiment results for external plotting.
+
+/// A JSON value builder.
+#[derive(Debug, Clone)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn obj() -> Json {
+        Json::Obj(vec![])
+    }
+
+    /// Add a field to an object (panics on non-objects — builder misuse).
+    pub fn field(mut self, key: &str, value: impl Into<Json>) -> Json {
+        match &mut self {
+            Json::Obj(fields) => fields.push((key.to_string(), value.into())),
+            _ => panic!("field() on non-object"),
+        }
+        self
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.is_finite() {
+                    // Integral values print without a trailing ".0".
+                    if x.fract() == 0.0 && x.abs() < 9e15 {
+                        out.push_str(&format!("{}", *x as i64));
+                    } else {
+                        out.push_str(&format!("{x}"));
+                    }
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for ch in s.chars() {
+                    match ch {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, it) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    it.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl Json {
+    /// Parse a JSON document (recursive descent; enough for config/meta
+    /// files — strings with escapes, numbers, bools, null, arrays, objects).
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let bytes: Vec<char> = s.chars().collect();
+        let mut p = Parser { c: &bytes, i: 0 };
+        let v = p.value()?;
+        p.ws();
+        if p.i != bytes.len() {
+            return Err(format!("trailing data at {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|x| x as u64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    c: &'a [char],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.c.len() && self.c[self.i].is_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<char> {
+        self.ws();
+        self.c.get(self.i).copied()
+    }
+
+    fn eat(&mut self, ch: char) -> Result<(), String> {
+        if self.peek() == Some(ch) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{ch}' at {}", self.i))
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        for ch in word.chars() {
+            if self.c.get(self.i) != Some(&ch) {
+                return Err(format!("bad literal at {}", self.i));
+            }
+            self.i += 1;
+        }
+        Ok(v)
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or("unexpected end")? {
+            't' => self.lit("true", Json::Bool(true)),
+            'f' => self.lit("false", Json::Bool(false)),
+            'n' => self.lit("null", Json::Null),
+            '"' => self.string().map(Json::Str),
+            '[' => {
+                self.eat('[')?;
+                let mut items = vec![];
+                if self.peek() == Some(']') {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value()?);
+                    match self.peek() {
+                        Some(',') => self.i += 1,
+                        Some(']') => {
+                            self.i += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(format!("bad array at {}", self.i)),
+                    }
+                }
+            }
+            '{' => {
+                self.eat('{')?;
+                let mut fields = vec![];
+                if self.peek() == Some('}') {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.ws();
+                    let k = self.string()?;
+                    self.eat(':')?;
+                    let v = self.value()?;
+                    fields.push((k, v));
+                    match self.peek() {
+                        Some(',') => self.i += 1,
+                        Some('}') => {
+                            self.i += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        _ => return Err(format!("bad object at {}", self.i)),
+                    }
+                }
+            }
+            _ => self.number(),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat('"')?;
+        let mut out = String::new();
+        loop {
+            let ch = *self.c.get(self.i).ok_or("unterminated string")?;
+            self.i += 1;
+            match ch {
+                '"' => return Ok(out),
+                '\\' => {
+                    let esc = *self.c.get(self.i).ok_or("bad escape")?;
+                    self.i += 1;
+                    match esc {
+                        'n' => out.push('\n'),
+                        't' => out.push('\t'),
+                        'r' => out.push('\r'),
+                        'u' => {
+                            let hex: String =
+                                self.c.get(self.i..self.i + 4).ok_or("bad \\u")?.iter().collect();
+                            self.i += 4;
+                            let code = u32::from_str_radix(&hex, 16).map_err(|e| e.to_string())?;
+                            out.push(char::from_u32(code).ok_or("bad codepoint")?);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                c => out.push(c),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.ws();
+        let start = self.i;
+        while self
+            .c
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_digit() || "+-.eE".contains(*c))
+        {
+            self.i += 1;
+        }
+        let s: String = self.c[start..self.i].iter().collect();
+        s.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number '{s}': {e}"))
+    }
+}
+
+impl From<f64> for Json {
+    fn from(x: f64) -> Json {
+        Json::Num(x)
+    }
+}
+impl From<u64> for Json {
+    fn from(x: u64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<u32> for Json {
+    fn from(x: u32) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<i64> for Json {
+    fn from(x: i64) -> Json {
+        Json::Num(x as f64)
+    }
+}
+impl From<bool> for Json {
+    fn from(x: bool) -> Json {
+        Json::Bool(x)
+    }
+}
+impl From<&str> for Json {
+    fn from(x: &str) -> Json {
+        Json::Str(x.to_string())
+    }
+}
+impl From<String> for Json {
+    fn from(x: String) -> Json {
+        Json::Str(x)
+    }
+}
+impl<T: Into<Json>> From<Vec<T>> for Json {
+    fn from(xs: Vec<T>) -> Json {
+        Json::Arr(xs.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested() {
+        let j = Json::obj()
+            .field("name", "GSS")
+            .field("t_par", 70.25)
+            .field("chunks", 17u64)
+            .field("sizes", vec![250u64, 188, 141])
+            .field("ok", true);
+        assert_eq!(
+            j.render(),
+            r#"{"name":"GSS","t_par":70.25,"chunks":17,"sizes":[250,188,141],"ok":true}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let j = Json::Str("a\"b\\c\nd".into());
+        assert_eq!(j.render(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn non_finite_is_null() {
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn integral_floats_render_as_ints() {
+        assert_eq!(Json::Num(3.0).render(), "3");
+        assert_eq!(Json::Num(3.5).render(), "3.5");
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let src = r#"{"a": 1, "b": [true, null, -2.5e1], "c": {"d": "x\ny"}}"#;
+        let j = Json::parse(src).unwrap();
+        assert_eq!(j.get("a").unwrap().as_u64(), Some(1));
+        let Json::Arr(b) = j.get("b").unwrap() else { panic!() };
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[2].as_f64(), Some(-25.0));
+        assert_eq!(j.get("c").unwrap().get("d").unwrap().as_str(), Some("x\ny"));
+        // Render → parse is stable.
+        let again = Json::parse(&j.render()).unwrap();
+        assert_eq!(again.get("a").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("42 junk").is_err());
+    }
+}

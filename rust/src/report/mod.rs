@@ -1,0 +1,141 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §4 experiment index) plus text/JSON rendering.
+
+pub mod figures;
+pub mod selector;
+pub mod json;
+
+use crate::metrics::RepeatedRuns;
+use crate::techniques::TechniqueKind;
+
+/// One bar of Figs. 4–5: a (technique × approach × delay) cell summarized
+/// over repetitions.
+#[derive(Debug, Clone)]
+pub struct FigureRow {
+    pub technique: TechniqueKind,
+    pub model: crate::config::ExecutionModel,
+    /// Injected delay, seconds.
+    pub delay: f64,
+    pub runs: RepeatedRuns,
+    /// Total chunks of the first repetition (S, for context).
+    pub chunks: u64,
+}
+
+/// Render rows in the paper's figure layout: one block per delay scenario,
+/// techniques as rows, CCA/DCA side by side.
+pub fn render_figure(title: &str, rows: &[FigureRow]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    writeln!(out, "== {title} ==").unwrap();
+    let mut delays: Vec<f64> = rows.iter().map(|r| r.delay).collect();
+    delays.sort_by(f64::total_cmp);
+    delays.dedup();
+    for d in delays {
+        writeln!(out, "\n-- injected delay: {:.0} µs --", d * 1e6).unwrap();
+        writeln!(
+            out,
+            "{:<8} {:>12} {:>12} {:>9} {:>9} {:>8}",
+            "tech", "CCA T_par[s]", "DCA T_par[s]", "CCA ±sd", "DCA ±sd", "DCA/CCA"
+        )
+        .unwrap();
+        for kind in TechniqueKind::EVALUATED {
+            let find = |m: crate::config::ExecutionModel| {
+                rows.iter().find(|r| {
+                    r.technique == kind && r.model == m && (r.delay - d).abs() < 1e-12
+                })
+            };
+            let cca = find(crate::config::ExecutionModel::Cca);
+            let dca = find(crate::config::ExecutionModel::Dca);
+            if let (Some(c), Some(dd)) = (cca, dca) {
+                writeln!(
+                    out,
+                    "{:<8} {:>12.3} {:>12.3} {:>9.3} {:>9.3} {:>8.3}",
+                    kind.name(),
+                    c.runs.t_par_mean,
+                    dd.runs.t_par_mean,
+                    c.runs.t_par_stddev,
+                    dd.runs.t_par_stddev,
+                    dd.runs.t_par_mean / c.runs.t_par_mean
+                )
+                .unwrap();
+            }
+        }
+    }
+    out
+}
+
+/// Render the Table 2 layout (chunk sequences per technique).
+pub fn render_table2(rows: &[(TechniqueKind, Vec<u64>)]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    writeln!(out, "== Table 2: chunk sizes (N=1000, P=4, closed/DCA forms) ==").unwrap();
+    writeln!(out, "{:<8} {:>7}  sizes", "tech", "#chunks").unwrap();
+    for (kind, sizes) in rows {
+        let shown: Vec<String> = if sizes.len() > 24 {
+            sizes[..12]
+                .iter()
+                .map(u64::to_string)
+                .chain(std::iter::once("…".into()))
+                .chain(sizes[sizes.len() - 3..].iter().map(u64::to_string))
+                .collect()
+        } else {
+            sizes.iter().map(u64::to_string).collect()
+        };
+        writeln!(out, "{:<8} {:>7}  {}", kind.name(), sizes.len(), shown.join(", ")).unwrap();
+    }
+    out
+}
+
+/// Render Table 3 (loop characteristics).
+pub fn render_table3(rows: &[crate::workload::LoopCharacteristics]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    writeln!(out, "== Table 3: main-loop characteristics ==").unwrap();
+    writeln!(
+        out,
+        "{:<12} {:>9} {:>11} {:>11} {:>11} {:>11} {:>8}",
+        "app", "N", "max[s]", "min[s]", "mean[s]", "stddev[s]", "c.o.v."
+    )
+    .unwrap();
+    for c in rows {
+        writeln!(
+            out,
+            "{:<12} {:>9} {:>11.6} {:>11.6} {:>11.6} {:>11.6} {:>8.3}",
+            c.name, c.n, c.max_iter_time, c.min_iter_time, c.mean_iter_time, c.stddev, c.cov
+        )
+        .unwrap();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExecutionModel;
+    use crate::metrics::{LoopStats, RepeatedRuns};
+
+    fn row(kind: TechniqueKind, model: ExecutionModel, delay: f64, t: f64) -> FigureRow {
+        let ls = LoopStats::from_finish_times(&[t], 10, 0.0, 20);
+        FigureRow { technique: kind, model, delay, runs: RepeatedRuns::from_runs(&[ls]), chunks: 10 }
+    }
+
+    #[test]
+    fn figure_renders_pairs() {
+        let rows = vec![
+            row(TechniqueKind::Gss, ExecutionModel::Cca, 0.0, 70.0),
+            row(TechniqueKind::Gss, ExecutionModel::Dca, 0.0, 69.0),
+        ];
+        let s = render_figure("Fig 4", &rows);
+        assert!(s.contains("GSS"));
+        assert!(s.contains("70.000"));
+        assert!(s.contains("0 µs"));
+    }
+
+    #[test]
+    fn table2_truncates_long_sequences() {
+        let rows = vec![(TechniqueKind::Ss, vec![1u64; 1000])];
+        let s = render_table2(&rows);
+        assert!(s.contains("…"));
+        assert!(s.contains("1000"));
+    }
+}

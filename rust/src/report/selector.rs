@@ -1,0 +1,164 @@
+//! §7 future work, implemented: *"enable dynamic selection of the
+//! scheduling approach (DCA or CCA) that minimizes applications' execution
+//! time"* — realized the way the authors' own follow-up (SimAS, ref [23])
+//! does it: simulate the candidate configurations on the calibrated DES and
+//! pick the winner before launching the real run.
+//!
+//! The probe simulates a *prefix* of the loop (cost-model truncation keeps
+//! it cheap) for every candidate execution model and returns the model with
+//! the lowest predicted `T_loop^par`.
+
+use crate::config::{ClusterConfig, ExecutionModel};
+use crate::des::{simulate, DesConfig};
+use crate::substrate::delay::InjectedDelay;
+use crate::techniques::{LoopParams, TechniqueKind};
+use crate::workload::IterationCost;
+
+/// Outcome of a selection probe.
+#[derive(Debug, Clone)]
+pub struct Selection {
+    /// The chosen model.
+    pub model: ExecutionModel,
+    /// Predicted `T_par` per candidate, in candidate order.
+    pub predictions: Vec<(ExecutionModel, f64)>,
+    /// Fraction of the loop simulated.
+    pub prefix_fraction: f64,
+}
+
+/// SimAS-style selection: simulate `prefix_fraction` of the loop for each
+/// candidate model and choose the fastest. AF×DCA-RMA is skipped (no closed
+/// form, §4).
+pub fn select_approach(
+    technique: TechniqueKind,
+    n: u64,
+    cluster: &ClusterConfig,
+    cost: &IterationCost,
+    delay: InjectedDelay,
+    candidates: &[ExecutionModel],
+    prefix_fraction: f64,
+) -> anyhow::Result<Selection> {
+    let frac = prefix_fraction.clamp(0.01, 1.0);
+    let prefix_n = ((n as f64 * frac) as u64).max(cluster.total_ranks() as u64 * 2);
+    let mut predictions = Vec::new();
+    for &model in candidates {
+        if technique == TechniqueKind::Af && model == ExecutionModel::DcaRma {
+            continue;
+        }
+        let cfg = DesConfig {
+            params: LoopParams::new(prefix_n.min(n), cluster.total_ranks()),
+            technique,
+            model,
+            delay,
+            cluster: cluster.clone(),
+            cost: cost.clone(),
+            pe_speed: vec![],
+        };
+        predictions.push((model, simulate(&cfg)?.t_par()));
+    }
+    anyhow::ensure!(!predictions.is_empty(), "no viable candidate models");
+    let model = predictions
+        .iter()
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .map(|(m, _)| *m)
+        .unwrap();
+    Ok(Selection { model, predictions, prefix_fraction: frac })
+}
+
+/// Convenience: choose between CCA and DCA (the §7 pair).
+pub fn select_cca_or_dca(
+    technique: TechniqueKind,
+    n: u64,
+    cluster: &ClusterConfig,
+    cost: &IterationCost,
+    delay: InjectedDelay,
+) -> anyhow::Result<Selection> {
+    select_approach(
+        technique,
+        n,
+        cluster,
+        cost,
+        delay,
+        &[ExecutionModel::Cca, ExecutionModel::Dca],
+        0.15,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn saturating_cluster() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 8,
+            ranks_per_node: 16,
+            break_after: 0,
+            ..ClusterConfig::minihpc()
+        }
+    }
+
+    /// Under a heavy calculation delay with fine chunks (the Fig 5c regime)
+    /// the selector must pick DCA.
+    #[test]
+    fn picks_dca_under_calculation_slowdown() {
+        let s = select_cca_or_dca(
+            TechniqueKind::Ss,
+            131_072,
+            &saturating_cluster(),
+            &IterationCost::Constant(0.01),
+            InjectedDelay::calculation_only(100e-6),
+        )
+        .unwrap();
+        assert_eq!(s.model, ExecutionModel::Dca, "{:?}", s.predictions);
+    }
+
+    /// With the delay in the assignment instead (§7's reversal), DCA's
+    /// extra synchronized accesses mean CCA must not lose.
+    #[test]
+    fn does_not_pick_dca_under_assignment_slowdown() {
+        let s = select_cca_or_dca(
+            TechniqueKind::Ss,
+            131_072,
+            &saturating_cluster(),
+            &IterationCost::Constant(0.01),
+            InjectedDelay::assignment_only(200e-6),
+        )
+        .unwrap();
+        let cca = s.predictions.iter().find(|(m, _)| *m == ExecutionModel::Cca).unwrap().1;
+        let dca = s.predictions.iter().find(|(m, _)| *m == ExecutionModel::Dca).unwrap().1;
+        assert!(cca <= dca * 1.02, "CCA {cca} should not lose under assignment delay");
+    }
+
+    #[test]
+    fn af_rma_candidate_skipped() {
+        let s = select_approach(
+            TechniqueKind::Af,
+            10_000,
+            &ClusterConfig::small(4),
+            &IterationCost::Constant(1e-4),
+            InjectedDelay::none(),
+            &[ExecutionModel::Dca, ExecutionModel::DcaRma],
+            0.2,
+        )
+        .unwrap();
+        assert_eq!(s.predictions.len(), 1);
+        assert_eq!(s.model, ExecutionModel::Dca);
+    }
+
+    #[test]
+    fn predictions_cover_candidates() {
+        let s = select_approach(
+            TechniqueKind::Gss,
+            50_000,
+            &ClusterConfig::small(8),
+            &IterationCost::psia_table3(3),
+            InjectedDelay::none(),
+            &[ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma],
+            0.1,
+        )
+        .unwrap();
+        assert_eq!(s.predictions.len(), 3);
+        for (_, t) in &s.predictions {
+            assert!(*t > 0.0);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! `artifacts/meta.json` — the configuration baked into the AOT artifacts
+//! by `python/compile/aot.py` (tile geometry, workload parameters).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::report::json::Json;
+use crate::workload::mandelbrot::Mandelbrot;
+
+/// Mandelbrot artifact configuration.
+#[derive(Debug, Clone)]
+pub struct MandelbrotMeta {
+    pub width: u32,
+    pub ct: u32,
+    pub tile: u32,
+    pub x_min: f64,
+    pub x_max: f64,
+    pub y_min: f64,
+    pub y_max: f64,
+}
+
+/// Spin-image artifact configuration.
+#[derive(Debug, Clone)]
+pub struct SpinImageMeta {
+    pub image_width: u32,
+    pub bin_size: f64,
+    pub support_angle: f64,
+    pub m: usize,
+    pub tile_i: u32,
+}
+
+/// Parsed meta.json.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub mandelbrot: MandelbrotMeta,
+    pub spin_image: SpinImageMeta,
+}
+
+fn f(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .with_context(|| format!("meta.json missing numeric field '{key}'"))
+}
+
+impl ArtifactMeta {
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_str(&text)
+    }
+
+    pub fn from_str(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let m = j.get("mandelbrot").context("meta.json missing 'mandelbrot'")?;
+        let s = j.get("spin_image").context("meta.json missing 'spin_image'")?;
+        Ok(ArtifactMeta {
+            mandelbrot: MandelbrotMeta {
+                width: f(m, "width")? as u32,
+                ct: f(m, "ct")? as u32,
+                tile: f(m, "tile")? as u32,
+                x_min: f(m, "x_min")?,
+                x_max: f(m, "x_max")?,
+                y_min: f(m, "y_min")?,
+                y_max: f(m, "y_max")?,
+            },
+            spin_image: SpinImageMeta {
+                image_width: f(s, "image_width")? as u32,
+                bin_size: f(s, "bin_size")?,
+                support_angle: f(s, "support_angle")?,
+                m: f(s, "m")? as usize,
+                tile_i: f(s, "tile_i")? as u32,
+            },
+        })
+    }
+
+    /// The rust-native Mandelbrot workload with *exactly* the artifact's
+    /// parameters — the cross-validation reference for the PJRT path.
+    pub fn mandelbrot_native(&self) -> Mandelbrot {
+        let mut m = Mandelbrot::paper(self.mandelbrot.ct);
+        m.width = self.mandelbrot.width;
+        m.x_min = self.mandelbrot.x_min;
+        m.x_max = self.mandelbrot.x_max;
+        m.y_min = self.mandelbrot.y_min;
+        m.y_max = self.mandelbrot.y_max;
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "mandelbrot": {"width": 512, "ct": 256, "tile": 1024,
+                       "x_min": -2.0, "x_max": 1.0, "y_min": -1.5, "y_max": 1.5},
+        "spin_image": {"image_width": 5, "bin_size": 0.45,
+                       "support_angle": 0.5, "m": 2048, "tile_i": 8},
+        "format": "hlo-text"
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactMeta::from_str(SAMPLE).unwrap();
+        assert_eq!(m.mandelbrot.width, 512);
+        assert_eq!(m.mandelbrot.tile, 1024);
+        assert_eq!(m.spin_image.m, 2048);
+        assert!((m.spin_image.bin_size - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn native_workload_matches_meta() {
+        let m = ArtifactMeta::from_str(SAMPLE).unwrap();
+        let w = m.mandelbrot_native();
+        assert_eq!(w.ct, 256);
+        assert_eq!(w.width, 512);
+    }
+
+    #[test]
+    fn missing_field_errors() {
+        assert!(ArtifactMeta::from_str(r#"{"mandelbrot": {}}"#).is_err());
+    }
+}

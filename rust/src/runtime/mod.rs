@@ -1,0 +1,181 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the rust request path — Python is build-time only.
+//!
+//! Wraps the `xla` crate per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. One
+//! compiled executable per model; compiled once, executed per chunk tile.
+
+pub mod meta;
+pub mod workload;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use meta::ArtifactMeta;
+
+/// A PJRT client plus the compiled executables of this repo's artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub meta: ArtifactMeta,
+}
+
+/// One compiled model, executable per chunk tile.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact name (for diagnostics).
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse `meta.json` from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let meta = ArtifactMeta::from_file(&meta_path)
+            .with_context(|| format!("reading {meta_path:?} — run `make artifacts` first"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir, meta })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` (HLO **text** — the interchange format
+    /// that survives the jax≥0.5 / xla_extension 0.5.1 proto-id mismatch).
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple
+    /// (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {} output", self.name))?;
+        Ok(literal.to_tuple()?)
+    }
+}
+
+/// Build an `i32[1,1]` scalar literal (the aot.py scalar calling convention).
+pub fn scalar_i32(v: i32) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&[v]).reshape(&[1, 1])?)
+}
+
+/// Build an `f32[n,3]` literal from flat xyz data.
+pub fn points_f32(flat: &[f32]) -> Result<xla::Literal> {
+    anyhow::ensure!(flat.len() % 3 == 0, "flat xyz length must be divisible by 3");
+    Ok(xla::Literal::vec1(flat).reshape(&[flat.len() as i64 / 3, 3])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Runtime::default_dir();
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::new(dir).expect("runtime"))
+    }
+
+    #[test]
+    fn loads_and_compiles_mandelbrot() {
+        let Some(rt) = runtime() else { return };
+        assert!(rt.platform().to_lowercase().contains("pu")); // cpu/Host
+        let exe = rt.load("mandelbrot").unwrap();
+        let out = exe
+            .execute(&[scalar_i32(0).unwrap(), scalar_i32(1024).unwrap()])
+            .unwrap();
+        assert_eq!(out.len(), 3); // counts, in_set, checksum
+        let counts = out[0].to_vec::<i32>().unwrap();
+        assert_eq!(counts.len(), 1024);
+        let checksum = out[2].to_vec::<i64>().unwrap()[0];
+        assert_eq!(checksum, counts.iter().map(|&c| c as i64).sum::<i64>());
+    }
+
+    #[test]
+    fn mandelbrot_matches_native_modulo_fma() {
+        // XLA's CPU backend contracts mul+add into FMA; on the chaotic
+        // escape iteration a 1-ulp difference can shift the escape step for
+        // a handful of boundary pixels (~4 in the full 512² image). Allow a
+        // tiny per-tile budget; everything else must be bit-identical.
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("mandelbrot").unwrap();
+        let m = rt.meta.mandelbrot_native();
+        for start in [0u64, 130_000, 174_080, 261_120] {
+            let out = exe
+                .execute(&[scalar_i32(start as i32).unwrap(), scalar_i32(1024).unwrap()])
+                .unwrap();
+            let counts = out[0].to_vec::<i32>().unwrap();
+            let mismatches = (0..1024u64)
+                .filter(|&lane| counts[lane as usize] as u32 != m.escape_count(start + lane))
+                .count();
+            assert!(mismatches <= 4, "tile @{start}: {mismatches} pixels diverged");
+        }
+    }
+
+    #[test]
+    fn masked_lanes_are_cheap_and_zeroed_checksum() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("mandelbrot").unwrap();
+        let out = exe
+            .execute(&[scalar_i32(0).unwrap(), scalar_i32(3).unwrap()])
+            .unwrap();
+        let counts = out[0].to_vec::<i32>().unwrap();
+        let checksum = out[2].to_vec::<i64>().unwrap()[0];
+        assert_eq!(checksum, counts[..3].iter().map(|&c| c as i64).sum::<i64>());
+        assert!(counts[3..].iter().all(|&c| c <= 1), "masked lanes must be cheap");
+    }
+
+    #[test]
+    fn spin_image_executes() {
+        let Some(rt) = runtime() else { return };
+        let exe = rt.load("spin_image").unwrap();
+        let m = rt.meta.spin_image.m;
+        let cloud = crate::workload::psia::Psia::synthetic(m, 64, 0x5e1a_5e1a);
+        let mut flat_p = Vec::with_capacity(m * 3);
+        let mut flat_n = Vec::with_capacity(m * 3);
+        for pt in &cloud.cloud {
+            flat_p.extend_from_slice(&pt.p);
+            flat_n.extend_from_slice(&pt.n);
+        }
+        let out = exe
+            .execute(&[
+                points_f32(&flat_p).unwrap(),
+                points_f32(&flat_n).unwrap(),
+                scalar_i32(0).unwrap(),
+                scalar_i32(8).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let hist = out[0].to_vec::<i32>().unwrap();
+        assert_eq!(hist.len(), 8 * 25);
+        assert!(hist.iter().sum::<i32>() > 0, "histograms must bin something");
+    }
+}

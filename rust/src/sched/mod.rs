@@ -1,0 +1,266 @@
+//! The central work queue — the **chunk assignment** half of every
+//! self-scheduling step (§3).
+//!
+//! The paper's key observation: of the two per-step operations, only the
+//! assignment (advancing `(i, lp_start)`) needs exclusive access; the chunk
+//! *calculation* can run anywhere. [`WorkQueue`] is that shared state. The
+//! CCA master owns one privately; the DCA coordinator exposes it through the
+//! two-phase [`WorkQueue::begin_step`]/[`WorkQueue::commit`] protocol; the
+//! RMA variant mirrors it with atomics in [`crate::substrate::rma`].
+
+use crate::techniques::{LoopParams, Technique};
+
+
+/// One scheduled chunk: `size` loop iterations starting at `start`,
+/// calculated at scheduling step `step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    /// Scheduling-step index `i`.
+    pub step: u64,
+    /// First loop iteration of the chunk (`lp_start`).
+    pub start: u64,
+    /// Number of iterations (already clipped to the remaining work).
+    pub size: u64,
+}
+
+impl Assignment {
+    /// Exclusive end of the chunk's iteration range.
+    pub fn end(&self) -> u64 {
+        self.start + self.size
+    }
+}
+
+/// Central scheduling state `(i, lp_start)` over a loop of `n` iterations.
+#[derive(Debug, Clone)]
+pub struct WorkQueue {
+    n: u64,
+    next_start: u64,
+    next_step: u64,
+    min_chunk: u64,
+}
+
+impl WorkQueue {
+    pub fn new(n: u64, min_chunk: u64) -> Self {
+        WorkQueue { n, next_start: 0, next_step: 0, min_chunk: min_chunk.max(1) }
+    }
+
+    pub fn from_params(params: &LoopParams) -> Self {
+        Self::new(params.n, params.min_chunk)
+    }
+
+    /// Remaining unscheduled iterations `R_i`.
+    pub fn remaining(&self) -> u64 {
+        self.n - self.next_start
+    }
+
+    /// Scheduling step index `i` of the next assignment.
+    pub fn step(&self) -> u64 {
+        self.next_step
+    }
+
+    /// `lp_start` — the first unscheduled iteration.
+    pub fn lp_start(&self) -> u64 {
+        self.next_start
+    }
+
+    /// True when every iteration has been assigned.
+    pub fn is_done(&self) -> bool {
+        self.next_start >= self.n
+    }
+
+    /// Clip a requested (unclipped) size to `[min_chunk, remaining]`.
+    pub fn clip(&self, unclipped: u64) -> u64 {
+        unclipped.max(self.min_chunk).min(self.remaining())
+    }
+
+    /// **One-shot assignment** (CCA master path): clip `unclipped`, advance
+    /// the queue, return the chunk. `None` once the loop is exhausted.
+    pub fn assign(&mut self, unclipped: u64) -> Option<Assignment> {
+        if self.is_done() {
+            return None;
+        }
+        let size = self.clip(unclipped);
+        let a = Assignment { step: self.next_step, start: self.next_start, size };
+        self.next_start += size;
+        self.next_step += 1;
+        Some(a)
+    }
+
+    /// **Phase 1 of the DCA two-sided protocol**: hand out the next step
+    /// index (and the current `R_i`, needed by AF/PLS) without assigning
+    /// iterations yet. The caller computes the chunk size remotely and comes
+    /// back through [`WorkQueue::commit`].
+    ///
+    /// Steps are *reserved* — two concurrent workers get distinct `i`.
+    pub fn begin_step(&mut self) -> Option<StepTicket> {
+        if self.is_done() {
+            return None;
+        }
+        let t = StepTicket { step: self.next_step, remaining: self.remaining() };
+        self.next_step += 1;
+        Some(t)
+    }
+
+    /// **Phase 2 of the DCA protocol**: commit a worker-calculated size for a
+    /// previously reserved step. Iteration ranges are granted in commit
+    /// order (disjointness is what matters — DLS assumes independent
+    /// iterations, §1). Returns `None` if the loop filled up in between.
+    pub fn commit(&mut self, ticket: StepTicket, unclipped: u64) -> Option<Assignment> {
+        if self.is_done() {
+            return None;
+        }
+        let size = self.clip(unclipped);
+        let a = Assignment { step: ticket.step, start: self.next_start, size };
+        self.next_start += size;
+        Some(a)
+    }
+}
+
+/// A reserved scheduling step handed to a DCA worker (phase 1 reply).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StepTicket {
+    /// The reserved step index `i`.
+    pub step: u64,
+    /// `R_i` snapshot at reservation time (consumed by AF and recursive PLS).
+    pub remaining: u64,
+}
+
+/// Generate the full schedule of a technique using the **closed (DCA)** form.
+/// This is what Table 2 / Fig. 1 report.
+pub fn closed_form_schedule(tech: &Technique, params: &LoopParams) -> Vec<Assignment> {
+    let mut q = WorkQueue::from_params(params);
+    let mut out = Vec::new();
+    while let Some(t) = q.begin_step() {
+        let k = tech.closed_chunk(t.step);
+        if let Some(a) = q.commit(t, k) {
+            out.push(a);
+        }
+    }
+    out
+}
+
+/// Generate the full schedule using the **recursive (CCA)** form.
+pub fn recursive_schedule(tech: &Technique, params: &LoopParams) -> Vec<Assignment> {
+    let mut q = WorkQueue::from_params(params);
+    let mut st = tech.fresh_recursive();
+    let mut out = Vec::new();
+    while !q.is_done() {
+        let k = tech.recursive_chunk(&mut st, q.remaining());
+        match q.assign(k) {
+            Some(a) => out.push(a),
+            None => break,
+        }
+    }
+    out
+}
+
+/// Verify a schedule covers `[0, n)` exactly once, in order, with no overlap
+/// and no gap. Returns a description of the first violation.
+pub fn verify_coverage(schedule: &[Assignment], n: u64) -> Result<(), String> {
+    let mut cursor = 0u64;
+    for (idx, a) in schedule.iter().enumerate() {
+        if a.start != cursor {
+            return Err(format!(
+                "chunk {idx}: starts at {} but previous coverage ended at {cursor}",
+                a.start
+            ));
+        }
+        if a.size == 0 {
+            return Err(format!("chunk {idx}: zero-sized"));
+        }
+        cursor = a.end();
+        if cursor > n {
+            return Err(format!("chunk {idx}: overruns N={n} (end={cursor})"));
+        }
+    }
+    if cursor != n {
+        return Err(format!("coverage ends at {cursor}, expected N={n}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::techniques::{TechniqueKind, TechniqueKind::*};
+
+    #[test]
+    fn assign_clips_last_chunk() {
+        let mut q = WorkQueue::new(10, 1);
+        assert_eq!(q.assign(7).unwrap().size, 7);
+        let last = q.assign(7).unwrap();
+        assert_eq!(last.size, 3);
+        assert!(q.assign(1).is_none());
+    }
+
+    #[test]
+    fn min_chunk_enforced() {
+        let mut q = WorkQueue::new(10, 3);
+        assert_eq!(q.assign(1).unwrap().size, 3);
+    }
+
+    #[test]
+    fn two_phase_matches_one_shot_sizes() {
+        let mut a = WorkQueue::new(100, 1);
+        let mut b = WorkQueue::new(100, 1);
+        for req in [10u64, 20, 5, 40, 50] {
+            let one = a.assign(req);
+            let t = b.begin_step().map(|t| b.commit(t, req)).flatten();
+            assert_eq!(one.map(|x| (x.start, x.size)), t.map(|x| (x.start, x.size)));
+        }
+    }
+
+    #[test]
+    fn tickets_reserve_distinct_steps() {
+        let mut q = WorkQueue::new(100, 1);
+        let t1 = q.begin_step().unwrap();
+        let t2 = q.begin_step().unwrap();
+        assert_ne!(t1.step, t2.step);
+        // Commit out of order — ranges stay disjoint and contiguous.
+        let a2 = q.commit(t2, 30).unwrap();
+        let a1 = q.commit(t1, 30).unwrap();
+        assert_eq!(a2.start, 0);
+        assert_eq!(a1.start, 30);
+    }
+
+    #[test]
+    fn all_closed_schedules_cover_exactly() {
+        let params = crate::techniques::LoopParams::new(1000, 4);
+        for kind in TechniqueKind::ALL {
+            if !kind.has_closed_form() {
+                continue;
+            }
+            let t = Technique::new(kind, &params);
+            let s = closed_form_schedule(&t, &params);
+            verify_coverage(&s, params.n).unwrap_or_else(|e| panic!("{kind}: {e}"));
+        }
+    }
+
+    #[test]
+    fn all_recursive_schedules_cover_exactly() {
+        let params = crate::techniques::LoopParams::new(1000, 4);
+        for kind in [Static, Ss, Fsc, Gss, Tap, Tss, Fac2, Tfss, Fiss, Viss, Rnd, Pls] {
+            let t = Technique::new(kind, &params);
+            let s = recursive_schedule(&t, &params);
+            verify_coverage(&s, params.n).unwrap_or_else(|e| panic!("{kind}: {e}"));
+        }
+    }
+
+    #[test]
+    fn verify_coverage_catches_violations() {
+        let gap = vec![
+            Assignment { step: 0, start: 0, size: 5 },
+            Assignment { step: 1, start: 6, size: 4 },
+        ];
+        assert!(verify_coverage(&gap, 10).is_err());
+        let overrun = vec![Assignment { step: 0, start: 0, size: 11 }];
+        assert!(verify_coverage(&overrun, 10).is_err());
+        let short = vec![Assignment { step: 0, start: 0, size: 9 }];
+        assert!(verify_coverage(&short, 10).is_err());
+        let ok = vec![
+            Assignment { step: 0, start: 0, size: 5 },
+            Assignment { step: 1, start: 5, size: 5 },
+        ];
+        assert!(verify_coverage(&ok, 10).is_ok());
+    }
+}

@@ -1,0 +1,83 @@
+//! The injected CPU slowdown of §6: a constant delay added to the chunk
+//! calculation (or, for the §7 future-work ablation, the assignment).
+//!
+//! In the **real** threaded engine the delay must actually burn CPU — the
+//! paper injects it as computation inside the chunk-calculation function, so
+//! a 10 µs delay on the CCA master really does serialize behind the request
+//! queue. `thread::sleep` is too coarse (and yields the core), so we spin.
+//! In the **DES** the delay is just a number added to virtual time.
+
+use std::time::{Duration, Instant};
+
+/// Busy-wait for `seconds` of wall-clock time (0 returns immediately).
+///
+/// Spinning (not sleeping) matches the paper's mechanism: the injected delay
+/// occupies the PE, so on a non-dedicated master it also steals time from
+/// the master's own iteration execution.
+#[inline]
+pub fn spin_for(seconds: f64) {
+    if seconds <= 0.0 {
+        return;
+    }
+    let dur = Duration::from_secs_f64(seconds);
+    let start = Instant::now();
+    while start.elapsed() < dur {
+        std::hint::spin_loop();
+    }
+}
+
+/// A delay site's configuration for one run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InjectedDelay {
+    /// Seconds added to every chunk **calculation**.
+    pub calculation: f64,
+    /// Seconds added to every chunk **assignment** (§7 ablation).
+    pub assignment: f64,
+}
+
+impl InjectedDelay {
+    /// The paper's §6 setup: delay only the calculation.
+    pub fn calculation_only(seconds: f64) -> Self {
+        InjectedDelay { calculation: seconds, assignment: 0.0 }
+    }
+
+    /// The §7 future-work ablation: delay only the assignment.
+    pub fn assignment_only(seconds: f64) -> Self {
+        InjectedDelay { calculation: 0.0, assignment: seconds }
+    }
+
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spin_zero_is_instant() {
+        let t = Instant::now();
+        spin_for(0.0);
+        assert!(t.elapsed() < Duration::from_millis(1));
+    }
+
+    #[test]
+    fn spin_waits_roughly_right() {
+        let t = Instant::now();
+        spin_for(2e-3);
+        let e = t.elapsed();
+        assert!(e >= Duration::from_micros(1900), "elapsed {e:?}");
+        assert!(e < Duration::from_millis(50), "elapsed {e:?}");
+    }
+
+    #[test]
+    fn sites() {
+        let c = InjectedDelay::calculation_only(1e-5);
+        assert_eq!(c.calculation, 1e-5);
+        assert_eq!(c.assignment, 0.0);
+        let a = InjectedDelay::assignment_only(1e-4);
+        assert_eq!(a.calculation, 0.0);
+        assert_eq!(a.assignment, 1e-4);
+    }
+}

@@ -1,0 +1,15 @@
+//! Simulated distributed-memory substrates — the stand-ins for MPI on the
+//! paper's miniHPC cluster (DESIGN.md §Substitutions):
+//!
+//! * [`msg`] — **two-sided** point-to-point messaging (MPI_Send/Recv
+//!   semantics) over in-process channels; what this paper's new DCA
+//!   implementation and all CCA libraries (LB tool, LB4MPI, DSS) use.
+//! * [`rma`] — **one-sided** passive-target window with atomic fetch-ops
+//!   (MPI-3.1 RMA semantics); what the PDP'19 DCA used.
+//! * [`topology`] — rank→node placement and latency classes.
+//! * [`delay`] — the injected CPU-slowdown of §6's scenarios.
+
+pub mod delay;
+pub mod msg;
+pub mod rma;
+pub mod topology;

@@ -1,0 +1,152 @@
+//! One-sided RMA window: the MPI-3.1 passive-target substrate of the
+//! original DCA (PDP'19, Fig. 3). The coordinator *hosts* the scheduling
+//! state; workers access it directly with atomic fetch-ops — no coordinator
+//! CPU involvement on the request path at all.
+//!
+//! The protocol (matching DESIGN.md §5):
+//!
+//! 1. `i ← fetch_add(step, 1)` — reserve a scheduling step;
+//! 2. compute `K_i` **locally, lock-free** (the closed form makes this
+//!    possible — no other PE's chunk is needed);
+//! 3. `start ← fetch_add_clipped(lp_start, K_i)` — claim the iteration range.
+//!
+//! Because `K_i` depends only on `i`, the expensive part (2) runs fully in
+//! parallel even under injected slowdowns; only two cheap atomics serialize.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sched::Assignment;
+
+/// The shared window: `(i, lp_start)` plus loop bounds.
+#[derive(Debug)]
+pub struct RmaWindow {
+    n: u64,
+    min_chunk: u64,
+    step: AtomicU64,
+    lp_start: AtomicU64,
+}
+
+impl RmaWindow {
+    pub fn new(n: u64, min_chunk: u64) -> Self {
+        RmaWindow {
+            n,
+            min_chunk: min_chunk.max(1),
+            step: AtomicU64::new(0),
+            lp_start: AtomicU64::new(0),
+        }
+    }
+
+    /// Total loop iterations `N`.
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Phase 1: reserve the next scheduling step (exclusive fetch-add).
+    /// Also returns the current `lp_start` snapshot so adaptive callers can
+    /// estimate `R_i`. `None` once all iterations are claimed.
+    pub fn reserve_step(&self) -> Option<(u64, u64)> {
+        let lp = self.lp_start.load(Ordering::Acquire);
+        if lp >= self.n {
+            return None;
+        }
+        Some((self.step.fetch_add(1, Ordering::AcqRel), lp))
+    }
+
+    /// Phase 3: claim `unclipped` iterations. CAS loop implements the
+    /// clipped fetch-add (`min_chunk ≤ size ≤ remaining`). `None` when the
+    /// loop filled up between reserve and claim.
+    pub fn claim(&self, step: u64, unclipped: u64) -> Option<Assignment> {
+        let mut cur = self.lp_start.load(Ordering::Acquire);
+        loop {
+            if cur >= self.n {
+                return None;
+            }
+            let size = unclipped.max(self.min_chunk).min(self.n - cur);
+            match self.lp_start.compare_exchange_weak(
+                cur,
+                cur + size,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(Assignment { step, start: cur, size }),
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// True when every iteration has been claimed.
+    pub fn is_done(&self) -> bool {
+        self.lp_start.load(Ordering::Acquire) >= self.n
+    }
+
+    /// Scheduling steps issued so far.
+    pub fn steps_issued(&self) -> u64 {
+        self.step.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::verify_coverage;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn sequential_reserve_claim() {
+        let w = RmaWindow::new(100, 1);
+        let (i, lp) = w.reserve_step().unwrap();
+        assert_eq!((i, lp), (0, 0));
+        let a = w.claim(i, 30).unwrap();
+        assert_eq!((a.start, a.size), (0, 30));
+        let (i2, lp2) = w.reserve_step().unwrap();
+        assert_eq!((i2, lp2), (1, 30));
+    }
+
+    #[test]
+    fn claim_clips_to_remaining() {
+        let w = RmaWindow::new(10, 1);
+        let (i, _) = w.reserve_step().unwrap();
+        assert_eq!(w.claim(i, 100).unwrap().size, 10);
+        assert!(w.is_done());
+        assert!(w.reserve_step().is_none());
+        assert!(w.claim(99, 1).is_none());
+    }
+
+    #[test]
+    fn concurrent_claims_are_disjoint_and_complete() {
+        let n = 100_000u64;
+        let w = Arc::new(RmaWindow::new(n, 1));
+        let mut handles = vec![];
+        for t in 0..8u64 {
+            let w = Arc::clone(&w);
+            handles.push(thread::spawn(move || {
+                let mut mine = vec![];
+                while let Some((i, _)) = w.reserve_step() {
+                    // Varying sizes to stress the CAS loop.
+                    let k = 1 + (i * (t + 1)) % 97;
+                    if let Some(a) = w.claim(i, k) {
+                        mine.push(a);
+                    }
+                }
+                mine
+            }));
+        }
+        let mut all: Vec<Assignment> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_by_key(|a| a.start);
+        verify_coverage(&all, n).unwrap();
+        // Steps are unique.
+        let mut steps: Vec<u64> = all.iter().map(|a| a.step).collect();
+        steps.sort();
+        steps.dedup();
+        assert_eq!(steps.len(), all.len());
+    }
+
+    #[test]
+    fn min_chunk_respected() {
+        let w = RmaWindow::new(100, 5);
+        let (i, _) = w.reserve_step().unwrap();
+        assert_eq!(w.claim(i, 1).unwrap().size, 5);
+    }
+}

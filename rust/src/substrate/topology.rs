@@ -1,0 +1,101 @@
+//! Cluster topology: rank→node placement and message latency classes,
+//! mirroring miniHPC's 16 dual-socket nodes × 16 ranks.
+
+use crate::config::ClusterConfig;
+
+/// Rank→node placement with per-pair latency lookup.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    ranks_per_node: u32,
+    total_ranks: u32,
+    intra: f64,
+    inter: f64,
+}
+
+impl Topology {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Topology {
+            ranks_per_node: cfg.ranks_per_node.max(1),
+            total_ranks: cfg.total_ranks().max(1),
+            intra: cfg.intra_node_latency,
+            inter: cfg.inter_node_latency,
+        }
+    }
+
+    pub fn total_ranks(&self) -> u32 {
+        self.total_ranks
+    }
+
+    /// Physical node hosting `rank` (block placement, like `mpirun -bynode`
+    /// off — consecutive ranks fill a node first, the paper's 16-per-node).
+    pub fn node_of(&self, rank: u32) -> u32 {
+        rank / self.ranks_per_node
+    }
+
+    /// One-way message latency between two ranks, seconds.
+    pub fn latency(&self, a: u32, b: u32) -> f64 {
+        if a == b {
+            0.0
+        } else if self.node_of(a) == self.node_of(b) {
+            self.intra
+        } else {
+            self.inter
+        }
+    }
+
+    /// Mean one-way latency from `rank` to every *other* rank — useful for
+    /// summarizing where a master/coordinator should live.
+    pub fn mean_latency_from(&self, rank: u32) -> f64 {
+        let others = (self.total_ranks - 1).max(1) as f64;
+        (0..self.total_ranks)
+            .filter(|&r| r != rank)
+            .map(|r| self.latency(rank, r))
+            .sum::<f64>()
+            / others
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn minihpc() -> Topology {
+        Topology::new(&ClusterConfig::minihpc())
+    }
+
+    #[test]
+    fn block_placement() {
+        let t = minihpc();
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(15), 0);
+        assert_eq!(t.node_of(16), 1);
+        assert_eq!(t.node_of(255), 15);
+    }
+
+    #[test]
+    fn latency_classes() {
+        let t = minihpc();
+        assert_eq!(t.latency(3, 3), 0.0);
+        assert_eq!(t.latency(0, 5), 0.5e-6); // same node
+        assert_eq!(t.latency(0, 20), 2.0e-6); // cross node
+        assert_eq!(t.latency(20, 0), t.latency(0, 20));
+    }
+
+    #[test]
+    fn mean_latency_dominated_by_inter_node() {
+        let t = minihpc();
+        let m = t.mean_latency_from(0);
+        // 15 intra-node peers, 240 inter-node peers.
+        let expect = (15.0 * 0.5e-6 + 240.0 * 2.0e-6) / 255.0;
+        assert!((m - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_node_all_intra() {
+        let t = Topology::new(&ClusterConfig::small(8));
+        for r in 1..8 {
+            assert_eq!(t.latency(0, r), 0.5e-6);
+        }
+    }
+}

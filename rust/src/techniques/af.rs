@@ -1,0 +1,274 @@
+//! AF — adaptive factoring (Banicescu & Liu, Eq. 11): learns the mean `µ_p`
+//! and standard deviation `σ_p` of iteration execution times *per PE* during
+//! execution and sizes chunks accordingly:
+//!
+//! ```text
+//! K_i = (D + 2·E·R_i − √(D² + 4·D·E·R_i)) / (2·µ_p)
+//! D = Σ_p σ_p²/µ_p      E = (Σ_p 1/µ_p)⁻¹
+//! ```
+//!
+//! §4 proves AF admits **no straightforward formula** — `R_i`, `µ_p`, `σ_p`
+//! all evolve at runtime — so AF-under-DCA still distributes the *evaluation*
+//! of Eq. 11 to the workers but requires extra synchronization: the
+//! coordinator's assignment reply carries `R_i`, and the `(D, E)` aggregates
+//! are kept coherent via the performance reports each PE sends at chunk end.
+//! That is exactly the structure the coordinators in [`crate::coordinator`]
+//! implement.
+
+use super::LoopParams;
+
+/// Online per-PE execution statistics.
+///
+/// AF observes *chunk* timings, not individual iterations; we estimate the
+/// per-iteration mean as total-time/total-iterations and recover the
+/// **iteration-level** variance from the spread of per-chunk means: for a
+/// chunk of `k` iid iterations, `Var(chunk_mean) = σ²/k`, so
+/// `E[k·(chunk_mean − µ)²] = σ²` and averaging `k_j·(m_j − µ)²` over chunks
+/// is an unbiased σ² estimator. (A naive weighted variance of chunk means
+/// underestimates σ² by the mean chunk size — which collapses AF's `D` and
+/// makes Eq. 11 hand out absurdly large chunks.)
+#[derive(Debug, Clone, Default)]
+pub struct PeStats {
+    /// Total iterations executed by this PE.
+    pub iters: u64,
+    /// Total execution time (s).
+    pub time: f64,
+    /// Finished chunks observed (σ needs at least two).
+    pub chunks: u64,
+    /// `Σ_j k_j·m_j²` over chunks (for the variance estimate).
+    wsum_sq: f64,
+}
+
+impl PeStats {
+    /// Record a finished chunk of `iters` iterations taking `elapsed` s.
+    pub fn record(&mut self, iters: u64, elapsed: f64) {
+        if iters == 0 {
+            return;
+        }
+        let m = elapsed / iters as f64;
+        self.iters += iters;
+        self.time += elapsed;
+        self.chunks += 1;
+        self.wsum_sq += iters as f64 * m * m;
+    }
+
+    /// Estimated mean iteration time `µ_p` (None until first sample).
+    pub fn mu(&self) -> Option<f64> {
+        (self.iters > 0 && self.time > 0.0).then(|| self.time / self.iters as f64)
+    }
+
+    /// True once µ **and** σ are estimable (≥ 2 chunks) — Eq. 11 is not
+    /// trustworthy before that (§2: AF "learns both µ and σ").
+    pub fn measured(&self) -> bool {
+        self.chunks >= 2
+    }
+
+    /// Estimated iteration-time variance `σ_p²`:
+    /// `(Σ k_j m_j² − 2µ·Σt_j + µ²·Σk_j) / J`.
+    pub fn var(&self) -> f64 {
+        match self.mu() {
+            Some(mu) if self.chunks >= 1 => {
+                ((self.wsum_sq - 2.0 * mu * self.time + mu * mu * self.iters as f64)
+                    / self.chunks as f64)
+                    .max(0.0)
+            }
+            _ => 0.0,
+        }
+    }
+}
+
+/// The cross-PE aggregates `D` and `E` of Eq. 11 — the quantities that must
+/// be synchronized for AF under either CCA or DCA.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AfGlobals {
+    /// `D = Σ_p σ_p²/µ_p`.
+    pub d: f64,
+    /// `E = (Σ_p 1/µ_p)⁻¹`.
+    pub e: f64,
+}
+
+/// Pure Eq. 11 evaluation: the chunk size a PE with mean `mu_pe` should take
+/// given `remaining = R_i` and the global aggregates, for a loop shared by
+/// `p` PEs.
+///
+/// With `D = 0` (no measured variance) this degenerates to `E·R/µ_p`, which
+/// for homogeneous PEs is `R/P` — the GSS chunk — a useful sanity anchor.
+///
+/// The result is capped at `⌈R/P⌉` (as in LB4MPI's implementation): early in
+/// the run, single-sample µ estimates on heavy-tailed loops (Mandelbrot's
+/// 2000× iteration-time spread) can make Eq. 11 request nearly all of `R`
+/// for one PE, and a chunk beyond `R/P` can never improve load balance.
+pub fn af_chunk(globals: AfGlobals, mu_pe: f64, remaining: u64, p: u32) -> u64 {
+    if mu_pe <= 0.0 || remaining == 0 {
+        return 1;
+    }
+    let (d, e) = (globals.d.max(0.0), globals.e.max(0.0));
+    let r = remaining as f64;
+    let k = (d + 2.0 * e * r - (d * d + 4.0 * d * e * r).sqrt()) / (2.0 * mu_pe);
+    let cap = remaining.div_ceil(p.max(1) as u64);
+    (k.floor() as u64).clamp(1, cap)
+}
+
+/// Stateful AF calculator: per-PE statistics plus the bootstrap policy.
+#[derive(Debug, Clone)]
+pub struct AfCalculator {
+    stats: Vec<PeStats>,
+    /// Chunk size handed to a PE that has no timing sample yet.
+    pub bootstrap: u64,
+    min_chunk: u64,
+    p: u32,
+}
+
+impl AfCalculator {
+    pub fn new(params: &LoopParams) -> Self {
+        AfCalculator {
+            stats: vec![PeStats::default(); params.p as usize],
+            // One small probing chunk per PE before the formula takes over
+            // (Table 2's AF row opens with unit chunks).
+            bootstrap: params.min_chunk.max(1),
+            min_chunk: params.min_chunk.max(1),
+            p: params.p,
+        }
+    }
+
+    /// Report a finished chunk for `pe`.
+    pub fn record(&mut self, pe: usize, iters: u64, elapsed: f64) {
+        self.stats[pe].record(iters, elapsed);
+    }
+
+    /// Per-PE statistics (read-only view).
+    pub fn pe_stats(&self, pe: usize) -> &PeStats {
+        &self.stats[pe]
+    }
+
+    /// Current `(D, E)` over the PEs that have samples. `None` until at
+    /// least one PE has reported.
+    pub fn globals(&self) -> Option<AfGlobals> {
+        let mut d = 0.0;
+        let mut inv_mu = 0.0;
+        let mut any = false;
+        for s in &self.stats {
+            if let Some(mu) = s.mu() {
+                d += s.var() / mu;
+                inv_mu += 1.0 / mu;
+                any = true;
+            }
+        }
+        any.then(|| AfGlobals { d, e: 1.0 / inv_mu })
+    }
+
+    /// Chunk size for `pe` given `remaining = R_i` (Eq. 11, or the bootstrap
+    /// size while `pe` still lacks a µ **and** σ estimate — two chunks).
+    pub fn chunk(&self, pe: usize, remaining: u64) -> u64 {
+        if !self.stats[pe].measured() {
+            return self.bootstrap;
+        }
+        match (self.stats[pe].mu(), self.globals()) {
+            (Some(mu), Some(g)) => af_chunk(g, mu, remaining, self.p).max(self.min_chunk),
+            _ => self.bootstrap,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(n: u64, p: u32) -> LoopParams {
+        LoopParams::new(n, p)
+    }
+
+    #[test]
+    fn bootstrap_until_measured() {
+        let mut af = AfCalculator::new(&params(1000, 4));
+        assert_eq!(af.chunk(0, 1000), 1);
+        af.record(0, 10, 0.1);
+        // One chunk gives µ but no σ — still bootstrapping (§2: AF needs both).
+        assert_eq!(af.chunk(0, 995), 1);
+        af.record(0, 10, 0.12);
+        assert!(af.chunk(0, 990) > 1, "measured PE should get a formula chunk");
+        // PE 1 has no sample but globals exist; still bootstraps (needs own µ).
+        assert_eq!(af.chunk(1, 990), 1);
+    }
+
+    #[test]
+    fn zero_variance_homogeneous_is_gss_like() {
+        let mut af = AfCalculator::new(&params(1000, 4));
+        for pe in 0..4 {
+            // Two identical chunks per PE: µ=0.01, σ²=0.
+            af.record(pe, 100, 1.0);
+            af.record(pe, 100, 1.0);
+        }
+        let g = af.globals().unwrap();
+        assert!(g.d.abs() < 1e-12);
+        assert!((g.e - 0.01 / 4.0).abs() < 1e-12);
+        // E·R/µ = (µ/P)·R/µ = R/P
+        assert_eq!(af.chunk(0, 600), 150);
+    }
+
+    #[test]
+    fn slower_pe_gets_smaller_chunks() {
+        let mut af = AfCalculator::new(&params(10_000, 2));
+        af.record(0, 100, 1.0); // fast: µ=0.01
+        af.record(0, 100, 1.0);
+        af.record(1, 100, 4.0); // slow: µ=0.04
+        af.record(1, 100, 4.0);
+        let fast = af.chunk(0, 5000);
+        let slow = af.chunk(1, 5000);
+        assert!(fast > slow, "fast={fast} slow={slow}");
+        // E·R/µ would give a 4× ratio (4000 vs 1000), but the fast PE's
+        // request is capped at ⌈R/P⌉ = 2500.
+        assert_eq!(fast, 2500);
+        assert_eq!(slow, 1000);
+    }
+
+    #[test]
+    fn variance_shrinks_chunks() {
+        let mut novar = AfCalculator::new(&params(10_000, 2));
+        novar.record(0, 100, 1.0);
+        novar.record(0, 100, 1.0);
+        novar.record(1, 100, 1.0);
+        novar.record(1, 100, 1.0);
+        let mut hivar = AfCalculator::new(&params(10_000, 2));
+        // Same mean, wildly varying per-chunk means ⇒ σ² > 0.
+        hivar.record(0, 50, 0.1);
+        hivar.record(0, 50, 0.9);
+        hivar.record(1, 50, 0.1);
+        hivar.record(1, 50, 0.9);
+        assert!(
+            hivar.chunk(0, 5000) < novar.chunk(0, 5000),
+            "variance must reduce the chunk size"
+        );
+    }
+
+    #[test]
+    fn eq11_monotone_in_remaining() {
+        let g = AfGlobals { d: 0.5, e: 0.0025 };
+        let mut prev = 0;
+        for r in [10u64, 100, 1000, 10_000, 100_000] {
+            let k = af_chunk(g, 0.01, r, 4);
+            assert!(k >= prev);
+            prev = k;
+        }
+    }
+
+    #[test]
+    fn eq11_capped_at_r_over_p() {
+        // A wildly optimistic µ estimate must not let one PE take the loop.
+        let g = AfGlobals { d: 0.0, e: 0.01 }; // no variance measured yet
+        let k = af_chunk(g, 1e-7, 100_000, 4); // µ_pe absurdly small
+        assert_eq!(k, 25_000); // ⌈R/P⌉
+    }
+
+    #[test]
+    fn stats_estimators() {
+        let mut s = PeStats::default();
+        s.record(10, 1.0); // mean 0.1
+        s.record(10, 3.0); // mean 0.3
+        let mu = s.mu().unwrap();
+        assert!((mu - 0.2).abs() < 1e-12);
+        // iteration-level estimator: (10·0.1² + 10·0.1²)/2 chunks = 0.1
+        assert!((s.var() - 0.1).abs() < 1e-12);
+        assert!(s.measured());
+    }
+}

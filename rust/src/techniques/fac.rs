@@ -1,0 +1,97 @@
+//! FAC2 — factoring, practical variant (Flynn Hummel, Schonberg & Flynn):
+//! batches of `P` equal chunks, each batch taking half the remaining work.
+//!
+//! * Recursive (Eq. 7):  at batch boundaries (`i mod P = 0`)
+//!   `K_i = ⌈R_i/(2P)⌉`, otherwise `K_i = K_{i−1}`.
+//! * Straightforward (Eq. 15): `K'_i = ⌈(1/2)^{i_new} · N/P⌉` with
+//!   `i_new = ⌊i/P⌋ + 1`.
+//!
+//! The forms drift slightly once iterated ceilings accumulate (e.g. batch 3
+//! at `(1000, 4)`: closed 32 vs recursive 31); Table 2 lists the closed form.
+
+use super::{ceil_u64, LoopParams, RecursiveState};
+
+/// Precomputed FAC2 constants.
+#[derive(Debug, Clone)]
+pub struct FacConsts {
+    n_over_p: f64,
+    p: u64,
+}
+
+impl FacConsts {
+    pub fn new(params: &LoopParams) -> Self {
+        FacConsts { n_over_p: params.n_over_p(), p: params.p as u64 }
+    }
+
+    /// Eq. 15 — `⌈0.5^(⌊i/P⌋+1) · N/P⌉`.
+    pub fn closed(&self, i: u64) -> u64 {
+        let batch = i / self.p + 1;
+        ceil_u64(0.5f64.powi(batch.min(i32::MAX as u64) as i32) * self.n_over_p)
+    }
+
+    /// Eq. 7 — half the remaining per batch, constant within the batch.
+    pub fn recursive(&self, st: &mut RecursiveState, remaining: u64, p: u32) -> u64 {
+        if st.step % p as u64 == 0 {
+            ceil_u64(remaining as f64 / (2.0 * p as f64))
+        } else {
+            st.prev
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2, FAC row: 125×4, 63×4, 32×4, 16×4, 8×4, 4×4, 2×4 (28 chunks).
+    #[test]
+    fn table2_closed_sequence() {
+        let c = FacConsts::new(&LoopParams::new(1000, 4));
+        let batches = [125u64, 63, 32, 16, 8, 4, 2];
+        for (b, &e) in batches.iter().enumerate() {
+            for j in 0..4u64 {
+                let i = b as u64 * 4 + j;
+                assert_eq!(c.closed(i), e, "step {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn recursive_batches_halve_remaining() {
+        let params = LoopParams::new(1000, 4);
+        let c = FacConsts::new(&params);
+        let mut st = RecursiveState::default();
+        let mut remaining = 1000u64;
+        let mut sizes = vec![];
+        while remaining > 0 {
+            let k = c.recursive(&mut st, remaining, 4).min(remaining).max(1);
+            sizes.push(k);
+            remaining -= k;
+            st.prev = k;
+            st.step += 1;
+        }
+        assert_eq!(&sizes[0..4], &[125, 125, 125, 125]);
+        assert_eq!(&sizes[4..8], &[63, 63, 63, 63]);
+        // iterated-ceiling drift: R after 8 steps = 248 → ⌈248/8⌉ = 31
+        assert_eq!(sizes[8], 31);
+        assert_eq!(sizes.iter().sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn closed_constant_within_batch() {
+        let c = FacConsts::new(&LoopParams::new(262_144, 256));
+        for b in 0..10u64 {
+            let first = c.closed(b * 256);
+            for j in 1..256 {
+                assert_eq!(c.closed(b * 256 + j), first);
+            }
+        }
+    }
+
+    #[test]
+    fn deep_batches_stay_at_least_one() {
+        let c = FacConsts::new(&LoopParams::new(1000, 4));
+        assert_eq!(c.closed(4 * 64), 1); // ⌈0.5^65 · 250⌉ = ⌈ε⌉ = 1
+        assert_eq!(c.closed(u64::MAX - 4), 0); // exponent saturates; powi underflows
+    }
+}

@@ -1,0 +1,99 @@
+//! FISS — fixed increase self-scheduling (Philip & Das): the first technique
+//! devised specifically for distributed-memory systems. Chunk sizes *grow*
+//! linearly across `B` user-chosen batches, avoiding the end-of-loop flood of
+//! tiny chunks that decreasing techniques suffer from.
+//!
+//! * Recursive (Eq. 9):  `K_b = K_{b−1} + C` per batch, with
+//!   `K₀ = N/((2+B)·P)` and `C = 2N·(1 − B/(2+B)) / (P·B·(B−1))`.
+//! * Straightforward (Eq. 19): `K'_b = K₀ + b·C`.
+//!
+//! Notes pinned against Table 2 (50×4, 83×4, 116×4, 4 at `(1000, 4, B=3)`):
+//! the batch index (not the scheduling step) drives the increment, and the
+//! increment uses *truncation* (C = ⌊33.3⌋ = 33), despite Eq. 9's `⌈·⌉`.
+
+use super::{LoopParams, RecursiveState};
+
+/// Precomputed FISS constants.
+#[derive(Debug, Clone)]
+pub struct FissConsts {
+    /// First-batch chunk `K₀`.
+    pub k0: u64,
+    /// Per-batch increment `C`.
+    pub incr: u64,
+    p: u64,
+}
+
+impl FissConsts {
+    pub fn new(params: &LoopParams) -> Self {
+        let n = params.n as f64;
+        let p = params.p as f64;
+        let b = params.fiss_b.max(2) as f64; // B≥2 for a well-defined increment
+        let k0 = (n / ((2.0 + b) * p)) as u64;
+        let incr = ((2.0 * n * (1.0 - b / (2.0 + b))) / (p * b * (b - 1.0))) as u64;
+        FissConsts { k0: k0.max(1), incr, p: params.p as u64 }
+    }
+
+    /// Eq. 19 — `K₀ + ⌊i/P⌋·C`.
+    pub fn closed(&self, i: u64) -> u64 {
+        self.k0 + (i / self.p).saturating_mul(self.incr)
+    }
+
+    /// Eq. 9 — add `C` at each batch boundary.
+    pub fn recursive(&self, st: &mut RecursiveState, p: u32) -> u64 {
+        if st.step == 0 {
+            self.k0
+        } else if st.step % p as u64 == 0 {
+            st.prev + self.incr
+        } else {
+            st.prev
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2, FISS row: 50×4, 83×4, 116×4, 4 (13 chunks, B=3).
+    #[test]
+    fn table2_constants_and_sequence() {
+        let c = FissConsts::new(&LoopParams::new(1000, 4));
+        assert_eq!(c.k0, 50); // 1000/(5·4)
+        assert_eq!(c.incr, 33); // ⌊2000·0.4/24⌋
+        let expect = [50u64, 50, 50, 50, 83, 83, 83, 83, 116, 116, 116, 116];
+        for (i, &e) in expect.iter().enumerate() {
+            assert_eq!(c.closed(i as u64), e, "step {i}");
+        }
+    }
+
+    #[test]
+    fn closed_equals_recursive() {
+        let params = LoopParams::new(262_144, 256);
+        let c = FissConsts::new(&params);
+        let mut st = RecursiveState::default();
+        for i in 0..2000u64 {
+            let r = c.recursive(&mut st, 256);
+            assert_eq!(c.closed(i), r, "step {i}");
+            st.prev = r;
+            st.step += 1;
+        }
+    }
+
+    #[test]
+    fn b_batches_roughly_cover_n() {
+        // By construction the B batches sum to ≈N (within rounding):
+        // P·Σ_b (K₀+b·C) = N·(1 ± rounding).
+        let params = LoopParams::new(1000, 4);
+        let c = FissConsts::new(&params);
+        let total: u64 = (0..3u64).map(|b| 4 * (c.k0 + b * c.incr)).sum();
+        assert!((992..=1008).contains(&total), "total={total}");
+    }
+
+    #[test]
+    fn degenerate_b_clamped() {
+        let mut params = LoopParams::new(1000, 4);
+        params.fiss_b = 1; // clamped to 2 internally
+        let c = FissConsts::new(&params);
+        assert!(c.k0 >= 1);
+    }
+}

@@ -1,0 +1,83 @@
+//! FSC — fixed size chunking (Kruskal & Weiss, Eq. 3): a single "optimal"
+//! chunk size balancing iteration-time variability `σ` against scheduling
+//! overhead `h`, both assumed known before execution.
+//!
+//! Two published forms are supported (see [`super::FscVariant`]):
+//! the paper's Eq. 3 as printed, and the original Kruskal–Weiss form with the
+//! `2/3` exponent. Both are *straightforward* formulas (constant in `i`), so
+//! FSC supports DCA unchanged.
+
+use super::{FscVariant, LoopParams};
+
+/// The FSC chunk size for `params` (constant across all scheduling steps).
+///
+/// Degenerate inputs are clamped: the result is always at least
+/// `params.min_chunk` (and at least 1).
+pub fn chunk(params: &LoopParams) -> u64 {
+    let n = params.n as f64;
+    let p = params.p as f64;
+    let h = params.fsc.h;
+    let sigma = params.fsc.sigma;
+    let raw = match params.fsc.variant {
+        FscVariant::PaperEq3 => {
+            // K = √2·N·h / (σ·P·√(log₂ P)); for P=1 the log term vanishes —
+            // fall back to N (a single chunk is optimal with one PE).
+            if params.p == 1 {
+                n
+            } else {
+                (2.0f64.sqrt() * n * h) / (sigma * p * p.log2().sqrt())
+            }
+        }
+        FscVariant::KruskalWeiss => {
+            if params.p == 1 {
+                n
+            } else {
+                ((2.0f64.sqrt() * n * h) / (sigma * p * p.ln().sqrt())).powf(2.0 / 3.0)
+            }
+        }
+    };
+    (raw.floor() as u64).max(params.min_chunk).max(1).min(params.n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::techniques::FscParams;
+
+    #[test]
+    fn table2_fsc_is_17() {
+        // N=1000, P=4, h=0.013716, σ calibrated (DESIGN.md §4 notes):
+        // Table 2 row: 59 chunks of 17 (last 14).
+        let p = LoopParams::new(1000, 4);
+        assert_eq!(chunk(&p), 17);
+    }
+
+    #[test]
+    fn kruskal_weiss_variant_is_finite_and_positive() {
+        let mut p = LoopParams::new(262_144, 256);
+        p.fsc = FscParams { h: 0.000_2, sigma: 0.0187, variant: FscVariant::KruskalWeiss };
+        let k = chunk(&p);
+        assert!(k >= 1 && k <= p.n, "k={k}");
+    }
+
+    #[test]
+    fn single_pe_gets_whole_loop() {
+        let p = LoopParams::new(1000, 1);
+        assert_eq!(chunk(&p), 1000);
+    }
+
+    #[test]
+    fn tiny_sigma_clamps_to_n() {
+        let mut p = LoopParams::new(100, 4);
+        p.fsc.sigma = 1e-12;
+        assert_eq!(chunk(&p), 100);
+    }
+
+    #[test]
+    fn huge_sigma_clamps_to_min_chunk() {
+        let mut p = LoopParams::new(100, 4);
+        p.fsc.sigma = 1e9;
+        p.min_chunk = 3;
+        assert_eq!(chunk(&p), 3);
+    }
+}

@@ -1,0 +1,90 @@
+//! GSS — guided self-scheduling (Polychronopoulos & Kuck).
+//!
+//! * Recursive (Eq. 4): `K_i = ⌈R_i / P⌉`.
+//! * Straightforward (Eq. 14): `K'_i = ⌈((P−1)/P)^i · N/P⌉`.
+//!
+//! The two differ by at most the rounding drift of iterated ceilings (e.g.
+//! at `(N=1000, P=4)` step 4 the closed form gives 80, the recursive form
+//! 79); both cover `N` exactly once clipped by the work queue. The paper's
+//! Table 2 lists the **closed-form** sequence — our golden tests pin that.
+
+use super::{ceil_u64, LoopParams};
+
+/// Precomputed GSS constants.
+#[derive(Debug, Clone)]
+pub struct GssConsts {
+    /// `N/P`.
+    n_over_p: f64,
+    /// Decay ratio `q = (P−1)/P`.
+    q: f64,
+    /// `P` as float.
+    p: f64,
+}
+
+impl GssConsts {
+    pub fn new(params: &LoopParams) -> Self {
+        let p = params.p as f64;
+        GssConsts { n_over_p: params.n_over_p(), q: (p - 1.0) / p, p }
+    }
+
+    /// Raw (pre-ceiling) closed-form value `q^i · N/P`; shared with TAP/PLS.
+    pub fn raw(&self, i: u64) -> f64 {
+        // q^i underflows to 0 for huge i — fine, callers clamp to min_chunk.
+        self.q.powi(i.min(i32::MAX as u64) as i32) * self.n_over_p
+    }
+
+    /// Eq. 14 — `⌈q^i · N/P⌉`.
+    pub fn closed(&self, i: u64) -> u64 {
+        ceil_u64(self.raw(i))
+    }
+
+    /// Eq. 4 — `⌈R_i / P⌉`.
+    pub fn recursive(&self, remaining: u64) -> u64 {
+        ceil_u64(remaining as f64 / self.p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn consts(n: u64, p: u32) -> GssConsts {
+        GssConsts::new(&LoopParams::new(n, p))
+    }
+
+    /// Table 2, GSS row: 250, 188, 141, 106, 80, 60, 45, 34, 26, 19, 15, 11,
+    /// 8, 6, 5, 4, 2 (last clipped by the queue; 17 chunks).
+    #[test]
+    fn table2_closed_prefix() {
+        let c = consts(1000, 4);
+        let expect = [250u64, 188, 141, 106, 80, 60, 45, 34, 26, 19, 15, 11, 8, 6, 5, 4];
+        for (i, &e) in expect.iter().enumerate() {
+            assert_eq!(c.closed(i as u64), e, "step {i}");
+        }
+    }
+
+    #[test]
+    fn recursive_first_step_is_n_over_p() {
+        let c = consts(1000, 4);
+        assert_eq!(c.recursive(1000), 250);
+        assert_eq!(c.recursive(750), 188); // ⌈187.5⌉
+        assert_eq!(c.recursive(315), 79); // iterated-ceiling drift vs closed 80
+    }
+
+    #[test]
+    fn closed_is_nonincreasing() {
+        let c = consts(262_144, 256);
+        let mut prev = u64::MAX;
+        for i in 0..5000 {
+            let k = c.closed(i);
+            assert!(k <= prev, "GSS must decrease monotonically (step {i})");
+            prev = k;
+        }
+    }
+
+    #[test]
+    fn deep_steps_underflow_to_zero_not_panic() {
+        let c = consts(1000, 4);
+        assert_eq!(c.closed(10_000), 0); // queue clamps to min_chunk
+    }
+}

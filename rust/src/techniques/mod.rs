@@ -1,0 +1,447 @@
+//! The thirteen DLS techniques of the paper (§2, Eq. 1–13) in **both** forms:
+//!
+//! * **recursive** (`RecursiveState` + [`Technique::recursive_chunk`]) — the
+//!   form the original LB4MPI/CCA master evaluates, driven by the remaining
+//!   iteration count `R_i`;
+//! * **straightforward / closed** ([`Technique::closed_chunk`]) — the form
+//!   derived in §4 (Eq. 14–21), a pure function of the scheduling-step index
+//!   `i`, which is what makes the *distributed* chunk calculation (DCA)
+//!   possible: any PE that knows `i` can compute its own chunk size with no
+//!   knowledge of other PEs' chunks.
+//!
+//! AF (adaptive factoring) is the one technique the paper proves cannot be
+//! expressed in closed form; it lives in [`af`] and is wired through the
+//! coordinators with the extra `R_i` + (µ,σ) synchronization the paper
+//! describes.
+
+pub mod af;
+pub mod fac;
+pub mod fiss;
+pub mod fsc;
+pub mod gss;
+pub mod pls;
+pub mod rnd;
+pub mod ss;
+pub mod static_;
+pub mod tap;
+pub mod tfss;
+pub mod tss;
+pub mod viss;
+
+
+
+/// Identifier for a DLS technique. `L ∈ {STATIC, SS, FSC, GSS, TAP, TSS,
+/// FAC, TFSS, FISS, VISS, AF, RND, PLS}` (Table 1; SS appears in Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TechniqueKind {
+    /// Eq. 1 — one equal chunk per PE.
+    Static,
+    /// Eq. 2 — self-scheduling, chunk size 1.
+    Ss,
+    /// Eq. 3 — fixed size chunking (Kruskal & Weiss).
+    Fsc,
+    /// Eq. 4 / Eq. 14 — guided self-scheduling.
+    Gss,
+    /// Eq. 5 / Eq. 16 — tapering.
+    Tap,
+    /// Eq. 6 / Eq. 17 — trapezoid self-scheduling.
+    Tss,
+    /// Eq. 7 / Eq. 15 — factoring (the practical FAC2 variant).
+    Fac2,
+    /// Eq. 8 / Eq. 18 — trapezoid factoring self-scheduling.
+    Tfss,
+    /// Eq. 9 / Eq. 19 — fixed increase self-scheduling.
+    Fiss,
+    /// Eq. 10 / Eq. 20 — variable increase self-scheduling.
+    Viss,
+    /// Eq. 11 — adaptive factoring (no closed form; needs `R_i` sync).
+    Af,
+    /// Eq. 12 — uniform random chunk size in `[1, N/P]`.
+    Rnd,
+    /// Eq. 13 / Eq. 21 — performance-based loop scheduling.
+    Pls,
+}
+
+impl TechniqueKind {
+    /// All techniques evaluated in the paper's §6 factorial design, in the
+    /// order they appear in Table 4.
+    pub const EVALUATED: [TechniqueKind; 12] = [
+        TechniqueKind::Static,
+        TechniqueKind::Fsc,
+        TechniqueKind::Gss,
+        TechniqueKind::Tap,
+        TechniqueKind::Tss,
+        TechniqueKind::Fac2,
+        TechniqueKind::Tfss,
+        TechniqueKind::Fiss,
+        TechniqueKind::Viss,
+        TechniqueKind::Rnd,
+        TechniqueKind::Af,
+        TechniqueKind::Pls,
+    ];
+
+    /// All thirteen techniques (Table 2 additionally lists SS).
+    pub const ALL: [TechniqueKind; 13] = [
+        TechniqueKind::Static,
+        TechniqueKind::Ss,
+        TechniqueKind::Fsc,
+        TechniqueKind::Gss,
+        TechniqueKind::Tap,
+        TechniqueKind::Tss,
+        TechniqueKind::Fac2,
+        TechniqueKind::Tfss,
+        TechniqueKind::Fiss,
+        TechniqueKind::Viss,
+        TechniqueKind::Af,
+        TechniqueKind::Rnd,
+        TechniqueKind::Pls,
+    ];
+
+    /// Canonical short name as used in the paper's figures.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TechniqueKind::Static => "STATIC",
+            TechniqueKind::Ss => "SS",
+            TechniqueKind::Fsc => "FSC",
+            TechniqueKind::Gss => "GSS",
+            TechniqueKind::Tap => "TAP",
+            TechniqueKind::Tss => "TSS",
+            TechniqueKind::Fac2 => "FAC",
+            TechniqueKind::Tfss => "TFSS",
+            TechniqueKind::Fiss => "FISS",
+            TechniqueKind::Viss => "VISS",
+            TechniqueKind::Af => "AF",
+            TechniqueKind::Rnd => "RND",
+            TechniqueKind::Pls => "PLS",
+        }
+    }
+
+    /// Parse a (case-insensitive) technique name.
+    pub fn parse(s: &str) -> Option<TechniqueKind> {
+        let up = s.to_ascii_uppercase();
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|k| k.name() == up || (up == "FAC2" && *k == TechniqueKind::Fac2))
+    }
+
+    /// Chunk-size pattern category (Fig. 1): fixed, decreasing, increasing,
+    /// or irregular.
+    pub fn pattern(&self) -> Pattern {
+        match self {
+            TechniqueKind::Static | TechniqueKind::Ss | TechniqueKind::Fsc => Pattern::Fixed,
+            TechniqueKind::Gss
+            | TechniqueKind::Tap
+            | TechniqueKind::Tss
+            | TechniqueKind::Fac2
+            | TechniqueKind::Tfss
+            | TechniqueKind::Pls => Pattern::Decreasing,
+            TechniqueKind::Fiss | TechniqueKind::Viss => Pattern::Increasing,
+            TechniqueKind::Af | TechniqueKind::Rnd => Pattern::Irregular,
+        }
+    }
+
+    /// `true` when the paper derives a straightforward (closed-form) chunk
+    /// calculation — every technique except AF (§4).
+    pub fn has_closed_form(&self) -> bool {
+        !matches!(self, TechniqueKind::Af)
+    }
+
+    /// `true` for techniques whose chunk calculation is adaptive, i.e.
+    /// consumes runtime performance measurements.
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, TechniqueKind::Af)
+    }
+}
+
+impl std::fmt::Display for TechniqueKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Chunk-size pattern categories of Fig. 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    Fixed,
+    Decreasing,
+    Increasing,
+    Irregular,
+}
+
+/// FSC parameterization (Eq. 3 needs the scheduling overhead `h` and the
+/// iteration-time standard deviation `σ`, both assumed known a priori).
+#[derive(Debug, Clone, Copy)]
+pub struct FscParams {
+    /// Scheduling overhead of assigning one chunk, seconds (paper: 0.013716).
+    pub h: f64,
+    /// Standard deviation of iteration execution time, seconds.
+    pub sigma: f64,
+    /// Which published form of the FSC formula to evaluate.
+    pub variant: FscVariant,
+}
+
+/// The two published forms of the FSC chunk-size formula.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FscVariant {
+    /// Eq. 3 exactly as printed: `K = √2·N·h / (σ·P·√(log₂ P))`.
+    PaperEq3,
+    /// Kruskal & Weiss original: `K = (√2·N·h / (σ·P·√(ln P)))^(2/3)`.
+    KruskalWeiss,
+}
+
+impl Default for FscParams {
+    fn default() -> Self {
+        // h from §2; σ calibrated so the (N=1000, P=4) Table 2 row yields 17.
+        FscParams { h: 0.013716, sigma: 0.2017, variant: FscVariant::PaperEq3 }
+    }
+}
+
+/// TAP parameterization (Eq. 5): `v_α = α·σ/µ`.
+#[derive(Debug, Clone, Copy)]
+pub struct TapParams {
+    /// Mean iteration execution time (paper's Table 2 example: 0.1 s).
+    pub mu: f64,
+    /// Standard deviation of iteration execution time (0.0005 s).
+    pub sigma: f64,
+    /// Confidence factor α (0.0605).
+    pub alpha: f64,
+}
+
+impl Default for TapParams {
+    fn default() -> Self {
+        TapParams { mu: 0.1, sigma: 0.0005, alpha: 0.0605 }
+    }
+}
+
+/// Everything a technique needs to compute chunk sizes for one loop.
+#[derive(Debug, Clone)]
+pub struct LoopParams {
+    /// `N` — total loop iterations.
+    pub n: u64,
+    /// `P` — total processing elements.
+    pub p: u32,
+    /// Minimum chunk size (paper uses 1).
+    pub min_chunk: u64,
+    /// FSC parameters.
+    pub fsc: FscParams,
+    /// TAP parameters.
+    pub tap: TapParams,
+    /// FISS batch count `B` (paper's Table 2 example: 3).
+    pub fiss_b: u32,
+    /// VISS divisor `X`: `K₀^VISS = N/(X·P)` (paper's example: 4).
+    pub viss_x: u32,
+    /// PLS static workload ratio (paper's example: 0.7).
+    pub pls_swr: f64,
+    /// Seed for RND's counter-based RNG (deterministic in the step index, so
+    /// the closed form is well-defined).
+    pub rnd_seed: u64,
+}
+
+impl LoopParams {
+    /// Parameters with the paper's Table 2 defaults.
+    pub fn new(n: u64, p: u32) -> Self {
+        assert!(n > 0 && p > 0, "LoopParams requires n > 0 and p > 0");
+        LoopParams {
+            n,
+            p,
+            min_chunk: 1,
+            fsc: FscParams::default(),
+            tap: TapParams::default(),
+            fiss_b: 3,
+            viss_x: 4,
+            pls_swr: 0.7,
+            rnd_seed: 0x5eed_dca0,
+        }
+    }
+
+    /// `N/P` as f64 — the STATIC chunk and many formulas' base quantity.
+    pub fn n_over_p(&self) -> f64 {
+        self.n as f64 / self.p as f64
+    }
+}
+
+/// A DLS technique bound to a loop: precomputed constants + both forms.
+#[derive(Debug, Clone)]
+pub struct Technique {
+    kind: TechniqueKind,
+    params: LoopParams,
+    consts: Consts,
+}
+
+/// Per-technique precomputed constants.
+#[derive(Debug, Clone)]
+pub(crate) enum Consts {
+    Static { k: u64 },
+    Ss,
+    Fsc { k: u64 },
+    Gss(gss::GssConsts),
+    Tap(tap::TapConsts),
+    Tss(tss::TssConsts),
+    Fac2(fac::FacConsts),
+    Tfss(tfss::TfssConsts),
+    Fiss(fiss::FissConsts),
+    Viss(viss::VissConsts),
+    Af,
+    Rnd(rnd::RndConsts),
+    Pls(pls::PlsConsts),
+}
+
+impl Technique {
+    /// Bind `kind` to a loop, precomputing the technique's constants.
+    pub fn new(kind: TechniqueKind, params: &LoopParams) -> Self {
+        let consts = match kind {
+            TechniqueKind::Static => Consts::Static { k: static_::chunk(params) },
+            TechniqueKind::Ss => Consts::Ss,
+            TechniqueKind::Fsc => Consts::Fsc { k: fsc::chunk(params) },
+            TechniqueKind::Gss => Consts::Gss(gss::GssConsts::new(params)),
+            TechniqueKind::Tap => Consts::Tap(tap::TapConsts::new(params)),
+            TechniqueKind::Tss => Consts::Tss(tss::TssConsts::new(params)),
+            TechniqueKind::Fac2 => Consts::Fac2(fac::FacConsts::new(params)),
+            TechniqueKind::Tfss => Consts::Tfss(tfss::TfssConsts::new(params)),
+            TechniqueKind::Fiss => Consts::Fiss(fiss::FissConsts::new(params)),
+            TechniqueKind::Viss => Consts::Viss(viss::VissConsts::new(params)),
+            TechniqueKind::Af => Consts::Af,
+            TechniqueKind::Rnd => Consts::Rnd(rnd::RndConsts::new(params)),
+            TechniqueKind::Pls => Consts::Pls(pls::PlsConsts::new(params)),
+        };
+        Technique { kind, params: params.clone(), consts }
+    }
+
+    pub fn kind(&self) -> TechniqueKind {
+        self.kind
+    }
+
+    pub fn params(&self) -> &LoopParams {
+        &self.params
+    }
+
+    /// **Straightforward / DCA form** (§4): unclipped chunk size at
+    /// scheduling step `i`, a pure function of `i`.
+    ///
+    /// # Panics
+    /// For [`TechniqueKind::Af`], which has no closed form — route AF
+    /// through [`af::AfCalculator`] instead (the coordinators do).
+    pub fn closed_chunk(&self, i: u64) -> u64 {
+        match &self.consts {
+            Consts::Static { k } => *k,
+            Consts::Ss => 1,
+            Consts::Fsc { k } => *k,
+            Consts::Gss(c) => c.closed(i),
+            Consts::Tap(c) => c.closed(i),
+            Consts::Tss(c) => c.closed(i),
+            Consts::Fac2(c) => c.closed(i),
+            Consts::Tfss(c) => c.closed(i),
+            Consts::Fiss(c) => c.closed(i),
+            Consts::Viss(c) => c.closed(i),
+            Consts::Rnd(c) => c.closed(i),
+            Consts::Pls(c) => c.closed(i),
+            Consts::Af => panic!(
+                "AF has no straightforward chunk-calculation formula (§4); \
+                 use techniques::af::AfCalculator with R_i synchronization"
+            ),
+        }
+    }
+
+    /// Fresh state for the **recursive / CCA form** (§2).
+    pub fn fresh_recursive(&self) -> RecursiveState {
+        RecursiveState { step: 0, prev: 0, batch_pos: 0, tss_prev: 0 }
+    }
+
+    /// **Recursive / CCA form**: unclipped chunk size for the next scheduling
+    /// step given `remaining = R_i` iterations. Mirrors what the original
+    /// (centralized) LB4MPI master evaluates.
+    pub fn recursive_chunk(&self, st: &mut RecursiveState, remaining: u64) -> u64 {
+        let k = match &self.consts {
+            Consts::Static { k } => *k,
+            Consts::Ss => 1,
+            Consts::Fsc { k } => *k,
+            Consts::Gss(c) => c.recursive(remaining),
+            Consts::Tap(c) => c.recursive(remaining),
+            Consts::Tss(c) => c.recursive(st),
+            Consts::Fac2(c) => c.recursive(st, remaining, self.params.p),
+            Consts::Tfss(c) => c.recursive(st, self.params.p),
+            Consts::Fiss(c) => c.recursive(st, self.params.p),
+            Consts::Viss(c) => c.recursive(st, self.params.p),
+            Consts::Rnd(c) => c.closed(st.step),
+            Consts::Pls(c) => c.recursive(remaining),
+            Consts::Af => panic!(
+                "AF is adaptive; use techniques::af::AfCalculator (needs per-PE µ/σ)"
+            ),
+        };
+        st.step += 1;
+        st.prev = k;
+        k
+    }
+}
+
+/// Mutable state threaded through the recursive (CCA) chunk calculation.
+#[derive(Debug, Clone, Default)]
+pub struct RecursiveState {
+    /// Scheduling-step index `i` of the *next* step.
+    pub step: u64,
+    /// Previously computed chunk size `K_{i-1}` (0 before the first step).
+    pub prev: u64,
+    /// Position inside the current batch (for batched techniques).
+    pub batch_pos: u32,
+    /// Internal TSS cursor for TFSS's recursive form.
+    pub tss_prev: u64,
+}
+
+/// `⌈a/b⌉` for positive integers.
+pub(crate) fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// `⌈x⌉` of a non-negative float as u64 (saturating at 0 for negatives).
+pub(crate) fn ceil_u64(x: f64) -> u64 {
+    if x <= 0.0 {
+        0
+    } else {
+        x.ceil() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in TechniqueKind::ALL {
+            assert_eq!(TechniqueKind::parse(k.name()), Some(k));
+            assert_eq!(TechniqueKind::parse(&k.name().to_lowercase()), Some(k));
+        }
+        assert_eq!(TechniqueKind::parse("FAC2"), Some(TechniqueKind::Fac2));
+        assert_eq!(TechniqueKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn patterns_match_fig1() {
+        assert_eq!(TechniqueKind::Static.pattern(), Pattern::Fixed);
+        assert_eq!(TechniqueKind::Gss.pattern(), Pattern::Decreasing);
+        assert_eq!(TechniqueKind::Fiss.pattern(), Pattern::Increasing);
+        assert_eq!(TechniqueKind::Af.pattern(), Pattern::Irregular);
+    }
+
+    #[test]
+    fn only_af_lacks_closed_form() {
+        for k in TechniqueKind::ALL {
+            assert_eq!(k.has_closed_form(), k != TechniqueKind::Af, "{k}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no straightforward")]
+    fn af_closed_panics() {
+        let p = LoopParams::new(100, 4);
+        Technique::new(TechniqueKind::Af, &p).closed_chunk(0);
+    }
+
+    #[test]
+    fn evaluated_is_twelve_all_is_thirteen() {
+        assert_eq!(TechniqueKind::EVALUATED.len(), 12);
+        assert_eq!(TechniqueKind::ALL.len(), 13);
+    }
+}

@@ -1,0 +1,150 @@
+//! PLS — performance-based loop scheduling (Shih, Yang & Tseng): a hybrid of
+//! static and dynamic scheduling. A static workload ratio `SWR` of the loop
+//! is pre-assigned in `P` equal chunks; the rest is scheduled with GSS.
+//!
+//! * Recursive (Eq. 13):  `K_i = N·SWR/P` while `R_i > N − N·SWR`, else
+//!   `K_i^GSS = ⌈R_i/P⌉`.
+//! * Straightforward (Eq. 21): steps `0…P−1` are the static chunks; step
+//!   `i ≥ P` evaluates the GSS **closed** form (Eq. 14) over the dynamic
+//!   remainder `N_dyn = N − P·K_static`.
+//!
+//! `SWR = min/max` iteration time of five sampled iterations (§2); the paper
+//! assumes equal PE loads so the performance function reduces to equal static
+//! shares. We take SWR as a parameter (paper's example: 0.7) and also provide
+//! [`measure_swr`] to derive it from a workload profile the way the paper
+//! prescribes.
+
+use super::{ceil_u64, LoopParams};
+
+/// Precomputed PLS constants.
+#[derive(Debug, Clone)]
+pub struct PlsConsts {
+    /// Static per-PE chunk `⌊N·SWR/P⌋`.
+    pub k_static: u64,
+    /// Iterations scheduled dynamically: `N − P·K_static`.
+    pub n_dyn: u64,
+    /// `N_dyn/P` for the embedded GSS.
+    nd_over_p: f64,
+    /// GSS decay `q=(P−1)/P`.
+    q: f64,
+    p: u64,
+    n: u64,
+}
+
+impl PlsConsts {
+    pub fn new(params: &LoopParams) -> Self {
+        let swr = params.pls_swr.clamp(0.0, 1.0);
+        let p = params.p as u64;
+        let k_static = ((params.n as f64 * swr) / p as f64).floor() as u64;
+        let n_dyn = params.n - (k_static * p).min(params.n);
+        let pf = params.p as f64;
+        PlsConsts {
+            k_static,
+            n_dyn,
+            nd_over_p: n_dyn as f64 / pf,
+            q: (pf - 1.0) / pf,
+            p,
+            n: params.n,
+        }
+    }
+
+    /// Eq. 21 — static share for `i < P`, closed GSS over `N_dyn` after.
+    pub fn closed(&self, i: u64) -> u64 {
+        if i < self.p {
+            self.k_static
+        } else {
+            let j = i - self.p;
+            ceil_u64(self.q.powi(j.min(i32::MAX as u64) as i32) * self.nd_over_p)
+        }
+    }
+
+    /// Eq. 13 — driven by the remaining count `R_i` like the CCA master.
+    pub fn recursive(&self, remaining: u64) -> u64 {
+        let static_boundary = self.n - self.k_static * self.p; // = N − N·SWR (floored)
+        if remaining > static_boundary {
+            self.k_static
+        } else {
+            ceil_u64(remaining as f64 * (1.0 - self.q)) // ⌈R/P⌉
+        }
+    }
+}
+
+/// Derive SWR the way §2 prescribes: the ratio of minimum to maximum
+/// execution time among `samples` randomly chosen iteration timings.
+pub fn measure_swr(iter_times: &[f64], samples: usize, seed: u64) -> f64 {
+    assert!(!iter_times.is_empty());
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut s = seed;
+    for _ in 0..samples.max(2) {
+        s = super::rnd::splitmix64(s);
+        let t = iter_times[(s % iter_times.len() as u64) as usize];
+        lo = lo.min(t);
+        hi = hi.max(t);
+    }
+    if hi <= 0.0 {
+        1.0
+    } else {
+        (lo / hi).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2, PLS row: 175×4, then 75, 57, 43, 32, 24, 18, 14, 11, 8, 6,
+    /// 5, 4, 3 (17 chunks; SWR=0.7 ⇒ N_dyn=300, sums to exactly 1000).
+    #[test]
+    fn table2_closed_sequence() {
+        let c = PlsConsts::new(&LoopParams::new(1000, 4));
+        assert_eq!(c.k_static, 175);
+        assert_eq!(c.n_dyn, 300);
+        let expect =
+            [175u64, 175, 175, 175, 75, 57, 43, 32, 24, 18, 14, 11, 8, 6, 5, 4, 3];
+        for (i, &e) in expect.iter().enumerate() {
+            assert_eq!(c.closed(i as u64), e, "step {i}");
+        }
+        // The closed sequence covers N exactly at (1000, 4, 0.7).
+        let total: u64 = (0..17u64).map(|i| c.closed(i)).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn recursive_static_then_dynamic() {
+        let c = PlsConsts::new(&LoopParams::new(1000, 4));
+        assert_eq!(c.recursive(1000), 175);
+        assert_eq!(c.recursive(650), 175);
+        assert_eq!(c.recursive(301), 175); // still above boundary 300
+        assert_eq!(c.recursive(300), 75); // GSS kicks in: ⌈300/4⌉
+        assert_eq!(c.recursive(225), 57); // ⌈225/4⌉
+    }
+
+    #[test]
+    fn swr_zero_is_pure_gss() {
+        let mut params = LoopParams::new(1000, 4);
+        params.pls_swr = 0.0;
+        let c = PlsConsts::new(&params);
+        assert_eq!(c.k_static, 0);
+        assert_eq!(c.n_dyn, 1000);
+        assert_eq!(c.closed(4), 250); // first dynamic step = GSS step 0
+    }
+
+    #[test]
+    fn swr_one_is_pure_static() {
+        let mut params = LoopParams::new(1000, 4);
+        params.pls_swr = 1.0;
+        let c = PlsConsts::new(&params);
+        assert_eq!(c.k_static, 250);
+        assert_eq!(c.n_dyn, 0);
+    }
+
+    #[test]
+    fn measure_swr_bounds() {
+        let times = [0.5, 1.0, 2.0, 0.25, 1.5];
+        let swr = measure_swr(&times, 5, 42);
+        assert!((0.0..=1.0).contains(&swr));
+        let uniform = [1.0; 10];
+        assert_eq!(measure_swr(&uniform, 5, 42), 1.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! RND — random chunk sizes drawn uniformly from `[1, N/P]` (Eq. 12; bounds
+//! as revised by the paper, covering the STATIC…SS spectrum).
+//!
+//! For DCA the chunk at step `i` must be a *pure function of `i`* so every PE
+//! computes the same size for the same step. We therefore use a counter-based
+//! generator (SplitMix64 keyed by `seed ^ i`): the "closed form" of RND. The
+//! recursive/CCA path evaluates the identical function at the master, so both
+//! approaches schedule the exact same sequence for a given seed — which is
+//! precisely what a reproducible experiment needs.
+
+use super::LoopParams;
+
+/// Precomputed RND constants.
+#[derive(Debug, Clone)]
+pub struct RndConsts {
+    seed: u64,
+    /// Upper bound `N/P` (lower bound is 1).
+    pub upper: u64,
+}
+
+/// SplitMix64 finalizer — a high-quality 64-bit mixing function.
+#[inline]
+pub fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl RndConsts {
+    pub fn new(params: &LoopParams) -> Self {
+        RndConsts {
+            seed: params.rnd_seed,
+            upper: (params.n / params.p as u64).max(1),
+        }
+    }
+
+    /// Uniform draw in `[1, N/P]`, deterministic in `i`.
+    pub fn closed(&self, i: u64) -> u64 {
+        1 + splitmix64(self.seed ^ i.wrapping_mul(0xa076_1d64_78bd_642f)) % self.upper
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_respected() {
+        let c = RndConsts::new(&LoopParams::new(1000, 4));
+        for i in 0..10_000u64 {
+            let k = c.closed(i);
+            assert!((1..=250).contains(&k), "step {i}: {k}");
+        }
+    }
+
+    #[test]
+    fn deterministic_in_i() {
+        let c = RndConsts::new(&LoopParams::new(1000, 4));
+        for i in 0..100u64 {
+            assert_eq!(c.closed(i), c.closed(i));
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut p1 = LoopParams::new(1000, 4);
+        p1.rnd_seed = 1;
+        let mut p2 = LoopParams::new(1000, 4);
+        p2.rnd_seed = 2;
+        let c1 = RndConsts::new(&p1);
+        let c2 = RndConsts::new(&p2);
+        assert!((0..50u64).any(|i| c1.closed(i) != c2.closed(i)));
+    }
+
+    #[test]
+    fn roughly_uniform() {
+        // Mean of U[1, 250] is 125.5; check within 5% over 100k draws.
+        let c = RndConsts::new(&LoopParams::new(1000, 4));
+        let total: u64 = (0..100_000u64).map(|i| c.closed(i)).sum();
+        let mean = total as f64 / 100_000.0;
+        assert!((119.0..132.0).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn p_equals_n_forces_unit_chunks() {
+        let c = RndConsts::new(&LoopParams::new(16, 16));
+        for i in 0..32u64 {
+            assert_eq!(c.closed(i), 1);
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! SS — pure self-scheduling (Eq. 2): `K_i = 1`. One iteration per request;
+//! maximal load balance, maximal scheduling overhead (`N` chunks).
+//!
+//! The chunk size is the constant 1, so SS needs no dedicated state; it is
+//! handled inline in [`super::Technique`]. This module documents it and hosts
+//! its tests.
+
+#[cfg(test)]
+mod tests {
+    use crate::techniques::{LoopParams, Technique, TechniqueKind};
+
+    #[test]
+    fn always_one() {
+        let p = LoopParams::new(1000, 4);
+        let t = Technique::new(TechniqueKind::Ss, &p);
+        let mut st = t.fresh_recursive();
+        for i in 0..100 {
+            assert_eq!(t.closed_chunk(i), 1);
+            assert_eq!(t.recursive_chunk(&mut st, p.n - i), 1);
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! STATIC (Eq. 1): `K_i = N/P` — one equal chunk per PE, lowest scheduling
+//! overhead (exactly `P` chunks), no adaptivity.
+
+use super::{div_ceil, LoopParams};
+
+/// The STATIC chunk size `⌈N/P⌉` (ceiling so `P` chunks always cover `N`).
+pub fn chunk(params: &LoopParams) -> u64 {
+    div_ceil(params.n, params.p as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::techniques::{Technique, TechniqueKind};
+
+    #[test]
+    fn table2_static() {
+        let p = LoopParams::new(1000, 4);
+        assert_eq!(chunk(&p), 250);
+    }
+
+    #[test]
+    fn non_divisible_rounds_up() {
+        let p = LoopParams::new(10, 3);
+        assert_eq!(chunk(&p), 4); // 4+4+2 covers 10 in 3 chunks
+    }
+
+    #[test]
+    fn closed_equals_recursive() {
+        let p = LoopParams::new(1003, 7);
+        let t = Technique::new(TechniqueKind::Static, &p);
+        let mut st = t.fresh_recursive();
+        for i in 0..7 {
+            assert_eq!(t.closed_chunk(i), t.recursive_chunk(&mut st, p.n));
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! TAP — tapering (Lucco). A probabilistic refinement of GSS that shrinks
+//! each GSS chunk according to the iteration-time variability:
+//!
+//! * Recursive (Eq. 5):  `K_i = G_i + v²/2 − v·√(2·G_i + v²/4)` with
+//!   `G_i = R_i/P` and `v = α·σ/µ`.
+//! * Straightforward (Eq. 16): same with `G_i = ((P−1)/P)^i · N/P` (Eq. 14).
+
+use super::{ceil_u64, gss::GssConsts, LoopParams};
+
+/// Precomputed TAP constants.
+#[derive(Debug, Clone)]
+pub struct TapConsts {
+    gss: GssConsts,
+    /// `v_α = α·σ/µ`.
+    v: f64,
+    p: f64,
+}
+
+impl TapConsts {
+    pub fn new(params: &LoopParams) -> Self {
+        let t = params.tap;
+        let v = if t.mu > 0.0 { t.alpha * t.sigma / t.mu } else { 0.0 };
+        TapConsts { gss: GssConsts::new(params), v, p: params.p as f64 }
+    }
+
+    /// Apply the tapering adjustment to a raw GSS value.
+    fn taper(&self, g: f64) -> f64 {
+        let v = self.v;
+        g + v * v / 2.0 - v * (2.0 * g + v * v / 4.0).max(0.0).sqrt()
+    }
+
+    /// Eq. 16 — closed form over the GSS closed form.
+    pub fn closed(&self, i: u64) -> u64 {
+        ceil_u64(self.taper(self.gss.raw(i)))
+    }
+
+    /// Eq. 5 — recursive form over `R_i/P`.
+    pub fn recursive(&self, remaining: u64) -> u64 {
+        ceil_u64(self.taper(remaining as f64 / self.p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2, TAP row prefix (equals GSS through step 14 with the paper's
+    /// µ=0.1, σ=0.0005, α=0.0605 — `v≈3·10⁻⁴` barely perturbs the value).
+    #[test]
+    fn table2_closed_prefix() {
+        let c = TapConsts::new(&LoopParams::new(1000, 4));
+        let expect = [250u64, 188, 141, 106, 80, 60, 45, 34, 26, 19, 15, 11, 8, 6, 5];
+        for (i, &e) in expect.iter().enumerate() {
+            assert_eq!(c.closed(i as u64), e, "step {i}");
+        }
+    }
+
+    #[test]
+    fn taper_never_exceeds_gss() {
+        let mut params = LoopParams::new(262_144, 16);
+        params.tap.sigma = 0.0187; // Mandelbrot-like variability
+        params.tap.mu = 0.01025;
+        params.tap.alpha = 1.3; // high-confidence tapering
+        let c = TapConsts::new(&params);
+        let g = GssConsts::new(&params);
+        for i in 0..200 {
+            assert!(
+                c.closed(i) <= g.closed(i),
+                "TAP must not exceed GSS at step {i}: {} > {}",
+                c.closed(i),
+                g.closed(i)
+            );
+        }
+    }
+
+    #[test]
+    fn zero_variability_reduces_to_gss() {
+        let mut params = LoopParams::new(10_000, 8);
+        params.tap.sigma = 0.0;
+        let c = TapConsts::new(&params);
+        let g = GssConsts::new(&params);
+        for i in 0..100 {
+            assert_eq!(c.closed(i), g.closed(i));
+        }
+    }
+
+    #[test]
+    fn recursive_matches_closed_at_step0() {
+        let params = LoopParams::new(1000, 4);
+        let c = TapConsts::new(&params);
+        assert_eq!(c.recursive(1000), c.closed(0));
+    }
+}

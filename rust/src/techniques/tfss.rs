@@ -1,0 +1,126 @@
+//! TFSS — trapezoid factoring self-scheduling (Chronopoulos et al.): batches
+//! of `P` equal chunks whose size is the mean of the `P` TSS chunks the batch
+//! replaces.
+//!
+//! * Recursive (Eq. 8):  at batch boundaries `K_i = (Σ_{j} K_j^TSS)/P` over
+//!   the next `P` TSS chunks (tracked by an internal TSS cursor), otherwise
+//!   `K_i = K_{i−1}`.
+//! * Straightforward (Eq. 18): same sum over the TSS **closed** form — exact,
+//!   because TSS's closed form is exact.
+
+use super::{tss::TssConsts, LoopParams, RecursiveState};
+
+/// Precomputed TFSS constants (wraps the TSS constants).
+#[derive(Debug, Clone)]
+pub struct TfssConsts {
+    tss: TssConsts,
+    p: u64,
+}
+
+impl TfssConsts {
+    pub fn new(params: &LoopParams) -> Self {
+        TfssConsts { tss: TssConsts::new(params), p: params.p as u64 }
+    }
+
+    /// Mean of the `P` TSS chunks forming batch `b` (integer floor division,
+    /// matching the C implementation in LB4MPI).
+    ///
+    /// §Perf: closed form — the TSS chunk is the clamped linear ramp
+    /// `max(k_last, k₀ − j·Δ)`, so the batch sum splits at the clamp point
+    /// `j* = ⌈(k₀−k_last)/Δ⌉` into an arithmetic series plus a constant run:
+    /// O(1) instead of the original O(P) loop per chunk (which made TFSS's
+    /// closed schedule 40× slower than every other technique at P=256).
+    fn batch_mean(&self, b: u64) -> u64 {
+        let lo = b * self.p;
+        let hi = lo + self.p; // exclusive
+        let (k0, ks, d) = (self.tss.k_first, self.tss.k_last, self.tss.delta);
+        let sum = if d == 0 {
+            self.p * k0
+        } else {
+            // First step index at/after which the ramp is clamped to k_last.
+            let jstar = (k0 - ks).div_ceil(d);
+            let ramp_hi = hi.min(jstar); // ramp part: [lo, ramp_hi)
+            let ramp = if ramp_hi > lo {
+                let cnt = ramp_hi - lo;
+                // Σ (k₀ − j·Δ) for j in [lo, ramp_hi)
+                cnt * k0 - d * (lo + ramp_hi - 1) * cnt / 2
+            } else {
+                0
+            };
+            let clamped = hi.saturating_sub(jstar.max(lo)) * ks;
+            ramp + clamped
+        };
+        sum / self.p
+    }
+
+    /// Eq. 18 — batch mean of the TSS closed form.
+    pub fn closed(&self, i: u64) -> u64 {
+        self.batch_mean(i / self.p)
+    }
+
+    /// Eq. 8 — identical batch mean, threaded through the recursive state so
+    /// the CCA master can evaluate it without the step index arithmetic.
+    pub fn recursive(&self, st: &mut RecursiveState, p: u32) -> u64 {
+        if st.step % p as u64 == 0 {
+            self.batch_mean(st.step / p as u64)
+        } else {
+            st.prev
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2, TFSS row: 113×4, 81×4, 49×4, then 17 and 11 (queue-clipped).
+    #[test]
+    fn table2_closed_sequence() {
+        let c = TfssConsts::new(&LoopParams::new(1000, 4));
+        let expect = [113u64, 113, 113, 113, 81, 81, 81, 81, 49, 49, 49, 49, 17];
+        for (i, &e) in expect.iter().enumerate() {
+            assert_eq!(c.closed(i as u64), e, "step {i}");
+        }
+    }
+
+    #[test]
+    fn closed_equals_recursive() {
+        let params = LoopParams::new(262_144, 64);
+        let c = TfssConsts::new(&params);
+        let mut st = RecursiveState::default();
+        for i in 0..1000u64 {
+            let r = c.recursive(&mut st, 64);
+            assert_eq!(c.closed(i), r, "step {i}");
+            st.prev = r;
+            st.step += 1;
+        }
+    }
+
+    #[test]
+    fn closed_form_sum_equals_reference_loop() {
+        // The O(1) arithmetic-series batch mean must equal the literal
+        // Σ TSS(j) / P for many geometries (incl. clamp-straddling batches).
+        for (n, p) in [(1000u64, 4u32), (262_144, 256), (1_000, 7), (50, 3), (12_345, 31)] {
+            let params = LoopParams::new(n, p);
+            let c = TfssConsts::new(&params);
+            for b in 0..40u64 {
+                let lo = b * p as u64;
+                let reference: u64 =
+                    (lo..lo + p as u64).map(|j| c.tss.closed(j)).sum::<u64>() / p as u64;
+                assert_eq!(c.batch_mean(b), reference, "(n={n},p={p}) batch {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn batches_decrease_linearly_then_floor() {
+        let c = TfssConsts::new(&LoopParams::new(1000, 4));
+        // TSS delta = 8 ⇒ batch means drop by 32 per batch until the clamp.
+        assert_eq!(c.batch_mean(0), 113);
+        assert_eq!(c.batch_mean(1), 81);
+        assert_eq!(c.batch_mean(2), 49);
+        assert_eq!(c.batch_mean(3), 17);
+        // Beyond TSS's end every chunk is k_last ⇒ mean = k_last.
+        assert_eq!(c.batch_mean(100), 1);
+    }
+}

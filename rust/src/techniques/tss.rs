@@ -1,0 +1,96 @@
+//! TSS — trapezoid self-scheduling (Tzen & Ni): linearly decreasing chunks.
+//!
+//! * Recursive (Eq. 6):  `K_i = K_{i−1} − C`, `C = ⌊(K₀−K_{S−1})/(S−1)⌋`,
+//!   `S = ⌈2N/(K₀+K_{S−1})⌉`, `K₀ = ⌈N/(2P)⌉`, `K_{S−1} = 1`.
+//! * Straightforward (Eq. 17): `K'_i = K₀ − i·C` (the paper's §4 derivation);
+//!   exact — the recursion subtracts a constant, so both forms agree step
+//!   for step.
+
+use super::{div_ceil, LoopParams, RecursiveState};
+
+/// Precomputed TSS constants.
+#[derive(Debug, Clone)]
+pub struct TssConsts {
+    /// First chunk `K₀ = ⌈N/(2P)⌉`.
+    pub k_first: u64,
+    /// Last chunk `K_{S−1}` (= max(1, min_chunk)).
+    pub k_last: u64,
+    /// Total scheduling steps `S`.
+    pub steps: u64,
+    /// Per-step decrement `C`.
+    pub delta: u64,
+}
+
+impl TssConsts {
+    pub fn new(params: &LoopParams) -> Self {
+        let k_first = div_ceil(params.n, 2 * params.p as u64).max(1);
+        let k_last = params.min_chunk.max(1).min(k_first);
+        let steps = div_ceil(2 * params.n, k_first + k_last).max(1);
+        let delta = if steps > 1 { (k_first - k_last) / (steps - 1) } else { 0 };
+        TssConsts { k_first, k_last, steps, delta }
+    }
+
+    /// Eq. 17 — `K₀ − i·C`, clamped at `K_{S−1}`.
+    pub fn closed(&self, i: u64) -> u64 {
+        self.k_first.saturating_sub(i.saturating_mul(self.delta)).max(self.k_last)
+    }
+
+    /// Eq. 6 — `K_{i−1} − C` via the threaded [`RecursiveState`].
+    pub fn recursive(&self, st: &RecursiveState) -> u64 {
+        if st.step == 0 {
+            self.k_first
+        } else {
+            st.prev.saturating_sub(self.delta).max(self.k_last)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2, TSS row: 125, 117, …, 37, 28 (13 chunks; last clipped).
+    #[test]
+    fn table2_constants() {
+        let c = TssConsts::new(&LoopParams::new(1000, 4));
+        assert_eq!(c.k_first, 125);
+        assert_eq!(c.k_last, 1);
+        assert_eq!(c.steps, 16); // ⌈2000/126⌉
+        assert_eq!(c.delta, 8); // ⌊124/15⌋
+    }
+
+    #[test]
+    fn table2_closed_prefix() {
+        let c = TssConsts::new(&LoopParams::new(1000, 4));
+        let expect = [125u64, 117, 109, 101, 93, 85, 77, 69, 61, 53, 45, 37];
+        for (i, &e) in expect.iter().enumerate() {
+            assert_eq!(c.closed(i as u64), e, "step {i}");
+        }
+    }
+
+    #[test]
+    fn closed_equals_recursive_everywhere() {
+        let params = LoopParams::new(262_144, 256);
+        let c = TssConsts::new(&params);
+        let mut st = RecursiveState::default();
+        for i in 0..c.steps + 10 {
+            let r = c.recursive(&st);
+            assert_eq!(c.closed(i), r, "step {i}");
+            st.prev = r;
+            st.step += 1;
+        }
+    }
+
+    #[test]
+    fn clamps_at_k_last() {
+        let c = TssConsts::new(&LoopParams::new(1000, 4));
+        assert_eq!(c.closed(1_000_000), 1);
+    }
+
+    #[test]
+    fn tiny_loop_single_step() {
+        let c = TssConsts::new(&LoopParams::new(1, 4));
+        assert_eq!(c.k_first, 1);
+        assert_eq!(c.closed(0), 1);
+    }
+}

@@ -1,0 +1,100 @@
+//! VISS — variable increase self-scheduling (Philip & Das): chunk sizes grow
+//! geometrically (×1.5 per batch in the recursive form) without FISS's
+//! user-supplied batch count `B`.
+//!
+//! * Recursive (Eq. 10):  at batch boundaries `K_b = K_{b−1} + K_{b−1}/2`,
+//!   else unchanged; `K₀ = N/(X·P)` (Table 2 uses `X = 4` ⇒ K₀ = 62).
+//! * Straightforward (Eq. 20): `K'_b = K₀ · (1 − 0.5^{b+1}) / 0.5`
+//!   (geometric-sum form; the paper's `i_new = i mod P` is a typo for the
+//!   batch index `⌊i/P⌋`).
+//!
+//! The paper's own derivation of Eq. 20 from Eq. 10 is approximate — the
+//! literal ×1.5 recursion compounds (62, 93, 139, …) while the geometric-sum
+//! closed form saturates (62, 93, 108, … → 2·K₀). Table 2 lists the
+//! **closed** sequence (62×4, 93×4, 108×3, 56), which our golden tests pin;
+//! the divergence is quantified in `tests/equivalence.rs` and discussed in
+//! EXPERIMENTS.md.
+
+use super::{LoopParams, RecursiveState};
+
+/// Precomputed VISS constants.
+#[derive(Debug, Clone)]
+pub struct VissConsts {
+    /// First-batch chunk `K₀ = N/(X·P)`.
+    pub k0: u64,
+    p: u64,
+}
+
+impl VissConsts {
+    pub fn new(params: &LoopParams) -> Self {
+        let x = params.viss_x.max(1) as u64;
+        let k0 = (params.n / (x * params.p as u64)).max(1);
+        VissConsts { k0, p: params.p as u64 }
+    }
+
+    /// Eq. 20 — `⌊2·K₀·(1 − 0.5^{b+1})⌋` for batch `b = ⌊i/P⌋`.
+    pub fn closed(&self, i: u64) -> u64 {
+        let b = (i / self.p).min(62); // 0.5^{b+1} underflows past 62 anyway
+        (2.0 * self.k0 as f64 * (1.0 - 0.5f64.powi(b as i32 + 1))) as u64
+    }
+
+    /// Eq. 10 — literal ×1.5 compounding per batch (integer halving).
+    pub fn recursive(&self, st: &mut RecursiveState, p: u32) -> u64 {
+        if st.step == 0 {
+            self.k0
+        } else if st.step % p as u64 == 0 {
+            st.prev + st.prev / 2
+        } else {
+            st.prev
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Table 2, VISS row: 62×4, 93×4, 108×3, 56 (12 chunks; X=4).
+    #[test]
+    fn table2_closed_sequence() {
+        let c = VissConsts::new(&LoopParams::new(1000, 4));
+        assert_eq!(c.k0, 62);
+        let expect = [62u64, 62, 62, 62, 93, 93, 93, 93, 108, 108, 108];
+        for (i, &e) in expect.iter().enumerate() {
+            assert_eq!(c.closed(i as u64), e, "step {i}");
+        }
+    }
+
+    #[test]
+    fn closed_saturates_at_twice_k0() {
+        let c = VissConsts::new(&LoopParams::new(1000, 4));
+        assert_eq!(c.closed(4 * 100), 124); // 2·62·(1−0.5^101) rounds to 2·K₀
+    }
+
+    #[test]
+    fn recursive_compounds_growth() {
+        let c = VissConsts::new(&LoopParams::new(1000, 4));
+        let mut st = RecursiveState::default();
+        let mut sizes = vec![];
+        for _ in 0..12 {
+            let k = c.recursive(&mut st, 4);
+            sizes.push(k);
+            st.prev = k;
+            st.step += 1;
+        }
+        assert_eq!(&sizes[0..4], &[62, 62, 62, 62]);
+        assert_eq!(&sizes[4..8], &[93, 93, 93, 93]);
+        assert_eq!(&sizes[8..12], &[139, 139, 139, 139]); // 93+46 — compounds
+    }
+
+    #[test]
+    fn both_forms_increase_monotonically() {
+        let c = VissConsts::new(&LoopParams::new(262_144, 256));
+        let mut prev = 0;
+        for i in 0..3000u64 {
+            let k = c.closed(i);
+            assert!(k >= prev, "step {i}");
+            prev = k;
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Mandelbrot set calculations (Listing 3): the loop body iterates
+//! `z ← z⁴ + c` until `|z| ≥ 2` or a conversion threshold `CT` is reached.
+//! One loop iteration = one pixel of a `W×W` image over a complex-plane
+//! window. Iteration cost is proportional to the escape count — points
+//! inside the set cost the full `CT`, far-outside points escape immediately,
+//! giving the heavy-tailed distribution of Table 3 (c.o.v. 1.824).
+
+use super::Workload;
+
+/// Mandelbrot workload over a `width × width` image.
+#[derive(Debug, Clone)]
+pub struct Mandelbrot {
+    /// Image width `W`; `N = W²`.
+    pub width: u32,
+    /// Conversion threshold `CT` (paper: 1,000,000; scale down for wall-clock
+    /// tractability — the *shape* of the cost distribution is CT-invariant).
+    pub ct: u32,
+    /// Complex-plane window.
+    pub x_min: f64,
+    pub x_max: f64,
+    pub y_min: f64,
+    pub y_max: f64,
+    /// Seconds per inner `z ← z⁴+c` step for the cost model (calibrated so
+    /// the mean iteration time matches Table 3's 0.01025 s at CT=1e6).
+    pub sec_per_step: f64,
+}
+
+impl Mandelbrot {
+    /// Paper configuration: 512×512 image (N=262,144), CT=1,000,000, over
+    /// the classic (−2..1, −1.5..1.5) window.
+    pub fn paper(ct: u32) -> Self {
+        Mandelbrot {
+            width: 512,
+            ct,
+            x_min: -2.0,
+            x_max: 1.0,
+            y_min: -1.5,
+            y_max: 1.5,
+            sec_per_step: Self::calibrated_sec_per_step(ct),
+        }
+    }
+
+    /// A small instance for tests: 64×64, CT=256.
+    pub fn tiny() -> Self {
+        Mandelbrot {
+            width: 64,
+            ct: 256,
+            x_min: -2.0,
+            x_max: 1.0,
+            y_min: -1.5,
+            y_max: 1.5,
+            sec_per_step: Self::calibrated_sec_per_step(256),
+        }
+    }
+
+    /// Choose `sec_per_step` so the *mean* modelled iteration time lands at
+    /// Table 3's 0.01025 s: the mean escape count over this window is
+    /// ≈ 0.222·CT (measured; dominated by in-set pixels), hence
+    /// 0.01025/(0.222·CT).
+    fn calibrated_sec_per_step(ct: u32) -> f64 {
+        0.01025 / (0.222 * ct as f64)
+    }
+
+    /// Map a linear iteration index to the complex constant `c`.
+    #[inline]
+    pub fn c_of(&self, i: u64) -> (f64, f64) {
+        let w = self.width as u64;
+        let x = (i / w) as f64;
+        let y = (i % w) as f64;
+        let wf = self.width as f64;
+        (
+            self.x_min + x / wf * (self.x_max - self.x_min),
+            self.y_min + y / wf * (self.y_max - self.y_min),
+        )
+    }
+
+    /// Escape count for pixel `i`: the number of `z ← z⁴ + c` steps executed
+    /// before `|z| ≥ 2`, capped at `CT` (Listing 3's inner loop).
+    #[inline]
+    pub fn escape_count(&self, i: u64) -> u32 {
+        let (cre, cim) = self.c_of(i);
+        let mut zre = 0.0f64;
+        let mut zim = 0.0f64;
+        let mut k = 0u32;
+        while k < self.ct {
+            // |z|² ≥ 4 ⇔ |z| ≥ 2
+            let r2 = zre * zre + zim * zim;
+            if r2 >= 4.0 {
+                break;
+            }
+            // z² = (a²−b², 2ab); z⁴ = (z²)²
+            let (a2, b2) = (zre * zre - zim * zim, 2.0 * zre * zim);
+            let (a4, b4) = (a2 * a2 - b2 * b2, 2.0 * a2 * b2);
+            zre = a4 + cre;
+            zim = b4 + cim;
+            k += 1;
+        }
+        k
+    }
+
+    /// True when pixel `i` is (numerically) inside the set (black in V).
+    pub fn in_set(&self, i: u64) -> bool {
+        self.escape_count(i) == self.ct
+    }
+}
+
+impl Workload for Mandelbrot {
+    fn n(&self) -> u64 {
+        self.width as u64 * self.width as u64
+    }
+
+    fn execute(&self, i: u64) -> u64 {
+        self.escape_count(i) as u64
+    }
+
+    fn cost(&self, i: u64) -> f64 {
+        // Cost model: proportional to the escape count, plus a fixed pixel
+        // setup term. Table 3's min of 1 µs anchors the setup cost.
+        1e-6 + self.escape_count(i) as f64 * self.sec_per_step
+    }
+
+    fn name(&self) -> &'static str {
+        "Mandelbrot"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::characterize;
+
+    #[test]
+    fn origin_is_in_set() {
+        let m = Mandelbrot::tiny();
+        // c = (-2, -1.5) corner escapes immediately; find the pixel for c≈0.
+        // x index such that x_min + x/W·3 = 0 ⇒ x = 2W/3.
+        let w = m.width as u64;
+        let i = (2 * w / 3) * w + w / 2;
+        let (cre, cim) = m.c_of(i);
+        assert!(cre.abs() < 0.1 && cim.abs() < 0.1, "c=({cre},{cim})");
+        assert!(m.in_set(i), "c≈0 must not escape");
+    }
+
+    #[test]
+    fn far_corner_escapes_fast() {
+        let m = Mandelbrot::tiny();
+        assert!(m.escape_count(0) <= 2, "corner c=(-2,-1.5) escapes in ≤2 steps");
+    }
+
+    #[test]
+    fn cost_is_heavy_tailed() {
+        let m = Mandelbrot::tiny();
+        let c = characterize(&m);
+        assert!(c.cov > 1.0, "Mandelbrot c.o.v. should exceed 1 (got {})", c.cov);
+        assert!(c.max_iter_time / c.min_iter_time > 50.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let m = Mandelbrot::tiny();
+        for i in [0u64, 100, 2048, 4095] {
+            assert_eq!(m.execute(i), m.execute(i));
+        }
+    }
+
+    #[test]
+    fn n_is_width_squared() {
+        assert_eq!(Mandelbrot::paper(1000).n(), 262_144);
+    }
+}

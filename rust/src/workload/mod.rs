@@ -1,0 +1,104 @@
+//! The paper's two evaluation applications (§6) plus synthetic profiles:
+//!
+//! * [`mandelbrot`] — the Mandelbrot set (`z ← z⁴ + c`, Listing 3); highly
+//!   irregular iteration times (Table 3: c.o.v. 1.824).
+//! * [`psia`] — parallel spin-image calculations (Listing 2); mildly
+//!   irregular (c.o.v. 0.256).
+//! * [`profile`] — per-iteration execution-time models feeding the DES.
+//! * [`synthetic`] — parametric workload generators for property tests and
+//!   ablations.
+//!
+//! A [`Workload`] provides both *real compute* (for the threaded engine and
+//! the PJRT path) and an *iteration-cost model* (for the DES).
+
+pub mod mandelbrot;
+pub mod profile;
+pub mod psia;
+pub mod synthetic;
+
+pub use profile::IterationCost;
+
+use crate::metrics::Stats;
+
+/// A schedulable parallel loop: `n` independent iterations with a way to
+/// execute any single iteration and a cost model for simulation.
+pub trait Workload: Send + Sync {
+    /// Total loop iterations `N`.
+    fn n(&self) -> u64;
+
+    /// Execute iteration `i` for real, returning an opaque result checksum
+    /// (to keep the optimizer honest and validate against references).
+    fn execute(&self, i: u64) -> u64;
+
+    /// Execute the contiguous chunk `[start, start+len)`, returning a
+    /// combined checksum. The default iterates [`Workload::execute`];
+    /// batch-capable backends (the PJRT tile executor) override this.
+    fn execute_range(&self, start: u64, len: u64) -> u64 {
+        (start..start + len).fold(0u64, |acc, i| acc.wrapping_add(self.execute(i)))
+    }
+
+    /// Modelled execution time of iteration `i` in seconds (for the DES).
+    fn cost(&self, i: u64) -> f64;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Table 3-style summary of a workload's main loop.
+#[derive(Debug, Clone)]
+pub struct LoopCharacteristics {
+    pub name: &'static str,
+    pub n: u64,
+    pub max_iter_time: f64,
+    pub min_iter_time: f64,
+    pub mean_iter_time: f64,
+    pub stddev: f64,
+    pub cov: f64,
+}
+
+/// Compute the Table 3 row for a workload from its cost model.
+pub fn characterize(w: &dyn Workload) -> LoopCharacteristics {
+    let mut s = Stats::new();
+    for i in 0..w.n() {
+        s.push(w.cost(i));
+    }
+    LoopCharacteristics {
+        name: w.name(),
+        n: w.n(),
+        max_iter_time: s.max(),
+        min_iter_time: s.min(),
+        mean_iter_time: s.mean(),
+        stddev: s.stddev(),
+        cov: s.cov(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Constant(u64);
+    impl Workload for Constant {
+        fn n(&self) -> u64 {
+            self.0
+        }
+        fn execute(&self, i: u64) -> u64 {
+            i
+        }
+        fn cost(&self, _i: u64) -> f64 {
+            0.5
+        }
+        fn name(&self) -> &'static str {
+            "constant"
+        }
+    }
+
+    #[test]
+    fn characterize_constant() {
+        let c = characterize(&Constant(100));
+        assert_eq!(c.n, 100);
+        assert_eq!(c.mean_iter_time, 0.5);
+        assert_eq!(c.cov, 0.0);
+        assert_eq!(c.min_iter_time, c.max_iter_time);
+    }
+}

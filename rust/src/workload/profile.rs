@@ -1,0 +1,195 @@
+//! Iteration-cost models for the discrete-event simulator.
+//!
+//! The DES does not execute iterations — it advances virtual PE clocks by
+//! each iteration's *modelled* cost. An [`IterationCost`] maps an iteration
+//! index to seconds; implementations range from recorded real profiles to
+//! the calibrated statistical models of Table 3.
+
+use crate::metrics::Stats;
+use crate::techniques::rnd::splitmix64;
+use crate::workload::Workload;
+use std::sync::Arc;
+
+/// A per-iteration execution-time model.
+#[derive(Clone)]
+pub enum IterationCost {
+    /// Every iteration costs the same.
+    Constant(f64),
+    /// Recorded costs, one per iteration (e.g. from a real workload pass).
+    Table(Arc<Vec<f64>>),
+    /// Gaussian(µ, σ) cost, deterministic per index via counter-based RNG,
+    /// truncated at `min`. Models PSIA's near-uniform iterations.
+    Gaussian { mu: f64, sigma: f64, min: f64, seed: u64 },
+    /// Delegate to a workload's cost model (e.g. Mandelbrot escape counts).
+    FromWorkload(Arc<dyn Workload>),
+}
+
+impl std::fmt::Debug for IterationCost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IterationCost::Constant(c) => write!(f, "Constant({c})"),
+            IterationCost::Table(t) => write!(f, "Table(len={})", t.len()),
+            IterationCost::Gaussian { mu, sigma, .. } => {
+                write!(f, "Gaussian(mu={mu}, sigma={sigma})")
+            }
+            IterationCost::FromWorkload(w) => write!(f, "FromWorkload({})", w.name()),
+        }
+    }
+}
+
+impl IterationCost {
+    /// Cost of iteration `i`, seconds. Deterministic in `i`.
+    pub fn cost(&self, i: u64) -> f64 {
+        match self {
+            IterationCost::Constant(c) => *c,
+            IterationCost::Table(t) => t[(i as usize).min(t.len() - 1)],
+            IterationCost::Gaussian { mu, sigma, min, seed } => {
+                let z = gaussian_draw(*seed, i);
+                (mu + sigma * z).max(*min)
+            }
+            IterationCost::FromWorkload(w) => w.cost(i),
+        }
+    }
+
+    /// Total cost of the contiguous range `[start, start+len)`.
+    pub fn range_cost(&self, start: u64, len: u64) -> f64 {
+        match self {
+            // O(1) fast path for the constant model.
+            IterationCost::Constant(c) => *c * len as f64,
+            // §Perf: direct slice sum (vectorizes; no per-index enum
+            // dispatch/clamp) — this is the DES's innermost loop: every
+            // simulated chunk sums its iterations' costs.
+            IterationCost::Table(t) => {
+                let lo = (start as usize).min(t.len());
+                let hi = ((start + len) as usize).min(t.len());
+                t[lo..hi].iter().sum::<f64>()
+                    + (len as usize - (hi - lo)) as f64 * t.last().copied().unwrap_or(0.0)
+            }
+            _ => (start..start + len).map(|i| self.cost(i)).sum(),
+        }
+    }
+
+    /// PSIA's Table 3 model: Gaussian(0.07298, 0.00885) truncated at 0.0345.
+    pub fn psia_table3(seed: u64) -> Self {
+        IterationCost::Gaussian { mu: 0.07298, sigma: 0.00885, min: 0.0345, seed }
+    }
+
+    /// Record a real workload's cost model into a dense table (amortizes
+    /// expensive `cost()` implementations for repeated DES runs).
+    pub fn record(w: &dyn Workload) -> Self {
+        IterationCost::Table(Arc::new((0..w.n()).map(|i| w.cost(i)).collect()))
+    }
+
+    /// Record a [`crate::workload::mandelbrot::Mandelbrot`] exploiting the
+    /// set's conjugate symmetry: on this symmetric window the pixel grid
+    /// maps `c(x, y) = conj(c(x, W−y))` for `y ≥ 1`, so escape counts (and
+    /// costs) repeat — §Perf: halves the table-build time that dominates
+    /// figure setup.
+    pub fn record_mandelbrot(m: &crate::workload::mandelbrot::Mandelbrot) -> Self {
+        let w = m.width as u64;
+        let symmetric = (m.y_min + m.y_max).abs() < 1e-12;
+        if !symmetric {
+            return Self::record(m);
+        }
+        let mut table = vec![0.0f64; (w * w) as usize];
+        for x in 0..w {
+            let half = w / 2;
+            for y in 0..=half {
+                let c = m.cost(x * w + y);
+                table[(x * w + y) as usize] = c;
+                // conj pair: c_im(W−y) = −c_im(y) for y ≥ 1.
+                if y >= 1 && w - y > half {
+                    table[(x * w + (w - y)) as usize] = c;
+                }
+            }
+        }
+        IterationCost::Table(Arc::new(table))
+    }
+
+    /// Summary statistics over the first `n` iterations.
+    pub fn stats(&self, n: u64) -> Stats {
+        let mut s = Stats::new();
+        for i in 0..n {
+            s.push(self.cost(i));
+        }
+        s
+    }
+}
+
+/// Standard-normal draw, deterministic in `(seed, i)` (Box–Muller over two
+/// SplitMix64 uniforms). Public: experiment runners use it for per-PE speed
+/// jitter across repetitions.
+pub fn gaussian_draw(seed: u64, i: u64) -> f64 {
+    let a = splitmix64(seed ^ i.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let b = splitmix64(a ^ 0xdead_beef_cafe_f00d);
+    let u1 = ((a >> 11) as f64 + 0.5) / (1u64 << 53) as f64; // (0,1)
+    let u2 = (b >> 11) as f64 / (1u64 << 53) as f64;
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::mandelbrot::Mandelbrot;
+
+    #[test]
+    fn constant_range_cost() {
+        let c = IterationCost::Constant(0.5);
+        assert_eq!(c.range_cost(10, 4), 2.0);
+    }
+
+    #[test]
+    fn gaussian_matches_moments() {
+        let g = IterationCost::psia_table3(99);
+        let s = g.stats(50_000);
+        assert!((s.mean() - 0.07298).abs() < 0.001, "mean={}", s.mean());
+        assert!((s.stddev() - 0.00885).abs() < 0.001, "sd={}", s.stddev());
+        assert!(s.min() >= 0.0345);
+    }
+
+    #[test]
+    fn gaussian_deterministic() {
+        let g = IterationCost::psia_table3(7);
+        for i in [0u64, 5, 1000] {
+            assert_eq!(g.cost(i), g.cost(i));
+        }
+    }
+
+    #[test]
+    fn recorded_table_matches_workload() {
+        let m = Mandelbrot::tiny();
+        let t = IterationCost::record(&m);
+        for i in [0u64, 17, 999] {
+            assert_eq!(t.cost(i), m.cost(i));
+        }
+    }
+
+    #[test]
+    fn symmetric_record_matches_full_record() {
+        let m = Mandelbrot::tiny();
+        let full = IterationCost::record(&m);
+        let sym = IterationCost::record_mandelbrot(&m);
+        for i in 0..m.n() {
+            assert_eq!(full.cost(i), sym.cost(i), "pixel {i}");
+        }
+    }
+
+    #[test]
+    fn asymmetric_window_falls_back() {
+        let mut m = Mandelbrot::tiny();
+        m.y_min = -1.0; // break the symmetry
+        let full = IterationCost::record(&m);
+        let sym = IterationCost::record_mandelbrot(&m);
+        for i in (0..m.n()).step_by(97) {
+            assert_eq!(full.cost(i), sym.cost(i));
+        }
+    }
+
+    #[test]
+    fn range_cost_sums() {
+        let m = Mandelbrot::tiny();
+        let t = IterationCost::record(&m);
+        let direct: f64 = (100..110).map(|i| m.cost(i)).sum();
+        assert!((t.range_cost(100, 10) - direct).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,138 @@
+//! Parametric synthetic workloads for property tests and ablations:
+//! controlled iteration-cost shapes that stress specific scheduler
+//! behaviours (front-loaded vs back-loaded load, bimodal spikes, …).
+
+use super::Workload;
+use crate::techniques::rnd::splitmix64;
+
+/// Shape of the synthetic cost curve across the iteration space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CostShape {
+    /// All iterations equal.
+    Uniform,
+    /// Cost decreases linearly — heavy work first (favours FAC2 over GSS,
+    /// per §2's discussion).
+    FrontLoaded,
+    /// Cost increases linearly — heavy work last (stresses decreasing
+    /// techniques' tail behaviour).
+    BackLoaded,
+    /// Two cost levels, a fraction `spike_frac` of iterations expensive.
+    Bimodal { spike_ratio: f64, spike_frac: f64 },
+    /// Uniformly random in [0.5µ, 1.5µ].
+    Jittered,
+}
+
+/// A synthetic workload with a parameterized cost shape.
+#[derive(Debug, Clone)]
+pub struct Synthetic {
+    pub n: u64,
+    /// Mean iteration cost, seconds.
+    pub mu: f64,
+    pub shape: CostShape,
+    pub seed: u64,
+}
+
+impl Synthetic {
+    pub fn new(n: u64, mu: f64, shape: CostShape, seed: u64) -> Self {
+        Synthetic { n, mu, shape, seed }
+    }
+}
+
+impl Workload for Synthetic {
+    fn n(&self) -> u64 {
+        self.n
+    }
+
+    fn execute(&self, i: u64) -> u64 {
+        splitmix64(self.seed ^ i)
+    }
+
+    fn cost(&self, i: u64) -> f64 {
+        let frac = i as f64 / self.n.max(1) as f64;
+        match self.shape {
+            CostShape::Uniform => self.mu,
+            // Linear 2µ→~0 and mirror keep the mean at µ.
+            CostShape::FrontLoaded => 2.0 * self.mu * (1.0 - frac),
+            CostShape::BackLoaded => 2.0 * self.mu * frac,
+            CostShape::Bimodal { spike_ratio, spike_frac } => {
+                let r = splitmix64(self.seed ^ i.wrapping_mul(0x2545_f491_4f6c_dd1d));
+                let u = (r >> 11) as f64 / (1u64 << 53) as f64;
+                // Normalize so the mean stays µ.
+                let base = self.mu / (1.0 - spike_frac + spike_frac * spike_ratio);
+                if u < spike_frac {
+                    base * spike_ratio
+                } else {
+                    base
+                }
+            }
+            CostShape::Jittered => {
+                let r = splitmix64(self.seed ^ i.wrapping_mul(0xd6e8_feb8_6659_fd93));
+                let u = (r >> 11) as f64 / (1u64 << 53) as f64;
+                self.mu * (0.5 + u)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "Synthetic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::characterize;
+
+    #[test]
+    fn uniform_has_zero_cov() {
+        let w = Synthetic::new(1000, 0.01, CostShape::Uniform, 1);
+        assert_eq!(characterize(&w).cov, 0.0);
+    }
+
+    #[test]
+    fn means_are_preserved() {
+        for shape in [
+            CostShape::Uniform,
+            CostShape::FrontLoaded,
+            CostShape::BackLoaded,
+            CostShape::Bimodal { spike_ratio: 10.0, spike_frac: 0.1 },
+            CostShape::Jittered,
+        ] {
+            let w = Synthetic::new(20_000, 0.01, shape, 3);
+            let c = characterize(&w);
+            assert!(
+                (c.mean_iter_time - 0.01).abs() < 0.002,
+                "{shape:?}: mean={}",
+                c.mean_iter_time
+            );
+        }
+    }
+
+    #[test]
+    fn front_loaded_decreases() {
+        let w = Synthetic::new(100, 1.0, CostShape::FrontLoaded, 1);
+        assert!(w.cost(0) > w.cost(50));
+        assert!(w.cost(50) > w.cost(99));
+    }
+
+    #[test]
+    fn bimodal_has_two_levels() {
+        let w = Synthetic::new(
+            10_000,
+            0.01,
+            CostShape::Bimodal { spike_ratio: 20.0, spike_frac: 0.05 },
+            9,
+        );
+        let mut lo = 0;
+        let mut hi = 0;
+        for i in 0..10_000 {
+            if w.cost(i) > 0.05 {
+                hi += 1;
+            } else {
+                lo += 1;
+            }
+        }
+        assert!(hi > 200 && hi < 800, "hi={hi}");
+        assert!(lo > 9000);
+    }
+}

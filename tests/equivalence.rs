@@ -1,0 +1,184 @@
+//! Property tests over the §4 transformations: for every technique with a
+//! closed form, the straightforward (DCA) and recursive (CCA) formulas must
+//! schedule the same loop — *exactly* step-for-step where the math is exact
+//! (TSS, FISS, STATIC, SS, FSC, RND, TFSS), and with full coverage plus
+//! bounded drift where iterated ceilings legitimately diverge (GSS, TAP,
+//! FAC2, VISS, PLS).
+//!
+//! Randomized sweeps use a seeded SplitMix64 — no external proptest crate is
+//! available in this build environment, so the harness is hand-rolled but
+//! exhaustive-by-seed and fully reproducible.
+
+use dca_dls::sched::{closed_form_schedule, recursive_schedule, verify_coverage};
+use dca_dls::techniques::{rnd::splitmix64, LoopParams, Technique, TechniqueKind};
+
+/// Deterministic (n, p) sample space: n ∈ [1, 500k], p ∈ [1, 512].
+fn cases(seed: u64, count: usize) -> Vec<(u64, u32)> {
+    let mut s = seed;
+    (0..count)
+        .map(|_| {
+            s = splitmix64(s);
+            let n = 1 + s % 500_000;
+            s = splitmix64(s);
+            let p = 1 + (s % 512) as u32;
+            (n, p)
+        })
+        .collect()
+}
+
+/// Techniques whose two forms are mathematically identical step-for-step.
+const EXACT: [TechniqueKind; 6] = [
+    TechniqueKind::Static,
+    TechniqueKind::Ss,
+    TechniqueKind::Fsc,
+    TechniqueKind::Tss,
+    TechniqueKind::Fiss,
+    TechniqueKind::Rnd,
+];
+
+/// Techniques where iterated ceilings drift but coverage must hold.
+const DRIFTING: [TechniqueKind; 6] = [
+    TechniqueKind::Gss,
+    TechniqueKind::Tap,
+    TechniqueKind::Fac2,
+    TechniqueKind::Tfss,
+    TechniqueKind::Viss,
+    TechniqueKind::Pls,
+];
+
+#[test]
+fn exact_forms_agree_step_for_step() {
+    for (n, p) in cases(0xE9_0001, 60) {
+        let params = LoopParams::new(n, p);
+        for kind in EXACT {
+            let t = Technique::new(kind, &params);
+            let closed = closed_form_schedule(&t, &params);
+            let recursive = recursive_schedule(&t, &params);
+            assert_eq!(
+                closed, recursive,
+                "{kind} at (n={n}, p={p}): forms must be identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn drifting_forms_both_cover_exactly() {
+    for (n, p) in cases(0xE9_0002, 60) {
+        let params = LoopParams::new(n, p);
+        for kind in DRIFTING {
+            let t = Technique::new(kind, &params);
+            let closed = closed_form_schedule(&t, &params);
+            let recursive = recursive_schedule(&t, &params);
+            verify_coverage(&closed, n).unwrap_or_else(|e| panic!("{kind} closed (n={n},p={p}): {e}"));
+            verify_coverage(&recursive, n)
+                .unwrap_or_else(|e| panic!("{kind} recursive (n={n},p={p}): {e}"));
+        }
+    }
+}
+
+#[test]
+fn gss_drift_is_bounded() {
+    // Closed ⌈qⁱ·N/P⌉ vs iterated ⌈R/P⌉ differ by at most a few iterations
+    // per step — never by a whole batch.
+    for (n, p) in cases(0xE9_0003, 30) {
+        if n < p as u64 * 4 {
+            continue;
+        }
+        let params = LoopParams::new(n, p);
+        let t = Technique::new(TechniqueKind::Gss, &params);
+        let closed = closed_form_schedule(&t, &params);
+        let recursive = recursive_schedule(&t, &params);
+        let steps = closed.len().min(recursive.len());
+        for i in 0..steps / 2 {
+            let a = closed[i].size as i64;
+            let b = recursive[i].size as i64;
+            let bound = 2 + i as i64; // drift accumulates ≤ 1/step
+            assert!(
+                (a - b).abs() <= bound,
+                "GSS (n={n},p={p}) step {i}: closed {a} vs recursive {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn decreasing_techniques_decrease_in_both_forms() {
+    for (n, p) in cases(0xE9_0004, 25) {
+        let params = LoopParams::new(n, p);
+        for kind in [TechniqueKind::Gss, TechniqueKind::Tss, TechniqueKind::Tfss] {
+            let t = Technique::new(kind, &params);
+            for schedule in [closed_form_schedule(&t, &params), recursive_schedule(&t, &params)]
+            {
+                // Ignore the final clipped chunk.
+                let sizes: Vec<u64> = schedule.iter().map(|a| a.size).collect();
+                let inner = &sizes[..sizes.len().saturating_sub(1)];
+                assert!(
+                    inner.windows(2).all(|w| w[0] >= w[1]),
+                    "{kind} (n={n},p={p}): must be non-increasing: {sizes:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunk_counts_comparable_between_forms() {
+    // The drift must not change the schedule's *scale*: chunk counts of the
+    // two forms stay within 2× of each other.
+    for (n, p) in cases(0xE9_0005, 40) {
+        let params = LoopParams::new(n, p);
+        for kind in DRIFTING {
+            let t = Technique::new(kind, &params);
+            let c = closed_form_schedule(&t, &params).len() as f64;
+            let r = recursive_schedule(&t, &params).len() as f64;
+            assert!(
+                c / r < 2.0 && r / c < 2.0,
+                "{kind} (n={n},p={p}): counts {c} vs {r}"
+            );
+        }
+    }
+}
+
+#[test]
+fn extreme_geometries() {
+    // n=1, p=1, p>n, p=n — every technique must still cover.
+    for (n, p) in [(1u64, 1u32), (1, 64), (7, 64), (64, 64), (65, 64), (1000, 1)] {
+        let params = LoopParams::new(n, p);
+        for kind in TechniqueKind::ALL {
+            if !kind.has_closed_form() {
+                continue;
+            }
+            let t = Technique::new(kind, &params);
+            verify_coverage(&closed_form_schedule(&t, &params), n)
+                .unwrap_or_else(|e| panic!("{kind} closed (n={n},p={p}): {e}"));
+            verify_coverage(&recursive_schedule(&t, &params), n)
+                .unwrap_or_else(|e| panic!("{kind} recursive (n={n},p={p}): {e}"));
+        }
+    }
+}
+
+#[test]
+fn min_chunk_respected_everywhere() {
+    for min_chunk in [1u64, 2, 5, 17] {
+        let mut params = LoopParams::new(10_000, 16);
+        params.min_chunk = min_chunk;
+        for kind in TechniqueKind::ALL {
+            if !kind.has_closed_form() {
+                continue;
+            }
+            let t = Technique::new(kind, &params);
+            let schedule = closed_form_schedule(&t, &params);
+            verify_coverage(&schedule, 10_000).unwrap();
+            // All chunks except possibly the last meet the minimum.
+            for a in &schedule[..schedule.len() - 1] {
+                assert!(
+                    a.size >= min_chunk,
+                    "{kind} min_chunk={min_chunk}: chunk of {} at step {}",
+                    a.size,
+                    a.step
+                );
+            }
+        }
+    }
+}

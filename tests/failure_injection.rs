@@ -1,0 +1,171 @@
+//! Failure injection and hostile configurations: the library must either
+//! work or reject loudly — never hang, overlap, or drop iterations.
+
+use std::sync::Arc;
+
+use dca_dls::config::{ClusterConfig, DelaySite, ExecutionModel};
+use dca_dls::coordinator::{self, EngineConfig};
+use dca_dls::des::{simulate, DesConfig};
+use dca_dls::report::figures::{run_figure, App, FigureConfig};
+use dca_dls::sched::verify_coverage;
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::workload::synthetic::{CostShape, Synthetic};
+use dca_dls::workload::{IterationCost, Workload};
+
+fn small_des(n: u64, p: u32) -> DesConfig {
+    DesConfig {
+        params: LoopParams::new(n, p),
+        technique: TechniqueKind::Gss,
+        model: ExecutionModel::Dca,
+        delay: InjectedDelay::none(),
+        cluster: ClusterConfig::small(p),
+        cost: IterationCost::Constant(1e-6),
+        pe_speed: vec![],
+    }
+}
+
+#[test]
+fn des_more_ranks_than_iterations() {
+    let mut cfg = small_des(5, 32);
+    for model in [ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma] {
+        cfg.model = model;
+        let r = simulate(&cfg).unwrap();
+        let mut a = r.assignments.clone();
+        a.sort_by_key(|x| x.start);
+        verify_coverage(&a, 5).unwrap();
+    }
+}
+
+#[test]
+fn des_single_iteration_single_rank() {
+    let r = simulate(&small_des(1, 1)).unwrap();
+    assert_eq!(r.assignments.len(), 1);
+    assert_eq!(r.assignments[0].size, 1);
+}
+
+#[test]
+fn des_extreme_slowdown_still_terminates() {
+    let mut cfg = small_des(500, 8);
+    cfg.delay = InjectedDelay { calculation: 0.05, assignment: 0.05 }; // 50 ms each!
+    for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
+        cfg.model = model;
+        let r = simulate(&cfg).unwrap();
+        let mut a = r.assignments.clone();
+        a.sort_by_key(|x| x.start);
+        verify_coverage(&a, 500).unwrap();
+        assert!(r.t_par() > 0.0);
+    }
+}
+
+#[test]
+fn des_heterogeneous_speeds() {
+    // One PE 10× slower: non-adaptive DLS can't fully compensate (FAC2's
+    // first-batch chunk on the slow PE is a fixed cost), but self-scheduling
+    // must still roughly halve STATIC's makespan (the floor is FAC2's
+    // first-batch chunk on the slow PE: 3125 iters at 10×).
+    let run = |tech| {
+        let mut cfg = small_des(50_000, 8);
+        cfg.technique = tech;
+        cfg.pe_speed = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.1];
+        simulate(&cfg).unwrap()
+    };
+    let dls = run(TechniqueKind::Fac2);
+    let stat = run(TechniqueKind::Static);
+    assert!(
+        dls.t_par() < stat.t_par() * 0.55,
+        "FAC2 ({:.3}s) must beat STATIC ({:.3}s) under a 10x-slow PE",
+        dls.t_par(),
+        stat.t_par()
+    );
+    // And with min-size (SS-like) chunks the imbalance nearly vanishes.
+    let ss = run(TechniqueKind::Ss);
+    assert!(ss.stats.imbalance < 0.1, "SS imbalance {:.3}", ss.stats.imbalance);
+}
+
+#[test]
+fn des_master_slowdown_scenario() {
+    // The paper's motivating story: slow the MASTER's CPU only. CCA suffers
+    // (all calculations serialized on the slow PE); DCA's coordinator only
+    // bumps counters so it suffers far less.
+    let mut speeds = vec![1.0; 64];
+    speeds[0] = 0.25; // master/coordinator 4× slower
+    let mk = |model| {
+        let cluster = ClusterConfig { nodes: 4, ranks_per_node: 16, ..ClusterConfig::minihpc() };
+        let cfg = DesConfig {
+            params: LoopParams::new(65_536, 64),
+            technique: TechniqueKind::Ss, // maximal scheduling traffic
+            model,
+            delay: InjectedDelay::calculation_only(100e-6),
+            cluster,
+            cost: IterationCost::Constant(0.002),
+            pe_speed: speeds.clone(),
+        };
+        simulate(&cfg).unwrap().t_par()
+    };
+    let cca = mk(ExecutionModel::Cca);
+    let dca = mk(ExecutionModel::Dca);
+    assert!(
+        cca > dca,
+        "slow master must hurt CCA ({cca:.2}s) more than DCA ({dca:.2}s)"
+    );
+}
+
+#[test]
+fn engine_zero_size_loop_rejected() {
+    // LoopParams::new refuses n=0 by assertion.
+    let r = std::panic::catch_unwind(|| LoopParams::new(0, 4));
+    assert!(r.is_err());
+}
+
+#[test]
+fn engine_more_workers_than_iterations() {
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(3, 1e-7, CostShape::Uniform, 1));
+    for model in [ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma] {
+        let cfg = EngineConfig::new(LoopParams::new(3, 8), TechniqueKind::Gss, model);
+        let r = coordinator::run(&cfg, Arc::clone(&w)).unwrap();
+        verify_coverage(&r.sorted_assignments(), 3).unwrap();
+    }
+}
+
+#[test]
+fn figure_runner_skips_af_rma_and_completes() {
+    let mut cfg = FigureConfig::quick(App::Psia);
+    cfg.techniques = vec![TechniqueKind::Af];
+    cfg.models = vec![ExecutionModel::Dca, ExecutionModel::DcaRma];
+    cfg.delays = vec![0.0];
+    cfg.reps = 1;
+    let rows = run_figure(&cfg).unwrap();
+    // AF × DCA-RMA skipped; AF × DCA present.
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].model, ExecutionModel::Dca);
+}
+
+#[test]
+fn assignment_site_delay_runs_everywhere() {
+    let mut cfg = FigureConfig::quick(App::Psia);
+    cfg.techniques = vec![TechniqueKind::Tss];
+    cfg.delays = vec![100e-6];
+    cfg.delay_site = DelaySite::Assignment;
+    cfg.reps = 1;
+    let rows = run_figure(&cfg).unwrap();
+    assert_eq!(rows.len(), 2);
+    for r in rows {
+        assert!(r.runs.t_par_mean > 0.0);
+    }
+}
+
+#[test]
+fn des_rejects_af_on_rma() {
+    let mut cfg = small_des(100, 4);
+    cfg.technique = TechniqueKind::Af;
+    cfg.model = ExecutionModel::DcaRma;
+    assert!(simulate(&cfg).is_err());
+}
+
+#[test]
+fn des_rejects_rank_mismatch() {
+    let mut cfg = small_des(100, 4);
+    cfg.params = LoopParams::new(100, 8); // ≠ cluster ranks
+    assert!(simulate(&cfg).is_err());
+}

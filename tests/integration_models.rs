@@ -1,0 +1,202 @@
+//! Cross-model integration: the DES, the three threaded engines, and the
+//! LB4MPI facade must agree with each other on what gets scheduled.
+
+use std::sync::Arc;
+use std::thread;
+
+use dca_dls::config::{ClusterConfig, ExecutionModel};
+use dca_dls::coordinator::{self, EngineConfig};
+use dca_dls::des::{simulate, DesConfig};
+use dca_dls::lb4mpi::*;
+use dca_dls::sched::verify_coverage;
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::workload::synthetic::{CostShape, Synthetic};
+use dca_dls::workload::{IterationCost, Workload};
+
+const N: u64 = 8_192;
+const P: u32 = 4;
+
+fn des_chunk_multiset(model: ExecutionModel, kind: TechniqueKind) -> Vec<u64> {
+    let cluster = ClusterConfig::small(P);
+    let cfg = DesConfig {
+        params: LoopParams::new(N, P),
+        technique: kind,
+        model,
+        delay: InjectedDelay::none(),
+        cluster,
+        cost: IterationCost::Constant(1e-5),
+        pe_speed: vec![],
+    };
+    let r = simulate(&cfg).unwrap();
+    let mut v: Vec<u64> = r.assignments.iter().map(|a| a.size).collect();
+    v.sort_unstable();
+    v
+}
+
+fn engine_chunk_multiset(model: ExecutionModel, kind: TechniqueKind) -> Vec<u64> {
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Uniform, 5));
+    let cfg = EngineConfig::new(LoopParams::new(N, P), kind, model);
+    let r = coordinator::run(&cfg, w).unwrap();
+    let mut v: Vec<u64> = r.sorted_assignments().iter().map(|a| a.size).collect();
+    v.sort_unstable();
+    v
+}
+
+/// The DES and the real engine run the same protocols; what must agree:
+///
+/// * **CCA** — the master serializes calculation+assignment, so the chunk
+///   multiset is fully deterministic: DES ≡ engine exactly.
+/// * **DCA** — sizes are per-step deterministic but end-of-loop clipping
+///   depends on *commit order*, which real threads race on: totals and
+///   non-tail chunks must agree; the clipped tail may shuffle.
+#[test]
+fn des_and_engine_agree_on_deterministic_schedules() {
+    for kind in [TechniqueKind::Static, TechniqueKind::Fsc, TechniqueKind::Tss] {
+        let des = des_chunk_multiset(ExecutionModel::Cca, kind);
+        let eng = engine_chunk_multiset(ExecutionModel::Cca, kind);
+        assert_eq!(des, eng, "{kind} Cca");
+
+        let des = des_chunk_multiset(ExecutionModel::Dca, kind);
+        let eng = engine_chunk_multiset(ExecutionModel::Dca, kind);
+        assert_eq!(des.iter().sum::<u64>(), eng.iter().sum::<u64>(), "{kind} Dca total");
+        // Multisets agree on everything above the clip region (sorted
+        // ascending ⇒ the racy clipped chunks sort first; chunk counts may
+        // differ by a ticket or two, so compare the common suffix).
+        let body = des.len().min(eng.len()).saturating_sub(P as usize + 2);
+        assert_eq!(
+            des[des.len() - body..],
+            eng[eng.len() - body..],
+            "{kind} Dca body"
+        );
+    }
+}
+
+/// CCA in the DES and the LB4MPI facade evaluate the same recursive
+/// formulas; with a single rank both are fully sequential ⇒ identical
+/// schedules even for order-dependent techniques.
+#[test]
+fn single_rank_lb4mpi_matches_des_cca() {
+    for kind in [TechniqueKind::Gss, TechniqueKind::Fac2, TechniqueKind::Viss] {
+        let des = des_chunk_multiset_1rank(kind);
+        let fac = lb4mpi_chunks_1rank(kind);
+        assert_eq!(des, fac, "{kind}");
+    }
+}
+
+fn des_chunk_multiset_1rank(kind: TechniqueKind) -> Vec<u64> {
+    let cluster = ClusterConfig::small(1);
+    let cfg = DesConfig {
+        params: LoopParams::new(N, 1),
+        technique: kind,
+        model: ExecutionModel::Cca,
+        delay: InjectedDelay::none(),
+        cluster,
+        cost: IterationCost::Constant(1e-6),
+        pe_speed: vec![],
+    };
+    let r = simulate(&cfg).unwrap();
+    r.assignments.iter().map(|a| a.size).collect()
+}
+
+fn lb4mpi_chunks_1rank(kind: TechniqueKind) -> Vec<u64> {
+    let mut infos = dls_parameters_setup(1, InjectedDelay::none());
+    let params = LoopParams::new(N, 1);
+    let info = &mut infos[0];
+    dls_start_loop(info, &params, kind);
+    let mut out = vec![];
+    while !dls_terminated(info) {
+        if let Some((_s, size)) = dls_start_chunk(info) {
+            out.push(size);
+            dls_end_chunk(info);
+        }
+    }
+    dls_end_loop(info);
+    out
+}
+
+/// All three engines compute identical checksums for all techniques.
+#[test]
+fn engines_checksum_identical() {
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Bimodal {
+        spike_ratio: 8.0,
+        spike_frac: 0.1,
+    }, 99));
+    let reference = w.execute_range(0, N);
+    for kind in [TechniqueKind::Gss, TechniqueKind::Af, TechniqueKind::Rnd] {
+        for model in [ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma] {
+            if kind == TechniqueKind::Af && model == ExecutionModel::DcaRma {
+                continue;
+            }
+            let cfg = EngineConfig::new(LoopParams::new(N, P), kind, model);
+            let r = coordinator::run(&cfg, Arc::clone(&w)).unwrap();
+            assert_eq!(r.checksum, reference, "{kind} {model:?}");
+            verify_coverage(&r.sorted_assignments(), N).unwrap();
+        }
+    }
+}
+
+/// LB4MPI threads under both modes cover the loop with injected delays on.
+#[test]
+fn lb4mpi_with_delays_covers() {
+    for mode in [CalcMode::Centralized, CalcMode::Decentralized] {
+        let mut infos =
+            dls_parameters_setup(P, InjectedDelay::calculation_only(20e-6));
+        configure_chunk_calculation_mode(&infos[0], mode);
+        let params = LoopParams::new(2_000, P);
+        let handles: Vec<_> = infos
+            .drain(..)
+            .map(|mut info| {
+                let params = params.clone();
+                thread::spawn(move || {
+                    dls_start_loop(&mut info, &params, TechniqueKind::Gss);
+                    let mut ranges = vec![];
+                    while !dls_terminated(&info) {
+                        if let Some((start, size)) = dls_start_chunk(&mut info) {
+                            ranges.push((start, size));
+                            dls_end_chunk(&mut info);
+                        }
+                    }
+                    dls_end_loop(&mut info);
+                    ranges
+                })
+            })
+            .collect();
+        let mut all: Vec<(u64, u64)> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        all.sort_unstable();
+        let mut cursor = 0;
+        for (start, size) in all {
+            assert_eq!(start, cursor, "{mode:?}: gap/overlap at {start}");
+            cursor = start + size;
+        }
+        assert_eq!(cursor, 2_000, "{mode:?}");
+    }
+}
+
+/// Injected calculation delay hurts the threaded CCA engine measurably more
+/// than DCA when chunks are fine — the paper's claim validated on real
+/// threads with real spinning, not just the DES.
+#[test]
+fn real_threads_show_the_paper_effect() {
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(3_000, 1e-6, CostShape::Uniform, 5));
+    let run = |model, d| {
+        let mut cfg = EngineConfig::new(LoopParams::new(3_000, P), TechniqueKind::Ss, model);
+        cfg.delay = InjectedDelay::calculation_only(d);
+        coordinator::run(&cfg, Arc::clone(&w)).unwrap().stats.t_par
+    };
+    // Medians over repeats to tame scheduler noise.
+    let med = |model, d| {
+        let mut xs: Vec<f64> = (0..5).map(|_| run(model, d)).collect();
+        xs.sort_by(f64::total_cmp);
+        xs[2]
+    };
+    let cca = med(ExecutionModel::Cca, 50e-6) / med(ExecutionModel::Cca, 0.0);
+    let dca = med(ExecutionModel::Dca, 50e-6) / med(ExecutionModel::Dca, 0.0);
+    // 3000 chunks × 50µs serialized ≈ 150ms on a ~few-ms loop: CCA must blow
+    // up; DCA pays the delay in parallel.
+    assert!(
+        cca > dca,
+        "CCA degradation ({cca:.2}x) must exceed DCA ({dca:.2}x) on real threads"
+    );
+}
