@@ -42,6 +42,7 @@ fn run(
         cluster,
         cost: cost.clone(),
         pe_speed: vec![],
+        hier: Default::default(),
     };
     simulate(&cfg).expect("sim").t_par()
 }

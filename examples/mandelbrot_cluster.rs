@@ -33,6 +33,7 @@ fn main() -> anyhow::Result<()> {
                 cluster,
                 cost: cost.clone(),
                 pe_speed: vec![],
+                hier: Default::default(),
             };
             let r = simulate(&cfg)?;
             t.push(r.t_par());

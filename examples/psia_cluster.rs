@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
                 cluster,
                 cost: IterationCost::psia_table3(0xF16_4),
                 pe_speed: vec![],
+                hier: Default::default(),
             };
             t.push(simulate(&cfg)?.t_par());
         }

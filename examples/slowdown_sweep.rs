@@ -1,11 +1,16 @@
 //! Slowdown sweep: `T_loop^par` as a continuous function of the injected
-//! chunk-calculation delay (0 → 400 µs), CCA vs DCA — a finer-grained view
-//! of the paper's three-scenario design that shows *where* CCA's serialized
-//! calculation crosses into saturation.
+//! chunk-calculation delay (0 → 400 µs) for **all four execution models**
+//! side by side — a finer-grained view of the paper's three-scenario design
+//! that shows *where* CCA's serialized calculation crosses into saturation,
+//! and how the two-level HIER-DCA (arXiv 1903.09510) tracks flat DCA while
+//! keeping the coordinator nearly idle.
+//!
+//! AF has no closed form, so the DCA-RMA column is structurally unsupported
+//! (§4) and prints `n/a`.
 //!
 //! Run: `cargo run --release --example slowdown_sweep`
 
-use dca_dls::config::{ClusterConfig, ExecutionModel};
+use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams};
 use dca_dls::des::{simulate, DesConfig};
 use dca_dls::substrate::delay::InjectedDelay;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
@@ -18,10 +23,17 @@ fn main() -> anyhow::Result<()> {
     let tech = TechniqueKind::Af; // the paper's most delay-sensitive technique
 
     println!("\n== AF on Mandelbrot, 256 ranks: T_par vs injected calc delay ==\n");
-    println!("{:>9} {:>12} {:>12} {:>9}", "delay[µs]", "CCA T_par[s]", "DCA T_par[s]", "CCA/DCA");
+    println!(
+        "{:>9} {:>12} {:>12} {:>12} {:>12} {:>9}",
+        "delay[µs]", "CCA[s]", "DCA[s]", "DCA-RMA[s]", "HIER-DCA[s]", "CCA/DCA"
+    );
     for delay_us in [0.0, 5.0, 10.0, 25.0, 50.0, 100.0, 200.0, 400.0] {
-        let mut t = vec![];
-        for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
+        let mut cells: Vec<Option<f64>> = vec![];
+        for model in ExecutionModel::ALL {
+            if tech == TechniqueKind::Af && model == ExecutionModel::DcaRma {
+                cells.push(None); // unsupported by design (§4)
+                continue;
+            }
             let cluster = ClusterConfig::minihpc();
             let cfg = DesConfig {
                 params: LoopParams::new(262_144, cluster.total_ranks()),
@@ -31,14 +43,30 @@ fn main() -> anyhow::Result<()> {
                 cluster,
                 cost: cost.clone(),
                 pe_speed: vec![],
+                hier: HierParams::default(),
             };
-            t.push(simulate(&cfg)?.t_par());
+            cells.push(Some(simulate(&cfg)?.t_par()));
         }
-        let ratio = t[0] / t[1];
+        let fmt = |c: &Option<f64>| match c {
+            Some(t) => format!("{t:>12.2}"),
+            None => format!("{:>12}", "n/a"),
+        };
+        let ratio = match (cells[0], cells[1]) {
+            (Some(cca), Some(dca)) if dca > 0.0 => cca / dca,
+            _ => f64::NAN,
+        };
         let bar = "#".repeat((ratio * 10.0).min(60.0) as usize);
-        println!("{delay_us:>9.0} {:>12.2} {:>12.2} {ratio:>9.2} {bar}", t[0], t[1]);
+        println!(
+            "{delay_us:>9.0} {} {} {} {} {ratio:>9.2} {bar}",
+            fmt(&cells[0]),
+            fmt(&cells[1]),
+            fmt(&cells[2]),
+            fmt(&cells[3]),
+        );
     }
     println!("\nThe CCA column saturates once the master's serialized (delay + calc)");
-    println!("exceeds the workers' mean chunk-turnaround — DCA never does (§6).");
+    println!("exceeds the workers' mean chunk-turnaround — DCA never does (§6), and");
+    println!("HIER-DCA additionally keeps the global coordinator to O(node-chunks)");
+    println!("messages, paying the delay in parallel at both hierarchy levels.");
     Ok(())
 }

@@ -5,7 +5,7 @@ use crate::techniques::{LoopParams, TechniqueKind};
 
 
 /// Which chunk-calculation approach drives the run (the paper's central
-/// comparison).
+/// comparison, extended with the hierarchical follow-up of arXiv 1903.09510).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ExecutionModel {
     /// Centralized: master performs calculation **and** assignment (§3).
@@ -15,14 +15,29 @@ pub enum ExecutionModel {
     Dca,
     /// Distributed over the one-sided RMA window (the PDP'19 predecessor).
     DcaRma,
+    /// Two-level hierarchical DCA (§7 future work / arXiv 1903.09510): a
+    /// global coordinator hands *node-chunks* to per-node masters over the
+    /// inter-node fabric; each master re-subdivides its node-chunk among its
+    /// local ranks with an (optionally different) inner technique over the
+    /// intra-node fabric. See [`crate::hier`].
+    HierDca,
 }
 
 impl ExecutionModel {
+    /// All execution models, in comparison order.
+    pub const ALL: [ExecutionModel; 4] = [
+        ExecutionModel::Cca,
+        ExecutionModel::Dca,
+        ExecutionModel::DcaRma,
+        ExecutionModel::HierDca,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             ExecutionModel::Cca => "CCA",
             ExecutionModel::Dca => "DCA",
             ExecutionModel::DcaRma => "DCA-RMA",
+            ExecutionModel::HierDca => "HIER-DCA",
         }
     }
 
@@ -31,6 +46,7 @@ impl ExecutionModel {
             "CCA" => Some(ExecutionModel::Cca),
             "DCA" => Some(ExecutionModel::Dca),
             "DCA-RMA" | "DCARMA" | "RMA" => Some(ExecutionModel::DcaRma),
+            "HIER-DCA" | "HIERDCA" | "HIER" => Some(ExecutionModel::HierDca),
             _ => None,
         }
     }
@@ -52,6 +68,31 @@ pub enum DelaySite {
     /// Delay the chunk-assignment critical section (paper's §7 prediction:
     /// this should favour CCA, which sends fewer messages).
     Assignment,
+}
+
+/// Parameters of the hierarchical two-level model ([`ExecutionModel::HierDca`]).
+///
+/// The *outer* technique (which sizes node-chunks at the global coordinator
+/// level) is the experiment's main `technique`; this struct only adds what
+/// the flat models don't have: the *inner* technique each node master uses
+/// to re-subdivide its node-chunk among its local ranks. The node geometry
+/// (`nodes` × `ranks_per_node`) comes from [`ClusterConfig`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HierParams {
+    /// Intra-node (inner) technique; `None` ⇒ reuse the outer technique.
+    pub inner: Option<TechniqueKind>,
+}
+
+impl HierParams {
+    /// Use `inner` within nodes, regardless of the outer technique.
+    pub fn with_inner(inner: TechniqueKind) -> Self {
+        HierParams { inner: Some(inner) }
+    }
+
+    /// Resolve the inner technique given the experiment's outer technique.
+    pub fn inner_or(&self, outer: TechniqueKind) -> TechniqueKind {
+        self.inner.unwrap_or(outer)
+    }
 }
 
 /// Simulated cluster geometry and communication costs (miniHPC stand-in).
@@ -170,6 +211,57 @@ mod tests {
         assert_eq!(ExecutionModel::parse("DCA"), Some(ExecutionModel::Dca));
         assert_eq!(ExecutionModel::parse("dca-rma"), Some(ExecutionModel::DcaRma));
         assert_eq!(ExecutionModel::parse("???"), None);
+    }
+
+    #[test]
+    fn hier_parse_aliases() {
+        for alias in ["HIER", "HIERDCA", "HIER-DCA", "hier", "hierdca", "hier-dca"] {
+            assert_eq!(
+                ExecutionModel::parse(alias),
+                Some(ExecutionModel::HierDca),
+                "alias {alias}"
+            );
+        }
+    }
+
+    /// Property: `name()` round-trips through `parse()` for every variant,
+    /// under arbitrary per-character case flips (seeded SplitMix64 — no
+    /// external proptest crate in this build environment).
+    #[test]
+    fn model_name_parse_roundtrip_property() {
+        use crate::techniques::rnd::splitmix64;
+        assert_eq!(ExecutionModel::ALL.len(), 4);
+        for model in ExecutionModel::ALL {
+            assert_eq!(ExecutionModel::parse(model.name()), Some(model));
+            let mut s = 0x0515_CADE ^ model.name().len() as u64;
+            for _case in 0..64 {
+                let mangled: String = model
+                    .name()
+                    .chars()
+                    .map(|c| {
+                        s = splitmix64(s);
+                        if s & 1 == 0 {
+                            c.to_ascii_lowercase()
+                        } else {
+                            c.to_ascii_uppercase()
+                        }
+                    })
+                    .collect();
+                assert_eq!(
+                    ExecutionModel::parse(&mangled),
+                    Some(model),
+                    "mangled '{mangled}' must parse back to {model}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hier_params_inner_resolution() {
+        let same = HierParams::default();
+        assert_eq!(same.inner_or(TechniqueKind::Gss), TechniqueKind::Gss);
+        let mixed = HierParams::with_inner(TechniqueKind::Ss);
+        assert_eq!(mixed.inner_or(TechniqueKind::Gss), TechniqueKind::Ss);
     }
 
     #[test]

@@ -109,10 +109,19 @@ pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<Ru
         cfg.params.n,
         workload.n()
     );
+    anyhow::ensure!(
+        cfg.delay.dist == crate::substrate::delay::DelayDist::Constant,
+        "the threaded engine only injects constant delays (it spins wall-clock \
+         time); run distributional slowdown scenarios through the DES"
+    );
     match cfg.model {
         ExecutionModel::Cca => cca::run(cfg, workload),
         ExecutionModel::Dca => dca::run(cfg, workload),
         ExecutionModel::DcaRma => dca_rma::run(cfg, workload),
+        ExecutionModel::HierDca => anyhow::bail!(
+            "the threaded engine has no two-level mode yet — run HierDca \
+             through the DES (`dca-dls simulate --model hier` or `dca-dls hier`)"
+        ),
     }
 }
 
@@ -148,6 +157,31 @@ mod tests {
                 assert!(r.stats.chunks > 0);
             }
         }
+    }
+
+    #[test]
+    fn exponential_delay_rejected_by_threaded_engine() {
+        let w = tiny_workload();
+        let mut cfg = EngineConfig::new(
+            LoopParams::new(100, 2),
+            TechniqueKind::Gss,
+            ExecutionModel::Dca,
+        );
+        cfg.delay = crate::substrate::delay::InjectedDelay::exponential_calculation(1e-5, 1);
+        let e = run(&cfg, w).unwrap_err();
+        assert!(e.to_string().contains("constant"), "{e}");
+    }
+
+    #[test]
+    fn hier_rejected_by_threaded_engine() {
+        let w = tiny_workload();
+        let cfg = EngineConfig::new(
+            LoopParams::new(100, 2),
+            TechniqueKind::Gss,
+            ExecutionModel::HierDca,
+        );
+        let e = run(&cfg, w).unwrap_err();
+        assert!(e.to_string().contains("DES"), "{e}");
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod heap;
 
 use std::collections::VecDeque;
 
-use crate::config::{ClusterConfig, ExecutionModel};
+use crate::config::{ClusterConfig, ExecutionModel, HierParams};
 use crate::coordinator::protocol::{AfInfo, PerfReport};
 use crate::metrics::LoopStats;
 use crate::sched::{Assignment, StepTicket, WorkQueue};
@@ -47,6 +47,9 @@ pub struct DesConfig {
     /// Per-PE speed factors (1.0 = nominal); models heterogeneous or
     /// slowed-down PEs. Empty ⇒ all 1.0.
     pub pe_speed: Vec<f64>,
+    /// Two-level parameters, used only by [`ExecutionModel::HierDca`] (the
+    /// outer technique is `technique`; see [`crate::hier`]).
+    pub hier: HierParams,
 }
 
 impl DesConfig {
@@ -65,6 +68,7 @@ impl DesConfig {
             cluster,
             cost,
             pe_speed: vec![],
+            hier: HierParams::default(),
         }
     }
 }
@@ -102,6 +106,11 @@ pub fn simulate(cfg: &DesConfig) -> anyhow::Result<DesResult> {
         !(cfg.technique == TechniqueKind::Af && cfg.model == ExecutionModel::DcaRma),
         "AF has no straightforward formula; DCA-RMA cannot schedule it (§4)"
     );
+    if cfg.model == ExecutionModel::HierDca {
+        // The two-level protocol has its own event loop (node-master service
+        // personalities over both latency tiers) — see `crate::hier`.
+        return crate::hier::simulate_hier(cfg);
+    }
     let mut sim = Sim::new(cfg);
     sim.run();
     Ok(sim.into_result())
@@ -315,6 +324,9 @@ impl<'a> Sim<'a> {
                 }
                 self.own = OwnState::Finished;
             }
+            ExecutionModel::HierDca => {
+                unreachable!("HierDca is dispatched to hier::simulate_hier")
+            }
         }
         while let Some((t, ev)) = self.heap.pop() {
             debug_assert!(t >= self.now, "time went backwards");
@@ -378,6 +390,7 @@ impl<'a> Sim<'a> {
             ExecutionModel::Cca => SvcTask::Request { w, report },
             ExecutionModel::Dca => SvcTask::GetStep { w, report },
             ExecutionModel::DcaRma => unreachable!("RMA workers use the NIC path"),
+            ExecutionModel::HierDca => unreachable!("HierDca runs in hier::simulate_hier"),
         };
         self.messages += 1;
         let at = self.now + extra_ns + self.lat_ns(w, 0);
@@ -406,7 +419,7 @@ impl<'a> Sim<'a> {
                         // Self-service: calculation (with injected delay) on
                         // its own CPU, then assignment.
                         let d = ns((self.cfg.cluster.service_time
-                            + self.cfg.delay.calculation
+                            + self.cfg.delay.calculation_at(0, self.now)
                             + self.cfg.cluster.calc_time
                             + self.cfg.delay.assignment)
                             / self.speed(0));
@@ -430,7 +443,7 @@ impl<'a> Sim<'a> {
                         }
                         ns(self.cfg.cluster.service_time / self.speed(0))
                     }
-                    ExecutionModel::DcaRma => unreachable!(),
+                    ExecutionModel::DcaRma | ExecutionModel::HierDca => unreachable!(),
                 };
                 self.finish_own_action(dur);
             }
@@ -438,7 +451,7 @@ impl<'a> Sim<'a> {
                 // DCA rank-0 local calculation — occupies its CPU, delaying
                 // any queued service work behind it (non-dedicated cost).
                 let dur = ns(
-                    (self.cfg.delay.calculation + self.cfg.cluster.calc_time)
+                    (self.cfg.delay.calculation_at(0, self.now) + self.cfg.cluster.calc_time)
                         / self.speed(0),
                 );
                 let size = self.worker_calc(0, ticket, self.af_info());
@@ -502,7 +515,7 @@ impl<'a> Sim<'a> {
                 // CCA: the chunk CALCULATION happens here, inside the serial
                 // service loop — the injected delay serializes (§6).
                 let dur = ns(c.service_time
-                    + self.cfg.delay.calculation
+                    + self.cfg.delay.calculation_at(0, self.now)
                     + c.calc_time
                     + self.cfg.delay.assignment);
                 let k = self.cca_calc(w, report);
@@ -588,7 +601,7 @@ impl<'a> Sim<'a> {
                 // the injected delay is paid here, in parallel (§4); a slow
                 // PE calculates slowly too.
                 let dur = ns(
-                    (self.cfg.delay.calculation + self.cfg.cluster.calc_time)
+                    (self.cfg.delay.calculation_at(w, self.now) + self.cfg.cluster.calc_time)
                         / self.speed(w),
                 );
                 // Stash the AF info via immediate recompute at CalcDone time:
@@ -616,6 +629,7 @@ impl<'a> Sim<'a> {
         match self.cfg.model {
             ExecutionModel::Cca | ExecutionModel::Dca => self.worker_send_request(w, 0),
             ExecutionModel::DcaRma => self.send_nic(w, RmaOp::Reserve, 0),
+            ExecutionModel::HierDca => unreachable!("HierDca runs in hier::simulate_hier"),
         }
     }
 
@@ -633,7 +647,8 @@ impl<'a> Sim<'a> {
                     // Result travels back; worker then calculates locally
                     // (delay in parallel) and issues the claim.
                     let back = self.now + dur + self.lat_ns(0, w);
-                    let calc = ns(self.cfg.delay.calculation + self.cfg.cluster.calc_time);
+                    let calc =
+                        ns(self.cfg.delay.calculation_at(w, back) + self.cfg.cluster.calc_time);
                     let size = self.worker_calc(w, ticket, None);
                     let claim_sent = back + calc + ns(self.cfg.delay.assignment);
                     let arrive = claim_sent + self.lat_ns(w, 0);
@@ -707,7 +722,7 @@ mod tests {
 
     #[test]
     fn all_models_cover_loop() {
-        for model in [ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma] {
+        for model in ExecutionModel::ALL {
             for kind in TechniqueKind::ALL {
                 if kind == TechniqueKind::Af && model == ExecutionModel::DcaRma {
                     continue;
@@ -778,6 +793,18 @@ mod tests {
         // All 2000 iterations landed on ranks 1..3 — verified via coverage +
         // the rank-0 finish being pure service time.
         assert!(r.rank0_service_busy > 0.0);
+    }
+
+    #[test]
+    fn exponential_delay_covers_and_replays() {
+        for model in [ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::HierDca] {
+            let mut cfg = base(2_000, 4, model, TechniqueKind::Gss);
+            cfg.delay = InjectedDelay::exponential_calculation(50e-6, 0xE4_0002);
+            let a = simulate(&cfg).unwrap_or_else(|e| panic!("{model:?}: {e}"));
+            verify_coverage(&sorted(&a), 2_000).unwrap_or_else(|e| panic!("{model:?}: {e}"));
+            let b = simulate(&cfg).unwrap();
+            assert_eq!(a.t_par(), b.t_par(), "{model:?}: replay must be identical");
+        }
     }
 
     #[test]

@@ -1,0 +1,997 @@
+//! Two-level hierarchical self-scheduling — the `HierDca` execution model.
+//!
+//! Implements the §7 future-work direction the authors themselves pursued in
+//! *Hierarchical Dynamic Loop Self-Scheduling on Distributed-Memory Systems
+//! Using an MPI+MPI Approach* (arXiv 1903.09510): instead of every rank
+//! self-scheduling against one global coordinator over the inter-node
+//! fabric, the scheduling work is split across **two levels**:
+//!
+//! * **Outer level (inter-node)** — a *global coordinator* (rank 0) owns the
+//!   loop's [`WorkQueue`] and hands out **node-chunks** through the DCA
+//!   two-phase protocol (`OuterGet → OuterStep`, `OuterCommit →
+//!   OuterChunk`). Node-chunk sizes are computed **on the node masters**
+//!   with the experiment's outer technique bound to `P = nodes` — the
+//!   distributed-chunk-calculation idea applied at node granularity.
+//! * **Inner level (intra-node)** — each *node master* (the first rank of
+//!   its node, [`Topology::master_of_node`]) re-subdivides its current
+//!   node-chunk among its local ranks with the (possibly different) *inner*
+//!   technique bound to `P = ranks_per_node`, again via two-phase DCA
+//!   (`InnerGet → Step`, `InnerCommit → Chunk`) — but over the **intra-node
+//!   latency class**, which is 4× cheaper on miniHPC.
+//!
+//! The mapping to arXiv 1903.09510 is direct: their MPI+MPI global/local
+//! work-queues become the outer [`WorkQueue`] at the coordinator and one
+//! local [`WorkQueue`] per master; their shared-memory window accesses
+//! become intra-node messages; their two-level DLS technique pair is
+//! [`crate::config::HierParams`] (outer = the experiment's technique, inner
+//! configurable). The payoff they report — and that
+//! `benches/hier_sweep.rs` reproduces on the calibrated DES — is that the
+//! central coordinator handles `O(node-chunks)` messages instead of
+//! `O(chunks)`, so perturbations that serialize on the flat coordinator
+//! (the 100 µs-class slowdown scenarios) are absorbed by the per-node
+//! masters in parallel, while the no-slowdown case stays within noise.
+//!
+//! Like the flat models, rank 0 plus every node master is **non-dedicated**
+//! when `break_after > 0`: masters interleave their own iteration execution
+//! (in `breakAfter` segments) with servicing their local ranks, and rank 0
+//! additionally services the outer protocol on the same serial CPU.
+//!
+//! AF (no closed form, §4) is supported at *both* levels through the same
+//! extra synchronization the flat DCA coordinator uses: performance reports
+//! piggyback on requests, the phase-1 reply carries the `(D, E)` aggregates,
+//! and the requester evaluates Eq. 11 locally. At the outer level the
+//! "PE statistics" are per-node throughput (iterations per wall-second of a
+//! node-chunk); at the inner level they are the usual per-rank chunk stats.
+
+use std::collections::VecDeque;
+
+use crate::config::{ClusterConfig, ExecutionModel};
+use crate::coordinator::protocol::{AfInfo, PerfReport};
+use crate::des::heap::{ns, secs, EventHeap};
+use crate::des::{DesConfig, DesResult};
+use crate::metrics::LoopStats;
+use crate::sched::{Assignment, StepTicket, WorkQueue};
+use crate::substrate::topology::Topology;
+use crate::techniques::af::{af_chunk, AfCalculator, AfGlobals, PeStats};
+use crate::techniques::{LoopParams, Technique, TechniqueKind};
+
+/// Can `HierDca` run on this cluster geometry? With dedicated masters
+/// (`break_after == 0`) every node needs at least one non-master rank to
+/// execute iterations. Single source of truth for [`simulate_hier`]'s
+/// validation and the selector's candidate filtering.
+pub fn hier_feasible(cluster: &ClusterConfig) -> bool {
+    cluster.break_after > 0 || cluster.ranks_per_node > 1
+}
+
+/// Simulate one hierarchical (`HierDca`) run. Deterministic: same config ⇒
+/// identical result. Called through [`crate::des::simulate`], which performs
+/// the model-independent validation.
+pub fn simulate_hier(cfg: &DesConfig) -> anyhow::Result<DesResult> {
+    anyhow::ensure!(
+        cfg.model == ExecutionModel::HierDca,
+        "simulate_hier requires ExecutionModel::HierDca, got {}",
+        cfg.model
+    );
+    anyhow::ensure!(
+        cfg.params.p == cfg.cluster.total_ranks(),
+        "LoopParams.p ({}) must equal cluster ranks ({})",
+        cfg.params.p,
+        cfg.cluster.total_ranks()
+    );
+    anyhow::ensure!(
+        hier_feasible(&cfg.cluster),
+        "dedicated node masters (break_after = 0) need ranks_per_node ≥ 2, \
+         otherwise no rank executes iterations"
+    );
+    let mut sim = HierSim::new(cfg);
+    sim.run();
+    Ok(sim.into_result())
+}
+
+// ---------------------------------------------------------------------------
+// events and tasks
+
+/// A task queued at a node master's serial CPU. Outer *requests* are only
+/// ever routed to master 0, whose CPU doubles as the global coordinator —
+/// coordination and node-0 mastering contend for the same core, exactly as
+/// on the real machine.
+#[derive(Debug)]
+enum Task {
+    /// A local rank asks for its next scheduling step (inner phase 1).
+    InnerGet { w: u32, report: Option<PerfReport> },
+    /// A local rank commits its locally calculated size (inner phase 2);
+    /// `seq` names the node-chunk the step was reserved from.
+    InnerCommit { w: u32, step: u64, size: u64, seq: u64 },
+    /// A node master asks the global coordinator for an outer step.
+    OuterGet { from: u32, report: Option<PerfReport> },
+    /// A node master commits its node-chunk size to the coordinator.
+    OuterCommit { from: u32, step: u64, size: u64 },
+    /// Coordinator reply: reserved outer step (+ AF aggregates). Handling it
+    /// *is* the outer chunk calculation, on the master's CPU.
+    OuterStep { ticket: StepTicket, af: Option<AfInfo> },
+    /// Coordinator reply: the committed node-chunk.
+    OuterChunk(Assignment),
+    /// Coordinator reply: the loop is exhausted.
+    OuterDone,
+}
+
+/// Inner-protocol reply delivered to a worker rank.
+#[derive(Debug, Clone, Copy)]
+enum WReply {
+    /// Reserved local step: the worker calculates its own sub-chunk size.
+    Step { step: u64, remaining: u64, seq: u64, af: Option<AfInfo> },
+    /// Committed sub-chunk (absolute iteration range).
+    Chunk(Assignment),
+    /// Terminate.
+    Done,
+}
+
+#[derive(Debug)]
+enum Ev {
+    /// A message arrives at node master `m`'s service queue.
+    Arrive { m: u32, task: Task },
+    /// Master `m`'s CPU finished its current action.
+    ServerFree { m: u32 },
+    /// An inner reply reaches worker `w`.
+    WorkerReply { w: u32, reply: WReply },
+    /// Worker `w` finished its local sub-chunk calculation.
+    CalcDone { w: u32, step: u64, size: u64, seq: u64 },
+    /// Worker `w` finished executing its sub-chunk.
+    ExecDone { w: u32 },
+}
+
+// ---------------------------------------------------------------------------
+// state
+
+/// The node master's current node-chunk, re-subdivided locally.
+#[derive(Debug)]
+struct Local {
+    /// Local queue over `[0, len)`; granted ranges are offset to absolute.
+    q: WorkQueue,
+    offset: u64,
+    /// Inner technique bound to this node-chunk's size (`None` for AF).
+    tech: Option<Technique>,
+    /// Node-chunk sequence number — guards workers' closed-form lookups
+    /// against calculating for an already-replaced chunk.
+    seq: u64,
+}
+
+/// The master's own worker personality (mirrors the flat DES's `OwnState`).
+#[derive(Debug)]
+enum Own {
+    NeedWork,
+    Calc { step: u64, remaining: u64, seq: u64 },
+    Commit { step: u64, size: u64, seq: u64 },
+    Exec { cursor: u64, end: u64, first: u64 },
+    /// Waiting for the next node-chunk (or global Done).
+    Parked,
+    Finished,
+}
+
+/// Per-node master: serial CPU, local queue, parked requests, outer-protocol
+/// state. Master 0 additionally hosts the global coordinator.
+#[derive(Debug)]
+struct Master {
+    rank: u32,
+    queue: VecDeque<Task>,
+    busy: bool,
+    /// Last instant this CPU is known busy until (ns).
+    cpu_busy_until_ns: u64,
+    /// Total busy time spent servicing protocol messages (ns).
+    service_ns: u64,
+    local: Option<Local>,
+    chunk_seq: u64,
+    /// Local ranks whose requests arrived while no local work existed.
+    parked: VecDeque<u32>,
+    own_parked: bool,
+    fetching: bool,
+    global_done: bool,
+    own: Own,
+    /// Inner-AF calculator over this node's local ranks (index `rank % rpn`).
+    inner_af: Option<AfCalculator>,
+    /// Outer-AF: this node's chunk-throughput statistics.
+    node_stats: PeStats,
+    outer_report: Option<PerfReport>,
+    installed_ns: u64,
+    installed_iters: u64,
+}
+
+/// Per-rank bookkeeping (all ranks, including masters' worker personality).
+#[derive(Debug, Default, Clone)]
+struct Wstate {
+    chunks: u64,
+    iters: u64,
+    finish_ns: u64,
+    wait_ns: u64,
+    req_sent_ns: u64,
+    stats: PeStats,
+    last_report: Option<PerfReport>,
+}
+
+struct HierSim<'a> {
+    cfg: &'a DesConfig,
+    topo: Topology,
+    heap: EventHeap<Ev>,
+    now: u64,
+    nodes: u32,
+    rpn: u32,
+    inner_kind: TechniqueKind,
+    // global coordinator state (CPU-wise hosted on master 0)
+    outer_q: WorkQueue,
+    outer_tech: Option<Technique>,
+    outer_af: Option<AfCalculator>,
+    masters: Vec<Master>,
+    workers: Vec<Wstate>,
+    messages: u64,
+    assignments: Vec<Assignment>,
+}
+
+impl<'a> HierSim<'a> {
+    fn new(cfg: &'a DesConfig) -> Self {
+        let topo = Topology::new(&cfg.cluster);
+        let nodes = topo.nodes();
+        let rpn = topo.ranks_per_node();
+        let outer_params = with_np(&cfg.params, cfg.params.n, nodes);
+        let inner_kind = cfg.hier.inner_or(cfg.technique);
+        let inner_proto = with_np(&cfg.params, cfg.params.n, rpn);
+        let outer_is_af = cfg.technique == TechniqueKind::Af;
+        let masters = (0..nodes)
+            .map(|m| Master {
+                rank: topo.master_of_node(m),
+                queue: VecDeque::new(),
+                busy: false,
+                cpu_busy_until_ns: 0,
+                service_ns: 0,
+                local: None,
+                chunk_seq: 0,
+                parked: VecDeque::new(),
+                own_parked: false,
+                fetching: false,
+                global_done: false,
+                own: Own::NeedWork,
+                inner_af: (inner_kind == TechniqueKind::Af)
+                    .then(|| AfCalculator::new(&inner_proto)),
+                node_stats: PeStats::default(),
+                outer_report: None,
+                installed_ns: 0,
+                installed_iters: 0,
+            })
+            .collect();
+        HierSim {
+            cfg,
+            topo,
+            heap: EventHeap::new(),
+            now: 0,
+            nodes,
+            rpn,
+            inner_kind,
+            outer_q: WorkQueue::from_params(&cfg.params),
+            outer_tech: (!outer_is_af).then(|| Technique::new(cfg.technique, &outer_params)),
+            outer_af: outer_is_af.then(|| AfCalculator::new(&outer_params)),
+            masters,
+            workers: vec![Wstate::default(); cfg.params.p as usize],
+            messages: 0,
+            assignments: Vec::new(),
+        }
+    }
+
+    // -- small helpers -----------------------------------------------------
+
+    fn speed(&self, rank: u32) -> f64 {
+        self.cfg.pe_speed.get(rank as usize).copied().unwrap_or(1.0).max(1e-9)
+    }
+
+    fn lat_ns(&self, a: u32, b: u32) -> u64 {
+        ns(self.topo.latency(a, b))
+    }
+
+    fn node_of(&self, rank: u32) -> u32 {
+        self.topo.node_of(rank)
+    }
+
+    fn min_chunk(&self) -> u64 {
+        self.cfg.params.min_chunk.max(1)
+    }
+
+    fn exec_ns(&self, rank: u32, a: Assignment) -> u64 {
+        ns(self.cfg.cost.range_cost(a.start, a.size) / self.speed(rank))
+    }
+
+    fn inner_af_info(&self, m: u32) -> Option<AfInfo> {
+        self.masters[m as usize]
+            .inner_af
+            .as_ref()
+            .and_then(|a| a.globals())
+            .map(|g| AfInfo { d: g.d, e: g.e })
+    }
+
+    fn outer_af_info(&self) -> Option<AfInfo> {
+        self.outer_af.as_ref().and_then(|a| a.globals()).map(|g| AfInfo { d: g.d, e: g.e })
+    }
+
+    fn grant(&mut self, rank: u32, a: Assignment) {
+        self.assignments.push(a);
+        let ws = &mut self.workers[rank as usize];
+        ws.chunks += 1;
+        ws.iters += a.size;
+    }
+
+    // -- bootstrap ---------------------------------------------------------
+
+    fn run(&mut self) {
+        // Every non-master rank opens with an InnerGet to its node master;
+        // masters kick their own CPU, which parks its worker personality and
+        // triggers the first outer fetch.
+        for w in 0..self.cfg.params.p {
+            let m = self.node_of(w);
+            if w == self.masters[m as usize].rank {
+                continue;
+            }
+            self.workers[w as usize].req_sent_ns = 0;
+            self.send_inner(w, Task::InnerGet { w, report: None }, 0);
+        }
+        for m in 0..self.nodes {
+            if self.cfg.cluster.break_after == 0 {
+                self.masters[m as usize].own = Own::Finished;
+            }
+            self.masters[m as usize].busy = true;
+            self.heap.push(0, Ev::ServerFree { m });
+        }
+        while let Some((t, ev)) = self.heap.pop() {
+            debug_assert!(t >= self.now, "time went backwards");
+            self.now = t;
+            self.dispatch(ev);
+        }
+    }
+
+    fn dispatch(&mut self, ev: Ev) {
+        match ev {
+            Ev::Arrive { m, task } => {
+                let master = &mut self.masters[m as usize];
+                master.queue.push_back(task);
+                if !master.busy {
+                    master.busy = true;
+                    self.heap.push(self.now, Ev::ServerFree { m });
+                }
+            }
+            Ev::ServerFree { m } => self.server_next_action(m),
+            Ev::WorkerReply { w, reply } => self.worker_on_reply(w, reply),
+            Ev::CalcDone { w, step, size, seq } => {
+                self.workers[w as usize].req_sent_ns = self.now;
+                self.send_inner(w, Task::InnerCommit { w, step, size, seq }, 0);
+            }
+            Ev::ExecDone { w } => {
+                self.workers[w as usize].req_sent_ns = self.now;
+                let report = self.workers[w as usize].last_report;
+                self.send_inner(w, Task::InnerGet { w, report }, 0);
+            }
+        }
+    }
+
+    // -- messaging ---------------------------------------------------------
+
+    /// Send a worker-originated message to its node master.
+    fn send_inner(&mut self, w: u32, task: Task, extra_ns: u64) {
+        let m = self.node_of(w);
+        let mrank = self.masters[m as usize].rank;
+        self.messages += 1;
+        let at = self.now + extra_ns + self.lat_ns(w, mrank);
+        self.heap.push(at, Ev::Arrive { m, task });
+    }
+
+    /// Send a coordinator reply to node master `to`.
+    fn send_to_master(&mut self, to: u32, task: Task, dur: u64) {
+        let coord = self.masters[0].rank;
+        let mrank = self.masters[to as usize].rank;
+        self.messages += 1;
+        let at = self.now + dur + self.lat_ns(coord, mrank);
+        self.heap.push(at, Ev::Arrive { m: to, task });
+    }
+
+    /// Send an inner reply from master `m` to local rank `w`.
+    fn send_worker(&mut self, m: u32, w: u32, reply: WReply, dur: u64) {
+        let mrank = self.masters[m as usize].rank;
+        self.messages += 1;
+        let at = self.now + dur + self.lat_ns(mrank, w);
+        self.heap.push(at, Ev::WorkerReply { w, reply });
+    }
+
+    // -- master CPU --------------------------------------------------------
+
+    fn server_next_action(&mut self, m: u32) {
+        if let Some(task) = self.masters[m as usize].queue.pop_front() {
+            let dur = self.service(m, task);
+            let master = &mut self.masters[m as usize];
+            master.service_ns += dur;
+            master.busy = true;
+            master.cpu_busy_until_ns = self.now + dur;
+            self.heap.push(self.now + dur, Ev::ServerFree { m });
+            return;
+        }
+        self.own_next_action(m);
+    }
+
+    /// Service one queued task on master `m`'s CPU; returns the (speed-
+    /// scaled) CPU occupancy in ns and schedules replies/follow-ups.
+    fn service(&mut self, m: u32, task: Task) -> u64 {
+        let c = &self.cfg.cluster;
+        let sp = self.speed(self.masters[m as usize].rank);
+        match task {
+            Task::InnerGet { w, report } => {
+                let dur = ns(c.service_time / sp);
+                self.record_inner_report(m, w, report);
+                self.inner_get(m, w, dur);
+                dur
+            }
+            Task::InnerCommit { w, step, size, seq } => {
+                let dur = ns((c.service_time + self.cfg.delay.assignment) / sp);
+                self.inner_commit(m, w, step, size, seq, dur);
+                dur
+            }
+            Task::OuterGet { from, report } => {
+                debug_assert_eq!(m, 0, "outer requests are served by the coordinator");
+                let dur = ns(c.service_time / sp);
+                if let (Some(af), Some(r)) = (self.outer_af.as_mut(), report) {
+                    af.record(from as usize, r.iters, r.elapsed);
+                }
+                let reply = match self.outer_q.begin_step() {
+                    Some(ticket) => Task::OuterStep { ticket, af: self.outer_af_info() },
+                    None => Task::OuterDone,
+                };
+                self.send_to_master(from, reply, dur);
+                dur
+            }
+            Task::OuterCommit { from, step, size } => {
+                debug_assert_eq!(m, 0, "outer commits are served by the coordinator");
+                let dur = ns((c.service_time + self.cfg.delay.assignment) / sp);
+                // Outer AF: re-apply the ⌈R/nodes⌉ cap against the fresh
+                // remaining count (the ticket snapshot is stale once other
+                // masters commit — same rule as the flat DCA coordinator).
+                let size = if self.cfg.technique == TechniqueKind::Af {
+                    size.min(self.outer_q.remaining().div_ceil(self.nodes as u64).max(1))
+                } else {
+                    size
+                };
+                let ticket = StepTicket { step, remaining: self.outer_q.remaining() };
+                let reply = match self.outer_q.commit(ticket, size) {
+                    Some(a) => Task::OuterChunk(a),
+                    None => Task::OuterDone,
+                };
+                self.send_to_master(from, reply, dur);
+                dur
+            }
+            Task::OuterStep { ticket, af } => {
+                // The outer chunk CALCULATION runs here, on the master's own
+                // CPU — distributed across nodes, paying the injected delay
+                // in parallel (the DCA idea, one level up).
+                let mrank = self.masters[m as usize].rank;
+                let dur =
+                    ns((self.cfg.delay.calculation_at(mrank, self.now) + c.calc_time) / sp);
+                let size = self.outer_calc(m, ticket, af);
+                let coord = self.masters[0].rank;
+                self.messages += 1;
+                let at = self.now + dur + self.lat_ns(mrank, coord);
+                self.heap.push(
+                    at,
+                    Ev::Arrive {
+                        m: 0,
+                        task: Task::OuterCommit { from: m, step: ticket.step, size },
+                    },
+                );
+                dur
+            }
+            Task::OuterChunk(a) => {
+                let dur = ns(c.service_time / sp);
+                self.install_chunk(m, a);
+                dur
+            }
+            Task::OuterDone => {
+                let dur = ns(c.service_time / sp);
+                let master = &mut self.masters[m as usize];
+                master.global_done = true;
+                master.fetching = false;
+                self.requeue_parked(m);
+                dur
+            }
+        }
+    }
+
+    fn record_inner_report(&mut self, m: u32, w: u32, report: Option<PerfReport>) {
+        if let Some(r) = report {
+            let mrank = self.masters[m as usize].rank;
+            let idx = (w - mrank) as usize;
+            if let Some(af) = self.masters[m as usize].inner_af.as_mut() {
+                af.record(idx, r.iters, r.elapsed);
+            }
+        }
+    }
+
+    /// Reserve the next local step from `m`'s current node-chunk, if it has
+    /// one. Shared by the worker service path and the master's own
+    /// personality.
+    fn local_reserve(&mut self, m: u32) -> Option<(u64, u64, u64)> {
+        let l = self.masters[m as usize].local.as_mut()?;
+        if l.q.is_done() {
+            return None;
+        }
+        let t = l.q.begin_step().expect("non-done local queue yields a step");
+        Some((t.step, t.remaining, l.seq))
+    }
+
+    /// Commit `size` for a step reserved from node-chunk `seq`. Returns the
+    /// absolute assignment, or `None` when the chunk is exhausted **or was
+    /// replaced in flight** (stale `seq`) — the requester must re-request.
+    /// Applies the inner-AF ⌈R/rpn⌉ re-cap against the fresh remaining count.
+    fn local_commit(&mut self, m: u32, step: u64, size: u64, seq: u64) -> Option<Assignment> {
+        let rpn = self.rpn as u64;
+        let af_inner = self.inner_kind == TechniqueKind::Af;
+        let l = self.masters[m as usize].local.as_mut()?;
+        if l.q.is_done() || l.seq != seq {
+            return None;
+        }
+        let size = if af_inner {
+            size.min(l.q.remaining().div_ceil(rpn).max(1))
+        } else {
+            size
+        };
+        let ticket = StepTicket { step, remaining: l.q.remaining() };
+        let a = l.q.commit(ticket, size).expect("non-done local queue commits");
+        Some(Assignment { step: a.step, start: a.start + l.offset, size: a.size })
+    }
+
+    /// Does `m`'s current node-chunk still have unassigned iterations?
+    fn local_has_work(&self, m: u32) -> bool {
+        self.masters[m as usize].local.as_ref().is_some_and(|l| !l.q.is_done())
+    }
+
+    fn inner_get(&mut self, m: u32, w: u32, dur: u64) {
+        let af = self.inner_af_info(m);
+        if let Some((step, remaining, seq)) = self.local_reserve(m) {
+            self.send_worker(m, w, WReply::Step { step, remaining, seq, af }, dur);
+        } else if self.masters[m as usize].global_done {
+            self.send_worker(m, w, WReply::Done, dur);
+        } else {
+            self.masters[m as usize].parked.push_back(w);
+            self.maybe_fetch(m, dur);
+        }
+    }
+
+    fn inner_commit(&mut self, m: u32, w: u32, step: u64, size: u64, seq: u64, dur: u64) {
+        if let Some(abs) = self.local_commit(m, step, size, seq) {
+            self.grant(w, abs);
+            self.send_worker(m, w, WReply::Chunk(abs), dur);
+        } else if self.local_has_work(m) {
+            // Stale seq: the node-chunk was replaced while this commit was
+            // in flight. Re-serve the request as a fresh phase-1 Get so the
+            // worker calculates against the *current* chunk instead of
+            // silently committing a size computed for the old one.
+            self.inner_get(m, w, dur);
+        } else if self.masters[m as usize].global_done {
+            self.send_worker(m, w, WReply::Done, dur);
+        } else {
+            // The local queue filled between this worker's Step and its
+            // Commit: park it — it gets a fresh Step from the next
+            // node-chunk (its stale size is discarded).
+            self.masters[m as usize].parked.push_back(w);
+            self.maybe_fetch(m, dur);
+        }
+    }
+
+    /// Trigger the outer fetch for master `m` unless one is already in
+    /// flight. Also finalizes the consumed node-chunk's throughput report
+    /// (the outer-AF performance feedback).
+    fn maybe_fetch(&mut self, m: u32, dur: u64) {
+        let mi = m as usize;
+        if self.masters[mi].fetching || self.masters[mi].global_done {
+            return;
+        }
+        self.masters[mi].fetching = true;
+        if self.masters[mi].installed_iters > 0 {
+            let iters = self.masters[mi].installed_iters;
+            let elapsed =
+                secs((self.now + dur).saturating_sub(self.masters[mi].installed_ns)).max(1e-12);
+            self.masters[mi].node_stats.record(iters, elapsed);
+            self.masters[mi].outer_report = Some(PerfReport { iters, elapsed });
+            self.masters[mi].installed_iters = 0;
+        }
+        let report = self.masters[mi].outer_report.take();
+        let mrank = self.masters[mi].rank;
+        let coord = self.masters[0].rank;
+        self.messages += 1;
+        let at = self.now + dur + self.lat_ns(mrank, coord);
+        self.heap.push(at, Ev::Arrive { m: 0, task: Task::OuterGet { from: m, report } });
+    }
+
+    fn install_chunk(&mut self, m: u32, a: Assignment) {
+        let tech = self
+            .inner_kind
+            .has_closed_form()
+            .then(|| Technique::new(self.inner_kind, &with_np(&self.cfg.params, a.size, self.rpn)));
+        let mi = m as usize;
+        let seq = self.masters[mi].chunk_seq + 1;
+        self.masters[mi].chunk_seq = seq;
+        self.masters[mi].local = Some(Local {
+            q: WorkQueue::new(a.size, self.cfg.params.min_chunk),
+            offset: a.start,
+            tech,
+            seq,
+        });
+        self.masters[mi].fetching = false;
+        self.masters[mi].installed_ns = self.now;
+        self.masters[mi].installed_iters = a.size;
+        self.requeue_parked(m);
+    }
+
+    /// Re-enqueue parked local requests (each pays its service cost again)
+    /// and wake the master's own personality if it was parked.
+    fn requeue_parked(&mut self, m: u32) {
+        let mi = m as usize;
+        while let Some(w) = self.masters[mi].parked.pop_front() {
+            self.masters[mi].queue.push_back(Task::InnerGet { w, report: None });
+        }
+        if self.masters[mi].own_parked {
+            self.masters[mi].own_parked = false;
+            self.masters[mi].own = Own::NeedWork;
+        }
+    }
+
+    /// Outer chunk size, computed on master `m` (closed form of the outer
+    /// technique at the reserved step, or AF's Eq. 11 over node throughput).
+    fn outer_calc(&self, m: u32, ticket: StepTicket, af: Option<AfInfo>) -> u64 {
+        if self.cfg.technique == TechniqueKind::Af {
+            let st = &self.masters[m as usize].node_stats;
+            match (st.measured().then(|| st.mu()).flatten(), af) {
+                (Some(mu), Some(AfInfo { d, e })) => {
+                    af_chunk(AfGlobals { d, e }, mu, ticket.remaining, self.nodes)
+                }
+                _ => self.min_chunk(),
+            }
+        } else {
+            self.outer_tech
+                .as_ref()
+                .expect("non-AF outer technique has a closed form")
+                .closed_chunk(ticket.step)
+        }
+    }
+
+    // -- worker ranks ------------------------------------------------------
+
+    fn worker_on_reply(&mut self, w: u32, reply: WReply) {
+        let sent = self.workers[w as usize].req_sent_ns;
+        self.workers[w as usize].wait_ns += self.now.saturating_sub(sent);
+        match reply {
+            WReply::Step { step, remaining, seq, af } => {
+                // Distributed inner calculation on the worker's own clock —
+                // the injected delay is paid here, in parallel.
+                let dur = ns(
+                    (self.cfg.delay.calculation_at(w, self.now) + self.cfg.cluster.calc_time)
+                        / self.speed(w),
+                );
+                let size = self.worker_calc(w, step, remaining, seq, af);
+                self.heap.push(self.now + dur, Ev::CalcDone { w, step, size, seq });
+            }
+            WReply::Chunk(a) => {
+                let dur = self.exec_ns(w, a);
+                let elapsed = secs(dur);
+                let ws = &mut self.workers[w as usize];
+                ws.stats.record(a.size, elapsed);
+                ws.last_report = Some(PerfReport { iters: a.size, elapsed });
+                self.heap.push(self.now + dur, Ev::ExecDone { w });
+            }
+            WReply::Done => {
+                self.workers[w as usize].finish_ns = self.now;
+            }
+        }
+    }
+
+    /// Inner sub-chunk size, calculated worker-side (closed form of the
+    /// inner technique bound to the current node-chunk, or AF's Eq. 11).
+    fn worker_calc(&self, w: u32, step: u64, remaining: u64, seq: u64, af: Option<AfInfo>) -> u64 {
+        if self.inner_kind == TechniqueKind::Af {
+            let ws = &self.workers[w as usize];
+            match (ws.stats.measured().then(|| ws.stats.mu()).flatten(), af) {
+                (Some(mu), Some(AfInfo { d, e })) => {
+                    af_chunk(AfGlobals { d, e }, mu, remaining, self.rpn)
+                }
+                _ => self.min_chunk(),
+            }
+        } else {
+            let m = self.node_of(w);
+            match self.masters[m as usize].local.as_ref() {
+                // Normal case: the node-chunk this step belongs to is still
+                // installed; evaluate its bound closed form.
+                Some(l) if l.seq == seq => {
+                    l.tech.as_ref().expect("closed-form inner technique").closed_chunk(step)
+                }
+                // The chunk was replaced while this Step was in flight; the
+                // commit will park and re-request, so the size is moot.
+                _ => self.min_chunk(),
+            }
+        }
+    }
+
+    // -- master's own worker personality -----------------------------------
+
+    fn own_next_action(&mut self, m: u32) {
+        let mi = m as usize;
+        let mrank = self.masters[mi].rank;
+        let sp = self.speed(mrank);
+        let c = &self.cfg.cluster;
+        let cluster_break = c.break_after.max(1) as u64;
+        match std::mem::replace(&mut self.masters[mi].own, Own::Finished) {
+            Own::NeedWork => {
+                let dur = ns(c.service_time / sp);
+                if let Some((step, remaining, seq)) = self.local_reserve(m) {
+                    self.masters[mi].own = Own::Calc { step, remaining, seq };
+                } else if self.masters[mi].global_done {
+                    self.finish_own(m);
+                } else {
+                    self.masters[mi].own = Own::Parked;
+                    self.masters[mi].own_parked = true;
+                    self.maybe_fetch(m, dur);
+                }
+                self.finish_server_action(m, dur);
+            }
+            Own::Calc { step, remaining, seq } => {
+                let dur =
+                    ns((self.cfg.delay.calculation_at(mrank, self.now) + c.calc_time) / sp);
+                let af = self.inner_af_info(m);
+                let size = self.worker_calc(mrank, step, remaining, seq, af);
+                self.masters[mi].own = Own::Commit { step, size, seq };
+                self.finish_server_action(m, dur);
+            }
+            Own::Commit { step, size, seq } => {
+                let dur = ns((c.service_time + self.cfg.delay.assignment) / sp);
+                if let Some(abs) = self.local_commit(m, step, size, seq) {
+                    self.grant(mrank, abs);
+                    self.masters[mi].own =
+                        Own::Exec { cursor: abs.start, end: abs.end(), first: abs.start };
+                } else if self.local_has_work(m) {
+                    // Stale seq: a new node-chunk arrived between this
+                    // personality's Calc and Commit — re-reserve from it.
+                    self.masters[mi].own = Own::NeedWork;
+                } else if self.masters[mi].global_done {
+                    self.finish_own(m);
+                } else {
+                    self.masters[mi].own = Own::Parked;
+                    self.masters[mi].own_parked = true;
+                    self.maybe_fetch(m, dur);
+                }
+                self.finish_server_action(m, dur);
+            }
+            Own::Exec { cursor, end, first } => {
+                let seg = cluster_break.min(end - cursor);
+                let dur = ns(self.cfg.cost.range_cost(cursor, seg) / sp);
+                let new_cursor = cursor + seg;
+                if new_cursor < end {
+                    self.masters[mi].own = Own::Exec { cursor: new_cursor, end, first };
+                } else {
+                    let iters = end - first;
+                    let elapsed = self.cfg.cost.range_cost(first, iters) / sp;
+                    self.workers[mrank as usize].stats.record(iters, elapsed);
+                    if let Some(af) = self.masters[mi].inner_af.as_mut() {
+                        af.record(0, iters, elapsed);
+                    }
+                    self.masters[mi].own = Own::NeedWork;
+                }
+                self.finish_server_action(m, dur);
+            }
+            Own::Parked => {
+                self.masters[mi].own = Own::Parked;
+                self.masters[mi].busy = false;
+            }
+            Own::Finished => {
+                self.masters[mi].own = Own::Finished;
+                self.masters[mi].busy = false;
+            }
+        }
+    }
+
+    fn finish_own(&mut self, m: u32) {
+        let mi = m as usize;
+        self.masters[mi].own = Own::Finished;
+        let mrank = self.masters[mi].rank as usize;
+        self.workers[mrank].finish_ns = self.workers[mrank].finish_ns.max(self.now);
+    }
+
+    fn finish_server_action(&mut self, m: u32, dur: u64) {
+        let master = &mut self.masters[m as usize];
+        master.busy = true;
+        master.cpu_busy_until_ns = self.now + dur;
+        self.heap.push(self.now + dur, Ev::ServerFree { m });
+    }
+
+    // -- results -----------------------------------------------------------
+
+    fn into_result(self) -> DesResult {
+        let mut finish: Vec<f64> = self.workers.iter().map(|w| secs(w.finish_ns)).collect();
+        for master in &self.masters {
+            let r = master.rank as usize;
+            finish[r] = finish[r].max(secs(master.cpu_busy_until_ns));
+        }
+        let chunks = self.assignments.len() as u64;
+        let wait: f64 = self.workers.iter().map(|w| secs(w.wait_ns)).sum();
+        DesResult {
+            stats: LoopStats::from_finish_times(&finish, chunks, wait, self.messages),
+            finish,
+            rank0_service_busy: secs(self.masters[0].service_ns),
+            assignments: self.assignments,
+            rma_ops: 0,
+        }
+    }
+}
+
+/// `params` with `n`/`p` overridden (keeps the technique parameterization —
+/// FSC/TAP constants, batch counts, seeds — from the experiment config).
+fn with_np(params: &LoopParams, n: u64, p: u32) -> LoopParams {
+    let mut out = params.clone();
+    out.n = n.max(1);
+    out.p = p.max(1);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, HierParams};
+    use crate::des::simulate;
+    use crate::sched::verify_coverage;
+    use crate::substrate::delay::InjectedDelay;
+    use crate::workload::IterationCost;
+
+    fn cluster(nodes: u32, rpn: u32) -> ClusterConfig {
+        ClusterConfig { nodes, ranks_per_node: rpn, ..ClusterConfig::minihpc() }
+    }
+
+    fn cfg(n: u64, nodes: u32, rpn: u32, kind: TechniqueKind) -> DesConfig {
+        let cluster = cluster(nodes, rpn);
+        DesConfig::new(
+            LoopParams::new(n, cluster.total_ranks()),
+            kind,
+            ExecutionModel::HierDca,
+            cluster,
+            IterationCost::Constant(1e-5),
+        )
+    }
+
+    fn sorted(r: &DesResult) -> Vec<Assignment> {
+        let mut v = r.assignments.clone();
+        v.sort_by_key(|a| a.start);
+        v
+    }
+
+    #[test]
+    fn covers_loop_all_techniques_small() {
+        for kind in TechniqueKind::ALL {
+            let c = cfg(2_000, 2, 4, kind);
+            let r = simulate(&c).unwrap_or_else(|e| panic!("{kind}: {e}"));
+            verify_coverage(&sorted(&r), 2_000).unwrap_or_else(|e| panic!("{kind}: {e}"));
+            assert!(r.t_par() > 0.0, "{kind}");
+            assert_eq!(r.rma_ops, 0);
+            assert!(r.stats.messages > 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let c = cfg(10_000, 4, 4, TechniqueKind::Fac2);
+        let a = simulate(&c).unwrap();
+        let b = simulate(&c).unwrap();
+        assert_eq!(a.t_par(), b.t_par());
+        assert_eq!(a.stats.messages, b.stats.messages);
+        assert_eq!(a.assignments, b.assignments);
+    }
+
+    #[test]
+    fn mixed_inner_technique_covers() {
+        let mut c = cfg(5_000, 2, 8, TechniqueKind::Fac2);
+        c.hier = HierParams::with_inner(TechniqueKind::Ss);
+        let r = simulate(&c).unwrap();
+        verify_coverage(&sorted(&r), 5_000).unwrap();
+        // SS inside: sub-chunks of one iteration dominate the multiset.
+        let ones = r.assignments.iter().filter(|a| a.size == 1).count();
+        assert!(ones > r.assignments.len() / 2, "inner SS must produce unit chunks");
+    }
+
+    #[test]
+    fn dedicated_masters_serve_but_do_not_compute() {
+        let mut c = cfg(2_000, 2, 4, TechniqueKind::Gss);
+        c.cluster.break_after = 0;
+        let r = simulate(&c).unwrap();
+        verify_coverage(&sorted(&r), 2_000).unwrap();
+        assert!(r.rank0_service_busy > 0.0);
+    }
+
+    #[test]
+    fn dedicated_masters_with_single_rank_nodes_rejected() {
+        let mut c = cfg(100, 4, 1, TechniqueKind::Gss);
+        c.cluster.break_after = 0;
+        assert!(simulate(&c).is_err());
+    }
+
+    #[test]
+    fn single_rank_nodes_work_when_masters_compute() {
+        let c = cfg(1_000, 4, 1, TechniqueKind::Tss);
+        let r = simulate(&c).unwrap();
+        verify_coverage(&sorted(&r), 1_000).unwrap();
+    }
+
+    #[test]
+    fn single_node_degenerates_gracefully() {
+        let c = cfg(3_000, 1, 8, TechniqueKind::Gss);
+        let r = simulate(&c).unwrap();
+        verify_coverage(&sorted(&r), 3_000).unwrap();
+    }
+
+    #[test]
+    fn af_both_levels_learns_and_covers() {
+        let c = cfg(4_000, 2, 4, TechniqueKind::Af);
+        let r = simulate(&c).unwrap();
+        verify_coverage(&sorted(&r), 4_000).unwrap();
+        let max = r.assignments.iter().map(|a| a.size).max().unwrap();
+        assert!(max > 1, "AF should grow beyond bootstrap");
+    }
+
+    #[test]
+    fn more_ranks_than_iterations() {
+        let c = cfg(5, 2, 4, TechniqueKind::Gss);
+        let r = simulate(&c).unwrap();
+        verify_coverage(&sorted(&r), 5).unwrap();
+    }
+
+    #[test]
+    fn hier_beats_serialized_cca_under_heavy_delay() {
+        // The motivating regime: a large calculation delay serializes on the
+        // flat CCA master but is paid in parallel at both hierarchy levels.
+        let mk = |model| {
+            let cluster = cluster(4, 4);
+            let mut c = DesConfig::new(
+                LoopParams::new(20_000, cluster.total_ranks()),
+                TechniqueKind::Ss,
+                model,
+                cluster,
+                IterationCost::Constant(1e-5),
+            );
+            c.delay = InjectedDelay::calculation_only(100e-6);
+            if model == ExecutionModel::HierDca {
+                c.technique = TechniqueKind::Fac2; // batched outer level
+                c.hier = HierParams::with_inner(TechniqueKind::Ss);
+            }
+            simulate(&c).unwrap().t_par()
+        };
+        let cca = mk(ExecutionModel::Cca);
+        let hier = mk(ExecutionModel::HierDca);
+        assert!(hier < cca, "hier {hier} should beat serialized CCA {cca}");
+    }
+
+    /// The hierarchy's point, asserted directly: flat DCA makes rank 0
+    /// service *every* chunk's two round trips, while under hier the same
+    /// CPU services only its own node's share of the inner traffic plus a
+    /// handful of outer messages — its busy time must drop accordingly.
+    #[test]
+    fn hier_offloads_the_global_coordinator() {
+        let flat = {
+            let cl = cluster(4, 4);
+            let c = DesConfig::new(
+                LoopParams::new(10_000, cl.total_ranks()),
+                TechniqueKind::Ss,
+                ExecutionModel::Dca,
+                cl,
+                IterationCost::Constant(1e-5),
+            );
+            simulate(&c).unwrap()
+        };
+        let hier = {
+            let mut c = cfg(10_000, 4, 4, TechniqueKind::Fac2);
+            c.hier = HierParams::with_inner(TechniqueKind::Ss);
+            simulate(&c).unwrap()
+        };
+        verify_coverage(&sorted(&hier), 10_000).unwrap();
+        assert!(
+            hier.rank0_service_busy < flat.rank0_service_busy * 0.5,
+            "hier coordinator busy {}s must be well below flat DCA's {}s",
+            hier.rank0_service_busy,
+            flat.rank0_service_busy
+        );
+    }
+}

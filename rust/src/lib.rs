@@ -16,8 +16,11 @@
 //! (CCA) and closed (DCA) form, the CCA master–worker and DCA coordinator
 //! execution models over simulated MPI substrates, a deterministic
 //! discrete-event simulator that regenerates the paper's 256-rank experiments
-//! (Figs. 4–5), and a real multi-threaded engine that executes chunks through
-//! AOT-compiled JAX/Pallas artifacts via PJRT (layers 2/1, see `python/`).
+//! (Figs. 4–5), a two-level **hierarchical** model ([`hier`], the §7 /
+//! arXiv 1903.09510 follow-up: global coordinator → per-node masters →
+//! local ranks), and a real multi-threaded engine that executes chunks
+//! through AOT-compiled JAX/Pallas artifacts via PJRT (layers 2/1, see
+//! `python/`).
 //!
 //! ## Quick start
 //!
@@ -33,6 +36,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod des;
+pub mod hier;
 pub mod lb4mpi;
 pub mod metrics;
 pub mod report;
@@ -44,7 +48,7 @@ pub mod workload;
 
 /// Commonly used items, re-exported for examples and downstream users.
 pub mod prelude {
-    pub use crate::config::{DelaySite, ExecutionModel, ExperimentConfig};
+    pub use crate::config::{DelaySite, ExecutionModel, ExperimentConfig, HierParams};
     pub use crate::metrics::LoopStats;
     pub use crate::sched::{Assignment, WorkQueue};
     pub use crate::techniques::{LoopParams, Technique, TechniqueKind};

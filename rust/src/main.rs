@@ -9,7 +9,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use dca_dls::config::{ClusterConfig, DelaySite, ExecutionModel};
+use dca_dls::config::{ClusterConfig, DelaySite, ExecutionModel, HierParams};
 use dca_dls::coordinator::{self, EngineConfig};
 use dca_dls::des::{simulate, DesConfig};
 use dca_dls::report::figures::{
@@ -34,12 +34,13 @@ COMMANDS
   table2             chunk sequences, N=1000 P=4 (Table 2)   [--n --p]
   fig1               chunk-size series per technique (Fig 1) [--n --p]
   table3             loop characteristics (Table 3)          [--n --ct --cloud]
-  fig4               PSIA factorial experiment (Fig 4)       [--quick --reps --delay-site --json F]
-  fig5               Mandelbrot factorial experiment (Fig 5) [--quick --reps --delay-site --json F]
-  simulate           one DES cell  [--app --tech --model --delay-us --ranks --n]
+  fig4               PSIA factorial experiment (Fig 4)       [--quick --reps --delay-site --hier --inner T --json F]
+  fig5               Mandelbrot factorial experiment (Fig 5) [--quick --reps --delay-site --hier --inner T --json F]
+  simulate           one DES cell  [--app --tech --model --inner --delay-us --ranks --n]
+  hier               two-level HIER-DCA vs the flat models   [--app --tech --inner --nodes --rpn --n --delay-us --delay-site --json F]
   run                real threaded engine [--app --tech --model --workers --n --pjrt --delay-us]
   sweep-breakafter   A3 ablation: master breakAfter sweep [--app --tech]
-  select             SimAS-style CCA/DCA auto-selection (§7) [--app --tech --delay-us]
+  select             SimAS-style model auto-selection (§7, 4 models) [--app --tech --inner --delay-us]
   validate           PJRT artifacts vs native implementations
 ";
 
@@ -56,6 +57,7 @@ fn main() {
         "fig4" => cmd_figure(App::Psia, "Figure 4 (PSIA)", &flags),
         "fig5" => cmd_figure(App::Mandelbrot, "Figure 5 (Mandelbrot)", &flags),
         "simulate" => cmd_simulate(&flags),
+        "hier" => cmd_hier(&flags),
         "run" => cmd_run(&flags),
         "sweep-breakafter" => cmd_sweep_breakafter(&flags),
         "select" => cmd_select(&flags),
@@ -137,6 +139,12 @@ fn cmd_figure(app: App, title: &str, flags: &HashMap<String, String>) -> anyhow:
             _ => DelaySite::Calculation,
         };
     }
+    if flags.contains_key("hier") {
+        cfg.models.push(ExecutionModel::HierDca);
+        cfg.hier = hier_of(flags)?;
+    } else if flags.contains_key("inner") {
+        anyhow::bail!("--inner only applies to the hierarchical model; pass --hier as well");
+    }
     let rows = run_figure(&cfg)?;
     print!("{}", render_figure(title, &rows));
     if let Some(path) = flags.get("json") {
@@ -179,10 +187,26 @@ fn model_of(flags: &HashMap<String, String>) -> ExecutionModel {
         .unwrap_or(ExecutionModel::Dca)
 }
 
+/// `--inner T` → hierarchical inner technique (default: same as outer).
+fn hier_of(flags: &HashMap<String, String>) -> anyhow::Result<HierParams> {
+    match flags.get("inner") {
+        None => Ok(HierParams::default()),
+        Some(name) => {
+            let kind = TechniqueKind::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown inner technique '{name}'"))?;
+            Ok(HierParams::with_inner(kind))
+        }
+    }
+}
+
 fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let app = app_of(flags);
     let tech = tech_of(flags)?;
     let model = model_of(flags);
+    anyhow::ensure!(
+        model == ExecutionModel::HierDca || !flags.contains_key("inner"),
+        "--inner only applies to the hierarchical model; pass --model hier as well"
+    );
     let ranks = get(flags, "ranks", 256u32);
     let n = get(flags, "n", 262_144u64);
     let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
@@ -200,6 +224,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         cluster,
         cost,
         pe_speed: vec![],
+        hier: hier_of(flags)?,
     };
     let r = simulate(&cfg)?;
     println!(
@@ -217,6 +242,107 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         r.stats.cov_finish,
         r.stats.imbalance
     );
+    Ok(())
+}
+
+/// `hier`: one scenario, all four models side by side — the two-level
+/// model's headline comparison (arXiv 1903.09510 reproduced on the DES).
+fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let app = app_of(flags);
+    let tech = tech_of(flags)?;
+    let hier = hier_of(flags)?;
+    let nodes = get(flags, "nodes", 16u32);
+    let rpn = get(flags, "rpn", 16u32);
+    let n = get(flags, "n", 262_144u64);
+    let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
+    let site = match flags.get("delay-site").map(String::as_str) {
+        Some("assignment") => DelaySite::Assignment,
+        _ => DelaySite::Calculation,
+    };
+    let cluster = ClusterConfig { nodes, ranks_per_node: rpn, ..ClusterConfig::minihpc() };
+    let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
+    let inner = hier.inner_or(tech);
+    println!(
+        "== HIER-DCA vs flat: {} {} (outer) / {} (inner), {}×{} ranks, N={n}, {}µs {} delay ==",
+        app.name(),
+        tech.name(),
+        inner.name(),
+        nodes,
+        rpn,
+        delay * 1e6,
+        match site {
+            DelaySite::Calculation => "calculation",
+            DelaySite::Assignment => "assignment",
+        },
+    );
+    let mut results: Vec<(ExecutionModel, Option<dca_dls::des::DesResult>)> = Vec::new();
+    for model in ExecutionModel::ALL {
+        if tech == TechniqueKind::Af && model == ExecutionModel::DcaRma {
+            results.push((model, None));
+            continue;
+        }
+        let cfg = DesConfig {
+            params: LoopParams::new(n, cluster.total_ranks()),
+            technique: tech,
+            model,
+            delay: match site {
+                DelaySite::Calculation => InjectedDelay::calculation_only(delay),
+                DelaySite::Assignment => InjectedDelay::assignment_only(delay),
+            },
+            cluster: cluster.clone(),
+            cost: cost.clone(),
+            pe_speed: vec![],
+            hier,
+        };
+        results.push((model, Some(simulate(&cfg)?)));
+    }
+    println!(
+        "{:<10} {:>12} {:>9} {:>11} {:>14}",
+        "model", "T_par[s]", "chunks", "messages", "rank0 busy[s]"
+    );
+    for (model, r) in &results {
+        match r {
+            Some(r) => println!(
+                "{:<10} {:>12.3} {:>9} {:>11} {:>14.3}",
+                model.name(),
+                r.t_par(),
+                r.stats.chunks,
+                r.stats.messages,
+                r.rank0_service_busy
+            ),
+            None => println!("{:<10} {:>12}", model.name(), "n/a (AF)"),
+        }
+    }
+    if let Some(path) = flags.get("json") {
+        let arr = Json::Arr(
+            results
+                .iter()
+                .filter_map(|(m, r)| r.as_ref().map(|r| (m, r)))
+                .map(|(m, r)| {
+                    Json::obj()
+                        .field("model", *m)
+                        .field("technique", tech)
+                        .field("inner", inner)
+                        .field("nodes", nodes)
+                        .field("ranks_per_node", rpn)
+                        .field("n", n)
+                        .field("delay_us", delay * 1e6)
+                        .field(
+                            "delay_site",
+                            match site {
+                                DelaySite::Calculation => "calculation",
+                                DelaySite::Assignment => "assignment",
+                            },
+                        )
+                        .field("t_par", r.t_par())
+                        .field("chunks", r.stats.chunks)
+                        .field("messages", r.stats.messages)
+                })
+                .collect(),
+        );
+        std::fs::write(path, arr.render())?;
+        println!("\nwrote {path}");
+    }
     Ok(())
 }
 
@@ -286,6 +412,7 @@ fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 cluster,
                 cost: cost.clone(),
                 pe_speed: vec![],
+                hier: HierParams::default(),
             };
             t.push(simulate(&cfg)?.t_par());
         }
@@ -301,12 +428,13 @@ fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
     let cluster = ClusterConfig::minihpc();
     let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
-    let s = dca_dls::report::selector::select_cca_or_dca(
+    let s = dca_dls::report::selector::select_model(
         tech,
         262_144,
         &cluster,
         &cost,
         InjectedDelay::calculation_only(delay),
+        hier_of(flags)?,
     )?;
     println!("{} {} delay={}µs — predicted T_par on a {:.0}% prefix:", app.name(), tech.name(), delay * 1e6, s.prefix_fraction * 100.0);
     for (m, t) in &s.predictions {

@@ -8,7 +8,7 @@
 use std::sync::Arc;
 
 use super::FigureRow;
-use crate::config::{ClusterConfig, DelaySite, ExecutionModel};
+use crate::config::{ClusterConfig, DelaySite, ExecutionModel, HierParams};
 use crate::des::{simulate, DesConfig};
 use crate::metrics::{LoopStats, RepeatedRuns};
 use crate::sched::closed_form_schedule;
@@ -101,6 +101,8 @@ pub struct FigureConfig {
     pub speed_jitter: f64,
     /// Mandelbrot CT used for the cost profile (scaled from 1e6).
     pub mandelbrot_ct: u32,
+    /// Two-level parameters for cells running [`ExecutionModel::HierDca`].
+    pub hier: HierParams,
 }
 
 impl FigureConfig {
@@ -118,6 +120,7 @@ impl FigureConfig {
             seed: 0xF1605,
             speed_jitter: 0.005,
             mandelbrot_ct: 2_000,
+            hier: HierParams::default(),
         }
     }
 
@@ -169,6 +172,7 @@ pub fn run_figure(cfg: &FigureConfig) -> anyhow::Result<Vec<FigureRow>> {
                         cluster: cfg.cluster.clone(),
                         cost: (*base_cost).clone(),
                         pe_speed,
+                        hier: cfg.hier,
                     };
                     let r = simulate(&des)?;
                     if rep == 0 {
@@ -229,6 +233,23 @@ mod tests {
         let cca = find(ExecutionModel::Cca, 100e-6);
         let dca = find(ExecutionModel::Dca, 100e-6);
         assert!(dca <= cca * 1.02, "DCA {dca} should not exceed CCA {cca}");
+    }
+
+    #[test]
+    fn quick_figure_with_hier_model() {
+        let mut cfg = FigureConfig::quick(App::Psia);
+        cfg.techniques = vec![TechniqueKind::Fac2];
+        cfg.models = vec![ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::HierDca];
+        cfg.delays = vec![0.0];
+        cfg.reps = 2;
+        let rows = run_figure(&cfg).unwrap();
+        assert_eq!(rows.len(), 3);
+        let hier = rows
+            .iter()
+            .find(|r| r.model == ExecutionModel::HierDca)
+            .expect("hier row present");
+        assert!(hier.runs.t_par_mean > 0.0);
+        assert!(hier.chunks > 0);
     }
 
     #[test]

@@ -294,6 +294,16 @@ impl From<&str> for Json {
         Json::Str(x.to_string())
     }
 }
+impl From<crate::config::ExecutionModel> for Json {
+    fn from(m: crate::config::ExecutionModel) -> Json {
+        Json::Str(m.name().to_string())
+    }
+}
+impl From<crate::techniques::TechniqueKind> for Json {
+    fn from(k: crate::techniques::TechniqueKind) -> Json {
+        Json::Str(k.name().to_string())
+    }
+}
 impl From<String> for Json {
     fn from(x: String) -> Json {
         Json::Str(x)
@@ -353,6 +363,14 @@ mod tests {
         // Render → parse is stable.
         let again = Json::parse(&j.render()).unwrap();
         assert_eq!(again.get("a").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn model_and_technique_render_as_names() {
+        let j = Json::obj()
+            .field("model", crate::config::ExecutionModel::HierDca)
+            .field("tech", crate::techniques::TechniqueKind::Fac2);
+        assert_eq!(j.render(), r#"{"model":"HIER-DCA","tech":"FAC"}"#);
     }
 
     #[test]

@@ -22,43 +22,67 @@ pub struct FigureRow {
 }
 
 /// Render rows in the paper's figure layout: one block per delay scenario,
-/// techniques as rows, CCA/DCA side by side.
+/// techniques as rows, one `T_par ± sd` column pair per execution model
+/// present in the data (CCA/DCA in the paper's figures; DCA-RMA and
+/// HIER-DCA join when the sweep includes them). A final ratio column
+/// compares the last model against the first (DCA/CCA in the default
+/// two-model layout).
 pub fn render_figure(title: &str, rows: &[FigureRow]) -> String {
     use std::fmt::Write;
     let mut out = String::new();
     writeln!(out, "== {title} ==").unwrap();
+    let models: Vec<crate::config::ExecutionModel> = crate::config::ExecutionModel::ALL
+        .into_iter()
+        .filter(|m| rows.iter().any(|r| r.model == *m))
+        .collect();
     let mut delays: Vec<f64> = rows.iter().map(|r| r.delay).collect();
     delays.sort_by(f64::total_cmp);
     delays.dedup();
     for d in delays {
         writeln!(out, "\n-- injected delay: {:.0} µs --", d * 1e6).unwrap();
-        writeln!(
-            out,
-            "{:<8} {:>12} {:>12} {:>9} {:>9} {:>8}",
-            "tech", "CCA T_par[s]", "DCA T_par[s]", "CCA ±sd", "DCA ±sd", "DCA/CCA"
-        )
-        .unwrap();
+        write!(out, "{:<8}", "tech").unwrap();
+        for m in &models {
+            // Width 17 fits the longest header, "HIER-DCA T_par[s]".
+            write!(out, " {:>17} {:>9}", format!("{} T_par[s]", m.name()), "±sd").unwrap();
+        }
+        if models.len() >= 2 {
+            // Width 12 fits the longest ratio header, "HIER-DCA/CCA".
+            let last = models[models.len() - 1];
+            write!(out, " {:>12}", format!("{}/{}", last.name(), models[0].name())).unwrap();
+        }
+        writeln!(out).unwrap();
         for kind in TechniqueKind::EVALUATED {
             let find = |m: crate::config::ExecutionModel| {
                 rows.iter().find(|r| {
                     r.technique == kind && r.model == m && (r.delay - d).abs() < 1e-12
                 })
             };
-            let cca = find(crate::config::ExecutionModel::Cca);
-            let dca = find(crate::config::ExecutionModel::Dca);
-            if let (Some(c), Some(dd)) = (cca, dca) {
-                writeln!(
-                    out,
-                    "{:<8} {:>12.3} {:>12.3} {:>9.3} {:>9.3} {:>8.3}",
-                    kind.name(),
-                    c.runs.t_par_mean,
-                    dd.runs.t_par_mean,
-                    c.runs.t_par_stddev,
-                    dd.runs.t_par_stddev,
-                    dd.runs.t_par_mean / c.runs.t_par_mean
-                )
-                .unwrap();
+            let cells: Vec<Option<&FigureRow>> = models.iter().map(|&m| find(m)).collect();
+            if cells.iter().all(Option::is_none) {
+                continue;
             }
+            write!(out, "{:<8}", kind.name()).unwrap();
+            for c in &cells {
+                match c {
+                    Some(r) => write!(
+                        out,
+                        " {:>17.3} {:>9.3}",
+                        r.runs.t_par_mean, r.runs.t_par_stddev
+                    )
+                    .unwrap(),
+                    None => write!(out, " {:>17} {:>9}", "n/a", "-").unwrap(),
+                }
+            }
+            if models.len() >= 2 {
+                match (cells[cells.len() - 1], cells[0]) {
+                    (Some(last), Some(first)) if first.runs.t_par_mean > 0.0 => {
+                        write!(out, " {:>12.3}", last.runs.t_par_mean / first.runs.t_par_mean)
+                            .unwrap()
+                    }
+                    _ => write!(out, " {:>12}", "-").unwrap(),
+                }
+            }
+            writeln!(out).unwrap();
         }
     }
     out
@@ -129,6 +153,23 @@ mod tests {
         assert!(s.contains("GSS"));
         assert!(s.contains("70.000"));
         assert!(s.contains("0 µs"));
+    }
+
+    #[test]
+    fn figure_renders_all_four_models_with_gaps() {
+        let rows = vec![
+            row(TechniqueKind::Af, ExecutionModel::Cca, 0.0, 70.0),
+            row(TechniqueKind::Af, ExecutionModel::Dca, 0.0, 69.0),
+            // AF×DCA-RMA is unsupported — its cell must render as n/a.
+            row(TechniqueKind::Af, ExecutionModel::HierDca, 0.0, 68.0),
+            row(TechniqueKind::Af, ExecutionModel::DcaRma, 100e-6, 71.0),
+        ];
+        let s = render_figure("sweep", &rows);
+        assert!(s.contains("HIER-DCA"));
+        assert!(s.contains("DCA-RMA"));
+        assert!(s.contains("n/a"));
+        assert!(s.contains("68.000"));
+        assert!(s.contains("100 µs"));
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! it cheap) for every candidate execution model and returns the model with
 //! the lowest predicted `T_loop^par`.
 
-use crate::config::{ClusterConfig, ExecutionModel};
+use crate::config::{ClusterConfig, ExecutionModel, HierParams};
 use crate::des::{simulate, DesConfig};
 use crate::substrate::delay::InjectedDelay;
 use crate::techniques::{LoopParams, TechniqueKind};
@@ -26,14 +26,16 @@ pub struct Selection {
 }
 
 /// SimAS-style selection: simulate `prefix_fraction` of the loop for each
-/// candidate model and choose the fastest. AF×DCA-RMA is skipped (no closed
-/// form, §4).
+/// candidate model and choose the fastest. Unviable cells are skipped:
+/// AF×DCA-RMA (no closed form, §4) and HierDca on geometries where dedicated
+/// masters would leave no computing rank.
 pub fn select_approach(
     technique: TechniqueKind,
     n: u64,
     cluster: &ClusterConfig,
     cost: &IterationCost,
     delay: InjectedDelay,
+    hier: HierParams,
     candidates: &[ExecutionModel],
     prefix_fraction: f64,
 ) -> anyhow::Result<Selection> {
@@ -44,6 +46,9 @@ pub fn select_approach(
         if technique == TechniqueKind::Af && model == ExecutionModel::DcaRma {
             continue;
         }
+        if model == ExecutionModel::HierDca && !crate::hier::hier_feasible(cluster) {
+            continue;
+        }
         let cfg = DesConfig {
             params: LoopParams::new(prefix_n.min(n), cluster.total_ranks()),
             technique,
@@ -52,6 +57,7 @@ pub fn select_approach(
             cluster: cluster.clone(),
             cost: cost.clone(),
             pe_speed: vec![],
+            hier,
         };
         predictions.push((model, simulate(&cfg)?.t_par()));
     }
@@ -78,9 +84,24 @@ pub fn select_cca_or_dca(
         cluster,
         cost,
         delay,
+        HierParams::default(),
         &[ExecutionModel::Cca, ExecutionModel::Dca],
         0.15,
     )
+}
+
+/// Full arbitration over **all four** execution models (CCA, DCA, DCA-RMA,
+/// HIER-DCA) — the SimAS candidate-set diversity argument: model selection
+/// under perturbation pays off most when the candidates differ structurally.
+pub fn select_model(
+    technique: TechniqueKind,
+    n: u64,
+    cluster: &ClusterConfig,
+    cost: &IterationCost,
+    delay: InjectedDelay,
+    hier: HierParams,
+) -> anyhow::Result<Selection> {
+    select_approach(technique, n, cluster, cost, delay, hier, &ExecutionModel::ALL, 0.15)
 }
 
 #[cfg(test)]
@@ -136,6 +157,7 @@ mod tests {
             &ClusterConfig::small(4),
             &IterationCost::Constant(1e-4),
             InjectedDelay::none(),
+            HierParams::default(),
             &[ExecutionModel::Dca, ExecutionModel::DcaRma],
             0.2,
         )
@@ -152,6 +174,7 @@ mod tests {
             &ClusterConfig::small(8),
             &IterationCost::psia_table3(3),
             InjectedDelay::none(),
+            HierParams::default(),
             &[ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma],
             0.1,
         )
@@ -160,5 +183,61 @@ mod tests {
         for (_, t) in &s.predictions {
             assert!(*t > 0.0);
         }
+    }
+
+    /// The selector now arbitrates over all four models; every viable
+    /// candidate must yield a prediction, and HIER-DCA is among them.
+    #[test]
+    fn four_model_arbitration() {
+        let cluster = ClusterConfig { nodes: 4, ranks_per_node: 8, ..ClusterConfig::minihpc() };
+        let s = select_model(
+            TechniqueKind::Gss,
+            40_000,
+            &cluster,
+            &IterationCost::Constant(1e-4),
+            InjectedDelay::none(),
+            HierParams::default(),
+        )
+        .unwrap();
+        assert_eq!(s.predictions.len(), 4);
+        assert!(s
+            .predictions
+            .iter()
+            .any(|(m, _)| *m == ExecutionModel::HierDca));
+        for (_, t) in &s.predictions {
+            assert!(*t > 0.0);
+        }
+    }
+
+    /// Under the assignment-site slowdown the flat coordinator serializes
+    /// every commit; the hierarchical model spreads commits over the node
+    /// masters, so HIER-DCA must not lose to flat DCA there. (A batched
+    /// outer technique — here FAC — is the intended hierarchy operating
+    /// point: an SS outer level would degenerate to 1-iteration node-chunks.)
+    #[test]
+    fn hier_competitive_under_assignment_slowdown() {
+        let cluster = ClusterConfig { nodes: 8, ranks_per_node: 16, ..ClusterConfig::minihpc() };
+        let s = select_model(
+            TechniqueKind::Fac2,
+            65_536,
+            &cluster,
+            &IterationCost::Constant(0.0005),
+            InjectedDelay::assignment_only(100e-6),
+            HierParams::default(),
+        )
+        .unwrap();
+        let hier = s
+            .predictions
+            .iter()
+            .find(|(m, _)| *m == ExecutionModel::HierDca)
+            .unwrap()
+            .1;
+        let dca = s
+            .predictions
+            .iter()
+            .find(|(m, _)| *m == ExecutionModel::Dca)
+            .unwrap()
+            .1;
+        assert!(hier <= dca * 1.05, "hier {hier} should not lose to flat DCA {dca}");
     }
 }

@@ -4,25 +4,42 @@
 //! Wraps the `xla` crate per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `client.compile` → `execute`. One
 //! compiled executable per model; compiled once, executed per chunk tile.
+//!
+//! The `xla` crate is unavailable in offline builds, so the whole execution
+//! path is gated behind the `pjrt` cargo feature. Without it, API-compatible
+//! stubs compile in that fail at runtime with a clear message — artifact
+//! *metadata* parsing ([`meta`]) stays fully functional either way.
 
 pub mod meta;
 pub mod workload;
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::Result;
 
 pub use meta::ArtifactMeta;
 
 /// A PJRT client plus the compiled executables of this repo's artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub meta: ArtifactMeta,
 }
 
+/// Stub runtime compiled without the `pjrt` feature: [`Runtime::new`]
+/// always fails, so no instance ever exists.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    dir: PathBuf,
+    pub meta: ArtifactMeta,
+}
+
 /// One compiled model, executable per chunk tile.
 pub struct Executable {
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
     /// Artifact name (for diagnostics).
     pub name: String,
@@ -30,6 +47,7 @@ pub struct Executable {
 
 impl Runtime {
     /// Create a CPU PJRT client and parse `meta.json` from `dir`.
+    #[cfg(feature = "pjrt")]
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let meta_path = dir.join("meta.json");
@@ -39,17 +57,34 @@ impl Runtime {
         Ok(Runtime { client, dir, meta })
     }
 
+    /// Stub: PJRT support is not compiled in.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = dir.as_ref();
+        anyhow::bail!(
+            "built without the `pjrt` feature — PJRT execution unavailable \
+             (enable the feature and vendor the `xla` crate to use artifacts)"
+        )
+    }
+
     /// Default artifact location relative to the repo root.
     pub fn default_dir() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "unavailable (built without `pjrt`)".to_string()
+    }
+
     /// Load + compile `<name>.hlo.txt` (HLO **text** — the interchange format
     /// that survives the jax≥0.5 / xla_extension 0.5.1 proto-id mismatch).
+    #[cfg(feature = "pjrt")]
     pub fn load(&self, name: &str) -> Result<Executable> {
         let path = self.dir.join(format!("{name}.hlo.txt"));
         let proto = xla::HloModuleProto::from_text_file(
@@ -63,8 +98,16 @@ impl Runtime {
             .with_context(|| format!("PJRT compile of {name}"))?;
         Ok(Executable { exe, name: name.to_string() })
     }
+
+    /// Stub: PJRT support is not compiled in.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let _ = &self.dir;
+        anyhow::bail!("cannot load artifact '{name}': built without the `pjrt` feature")
+    }
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with literal inputs; returns the decomposed output tuple
     /// (aot.py lowers with `return_tuple=True`).
@@ -81,17 +124,19 @@ impl Executable {
 }
 
 /// Build an `i32[1,1]` scalar literal (the aot.py scalar calling convention).
+#[cfg(feature = "pjrt")]
 pub fn scalar_i32(v: i32) -> Result<xla::Literal> {
     Ok(xla::Literal::vec1(&[v]).reshape(&[1, 1])?)
 }
 
 /// Build an `f32[n,3]` literal from flat xyz data.
+#[cfg(feature = "pjrt")]
 pub fn points_f32(flat: &[f32]) -> Result<xla::Literal> {
     anyhow::ensure!(flat.len() % 3 == 0, "flat xyz length must be divisible by 3");
     Ok(xla::Literal::vec1(flat).reshape(&[flat.len() as i64 / 3, 3])?)
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 
@@ -177,5 +222,16 @@ mod tests {
         let hist = out[0].to_vec::<i32>().unwrap();
         assert_eq!(hist.len(), 8 * 25);
         assert!(hist.iter().sum::<i32>() > 0, "histograms must bin something");
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_fails_loudly() {
+        let e = Runtime::new(Runtime::default_dir()).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 }

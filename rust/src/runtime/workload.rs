@@ -6,90 +6,232 @@
 //! The `xla` crate's `PjRtClient` is `Rc`-based (single-threaded), so each
 //! worker thread lazily builds its own client + compiled executable
 //! (thread-local), mirroring one-PJRT-context-per-rank on a real cluster.
+//!
+//! Without the `pjrt` cargo feature the constructors fail at runtime with a
+//! clear message (the `xla` crate is unavailable in offline builds); the
+//! types keep their full API so callers compile unchanged.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
+#[cfg(not(feature = "pjrt"))]
 use std::path::PathBuf;
 
+#[cfg(not(feature = "pjrt"))]
 use anyhow::Result;
 
-use super::{points_f32, scalar_i32, ArtifactMeta, Executable, Runtime};
+#[cfg(not(feature = "pjrt"))]
 use crate::workload::psia::Psia;
+#[cfg(not(feature = "pjrt"))]
 use crate::workload::Workload;
 
-thread_local! {
-    /// Per-thread compiled-executable cache, keyed by artifact dir + name.
-    static EXE_CACHE: RefCell<HashMap<String, Executable>> = RefCell::new(HashMap::new());
-}
+#[cfg(feature = "pjrt")]
+mod real {
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::path::PathBuf;
 
-/// Run `f` with the thread-local executable for `(dir, name)`.
-fn with_executable<R>(
-    dir: &PathBuf,
-    name: &str,
-    f: impl FnOnce(&Executable) -> Result<R>,
-) -> Result<R> {
-    EXE_CACHE.with(|cache| {
-        let key = format!("{}::{name}", dir.display());
-        let mut cache = cache.borrow_mut();
-        if !cache.contains_key(&key) {
-            let rt = Runtime::new(dir)?;
-            cache.insert(key.clone(), rt.load(name)?);
+    use anyhow::Result;
+
+    use super::super::{points_f32, scalar_i32, ArtifactMeta, Executable, Runtime};
+    use crate::workload::psia::Psia;
+    use crate::workload::Workload;
+
+    thread_local! {
+        /// Per-thread compiled-executable cache, keyed by artifact dir + name.
+        static EXE_CACHE: RefCell<HashMap<String, Executable>> = RefCell::new(HashMap::new());
+    }
+
+    /// Run `f` with the thread-local executable for `(dir, name)`.
+    fn with_executable<R>(
+        dir: &PathBuf,
+        name: &str,
+        f: impl FnOnce(&Executable) -> Result<R>,
+    ) -> Result<R> {
+        EXE_CACHE.with(|cache| {
+            let key = format!("{}::{name}", dir.display());
+            let mut cache = cache.borrow_mut();
+            if !cache.contains_key(&key) {
+                let rt = Runtime::new(dir)?;
+                cache.insert(key.clone(), rt.load(name)?);
+            }
+            f(&cache[&key])
+        })
+    }
+
+    /// Mandelbrot through the PJRT artifact. Iteration semantics (indices,
+    /// escape counts, checksums) are identical to
+    /// [`crate::workload::mandelbrot::Mandelbrot`] — float64, same op order.
+    pub struct PjrtMandelbrot {
+        dir: PathBuf,
+        meta: ArtifactMeta,
+        /// Native twin for the cost model (and cross-validation).
+        pub(super) native: crate::workload::mandelbrot::Mandelbrot,
+    }
+
+    impl PjrtMandelbrot {
+        pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+            let dir = dir.into();
+            let meta = ArtifactMeta::from_file(&dir.join("meta.json"))?;
+            let native = meta.mandelbrot_native();
+            Ok(PjrtMandelbrot { dir, meta, native })
         }
-        f(&cache[&key])
-    })
+
+        fn tile(&self) -> u64 {
+            self.meta.mandelbrot.tile as u64
+        }
+
+        /// Execute one tile, returning its masked checksum.
+        fn run_tile(&self, start: u64, size: u64) -> Result<i64> {
+            with_executable(&self.dir, "mandelbrot", |exe| {
+                let out =
+                    exe.execute(&[scalar_i32(start as i32)?, scalar_i32(size as i32)?])?;
+                Ok(out[2].to_vec::<i64>()?[0])
+            })
+        }
+    }
+
+    impl Workload for PjrtMandelbrot {
+        fn n(&self) -> u64 {
+            self.native.n()
+        }
+
+        fn execute(&self, i: u64) -> u64 {
+            self.run_tile(i, 1).expect("PJRT mandelbrot tile") as u64
+        }
+
+        fn execute_range(&self, start: u64, len: u64) -> u64 {
+            let mut sum = 0i64;
+            let mut cursor = start;
+            let end = start + len;
+            while cursor < end {
+                let size = (end - cursor).min(self.tile());
+                sum = sum
+                    .wrapping_add(self.run_tile(cursor, size).expect("PJRT mandelbrot tile"));
+                cursor += size;
+            }
+            sum as u64
+        }
+
+        fn cost(&self, i: u64) -> f64 {
+            self.native.cost(i)
+        }
+
+        fn name(&self) -> &'static str {
+            "Mandelbrot(PJRT)"
+        }
+    }
+
+    /// PSIA through the PJRT artifact; the synthetic cloud is generated on
+    /// the rust side (same seeded generator as the native workload) and fed
+    /// as executable inputs.
+    pub struct PjrtPsia {
+        dir: PathBuf,
+        meta: ArtifactMeta,
+        pub(super) native: Psia,
+        flat_points: Vec<f32>,
+        flat_normals: Vec<f32>,
+        n_images: u64,
+    }
+
+    impl PjrtPsia {
+        pub fn new(dir: impl Into<PathBuf>, n_images: u64, seed: u64) -> Result<Self> {
+            let dir = dir.into();
+            let meta = ArtifactMeta::from_file(&dir.join("meta.json"))?;
+            let mut native = Psia::synthetic(meta.spin_image.m, n_images, seed);
+            native.image_width = meta.spin_image.image_width;
+            native.bin_size = meta.spin_image.bin_size as f32;
+            native.support_angle = meta.spin_image.support_angle as f32;
+            let mut flat_points = Vec::with_capacity(meta.spin_image.m * 3);
+            let mut flat_normals = Vec::with_capacity(meta.spin_image.m * 3);
+            for pt in &native.cloud {
+                flat_points.extend_from_slice(&pt.p);
+                flat_normals.extend_from_slice(&pt.n);
+            }
+            Ok(PjrtPsia { dir, meta, native, flat_points, flat_normals, n_images })
+        }
+
+        /// The native twin (for cross-validation in tests).
+        pub fn native(&self) -> &Psia {
+            &self.native
+        }
+
+        fn tile(&self) -> u64 {
+            self.meta.spin_image.tile_i as u64
+        }
+
+        fn run_tile(&self, start: u64, size: u64) -> Result<i64> {
+            with_executable(&self.dir, "spin_image", |exe| {
+                let out = exe.execute(&[
+                    points_f32(&self.flat_points)?,
+                    points_f32(&self.flat_normals)?,
+                    scalar_i32(start as i32)?,
+                    scalar_i32(size as i32)?,
+                ])?;
+                Ok(out[1].to_vec::<i64>()?[0])
+            })
+        }
+    }
+
+    impl Workload for PjrtPsia {
+        fn n(&self) -> u64 {
+            self.n_images
+        }
+
+        fn execute(&self, i: u64) -> u64 {
+            self.run_tile(i, 1).expect("PJRT spin_image tile") as u64
+        }
+
+        fn execute_range(&self, start: u64, len: u64) -> u64 {
+            let mut sum = 0i64;
+            let mut cursor = start;
+            let end = start + len;
+            while cursor < end {
+                let size = (end - cursor).min(self.tile());
+                sum = sum
+                    .wrapping_add(self.run_tile(cursor, size).expect("PJRT spin_image tile"));
+                cursor += size;
+            }
+            sum as u64
+        }
+
+        fn cost(&self, i: u64) -> f64 {
+            self.native.cost(i)
+        }
+
+        fn name(&self) -> &'static str {
+            "PSIA(PJRT)"
+        }
+    }
 }
 
-/// Mandelbrot through the PJRT artifact. Iteration semantics (indices,
-/// escape counts, checksums) are identical to
-/// [`crate::workload::mandelbrot::Mandelbrot`] — float64, same op order.
+#[cfg(feature = "pjrt")]
+pub use real::{PjrtMandelbrot, PjrtPsia};
+
+/// Stub: constructing the PJRT Mandelbrot workload requires the `pjrt`
+/// feature; `new` always fails, so the delegating `Workload` impl (native
+/// semantics are identical by design) is never reachable.
+#[cfg(not(feature = "pjrt"))]
 pub struct PjrtMandelbrot {
-    dir: PathBuf,
-    meta: ArtifactMeta,
-    /// Native twin for the cost model (and cross-validation).
     native: crate::workload::mandelbrot::Mandelbrot,
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl PjrtMandelbrot {
     pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
-        let dir = dir.into();
-        let meta = ArtifactMeta::from_file(&dir.join("meta.json"))?;
-        let native = meta.mandelbrot_native();
-        Ok(PjrtMandelbrot { dir, meta, native })
-    }
-
-    fn tile(&self) -> u64 {
-        self.meta.mandelbrot.tile as u64
-    }
-
-    /// Execute one tile, returning its masked checksum.
-    fn run_tile(&self, start: u64, size: u64) -> Result<i64> {
-        with_executable(&self.dir, "mandelbrot", |exe| {
-            let out =
-                exe.execute(&[scalar_i32(start as i32)?, scalar_i32(size as i32)?])?;
-            Ok(out[2].to_vec::<i64>()?[0])
-        })
+        let _ = dir.into();
+        anyhow::bail!(
+            "PJRT Mandelbrot unavailable: built without the `pjrt` feature \
+             (use the native workload instead)"
+        )
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl Workload for PjrtMandelbrot {
     fn n(&self) -> u64 {
         self.native.n()
     }
 
     fn execute(&self, i: u64) -> u64 {
-        self.run_tile(i, 1).expect("PJRT mandelbrot tile") as u64
-    }
-
-    fn execute_range(&self, start: u64, len: u64) -> u64 {
-        let mut sum = 0i64;
-        let mut cursor = start;
-        let end = start + len;
-        while cursor < end {
-            let size = (end - cursor).min(self.tile());
-            sum = sum.wrapping_add(self.run_tile(cursor, size).expect("PJRT mandelbrot tile"));
-            cursor += size;
-        }
-        sum as u64
+        self.native.execute(i)
     }
 
     fn cost(&self, i: u64) -> f64 {
@@ -97,80 +239,40 @@ impl Workload for PjrtMandelbrot {
     }
 
     fn name(&self) -> &'static str {
-        "Mandelbrot(PJRT)"
+        "Mandelbrot(PJRT stub)"
     }
 }
 
-/// PSIA through the PJRT artifact; the synthetic cloud is generated on the
-/// rust side (same seeded generator as the native workload) and fed as
-/// executable inputs.
+/// Stub twin of the PJRT PSIA workload (see [`PjrtMandelbrot`] stub docs).
+#[cfg(not(feature = "pjrt"))]
 pub struct PjrtPsia {
-    dir: PathBuf,
-    meta: ArtifactMeta,
     native: Psia,
-    flat_points: Vec<f32>,
-    flat_normals: Vec<f32>,
-    n_images: u64,
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl PjrtPsia {
-    pub fn new(dir: impl Into<PathBuf>, n_images: u64, seed: u64) -> Result<Self> {
-        let dir = dir.into();
-        let meta = ArtifactMeta::from_file(&dir.join("meta.json"))?;
-        let mut native = Psia::synthetic(meta.spin_image.m, n_images, seed);
-        native.image_width = meta.spin_image.image_width;
-        native.bin_size = meta.spin_image.bin_size as f32;
-        native.support_angle = meta.spin_image.support_angle as f32;
-        let mut flat_points = Vec::with_capacity(meta.spin_image.m * 3);
-        let mut flat_normals = Vec::with_capacity(meta.spin_image.m * 3);
-        for pt in &native.cloud {
-            flat_points.extend_from_slice(&pt.p);
-            flat_normals.extend_from_slice(&pt.n);
-        }
-        Ok(PjrtPsia { dir, meta, native, flat_points, flat_normals, n_images })
+    pub fn new(dir: impl Into<PathBuf>, _n_images: u64, _seed: u64) -> Result<Self> {
+        let _ = dir.into();
+        anyhow::bail!(
+            "PJRT PSIA unavailable: built without the `pjrt` feature \
+             (use the native workload instead)"
+        )
     }
 
     /// The native twin (for cross-validation in tests).
     pub fn native(&self) -> &Psia {
         &self.native
     }
-
-    fn tile(&self) -> u64 {
-        self.meta.spin_image.tile_i as u64
-    }
-
-    fn run_tile(&self, start: u64, size: u64) -> Result<i64> {
-        with_executable(&self.dir, "spin_image", |exe| {
-            let out = exe.execute(&[
-                points_f32(&self.flat_points)?,
-                points_f32(&self.flat_normals)?,
-                scalar_i32(start as i32)?,
-                scalar_i32(size as i32)?,
-            ])?;
-            Ok(out[1].to_vec::<i64>()?[0])
-        })
-    }
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl Workload for PjrtPsia {
     fn n(&self) -> u64 {
-        self.n_images
+        self.native.n()
     }
 
     fn execute(&self, i: u64) -> u64 {
-        self.run_tile(i, 1).expect("PJRT spin_image tile") as u64
-    }
-
-    fn execute_range(&self, start: u64, len: u64) -> u64 {
-        let mut sum = 0i64;
-        let mut cursor = start;
-        let end = start + len;
-        while cursor < end {
-            let size = (end - cursor).min(self.tile());
-            sum = sum.wrapping_add(self.run_tile(cursor, size).expect("PJRT spin_image tile"));
-            cursor += size;
-        }
-        sum as u64
+        self.native.execute(i)
     }
 
     fn cost(&self, i: u64) -> f64 {
@@ -178,13 +280,17 @@ impl Workload for PjrtPsia {
     }
 
     fn name(&self) -> &'static str {
-        "PSIA(PJRT)"
+        "PSIA(PJRT stub)"
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
+    use std::path::PathBuf;
+
+    use super::super::Runtime;
     use super::*;
+    use crate::workload::Workload;
 
     fn dir() -> Option<PathBuf> {
         let d = Runtime::default_dir();
@@ -217,5 +323,18 @@ mod tests {
             }
         }
         assert!(mismatches <= 2, "{mismatches}/16 spin images diverged from native");
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructors_fail_loudly() {
+        let e = PjrtMandelbrot::new("/tmp/nowhere").unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+        let e = PjrtPsia::new("/tmp/nowhere", 8, 1).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 }

@@ -26,28 +26,77 @@ pub fn spin_for(seconds: f64) {
     }
 }
 
+/// Distribution of the injected **calculation** delay across invocations.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum DelayDist {
+    /// Every invocation pays exactly `calculation` seconds (the paper's §6
+    /// scenarios).
+    #[default]
+    Constant,
+    /// Exponentially distributed with mean `calculation` — bursty
+    /// perturbation; deterministic per `(seed, rank, virtual time)` so DES
+    /// runs stay replayable.
+    Exponential,
+}
+
 /// A delay site's configuration for one run.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct InjectedDelay {
-    /// Seconds added to every chunk **calculation**.
+    /// Seconds added to every chunk **calculation** (the mean, when
+    /// `dist` is [`DelayDist::Exponential`]).
     pub calculation: f64,
     /// Seconds added to every chunk **assignment** (§7 ablation).
     pub assignment: f64,
+    /// Distribution of the calculation delay.
+    pub dist: DelayDist,
+    /// Seed for the exponential draws.
+    pub seed: u64,
 }
 
 impl InjectedDelay {
     /// The paper's §6 setup: delay only the calculation.
     pub fn calculation_only(seconds: f64) -> Self {
-        InjectedDelay { calculation: seconds, assignment: 0.0 }
+        InjectedDelay { calculation: seconds, ..Self::default() }
     }
 
     /// The §7 future-work ablation: delay only the assignment.
     pub fn assignment_only(seconds: f64) -> Self {
-        InjectedDelay { calculation: 0.0, assignment: seconds }
+        InjectedDelay { assignment: seconds, ..Self::default() }
+    }
+
+    /// Exponentially distributed calculation delay with the given mean.
+    pub fn exponential_calculation(mean_seconds: f64, seed: u64) -> Self {
+        InjectedDelay {
+            calculation: mean_seconds,
+            dist: DelayDist::Exponential,
+            seed,
+            ..Self::default()
+        }
     }
 
     pub fn none() -> Self {
         Self::default()
+    }
+
+    /// The calculation delay paid by `rank` for a calculation starting at
+    /// virtual time `t_ns`. Constant mode ignores the arguments; exponential
+    /// mode draws deterministically from `(seed, rank, t_ns)`, so a replay
+    /// of the same simulation sees identical delays.
+    pub fn calculation_at(&self, rank: u32, t_ns: u64) -> f64 {
+        match self.dist {
+            DelayDist::Constant => self.calculation,
+            DelayDist::Exponential => {
+                if self.calculation <= 0.0 {
+                    return 0.0;
+                }
+                let bits = crate::techniques::rnd::splitmix64(
+                    self.seed ^ ((rank as u64) << 32) ^ t_ns.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                );
+                // u ∈ [0, 1); inverse-CDF draw, guarded against ln(0).
+                let u = (bits >> 11) as f64 / (1u64 << 53) as f64;
+                -self.calculation * (1.0 - u).max(1e-18).ln()
+            }
+        }
     }
 }
 
@@ -76,8 +125,46 @@ mod tests {
         let c = InjectedDelay::calculation_only(1e-5);
         assert_eq!(c.calculation, 1e-5);
         assert_eq!(c.assignment, 0.0);
+        assert_eq!(c.dist, DelayDist::Constant);
         let a = InjectedDelay::assignment_only(1e-4);
         assert_eq!(a.calculation, 0.0);
         assert_eq!(a.assignment, 1e-4);
+    }
+
+    #[test]
+    fn constant_ignores_rank_and_time() {
+        let d = InjectedDelay::calculation_only(2e-5);
+        assert_eq!(d.calculation_at(0, 0), 2e-5);
+        assert_eq!(d.calculation_at(7, 123_456), 2e-5);
+    }
+
+    #[test]
+    fn exponential_is_deterministic_and_varies() {
+        let d = InjectedDelay::exponential_calculation(1e-4, 42);
+        let a = d.calculation_at(3, 1_000);
+        let b = d.calculation_at(3, 1_000);
+        assert_eq!(a, b, "same (rank, t) must replay identically");
+        let c = d.calculation_at(4, 1_000);
+        assert_ne!(a, c, "draws differ across ranks");
+        assert!(a >= 0.0 && c >= 0.0);
+    }
+
+    #[test]
+    fn exponential_mean_approximately_right() {
+        let mean = 1e-4;
+        let d = InjectedDelay::exponential_calculation(mean, 7);
+        let n = 20_000u64;
+        let sum: f64 = (0..n).map(|i| d.calculation_at((i % 16) as u32, i * 977)).sum();
+        let got = sum / n as f64;
+        assert!(
+            (got - mean).abs() < 0.05 * mean,
+            "sample mean {got} should be within 5% of {mean}"
+        );
+    }
+
+    #[test]
+    fn exponential_zero_mean_is_zero() {
+        let d = InjectedDelay::exponential_calculation(0.0, 1);
+        assert_eq!(d.calculation_at(0, 99), 0.0);
     }
 }

@@ -26,10 +26,31 @@ impl Topology {
         self.total_ranks
     }
 
+    /// Ranks per node (clamped to ≥ 1 at construction).
+    pub fn ranks_per_node(&self) -> u32 {
+        self.ranks_per_node
+    }
+
+    /// Number of physical nodes implied by the placement (⌈ranks/rpn⌉).
+    pub fn nodes(&self) -> u32 {
+        self.total_ranks.div_ceil(self.ranks_per_node)
+    }
+
     /// Physical node hosting `rank` (block placement, like `mpirun -bynode`
     /// off — consecutive ranks fill a node first, the paper's 16-per-node).
     pub fn node_of(&self, rank: u32) -> u32 {
         rank / self.ranks_per_node
+    }
+
+    /// The rank acting as node master for `node` under the two-level
+    /// hierarchical model: the first rank placed on that node.
+    pub fn master_of_node(&self, node: u32) -> u32 {
+        node * self.ranks_per_node
+    }
+
+    /// The node master responsible for `rank` (may be `rank` itself).
+    pub fn master_of(&self, rank: u32) -> u32 {
+        self.master_of_node(self.node_of(rank))
     }
 
     /// One-way message latency between two ranks, seconds.
@@ -96,6 +117,73 @@ mod tests {
         let t = Topology::new(&ClusterConfig::small(8));
         for r in 1..8 {
             assert_eq!(t.latency(0, r), 0.5e-6);
+        }
+    }
+
+    #[test]
+    fn node_of_covers_every_rank_in_blocks() {
+        let t = minihpc();
+        for rank in 0..t.total_ranks() {
+            assert_eq!(t.node_of(rank), rank / 16, "rank {rank}");
+        }
+        assert_eq!(t.nodes(), 16);
+        assert_eq!(t.ranks_per_node(), 16);
+    }
+
+    #[test]
+    fn masters_are_first_rank_per_node() {
+        let t = minihpc();
+        for node in 0..t.nodes() {
+            let m = t.master_of_node(node);
+            assert_eq!(m % 16, 0);
+            assert_eq!(t.node_of(m), node);
+        }
+        assert_eq!(t.master_of(0), 0);
+        assert_eq!(t.master_of(15), 0);
+        assert_eq!(t.master_of(16), 16);
+        assert_eq!(t.master_of(255), 240);
+        // A master is always intra-node to every rank it serves.
+        for rank in 0..t.total_ranks() {
+            let m = t.master_of(rank);
+            let lat = t.latency(rank, m);
+            assert!(lat <= 0.5e-6, "rank {rank} → master {m} must be intra-node");
+        }
+    }
+
+    #[test]
+    fn intra_vs_inter_selection_boundaries() {
+        let t = minihpc();
+        // Last rank of node 0 vs first rank of node 1: adjacent ranks,
+        // different nodes ⇒ inter-node latency.
+        assert_eq!(t.latency(15, 16), 2.0e-6);
+        // First and last rank of the same node ⇒ intra-node latency.
+        assert_eq!(t.latency(16, 31), 0.5e-6);
+    }
+
+    #[test]
+    fn zero_ranks_per_node_clamps_to_one() {
+        // A degenerate config must not divide by zero: rpn clamps to 1, so
+        // every rank lands on its own node and all traffic is inter-node.
+        let cfg = ClusterConfig { nodes: 4, ranks_per_node: 0, ..ClusterConfig::minihpc() };
+        let t = Topology::new(&cfg);
+        assert_eq!(t.ranks_per_node(), 1);
+        assert_eq!(t.node_of(3), 3);
+        assert_eq!(t.latency(0, 1), 2.0e-6);
+        assert_eq!(t.latency(2, 2), 0.0);
+    }
+
+    #[test]
+    fn one_rank_per_node_is_all_inter() {
+        let cfg = ClusterConfig { nodes: 8, ranks_per_node: 1, ..ClusterConfig::minihpc() };
+        let t = Topology::new(&cfg);
+        assert_eq!(t.total_ranks(), 8);
+        assert_eq!(t.nodes(), 8);
+        for a in 0..8u32 {
+            assert_eq!(t.master_of(a), a, "every rank is its own master");
+            for b in 0..8u32 {
+                let expect = if a == b { 0.0 } else { 2.0e-6 };
+                assert_eq!(t.latency(a, b), expect);
+            }
         }
     }
 }

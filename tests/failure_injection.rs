@@ -22,6 +22,7 @@ fn small_des(n: u64, p: u32) -> DesConfig {
         cluster: ClusterConfig::small(p),
         cost: IterationCost::Constant(1e-6),
         pe_speed: vec![],
+        hier: Default::default(),
     }
 }
 
@@ -47,7 +48,8 @@ fn des_single_iteration_single_rank() {
 #[test]
 fn des_extreme_slowdown_still_terminates() {
     let mut cfg = small_des(500, 8);
-    cfg.delay = InjectedDelay { calculation: 0.05, assignment: 0.05 }; // 50 ms each!
+    // 50 ms each!
+    cfg.delay = InjectedDelay { calculation: 0.05, assignment: 0.05, ..InjectedDelay::none() };
     for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
         cfg.model = model;
         let r = simulate(&cfg).unwrap();
@@ -100,6 +102,7 @@ fn des_master_slowdown_scenario() {
             cluster,
             cost: IterationCost::Constant(0.002),
             pe_speed: speeds.clone(),
+            hier: Default::default(),
         };
         simulate(&cfg).unwrap().t_par()
     };

@@ -27,6 +27,7 @@ fn des_chunk_multiset(model: ExecutionModel, kind: TechniqueKind) -> Vec<u64> {
         cluster,
         cost: IterationCost::Constant(1e-5),
         pe_speed: vec![],
+        hier: Default::default(),
     };
     let r = simulate(&cfg).unwrap();
     let mut v: Vec<u64> = r.assignments.iter().map(|a| a.size).collect();
@@ -94,6 +95,7 @@ fn des_chunk_multiset_1rank(kind: TechniqueKind) -> Vec<u64> {
         cluster,
         cost: IterationCost::Constant(1e-6),
         pe_speed: vec![],
+        hier: Default::default(),
     };
     let r = simulate(&cfg).unwrap();
     r.assignments.iter().map(|a| a.size).collect()
