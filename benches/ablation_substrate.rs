@@ -52,12 +52,10 @@ fn main() {
 
     println!("== A1: assignment substrate (PSIA, 64 ranks, N=65536, no delay) ==");
     println!("{:<8} {:>10} {:>10} {:>10}", "tech", "CCA[s]", "DCA[s]", "DCA-RMA[s]");
-    for tech in [TechniqueKind::Gss, TechniqueKind::Fac2, TechniqueKind::Fiss, TechniqueKind::Tss]
-    {
+    for tech in [TechniqueKind::Gss, TechniqueKind::Fac2, TechniqueKind::Fiss, TechniqueKind::Tss] {
         let cca = run(ExecutionModel::Cca, tech, InjectedDelay::none(), &psia, 64, 1, 65_536);
         let dca = run(ExecutionModel::Dca, tech, InjectedDelay::none(), &psia, 64, 1, 65_536);
-        let rma =
-            run(ExecutionModel::DcaRma, tech, InjectedDelay::none(), &psia, 64, 1, 65_536);
+        let rma = run(ExecutionModel::DcaRma, tech, InjectedDelay::none(), &psia, 64, 1, 65_536);
         println!("{:<8} {cca:>10.3} {dca:>10.3} {rma:>10.3}", tech.name());
         // RMA (no service personality to contend with) must not be slower
         // than two-sided DCA beyond noise.

@@ -10,8 +10,7 @@ fn main() {
     let series = fig1_series(&params);
 
     println!("== Fig 1: chunk size vs scheduling step (N=1000, P=4) ==");
-    for pattern in [Pattern::Fixed, Pattern::Decreasing, Pattern::Increasing, Pattern::Irregular]
-    {
+    for pattern in [Pattern::Fixed, Pattern::Decreasing, Pattern::Increasing, Pattern::Irregular] {
         println!("\n-- {pattern:?} --");
         for (kind, sizes) in series.iter().filter(|(k, _)| k.pattern() == pattern) {
             // Sparkline-style scaled plot (max 40 cols).

@@ -57,6 +57,9 @@ fn main() {
             cca_worse += 1;
         }
     }
-    println!("paper-shape check: CCA at least as delay-sensitive as DCA in {cca_worse}/{total} techniques");
+    println!(
+        "paper-shape check: CCA at least as delay-sensitive as DCA in \
+         {cca_worse}/{total} techniques"
+    );
     assert!(cca_worse * 3 >= total * 2, "CCA should degrade at least as much in most techniques");
 }

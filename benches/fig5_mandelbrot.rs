@@ -20,7 +20,12 @@ fn main() {
     let t0 = Instant::now();
     let rows = run_figure(&cfg).expect("fig5");
     print!("{}", render_figure("Figure 5 (Mandelbrot, 256 ranks, N=262144)", &rows));
-    println!("\n(regenerated in {:?}, {} reps/cell, CT scaled to {})", t0.elapsed(), cfg.reps, cfg.mandelbrot_ct);
+    println!(
+        "\n(regenerated in {:?}, {} reps/cell, CT scaled to {})",
+        t0.elapsed(),
+        cfg.reps,
+        cfg.mandelbrot_ct
+    );
 
     let t = |tech: TechniqueKind, model: ExecutionModel, d: f64| {
         rows.iter()
@@ -45,12 +50,16 @@ fn main() {
     // AF produces far more chunks than coarse techniques (the mechanism).
     let af_chunks = rows
         .iter()
-        .find(|r| r.technique == TechniqueKind::Af && r.model == ExecutionModel::Cca && r.delay == 0.0)
+        .find(|r| {
+            r.technique == TechniqueKind::Af && r.model == ExecutionModel::Cca && r.delay == 0.0
+        })
         .unwrap()
         .chunks;
     let fac_chunks = rows
         .iter()
-        .find(|r| r.technique == TechniqueKind::Fac2 && r.model == ExecutionModel::Cca && r.delay == 0.0)
+        .find(|r| {
+            r.technique == TechniqueKind::Fac2 && r.model == ExecutionModel::Cca && r.delay == 0.0
+        })
         .unwrap()
         .chunks;
     println!("chunk counts: AF={af_chunks} FAC={fac_chunks}");

@@ -17,11 +17,18 @@
 //! commit on the coordinator and the hierarchy shines brightest.
 //!
 //! Run: `cargo bench --bench hier_sweep` (plain harness).
+//!
+//! Besides the printed table and the asserted claims, the bench emits a
+//! machine-readable `BENCH_hier_sweep.json` (override the path with the
+//! `BENCH_HIER_SWEEP_JSON` env var) — CI uploads it as an artifact and
+//! gates it against the committed baseline in `benches/baselines/` via
+//! `ci/compare_bench.py`.
 
 use std::time::Instant;
 
 use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams};
 use dca_dls::des::{simulate, DesConfig};
+use dca_dls::report::json::Json;
 use dca_dls::substrate::delay::InjectedDelay;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
 use dca_dls::workload::IterationCost;
@@ -69,15 +76,42 @@ fn main() {
         let rma = run(ExecutionModel::DcaRma, delay);
         let hier = run(ExecutionModel::HierDca, delay);
         println!("{label:<28} {cca:>10.3} {dca:>10.3} {rma:>10.3} {hier:>10.3}");
-        table.push((label, cca, dca, hier));
+        table.push((label, cca, dca, rma, hier));
     }
     println!("\n(ran in {:?})", t0.elapsed());
+
+    // -- machine-readable export (CI regression gate) ------------------------
+
+    let out_path = std::env::var("BENCH_HIER_SWEEP_JSON")
+        .unwrap_or_else(|_| "BENCH_hier_sweep.json".to_string());
+    let doc = Json::obj()
+        .field("bench", "hier_sweep")
+        .field("n", N)
+        .field("ranks", 256u64)
+        .field(
+            "scenarios",
+            Json::Arr(
+                table
+                    .iter()
+                    .map(|(label, cca, dca, rma, hier)| {
+                        Json::obj()
+                            .field("scenario", *label)
+                            .field("CCA", *cca)
+                            .field("DCA", *dca)
+                            .field("DCA-RMA", *rma)
+                            .field("HIER-DCA", *hier)
+                    })
+                    .collect(),
+            ),
+        );
+    std::fs::write(&out_path, doc.render()).expect("write bench JSON");
+    println!("wrote {out_path}");
 
     // -- the claims, asserted ------------------------------------------------
 
     // 1. No-slowdown: HIER-DCA stays within noise of flat DCA (both are
     //    execution-bound; the hierarchy must not cost anything).
-    let (_, _, dca0, hier0) = table[0];
+    let (_, _, dca0, _, hier0) = table[0];
     assert!(
         (hier0 - dca0).abs() <= 0.10 * dca0,
         "no-delay: hier {hier0:.3}s must be within 10% of flat DCA {dca0:.3}s"
@@ -86,7 +120,7 @@ fn main() {
     // 2. Extreme calculation slowdown: both pay the delay in parallel at the
     //    leaf level — HIER-DCA must not lose, and both crush CCA, whose
     //    master serializes (delay + calc) per chunk.
-    let (_, cca_c, dca_c, hier_c) = table[2];
+    let (_, cca_c, dca_c, _, hier_c) = table[2];
     assert!(
         hier_c <= dca_c * 1.05,
         "calc 100µs: hier {hier_c:.3}s must not lose to flat DCA {dca_c:.3}s"
@@ -99,7 +133,7 @@ fn main() {
     // 3. Extreme assignment slowdown: the flat coordinator serializes every
     //    commit; the node masters absorb them in parallel — the headline
     //    hierarchical win.
-    let (_, cca_a, dca_a, hier_a) = table[3];
+    let (_, cca_a, dca_a, _, hier_a) = table[3];
     assert!(
         hier_a < dca_a,
         "assignment 100µs: hier {hier_a:.3}s must beat flat DCA {dca_a:.3}s"

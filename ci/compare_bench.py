@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a bench's machine-readable output against
+the committed baseline with a relative tolerance.
+
+Usage:
+    python3 ci/compare_bench.py CURRENT.json BASELINE.json [--tol 0.10]
+
+Both files follow the schema emitted by `cargo bench --bench hier_sweep`
+(see benches/hier_sweep.rs): {"bench", "n", "ranks", "scenarios": [
+{"scenario": <label>, "<MODEL>": <t_par seconds>, ...}, ...]}.
+
+Exit status is non-zero when any (scenario, model) cell deviates from the
+baseline by more than the tolerance, when a cell is missing, or when the
+run shapes (n, ranks, scenario set) differ — so CI fails loudly instead of
+silently absorbing a regression. Regenerate the baseline with
+`python3 python/tools/hier_sweep_model.py` (the reference model of the
+deterministic DES) or by copying a trusted run's output.
+"""
+
+import argparse
+import json
+import sys
+
+MODELS = ["CCA", "DCA", "DCA-RMA", "HIER-DCA"]
+
+
+def load(path):
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--tol", type=float, default=0.10, help="relative tolerance")
+    args = ap.parse_args()
+
+    cur = load(args.current)
+    base = load(args.baseline)
+    failures = []
+
+    for key in ("bench", "n", "ranks"):
+        if cur.get(key) != base.get(key):
+            failures.append(
+                f"shape mismatch on '{key}': current={cur.get(key)!r} "
+                f"baseline={base.get(key)!r}"
+            )
+
+    cur_rows = {row.get("scenario"): row for row in cur.get("scenarios", [])}
+    base_rows = {row.get("scenario"): row for row in base.get("scenarios", [])}
+    if set(cur_rows) != set(base_rows):
+        failures.append(
+            f"scenario sets differ: current={sorted(cur_rows)} "
+            f"baseline={sorted(base_rows)}"
+        )
+
+    for label in sorted(set(cur_rows) & set(base_rows)):
+        for model in MODELS:
+            got = cur_rows[label].get(model)
+            want = base_rows[label].get(model)
+            if got is None or want is None:
+                failures.append(f"[{label}] {model}: missing cell "
+                                f"(current={got!r}, baseline={want!r})")
+                continue
+            if want == 0:
+                failures.append(f"[{label}] {model}: zero baseline")
+                continue
+            rel = abs(got - want) / abs(want)
+            status = "ok" if rel <= args.tol else "FAIL"
+            print(f"[{label}] {model}: current={got:.4f}s baseline={want:.4f}s "
+                  f"drift={rel * 100:.2f}% {status}")
+            if rel > args.tol:
+                failures.append(
+                    f"[{label}] {model}: {got:.4f}s drifted {rel * 100:.2f}% "
+                    f"from baseline {want:.4f}s (tol {args.tol * 100:.0f}%)"
+                )
+
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(f"\nbench regression gate passed (tol {args.tol * 100:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

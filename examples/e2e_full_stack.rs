@@ -46,7 +46,10 @@ fn main() -> anyhow::Result<()> {
     let native = rt.meta.mandelbrot_native();
     let t0 = Instant::now();
     let reference: u64 = (0..n).map(|i| native.escape_count(i) as u64).sum();
-    println!("native reference: checksum={reference:#x}  ({:.2}s single-thread)", t0.elapsed().as_secs_f64());
+    println!(
+        "native reference: checksum={reference:#x}  ({:.2}s single-thread)",
+        t0.elapsed().as_secs_f64()
+    );
 
     // XLA's FMA contraction shifts ~4 boundary pixels out of 262,144 vs the
     // native f64 loop — compare with a tiny relative budget; CCA vs DCA
@@ -87,7 +90,10 @@ fn main() -> anyhow::Result<()> {
     // ---- PSIA: spin images through the Pallas kernel ---------------------
     let n_img = 4_096u64;
     let psia = Arc::new(PjrtPsia::new(&dir, n_img, 0x5e1a_5e1a)?);
-    println!("\n== PSIA  N={n_img} spin images  cloud M={}  {workers} workers ==", rt.meta.spin_image.m);
+    println!(
+        "\n== PSIA  N={n_img} spin images  cloud M={}  {workers} workers ==",
+        rt.meta.spin_image.m
+    );
     for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
         let cfg = EngineConfig::new(LoopParams::new(n_img, workers), TechniqueKind::Fac2, model);
         let t0 = Instant::now();

@@ -11,15 +11,17 @@ use dca_dls::workload::mandelbrot::Mandelbrot;
 use dca_dls::workload::IterationCost;
 
 fn main() -> anyhow::Result<()> {
-    let delay_us: f64 =
-        std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(100.0);
+    let delay_us: f64 = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(100.0);
     println!("building Mandelbrot cost profile (512², CT scaled to 2000)…");
     let cost = IterationCost::record_mandelbrot(&Mandelbrot::paper(2_000));
 
     println!(
         "\n== Mandelbrot, 256 ranks, N=262144, injected calc delay {delay_us} µs ==\n"
     );
-    println!("{:<8} {:>12} {:>12} {:>9} {:>9}", "tech", "CCA T_par[s]", "DCA T_par[s]", "CCA S", "DCA S");
+    println!(
+        "{:<8} {:>12} {:>12} {:>9} {:>9}",
+        "tech", "CCA T_par[s]", "DCA T_par[s]", "CCA S", "DCA S"
+    );
     for tech in TechniqueKind::EVALUATED {
         let mut t = vec![];
         let mut chunks = vec![];

@@ -1,0 +1,727 @@
+#!/usr/bin/env python3
+"""Reference model of `benches/hier_sweep.rs` — generates the committed
+bench baseline.
+
+This is a line-faithful Python port of the repository's deterministic DES
+(`rust/src/des/mod.rs` for CCA / DCA / DCA-RMA, `rust/src/hier/mod.rs` +
+`rust/src/hier/protocol.rs` for HIER-DCA), restricted to exactly what the
+bench exercises: the miniHPC geometry (16 nodes x 16 ranks), SS for the
+flat models, FAC2(outer) |> SS(inner) for the hierarchy, constant iteration
+cost 5 ms, N = 65536, and the four delay scenarios. The DES is
+deterministic virtual-time simulation, so a faithful port reproduces the
+Rust t_par values to float precision; the CI gate still allows a tolerance
+(see ci/compare_bench.py) to absorb any residual divergence.
+
+The port mirrors the Rust event loops path-for-path, including the event
+heap's FIFO tie-breaking on equal timestamps, because same-time event
+order changes the schedule.
+
+Usage:  python3 python/tools/hier_sweep_model.py [out.json]
+        (default out path: benches/baselines/hier_sweep.json)
+"""
+
+import heapq
+import json
+import math
+import os
+import sys
+from collections import deque
+
+# -- constants of the bench configuration (benches/hier_sweep.rs) ----------
+
+N = 65536
+NODES = 16
+RPN = 16
+P = NODES * RPN  # 256
+INTRA = 0.5e-6
+INTER = 2.0e-6
+SERVICE = 0.5e-6
+CALC = 0.2e-6
+BREAK_AFTER = 1
+COST = 5e-3  # constant per-iteration cost
+OUTER_N_OVER_P = N / NODES  # FAC2 outer: 4096.0
+
+
+def ns(seconds):
+    """rust/src/des/heap.rs::ns — round half away from zero (f64::round)."""
+    x = seconds * 1e9
+    f = math.floor(x)
+    r = x - f
+    if r > 0.5:
+        return int(f) + 1
+    if r < 0.5:
+        return int(f)
+    return int(f) + 1  # exactly .5, positive -> away from zero
+
+
+def secs(t_ns):
+    return t_ns / 1e9
+
+
+def node_of(rank):
+    return rank // RPN
+
+
+def lat_ns(a, b):
+    if a == b:
+        return 0
+    if node_of(a) == node_of(b):
+        return ns(INTRA)
+    return ns(INTER)
+
+
+def fac2_outer_closed(step):
+    """rust/src/techniques/fac.rs::FacConsts::closed bound to (N, NODES)."""
+    batch = step // NODES + 1
+    return max(0, math.ceil(0.5**batch * OUTER_N_OVER_P))
+
+
+class WorkQueue:
+    """rust/src/sched/mod.rs::WorkQueue (min_chunk = 1)."""
+
+    def __init__(self, n):
+        self.n = n
+        self.next_start = 0
+        self.next_step = 0
+
+    def remaining(self):
+        return self.n - self.next_start
+
+    def is_done(self):
+        return self.next_start >= self.n
+
+    def clip(self, unclipped):
+        return min(max(unclipped, 1), self.remaining())
+
+    def assign(self, unclipped):
+        if self.is_done():
+            return None
+        size = self.clip(unclipped)
+        a = (self.next_step, self.next_start, size)
+        self.next_start += size
+        self.next_step += 1
+        return a
+
+    def begin_step(self):
+        if self.is_done():
+            return None
+        t = (self.next_step, self.remaining())
+        self.next_step += 1
+        return t
+
+    def commit(self, step, unclipped):
+        if self.is_done():
+            return None
+        size = self.clip(unclipped)
+        a = (step, self.next_start, size)
+        self.next_start += size
+        return a
+
+
+class Heap:
+    """rust/src/des/heap.rs::EventHeap — (time, seq) min-heap, FIFO ties."""
+
+    def __init__(self):
+        self.h = []
+        self.seq = 0
+
+    def push(self, at, ev):
+        heapq.heappush(self.h, (at, self.seq, ev))
+        self.seq += 1
+
+    def pop(self):
+        if not self.h:
+            return None
+        at, _, ev = heapq.heappop(self.h)
+        return at, ev
+
+
+# ---------------------------------------------------------------------------
+# flat models (rust/src/des/mod.rs), SS technique: every chunk size is 1
+
+
+class FlatSim:
+    def __init__(self, model, delay_calc, delay_assign):
+        self.model = model  # 'cca' | 'dca' | 'rma'
+        self.dc = delay_calc
+        self.da = delay_assign
+        self.heap = Heap()
+        self.now = 0
+        self.queue = WorkQueue(N)
+        self.svc = deque()
+        self.rank0_busy = False
+        self.own = ("needwork",)
+        self.rank0_finish = 0
+        self.nic = deque()
+        self.nic_busy = False
+        self.finish = [0] * P
+        self.granted = 0
+
+    # -- helpers ----------------------------------------------------------
+
+    def exec_ns(self, size):
+        return ns(COST * size)
+
+    def send_svc(self, src, task):
+        self.heap.push(self.now + lat_ns(src, 0), ("svc", task))
+
+    def send_reply(self, w, reply, at):
+        self.heap.push(at + lat_ns(0, w), ("reply", w, reply))
+
+    def send_nic(self, w, op, extra):
+        self.heap.push(self.now + extra + lat_ns(w, 0), ("nic", w, op))
+
+    def worker_send_request(self, w):
+        task = ("request", w) if self.model == "cca" else ("getstep", w)
+        self.heap.push(self.now + lat_ns(w, 0), ("svc", task))
+
+    # -- bootstrap --------------------------------------------------------
+
+    def run(self):
+        if self.model in ("cca", "dca"):
+            for w in range(1, P):
+                self.worker_send_request(w)
+            self.heap.push(0, ("rank0free",))
+        else:
+            for w in range(P):
+                self.send_nic(w, ("reserve",), 0)
+            self.own = ("finished",)
+        while True:
+            popped = self.heap.pop()
+            if popped is None:
+                break
+            self.now, ev = popped
+            self.dispatch(ev)
+        assert self.granted == N, f"{self.model}: granted {self.granted} != {N}"
+        finish = [secs(f) for f in self.finish]
+        if self.model != "rma":
+            finish[0] = max(finish[0], secs(self.rank0_finish))
+        return max(finish)
+
+    def dispatch(self, ev):
+        kind = ev[0]
+        if kind == "svc":
+            self.svc.append(ev[1])
+            if not self.rank0_busy:
+                self.heap.push(self.now, ("rank0free",))
+                self.rank0_busy = True
+        elif kind == "rank0free":
+            self.rank0_next_action()
+        elif kind == "reply":
+            self.worker_on_reply(ev[1], ev[2])
+        elif kind == "calcdone":
+            _, w, step, size = ev
+            self.send_svc(w, ("commit", w, step, size))
+        elif kind == "execdone":
+            w = ev[1]
+            self.finish[w] = self.now
+            if self.model == "rma":
+                self.send_nic(w, ("reserve",), 0)
+            else:
+                self.worker_send_request(w)
+        elif kind == "nic":
+            self.nic.append((ev[1], ev[2]))
+            if not self.nic_busy:
+                self.heap.push(self.now, ("nicfree",))
+                self.nic_busy = True
+        elif kind == "nicfree":
+            self.nic_next_op()
+
+    # -- rank 0 -----------------------------------------------------------
+
+    def rank0_next_action(self):
+        if self.svc:
+            task = self.svc.popleft()
+            dur = self.service(task)
+            self.rank0_busy = True
+            self.rank0_finish = self.now + dur
+            self.heap.push(self.now + dur, ("rank0free",))
+            return
+        own = self.own
+        self.own = ("finished",)
+        kind = own[0]
+        if kind == "needwork":
+            if self.model == "cca":
+                dur = ns(SERVICE + self.dc + CALC + self.da)
+                a = self.queue.assign(1)
+                if a is not None:
+                    self.granted += a[2]
+                    self.own = ("exec", a[1], a[1] + a[2])
+                else:
+                    self.own = ("finished",)
+            else:  # dca
+                t = self.queue.begin_step()
+                if t is not None:
+                    self.own = ("calc", t[0])
+                else:
+                    self.own = ("finished",)
+                dur = ns(SERVICE)
+            self.finish_own(dur)
+        elif kind == "calc":
+            dur = ns(self.dc + CALC)
+            self.own = ("commit", own[1], 1)
+            self.finish_own(dur)
+        elif kind == "commit":
+            dur = ns(SERVICE + self.da)
+            a = self.queue.commit(own[1], own[2])
+            if a is not None:
+                self.granted += a[2]
+                self.own = ("exec", a[1], a[1] + a[2])
+            else:
+                self.own = ("finished",)
+            self.finish_own(dur)
+        elif kind == "exec":
+            _, cursor, end = own
+            seg = min(BREAK_AFTER, end - cursor)
+            dur = ns(COST * seg)
+            if cursor + seg < end:
+                self.own = ("exec", cursor + seg, end)
+            else:
+                self.own = ("needwork",)
+            self.finish_own(dur)
+        else:  # finished
+            self.own = ("finished",)
+            self.rank0_busy = False
+
+    def finish_own(self, dur):
+        self.rank0_busy = True
+        self.rank0_finish = self.now + dur
+        self.heap.push(self.now + dur, ("rank0free",))
+
+    def service(self, task):
+        kind = task[0]
+        if kind == "request":  # CCA: calculation serialized at the master
+            w = task[1]
+            dur = ns(SERVICE + self.dc + CALC + self.da)
+            a = self.queue.assign(1)
+            if a is not None:
+                self.granted += a[2]
+                self.send_reply(w, ("chunk", a[1], a[2]), self.now + dur)
+            else:
+                self.send_reply(w, ("done",), self.now + dur)
+            return dur
+        if kind == "getstep":  # DCA phase 1: O(1) bump
+            w = task[1]
+            dur = ns(SERVICE)
+            t = self.queue.begin_step()
+            if t is not None:
+                self.send_reply(w, ("step", t[0]), self.now + dur)
+            else:
+                self.send_reply(w, ("done",), self.now + dur)
+            return dur
+        # DCA phase 2 commit
+        _, w, step, size = task
+        dur = ns(SERVICE + self.da)
+        a = self.queue.commit(step, size)
+        if a is not None:
+            self.granted += a[2]
+            self.send_reply(w, ("chunk", a[1], a[2]), self.now + dur)
+        else:
+            self.send_reply(w, ("done",), self.now + dur)
+        return dur
+
+    # -- workers ----------------------------------------------------------
+
+    def worker_on_reply(self, w, reply):
+        kind = reply[0]
+        if kind == "chunk":
+            dur = self.exec_ns(reply[2])
+            self.heap.push(self.now + dur, ("execdone", w))
+        elif kind == "step":
+            dur = ns(self.dc + CALC)
+            self.heap.push(self.now + dur, ("calcdone", w, reply[1], 1))
+        else:  # done
+            self.finish[w] = self.now
+
+    # -- RMA NIC ----------------------------------------------------------
+
+    def nic_next_op(self):
+        if not self.nic:
+            self.nic_busy = False
+            return
+        w, op = self.nic.popleft()
+        dur = ns(SERVICE)
+        if op[0] == "reserve":
+            t = self.queue.begin_step()
+            if t is not None:
+                back = self.now + dur + lat_ns(0, w)
+                calc = ns(self.dc + CALC)
+                claim_sent = back + calc + ns(self.da)
+                arrive = claim_sent + lat_ns(w, 0)
+                self.heap.push(arrive, ("nic", w, ("claim", t[0], 1)))
+            else:
+                self.finish[w] = self.now + dur + lat_ns(0, w)
+        else:  # claim
+            _, step, size = op
+            a = self.queue.commit(step, size)
+            if a is not None:
+                self.granted += a[2]
+                start_exec = self.now + dur + lat_ns(0, w)
+                self.heap.push(start_exec + self.exec_ns(a[2]), ("execdone", w))
+            else:
+                self.finish[w] = self.now + dur + lat_ns(0, w)
+        self.heap.push(self.now + dur, ("nicfree",))
+        self.nic_busy = True
+
+
+# ---------------------------------------------------------------------------
+# HIER-DCA (rust/src/hier/mod.rs + protocol.rs), FAC2 outer |> SS inner
+
+
+class Ledger:
+    """rust/src/hier/protocol.rs::NodeLedger (inner SS, no prefetch)."""
+
+    def __init__(self):
+        self.seq = 0
+        self.q = None  # WorkQueue over [0, len)
+        self.offset = 0
+
+    def current_live(self):
+        return self.q is not None and not self.q.is_done()
+
+    def has_work(self):
+        return self.current_live()
+
+    def install(self, start, size):
+        self.seq += 1
+        self.q = WorkQueue(size)
+        self.offset = start
+
+    def reserve(self):
+        if not self.current_live():
+            return None
+        t = self.q.begin_step()
+        return (t[0], t[1], self.seq)
+
+    def commit(self, step, size, seq):
+        if self.q is not None and not self.q.is_done() and self.seq == seq:
+            a = self.q.commit(step, size)
+            return ("granted", a[0], a[1] + self.offset, a[2])
+        if self.has_work():
+            return ("stale",)
+        return ("drained",)
+
+
+class Master:
+    def __init__(self, m):
+        self.rank = m * RPN
+        self.queue = deque()
+        self.busy = False
+        self.cpu_busy_until = 0
+        self.ledger = Ledger()
+        self.parked = deque()
+        self.own_parked = False
+        self.fetching = False
+        self.global_done = False
+        self.own = ("needwork",)
+
+
+class HierSim:
+    def __init__(self, delay_calc, delay_assign):
+        self.dc = delay_calc
+        self.da = delay_assign
+        self.heap = Heap()
+        self.now = 0
+        self.outer_q = WorkQueue(N)
+        self.masters = [Master(m) for m in range(NODES)]
+        self.finish = [0] * P
+        self.granted = 0
+
+    def run(self):
+        for w in range(P):
+            m = node_of(w)
+            if w == self.masters[m].rank:
+                continue
+            self.send_inner(w, ("innerget", w), 0)
+        for m in range(NODES):
+            self.masters[m].busy = True
+            self.heap.push(0, ("serverfree", m))
+        while True:
+            popped = self.heap.pop()
+            if popped is None:
+                break
+            self.now, ev = popped
+            self.dispatch(ev)
+        assert self.granted == N, f"hier: granted {self.granted} != {N}"
+        finish = [secs(f) for f in self.finish]
+        for master in self.masters:
+            r = master.rank
+            finish[r] = max(finish[r], secs(master.cpu_busy_until))
+        return max(finish)
+
+    def dispatch(self, ev):
+        kind = ev[0]
+        if kind == "arrive":
+            _, m, task = ev
+            master = self.masters[m]
+            master.queue.append(task)
+            if not master.busy:
+                master.busy = True
+                self.heap.push(self.now, ("serverfree", m))
+        elif kind == "serverfree":
+            self.server_next_action(ev[1])
+        elif kind == "workerreply":
+            self.worker_on_reply(ev[1], ev[2])
+        elif kind == "calcdone":
+            _, w, step, size, seq = ev
+            self.send_inner(w, ("innercommit", w, step, size, seq), 0)
+        elif kind == "execdone":
+            w = ev[1]
+            self.send_inner(w, ("innerget", w), 0)
+
+    # -- messaging --------------------------------------------------------
+
+    def send_inner(self, w, task, extra):
+        m = node_of(w)
+        mrank = self.masters[m].rank
+        self.heap.push(self.now + extra + lat_ns(w, mrank), ("arrive", m, task))
+
+    def send_to_master(self, to, task, dur):
+        coord = self.masters[0].rank
+        mrank = self.masters[to].rank
+        self.heap.push(self.now + dur + lat_ns(coord, mrank), ("arrive", to, task))
+
+    def send_worker(self, m, w, reply, dur):
+        mrank = self.masters[m].rank
+        self.heap.push(self.now + dur + lat_ns(mrank, w), ("workerreply", w, reply))
+
+    # -- master CPU -------------------------------------------------------
+
+    def server_next_action(self, m):
+        master = self.masters[m]
+        if master.queue:
+            task = master.queue.popleft()
+            dur = self.service(m, task)
+            master.busy = True
+            master.cpu_busy_until = self.now + dur
+            self.heap.push(self.now + dur, ("serverfree", m))
+            return
+        self.own_next_action(m)
+
+    def service(self, m, task):
+        kind = task[0]
+        if kind == "innerget":
+            w = task[1]
+            dur = ns(SERVICE)
+            self.inner_get(m, w, dur)
+            return dur
+        if kind == "innercommit":
+            _, w, step, size, seq = task
+            dur = ns(SERVICE + self.da)
+            self.inner_commit(m, w, step, size, seq, dur)
+            return dur
+        if kind == "outerget":
+            frm = task[1]
+            dur = ns(SERVICE)
+            t = self.outer_q.begin_step()
+            if t is not None:
+                self.send_to_master(frm, ("outerstep", t[0]), dur)
+            else:
+                self.send_to_master(frm, ("outerdone",), dur)
+            return dur
+        if kind == "outercommit":
+            _, frm, step, size = task
+            dur = ns(SERVICE + self.da)
+            a = self.outer_q.commit(step, size)
+            if a is not None:
+                self.send_to_master(frm, ("outerchunk", a[1], a[2]), dur)
+            else:
+                self.send_to_master(frm, ("outerdone",), dur)
+            return dur
+        if kind == "outerstep":
+            step = task[1]
+            mrank = self.masters[m].rank
+            dur = ns(self.dc + CALC)
+            size = fac2_outer_closed(step)
+            coord = self.masters[0].rank
+            self.heap.push(
+                self.now + dur + lat_ns(mrank, coord),
+                ("arrive", 0, ("outercommit", m, step, size)),
+            )
+            return dur
+        if kind == "outerchunk":
+            _, start, size = task
+            dur = ns(SERVICE)
+            self.install_chunk(m, start, size)
+            return dur
+        # outerdone
+        dur = ns(SERVICE)
+        master = self.masters[m]
+        master.global_done = True
+        master.fetching = False
+        self.requeue_parked(m)
+        return dur
+
+    def inner_get(self, m, w, dur):
+        r = self.masters[m].ledger.reserve()
+        if r is not None:
+            self.send_worker(m, w, ("step", r[0], r[2]), dur)
+        elif self.masters[m].global_done:
+            self.send_worker(m, w, ("done",), dur)
+        else:
+            self.masters[m].parked.append(w)
+            self.maybe_fetch(m, dur)
+
+    def inner_commit(self, m, w, step, size, seq, dur):
+        out = self.masters[m].ledger.commit(step, size, seq)
+        if out[0] == "granted":
+            self.granted += out[3]
+            self.send_worker(m, w, ("chunk", out[2], out[3]), dur)
+        elif out[0] == "stale":
+            self.inner_get(m, w, dur)
+        elif self.masters[m].global_done:
+            self.send_worker(m, w, ("done",), dur)
+        else:
+            self.masters[m].parked.append(w)
+            self.maybe_fetch(m, dur)
+
+    def maybe_fetch(self, m, dur):
+        master = self.masters[m]
+        if master.fetching or master.global_done:
+            return
+        master.fetching = True
+        mrank = master.rank
+        coord = self.masters[0].rank
+        self.heap.push(
+            self.now + dur + lat_ns(mrank, coord), ("arrive", 0, ("outerget", m))
+        )
+
+    def install_chunk(self, m, start, size):
+        master = self.masters[m]
+        master.ledger.install(start, size)
+        master.fetching = False
+        self.requeue_parked(m)
+
+    def requeue_parked(self, m):
+        master = self.masters[m]
+        while master.parked:
+            w = master.parked.popleft()
+            master.queue.append(("innerget", w))
+        if master.own_parked:
+            master.own_parked = False
+            master.own = ("needwork",)
+
+    # -- workers ----------------------------------------------------------
+
+    def worker_on_reply(self, w, reply):
+        kind = reply[0]
+        if kind == "step":
+            dur = ns(self.dc + CALC)
+            self.heap.push(self.now + dur, ("calcdone", w, reply[1], 1, reply[2]))
+        elif kind == "chunk":
+            dur = ns(COST * reply[2])
+            self.heap.push(self.now + dur, ("execdone", w))
+        else:  # done
+            self.finish[w] = self.now
+
+    # -- master's own personality ----------------------------------------
+
+    def own_next_action(self, m):
+        master = self.masters[m]
+        own = master.own
+        master.own = ("finished",)
+        kind = own[0]
+        if kind == "needwork":
+            dur = ns(SERVICE)
+            r = master.ledger.reserve()
+            if r is not None:
+                master.own = ("calc", r[0], r[2])
+            elif master.global_done:
+                self.finish_own(m)
+            else:
+                master.own = ("parked",)
+                master.own_parked = True
+                self.maybe_fetch(m, dur)
+            self.finish_server_action(m, dur)
+        elif kind == "calc":
+            dur = ns(self.dc + CALC)
+            master.own = ("commit", own[1], 1, own[2])
+            self.finish_server_action(m, dur)
+        elif kind == "commit":
+            _, step, size, seq = own
+            dur = ns(SERVICE + self.da)
+            out = master.ledger.commit(step, size, seq)
+            if out[0] == "granted":
+                self.granted += out[3]
+                master.own = ("exec", out[2], out[2] + out[3])
+            elif out[0] == "stale":
+                master.own = ("needwork",)
+            elif master.global_done:
+                self.finish_own(m)
+            else:
+                master.own = ("parked",)
+                master.own_parked = True
+                self.maybe_fetch(m, dur)
+            self.finish_server_action(m, dur)
+        elif kind == "exec":
+            _, cursor, end = own
+            seg = min(BREAK_AFTER, end - cursor)
+            dur = ns(COST * seg)
+            if cursor + seg < end:
+                master.own = ("exec", cursor + seg, end)
+            else:
+                master.own = ("needwork",)
+            self.finish_server_action(m, dur)
+        elif kind == "parked":
+            master.own = ("parked",)
+            master.busy = False
+        else:  # finished
+            master.own = ("finished",)
+            master.busy = False
+
+    def finish_own(self, m):
+        master = self.masters[m]
+        master.own = ("finished",)
+        r = master.rank
+        self.finish[r] = max(self.finish[r], self.now)
+
+    def finish_server_action(self, m, dur):
+        master = self.masters[m]
+        master.busy = True
+        master.cpu_busy_until = self.now + dur
+        self.heap.push(self.now + dur, ("serverfree", m))
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "benches", "baselines", "hier_sweep.json"
+    )
+    scenarios = [
+        ("no delay", 0.0, 0.0),
+        ("calc 10 µs", 10e-6, 0.0),
+        ("calc 100 µs (extreme)", 100e-6, 0.0),
+        ("assignment 100 µs (extreme)", 0.0, 100e-6),
+    ]
+    rows = []
+    for label, dc, da in scenarios:
+        cca = FlatSim("cca", dc, da).run()
+        dca = FlatSim("dca", dc, da).run()
+        rma = FlatSim("rma", dc, da).run()
+        hier = HierSim(dc, da).run()
+        print(
+            f"{label:<28} CCA {cca:8.3f}  DCA {dca:8.3f}  "
+            f"RMA {rma:8.3f}  HIER {hier:8.3f}  (hier/dca {hier / dca:.3f})"
+        )
+        rows.append(
+            {
+                "scenario": label,
+                "CCA": cca,
+                "DCA": dca,
+                "DCA-RMA": rma,
+                "HIER-DCA": hier,
+            }
+        )
+    doc = {"bench": "hier_sweep", "n": N, "ranks": P, "scenarios": rows}
+    out_path = os.path.normpath(out_path)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

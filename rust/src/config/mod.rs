@@ -75,18 +75,30 @@ pub enum DelaySite {
 /// The *outer* technique (which sizes node-chunks at the global coordinator
 /// level) is the experiment's main `technique`; this struct only adds what
 /// the flat models don't have: the *inner* technique each node master uses
-/// to re-subdivide its node-chunk among its local ranks. The node geometry
-/// (`nodes` × `ranks_per_node`) comes from [`ClusterConfig`].
+/// to re-subdivide its node-chunk among its local ranks, and the outer-level
+/// prefetch watermark. The node geometry (`nodes` × `ranks_per_node`) comes
+/// from [`ClusterConfig`] (DES) or the engine config (threaded).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct HierParams {
     /// Intra-node (inner) technique; `None` ⇒ reuse the outer technique.
     pub inner: Option<TechniqueKind>,
+    /// Outer-level prefetch: a node master requests its *next* node-chunk
+    /// once the current one has ≤ this many unassigned iterations left,
+    /// hiding the inter-node round trip plus the outer chunk calculation
+    /// behind the tail of the current chunk. `None` ⇒ fetch on exhaustion
+    /// (the original arXiv 1903.09510 behavior).
+    pub prefetch_watermark: Option<u64>,
 }
 
 impl HierParams {
     /// Use `inner` within nodes, regardless of the outer technique.
     pub fn with_inner(inner: TechniqueKind) -> Self {
-        HierParams { inner: Some(inner) }
+        HierParams { inner: Some(inner), ..Self::default() }
+    }
+
+    /// Enable outer-level prefetch at the given watermark (in iterations).
+    pub fn with_watermark(self, watermark: u64) -> Self {
+        HierParams { prefetch_watermark: Some(watermark), ..self }
     }
 
     /// Resolve the inner technique given the experiment's outer technique.
@@ -260,8 +272,12 @@ mod tests {
     fn hier_params_inner_resolution() {
         let same = HierParams::default();
         assert_eq!(same.inner_or(TechniqueKind::Gss), TechniqueKind::Gss);
+        assert_eq!(same.prefetch_watermark, None, "prefetch is opt-in");
         let mixed = HierParams::with_inner(TechniqueKind::Ss);
         assert_eq!(mixed.inner_or(TechniqueKind::Gss), TechniqueKind::Ss);
+        let prefetching = mixed.with_watermark(64);
+        assert_eq!(prefetching.inner, Some(TechniqueKind::Ss));
+        assert_eq!(prefetching.prefetch_watermark, Some(64));
     }
 
     #[test]

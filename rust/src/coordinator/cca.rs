@@ -133,8 +133,7 @@ mod tests {
     use crate::workload::synthetic::{CostShape, Synthetic};
 
     fn run_kind(kind: TechniqueKind, n: u64, p: u32) -> RunResult {
-        let w: Arc<dyn Workload> =
-            Arc::new(Synthetic::new(n, 5e-8, CostShape::Uniform, 3));
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(n, 5e-8, CostShape::Uniform, 3));
         let cfg = EngineConfig::new(LoopParams::new(n, p), kind, ExecutionModel::Cca);
         run(&cfg, w).unwrap()
     }

@@ -70,8 +70,7 @@ fn coordinator_loop(
         let env = ep.recv()?;
         match env.payload {
             Msg::ToCoord(WorkerMsg::GetStep { rank, report }) => {
-                if let (Some(af), Some(PerfReport { iters, elapsed })) = (af.as_mut(), report)
-                {
+                if let (Some(af), Some(PerfReport { iters, elapsed })) = (af.as_mut(), report) {
                     af.record(rank as usize, iters, elapsed);
                 }
                 match q.begin_step() {
@@ -190,8 +189,7 @@ mod tests {
     use crate::workload::synthetic::{CostShape, Synthetic};
 
     fn run_kind(kind: TechniqueKind, n: u64, p: u32) -> RunResult {
-        let w: Arc<dyn Workload> =
-            Arc::new(Synthetic::new(n, 5e-8, CostShape::Uniform, 3));
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(n, 5e-8, CostShape::Uniform, 3));
         let cfg = EngineConfig::new(LoopParams::new(n, p), kind, ExecutionModel::Dca);
         run(&cfg, w).unwrap()
     }
@@ -205,8 +203,7 @@ mod tests {
     #[test]
     fn dca_sends_more_messages_than_cca() {
         // §7: "DCA incurs more communication messages than CCA".
-        let w: Arc<dyn Workload> =
-            Arc::new(Synthetic::new(4_000, 5e-8, CostShape::Uniform, 3));
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(4_000, 5e-8, CostShape::Uniform, 3));
         let params = LoopParams::new(4_000, 4);
         let c = super::super::cca::run(
             &EngineConfig::new(params.clone(), TechniqueKind::Tss, ExecutionModel::Cca),

@@ -94,8 +94,7 @@ mod tests {
 
     #[test]
     fn covers_with_zero_messages() {
-        let w: Arc<dyn Workload> =
-            Arc::new(Synthetic::new(10_000, 5e-8, CostShape::Uniform, 3));
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(10_000, 5e-8, CostShape::Uniform, 3));
         let r = run(&cfg(TechniqueKind::Fac2, 10_000, 8), w).unwrap();
         verify_coverage(&r.sorted_assignments(), 10_000).unwrap();
         assert_eq!(r.stats.messages, 0, "RMA path exchanges no messages");
@@ -103,16 +102,14 @@ mod tests {
 
     #[test]
     fn af_is_rejected_with_useful_error() {
-        let w: Arc<dyn Workload> =
-            Arc::new(Synthetic::new(100, 1e-8, CostShape::Uniform, 3));
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(100, 1e-8, CostShape::Uniform, 3));
         let err = run(&cfg(TechniqueKind::Af, 100, 2), w).unwrap_err().to_string();
         assert!(err.contains("straightforward"), "{err}");
     }
 
     #[test]
     fn matches_two_sided_dca_chunk_totals() {
-        let w: Arc<dyn Workload> =
-            Arc::new(Synthetic::new(5_000, 5e-8, CostShape::Uniform, 3));
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(5_000, 5e-8, CostShape::Uniform, 3));
         let rma = run(&cfg(TechniqueKind::Tss, 5_000, 4), Arc::clone(&w)).unwrap();
         let two = super::super::dca::run(
             &EngineConfig::new(LoopParams::new(5_000, 4), TechniqueKind::Tss, ExecutionModel::Dca),

@@ -1,0 +1,656 @@
+//! The two-level hierarchical model (`HierDca`) on **real threads** — the
+//! wall-clock counterpart of the DES protocol in [`crate::hier`], sharing
+//! its chunk-ledger state machine ([`crate::hier::protocol`]) so both
+//! engines validate literally the same two-phase reserve/commit and
+//! stale-`seq` NACK semantics.
+//!
+//! Thread topology for `P` ranks split into `nodes` groups of `rpn = P /
+//! nodes` (block placement, like [`crate::substrate::topology::Topology`]):
+//!
+//! * the **global coordinator** runs on the calling thread (fabric rank
+//!   `P`), owns the outer [`WorkQueue`] over the whole loop, and serves the
+//!   outer DCA protocol: `OuterGet → OuterStep` reserves a node-step,
+//!   `OuterCommit → OuterChunk` grants a node-chunk. Node-chunk sizes are
+//!   calculated **on the node masters** with the outer technique bound to
+//!   `P = nodes` — distributed chunk calculation one level up, so the
+//!   injected calculation delay is paid in parallel across nodes;
+//! * each **node master** (first rank of its group) is *non-dedicated*: it
+//!   serves its local ranks' inner protocol from the shared
+//!   [`NodeLedger`], runs the outer protocol against the coordinator, and
+//!   executes iterations itself, draining its message queue between
+//!   execution slices so local ranks are never starved for a whole chunk;
+//! * each **local rank** self-schedules against its node master exactly
+//!   like a flat DCA worker, with the node-chunk `seq` threaded through the
+//!   two-phase exchange: phase-1 `Step` replies carry the node-chunk length
+//!   so the worker binds the inner technique itself (no shared memory), and
+//!   a commit against a replaced node-chunk is NACKed into a fresh `Step`.
+//!
+//! **Outer prefetch** ([`crate::config::HierParams::prefetch_watermark`]):
+//! masters request the next node-chunk once the current one drops to the
+//! watermark; the reply is staged in the ledger and promoted when the
+//! current chunk drains, hiding the outer round trip entirely — measurably
+//! lower scheduling wait than fetch-on-exhaustion (see
+//! `tests/threaded_hier.rs`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::thread;
+use std::time::Instant;
+
+use super::protocol::{AfInfo, PerfReport};
+use super::{execute_chunk, EngineConfig, RankSummary, RunResult};
+use crate::hier::protocol::{af_recap, with_np, InnerCommit, NodeLedger};
+use crate::sched::{Assignment, StepTicket, WorkQueue};
+use crate::substrate::delay::spin_for;
+use crate::substrate::msg::{fabric, Endpoint};
+use crate::techniques::af::{af_requester_chunk, AfCalculator, AfGlobals, PeStats};
+use crate::techniques::{Technique, TechniqueKind};
+use crate::workload::Workload;
+
+/// Iterations a master executes between message-queue drains — the threaded
+/// analogue of the LB tool's `breakAfter` interleaving.
+const MASTER_SLICE: u64 = 256;
+
+/// Wire messages of both tiers (one fabric carries both; the tiers are told
+/// apart by the variant).
+#[derive(Debug, Clone, Copy)]
+enum Msg {
+    // -- inner tier: local rank ↔ its node master ------------------------
+    /// Phase 1 request: "reserve me a local step" (+ AF perf piggyback).
+    Get { rank: u32, report: Option<PerfReport> },
+    /// Phase 1 reply: reserved step of node-chunk `seq`; `chunk_len` lets
+    /// the worker bind the inner technique itself, `remaining` feeds AF.
+    Step { step: u64, remaining: u64, seq: u64, chunk_len: u64, af: Option<AfInfo> },
+    /// Phase 2 request: "commit my locally calculated `size` for `step`".
+    Commit { rank: u32, step: u64, size: u64, seq: u64 },
+    /// Phase 2 reply: the granted absolute range.
+    Chunk(Assignment),
+    /// No work left anywhere — terminate.
+    Done,
+    // -- outer tier: node master ↔ global coordinator --------------------
+    /// Master asks for an outer step (+ node-throughput piggyback for AF).
+    OuterGet { node: u32, report: Option<PerfReport> },
+    /// Coordinator reply: reserved outer step (+ AF aggregates). Handling
+    /// it *is* the outer chunk calculation, on the master's CPU.
+    OuterStep { ticket: StepTicket, af: Option<AfInfo> },
+    /// Master commits its node-chunk size.
+    OuterCommit { node: u32, ticket: StepTicket, size: u64 },
+    /// Coordinator reply: the committed node-chunk.
+    OuterChunk(Assignment),
+    /// Coordinator reply: the loop is exhausted.
+    OuterDone,
+}
+
+/// Block-placement geometry of the run (the threaded analogue of
+/// [`crate::substrate::topology::Topology`], without latency classes —
+/// latencies here are real).
+#[derive(Debug, Clone, Copy)]
+struct Geom {
+    nodes: u32,
+    rpn: u32,
+    p: u32,
+}
+
+impl Geom {
+    fn node_of(&self, rank: u32) -> u32 {
+        rank / self.rpn
+    }
+
+    fn master_rank(&self, node: u32) -> u32 {
+        node * self.rpn
+    }
+
+    /// The global coordinator's fabric rank.
+    fn coord(&self) -> u32 {
+        self.p
+    }
+}
+
+/// Message counters split by latency class. Inner traffic is always
+/// intra-node; outer traffic is inter-node **except node 0's**, because the
+/// coordinator is hosted on node 0's master on the real machine (and in the
+/// DES) — keeping the split directly comparable across the two substrates.
+#[derive(Debug, Default)]
+struct Tally {
+    intra: AtomicU64,
+    inter: AtomicU64,
+}
+
+impl Tally {
+    /// Count one outer-tier message for `node`'s master.
+    fn count_outer(&self, node: u32) {
+        if node == 0 {
+            self.intra.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.inter.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Run the threaded two-level engine: `P` rank threads (masters + local
+/// ranks) plus the global coordinator loop on the calling thread.
+pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<RunResult> {
+    let p = cfg.params.p;
+    let nodes = cfg.nodes;
+    anyhow::ensure!(p >= 1, "need at least one worker");
+    anyhow::ensure!(nodes >= 1, "need at least one node");
+    anyhow::ensure!(
+        p % nodes == 0,
+        "the two-level engine places ranks in blocks: nodes ({nodes}) must divide \
+         the worker count ({p})"
+    );
+    let geom = Geom { nodes, rpn: p / nodes, p };
+    let (mut eps, _sent) = fabric::<Msg>(p + 1);
+    let coord_ep = eps.pop().expect("coordinator endpoint");
+    let barrier = Arc::new(Barrier::new(p as usize + 1));
+    let tally = Arc::new(Tally::default());
+
+    let mut handles = Vec::with_capacity(p as usize);
+    for ep in eps {
+        let rank = ep.rank();
+        let w = Arc::clone(&workload);
+        let b = Arc::clone(&barrier);
+        let t = Arc::clone(&tally);
+        let c = cfg.clone();
+        handles.push(thread::spawn(move || {
+            if rank % geom.rpn == 0 {
+                NodeMaster::new(c, geom, ep, w, t).run(&b)
+            } else {
+                worker_loop(&c, geom, ep, w, &b, &t)
+            }
+        }));
+    }
+
+    coordinator_loop(cfg, geom, coord_ep, &barrier, &tally)?;
+
+    let per_rank: Vec<RankSummary> =
+        handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect();
+    let intra = tally.intra.load(Ordering::Relaxed);
+    let inter = tally.inter.load(Ordering::Relaxed);
+    Ok(RunResult::assemble_split(per_rank, intra, inter))
+}
+
+// ---------------------------------------------------------------------------
+// global coordinator
+
+/// Outer-protocol service loop — assignment only, O(1) work per message;
+/// the node-chunk *calculation* happens on the masters.
+fn coordinator_loop(
+    cfg: &EngineConfig,
+    geom: Geom,
+    ep: Endpoint<Msg>,
+    barrier: &Barrier,
+    tally: &Tally,
+) -> anyhow::Result<()> {
+    let outer_params = with_np(&cfg.params, cfg.params.n, geom.nodes);
+    let is_af = cfg.technique == TechniqueKind::Af;
+    let mut af = is_af.then(|| AfCalculator::new(&outer_params));
+    let mut q = WorkQueue::from_params(&cfg.params);
+    let mut active = geom.nodes;
+
+    let send = |ep: &Endpoint<Msg>, dst: u32, msg: Msg| -> anyhow::Result<()> {
+        tally.count_outer(geom.node_of(dst));
+        ep.send(dst, msg)?;
+        Ok(())
+    };
+
+    barrier.wait();
+    while active > 0 {
+        let env = ep.recv()?;
+        match env.payload {
+            Msg::OuterGet { node, report } => {
+                if let (Some(af), Some(PerfReport { iters, elapsed })) = (af.as_mut(), report) {
+                    af.record(node as usize, iters, elapsed);
+                }
+                let reply = match q.begin_step() {
+                    Some(ticket) => {
+                        let info = af
+                            .as_ref()
+                            .and_then(|a| a.globals())
+                            .map(|g| AfInfo { d: g.d, e: g.e });
+                        Msg::OuterStep { ticket, af: info }
+                    }
+                    None => {
+                        active -= 1;
+                        Msg::OuterDone
+                    }
+                };
+                send(&ep, env.src, reply)?;
+            }
+            Msg::OuterCommit { node: _, ticket, size } => {
+                // Chunk ASSIGNMENT — the only synchronized outer operation.
+                spin_for(cfg.delay.assignment);
+                // Outer AF: re-cap against fresh R (stale-ticket protection).
+                let size = if is_af { af_recap(size, q.remaining(), geom.nodes) } else { size };
+                let reply = match q.commit(ticket, size) {
+                    Some(a) => Msg::OuterChunk(a),
+                    None => {
+                        active -= 1;
+                        Msg::OuterDone
+                    }
+                };
+                send(&ep, env.src, reply)?;
+            }
+            other => anyhow::bail!("hier coordinator got unexpected message: {other:?}"),
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// node master
+
+/// A non-dedicated node master: serves the inner protocol, drives the outer
+/// protocol, and executes iterations itself between message drains.
+struct NodeMaster {
+    cfg: EngineConfig,
+    geom: Geom,
+    ep: Endpoint<Msg>,
+    workload: Arc<dyn Workload>,
+    tally: Arc<Tally>,
+    node: u32,
+    inner_kind: TechniqueKind,
+    /// Outer technique bound to `P = nodes` (`None` for AF).
+    outer_tech: Option<Technique>,
+    ledger: NodeLedger,
+    /// Local ranks whose requests arrived while no local work existed.
+    parked: Vec<u32>,
+    fetching: bool,
+    global_done: bool,
+    /// `Done` replies sent to local ranks (termination tracking).
+    done_sent: u32,
+    /// Inner-AF calculator over this node's local ranks (index `rank % rpn`).
+    inner_af: Option<AfCalculator>,
+    /// Outer-AF: this node's chunk-throughput statistics.
+    node_stats: PeStats,
+    outer_report: Option<PerfReport>,
+    installed_iters: u64,
+    installed_at: Instant,
+    /// The master's own worker-personality statistics (AF µ/σ).
+    my_stats: PeStats,
+    out: RankSummary,
+}
+
+impl NodeMaster {
+    fn new(
+        cfg: EngineConfig,
+        geom: Geom,
+        ep: Endpoint<Msg>,
+        workload: Arc<dyn Workload>,
+        tally: Arc<Tally>,
+    ) -> Self {
+        let rank = ep.rank();
+        let node = geom.node_of(rank);
+        let inner_kind = cfg.hier.inner_or(cfg.technique);
+        let outer_params = with_np(&cfg.params, cfg.params.n, geom.nodes);
+        let inner_proto = with_np(&cfg.params, cfg.params.n, geom.rpn);
+        NodeMaster {
+            outer_tech: (cfg.technique != TechniqueKind::Af)
+                .then(|| Technique::new(cfg.technique, &outer_params)),
+            ledger: NodeLedger::new(inner_kind, &cfg.params, geom.rpn),
+            inner_af: (inner_kind == TechniqueKind::Af)
+                .then(|| AfCalculator::new(&inner_proto)),
+            cfg,
+            geom,
+            ep,
+            workload,
+            tally,
+            node,
+            inner_kind,
+            parked: Vec::new(),
+            fetching: false,
+            global_done: false,
+            done_sent: 0,
+            node_stats: PeStats::default(),
+            outer_report: None,
+            installed_iters: 0,
+            installed_at: Instant::now(),
+            my_stats: PeStats::default(),
+            out: RankSummary { rank, ..Default::default() },
+        }
+    }
+
+    fn run(mut self, barrier: &Barrier) -> RankSummary {
+        barrier.wait();
+        let t0 = Instant::now();
+        self.installed_at = Instant::now();
+        self.fetch();
+        loop {
+            // Serve everything pending before (and between) own work.
+            while let Some(env) = self.ep.try_recv() {
+                self.handle(env.payload);
+            }
+            if self.finished() {
+                break;
+            }
+            if self.ledger.has_work() {
+                self.own_step();
+                continue;
+            }
+            // Ledger drained: make sure the next node-chunk is on its way
+            // (idempotent — no-op when a fetch is in flight or the loop is
+            // done). Without this, a master whose *own* grant consumed the
+            // last iterations would block below with no fetch pending and,
+            // with no local ranks to wake it (rpn = 1), deadlock — the DES
+            // counterpart is `Own::NeedWork`'s park + fetch.
+            self.fetch();
+            // Nothing local to do: block until the outer reply (or a late
+            // local request) arrives. This is the master's scheduling wait.
+            let t_wait = Instant::now();
+            match self.ep.recv() {
+                Ok(env) => {
+                    self.out.sched_wait += t_wait.elapsed().as_secs_f64();
+                    self.handle(env.payload);
+                }
+                Err(_) => break,
+            }
+        }
+        self.out.finish = t0.elapsed().as_secs_f64();
+        self.out
+    }
+
+    /// All local ranks terminated, the loop is exhausted, and nothing is
+    /// left in the ledger.
+    fn finished(&self) -> bool {
+        self.global_done && !self.ledger.has_work() && self.done_sent == self.geom.rpn - 1
+    }
+
+    // -- messaging ---------------------------------------------------------
+
+    fn send_worker(&self, rank: u32, msg: Msg) {
+        self.tally.intra.fetch_add(1, Ordering::Relaxed);
+        self.ep.send(rank, msg).expect("local rank hung up early");
+    }
+
+    fn send_coord(&self, msg: Msg) {
+        self.tally.count_outer(self.node);
+        self.ep.send(self.geom.coord(), msg).expect("coordinator hung up early");
+    }
+
+    // -- service -----------------------------------------------------------
+
+    fn handle(&mut self, msg: Msg) {
+        match msg {
+            Msg::Get { rank, report } => {
+                self.record_inner_report(rank, report);
+                self.serve_get(rank);
+            }
+            Msg::Commit { rank, step, size, seq } => {
+                // Inner chunk ASSIGNMENT — serialized on this master's CPU,
+                // but only contended by its own node's ranks.
+                spin_for(self.cfg.delay.assignment);
+                match self.ledger.commit(step, size, seq) {
+                    InnerCommit::Granted(a) => {
+                        self.send_worker(rank, Msg::Chunk(a));
+                        self.after_grant();
+                    }
+                    // Stale seq: the node-chunk was replaced while this
+                    // commit was in flight — NACK into a fresh phase 1.
+                    InnerCommit::Stale => self.serve_get(rank),
+                    InnerCommit::Drained => self.park_or_done(rank),
+                }
+            }
+            Msg::OuterStep { ticket, af } => {
+                // The outer chunk CALCULATION runs here, on the master's own
+                // CPU — distributed across nodes, paying the injected delay
+                // in parallel (the DCA idea, one level up).
+                spin_for(self.cfg.delay.calculation);
+                let size = self.outer_calc(ticket, af);
+                self.send_coord(Msg::OuterCommit { node: self.node, ticket, size });
+            }
+            Msg::OuterChunk(a) => {
+                self.fetching = false;
+                if self.installed_iters == 0 {
+                    self.installed_at = Instant::now();
+                }
+                self.installed_iters += a.size;
+                self.ledger.install(a);
+                self.unpark();
+            }
+            Msg::OuterDone => {
+                self.fetching = false;
+                self.global_done = true;
+                self.unpark();
+            }
+            other => panic!("node master {}: unexpected {other:?}", self.out.rank),
+        }
+    }
+
+    fn record_inner_report(&mut self, rank: u32, report: Option<PerfReport>) {
+        if let (Some(af), Some(PerfReport { iters, elapsed })) = (self.inner_af.as_mut(), report) {
+            af.record((rank % self.geom.rpn) as usize, iters, elapsed);
+        }
+    }
+
+    /// Serve a phase-1 request: reserve, park, or terminate the rank.
+    fn serve_get(&mut self, rank: u32) {
+        match self.ledger.reserve() {
+            Some((step, remaining, seq)) => {
+                let af = self.inner_af_info();
+                let chunk_len = self.ledger.current_len();
+                self.send_worker(rank, Msg::Step { step, remaining, seq, chunk_len, af });
+            }
+            None if self.global_done => {
+                self.send_worker(rank, Msg::Done);
+                self.done_sent += 1;
+            }
+            None => {
+                self.parked.push(rank);
+                self.fetch();
+            }
+        }
+    }
+
+    fn park_or_done(&mut self, rank: u32) {
+        if self.global_done {
+            self.send_worker(rank, Msg::Done);
+            self.done_sent += 1;
+        } else {
+            self.parked.push(rank);
+            self.fetch();
+        }
+    }
+
+    /// Re-serve every parked rank (after a node-chunk install or the global
+    /// Done).
+    fn unpark(&mut self) {
+        let parked = std::mem::take(&mut self.parked);
+        for rank in parked {
+            self.serve_get(rank);
+        }
+    }
+
+    /// Outer prefetch: request the next node-chunk while the current one is
+    /// still being consumed, once it drops to the watermark.
+    fn after_grant(&mut self) {
+        if self.ledger.wants_prefetch(self.cfg.hier.prefetch_watermark) {
+            self.fetch();
+        }
+    }
+
+    /// Trigger an outer fetch unless one is already in flight; finalizes the
+    /// consumed node-chunk's throughput report (outer-AF feedback).
+    fn fetch(&mut self) {
+        if self.fetching || self.global_done {
+            return;
+        }
+        self.fetching = true;
+        if self.installed_iters > 0 {
+            let iters = self.installed_iters;
+            let elapsed = self.installed_at.elapsed().as_secs_f64().max(1e-12);
+            self.node_stats.record(iters, elapsed);
+            self.outer_report = Some(PerfReport { iters, elapsed });
+            self.installed_iters = 0;
+        }
+        let report = self.outer_report.take();
+        self.send_coord(Msg::OuterGet { node: self.node, report });
+    }
+
+    fn inner_af_info(&self) -> Option<AfInfo> {
+        self.inner_af.as_ref().and_then(|a| a.globals()).map(|g| AfInfo { d: g.d, e: g.e })
+    }
+
+    /// Outer chunk size, computed on this master (closed form of the outer
+    /// technique at the reserved step, or AF's Eq. 11 over node throughput).
+    fn outer_calc(&self, ticket: StepTicket, af: Option<AfInfo>) -> u64 {
+        if self.cfg.technique == TechniqueKind::Af {
+            af_requester_chunk(
+                &self.node_stats,
+                af.map(|i| AfGlobals { d: i.d, e: i.e }),
+                ticket.remaining,
+                self.geom.nodes,
+                self.cfg.params.min_chunk.max(1),
+            )
+        } else {
+            self.outer_tech
+                .as_ref()
+                .expect("non-AF outer technique has a closed form")
+                .closed_chunk(ticket.step)
+        }
+    }
+
+    // -- the master's own worker personality -------------------------------
+
+    /// One self-scheduling step of the master's own personality: reserve →
+    /// calculate (paying the injected delay) → commit → execute.
+    fn own_step(&mut self) {
+        let Some((step, remaining, seq)) = self.ledger.reserve() else { return };
+        spin_for(self.cfg.delay.calculation);
+        let size = self.own_calc(step, remaining, seq);
+        spin_for(self.cfg.delay.assignment);
+        match self.ledger.commit(step, size, seq) {
+            InnerCommit::Granted(a) => {
+                self.after_grant();
+                self.execute_own(a);
+            }
+            // A fresh node-chunk replaced the current one mid-step (cannot
+            // happen single-threadedly, but the protocol allows it) — the
+            // main loop simply re-reserves.
+            InnerCommit::Stale => {}
+            InnerCommit::Drained => self.fetch(),
+        }
+    }
+
+    fn own_calc(&self, step: u64, remaining: u64, seq: u64) -> u64 {
+        if self.inner_kind == TechniqueKind::Af {
+            af_requester_chunk(
+                &self.my_stats,
+                self.inner_af_info().map(|i| AfGlobals { d: i.d, e: i.e }),
+                remaining,
+                self.geom.rpn,
+                self.cfg.params.min_chunk.max(1),
+            )
+        } else {
+            self.ledger
+                .closed_inner_size(step, seq)
+                .unwrap_or_else(|| self.cfg.params.min_chunk.max(1))
+        }
+    }
+
+    /// Execute an own chunk in `MASTER_SLICE`-iteration segments, draining
+    /// the message queue between segments (non-dedicated master: local
+    /// ranks keep being served while the master computes).
+    fn execute_own(&mut self, a: Assignment) {
+        let t = Instant::now();
+        let mut sum = 0u64;
+        let mut cursor = a.start;
+        while cursor < a.end() {
+            let len = MASTER_SLICE.min(a.end() - cursor);
+            sum = sum.wrapping_add(self.workload.execute_range(cursor, len));
+            cursor += len;
+            while let Some(env) = self.ep.try_recv() {
+                self.handle(env.payload);
+            }
+        }
+        let elapsed = t.elapsed().as_secs_f64();
+        self.out.checksum = self.out.checksum.wrapping_add(sum);
+        self.out.chunks += 1;
+        self.out.iters += a.size;
+        self.out.assignments.push(a);
+        self.my_stats.record(a.size, elapsed);
+        if let Some(af) = self.inner_af.as_mut() {
+            af.record(0, a.size, elapsed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// local ranks
+
+/// A local rank: flat-DCA-style two-phase self-scheduling against its node
+/// master, with the node-chunk `seq` threaded through both phases.
+fn worker_loop(
+    cfg: &EngineConfig,
+    geom: Geom,
+    ep: Endpoint<Msg>,
+    workload: Arc<dyn Workload>,
+    barrier: &Barrier,
+    tally: &Tally,
+) -> RankSummary {
+    let rank = ep.rank();
+    let master = geom.master_rank(geom.node_of(rank));
+    let inner_kind = cfg.hier.inner_or(cfg.technique);
+    let is_af = inner_kind == TechniqueKind::Af;
+    let bootstrap = cfg.params.min_chunk.max(1);
+    // Inner technique bound to the current node-chunk, cached by `seq`.
+    let mut bound: Option<(u64, Technique)> = None;
+    let mut my_stats = PeStats::default();
+    let mut out = RankSummary { rank, ..Default::default() };
+    let mut report = None;
+    let send = |dst: u32, msg: Msg| {
+        tally.intra.fetch_add(1, Ordering::Relaxed);
+        ep.send(dst, msg).expect("node master hung up early");
+    };
+    barrier.wait();
+    let t0 = Instant::now();
+    'outer: loop {
+        let t_req = Instant::now();
+        send(master, Msg::Get { rank, report });
+        let mut env = ep.recv().expect("node master hung up early");
+        out.sched_wait += t_req.elapsed().as_secs_f64();
+        loop {
+            match env.payload {
+                Msg::Step { step, remaining, seq, chunk_len, af } => {
+                    // Distributed inner calculation, on this rank's CPU —
+                    // the injected delay is paid here, in parallel.
+                    spin_for(cfg.delay.calculation);
+                    let size = if is_af {
+                        af_requester_chunk(
+                            &my_stats,
+                            af.map(|i| AfGlobals { d: i.d, e: i.e }),
+                            remaining,
+                            geom.rpn,
+                            bootstrap,
+                        )
+                    } else {
+                        if !bound.as_ref().is_some_and(|(s, _)| *s == seq) {
+                            let params = with_np(&cfg.params, chunk_len, geom.rpn);
+                            bound = Some((seq, Technique::new(inner_kind, &params)));
+                        }
+                        bound.as_ref().expect("technique bound above").1.closed_chunk(step)
+                    };
+                    let t_commit = Instant::now();
+                    send(master, Msg::Commit { rank, step, size, seq });
+                    env = ep.recv().expect("node master hung up early");
+                    out.sched_wait += t_commit.elapsed().as_secs_f64();
+                    // The reply is a Chunk, a NACK Step (stale seq), or Done
+                    // — loop to handle whichever arrived.
+                }
+                Msg::Chunk(a) => {
+                    let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
+                    out.checksum = out.checksum.wrapping_add(sum);
+                    out.chunks += 1;
+                    out.iters += a.size;
+                    out.assignments.push(a);
+                    my_stats.record(a.size, elapsed);
+                    report = Some(PerfReport { iters: a.size, elapsed });
+                    break;
+                }
+                Msg::Done => break 'outer,
+                other => panic!("rank {rank}: unexpected {other:?}"),
+            }
+        }
+    }
+    out.finish = t0.elapsed().as_secs_f64();
+    out
+}

@@ -1,12 +1,22 @@
 //! The execution models (§3–§5) as real multi-threaded engines: `P` worker
-//! threads self-schedule a [`Workload`] through a master (CCA) or
-//! coordinator (DCA) — wall-clock measured, chunks actually executed.
+//! threads self-schedule a [`Workload`] through a master (CCA), a
+//! coordinator (DCA), or a two-level coordinator → node-master hierarchy
+//! (HIER-DCA) — wall-clock measured, chunks actually executed.
 //!
 //! | model | calculation | assignment | messages/chunk |
 //! |---|---|---|---|
 //! | [`cca`]      | master, **serialized** (+injected delay) | master | 2 |
 //! | [`dca`]      | worker, **parallel** (+injected delay)   | coordinator (counter bump) | 4 |
 //! | [`dca_rma`]  | worker, **parallel**                     | atomic fetch-ops, no coordinator CPU | 0 |
+//! | [`hier`]     | two-level, **parallel**: masters size node-chunks, local ranks size sub-chunks | coordinator (node-chunks) + per-node masters (sub-chunks) | 4 intra-node per sub-chunk + 4 inter-node per node-chunk |
+//!
+//! The [`hier`] engine's message pattern is the arXiv 1903.09510 two-level
+//! protocol: local ranks run `Get → Step`, `Commit → Chunk` against their
+//! *node master* (intra-node traffic), while each non-dedicated master —
+//! which also executes iterations — runs the same two-phase exchange
+//! (`OuterGet → OuterStep`, `OuterCommit → OuterChunk`) against the global
+//! coordinator for whole node-chunks (inter-node traffic), optionally
+//! prefetching the next node-chunk below a watermark.
 //!
 //! These engines validate the protocol end-to-end at host scale; the
 //! paper-scale (256-rank) numbers come from the calibrated DES in
@@ -15,12 +25,13 @@
 pub mod cca;
 pub mod dca;
 pub mod dca_rma;
+pub mod hier;
 pub mod protocol;
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::ExecutionModel;
+use crate::config::{ExecutionModel, HierParams};
 use crate::metrics::LoopStats;
 use crate::sched::Assignment;
 use crate::substrate::delay::InjectedDelay;
@@ -35,11 +46,24 @@ pub struct EngineConfig {
     pub technique: TechniqueKind,
     pub model: ExecutionModel,
     pub delay: InjectedDelay,
+    /// Two-level parameters (inner technique, outer prefetch watermark) —
+    /// used only by [`ExecutionModel::HierDca`].
+    pub hier: HierParams,
+    /// Node-group count for the two-level engine (must divide `params.p`;
+    /// block placement). Ignored by the flat engines.
+    pub nodes: u32,
 }
 
 impl EngineConfig {
     pub fn new(params: LoopParams, technique: TechniqueKind, model: ExecutionModel) -> Self {
-        EngineConfig { params, technique, model, delay: InjectedDelay::none() }
+        EngineConfig {
+            params,
+            technique,
+            model,
+            delay: InjectedDelay::none(),
+            hier: HierParams::default(),
+            nodes: 1,
+        }
     }
 }
 
@@ -68,6 +92,16 @@ pub struct RunResult {
     pub per_rank: Vec<RankSummary>,
     /// Combined checksum over all executed iterations (order-independent).
     pub checksum: u64,
+    /// Messages on the cheap latency class (all traffic for the flat
+    /// single-fabric engines; under [`hier`], master ↔ local-rank traffic
+    /// plus node 0's outer traffic — the coordinator is hosted on node 0's
+    /// master, as in the DES).
+    pub intra_node_messages: u64,
+    /// Messages crossing nodes (under [`hier`], the coordinator ↔ master
+    /// outer traffic of nodes 1..; zero for the flat engines). The
+    /// classification matches the DES split, so `messages/chunk` stays
+    /// directly comparable across substrates.
+    pub inter_node_messages: u64,
 }
 
 impl RunResult {
@@ -82,7 +116,18 @@ impl RunResult {
             stats: LoopStats::from_finish_times(&finish, chunks, wait, messages),
             per_rank,
             checksum,
+            intra_node_messages: messages,
+            inter_node_messages: 0,
         }
+    }
+
+    /// Assemble with a two-tier message split (the hier engine's counters);
+    /// the flat total is their sum.
+    pub(crate) fn assemble_split(per_rank: Vec<RankSummary>, intra: u64, inter: u64) -> Self {
+        let mut out = Self::assemble(per_rank, intra + inter);
+        out.intra_node_messages = intra;
+        out.inter_node_messages = inter;
+        out
     }
 
     /// All assignments across ranks, sorted by `start` — for verification.
@@ -118,10 +163,7 @@ pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<Ru
         ExecutionModel::Cca => cca::run(cfg, workload),
         ExecutionModel::Dca => dca::run(cfg, workload),
         ExecutionModel::DcaRma => dca_rma::run(cfg, workload),
-        ExecutionModel::HierDca => anyhow::bail!(
-            "the threaded engine has no two-level mode yet — run HierDca \
-             through the DES (`dca-dls simulate --model hier` or `dca-dls hier`)"
-        ),
+        ExecutionModel::HierDca => hier::run(cfg, workload),
     }
 }
 
@@ -135,19 +177,23 @@ mod tests {
         Arc::new(Synthetic::new(5_000, 1e-7, CostShape::Jittered, 11))
     }
 
-    /// Every (model × technique) combination schedules the full loop with
-    /// exact coverage and a consistent checksum.
+    /// Every (model × technique) combination — including the two-level
+    /// engine on a 2×2 geometry — schedules the full loop with exact
+    /// coverage and a consistent checksum.
     #[test]
     fn all_models_all_techniques_cover() {
         let w = tiny_workload();
         let reference = w.execute_range(0, 5_000);
-        for model in [ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma] {
+        for model in ExecutionModel::ALL {
             for kind in TechniqueKind::ALL {
                 if kind == TechniqueKind::Af && model == ExecutionModel::DcaRma {
                     continue; // unsupported by design (§4)
                 }
                 let params = LoopParams::new(5_000, 4);
-                let cfg = EngineConfig::new(params, kind, model);
+                let mut cfg = EngineConfig::new(params, kind, model);
+                if model == ExecutionModel::HierDca {
+                    cfg.nodes = 2;
+                }
                 let r = run(&cfg, Arc::clone(&w))
                     .unwrap_or_else(|e| panic!("{model} {kind}: {e}"));
                 verify_coverage(&r.sorted_assignments(), 5_000)
@@ -155,6 +201,14 @@ mod tests {
                 assert_eq!(r.checksum, reference, "{model} {kind}: checksum");
                 assert!(r.stats.t_par > 0.0);
                 assert!(r.stats.chunks > 0);
+                assert_eq!(
+                    r.stats.messages,
+                    r.intra_node_messages + r.inter_node_messages,
+                    "{model} {kind}: message split must reconcile"
+                );
+                if model == ExecutionModel::HierDca {
+                    assert!(r.inter_node_messages > 0, "{kind}: outer protocol ran");
+                }
             }
         }
     }
@@ -170,18 +224,6 @@ mod tests {
         cfg.delay = crate::substrate::delay::InjectedDelay::exponential_calculation(1e-5, 1);
         let e = run(&cfg, w).unwrap_err();
         assert!(e.to_string().contains("constant"), "{e}");
-    }
-
-    #[test]
-    fn hier_rejected_by_threaded_engine() {
-        let w = tiny_workload();
-        let cfg = EngineConfig::new(
-            LoopParams::new(100, 2),
-            TechniqueKind::Gss,
-            ExecutionModel::HierDca,
-        );
-        let e = run(&cfg, w).unwrap_err();
-        assert!(e.to_string().contains("DES"), "{e}");
     }
 
     #[test]

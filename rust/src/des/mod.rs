@@ -85,6 +85,12 @@ pub struct DesResult {
     pub assignments: Vec<Assignment>,
     /// RMA atomic operations issued (DCA-RMA only).
     pub rma_ops: u64,
+    /// Messages whose endpoints share a node (the cheap latency class; under
+    /// `HierDca` this is the master ↔ local-rank inner protocol).
+    pub intra_node_messages: u64,
+    /// Messages crossing nodes (under `HierDca`, the coordinator ↔ master
+    /// outer protocol). `intra + inter = stats.messages` always.
+    pub inter_node_messages: u64,
 }
 
 impl DesResult {
@@ -209,6 +215,8 @@ struct Sim<'a> {
     // workers
     workers: Vec<WorkerState>,
     messages: u64,
+    intra_msgs: u64,
+    inter_msgs: u64,
     assignments: Vec<Assignment>,
     done_replies: u32,
 }
@@ -236,6 +244,8 @@ impl<'a> Sim<'a> {
             rma_ops: 0,
             workers: vec![WorkerState::default(); cfg.params.p as usize],
             messages: 0,
+            intra_msgs: 0,
+            inter_msgs: 0,
             assignments: Vec::new(),
             done_replies: 0,
         }
@@ -365,14 +375,24 @@ impl<'a> Sim<'a> {
 
     // -- two-sided messaging helpers ----------------------------------------
 
-    fn send_svc(&mut self, from: u32, task: SvcTask) {
+    /// Count one rank-0-bound message, classified by latency class.
+    fn count_msg(&mut self, w: u32) {
         self.messages += 1;
+        if self.topo.node_of(w) == self.topo.node_of(0) {
+            self.intra_msgs += 1;
+        } else {
+            self.inter_msgs += 1;
+        }
+    }
+
+    fn send_svc(&mut self, from: u32, task: SvcTask) {
+        self.count_msg(from);
         let at = self.now + self.lat_ns(from, 0);
         self.heap.push(at, Ev::SvcArrive(task));
     }
 
     fn send_reply(&mut self, w: u32, reply: Reply, at: u64) {
-        self.messages += 1;
+        self.count_msg(w);
         self.heap.push(at + self.lat_ns(0, w), Ev::Reply { w, reply });
     }
 
@@ -392,7 +412,7 @@ impl<'a> Sim<'a> {
             ExecutionModel::DcaRma => unreachable!("RMA workers use the NIC path"),
             ExecutionModel::HierDca => unreachable!("HierDca runs in hier::simulate_hier"),
         };
-        self.messages += 1;
+        self.count_msg(w);
         let at = self.now + extra_ns + self.lat_ns(w, 0);
         self.heap.push(at, Ev::SvcArrive(task));
     }
@@ -428,8 +448,11 @@ impl<'a> Sim<'a> {
                         match self.queue.assign(k) {
                             Some(a) => {
                                 self.grant(0, a);
-                                self.own =
-                                    OwnState::Exec { cursor: a.start, end: a.end(), first: a.start };
+                                self.own = OwnState::Exec {
+                                    cursor: a.start,
+                                    end: a.end(),
+                                    first: a.start,
+                                };
                             }
                             None => self.own = OwnState::Finished,
                         }
@@ -466,8 +489,7 @@ impl<'a> Sim<'a> {
                 match self.queue.commit(ticket, size) {
                     Some(a) => {
                         self.grant(0, a);
-                        self.own =
-                            OwnState::Exec { cursor: a.start, end: a.end(), first: a.start };
+                        self.own = OwnState::Exec { cursor: a.start, end: a.end(), first: a.start };
                     }
                     None => self.own = OwnState::Finished,
                 }
@@ -653,8 +675,10 @@ impl<'a> Sim<'a> {
                     let claim_sent = back + calc + ns(self.cfg.delay.assignment);
                     let arrive = claim_sent + self.lat_ns(w, 0);
                     self.rma_ops += 1;
-                    self.heap
-                        .push(arrive, Ev::NicArrive { w, op: RmaOp::Claim { step: ticket.step, size } });
+                    self.heap.push(
+                        arrive,
+                        Ev::NicArrive { w, op: RmaOp::Claim { step: ticket.step, size } },
+                    );
                 }
                 None => {
                     self.workers[w as usize].finish_ns = self.now + dur + self.lat_ns(0, w);
@@ -694,6 +718,8 @@ impl<'a> Sim<'a> {
             rank0_service_busy: secs(self.rank0_service_ns),
             assignments: self.assignments,
             rma_ops: self.rma_ops,
+            intra_node_messages: self.intra_msgs,
+            inter_node_messages: self.inter_msgs,
         }
     }
 }

@@ -42,6 +42,16 @@
 //! and the requester evaluates Eq. 11 locally. At the outer level the
 //! "PE statistics" are per-node throughput (iterations per wall-second of a
 //! node-chunk); at the inner level they are the usual per-rank chunk stats.
+//!
+//! The per-node chunk ledger (two-phase reserve/commit, stale-`seq` NACK,
+//! staged prefetch install) lives in [`protocol`] and is shared verbatim
+//! with the **threaded** two-level engine, [`crate::coordinator::hier`] —
+//! the DES and the wall-clock engine validate one protocol definition.
+//! [`crate::config::HierParams::prefetch_watermark`] enables outer-level
+//! prefetch on both substrates: masters request the next node-chunk while
+//! the current one still has work, hiding the inter-node round trip.
+
+pub mod protocol;
 
 use std::collections::VecDeque;
 
@@ -52,8 +62,9 @@ use crate::des::{DesConfig, DesResult};
 use crate::metrics::LoopStats;
 use crate::sched::{Assignment, StepTicket, WorkQueue};
 use crate::substrate::topology::Topology;
-use crate::techniques::af::{af_chunk, AfCalculator, AfGlobals, PeStats};
-use crate::techniques::{LoopParams, Technique, TechniqueKind};
+use crate::techniques::af::{af_requester_chunk, AfCalculator, AfGlobals, PeStats};
+use crate::techniques::{Technique, TechniqueKind};
+use protocol::{af_recap, with_np, InnerCommit, NodeLedger};
 
 /// Can `HierDca` run on this cluster geometry? With dedicated masters
 /// (`break_after == 0`) every node needs at least one non-master rank to
@@ -143,19 +154,6 @@ enum Ev {
 // ---------------------------------------------------------------------------
 // state
 
-/// The node master's current node-chunk, re-subdivided locally.
-#[derive(Debug)]
-struct Local {
-    /// Local queue over `[0, len)`; granted ranges are offset to absolute.
-    q: WorkQueue,
-    offset: u64,
-    /// Inner technique bound to this node-chunk's size (`None` for AF).
-    tech: Option<Technique>,
-    /// Node-chunk sequence number — guards workers' closed-form lookups
-    /// against calculating for an already-replaced chunk.
-    seq: u64,
-}
-
 /// The master's own worker personality (mirrors the flat DES's `OwnState`).
 #[derive(Debug)]
 enum Own {
@@ -179,8 +177,8 @@ struct Master {
     cpu_busy_until_ns: u64,
     /// Total busy time spent servicing protocol messages (ns).
     service_ns: u64,
-    local: Option<Local>,
-    chunk_seq: u64,
+    /// The shared-protocol chunk ledger this master subdivides from.
+    ledger: NodeLedger,
     /// Local ranks whose requests arrived while no local work existed.
     parked: VecDeque<u32>,
     own_parked: bool,
@@ -223,6 +221,9 @@ struct HierSim<'a> {
     masters: Vec<Master>,
     workers: Vec<Wstate>,
     messages: u64,
+    /// Message split by latency class (same-node vs cross-node endpoints).
+    intra_msgs: u64,
+    inter_msgs: u64,
     assignments: Vec<Assignment>,
 }
 
@@ -242,8 +243,7 @@ impl<'a> HierSim<'a> {
                 busy: false,
                 cpu_busy_until_ns: 0,
                 service_ns: 0,
-                local: None,
-                chunk_seq: 0,
+                ledger: NodeLedger::new(inner_kind, &cfg.params, rpn),
                 parked: VecDeque::new(),
                 own_parked: false,
                 fetching: false,
@@ -271,6 +271,8 @@ impl<'a> HierSim<'a> {
             masters,
             workers: vec![Wstate::default(); cfg.params.p as usize],
             messages: 0,
+            intra_msgs: 0,
+            inter_msgs: 0,
             assignments: Vec::new(),
         }
     }
@@ -370,11 +372,21 @@ impl<'a> HierSim<'a> {
 
     // -- messaging ---------------------------------------------------------
 
+    /// Count one message, classified by the endpoints' latency class.
+    fn count_msg(&mut self, a: u32, b: u32) {
+        self.messages += 1;
+        if self.node_of(a) == self.node_of(b) {
+            self.intra_msgs += 1;
+        } else {
+            self.inter_msgs += 1;
+        }
+    }
+
     /// Send a worker-originated message to its node master.
     fn send_inner(&mut self, w: u32, task: Task, extra_ns: u64) {
         let m = self.node_of(w);
         let mrank = self.masters[m as usize].rank;
-        self.messages += 1;
+        self.count_msg(w, mrank);
         let at = self.now + extra_ns + self.lat_ns(w, mrank);
         self.heap.push(at, Ev::Arrive { m, task });
     }
@@ -383,7 +395,7 @@ impl<'a> HierSim<'a> {
     fn send_to_master(&mut self, to: u32, task: Task, dur: u64) {
         let coord = self.masters[0].rank;
         let mrank = self.masters[to as usize].rank;
-        self.messages += 1;
+        self.count_msg(coord, mrank);
         let at = self.now + dur + self.lat_ns(coord, mrank);
         self.heap.push(at, Ev::Arrive { m: to, task });
     }
@@ -391,7 +403,7 @@ impl<'a> HierSim<'a> {
     /// Send an inner reply from master `m` to local rank `w`.
     fn send_worker(&mut self, m: u32, w: u32, reply: WReply, dur: u64) {
         let mrank = self.masters[m as usize].rank;
-        self.messages += 1;
+        self.count_msg(mrank, w);
         let at = self.now + dur + self.lat_ns(mrank, w);
         self.heap.push(at, Ev::WorkerReply { w, reply });
     }
@@ -448,7 +460,7 @@ impl<'a> HierSim<'a> {
                 // remaining count (the ticket snapshot is stale once other
                 // masters commit — same rule as the flat DCA coordinator).
                 let size = if self.cfg.technique == TechniqueKind::Af {
-                    size.min(self.outer_q.remaining().div_ceil(self.nodes as u64).max(1))
+                    af_recap(size, self.outer_q.remaining(), self.nodes)
                 } else {
                     size
                 };
@@ -465,11 +477,10 @@ impl<'a> HierSim<'a> {
                 // CPU — distributed across nodes, paying the injected delay
                 // in parallel (the DCA idea, one level up).
                 let mrank = self.masters[m as usize].rank;
-                let dur =
-                    ns((self.cfg.delay.calculation_at(mrank, self.now) + c.calc_time) / sp);
+                let dur = ns((self.cfg.delay.calculation_at(mrank, self.now) + c.calc_time) / sp);
                 let size = self.outer_calc(m, ticket, af);
                 let coord = self.masters[0].rank;
-                self.messages += 1;
+                self.count_msg(mrank, coord);
                 let at = self.now + dur + self.lat_ns(mrank, coord);
                 self.heap.push(
                     at,
@@ -506,42 +517,10 @@ impl<'a> HierSim<'a> {
         }
     }
 
-    /// Reserve the next local step from `m`'s current node-chunk, if it has
-    /// one. Shared by the worker service path and the master's own
-    /// personality.
+    /// Reserve the next local step from `m`'s ledger, if it has work.
+    /// Shared by the worker service path and the master's own personality.
     fn local_reserve(&mut self, m: u32) -> Option<(u64, u64, u64)> {
-        let l = self.masters[m as usize].local.as_mut()?;
-        if l.q.is_done() {
-            return None;
-        }
-        let t = l.q.begin_step().expect("non-done local queue yields a step");
-        Some((t.step, t.remaining, l.seq))
-    }
-
-    /// Commit `size` for a step reserved from node-chunk `seq`. Returns the
-    /// absolute assignment, or `None` when the chunk is exhausted **or was
-    /// replaced in flight** (stale `seq`) — the requester must re-request.
-    /// Applies the inner-AF ⌈R/rpn⌉ re-cap against the fresh remaining count.
-    fn local_commit(&mut self, m: u32, step: u64, size: u64, seq: u64) -> Option<Assignment> {
-        let rpn = self.rpn as u64;
-        let af_inner = self.inner_kind == TechniqueKind::Af;
-        let l = self.masters[m as usize].local.as_mut()?;
-        if l.q.is_done() || l.seq != seq {
-            return None;
-        }
-        let size = if af_inner {
-            size.min(l.q.remaining().div_ceil(rpn).max(1))
-        } else {
-            size
-        };
-        let ticket = StepTicket { step, remaining: l.q.remaining() };
-        let a = l.q.commit(ticket, size).expect("non-done local queue commits");
-        Some(Assignment { step: a.step, start: a.start + l.offset, size: a.size })
-    }
-
-    /// Does `m`'s current node-chunk still have unassigned iterations?
-    fn local_has_work(&self, m: u32) -> bool {
-        self.masters[m as usize].local.as_ref().is_some_and(|l| !l.q.is_done())
+        self.masters[m as usize].ledger.reserve()
     }
 
     fn inner_get(&mut self, m: u32, w: u32, dur: u64) {
@@ -557,22 +536,36 @@ impl<'a> HierSim<'a> {
     }
 
     fn inner_commit(&mut self, m: u32, w: u32, step: u64, size: u64, seq: u64, dur: u64) {
-        if let Some(abs) = self.local_commit(m, step, size, seq) {
-            self.grant(w, abs);
-            self.send_worker(m, w, WReply::Chunk(abs), dur);
-        } else if self.local_has_work(m) {
+        match self.masters[m as usize].ledger.commit(step, size, seq) {
+            InnerCommit::Granted(abs) => {
+                self.grant(w, abs);
+                self.send_worker(m, w, WReply::Chunk(abs), dur);
+                self.maybe_prefetch(m, dur);
+            }
             // Stale seq: the node-chunk was replaced while this commit was
             // in flight. Re-serve the request as a fresh phase-1 Get so the
             // worker calculates against the *current* chunk instead of
             // silently committing a size computed for the old one.
-            self.inner_get(m, w, dur);
-        } else if self.masters[m as usize].global_done {
-            self.send_worker(m, w, WReply::Done, dur);
-        } else {
+            InnerCommit::Stale => self.inner_get(m, w, dur),
+            InnerCommit::Drained if self.masters[m as usize].global_done => {
+                self.send_worker(m, w, WReply::Done, dur);
+            }
             // The local queue filled between this worker's Step and its
             // Commit: park it — it gets a fresh Step from the next
             // node-chunk (its stale size is discarded).
-            self.masters[m as usize].parked.push_back(w);
+            InnerCommit::Drained => {
+                self.masters[m as usize].parked.push_back(w);
+                self.maybe_fetch(m, dur);
+            }
+        }
+    }
+
+    /// Outer-level prefetch: once the current node-chunk drains to the
+    /// configured watermark, request the next one while the local ranks keep
+    /// consuming the tail — the inter-node round trip plus the outer chunk
+    /// calculation are hidden instead of stalling the whole node.
+    fn maybe_prefetch(&mut self, m: u32, dur: u64) {
+        if self.masters[m as usize].ledger.wants_prefetch(self.cfg.hier.prefetch_watermark) {
             self.maybe_fetch(m, dur);
         }
     }
@@ -597,28 +590,21 @@ impl<'a> HierSim<'a> {
         let report = self.masters[mi].outer_report.take();
         let mrank = self.masters[mi].rank;
         let coord = self.masters[0].rank;
-        self.messages += 1;
+        self.count_msg(mrank, coord);
         let at = self.now + dur + self.lat_ns(mrank, coord);
         self.heap.push(at, Ev::Arrive { m: 0, task: Task::OuterGet { from: m, report } });
     }
 
     fn install_chunk(&mut self, m: u32, a: Assignment) {
-        let tech = self
-            .inner_kind
-            .has_closed_form()
-            .then(|| Technique::new(self.inner_kind, &with_np(&self.cfg.params, a.size, self.rpn)));
         let mi = m as usize;
-        let seq = self.masters[mi].chunk_seq + 1;
-        self.masters[mi].chunk_seq = seq;
-        self.masters[mi].local = Some(Local {
-            q: WorkQueue::new(a.size, self.cfg.params.min_chunk),
-            offset: a.start,
-            tech,
-            seq,
-        });
+        self.masters[mi].ledger.install(a);
         self.masters[mi].fetching = false;
-        self.masters[mi].installed_ns = self.now;
-        self.masters[mi].installed_iters = a.size;
+        // Under prefetch, installs accumulate between throughput
+        // finalizations (the staged chunk arrives mid-consumption).
+        if self.masters[mi].installed_iters == 0 {
+            self.masters[mi].installed_ns = self.now;
+        }
+        self.masters[mi].installed_iters += a.size;
         self.requeue_parked(m);
     }
 
@@ -639,13 +625,13 @@ impl<'a> HierSim<'a> {
     /// technique at the reserved step, or AF's Eq. 11 over node throughput).
     fn outer_calc(&self, m: u32, ticket: StepTicket, af: Option<AfInfo>) -> u64 {
         if self.cfg.technique == TechniqueKind::Af {
-            let st = &self.masters[m as usize].node_stats;
-            match (st.measured().then(|| st.mu()).flatten(), af) {
-                (Some(mu), Some(AfInfo { d, e })) => {
-                    af_chunk(AfGlobals { d, e }, mu, ticket.remaining, self.nodes)
-                }
-                _ => self.min_chunk(),
-            }
+            af_requester_chunk(
+                &self.masters[m as usize].node_stats,
+                af.map(|i| AfGlobals { d: i.d, e: i.e }),
+                ticket.remaining,
+                self.nodes,
+                self.min_chunk(),
+            )
         } else {
             self.outer_tech
                 .as_ref()
@@ -688,25 +674,23 @@ impl<'a> HierSim<'a> {
     /// inner technique bound to the current node-chunk, or AF's Eq. 11).
     fn worker_calc(&self, w: u32, step: u64, remaining: u64, seq: u64, af: Option<AfInfo>) -> u64 {
         if self.inner_kind == TechniqueKind::Af {
-            let ws = &self.workers[w as usize];
-            match (ws.stats.measured().then(|| ws.stats.mu()).flatten(), af) {
-                (Some(mu), Some(AfInfo { d, e })) => {
-                    af_chunk(AfGlobals { d, e }, mu, remaining, self.rpn)
-                }
-                _ => self.min_chunk(),
-            }
+            af_requester_chunk(
+                &self.workers[w as usize].stats,
+                af.map(|i| AfGlobals { d: i.d, e: i.e }),
+                remaining,
+                self.rpn,
+                self.min_chunk(),
+            )
         } else {
+            // Normal case: the node-chunk this step belongs to is still
+            // installed; evaluate its bound closed form. If the chunk was
+            // replaced while this Step was in flight, the commit will NACK
+            // and re-request, so the size is moot.
             let m = self.node_of(w);
-            match self.masters[m as usize].local.as_ref() {
-                // Normal case: the node-chunk this step belongs to is still
-                // installed; evaluate its bound closed form.
-                Some(l) if l.seq == seq => {
-                    l.tech.as_ref().expect("closed-form inner technique").closed_chunk(step)
-                }
-                // The chunk was replaced while this Step was in flight; the
-                // commit will park and re-request, so the size is moot.
-                _ => self.min_chunk(),
-            }
+            self.masters[m as usize]
+                .ledger
+                .closed_inner_size(step, seq)
+                .unwrap_or_else(|| self.min_chunk())
         }
     }
 
@@ -733,8 +717,7 @@ impl<'a> HierSim<'a> {
                 self.finish_server_action(m, dur);
             }
             Own::Calc { step, remaining, seq } => {
-                let dur =
-                    ns((self.cfg.delay.calculation_at(mrank, self.now) + c.calc_time) / sp);
+                let dur = ns((self.cfg.delay.calculation_at(mrank, self.now) + c.calc_time) / sp);
                 let af = self.inner_af_info(m);
                 let size = self.worker_calc(mrank, step, remaining, seq, af);
                 self.masters[mi].own = Own::Commit { step, size, seq };
@@ -742,20 +725,24 @@ impl<'a> HierSim<'a> {
             }
             Own::Commit { step, size, seq } => {
                 let dur = ns((c.service_time + self.cfg.delay.assignment) / sp);
-                if let Some(abs) = self.local_commit(m, step, size, seq) {
-                    self.grant(mrank, abs);
-                    self.masters[mi].own =
-                        Own::Exec { cursor: abs.start, end: abs.end(), first: abs.start };
-                } else if self.local_has_work(m) {
+                match self.masters[mi].ledger.commit(step, size, seq) {
+                    InnerCommit::Granted(abs) => {
+                        self.grant(mrank, abs);
+                        self.masters[mi].own =
+                            Own::Exec { cursor: abs.start, end: abs.end(), first: abs.start };
+                        self.maybe_prefetch(m, dur);
+                    }
                     // Stale seq: a new node-chunk arrived between this
                     // personality's Calc and Commit — re-reserve from it.
-                    self.masters[mi].own = Own::NeedWork;
-                } else if self.masters[mi].global_done {
-                    self.finish_own(m);
-                } else {
-                    self.masters[mi].own = Own::Parked;
-                    self.masters[mi].own_parked = true;
-                    self.maybe_fetch(m, dur);
+                    InnerCommit::Stale => self.masters[mi].own = Own::NeedWork,
+                    InnerCommit::Drained if self.masters[mi].global_done => {
+                        self.finish_own(m);
+                    }
+                    InnerCommit::Drained => {
+                        self.masters[mi].own = Own::Parked;
+                        self.masters[mi].own_parked = true;
+                        self.maybe_fetch(m, dur);
+                    }
                 }
                 self.finish_server_action(m, dur);
             }
@@ -817,17 +804,10 @@ impl<'a> HierSim<'a> {
             rank0_service_busy: secs(self.masters[0].service_ns),
             assignments: self.assignments,
             rma_ops: 0,
+            intra_node_messages: self.intra_msgs,
+            inter_node_messages: self.inter_msgs,
         }
     }
-}
-
-/// `params` with `n`/`p` overridden (keeps the technique parameterization —
-/// FSC/TAP constants, batch counts, seeds — from the experiment config).
-fn with_np(params: &LoopParams, n: u64, p: u32) -> LoopParams {
-    let mut out = params.clone();
-    out.n = n.max(1);
-    out.p = p.max(1);
-    out
 }
 
 #[cfg(test)]
@@ -837,6 +817,7 @@ mod tests {
     use crate::des::simulate;
     use crate::sched::verify_coverage;
     use crate::substrate::delay::InjectedDelay;
+    use crate::techniques::LoopParams;
     use crate::workload::IterationCost;
 
     fn cluster(nodes: u32, rpn: u32) -> ClusterConfig {
@@ -869,7 +850,27 @@ mod tests {
             assert!(r.t_par() > 0.0, "{kind}");
             assert_eq!(r.rma_ops, 0);
             assert!(r.stats.messages > 0);
+            assert_eq!(
+                r.stats.messages,
+                r.intra_node_messages + r.inter_node_messages,
+                "{kind}: split must reconcile with the flat counter"
+            );
+            assert!(r.inter_node_messages > 0, "{kind}: outer protocol crossed nodes");
         }
+    }
+
+    /// Prefetch keeps exact coverage, replays deterministically, and the
+    /// split message counters reconcile.
+    #[test]
+    fn prefetch_covers_and_replays() {
+        let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
+        c.hier = HierParams::with_inner(TechniqueKind::Ss).with_watermark(16);
+        let a = simulate(&c).unwrap();
+        verify_coverage(&sorted(&a), 6_000).unwrap();
+        let b = simulate(&c).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.t_par(), b.t_par());
+        assert_eq!(a.stats.messages, a.intra_node_messages + a.inter_node_messages);
     }
 
     #[test]

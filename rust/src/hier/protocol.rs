@@ -1,0 +1,358 @@
+//! The two-level scheduling protocol's shared state machine: the per-node
+//! **chunk ledger** every node master drives, regardless of whether the
+//! master is a DES service personality ([`crate::hier`]) or a real thread
+//! ([`crate::coordinator::hier`]). Keeping the reserve/commit/stale-`seq`
+//! semantics in one place means the event-by-event simulation and the
+//! wall-clock engine validate literally the same protocol definition.
+//!
+//! A [`NodeLedger`] owns the master's *current* node-chunk as a local
+//! [`WorkQueue`] over `[0, len)` plus the iteration offset that maps local
+//! grants back to absolute loop ranges. Sub-chunks follow the DCA two-phase
+//! protocol one level down:
+//!
+//! 1. [`NodeLedger::reserve`] hands out a local step (phase 1); the
+//!    requester calculates its sub-chunk size with the *inner* technique
+//!    bound to the node-chunk's length;
+//! 2. [`NodeLedger::commit`] grants the absolute range (phase 2) — or NACKs
+//!    with [`InnerCommit::Stale`] when the step was reserved from a
+//!    node-chunk that has since been replaced, forcing the requester back
+//!    to a fresh phase 1 instead of silently committing a size computed for
+//!    the old chunk.
+//!
+//! Every node-chunk installation bumps a **sequence number** carried on
+//! phase-1 replies and echoed on commits; that `seq` is what makes the
+//! stale-chunk race detectable on both substrates.
+//!
+//! **Outer-level prefetch** (the ROADMAP follow-on): the ledger can hold one
+//! *staged* node-chunk in addition to the current one. A master configured
+//! with a prefetch watermark requests the next node-chunk while the current
+//! one still has `≤ watermark` unassigned iterations; the reply is staged
+//! via [`NodeLedger::install`] and promoted the moment the current chunk
+//! drains — the inter-node round trip plus the outer chunk calculation are
+//! hidden behind the tail of the current chunk instead of stalling every
+//! local rank.
+
+use crate::sched::{Assignment, StepTicket, WorkQueue};
+use crate::techniques::{LoopParams, Technique, TechniqueKind};
+
+/// `params` with `n`/`p` overridden (keeps the technique parameterization —
+/// FSC/TAP constants, batch counts, seeds — from the experiment config).
+pub fn with_np(params: &LoopParams, n: u64, p: u32) -> LoopParams {
+    let mut out = params.clone();
+    out.n = n.max(1);
+    out.p = p.max(1);
+    out
+}
+
+/// The AF stale-snapshot re-cap both coordinator tiers apply at commit time:
+/// clamp a worker-calculated size to `⌈R/p⌉` against the *fresh* remaining
+/// count (the phase-1 `R_i` snapshot is stale once peers commit — the same
+/// rule as the flat DCA coordinator, §4).
+pub fn af_recap(size: u64, remaining: u64, p: u32) -> u64 {
+    size.min(remaining.div_ceil(p.max(1) as u64).max(1))
+}
+
+/// Outcome of committing a locally calculated sub-chunk size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InnerCommit {
+    /// The absolute iteration range granted for this sub-chunk.
+    Granted(Assignment),
+    /// Stale `seq`: the node-chunk was replaced while this commit was in
+    /// flight, but the ledger still has work — NACK; re-serve the requester
+    /// as a fresh phase-1 reserve against the *current* chunk.
+    Stale,
+    /// No unassigned work anywhere in the ledger — the requester parks (or
+    /// terminates, once the global loop is exhausted).
+    Drained,
+}
+
+/// The node master's current (and optionally staged) node-chunk.
+#[derive(Debug)]
+struct Chunk {
+    /// Local queue over `[0, len)`; granted ranges are offset to absolute.
+    q: WorkQueue,
+    offset: u64,
+    len: u64,
+    /// Inner technique bound to this node-chunk's size (`None` for AF,
+    /// which has no closed form).
+    tech: Option<Technique>,
+}
+
+/// Per-node chunk ledger — see the module docs for the protocol.
+#[derive(Debug)]
+pub struct NodeLedger {
+    inner_kind: TechniqueKind,
+    /// Template the inner technique is re-bound from per node-chunk.
+    base: LoopParams,
+    rpn: u32,
+    /// Sequence number of the *current* chunk (0 = nothing installed yet).
+    seq: u64,
+    current: Option<Chunk>,
+    /// Prefetched next node-chunk, promoted when `current` drains.
+    staged: Option<Assignment>,
+}
+
+impl NodeLedger {
+    /// A ledger for a node of `rpn` local ranks re-subdividing node-chunks
+    /// with `inner_kind` (bound per chunk from the `base` parameterization).
+    pub fn new(inner_kind: TechniqueKind, base: &LoopParams, rpn: u32) -> Self {
+        NodeLedger {
+            inner_kind,
+            base: base.clone(),
+            rpn: rpn.max(1),
+            seq: 0,
+            current: None,
+            staged: None,
+        }
+    }
+
+    fn current_live(&self) -> bool {
+        self.current.as_ref().is_some_and(|c| !c.q.is_done())
+    }
+
+    /// Does the ledger hold any unassigned iterations (current or staged)?
+    pub fn has_work(&self) -> bool {
+        self.current_live() || self.staged.is_some()
+    }
+
+    /// Unassigned iterations left in the *current* chunk (the prefetch
+    /// watermark is compared against this).
+    pub fn remaining(&self) -> u64 {
+        self.current.as_ref().map_or(0, |c| c.q.remaining())
+    }
+
+    /// Is a node-chunk already staged behind the current one?
+    pub fn staged(&self) -> bool {
+        self.staged.is_some()
+    }
+
+    /// Should the master holding this ledger issue a prefetch? True once
+    /// the current chunk has drained to the watermark and nothing is staged
+    /// yet; always false when prefetch is disabled (`None`). Single-sourced
+    /// here so the DES and the threaded engine cannot diverge on the
+    /// prefetch policy.
+    pub fn wants_prefetch(&self, watermark: Option<u64>) -> bool {
+        match watermark {
+            Some(w) => !self.staged() && self.remaining() <= w,
+            None => false,
+        }
+    }
+
+    /// Length of the current node-chunk (0 before the first install) — the
+    /// quantity phase-1 replies carry so remote workers can bind the inner
+    /// technique themselves.
+    pub fn current_len(&self) -> u64 {
+        self.current.as_ref().map_or(0, |c| c.len)
+    }
+
+    /// Sequence number of the current chunk.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Accept a node-chunk from the outer level: installed immediately when
+    /// the current chunk is drained (or absent), staged otherwise. At most
+    /// one chunk is ever staged — masters keep a single outer request in
+    /// flight.
+    pub fn install(&mut self, a: Assignment) {
+        if self.current_live() {
+            debug_assert!(self.staged.is_none(), "at most one staged node-chunk");
+            self.staged = Some(a);
+        } else {
+            self.install_now(a);
+        }
+    }
+
+    fn install_now(&mut self, a: Assignment) {
+        self.seq += 1;
+        let tech = self.inner_kind.has_closed_form().then(|| {
+            Technique::new(self.inner_kind, &with_np(&self.base, a.size, self.rpn))
+        });
+        self.current = Some(Chunk {
+            q: WorkQueue::new(a.size, self.base.min_chunk),
+            offset: a.start,
+            len: a.size,
+            tech,
+        });
+    }
+
+    /// Phase 1: reserve the next local step, promoting the staged chunk
+    /// first if the current one has drained. `None` means the ledger is
+    /// empty — the caller parks the requester and (if none is in flight)
+    /// triggers an outer fetch.
+    pub fn reserve(&mut self) -> Option<(u64, u64, u64)> {
+        if !self.current_live() {
+            let staged = self.staged.take()?;
+            self.install_now(staged);
+        }
+        let seq = self.seq;
+        let c = self.current.as_mut().expect("live chunk after promotion");
+        let t = c.q.begin_step().expect("non-done local queue yields a step");
+        Some((t.step, t.remaining, seq))
+    }
+
+    /// Phase 2: commit `size` for a step reserved from node-chunk `seq`.
+    /// Applies the inner-AF `⌈R/rpn⌉` re-cap against the fresh remaining
+    /// count; detects the stale-`seq` race (see [`InnerCommit`]).
+    pub fn commit(&mut self, step: u64, size: u64, seq: u64) -> InnerCommit {
+        let granted = match self.current.as_mut() {
+            Some(c) if !c.q.is_done() && self.seq == seq => {
+                let size = if self.inner_kind == TechniqueKind::Af {
+                    af_recap(size, c.q.remaining(), self.rpn)
+                } else {
+                    size
+                };
+                let ticket = StepTicket { step, remaining: c.q.remaining() };
+                let a = c.q.commit(ticket, size).expect("non-done local queue commits");
+                Some(Assignment { step: a.step, start: a.start + c.offset, size: a.size })
+            }
+            _ => None,
+        };
+        match granted {
+            Some(a) => InnerCommit::Granted(a),
+            None if self.has_work() => InnerCommit::Stale,
+            None => InnerCommit::Drained,
+        }
+    }
+
+    /// Closed-form sub-chunk size for `step` of chunk `seq` — the inner
+    /// technique bound to the current node-chunk. `None` when the chunk was
+    /// replaced in flight (the commit will NACK, so the size is moot) or
+    /// the inner technique has no closed form (AF).
+    pub fn closed_inner_size(&self, step: u64, seq: u64) -> Option<u64> {
+        match &self.current {
+            Some(c) if self.seq == seq => {
+                Some(c.tech.as_ref().expect("closed-form inner technique").closed_chunk(step))
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::verify_coverage;
+
+    fn ledger(inner: TechniqueKind, rpn: u32) -> NodeLedger {
+        NodeLedger::new(inner, &LoopParams::new(10_000, rpn * 4), rpn)
+    }
+
+    fn chunk(start: u64, size: u64) -> Assignment {
+        Assignment { step: 0, start, size }
+    }
+
+    #[test]
+    fn reserve_commit_covers_a_chunk() {
+        let mut l = ledger(TechniqueKind::Gss, 4);
+        assert!(!l.has_work());
+        assert!(l.reserve().is_none());
+        l.install(chunk(100, 40));
+        assert_eq!(l.current_len(), 40);
+        let mut granted = Vec::new();
+        while let Some((step, _remaining, seq)) = l.reserve() {
+            let size = l.closed_inner_size(step, seq).unwrap();
+            match l.commit(step, size, seq) {
+                InnerCommit::Granted(a) => granted.push(a),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        granted.sort_by_key(|a| a.start);
+        assert_eq!(granted.first().unwrap().start, 100);
+        let total: u64 = granted.iter().map(|a| a.size).sum();
+        assert_eq!(total, 40);
+        let rebased: Vec<Assignment> = granted
+            .iter()
+            .map(|a| Assignment { step: a.step, start: a.start - 100, size: a.size })
+            .collect();
+        verify_coverage(&rebased, 40).unwrap();
+    }
+
+    #[test]
+    fn stale_seq_commit_nacks_instead_of_granting() {
+        let mut l = ledger(TechniqueKind::Ss, 2);
+        l.install(chunk(0, 3));
+        let (step, _, seq) = l.reserve().unwrap();
+        // Drain the rest of chunk 1 and replace it while the commit for
+        // `step` is conceptually in flight.
+        while let Some((s, _, q)) = l.reserve() {
+            match l.commit(s, 1, q) {
+                InnerCommit::Granted(_) => {}
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // One reserved-but-uncommitted step: its late commit on the drained
+        // chunk is Drained (no replacement yet)...
+        assert_eq!(l.commit(step, 1, seq), InnerCommit::Drained);
+        // ...but once a fresh chunk is installed, the same stale commit must
+        // NACK into a re-reserve, not grant into the new chunk.
+        l.install(chunk(50, 8));
+        assert_eq!(l.commit(step, 1, seq), InnerCommit::Stale);
+        let (s2, _, q2) = l.reserve().unwrap();
+        assert_eq!(q2, seq + 1);
+        assert!(matches!(l.commit(s2, 1, q2), InnerCommit::Granted(_)));
+    }
+
+    #[test]
+    fn staged_chunk_promoted_only_after_current_drains() {
+        let mut l = ledger(TechniqueKind::Ss, 2);
+        l.install(chunk(0, 2));
+        let seq1 = l.seq();
+        // Prefetched next chunk arrives while the current one is live.
+        l.install(chunk(2, 3));
+        assert!(l.staged());
+        assert_eq!(l.current_len(), 2, "staged chunk must not replace current");
+        // Drain current.
+        for _ in 0..2 {
+            let (s, _, q) = l.reserve().unwrap();
+            assert_eq!(q, seq1);
+            assert!(matches!(l.commit(s, 1, q), InnerCommit::Granted(_)));
+        }
+        // Next reserve promotes the staged chunk with a bumped seq.
+        let (s, _, q) = l.reserve().unwrap();
+        assert_eq!(q, seq1 + 1);
+        assert!(!l.staged());
+        assert_eq!(l.current_len(), 3);
+        let InnerCommit::Granted(a) = l.commit(s, 1, q) else { panic!("grant") };
+        assert_eq!(a.start, 2);
+    }
+
+    #[test]
+    fn af_commit_recapped_against_fresh_remaining() {
+        let mut l = ledger(TechniqueKind::Af, 4);
+        l.install(chunk(0, 100));
+        let (step, _, seq) = l.reserve().unwrap();
+        // A wildly optimistic size is clamped to ⌈R/rpn⌉ = 25.
+        let InnerCommit::Granted(a) = l.commit(step, 10_000, seq) else { panic!("grant") };
+        assert_eq!(a.size, 25);
+    }
+
+    #[test]
+    fn closed_inner_size_is_seq_guarded() {
+        let mut l = ledger(TechniqueKind::Gss, 4);
+        l.install(chunk(0, 64));
+        let (step, _, seq) = l.reserve().unwrap();
+        assert!(l.closed_inner_size(step, seq).is_some());
+        assert_eq!(l.closed_inner_size(step, seq + 1), None);
+    }
+
+    #[test]
+    fn af_recap_floor_is_one() {
+        assert_eq!(af_recap(10, 0, 4), 1);
+        assert_eq!(af_recap(10, 7, 4), 2);
+        assert_eq!(af_recap(1, 1_000, 4), 1);
+    }
+
+    #[test]
+    fn with_np_overrides_only_n_and_p() {
+        let base = LoopParams::new(1_000, 16);
+        let out = with_np(&base, 64, 4);
+        assert_eq!(out.n, 64);
+        assert_eq!(out.p, 4);
+        assert_eq!(out.fiss_b, base.fiss_b);
+        assert_eq!(out.rnd_seed, base.rnd_seed);
+        let clamped = with_np(&base, 0, 0);
+        assert_eq!(clamped.n, 1);
+        assert_eq!(clamped.p, 1);
+    }
+}

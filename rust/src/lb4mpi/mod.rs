@@ -210,7 +210,9 @@ fn start_chunk_decentralized(info: &mut DlsInfo) -> Option<Assignment> {
     spin_for(inner.delay.calculation);
     let k = if technique.kind() == TechniqueKind::Af {
         match (info.my_stats.measured().then(|| info.my_stats.mu()).flatten(), af_globals) {
-            (Some(mu), Some(g)) => crate::techniques::af::af_chunk(g, mu, ticket.remaining, technique.params().p),
+            (Some(mu), Some(g)) => {
+                crate::techniques::af::af_chunk(g, mu, ticket.remaining, technique.params().p)
+            }
             _ => bootstrap,
         }
     } else {

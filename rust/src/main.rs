@@ -34,13 +34,14 @@ COMMANDS
   table2             chunk sequences, N=1000 P=4 (Table 2)   [--n --p]
   fig1               chunk-size series per technique (Fig 1) [--n --p]
   table3             loop characteristics (Table 3)          [--n --ct --cloud]
-  fig4               PSIA factorial experiment (Fig 4)       [--quick --reps --delay-site --hier --inner T --json F]
-  fig5               Mandelbrot factorial experiment (Fig 5) [--quick --reps --delay-site --hier --inner T --json F]
+  fig4               PSIA factorial experiment (Fig 4)       [--quick --reps --delay-site --hier --inner T --watermark W --json F]
+  fig5               Mandelbrot factorial experiment (Fig 5) [--quick --reps --delay-site --hier --inner T --watermark W --json F]
   simulate           one DES cell  [--app --tech --model --inner --delay-us --ranks --n]
-  hier               two-level HIER-DCA vs the flat models   [--app --tech --inner --nodes --rpn --n --delay-us --delay-site --json F]
-  run                real threaded engine [--app --tech --model --workers --n --pjrt --delay-us]
+  hier               two-level HIER-DCA vs the flat models   [--app --tech --inner --watermark W --nodes --rpn --n --delay-us --delay-site --json F]
+  run                real threaded engine [--app --tech --model --workers --n --pjrt --delay-us
+                       --hier --inner T --nodes K --watermark W (0 = fetch on exhaustion) --json F]
   sweep-breakafter   A3 ablation: master breakAfter sweep [--app --tech]
-  select             SimAS-style model auto-selection (§7, 4 models) [--app --tech --inner --delay-us]
+  select             SimAS-style model auto-selection (§7, 4 models) [--app --tech --inner --watermark W --delay-us]
   validate           PJRT artifacts vs native implementations
 ";
 
@@ -142,8 +143,10 @@ fn cmd_figure(app: App, title: &str, flags: &HashMap<String, String>) -> anyhow:
     if flags.contains_key("hier") {
         cfg.models.push(ExecutionModel::HierDca);
         cfg.hier = hier_of(flags)?;
-    } else if flags.contains_key("inner") {
-        anyhow::bail!("--inner only applies to the hierarchical model; pass --hier as well");
+    } else if flags.contains_key("inner") || flags.contains_key("watermark") {
+        anyhow::bail!(
+            "--inner/--watermark only apply to the hierarchical model; pass --hier as well"
+        );
     }
     let rows = run_figure(&cfg)?;
     print!("{}", render_figure(title, &rows));
@@ -187,16 +190,26 @@ fn model_of(flags: &HashMap<String, String>) -> ExecutionModel {
         .unwrap_or(ExecutionModel::Dca)
 }
 
-/// `--inner T` → hierarchical inner technique (default: same as outer).
+/// `--inner T` → hierarchical inner technique (default: same as outer);
+/// `--watermark W` → outer prefetch watermark (0 = fetch on exhaustion).
 fn hier_of(flags: &HashMap<String, String>) -> anyhow::Result<HierParams> {
-    match flags.get("inner") {
-        None => Ok(HierParams::default()),
+    let mut hier = match flags.get("inner") {
+        None => HierParams::default(),
         Some(name) => {
             let kind = TechniqueKind::parse(name)
                 .ok_or_else(|| anyhow::anyhow!("unknown inner technique '{name}'"))?;
-            Ok(HierParams::with_inner(kind))
+            HierParams::with_inner(kind)
+        }
+    };
+    if let Some(raw) = flags.get("watermark") {
+        let w: u64 = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --watermark '{raw}' (expect an iteration count)"))?;
+        if w > 0 {
+            hier = hier.with_watermark(w);
         }
     }
+    Ok(hier)
 }
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -204,8 +217,9 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let tech = tech_of(flags)?;
     let model = model_of(flags);
     anyhow::ensure!(
-        model == ExecutionModel::HierDca || !flags.contains_key("inner"),
-        "--inner only applies to the hierarchical model; pass --model hier as well"
+        model == ExecutionModel::HierDca
+            || !(flags.contains_key("inner") || flags.contains_key("watermark")),
+        "--inner/--watermark only apply to the hierarchical model; pass --model hier as well"
     );
     let ranks = get(flags, "ranks", 256u32);
     let n = get(flags, "n", 262_144u64);
@@ -337,6 +351,8 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                         .field("t_par", r.t_par())
                         .field("chunks", r.stats.chunks)
                         .field("messages", r.stats.messages)
+                        .field("messages_intra_node", r.intra_node_messages)
+                        .field("messages_inter_node", r.inter_node_messages)
                 })
                 .collect(),
         );
@@ -349,7 +365,17 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let app = app_of(flags);
     let tech = tech_of(flags)?;
-    let model = model_of(flags);
+    let model = if flags.contains_key("hier") {
+        ExecutionModel::HierDca
+    } else {
+        model_of(flags)
+    };
+    anyhow::ensure!(
+        model == ExecutionModel::HierDca
+            || !["inner", "nodes", "watermark"].iter().any(|k| flags.contains_key(*k)),
+        "--inner/--nodes/--watermark only apply to the two-level engine; pass --hier \
+         (or --model hier) as well"
+    );
     let workers = get(flags, "workers", 4u32);
     let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
     let pjrt = flags.contains_key("pjrt");
@@ -366,26 +392,36 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let n = get(flags, "n", workload.n().min(16_384));
     let mut cfg = EngineConfig::new(LoopParams::new(n, workers), tech, model);
     cfg.delay = InjectedDelay::calculation_only(delay);
+    if model == ExecutionModel::HierDca {
+        cfg.nodes = get(flags, "nodes", if workers % 2 == 0 { 2 } else { 1 });
+        cfg.hier = hier_of(flags)?;
+        if cfg.hier.prefetch_watermark.is_none() && !flags.contains_key("watermark") {
+            // Default the threaded engine to prefetch at roughly one
+            // sub-chunk per local rank; `--watermark 0` reverts to
+            // fetch-on-exhaustion.
+            cfg.hier = cfg.hier.with_watermark((workers / cfg.nodes.max(1)) as u64);
+        }
+    }
     let t0 = std::time::Instant::now();
     let r = coordinator::run(&cfg, workload)?;
     println!(
-        "{} [{}] {} {} workers={workers} N={n}",
+        "{} [{}] {} {} workers={workers} nodes={} N={n}",
         app.name(),
         if pjrt { "PJRT artifacts" } else { "native" },
         tech.name(),
-        model.name()
+        model.name(),
+        cfg.nodes
     );
-    println!(
-        "wall = {:.3}s   T_par = {:.3}s   chunks = {}   messages = {}   checksum = {:#x}",
-        t0.elapsed().as_secs_f64(),
-        r.stats.t_par,
-        r.stats.chunks,
-        r.stats.messages,
-        r.checksum
-    );
+    println!("wall = {:.3}s", t0.elapsed().as_secs_f64());
+    print!("{}", dca_dls::report::render_run_summary(&r));
     dca_dls::sched::verify_coverage(&r.sorted_assignments(), n)
         .map_err(|e| anyhow::anyhow!("coverage violation: {e}"))?;
     println!("coverage: OK (every iteration scheduled exactly once)");
+    if let Some(path) = flags.get("json") {
+        let j = dca_dls::report::json::run_result_json(app.name(), tech, model, cfg.nodes, n, &r);
+        std::fs::write(path, j.render())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -436,7 +472,13 @@ fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         InjectedDelay::calculation_only(delay),
         hier_of(flags)?,
     )?;
-    println!("{} {} delay={}µs — predicted T_par on a {:.0}% prefix:", app.name(), tech.name(), delay * 1e6, s.prefix_fraction * 100.0);
+    println!(
+        "{} {} delay={}µs — predicted T_par on a {:.0}% prefix:",
+        app.name(),
+        tech.name(),
+        delay * 1e6,
+        s.prefix_fraction * 100.0
+    );
     for (m, t) in &s.predictions {
         let mark = if *m == s.model { "  ← selected" } else { "" };
         println!("  {:<8} {t:.3}s{mark}", m.name());

@@ -54,8 +54,7 @@ pub fn table2_rows(params: &LoopParams) -> Vec<(TechniqueKind, Vec<u64>)> {
         .filter(|k| k.has_closed_form())
         .map(|&kind| {
             let t = Technique::new(kind, params);
-            let sizes =
-                closed_form_schedule(&t, params).iter().map(|a| a.size).collect::<Vec<_>>();
+            let sizes = closed_form_schedule(&t, params).iter().map(|a| a.size).collect::<Vec<_>>();
             (kind, sizes)
         })
         .collect()

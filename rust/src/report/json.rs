@@ -131,6 +131,34 @@ impl Json {
     }
 }
 
+/// Export one threaded-engine run (any model, including the two-level
+/// hier engine) for external plotting — the same fields the DES export
+/// carries, plus the two-tier message split.
+pub fn run_result_json(
+    app: &str,
+    technique: crate::techniques::TechniqueKind,
+    model: crate::config::ExecutionModel,
+    nodes: u32,
+    n: u64,
+    r: &crate::coordinator::RunResult,
+) -> Json {
+    Json::obj()
+        .field("app", app)
+        .field("technique", technique)
+        .field("model", model)
+        .field("workers", r.per_rank.len() as u64)
+        .field("nodes", nodes)
+        .field("n", n)
+        .field("t_par", r.stats.t_par)
+        .field("chunks", r.stats.chunks)
+        .field("messages", r.stats.messages)
+        .field("messages_intra_node", r.intra_node_messages)
+        .field("messages_inter_node", r.inter_node_messages)
+        .field("sched_wait", r.stats.sched_overhead)
+        .field("imbalance", r.stats.imbalance)
+        .field("checksum", format!("{:#x}", r.checksum))
+}
+
 struct Parser<'a> {
     c: &'a [char],
     i: usize,
@@ -378,5 +406,32 @@ mod tests {
         assert!(Json::parse("{").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("42 junk").is_err());
+    }
+
+    #[test]
+    fn run_result_export_carries_message_split() {
+        use crate::coordinator::{RankSummary, RunResult};
+        use crate::metrics::LoopStats;
+        let r = RunResult {
+            stats: LoopStats::from_finish_times(&[2.0, 2.5], 7, 0.1, 36),
+            per_rank: vec![RankSummary::default(), RankSummary::default()],
+            checksum: 0x1234,
+            intra_node_messages: 28,
+            inter_node_messages: 8,
+        };
+        let j = run_result_json(
+            "PSIA",
+            crate::techniques::TechniqueKind::Fac2,
+            crate::config::ExecutionModel::HierDca,
+            2,
+            4096,
+            &r,
+        );
+        let parsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(parsed.get("model").unwrap().as_str(), Some("HIER-DCA"));
+        assert_eq!(parsed.get("messages_intra_node").unwrap().as_u64(), Some(28));
+        assert_eq!(parsed.get("messages_inter_node").unwrap().as_u64(), Some(8));
+        assert_eq!(parsed.get("workers").unwrap().as_u64(), Some(2));
+        assert_eq!(parsed.get("checksum").unwrap().as_str(), Some("0x1234"));
     }
 }

@@ -88,6 +88,24 @@ pub fn render_figure(title: &str, rows: &[FigureRow]) -> String {
     out
 }
 
+/// Render a threaded-engine run summary (the `run` subcommand's report) —
+/// shared across all four models, with the two-tier message split the hier
+/// engine produces (flat engines report all traffic as intra-node).
+pub fn render_run_summary(r: &crate::coordinator::RunResult) -> String {
+    format!(
+        "T_par = {:.3}s   chunks = {}   messages = {} (intra-node {}, inter-node {})   \
+         sched-wait = {:.3}s   imbalance = {:.4}   checksum = {:#x}\n",
+        r.stats.t_par,
+        r.stats.chunks,
+        r.stats.messages,
+        r.intra_node_messages,
+        r.inter_node_messages,
+        r.stats.sched_overhead,
+        r.stats.imbalance,
+        r.checksum,
+    )
+}
+
 /// Render the Table 2 layout (chunk sequences per technique).
 pub fn render_table2(rows: &[(TechniqueKind, Vec<u64>)]) -> String {
     use std::fmt::Write;
@@ -140,7 +158,13 @@ mod tests {
 
     fn row(kind: TechniqueKind, model: ExecutionModel, delay: f64, t: f64) -> FigureRow {
         let ls = LoopStats::from_finish_times(&[t], 10, 0.0, 20);
-        FigureRow { technique: kind, model, delay, runs: RepeatedRuns::from_runs(&[ls]), chunks: 10 }
+        FigureRow {
+            technique: kind,
+            model,
+            delay,
+            runs: RepeatedRuns::from_runs(&[ls]),
+            chunks: 10,
+        }
     }
 
     #[test]
@@ -178,5 +202,21 @@ mod tests {
         let s = render_table2(&rows);
         assert!(s.contains("…"));
         assert!(s.contains("1000"));
+    }
+
+    #[test]
+    fn run_summary_shows_message_split() {
+        use crate::coordinator::{RankSummary, RunResult};
+        let r = RunResult {
+            stats: LoopStats::from_finish_times(&[1.5], 10, 0.25, 52),
+            per_rank: vec![RankSummary::default()],
+            checksum: 0xBEEF,
+            intra_node_messages: 40,
+            inter_node_messages: 12,
+        };
+        let s = render_run_summary(&r);
+        assert!(s.contains("intra-node 40"), "{s}");
+        assert!(s.contains("inter-node 12"), "{s}");
+        assert!(s.contains("0xbeef"), "{s}");
     }
 }

@@ -81,8 +81,7 @@ mod real {
         /// Execute one tile, returning its masked checksum.
         fn run_tile(&self, start: u64, size: u64) -> Result<i64> {
             with_executable(&self.dir, "mandelbrot", |exe| {
-                let out =
-                    exe.execute(&[scalar_i32(start as i32)?, scalar_i32(size as i32)?])?;
+                let out = exe.execute(&[scalar_i32(start as i32)?, scalar_i32(size as i32)?])?;
                 Ok(out[2].to_vec::<i64>()?[0])
             })
         }

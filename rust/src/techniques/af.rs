@@ -109,6 +109,24 @@ pub fn af_chunk(globals: AfGlobals, mu_pe: f64, remaining: u64, p: u32) -> u64 {
     (k.floor() as u64).clamp(1, cap)
 }
 
+/// Distributed-AF chunk size at a requester: Eq. 11 with the requester's
+/// own (µ, σ) statistics and the synchronized `(D, E)` aggregates, or
+/// `bootstrap` until both are measured (§2: AF needs µ *and* σ). The one
+/// definition behind every engine's requester-side AF call site — worker
+/// ranks, node masters' own personalities, and the outer node level.
+pub fn af_requester_chunk(
+    stats: &PeStats,
+    globals: Option<AfGlobals>,
+    remaining: u64,
+    p: u32,
+    bootstrap: u64,
+) -> u64 {
+    match (stats.measured().then(|| stats.mu()).flatten(), globals) {
+        (Some(mu), Some(g)) => af_chunk(g, mu, remaining, p),
+        _ => bootstrap,
+    }
+}
+
 /// Stateful AF calculator: per-PE statistics plus the bootstrap policy.
 #[derive(Debug, Clone)]
 pub struct AfCalculator {
@@ -258,6 +276,19 @@ mod tests {
         let g = AfGlobals { d: 0.0, e: 0.01 }; // no variance measured yet
         let k = af_chunk(g, 1e-7, 100_000, 4); // µ_pe absurdly small
         assert_eq!(k, 25_000); // ⌈R/P⌉
+    }
+
+    #[test]
+    fn requester_chunk_bootstraps_then_follows_eq11() {
+        let mut st = PeStats::default();
+        let g = Some(AfGlobals { d: 0.0, e: 0.0025 });
+        assert_eq!(af_requester_chunk(&st, g, 1000, 4, 7), 7, "no samples: bootstrap");
+        st.record(10, 0.1);
+        assert_eq!(af_requester_chunk(&st, g, 1000, 4, 7), 7, "one chunk: still bootstrap");
+        st.record(10, 0.1); // µ = 0.01, σ = 0
+        assert_eq!(af_requester_chunk(&st, None, 1000, 4, 7), 7, "no aggregates: bootstrap");
+        // E·R/µ = 0.0025·1000/0.01 = 250 = R/P for homogeneous PEs.
+        assert_eq!(af_requester_chunk(&st, g, 1000, 4, 7), 250);
     }
 
     #[test]

@@ -100,8 +100,7 @@ mod tests {
         let c = PlsConsts::new(&LoopParams::new(1000, 4));
         assert_eq!(c.k_static, 175);
         assert_eq!(c.n_dyn, 300);
-        let expect =
-            [175u64, 175, 175, 175, 75, 57, 43, 32, 24, 18, 14, 11, 8, 6, 5, 4, 3];
+        let expect = [175u64, 175, 175, 175, 75, 57, 43, 32, 24, 18, 14, 11, 8, 6, 5, 4, 3];
         for (i, &e) in expect.iter().enumerate() {
             assert_eq!(c.closed(i as u64), e, "step {i}");
         }

@@ -1,0 +1,143 @@
+//! Compile-only API stub of the `xla` crate surface this repository uses:
+//! `PjRtClient` → `HloModuleProto`/`XlaComputation` → `PjRtLoadedExecutable`
+//! → `Literal`. The build environment is offline, so the real crate (and
+//! its bundled `xla_extension` binaries) cannot be fetched; this stub keeps
+//! the `pjrt`-gated call sites **type-checking** (CI's
+//! `cargo check --features pjrt` leg) while failing loudly at runtime.
+//!
+//! Constructing a client or parsing an HLO module always returns
+//! [`Error::Unavailable`], so no executable path is ever reachable; the
+//! methods past those entry points are `unreachable!`-bodied on purpose —
+//! they exist purely so the real code's types line up. Swap this path
+//! dependency for the real crate to actually execute artifacts.
+
+use std::fmt;
+
+/// The stub's only error: the real XLA runtime is not linked in.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: the vendored `xla` stub has no runtime — replace \
+                 rust/vendor/xla with the real crate to execute artifacts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can be built from / read back as.
+pub trait NativeType: Copy {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for u64 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// PJRT client handle (stub: cannot be constructed).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client — always fails in the stub.
+    pub fn cpu() -> Result<Self> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        unreachable!("stub PjRtClient cannot be constructed")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unreachable!("stub PjRtClient cannot be constructed")
+    }
+}
+
+/// Parsed HLO module (stub: cannot be constructed).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text — always fails in the stub.
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping a parsed HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A compiled executable (stub: unreachable past the failing client).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unreachable!("stub PjRtLoadedExecutable cannot be constructed")
+    }
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unreachable!("stub PjRtBuffer cannot be constructed")
+    }
+}
+
+/// A host literal (stub: constructible so input-building code compiles, but
+/// never consumable — execution is unreachable).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Read back as a host vector — unreachable (no output literal can
+    /// exist without a real runtime).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entry_points_fail_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nowhere.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1i32, 2, 3]).reshape(&[3, 1]).unwrap();
+        assert!(lit.to_vec::<i32>().is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("stub"), "{msg}");
+    }
+}

@@ -70,7 +70,8 @@ fn drifting_forms_both_cover_exactly() {
             let t = Technique::new(kind, &params);
             let closed = closed_form_schedule(&t, &params);
             let recursive = recursive_schedule(&t, &params);
-            verify_coverage(&closed, n).unwrap_or_else(|e| panic!("{kind} closed (n={n},p={p}): {e}"));
+            verify_coverage(&closed, n)
+                .unwrap_or_else(|e| panic!("{kind} closed (n={n},p={p}): {e}"));
             verify_coverage(&recursive, n)
                 .unwrap_or_else(|e| panic!("{kind} recursive (n={n},p={p}): {e}"));
         }
@@ -108,8 +109,7 @@ fn decreasing_techniques_decrease_in_both_forms() {
         let params = LoopParams::new(n, p);
         for kind in [TechniqueKind::Gss, TechniqueKind::Tss, TechniqueKind::Tfss] {
             let t = Technique::new(kind, &params);
-            for schedule in [closed_form_schedule(&t, &params), recursive_schedule(&t, &params)]
-            {
+            for schedule in [closed_form_schedule(&t, &params), recursive_schedule(&t, &params)] {
                 // Ignore the final clipped chunk.
                 let sizes: Vec<u64> = schedule.iter().map(|a| a.size).collect();
                 let inner = &sizes[..sizes.len().saturating_sub(1)];

@@ -142,8 +142,7 @@ fn engines_checksum_identical() {
 #[test]
 fn lb4mpi_with_delays_covers() {
     for mode in [CalcMode::Centralized, CalcMode::Decentralized] {
-        let mut infos =
-            dls_parameters_setup(P, InjectedDelay::calculation_only(20e-6));
+        let mut infos = dls_parameters_setup(P, InjectedDelay::calculation_only(20e-6));
         configure_chunk_calculation_mode(&infos[0], mode);
         let params = LoopParams::new(2_000, P);
         let handles: Vec<_> = infos

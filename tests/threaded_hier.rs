@@ -1,0 +1,215 @@
+//! Validation of the **threaded** two-level engine (`coordinator::hier`):
+//! exact loop coverage and matching checksums for all 12 evaluated
+//! techniques, edge geometries (`rpn = 1`, `nodes = 1`, `N < P`, `P = 1`),
+//! cross-engine equivalence against the DES on a fully serial geometry
+//! (both consume the shared `hier::protocol` ledger, so the schedules must
+//! be identical), and the outer-prefetch payoff asserted deterministically
+//! on the DES.
+
+use std::sync::Arc;
+
+use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams};
+use dca_dls::coordinator::{self, EngineConfig, RunResult};
+use dca_dls::des::{simulate, DesConfig};
+use dca_dls::sched::{verify_coverage, Assignment};
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::workload::synthetic::{CostShape, Synthetic};
+use dca_dls::workload::{IterationCost, Workload};
+
+fn hier_engine(n: u64, p: u32, nodes: u32, outer: TechniqueKind, hier: HierParams) -> EngineConfig {
+    let mut cfg = EngineConfig::new(LoopParams::new(n, p), outer, ExecutionModel::HierDca);
+    cfg.nodes = nodes;
+    cfg.hier = hier;
+    cfg
+}
+
+fn run_covered(cfg: &EngineConfig, w: &Arc<dyn Workload>, n: u64, label: &str) -> RunResult {
+    let r = coordinator::run(cfg, Arc::clone(w)).unwrap_or_else(|e| panic!("{label}: {e}"));
+    verify_coverage(&r.sorted_assignments(), n).unwrap_or_else(|e| panic!("{label}: {e}"));
+    r
+}
+
+/// Exact coverage + checksum for all 12 evaluated techniques as the outer
+/// (and, by default, inner) technique on a 2×2 geometry — the threaded
+/// analogue of `tests/hier_coverage.rs`.
+#[test]
+fn threaded_hier_covers_all_techniques_with_matching_checksum() {
+    const N: u64 = 6_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Jittered, 11));
+    let reference = w.execute_range(0, N);
+    for kind in TechniqueKind::EVALUATED {
+        let cfg = hier_engine(N, 4, 2, kind, HierParams::default());
+        let r = run_covered(&cfg, &w, N, kind.name());
+        assert_eq!(r.checksum, reference, "{kind}: checksum");
+        assert!(r.inter_node_messages > 0, "{kind}: outer protocol ran");
+        assert!(r.intra_node_messages > 0, "{kind}: inner protocol ran");
+        assert_eq!(r.stats.messages, r.intra_node_messages + r.inter_node_messages, "{kind}");
+    }
+}
+
+/// A batched outer level with every inner technique (mixed pairs).
+#[test]
+fn threaded_hier_covers_mixed_inner_techniques() {
+    const N: u64 = 5_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Uniform, 3));
+    let reference = w.execute_range(0, N);
+    for inner in TechniqueKind::EVALUATED {
+        let cfg = hier_engine(N, 4, 2, TechniqueKind::Fac2, HierParams::with_inner(inner));
+        let r = run_covered(&cfg, &w, N, &format!("FAC▸{inner}"));
+        assert_eq!(r.checksum, reference, "FAC▸{inner}: checksum");
+    }
+}
+
+/// Edge geometries: single-rank nodes (masters do everything), a single
+/// node (the outer level degenerates), more ranks than iterations, and a
+/// fully serial run.
+#[test]
+fn threaded_hier_edge_geometries() {
+    let cases: [(u64, u32, u32, &str); 4] = [
+        (2_000, 4, 4, "rpn=1 (masters compute everything)"),
+        (2_000, 4, 1, "nodes=1 (degenerate outer level)"),
+        (5, 8, 2, "N < P (more ranks than iterations)"),
+        (1_000, 1, 1, "serial (one master, no workers)"),
+    ];
+    for (n, p, nodes, label) in cases {
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(n.max(64), 1e-7, CostShape::Uniform, 5));
+        let reference = w.execute_range(0, n);
+        let cfg = hier_engine(n, p, nodes, TechniqueKind::Gss, HierParams::default());
+        let r = run_covered(&cfg, &w, n, label);
+        assert_eq!(r.checksum, reference, "{label}: checksum");
+        assert_eq!(r.per_rank.len(), p as usize, "{label}: one summary per rank");
+    }
+}
+
+/// Prefetch mode on the threaded engine: still exact coverage and an
+/// identical checksum (the staged-install path is exercised for real).
+#[test]
+fn threaded_hier_prefetch_covers() {
+    const N: u64 = 4_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Jittered, 23));
+    let reference = w.execute_range(0, N);
+    let hier = HierParams::with_inner(TechniqueKind::Ss).with_watermark(64);
+    let cfg = hier_engine(N, 4, 2, TechniqueKind::Fac2, hier);
+    let r = run_covered(&cfg, &w, N, "prefetch");
+    assert_eq!(r.checksum, reference);
+}
+
+/// Block placement requires `nodes | P`.
+#[test]
+fn threaded_hier_rejects_indivisible_geometry() {
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(100, 1e-7, CostShape::Uniform, 1));
+    let cfg = hier_engine(100, 4, 3, TechniqueKind::Gss, HierParams::default());
+    let e = coordinator::run(&cfg, w).unwrap_err();
+    assert!(e.to_string().contains("divide"), "{e}");
+}
+
+/// Cross-engine equivalence: on a fully serial geometry (1 node × 1 rank)
+/// both engines are deterministic, and because they drive the *same*
+/// `hier::protocol` ledger, the granted `(step, start, size)` sequences
+/// must be identical for every closed-form technique. (AF is excluded: its
+/// sizes depend on measured wall-clock timings by design.)
+#[test]
+fn threaded_and_des_hier_grant_identical_serial_schedules() {
+    const N: u64 = 3_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-8, CostShape::Uniform, 9));
+    for kind in TechniqueKind::ALL {
+        if kind == TechniqueKind::Af {
+            continue;
+        }
+        let cfg = hier_engine(N, 1, 1, kind, HierParams::default());
+        let threaded = run_covered(&cfg, &w, N, kind.name());
+
+        let cluster = ClusterConfig { nodes: 1, ranks_per_node: 1, ..ClusterConfig::minihpc() };
+        let des_cfg = DesConfig {
+            params: LoopParams::new(N, 1),
+            technique: kind,
+            model: ExecutionModel::HierDca,
+            delay: InjectedDelay::none(),
+            cluster,
+            cost: IterationCost::Constant(1e-6),
+            pe_speed: vec![],
+            hier: HierParams::default(),
+        };
+        let des = simulate(&des_cfg).unwrap_or_else(|e| panic!("{kind}: {e}"));
+        let mut des_sorted: Vec<Assignment> = des.assignments.clone();
+        des_sorted.sort_by_key(|a| a.start);
+        assert_eq!(
+            threaded.sorted_assignments(),
+            des_sorted,
+            "{kind}: serial schedules must be identical across engines"
+        );
+    }
+}
+
+/// The outer-prefetch payoff, asserted deterministically on the DES (which
+/// shares the ledger with the threaded engine): with an expensive
+/// inter-node fabric, prefetching the next node-chunk below a watermark
+/// must strictly reduce both the total scheduling wait and `T_par`
+/// compared to fetch-on-exhaustion.
+#[test]
+fn prefetch_beats_fetch_on_exhaustion() {
+    const N: u64 = 20_000;
+    let cluster = ClusterConfig {
+        nodes: 4,
+        ranks_per_node: 4,
+        inter_node_latency: 200e-6, // make the outer round trip expensive
+        ..ClusterConfig::minihpc()
+    };
+    let mk = |hier: HierParams| {
+        let cfg = DesConfig {
+            params: LoopParams::new(N, cluster.total_ranks()),
+            technique: TechniqueKind::Fac2,
+            model: ExecutionModel::HierDca,
+            delay: InjectedDelay::none(),
+            cluster: cluster.clone(),
+            cost: IterationCost::Constant(2e-5),
+            pe_speed: vec![],
+            hier,
+        };
+        let r = simulate(&cfg).unwrap();
+        let mut sorted = r.assignments.clone();
+        sorted.sort_by_key(|a| a.start);
+        verify_coverage(&sorted, N).unwrap();
+        r
+    };
+    let inner = HierParams::with_inner(TechniqueKind::Ss);
+    let exhaust = mk(inner);
+    let prefetch = mk(inner.with_watermark(256));
+    assert!(
+        prefetch.stats.sched_overhead < exhaust.stats.sched_overhead,
+        "prefetch sched wait {} must beat fetch-on-exhaustion {}",
+        prefetch.stats.sched_overhead,
+        exhaust.stats.sched_overhead
+    );
+    assert!(
+        prefetch.t_par() < exhaust.t_par(),
+        "prefetch T_par {} must beat fetch-on-exhaustion {}",
+        prefetch.t_par(),
+        exhaust.t_par()
+    );
+}
+
+/// Prefetch keeps exact coverage across the full technique matrix on the
+/// DES (staging + stale-`seq` NACK interplay under every chunk pattern).
+#[test]
+fn prefetch_covers_all_techniques_des() {
+    const N: u64 = 4_000;
+    let cluster = ClusterConfig { nodes: 2, ranks_per_node: 4, ..ClusterConfig::minihpc() };
+    for kind in TechniqueKind::EVALUATED {
+        let cfg = DesConfig {
+            params: LoopParams::new(N, cluster.total_ranks()),
+            technique: kind,
+            model: ExecutionModel::HierDca,
+            delay: InjectedDelay::calculation_only(10e-6),
+            cluster: cluster.clone(),
+            cost: IterationCost::Constant(1e-5),
+            pe_speed: vec![],
+            hier: HierParams::default().with_watermark(64),
+        };
+        let r = simulate(&cfg).unwrap_or_else(|e| panic!("{kind}: {e}"));
+        let mut sorted = r.assignments.clone();
+        sorted.sort_by_key(|a| a.start);
+        verify_coverage(&sorted, N).unwrap_or_else(|e| panic!("{kind}: {e}"));
+    }
+}
