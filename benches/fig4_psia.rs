@@ -17,7 +17,7 @@ fn main() {
     cfg.reps = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
     let t0 = Instant::now();
     let rows = run_figure(&cfg).expect("fig4");
-    print!("{}", render_figure("Figure 4 (PSIA, 256 ranks, N=262144)", &rows));
+    print!("{}", render_figure("Figure 4 (PSIA, 256 ranks, N=262144)", &rows, 2));
     println!("\n(regenerated in {:?}, {} reps/cell)", t0.elapsed(), cfg.reps);
 
     let t = |tech: TechniqueKind, model: ExecutionModel, d: f64| {

@@ -19,7 +19,7 @@ fn main() {
     cfg.reps = std::env::var("BENCH_REPS").ok().and_then(|v| v.parse().ok()).unwrap_or(5);
     let t0 = Instant::now();
     let rows = run_figure(&cfg).expect("fig5");
-    print!("{}", render_figure("Figure 5 (Mandelbrot, 256 ranks, N=262144)", &rows));
+    print!("{}", render_figure("Figure 5 (Mandelbrot, 256 ranks, N=262144)", &rows, 2));
     println!(
         "\n(regenerated in {:?}, {} reps/cell, CT scaled to {})",
         t0.elapsed(),

@@ -14,7 +14,12 @@
 //!
 //! Scenarios: the paper's calculation-site delays {0, 10, 100 µs} plus the
 //! §7 assignment-site 100 µs ablation, where flat DCA serializes every
-//! commit on the coordinator and the hierarchy shines brightest.
+//! commit on the coordinator and the hierarchy shines brightest — and a
+//! **depth-3** scenario (4 racks × 4 nodes × 16 ranks, 100 µs inter-rack
+//! class) where the rack → node → socket tree must stay within noise of
+//! the two-level hierarchy while beating both flat message-passing models
+//! (it additionally confines cross-rack traffic to rack-chunk fetches:
+//! ~4× fewer cross-rack messages than two-level in the reference model).
 //!
 //! Run: `cargo bench --bench hier_sweep` (plain harness).
 //!
@@ -35,10 +40,17 @@ use dca_dls::workload::IterationCost;
 
 const N: u64 = 65_536;
 
-fn run(model: ExecutionModel, delay: InjectedDelay) -> f64 {
-    let cluster = ClusterConfig::minihpc(); // 16 nodes × 16 ranks = 256
+fn run_on(
+    model: ExecutionModel,
+    delay: InjectedDelay,
+    cluster: &ClusterConfig,
+    levels: u32,
+) -> f64 {
     let (technique, hier) = if model == ExecutionModel::HierDca {
-        (TechniqueKind::Fac2, HierParams::with_inner(TechniqueKind::Ss))
+        let hier = HierParams::with_inner(TechniqueKind::Ss);
+        // Depth 3: FAC2 at the rack and node levels, SS within the node.
+        let hier = if levels == 3 { hier.with_levels(3).with_fanouts(&[4, 4]) } else { hier };
+        (TechniqueKind::Fac2, hier)
     } else {
         (TechniqueKind::Ss, HierParams::default())
     };
@@ -47,12 +59,16 @@ fn run(model: ExecutionModel, delay: InjectedDelay) -> f64 {
         technique,
         model,
         delay,
-        cluster,
+        cluster: cluster.clone(),
         cost: IterationCost::Constant(5e-3),
         pe_speed: vec![],
         hier,
     };
     simulate(&cfg).expect("simulate").t_par()
+}
+
+fn run(model: ExecutionModel, delay: InjectedDelay) -> f64 {
+    run_on(model, delay, &ClusterConfig::minihpc(), 2) // 16 nodes × 16 ranks
 }
 
 fn main() {
@@ -78,32 +94,55 @@ fn main() {
         println!("{label:<28} {cca:>10.3} {dca:>10.3} {rma:>10.3} {hier:>10.3}");
         table.push((label, cca, dca, rma, hier));
     }
+
+    // -- the depth-3 scenario: 4 racks × 4 nodes × 16 ranks, 100 µs rack
+    //    class. Every model runs on the *racked* cluster; the hierarchy
+    //    additionally runs as the rack → node → socket tree.
+    let racked = ClusterConfig { racks: 4, inter_rack_latency: 100e-6, ..ClusterConfig::minihpc() };
+    let d3_label = "depth-3 rack 100 µs";
+    let d3 = {
+        let none = InjectedDelay::none();
+        let cca = run_on(ExecutionModel::Cca, none, &racked, 2);
+        let dca = run_on(ExecutionModel::Dca, none, &racked, 2);
+        let rma = run_on(ExecutionModel::DcaRma, none, &racked, 2);
+        let h2 = run_on(ExecutionModel::HierDca, none, &racked, 2);
+        let h3 = run_on(ExecutionModel::HierDca, none, &racked, 3);
+        println!(
+            "{d3_label:<28} {cca:>10.3} {dca:>10.3} {rma:>10.3} {h2:>10.3}  HIER(3) {h3:>7.3}"
+        );
+        (cca, dca, rma, h2, h3)
+    };
     println!("\n(ran in {:?})", t0.elapsed());
 
     // -- machine-readable export (CI regression gate) ------------------------
 
     let out_path = std::env::var("BENCH_HIER_SWEEP_JSON")
         .unwrap_or_else(|_| "BENCH_hier_sweep.json".to_string());
+    let mut rows: Vec<Json> = table
+        .iter()
+        .map(|(label, cca, dca, rma, hier)| {
+            Json::obj()
+                .field("scenario", *label)
+                .field("CCA", *cca)
+                .field("DCA", *dca)
+                .field("DCA-RMA", *rma)
+                .field("HIER-DCA", *hier)
+        })
+        .collect();
+    rows.push(
+        Json::obj()
+            .field("scenario", d3_label)
+            .field("CCA", d3.0)
+            .field("DCA", d3.1)
+            .field("DCA-RMA", d3.2)
+            .field("HIER-DCA", d3.3)
+            .field("HIER-DCA(3)", d3.4),
+    );
     let doc = Json::obj()
         .field("bench", "hier_sweep")
         .field("n", N)
         .field("ranks", 256u64)
-        .field(
-            "scenarios",
-            Json::Arr(
-                table
-                    .iter()
-                    .map(|(label, cca, dca, rma, hier)| {
-                        Json::obj()
-                            .field("scenario", *label)
-                            .field("CCA", *cca)
-                            .field("DCA", *dca)
-                            .field("DCA-RMA", *rma)
-                            .field("HIER-DCA", *hier)
-                    })
-                    .collect(),
-            ),
-        );
+        .field("scenarios", Json::Arr(rows));
     std::fs::write(&out_path, doc.render()).expect("write bench JSON");
     println!("wrote {out_path}");
 
@@ -141,6 +180,25 @@ fn main() {
     assert!(
         hier_a < cca_a,
         "assignment 100µs: hier {hier_a:.3}s must beat flat CCA {cca_a:.3}s"
+    );
+
+    // 4. Depth 3 on the racked cluster: the rack → node → socket tree must
+    //    stay within noise of the two-level hierarchy (its win is confining
+    //    cross-rack traffic, not t_par on this constant-cost loop) while
+    //    beating both flat message-passing models, which route every chunk's
+    //    round trips through the cross-rack classes.
+    let (cca_r, dca_r, _, h2_r, h3_r) = d3;
+    assert!(
+        h3_r <= h2_r * 1.05,
+        "depth-3: {h3_r:.3}s must stay within 5% of two-level {h2_r:.3}s"
+    );
+    assert!(
+        h3_r < dca_r,
+        "depth-3: {h3_r:.3}s must beat flat DCA {dca_r:.3}s on the racked cluster"
+    );
+    assert!(
+        h3_r < cca_r,
+        "depth-3: {h3_r:.3}s must beat flat CCA {cca_r:.3}s on the racked cluster"
     );
 
     println!("hier_sweep: all paper-shape assertions hold ✓");

@@ -7,21 +7,29 @@ Usage:
 
 Both files follow the schema emitted by `cargo bench --bench hier_sweep`
 (see benches/hier_sweep.rs): {"bench", "n", "ranks", "scenarios": [
-{"scenario": <label>, "<MODEL>": <t_par seconds>, ...}, ...]}.
+{"scenario": <label>, "<MODEL>": <t_par seconds>, ...}, ...]}. Model keys
+are derived per row (any key that isn't metadata), so scenarios may carry
+different model sets — e.g. the depth-3 row's "HIER-DCA(3)" column.
+
+A baseline row may carry a per-scenario `"tol"` field overriding the
+global `--tol` — deterministic scenarios can be gated tightly while
+protocol-sensitive ones keep headroom.
 
 Exit status is non-zero when any (scenario, model) cell deviates from the
-baseline by more than the tolerance, when a cell is missing, or when the
-run shapes (n, ranks, scenario set) differ — so CI fails loudly instead of
-silently absorbing a regression. Regenerate the baseline with
-`python3 python/tools/hier_sweep_model.py` (the reference model of the
-deterministic DES) or by copying a trusted run's output.
+baseline by more than the tolerance, when the per-row model sets differ,
+or when the run shapes (n, ranks, scenario set) differ — so CI fails
+loudly instead of silently absorbing a regression. Regenerate the baseline
+with `python3 python/tools/hier_sweep_model.py` (the reference model of
+the deterministic DES) or by copying a trusted run's output (re-adding the
+`tol` fields).
 """
 
 import argparse
 import json
 import sys
 
-MODELS = ["CCA", "DCA", "DCA-RMA", "HIER-DCA"]
+# Row keys that are not model columns.
+META_KEYS = {"scenario", "tol"}
 
 
 def load(path):
@@ -29,11 +37,17 @@ def load(path):
         return json.load(fh)
 
 
+def model_keys(row):
+    return {k for k in row if k not in META_KEYS}
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current")
     ap.add_argument("baseline")
-    ap.add_argument("--tol", type=float, default=0.10, help="relative tolerance")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="relative tolerance (overridden per scenario by a "
+                         "baseline row's 'tol' field)")
     args = ap.parse_args()
 
     cur = load(args.current)
@@ -56,24 +70,31 @@ def main():
         )
 
     for label in sorted(set(cur_rows) & set(base_rows)):
-        for model in MODELS:
-            got = cur_rows[label].get(model)
-            want = base_rows[label].get(model)
-            if got is None or want is None:
-                failures.append(f"[{label}] {model}: missing cell "
+        crow, brow = cur_rows[label], base_rows[label]
+        tol = brow.get("tol", args.tol)
+        if model_keys(crow) != model_keys(brow):
+            failures.append(
+                f"[{label}] model sets differ: current={sorted(model_keys(crow))} "
+                f"baseline={sorted(model_keys(brow))}"
+            )
+        for model in sorted(model_keys(crow) & model_keys(brow)):
+            got = crow.get(model)
+            want = brow.get(model)
+            if not isinstance(got, (int, float)) or not isinstance(want, (int, float)):
+                failures.append(f"[{label}] {model}: non-numeric cell "
                                 f"(current={got!r}, baseline={want!r})")
                 continue
             if want == 0:
                 failures.append(f"[{label}] {model}: zero baseline")
                 continue
             rel = abs(got - want) / abs(want)
-            status = "ok" if rel <= args.tol else "FAIL"
+            status = "ok" if rel <= tol else "FAIL"
             print(f"[{label}] {model}: current={got:.4f}s baseline={want:.4f}s "
-                  f"drift={rel * 100:.2f}% {status}")
-            if rel > args.tol:
+                  f"drift={rel * 100:.2f}% (tol {tol * 100:.0f}%) {status}")
+            if rel > tol:
                 failures.append(
                     f"[{label}] {model}: {got:.4f}s drifted {rel * 100:.2f}% "
-                    f"from baseline {want:.4f}s (tol {args.tol * 100:.0f}%)"
+                    f"from baseline {want:.4f}s (tol {tol * 100:.0f}%)"
                 )
 
     if failures:
@@ -81,7 +102,7 @@ def main():
         for f in failures:
             print(f"  - {f}", file=sys.stderr)
         return 1
-    print(f"\nbench regression gate passed (tol {args.tol * 100:.0f}%)")
+    print("\nbench regression gate passed")
     return 0
 
 

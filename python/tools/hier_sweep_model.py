@@ -4,13 +4,16 @@ bench baseline.
 
 This is a line-faithful Python port of the repository's deterministic DES
 (`rust/src/des/mod.rs` for CCA / DCA / DCA-RMA, `rust/src/hier/mod.rs` +
-`rust/src/hier/protocol.rs` for HIER-DCA), restricted to exactly what the
-bench exercises: the miniHPC geometry (16 nodes x 16 ranks), SS for the
-flat models, FAC2(outer) |> SS(inner) for the hierarchy, constant iteration
-cost 5 ms, N = 65536, and the four delay scenarios. The DES is
-deterministic virtual-time simulation, so a faithful port reproduces the
-Rust t_par values to float precision; the CI gate still allows a tolerance
-(see ci/compare_bench.py) to absorb any residual divergence.
+`rust/src/hier/protocol.rs` for the recursive N-level HIER-DCA). The flat
+sims are restricted to SS (the bench's stress technique); the tree sim is
+the full recursive engine: a depth-k persona tree over per-level ledgers
+(the root is a pre-installed ledger over the whole loop), closed-form
+SS / FAC2 / GSS techniques bound per chunk, staged prefetch queues of
+configurable depth, fixed or EWMA-adaptive watermarks, and the physical
+rank → node → rack latency triple. The DES is deterministic virtual-time
+simulation, so a faithful port reproduces the Rust t_par values to float
+precision; the CI gate still allows a tolerance (see ci/compare_bench.py)
+to absorb any residual divergence.
 
 The port mirrors the Rust event loops path-for-path, including the event
 heap's FIFO tie-breaking on equal timestamps, because same-time event
@@ -18,6 +21,9 @@ order changes the schedule.
 
 Usage:  python3 python/tools/hier_sweep_model.py [out.json]
         (default out path: benches/baselines/hier_sweep.json)
+
+The classes are importable for ad-hoc protocol validation (coverage,
+prefetch payoffs, adaptive-watermark claims) at any geometry.
 """
 
 import heapq
@@ -35,11 +41,12 @@ RPN = 16
 P = NODES * RPN  # 256
 INTRA = 0.5e-6
 INTER = 2.0e-6
+INTER_RACK = 100e-6  # the depth-3 scenario's rack class (--rack-latency-us 100)
 SERVICE = 0.5e-6
 CALC = 0.2e-6
 BREAK_AFTER = 1
 COST = 5e-3  # constant per-iteration cost
-OUTER_N_OVER_P = N / NODES  # FAC2 outer: 4096.0
+RTT_EWMA_ALPHA = 0.5  # rust/src/hier/protocol.rs::RTT_EWMA_ALPHA
 
 
 def ns(seconds):
@@ -58,22 +65,61 @@ def secs(t_ns):
     return t_ns / 1e9
 
 
-def node_of(rank):
-    return rank // RPN
-
-
-def lat_ns(a, b):
-    if a == b:
+def ceil_u64(x):
+    """rust/src/techniques/mod.rs::ceil_u64 (saturating at 0)."""
+    if x <= 0.0:
         return 0
-    if node_of(a) == node_of(b):
-        return ns(INTRA)
-    return ns(INTER)
+    return int(math.ceil(x))
 
 
-def fac2_outer_closed(step):
-    """rust/src/techniques/fac.rs::FacConsts::closed bound to (N, NODES)."""
-    batch = step // NODES + 1
-    return max(0, math.ceil(0.5**batch * OUTER_N_OVER_P))
+def closed_chunk(tech, step, n, p):
+    """Closed forms of the techniques the model supports, bound to (n, p).
+
+    Mirrors rust/src/techniques/{ss,fac,gss}.rs.
+    """
+    if tech == "ss":
+        return 1
+    if tech == "fac2":
+        batch = step // p + 1
+        return ceil_u64(0.5 ** batch * (n / p))
+    if tech == "gss":
+        q = (p - 1.0) / p
+        return ceil_u64(q ** step * (n / p))
+    raise ValueError(f"unsupported technique {tech!r}")
+
+
+class Cluster:
+    """Physical geometry + latency triple (rust ClusterConfig/Topology)."""
+
+    def __init__(self, nodes=NODES, rpn=RPN, racks=1, intra=INTRA, inter=INTER,
+                 inter_rack=INTER_RACK, service=SERVICE, calc=CALC,
+                 break_after=BREAK_AFTER):
+        self.nodes = nodes
+        self.rpn = rpn
+        self.racks = racks if racks >= 1 and nodes % max(racks, 1) == 0 else 1
+        self.nodes_per_rack = nodes // self.racks
+        self.p = nodes * rpn
+        self.intra = intra
+        self.inter = inter
+        self.inter_rack = inter_rack
+        self.service = service
+        self.calc = calc
+        self.break_after = break_after
+
+    def node_of(self, rank):
+        return rank // self.rpn
+
+    def rack_of(self, rank):
+        return self.node_of(rank) // self.nodes_per_rack
+
+    def lat_ns(self, a, b):
+        if a == b:
+            return 0
+        if self.node_of(a) == self.node_of(b):
+            return ns(self.intra)
+        if self.rack_of(a) == self.rack_of(b):
+            return ns(self.inter)
+        return ns(self.inter_rack)
 
 
 class WorkQueue:
@@ -141,8 +187,9 @@ class Heap:
 
 
 class FlatSim:
-    def __init__(self, model, delay_calc, delay_assign):
+    def __init__(self, model, delay_calc, delay_assign, cluster=None):
         self.model = model  # 'cca' | 'dca' | 'rma'
+        self.cl = cluster or Cluster()
         self.dc = delay_calc
         self.da = delay_assign
         self.heap = Heap()
@@ -154,7 +201,7 @@ class FlatSim:
         self.rank0_finish = 0
         self.nic = deque()
         self.nic_busy = False
-        self.finish = [0] * P
+        self.finish = [0] * self.cl.p
         self.granted = 0
 
     # -- helpers ----------------------------------------------------------
@@ -163,27 +210,32 @@ class FlatSim:
         return ns(COST * size)
 
     def send_svc(self, src, task):
-        self.heap.push(self.now + lat_ns(src, 0), ("svc", task))
+        self.heap.push(self.now + self.cl.lat_ns(src, 0), ("svc", task))
 
     def send_reply(self, w, reply, at):
-        self.heap.push(at + lat_ns(0, w), ("reply", w, reply))
+        self.heap.push(at + self.cl.lat_ns(0, w), ("reply", w, reply))
 
     def send_nic(self, w, op, extra):
-        self.heap.push(self.now + extra + lat_ns(w, 0), ("nic", w, op))
+        self.heap.push(self.now + extra + self.cl.lat_ns(w, 0), ("nic", w, op))
 
     def worker_send_request(self, w):
         task = ("request", w) if self.model == "cca" else ("getstep", w)
-        self.heap.push(self.now + lat_ns(w, 0), ("svc", task))
+        self.heap.push(self.now + self.cl.lat_ns(w, 0), ("svc", task))
 
     # -- bootstrap --------------------------------------------------------
 
     def run(self):
+        p = self.cl.p
         if self.model in ("cca", "dca"):
-            for w in range(1, P):
+            for w in range(1, p):
                 self.worker_send_request(w)
             self.heap.push(0, ("rank0free",))
+            if self.cl.break_after == 0:
+                # Dedicated master/coordinator: serves only, never executes
+                # (rust/src/des/mod.rs::rank0_computes).
+                self.own = ("finished",)
         else:
-            for w in range(P):
+            for w in range(p):
                 self.send_nic(w, ("reserve",), 0)
             self.own = ("finished",)
         while True:
@@ -272,7 +324,7 @@ class FlatSim:
             self.finish_own(dur)
         elif kind == "exec":
             _, cursor, end = own
-            seg = min(BREAK_AFTER, end - cursor)
+            seg = min(self.cl.break_after, end - cursor)
             dur = ns(COST * seg)
             if cursor + seg < end:
                 self.own = ("exec", cursor + seg, end)
@@ -344,52 +396,100 @@ class FlatSim:
         if op[0] == "reserve":
             t = self.queue.begin_step()
             if t is not None:
-                back = self.now + dur + lat_ns(0, w)
+                back = self.now + dur + self.cl.lat_ns(0, w)
                 calc = ns(self.dc + CALC)
                 claim_sent = back + calc + ns(self.da)
-                arrive = claim_sent + lat_ns(w, 0)
+                arrive = claim_sent + self.cl.lat_ns(w, 0)
                 self.heap.push(arrive, ("nic", w, ("claim", t[0], 1)))
             else:
-                self.finish[w] = self.now + dur + lat_ns(0, w)
+                self.finish[w] = self.now + dur + self.cl.lat_ns(0, w)
         else:  # claim
             _, step, size = op
             a = self.queue.commit(step, size)
             if a is not None:
                 self.granted += a[2]
-                start_exec = self.now + dur + lat_ns(0, w)
+                start_exec = self.now + dur + self.cl.lat_ns(0, w)
                 self.heap.push(start_exec + self.exec_ns(a[2]), ("execdone", w))
             else:
-                self.finish[w] = self.now + dur + lat_ns(0, w)
+                self.finish[w] = self.now + dur + self.cl.lat_ns(0, w)
         self.heap.push(self.now + dur, ("nicfree",))
         self.nic_busy = True
 
 
 # ---------------------------------------------------------------------------
-# HIER-DCA (rust/src/hier/mod.rs + protocol.rs), FAC2 outer |> SS inner
+# recursive N-level HIER-DCA (rust/src/hier/mod.rs + protocol.rs)
+
+
+class PeStats:
+    """rust/src/techniques/af.rs::PeStats (the µ estimate only)."""
+
+    def __init__(self):
+        self.iters = 0
+        self.time = 0.0
+
+    def record(self, iters, elapsed):
+        if iters == 0:
+            return
+        self.iters += iters
+        self.time += elapsed
+
+    def mu(self):
+        if self.iters > 0 and self.time > 0.0:
+            return self.time / self.iters
+        return None
 
 
 class Ledger:
-    """rust/src/hier/protocol.rs::NodeLedger (inner SS, no prefetch)."""
+    """rust/src/hier/protocol.rs::NodeLedger (closed-form techniques)."""
 
-    def __init__(self):
+    def __init__(self, tech, fanout, staged_cap=1):
+        self.tech = tech
+        self.fanout = fanout
+        self.staged_cap = max(staged_cap, 1)
         self.seq = 0
         self.q = None  # WorkQueue over [0, len)
         self.offset = 0
+        self.len = 0
+        self.staged = deque()
 
     def current_live(self):
         return self.q is not None and not self.q.is_done()
 
     def has_work(self):
-        return self.current_live()
+        return self.current_live() or bool(self.staged)
+
+    def remaining(self):
+        return 0 if self.q is None else self.q.remaining()
+
+    def staged_len(self):
+        return len(self.staged)
+
+    def wants_prefetch(self, watermark):
+        if watermark is None:
+            return False
+        return len(self.staged) < self.staged_cap and self.remaining() <= watermark
+
+    def current_len(self):
+        return self.len
 
     def install(self, start, size):
+        if self.current_live() or self.staged:
+            assert len(self.staged) < self.staged_cap, "staged queue overflow"
+            self.staged.append((start, size))
+        else:
+            self.install_now(start, size)
+
+    def install_now(self, start, size):
         self.seq += 1
         self.q = WorkQueue(size)
         self.offset = start
+        self.len = size
 
     def reserve(self):
         if not self.current_live():
-            return None
+            if not self.staged:
+                return None
+            self.install_now(*self.staged.popleft())
         t = self.q.begin_step()
         return (t[0], t[1], self.seq)
 
@@ -401,288 +501,513 @@ class Ledger:
             return ("stale",)
         return ("drained",)
 
+    def closed_inner_size(self, step, seq):
+        if self.q is not None and self.seq == seq:
+            return closed_chunk(self.tech, step, self.len, self.fanout)
+        return None
 
-class Master:
-    def __init__(self, m):
-        self.rank = m * RPN
+
+class RttEwma:
+    """rust/src/hier/protocol.rs::RttEwma (seconds domain)."""
+
+    def __init__(self):
+        self.ewma_s = 0.0
+
+    def observe(self, rtt_s):
+        if self.ewma_s > 0.0:
+            self.ewma_s = RTT_EWMA_ALPHA * rtt_s + (1.0 - RTT_EWMA_ALPHA) * self.ewma_s
+        else:
+            self.ewma_s = rtt_s
+
+    def value(self):
+        return self.ewma_s if self.ewma_s > 0.0 else None
+
+
+def auto_watermark(rtt, mu):
+    """rust/src/hier/protocol.rs::auto_watermark."""
+    if rtt is not None and mu is not None and mu > 0.0:
+        return int(math.ceil(rtt / mu))
+    return 0
+
+
+class Persona:
+    def __init__(self, rank, tech, fanout, staged_cap, is_root):
+        self.rank = rank
+        self.ledger = Ledger(tech, fanout, staged_cap)
+        self.parked = deque()
+        self.fetching = False
+        self.global_done = is_root
+        self.stats = PeStats()
+        self.pending_report = None  # unused without AF; kept for fidelity
+        self.installed_ns = 0
+        self.installed_iters = 0
+        self.fetch_sent_ns = 0
+        self.rtt = RttEwma()
+
+
+class Server:
+    def __init__(self, rank):
+        self.rank = rank
         self.queue = deque()
         self.busy = False
         self.cpu_busy_until = 0
-        self.ledger = Ledger()
-        self.parked = deque()
-        self.own_parked = False
-        self.fetching = False
-        self.global_done = False
         self.own = ("needwork",)
+        self.own_parked = False
 
 
-class HierSim:
-    def __init__(self, delay_calc, delay_assign):
+class TreeSim:
+    """The recursive N-level HIER-DCA DES (rust/src/hier/mod.rs).
+
+    `techs`/`fanouts`: one entry per level, outer first (product = ranks).
+    `watermark`: None (off), int (fixed), or "auto" (EWMA-adaptive).
+    """
+
+    def __init__(self, n, techs, fanouts, cluster=None, delay_calc=0.0,
+                 delay_assign=0.0, cost=COST, watermark=None, prefetch_depth=1):
+        self.n = n
+        self.k = len(fanouts)
+        assert len(techs) == self.k
+        self.techs = techs
+        self.fanouts = fanouts
+        self.cl = cluster or Cluster()
+        p = 1
+        for f in fanouts:
+            p *= f
+        assert p == self.cl.p, f"fanouts {fanouts} != ranks {self.cl.p}"
         self.dc = delay_calc
         self.da = delay_assign
+        self.cost = cost
+        self.watermark = watermark
         self.heap = Heap()
         self.now = 0
-        self.outer_q = WorkQueue(N)
-        self.masters = [Master(m) for m in range(NODES)]
-        self.finish = [0] * P
+        self.personas = []
+        for d in range(self.k):
+            masters = 1
+            for f in fanouts[:d]:
+                masters *= f
+            level = [
+                Persona(self.host_rank(d, j), techs[d], fanouts[d],
+                        prefetch_depth, d == 0)
+                for j in range(masters)
+            ]
+            self.personas.append(level)
+        self.personas[0][0].ledger.install(0, n)
+        n_servers = self.cl.p // fanouts[-1]
+        self.servers = [Server(s * fanouts[-1]) for s in range(n_servers)]
+        self.finish = [0] * self.cl.p
+        self.wait_ns = [0] * self.cl.p
+        self.req_sent = [0] * self.cl.p
         self.granted = 0
+        self.assignments = []
+        self.messages = 0
+        self.intra_msgs = 0
+        self.inter_msgs = 0
+        self.level_msgs = [0] * self.k
+
+    # -- helpers ----------------------------------------------------------
+
+    def subtree(self, d):
+        s = 1
+        for f in self.fanouts[d:]:
+            s *= f
+        return s
+
+    def host_rank(self, d, j):
+        return j * self.subtree(d)
+
+    def server_of_rank(self, rank):
+        return rank // self.fanouts[-1]
+
+    def lat_ns(self, a, b):
+        return self.cl.lat_ns(a, b)
+
+    # -- bootstrap --------------------------------------------------------
 
     def run(self):
-        for w in range(P):
-            m = node_of(w)
-            if w == self.masters[m].rank:
+        leaf_fanout = self.fanouts[-1]
+        for w in range(self.cl.p):
+            if w % leaf_fanout == 0:
                 continue
-            self.send_inner(w, ("innerget", w), 0)
-        for m in range(NODES):
-            self.masters[m].busy = True
-            self.heap.push(0, ("serverfree", m))
+            self.req_sent[w] = 0
+            self.send_leaf(w, ("leafget", w), 0)
+        for s in range(len(self.servers)):
+            if self.cl.break_after == 0:
+                self.servers[s].own = ("finished",)
+            self.servers[s].busy = True
+            self.heap.push(0, ("serverfree", s))
         while True:
             popped = self.heap.pop()
             if popped is None:
                 break
             self.now, ev = popped
             self.dispatch(ev)
-        assert self.granted == N, f"hier: granted {self.granted} != {N}"
+        assert self.granted == self.n, f"tree: granted {self.granted} != {self.n}"
         finish = [secs(f) for f in self.finish]
-        for master in self.masters:
-            r = master.rank
-            finish[r] = max(finish[r], secs(master.cpu_busy_until))
-        return max(finish)
+        for server in self.servers:
+            r = server.rank
+            finish[r] = max(finish[r], secs(server.cpu_busy_until))
+        self.t_par = max(finish)
+        self.sched_wait = sum(secs(w) for w in self.wait_ns)
+        return self.t_par
 
     def dispatch(self, ev):
         kind = ev[0]
         if kind == "arrive":
-            _, m, task = ev
-            master = self.masters[m]
-            master.queue.append(task)
-            if not master.busy:
-                master.busy = True
-                self.heap.push(self.now, ("serverfree", m))
+            _, s, task = ev
+            server = self.servers[s]
+            server.queue.append(task)
+            if not server.busy:
+                server.busy = True
+                self.heap.push(self.now, ("serverfree", s))
         elif kind == "serverfree":
             self.server_next_action(ev[1])
         elif kind == "workerreply":
             self.worker_on_reply(ev[1], ev[2])
         elif kind == "calcdone":
             _, w, step, size, seq = ev
-            self.send_inner(w, ("innercommit", w, step, size, seq), 0)
+            self.req_sent[w] = self.now
+            self.send_leaf(w, ("leafcommit", w, step, size, seq), 0)
         elif kind == "execdone":
             w = ev[1]
-            self.send_inner(w, ("innerget", w), 0)
+            self.req_sent[w] = self.now
+            self.send_leaf(w, ("leafget", w), 0)
 
     # -- messaging --------------------------------------------------------
 
-    def send_inner(self, w, task, extra):
-        m = node_of(w)
-        mrank = self.masters[m].rank
-        self.heap.push(self.now + extra + lat_ns(w, mrank), ("arrive", m, task))
-
-    def send_to_master(self, to, task, dur):
-        coord = self.masters[0].rank
-        mrank = self.masters[to].rank
-        self.heap.push(self.now + dur + lat_ns(coord, mrank), ("arrive", to, task))
-
-    def send_worker(self, m, w, reply, dur):
-        mrank = self.masters[m].rank
-        self.heap.push(self.now + dur + lat_ns(mrank, w), ("workerreply", w, reply))
-
-    # -- master CPU -------------------------------------------------------
-
-    def server_next_action(self, m):
-        master = self.masters[m]
-        if master.queue:
-            task = master.queue.popleft()
-            dur = self.service(m, task)
-            master.busy = True
-            master.cpu_busy_until = self.now + dur
-            self.heap.push(self.now + dur, ("serverfree", m))
-            return
-        self.own_next_action(m)
-
-    def service(self, m, task):
-        kind = task[0]
-        if kind == "innerget":
-            w = task[1]
-            dur = ns(SERVICE)
-            self.inner_get(m, w, dur)
-            return dur
-        if kind == "innercommit":
-            _, w, step, size, seq = task
-            dur = ns(SERVICE + self.da)
-            self.inner_commit(m, w, step, size, seq, dur)
-            return dur
-        if kind == "outerget":
-            frm = task[1]
-            dur = ns(SERVICE)
-            t = self.outer_q.begin_step()
-            if t is not None:
-                self.send_to_master(frm, ("outerstep", t[0]), dur)
-            else:
-                self.send_to_master(frm, ("outerdone",), dur)
-            return dur
-        if kind == "outercommit":
-            _, frm, step, size = task
-            dur = ns(SERVICE + self.da)
-            a = self.outer_q.commit(step, size)
-            if a is not None:
-                self.send_to_master(frm, ("outerchunk", a[1], a[2]), dur)
-            else:
-                self.send_to_master(frm, ("outerdone",), dur)
-            return dur
-        if kind == "outerstep":
-            step = task[1]
-            mrank = self.masters[m].rank
-            dur = ns(self.dc + CALC)
-            size = fac2_outer_closed(step)
-            coord = self.masters[0].rank
-            self.heap.push(
-                self.now + dur + lat_ns(mrank, coord),
-                ("arrive", 0, ("outercommit", m, step, size)),
-            )
-            return dur
-        if kind == "outerchunk":
-            _, start, size = task
-            dur = ns(SERVICE)
-            self.install_chunk(m, start, size)
-            return dur
-        # outerdone
-        dur = ns(SERVICE)
-        master = self.masters[m]
-        master.global_done = True
-        master.fetching = False
-        self.requeue_parked(m)
-        return dur
-
-    def inner_get(self, m, w, dur):
-        r = self.masters[m].ledger.reserve()
-        if r is not None:
-            self.send_worker(m, w, ("step", r[0], r[2]), dur)
-        elif self.masters[m].global_done:
-            self.send_worker(m, w, ("done",), dur)
+    def count_msg(self, a, b, d):
+        self.messages += 1
+        self.level_msgs[d] += 1
+        if self.cl.node_of(a) == self.cl.node_of(b):
+            self.intra_msgs += 1
         else:
-            self.masters[m].parked.append(w)
-            self.maybe_fetch(m, dur)
+            self.inter_msgs += 1
 
-    def inner_commit(self, m, w, step, size, seq, dur):
-        out = self.masters[m].ledger.commit(step, size, seq)
-        if out[0] == "granted":
-            self.granted += out[3]
-            self.send_worker(m, w, ("chunk", out[2], out[3]), dur)
-        elif out[0] == "stale":
-            self.inner_get(m, w, dur)
-        elif self.masters[m].global_done:
-            self.send_worker(m, w, ("done",), dur)
-        else:
-            self.masters[m].parked.append(w)
-            self.maybe_fetch(m, dur)
+    def send_leaf(self, w, task, extra):
+        s = self.server_of_rank(w)
+        mrank = self.servers[s].rank
+        self.count_msg(w, mrank, self.k - 1)
+        self.heap.push(self.now + extra + self.lat_ns(w, mrank), ("arrive", s, task))
 
-    def maybe_fetch(self, m, dur):
-        master = self.masters[m]
-        if master.fetching or master.global_done:
-            return
-        master.fetching = True
-        mrank = master.rank
-        coord = self.masters[0].rank
+    def send_worker(self, s, w, reply, dur):
+        mrank = self.servers[s].rank
+        self.count_msg(mrank, w, self.k - 1)
+        self.heap.push(self.now + dur + self.lat_ns(mrank, w), ("workerreply", w, reply))
+
+    def send_master_reply(self, d, jp, to, task, dur):
+        parent_rank = self.host_rank(d, jp)
+        child_rank = self.host_rank(d + 1, to)
+        self.count_msg(parent_rank, child_rank, d)
         self.heap.push(
-            self.now + dur + lat_ns(mrank, coord), ("arrive", 0, ("outerget", m))
+            self.now + dur + self.lat_ns(parent_rank, child_rank),
+            ("arrive", self.server_of_rank(child_rank), task),
         )
 
-    def install_chunk(self, m, start, size):
-        master = self.masters[m]
-        master.ledger.install(start, size)
-        master.fetching = False
-        self.requeue_parked(m)
+    # -- hosting-rank CPU -------------------------------------------------
 
-    def requeue_parked(self, m):
-        master = self.masters[m]
-        while master.parked:
-            w = master.parked.popleft()
-            master.queue.append(("innerget", w))
-        if master.own_parked:
-            master.own_parked = False
-            master.own = ("needwork",)
+    def server_next_action(self, s):
+        server = self.servers[s]
+        if server.queue:
+            task = server.queue.popleft()
+            dur = self.service(s, task)
+            server.busy = True
+            server.cpu_busy_until = self.now + dur
+            self.heap.push(self.now + dur, ("serverfree", s))
+            return
+        self.own_next_action(s)
 
-    # -- workers ----------------------------------------------------------
+    def service(self, s, task):
+        kind = task[0]
+        if kind == "leafget":
+            w = task[1]
+            dur = ns(SERVICE)
+            self.leaf_get(s, w, dur)
+            return dur
+        if kind == "leafcommit":
+            _, w, step, size, seq = task
+            dur = ns(SERVICE + self.da)
+            self.leaf_commit(s, w, step, size, seq, dur)
+            return dur
+        if kind == "masterget":
+            _, d, frm = task
+            jp = frm // self.fanouts[d]
+            dur = ns(SERVICE)
+            self.serve_master_get(d, jp, frm, dur)
+            return dur
+        if kind == "mastercommit":
+            _, d, frm, step, size, seq = task
+            jp = frm // self.fanouts[d]
+            dur = ns(SERVICE + self.da)
+            self.master_commit(d, jp, frm, step, size, seq, dur)
+            return dur
+        if kind == "masterstep":
+            _, d, to, step, remaining, seq = task
+            child_rank = self.host_rank(d + 1, to)
+            dur = ns(self.dc + CALC)
+            size = self.master_calc(d, to, step, remaining, seq)
+            parent_rank = self.host_rank(d, to // self.fanouts[d])
+            self.count_msg(child_rank, parent_rank, d)
+            self.heap.push(
+                self.now + dur + self.lat_ns(child_rank, parent_rank),
+                ("arrive", self.server_of_rank(parent_rank),
+                 ("mastercommit", d, to, step, size, seq)),
+            )
+            return dur
+        if kind == "masterchunk":
+            _, d, to, start, size = task
+            dur = ns(SERVICE)
+            self.install_chunk(d + 1, to, start, size)
+            return dur
+        # masterdone
+        _, d, to = task
+        dur = ns(SERVICE)
+        pr = self.personas[d + 1][to]
+        pr.global_done = True
+        pr.fetching = False
+        self.requeue_parked(d + 1, to)
+        return dur
+
+    def leaf_get(self, s, w, dur):
+        k1 = self.k - 1
+        pr = self.personas[k1][s]
+        r = pr.ledger.reserve()
+        if r is not None:
+            self.send_worker(s, w, ("step", r[0], r[1], r[2]), dur)
+        elif pr.global_done:
+            self.send_worker(s, w, ("done",), dur)
+        else:
+            pr.parked.append(w)
+            self.maybe_fetch(k1, s, dur)
+
+    def leaf_commit(self, s, w, step, size, seq, dur):
+        k1 = self.k - 1
+        pr = self.personas[k1][s]
+        out = pr.ledger.commit(step, size, seq)
+        if out[0] == "granted":
+            self.granted += out[3]
+            self.assignments.append((out[1], out[2], out[3]))
+            self.send_worker(s, w, ("chunk", out[2], out[3]), dur)
+            self.maybe_prefetch(k1, s, dur)
+        elif out[0] == "stale":
+            self.leaf_get(s, w, dur)
+        elif pr.global_done:
+            self.send_worker(s, w, ("done",), dur)
+        else:
+            pr.parked.append(w)
+            self.maybe_fetch(k1, s, dur)
+
+    def serve_master_get(self, d, jp, frm, dur):
+        pr = self.personas[d][jp]
+        r = pr.ledger.reserve()
+        if r is not None:
+            self.send_master_reply(d, jp, frm, ("masterstep", d, frm, r[0], r[1], r[2]), dur)
+        elif pr.global_done:
+            self.send_master_reply(d, jp, frm, ("masterdone", d, frm), dur)
+        else:
+            pr.parked.append(frm)
+            self.maybe_fetch(d, jp, dur)
+
+    def master_commit(self, d, jp, frm, step, size, seq, dur):
+        pr = self.personas[d][jp]
+        out = pr.ledger.commit(step, size, seq)
+        if out[0] == "granted":
+            self.send_master_reply(d, jp, frm, ("masterchunk", d, frm, out[2], out[3]), dur)
+            self.maybe_prefetch(d, jp, dur)
+        elif out[0] == "stale":
+            self.serve_master_get(d, jp, frm, dur)
+        elif pr.global_done:
+            self.send_master_reply(d, jp, frm, ("masterdone", d, frm), dur)
+        else:
+            pr.parked.append(frm)
+            self.maybe_fetch(d, jp, dur)
+
+    def resolve_watermark(self, e, j):
+        if self.watermark is None:
+            return None
+        if self.watermark == "auto":
+            pr = self.personas[e][j]
+            return auto_watermark(pr.rtt.value(), pr.stats.mu())
+        return self.watermark
+
+    def maybe_prefetch(self, e, j, dur):
+        if self.personas[e][j].ledger.wants_prefetch(self.resolve_watermark(e, j)):
+            self.maybe_fetch(e, j, dur)
+
+    def maybe_fetch(self, e, j, dur):
+        pr = self.personas[e][j]
+        if pr.fetching or pr.global_done:
+            return
+        pr.fetching = True
+        if pr.installed_iters > 0:
+            iters = pr.installed_iters
+            elapsed = max(secs(max(self.now + dur - pr.installed_ns, 0)), 1e-12)
+            pr.stats.record(iters, elapsed)
+            pr.installed_iters = 0
+        pr.fetch_sent_ns = self.now + dur
+        # (The Rust engine piggybacks a PerfReport here for AF; the port's
+        # closed-form techniques don't consume it.)
+        pd = e - 1
+        child_rank = pr.rank
+        parent_rank = self.host_rank(pd, j // self.fanouts[pd])
+        self.count_msg(child_rank, parent_rank, pd)
+        self.heap.push(
+            self.now + dur + self.lat_ns(child_rank, parent_rank),
+            ("arrive", self.server_of_rank(parent_rank), ("masterget", pd, j)),
+        )
+
+    def install_chunk(self, e, j, start, size):
+        pr = self.personas[e][j]
+        if pr.fetch_sent_ns > 0:
+            pr.rtt.observe(secs(max(self.now - pr.fetch_sent_ns, 0)))
+        pr.ledger.install(start, size)
+        pr.fetching = False
+        if pr.installed_iters == 0:
+            pr.installed_ns = self.now
+        pr.installed_iters += size
+        self.requeue_parked(e, j)
+
+    def requeue_parked(self, e, j):
+        pr = self.personas[e][j]
+        s = self.server_of_rank(pr.rank)
+        while pr.parked:
+            c = pr.parked.popleft()
+            if e == self.k - 1:
+                self.servers[s].queue.append(("leafget", c))
+            else:
+                self.servers[s].queue.append(("masterget", e, c))
+        if e == self.k - 1 and self.servers[s].own_parked:
+            self.servers[s].own_parked = False
+            self.servers[s].own = ("needwork",)
+
+    def master_calc(self, d, to, step, remaining, seq):
+        jp = to // self.fanouts[d]
+        size = self.personas[d][jp].ledger.closed_inner_size(step, seq)
+        return size if size is not None else 1
+
+    # -- worker ranks -----------------------------------------------------
 
     def worker_on_reply(self, w, reply):
+        self.wait_ns[w] += max(self.now - self.req_sent[w], 0)
         kind = reply[0]
         if kind == "step":
+            _, step, remaining, seq = reply
             dur = ns(self.dc + CALC)
-            self.heap.push(self.now + dur, ("calcdone", w, reply[1], 1, reply[2]))
+            size = self.worker_calc(w, step, remaining, seq)
+            self.heap.push(self.now + dur, ("calcdone", w, step, size, seq))
         elif kind == "chunk":
-            dur = ns(COST * reply[2])
+            dur = ns(self.cost * reply[2])
             self.heap.push(self.now + dur, ("execdone", w))
         else:  # done
             self.finish[w] = self.now
 
-    # -- master's own personality ----------------------------------------
+    def worker_calc(self, w, step, remaining, seq):
+        k1 = self.k - 1
+        s = self.server_of_rank(w)
+        size = self.personas[k1][s].ledger.closed_inner_size(step, seq)
+        return size if size is not None else 1
 
-    def own_next_action(self, m):
-        master = self.masters[m]
-        own = master.own
-        master.own = ("finished",)
+    # -- the hosting rank's own worker personality -------------------------
+
+    def own_next_action(self, s):
+        server = self.servers[s]
+        k1 = self.k - 1
+        own = server.own
+        server.own = ("finished",)
         kind = own[0]
         if kind == "needwork":
             dur = ns(SERVICE)
-            r = master.ledger.reserve()
+            r = self.personas[k1][s].ledger.reserve()
             if r is not None:
-                master.own = ("calc", r[0], r[2])
-            elif master.global_done:
-                self.finish_own(m)
+                server.own = ("calc", r[0], r[1], r[2])
+            elif self.personas[k1][s].global_done:
+                self.finish_own(s)
             else:
-                master.own = ("parked",)
-                master.own_parked = True
-                self.maybe_fetch(m, dur)
-            self.finish_server_action(m, dur)
+                server.own = ("parked",)
+                server.own_parked = True
+                self.maybe_fetch(k1, s, dur)
+            self.finish_server_action(s, dur)
         elif kind == "calc":
+            _, step, remaining, seq = own
             dur = ns(self.dc + CALC)
-            master.own = ("commit", own[1], 1, own[2])
-            self.finish_server_action(m, dur)
+            size = self.worker_calc(server.rank, step, remaining, seq)
+            server.own = ("commit", step, size, seq)
+            self.finish_server_action(s, dur)
         elif kind == "commit":
             _, step, size, seq = own
             dur = ns(SERVICE + self.da)
-            out = master.ledger.commit(step, size, seq)
+            out = self.personas[k1][s].ledger.commit(step, size, seq)
             if out[0] == "granted":
                 self.granted += out[3]
-                master.own = ("exec", out[2], out[2] + out[3])
+                self.assignments.append((out[1], out[2], out[3]))
+                server.own = ("exec", out[2], out[2] + out[3])
+                self.maybe_prefetch(k1, s, dur)
             elif out[0] == "stale":
-                master.own = ("needwork",)
-            elif master.global_done:
-                self.finish_own(m)
+                server.own = ("needwork",)
+            elif self.personas[k1][s].global_done:
+                self.finish_own(s)
             else:
-                master.own = ("parked",)
-                master.own_parked = True
-                self.maybe_fetch(m, dur)
-            self.finish_server_action(m, dur)
+                server.own = ("parked",)
+                server.own_parked = True
+                self.maybe_fetch(k1, s, dur)
+            self.finish_server_action(s, dur)
         elif kind == "exec":
             _, cursor, end = own
-            seg = min(BREAK_AFTER, end - cursor)
-            dur = ns(COST * seg)
+            seg = min(max(self.cl.break_after, 1), end - cursor)
+            dur = ns(self.cost * seg)
             if cursor + seg < end:
-                master.own = ("exec", cursor + seg, end)
+                server.own = ("exec", cursor + seg, end)
             else:
-                master.own = ("needwork",)
-            self.finish_server_action(m, dur)
+                server.own = ("needwork",)
+            self.finish_server_action(s, dur)
         elif kind == "parked":
-            master.own = ("parked",)
-            master.busy = False
+            server.own = ("parked",)
+            server.busy = False
         else:  # finished
-            master.own = ("finished",)
-            master.busy = False
+            server.own = ("finished",)
+            server.busy = False
 
-    def finish_own(self, m):
-        master = self.masters[m]
-        master.own = ("finished",)
-        r = master.rank
+    def finish_own(self, s):
+        server = self.servers[s]
+        server.own = ("finished",)
+        r = server.rank
         self.finish[r] = max(self.finish[r], self.now)
 
-    def finish_server_action(self, m, dur):
-        master = self.masters[m]
-        master.busy = True
-        master.cpu_busy_until = self.now + dur
-        self.heap.push(self.now + dur, ("serverfree", m))
+    def finish_server_action(self, s, dur):
+        server = self.servers[s]
+        server.busy = True
+        server.cpu_busy_until = self.now + dur
+        self.heap.push(self.now + dur, ("serverfree", s))
+
+
+def verify_coverage(assignments, n):
+    """Every iteration granted exactly once (start-sorted, no gaps)."""
+    spans = sorted((start, size) for (_step, start, size) in assignments)
+    cursor = 0
+    for start, size in spans:
+        assert start == cursor, f"gap/overlap at {cursor} (next span {start})"
+        cursor += size
+    assert cursor == n, f"covered {cursor} != {n}"
 
 
 # ---------------------------------------------------------------------------
+
+
+def hier2(dc, da, cluster=None):
+    """The classic two-level row: FAC2 outer ▸ SS inner over the cluster
+    geometry (identical to the pre-refactor hard-coded engine)."""
+    cl = cluster or Cluster()
+    sim = TreeSim(N, ["fac2", "ss"], [cl.nodes, cl.rpn], cluster=cl,
+                  delay_calc=dc, delay_assign=da)
+    t = sim.run()
+    verify_coverage(sim.assignments, N)
+    return t
+
+
+def hier3(dc, da, cluster, fanouts, techs=("fac2", "fac2", "ss")):
+    sim = TreeSim(N, list(techs), list(fanouts), cluster=cluster,
+                  delay_calc=dc, delay_assign=da)
+    t = sim.run()
+    verify_coverage(sim.assignments, N)
+    return t
 
 
 def main():
@@ -700,20 +1025,47 @@ def main():
         cca = FlatSim("cca", dc, da).run()
         dca = FlatSim("dca", dc, da).run()
         rma = FlatSim("rma", dc, da).run()
-        hier = HierSim(dc, da).run()
+        hier = hier2(dc, da)
         print(
-            f"{label:<28} CCA {cca:8.3f}  DCA {dca:8.3f}  "
+            f"{label:<34} CCA {cca:8.3f}  DCA {dca:8.3f}  "
             f"RMA {rma:8.3f}  HIER {hier:8.3f}  (hier/dca {hier / dca:.3f})"
         )
         rows.append(
             {
                 "scenario": label,
+                "tol": 0.10,
                 "CCA": cca,
                 "DCA": dca,
                 "DCA-RMA": rma,
                 "HIER-DCA": hier,
             }
         )
+    # Depth-3 scenario: 4 racks × 4 nodes × 16 ranks with an expensive
+    # 100 µs inter-rack class. The flat models and the two-level hierarchy
+    # pay the rack class on most coordinator traffic; the depth-3 tree
+    # localizes it to rack-chunk fetches.
+    racked = Cluster(racks=4, inter_rack=INTER_RACK)
+    label = "depth-3 rack 100 µs"
+    cca = FlatSim("cca", 0.0, 0.0, cluster=racked).run()
+    dca = FlatSim("dca", 0.0, 0.0, cluster=racked).run()
+    rma = FlatSim("rma", 0.0, 0.0, cluster=racked).run()
+    h2 = hier2(0.0, 0.0, cluster=racked)
+    h3 = hier3(0.0, 0.0, racked, [4, 4, 16])
+    print(
+        f"{label:<34} CCA {cca:8.3f}  DCA {dca:8.3f}  RMA {rma:8.3f}  "
+        f"HIER {h2:8.3f}  HIER(3) {h3:8.3f}  (h3/h2 {h3 / h2:.3f})"
+    )
+    rows.append(
+        {
+            "scenario": label,
+            "tol": 0.15,
+            "CCA": cca,
+            "DCA": dca,
+            "DCA-RMA": rma,
+            "HIER-DCA": h2,
+            "HIER-DCA(3)": h3,
+        }
+    )
     doc = {"bench": "hier_sweep", "n": N, "ranks": P, "scenarios": rows}
     out_path = os.path.normpath(out_path)
     os.makedirs(os.path.dirname(out_path), exist_ok=True)

@@ -41,12 +41,33 @@ impl ExecutionModel {
         }
     }
 
+    /// Rendered label for a run of scheduling-tree depth `levels`: the flat
+    /// models keep their names, the hierarchy is annotated with its depth
+    /// once it deviates from the classic two-level form (`HIER-DCA(3)`), so
+    /// depth-3 runs render and select without colliding with two-level rows.
+    pub fn label(&self, levels: u32) -> String {
+        match self {
+            ExecutionModel::HierDca if levels != 2 && levels != 0 => {
+                format!("HIER-DCA({levels})")
+            }
+            m => m.name().to_string(),
+        }
+    }
+
     pub fn parse(s: &str) -> Option<Self> {
         match s.to_ascii_uppercase().as_str() {
             "CCA" => Some(ExecutionModel::Cca),
             "DCA" => Some(ExecutionModel::Dca),
             "DCA-RMA" | "DCARMA" | "RMA" => Some(ExecutionModel::DcaRma),
             "HIER-DCA" | "HIERDCA" | "HIER" => Some(ExecutionModel::HierDca),
+            // Depth-annotated hierarchy labels ("HIER-DCA(3)") parse back to
+            // the model; the depth itself is configured via `--levels`.
+            up if up.starts_with("HIER") && up.ends_with(')') => up
+                .split_once('(')
+                .filter(|(_, depth)| {
+                    depth.strip_suffix(')').is_some_and(|n| n.parse::<u32>().is_ok())
+                })
+                .and_then(|(head, _)| Self::parse(head)),
             _ => None,
         }
     }
@@ -70,40 +91,275 @@ pub enum DelaySite {
     Assignment,
 }
 
-/// Parameters of the hierarchical two-level model ([`ExecutionModel::HierDca`]).
+/// How a level master derives its prefetch watermark (the iteration count
+/// below which it requests the *next* chunk from its parent while the
+/// current one is still being consumed).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum WatermarkMode {
+    /// No prefetch: fetch on exhaustion (the original arXiv 1903.09510
+    /// behavior).
+    #[default]
+    Off,
+    /// Fixed iteration count, identical for every level master.
+    Fixed(u64),
+    /// Adaptive (SimAS-style feedback): each level master tracks an EWMA of
+    /// its observed parent-fetch round trip and derives the watermark as
+    /// `⌈rtt / per-iteration drain time⌉` from its subtree's measured
+    /// throughput — the round trip is hidden exactly, no hand tuning.
+    /// Falls back to fetch-on-exhaustion until both are measured.
+    Auto,
+}
+
+/// Deepest supported scheduling-tree depth (`--levels`): 1 = flat (the DCA
+/// protocol root ↔ ranks), 2 = the classic two-level hierarchy, 3 = rack →
+/// node → socket. One spare level beyond the ROADMAP's three-level target.
+pub const MAX_LEVELS: usize = 4;
+
+/// One resolved level of the recursive scheduling tree: the technique that
+/// sizes the chunks this level's holder (the root for level 0, a level-d
+/// master otherwise) hands to its `fanout` children, and the nominal one-way
+/// latency class its protocol messages cross.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LevelSpec {
+    /// Technique sizing this level's chunks, bound per parent chunk to
+    /// `P = fanout`.
+    pub technique: TechniqueKind,
+    /// Children per master at this level (leaf ranks at the deepest level).
+    pub fanout: u32,
+    /// Nominal one-way latency class of this level's protocol messages,
+    /// seconds (the DES charges actual rank-pair latency, which collapses to
+    /// this class whenever masters are placed on the physical hierarchy).
+    pub latency: f64,
+}
+
+/// The fully resolved scheduling tree of one run: `levels[0]` is the root
+/// (outer) level, `levels[k-1]` the leaf-serving level. The fanout product
+/// equals the total rank count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelPlan {
+    pub levels: Vec<LevelSpec>,
+}
+
+impl LevelPlan {
+    /// Tree depth `k`.
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Ranks spanned by one subtree rooted at a level-`d` master:
+    /// `S_d = Π_{i≥d} fanout_i` (`S_0` = all ranks, `S_k` would be 1).
+    pub fn subtree_ranks(&self, d: usize) -> u32 {
+        self.levels[d..].iter().map(|l| l.fanout).product()
+    }
+
+    /// Number of masters at level `d` (`M_0 = 1`, the root).
+    pub fn masters_at(&self, d: usize) -> u32 {
+        self.levels[..d].iter().map(|l| l.fanout).product()
+    }
+
+    /// The rank hosting level-`d` master `j` (block placement: the first
+    /// rank of its subtree; the root lives on rank 0).
+    pub fn host_rank(&self, d: usize, j: u32) -> u32 {
+        if d == 0 {
+            0
+        } else {
+            j * self.subtree_ranks(d)
+        }
+    }
+
+    /// Technique of each level, outer first.
+    pub fn techs(&self) -> Vec<TechniqueKind> {
+        self.levels.iter().map(|l| l.technique).collect()
+    }
+}
+
+/// Parameters of the hierarchical model ([`ExecutionModel::HierDca`]),
+/// generalized from the fixed two-level pair to a recursive depth-`k` tree.
 ///
-/// The *outer* technique (which sizes node-chunks at the global coordinator
-/// level) is the experiment's main `technique`; this struct only adds what
-/// the flat models don't have: the *inner* technique each node master uses
-/// to re-subdivide its node-chunk among its local ranks, and the outer-level
-/// prefetch watermark. The node geometry (`nodes` × `ranks_per_node`) comes
-/// from [`ClusterConfig`] (DES) or the engine config (threaded).
+/// The *outer* (level 0) technique is the experiment's main `technique`;
+/// this struct adds what the flat models don't have: the per-level
+/// techniques below it, the tree depth and fan-outs, and the prefetch
+/// policy every level master applies against its parent. The default
+/// geometry (`levels = 2`, fanouts from `ClusterConfig`/engine config)
+/// reproduces the classic two-level hierarchy exactly; [`Self::plan`]
+/// resolves the final [`LevelPlan`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct HierParams {
-    /// Intra-node (inner) technique; `None` ⇒ reuse the outer technique.
+    /// Deepest-level (leaf-serving) technique; `None` ⇒ reuse the outer
+    /// technique. At depth 2 this is the classic "inner" technique.
     pub inner: Option<TechniqueKind>,
-    /// Outer-level prefetch: a node master requests its *next* node-chunk
-    /// once the current one has ≤ this many unassigned iterations left,
-    /// hiding the inter-node round trip plus the outer chunk calculation
-    /// behind the tail of the current chunk. `None` ⇒ fetch on exhaustion
-    /// (the original arXiv 1903.09510 behavior).
-    pub prefetch_watermark: Option<u64>,
+    /// Techniques of the intermediate levels `1..k-1` (only consulted when
+    /// `levels ≥ 3`); `None` ⇒ reuse the outer technique.
+    pub mids: [Option<TechniqueKind>; MAX_LEVELS - 2],
+    /// Prefetch watermark policy of every level master.
+    pub watermark: WatermarkMode,
+    /// Staged-queue capacity per level master: how many parent chunks may be
+    /// buffered behind the current one (1 = the PR 2 single-slot stage;
+    /// deeper queues cover multi-chunk stalls on very high-latency fabrics).
+    /// 0 is clamped to 1.
+    pub prefetch_depth: u32,
+    /// Scheduling-tree depth `k` (0 is clamped to the default 2).
+    pub levels: u32,
+    /// Explicit per-level fan-outs, outer first; 0 = derive (depth 2 derives
+    /// `[nodes, ranks/node]` from the cluster geometry; deeper trees derive
+    /// only the *last* unset fanout from the total rank count).
+    pub fanouts: [u32; MAX_LEVELS],
 }
 
 impl HierParams {
-    /// Use `inner` within nodes, regardless of the outer technique.
+    /// Use `inner` at the deepest level, regardless of the outer technique.
     pub fn with_inner(inner: TechniqueKind) -> Self {
         HierParams { inner: Some(inner), ..Self::default() }
     }
 
-    /// Enable outer-level prefetch at the given watermark (in iterations).
+    /// Enable prefetch at a fixed watermark (in iterations).
     pub fn with_watermark(self, watermark: u64) -> Self {
-        HierParams { prefetch_watermark: Some(watermark), ..self }
+        HierParams { watermark: WatermarkMode::Fixed(watermark), ..self }
+    }
+
+    /// Enable the adaptive (EWMA round-trip-derived) watermark.
+    pub fn with_auto_watermark(self) -> Self {
+        HierParams { watermark: WatermarkMode::Auto, ..self }
+    }
+
+    /// Set the staged prefetch-queue capacity.
+    pub fn with_prefetch_depth(self, depth: u32) -> Self {
+        HierParams { prefetch_depth: depth, ..self }
+    }
+
+    /// Set the scheduling-tree depth.
+    pub fn with_levels(self, levels: u32) -> Self {
+        HierParams { levels, ..self }
+    }
+
+    /// Set explicit fan-outs (outer first; at most [`MAX_LEVELS`] entries).
+    pub fn with_fanouts(self, fanouts: &[u32]) -> Self {
+        let mut out = self;
+        out.fanouts = [0; MAX_LEVELS];
+        for (slot, f) in out.fanouts.iter_mut().zip(fanouts) {
+            *slot = *f;
+        }
+        out
+    }
+
+    /// Set the technique of intermediate level `1 ≤ d < k-1`.
+    pub fn with_mid(self, d: usize, kind: TechniqueKind) -> Self {
+        let mut out = self;
+        out.mids[d - 1] = Some(kind);
+        out
     }
 
     /// Resolve the inner technique given the experiment's outer technique.
     pub fn inner_or(&self, outer: TechniqueKind) -> TechniqueKind {
         self.inner.unwrap_or(outer)
+    }
+
+    /// Tree depth `k` (clamped to `[1, MAX_LEVELS]`, 0 ⇒ the default 2).
+    pub fn depth(&self) -> usize {
+        match self.levels {
+            0 => 2,
+            k => (k as usize).min(MAX_LEVELS),
+        }
+    }
+
+    /// Staged-queue capacity (≥ 1).
+    pub fn staged_capacity(&self) -> usize {
+        self.prefetch_depth.max(1) as usize
+    }
+
+    /// Technique of level `d` given the experiment's outer technique.
+    pub fn tech_of_level(&self, d: usize, outer: TechniqueKind) -> TechniqueKind {
+        let k = self.depth();
+        if d == 0 {
+            outer
+        } else if d == k - 1 {
+            self.inner_or(outer)
+        } else {
+            self.mids[d - 1].unwrap_or(outer)
+        }
+    }
+
+    /// Resolve the per-level fan-outs for `p` ranks: explicit entries win;
+    /// at depth 2 the default is the classic `[default_nodes, p/nodes]`; at
+    /// any depth a single trailing 0 is derived from `p`. The product must
+    /// equal `p`.
+    fn resolve_fanouts(&self, p: u32, default_nodes: u32) -> anyhow::Result<Vec<u32>> {
+        let k = self.depth();
+        anyhow::ensure!(p >= 1, "need at least one rank");
+        let mut fanouts: Vec<u32> = self.fanouts[..k].to_vec();
+        if fanouts.iter().all(|&f| f == 0) {
+            match k {
+                1 => fanouts[0] = p,
+                2 => fanouts[0] = default_nodes.max(1),
+                _ => anyhow::bail!(
+                    "a {k}-level tree needs explicit fan-outs (--fanout a,b,…)"
+                ),
+            }
+        }
+        // Derive the single trailing 0 from the total rank count.
+        if fanouts[k - 1] == 0 {
+            let given: u32 = fanouts[..k - 1].iter().product();
+            anyhow::ensure!(
+                given >= 1 && p % given == 0,
+                "fan-outs {:?} do not divide the rank count {p}",
+                &fanouts[..k - 1]
+            );
+            fanouts[k - 1] = p / given;
+        }
+        anyhow::ensure!(
+            fanouts.iter().all(|&f| f >= 1),
+            "every level needs a fan-out ≥ 1 (got {fanouts:?})"
+        );
+        let prod: u64 = fanouts.iter().map(|&f| f as u64).product();
+        anyhow::ensure!(
+            prod == p as u64,
+            "fan-out product {prod} must equal the rank count {p} (fan-outs {fanouts:?})"
+        );
+        Ok(fanouts)
+    }
+
+    /// Resolve the full [`LevelPlan`] for a DES run of `p` ranks on
+    /// `cluster` (latency classes come from the cluster's latency triple).
+    pub fn plan(
+        &self,
+        outer: TechniqueKind,
+        p: u32,
+        cluster: &ClusterConfig,
+    ) -> anyhow::Result<LevelPlan> {
+        let k = self.depth();
+        let fanouts = self.resolve_fanouts(p, cluster.nodes)?;
+        let levels = fanouts
+            .iter()
+            .enumerate()
+            .map(|(d, &fanout)| LevelSpec {
+                technique: self.tech_of_level(d, outer),
+                fanout,
+                latency: cluster.level_latency(d, k),
+            })
+            .collect();
+        Ok(LevelPlan { levels })
+    }
+
+    /// Resolve the [`LevelPlan`] for the threaded engine (`default_nodes`
+    /// plays the role the cluster geometry plays for the DES; latencies are
+    /// real, so the nominal classes are zeroed).
+    pub fn plan_threaded(
+        &self,
+        outer: TechniqueKind,
+        p: u32,
+        default_nodes: u32,
+    ) -> anyhow::Result<LevelPlan> {
+        let fanouts = self.resolve_fanouts(p, default_nodes)?;
+        let levels = fanouts
+            .iter()
+            .enumerate()
+            .map(|(d, &fanout)| LevelSpec {
+                technique: self.tech_of_level(d, outer),
+                fanout,
+                latency: 0.0,
+            })
+            .collect();
+        Ok(LevelPlan { levels })
     }
 }
 
@@ -114,10 +370,18 @@ pub struct ClusterConfig {
     pub nodes: u32,
     /// MPI ranks per node (paper: 16 ⇒ 256 total).
     pub ranks_per_node: u32,
+    /// Racks the nodes are grouped into (1 = the paper's single-rack
+    /// miniHPC; must divide `nodes` to take effect). Together with the two
+    /// node-level classes this forms the latency *triple* the three-level
+    /// hierarchy schedules against.
+    pub racks: u32,
     /// One-way message latency within a node, seconds.
     pub intra_node_latency: f64,
-    /// One-way message latency across nodes, seconds.
+    /// One-way message latency across nodes in the same rack, seconds.
     pub inter_node_latency: f64,
+    /// One-way message latency across racks, seconds (only reachable when
+    /// `racks > 1`).
+    pub inter_rack_latency: f64,
     /// Master/coordinator service time to handle one message, seconds
     /// (dequeue + match + reply build; excludes chunk calculation).
     pub service_time: f64,
@@ -133,13 +397,17 @@ pub struct ClusterConfig {
 }
 
 impl ClusterConfig {
-    /// The paper's miniHPC testbed: 16 dual-socket Xeon nodes × 16 ranks.
+    /// The paper's miniHPC testbed: 16 dual-socket Xeon nodes × 16 ranks
+    /// in one rack (the inter-rack class defaults to 3× inter-node and only
+    /// matters once `racks > 1`).
     pub fn minihpc() -> Self {
         ClusterConfig {
             nodes: 16,
             ranks_per_node: 16,
+            racks: 1,
             intra_node_latency: 0.5e-6,
             inter_node_latency: 2.0e-6,
+            inter_rack_latency: 6.0e-6,
             service_time: 0.5e-6,
             calc_time: 0.2e-6,
             break_after: 1,
@@ -157,6 +425,20 @@ impl ClusterConfig {
 
     pub fn total_ranks(&self) -> u32 {
         self.nodes * self.ranks_per_node
+    }
+
+    /// Nominal one-way latency class of protocol level `d` in a `k`-level
+    /// scheduling tree placed on this cluster's physical hierarchy: the
+    /// deepest level is intra-node, the top level crosses the widest tier
+    /// (racks when `racks > 1`), everything between is inter-node.
+    pub fn level_latency(&self, d: usize, k: usize) -> f64 {
+        if k >= 2 && d == k - 1 {
+            self.intra_node_latency
+        } else if d == 0 && self.racks > 1 {
+            self.inter_rack_latency
+        } else {
+            self.inter_node_latency
+        }
     }
 }
 
@@ -272,12 +554,128 @@ mod tests {
     fn hier_params_inner_resolution() {
         let same = HierParams::default();
         assert_eq!(same.inner_or(TechniqueKind::Gss), TechniqueKind::Gss);
-        assert_eq!(same.prefetch_watermark, None, "prefetch is opt-in");
+        assert_eq!(same.watermark, WatermarkMode::Off, "prefetch is opt-in");
+        assert_eq!(same.depth(), 2, "classic two-level by default");
+        assert_eq!(same.staged_capacity(), 1, "single staged slot by default");
         let mixed = HierParams::with_inner(TechniqueKind::Ss);
         assert_eq!(mixed.inner_or(TechniqueKind::Gss), TechniqueKind::Ss);
         let prefetching = mixed.with_watermark(64);
         assert_eq!(prefetching.inner, Some(TechniqueKind::Ss));
-        assert_eq!(prefetching.prefetch_watermark, Some(64));
+        assert_eq!(prefetching.watermark, WatermarkMode::Fixed(64));
+        assert_eq!(prefetching.with_auto_watermark().watermark, WatermarkMode::Auto);
+        assert_eq!(prefetching.with_prefetch_depth(3).staged_capacity(), 3);
+    }
+
+    #[test]
+    fn level_techs_resolve_outer_mid_inner() {
+        let h = HierParams::with_inner(TechniqueKind::Ss)
+            .with_levels(3)
+            .with_mid(1, TechniqueKind::Gss);
+        assert_eq!(h.tech_of_level(0, TechniqueKind::Fac2), TechniqueKind::Fac2);
+        assert_eq!(h.tech_of_level(1, TechniqueKind::Fac2), TechniqueKind::Gss);
+        assert_eq!(h.tech_of_level(2, TechniqueKind::Fac2), TechniqueKind::Ss);
+        // Unset mids inherit the outer technique.
+        let plain = HierParams::default().with_levels(4);
+        assert_eq!(plain.tech_of_level(2, TechniqueKind::Tss), TechniqueKind::Tss);
+    }
+
+    #[test]
+    fn plan_depth2_matches_cluster_geometry() {
+        let cluster = ClusterConfig { nodes: 4, ranks_per_node: 8, ..ClusterConfig::minihpc() };
+        let plan = HierParams::with_inner(TechniqueKind::Ss)
+            .plan(TechniqueKind::Fac2, 32, &cluster)
+            .unwrap();
+        assert_eq!(plan.depth(), 2);
+        assert_eq!(plan.levels[0].fanout, 4);
+        assert_eq!(plan.levels[1].fanout, 8);
+        assert_eq!(plan.levels[0].technique, TechniqueKind::Fac2);
+        assert_eq!(plan.levels[1].technique, TechniqueKind::Ss);
+        assert_eq!(plan.levels[0].latency, cluster.inter_node_latency);
+        assert_eq!(plan.levels[1].latency, cluster.intra_node_latency);
+        assert_eq!(plan.subtree_ranks(0), 32);
+        assert_eq!(plan.subtree_ranks(1), 8);
+        assert_eq!(plan.masters_at(1), 4);
+        assert_eq!(plan.host_rank(1, 3), 24);
+        assert_eq!(plan.host_rank(0, 0), 0);
+    }
+
+    #[test]
+    fn plan_depth3_uses_rack_latency_and_derives_last_fanout() {
+        let cluster = ClusterConfig {
+            nodes: 8,
+            ranks_per_node: 4,
+            racks: 2,
+            ..ClusterConfig::minihpc()
+        };
+        let plan = HierParams::default()
+            .with_levels(3)
+            .with_fanouts(&[2, 4])
+            .plan(TechniqueKind::Gss, 32, &cluster)
+            .unwrap();
+        assert_eq!(plan.depth(), 3);
+        assert_eq!(
+            plan.levels.iter().map(|l| l.fanout).collect::<Vec<_>>(),
+            vec![2, 4, 4],
+            "trailing fan-out derived from the rank count"
+        );
+        assert_eq!(plan.levels[0].latency, cluster.inter_rack_latency);
+        assert_eq!(plan.levels[1].latency, cluster.inter_node_latency);
+        assert_eq!(plan.levels[2].latency, cluster.intra_node_latency);
+        assert_eq!(plan.masters_at(2), 8);
+        assert_eq!(plan.host_rank(2, 5), 20);
+        assert_eq!(plan.host_rank(1, 1), 16);
+    }
+
+    #[test]
+    fn plan_rejects_bad_fanouts() {
+        let cluster = ClusterConfig { nodes: 4, ranks_per_node: 4, ..ClusterConfig::minihpc() };
+        // Product ≠ rank count.
+        assert!(HierParams::default()
+            .with_levels(3)
+            .with_fanouts(&[3, 3, 3])
+            .plan(TechniqueKind::Gss, 16, &cluster)
+            .is_err());
+        // Non-dividing prefix.
+        assert!(HierParams::default()
+            .with_levels(3)
+            .with_fanouts(&[3, 2])
+            .plan(TechniqueKind::Gss, 16, &cluster)
+            .is_err());
+        // Depth 3 with no fan-outs at all cannot be derived.
+        assert!(HierParams::default()
+            .with_levels(3)
+            .plan(TechniqueKind::Gss, 16, &cluster)
+            .is_err());
+        // Depth 1 degenerates to one flat level over all ranks.
+        let flat = HierParams::default()
+            .with_levels(1)
+            .plan(TechniqueKind::Gss, 16, &cluster)
+            .unwrap();
+        assert_eq!(flat.levels.len(), 1);
+        assert_eq!(flat.levels[0].fanout, 16);
+    }
+
+    #[test]
+    fn model_labels_derive_from_level_count() {
+        assert_eq!(ExecutionModel::HierDca.label(2), "HIER-DCA");
+        assert_eq!(ExecutionModel::HierDca.label(3), "HIER-DCA(3)");
+        assert_eq!(ExecutionModel::HierDca.label(1), "HIER-DCA(1)");
+        assert_eq!(ExecutionModel::Cca.label(3), "CCA");
+        // Depth-annotated labels parse back to the model.
+        assert_eq!(ExecutionModel::parse("HIER-DCA(3)"), Some(ExecutionModel::HierDca));
+        assert_eq!(ExecutionModel::parse("hier-dca(4)"), Some(ExecutionModel::HierDca));
+        assert_eq!(ExecutionModel::parse("HIER-DCA(x)"), None);
+    }
+
+    #[test]
+    fn level_latency_triple() {
+        let one_rack = ClusterConfig::minihpc();
+        assert_eq!(one_rack.level_latency(0, 2), one_rack.inter_node_latency);
+        assert_eq!(one_rack.level_latency(1, 2), one_rack.intra_node_latency);
+        let racked = ClusterConfig { racks: 4, ..ClusterConfig::minihpc() };
+        assert_eq!(racked.level_latency(0, 3), racked.inter_rack_latency);
+        assert_eq!(racked.level_latency(1, 3), racked.inter_node_latency);
+        assert_eq!(racked.level_latency(2, 3), racked.intra_node_latency);
     }
 
     #[test]

@@ -1,36 +1,44 @@
-//! The two-level hierarchical model (`HierDca`) on **real threads** — the
-//! wall-clock counterpart of the DES protocol in [`crate::hier`], sharing
-//! its chunk-ledger state machine ([`crate::hier::protocol`]) so both
-//! engines validate literally the same two-phase reserve/commit and
-//! stale-`seq` NACK semantics.
+//! The hierarchical model (`HierDca`) on **real threads** at any tree depth
+//! — the wall-clock counterpart of the DES protocol in [`crate::hier`],
+//! sharing its chunk-ledger state machine ([`crate::hier::protocol`]) so
+//! both engines validate literally the same two-phase reserve/commit and
+//! stale-`seq` NACK semantics at every level.
 //!
-//! Thread topology for `P` ranks split into `nodes` groups of `rpn = P /
-//! nodes` (block placement, like [`crate::substrate::topology::Topology`]):
+//! Thread topology for `P` ranks under a depth-`k`
+//! [`crate::config::LevelPlan`] (block placement, like
+//! [`crate::substrate::topology::Topology`]):
 //!
-//! * the **global coordinator** runs on the calling thread (fabric rank
-//!   `P`), owns the outer [`WorkQueue`] over the whole loop, and serves the
-//!   outer DCA protocol: `OuterGet → OuterStep` reserves a node-step,
-//!   `OuterCommit → OuterChunk` grants a node-chunk. Node-chunk sizes are
-//!   calculated **on the node masters** with the outer technique bound to
-//!   `P = nodes` — distributed chunk calculation one level up, so the
-//!   injected calculation delay is paid in parallel across nodes;
-//! * each **node master** (first rank of its group) is *non-dedicated*: it
-//!   serves its local ranks' inner protocol from the shared
-//!   [`NodeLedger`], runs the outer protocol against the coordinator, and
+//! * the **root** (level 0) runs on the calling thread (fabric rank `P`),
+//!   owns a ledger pre-installed with the whole loop, and serves the
+//!   level-0 DCA protocol: `MGet → MStep` reserves a step, `MCommit →
+//!   MChunk` grants a chunk. Chunk sizes are calculated **on the
+//!   requesting masters** with the level-0 technique bound to
+//!   `P = fanout₀` — distributed chunk calculation at tree granularity;
+//! * each **hosting rank** (the first rank of a lowest-level group) is
+//!   *non-dedicated*: it runs one master persona per tree level of its
+//!   subtree spine — each persona serves its children's protocol from its
+//!   own shared-[`NodeLedger`] and drives the parent protocol one level up
+//!   (self-addressed messages when parent and child share the rank) — and
 //!   executes iterations itself, draining its message queue between
-//!   execution slices so local ranks are never starved for a whole chunk;
-//! * each **local rank** self-schedules against its node master exactly
-//!   like a flat DCA worker, with the node-chunk `seq` threaded through the
-//!   two-phase exchange: phase-1 `Step` replies carry the node-chunk length
-//!   so the worker binds the inner technique itself (no shared memory), and
-//!   a commit against a replaced node-chunk is NACKed into a fresh `Step`.
+//!   execution slices so children are never starved for a whole chunk;
+//! * each **leaf rank** self-schedules against its master exactly like a
+//!   flat DCA worker, with the chunk `seq` threaded through the two-phase
+//!   exchange: phase-1 `Step` replies carry the chunk length so the worker
+//!   binds the level technique itself (no shared memory), and a commit
+//!   against a replaced chunk is NACKed into a fresh `Step`.
 //!
-//! **Outer prefetch** ([`crate::config::HierParams::prefetch_watermark`]):
-//! masters request the next node-chunk once the current one drops to the
-//! watermark; the reply is staged in the ledger and promoted when the
-//! current chunk drains, hiding the outer round trip entirely — measurably
-//! lower scheduling wait than fetch-on-exhaustion (see
-//! `tests/threaded_hier.rs`).
+//! **Prefetch** ([`crate::config::HierParams::watermark`]): every master
+//! persona requests the next chunk once its current one drops to the
+//! watermark; replies are staged in the ledger (a FIFO of configurable
+//! depth) and promoted as the current chunk drains, hiding the parent round
+//! trip. [`crate::config::WatermarkMode::Auto`] derives the watermark from
+//! an EWMA of the persona's observed fetch round trip and its subtree's
+//! measured drain rate.
+//!
+//! **Adaptive execution slice**: instead of a fixed 256-iteration drain
+//! interval, a master slices its own chunk execution to target a bounded
+//! service latency ([`SLICE_TARGET_LATENCY`]), recomputed per chunk from
+//! its measured per-iteration cost — see [`master_slice`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
@@ -39,27 +47,49 @@ use std::time::Instant;
 
 use super::protocol::{AfInfo, PerfReport};
 use super::{execute_chunk, EngineConfig, RankSummary, RunResult};
-use crate::hier::protocol::{af_recap, with_np, InnerCommit, NodeLedger};
-use crate::sched::{Assignment, StepTicket, WorkQueue};
+use crate::config::WatermarkMode;
+use crate::hier::protocol::{auto_watermark, with_np, InnerCommit, NodeLedger, RttEwma};
+use crate::sched::Assignment;
 use crate::substrate::delay::spin_for;
 use crate::substrate::msg::{fabric, Endpoint};
 use crate::techniques::af::{af_requester_chunk, AfCalculator, AfGlobals, PeStats};
 use crate::techniques::{Technique, TechniqueKind};
 use crate::workload::Workload;
 
-/// Iterations a master executes between message-queue drains — the threaded
-/// analogue of the LB tool's `breakAfter` interleaving.
-const MASTER_SLICE: u64 = 256;
+/// Service latency the adaptive execution slice targets: a master drains
+/// its message queue at least this often while executing its own chunk.
+const SLICE_TARGET_LATENCY: f64 = 200e-6;
 
-/// Wire messages of both tiers (one fabric carries both; the tiers are told
-/// apart by the variant).
+/// Slice used until the master has measured its own per-iteration cost —
+/// the historical fixed `MASTER_SLICE`.
+const DEFAULT_MASTER_SLICE: u64 = 256;
+
+/// Ceiling keeping one pathological (near-zero) cost sample from turning
+/// the slice into "never drain".
+const MAX_MASTER_SLICE: u64 = 65_536;
+
+/// Iterations a master executes between message-queue drains, sized so one
+/// slice occupies roughly [`SLICE_TARGET_LATENCY`] at the measured
+/// per-iteration cost (`None` = not measured yet ⇒ the fixed default).
+/// With long iterations (PSIA: 73 ms) this floors at 1, matching the A3
+/// `breakAfter` ablation's guidance; with sub-µs iterations it caps at
+/// [`MAX_MASTER_SLICE`] so drains still happen.
+pub(crate) fn master_slice(per_iter_secs: Option<f64>) -> u64 {
+    match per_iter_secs {
+        Some(c) if c > 0.0 => ((SLICE_TARGET_LATENCY / c) as u64).clamp(1, MAX_MASTER_SLICE),
+        _ => DEFAULT_MASTER_SLICE,
+    }
+}
+
+/// Wire messages of all tiers (one fabric carries every protocol level;
+/// master-tier messages name their protocol level explicitly).
 #[derive(Debug, Clone, Copy)]
 enum Msg {
-    // -- inner tier: local rank ↔ its node master ------------------------
+    // -- leaf tier: leaf rank ↔ its lowest-level master ------------------
     /// Phase 1 request: "reserve me a local step" (+ AF perf piggyback).
     Get { rank: u32, report: Option<PerfReport> },
-    /// Phase 1 reply: reserved step of node-chunk `seq`; `chunk_len` lets
-    /// the worker bind the inner technique itself, `remaining` feeds AF.
+    /// Phase 1 reply: reserved step of chunk `seq`; `chunk_len` lets the
+    /// worker bind the leaf technique itself, `remaining` feeds AF.
     Step { step: u64, remaining: u64, seq: u64, chunk_len: u64, af: Option<AfInfo> },
     /// Phase 2 request: "commit my locally calculated `size` for `step`".
     Commit { rank: u32, step: u64, size: u64, seq: u64 },
@@ -67,59 +97,91 @@ enum Msg {
     Chunk(Assignment),
     /// No work left anywhere — terminate.
     Done,
-    // -- outer tier: node master ↔ global coordinator --------------------
-    /// Master asks for an outer step (+ node-throughput piggyback for AF).
-    OuterGet { node: u32, report: Option<PerfReport> },
-    /// Coordinator reply: reserved outer step (+ AF aggregates). Handling
-    /// it *is* the outer chunk calculation, on the master's CPU.
-    OuterStep { ticket: StepTicket, af: Option<AfInfo> },
-    /// Master commits its node-chunk size.
-    OuterCommit { node: u32, ticket: StepTicket, size: u64 },
-    /// Coordinator reply: the committed node-chunk.
-    OuterChunk(Assignment),
-    /// Coordinator reply: the loop is exhausted.
-    OuterDone,
+    // -- master tier: level-(level+1) master ↔ its level-`level` parent --
+    /// Child master `from` asks its parent for a step (+ subtree-throughput
+    /// piggyback for AF).
+    MGet { level: u32, from: u32, report: Option<PerfReport> },
+    /// Parent reply: reserved step (+ AF aggregates + the parent chunk's
+    /// length for technique binding). Handling it *is* the chunk
+    /// calculation, on the child master's CPU.
+    MStep { level: u32, step: u64, remaining: u64, seq: u64, chunk_len: u64, af: Option<AfInfo> },
+    /// Child master commits its chunk size.
+    MCommit { level: u32, from: u32, step: u64, size: u64, seq: u64 },
+    /// Parent reply: the committed chunk.
+    MChunk { level: u32, a: Assignment },
+    /// Parent reply: the parent's share of the loop is exhausted.
+    MDone { level: u32 },
 }
 
-/// Block-placement geometry of the run (the threaded analogue of
-/// [`crate::substrate::topology::Topology`], without latency classes —
-/// latencies here are real).
-#[derive(Debug, Clone, Copy)]
+/// Block-placement geometry of the scheduling tree: a resolved
+/// [`crate::config::LevelPlan`] (the single source of the placement math,
+/// shared with the DES) plus a hot copy of its fan-outs. Latency classes
+/// are unused here — latencies are real.
+#[derive(Debug, Clone)]
 struct Geom {
-    nodes: u32,
-    rpn: u32,
+    plan: crate::config::LevelPlan,
+    fanouts: Vec<u32>,
     p: u32,
 }
 
 impl Geom {
-    fn node_of(&self, rank: u32) -> u32 {
-        rank / self.rpn
+    fn k(&self) -> usize {
+        self.fanouts.len()
     }
 
-    fn master_rank(&self, node: u32) -> u32 {
-        node * self.rpn
+    /// Ranks under one level-`d` subtree.
+    fn subtree(&self, d: usize) -> u32 {
+        self.plan.subtree_ranks(d)
     }
 
-    /// The global coordinator's fabric rank.
+    /// Rank hosting level-`d` master `j`.
+    fn host_rank(&self, d: usize, j: u32) -> u32 {
+        self.plan.host_rank(d, j)
+    }
+
+    /// The lowest-level group a rank belongs to (the "node" of the
+    /// two-level special case — used for the intra/inter message split).
+    fn group_of(&self, rank: u32) -> u32 {
+        rank / self.fanouts[self.k() - 1]
+    }
+
+    /// Master levels hosted on `rank` (ascending; empty for leaf ranks).
+    fn levels_of(&self, rank: u32) -> Vec<usize> {
+        (1..self.k()).filter(|&d| rank % self.subtree(d) == 0).collect()
+    }
+
+    /// The root's fabric rank (the calling thread).
     fn coord(&self) -> u32 {
         self.p
     }
 }
 
-/// Message counters split by latency class. Inner traffic is always
-/// intra-node; outer traffic is inter-node **except node 0's**, because the
-/// coordinator is hosted on node 0's master on the real machine (and in the
-/// DES) — keeping the split directly comparable across the two substrates.
-#[derive(Debug, Default)]
+/// Message counters split by latency class and by protocol level. The
+/// intra/inter classification matches the DES: endpoints are classified by
+/// *hosting rank* (the root counts as rank 0 — the coordinator is hosted on
+/// the first group's master on the real machine), so group-0 root traffic
+/// is intra-node, keeping the split directly comparable across substrates.
+#[derive(Debug)]
 struct Tally {
     intra: AtomicU64,
     inter: AtomicU64,
+    levels: Vec<AtomicU64>,
 }
 
 impl Tally {
-    /// Count one outer-tier message for `node`'s master.
-    fn count_outer(&self, node: u32) {
-        if node == 0 {
+    fn new(k: usize) -> Self {
+        Tally {
+            intra: AtomicU64::new(0),
+            inter: AtomicU64::new(0),
+            levels: (0..k).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Count one protocol-`level` message between hosting ranks `a` and `b`
+    /// (pass the root as rank 0).
+    fn count(&self, geom: &Geom, level: usize, a: u32, b: u32) {
+        self.levels[level].fetch_add(1, Ordering::Relaxed);
+        if geom.group_of(a) == geom.group_of(b) {
             self.intra.fetch_add(1, Ordering::Relaxed);
         } else {
             self.inter.fetch_add(1, Ordering::Relaxed);
@@ -127,23 +189,24 @@ impl Tally {
     }
 }
 
-/// Run the threaded two-level engine: `P` rank threads (masters + local
-/// ranks) plus the global coordinator loop on the calling thread.
+/// Run the threaded hierarchical engine: `P` rank threads (masters +
+/// leaves) plus the root service loop on the calling thread.
 pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<RunResult> {
     let p = cfg.params.p;
-    let nodes = cfg.nodes;
     anyhow::ensure!(p >= 1, "need at least one worker");
-    anyhow::ensure!(nodes >= 1, "need at least one node");
+    anyhow::ensure!(cfg.nodes >= 1, "need at least one node");
+    let plan = cfg.hier.plan_threaded(cfg.technique, p, cfg.nodes)?;
     anyhow::ensure!(
-        p % nodes == 0,
-        "the two-level engine places ranks in blocks: nodes ({nodes}) must divide \
-         the worker count ({p})"
+        plan.depth() >= 2,
+        "the threaded hierarchical engine needs ≥ 2 levels; a depth-1 tree IS the \
+         flat DCA protocol — run `--model dca` instead (the DES supports --levels 1)"
     );
-    let geom = Geom { nodes, rpn: p / nodes, p };
+    let fanouts = plan.levels.iter().map(|l| l.fanout).collect();
+    let geom = Geom { plan, fanouts, p };
     let (mut eps, _sent) = fabric::<Msg>(p + 1);
     let coord_ep = eps.pop().expect("coordinator endpoint");
     let barrier = Arc::new(Barrier::new(p as usize + 1));
-    let tally = Arc::new(Tally::default());
+    let tally = Arc::new(Tally::new(geom.k()));
 
     let mut handles = Vec::with_capacity(p as usize);
     for ep in eps {
@@ -152,44 +215,51 @@ pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<Ru
         let b = Arc::clone(&barrier);
         let t = Arc::clone(&tally);
         let c = cfg.clone();
+        let g = geom.clone();
         handles.push(thread::spawn(move || {
-            if rank % geom.rpn == 0 {
-                NodeMaster::new(c, geom, ep, w, t).run(&b)
+            if rank % g.fanouts[g.k() - 1] == 0 {
+                TreeMaster::new(c, g, ep, w, t).run(&b)
             } else {
-                worker_loop(&c, geom, ep, w, &b, &t)
+                worker_loop(&c, &g, ep, w, &b, &t)
             }
         }));
     }
 
-    coordinator_loop(cfg, geom, coord_ep, &barrier, &tally)?;
+    coordinator_loop(cfg, &geom, coord_ep, &barrier, &tally)?;
 
     let per_rank: Vec<RankSummary> =
         handles.into_iter().map(|h| h.join().expect("rank thread panicked")).collect();
     let intra = tally.intra.load(Ordering::Relaxed);
     let inter = tally.inter.load(Ordering::Relaxed);
-    Ok(RunResult::assemble_split(per_rank, intra, inter))
+    let levels = tally.levels.iter().map(|l| l.load(Ordering::Relaxed)).collect();
+    Ok(RunResult::assemble_split(per_rank, intra, inter, levels))
 }
 
 // ---------------------------------------------------------------------------
-// global coordinator
+// the root (global coordinator)
 
-/// Outer-protocol service loop — assignment only, O(1) work per message;
-/// the node-chunk *calculation* happens on the masters.
+/// Level-0 service loop — assignment only, O(1) work per message; the chunk
+/// *calculation* happens on the requesting masters. The root's ledger is
+/// installed once with the whole loop, so its `seq` never moves and no
+/// commit against it can be stale.
 fn coordinator_loop(
     cfg: &EngineConfig,
-    geom: Geom,
+    geom: &Geom,
     ep: Endpoint<Msg>,
     barrier: &Barrier,
     tally: &Tally,
 ) -> anyhow::Result<()> {
-    let outer_params = with_np(&cfg.params, cfg.params.n, geom.nodes);
+    let f0 = geom.fanouts[0];
+    let outer_params = with_np(&cfg.params, cfg.params.n, f0);
     let is_af = cfg.technique == TechniqueKind::Af;
     let mut af = is_af.then(|| AfCalculator::new(&outer_params));
-    let mut q = WorkQueue::from_params(&cfg.params);
-    let mut active = geom.nodes;
+    let mut ledger = NodeLedger::new(cfg.technique, &cfg.params, f0);
+    ledger.install(Assignment { step: 0, start: 0, size: cfg.params.n });
+    let mut active = f0;
 
     let send = |ep: &Endpoint<Msg>, dst: u32, msg: Msg| -> anyhow::Result<()> {
-        tally.count_outer(geom.node_of(dst));
+        // The root is hosted on rank 0 for classification purposes.
+        tally.count(geom, 0, 0, dst);
         ep.send(dst, msg)?;
         Ok(())
     };
@@ -198,35 +268,44 @@ fn coordinator_loop(
     while active > 0 {
         let env = ep.recv()?;
         match env.payload {
-            Msg::OuterGet { node, report } => {
+            Msg::MGet { level: 0, from, report } => {
                 if let (Some(af), Some(PerfReport { iters, elapsed })) = (af.as_mut(), report) {
-                    af.record(node as usize, iters, elapsed);
+                    af.record(from as usize, iters, elapsed);
                 }
-                let reply = match q.begin_step() {
-                    Some(ticket) => {
+                let reply = match ledger.reserve() {
+                    Some((step, remaining, seq)) => {
                         let info = af
                             .as_ref()
                             .and_then(|a| a.globals())
                             .map(|g| AfInfo { d: g.d, e: g.e });
-                        Msg::OuterStep { ticket, af: info }
+                        Msg::MStep {
+                            level: 0,
+                            step,
+                            remaining,
+                            seq,
+                            chunk_len: ledger.current_len(),
+                            af: info,
+                        }
                     }
                     None => {
                         active -= 1;
-                        Msg::OuterDone
+                        Msg::MDone { level: 0 }
                     }
                 };
                 send(&ep, env.src, reply)?;
             }
-            Msg::OuterCommit { node: _, ticket, size } => {
-                // Chunk ASSIGNMENT — the only synchronized outer operation.
+            Msg::MCommit { level: 0, from: _, step, size, seq } => {
+                // Chunk ASSIGNMENT — the only synchronized root operation.
                 spin_for(cfg.delay.assignment);
-                // Outer AF: re-cap against fresh R (stale-ticket protection).
-                let size = if is_af { af_recap(size, q.remaining(), geom.nodes) } else { size };
-                let reply = match q.commit(ticket, size) {
-                    Some(a) => Msg::OuterChunk(a),
-                    None => {
+                // (Outer AF's fresh-R re-cap happens inside the ledger.)
+                let reply = match ledger.commit(step, size, seq) {
+                    InnerCommit::Granted(a) => Msg::MChunk { level: 0, a },
+                    InnerCommit::Stale => {
+                        unreachable!("the root's chunk is never replaced, so seq cannot go stale")
+                    }
+                    InnerCommit::Drained => {
                         active -= 1;
-                        Msg::OuterDone
+                        Msg::MDone { level: 0 }
                     }
                 };
                 send(&ep, env.src, reply)?;
@@ -238,40 +317,61 @@ fn coordinator_loop(
 }
 
 // ---------------------------------------------------------------------------
-// node master
+// hosting ranks (master personas + own worker personality)
 
-/// A non-dedicated node master: serves the inner protocol, drives the outer
-/// protocol, and executes iterations itself between message drains.
-struct NodeMaster {
+/// One master persona: the server side of protocol `level` (its ledger and
+/// parked children) plus its child side in protocol `level - 1`.
+struct TPersona {
+    /// Protocol level this persona serves (`1..=k-1`; the root is level 0
+    /// on the calling thread).
+    level: usize,
+    /// Master index at this level.
+    index: u32,
+    ledger: NodeLedger,
+    /// Children whose requests arrived while the ledger was empty: leaf
+    /// ranks at the deepest level, child master indices elsewhere.
+    parked: Vec<u32>,
+    fetching: bool,
+    global_done: bool,
+    /// `Done` replies sent to children (termination tracking).
+    done_sent: u32,
+    /// AF calculator over this persona's children (when this level's
+    /// technique is AF).
+    af_calc: Option<AfCalculator>,
+    /// Subtree chunk-throughput statistics (upward-AF feedback + adaptive
+    /// watermark drain rate).
+    stats: PeStats,
+    pending_report: Option<PerfReport>,
+    installed_iters: u64,
+    installed_at: Instant,
+    /// When the in-flight parent fetch was issued (adaptive watermark).
+    fetch_sent: Instant,
+    /// EWMA of observed parent-fetch round trips (shared protocol policy).
+    rtt: RttEwma,
+    /// Child-side closed-form binding for protocol `level - 1`, cached by
+    /// the parent chunk's `seq`.
+    bound: Option<(u64, Technique)>,
+}
+
+/// A non-dedicated hosting rank: serves every master persona of its subtree
+/// spine, drives each persona's parent protocol, and executes iterations
+/// itself between message drains.
+struct TreeMaster {
     cfg: EngineConfig,
     geom: Geom,
     ep: Endpoint<Msg>,
     workload: Arc<dyn Workload>,
     tally: Arc<Tally>,
-    node: u32,
-    inner_kind: TechniqueKind,
-    /// Outer technique bound to `P = nodes` (`None` for AF).
-    outer_tech: Option<Technique>,
-    ledger: NodeLedger,
-    /// Local ranks whose requests arrived while no local work existed.
-    parked: Vec<u32>,
-    fetching: bool,
-    global_done: bool,
-    /// `Done` replies sent to local ranks (termination tracking).
-    done_sent: u32,
-    /// Inner-AF calculator over this node's local ranks (index `rank % rpn`).
-    inner_af: Option<AfCalculator>,
-    /// Outer-AF: this node's chunk-throughput statistics.
-    node_stats: PeStats,
-    outer_report: Option<PerfReport>,
-    installed_iters: u64,
-    installed_at: Instant,
-    /// The master's own worker-personality statistics (AF µ/σ).
+    /// Personas hosted here, ascending by level; the last one serves the
+    /// leaf protocol and backs the own worker personality.
+    personas: Vec<TPersona>,
+    /// The rank's own worker-personality statistics (AF µ/σ + the adaptive
+    /// execution slice's per-iteration cost).
     my_stats: PeStats,
     out: RankSummary,
 }
 
-impl NodeMaster {
+impl TreeMaster {
     fn new(
         cfg: EngineConfig,
         geom: Geom,
@@ -280,41 +380,69 @@ impl NodeMaster {
         tally: Arc<Tally>,
     ) -> Self {
         let rank = ep.rank();
-        let node = geom.node_of(rank);
-        let inner_kind = cfg.hier.inner_or(cfg.technique);
-        let outer_params = with_np(&cfg.params, cfg.params.n, geom.nodes);
-        let inner_proto = with_np(&cfg.params, cfg.params.n, geom.rpn);
-        NodeMaster {
-            outer_tech: (cfg.technique != TechniqueKind::Af)
-                .then(|| Technique::new(cfg.technique, &outer_params)),
-            ledger: NodeLedger::new(inner_kind, &cfg.params, geom.rpn),
-            inner_af: (inner_kind == TechniqueKind::Af)
-                .then(|| AfCalculator::new(&inner_proto)),
+        let n = cfg.params.n;
+        let staged_cap = cfg.hier.staged_capacity();
+        let personas = geom
+            .levels_of(rank)
+            .into_iter()
+            .map(|level| {
+                let tech = cfg.hier.tech_of_level(level, cfg.technique);
+                let fanout = geom.fanouts[level];
+                TPersona {
+                    level,
+                    index: rank / geom.subtree(level),
+                    ledger: NodeLedger::new(tech, &cfg.params, fanout)
+                        .with_staged_capacity(staged_cap),
+                    parked: Vec::new(),
+                    fetching: false,
+                    global_done: false,
+                    done_sent: 0,
+                    af_calc: (tech == TechniqueKind::Af)
+                        .then(|| AfCalculator::new(&with_np(&cfg.params, n, fanout))),
+                    stats: PeStats::default(),
+                    pending_report: None,
+                    installed_iters: 0,
+                    installed_at: Instant::now(),
+                    fetch_sent: Instant::now(),
+                    rtt: RttEwma::default(),
+                    bound: None,
+                }
+            })
+            .collect();
+        TreeMaster {
             cfg,
             geom,
             ep,
             workload,
             tally,
-            node,
-            inner_kind,
-            parked: Vec::new(),
-            fetching: false,
-            global_done: false,
-            done_sent: 0,
-            node_stats: PeStats::default(),
-            outer_report: None,
-            installed_iters: 0,
-            installed_at: Instant::now(),
+            personas,
             my_stats: PeStats::default(),
             out: RankSummary { rank, ..Default::default() },
         }
     }
 
+    /// Persona slot serving protocol `level` (hosted here by construction).
+    fn slot(&self, level: usize) -> usize {
+        self.personas
+            .iter()
+            .position(|pr| pr.level == level)
+            .expect("persona for this level is hosted on this rank")
+    }
+
+    /// The leaf-serving persona's slot (always the deepest one).
+    fn leaf_slot(&self) -> usize {
+        self.personas.len() - 1
+    }
+
     fn run(mut self, barrier: &Barrier) -> RankSummary {
         barrier.wait();
         let t0 = Instant::now();
-        self.installed_at = Instant::now();
-        self.fetch();
+        for pr in &mut self.personas {
+            pr.installed_at = Instant::now();
+        }
+        // Kick the fetch chain: the leaf persona asks its parent, which (on
+        // this or another rank) asks its parent, … up to the root.
+        self.fetch(self.leaf_slot());
         loop {
             // Serve everything pending before (and between) own work.
             while let Some(env) = self.ep.try_recv() {
@@ -323,19 +451,19 @@ impl NodeMaster {
             if self.finished() {
                 break;
             }
-            if self.ledger.has_work() {
+            if self.personas[self.leaf_slot()].ledger.has_work() {
                 self.own_step();
                 continue;
             }
-            // Ledger drained: make sure the next node-chunk is on its way
+            // Leaf ledger drained: make sure the next chunk is on its way
             // (idempotent — no-op when a fetch is in flight or the loop is
             // done). Without this, a master whose *own* grant consumed the
             // last iterations would block below with no fetch pending and,
-            // with no local ranks to wake it (rpn = 1), deadlock — the DES
-            // counterpart is `Own::NeedWork`'s park + fetch.
-            self.fetch();
-            // Nothing local to do: block until the outer reply (or a late
-            // local request) arrives. This is the master's scheduling wait.
+            // with no children to wake it, deadlock — the DES counterpart
+            // is `Own::NeedWork`'s park + fetch.
+            self.fetch(self.leaf_slot());
+            // Nothing local to do: block until a reply (or a late request)
+            // arrives. This is the master's scheduling wait.
             let t_wait = Instant::now();
             match self.ep.recv() {
                 Ok(env) => {
@@ -349,22 +477,52 @@ impl NodeMaster {
         self.out
     }
 
-    /// All local ranks terminated, the loop is exhausted, and nothing is
-    /// left in the ledger.
+    /// Every persona terminated: its parent said Done, its ledger drained,
+    /// and every child got its Done (the own personality is the one leaf
+    /// child that is not messaged).
     fn finished(&self) -> bool {
-        self.global_done && !self.ledger.has_work() && self.done_sent == self.geom.rpn - 1
+        let k1 = self.geom.k() - 1;
+        self.personas.iter().all(|pr| {
+            let target = if pr.level == k1 {
+                self.geom.fanouts[pr.level] - 1
+            } else {
+                self.geom.fanouts[pr.level]
+            };
+            pr.global_done && !pr.ledger.has_work() && pr.done_sent == target
+        })
     }
 
     // -- messaging ---------------------------------------------------------
 
-    fn send_worker(&self, rank: u32, msg: Msg) {
-        self.tally.intra.fetch_add(1, Ordering::Relaxed);
-        self.ep.send(rank, msg).expect("local rank hung up early");
+    /// Send a protocol-`level` message to fabric rank `dst`, classified
+    /// between hosting ranks `a` and `b`.
+    fn send_msg(&self, level: usize, a: u32, b: u32, dst: u32, msg: Msg) {
+        self.tally.count(&self.geom, level, a, b);
+        self.ep.send(dst, msg).expect("peer hung up early");
     }
 
-    fn send_coord(&self, msg: Msg) {
-        self.tally.count_outer(self.node);
-        self.ep.send(self.geom.coord(), msg).expect("coordinator hung up early");
+    fn send_worker(&self, rank: u32, msg: Msg) {
+        self.send_msg(self.geom.k() - 1, self.out.rank, rank, rank, msg);
+    }
+
+    /// Send to the parent of persona `slot` (the root when its level is 1).
+    fn send_parent(&self, slot: usize, msg: Msg) {
+        let pr = &self.personas[slot];
+        let d = pr.level - 1;
+        if d == 0 {
+            // Fabric rank P, classified as hosted on rank 0.
+            self.send_msg(0, self.out.rank, 0, self.geom.coord(), msg);
+        } else {
+            let parent = self.geom.host_rank(d, pr.index / self.geom.fanouts[d]);
+            self.send_msg(d, self.out.rank, parent, parent, msg);
+        }
+    }
+
+    /// Send a serve-side reply from persona `slot` to child master `to`.
+    fn send_child_master(&self, slot: usize, to: u32, msg: Msg) {
+        let level = self.personas[slot].level;
+        let child = self.geom.host_rank(level + 1, to);
+        self.send_msg(level, self.out.rank, child, child, msg);
     }
 
     // -- service -----------------------------------------------------------
@@ -372,190 +530,305 @@ impl NodeMaster {
     fn handle(&mut self, msg: Msg) {
         match msg {
             Msg::Get { rank, report } => {
-                self.record_inner_report(rank, report);
+                let slot = self.leaf_slot();
+                self.record_child_report(slot, rank % self.geom.fanouts[self.geom.k() - 1], report);
                 self.serve_get(rank);
             }
             Msg::Commit { rank, step, size, seq } => {
-                // Inner chunk ASSIGNMENT — serialized on this master's CPU,
-                // but only contended by its own node's ranks.
+                // Leaf chunk ASSIGNMENT — serialized on this rank's CPU, but
+                // only contended by its own group's ranks.
                 spin_for(self.cfg.delay.assignment);
-                match self.ledger.commit(step, size, seq) {
+                let slot = self.leaf_slot();
+                match self.personas[slot].ledger.commit(step, size, seq) {
                     InnerCommit::Granted(a) => {
                         self.send_worker(rank, Msg::Chunk(a));
-                        self.after_grant();
+                        self.after_grant(slot);
                     }
-                    // Stale seq: the node-chunk was replaced while this
-                    // commit was in flight — NACK into a fresh phase 1.
+                    // Stale seq: the chunk was replaced while this commit
+                    // was in flight — NACK into a fresh phase 1.
                     InnerCommit::Stale => self.serve_get(rank),
-                    InnerCommit::Drained => self.park_or_done(rank),
+                    InnerCommit::Drained => self.park_or_done(slot, rank),
                 }
             }
-            Msg::OuterStep { ticket, af } => {
-                // The outer chunk CALCULATION runs here, on the master's own
-                // CPU — distributed across nodes, paying the injected delay
-                // in parallel (the DCA idea, one level up).
+            Msg::MGet { level, from, report } => {
+                let slot = self.slot(level as usize);
+                let local = from % self.geom.fanouts[level as usize];
+                self.record_child_report(slot, local, report);
+                self.serve_mget(slot, from);
+            }
+            Msg::MCommit { level, from, step, size, seq } => {
+                spin_for(self.cfg.delay.assignment);
+                let slot = self.slot(level as usize);
+                match self.personas[slot].ledger.commit(step, size, seq) {
+                    InnerCommit::Granted(a) => {
+                        self.send_child_master(slot, from, Msg::MChunk { level, a });
+                        self.after_grant(slot);
+                    }
+                    InnerCommit::Stale => self.serve_mget(slot, from),
+                    InnerCommit::Drained => self.park_or_done(slot, from),
+                }
+            }
+            Msg::MStep { level, step, remaining, seq, chunk_len, af } => {
+                // The chunk CALCULATION runs here, on the child master's own
+                // CPU — distributed across the tree, paying the injected
+                // delay in parallel (the DCA idea, at every level).
                 spin_for(self.cfg.delay.calculation);
-                let size = self.outer_calc(ticket, af);
-                self.send_coord(Msg::OuterCommit { node: self.node, ticket, size });
+                let slot = self.slot(level as usize + 1);
+                let size = self.child_calc(slot, step, remaining, seq, chunk_len, af);
+                let from = self.personas[slot].index;
+                self.send_parent(slot, Msg::MCommit { level, from, step, size, seq });
             }
-            Msg::OuterChunk(a) => {
-                self.fetching = false;
-                if self.installed_iters == 0 {
-                    self.installed_at = Instant::now();
-                }
-                self.installed_iters += a.size;
-                self.ledger.install(a);
-                self.unpark();
+            Msg::MChunk { level, a } => {
+                let slot = self.slot(level as usize + 1);
+                self.install(slot, a);
             }
-            Msg::OuterDone => {
-                self.fetching = false;
-                self.global_done = true;
-                self.unpark();
+            Msg::MDone { level } => {
+                let slot = self.slot(level as usize + 1);
+                self.personas[slot].fetching = false;
+                self.personas[slot].global_done = true;
+                self.unpark(slot);
             }
-            other => panic!("node master {}: unexpected {other:?}", self.out.rank),
+            other => panic!("hosting rank {}: unexpected {other:?}", self.out.rank),
         }
     }
 
-    fn record_inner_report(&mut self, rank: u32, report: Option<PerfReport>) {
-        if let (Some(af), Some(PerfReport { iters, elapsed })) = (self.inner_af.as_mut(), report) {
-            af.record((rank % self.geom.rpn) as usize, iters, elapsed);
+    fn record_child_report(&mut self, slot: usize, local: u32, report: Option<PerfReport>) {
+        if let (Some(af), Some(PerfReport { iters, elapsed })) =
+            (self.personas[slot].af_calc.as_mut(), report)
+        {
+            af.record(local as usize, iters, elapsed);
         }
     }
 
-    /// Serve a phase-1 request: reserve, park, or terminate the rank.
+    fn af_info(&self, slot: usize) -> Option<AfInfo> {
+        self.personas[slot]
+            .af_calc
+            .as_ref()
+            .and_then(|a| a.globals())
+            .map(|g| AfInfo { d: g.d, e: g.e })
+    }
+
+    /// Serve a leaf phase-1 request: reserve, park, or terminate the rank.
     fn serve_get(&mut self, rank: u32) {
-        match self.ledger.reserve() {
+        let slot = self.leaf_slot();
+        match self.personas[slot].ledger.reserve() {
             Some((step, remaining, seq)) => {
-                let af = self.inner_af_info();
-                let chunk_len = self.ledger.current_len();
+                let af = self.af_info(slot);
+                let chunk_len = self.personas[slot].ledger.current_len();
                 self.send_worker(rank, Msg::Step { step, remaining, seq, chunk_len, af });
             }
-            None if self.global_done => {
+            None if self.personas[slot].global_done => {
                 self.send_worker(rank, Msg::Done);
-                self.done_sent += 1;
+                self.personas[slot].done_sent += 1;
             }
             None => {
-                self.parked.push(rank);
-                self.fetch();
+                self.personas[slot].parked.push(rank);
+                self.fetch(slot);
             }
         }
     }
 
-    fn park_or_done(&mut self, rank: u32) {
-        if self.global_done {
-            self.send_worker(rank, Msg::Done);
-            self.done_sent += 1;
+    /// Serve a master-tier phase-1 request at persona `slot` from child
+    /// master `to` — the same logic as the leaf path, one level up.
+    fn serve_mget(&mut self, slot: usize, to: u32) {
+        let level = self.personas[slot].level as u32;
+        match self.personas[slot].ledger.reserve() {
+            Some((step, remaining, seq)) => {
+                let af = self.af_info(slot);
+                let chunk_len = self.personas[slot].ledger.current_len();
+                self.send_child_master(
+                    slot,
+                    to,
+                    Msg::MStep { level, step, remaining, seq, chunk_len, af },
+                );
+            }
+            None if self.personas[slot].global_done => {
+                self.send_child_master(slot, to, Msg::MDone { level });
+                self.personas[slot].done_sent += 1;
+            }
+            None => {
+                self.personas[slot].parked.push(to);
+                self.fetch(slot);
+            }
+        }
+    }
+
+    fn park_or_done(&mut self, slot: usize, child: u32) {
+        if self.personas[slot].global_done {
+            if self.personas[slot].level == self.geom.k() - 1 {
+                self.send_worker(child, Msg::Done);
+            } else {
+                let level = self.personas[slot].level as u32;
+                self.send_child_master(slot, child, Msg::MDone { level });
+            }
+            self.personas[slot].done_sent += 1;
         } else {
-            self.parked.push(rank);
-            self.fetch();
+            self.personas[slot].parked.push(child);
+            self.fetch(slot);
         }
     }
 
-    /// Re-serve every parked rank (after a node-chunk install or the global
-    /// Done).
-    fn unpark(&mut self) {
-        let parked = std::mem::take(&mut self.parked);
-        for rank in parked {
-            self.serve_get(rank);
+    /// Re-serve every parked child (after a chunk install or the Done).
+    fn unpark(&mut self, slot: usize) {
+        let parked = std::mem::take(&mut self.personas[slot].parked);
+        let leaf = self.personas[slot].level == self.geom.k() - 1;
+        for child in parked {
+            if leaf {
+                self.serve_get(child);
+            } else {
+                self.serve_mget(slot, child);
+            }
         }
     }
 
-    /// Outer prefetch: request the next node-chunk while the current one is
-    /// still being consumed, once it drops to the watermark.
-    fn after_grant(&mut self) {
-        if self.ledger.wants_prefetch(self.cfg.hier.prefetch_watermark) {
-            self.fetch();
+    /// Resolve persona `slot`'s prefetch watermark: the shared
+    /// [`auto_watermark`] policy over wall-clock inputs (the DES resolves
+    /// identically over virtual time).
+    fn watermark(&self, slot: usize) -> Option<u64> {
+        match self.cfg.hier.watermark {
+            WatermarkMode::Off => None,
+            WatermarkMode::Fixed(w) => Some(w),
+            WatermarkMode::Auto => {
+                let pr = &self.personas[slot];
+                Some(auto_watermark(pr.rtt.value(), pr.stats.mu()))
+            }
         }
     }
 
-    /// Trigger an outer fetch unless one is already in flight; finalizes the
-    /// consumed node-chunk's throughput report (outer-AF feedback).
-    fn fetch(&mut self) {
-        if self.fetching || self.global_done {
+    /// Prefetch: request the next chunk while the current one is still
+    /// being consumed, once it drops to the watermark (and the staged queue
+    /// has room).
+    fn after_grant(&mut self, slot: usize) {
+        let watermark = self.watermark(slot);
+        if self.personas[slot].ledger.wants_prefetch(watermark) {
+            self.fetch(slot);
+        }
+    }
+
+    /// Trigger persona `slot`'s parent fetch unless one is already in
+    /// flight; finalizes the consumed chunk's throughput report (upward-AF
+    /// feedback) and stamps the fetch time for the round-trip EWMA.
+    fn fetch(&mut self, slot: usize) {
+        if self.personas[slot].fetching || self.personas[slot].global_done {
             return;
         }
-        self.fetching = true;
-        if self.installed_iters > 0 {
-            let iters = self.installed_iters;
-            let elapsed = self.installed_at.elapsed().as_secs_f64().max(1e-12);
-            self.node_stats.record(iters, elapsed);
-            self.outer_report = Some(PerfReport { iters, elapsed });
-            self.installed_iters = 0;
+        let pr = &mut self.personas[slot];
+        pr.fetching = true;
+        if pr.installed_iters > 0 {
+            let iters = pr.installed_iters;
+            let elapsed = pr.installed_at.elapsed().as_secs_f64().max(1e-12);
+            pr.stats.record(iters, elapsed);
+            pr.pending_report = Some(PerfReport { iters, elapsed });
+            pr.installed_iters = 0;
         }
-        let report = self.outer_report.take();
-        self.send_coord(Msg::OuterGet { node: self.node, report });
+        pr.fetch_sent = Instant::now();
+        let report = pr.pending_report.take();
+        let level = (pr.level - 1) as u32;
+        let from = pr.index;
+        self.send_parent(slot, Msg::MGet { level, from, report });
     }
 
-    fn inner_af_info(&self) -> Option<AfInfo> {
-        self.inner_af.as_ref().and_then(|a| a.globals()).map(|g| AfInfo { d: g.d, e: g.e })
+    /// Install a chunk fetched over the parent protocol into persona
+    /// `slot`'s ledger.
+    fn install(&mut self, slot: usize, a: Assignment) {
+        let pr = &mut self.personas[slot];
+        pr.rtt.observe(pr.fetch_sent.elapsed().as_secs_f64());
+        pr.fetching = false;
+        if pr.installed_iters == 0 {
+            pr.installed_at = Instant::now();
+        }
+        pr.installed_iters += a.size;
+        pr.ledger.install(a);
+        self.unpark(slot);
     }
 
-    /// Outer chunk size, computed on this master (closed form of the outer
-    /// technique at the reserved step, or AF's Eq. 11 over node throughput).
-    fn outer_calc(&self, ticket: StepTicket, af: Option<AfInfo>) -> u64 {
-        if self.cfg.technique == TechniqueKind::Af {
+    /// Child-side chunk-size calculation for persona `slot`'s parent
+    /// protocol (AF's Eq. 11 over subtree throughput, or the level
+    /// technique bound to the parent chunk and cached by `seq`).
+    fn child_calc(
+        &mut self,
+        slot: usize,
+        step: u64,
+        remaining: u64,
+        seq: u64,
+        chunk_len: u64,
+        af: Option<AfInfo>,
+    ) -> u64 {
+        let d = self.personas[slot].level - 1;
+        let tech = self.cfg.hier.tech_of_level(d, self.cfg.technique);
+        if tech == TechniqueKind::Af {
             af_requester_chunk(
-                &self.node_stats,
+                &self.personas[slot].stats,
                 af.map(|i| AfGlobals { d: i.d, e: i.e }),
-                ticket.remaining,
-                self.geom.nodes,
+                remaining,
+                self.geom.fanouts[d],
                 self.cfg.params.min_chunk.max(1),
             )
         } else {
-            self.outer_tech
-                .as_ref()
-                .expect("non-AF outer technique has a closed form")
-                .closed_chunk(ticket.step)
+            let fanout = self.geom.fanouts[d];
+            let params = with_np(&self.cfg.params, chunk_len, fanout);
+            let pr = &mut self.personas[slot];
+            if !pr.bound.as_ref().is_some_and(|(s, _)| *s == seq) {
+                pr.bound = Some((seq, Technique::new(tech, &params)));
+            }
+            pr.bound.as_ref().expect("technique bound above").1.closed_chunk(step)
         }
     }
 
-    // -- the master's own worker personality -------------------------------
+    // -- the rank's own worker personality ---------------------------------
 
-    /// One self-scheduling step of the master's own personality: reserve →
-    /// calculate (paying the injected delay) → commit → execute.
+    /// One self-scheduling step of the rank's own personality against the
+    /// leaf persona's ledger: reserve → calculate (paying the injected
+    /// delay) → commit → execute.
     fn own_step(&mut self) {
-        let Some((step, remaining, seq)) = self.ledger.reserve() else { return };
+        let slot = self.leaf_slot();
+        let Some((step, remaining, seq)) = self.personas[slot].ledger.reserve() else { return };
         spin_for(self.cfg.delay.calculation);
-        let size = self.own_calc(step, remaining, seq);
+        let size = self.own_calc(slot, step, remaining, seq);
         spin_for(self.cfg.delay.assignment);
-        match self.ledger.commit(step, size, seq) {
+        match self.personas[slot].ledger.commit(step, size, seq) {
             InnerCommit::Granted(a) => {
-                self.after_grant();
+                self.after_grant(slot);
                 self.execute_own(a);
             }
-            // A fresh node-chunk replaced the current one mid-step (cannot
+            // A fresh chunk replaced the current one mid-step (cannot
             // happen single-threadedly, but the protocol allows it) — the
             // main loop simply re-reserves.
             InnerCommit::Stale => {}
-            InnerCommit::Drained => self.fetch(),
+            InnerCommit::Drained => self.fetch(slot),
         }
     }
 
-    fn own_calc(&self, step: u64, remaining: u64, seq: u64) -> u64 {
-        if self.inner_kind == TechniqueKind::Af {
+    fn own_calc(&self, slot: usize, step: u64, remaining: u64, seq: u64) -> u64 {
+        let k1 = self.geom.k() - 1;
+        let tech = self.cfg.hier.tech_of_level(k1, self.cfg.technique);
+        if tech == TechniqueKind::Af {
             af_requester_chunk(
                 &self.my_stats,
-                self.inner_af_info().map(|i| AfGlobals { d: i.d, e: i.e }),
+                self.af_info(slot).map(|i| AfGlobals { d: i.d, e: i.e }),
                 remaining,
-                self.geom.rpn,
+                self.geom.fanouts[k1],
                 self.cfg.params.min_chunk.max(1),
             )
         } else {
-            self.ledger
+            self.personas[slot]
+                .ledger
                 .closed_inner_size(step, seq)
                 .unwrap_or_else(|| self.cfg.params.min_chunk.max(1))
         }
     }
 
-    /// Execute an own chunk in `MASTER_SLICE`-iteration segments, draining
-    /// the message queue between segments (non-dedicated master: local
-    /// ranks keep being served while the master computes).
+    /// Execute an own chunk in adaptive slices, draining the message queue
+    /// between segments (non-dedicated master: children keep being served
+    /// while this rank computes). The slice targets a bounded service
+    /// latency from the measured per-iteration cost — see [`master_slice`].
     fn execute_own(&mut self, a: Assignment) {
+        let slice = master_slice(self.my_stats.mu());
         let t = Instant::now();
         let mut sum = 0u64;
         let mut cursor = a.start;
         while cursor < a.end() {
-            let len = MASTER_SLICE.min(a.end() - cursor);
+            let len = slice.min(a.end() - cursor);
             sum = sum.wrapping_add(self.workload.execute_range(cursor, len));
             cursor += len;
             while let Some(env) = self.ep.try_recv() {
@@ -568,70 +841,73 @@ impl NodeMaster {
         self.out.iters += a.size;
         self.out.assignments.push(a);
         self.my_stats.record(a.size, elapsed);
-        if let Some(af) = self.inner_af.as_mut() {
+        let slot = self.leaf_slot();
+        if let Some(af) = self.personas[slot].af_calc.as_mut() {
             af.record(0, a.size, elapsed);
         }
     }
 }
 
 // ---------------------------------------------------------------------------
-// local ranks
+// leaf ranks
 
-/// A local rank: flat-DCA-style two-phase self-scheduling against its node
-/// master, with the node-chunk `seq` threaded through both phases.
+/// A leaf rank: flat-DCA-style two-phase self-scheduling against its
+/// lowest-level master, with the chunk `seq` threaded through both phases.
 fn worker_loop(
     cfg: &EngineConfig,
-    geom: Geom,
+    geom: &Geom,
     ep: Endpoint<Msg>,
     workload: Arc<dyn Workload>,
     barrier: &Barrier,
     tally: &Tally,
 ) -> RankSummary {
     let rank = ep.rank();
-    let master = geom.master_rank(geom.node_of(rank));
-    let inner_kind = cfg.hier.inner_or(cfg.technique);
+    let k1 = geom.k() - 1;
+    let leaf_fanout = geom.fanouts[k1];
+    let master = rank - rank % leaf_fanout;
+    let inner_kind = cfg.hier.tech_of_level(k1, cfg.technique);
     let is_af = inner_kind == TechniqueKind::Af;
     let bootstrap = cfg.params.min_chunk.max(1);
-    // Inner technique bound to the current node-chunk, cached by `seq`.
+    // Leaf technique bound to the current chunk, cached by `seq`.
     let mut bound: Option<(u64, Technique)> = None;
     let mut my_stats = PeStats::default();
     let mut out = RankSummary { rank, ..Default::default() };
     let mut report = None;
     let send = |dst: u32, msg: Msg| {
-        tally.intra.fetch_add(1, Ordering::Relaxed);
-        ep.send(dst, msg).expect("node master hung up early");
+        tally.count(geom, k1, rank, dst);
+        ep.send(dst, msg).expect("master hung up early");
     };
     barrier.wait();
     let t0 = Instant::now();
     'outer: loop {
         let t_req = Instant::now();
         send(master, Msg::Get { rank, report });
-        let mut env = ep.recv().expect("node master hung up early");
+        let mut env = ep.recv().expect("master hung up early");
         out.sched_wait += t_req.elapsed().as_secs_f64();
         loop {
             match env.payload {
                 Msg::Step { step, remaining, seq, chunk_len, af } => {
-                    // Distributed inner calculation, on this rank's CPU —
-                    // the injected delay is paid here, in parallel.
+                    // Distributed leaf calculation, on this rank's CPU — the
+                    // injected delay is paid here, in parallel.
                     spin_for(cfg.delay.calculation);
                     let size = if is_af {
                         af_requester_chunk(
                             &my_stats,
                             af.map(|i| AfGlobals { d: i.d, e: i.e }),
                             remaining,
-                            geom.rpn,
+                            leaf_fanout,
                             bootstrap,
                         )
                     } else {
                         if !bound.as_ref().is_some_and(|(s, _)| *s == seq) {
-                            let params = with_np(&cfg.params, chunk_len, geom.rpn);
+                            let params = with_np(&cfg.params, chunk_len, leaf_fanout);
                             bound = Some((seq, Technique::new(inner_kind, &params)));
                         }
                         bound.as_ref().expect("technique bound above").1.closed_chunk(step)
                     };
                     let t_commit = Instant::now();
                     send(master, Msg::Commit { rank, step, size, seq });
-                    env = ep.recv().expect("node master hung up early");
+                    env = ep.recv().expect("master hung up early");
                     out.sched_wait += t_commit.elapsed().as_secs_f64();
                     // The reply is a Chunk, a NACK Step (stale seq), or Done
                     // — loop to handle whichever arrived.
@@ -653,4 +929,31 @@ fn worker_loop(
     }
     out.finish = t0.elapsed().as_secs_f64();
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The slice-sizing function is deterministic and bounded: unmeasured
+    /// cost falls back to the historical 256, the measured path targets
+    /// [`SLICE_TARGET_LATENCY`], and both ends clamp.
+    #[test]
+    fn master_slice_targets_bounded_service_latency() {
+        assert_eq!(master_slice(None), 256, "unmeasured ⇒ historical default");
+        assert_eq!(master_slice(Some(0.0)), 256, "degenerate cost ⇒ default");
+        assert_eq!(master_slice(Some(-1.0)), 256);
+        // 200 µs target / 1 µs per iteration = 200 iterations per slice.
+        assert_eq!(master_slice(Some(1e-6)), 200);
+        // Long iterations (the PSIA regime) floor at 1 — matching the A3
+        // ablation's "anything above 1 starves the queue" guidance.
+        assert_eq!(master_slice(Some(73e-3)), 1);
+        assert_eq!(master_slice(Some(1.0)), 1);
+        // Absurdly cheap iterations cap so drains still happen.
+        assert_eq!(master_slice(Some(1e-15)), MAX_MASTER_SLICE);
+        // Monotone: costlier iterations never grow the slice.
+        let costs = [1e-9, 1e-8, 1e-7, 1e-6, 1e-5, 1e-4, 1e-3];
+        let slices: Vec<u64> = costs.iter().map(|&c| master_slice(Some(c))).collect();
+        assert!(slices.windows(2).all(|w| w[0] >= w[1]), "{slices:?}");
+    }
 }

@@ -1,6 +1,6 @@
 //! The execution models (§3–§5) as real multi-threaded engines: `P` worker
 //! threads self-schedule a [`Workload`] through a master (CCA), a
-//! coordinator (DCA), or a two-level coordinator → node-master hierarchy
+//! coordinator (DCA), or a recursive depth-`k` coordinator → master tree
 //! (HIER-DCA) — wall-clock measured, chunks actually executed.
 //!
 //! | model | calculation | assignment | messages/chunk |
@@ -8,15 +8,15 @@
 //! | [`cca`]      | master, **serialized** (+injected delay) | master | 2 |
 //! | [`dca`]      | worker, **parallel** (+injected delay)   | coordinator (counter bump) | 4 |
 //! | [`dca_rma`]  | worker, **parallel**                     | atomic fetch-ops, no coordinator CPU | 0 |
-//! | [`hier`]     | two-level, **parallel**: masters size node-chunks, local ranks size sub-chunks | coordinator (node-chunks) + per-node masters (sub-chunks) | 4 intra-node per sub-chunk + 4 inter-node per node-chunk |
+//! | [`hier`]     | N-level, **parallel**: every tier's requesters size their own chunks | root + one master ledger per tree level | 4 per chunk at each level, over that level's fabric |
 //!
-//! The [`hier`] engine's message pattern is the arXiv 1903.09510 two-level
-//! protocol: local ranks run `Get → Step`, `Commit → Chunk` against their
-//! *node master* (intra-node traffic), while each non-dedicated master —
-//! which also executes iterations — runs the same two-phase exchange
-//! (`OuterGet → OuterStep`, `OuterCommit → OuterChunk`) against the global
-//! coordinator for whole node-chunks (inter-node traffic), optionally
-//! prefetching the next node-chunk below a watermark.
+//! The [`hier`] engine's message pattern is the arXiv 1903.09510 protocol
+//! generalized to any depth: leaf ranks run `Get → Step`, `Commit → Chunk`
+//! against their lowest-level master (intra-node traffic), while each
+//! non-dedicated master persona — the hosting ranks also execute
+//! iterations — runs the same two-phase exchange one level up for whole
+//! level-chunks, optionally prefetching the next chunk below a (fixed or
+//! EWMA-adaptive) watermark. Depth 2 is the classic two-level hierarchy.
 //!
 //! These engines validate the protocol end-to-end at host scale; the
 //! paper-scale (256-rank) numbers come from the calibrated DES in
@@ -46,11 +46,12 @@ pub struct EngineConfig {
     pub technique: TechniqueKind,
     pub model: ExecutionModel,
     pub delay: InjectedDelay,
-    /// Two-level parameters (inner technique, outer prefetch watermark) —
-    /// used only by [`ExecutionModel::HierDca`].
+    /// Hierarchical-tree parameters (depth, per-level techniques/fan-outs,
+    /// prefetch policy) — used only by [`ExecutionModel::HierDca`].
     pub hier: HierParams,
-    /// Node-group count for the two-level engine (must divide `params.p`;
-    /// block placement). Ignored by the flat engines.
+    /// Default node-group count for the depth-2 tree (must divide
+    /// `params.p`; block placement); deeper trees take explicit fan-outs
+    /// from `hier`. Ignored by the flat engines.
     pub nodes: u32,
 }
 
@@ -102,6 +103,10 @@ pub struct RunResult {
     /// classification matches the DES split, so `messages/chunk` stays
     /// directly comparable across substrates.
     pub inter_node_messages: u64,
+    /// Messages per scheduling-protocol level, outer first: one entry per
+    /// tree level under [`hier`] (`Σ = stats.messages`), a single entry for
+    /// the flat engines.
+    pub level_messages: Vec<u64>,
 }
 
 impl RunResult {
@@ -118,15 +123,22 @@ impl RunResult {
             checksum,
             intra_node_messages: messages,
             inter_node_messages: 0,
+            level_messages: vec![messages],
         }
     }
 
-    /// Assemble with a two-tier message split (the hier engine's counters);
-    /// the flat total is their sum.
-    pub(crate) fn assemble_split(per_rank: Vec<RankSummary>, intra: u64, inter: u64) -> Self {
+    /// Assemble with the hier engine's message splits: two latency tiers
+    /// plus one counter per protocol level. The flat total is their sum.
+    pub(crate) fn assemble_split(
+        per_rank: Vec<RankSummary>,
+        intra: u64,
+        inter: u64,
+        levels: Vec<u64>,
+    ) -> Self {
         let mut out = Self::assemble(per_rank, intra + inter);
         out.intra_node_messages = intra;
         out.inter_node_messages = inter;
+        out.level_messages = levels;
         out
     }
 

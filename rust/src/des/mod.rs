@@ -47,7 +47,8 @@ pub struct DesConfig {
     /// Per-PE speed factors (1.0 = nominal); models heterogeneous or
     /// slowed-down PEs. Empty ⇒ all 1.0.
     pub pe_speed: Vec<f64>,
-    /// Two-level parameters, used only by [`ExecutionModel::HierDca`] (the
+    /// Hierarchical-tree parameters (depth, per-level techniques/fan-outs,
+    /// prefetch policy), used only by [`ExecutionModel::HierDca`] (the
     /// outer technique is `technique`; see [`crate::hier`]).
     pub hier: HierParams,
 }
@@ -91,6 +92,10 @@ pub struct DesResult {
     /// Messages crossing nodes (under `HierDca`, the coordinator ↔ master
     /// outer protocol). `intra + inter = stats.messages` always.
     pub inter_node_messages: u64,
+    /// Messages per scheduling-protocol level, outer first: one entry per
+    /// tree level under `HierDca` (`Σ = stats.messages`), a single entry for
+    /// the flat message-passing models, `[0]` for DCA-RMA (no messages).
+    pub level_messages: Vec<u64>,
 }
 
 impl DesResult {
@@ -113,8 +118,9 @@ pub fn simulate(cfg: &DesConfig) -> anyhow::Result<DesResult> {
         "AF has no straightforward formula; DCA-RMA cannot schedule it (§4)"
     );
     if cfg.model == ExecutionModel::HierDca {
-        // The two-level protocol has its own event loop (node-master service
-        // personalities over both latency tiers) — see `crate::hier`.
+        // The hierarchical protocol has its own event loop (a recursive
+        // tree of master service personas over the latency tiers, any
+        // depth) — see `crate::hier`.
         return crate::hier::simulate_hier(cfg);
     }
     let mut sim = Sim::new(cfg);
@@ -720,6 +726,7 @@ impl<'a> Sim<'a> {
             rma_ops: self.rma_ops,
             intra_node_messages: self.intra_msgs,
             inter_node_messages: self.inter_msgs,
+            level_messages: vec![self.messages],
         }
     }
 }

@@ -1,82 +1,95 @@
-//! Two-level hierarchical self-scheduling — the `HierDca` execution model.
+//! Recursive N-level hierarchical self-scheduling — the `HierDca`
+//! execution model.
 //!
-//! Implements the §7 future-work direction the authors themselves pursued in
+//! Generalizes the §7 future-work direction the authors pursued in
 //! *Hierarchical Dynamic Loop Self-Scheduling on Distributed-Memory Systems
-//! Using an MPI+MPI Approach* (arXiv 1903.09510): instead of every rank
-//! self-scheduling against one global coordinator over the inter-node
-//! fabric, the scheduling work is split across **two levels**:
+//! Using an MPI+MPI Approach* (arXiv 1903.09510) from the fixed two-level
+//! pair to a depth-`k` scheduling tree described by a
+//! [`crate::config::LevelPlan`] (technique + fan-out + latency class per
+//! level):
 //!
-//! * **Outer level (inter-node)** — a *global coordinator* (rank 0) owns the
-//!   loop's [`WorkQueue`] and hands out **node-chunks** through the DCA
-//!   two-phase protocol (`OuterGet → OuterStep`, `OuterCommit →
-//!   OuterChunk`). Node-chunk sizes are computed **on the node masters**
-//!   with the experiment's outer technique bound to `P = nodes` — the
-//!   distributed-chunk-calculation idea applied at node granularity.
-//! * **Inner level (intra-node)** — each *node master* (the first rank of
-//!   its node, [`Topology::master_of_node`]) re-subdivides its current
-//!   node-chunk among its local ranks with the (possibly different) *inner*
-//!   technique bound to `P = ranks_per_node`, again via two-phase DCA
-//!   (`InnerGet → Step`, `InnerCommit → Chunk`) — but over the **intra-node
-//!   latency class**, which is 4× cheaper on miniHPC.
+//! * **Level 0 (the root)** — rank 0 hosts the loop's global ledger,
+//!   pre-installed with the whole iteration space, and hands out **level-0
+//!   chunks** to the `fanout₀` level-1 masters through the DCA two-phase
+//!   protocol. Chunk sizes are computed **on the requesting masters** with
+//!   the level-0 technique bound to `P = fanout₀` — distributed chunk
+//!   calculation at tree granularity.
+//! * **Levels 1..k-1 (intermediate and leaf-serving masters)** — each
+//!   level-`d` master (the first rank of its subtree, block placement) owns
+//!   a [`protocol::NodeLedger`] that re-subdivides the chunks it fetched
+//!   from its level-`d-1` parent among its `fanout_d` children with the
+//!   level-`d` technique, over that level's (cheaper) latency class. The
+//!   deepest masters serve leaf ranks, which self-schedule exactly like
+//!   flat DCA workers.
 //!
-//! The mapping to arXiv 1903.09510 is direct: their MPI+MPI global/local
-//! work-queues become the outer [`WorkQueue`] at the coordinator and one
-//! local [`WorkQueue`] per master; their shared-memory window accesses
-//! become intra-node messages; their two-level DLS technique pair is
-//! [`crate::config::HierParams`] (outer = the experiment's technique, inner
-//! configurable). The payoff they report — and that
-//! `benches/hier_sweep.rs` reproduces on the calibrated DES — is that the
-//! central coordinator handles `O(node-chunks)` messages instead of
-//! `O(chunks)`, so perturbations that serialize on the flat coordinator
-//! (the 100 µs-class slowdown scenarios) are absorbed by the per-node
-//! masters in parallel, while the no-slowdown case stays within noise.
+//! Depth 1 degenerates to the flat DCA protocol (root ↔ all ranks), depth 2
+//! is the classic two-level hierarchy, depth 3 is the ROADMAP's rack → node
+//! → socket tree over the cluster's latency *triple*
+//! ([`crate::substrate::topology::Topology`] rack tier). Every level nests
+//! the **same serving loop**: two-phase reserve/commit against the shared
+//! ledger, stale-`seq` NACKs, park-and-fetch on exhaustion, and staged
+//! prefetch — two-level behavior is bit-identical to the previous
+//! hard-coded implementation.
 //!
-//! Like the flat models, rank 0 plus every node master is **non-dedicated**
-//! when `break_after > 0`: masters interleave their own iteration execution
-//! (in `breakAfter` segments) with servicing their local ranks, and rank 0
-//! additionally services the outer protocol on the same serial CPU.
+//! A physical rank can host several master personas (rank 0 hosts the root
+//! plus one persona per level of its subtree spine); all personas of a rank
+//! share one serial CPU and one service queue, so coordination and
+//! mastering contend exactly as on the real machine.
 //!
-//! AF (no closed form, §4) is supported at *both* levels through the same
+//! Like the flat models, every lowest-level master is **non-dedicated**
+//! when `break_after > 0`: it interleaves its own iteration execution with
+//! servicing its children.
+//!
+//! AF (no closed form, §4) is supported at *every* level through the same
 //! extra synchronization the flat DCA coordinator uses: performance reports
-//! piggyback on requests, the phase-1 reply carries the `(D, E)` aggregates,
-//! and the requester evaluates Eq. 11 locally. At the outer level the
-//! "PE statistics" are per-node throughput (iterations per wall-second of a
-//! node-chunk); at the inner level they are the usual per-rank chunk stats.
+//! piggyback on requests, the phase-1 reply carries the `(D, E)`
+//! aggregates, and the requester evaluates Eq. 11 locally. At master levels
+//! the "PE statistics" are per-subtree throughput (iterations per
+//! wall-second of an installed chunk); at the leaf level they are the usual
+//! per-rank chunk stats.
 //!
-//! The per-node chunk ledger (two-phase reserve/commit, stale-`seq` NACK,
-//! staged prefetch install) lives in [`protocol`] and is shared verbatim
-//! with the **threaded** two-level engine, [`crate::coordinator::hier`] —
-//! the DES and the wall-clock engine validate one protocol definition.
-//! [`crate::config::HierParams::prefetch_watermark`] enables outer-level
-//! prefetch on both substrates: masters request the next node-chunk while
-//! the current one still has work, hiding the inter-node round trip.
+//! The per-level chunk ledger (two-phase reserve/commit, stale-`seq` NACK,
+//! staged prefetch queue) lives in [`protocol`] and is shared verbatim with
+//! the **threaded** engine, [`crate::coordinator::hier`] — the DES and the
+//! wall-clock engine validate one protocol definition at every depth.
+//! [`crate::config::HierParams::watermark`] enables prefetch on both
+//! substrates: masters request the next chunk while the current one still
+//! has work. [`crate::config::WatermarkMode::Auto`] derives the watermark
+//! per level master from an EWMA of its observed parent-fetch round trip
+//! and its subtree's measured drain rate, so the round trip is hidden
+//! without hand tuning.
 
 pub mod protocol;
 
 use std::collections::VecDeque;
 
-use crate::config::{ClusterConfig, ExecutionModel};
+use crate::config::{ClusterConfig, ExecutionModel, HierParams, LevelPlan, WatermarkMode};
 use crate::coordinator::protocol::{AfInfo, PerfReport};
 use crate::des::heap::{ns, secs, EventHeap};
 use crate::des::{DesConfig, DesResult};
 use crate::metrics::LoopStats;
-use crate::sched::{Assignment, StepTicket, WorkQueue};
+use crate::sched::Assignment;
 use crate::substrate::topology::Topology;
 use crate::techniques::af::{af_requester_chunk, AfCalculator, AfGlobals, PeStats};
-use crate::techniques::{Technique, TechniqueKind};
-use protocol::{af_recap, with_np, InnerCommit, NodeLedger};
+use crate::techniques::TechniqueKind;
+use protocol::{auto_watermark, with_np, InnerCommit, NodeLedger, RttEwma};
 
-/// Can `HierDca` run on this cluster geometry? With dedicated masters
-/// (`break_after == 0`) every node needs at least one non-master rank to
-/// execute iterations. Single source of truth for [`simulate_hier`]'s
-/// validation and the selector's candidate filtering.
-pub fn hier_feasible(cluster: &ClusterConfig) -> bool {
-    cluster.break_after > 0 || cluster.ranks_per_node > 1
+/// Can `HierDca` run on this geometry? With dedicated masters
+/// (`break_after == 0`) every lowest-level group needs at least one
+/// non-master rank to execute iterations, and the level plan itself must
+/// resolve. Single source of truth for [`simulate_hier`]'s validation and
+/// the selector's candidate filtering.
+pub fn hier_feasible(cluster: &ClusterConfig, hier: &HierParams) -> bool {
+    hier.plan(TechniqueKind::Ss, cluster.total_ranks(), cluster)
+        .is_ok_and(|plan| {
+            cluster.break_after > 0 || plan.levels[plan.depth() - 1].fanout > 1
+        })
 }
 
-/// Simulate one hierarchical (`HierDca`) run. Deterministic: same config ⇒
-/// identical result. Called through [`crate::des::simulate`], which performs
-/// the model-independent validation.
+/// Simulate one hierarchical (`HierDca`) run at any tree depth.
+/// Deterministic: same config ⇒ identical result. Called through
+/// [`crate::des::simulate`], which performs the model-independent
+/// validation.
 pub fn simulate_hier(cfg: &DesConfig) -> anyhow::Result<DesResult> {
     anyhow::ensure!(
         cfg.model == ExecutionModel::HierDca,
@@ -89,12 +102,13 @@ pub fn simulate_hier(cfg: &DesConfig) -> anyhow::Result<DesResult> {
         cfg.params.p,
         cfg.cluster.total_ranks()
     );
+    let plan = cfg.hier.plan(cfg.technique, cfg.params.p, &cfg.cluster)?;
     anyhow::ensure!(
-        hier_feasible(&cfg.cluster),
-        "dedicated node masters (break_after = 0) need ranks_per_node ≥ 2, \
+        cfg.cluster.break_after > 0 || plan.levels[plan.depth() - 1].fanout > 1,
+        "dedicated masters (break_after = 0) need a leaf fan-out ≥ 2, \
          otherwise no rank executes iterations"
     );
-    let mut sim = HierSim::new(cfg);
+    let mut sim = HierSim::new(cfg, &plan);
     sim.run();
     Ok(sim.into_result())
 }
@@ -102,31 +116,33 @@ pub fn simulate_hier(cfg: &DesConfig) -> anyhow::Result<DesResult> {
 // ---------------------------------------------------------------------------
 // events and tasks
 
-/// A task queued at a node master's serial CPU. Outer *requests* are only
-/// ever routed to master 0, whose CPU doubles as the global coordinator —
-/// coordination and node-0 mastering contend for the same core, exactly as
-/// on the real machine.
+/// A task queued at a hosting rank's serial CPU. `level` always names the
+/// *protocol* level `d` (0 = root ↔ level-1 masters, `k-1` = leaf-serving
+/// masters ↔ leaf ranks); master-tier child identities are level-`d+1`
+/// master indices.
 #[derive(Debug)]
 enum Task {
-    /// A local rank asks for its next scheduling step (inner phase 1).
-    InnerGet { w: u32, report: Option<PerfReport> },
-    /// A local rank commits its locally calculated size (inner phase 2);
-    /// `seq` names the node-chunk the step was reserved from.
-    InnerCommit { w: u32, step: u64, size: u64, seq: u64 },
-    /// A node master asks the global coordinator for an outer step.
-    OuterGet { from: u32, report: Option<PerfReport> },
-    /// A node master commits its node-chunk size to the coordinator.
-    OuterCommit { from: u32, step: u64, size: u64 },
-    /// Coordinator reply: reserved outer step (+ AF aggregates). Handling it
-    /// *is* the outer chunk calculation, on the master's CPU.
-    OuterStep { ticket: StepTicket, af: Option<AfInfo> },
-    /// Coordinator reply: the committed node-chunk.
-    OuterChunk(Assignment),
-    /// Coordinator reply: the loop is exhausted.
-    OuterDone,
+    /// A leaf rank asks its master for a scheduling step (phase 1).
+    LeafGet { w: u32, report: Option<PerfReport> },
+    /// A leaf rank commits its locally calculated size (phase 2); `seq`
+    /// names the chunk the step was reserved from.
+    LeafCommit { w: u32, step: u64, size: u64, seq: u64 },
+    /// Level-`level+1` master `from` asks its level-`level` parent for a
+    /// step of the parent's chunk.
+    MasterGet { level: u32, from: u32, report: Option<PerfReport> },
+    /// Master `from` commits its chunk size to its parent.
+    MasterCommit { level: u32, from: u32, step: u64, size: u64, seq: u64 },
+    /// Parent reply: reserved step (+ AF aggregates). Handling it *is* the
+    /// chunk calculation, on the child master's CPU.
+    MasterStep { level: u32, to: u32, step: u64, remaining: u64, seq: u64, af: Option<AfInfo> },
+    /// Parent reply: the committed chunk, to be installed into `to`'s
+    /// ledger.
+    MasterChunk { level: u32, to: u32, a: Assignment },
+    /// Parent reply: the parent's share of the loop is exhausted for good.
+    MasterDone { level: u32, to: u32 },
 }
 
-/// Inner-protocol reply delivered to a worker rank.
+/// Leaf-protocol reply delivered to a worker rank.
 #[derive(Debug, Clone, Copy)]
 enum WReply {
     /// Reserved local step: the worker calculates its own sub-chunk size.
@@ -139,11 +155,11 @@ enum WReply {
 
 #[derive(Debug)]
 enum Ev {
-    /// A message arrives at node master `m`'s service queue.
-    Arrive { m: u32, task: Task },
-    /// Master `m`'s CPU finished its current action.
-    ServerFree { m: u32 },
-    /// An inner reply reaches worker `w`.
+    /// A message arrives at hosting rank `s`'s service queue.
+    Arrive { s: u32, task: Task },
+    /// Host `s`'s CPU finished its current action.
+    ServerFree { s: u32 },
+    /// A leaf reply reaches worker `w`.
     WorkerReply { w: u32, reply: WReply },
     /// Worker `w` finished its local sub-chunk calculation.
     CalcDone { w: u32, step: u64, size: u64, seq: u64 },
@@ -154,22 +170,52 @@ enum Ev {
 // ---------------------------------------------------------------------------
 // state
 
-/// The master's own worker personality (mirrors the flat DES's `OwnState`).
+/// The lowest master's own worker personality (mirrors the flat DES's
+/// `OwnState`).
 #[derive(Debug)]
 enum Own {
     NeedWork,
     Calc { step: u64, remaining: u64, seq: u64 },
     Commit { step: u64, size: u64, seq: u64 },
     Exec { cursor: u64, end: u64, first: u64 },
-    /// Waiting for the next node-chunk (or global Done).
+    /// Waiting for the next chunk (or the global Done).
     Parked,
     Finished,
 }
 
-/// Per-node master: serial CPU, local queue, parked requests, outer-protocol
-/// state. Master 0 additionally hosts the global coordinator.
+/// One level-`d` master persona: the server side (its ledger and parked
+/// children) plus its child side in protocol `d-1` (fetch state and subtree
+/// throughput — unused for the root, which has no parent and is born
+/// `global_done` with the whole loop installed).
 #[derive(Debug)]
-struct Master {
+struct Persona {
+    rank: u32,
+    ledger: NodeLedger,
+    /// Children whose requests arrived while the ledger was empty: leaf
+    /// ranks at the deepest level, child master indices elsewhere.
+    parked: VecDeque<u32>,
+    /// AF calculator over this persona's children (when this level runs AF).
+    af_calc: Option<AfCalculator>,
+    // -- child side (role in protocol `d-1`) --
+    fetching: bool,
+    global_done: bool,
+    /// Subtree chunk-throughput statistics (outer-AF feedback + the
+    /// adaptive watermark's drain-rate estimate).
+    stats: PeStats,
+    pending_report: Option<PerfReport>,
+    installed_ns: u64,
+    installed_iters: u64,
+    /// When the in-flight parent fetch was issued (adaptive watermark).
+    fetch_sent_ns: u64,
+    /// EWMA of observed parent-fetch round trips (shared protocol policy).
+    rtt: RttEwma,
+}
+
+/// One hosting rank (a lowest-level master): serial CPU, task queue, and
+/// the own worker personality. Host 0 additionally runs the root persona
+/// and every intermediate persona of its subtree spine.
+#[derive(Debug)]
+struct Server {
     rank: u32,
     queue: VecDeque<Task>,
     busy: bool,
@@ -177,21 +223,8 @@ struct Master {
     cpu_busy_until_ns: u64,
     /// Total busy time spent servicing protocol messages (ns).
     service_ns: u64,
-    /// The shared-protocol chunk ledger this master subdivides from.
-    ledger: NodeLedger,
-    /// Local ranks whose requests arrived while no local work existed.
-    parked: VecDeque<u32>,
-    own_parked: bool,
-    fetching: bool,
-    global_done: bool,
     own: Own,
-    /// Inner-AF calculator over this node's local ranks (index `rank % rpn`).
-    inner_af: Option<AfCalculator>,
-    /// Outer-AF: this node's chunk-throughput statistics.
-    node_stats: PeStats,
-    outer_report: Option<PerfReport>,
-    installed_ns: u64,
-    installed_iters: u64,
+    own_parked: bool,
 }
 
 /// Per-rank bookkeeping (all ranks, including masters' worker personality).
@@ -211,68 +244,90 @@ struct HierSim<'a> {
     topo: Topology,
     heap: EventHeap<Ev>,
     now: u64,
-    nodes: u32,
-    rpn: u32,
-    inner_kind: TechniqueKind,
-    // global coordinator state (CPU-wise hosted on master 0)
-    outer_q: WorkQueue,
-    outer_tech: Option<Technique>,
-    outer_af: Option<AfCalculator>,
-    masters: Vec<Master>,
+    /// The resolved scheduling tree — the single source of the placement
+    /// math (shared with the threaded engine's geometry).
+    plan: LevelPlan,
+    /// Tree depth `k`.
+    k: usize,
+    /// Children per level-`d` master (hot copy of `plan`'s fan-outs).
+    fanouts: Vec<u32>,
+    /// Technique of each level.
+    techs: Vec<TechniqueKind>,
+    /// `personas[d][j]`: level-`d` master `j` (`personas[0]` = the root).
+    personas: Vec<Vec<Persona>>,
+    servers: Vec<Server>,
     workers: Vec<Wstate>,
     messages: u64,
     /// Message split by latency class (same-node vs cross-node endpoints).
     intra_msgs: u64,
     inter_msgs: u64,
+    /// Message split by protocol level (outer first).
+    level_msgs: Vec<u64>,
     assignments: Vec<Assignment>,
 }
 
 impl<'a> HierSim<'a> {
-    fn new(cfg: &'a DesConfig) -> Self {
-        let topo = Topology::new(&cfg.cluster);
-        let nodes = topo.nodes();
-        let rpn = topo.ranks_per_node();
-        let outer_params = with_np(&cfg.params, cfg.params.n, nodes);
-        let inner_kind = cfg.hier.inner_or(cfg.technique);
-        let inner_proto = with_np(&cfg.params, cfg.params.n, rpn);
-        let outer_is_af = cfg.technique == TechniqueKind::Af;
-        let masters = (0..nodes)
-            .map(|m| Master {
-                rank: topo.master_of_node(m),
+    fn new(cfg: &'a DesConfig, plan: &LevelPlan) -> Self {
+        let n = cfg.params.n;
+        let k = plan.depth();
+        let fanouts: Vec<u32> = plan.levels.iter().map(|l| l.fanout).collect();
+        let techs: Vec<TechniqueKind> = plan.techs();
+        let staged_cap = cfg.hier.staged_capacity();
+        let mut personas: Vec<Vec<Persona>> = Vec::with_capacity(k);
+        for d in 0..k {
+            let masters = plan.masters_at(d);
+            let level_params = with_np(&cfg.params, n, fanouts[d]);
+            let level = (0..masters)
+                .map(|j| Persona {
+                    rank: plan.host_rank(d, j),
+                    ledger: NodeLedger::new(techs[d], &cfg.params, fanouts[d])
+                        .with_staged_capacity(staged_cap),
+                    parked: VecDeque::new(),
+                    af_calc: (techs[d] == TechniqueKind::Af)
+                        .then(|| AfCalculator::new(&level_params)),
+                    fetching: false,
+                    global_done: d == 0,
+                    stats: PeStats::default(),
+                    pending_report: None,
+                    installed_ns: 0,
+                    installed_iters: 0,
+                    fetch_sent_ns: 0,
+                    rtt: RttEwma::default(),
+                })
+                .collect();
+            personas.push(level);
+        }
+        // The root owns the whole loop from the start: one install of
+        // `[0, N)`, never replaced (its `seq` stays 1, so no commit against
+        // it can ever be stale).
+        personas[0][0].ledger.install(Assignment { step: 0, start: 0, size: n });
+        let servers = (0..plan.masters_at(k - 1))
+            .map(|s| Server {
+                rank: plan.host_rank(k - 1, s),
                 queue: VecDeque::new(),
                 busy: false,
                 cpu_busy_until_ns: 0,
                 service_ns: 0,
-                ledger: NodeLedger::new(inner_kind, &cfg.params, rpn),
-                parked: VecDeque::new(),
-                own_parked: false,
-                fetching: false,
-                global_done: false,
                 own: Own::NeedWork,
-                inner_af: (inner_kind == TechniqueKind::Af)
-                    .then(|| AfCalculator::new(&inner_proto)),
-                node_stats: PeStats::default(),
-                outer_report: None,
-                installed_ns: 0,
-                installed_iters: 0,
+                own_parked: false,
             })
             .collect();
         HierSim {
             cfg,
-            topo,
+            topo: Topology::new(&cfg.cluster),
             heap: EventHeap::new(),
             now: 0,
-            nodes,
-            rpn,
-            inner_kind,
-            outer_q: WorkQueue::from_params(&cfg.params),
-            outer_tech: (!outer_is_af).then(|| Technique::new(cfg.technique, &outer_params)),
-            outer_af: outer_is_af.then(|| AfCalculator::new(&outer_params)),
-            masters,
+            plan: plan.clone(),
+            k,
+            fanouts,
+            techs,
+            personas,
+            servers,
             workers: vec![Wstate::default(); cfg.params.p as usize],
             messages: 0,
             intra_msgs: 0,
             inter_msgs: 0,
+            level_msgs: vec![0; k],
             assignments: Vec::new(),
         }
     }
@@ -287,10 +342,6 @@ impl<'a> HierSim<'a> {
         ns(self.topo.latency(a, b))
     }
 
-    fn node_of(&self, rank: u32) -> u32 {
-        self.topo.node_of(rank)
-    }
-
     fn min_chunk(&self) -> u64 {
         self.cfg.params.min_chunk.max(1)
     }
@@ -299,16 +350,23 @@ impl<'a> HierSim<'a> {
         ns(self.cfg.cost.range_cost(a.start, a.size) / self.speed(rank))
     }
 
-    fn inner_af_info(&self, m: u32) -> Option<AfInfo> {
-        self.masters[m as usize]
-            .inner_af
+    /// Rank hosting level-`d` master `j` (delegates to the plan — one
+    /// definition of the placement math for both substrates).
+    fn host_rank(&self, d: usize, j: u32) -> u32 {
+        self.plan.host_rank(d, j)
+    }
+
+    /// Hosting-server index of a rank (its lowest-level master).
+    fn server_of_rank(&self, rank: u32) -> u32 {
+        rank / self.fanouts[self.k - 1]
+    }
+
+    fn persona_af_info(&self, d: usize, j: u32) -> Option<AfInfo> {
+        self.personas[d][j as usize]
+            .af_calc
             .as_ref()
             .and_then(|a| a.globals())
             .map(|g| AfInfo { d: g.d, e: g.e })
-    }
-
-    fn outer_af_info(&self) -> Option<AfInfo> {
-        self.outer_af.as_ref().and_then(|a| a.globals()).map(|g| AfInfo { d: g.d, e: g.e })
     }
 
     fn grant(&mut self, rank: u32, a: Assignment) {
@@ -321,23 +379,23 @@ impl<'a> HierSim<'a> {
     // -- bootstrap ---------------------------------------------------------
 
     fn run(&mut self) {
-        // Every non-master rank opens with an InnerGet to its node master;
-        // masters kick their own CPU, which parks its worker personality and
-        // triggers the first outer fetch.
+        // Every non-master rank opens with a LeafGet to its master; hosting
+        // ranks kick their own CPU, which parks its worker personality and
+        // triggers the first fetch chain up to the root.
+        let leaf_fanout = self.fanouts[self.k - 1];
         for w in 0..self.cfg.params.p {
-            let m = self.node_of(w);
-            if w == self.masters[m as usize].rank {
+            if w % leaf_fanout == 0 {
                 continue;
             }
             self.workers[w as usize].req_sent_ns = 0;
-            self.send_inner(w, Task::InnerGet { w, report: None }, 0);
+            self.send_leaf(w, Task::LeafGet { w, report: None }, 0);
         }
-        for m in 0..self.nodes {
+        for s in 0..self.servers.len() as u32 {
             if self.cfg.cluster.break_after == 0 {
-                self.masters[m as usize].own = Own::Finished;
+                self.servers[s as usize].own = Own::Finished;
             }
-            self.masters[m as usize].busy = true;
-            self.heap.push(0, Ev::ServerFree { m });
+            self.servers[s as usize].busy = true;
+            self.heap.push(0, Ev::ServerFree { s });
         }
         while let Some((t, ev)) = self.heap.pop() {
             debug_assert!(t >= self.now, "time went backwards");
@@ -348,295 +406,392 @@ impl<'a> HierSim<'a> {
 
     fn dispatch(&mut self, ev: Ev) {
         match ev {
-            Ev::Arrive { m, task } => {
-                let master = &mut self.masters[m as usize];
-                master.queue.push_back(task);
-                if !master.busy {
-                    master.busy = true;
-                    self.heap.push(self.now, Ev::ServerFree { m });
+            Ev::Arrive { s, task } => {
+                let server = &mut self.servers[s as usize];
+                server.queue.push_back(task);
+                if !server.busy {
+                    server.busy = true;
+                    self.heap.push(self.now, Ev::ServerFree { s });
                 }
             }
-            Ev::ServerFree { m } => self.server_next_action(m),
+            Ev::ServerFree { s } => self.server_next_action(s),
             Ev::WorkerReply { w, reply } => self.worker_on_reply(w, reply),
             Ev::CalcDone { w, step, size, seq } => {
                 self.workers[w as usize].req_sent_ns = self.now;
-                self.send_inner(w, Task::InnerCommit { w, step, size, seq }, 0);
+                self.send_leaf(w, Task::LeafCommit { w, step, size, seq }, 0);
             }
             Ev::ExecDone { w } => {
                 self.workers[w as usize].req_sent_ns = self.now;
                 let report = self.workers[w as usize].last_report;
-                self.send_inner(w, Task::InnerGet { w, report }, 0);
+                self.send_leaf(w, Task::LeafGet { w, report }, 0);
             }
         }
     }
 
     // -- messaging ---------------------------------------------------------
 
-    /// Count one message, classified by the endpoints' latency class.
-    fn count_msg(&mut self, a: u32, b: u32) {
+    /// Count one message of protocol level `d`, classified by the
+    /// endpoints' latency class.
+    fn count_msg(&mut self, a: u32, b: u32, d: usize) {
         self.messages += 1;
-        if self.node_of(a) == self.node_of(b) {
+        self.level_msgs[d] += 1;
+        if self.topo.node_of(a) == self.topo.node_of(b) {
             self.intra_msgs += 1;
         } else {
             self.inter_msgs += 1;
         }
     }
 
-    /// Send a worker-originated message to its node master.
-    fn send_inner(&mut self, w: u32, task: Task, extra_ns: u64) {
-        let m = self.node_of(w);
-        let mrank = self.masters[m as usize].rank;
-        self.count_msg(w, mrank);
+    /// Send a worker-originated message to its leaf-serving master.
+    fn send_leaf(&mut self, w: u32, task: Task, extra_ns: u64) {
+        let s = self.server_of_rank(w);
+        let mrank = self.servers[s as usize].rank;
+        self.count_msg(w, mrank, self.k - 1);
         let at = self.now + extra_ns + self.lat_ns(w, mrank);
-        self.heap.push(at, Ev::Arrive { m, task });
+        self.heap.push(at, Ev::Arrive { s, task });
     }
 
-    /// Send a coordinator reply to node master `to`.
-    fn send_to_master(&mut self, to: u32, task: Task, dur: u64) {
-        let coord = self.masters[0].rank;
-        let mrank = self.masters[to as usize].rank;
-        self.count_msg(coord, mrank);
-        let at = self.now + dur + self.lat_ns(coord, mrank);
-        self.heap.push(at, Ev::Arrive { m: to, task });
-    }
-
-    /// Send an inner reply from master `m` to local rank `w`.
-    fn send_worker(&mut self, m: u32, w: u32, reply: WReply, dur: u64) {
-        let mrank = self.masters[m as usize].rank;
-        self.count_msg(mrank, w);
+    /// Send a leaf reply from hosting rank `s` to local rank `w`.
+    fn send_worker(&mut self, s: u32, w: u32, reply: WReply, dur: u64) {
+        let mrank = self.servers[s as usize].rank;
+        self.count_msg(mrank, w, self.k - 1);
         let at = self.now + dur + self.lat_ns(mrank, w);
         self.heap.push(at, Ev::WorkerReply { w, reply });
     }
 
-    // -- master CPU --------------------------------------------------------
-
-    fn server_next_action(&mut self, m: u32) {
-        if let Some(task) = self.masters[m as usize].queue.pop_front() {
-            let dur = self.service(m, task);
-            let master = &mut self.masters[m as usize];
-            master.service_ns += dur;
-            master.busy = true;
-            master.cpu_busy_until_ns = self.now + dur;
-            self.heap.push(self.now + dur, Ev::ServerFree { m });
-            return;
-        }
-        self.own_next_action(m);
+    /// Send a protocol-`d` reply from parent persona `(d, jp)` to child
+    /// master `to` (a level-`d+1` index).
+    fn send_master_reply(&mut self, d: usize, jp: u32, to: u32, task: Task, dur: u64) {
+        let parent_rank = self.host_rank(d, jp);
+        let child_rank = self.host_rank(d + 1, to);
+        self.count_msg(parent_rank, child_rank, d);
+        let at = self.now + dur + self.lat_ns(parent_rank, child_rank);
+        self.heap.push(at, Ev::Arrive { s: self.server_of_rank(child_rank), task });
     }
 
-    /// Service one queued task on master `m`'s CPU; returns the (speed-
+    // -- hosting-rank CPU --------------------------------------------------
+
+    fn server_next_action(&mut self, s: u32) {
+        if let Some(task) = self.servers[s as usize].queue.pop_front() {
+            let dur = self.service(s, task);
+            let server = &mut self.servers[s as usize];
+            server.service_ns += dur;
+            server.busy = true;
+            server.cpu_busy_until_ns = self.now + dur;
+            self.heap.push(self.now + dur, Ev::ServerFree { s });
+            return;
+        }
+        self.own_next_action(s);
+    }
+
+    /// Service one queued task on host `s`'s CPU; returns the (speed-
     /// scaled) CPU occupancy in ns and schedules replies/follow-ups.
-    fn service(&mut self, m: u32, task: Task) -> u64 {
+    fn service(&mut self, s: u32, task: Task) -> u64 {
         let c = &self.cfg.cluster;
-        let sp = self.speed(self.masters[m as usize].rank);
+        let sp = self.speed(self.servers[s as usize].rank);
         match task {
-            Task::InnerGet { w, report } => {
+            Task::LeafGet { w, report } => {
                 let dur = ns(c.service_time / sp);
-                self.record_inner_report(m, w, report);
-                self.inner_get(m, w, dur);
+                self.record_leaf_report(s, w, report);
+                self.leaf_get(s, w, dur);
                 dur
             }
-            Task::InnerCommit { w, step, size, seq } => {
+            Task::LeafCommit { w, step, size, seq } => {
                 let dur = ns((c.service_time + self.cfg.delay.assignment) / sp);
-                self.inner_commit(m, w, step, size, seq, dur);
+                self.leaf_commit(s, w, step, size, seq, dur);
                 dur
             }
-            Task::OuterGet { from, report } => {
-                debug_assert_eq!(m, 0, "outer requests are served by the coordinator");
+            Task::MasterGet { level, from, report } => {
+                let d = level as usize;
+                let jp = from / self.fanouts[d];
+                debug_assert_eq!(
+                    self.server_of_rank(self.host_rank(d, jp)),
+                    s,
+                    "protocol-{d} requests are served by the owning persona's host"
+                );
                 let dur = ns(c.service_time / sp);
-                if let (Some(af), Some(r)) = (self.outer_af.as_mut(), report) {
-                    af.record(from as usize, r.iters, r.elapsed);
+                if let Some(r) = report {
+                    let idx = (from - jp * self.fanouts[d]) as usize;
+                    if let Some(af) = self.personas[d][jp as usize].af_calc.as_mut() {
+                        af.record(idx, r.iters, r.elapsed);
+                    }
                 }
-                let reply = match self.outer_q.begin_step() {
-                    Some(ticket) => Task::OuterStep { ticket, af: self.outer_af_info() },
-                    None => Task::OuterDone,
-                };
-                self.send_to_master(from, reply, dur);
+                self.serve_master_get(d, jp, from, dur);
                 dur
             }
-            Task::OuterCommit { from, step, size } => {
-                debug_assert_eq!(m, 0, "outer commits are served by the coordinator");
+            Task::MasterCommit { level, from, step, size, seq } => {
+                let d = level as usize;
                 let dur = ns((c.service_time + self.cfg.delay.assignment) / sp);
-                // Outer AF: re-apply the ⌈R/nodes⌉ cap against the fresh
-                // remaining count (the ticket snapshot is stale once other
-                // masters commit — same rule as the flat DCA coordinator).
-                let size = if self.cfg.technique == TechniqueKind::Af {
-                    af_recap(size, self.outer_q.remaining(), self.nodes)
-                } else {
-                    size
-                };
-                let ticket = StepTicket { step, remaining: self.outer_q.remaining() };
-                let reply = match self.outer_q.commit(ticket, size) {
-                    Some(a) => Task::OuterChunk(a),
-                    None => Task::OuterDone,
-                };
-                self.send_to_master(from, reply, dur);
+                self.master_commit(d, from, step, size, seq, dur);
                 dur
             }
-            Task::OuterStep { ticket, af } => {
-                // The outer chunk CALCULATION runs here, on the master's own
-                // CPU — distributed across nodes, paying the injected delay
-                // in parallel (the DCA idea, one level up).
-                let mrank = self.masters[m as usize].rank;
-                let dur = ns((self.cfg.delay.calculation_at(mrank, self.now) + c.calc_time) / sp);
-                let size = self.outer_calc(m, ticket, af);
-                let coord = self.masters[0].rank;
-                self.count_msg(mrank, coord);
-                let at = self.now + dur + self.lat_ns(mrank, coord);
+            Task::MasterStep { level, to, step, remaining, seq, af } => {
+                // The chunk CALCULATION runs here, on the child master's own
+                // CPU — distributed across the tree, paying the injected
+                // delay in parallel (the DCA idea, at every level).
+                let d = level as usize;
+                let child_rank = self.host_rank(d + 1, to);
+                let dur =
+                    ns((self.cfg.delay.calculation_at(child_rank, self.now) + c.calc_time) / sp);
+                let size = self.master_calc(d, to, step, remaining, seq, af);
+                let parent_rank = self.host_rank(d, to / self.fanouts[d]);
+                self.count_msg(child_rank, parent_rank, d);
+                let at = self.now + dur + self.lat_ns(child_rank, parent_rank);
                 self.heap.push(
                     at,
                     Ev::Arrive {
-                        m: 0,
-                        task: Task::OuterCommit { from: m, step: ticket.step, size },
+                        s: self.server_of_rank(parent_rank),
+                        task: Task::MasterCommit { level, from: to, step, size, seq },
                     },
                 );
                 dur
             }
-            Task::OuterChunk(a) => {
+            Task::MasterChunk { level, to, a } => {
                 let dur = ns(c.service_time / sp);
-                self.install_chunk(m, a);
+                self.install_chunk(level as usize + 1, to, a);
                 dur
             }
-            Task::OuterDone => {
+            Task::MasterDone { level, to } => {
                 let dur = ns(c.service_time / sp);
-                let master = &mut self.masters[m as usize];
-                master.global_done = true;
-                master.fetching = false;
-                self.requeue_parked(m);
+                let e = level as usize + 1;
+                let pr = &mut self.personas[e][to as usize];
+                pr.global_done = true;
+                pr.fetching = false;
+                self.requeue_parked(e, to);
                 dur
             }
         }
     }
 
-    fn record_inner_report(&mut self, m: u32, w: u32, report: Option<PerfReport>) {
+    fn record_leaf_report(&mut self, s: u32, w: u32, report: Option<PerfReport>) {
         if let Some(r) = report {
-            let mrank = self.masters[m as usize].rank;
+            let mrank = self.servers[s as usize].rank;
             let idx = (w - mrank) as usize;
-            if let Some(af) = self.masters[m as usize].inner_af.as_mut() {
+            let k1 = self.k - 1;
+            if let Some(af) = self.personas[k1][s as usize].af_calc.as_mut() {
                 af.record(idx, r.iters, r.elapsed);
             }
         }
     }
 
-    /// Reserve the next local step from `m`'s ledger, if it has work.
-    /// Shared by the worker service path and the master's own personality.
-    fn local_reserve(&mut self, m: u32) -> Option<(u64, u64, u64)> {
-        self.masters[m as usize].ledger.reserve()
-    }
-
-    fn inner_get(&mut self, m: u32, w: u32, dur: u64) {
-        let af = self.inner_af_info(m);
-        if let Some((step, remaining, seq)) = self.local_reserve(m) {
-            self.send_worker(m, w, WReply::Step { step, remaining, seq, af }, dur);
-        } else if self.masters[m as usize].global_done {
-            self.send_worker(m, w, WReply::Done, dur);
+    /// Serve a leaf phase-1 request: reserve, terminate, or park the rank.
+    fn leaf_get(&mut self, s: u32, w: u32, dur: u64) {
+        let k1 = self.k - 1;
+        let af = self.persona_af_info(k1, s);
+        if let Some((step, remaining, seq)) = self.personas[k1][s as usize].ledger.reserve() {
+            self.send_worker(s, w, WReply::Step { step, remaining, seq, af }, dur);
+        } else if self.personas[k1][s as usize].global_done {
+            self.send_worker(s, w, WReply::Done, dur);
         } else {
-            self.masters[m as usize].parked.push_back(w);
-            self.maybe_fetch(m, dur);
+            self.personas[k1][s as usize].parked.push_back(w);
+            self.maybe_fetch(k1, s, dur);
         }
     }
 
-    fn inner_commit(&mut self, m: u32, w: u32, step: u64, size: u64, seq: u64, dur: u64) {
-        match self.masters[m as usize].ledger.commit(step, size, seq) {
+    fn leaf_commit(&mut self, s: u32, w: u32, step: u64, size: u64, seq: u64, dur: u64) {
+        let k1 = self.k - 1;
+        match self.personas[k1][s as usize].ledger.commit(step, size, seq) {
             InnerCommit::Granted(abs) => {
                 self.grant(w, abs);
-                self.send_worker(m, w, WReply::Chunk(abs), dur);
-                self.maybe_prefetch(m, dur);
+                self.send_worker(s, w, WReply::Chunk(abs), dur);
+                self.maybe_prefetch(k1, s, dur);
             }
-            // Stale seq: the node-chunk was replaced while this commit was
-            // in flight. Re-serve the request as a fresh phase-1 Get so the
+            // Stale seq: the chunk was replaced while this commit was in
+            // flight. Re-serve the request as a fresh phase-1 Get so the
             // worker calculates against the *current* chunk instead of
             // silently committing a size computed for the old one.
-            InnerCommit::Stale => self.inner_get(m, w, dur),
-            InnerCommit::Drained if self.masters[m as usize].global_done => {
-                self.send_worker(m, w, WReply::Done, dur);
+            InnerCommit::Stale => self.leaf_get(s, w, dur),
+            InnerCommit::Drained if self.personas[k1][s as usize].global_done => {
+                self.send_worker(s, w, WReply::Done, dur);
             }
-            // The local queue filled between this worker's Step and its
-            // Commit: park it — it gets a fresh Step from the next
-            // node-chunk (its stale size is discarded).
+            // The ledger filled between this worker's Step and its Commit:
+            // park it — it gets a fresh Step from the next chunk (its stale
+            // size is discarded).
             InnerCommit::Drained => {
-                self.masters[m as usize].parked.push_back(w);
-                self.maybe_fetch(m, dur);
+                self.personas[k1][s as usize].parked.push_back(w);
+                self.maybe_fetch(k1, s, dur);
             }
         }
     }
 
-    /// Outer-level prefetch: once the current node-chunk drains to the
-    /// configured watermark, request the next one while the local ranks keep
-    /// consuming the tail — the inter-node round trip plus the outer chunk
-    /// calculation are hidden instead of stalling the whole node.
-    fn maybe_prefetch(&mut self, m: u32, dur: u64) {
-        if self.masters[m as usize].ledger.wants_prefetch(self.cfg.hier.prefetch_watermark) {
-            self.maybe_fetch(m, dur);
+    /// Serve a master-tier phase-1 request at persona `(d, jp)` from child
+    /// master `from` — the same reserve/terminate/park logic as the leaf
+    /// path, one level up.
+    fn serve_master_get(&mut self, d: usize, jp: u32, from: u32, dur: u64) {
+        let af = self.persona_af_info(d, jp);
+        if let Some((step, remaining, seq)) = self.personas[d][jp as usize].ledger.reserve() {
+            self.send_master_reply(
+                d,
+                jp,
+                from,
+                Task::MasterStep { level: d as u32, to: from, step, remaining, seq, af },
+                dur,
+            );
+        } else if self.personas[d][jp as usize].global_done {
+            let done = Task::MasterDone { level: d as u32, to: from };
+            self.send_master_reply(d, jp, from, done, dur);
+        } else {
+            self.personas[d][jp as usize].parked.push_back(from);
+            self.maybe_fetch(d, jp, dur);
         }
     }
 
-    /// Trigger the outer fetch for master `m` unless one is already in
-    /// flight. Also finalizes the consumed node-chunk's throughput report
-    /// (the outer-AF performance feedback).
-    fn maybe_fetch(&mut self, m: u32, dur: u64) {
-        let mi = m as usize;
-        if self.masters[mi].fetching || self.masters[mi].global_done {
+    fn master_commit(&mut self, d: usize, from: u32, step: u64, size: u64, seq: u64, dur: u64) {
+        let jp = from / self.fanouts[d];
+        match self.personas[d][jp as usize].ledger.commit(step, size, seq) {
+            InnerCommit::Granted(abs) => {
+                self.send_master_reply(
+                    d,
+                    jp,
+                    from,
+                    Task::MasterChunk { level: d as u32, to: from, a: abs },
+                    dur,
+                );
+                self.maybe_prefetch(d, jp, dur);
+            }
+            InnerCommit::Stale => self.serve_master_get(d, jp, from, dur),
+            InnerCommit::Drained if self.personas[d][jp as usize].global_done => {
+                self.send_master_reply(
+                    d,
+                    jp,
+                    from,
+                    Task::MasterDone { level: d as u32, to: from },
+                    dur,
+                );
+            }
+            InnerCommit::Drained => {
+                self.personas[d][jp as usize].parked.push_back(from);
+                self.maybe_fetch(d, jp, dur);
+            }
+        }
+    }
+
+    /// Resolve persona `(e, j)`'s prefetch watermark: fixed counts pass
+    /// through; `Auto` applies the shared [`auto_watermark`] policy to the
+    /// persona's EWMA round trip and subtree throughput.
+    fn resolve_watermark(&self, e: usize, j: u32) -> Option<u64> {
+        match self.cfg.hier.watermark {
+            WatermarkMode::Off => None,
+            WatermarkMode::Fixed(w) => Some(w),
+            WatermarkMode::Auto => {
+                let pr = &self.personas[e][j as usize];
+                Some(auto_watermark(pr.rtt.value(), pr.stats.mu()))
+            }
+        }
+    }
+
+    /// Prefetch: once persona `(e, j)`'s current chunk drains to the
+    /// watermark (and its staged queue has room), request the next chunk
+    /// while the children keep consuming the tail — the parent round trip
+    /// plus the chunk calculation are hidden instead of stalling the whole
+    /// subtree.
+    fn maybe_prefetch(&mut self, e: usize, j: u32, dur: u64) {
+        let watermark = self.resolve_watermark(e, j);
+        if self.personas[e][j as usize].ledger.wants_prefetch(watermark) {
+            self.maybe_fetch(e, j, dur);
+        }
+    }
+
+    /// Trigger the parent fetch for persona `(e, j)` unless one is already
+    /// in flight (or there is no parent left to ask). Also finalizes the
+    /// consumed chunk's throughput report (the upward-AF performance
+    /// feedback) and stamps the fetch time for the round-trip EWMA.
+    fn maybe_fetch(&mut self, e: usize, j: u32, dur: u64) {
+        let ji = j as usize;
+        if self.personas[e][ji].fetching || self.personas[e][ji].global_done {
             return;
         }
-        self.masters[mi].fetching = true;
-        if self.masters[mi].installed_iters > 0 {
-            let iters = self.masters[mi].installed_iters;
-            let elapsed =
-                secs((self.now + dur).saturating_sub(self.masters[mi].installed_ns)).max(1e-12);
-            self.masters[mi].node_stats.record(iters, elapsed);
-            self.masters[mi].outer_report = Some(PerfReport { iters, elapsed });
-            self.masters[mi].installed_iters = 0;
+        self.personas[e][ji].fetching = true;
+        if self.personas[e][ji].installed_iters > 0 {
+            let iters = self.personas[e][ji].installed_iters;
+            let elapsed = secs((self.now + dur).saturating_sub(self.personas[e][ji].installed_ns))
+                .max(1e-12);
+            self.personas[e][ji].stats.record(iters, elapsed);
+            self.personas[e][ji].pending_report = Some(PerfReport { iters, elapsed });
+            self.personas[e][ji].installed_iters = 0;
         }
-        let report = self.masters[mi].outer_report.take();
-        let mrank = self.masters[mi].rank;
-        let coord = self.masters[0].rank;
-        self.count_msg(mrank, coord);
-        let at = self.now + dur + self.lat_ns(mrank, coord);
-        self.heap.push(at, Ev::Arrive { m: 0, task: Task::OuterGet { from: m, report } });
+        self.personas[e][ji].fetch_sent_ns = self.now + dur;
+        let report = self.personas[e][ji].pending_report.take();
+        let pd = e - 1;
+        let child_rank = self.personas[e][ji].rank;
+        let parent_rank = self.host_rank(pd, j / self.fanouts[pd]);
+        self.count_msg(child_rank, parent_rank, pd);
+        let at = self.now + dur + self.lat_ns(child_rank, parent_rank);
+        self.heap.push(
+            at,
+            Ev::Arrive {
+                s: self.server_of_rank(parent_rank),
+                task: Task::MasterGet { level: pd as u32, from: j, report },
+            },
+        );
     }
 
-    fn install_chunk(&mut self, m: u32, a: Assignment) {
-        let mi = m as usize;
-        self.masters[mi].ledger.install(a);
-        self.masters[mi].fetching = false;
+    /// Install a chunk fetched over protocol `e-1` into persona `(e, j)`'s
+    /// ledger (staged behind the current chunk when one is live).
+    fn install_chunk(&mut self, e: usize, j: u32, a: Assignment) {
+        let pr = &mut self.personas[e][j as usize];
+        if pr.fetch_sent_ns > 0 {
+            pr.rtt.observe(secs(self.now.saturating_sub(pr.fetch_sent_ns)));
+        }
+        pr.ledger.install(a);
+        pr.fetching = false;
         // Under prefetch, installs accumulate between throughput
-        // finalizations (the staged chunk arrives mid-consumption).
-        if self.masters[mi].installed_iters == 0 {
-            self.masters[mi].installed_ns = self.now;
+        // finalizations (staged chunks arrive mid-consumption).
+        if pr.installed_iters == 0 {
+            pr.installed_ns = self.now;
         }
-        self.masters[mi].installed_iters += a.size;
-        self.requeue_parked(m);
+        pr.installed_iters += a.size;
+        self.requeue_parked(e, j);
     }
 
-    /// Re-enqueue parked local requests (each pays its service cost again)
-    /// and wake the master's own personality if it was parked.
-    fn requeue_parked(&mut self, m: u32) {
-        let mi = m as usize;
-        while let Some(w) = self.masters[mi].parked.pop_front() {
-            self.masters[mi].queue.push_back(Task::InnerGet { w, report: None });
+    /// Re-enqueue parked child requests (each pays its service cost again)
+    /// and, at the leaf level, wake the host's own personality if parked.
+    fn requeue_parked(&mut self, e: usize, j: u32) {
+        let s = self.server_of_rank(self.personas[e][j as usize].rank);
+        while let Some(c) = self.personas[e][j as usize].parked.pop_front() {
+            let task = if e == self.k - 1 {
+                Task::LeafGet { w: c, report: None }
+            } else {
+                Task::MasterGet { level: e as u32, from: c, report: None }
+            };
+            self.servers[s as usize].queue.push_back(task);
         }
-        if self.masters[mi].own_parked {
-            self.masters[mi].own_parked = false;
-            self.masters[mi].own = Own::NeedWork;
+        if e == self.k - 1 && self.servers[s as usize].own_parked {
+            self.servers[s as usize].own_parked = false;
+            self.servers[s as usize].own = Own::NeedWork;
         }
     }
 
-    /// Outer chunk size, computed on master `m` (closed form of the outer
-    /// technique at the reserved step, or AF's Eq. 11 over node throughput).
-    fn outer_calc(&self, m: u32, ticket: StepTicket, af: Option<AfInfo>) -> u64 {
-        if self.cfg.technique == TechniqueKind::Af {
+    /// Protocol-`d` chunk size, computed on child master `to` (closed form
+    /// of the level technique bound to the parent's current chunk, or AF's
+    /// Eq. 11 over subtree throughput).
+    fn master_calc(
+        &self,
+        d: usize,
+        to: u32,
+        step: u64,
+        remaining: u64,
+        seq: u64,
+        af: Option<AfInfo>,
+    ) -> u64 {
+        if self.techs[d] == TechniqueKind::Af {
             af_requester_chunk(
-                &self.masters[m as usize].node_stats,
+                &self.personas[d + 1][to as usize].stats,
                 af.map(|i| AfGlobals { d: i.d, e: i.e }),
-                ticket.remaining,
-                self.nodes,
+                remaining,
+                self.fanouts[d],
                 self.min_chunk(),
             )
         } else {
-            self.outer_tech
-                .as_ref()
-                .expect("non-AF outer technique has a closed form")
-                .closed_chunk(ticket.step)
+            // Normal case: the parent chunk this step belongs to is still
+            // installed; evaluate its bound closed form. If it was replaced
+            // while this Step was in flight, the commit will NACK and
+            // re-request, so the size is moot.
+            let jp = to / self.fanouts[d];
+            self.personas[d][jp as usize]
+                .ledger
+                .closed_inner_size(step, seq)
+                .unwrap_or_else(|| self.min_chunk())
         }
     }
 
@@ -647,7 +802,7 @@ impl<'a> HierSim<'a> {
         self.workers[w as usize].wait_ns += self.now.saturating_sub(sent);
         match reply {
             WReply::Step { step, remaining, seq, af } => {
-                // Distributed inner calculation on the worker's own clock —
+                // Distributed leaf calculation on the worker's own clock —
                 // the injected delay is paid here, in parallel.
                 let dur = ns(
                     (self.cfg.delay.calculation_at(w, self.now) + self.cfg.cluster.calc_time)
@@ -670,142 +825,141 @@ impl<'a> HierSim<'a> {
         }
     }
 
-    /// Inner sub-chunk size, calculated worker-side (closed form of the
-    /// inner technique bound to the current node-chunk, or AF's Eq. 11).
+    /// Leaf sub-chunk size, calculated worker-side (closed form of the leaf
+    /// technique bound to the current chunk, or AF's Eq. 11).
     fn worker_calc(&self, w: u32, step: u64, remaining: u64, seq: u64, af: Option<AfInfo>) -> u64 {
-        if self.inner_kind == TechniqueKind::Af {
+        let k1 = self.k - 1;
+        if self.techs[k1] == TechniqueKind::Af {
             af_requester_chunk(
                 &self.workers[w as usize].stats,
                 af.map(|i| AfGlobals { d: i.d, e: i.e }),
                 remaining,
-                self.rpn,
+                self.fanouts[k1],
                 self.min_chunk(),
             )
         } else {
-            // Normal case: the node-chunk this step belongs to is still
-            // installed; evaluate its bound closed form. If the chunk was
-            // replaced while this Step was in flight, the commit will NACK
-            // and re-request, so the size is moot.
-            let m = self.node_of(w);
-            self.masters[m as usize]
+            let s = self.server_of_rank(w);
+            self.personas[k1][s as usize]
                 .ledger
                 .closed_inner_size(step, seq)
                 .unwrap_or_else(|| self.min_chunk())
         }
     }
 
-    // -- master's own worker personality -----------------------------------
+    // -- the hosting rank's own worker personality --------------------------
 
-    fn own_next_action(&mut self, m: u32) {
-        let mi = m as usize;
-        let mrank = self.masters[mi].rank;
+    fn own_next_action(&mut self, s: u32) {
+        let si = s as usize;
+        let k1 = self.k - 1;
+        let mrank = self.servers[si].rank;
         let sp = self.speed(mrank);
         let c = &self.cfg.cluster;
         let cluster_break = c.break_after.max(1) as u64;
-        match std::mem::replace(&mut self.masters[mi].own, Own::Finished) {
+        match std::mem::replace(&mut self.servers[si].own, Own::Finished) {
             Own::NeedWork => {
                 let dur = ns(c.service_time / sp);
-                if let Some((step, remaining, seq)) = self.local_reserve(m) {
-                    self.masters[mi].own = Own::Calc { step, remaining, seq };
-                } else if self.masters[mi].global_done {
-                    self.finish_own(m);
+                if let Some((step, remaining, seq)) = self.personas[k1][si].ledger.reserve() {
+                    self.servers[si].own = Own::Calc { step, remaining, seq };
+                } else if self.personas[k1][si].global_done {
+                    self.finish_own(s);
                 } else {
-                    self.masters[mi].own = Own::Parked;
-                    self.masters[mi].own_parked = true;
-                    self.maybe_fetch(m, dur);
+                    self.servers[si].own = Own::Parked;
+                    self.servers[si].own_parked = true;
+                    self.maybe_fetch(k1, s, dur);
                 }
-                self.finish_server_action(m, dur);
+                self.finish_server_action(s, dur);
             }
             Own::Calc { step, remaining, seq } => {
                 let dur = ns((self.cfg.delay.calculation_at(mrank, self.now) + c.calc_time) / sp);
-                let af = self.inner_af_info(m);
+                let af = self.persona_af_info(k1, s);
                 let size = self.worker_calc(mrank, step, remaining, seq, af);
-                self.masters[mi].own = Own::Commit { step, size, seq };
-                self.finish_server_action(m, dur);
+                self.servers[si].own = Own::Commit { step, size, seq };
+                self.finish_server_action(s, dur);
             }
             Own::Commit { step, size, seq } => {
                 let dur = ns((c.service_time + self.cfg.delay.assignment) / sp);
-                match self.masters[mi].ledger.commit(step, size, seq) {
+                match self.personas[k1][si].ledger.commit(step, size, seq) {
                     InnerCommit::Granted(abs) => {
                         self.grant(mrank, abs);
-                        self.masters[mi].own =
+                        self.servers[si].own =
                             Own::Exec { cursor: abs.start, end: abs.end(), first: abs.start };
-                        self.maybe_prefetch(m, dur);
+                        self.maybe_prefetch(k1, s, dur);
                     }
-                    // Stale seq: a new node-chunk arrived between this
+                    // Stale seq: a new chunk arrived between this
                     // personality's Calc and Commit — re-reserve from it.
-                    InnerCommit::Stale => self.masters[mi].own = Own::NeedWork,
-                    InnerCommit::Drained if self.masters[mi].global_done => {
-                        self.finish_own(m);
+                    InnerCommit::Stale => self.servers[si].own = Own::NeedWork,
+                    InnerCommit::Drained if self.personas[k1][si].global_done => {
+                        self.finish_own(s);
                     }
                     InnerCommit::Drained => {
-                        self.masters[mi].own = Own::Parked;
-                        self.masters[mi].own_parked = true;
-                        self.maybe_fetch(m, dur);
+                        self.servers[si].own = Own::Parked;
+                        self.servers[si].own_parked = true;
+                        self.maybe_fetch(k1, s, dur);
                     }
                 }
-                self.finish_server_action(m, dur);
+                self.finish_server_action(s, dur);
             }
             Own::Exec { cursor, end, first } => {
                 let seg = cluster_break.min(end - cursor);
                 let dur = ns(self.cfg.cost.range_cost(cursor, seg) / sp);
                 let new_cursor = cursor + seg;
                 if new_cursor < end {
-                    self.masters[mi].own = Own::Exec { cursor: new_cursor, end, first };
+                    self.servers[si].own = Own::Exec { cursor: new_cursor, end, first };
                 } else {
                     let iters = end - first;
                     let elapsed = self.cfg.cost.range_cost(first, iters) / sp;
                     self.workers[mrank as usize].stats.record(iters, elapsed);
-                    if let Some(af) = self.masters[mi].inner_af.as_mut() {
+                    if let Some(af) = self.personas[k1][si].af_calc.as_mut() {
                         af.record(0, iters, elapsed);
                     }
-                    self.masters[mi].own = Own::NeedWork;
+                    self.servers[si].own = Own::NeedWork;
                 }
-                self.finish_server_action(m, dur);
+                self.finish_server_action(s, dur);
             }
             Own::Parked => {
-                self.masters[mi].own = Own::Parked;
-                self.masters[mi].busy = false;
+                self.servers[si].own = Own::Parked;
+                self.servers[si].busy = false;
             }
             Own::Finished => {
-                self.masters[mi].own = Own::Finished;
-                self.masters[mi].busy = false;
+                self.servers[si].own = Own::Finished;
+                self.servers[si].busy = false;
             }
         }
     }
 
-    fn finish_own(&mut self, m: u32) {
-        let mi = m as usize;
-        self.masters[mi].own = Own::Finished;
-        let mrank = self.masters[mi].rank as usize;
+    fn finish_own(&mut self, s: u32) {
+        let si = s as usize;
+        self.servers[si].own = Own::Finished;
+        let mrank = self.servers[si].rank as usize;
         self.workers[mrank].finish_ns = self.workers[mrank].finish_ns.max(self.now);
     }
 
-    fn finish_server_action(&mut self, m: u32, dur: u64) {
-        let master = &mut self.masters[m as usize];
-        master.busy = true;
-        master.cpu_busy_until_ns = self.now + dur;
-        self.heap.push(self.now + dur, Ev::ServerFree { m });
+    fn finish_server_action(&mut self, s: u32, dur: u64) {
+        let server = &mut self.servers[s as usize];
+        server.busy = true;
+        server.cpu_busy_until_ns = self.now + dur;
+        self.heap.push(self.now + dur, Ev::ServerFree { s });
     }
 
     // -- results -----------------------------------------------------------
 
     fn into_result(self) -> DesResult {
         let mut finish: Vec<f64> = self.workers.iter().map(|w| secs(w.finish_ns)).collect();
-        for master in &self.masters {
-            let r = master.rank as usize;
-            finish[r] = finish[r].max(secs(master.cpu_busy_until_ns));
+        for server in &self.servers {
+            let r = server.rank as usize;
+            finish[r] = finish[r].max(secs(server.cpu_busy_until_ns));
         }
         let chunks = self.assignments.len() as u64;
         let wait: f64 = self.workers.iter().map(|w| secs(w.wait_ns)).sum();
         DesResult {
             stats: LoopStats::from_finish_times(&finish, chunks, wait, self.messages),
             finish,
-            rank0_service_busy: secs(self.masters[0].service_ns),
+            rank0_service_busy: secs(self.servers[0].service_ns),
             assignments: self.assignments,
             rma_ops: 0,
             intra_node_messages: self.intra_msgs,
             inter_node_messages: self.inter_msgs,
+            level_messages: self.level_msgs,
         }
     }
 }
@@ -855,6 +1009,12 @@ mod tests {
                 r.intra_node_messages + r.inter_node_messages,
                 "{kind}: split must reconcile with the flat counter"
             );
+            assert_eq!(
+                r.stats.messages,
+                r.level_messages.iter().sum::<u64>(),
+                "{kind}: per-level split must reconcile too"
+            );
+            assert_eq!(r.level_messages.len(), 2, "{kind}: two protocol levels");
             assert!(r.inter_node_messages > 0, "{kind}: outer protocol crossed nodes");
         }
     }
@@ -871,6 +1031,33 @@ mod tests {
         assert_eq!(a.assignments, b.assignments);
         assert_eq!(a.t_par(), b.t_par());
         assert_eq!(a.stats.messages, a.intra_node_messages + a.inter_node_messages);
+    }
+
+    /// A deeper staged queue keeps exact coverage and replays.
+    #[test]
+    fn deep_prefetch_queue_covers_and_replays() {
+        let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
+        c.hier = HierParams::with_inner(TechniqueKind::Ss)
+            .with_watermark(512)
+            .with_prefetch_depth(3);
+        let a = simulate(&c).unwrap();
+        verify_coverage(&sorted(&a), 6_000).unwrap();
+        let b = simulate(&c).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.t_par(), b.t_par());
+    }
+
+    /// The adaptive watermark keeps exact coverage and replays (its inputs
+    /// are virtual-time round trips, deterministic on the DES).
+    #[test]
+    fn auto_watermark_covers_and_replays() {
+        let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
+        c.hier = HierParams::with_inner(TechniqueKind::Ss).with_auto_watermark();
+        let a = simulate(&c).unwrap();
+        verify_coverage(&sorted(&a), 6_000).unwrap();
+        let b = simulate(&c).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.t_par(), b.t_par());
     }
 
     #[test]
@@ -938,6 +1125,38 @@ mod tests {
         let c = cfg(5, 2, 4, TechniqueKind::Gss);
         let r = simulate(&c).unwrap();
         verify_coverage(&sorted(&r), 5).unwrap();
+    }
+
+    /// Depth 1 degenerates to the flat root ↔ ranks protocol and still
+    /// covers the loop exactly.
+    #[test]
+    fn depth1_flat_tree_covers() {
+        let mut c = cfg(2_000, 2, 4, TechniqueKind::Gss);
+        c.hier = HierParams::default().with_levels(1);
+        let r = simulate(&c).unwrap();
+        verify_coverage(&sorted(&r), 2_000).unwrap();
+        assert_eq!(r.level_messages.len(), 1, "one protocol level");
+        assert_eq!(r.stats.messages, r.level_messages[0]);
+    }
+
+    /// Depth 3 (2 racks × 2 nodes × 4 ranks) covers the loop and splits
+    /// messages across three protocol levels.
+    #[test]
+    fn depth3_tree_covers_and_counts_levels() {
+        let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
+        c.cluster.racks = 2;
+        c.hier = HierParams::with_inner(TechniqueKind::Ss)
+            .with_levels(3)
+            .with_fanouts(&[2, 2, 4]);
+        let r = simulate(&c).unwrap();
+        verify_coverage(&sorted(&r), 6_000).unwrap();
+        assert_eq!(r.level_messages.len(), 3);
+        assert!(r.level_messages.iter().all(|&m| m > 0), "{:?}", r.level_messages);
+        assert_eq!(r.stats.messages, r.level_messages.iter().sum::<u64>());
+        // The leaf protocol dominates: finer chunks, cheaper fabric.
+        assert!(r.level_messages[2] > r.level_messages[0]);
+        let b = simulate(&c).unwrap();
+        assert_eq!(r.assignments, b.assignments, "depth-3 replay");
     }
 
     #[test]

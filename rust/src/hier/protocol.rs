@@ -1,11 +1,12 @@
-//! The two-level scheduling protocol's shared state machine: the per-node
-//! **chunk ledger** every node master drives, regardless of whether the
-//! master is a DES service personality ([`crate::hier`]) or a real thread
-//! ([`crate::coordinator::hier`]). Keeping the reserve/commit/stale-`seq`
-//! semantics in one place means the event-by-event simulation and the
-//! wall-clock engine validate literally the same protocol definition.
+//! The hierarchical scheduling protocol's shared state machine: the
+//! **per-level chunk ledger** every master of the scheduling tree drives —
+//! at any depth, on either substrate (DES service personality in
+//! [`crate::hier`] or real thread in [`crate::coordinator::hier`]). Keeping
+//! the reserve/commit/stale-`seq` semantics in one place means the
+//! event-by-event simulation and the wall-clock engine validate literally
+//! the same protocol definition, and every tree level nests the same one.
 //!
-//! A [`NodeLedger`] owns the master's *current* node-chunk as a local
+//! A [`NodeLedger`] owns the master's *current* level-chunk as a local
 //! [`WorkQueue`] over `[0, len)` plus the iteration offset that maps local
 //! grants back to absolute loop ranges. Sub-chunks follow the DCA two-phase
 //! protocol one level down:
@@ -23,17 +24,63 @@
 //! phase-1 replies and echoed on commits; that `seq` is what makes the
 //! stale-chunk race detectable on both substrates.
 //!
-//! **Outer-level prefetch** (the ROADMAP follow-on): the ledger can hold one
-//! *staged* node-chunk in addition to the current one. A master configured
-//! with a prefetch watermark requests the next node-chunk while the current
-//! one still has `≤ watermark` unassigned iterations; the reply is staged
-//! via [`NodeLedger::install`] and promoted the moment the current chunk
-//! drains — the inter-node round trip plus the outer chunk calculation are
-//! hidden behind the tail of the current chunk instead of stalling every
-//! local rank.
+//! **Parent-level prefetch** (the ROADMAP follow-on): the ledger holds a
+//! FIFO queue of *staged* chunks behind the current one, up to a
+//! configurable capacity ([`NodeLedger::with_staged_capacity`]; 1 = the
+//! single-slot stage of the original implementation). A master configured
+//! with a prefetch watermark requests the next chunk while the current one
+//! still has `≤ watermark` unassigned iterations; replies are staged via
+//! [`NodeLedger::install`] and promoted the moment the current chunk drains
+//! — the parent round trip plus the chunk calculation are hidden behind the
+//! tail of the current chunk instead of stalling the whole subtree, and
+//! deeper queues keep hiding them across multi-chunk stalls on very
+//! high-latency fabrics.
+
+use std::collections::VecDeque;
 
 use crate::sched::{Assignment, StepTicket, WorkQueue};
 use crate::techniques::{LoopParams, Technique, TechniqueKind};
+
+/// EWMA weight of the newest round-trip sample in the adaptive-watermark
+/// estimate (newer trips dominate, but one outlier doesn't).
+pub const RTT_EWMA_ALPHA: f64 = 0.5;
+
+/// EWMA of a master's observed parent-fetch round trips, seconds. Part of
+/// the shared protocol definition — like [`NodeLedger::wants_prefetch`],
+/// single-sourced here so the DES and the threaded engine cannot diverge
+/// on the adaptive-watermark policy.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RttEwma {
+    ewma_s: f64,
+}
+
+impl RttEwma {
+    /// Fold in one observed round trip (seconds).
+    pub fn observe(&mut self, rtt_s: f64) {
+        self.ewma_s = if self.ewma_s > 0.0 {
+            RTT_EWMA_ALPHA * rtt_s + (1.0 - RTT_EWMA_ALPHA) * self.ewma_s
+        } else {
+            rtt_s
+        };
+    }
+
+    /// The current estimate (`None` until the first sample).
+    pub fn value(&self) -> Option<f64> {
+        (self.ewma_s > 0.0).then_some(self.ewma_s)
+    }
+}
+
+/// The [`crate::config::WatermarkMode::Auto`] watermark: the iteration
+/// count consumed during one parent round trip, `⌈rtt / µ⌉`, where `µ` is
+/// the subtree's measured per-iteration drain time — prefetching at this
+/// level hides the fetch exactly. Falls back to 0 (fetch on exhaustion)
+/// until both quantities are measured.
+pub fn auto_watermark(rtt: Option<f64>, mu: Option<f64>) -> u64 {
+    match (rtt, mu) {
+        (Some(rtt), Some(mu)) if mu > 0.0 => (rtt / mu).ceil() as u64,
+        _ => 0,
+    }
+}
 
 /// `params` with `n`/`p` overridden (keeps the technique parameterization —
 /// FSC/TAP constants, batch counts, seeds — from the experiment config).
@@ -66,35 +113,39 @@ pub enum InnerCommit {
     Drained,
 }
 
-/// The node master's current (and optionally staged) node-chunk.
+/// The master's current (and optionally staged) level-chunk.
 #[derive(Debug)]
 struct Chunk {
     /// Local queue over `[0, len)`; granted ranges are offset to absolute.
     q: WorkQueue,
     offset: u64,
     len: u64,
-    /// Inner technique bound to this node-chunk's size (`None` for AF,
-    /// which has no closed form).
+    /// Inner technique bound to this chunk's size (`None` for AF, which has
+    /// no closed form).
     tech: Option<Technique>,
 }
 
-/// Per-node chunk ledger — see the module docs for the protocol.
+/// Per-level chunk ledger — see the module docs for the protocol.
 #[derive(Debug)]
 pub struct NodeLedger {
     inner_kind: TechniqueKind,
-    /// Template the inner technique is re-bound from per node-chunk.
+    /// Template the inner technique is re-bound from per chunk.
     base: LoopParams,
     rpn: u32,
     /// Sequence number of the *current* chunk (0 = nothing installed yet).
     seq: u64,
     current: Option<Chunk>,
-    /// Prefetched next node-chunk, promoted when `current` drains.
-    staged: Option<Assignment>,
+    /// Prefetched chunks queued behind the current one (FIFO), promoted one
+    /// at a time as `current` drains.
+    staged: VecDeque<Assignment>,
+    /// Capacity of the staged queue (≥ 1).
+    staged_cap: usize,
 }
 
 impl NodeLedger {
-    /// A ledger for a node of `rpn` local ranks re-subdividing node-chunks
-    /// with `inner_kind` (bound per chunk from the `base` parameterization).
+    /// A ledger subdividing chunks among `rpn` children with `inner_kind`
+    /// (bound per chunk from the `base` parameterization), with a
+    /// single-slot staged buffer (see [`Self::with_staged_capacity`]).
     pub fn new(inner_kind: TechniqueKind, base: &LoopParams, rpn: u32) -> Self {
         NodeLedger {
             inner_kind,
@@ -102,8 +153,16 @@ impl NodeLedger {
             rpn: rpn.max(1),
             seq: 0,
             current: None,
-            staged: None,
+            staged: VecDeque::new(),
+            staged_cap: 1,
         }
+    }
+
+    /// Set the staged-queue capacity: how many prefetched chunks may wait
+    /// behind the current one (clamped to ≥ 1).
+    pub fn with_staged_capacity(mut self, cap: usize) -> Self {
+        self.staged_cap = cap.max(1);
+        self
     }
 
     fn current_live(&self) -> bool {
@@ -112,7 +171,7 @@ impl NodeLedger {
 
     /// Does the ledger hold any unassigned iterations (current or staged)?
     pub fn has_work(&self) -> bool {
-        self.current_live() || self.staged.is_some()
+        self.current_live() || !self.staged.is_empty()
     }
 
     /// Unassigned iterations left in the *current* chunk (the prefetch
@@ -121,26 +180,31 @@ impl NodeLedger {
         self.current.as_ref().map_or(0, |c| c.q.remaining())
     }
 
-    /// Is a node-chunk already staged behind the current one?
+    /// Is at least one chunk staged behind the current one?
     pub fn staged(&self) -> bool {
-        self.staged.is_some()
+        !self.staged.is_empty()
+    }
+
+    /// Chunks currently staged behind the current one.
+    pub fn staged_len(&self) -> usize {
+        self.staged.len()
     }
 
     /// Should the master holding this ledger issue a prefetch? True once
-    /// the current chunk has drained to the watermark and nothing is staged
-    /// yet; always false when prefetch is disabled (`None`). Single-sourced
-    /// here so the DES and the threaded engine cannot diverge on the
-    /// prefetch policy.
+    /// the current chunk has drained to the watermark and the staged queue
+    /// has a free slot; always false when prefetch is disabled (`None`).
+    /// Single-sourced here so the DES and the threaded engine cannot
+    /// diverge on the prefetch policy.
     pub fn wants_prefetch(&self, watermark: Option<u64>) -> bool {
         match watermark {
-            Some(w) => !self.staged() && self.remaining() <= w,
+            Some(w) => self.staged.len() < self.staged_cap && self.remaining() <= w,
             None => false,
         }
     }
 
-    /// Length of the current node-chunk (0 before the first install) — the
-    /// quantity phase-1 replies carry so remote workers can bind the inner
-    /// technique themselves.
+    /// Length of the current chunk (0 before the first install) — the
+    /// quantity phase-1 replies carry so remote requesters can bind the
+    /// inner technique themselves.
     pub fn current_len(&self) -> u64 {
         self.current.as_ref().map_or(0, |c| c.len)
     }
@@ -150,14 +214,14 @@ impl NodeLedger {
         self.seq
     }
 
-    /// Accept a node-chunk from the outer level: installed immediately when
-    /// the current chunk is drained (or absent), staged otherwise. At most
-    /// one chunk is ever staged — masters keep a single outer request in
-    /// flight.
+    /// Accept a chunk from the parent level: installed immediately when the
+    /// ledger is empty, appended to the staged FIFO otherwise. Masters keep
+    /// a single parent request in flight, so at most `staged_cap` chunks
+    /// ever wait here.
     pub fn install(&mut self, a: Assignment) {
-        if self.current_live() {
-            debug_assert!(self.staged.is_none(), "at most one staged node-chunk");
-            self.staged = Some(a);
+        if self.current_live() || !self.staged.is_empty() {
+            debug_assert!(self.staged.len() < self.staged_cap, "staged queue overflow");
+            self.staged.push_back(a);
         } else {
             self.install_now(a);
         }
@@ -176,13 +240,13 @@ impl NodeLedger {
         });
     }
 
-    /// Phase 1: reserve the next local step, promoting the staged chunk
-    /// first if the current one has drained. `None` means the ledger is
-    /// empty — the caller parks the requester and (if none is in flight)
-    /// triggers an outer fetch.
+    /// Phase 1: reserve the next local step, promoting the next staged
+    /// chunk first if the current one has drained. `None` means the ledger
+    /// is empty — the caller parks the requester and (if none is in flight)
+    /// triggers a parent fetch.
     pub fn reserve(&mut self) -> Option<(u64, u64, u64)> {
         if !self.current_live() {
-            let staged = self.staged.take()?;
+            let staged = self.staged.pop_front()?;
             self.install_now(staged);
         }
         let seq = self.seq;
@@ -318,6 +382,57 @@ mod tests {
     }
 
     #[test]
+    fn deep_staged_queue_promotes_in_fifo_order() {
+        let mut l = ledger(TechniqueKind::Ss, 2).with_staged_capacity(3);
+        l.install(chunk(0, 1));
+        l.install(chunk(1, 2));
+        l.install(chunk(3, 4));
+        l.install(chunk(7, 1));
+        assert_eq!(l.staged_len(), 3);
+        assert!(!l.wants_prefetch(Some(1_000)), "full queue must not prefetch");
+        let mut starts = Vec::new();
+        while let Some((s, _, q)) = l.reserve() {
+            let InnerCommit::Granted(a) = l.commit(s, 1, q) else { panic!("grant") };
+            starts.push(a.start);
+        }
+        assert_eq!(starts, vec![0, 1, 2, 3, 4, 5, 6, 7], "FIFO promotion, no gaps");
+        assert!(!l.has_work());
+    }
+
+    #[test]
+    fn wants_prefetch_honors_queue_capacity() {
+        let mut l = ledger(TechniqueKind::Ss, 2).with_staged_capacity(2);
+        l.install(chunk(0, 8));
+        assert!(l.wants_prefetch(Some(8)));
+        l.install(chunk(8, 8));
+        assert!(l.wants_prefetch(Some(8)), "one slot still free");
+        l.install(chunk(16, 8));
+        assert!(!l.wants_prefetch(Some(8)), "queue full");
+        assert!(!l.wants_prefetch(None), "disabled prefetch never fires");
+        // Draining the current chunk frees nothing (promotion refills from
+        // the queue), but consuming a staged chunk does.
+        while let Some((s, _, q)) = l.reserve() {
+            if matches!(l.commit(s, 8, q), InnerCommit::Drained) {
+                break;
+            }
+            if l.staged_len() < 2 {
+                break;
+            }
+        }
+        assert!(l.wants_prefetch(Some(1_000)));
+    }
+
+    #[test]
+    fn single_slot_capacity_matches_the_original_stage() {
+        let mut l = ledger(TechniqueKind::Ss, 2); // default capacity 1
+        l.install(chunk(0, 2));
+        assert!(l.wants_prefetch(Some(2)));
+        l.install(chunk(2, 2));
+        assert!(!l.wants_prefetch(Some(1_000)), "single slot occupied");
+        assert_eq!(l.staged_len(), 1);
+    }
+
+    #[test]
     fn af_commit_recapped_against_fresh_remaining() {
         let mut l = ledger(TechniqueKind::Af, 4);
         l.install(chunk(0, 100));
@@ -334,6 +449,30 @@ mod tests {
         let (step, _, seq) = l.reserve().unwrap();
         assert!(l.closed_inner_size(step, seq).is_some());
         assert_eq!(l.closed_inner_size(step, seq + 1), None);
+    }
+
+    #[test]
+    fn auto_watermark_needs_both_measurements() {
+        assert_eq!(auto_watermark(None, None), 0);
+        assert_eq!(auto_watermark(Some(1e-3), None), 0);
+        assert_eq!(auto_watermark(None, Some(1e-5)), 0);
+        // One 1 ms round trip at 10 µs/iteration drain ⇒ 100 iterations.
+        assert_eq!(auto_watermark(Some(1e-3), Some(1e-5)), 100);
+        // Ceiling, and a degenerate µ never divides by zero.
+        assert_eq!(auto_watermark(Some(1.05e-3), Some(1e-4)), 11);
+        assert_eq!(auto_watermark(Some(1e-3), Some(0.0)), 0);
+    }
+
+    #[test]
+    fn rtt_ewma_tracks_with_memory() {
+        let mut e = RttEwma::default();
+        assert_eq!(e.value(), None, "no sample yet");
+        e.observe(1.0);
+        assert_eq!(e.value(), Some(1.0), "first sample is taken verbatim");
+        e.observe(0.0);
+        assert_eq!(e.value(), Some(0.5), "α = 0.5 halves toward new samples");
+        e.observe(0.5);
+        assert_eq!(e.value(), Some(0.5));
     }
 
     #[test]

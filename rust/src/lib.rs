@@ -48,7 +48,10 @@ pub mod workload;
 
 /// Commonly used items, re-exported for examples and downstream users.
 pub mod prelude {
-    pub use crate::config::{DelaySite, ExecutionModel, ExperimentConfig, HierParams};
+    pub use crate::config::{
+        DelaySite, ExecutionModel, ExperimentConfig, HierParams, LevelPlan, LevelSpec,
+        WatermarkMode,
+    };
     pub use crate::metrics::LoopStats;
     pub use crate::sched::{Assignment, WorkQueue};
     pub use crate::techniques::{LoopParams, Technique, TechniqueKind};

@@ -9,7 +9,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use dca_dls::config::{ClusterConfig, DelaySite, ExecutionModel, HierParams};
+use dca_dls::config::{ClusterConfig, DelaySite, ExecutionModel, HierParams, WatermarkMode};
 use dca_dls::coordinator::{self, EngineConfig};
 use dca_dls::des::{simulate, DesConfig};
 use dca_dls::report::figures::{
@@ -34,15 +34,33 @@ COMMANDS
   table2             chunk sequences, N=1000 P=4 (Table 2)   [--n --p]
   fig1               chunk-size series per technique (Fig 1) [--n --p]
   table3             loop characteristics (Table 3)          [--n --ct --cloud]
-  fig4               PSIA factorial experiment (Fig 4)       [--quick --reps --delay-site --hier --inner T --watermark W --json F]
-  fig5               Mandelbrot factorial experiment (Fig 5) [--quick --reps --delay-site --hier --inner T --watermark W --json F]
+  fig4               PSIA factorial experiment (Fig 4)       [--quick --reps --delay-site --hier --inner T --watermark W|auto --json F]
+  fig5               Mandelbrot factorial experiment (Fig 5) [--quick --reps --delay-site --hier --inner T --watermark W|auto --json F]
   simulate           one DES cell  [--app --tech --model --inner --delay-us --ranks --n]
-  hier               two-level HIER-DCA vs the flat models   [--app --tech --inner --watermark W --nodes --rpn --n --delay-us --delay-site --json F]
+  hier               N-level HIER-DCA vs the flat models     [--app --tech --inner --levels K --fanout a,b,…
+                       --techniques t0,t1,… --watermark W|auto --prefetch-depth Q --nodes --rpn
+                       --racks R --rack-latency-us X --n --delay-us --delay-site --json F]
   run                real threaded engine [--app --tech --model --workers --n --pjrt --delay-us
-                       --hier --inner T --nodes K --watermark W (0 = fetch on exhaustion) --json F]
+                       --hier --inner T --nodes K --levels K --fanout a,b,… --techniques t0,t1,…
+                       --watermark W|auto (0 = fetch on exhaustion) --prefetch-depth Q --json F]
   sweep-breakafter   A3 ablation: master breakAfter sweep [--app --tech]
-  select             SimAS-style model auto-selection (§7, 4 models) [--app --tech --inner --watermark W --delay-us]
+  select             SimAS-style model auto-selection (§7, 4 models) [--app --tech --inner --levels K
+                       --fanout a,b,… --watermark W|auto --delay-us]
   validate           PJRT artifacts vs native implementations
+
+HIERARCHY DEPTH (--levels)
+  The scheduling tree is depth 2 by default (coordinator → node masters →
+  ranks). `--levels 3` nests a third tier — rack → node → socket — over the
+  cluster's latency triple; fan-outs multiply to the rank count (a trailing
+  entry may be omitted and is derived), and `--techniques` names one
+  technique per level, outer first. Example: a 256-rank depth-3 sweep with
+  4 racks of 4 nodes, FAC outer, GSS per rack, FSC within the node:
+
+    dca-dls hier --levels 3 --fanout 4,4 --techniques fac,gss,fsc \\
+            --racks 4 --rack-latency-us 100 --watermark auto
+
+  `run --hier --levels 3 --fanout 2,2 --workers 16` drives the same tree on
+  real threads.
 ";
 
 fn main() {
@@ -140,16 +158,23 @@ fn cmd_figure(app: App, title: &str, flags: &HashMap<String, String>) -> anyhow:
             _ => DelaySite::Calculation,
         };
     }
+    anyhow::ensure!(
+        !flags.contains_key("techniques"),
+        "--techniques does not apply to figures (they sweep the outer techniques); \
+         use --inner (and --levels/--fanout) for the hierarchy's lower levels"
+    );
+    cfg.cluster = apply_rack_flags(cfg.cluster, flags)?;
     if flags.contains_key("hier") {
         cfg.models.push(ExecutionModel::HierDca);
         cfg.hier = hier_of(flags)?;
-    } else if flags.contains_key("inner") || flags.contains_key("watermark") {
+    } else if HIER_ONLY_FLAGS.iter().any(|k| flags.contains_key(*k)) {
         anyhow::bail!(
-            "--inner/--watermark only apply to the hierarchical model; pass --hier as well"
+            "--inner/--watermark/--levels/… only apply to the hierarchical model; \
+             pass --hier as well"
         );
     }
     let rows = run_figure(&cfg)?;
-    print!("{}", render_figure(title, &rows));
+    print!("{}", render_figure(title, &rows, cfg.hier.depth() as u32));
     if let Some(path) = flags.get("json") {
         let arr = Json::Arr(
             rows.iter()
@@ -177,10 +202,21 @@ fn app_of(flags: &HashMap<String, String>) -> App {
     }
 }
 
+fn parse_tech(name: &str) -> anyhow::Result<TechniqueKind> {
+    TechniqueKind::parse(name).ok_or_else(|| anyhow::anyhow!("unknown technique '{name}'"))
+}
+
 fn tech_of(flags: &HashMap<String, String>) -> anyhow::Result<TechniqueKind> {
-    let name = flags.get("tech").map(String::as_str).unwrap_or("GSS");
-    TechniqueKind::parse(name)
-        .ok_or_else(|| anyhow::anyhow!("unknown technique '{name}'"))
+    parse_tech(flags.get("tech").map(String::as_str).unwrap_or("GSS"))
+}
+
+/// The experiment's (outer, level-0) technique: `--techniques`' first entry
+/// wins over `--tech`.
+fn outer_tech_of(flags: &HashMap<String, String>) -> anyhow::Result<TechniqueKind> {
+    match flags.get("techniques") {
+        Some(raw) => parse_tech(raw.split(',').next().unwrap_or("").trim()),
+        None => tech_of(flags),
+    }
 }
 
 fn model_of(flags: &HashMap<String, String>) -> ExecutionModel {
@@ -190,45 +226,145 @@ fn model_of(flags: &HashMap<String, String>) -> ExecutionModel {
         .unwrap_or(ExecutionModel::Dca)
 }
 
-/// `--inner T` → hierarchical inner technique (default: same as outer);
-/// `--watermark W` → outer prefetch watermark (0 = fetch on exhaustion).
+/// Hierarchical-tree flags: `--inner T` (deepest-level technique, default:
+/// same as outer), `--levels K` (tree depth, default 2), `--fanout a,b,…`
+/// (children per level, outer first; a trailing entry may be omitted),
+/// `--techniques t0,t1,…` (one technique per level, outer first — t0 also
+/// overrides `--tech`, see [`outer_tech_of`]), `--watermark W|auto`
+/// (prefetch: fixed iteration count, 0 = fetch on exhaustion, or the
+/// EWMA-adaptive policy), `--prefetch-depth Q` (staged-queue capacity).
 fn hier_of(flags: &HashMap<String, String>) -> anyhow::Result<HierParams> {
     let mut hier = match flags.get("inner") {
         None => HierParams::default(),
-        Some(name) => {
-            let kind = TechniqueKind::parse(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown inner technique '{name}'"))?;
-            HierParams::with_inner(kind)
-        }
+        Some(name) => HierParams::with_inner(
+            TechniqueKind::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown inner technique '{name}'"))?,
+        ),
     };
-    if let Some(raw) = flags.get("watermark") {
-        let w: u64 = raw
+    if let Some(raw) = flags.get("levels") {
+        let k: u32 = raw
             .parse()
-            .map_err(|_| anyhow::anyhow!("bad --watermark '{raw}' (expect an iteration count)"))?;
-        if w > 0 {
-            hier = hier.with_watermark(w);
+            .map_err(|_| anyhow::anyhow!("bad --levels '{raw}' (expect a tree depth)"))?;
+        anyhow::ensure!(
+            (1..=dca_dls::config::MAX_LEVELS as u32).contains(&k),
+            "--levels must be in 1..={} (got {k})",
+            dca_dls::config::MAX_LEVELS
+        );
+        hier = hier.with_levels(k);
+    }
+    if let Some(raw) = flags.get("fanout") {
+        let fanouts: Vec<u32> = raw
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u32>()
+                    .map_err(|_| anyhow::anyhow!("bad --fanout '{raw}' (expect a,b,…)"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            !fanouts.is_empty() && fanouts.len() <= hier.depth(),
+            "--fanout takes at most --levels ({}) entries, got {}",
+            hier.depth(),
+            fanouts.len()
+        );
+        hier = hier.with_fanouts(&fanouts);
+    }
+    if let Some(raw) = flags.get("techniques") {
+        let kinds: Vec<TechniqueKind> = raw
+            .split(',')
+            .map(|s| parse_tech(s.trim()))
+            .collect::<anyhow::Result<_>>()?;
+        let k = hier.depth();
+        anyhow::ensure!(
+            kinds.len() == k,
+            "--techniques needs one entry per level ({k}), got {}",
+            kinds.len()
+        );
+        // kinds[0] is the outer technique (consumed by `outer_tech_of`).
+        for (d, kind) in kinds.iter().enumerate().skip(1) {
+            if d == k - 1 {
+                hier.inner = Some(*kind);
+            } else {
+                hier = hier.with_mid(d, *kind);
+            }
         }
+    }
+    if let Some(raw) = flags.get("watermark") {
+        if raw == "auto" {
+            hier = hier.with_auto_watermark();
+        } else {
+            let w: u64 = raw.parse().map_err(|_| {
+                anyhow::anyhow!("bad --watermark '{raw}' (expect an iteration count or 'auto')")
+            })?;
+            if w > 0 {
+                hier = hier.with_watermark(w);
+            }
+        }
+    }
+    if let Some(raw) = flags.get("prefetch-depth") {
+        let q: u32 = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --prefetch-depth '{raw}' (expect a chunk count)"))?;
+        anyhow::ensure!(q >= 1, "--prefetch-depth must be ≥ 1");
+        hier = hier.with_prefetch_depth(q);
     }
     Ok(hier)
 }
 
+/// Apply `--racks R` / `--rack-latency-us X` to a cluster. A rack count
+/// that doesn't evenly divide the nodes is rejected here — `Topology`
+/// would silently collapse it to a single rack while the run's header and
+/// JSON kept claiming `R` racks.
+fn apply_rack_flags(
+    mut cluster: ClusterConfig,
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<ClusterConfig> {
+    cluster.racks = get(flags, "racks", cluster.racks);
+    anyhow::ensure!(
+        cluster.racks >= 1 && cluster.nodes % cluster.racks.max(1) == 0,
+        "--racks ({}) must evenly divide the node count ({})",
+        cluster.racks,
+        cluster.nodes
+    );
+    if let Some(raw) = flags.get("rack-latency-us") {
+        let us: f64 = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --rack-latency-us '{raw}' (expect µs)"))?;
+        cluster.inter_rack_latency = us * 1e-6;
+    }
+    Ok(cluster)
+}
+
+/// Flags that only make sense for the hierarchical model. (`--racks` /
+/// `--rack-latency-us` are *cluster* properties, valid for any DES model —
+/// see [`apply_rack_flags`].)
+const HIER_ONLY_FLAGS: [&str; 7] = [
+    "inner",
+    "nodes",
+    "watermark",
+    "levels",
+    "fanout",
+    "techniques",
+    "prefetch-depth",
+];
+
 fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let app = app_of(flags);
-    let tech = tech_of(flags)?;
+    let tech = outer_tech_of(flags)?;
     let model = model_of(flags);
     anyhow::ensure!(
         model == ExecutionModel::HierDca
-            || !(flags.contains_key("inner") || flags.contains_key("watermark")),
-        "--inner/--watermark only apply to the hierarchical model; pass --model hier as well"
+            || !HIER_ONLY_FLAGS.iter().any(|k| flags.contains_key(*k)),
+        "--inner/--watermark/--levels/… only apply to the hierarchical model; \
+         pass --model hier as well"
     );
     let ranks = get(flags, "ranks", 256u32);
     let n = get(flags, "n", 262_144u64);
     let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
-    let cluster = if ranks == 256 {
-        ClusterConfig::minihpc()
-    } else {
-        ClusterConfig::small(ranks)
-    };
+    let cluster = apply_rack_flags(
+        if ranks == 256 { ClusterConfig::minihpc() } else { ClusterConfig::small(ranks) },
+        flags,
+    )?;
     let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
     let cfg = DesConfig {
         params: LoopParams::new(n, cluster.total_ranks()),
@@ -259,12 +395,14 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `hier`: one scenario, all four models side by side — the two-level
-/// model's headline comparison (arXiv 1903.09510 reproduced on the DES).
+/// `hier`: one scenario, all four models side by side — the hierarchical
+/// model's headline comparison (arXiv 1903.09510 reproduced on the DES,
+/// generalized to any tree depth via `--levels`).
 fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let app = app_of(flags);
-    let tech = tech_of(flags)?;
+    let tech = outer_tech_of(flags)?;
     let hier = hier_of(flags)?;
+    let levels = hier.depth() as u32;
     let nodes = get(flags, "nodes", 16u32);
     let rpn = get(flags, "rpn", 16u32);
     let n = get(flags, "n", 262_144u64);
@@ -273,16 +411,27 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some("assignment") => DelaySite::Assignment,
         _ => DelaySite::Calculation,
     };
-    let cluster = ClusterConfig { nodes, ranks_per_node: rpn, ..ClusterConfig::minihpc() };
+    let cluster = apply_rack_flags(
+        ClusterConfig { nodes, ranks_per_node: rpn, ..ClusterConfig::minihpc() },
+        flags,
+    )?;
+    let racks = cluster.racks;
     let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
-    let inner = hier.inner_or(tech);
+    let plan = hier.plan(tech, cluster.total_ranks(), &cluster)?;
+    let level_names: Vec<String> = plan
+        .levels
+        .iter()
+        .map(|l| format!("{}×{}@{:.1}µs", l.technique.name(), l.fanout, l.latency * 1e6))
+        .collect();
     println!(
-        "== HIER-DCA vs flat: {} {} (outer) / {} (inner), {}×{} ranks, N={n}, {}µs {} delay ==",
+        "== {} vs flat: {} [{}], {}×{} ranks ({} rack{}), N={n}, {}µs {} delay ==",
+        ExecutionModel::HierDca.label(levels),
         app.name(),
-        tech.name(),
-        inner.name(),
+        level_names.join(" ▸ "),
         nodes,
         rpn,
+        racks,
+        if racks == 1 { "" } else { "s" },
         delay * 1e6,
         match site {
             DelaySite::Calculation => "calculation",
@@ -310,21 +459,23 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         };
         results.push((model, Some(simulate(&cfg)?)));
     }
+    // The model column fits the longest (possibly depth-annotated) label.
+    let mw = results.iter().map(|(m, _)| m.label(levels).len()).max().unwrap_or(10).max(10);
     println!(
-        "{:<10} {:>12} {:>9} {:>11} {:>14}",
+        "{:<mw$} {:>12} {:>9} {:>11} {:>14}",
         "model", "T_par[s]", "chunks", "messages", "rank0 busy[s]"
     );
     for (model, r) in &results {
         match r {
             Some(r) => println!(
-                "{:<10} {:>12.3} {:>9} {:>11} {:>14.3}",
-                model.name(),
+                "{:<mw$} {:>12.3} {:>9} {:>11} {:>14.3}",
+                model.label(levels),
                 r.t_par(),
                 r.stats.chunks,
                 r.stats.messages,
                 r.rank0_service_busy
             ),
-            None => println!("{:<10} {:>12}", model.name(), "n/a (AF)"),
+            None => println!("{:<mw$} {:>12}", model.label(levels), "n/a (AF)"),
         }
     }
     if let Some(path) = flags.get("json") {
@@ -334,11 +485,19 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 .filter_map(|(m, r)| r.as_ref().map(|r| (m, r)))
                 .map(|(m, r)| {
                     Json::obj()
-                        .field("model", *m)
+                        .field("model", m.label(levels))
+                        .field("levels", levels)
                         .field("technique", tech)
-                        .field("inner", inner)
+                        .field(
+                            "level_techniques",
+                            plan.techs()
+                                .iter()
+                                .map(|t| Json::from(t.name()))
+                                .collect::<Vec<_>>(),
+                        )
                         .field("nodes", nodes)
                         .field("ranks_per_node", rpn)
+                        .field("racks", racks)
                         .field("n", n)
                         .field("delay_us", delay * 1e6)
                         .field(
@@ -353,6 +512,7 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                         .field("messages", r.stats.messages)
                         .field("messages_intra_node", r.intra_node_messages)
                         .field("messages_inter_node", r.inter_node_messages)
+                        .field("messages_per_level", r.level_messages.clone())
                 })
                 .collect(),
         );
@@ -364,7 +524,7 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let app = app_of(flags);
-    let tech = tech_of(flags)?;
+    let tech = outer_tech_of(flags)?;
     let model = if flags.contains_key("hier") {
         ExecutionModel::HierDca
     } else {
@@ -372,9 +532,14 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     anyhow::ensure!(
         model == ExecutionModel::HierDca
-            || !["inner", "nodes", "watermark"].iter().any(|k| flags.contains_key(*k)),
-        "--inner/--nodes/--watermark only apply to the two-level engine; pass --hier \
-         (or --model hier) as well"
+            || !HIER_ONLY_FLAGS.iter().any(|k| flags.contains_key(*k)),
+        "--inner/--nodes/--watermark/--levels/… only apply to the hierarchical engine; \
+         pass --hier (or --model hier) as well"
+    );
+    anyhow::ensure!(
+        !(flags.contains_key("racks") || flags.contains_key("rack-latency-us")),
+        "--racks/--rack-latency-us are simulated-latency knobs; the threaded engine \
+         runs on real fabrics — use `simulate`/`hier` for racked scenarios"
     );
     let workers = get(flags, "workers", 4u32);
     let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
@@ -395,13 +560,16 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if model == ExecutionModel::HierDca {
         cfg.nodes = get(flags, "nodes", if workers % 2 == 0 { 2 } else { 1 });
         cfg.hier = hier_of(flags)?;
-        if cfg.hier.prefetch_watermark.is_none() && !flags.contains_key("watermark") {
+        if cfg.hier.watermark == WatermarkMode::Off && !flags.contains_key("watermark") {
             // Default the threaded engine to prefetch at roughly one
             // sub-chunk per local rank; `--watermark 0` reverts to
-            // fetch-on-exhaustion.
+            // fetch-on-exhaustion, `--watermark auto` adapts.
             cfg.hier = cfg.hier.with_watermark((workers / cfg.nodes.max(1)) as u64);
         }
     }
+    // Flat engines are depth-1 trees by definition (root ↔ ranks) — keeps
+    // the exported `levels` consistent with their one-entry per-level split.
+    let levels = if model == ExecutionModel::HierDca { cfg.hier.depth() as u32 } else { 1 };
     let t0 = std::time::Instant::now();
     let r = coordinator::run(&cfg, workload)?;
     println!(
@@ -409,7 +577,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         app.name(),
         if pjrt { "PJRT artifacts" } else { "native" },
         tech.name(),
-        model.name(),
+        model.label(levels),
         cfg.nodes
     );
     println!("wall = {:.3}s", t0.elapsed().as_secs_f64());
@@ -418,7 +586,15 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .map_err(|e| anyhow::anyhow!("coverage violation: {e}"))?;
     println!("coverage: OK (every iteration scheduled exactly once)");
     if let Some(path) = flags.get("json") {
-        let j = dca_dls::report::json::run_result_json(app.name(), tech, model, cfg.nodes, n, &r);
+        let j = dca_dls::report::json::run_result_json(
+            app.name(),
+            tech,
+            model,
+            cfg.nodes,
+            levels,
+            n,
+            &r,
+        );
         std::fs::write(path, j.render())?;
         println!("wrote {path}");
     }
@@ -460,9 +636,11 @@ fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let app = app_of(flags);
-    let tech = tech_of(flags)?;
+    let tech = outer_tech_of(flags)?;
+    let hier = hier_of(flags)?;
+    let levels = hier.depth() as u32;
     let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
-    let cluster = ClusterConfig::minihpc();
+    let cluster = apply_rack_flags(ClusterConfig::minihpc(), flags)?;
     let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
     let s = dca_dls::report::selector::select_model(
         tech,
@@ -470,7 +648,7 @@ fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         &cluster,
         &cost,
         InjectedDelay::calculation_only(delay),
-        hier_of(flags)?,
+        hier,
     )?;
     println!(
         "{} {} delay={}µs — predicted T_par on a {:.0}% prefix:",
@@ -479,9 +657,10 @@ fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         delay * 1e6,
         s.prefix_fraction * 100.0
     );
+    let mw = s.predictions.iter().map(|(m, _)| m.label(levels).len()).max().unwrap_or(8).max(8);
     for (m, t) in &s.predictions {
         let mark = if *m == s.model { "  ← selected" } else { "" };
-        println!("  {:<8} {t:.3}s{mark}", m.name());
+        println!("  {:<mw$} {t:.3}s{mark}", m.label(levels));
     }
     Ok(())
 }

@@ -131,21 +131,24 @@ impl Json {
     }
 }
 
-/// Export one threaded-engine run (any model, including the two-level
-/// hier engine) for external plotting — the same fields the DES export
-/// carries, plus the two-tier message split.
+/// Export one threaded-engine run (any model, including the N-level hier
+/// engine) for external plotting — the same fields the DES export carries,
+/// plus the two-tier and per-level message splits. `levels` is the
+/// scheduling-tree depth of hierarchical runs (drives the model label).
 pub fn run_result_json(
     app: &str,
     technique: crate::techniques::TechniqueKind,
     model: crate::config::ExecutionModel,
     nodes: u32,
+    levels: u32,
     n: u64,
     r: &crate::coordinator::RunResult,
 ) -> Json {
     Json::obj()
         .field("app", app)
         .field("technique", technique)
-        .field("model", model)
+        .field("model", model.label(levels))
+        .field("levels", levels)
         .field("workers", r.per_rank.len() as u64)
         .field("nodes", nodes)
         .field("n", n)
@@ -154,6 +157,7 @@ pub fn run_result_json(
         .field("messages", r.stats.messages)
         .field("messages_intra_node", r.intra_node_messages)
         .field("messages_inter_node", r.inter_node_messages)
+        .field("messages_per_level", r.level_messages.clone())
         .field("sched_wait", r.stats.sched_overhead)
         .field("imbalance", r.stats.imbalance)
         .field("checksum", format!("{:#x}", r.checksum))
@@ -418,20 +422,41 @@ mod tests {
             checksum: 0x1234,
             intra_node_messages: 28,
             inter_node_messages: 8,
+            level_messages: vec![8, 28],
         };
         let j = run_result_json(
             "PSIA",
             crate::techniques::TechniqueKind::Fac2,
             crate::config::ExecutionModel::HierDca,
             2,
+            2,
             4096,
             &r,
         );
         let parsed = Json::parse(&j.render()).unwrap();
         assert_eq!(parsed.get("model").unwrap().as_str(), Some("HIER-DCA"));
+        assert_eq!(parsed.get("levels").unwrap().as_u64(), Some(2));
         assert_eq!(parsed.get("messages_intra_node").unwrap().as_u64(), Some(28));
         assert_eq!(parsed.get("messages_inter_node").unwrap().as_u64(), Some(8));
+        let Json::Arr(per_level) = parsed.get("messages_per_level").unwrap() else {
+            panic!("messages_per_level must be an array")
+        };
+        assert_eq!(per_level.len(), 2);
+        assert_eq!(per_level[0].as_u64(), Some(8));
+        assert_eq!(per_level[1].as_u64(), Some(28));
         assert_eq!(parsed.get("workers").unwrap().as_u64(), Some(2));
         assert_eq!(parsed.get("checksum").unwrap().as_str(), Some("0x1234"));
+        // Depth-annotated label for deeper trees.
+        let j3 = run_result_json(
+            "PSIA",
+            crate::techniques::TechniqueKind::Fac2,
+            crate::config::ExecutionModel::HierDca,
+            2,
+            3,
+            4096,
+            &r,
+        );
+        let parsed3 = Json::parse(&j3.render()).unwrap();
+        assert_eq!(parsed3.get("model").unwrap().as_str(), Some("HIER-DCA(3)"));
     }
 }

@@ -26,8 +26,11 @@ pub struct FigureRow {
 /// present in the data (CCA/DCA in the paper's figures; DCA-RMA and
 /// HIER-DCA join when the sweep includes them). A final ratio column
 /// compares the last model against the first (DCA/CCA in the default
-/// two-model layout).
-pub fn render_figure(title: &str, rows: &[FigureRow]) -> String {
+/// two-model layout). Model labels derive from `hier_levels` (the
+/// scheduling-tree depth of the hierarchical cells, e.g. `HIER-DCA(3)`),
+/// and column widths follow the labels so deeper trees render without
+/// truncation.
+pub fn render_figure(title: &str, rows: &[FigureRow], hier_levels: u32) -> String {
     use std::fmt::Write;
     let mut out = String::new();
     writeln!(out, "== {title} ==").unwrap();
@@ -35,20 +38,28 @@ pub fn render_figure(title: &str, rows: &[FigureRow]) -> String {
         .into_iter()
         .filter(|m| rows.iter().any(|r| r.model == *m))
         .collect();
+    let labels: Vec<String> = models.iter().map(|m| m.label(hier_levels)).collect();
+    // Each model column fits its own header ("<label> T_par[s]"); 17 keeps
+    // the classic layout stable ("HIER-DCA T_par[s]").
+    let widths: Vec<usize> =
+        labels.iter().map(|l| (l.len() + " T_par[s]".len()).max(17)).collect();
+    let ratio_label = if models.len() >= 2 {
+        format!("{}/{}", labels[labels.len() - 1], labels[0])
+    } else {
+        String::new()
+    };
+    let ratio_width = ratio_label.len().max(12);
     let mut delays: Vec<f64> = rows.iter().map(|r| r.delay).collect();
     delays.sort_by(f64::total_cmp);
     delays.dedup();
     for d in delays {
         writeln!(out, "\n-- injected delay: {:.0} µs --", d * 1e6).unwrap();
         write!(out, "{:<8}", "tech").unwrap();
-        for m in &models {
-            // Width 17 fits the longest header, "HIER-DCA T_par[s]".
-            write!(out, " {:>17} {:>9}", format!("{} T_par[s]", m.name()), "±sd").unwrap();
+        for (label, &w) in labels.iter().zip(&widths) {
+            write!(out, " {:>w$} {:>9}", format!("{label} T_par[s]"), "±sd").unwrap();
         }
         if models.len() >= 2 {
-            // Width 12 fits the longest ratio header, "HIER-DCA/CCA".
-            let last = models[models.len() - 1];
-            write!(out, " {:>12}", format!("{}/{}", last.name(), models[0].name())).unwrap();
+            write!(out, " {:>ratio_width$}", ratio_label).unwrap();
         }
         writeln!(out).unwrap();
         for kind in TechniqueKind::EVALUATED {
@@ -62,24 +73,26 @@ pub fn render_figure(title: &str, rows: &[FigureRow]) -> String {
                 continue;
             }
             write!(out, "{:<8}", kind.name()).unwrap();
-            for c in &cells {
+            for (c, &w) in cells.iter().zip(&widths) {
                 match c {
                     Some(r) => write!(
                         out,
-                        " {:>17.3} {:>9.3}",
+                        " {:>w$.3} {:>9.3}",
                         r.runs.t_par_mean, r.runs.t_par_stddev
                     )
                     .unwrap(),
-                    None => write!(out, " {:>17} {:>9}", "n/a", "-").unwrap(),
+                    None => write!(out, " {:>w$} {:>9}", "n/a", "-").unwrap(),
                 }
             }
             if models.len() >= 2 {
                 match (cells[cells.len() - 1], cells[0]) {
-                    (Some(last), Some(first)) if first.runs.t_par_mean > 0.0 => {
-                        write!(out, " {:>12.3}", last.runs.t_par_mean / first.runs.t_par_mean)
-                            .unwrap()
-                    }
-                    _ => write!(out, " {:>12}", "-").unwrap(),
+                    (Some(last), Some(first)) if first.runs.t_par_mean > 0.0 => write!(
+                        out,
+                        " {:>ratio_width$.3}",
+                        last.runs.t_par_mean / first.runs.t_par_mean
+                    )
+                    .unwrap(),
+                    _ => write!(out, " {:>ratio_width$}", "-").unwrap(),
                 }
             }
             writeln!(out).unwrap();
@@ -173,7 +186,7 @@ mod tests {
             row(TechniqueKind::Gss, ExecutionModel::Cca, 0.0, 70.0),
             row(TechniqueKind::Gss, ExecutionModel::Dca, 0.0, 69.0),
         ];
-        let s = render_figure("Fig 4", &rows);
+        let s = render_figure("Fig 4", &rows, 2);
         assert!(s.contains("GSS"));
         assert!(s.contains("70.000"));
         assert!(s.contains("0 µs"));
@@ -188,12 +201,30 @@ mod tests {
             row(TechniqueKind::Af, ExecutionModel::HierDca, 0.0, 68.0),
             row(TechniqueKind::Af, ExecutionModel::DcaRma, 100e-6, 71.0),
         ];
-        let s = render_figure("sweep", &rows);
+        let s = render_figure("sweep", &rows, 2);
         assert!(s.contains("HIER-DCA"));
         assert!(s.contains("DCA-RMA"));
         assert!(s.contains("n/a"));
         assert!(s.contains("68.000"));
         assert!(s.contains("100 µs"));
+    }
+
+    /// Depth-annotated hierarchy labels render (header, ratio column, data
+    /// rows aligned to the widened columns) without truncation.
+    #[test]
+    fn figure_renders_depth3_labels_untruncated() {
+        let rows = vec![
+            row(TechniqueKind::Gss, ExecutionModel::Cca, 0.0, 70.0),
+            row(TechniqueKind::Gss, ExecutionModel::HierDca, 0.0, 67.5),
+        ];
+        let s = render_figure("depth-3 sweep", &rows, 3);
+        assert!(s.contains("HIER-DCA(3) T_par[s]"), "{s}");
+        assert!(s.contains("HIER-DCA(3)/CCA"), "{s}");
+        assert!(s.contains("67.500"), "{s}");
+        assert!(!s.contains("HIER-DCA T_par"), "two-level label must not appear: {s}");
+        // Every non-empty line of a block is at least as wide as its header.
+        let lines: Vec<&str> = s.lines().filter(|l| l.starts_with("GSS")).collect();
+        assert!(!lines.is_empty());
     }
 
     #[test]
@@ -213,6 +244,7 @@ mod tests {
             checksum: 0xBEEF,
             intra_node_messages: 40,
             inter_node_messages: 12,
+            level_messages: vec![12, 40],
         };
         let s = render_run_summary(&r);
         assert!(s.contains("intra-node 40"), "{s}");

@@ -46,7 +46,7 @@ pub fn select_approach(
         if technique == TechniqueKind::Af && model == ExecutionModel::DcaRma {
             continue;
         }
-        if model == ExecutionModel::HierDca && !crate::hier::hier_feasible(cluster) {
+        if model == ExecutionModel::HierDca && !crate::hier::hier_feasible(cluster, &hier) {
             continue;
         }
         let cfg = DesConfig {
@@ -207,6 +207,50 @@ mod tests {
         for (_, t) in &s.predictions {
             assert!(*t > 0.0);
         }
+    }
+
+    /// A depth-3 candidate (2 racks × 2 nodes × 4 ranks) arbitrates
+    /// alongside the flat models without panics, and an unresolvable level
+    /// plan just drops the hierarchical candidate instead of failing the
+    /// whole selection.
+    #[test]
+    fn depth3_candidate_selects_and_bad_plans_are_skipped() {
+        let cluster = ClusterConfig {
+            nodes: 4,
+            ranks_per_node: 4,
+            racks: 2,
+            ..ClusterConfig::minihpc()
+        };
+        let hier = HierParams::with_inner(TechniqueKind::Ss)
+            .with_levels(3)
+            .with_fanouts(&[2, 2, 4]);
+        let s = select_model(
+            TechniqueKind::Fac2,
+            20_000,
+            &cluster,
+            &IterationCost::Constant(1e-4),
+            InjectedDelay::none(),
+            hier,
+        )
+        .unwrap();
+        assert_eq!(s.predictions.len(), 4);
+        for (_, t) in &s.predictions {
+            assert!(*t > 0.0);
+        }
+        // Fan-outs that don't divide the rank count: the hierarchical
+        // candidate is infeasible and silently skipped.
+        let bad = HierParams::default().with_levels(3).with_fanouts(&[3, 3, 3]);
+        let s = select_model(
+            TechniqueKind::Fac2,
+            20_000,
+            &cluster,
+            &IterationCost::Constant(1e-4),
+            InjectedDelay::none(),
+            bad,
+        )
+        .unwrap();
+        assert_eq!(s.predictions.len(), 3);
+        assert!(s.predictions.iter().all(|(m, _)| *m != ExecutionModel::HierDca));
     }
 
     /// Under the assignment-site slowdown the flat coordinator serializes

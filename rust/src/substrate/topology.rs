@@ -1,24 +1,38 @@
-//! Cluster topology: rank→node placement and message latency classes,
-//! mirroring miniHPC's 16 dual-socket nodes × 16 ranks.
+//! Cluster topology: rank→node→rack placement and message latency classes,
+//! mirroring miniHPC's 16 dual-socket nodes × 16 ranks — extended with an
+//! optional rack tier so the latency *triple* (intra-node, inter-node,
+//! inter-rack) needed by three-level scheduling trees has a physical home.
 
 use crate::config::ClusterConfig;
 
-/// Rank→node placement with per-pair latency lookup.
+/// Rank→node→rack placement with per-pair latency lookup.
 #[derive(Debug, Clone)]
 pub struct Topology {
     ranks_per_node: u32,
+    /// Nodes per rack (`total nodes` when the cluster has a single rack,
+    /// i.e. `racks` doesn't evenly divide the node count).
+    nodes_per_rack: u32,
     total_ranks: u32,
     intra: f64,
     inter: f64,
+    inter_rack: f64,
 }
 
 impl Topology {
     pub fn new(cfg: &ClusterConfig) -> Self {
+        let nodes = cfg.nodes.max(1);
+        let racks = if cfg.racks >= 1 && nodes % cfg.racks.max(1) == 0 {
+            cfg.racks.max(1)
+        } else {
+            1
+        };
         Topology {
             ranks_per_node: cfg.ranks_per_node.max(1),
+            nodes_per_rack: nodes / racks,
             total_ranks: cfg.total_ranks().max(1),
             intra: cfg.intra_node_latency,
             inter: cfg.inter_node_latency,
+            inter_rack: cfg.inter_rack_latency,
         }
     }
 
@@ -53,14 +67,33 @@ impl Topology {
         self.master_of_node(self.node_of(rank))
     }
 
-    /// One-way message latency between two ranks, seconds.
+    /// Number of racks implied by the placement.
+    pub fn racks(&self) -> u32 {
+        self.nodes().div_ceil(self.nodes_per_rack)
+    }
+
+    /// Rack hosting `node` (blocks of consecutive nodes).
+    pub fn rack_of_node(&self, node: u32) -> u32 {
+        node / self.nodes_per_rack
+    }
+
+    /// Rack hosting `rank`.
+    pub fn rack_of(&self, rank: u32) -> u32 {
+        self.rack_of_node(self.node_of(rank))
+    }
+
+    /// One-way message latency between two ranks, seconds: 0 to self,
+    /// intra-node within a node, inter-node within a rack, inter-rack
+    /// otherwise (the third class is unreachable on single-rack clusters).
     pub fn latency(&self, a: u32, b: u32) -> f64 {
         if a == b {
             0.0
         } else if self.node_of(a) == self.node_of(b) {
             self.intra
-        } else {
+        } else if self.rack_of(a) == self.rack_of(b) {
             self.inter
+        } else {
+            self.inter_rack
         }
     }
 
@@ -170,6 +203,44 @@ mod tests {
         assert_eq!(t.node_of(3), 3);
         assert_eq!(t.latency(0, 1), 2.0e-6);
         assert_eq!(t.latency(2, 2), 0.0);
+    }
+
+    #[test]
+    fn rack_tier_latency_triple() {
+        // 16 nodes in 4 racks of 4: same node → intra, same rack → inter,
+        // across racks → the third class.
+        let cfg = ClusterConfig { racks: 4, ..ClusterConfig::minihpc() };
+        let t = Topology::new(&cfg);
+        assert_eq!(t.racks(), 4);
+        assert_eq!(t.rack_of(0), 0);
+        assert_eq!(t.rack_of(63), 0); // node 3, last rank of rack 0
+        assert_eq!(t.rack_of(64), 1); // node 4, first rank of rack 1
+        assert_eq!(t.rack_of(255), 3);
+        assert_eq!(t.latency(0, 5), 0.5e-6); // same node
+        assert_eq!(t.latency(0, 20), 2.0e-6); // same rack, different node
+        assert_eq!(t.latency(0, 64), 6.0e-6); // different rack
+        assert_eq!(t.latency(64, 0), t.latency(0, 64));
+        assert_eq!(t.latency(64, 64), 0.0);
+    }
+
+    #[test]
+    fn single_rack_never_pays_the_rack_class() {
+        let t = minihpc(); // racks = 1
+        assert_eq!(t.racks(), 1);
+        for a in [0u32, 15, 16, 255] {
+            for b in [0u32, 15, 16, 255] {
+                assert!(t.latency(a, b) <= 2.0e-6, "({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn non_dividing_racks_collapse_to_one() {
+        // 16 nodes cannot split into 3 racks — the tier is ignored.
+        let cfg = ClusterConfig { racks: 3, ..ClusterConfig::minihpc() };
+        let t = Topology::new(&cfg);
+        assert_eq!(t.racks(), 1);
+        assert_eq!(t.latency(0, 255), 2.0e-6);
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Validation of the **recursive N-level** scheduling tree on both
+//! substrates: the depth-3 (rack → node → socket) coverage matrix across
+//! all 12 evaluated techniques × {0, 100 µs} inter-rack latency on the DES,
+//! coverage + checksum for the threaded engine at depth 3, exact
+//! threaded ≡ DES serial-schedule equivalence at depth 3, edge geometries
+//! (fan-out 1 at any level, N < total ranks, single-socket nodes), and the
+//! adaptive-watermark satellite claim (auto is never worse than
+//! fetch-on-exhaustion on the PR 2 prefetch scenario).
+
+use std::sync::Arc;
+
+use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams};
+use dca_dls::coordinator::{self, EngineConfig, RunResult};
+use dca_dls::des::{simulate, DesConfig, DesResult};
+use dca_dls::sched::{verify_coverage, Assignment};
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::workload::synthetic::{CostShape, Synthetic};
+use dca_dls::workload::{IterationCost, Workload};
+
+/// 4 racks × 2 nodes × 4 ranks = 32 ranks, the depth-3 DES geometry.
+fn racked_cluster(inter_rack: f64) -> ClusterConfig {
+    ClusterConfig {
+        nodes: 8,
+        ranks_per_node: 4,
+        racks: 4,
+        inter_rack_latency: inter_rack,
+        ..ClusterConfig::minihpc()
+    }
+}
+
+fn depth3_des_cfg(n: u64, kind: TechniqueKind, cluster: ClusterConfig) -> DesConfig {
+    let mut cfg = DesConfig::new(
+        LoopParams::new(n, cluster.total_ranks()),
+        kind,
+        ExecutionModel::HierDca,
+        cluster,
+        IterationCost::Constant(1e-5),
+    );
+    cfg.hier = HierParams::default().with_levels(3).with_fanouts(&[4, 2, 4]);
+    cfg
+}
+
+fn sorted_des(r: &DesResult) -> Vec<Assignment> {
+    let mut v = r.assignments.clone();
+    v.sort_by_key(|a| a.start);
+    v
+}
+
+fn hier_engine(
+    n: u64,
+    p: u32,
+    fanouts: &[u32],
+    outer: TechniqueKind,
+    hier: HierParams,
+) -> EngineConfig {
+    let mut cfg = EngineConfig::new(LoopParams::new(n, p), outer, ExecutionModel::HierDca);
+    cfg.nodes = fanouts[0];
+    cfg.hier = hier.with_levels(fanouts.len() as u32).with_fanouts(fanouts);
+    cfg
+}
+
+fn run_covered(cfg: &EngineConfig, w: &Arc<dyn Workload>, n: u64, label: &str) -> RunResult {
+    let r = coordinator::run(cfg, Arc::clone(w)).unwrap_or_else(|e| panic!("{label}: {e}"));
+    verify_coverage(&r.sorted_assignments(), n).unwrap_or_else(|e| panic!("{label}: {e}"));
+    r
+}
+
+/// The acceptance matrix: all 12 evaluated techniques × {0, 100 µs}
+/// inter-rack latency cover the loop exactly at depth 3 on the DES, with
+/// the per-level message split reconciling at every cell.
+#[test]
+fn depth3_covers_all_techniques_both_rack_latencies() {
+    const N: u64 = 4_096;
+    for kind in TechniqueKind::EVALUATED {
+        for inter_rack in [0.0, 100e-6] {
+            let cfg = depth3_des_cfg(N, kind, racked_cluster(inter_rack));
+            let r = simulate(&cfg)
+                .unwrap_or_else(|e| panic!("{kind} @ rack {}µs: {e}", inter_rack * 1e6));
+            verify_coverage(&sorted_des(&r), N)
+                .unwrap_or_else(|e| panic!("{kind} @ rack {}µs: {e}", inter_rack * 1e6));
+            assert_eq!(r.level_messages.len(), 3, "{kind}");
+            assert_eq!(
+                r.stats.messages,
+                r.level_messages.iter().sum::<u64>(),
+                "{kind}: level split must reconcile"
+            );
+            assert_eq!(
+                r.stats.messages,
+                r.intra_node_messages + r.inter_node_messages,
+                "{kind}: latency split must reconcile"
+            );
+            assert!(r.level_messages.iter().all(|&m| m > 0), "{kind}: all levels ran");
+        }
+    }
+}
+
+/// Depth-3 runs replay deterministically on the DES.
+#[test]
+fn depth3_deterministic_replay() {
+    let cfg = depth3_des_cfg(6_000, TechniqueKind::Fac2, racked_cluster(100e-6));
+    let a = simulate(&cfg).unwrap();
+    let b = simulate(&cfg).unwrap();
+    assert_eq!(a.assignments, b.assignments);
+    assert_eq!(a.t_par(), b.t_par());
+    assert_eq!(a.level_messages, b.level_messages);
+}
+
+/// Mixed per-level techniques (`--techniques fac,gss,ss`) cover at depth 3.
+#[test]
+fn depth3_mixed_level_techniques_cover() {
+    const N: u64 = 4_096;
+    let mut cfg = depth3_des_cfg(N, TechniqueKind::Fac2, racked_cluster(100e-6));
+    cfg.hier = HierParams::with_inner(TechniqueKind::Ss)
+        .with_levels(3)
+        .with_fanouts(&[4, 2, 4])
+        .with_mid(1, TechniqueKind::Gss);
+    let r = simulate(&cfg).unwrap();
+    verify_coverage(&sorted_des(&r), N).unwrap();
+    // SS at the leaf level: unit sub-chunks dominate.
+    let ones = r.assignments.iter().filter(|a| a.size == 1).count();
+    assert!(ones > r.assignments.len() / 2, "leaf SS must produce unit chunks");
+}
+
+/// Coverage + checksum for all 12 evaluated techniques on the **threaded**
+/// engine at depth 3 (2×2×2 = 8 ranks), message splits reconciling.
+#[test]
+fn threaded_depth3_covers_all_techniques_with_matching_checksum() {
+    const N: u64 = 4_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Jittered, 17));
+    let reference = w.execute_range(0, N);
+    for kind in TechniqueKind::EVALUATED {
+        let cfg = hier_engine(N, 8, &[2, 2, 2], kind, HierParams::default());
+        let r = run_covered(&cfg, &w, N, kind.name());
+        assert_eq!(r.checksum, reference, "{kind}: checksum");
+        assert_eq!(r.level_messages.len(), 3, "{kind}");
+        assert_eq!(
+            r.stats.messages,
+            r.level_messages.iter().sum::<u64>(),
+            "{kind}: level split must reconcile"
+        );
+        assert_eq!(
+            r.stats.messages,
+            r.intra_node_messages + r.inter_node_messages,
+            "{kind}: latency split must reconcile"
+        );
+        assert!(r.level_messages[0] > 0, "{kind}: root protocol ran");
+    }
+}
+
+/// Edge geometries at depth 3 on the threaded engine: fan-out 1 at the
+/// top, middle, and leaf level (single-socket nodes — every rank a
+/// master), more ranks than iterations, and a fully serial tree.
+#[test]
+fn threaded_depth3_edge_geometries() {
+    let cases: [(u64, u32, [u32; 3], &str); 6] = [
+        (2_000, 8, [1, 2, 4], "fanout 1 at the top level"),
+        (2_000, 8, [2, 1, 4], "fanout 1 at the middle level"),
+        (2_000, 4, [2, 2, 1], "single-socket nodes (leaf fan-out 1)"),
+        (5, 8, [2, 2, 2], "N < total ranks"),
+        (1_000, 1, [1, 1, 1], "fully serial tree"),
+        (2_000, 8, [8, 1, 1], "wide root, degenerate lower levels"),
+    ];
+    for (n, p, fanouts, label) in cases {
+        let w: Arc<dyn Workload> =
+            Arc::new(Synthetic::new(n.max(64), 1e-7, CostShape::Uniform, 5));
+        let reference = w.execute_range(0, n);
+        let cfg = hier_engine(n, p, &fanouts, TechniqueKind::Gss, HierParams::default());
+        let r = run_covered(&cfg, &w, n, label);
+        assert_eq!(r.checksum, reference, "{label}: checksum");
+        assert_eq!(r.per_rank.len(), p as usize, "{label}: one summary per rank");
+    }
+}
+
+/// The same edge geometries cover on the DES (single-rank leaf groups need
+/// computing masters, i.e. the default `break_after > 0`).
+#[test]
+fn des_depth3_edge_geometries() {
+    let cases: [(u64, u32, u32, [u32; 3], &str); 4] = [
+        (2_000, 2, 4, [1, 2, 4], "fanout 1 at the top level"),
+        (2_000, 2, 4, [2, 1, 4], "fanout 1 at the middle level"),
+        (1_000, 4, 1, [2, 2, 1], "single-socket nodes"),
+        (5, 2, 4, [2, 2, 2], "N < total ranks"),
+    ];
+    for (n, nodes, rpn, fanouts, label) in cases {
+        let cluster = ClusterConfig {
+            nodes,
+            ranks_per_node: rpn,
+            ..ClusterConfig::minihpc()
+        };
+        let mut cfg = DesConfig::new(
+            LoopParams::new(n, cluster.total_ranks()),
+            TechniqueKind::Gss,
+            ExecutionModel::HierDca,
+            cluster,
+            IterationCost::Constant(1e-5),
+        );
+        cfg.hier = HierParams::default().with_levels(3).with_fanouts(&fanouts);
+        let r = simulate(&cfg).unwrap_or_else(|e| panic!("{label}: {e}"));
+        verify_coverage(&sorted_des(&r), n).unwrap_or_else(|e| panic!("{label}: {e}"));
+    }
+}
+
+/// Cross-engine equivalence at depth 3: on the fully serial tree (fan-out
+/// 1 at every level) both engines are deterministic, and because every
+/// level drives the *same* `hier::protocol` ledger, the granted
+/// `(step, start, size)` sequences must be identical for every closed-form
+/// technique. (AF is excluded: its sizes depend on measured wall-clock
+/// timings by design.)
+#[test]
+fn threaded_and_des_depth3_grant_identical_serial_schedules() {
+    const N: u64 = 2_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-8, CostShape::Uniform, 9));
+    for kind in TechniqueKind::ALL {
+        if kind == TechniqueKind::Af {
+            continue;
+        }
+        let cfg = hier_engine(N, 1, &[1, 1, 1], kind, HierParams::default());
+        let threaded = run_covered(&cfg, &w, N, kind.name());
+
+        let cluster = ClusterConfig { nodes: 1, ranks_per_node: 1, ..ClusterConfig::minihpc() };
+        let mut des_cfg = DesConfig::new(
+            LoopParams::new(N, 1),
+            kind,
+            ExecutionModel::HierDca,
+            cluster,
+            IterationCost::Constant(1e-6),
+        );
+        des_cfg.hier = HierParams::default().with_levels(3).with_fanouts(&[1, 1, 1]);
+        let des = simulate(&des_cfg).unwrap_or_else(|e| panic!("{kind}: {e}"));
+        assert_eq!(
+            threaded.sorted_assignments(),
+            sorted_des(&des),
+            "{kind}: depth-3 serial schedules must be identical across engines"
+        );
+    }
+}
+
+/// The adaptive-watermark satellite claim, asserted on the DES over the
+/// PR 2 prefetch scenario (4×4 ranks, expensive 200 µs inter-node fabric):
+/// `--watermark auto` must never be worse than fetch-on-exhaustion
+/// (watermark off), in both total scheduling wait and `T_par` — the EWMA
+/// round trip × measured drain rate hides the fetch without hand tuning.
+#[test]
+fn auto_watermark_never_worse_than_fetch_on_exhaustion() {
+    const N: u64 = 20_000;
+    let cluster = ClusterConfig {
+        nodes: 4,
+        ranks_per_node: 4,
+        inter_node_latency: 200e-6,
+        ..ClusterConfig::minihpc()
+    };
+    let mk = |hier: HierParams| {
+        let cfg = DesConfig {
+            params: LoopParams::new(N, cluster.total_ranks()),
+            technique: TechniqueKind::Fac2,
+            model: ExecutionModel::HierDca,
+            delay: InjectedDelay::none(),
+            cluster: cluster.clone(),
+            cost: IterationCost::Constant(2e-5),
+            pe_speed: vec![],
+            hier,
+        };
+        let r = simulate(&cfg).unwrap();
+        verify_coverage(&sorted_des(&r), N).unwrap();
+        r
+    };
+    let inner = HierParams::with_inner(TechniqueKind::Ss);
+    let exhaust = mk(inner);
+    let auto = mk(inner.with_auto_watermark());
+    assert!(
+        auto.stats.sched_overhead <= exhaust.stats.sched_overhead,
+        "auto watermark sched wait {} must not exceed fetch-on-exhaustion {}",
+        auto.stats.sched_overhead,
+        exhaust.stats.sched_overhead
+    );
+    assert!(
+        auto.t_par() <= exhaust.t_par(),
+        "auto watermark T_par {} must not exceed fetch-on-exhaustion {}",
+        auto.t_par(),
+        exhaust.t_par()
+    );
+}
+
+/// A deeper staged queue (prefetch depth 3) keeps exact coverage and a
+/// matching checksum on the threaded engine at depth 3.
+#[test]
+fn threaded_depth3_deep_prefetch_queue_covers() {
+    const N: u64 = 4_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Jittered, 23));
+    let reference = w.execute_range(0, N);
+    let hier = HierParams::with_inner(TechniqueKind::Ss)
+        .with_watermark(64)
+        .with_prefetch_depth(3);
+    let cfg = hier_engine(N, 8, &[2, 2, 2], TechniqueKind::Fac2, hier);
+    let r = run_covered(&cfg, &w, N, "deep prefetch");
+    assert_eq!(r.checksum, reference);
+}
+
+/// The auto watermark also holds up on the threaded engine: coverage and
+/// checksum stay exact (its payoff is asserted deterministically on the
+/// DES above).
+#[test]
+fn threaded_auto_watermark_covers() {
+    const N: u64 = 4_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Jittered, 29));
+    let reference = w.execute_range(0, N);
+    let hier = HierParams::with_inner(TechniqueKind::Ss).with_auto_watermark();
+    let cfg = hier_engine(N, 4, &[2, 2], TechniqueKind::Fac2, hier);
+    let r = run_covered(&cfg, &w, N, "auto watermark");
+    assert_eq!(r.checksum, reference);
+}
+
+/// Depth-3 trees with a 100 µs rack class confine cross-node traffic: the
+/// root (rack) protocol carries far fewer messages than the leaf protocol,
+/// and the DES's per-level counters expose exactly that.
+#[test]
+fn depth3_confines_expensive_traffic_to_the_top_level() {
+    let cfg = depth3_des_cfg(8_192, TechniqueKind::Fac2, racked_cluster(100e-6));
+    let r = simulate(&cfg).unwrap();
+    verify_coverage(&sorted_des(&r), 8_192).unwrap();
+    assert!(
+        r.level_messages[0] * 10 < r.level_messages[2],
+        "root protocol {} should be ≫ rarer than the leaf protocol {}",
+        r.level_messages[0],
+        r.level_messages[2]
+    );
+    assert!(
+        r.level_messages[1] < r.level_messages[2],
+        "middle protocol {} should be rarer than the leaf protocol {}",
+        r.level_messages[1],
+        r.level_messages[2]
+    );
+}
