@@ -35,6 +35,8 @@ fn run(
         ..ClusterConfig::minihpc()
     };
     let cfg = DesConfig {
+        sched_path: Default::default(),
+        record_assignments: true,
         params: LoopParams::new(n, cluster.total_ranks()),
         technique: tech,
         model,

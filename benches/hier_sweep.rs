@@ -31,7 +31,7 @@
 
 use std::time::Instant;
 
-use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams};
+use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use dca_dls::des::{simulate, DesConfig};
 use dca_dls::report::json::Json;
 use dca_dls::substrate::delay::InjectedDelay;
@@ -55,6 +55,8 @@ fn run_on(
         (TechniqueKind::Ss, HierParams::default())
     };
     let cfg = DesConfig {
+        sched_path: Default::default(),
+        record_assignments: true,
         params: LoopParams::new(N, cluster.total_ranks()),
         technique,
         model,
@@ -112,6 +114,51 @@ fn main() {
         );
         (cca, dca, rma, h2, h3)
     };
+    // -- the huge-scale scenario (the zero-allocation DES-core target):
+    //    4096 ranks × 10⁷ iterations, FAC outer ▸ GSS inner, assignment
+    //    recording OFF, on both grant protocols. Before the calendar
+    //    queue + pre-sized state + optional recording, this cell did not
+    //    fit a bench run comfortably; now it's a regular sweep row.
+    let huge_label = "huge 4096r x 1e7 FAC>GSS";
+    let huge = |path: SchedPath| {
+        let cluster = ClusterConfig {
+            nodes: 256,
+            ranks_per_node: 16,
+            ..ClusterConfig::minihpc()
+        };
+        let mut cfg = DesConfig::new(
+            LoopParams::new(10_000_000, cluster.total_ranks()),
+            TechniqueKind::Fac2,
+            ExecutionModel::HierDca,
+            cluster,
+            IterationCost::Constant(1e-6),
+        )
+        .without_assignment_recording();
+        cfg.hier = HierParams::with_inner(TechniqueKind::Gss);
+        cfg.sched_path = path;
+        let r = simulate(&cfg).expect("simulate huge");
+        assert!(r.assignments.is_empty(), "recording was off");
+        assert!(r.stats.chunks > 100_000, "huge scenario really scheduled");
+        r
+    };
+    let huge_t0 = Instant::now();
+    let huge_2p = huge(SchedPath::TwoPhase);
+    let huge_lf = huge(SchedPath::LockFree);
+    println!(
+        "{huge_label:<28} HIER {:>9.5}  HIER-LF {:>9.5}  ({} events, {:?})",
+        huge_2p.t_par(),
+        huge_lf.t_par(),
+        huge_2p.events + huge_lf.events,
+        huge_t0.elapsed()
+    );
+    assert!(
+        huge_lf.t_par() <= huge_2p.t_par(),
+        "huge: lockfree {} must not exceed two-phase {}",
+        huge_lf.t_par(),
+        huge_2p.t_par()
+    );
+    assert!(huge_lf.fast_grants > 0 && huge_lf.stats.messages < huge_2p.stats.messages);
+
     println!("\n(ran in {:?})", t0.elapsed());
 
     // -- machine-readable export (CI regression gate) ------------------------
@@ -137,6 +184,12 @@ fn main() {
             .field("DCA-RMA", d3.2)
             .field("HIER-DCA", d3.3)
             .field("HIER-DCA(3)", d3.4),
+    );
+    rows.push(
+        Json::obj()
+            .field("scenario", huge_label)
+            .field("HIER-DCA", huge_2p.t_par())
+            .field("HIER-DCA-LOCKFREE", huge_lf.t_par()),
     );
     let doc = Json::obj()
         .field("bench", "hier_sweep")

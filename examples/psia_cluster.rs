@@ -33,6 +33,8 @@ fn main() -> anyhow::Result<()> {
         for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
             let cluster = ClusterConfig::minihpc();
             let cfg = DesConfig {
+                sched_path: Default::default(),
+                record_assignments: true,
                 params: LoopParams::new(262_144, cluster.total_ranks()),
                 technique: tech,
                 model,

@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Reference model of `benches/sched_throughput.rs` — generates the
+committed bench baseline (`benches/baselines/sched_throughput.json`).
+
+Reuses the line-faithful DES port in `hier_sweep_model.py`. Rows gate the
+deterministic virtual `t_par` of the flat DCA scenario per closed-form
+technique — and of the two-level FAC▸SS hierarchy — on BOTH grant
+protocols: the two-phase reserve/commit exchange ("TWO-PHASE") and the
+lock-free CAS fast path ("LOCKFREE"). AF is asserted inside the Rust bench
+(its lock-free run falls back to two-phase, so the paths are identical by
+construction) but carries no baseline row: the port does not model AF's
+measured-µ feedback loop.
+
+Wall-clock metrics (ns/grant, events/sec) are machine-dependent and live in
+the bench JSON's ungated "info" section only.
+
+Usage:  python3 python/tools/sched_throughput_model.py [out.json]
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import hier_sweep_model as m  # noqa: E402
+
+# Scenario constants — keep in lockstep with benches/sched_throughput.rs.
+N = 50_000
+NODES = 4
+RPN = 16
+COST = 1e-5
+TOL = 0.10
+
+# The bench's technique order (TechniqueKind::EVALUATED minus AF), by the
+# port's names; keys in the JSON use the Rust display names.
+TECHS = [
+    ("SS", "ss"),
+    ("STATIC", "static"),
+    ("FSC", "fsc"),
+    ("GSS", "gss"),
+    ("TAP", "tap"),
+    ("TSS", "tss"),
+    ("FAC", "fac2"),
+    ("TFSS", "tfss"),
+    ("FISS", "fiss"),
+    ("VISS", "viss"),
+    ("RND", "rnd"),
+    ("PLS", "pls"),
+]
+
+
+def flat_cell(tech, lockfree):
+    sim = m.FlatSim("dca", 0.0, 0.0, cluster=m.Cluster(nodes=NODES, rpn=RPN),
+                    tech=tech, n=N, cost=COST, lockfree=lockfree)
+    t = sim.run()
+    m.verify_coverage(sim.assignments, N)
+    return t, len(sim.assignments), sim.fast_grants
+
+
+def hier_cell(lockfree):
+    sim = m.TreeSim(N, ["fac2", "ss"], [NODES, RPN],
+                    cluster=m.Cluster(nodes=NODES, rpn=RPN), cost=COST,
+                    lockfree=lockfree)
+    t = sim.run()
+    m.verify_coverage(sim.assignments, N)
+    return t, len(sim.assignments), sim.fast_grants
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(__file__), "..", "..", "benches", "baselines",
+        "sched_throughput.json"
+    )
+    rows = []
+    for name, tech in TECHS:
+        t2, c2, f2 = flat_cell(tech, False)
+        tl, cl, fl = flat_cell(tech, True)
+        assert f2 == 0, name
+        assert c2 == cl, f"{name}: chunk counts differ ({c2} vs {cl})"
+        if tech in m.FAST_PATH:
+            assert fl == cl > 0, (name, fl, cl)
+            assert tl <= t2, f"{name}: lockfree {tl} > two-phase {t2}"
+        else:  # TAP falls back: identical runs
+            assert fl == 0 and tl == t2 and c2 == cl, name
+        print(f"DCA {name:7s} two-phase {t2:.5f}s ({c2} chunks)  "
+              f"lockfree {tl:.5f}s ({fl} CAS grants)  ratio {tl / t2:.3f}")
+        rows.append({"scenario": f"DCA {name}", "tol": TOL,
+                     "TWO-PHASE": t2, "LOCKFREE": tl})
+    t2, c2, _ = hier_cell(False)
+    tl, cl, fl = hier_cell(True)
+    assert fl > 0 and tl <= t2, (fl, tl, t2)
+    print(f"HIER FAC▸SS two-phase {t2:.5f}s ({c2} chunks)  "
+          f"lockfree {tl:.5f}s ({fl} CAS grants)  ratio {tl / t2:.3f}")
+    rows.append({"scenario": "HIER-DCA FAC▸SS", "tol": TOL,
+                 "TWO-PHASE": t2, "LOCKFREE": tl})
+
+    doc = {"bench": "sched_throughput", "n": N, "ranks": NODES * RPN,
+           "scenarios": rows}
+    out_path = os.path.normpath(out_path)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""Fuzz harness for the DES calendar queue (`rust/src/des/heap.rs`).
+
+`CalendarQueue` below is a line-faithful Python port of the Rust
+implementation — same ring size, bucket width, rewind-on-past-push,
+far-overflow migration, and full-rotation jump — fuzzed against Python's
+`heapq` with `(time, seq)` keys (the behavioral spec the old BinaryHeap
+implemented). Any ordering divergence or counter drift fails loudly.
+
+Run:  python3 python/tools/test_calendar_queue.py  [iterations]
+"""
+
+import heapq
+import random
+import sys
+
+BUCKETS = 256
+BUCKET_SHIFT = 12
+BUCKET_NS = 1 << BUCKET_SHIFT
+
+
+class CalendarQueue:
+    """Port of rust/src/des/heap.rs::EventHeap (per-bucket heaps + far)."""
+
+    def __init__(self):
+        self.wheel = [[] for _ in range(BUCKETS)]  # per-bucket heapq lists
+        self.far = []
+        self.floor_ns = 0
+        self.cursor = 0
+        self.wheel_len = 0
+        self.len = 0
+        self.next_seq = 0
+
+    @staticmethod
+    def bucket_of(at_ns):
+        return (at_ns >> BUCKET_SHIFT) & (BUCKETS - 1)
+
+    def horizon_end(self):
+        return self.floor_ns + BUCKETS * BUCKET_NS
+
+    def push(self, at_ns, event):
+        seq = self.next_seq
+        self.next_seq += 1
+        self.len += 1
+        if at_ns < self.floor_ns:
+            self.floor_ns = (at_ns >> BUCKET_SHIFT) << BUCKET_SHIFT
+            self.cursor = self.bucket_of(at_ns)
+        entry = (at_ns, seq, event)
+        if at_ns >= self.horizon_end():
+            heapq.heappush(self.far, entry)
+        else:
+            heapq.heappush(self.wheel[self.bucket_of(at_ns)], entry)
+            self.wheel_len += 1
+
+    def pop(self):
+        if self.len == 0:
+            return None
+        if self.wheel_len == 0:
+            self.jump_to(self.far[0][0])
+        advances = 0
+        while True:
+            slice_ = self.floor_ns >> BUCKET_SHIFT
+            bucket = self.wheel[self.cursor]
+            if bucket and (bucket[0][0] >> BUCKET_SHIFT) == slice_:
+                at, _seq, ev = heapq.heappop(bucket)
+                self.wheel_len -= 1
+                self.len -= 1
+                return (at, ev)
+            advances += 1
+            if advances > BUCKETS:
+                self.jump_to(self.global_min_at())
+                advances = 0
+                continue
+            self.advance_one()
+
+    def advance_one(self):
+        self.floor_ns += BUCKET_NS
+        self.cursor = (self.cursor + 1) & (BUCKETS - 1)
+        self.migrate_far()
+
+    def jump_to(self, at):
+        assert at >= self.floor_ns, "jump must not skip past queued events"
+        self.floor_ns = (at >> BUCKET_SHIFT) << BUCKET_SHIFT
+        self.cursor = self.bucket_of(at)
+        self.migrate_far()
+
+    def migrate_far(self):
+        horizon_end = self.horizon_end()
+        while self.far and self.far[0][0] < horizon_end:
+            entry = heapq.heappop(self.far)
+            heapq.heappush(self.wheel[self.bucket_of(entry[0])], entry)
+            self.wheel_len += 1
+
+    def global_min_at(self):
+        candidates = [b[0][:2] for b in self.wheel if b]
+        if self.far:
+            candidates.append(self.far[0][:2])
+        return min(candidates)[0]
+
+
+def fuzz(iterations, seed):
+    rng = random.Random(seed)
+    cal = CalendarQueue()
+    ref = []
+    ref_seq = 0
+    now = 0
+    ops = pops = 0
+    for _ in range(iterations):
+        # DES-like mix: mostly pushes at now + delta with deltas spanning
+        # same-slice bursts (ns) through far-window waits (tens of ms);
+        # occasionally pushes *behind* the last pop (legal, rewinds).
+        r = rng.random()
+        if r < 0.62 or not ref:
+            magnitude = rng.choice([1, 50, BUCKET_NS, BUCKET_NS * 4, 10**5, 10**7, 5 * 10**7])
+            at = now + rng.randrange(magnitude + 1)
+            if rng.random() < 0.01:
+                at = max(now - rng.randrange(BUCKET_NS * 3), 0)  # past push
+            cal.push(at, ref_seq)
+            heapq.heappush(ref, (at, ref_seq))
+            ref_seq += 1
+            ops += 1
+        else:
+            got = cal.pop()
+            want = heapq.heappop(ref)
+            assert got == (want[0], want[1]), f"pop mismatch: got {got}, want {want}"
+            # `now` only advances on in-order pops (past pushes can rewind).
+            now = max(now, got[0])
+            pops += 1
+    while ref:
+        want = heapq.heappop(ref)
+        got = cal.pop()
+        assert got == (want[0], want[1]), f"drain mismatch: got {got}, want {want}"
+        pops += 1
+    assert cal.pop() is None
+    assert cal.len == 0 and cal.wheel_len == 0 and not cal.far
+    return ops, pops
+
+
+def main():
+    iterations = int(sys.argv[1]) if len(sys.argv) > 1 else 20_000
+    for seed in range(20):
+        ops, pops = fuzz(iterations, seed)
+        print(f"seed {seed:2d}: {ops} pushes / {pops} pops ok")
+    print("calendar queue == heapq reference on every seed ✓")
+
+
+if __name__ == "__main__":
+    main()

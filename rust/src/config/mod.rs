@@ -91,6 +91,48 @@ pub enum DelaySite {
     Assignment,
 }
 
+/// Which grant protocol the self-scheduling chunk exchange uses.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum SchedPath {
+    /// The paper's two-phase reserve/commit message exchange (§4) at every
+    /// level — the default; all committed baselines run here.
+    #[default]
+    TwoPhase,
+    /// The lock-free fast path: techniques whose chunk size is a pure
+    /// function of the scheduling step (everything except the
+    /// measurement-coupled AF/TAP) reserve a chunk with a **single CAS** on
+    /// the ledger's packed `(start, seq)` word, sized by an array lookup in
+    /// the precomputed [`crate::techniques::ChunkTable`] — one atomic op
+    /// replacing the whole request/reply exchange (the arXiv 1901.02773
+    /// endpoint; on shared memory, a one-word CAS). AF/TAP levels, staged
+    /// prefetch refills, and cross-level fetches fall back to the two-phase
+    /// protocol; both paths emit the identical serial schedule.
+    LockFree,
+}
+
+impl SchedPath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPath::TwoPhase => "two-phase",
+            SchedPath::LockFree => "lockfree",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "two-phase" | "twophase" | "2p" => Some(SchedPath::TwoPhase),
+            "lockfree" | "lock-free" | "cas" => Some(SchedPath::LockFree),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for SchedPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// How a level master derives its prefetch watermark (the iteration count
 /// below which it requests the *next* chunk from its parent while the
 /// current one is still being consumed).
@@ -696,5 +738,16 @@ mod tests {
     #[test]
     fn paper_delays() {
         assert_eq!(ExperimentConfig::DELAYS, [0.0, 10e-6, 100e-6]);
+    }
+
+    #[test]
+    fn sched_path_parse_roundtrip() {
+        assert_eq!(SchedPath::default(), SchedPath::TwoPhase, "baselines stay two-phase");
+        for p in [SchedPath::TwoPhase, SchedPath::LockFree] {
+            assert_eq!(SchedPath::parse(p.name()), Some(p));
+        }
+        assert_eq!(SchedPath::parse("CAS"), Some(SchedPath::LockFree));
+        assert_eq!(SchedPath::parse("lock-free"), Some(SchedPath::LockFree));
+        assert_eq!(SchedPath::parse("???"), None);
     }
 }

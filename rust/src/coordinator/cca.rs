@@ -110,10 +110,7 @@ fn worker_loop(
         match env.payload {
             Msg::ToWorker(CoordMsg::Chunk(a)) => {
                 let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
-                out.checksum = out.checksum.wrapping_add(sum);
-                out.chunks += 1;
-                out.iters += a.size;
-                out.assignments.push(a);
+                out.record_chunk(sum, a);
                 report = Some(PerfReport { iters: a.size, elapsed });
             }
             Msg::ToWorker(CoordMsg::Done) => break,

@@ -22,18 +22,36 @@ use std::time::Instant;
 
 use super::protocol::{AfInfo, CoordMsg, Msg, PerfReport, WorkerMsg};
 use super::{execute_chunk, EngineConfig, RankSummary, RunResult};
+use crate::config::SchedPath;
+use crate::hier::protocol::{fast_len_ok, AtomicLedger};
 use crate::sched::WorkQueue;
 use crate::substrate::delay::spin_for;
 use crate::substrate::msg::{fabric, Endpoint};
 use crate::techniques::af::{af_chunk, AfCalculator, PeStats};
-use crate::techniques::{Technique, TechniqueKind};
+use crate::techniques::{ChunkTable, Technique, TechniqueKind};
 use crate::workload::Workload;
 
 /// Run the DCA two-sided engine: `P` worker threads + the coordinator
-/// service loop on the calling thread.
+/// service loop on the calling thread — or, on the lock-free fast path, no
+/// coordinator at all.
 pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<RunResult> {
     let p = cfg.params.p;
     anyhow::ensure!(p >= 1, "need at least one worker");
+    if cfg.sched_path == SchedPath::LockFree
+        && cfg.technique.supports_fast_path()
+        && fast_len_ok(cfg.params.n)
+    {
+        // The capped build doubles as the memory guard: an SS-like
+        // schedule beyond MAX_FAST_TABLE_STEPS falls back to the
+        // O(1)-memory two-phase protocol instead of materializing it.
+        if let Some(table) = ChunkTable::build_capped(
+            cfg.technique,
+            &cfg.params,
+            crate::techniques::MAX_FAST_TABLE_STEPS,
+        ) {
+            return run_lockfree(cfg, workload, Arc::new(table));
+        }
+    }
     let (mut eps, sent) = fabric::<Msg>(p + 1);
     let coord_ep = eps.pop().expect("coordinator endpoint");
     let barrier = Arc::new(Barrier::new(p as usize + 1));
@@ -51,6 +69,57 @@ pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<Ru
     let per_rank: Vec<RankSummary> =
         handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
     Ok(RunResult::assemble(per_rank, sent.load(Ordering::Relaxed)))
+}
+
+/// The lock-free DCA engine (§4 taken to the arXiv 1901.02773 endpoint, on
+/// shared memory): the reserve/commit message exchange collapses into **one
+/// CAS per chunk** on the shared packed `(start, seq)` word, with the chunk
+/// size an array lookup in the precomputed [`ChunkTable`]. No coordinator
+/// thread, no messages, no per-chunk calculation (hence no injected
+/// calculation delay — there is nothing left to slow down). The emitted
+/// schedule is the technique's canonical serial schedule: grant order ≡
+/// step order by construction.
+fn run_lockfree(
+    cfg: &EngineConfig,
+    workload: Arc<dyn Workload>,
+    table: Arc<ChunkTable>,
+) -> anyhow::Result<RunResult> {
+    let p = cfg.params.p;
+    let ledger = Arc::new(AtomicLedger::new());
+    ledger.publish(1, 0, table);
+    let barrier = Arc::new(Barrier::new(p as usize));
+    let mut handles = Vec::with_capacity(p as usize);
+    for rank in 0..p {
+        let w = Arc::clone(&workload);
+        let b = Arc::clone(&barrier);
+        let l = Arc::clone(&ledger);
+        handles.push(thread::spawn(move || lockfree_worker(rank, &l, w, &b)));
+    }
+    let per_rank: Vec<RankSummary> =
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+    Ok(RunResult::assemble(per_rank, 0))
+}
+
+/// Lock-free worker: CAS-grant → execute, until the table drains.
+fn lockfree_worker(
+    rank: u32,
+    ledger: &AtomicLedger,
+    workload: Arc<dyn Workload>,
+    barrier: &Barrier,
+) -> RankSummary {
+    let mut out = RankSummary { rank, ..Default::default() };
+    barrier.wait();
+    let t0 = Instant::now();
+    loop {
+        let t_req = Instant::now();
+        let Some((a, _remaining, _seq)) = ledger.try_grant() else { break };
+        out.sched_wait += t_req.elapsed().as_secs_f64();
+        out.fast_grants += 1;
+        let (sum, _elapsed) = execute_chunk(workload.as_ref(), a);
+        out.record_chunk(sum, a);
+    }
+    out.finish = t0.elapsed().as_secs_f64();
+    out
 }
 
 /// Coordinator service loop — assignment only, O(1) work per message.
@@ -165,10 +234,7 @@ fn worker_loop(
         match env.payload {
             Msg::ToWorker(CoordMsg::Chunk(a)) => {
                 let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
-                out.checksum = out.checksum.wrapping_add(sum);
-                out.chunks += 1;
-                out.iters += a.size;
-                out.assignments.push(a);
+                out.record_chunk(sum, a);
                 my_stats.record(a.size, elapsed);
                 report = Some(PerfReport { iters: a.size, elapsed });
             }
@@ -224,6 +290,49 @@ mod tests {
     fn af_needs_no_closed_form_but_covers() {
         let r = run_kind(TechniqueKind::Af, 4_000, 4);
         verify_coverage(&r.sorted_assignments(), 4_000).unwrap();
+    }
+
+    /// The lock-free engine covers the loop with zero messages, the
+    /// canonical serial schedule (identical to `closed_form_schedule`), and
+    /// every grant accounted as a CAS.
+    #[test]
+    fn lockfree_covers_with_canonical_schedule_and_zero_messages() {
+        use crate::sched::closed_form_schedule;
+        const N: u64 = 20_000;
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 5e-8, CostShape::Uniform, 3));
+        for kind in TechniqueKind::EVALUATED {
+            if !kind.supports_fast_path() {
+                continue;
+            }
+            let params = LoopParams::new(N, 4);
+            let cfg = EngineConfig::new(params.clone(), kind, ExecutionModel::Dca).with_lockfree();
+            let r = run(&cfg, Arc::clone(&w)).unwrap_or_else(|e| panic!("{kind}: {e}"));
+            let sorted = r.sorted_assignments();
+            verify_coverage(&sorted, N).unwrap_or_else(|e| panic!("{kind}: {e}"));
+            assert_eq!(r.stats.messages, 0, "{kind}: the coordinator disappeared");
+            assert_eq!(r.fast_grants, r.stats.chunks, "{kind}: every grant is a CAS");
+            let tech = Technique::new(kind, &params);
+            assert_eq!(
+                sorted,
+                closed_form_schedule(&tech, &params),
+                "{kind}: CAS grants must emit the canonical serial schedule"
+            );
+        }
+    }
+
+    /// AF/TAP requested with the lock-free path fall back to the two-phase
+    /// engine (measurement-coupled sizing cannot be tabulated).
+    #[test]
+    fn lockfree_falls_back_for_measurement_coupled_techniques() {
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(4_000, 5e-8, CostShape::Uniform, 3));
+        for kind in [TechniqueKind::Af, TechniqueKind::Tap] {
+            let cfg = EngineConfig::new(LoopParams::new(4_000, 4), kind, ExecutionModel::Dca)
+                .with_lockfree();
+            let r = run(&cfg, Arc::clone(&w)).unwrap();
+            verify_coverage(&r.sorted_assignments(), 4_000).unwrap();
+            assert_eq!(r.fast_grants, 0, "{kind}: no CAS grants on the fallback");
+            assert!(r.stats.messages > 0, "{kind}: two-phase protocol ran");
+        }
     }
 
     #[test]

@@ -71,10 +71,7 @@ fn worker_loop(
         let Some(a) = window.claim(step, k) else { break };
         out.sched_wait += t_claim.elapsed().as_secs_f64();
         let (sum, _elapsed) = execute_chunk(workload.as_ref(), a);
-        out.checksum = out.checksum.wrapping_add(sum);
-        out.chunks += 1;
-        out.iters += a.size;
-        out.assignments.push(a);
+        out.record_chunk(sum, a);
     }
     out.finish = t0.elapsed().as_secs_f64();
     out

@@ -47,8 +47,11 @@ use std::time::Instant;
 
 use super::protocol::{AfInfo, PerfReport};
 use super::{execute_chunk, EngineConfig, RankSummary, RunResult};
-use crate::config::WatermarkMode;
-use crate::hier::protocol::{auto_watermark, with_np, InnerCommit, NodeLedger, RttEwma};
+use crate::config::{SchedPath, WatermarkMode};
+use crate::hier::protocol::{
+    auto_watermark, fast_len_ok, with_np, AtomicLedger, FastLedger, InnerCommit, NodeLedger,
+    RttEwma,
+};
 use crate::sched::Assignment;
 use crate::substrate::delay::spin_for;
 use crate::substrate::msg::{fabric, Endpoint};
@@ -111,6 +114,11 @@ enum Msg {
     MChunk { level: u32, a: Assignment },
     /// Parent reply: the parent's share of the loop is exhausted.
     MDone { level: u32 },
+    /// Lock-free leaf only: a worker noticed the published chunk draining
+    /// to the fixed watermark and nudges its master to prefetch — the
+    /// master cannot observe CAS grants, so the watermark signal must
+    /// travel as a message (once per chunk `seq`).
+    Nudge { rank: u32 },
 }
 
 /// Block-placement geometry of the scheduling tree: a resolved
@@ -201,12 +209,33 @@ pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<Ru
         "the threaded hierarchical engine needs ≥ 2 levels; a depth-1 tree IS the \
          flat DCA protocol — run `--model dca` instead (the DES supports --levels 1)"
     );
-    let fanouts = plan.levels.iter().map(|l| l.fanout).collect();
+    let fanouts: Vec<u32> = plan.levels.iter().map(|l| l.fanout).collect();
     let geom = Geom { plan, fanouts, p };
     let (mut eps, _sent) = fabric::<Msg>(p + 1);
     let coord_ep = eps.pop().expect("coordinator endpoint");
     let barrier = Arc::new(Barrier::new(p as usize + 1));
     let tally = Arc::new(Tally::new(geom.k()));
+
+    // Lock-free leaf level: one shared CAS ledger per lowest-level group;
+    // local ranks grant straight off it, the master stages/publishes into
+    // it. AF/TAP leaves (and over-long loops) stay two-phase.
+    let leaf_fanout = geom.fanouts[geom.k() - 1];
+    let leaf_tech = cfg.hier.tech_of_level(geom.k() - 1, cfg.technique);
+    let fast_leaf = cfg.sched_path == SchedPath::LockFree
+        && leaf_tech.supports_fast_path()
+        && fast_len_ok(cfg.params.n)
+        // Memory guard: probe the worst-case leaf table (a node chunk can
+        // be as long as the whole loop) under the step cap; a schedule too
+        // big to tabulate keeps the leaf on the two-phase protocol.
+        && crate::techniques::ChunkTable::build_capped(
+            leaf_tech,
+            &with_np(&cfg.params, cfg.params.n, leaf_fanout),
+            crate::techniques::MAX_FAST_TABLE_STEPS,
+        )
+        .is_some();
+    let shared_leaf: Option<Vec<Arc<AtomicLedger>>> = fast_leaf.then(|| {
+        (0..p / leaf_fanout).map(|_| Arc::new(AtomicLedger::new())).collect()
+    });
 
     let mut handles = Vec::with_capacity(p as usize);
     for ep in eps {
@@ -216,11 +245,14 @@ pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<Ru
         let t = Arc::clone(&tally);
         let c = cfg.clone();
         let g = geom.clone();
+        let shared = shared_leaf
+            .as_ref()
+            .map(|v| Arc::clone(&v[(rank / leaf_fanout) as usize]));
         handles.push(thread::spawn(move || {
             if rank % g.fanouts[g.k() - 1] == 0 {
-                TreeMaster::new(c, g, ep, w, t).run(&b)
+                TreeMaster::new(c, g, ep, w, t, shared).run(&b)
             } else {
-                worker_loop(&c, &g, ep, w, &b, &t)
+                worker_loop(&c, &g, ep, w, &b, &t, shared)
             }
         }));
     }
@@ -365,6 +397,10 @@ struct TreeMaster {
     /// Personas hosted here, ascending by level; the last one serves the
     /// leaf protocol and backs the own worker personality.
     personas: Vec<TPersona>,
+    /// Lock-free leaf ledger (Some ⇒ the leaf persona's `NodeLedger` is
+    /// bypassed: local ranks CAS-grant off the shared word, this master
+    /// stages/publishes installs and serves slow-path refills).
+    fast: Option<FastLedger>,
     /// The rank's own worker-personality statistics (AF µ/σ + the adaptive
     /// execution slice's per-iteration cost).
     my_stats: PeStats,
@@ -378,10 +414,21 @@ impl TreeMaster {
         ep: Endpoint<Msg>,
         workload: Arc<dyn Workload>,
         tally: Arc<Tally>,
+        fast_shared: Option<Arc<AtomicLedger>>,
     ) -> Self {
         let rank = ep.rank();
         let n = cfg.params.n;
         let staged_cap = cfg.hier.staged_capacity();
+        let k1 = geom.k() - 1;
+        let fast = fast_shared.map(|shared| {
+            FastLedger::new(
+                shared,
+                cfg.hier.tech_of_level(k1, cfg.technique),
+                &cfg.params,
+                geom.fanouts[k1],
+                staged_cap,
+            )
+        });
         let personas = geom
             .levels_of(rank)
             .into_iter()
@@ -416,8 +463,17 @@ impl TreeMaster {
             workload,
             tally,
             personas,
+            fast,
             my_stats: PeStats::default(),
             out: RankSummary { rank, ..Default::default() },
+        }
+    }
+
+    /// Unassigned work at the leaf level, whichever ledger form holds it.
+    fn leaf_has_work(&self) -> bool {
+        match &self.fast {
+            Some(f) => f.has_work(),
+            None => self.personas[self.leaf_slot()].ledger.has_work(),
         }
     }
 
@@ -451,7 +507,7 @@ impl TreeMaster {
             if self.finished() {
                 break;
             }
-            if self.personas[self.leaf_slot()].ledger.has_work() {
+            if self.leaf_has_work() {
                 self.own_step();
                 continue;
             }
@@ -488,7 +544,9 @@ impl TreeMaster {
             } else {
                 self.geom.fanouts[pr.level]
             };
-            pr.global_done && !pr.ledger.has_work() && pr.done_sent == target
+            let has_work =
+                if pr.level == k1 { self.leaf_has_work() } else { pr.ledger.has_work() };
+            pr.global_done && !has_work && pr.done_sent == target
         })
     }
 
@@ -532,7 +590,17 @@ impl TreeMaster {
             Msg::Get { rank, report } => {
                 let slot = self.leaf_slot();
                 self.record_child_report(slot, rank % self.geom.fanouts[self.geom.k() - 1], report);
-                self.serve_get(rank);
+                if self.fast.is_some() {
+                    self.serve_get_fast(rank);
+                } else {
+                    self.serve_get(rank);
+                }
+            }
+            Msg::Nudge { rank: _ } => {
+                // Lock-free prefetch signal: a worker saw the published
+                // chunk drain to the fixed watermark.
+                let slot = self.leaf_slot();
+                self.after_grant(slot);
             }
             Msg::Commit { rank, step, size, seq } => {
                 // Leaf chunk ASSIGNMENT — serialized on this rank's CPU, but
@@ -673,7 +741,9 @@ impl TreeMaster {
         let parked = std::mem::take(&mut self.personas[slot].parked);
         let leaf = self.personas[slot].level == self.geom.k() - 1;
         for child in parked {
-            if leaf {
+            if leaf && self.fast.is_some() {
+                self.serve_get_fast(child);
+            } else if leaf {
                 self.serve_get(child);
             } else {
                 self.serve_mget(slot, child);
@@ -700,8 +770,35 @@ impl TreeMaster {
     /// has room).
     fn after_grant(&mut self, slot: usize) {
         let watermark = self.watermark(slot);
-        if self.personas[slot].ledger.wants_prefetch(watermark) {
+        let wants = match &self.fast {
+            Some(f) if slot == self.leaf_slot() => f.wants_prefetch(watermark),
+            _ => self.personas[slot].ledger.wants_prefetch(watermark),
+        };
+        if wants {
             self.fetch(slot);
+        }
+    }
+
+    /// Serve a leaf phase-1 request on the lock-free path (reached through
+    /// the slow-path refill: a worker found the CAS word drained): the
+    /// master performs the fused grant on the worker's behalf — promoting
+    /// staged chunks — or parks it behind a parent fetch.
+    fn serve_get_fast(&mut self, rank: u32) {
+        let slot = self.leaf_slot();
+        match self.fast.as_mut().expect("fast leaf mode").grant() {
+            Some((a, _remaining)) => {
+                self.out.fast_grants += 1;
+                self.send_worker(rank, Msg::Chunk(a));
+                self.after_grant(slot);
+            }
+            None if self.personas[slot].global_done => {
+                self.send_worker(rank, Msg::Done);
+                self.personas[slot].done_sent += 1;
+            }
+            None => {
+                self.personas[slot].parked.push(rank);
+                self.fetch(slot);
+            }
         }
     }
 
@@ -729,8 +826,9 @@ impl TreeMaster {
     }
 
     /// Install a chunk fetched over the parent protocol into persona
-    /// `slot`'s ledger.
+    /// `slot`'s ledger (the lock-free form at a fast leaf).
     fn install(&mut self, slot: usize, a: Assignment) {
+        let leaf = self.personas[slot].level == self.geom.k() - 1;
         let pr = &mut self.personas[slot];
         pr.rtt.observe(pr.fetch_sent.elapsed().as_secs_f64());
         pr.fetching = false;
@@ -738,7 +836,10 @@ impl TreeMaster {
             pr.installed_at = Instant::now();
         }
         pr.installed_iters += a.size;
-        pr.ledger.install(a);
+        match &mut self.fast {
+            Some(f) if leaf => f.install(a),
+            _ => pr.ledger.install(a),
+        }
         self.unpark(slot);
     }
 
@@ -779,9 +880,22 @@ impl TreeMaster {
 
     /// One self-scheduling step of the rank's own personality against the
     /// leaf persona's ledger: reserve → calculate (paying the injected
-    /// delay) → commit → execute.
+    /// delay) → commit → execute. On the lock-free path the whole exchange
+    /// is one CAS (racing fairly with this group's local ranks) and no
+    /// calculation delay exists to pay.
     fn own_step(&mut self) {
         let slot = self.leaf_slot();
+        if let Some(f) = self.fast.as_mut() {
+            match f.grant() {
+                Some((a, _remaining)) => {
+                    self.out.fast_grants += 1;
+                    self.after_grant(slot);
+                    self.execute_own(a);
+                }
+                None => self.fetch(slot),
+            }
+            return;
+        }
         let Some((step, remaining, seq)) = self.personas[slot].ledger.reserve() else { return };
         spin_for(self.cfg.delay.calculation);
         let size = self.own_calc(slot, step, remaining, seq);
@@ -836,10 +950,7 @@ impl TreeMaster {
             }
         }
         let elapsed = t.elapsed().as_secs_f64();
-        self.out.checksum = self.out.checksum.wrapping_add(sum);
-        self.out.chunks += 1;
-        self.out.iters += a.size;
-        self.out.assignments.push(a);
+        self.out.record_chunk(sum, a);
         self.my_stats.record(a.size, elapsed);
         let slot = self.leaf_slot();
         if let Some(af) = self.personas[slot].af_calc.as_mut() {
@@ -852,7 +963,9 @@ impl TreeMaster {
 // leaf ranks
 
 /// A leaf rank: flat-DCA-style two-phase self-scheduling against its
-/// lowest-level master, with the chunk `seq` threaded through both phases.
+/// lowest-level master, with the chunk `seq` threaded through both phases —
+/// or, on the lock-free fast path, straight CAS grants off the group's
+/// shared ledger word.
 fn worker_loop(
     cfg: &EngineConfig,
     geom: &Geom,
@@ -860,7 +973,11 @@ fn worker_loop(
     workload: Arc<dyn Workload>,
     barrier: &Barrier,
     tally: &Tally,
+    fast: Option<Arc<AtomicLedger>>,
 ) -> RankSummary {
+    if let Some(ledger) = fast {
+        return lockfree_leaf_loop(cfg, geom, ep, &ledger, workload, barrier, tally);
+    }
     let rank = ep.rank();
     let k1 = geom.k() - 1;
     let leaf_fanout = geom.fanouts[k1];
@@ -914,16 +1031,79 @@ fn worker_loop(
                 }
                 Msg::Chunk(a) => {
                     let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
-                    out.checksum = out.checksum.wrapping_add(sum);
-                    out.chunks += 1;
-                    out.iters += a.size;
-                    out.assignments.push(a);
+                    out.record_chunk(sum, a);
                     my_stats.record(a.size, elapsed);
                     report = Some(PerfReport { iters: a.size, elapsed });
                     break;
                 }
                 Msg::Done => break 'outer,
                 other => panic!("rank {rank}: unexpected {other:?}"),
+            }
+        }
+    }
+    out.finish = t0.elapsed().as_secs_f64();
+    out
+}
+
+/// The lock-free leaf loop: CAS-grant off the shared word; when it drains,
+/// fall back to the two-phase slow path (`Get` → the master promotes a
+/// staged chunk / parks us behind a parent fetch → `Chunk` or `Done`).
+/// Under a fixed prefetch watermark the worker nudges its master once per
+/// chunk when the tail crosses the watermark — the master cannot observe
+/// CAS grants, so the signal travels as a message.
+fn lockfree_leaf_loop(
+    cfg: &EngineConfig,
+    geom: &Geom,
+    ep: Endpoint<Msg>,
+    ledger: &AtomicLedger,
+    workload: Arc<dyn Workload>,
+    barrier: &Barrier,
+    tally: &Tally,
+) -> RankSummary {
+    let rank = ep.rank();
+    let k1 = geom.k() - 1;
+    let leaf_fanout = geom.fanouts[k1];
+    let master = rank - rank % leaf_fanout;
+    let fixed_watermark = match cfg.hier.watermark {
+        WatermarkMode::Fixed(w) => Some(w),
+        // Auto/Off: prefetch is the master's drain-time concern only.
+        _ => None,
+    };
+    let mut nudged_seq = 0u64;
+    let mut out = RankSummary { rank, ..Default::default() };
+    let send = |dst: u32, msg: Msg| {
+        tally.count(geom, k1, rank, dst);
+        ep.send(dst, msg).expect("master hung up early");
+    };
+    let execute = |out: &mut RankSummary, a: Assignment| {
+        let (sum, _elapsed) = execute_chunk(workload.as_ref(), a);
+        out.record_chunk(sum, a);
+    };
+    barrier.wait();
+    let t0 = Instant::now();
+    'outer: loop {
+        let t_req = Instant::now();
+        match ledger.try_grant() {
+            Some((a, remaining, seq)) => {
+                out.sched_wait += t_req.elapsed().as_secs_f64();
+                out.fast_grants += 1;
+                if let Some(wm) = fixed_watermark {
+                    if remaining <= wm && nudged_seq != seq {
+                        nudged_seq = seq;
+                        send(master, Msg::Nudge { rank });
+                    }
+                }
+                execute(&mut out, a);
+            }
+            None => {
+                send(master, Msg::Get { rank, report: None });
+                let env = ep.recv().expect("master hung up early");
+                out.sched_wait += t_req.elapsed().as_secs_f64();
+                match env.payload {
+                    Msg::Chunk(a) => execute(&mut out, a),
+                    Msg::Done => break 'outer,
+                    other => panic!("rank {rank}: unexpected {other:?}"),
+                }
             }
         }
     }

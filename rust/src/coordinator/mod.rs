@@ -31,7 +31,7 @@ pub mod protocol;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::{ExecutionModel, HierParams};
+use crate::config::{ExecutionModel, HierParams, SchedPath};
 use crate::metrics::LoopStats;
 use crate::sched::Assignment;
 use crate::substrate::delay::InjectedDelay;
@@ -53,6 +53,12 @@ pub struct EngineConfig {
     /// `params.p`; block placement); deeper trees take explicit fan-outs
     /// from `hier`. Ignored by the flat engines.
     pub nodes: u32,
+    /// Grant protocol: the default two-phase message exchange, or the
+    /// lock-free CAS fast path ([`SchedPath::LockFree`]) — a real one-word
+    /// CAS on the shared packed ledger here, applied by [`dca`] (the whole
+    /// coordinator disappears) and by [`hier`]'s leaf level. AF/TAP and the
+    /// other models ignore it.
+    pub sched_path: SchedPath,
 }
 
 impl EngineConfig {
@@ -64,7 +70,14 @@ impl EngineConfig {
             delay: InjectedDelay::none(),
             hier: HierParams::default(),
             nodes: 1,
+            sched_path: SchedPath::default(),
         }
+    }
+
+    /// Switch the grant protocol to the lock-free CAS fast path.
+    pub fn with_lockfree(mut self) -> Self {
+        self.sched_path = SchedPath::LockFree;
+        self
     }
 }
 
@@ -82,8 +95,21 @@ pub struct RankSummary {
     pub sched_wait: f64,
     /// Wrapping-sum checksum of executed iterations.
     pub checksum: u64,
+    /// Lock-free CAS grants this rank performed ([`SchedPath::LockFree`]).
+    pub fast_grants: u64,
     /// The chunks, for coverage verification.
     pub assignments: Vec<Assignment>,
+}
+
+impl RankSummary {
+    /// Account one executed chunk (checksum, counters, coverage log) — the
+    /// single definition every engine's execution site folds through.
+    pub(crate) fn record_chunk(&mut self, sum: u64, a: Assignment) {
+        self.checksum = self.checksum.wrapping_add(sum);
+        self.chunks += 1;
+        self.iters += a.size;
+        self.assignments.push(a);
+    }
 }
 
 /// Outcome of one engine run.
@@ -107,6 +133,9 @@ pub struct RunResult {
     /// tree level under [`hier`] (`Σ = stats.messages`), a single entry for
     /// the flat engines.
     pub level_messages: Vec<u64>,
+    /// Chunks granted through the lock-free CAS fast path (summed over
+    /// ranks); 0 on the two-phase path.
+    pub fast_grants: u64,
 }
 
 impl RunResult {
@@ -117,6 +146,7 @@ impl RunResult {
         let chunks = per_rank.iter().map(|r| r.chunks).sum();
         let wait = per_rank.iter().map(|r| r.sched_wait).sum();
         let checksum = per_rank.iter().fold(0u64, |a, r| a.wrapping_add(r.checksum));
+        let fast_grants = per_rank.iter().map(|r| r.fast_grants).sum();
         RunResult {
             stats: LoopStats::from_finish_times(&finish, chunks, wait, messages),
             per_rank,
@@ -124,6 +154,7 @@ impl RunResult {
             intra_node_messages: messages,
             inter_node_messages: 0,
             level_messages: vec![messages],
+            fast_grants,
         }
     }
 
@@ -146,7 +177,7 @@ impl RunResult {
     pub fn sorted_assignments(&self) -> Vec<Assignment> {
         let mut v: Vec<Assignment> =
             self.per_rank.iter().flat_map(|r| r.assignments.iter().copied()).collect();
-        v.sort_by_key(|a| a.start);
+        v.sort_unstable_by_key(|a| a.start);
         v
     }
 }

@@ -23,7 +23,7 @@ pub mod heap;
 
 use std::collections::VecDeque;
 
-use crate::config::{ClusterConfig, ExecutionModel, HierParams};
+use crate::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use crate::coordinator::protocol::{AfInfo, PerfReport};
 use crate::metrics::LoopStats;
 use crate::sched::{Assignment, StepTicket, WorkQueue};
@@ -51,6 +51,17 @@ pub struct DesConfig {
     /// prefetch policy), used only by [`ExecutionModel::HierDca`] (the
     /// outer technique is `technique`; see [`crate::hier`]).
     pub hier: HierParams,
+    /// Grant protocol: the default two-phase reserve/commit exchange, or
+    /// the lock-free CAS fast path for closed-form techniques
+    /// ([`SchedPath::LockFree`] — modeled as a single atomic op at the
+    /// ledger host, cf. DCA-RMA). Applies to `Dca` and `HierDca` (leaf
+    /// level); CCA and DCA-RMA ignore it.
+    pub sched_path: SchedPath,
+    /// Record every granted [`Assignment`] in [`DesResult::assignments`]
+    /// (on by default — coverage tests need it). Huge-scale scenarios turn
+    /// this off: a 4096-rank × 10⁷-iteration SS run would otherwise log
+    /// 10⁷ × 24 bytes of grants nobody reads.
+    pub record_assignments: bool,
 }
 
 impl DesConfig {
@@ -70,7 +81,21 @@ impl DesConfig {
             cost,
             pe_speed: vec![],
             hier: HierParams::default(),
+            sched_path: SchedPath::default(),
+            record_assignments: true,
         }
+    }
+
+    /// Switch the grant protocol to the lock-free CAS fast path.
+    pub fn with_lockfree(mut self) -> Self {
+        self.sched_path = SchedPath::LockFree;
+        self
+    }
+
+    /// Disable assignment recording (huge-scale scenarios).
+    pub fn without_assignment_recording(mut self) -> Self {
+        self.record_assignments = false;
+        self
     }
 }
 
@@ -96,12 +121,28 @@ pub struct DesResult {
     /// tree level under `HierDca` (`Σ = stats.messages`), a single entry for
     /// the flat message-passing models, `[0]` for DCA-RMA (no messages).
     pub level_messages: Vec<u64>,
+    /// Chunks granted through the lock-free CAS fast path
+    /// ([`SchedPath::LockFree`]); 0 on the two-phase path and for
+    /// ineligible (AF/TAP) techniques.
+    pub fast_grants: u64,
+    /// Total DES events dispatched — the denominator of the
+    /// `sched_throughput` bench's events/sec metric.
+    pub events: u64,
 }
 
 impl DesResult {
     /// `T_loop^par` in seconds — the Figs. 4–5 metric.
     pub fn t_par(&self) -> f64 {
         self.stats.t_par
+    }
+
+    /// The recorded assignments sorted by `start` — the serial-schedule
+    /// form coverage and equivalence tests compare. Sorts 4-byte indices
+    /// instead of cloning-then-sorting the 24-byte records.
+    pub fn sorted_assignments(&self) -> Vec<Assignment> {
+        let mut idx: Vec<u32> = (0..self.assignments.len() as u32).collect();
+        idx.sort_unstable_by_key(|&i| self.assignments[i as usize].start);
+        idx.iter().map(|&i| self.assignments[i as usize]).collect()
     }
 }
 
@@ -167,6 +208,10 @@ enum Reply {
 enum RmaOp {
     Reserve,
     Claim { step: u64, size: u64 },
+    /// Lock-free DCA fast path: reserve + table lookup + commit in ONE
+    /// atomic op at the ledger host — the whole two-phase exchange
+    /// collapsed into a single CAS (cf. arXiv 1901.02773's fetch-and-op).
+    Fused,
 }
 
 /// Rank 0's worker personality state.
@@ -197,6 +242,21 @@ struct WorkerState {
     last_report: Option<PerfReport>,
 }
 
+/// Pre-sized (or empty) grant log, honoring `record_assignments`.
+pub(crate) fn assignments_buffer(cfg: &DesConfig) -> Vec<Assignment> {
+    if cfg.record_assignments {
+        // Chunk-count heuristic: a handful of chunks per rank for every
+        // technique except SS (one per iteration). Reserving avoids the
+        // repeated doubling that dominated allocation in message-heavy
+        // cells; over-reserve is bounded by N.
+        let per_rank = if cfg.technique == TechniqueKind::Ss { u64::MAX } else { 24 };
+        let est = per_rank.saturating_mul(cfg.params.p as u64).min(cfg.params.n);
+        Vec::with_capacity(est as usize)
+    } else {
+        Vec::new()
+    }
+}
+
 // ---------------------------------------------------------------------------
 
 struct Sim<'a> {
@@ -224,36 +284,49 @@ struct Sim<'a> {
     intra_msgs: u64,
     inter_msgs: u64,
     assignments: Vec<Assignment>,
+    chunks_granted: u64,
     done_replies: u32,
+    /// Lock-free fast path active (Dca + LockFree + closed-form technique).
+    lockfree: bool,
+    fast_grants: u64,
+    events: u64,
 }
 
 impl<'a> Sim<'a> {
     fn new(cfg: &'a DesConfig) -> Self {
         let technique = Technique::new(cfg.technique, &cfg.params);
         let af = (cfg.technique == TechniqueKind::Af).then(|| AfCalculator::new(&cfg.params));
+        let p = cfg.params.p as usize;
+        let lockfree = cfg.sched_path == SchedPath::LockFree
+            && cfg.model == ExecutionModel::Dca
+            && cfg.technique.supports_fast_path();
         Sim {
             cfg,
             topo: Topology::new(&cfg.cluster),
-            heap: EventHeap::new(),
+            heap: EventHeap::with_capacity(2 * p),
             now: 0,
             queue: WorkQueue::from_params(&cfg.params),
             recursive: technique.fresh_recursive(),
             technique,
             af,
-            svc_queue: VecDeque::new(),
+            svc_queue: VecDeque::with_capacity(p),
             rank0_busy: false,
             own: OwnState::NeedWork,
             rank0_finish_ns: 0,
             rank0_service_ns: 0,
-            nic_queue: VecDeque::new(),
+            nic_queue: VecDeque::with_capacity(p),
             nic_busy: false,
             rma_ops: 0,
-            workers: vec![WorkerState::default(); cfg.params.p as usize],
+            workers: vec![WorkerState::default(); p],
             messages: 0,
             intra_msgs: 0,
             inter_msgs: 0,
-            assignments: Vec::new(),
+            assignments: assignments_buffer(cfg),
+            chunks_granted: 0,
             done_replies: 0,
+            lockfree,
+            fast_grants: 0,
+            events: 0,
         }
     }
 
@@ -324,6 +397,19 @@ impl<'a> Sim<'a> {
 
     fn run(&mut self) {
         match self.cfg.model {
+            ExecutionModel::Dca if self.lockfree => {
+                // Lock-free fast path: no coordinator personality at all —
+                // every computing rank self-schedules through single fused
+                // atomic ops at the ledger host (rank 0's memory). Rank 0
+                // still computes (it is Dca) unless configured dedicated.
+                for w in 1..self.p() {
+                    self.send_fused(w, 0);
+                }
+                if self.rank0_computes() {
+                    self.send_fused(0, 0);
+                }
+                self.own = OwnState::Finished;
+            }
             ExecutionModel::Cca | ExecutionModel::Dca => {
                 // Workers 1..P send their first request; rank 0 kicks itself.
                 for w in 1..self.p() {
@@ -347,6 +433,7 @@ impl<'a> Sim<'a> {
         while let Some((t, ev)) = self.heap.pop() {
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;
+            self.events += 1;
             self.dispatch(ev);
         }
     }
@@ -406,6 +493,13 @@ impl<'a> Sim<'a> {
         self.rma_ops += 1;
         let at = self.now + delay_extra + self.lat_ns(w, 0);
         self.heap.push(at, Ev::NicArrive { w, op });
+    }
+
+    /// Issue one fused lock-free grant op (not a message, not an RMA op —
+    /// counted as a fast grant when it lands work).
+    fn send_fused(&mut self, w: u32, delay_extra: u64) {
+        let at = self.now + delay_extra + self.lat_ns(w, 0);
+        self.heap.push(at, Ev::NicArrive { w, op: RmaOp::Fused });
     }
 
     fn worker_send_request(&mut self, w: u32, extra_ns: u64) {
@@ -603,7 +697,10 @@ impl<'a> Sim<'a> {
     }
 
     fn grant(&mut self, w: u32, a: Assignment) {
-        self.assignments.push(a);
+        self.chunks_granted += 1;
+        if self.cfg.record_assignments {
+            self.assignments.push(a);
+        }
         let ws = &mut self.workers[w as usize];
         ws.chunks += 1;
         ws.iters += a.size;
@@ -655,6 +752,7 @@ impl<'a> Sim<'a> {
     fn worker_on_exec_done(&mut self, w: u32) {
         self.workers[w as usize].finish_ns = self.now;
         match self.cfg.model {
+            ExecutionModel::Dca if self.lockfree => self.send_fused(w, 0),
             ExecutionModel::Cca | ExecutionModel::Dca => self.worker_send_request(w, 0),
             ExecutionModel::DcaRma => self.send_nic(w, RmaOp::Reserve, 0),
             ExecutionModel::HierDca => unreachable!("HierDca runs in hier::simulate_hier"),
@@ -704,6 +802,32 @@ impl<'a> Sim<'a> {
                     }
                 }
             }
+            RmaOp::Fused => {
+                // One CAS at the ledger host: reserve, array lookup, and
+                // commit in a single `service_time` occupancy. The table
+                // lookup replaces the chunk calculation, so neither
+                // `calc_time` nor the injected calculation delay is paid —
+                // that is the measured payoff of the fast path. Fusing
+                // keeps grant order ≡ step order, so the schedule is the
+                // technique's canonical serial schedule.
+                let granted = self
+                    .queue
+                    .begin_step()
+                    .map(|t| (t, self.technique.closed_chunk(t.step)))
+                    .and_then(|(t, size)| self.queue.commit(t, size));
+                match granted {
+                    Some(a) => {
+                        self.fast_grants += 1;
+                        self.grant(w, a);
+                        let start_exec = self.now + dur + self.lat_ns(0, w);
+                        let exec = self.exec_ns(w, a);
+                        self.heap.push(start_exec + exec, Ev::ExecDone { w });
+                    }
+                    None => {
+                        self.workers[w as usize].finish_ns = self.now + dur + self.lat_ns(0, w);
+                    }
+                }
+            }
         }
         self.heap.push(self.now + dur, Ev::NicFree);
         self.nic_busy = true;
@@ -716,10 +840,9 @@ impl<'a> Sim<'a> {
         if self.cfg.model != ExecutionModel::DcaRma {
             finish[0] = finish[0].max(secs(self.rank0_finish_ns));
         }
-        let chunks = self.assignments.len() as u64;
         let wait: f64 = self.workers.iter().map(|w| secs(w.wait_ns)).sum();
         DesResult {
-            stats: LoopStats::from_finish_times(&finish, chunks, wait, self.messages),
+            stats: LoopStats::from_finish_times(&finish, self.chunks_granted, wait, self.messages),
             finish,
             rank0_service_busy: secs(self.rank0_service_ns),
             assignments: self.assignments,
@@ -727,6 +850,8 @@ impl<'a> Sim<'a> {
             intra_node_messages: self.intra_msgs,
             inter_node_messages: self.inter_msgs,
             level_messages: vec![self.messages],
+            fast_grants: self.fast_grants,
+            events: self.events,
         }
     }
 }
@@ -747,12 +872,6 @@ mod tests {
         )
     }
 
-    fn sorted(r: &DesResult) -> Vec<Assignment> {
-        let mut v = r.assignments.clone();
-        v.sort_by_key(|a| a.start);
-        v
-    }
-
     #[test]
     fn all_models_cover_loop() {
         for model in ExecutionModel::ALL {
@@ -762,7 +881,7 @@ mod tests {
                 }
                 let cfg = base(2_000, 4, model, kind);
                 let r = simulate(&cfg).unwrap_or_else(|e| panic!("{model:?} {kind}: {e}"));
-                verify_coverage(&sorted(&r), 2_000)
+                verify_coverage(&r.sorted_assignments(), 2_000)
                     .unwrap_or_else(|e| panic!("{model:?} {kind}: {e}"));
                 assert!(r.t_par() > 0.0, "{model:?} {kind}");
             }
@@ -815,7 +934,7 @@ mod tests {
         let mut cfg = base(2_000, 4, ExecutionModel::Cca, TechniqueKind::Gss);
         cfg.cluster.break_after = 0; // dedicated
         let r = simulate(&cfg).unwrap();
-        verify_coverage(&sorted(&r), 2_000).unwrap();
+        verify_coverage(&r.sorted_assignments(), 2_000).unwrap();
         // Rank 0 executed nothing.
         let rank0_iters: u64 = r
             .assignments
@@ -834,7 +953,8 @@ mod tests {
             let mut cfg = base(2_000, 4, model, TechniqueKind::Gss);
             cfg.delay = InjectedDelay::exponential_calculation(50e-6, 0xE4_0002);
             let a = simulate(&cfg).unwrap_or_else(|e| panic!("{model:?}: {e}"));
-            verify_coverage(&sorted(&a), 2_000).unwrap_or_else(|e| panic!("{model:?}: {e}"));
+            verify_coverage(&a.sorted_assignments(), 2_000)
+                .unwrap_or_else(|e| panic!("{model:?}: {e}"));
             let b = simulate(&cfg).unwrap();
             assert_eq!(a.t_par(), b.t_par(), "{model:?}: replay must be identical");
         }
@@ -852,9 +972,68 @@ mod tests {
     fn af_learns_in_des() {
         let cfg = base(4_000, 4, ExecutionModel::Dca, TechniqueKind::Af);
         let r = simulate(&cfg).unwrap();
-        verify_coverage(&sorted(&r), 4_000).unwrap();
+        verify_coverage(&r.sorted_assignments(), 4_000).unwrap();
         let max = r.assignments.iter().map(|a| a.size).max().unwrap();
         assert!(max > 1, "AF should grow beyond bootstrap");
+    }
+
+    /// Flat DCA on the lock-free path: canonical serial schedule (equal to
+    /// `closed_form_schedule`), zero messages, every grant a CAS, and a
+    /// t_par that never loses to the two-phase exchange.
+    #[test]
+    fn flat_lockfree_emits_canonical_schedule_with_zero_messages() {
+        use crate::sched::closed_form_schedule;
+        for kind in [TechniqueKind::Ss, TechniqueKind::Gss, TechniqueKind::Rnd] {
+            let two = simulate(&base(8_000, 8, ExecutionModel::Dca, kind)).unwrap();
+            let cfg = base(8_000, 8, ExecutionModel::Dca, kind).with_lockfree();
+            let fast = simulate(&cfg).unwrap();
+            verify_coverage(&fast.sorted_assignments(), 8_000).unwrap();
+            let tech = Technique::new(kind, &cfg.params);
+            assert_eq!(
+                fast.sorted_assignments(),
+                closed_form_schedule(&tech, &cfg.params),
+                "{kind}: CAS grants must emit the canonical serial schedule"
+            );
+            assert_eq!(fast.stats.messages, 0, "{kind}");
+            assert_eq!(fast.fast_grants, fast.stats.chunks, "{kind}");
+            assert!(fast.t_par() <= two.t_par(), "{kind}: {} vs {}", fast.t_par(), two.t_par());
+            let replay = simulate(&cfg).unwrap();
+            assert_eq!(fast.assignments, replay.assignments, "{kind}: replay");
+        }
+    }
+
+    /// The lock-free flag is inert for CCA/DCA-RMA and for AF/TAP under
+    /// DCA — those runs stay bit-identical to their two-phase twins.
+    #[test]
+    fn lockfree_flag_is_inert_where_inapplicable() {
+        let cases = [
+            (ExecutionModel::Cca, TechniqueKind::Gss),
+            (ExecutionModel::DcaRma, TechniqueKind::Gss),
+            (ExecutionModel::Dca, TechniqueKind::Af),
+            (ExecutionModel::Dca, TechniqueKind::Tap),
+        ];
+        for (model, kind) in cases {
+            let two = simulate(&base(2_000, 4, model, kind)).unwrap();
+            let fast = simulate(&base(2_000, 4, model, kind).with_lockfree()).unwrap();
+            assert_eq!(fast.fast_grants, 0, "{model:?} {kind}");
+            assert_eq!(fast.assignments, two.assignments, "{model:?} {kind}");
+            assert_eq!(fast.t_par(), two.t_par(), "{model:?} {kind}");
+        }
+    }
+
+    /// `record_assignments = false` keeps stats (chunks, t_par, events)
+    /// identical while logging nothing.
+    #[test]
+    fn unrecorded_flat_run_matches_recorded_stats() {
+        let recorded = simulate(&base(4_000, 8, ExecutionModel::Dca, TechniqueKind::Gss)).unwrap();
+        let cfg = base(4_000, 8, ExecutionModel::Dca, TechniqueKind::Gss)
+            .without_assignment_recording();
+        let bare = simulate(&cfg).unwrap();
+        assert!(bare.assignments.is_empty());
+        assert_eq!(bare.stats.chunks, recorded.assignments.len() as u64);
+        assert_eq!(bare.t_par(), recorded.t_par());
+        assert_eq!(bare.events, recorded.events);
+        assert!(bare.events > 0);
     }
 
     #[test]

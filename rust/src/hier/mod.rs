@@ -63,7 +63,7 @@ pub mod protocol;
 
 use std::collections::VecDeque;
 
-use crate::config::{ClusterConfig, ExecutionModel, HierParams, LevelPlan, WatermarkMode};
+use crate::config::{ClusterConfig, ExecutionModel, HierParams, LevelPlan, SchedPath, WatermarkMode};
 use crate::coordinator::protocol::{AfInfo, PerfReport};
 use crate::des::heap::{ns, secs, EventHeap};
 use crate::des::{DesConfig, DesResult};
@@ -165,6 +165,12 @@ enum Ev {
     CalcDone { w: u32, step: u64, size: u64, seq: u64 },
     /// Worker `w` finished executing its sub-chunk.
     ExecDone { w: u32 },
+    /// Lock-free fast path: worker `w`'s fused CAS grant arrives at leaf
+    /// group `s`'s atomic unit (the node ledger's cache line — serialized
+    /// like the RMA window NIC, bypassing the master's CPU entirely).
+    AtomArrive { s: u32, w: u32 },
+    /// Group `s`'s atomic unit finished its current op.
+    AtomFree { s: u32 },
 }
 
 // ---------------------------------------------------------------------------
@@ -264,6 +270,16 @@ struct HierSim<'a> {
     /// Message split by protocol level (outer first).
     level_msgs: Vec<u64>,
     assignments: Vec<Assignment>,
+    chunks_granted: u64,
+    /// Leaf-level lock-free fast path active (`SchedPath::LockFree` + a
+    /// closed-form, non-measurement-coupled leaf technique). Master-tier
+    /// fetches always stay two-phase.
+    fast_leaf: bool,
+    /// Per-leaf-group atomic unit: pending fused ops + busy flag.
+    atom_queue: Vec<VecDeque<u32>>,
+    atom_busy: Vec<bool>,
+    fast_grants: u64,
+    events: u64,
 }
 
 impl<'a> HierSim<'a> {
@@ -312,10 +328,13 @@ impl<'a> HierSim<'a> {
                 own_parked: false,
             })
             .collect();
+        let n_servers = plan.masters_at(k - 1) as usize;
+        let fast_leaf =
+            cfg.sched_path == SchedPath::LockFree && techs[k - 1].supports_fast_path();
         HierSim {
             cfg,
             topo: Topology::new(&cfg.cluster),
-            heap: EventHeap::new(),
+            heap: EventHeap::with_capacity(2 * cfg.params.p as usize),
             now: 0,
             plan: plan.clone(),
             k,
@@ -328,7 +347,13 @@ impl<'a> HierSim<'a> {
             intra_msgs: 0,
             inter_msgs: 0,
             level_msgs: vec![0; k],
-            assignments: Vec::new(),
+            assignments: crate::des::assignments_buffer(cfg),
+            chunks_granted: 0,
+            fast_leaf,
+            atom_queue: vec![VecDeque::new(); n_servers],
+            atom_busy: vec![false; n_servers],
+            fast_grants: 0,
+            events: 0,
         }
     }
 
@@ -370,7 +395,10 @@ impl<'a> HierSim<'a> {
     }
 
     fn grant(&mut self, rank: u32, a: Assignment) {
-        self.assignments.push(a);
+        self.chunks_granted += 1;
+        if self.cfg.record_assignments {
+            self.assignments.push(a);
+        }
         let ws = &mut self.workers[rank as usize];
         ws.chunks += 1;
         ws.iters += a.size;
@@ -379,16 +407,21 @@ impl<'a> HierSim<'a> {
     // -- bootstrap ---------------------------------------------------------
 
     fn run(&mut self) {
-        // Every non-master rank opens with a LeafGet to its master; hosting
-        // ranks kick their own CPU, which parks its worker personality and
-        // triggers the first fetch chain up to the root.
+        // Every non-master rank opens with a LeafGet to its master (a fused
+        // CAS op on the fast path); hosting ranks kick their own CPU, which
+        // parks its worker personality and triggers the first fetch chain
+        // up to the root.
         let leaf_fanout = self.fanouts[self.k - 1];
         for w in 0..self.cfg.params.p {
             if w % leaf_fanout == 0 {
                 continue;
             }
             self.workers[w as usize].req_sent_ns = 0;
-            self.send_leaf(w, Task::LeafGet { w, report: None }, 0);
+            if self.fast_leaf {
+                self.send_atomic(w, 0);
+            } else {
+                self.send_leaf(w, Task::LeafGet { w, report: None }, 0);
+            }
         }
         for s in 0..self.servers.len() as u32 {
             if self.cfg.cluster.break_after == 0 {
@@ -400,6 +433,7 @@ impl<'a> HierSim<'a> {
         while let Some((t, ev)) = self.heap.pop() {
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;
+            self.events += 1;
             self.dispatch(ev);
         }
     }
@@ -422,10 +456,69 @@ impl<'a> HierSim<'a> {
             }
             Ev::ExecDone { w } => {
                 self.workers[w as usize].req_sent_ns = self.now;
-                let report = self.workers[w as usize].last_report;
-                self.send_leaf(w, Task::LeafGet { w, report }, 0);
+                if self.fast_leaf {
+                    self.send_atomic(w, 0);
+                } else {
+                    let report = self.workers[w as usize].last_report;
+                    self.send_leaf(w, Task::LeafGet { w, report }, 0);
+                }
+            }
+            Ev::AtomArrive { s, w } => {
+                self.atom_queue[s as usize].push_back(w);
+                if !self.atom_busy[s as usize] {
+                    self.atom_busy[s as usize] = true;
+                    self.heap.push(self.now, Ev::AtomFree { s });
+                }
+            }
+            Ev::AtomFree { s } => self.atom_next_op(s),
+        }
+    }
+
+    /// Issue worker `w`'s fused CAS op toward its group's atomic unit
+    /// (travel = the intra-group latency class; not a protocol message).
+    fn send_atomic(&mut self, w: u32, extra_ns: u64) {
+        let s = self.server_of_rank(w);
+        let mrank = self.servers[s as usize].rank;
+        let at = self.now + extra_ns + self.lat_ns(w, mrank);
+        self.heap.push(at, Ev::AtomArrive { s, w });
+    }
+
+    /// Serve one fused op at leaf group `s`'s atomic unit: reserve + table
+    /// lookup + commit in a single `service_time` occupancy (a memory/NIC
+    /// resource — NOT the master's CPU, and unscaled by its speed). The
+    /// table lookup replaces the chunk calculation, so neither `calc_time`
+    /// nor the injected calculation delay is paid — the fast path's whole
+    /// payoff. Drained ledgers fall back to the two-phase slow path: the
+    /// master parks the rank and runs the parent fetch protocol.
+    fn atom_next_op(&mut self, s: u32) {
+        let si = s as usize;
+        let Some(w) = self.atom_queue[si].pop_front() else {
+            self.atom_busy[si] = false;
+            return;
+        };
+        let dur = ns(self.cfg.cluster.service_time);
+        let k1 = self.k - 1;
+        match self.personas[k1][si].ledger.fast_grant() {
+            Some(a) => {
+                self.fast_grants += 1;
+                self.grant(w, a);
+                let mrank = self.servers[si].rank;
+                let at = self.now + dur + self.lat_ns(mrank, w);
+                self.heap.push(at, Ev::WorkerReply { w, reply: WReply::Chunk(a) });
+                self.maybe_prefetch(k1, s, dur);
+            }
+            None if self.personas[k1][si].global_done => {
+                let mrank = self.servers[si].rank;
+                let at = self.now + dur + self.lat_ns(mrank, w);
+                self.heap.push(at, Ev::WorkerReply { w, reply: WReply::Done });
+            }
+            None => {
+                self.personas[k1][si].parked.push_back(w);
+                self.maybe_fetch(k1, s, dur);
             }
         }
+        self.heap.push(self.now + dur, Ev::AtomFree { s });
+        self.atom_busy[si] = true;
     }
 
     // -- messaging ---------------------------------------------------------
@@ -575,8 +668,30 @@ impl<'a> HierSim<'a> {
     }
 
     /// Serve a leaf phase-1 request: reserve, terminate, or park the rank.
+    /// On the lock-free fast path (reached only through the slow-path
+    /// refill: a parked rank re-served after a chunk install) the master
+    /// performs the fused CAS on the worker's behalf and replies with the
+    /// chunk directly — still the canonical table schedule.
     fn leaf_get(&mut self, s: u32, w: u32, dur: u64) {
         let k1 = self.k - 1;
+        if self.fast_leaf {
+            match self.personas[k1][s as usize].ledger.fast_grant() {
+                Some(a) => {
+                    self.fast_grants += 1;
+                    self.grant(w, a);
+                    self.send_worker(s, w, WReply::Chunk(a), dur);
+                    self.maybe_prefetch(k1, s, dur);
+                }
+                None if self.personas[k1][s as usize].global_done => {
+                    self.send_worker(s, w, WReply::Done, dur);
+                }
+                None => {
+                    self.personas[k1][s as usize].parked.push_back(w);
+                    self.maybe_fetch(k1, s, dur);
+                }
+            }
+            return;
+        }
         let af = self.persona_af_info(k1, s);
         if let Some((step, remaining, seq)) = self.personas[k1][s as usize].ledger.reserve() {
             self.send_worker(s, w, WReply::Step { step, remaining, seq, af }, dur);
@@ -856,6 +971,28 @@ impl<'a> HierSim<'a> {
         let c = &self.cfg.cluster;
         let cluster_break = c.break_after.max(1) as u64;
         match std::mem::replace(&mut self.servers[si].own, Own::Finished) {
+            Own::NeedWork if self.fast_leaf => {
+                // Lock-free: the master's own personality grants with one
+                // fused CAS on its CPU — no Calc/Commit states, no
+                // calculation delay (the table already holds the size).
+                let dur = ns(c.service_time / sp);
+                match self.personas[k1][si].ledger.fast_grant() {
+                    Some(a) => {
+                        self.fast_grants += 1;
+                        self.grant(mrank, a);
+                        self.servers[si].own =
+                            Own::Exec { cursor: a.start, end: a.end(), first: a.start };
+                        self.maybe_prefetch(k1, s, dur);
+                    }
+                    None if self.personas[k1][si].global_done => self.finish_own(s),
+                    None => {
+                        self.servers[si].own = Own::Parked;
+                        self.servers[si].own_parked = true;
+                        self.maybe_fetch(k1, s, dur);
+                    }
+                }
+                self.finish_server_action(s, dur);
+            }
             Own::NeedWork => {
                 let dur = ns(c.service_time / sp);
                 if let Some((step, remaining, seq)) = self.personas[k1][si].ledger.reserve() {
@@ -949,10 +1086,9 @@ impl<'a> HierSim<'a> {
             let r = server.rank as usize;
             finish[r] = finish[r].max(secs(server.cpu_busy_until_ns));
         }
-        let chunks = self.assignments.len() as u64;
         let wait: f64 = self.workers.iter().map(|w| secs(w.wait_ns)).sum();
         DesResult {
-            stats: LoopStats::from_finish_times(&finish, chunks, wait, self.messages),
+            stats: LoopStats::from_finish_times(&finish, self.chunks_granted, wait, self.messages),
             finish,
             rank0_service_busy: secs(self.servers[0].service_ns),
             assignments: self.assignments,
@@ -960,6 +1096,8 @@ impl<'a> HierSim<'a> {
             intra_node_messages: self.intra_msgs,
             inter_node_messages: self.inter_msgs,
             level_messages: self.level_msgs,
+            fast_grants: self.fast_grants,
+            events: self.events,
         }
     }
 }
@@ -989,18 +1127,13 @@ mod tests {
         )
     }
 
-    fn sorted(r: &DesResult) -> Vec<Assignment> {
-        let mut v = r.assignments.clone();
-        v.sort_by_key(|a| a.start);
-        v
-    }
-
     #[test]
     fn covers_loop_all_techniques_small() {
         for kind in TechniqueKind::ALL {
             let c = cfg(2_000, 2, 4, kind);
             let r = simulate(&c).unwrap_or_else(|e| panic!("{kind}: {e}"));
-            verify_coverage(&sorted(&r), 2_000).unwrap_or_else(|e| panic!("{kind}: {e}"));
+            verify_coverage(&r.sorted_assignments(), 2_000)
+                .unwrap_or_else(|e| panic!("{kind}: {e}"));
             assert!(r.t_par() > 0.0, "{kind}");
             assert_eq!(r.rma_ops, 0);
             assert!(r.stats.messages > 0);
@@ -1026,7 +1159,7 @@ mod tests {
         let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
         c.hier = HierParams::with_inner(TechniqueKind::Ss).with_watermark(16);
         let a = simulate(&c).unwrap();
-        verify_coverage(&sorted(&a), 6_000).unwrap();
+        verify_coverage(&a.sorted_assignments(), 6_000).unwrap();
         let b = simulate(&c).unwrap();
         assert_eq!(a.assignments, b.assignments);
         assert_eq!(a.t_par(), b.t_par());
@@ -1041,7 +1174,7 @@ mod tests {
             .with_watermark(512)
             .with_prefetch_depth(3);
         let a = simulate(&c).unwrap();
-        verify_coverage(&sorted(&a), 6_000).unwrap();
+        verify_coverage(&a.sorted_assignments(), 6_000).unwrap();
         let b = simulate(&c).unwrap();
         assert_eq!(a.assignments, b.assignments);
         assert_eq!(a.t_par(), b.t_par());
@@ -1054,7 +1187,7 @@ mod tests {
         let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
         c.hier = HierParams::with_inner(TechniqueKind::Ss).with_auto_watermark();
         let a = simulate(&c).unwrap();
-        verify_coverage(&sorted(&a), 6_000).unwrap();
+        verify_coverage(&a.sorted_assignments(), 6_000).unwrap();
         let b = simulate(&c).unwrap();
         assert_eq!(a.assignments, b.assignments);
         assert_eq!(a.t_par(), b.t_par());
@@ -1075,7 +1208,7 @@ mod tests {
         let mut c = cfg(5_000, 2, 8, TechniqueKind::Fac2);
         c.hier = HierParams::with_inner(TechniqueKind::Ss);
         let r = simulate(&c).unwrap();
-        verify_coverage(&sorted(&r), 5_000).unwrap();
+        verify_coverage(&r.sorted_assignments(), 5_000).unwrap();
         // SS inside: sub-chunks of one iteration dominate the multiset.
         let ones = r.assignments.iter().filter(|a| a.size == 1).count();
         assert!(ones > r.assignments.len() / 2, "inner SS must produce unit chunks");
@@ -1086,7 +1219,7 @@ mod tests {
         let mut c = cfg(2_000, 2, 4, TechniqueKind::Gss);
         c.cluster.break_after = 0;
         let r = simulate(&c).unwrap();
-        verify_coverage(&sorted(&r), 2_000).unwrap();
+        verify_coverage(&r.sorted_assignments(), 2_000).unwrap();
         assert!(r.rank0_service_busy > 0.0);
     }
 
@@ -1101,21 +1234,21 @@ mod tests {
     fn single_rank_nodes_work_when_masters_compute() {
         let c = cfg(1_000, 4, 1, TechniqueKind::Tss);
         let r = simulate(&c).unwrap();
-        verify_coverage(&sorted(&r), 1_000).unwrap();
+        verify_coverage(&r.sorted_assignments(), 1_000).unwrap();
     }
 
     #[test]
     fn single_node_degenerates_gracefully() {
         let c = cfg(3_000, 1, 8, TechniqueKind::Gss);
         let r = simulate(&c).unwrap();
-        verify_coverage(&sorted(&r), 3_000).unwrap();
+        verify_coverage(&r.sorted_assignments(), 3_000).unwrap();
     }
 
     #[test]
     fn af_both_levels_learns_and_covers() {
         let c = cfg(4_000, 2, 4, TechniqueKind::Af);
         let r = simulate(&c).unwrap();
-        verify_coverage(&sorted(&r), 4_000).unwrap();
+        verify_coverage(&r.sorted_assignments(), 4_000).unwrap();
         let max = r.assignments.iter().map(|a| a.size).max().unwrap();
         assert!(max > 1, "AF should grow beyond bootstrap");
     }
@@ -1124,7 +1257,7 @@ mod tests {
     fn more_ranks_than_iterations() {
         let c = cfg(5, 2, 4, TechniqueKind::Gss);
         let r = simulate(&c).unwrap();
-        verify_coverage(&sorted(&r), 5).unwrap();
+        verify_coverage(&r.sorted_assignments(), 5).unwrap();
     }
 
     /// Depth 1 degenerates to the flat root ↔ ranks protocol and still
@@ -1134,7 +1267,7 @@ mod tests {
         let mut c = cfg(2_000, 2, 4, TechniqueKind::Gss);
         c.hier = HierParams::default().with_levels(1);
         let r = simulate(&c).unwrap();
-        verify_coverage(&sorted(&r), 2_000).unwrap();
+        verify_coverage(&r.sorted_assignments(), 2_000).unwrap();
         assert_eq!(r.level_messages.len(), 1, "one protocol level");
         assert_eq!(r.stats.messages, r.level_messages[0]);
     }
@@ -1149,7 +1282,7 @@ mod tests {
             .with_levels(3)
             .with_fanouts(&[2, 2, 4]);
         let r = simulate(&c).unwrap();
-        verify_coverage(&sorted(&r), 6_000).unwrap();
+        verify_coverage(&r.sorted_assignments(), 6_000).unwrap();
         assert_eq!(r.level_messages.len(), 3);
         assert!(r.level_messages.iter().all(|&m| m > 0), "{:?}", r.level_messages);
         assert_eq!(r.stats.messages, r.level_messages.iter().sum::<u64>());
@@ -1157,6 +1290,86 @@ mod tests {
         assert!(r.level_messages[2] > r.level_messages[0]);
         let b = simulate(&c).unwrap();
         assert_eq!(r.assignments, b.assignments, "depth-3 replay");
+    }
+
+    /// The lock-free leaf level covers exactly, replays deterministically,
+    /// grants via CAS, and sends far fewer messages than two-phase.
+    #[test]
+    fn lockfree_leaf_covers_replays_and_cuts_messages() {
+        let mk = |path| {
+            let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
+            c.hier = HierParams::with_inner(TechniqueKind::Ss);
+            c.sched_path = path;
+            simulate(&c).unwrap()
+        };
+        let two = mk(crate::config::SchedPath::TwoPhase);
+        let fast = mk(crate::config::SchedPath::LockFree);
+        verify_coverage(&fast.sorted_assignments(), 6_000).unwrap();
+        assert!(fast.fast_grants > 0, "leaf grants took the CAS path");
+        assert_eq!(two.fast_grants, 0);
+        assert!(
+            fast.stats.messages < two.stats.messages / 2,
+            "CAS grants must replace most leaf messages ({} vs {})",
+            fast.stats.messages,
+            two.stats.messages
+        );
+        assert!(fast.t_par() <= two.t_par(), "fast {} vs {}", fast.t_par(), two.t_par());
+        let replay = mk(crate::config::SchedPath::LockFree);
+        assert_eq!(fast.assignments, replay.assignments, "lock-free replay");
+        assert_eq!(fast.t_par(), replay.t_par());
+    }
+
+    /// AF/TAP leaves fall back to the two-phase protocol bit-identically.
+    #[test]
+    fn lockfree_falls_back_for_measurement_coupled_leaves() {
+        for inner in [TechniqueKind::Af, TechniqueKind::Tap] {
+            let mk = |path| {
+                let mut c = cfg(3_000, 2, 4, TechniqueKind::Fac2);
+                c.hier = HierParams::with_inner(inner);
+                c.sched_path = path;
+                simulate(&c).unwrap()
+            };
+            let two = mk(crate::config::SchedPath::TwoPhase);
+            let fast = mk(crate::config::SchedPath::LockFree);
+            assert_eq!(fast.fast_grants, 0, "{inner}: no CAS grants");
+            assert_eq!(fast.assignments, two.assignments, "{inner}: identical runs");
+            assert_eq!(fast.t_par(), two.t_par(), "{inner}");
+        }
+    }
+
+    /// Lock-free leaf + prefetch (fixed and auto watermarks) keeps exact
+    /// coverage and deterministic replay.
+    #[test]
+    fn lockfree_prefetch_covers_and_replays() {
+        for hier in [
+            HierParams::with_inner(TechniqueKind::Ss).with_watermark(64),
+            HierParams::with_inner(TechniqueKind::Ss).with_auto_watermark(),
+            HierParams::with_inner(TechniqueKind::Ss).with_watermark(256).with_prefetch_depth(3),
+        ] {
+            let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
+            c.hier = hier;
+            c.sched_path = crate::config::SchedPath::LockFree;
+            let a = simulate(&c).unwrap();
+            verify_coverage(&a.sorted_assignments(), 6_000).unwrap();
+            let b = simulate(&c).unwrap();
+            assert_eq!(a.assignments, b.assignments);
+            assert_eq!(a.t_par(), b.t_par());
+        }
+    }
+
+    /// `record_assignments = false` still schedules everything (stats keep
+    /// counting) without logging a single grant.
+    #[test]
+    fn unrecorded_run_matches_recorded_stats() {
+        let mut c = cfg(4_000, 2, 4, TechniqueKind::Gss);
+        let recorded = simulate(&c).unwrap();
+        c.record_assignments = false;
+        let bare = simulate(&c).unwrap();
+        assert!(bare.assignments.is_empty());
+        assert_eq!(bare.stats.chunks, recorded.assignments.len() as u64);
+        assert_eq!(bare.t_par(), recorded.t_par());
+        assert_eq!(bare.stats.messages, recorded.stats.messages);
+        assert_eq!(bare.events, recorded.events);
     }
 
     #[test]
@@ -1206,7 +1419,7 @@ mod tests {
             c.hier = HierParams::with_inner(TechniqueKind::Ss);
             simulate(&c).unwrap()
         };
-        verify_coverage(&sorted(&hier), 10_000).unwrap();
+        verify_coverage(&hier.sorted_assignments(), 10_000).unwrap();
         assert!(
             hier.rank0_service_busy < flat.rank0_service_busy * 0.5,
             "hier coordinator busy {}s must be well below flat DCA's {}s",

@@ -37,9 +37,11 @@
 //! high-latency fabrics.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 
 use crate::sched::{Assignment, StepTicket, WorkQueue};
-use crate::techniques::{LoopParams, Technique, TechniqueKind};
+use crate::techniques::{ChunkTable, LoopParams, TableCache, Technique, TechniqueKind};
 
 /// EWMA weight of the newest round-trip sample in the adaptive-watermark
 /// estimate (newer trips dominate, but one outlier doesn't).
@@ -291,6 +293,268 @@ impl NodeLedger {
             _ => None,
         }
     }
+
+    /// The lock-free fast path in its **serial form** — the DES's model of
+    /// the CAS: reserve + closed-form sizing + commit fused into one atomic
+    /// action. Grant order ≡ step order, so the emitted schedule is exactly
+    /// the technique's canonical serial schedule — the same schedule
+    /// [`ChunkTable`] precomputes for the threaded CAS loop (pinned by the
+    /// `fast_grant_matches_chunk_table` test). Promotes staged chunks like
+    /// [`Self::reserve`]; `None` when the ledger is empty (the caller parks
+    /// the requester and triggers the two-phase parent fetch).
+    ///
+    /// Requires a closed-form, non-measurement-coupled inner technique —
+    /// AF/TAP stay on the two-phase protocol.
+    pub fn fast_grant(&mut self) -> Option<Assignment> {
+        debug_assert!(
+            self.inner_kind.supports_fast_path(),
+            "{} cannot take the lock-free fast path",
+            self.inner_kind
+        );
+        let (step, _remaining, seq) = self.reserve()?;
+        let size = self.closed_inner_size(step, seq).expect("closed form bound to live chunk");
+        match self.commit(step, size, seq) {
+            InnerCommit::Granted(a) => Some(a),
+            other => unreachable!("fused reserve/commit cannot fail: {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the lock-free fast path (threaded form)
+
+/// Bits of the packed ledger word holding the chunk `seq`; the remaining
+/// high bits hold the local start cursor.
+pub const FAST_SEQ_BITS: u32 = 24;
+/// Bits holding the local start cursor (40 ⇒ loops up to ~10¹² iterations).
+pub const FAST_START_BITS: u32 = 64 - FAST_SEQ_BITS;
+const FAST_SEQ_MASK: u64 = (1 << FAST_SEQ_BITS) - 1;
+
+/// Can a loop (or chunk) of `n` iterations be cursored by the packed word?
+/// Callers fall back to the two-phase protocol when this is false.
+pub fn fast_len_ok(n: u64) -> bool {
+    n < (1 << FAST_START_BITS)
+}
+
+#[inline]
+fn pack(start: u64, seq: u64) -> u64 {
+    (start << FAST_SEQ_BITS) | (seq & FAST_SEQ_MASK)
+}
+
+#[inline]
+fn unpack(word: u64) -> (u64, u64) {
+    (word >> FAST_SEQ_BITS, word & FAST_SEQ_MASK)
+}
+
+/// Snapshot of the chunk currently published on an [`AtomicLedger`].
+#[derive(Debug, Clone)]
+pub struct FastChunk {
+    /// Install sequence number (compared modulo 2^[`FAST_SEQ_BITS`] against
+    /// the packed word).
+    pub seq: u64,
+    /// Absolute iteration offset of the chunk.
+    pub offset: u64,
+    /// Precomputed serial schedule of the chunk.
+    pub table: Arc<ChunkTable>,
+}
+
+/// The **lock-free chunk ledger**: the two-phase protocol's hot state — the
+/// local start cursor plus the chunk `seq` — packed into one `AtomicU64`,
+/// so a closed-form grant is a single CAS loop around an array lookup
+/// instead of a reserve/commit message exchange. The stale-`seq` race the
+/// two-phase protocol NACKs is prevented structurally here: the `seq` lives
+/// *inside* the compared word, so a CAS against a replaced chunk simply
+/// fails and the loop re-reads.
+///
+/// Single writer (the owning master publishes installs), any number of
+/// granting readers. The published chunk metadata sits behind an `RwLock`
+/// that grant loops only touch once per install (they cache the snapshot by
+/// `seq`), keeping the steady-state grant at load + lookup + CAS.
+///
+/// Caveat: `seq` is compared modulo 2^24 — after 16.7 M installs *of one
+/// ledger* an ABA pairing is theoretically possible; [`Self::publish`]
+/// debug-asserts long before that.
+#[derive(Debug, Default)]
+pub struct AtomicLedger {
+    /// `start << FAST_SEQ_BITS | seq`; `seq = 0` means nothing published.
+    word: AtomicU64,
+    chunk: RwLock<Option<FastChunk>>,
+}
+
+impl AtomicLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Publish a freshly installed chunk (single-writer: the owning master,
+    /// and only once the previous chunk has fully drained).
+    ///
+    /// # Panics
+    /// When `seq` masks to 0 or exceeds [`FAST_SEQ_BITS`]: a seq that packs
+    /// to 0 would read as "nothing published" and silently lose the whole
+    /// chunk, so overflow is a hard error even in release builds (16.7 M
+    /// installs of ONE ledger — far beyond any simulated scenario).
+    pub fn publish(&self, seq: u64, offset: u64, table: Arc<ChunkTable>) {
+        assert!(seq > 0 && seq <= FAST_SEQ_MASK, "ledger seq overflow would ABA the packed word");
+        debug_assert!(fast_len_ok(table.n()), "chunk too long for the packed cursor");
+        *self.chunk.write().expect("ledger chunk lock") = Some(FastChunk {
+            seq,
+            offset,
+            table,
+        });
+        self.word.store(pack(0, seq), Ordering::Release);
+    }
+
+    fn snapshot(&self) -> Option<FastChunk> {
+        self.chunk.read().expect("ledger chunk lock").clone()
+    }
+
+    /// The lock-free grant: `(assignment, remaining_after, seq)`, or `None`
+    /// when nothing is published or the published chunk has drained — the
+    /// caller falls back to the two-phase slow path (park + parent fetch).
+    pub fn try_grant(&self) -> Option<(Assignment, u64, u64)> {
+        let mut cached: Option<FastChunk> = None;
+        loop {
+            let word = self.word.load(Ordering::Acquire);
+            let (start, seqm) = unpack(word);
+            if seqm == 0 {
+                return None;
+            }
+            if cached.as_ref().is_none_or(|fc| fc.seq & FAST_SEQ_MASK != seqm) {
+                cached = self.snapshot();
+            }
+            let Some(fc) = cached.as_ref().filter(|fc| fc.seq & FAST_SEQ_MASK == seqm) else {
+                // The snapshot lags the word mid-publish — re-read both.
+                std::hint::spin_loop();
+                continue;
+            };
+            let Some((step, size)) = fc.table.grant_from(start) else {
+                return None; // drained
+            };
+            let next = pack(start + size, seqm);
+            if self
+                .word
+                .compare_exchange_weak(word, next, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                let remaining = fc.table.n() - (start + size);
+                return Some((
+                    Assignment { step, start: fc.offset + start, size },
+                    remaining,
+                    fc.seq,
+                ));
+            }
+        }
+    }
+
+    /// Unassigned iterations left in the published chunk (0 when empty or
+    /// drained) — the prefetch watermark is compared against this.
+    pub fn remaining(&self) -> u64 {
+        let (start, seqm) = unpack(self.word.load(Ordering::Acquire));
+        if seqm == 0 {
+            return 0;
+        }
+        match self.snapshot() {
+            Some(fc) if fc.seq & FAST_SEQ_MASK == seqm => fc.table.n().saturating_sub(start),
+            _ => 0,
+        }
+    }
+
+    /// Does the published chunk still hold unassigned iterations?
+    pub fn live(&self) -> bool {
+        self.remaining() > 0
+    }
+}
+
+/// Master-side owner of an [`AtomicLedger`]: staging FIFO, `seq`
+/// allocation, and per-length table binding — [`NodeLedger`]'s
+/// install/promotion semantics for the lock-free leaf level of the threaded
+/// engine. The master holds this; its children hold clones of
+/// [`Self::shared`] and grant straight off the CAS word.
+#[derive(Debug)]
+pub struct FastLedger {
+    shared: Arc<AtomicLedger>,
+    cache: TableCache,
+    staged: VecDeque<Assignment>,
+    staged_cap: usize,
+    seq: u64,
+}
+
+impl FastLedger {
+    /// Wrap `shared` for chunks subdivided among `rpn` children with
+    /// `inner_kind` (parameterized from `base`), staging up to `staged_cap`
+    /// prefetched chunks (clamped to ≥ 1, like the two-phase ledger).
+    pub fn new(
+        shared: Arc<AtomicLedger>,
+        inner_kind: TechniqueKind,
+        base: &LoopParams,
+        rpn: u32,
+        staged_cap: usize,
+    ) -> Self {
+        FastLedger {
+            shared,
+            cache: TableCache::new(inner_kind, base, rpn.max(1)),
+            staged: VecDeque::new(),
+            staged_cap: staged_cap.max(1),
+            seq: 0,
+        }
+    }
+
+    /// The workers' granting handle.
+    pub fn shared(&self) -> &Arc<AtomicLedger> {
+        &self.shared
+    }
+
+    /// Accept a chunk from the parent level: published immediately when the
+    /// ledger is empty, staged behind the current chunk otherwise (same
+    /// policy as [`NodeLedger::install`]).
+    pub fn install(&mut self, a: Assignment) {
+        if self.shared.live() || !self.staged.is_empty() {
+            debug_assert!(self.staged.len() < self.staged_cap, "staged queue overflow");
+            self.staged.push_back(a);
+        } else {
+            self.publish_now(a);
+        }
+    }
+
+    fn publish_now(&mut self, a: Assignment) {
+        self.seq += 1;
+        let table = self.cache.get(a.size);
+        self.shared.publish(self.seq, a.start, table);
+    }
+
+    /// Master-side grant (serving a parked/slow-path child): tries the CAS
+    /// word, promoting staged chunks as the current one drains. Returns the
+    /// assignment plus the remaining count (for the prefetch check); `None`
+    /// once current *and* staged are empty.
+    pub fn grant(&mut self) -> Option<(Assignment, u64)> {
+        loop {
+            if let Some((a, remaining, _seq)) = self.shared.try_grant() {
+                return Some((a, remaining));
+            }
+            let staged = self.staged.pop_front()?;
+            self.publish_now(staged);
+        }
+    }
+
+    /// Any unassigned iterations left (published or staged)?
+    pub fn has_work(&self) -> bool {
+        self.shared.live() || !self.staged.is_empty()
+    }
+
+    /// Chunks staged behind the published one.
+    pub fn staged_len(&self) -> usize {
+        self.staged.len()
+    }
+
+    /// Same prefetch predicate as [`NodeLedger::wants_prefetch`], over the
+    /// CAS word's remaining count.
+    pub fn wants_prefetch(&self, watermark: Option<u64>) -> bool {
+        match watermark {
+            Some(w) => self.staged.len() < self.staged_cap && self.shared.remaining() <= w,
+            None => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -480,6 +744,146 @@ mod tests {
         assert_eq!(af_recap(10, 0, 4), 1);
         assert_eq!(af_recap(10, 7, 4), 2);
         assert_eq!(af_recap(1, 1_000, 4), 1);
+    }
+
+    /// The serial fast path (fused reserve/commit) and the precomputed
+    /// chunk table emit the identical schedule for every fast-path
+    /// technique, across chunk installs of varying lengths — the tentpole's
+    /// provable-equivalence claim at the protocol layer.
+    #[test]
+    fn fast_grant_matches_chunk_table() {
+        use crate::techniques::TableCache;
+        for kind in TechniqueKind::ALL {
+            if !kind.supports_fast_path() {
+                continue;
+            }
+            let base = LoopParams::new(10_000, 16);
+            let rpn = 4;
+            let mut l = NodeLedger::new(kind, &base, rpn).with_staged_capacity(2);
+            let mut cache = TableCache::new(kind, &base, rpn);
+            for (start, len) in [(0u64, 517u64), (517, 130), (647, 1), (648, 2048)] {
+                l.install(chunk(start, len));
+                let table = cache.get(len);
+                let mut cursor = 0u64;
+                while let Some((step, size)) = table.grant_from(cursor) {
+                    let a = l.fast_grant().unwrap_or_else(|| panic!("{kind}: ledger dry"));
+                    assert_eq!(
+                        (a.step, a.start, a.size),
+                        (step, start + cursor, size),
+                        "{kind}: chunk [{start},{len}) @ step {step}"
+                    );
+                    cursor += size;
+                }
+                assert!(l.fast_grant().is_none(), "{kind}: drained with the table");
+            }
+        }
+    }
+
+    #[test]
+    fn atomic_ledger_grants_the_canonical_schedule() {
+        use crate::sched::closed_form_schedule;
+        use crate::techniques::{ChunkTable, Technique};
+        let params = LoopParams::new(1_000, 4);
+        let ledger = AtomicLedger::new();
+        assert_eq!(ledger.try_grant(), None, "nothing published yet");
+        assert_eq!(ledger.remaining(), 0);
+        let table =
+            std::sync::Arc::new(ChunkTable::build(TechniqueKind::Gss, &params).unwrap());
+        ledger.publish(1, 500, table);
+        let tech = Technique::new(TechniqueKind::Gss, &params);
+        let want = closed_form_schedule(&tech, &params);
+        for a in &want {
+            let (got, remaining, seq) = ledger.try_grant().expect("live chunk");
+            assert_eq!((got.step, got.start, got.size), (a.step, a.start + 500, a.size));
+            assert_eq!(remaining, params.n - (a.start + a.size));
+            assert_eq!(seq, 1);
+        }
+        assert_eq!(ledger.try_grant(), None, "drained");
+        assert!(!ledger.live());
+    }
+
+    #[test]
+    fn atomic_ledger_republish_invalidates_the_old_word() {
+        use crate::techniques::ChunkTable;
+        let params = LoopParams::new(10, 2);
+        let ledger = AtomicLedger::new();
+        let t = std::sync::Arc::new(ChunkTable::build(TechniqueKind::Ss, &params).unwrap());
+        ledger.publish(1, 0, std::sync::Arc::clone(&t));
+        let (a, _, seq1) = ledger.try_grant().unwrap();
+        assert_eq!((a.start, a.size, seq1), (0, 1, 1));
+        // Drain and republish at a new offset: grants come from the new
+        // chunk with a bumped seq, never from the stale word.
+        while ledger.try_grant().is_some() {}
+        ledger.publish(2, 100, t);
+        let (b, remaining, seq2) = ledger.try_grant().unwrap();
+        assert_eq!((b.step, b.start, b.size), (0, 100, 1));
+        assert_eq!(seq2, 2);
+        assert_eq!(remaining, 9);
+        assert_eq!(ledger.remaining(), 9);
+    }
+
+    /// Contended smoke test: many threads CAS-granting concurrently still
+    /// cover the loop exactly once with the canonical chunk multiset.
+    #[test]
+    fn atomic_ledger_concurrent_grants_cover_exactly() {
+        use crate::techniques::ChunkTable;
+        let params = LoopParams::new(50_000, 8);
+        let table =
+            std::sync::Arc::new(ChunkTable::build(TechniqueKind::Ss, &params).unwrap());
+        let steps = table.steps();
+        let ledger = std::sync::Arc::new(AtomicLedger::new());
+        ledger.publish(1, 0, table);
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let l = std::sync::Arc::clone(&ledger);
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some((a, _, _)) = l.try_grant() {
+                    got.push(a);
+                }
+                got
+            }));
+        }
+        let mut all: Vec<Assignment> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        assert_eq!(all.len() as u64, steps);
+        all.sort_unstable_by_key(|a| a.start);
+        verify_coverage(&all, 50_000).unwrap();
+    }
+
+    #[test]
+    fn fast_ledger_stages_and_promotes_like_the_node_ledger() {
+        let base = LoopParams::new(10_000, 8);
+        let shared = Arc::new(AtomicLedger::new());
+        let mut f = FastLedger::new(Arc::clone(&shared), TechniqueKind::Ss, &base, 2, 2);
+        assert!(!f.has_work());
+        assert!(f.grant().is_none());
+        f.install(chunk(0, 2));
+        f.install(chunk(2, 3));
+        f.install(chunk(5, 1));
+        assert_eq!(f.staged_len(), 2);
+        assert!(!f.wants_prefetch(Some(1_000)), "staged queue full");
+        assert!(!f.wants_prefetch(None), "disabled prefetch never fires");
+        // Workers drain the published chunk straight off the CAS word…
+        let mut starts = Vec::new();
+        while let Some((a, _, _)) = shared.try_grant() {
+            starts.push(a.start);
+        }
+        assert_eq!(starts, vec![0, 1], "published chunk only");
+        // …and the master's grant promotes the staged FIFO in order.
+        while let Some((a, _rem)) = f.grant() {
+            starts.push(a.start);
+        }
+        assert_eq!(starts, vec![0, 1, 2, 3, 4, 5], "FIFO promotion, no gaps");
+        assert!(!f.has_work());
+        assert!(f.wants_prefetch(Some(0)), "empty ledger is below any watermark");
+    }
+
+    #[test]
+    fn fast_len_guard() {
+        assert!(fast_len_ok(0));
+        assert!(fast_len_ok((1 << 40) - 1));
+        assert!(!fast_len_ok(1 << 40));
     }
 
     #[test]

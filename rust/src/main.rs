@@ -9,7 +9,9 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use dca_dls::config::{ClusterConfig, DelaySite, ExecutionModel, HierParams, WatermarkMode};
+use dca_dls::config::{
+    ClusterConfig, DelaySite, ExecutionModel, HierParams, SchedPath, WatermarkMode,
+};
 use dca_dls::coordinator::{self, EngineConfig};
 use dca_dls::des::{simulate, DesConfig};
 use dca_dls::report::figures::{
@@ -39,10 +41,11 @@ COMMANDS
   simulate           one DES cell  [--app --tech --model --inner --delay-us --ranks --n]
   hier               N-level HIER-DCA vs the flat models     [--app --tech --inner --levels K --fanout a,b,…
                        --techniques t0,t1,… --watermark W|auto --prefetch-depth Q --nodes --rpn
-                       --racks R --rack-latency-us X --n --delay-us --delay-site --json F]
+                       --racks R --rack-latency-us X --n --delay-us --delay-site --lockfree --json F]
   run                real threaded engine [--app --tech --model --workers --n --pjrt --delay-us
                        --hier --inner T --nodes K --levels K --fanout a,b,… --techniques t0,t1,…
-                       --watermark W|auto (0 = fetch on exhaustion) --prefetch-depth Q --json F]
+                       --watermark W|auto (0 = fetch on exhaustion) --prefetch-depth Q
+                       --lockfree (single-CAS grants for closed-form techniques) --json F]
   sweep-breakafter   A3 ablation: master breakAfter sweep [--app --tech]
   select             SimAS-style model auto-selection (§7, 4 models) [--app --tech --inner --levels K
                        --fanout a,b,… --watermark W|auto --delay-us]
@@ -146,6 +149,7 @@ fn cmd_table3(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_figure(app: App, title: &str, flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    reject_sched_path_flags(flags, title)?;
     let mut cfg = if flags.contains_key("quick") {
         FigureConfig::quick(app)
     } else {
@@ -348,6 +352,32 @@ const HIER_ONLY_FLAGS: [&str; 7] = [
     "prefetch-depth",
 ];
 
+/// `--lockfree` (or `--sched-path lockfree|two-phase`): grant protocol of
+/// the DCA/HIER-DCA chunk exchange — see [`SchedPath`]. Unparsable values
+/// error out rather than silently benchmarking the wrong path.
+fn sched_path_of(flags: &HashMap<String, String>) -> anyhow::Result<SchedPath> {
+    if flags.contains_key("lockfree") {
+        return Ok(SchedPath::LockFree);
+    }
+    match flags.get("sched-path") {
+        None => Ok(SchedPath::default()),
+        Some(raw) => SchedPath::parse(raw).ok_or_else(|| {
+            anyhow::anyhow!("bad --sched-path '{raw}' (expect 'two-phase' or 'lockfree')")
+        }),
+    }
+}
+
+/// Commands whose runs always use the two-phase protocol reject the
+/// fast-path flags instead of silently ignoring them.
+fn reject_sched_path_flags(flags: &HashMap<String, String>, cmd: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !(flags.contains_key("lockfree") || flags.contains_key("sched-path")),
+        "--lockfree/--sched-path are not supported by `{cmd}` (its scenarios compare \
+         the two-phase protocol); use `simulate`, `hier`, or `run`"
+    );
+    Ok(())
+}
+
 fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let app = app_of(flags);
     let tech = outer_tech_of(flags)?;
@@ -367,6 +397,8 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     )?;
     let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
     let cfg = DesConfig {
+        sched_path: sched_path_of(flags)?,
+        record_assignments: true,
         params: LoopParams::new(n, cluster.total_ranks()),
         technique: tech,
         model,
@@ -445,6 +477,8 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             continue;
         }
         let cfg = DesConfig {
+            sched_path: sched_path_of(flags)?,
+            record_assignments: true,
             params: LoopParams::new(n, cluster.total_ranks()),
             technique: tech,
             model,
@@ -556,6 +590,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     let n = get(flags, "n", workload.n().min(16_384));
     let mut cfg = EngineConfig::new(LoopParams::new(n, workers), tech, model);
+    cfg.sched_path = sched_path_of(flags)?;
     cfg.delay = InjectedDelay::calculation_only(delay);
     if model == ExecutionModel::HierDca {
         cfg.nodes = get(flags, "nodes", if workers % 2 == 0 { 2 } else { 1 });
@@ -602,6 +637,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    reject_sched_path_flags(flags, "sweep-breakafter")?;
     let app = app_of(flags);
     let tech = tech_of(flags)?;
     let cost = app.cost_model(0xF1605, 2_000);
@@ -617,6 +653,8 @@ fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 ..ClusterConfig::minihpc()
             };
             let cfg = DesConfig {
+                sched_path: Default::default(),
+                record_assignments: true,
                 params: LoopParams::new(65_536, cluster.total_ranks()),
                 technique: tech,
                 model,
@@ -635,6 +673,7 @@ fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    reject_sched_path_flags(flags, "select")?;
     let app = app_of(flags);
     let tech = outer_tech_of(flags)?;
     let hier = hier_of(flags)?;

@@ -164,6 +164,8 @@ pub fn run_figure(cfg: &FigureConfig) -> anyhow::Result<Vec<FigureRow>> {
                         })
                         .collect();
                     let des = DesConfig {
+                        sched_path: Default::default(),
+                        record_assignments: true,
                         params,
                         technique,
                         model,

@@ -423,6 +423,7 @@ mod tests {
             intra_node_messages: 28,
             inter_node_messages: 8,
             level_messages: vec![8, 28],
+            fast_grants: 0,
         };
         let j = run_result_json(
             "PSIA",

@@ -245,6 +245,7 @@ mod tests {
             intra_node_messages: 40,
             inter_node_messages: 12,
             level_messages: vec![12, 40],
+            fast_grants: 0,
         };
         let s = render_run_summary(&r);
         assert!(s.contains("intra-node 40"), "{s}");

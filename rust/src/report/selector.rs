@@ -50,6 +50,8 @@ pub fn select_approach(
             continue;
         }
         let cfg = DesConfig {
+            sched_path: Default::default(),
+            record_assignments: true,
             params: LoopParams::new(prefix_n.min(n), cluster.total_ranks()),
             technique,
             model,

@@ -24,6 +24,7 @@ impl FacConsts {
     }
 
     /// Eq. 15 — `⌈0.5^(⌊i/P⌋+1) · N/P⌉`.
+    #[inline]
     pub fn closed(&self, i: u64) -> u64 {
         let batch = i / self.p + 1;
         ceil_u64(0.5f64.powi(batch.min(i32::MAX as u64) as i32) * self.n_over_p)

@@ -34,6 +34,7 @@ impl FissConsts {
     }
 
     /// Eq. 19 — `K₀ + ⌊i/P⌋·C`.
+    #[inline]
     pub fn closed(&self, i: u64) -> u64 {
         self.k0 + (i / self.p).saturating_mul(self.incr)
     }

@@ -28,12 +28,14 @@ impl GssConsts {
     }
 
     /// Raw (pre-ceiling) closed-form value `q^i · N/P`; shared with TAP/PLS.
+    #[inline]
     pub fn raw(&self, i: u64) -> f64 {
         // q^i underflows to 0 for huge i — fine, callers clamp to min_chunk.
         self.q.powi(i.min(i32::MAX as u64) as i32) * self.n_over_p
     }
 
     /// Eq. 14 — `⌈q^i · N/P⌉`.
+    #[inline]
     pub fn closed(&self, i: u64) -> u64 {
         ceil_u64(self.raw(i))
     }

@@ -152,6 +152,24 @@ impl TechniqueKind {
     pub fn is_adaptive(&self) -> bool {
         matches!(self, TechniqueKind::Af)
     }
+
+    /// `true` for techniques whose sizing is coupled to runtime
+    /// measurements: AF (per-PE µ/σ synchronization, §2 Eq. 11) and TAP
+    /// (iteration-time statistics `µ`, `σ` feeding `v_α`). These stay on
+    /// the two-phase reserve/commit protocol even when the lock-free fast
+    /// path is enabled — their chunk sizes cannot be tabulated up front.
+    pub fn is_measurement_coupled(&self) -> bool {
+        matches!(self, TechniqueKind::Af | TechniqueKind::Tap)
+    }
+
+    /// `true` when the chunk at step `i` is a pure function of `i` given
+    /// only `(N, P)` — the precondition for the lock-free CAS fast path
+    /// ([`ChunkTable`]): STATIC, SS, FSC, GSS, TSS, FAC, TFSS, FISS, VISS,
+    /// RND, PLS. Excludes AF (no closed form at all, §4) and TAP
+    /// (measurement-coupled parameters).
+    pub fn supports_fast_path(&self) -> bool {
+        self.has_closed_form() && !self.is_measurement_coupled()
+    }
 }
 
 impl std::fmt::Display for TechniqueKind {
@@ -375,6 +393,155 @@ impl Technique {
     }
 }
 
+/// The **precomputed chunk table** of a closed-form technique bound to one
+/// `(N, P)`: `bounds[i]` is the first iteration of scheduling step `i` and
+/// `bounds[steps]` is `N` — the technique's entire serial schedule flattened
+/// into prefix sums. This is what makes the lock-free DCA fast path a single
+/// CAS: a grant over the packed `(start, seq)` ledger word only needs an
+/// array lookup to know the chunk at `start` — no formula evaluation, no
+/// floating point, no coordinator round trip (§4's distributed calculation
+/// taken to its RMA-paper endpoint, cf. arXiv 1901.02773).
+///
+/// The table replays exactly the clipping the central
+/// [`crate::sched::WorkQueue`] applies per commit (`max(min_chunk)` then
+/// `min(remaining)`), so a table walk IS the two-phase protocol's serial
+/// schedule — pinned by the `chunk_table_matches_closed_form_schedule` test.
+#[derive(Debug, Clone)]
+pub struct ChunkTable {
+    /// Chunk boundaries: `bounds[i]..bounds[i+1]` is step `i`'s range.
+    bounds: Vec<u64>,
+}
+
+/// Step-count ceiling for eagerly materialized fast-path tables (~64 MiB
+/// of boundaries). SS-like schedules hold one boundary per iteration, so
+/// without this cap a multi-billion-iteration `--lockfree` run would try
+/// to allocate the whole schedule up front; above the cap callers fall
+/// back to the O(1)-memory two-phase protocol.
+pub const MAX_FAST_TABLE_STEPS: u64 = 1 << 23;
+
+impl ChunkTable {
+    /// Build the table for `kind` bound to `params`. `None` when `kind` has
+    /// no closed form (AF).
+    pub fn build(kind: TechniqueKind, params: &LoopParams) -> Option<ChunkTable> {
+        Self::build_capped(kind, params, u64::MAX)
+    }
+
+    /// [`Self::build`] with a step budget: aborts (returning `None`) once
+    /// the schedule exceeds `max_steps` chunks, bounding both the memory
+    /// and the build time of the probe.
+    pub fn build_capped(
+        kind: TechniqueKind,
+        params: &LoopParams,
+        max_steps: u64,
+    ) -> Option<ChunkTable> {
+        if !kind.has_closed_form() {
+            return None;
+        }
+        let tech = Technique::new(kind, params);
+        let n = params.n;
+        let min_chunk = params.min_chunk.max(1);
+        let cap = usize::try_from(max_steps.saturating_add(1)).unwrap_or(usize::MAX);
+        let mut bounds = Vec::with_capacity(Self::estimate_steps(kind, params).min(cap));
+        bounds.push(0);
+        let mut start = 0u64;
+        let mut step = 0u64;
+        while start < n {
+            if step >= max_steps {
+                return None;
+            }
+            let size = tech.closed_chunk(step).max(min_chunk).min(n - start);
+            start += size;
+            step += 1;
+            bounds.push(start);
+        }
+        Some(ChunkTable { bounds })
+    }
+
+    /// Pre-sizing hint so the build loop does not reallocate: SS emits `N`
+    /// chunks, STATIC exactly `P`, every other pattern a small multiple of
+    /// `P` (decreasing ~`P·ln(N/P)`, batched ~`P·log₂(N/P)`).
+    fn estimate_steps(kind: TechniqueKind, params: &LoopParams) -> usize {
+        let p = params.p as u64;
+        let est = match kind {
+            TechniqueKind::Ss => params.n,
+            TechniqueKind::Static => p,
+            _ => (8 * p + 64).min(params.n),
+        };
+        est as usize + 1
+    }
+
+    /// Scheduling steps in the table (= chunks in the serial schedule).
+    pub fn steps(&self) -> u64 {
+        self.bounds.len() as u64 - 1
+    }
+
+    /// Total iterations the table covers.
+    pub fn n(&self) -> u64 {
+        *self.bounds.last().expect("table is never empty")
+    }
+
+    /// The chunk granted when the shared cursor sits at `start`:
+    /// `(step, size)`, or `None` once the table is drained (`start = N`).
+    ///
+    /// `start` must be a chunk boundary, which the CAS protocol guarantees —
+    /// every successful grant advances the cursor to the next boundary.
+    pub fn grant_from(&self, start: u64) -> Option<(u64, u64)> {
+        if start >= self.n() {
+            return None;
+        }
+        let step = self
+            .bounds
+            .binary_search(&start)
+            .unwrap_or_else(|_| panic!("cursor {start} is not a chunk boundary"));
+        Some((step as u64, self.bounds[step + 1] - start))
+    }
+}
+
+/// Memoized [`ChunkTable`]s for one `(technique, P)` pair, keyed by the
+/// bound loop length `N`. A level master re-binds its technique per
+/// installed chunk, but batched outer techniques hand out the same handful
+/// of lengths over and over — each `(N, P)` table is computed once.
+#[derive(Debug)]
+pub struct TableCache {
+    kind: TechniqueKind,
+    base: LoopParams,
+    p: u32,
+    map: std::collections::HashMap<u64, std::sync::Arc<ChunkTable>>,
+}
+
+impl TableCache {
+    /// Cache for `kind` subdividing among `p` requesters, keeping `base`'s
+    /// technique parameterization (FSC constants, batch counts, seeds).
+    ///
+    /// # Panics
+    /// When `kind` has no closed form (AF cannot be tabulated).
+    pub fn new(kind: TechniqueKind, base: &LoopParams, p: u32) -> Self {
+        assert!(kind.has_closed_form(), "{kind} has no closed form to tabulate");
+        TableCache {
+            kind,
+            base: base.clone(),
+            p: p.max(1),
+            map: std::collections::HashMap::new(),
+        }
+    }
+
+    /// The table for a chunk of `n` iterations (computed once per length).
+    pub fn get(&mut self, n: u64) -> std::sync::Arc<ChunkTable> {
+        let n = n.max(1);
+        if let Some(t) = self.map.get(&n) {
+            return std::sync::Arc::clone(t);
+        }
+        let mut params = self.base.clone();
+        params.n = n;
+        params.p = self.p;
+        let table = std::sync::Arc::new(
+            ChunkTable::build(self.kind, &params).expect("closed form checked at construction"),
+        );
+        self.map.insert(n, std::sync::Arc::clone(&table));
+        table
+    }
+}
+
 /// Mutable state threaded through the recursive (CCA) chunk calculation.
 #[derive(Debug, Clone, Default)]
 pub struct RecursiveState {
@@ -443,5 +610,78 @@ mod tests {
     fn evaluated_is_twelve_all_is_thirteen() {
         assert_eq!(TechniqueKind::EVALUATED.len(), 12);
         assert_eq!(TechniqueKind::ALL.len(), 13);
+    }
+
+    #[test]
+    fn fast_path_excludes_exactly_af_and_tap() {
+        for k in TechniqueKind::ALL {
+            let expect = !matches!(k, TechniqueKind::Af | TechniqueKind::Tap);
+            assert_eq!(k.supports_fast_path(), expect, "{k}");
+            assert_eq!(k.is_measurement_coupled(), !expect, "{k}");
+        }
+    }
+
+    /// The tentpole equivalence, at its root: the precomputed table IS the
+    /// two-phase serial schedule — same boundaries, same step count — for
+    /// every closed-form technique over a grid of `(N, P)` shapes,
+    /// including non-dividing and degenerate ones.
+    #[test]
+    fn chunk_table_matches_closed_form_schedule() {
+        for kind in TechniqueKind::ALL {
+            if !kind.has_closed_form() {
+                assert!(ChunkTable::build(kind, &LoopParams::new(100, 4)).is_none());
+                continue;
+            }
+            for (n, p) in [(1_000u64, 4u32), (1_000, 7), (64, 64), (5, 8), (1, 1), (12_345, 31)] {
+                let params = LoopParams::new(n, p);
+                let tech = Technique::new(kind, &params);
+                let schedule = crate::sched::closed_form_schedule(&tech, &params);
+                let table = ChunkTable::build(kind, &params).expect("closed form");
+                assert_eq!(table.steps(), schedule.len() as u64, "{kind} ({n},{p})");
+                assert_eq!(table.n(), n, "{kind} ({n},{p})");
+                let mut cursor = 0u64;
+                for a in &schedule {
+                    let (step, size) =
+                        table.grant_from(cursor).unwrap_or_else(|| panic!("{kind} @{cursor}"));
+                    assert_eq!((step, cursor, size), (a.step, a.start, a.size), "{kind} ({n},{p})");
+                    cursor += size;
+                }
+                assert_eq!(table.grant_from(cursor), None, "{kind}: drained at N");
+            }
+        }
+    }
+
+    #[test]
+    fn capped_build_refuses_oversized_schedules() {
+        let params = LoopParams::new(10_000, 4);
+        // SS needs one step per iteration: a 9,999-step budget refuses,
+        // the exact budget fits.
+        assert!(ChunkTable::build_capped(TechniqueKind::Ss, &params, 9_999).is_none());
+        let t = ChunkTable::build_capped(TechniqueKind::Ss, &params, 10_000).unwrap();
+        assert_eq!(t.steps(), 10_000);
+        // Coarse schedules fit far under the global fast-path cap.
+        assert!(ChunkTable::build_capped(TechniqueKind::Gss, &params, MAX_FAST_TABLE_STEPS)
+            .is_some());
+    }
+
+    #[test]
+    fn table_cache_memoizes_per_length() {
+        let base = LoopParams::new(100_000, 16);
+        let mut cache = TableCache::new(TechniqueKind::Gss, &base, 4);
+        let a = cache.get(500);
+        let b = cache.get(500);
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same length hits the cache");
+        let c = cache.get(501);
+        assert!(!std::sync::Arc::ptr_eq(&a, &c));
+        assert_eq!(a.n(), 500);
+        assert_eq!(c.n(), 501);
+        // Degenerate length clamps like the ledger's with_np.
+        assert_eq!(cache.get(0).n(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "no closed form")]
+    fn table_cache_rejects_af() {
+        TableCache::new(TechniqueKind::Af, &LoopParams::new(100, 4), 4);
     }
 }

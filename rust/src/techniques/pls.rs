@@ -49,6 +49,7 @@ impl PlsConsts {
     }
 
     /// Eq. 21 — static share for `i < P`, closed GSS over `N_dyn` after.
+    #[inline]
     pub fn closed(&self, i: u64) -> u64 {
         if i < self.p {
             self.k_static

@@ -36,6 +36,7 @@ impl RndConsts {
     }
 
     /// Uniform draw in `[1, N/P]`, deterministic in `i`.
+    #[inline]
     pub fn closed(&self, i: u64) -> u64 {
         1 + splitmix64(self.seed ^ i.wrapping_mul(0xa076_1d64_78bd_642f)) % self.upper
     }

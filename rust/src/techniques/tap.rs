@@ -30,6 +30,7 @@ impl TapConsts {
     }
 
     /// Eq. 16 — closed form over the GSS closed form.
+    #[inline]
     pub fn closed(&self, i: u64) -> u64 {
         ceil_u64(self.taper(self.gss.raw(i)))
     }

@@ -54,6 +54,7 @@ impl TfssConsts {
     }
 
     /// Eq. 18 — batch mean of the TSS closed form.
+    #[inline]
     pub fn closed(&self, i: u64) -> u64 {
         self.batch_mean(i / self.p)
     }

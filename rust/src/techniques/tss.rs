@@ -31,6 +31,7 @@ impl TssConsts {
     }
 
     /// Eq. 17 — `K₀ − i·C`, clamped at `K_{S−1}`.
+    #[inline]
     pub fn closed(&self, i: u64) -> u64 {
         self.k_first.saturating_sub(i.saturating_mul(self.delta)).max(self.k_last)
     }

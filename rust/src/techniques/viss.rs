@@ -33,6 +33,7 @@ impl VissConsts {
     }
 
     /// Eq. 20 — `⌊2·K₀·(1 − 0.5^{b+1})⌋` for batch `b = ⌊i/P⌋`.
+    #[inline]
     pub fn closed(&self, i: u64) -> u64 {
         let b = (i / self.p).min(62); // 0.5^{b+1} underflows past 62 anyway
         (2.0 * self.k0 as f64 * (1.0 - 0.5f64.powi(b as i32 + 1))) as u64

@@ -15,6 +15,8 @@ use dca_dls::workload::{IterationCost, Workload};
 
 fn small_des(n: u64, p: u32) -> DesConfig {
     DesConfig {
+        sched_path: Default::default(),
+        record_assignments: true,
         params: LoopParams::new(n, p),
         technique: TechniqueKind::Gss,
         model: ExecutionModel::Dca,
@@ -95,6 +97,8 @@ fn des_master_slowdown_scenario() {
     let mk = |model| {
         let cluster = ClusterConfig { nodes: 4, ranks_per_node: 16, ..ClusterConfig::minihpc() };
         let cfg = DesConfig {
+            sched_path: Default::default(),
+            record_assignments: true,
             params: LoopParams::new(65_536, 64),
             technique: TechniqueKind::Ss, // maximal scheduling traffic
             model,

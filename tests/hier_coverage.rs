@@ -7,7 +7,7 @@
 
 use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams};
 use dca_dls::des::{simulate, DesConfig, DesResult};
-use dca_dls::sched::{verify_coverage, Assignment};
+use dca_dls::sched::verify_coverage;
 use dca_dls::substrate::delay::InjectedDelay;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
 use dca_dls::workload::IterationCost;
@@ -17,6 +17,8 @@ const N: u64 = 8_192;
 fn hier_cfg(kind: TechniqueKind, delay: InjectedDelay, inner: HierParams) -> DesConfig {
     let cluster = ClusterConfig::minihpc(); // 16 × 16 = 256 ranks
     DesConfig {
+        sched_path: Default::default(),
+        record_assignments: true,
         params: LoopParams::new(N, cluster.total_ranks()),
         technique: kind,
         model: ExecutionModel::HierDca,
@@ -26,12 +28,6 @@ fn hier_cfg(kind: TechniqueKind, delay: InjectedDelay, inner: HierParams) -> Des
         pe_speed: vec![],
         hier: inner,
     }
-}
-
-fn sorted(r: &DesResult) -> Vec<Assignment> {
-    let mut v = r.assignments.clone();
-    v.sort_by_key(|a| a.start);
-    v
 }
 
 /// The acceptance matrix: 12 techniques × {no-delay, 10 µs, 100 µs}
@@ -47,7 +43,7 @@ fn hier_covers_all_techniques_all_calc_scenarios_256_ranks() {
             );
             let r = simulate(&cfg)
                 .unwrap_or_else(|e| panic!("{kind} @ {}µs: {e}", delay_s * 1e6));
-            verify_coverage(&sorted(&r), N)
+            verify_coverage(&r.sorted_assignments(), N)
                 .unwrap_or_else(|e| panic!("{kind} @ {}µs: {e}", delay_s * 1e6));
             assert!(r.t_par() > 0.0, "{kind} @ {}µs", delay_s * 1e6);
             assert_eq!(r.rma_ops, 0, "{kind}: hier uses no RMA");
@@ -69,7 +65,7 @@ fn hier_covers_all_techniques_exponential_scenarios_256_ranks() {
             );
             let r = simulate(&cfg)
                 .unwrap_or_else(|e| panic!("{kind} @ exp {}µs: {e}", mean_s * 1e6));
-            verify_coverage(&sorted(&r), N)
+            verify_coverage(&r.sorted_assignments(), N)
                 .unwrap_or_else(|e| panic!("{kind} @ exp {}µs: {e}", mean_s * 1e6));
             assert!(r.t_par() > 0.0, "{kind} @ exp {}µs", mean_s * 1e6);
         }
@@ -105,7 +101,7 @@ fn hier_covers_all_techniques_assignment_scenarios_256_ranks() {
             );
             let r = simulate(&cfg)
                 .unwrap_or_else(|e| panic!("{kind} @ {}µs: {e}", delay_s * 1e6));
-            verify_coverage(&sorted(&r), N)
+            verify_coverage(&r.sorted_assignments(), N)
                 .unwrap_or_else(|e| panic!("{kind} @ {}µs: {e}", delay_s * 1e6));
         }
     }
@@ -121,7 +117,7 @@ fn hier_covers_mixed_inner_techniques_256_ranks() {
             HierParams::with_inner(inner),
         );
         let r = simulate(&cfg).unwrap_or_else(|e| panic!("FAC▸{inner}: {e}"));
-        verify_coverage(&sorted(&r), N).unwrap_or_else(|e| panic!("FAC▸{inner}: {e}"));
+        verify_coverage(&r.sorted_assignments(), N).unwrap_or_else(|e| panic!("FAC▸{inner}: {e}"));
     }
 }
 
@@ -147,7 +143,7 @@ fn hier_deterministic_at_256_ranks() {
 fn hier_all_nodes_receive_work() {
     let cfg = hier_cfg(TechniqueKind::Fac2, InjectedDelay::none(), HierParams::default());
     let r = simulate(&cfg).unwrap();
-    verify_coverage(&sorted(&r), N).unwrap();
+    verify_coverage(&r.sorted_assignments(), N).unwrap();
     // Node-chunk boundaries are invisible in assignments, but with N=8192
     // over 16 nodes a healthy run produces far more chunks than nodes.
     assert!(r.stats.chunks >= 16, "chunks={}", r.stats.chunks);

@@ -20,6 +20,8 @@ const P: u32 = 4;
 fn des_chunk_multiset(model: ExecutionModel, kind: TechniqueKind) -> Vec<u64> {
     let cluster = ClusterConfig::small(P);
     let cfg = DesConfig {
+        sched_path: Default::default(),
+        record_assignments: true,
         params: LoopParams::new(N, P),
         technique: kind,
         model,
@@ -88,6 +90,8 @@ fn single_rank_lb4mpi_matches_des_cca() {
 fn des_chunk_multiset_1rank(kind: TechniqueKind) -> Vec<u64> {
     let cluster = ClusterConfig::small(1);
     let cfg = DesConfig {
+        sched_path: Default::default(),
+        record_assignments: true,
         params: LoopParams::new(N, 1),
         technique: kind,
         model: ExecutionModel::Cca,

@@ -9,14 +9,77 @@
 
 use std::sync::Arc;
 
-use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams};
+use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use dca_dls::coordinator::{self, EngineConfig, RunResult};
 use dca_dls::des::{simulate, DesConfig, DesResult};
-use dca_dls::sched::{verify_coverage, Assignment};
+use dca_dls::sched::verify_coverage;
 use dca_dls::substrate::delay::InjectedDelay;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
 use dca_dls::workload::synthetic::{CostShape, Synthetic};
 use dca_dls::workload::{IterationCost, Workload};
+
+/// Tentpole property at depth 3: for every technique the lock-free CAS
+/// fast path and the two-phase ledger emit bit-identical serial schedules
+/// and chunk counts. Pinned on the deterministic-equality geometry (see
+/// `tests/threaded_hier.rs::equivalence_des_cfg` for the reasoning): a
+/// dedicated single-parent chain `[1, 1, 8]` over one uniform-latency
+/// node, so two-phase commits stay in reservation order at every level.
+#[test]
+fn lockfree_matches_two_phase_schedule_depth3() {
+    let mk = |kind: TechniqueKind, path: SchedPath| {
+        let cluster = ClusterConfig {
+            nodes: 1,
+            ranks_per_node: 8,
+            break_after: 0,
+            ..ClusterConfig::minihpc()
+        };
+        let mut cfg = DesConfig::new(
+            LoopParams::new(4_096, cluster.total_ranks()),
+            kind,
+            ExecutionModel::HierDca,
+            cluster,
+            IterationCost::Constant(1e-5),
+        );
+        cfg.hier = HierParams::default().with_levels(3).with_fanouts(&[1, 1, 8]);
+        cfg.sched_path = path;
+        simulate(&cfg).unwrap_or_else(|e| panic!("{kind} {path}: {e}"))
+    };
+    for kind in TechniqueKind::ALL {
+        let two = mk(kind, SchedPath::TwoPhase);
+        let fast = mk(kind, SchedPath::LockFree);
+        verify_coverage(&fast.sorted_assignments(), 4_096)
+            .unwrap_or_else(|e| panic!("{kind}: {e}"));
+        assert_eq!(
+            two.sorted_assignments(),
+            fast.sorted_assignments(),
+            "{kind} depth 3: serial schedules must be bit-identical across grant paths"
+        );
+        assert_eq!(two.stats.chunks, fast.stats.chunks, "{kind}: chunk counts");
+        assert!(
+            fast.t_par() <= two.t_par(),
+            "{kind} depth 3: lockfree t_par {} must not exceed two-phase {}",
+            fast.t_par(),
+            two.t_par()
+        );
+        assert_eq!(fast.fast_grants > 0, kind.supports_fast_path(), "{kind}: CAS eligibility");
+    }
+}
+
+/// The threaded engine's lock-free leaf at depth 3: coverage + checksum
+/// stay exact with real CAS grants under the two-master spine.
+#[test]
+fn threaded_depth3_lockfree_covers_with_matching_checksum() {
+    const N: u64 = 4_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Jittered, 17));
+    let reference = w.execute_range(0, N);
+    for kind in [TechniqueKind::Fac2, TechniqueKind::Ss, TechniqueKind::Gss] {
+        let cfg = hier_engine(N, 8, &[2, 2, 2], kind, HierParams::default()).with_lockfree();
+        let r = run_covered(&cfg, &w, N, kind.name());
+        assert_eq!(r.checksum, reference, "{kind}: checksum");
+        assert!(r.fast_grants > 0, "{kind}: leaf CAS grants happened");
+        assert!(r.level_messages[0] > 0, "{kind}: root protocol stays two-phase");
+    }
+}
 
 /// 4 racks × 2 nodes × 4 ranks = 32 ranks, the depth-3 DES geometry.
 fn racked_cluster(inter_rack: f64) -> ClusterConfig {
@@ -39,12 +102,6 @@ fn depth3_des_cfg(n: u64, kind: TechniqueKind, cluster: ClusterConfig) -> DesCon
     );
     cfg.hier = HierParams::default().with_levels(3).with_fanouts(&[4, 2, 4]);
     cfg
-}
-
-fn sorted_des(r: &DesResult) -> Vec<Assignment> {
-    let mut v = r.assignments.clone();
-    v.sort_by_key(|a| a.start);
-    v
 }
 
 fn hier_engine(
@@ -77,7 +134,7 @@ fn depth3_covers_all_techniques_both_rack_latencies() {
             let cfg = depth3_des_cfg(N, kind, racked_cluster(inter_rack));
             let r = simulate(&cfg)
                 .unwrap_or_else(|e| panic!("{kind} @ rack {}µs: {e}", inter_rack * 1e6));
-            verify_coverage(&sorted_des(&r), N)
+            verify_coverage(&r.sorted_assignments(), N)
                 .unwrap_or_else(|e| panic!("{kind} @ rack {}µs: {e}", inter_rack * 1e6));
             assert_eq!(r.level_messages.len(), 3, "{kind}");
             assert_eq!(
@@ -116,7 +173,7 @@ fn depth3_mixed_level_techniques_cover() {
         .with_fanouts(&[4, 2, 4])
         .with_mid(1, TechniqueKind::Gss);
     let r = simulate(&cfg).unwrap();
-    verify_coverage(&sorted_des(&r), N).unwrap();
+    verify_coverage(&r.sorted_assignments(), N).unwrap();
     // SS at the leaf level: unit sub-chunks dominate.
     let ones = r.assignments.iter().filter(|a| a.size == 1).count();
     assert!(ones > r.assignments.len() / 2, "leaf SS must produce unit chunks");
@@ -197,7 +254,7 @@ fn des_depth3_edge_geometries() {
         );
         cfg.hier = HierParams::default().with_levels(3).with_fanouts(&fanouts);
         let r = simulate(&cfg).unwrap_or_else(|e| panic!("{label}: {e}"));
-        verify_coverage(&sorted_des(&r), n).unwrap_or_else(|e| panic!("{label}: {e}"));
+        verify_coverage(&r.sorted_assignments(), n).unwrap_or_else(|e| panic!("{label}: {e}"));
     }
 }
 
@@ -230,7 +287,7 @@ fn threaded_and_des_depth3_grant_identical_serial_schedules() {
         let des = simulate(&des_cfg).unwrap_or_else(|e| panic!("{kind}: {e}"));
         assert_eq!(
             threaded.sorted_assignments(),
-            sorted_des(&des),
+            des.sorted_assignments(),
             "{kind}: depth-3 serial schedules must be identical across engines"
         );
     }
@@ -252,6 +309,8 @@ fn auto_watermark_never_worse_than_fetch_on_exhaustion() {
     };
     let mk = |hier: HierParams| {
         let cfg = DesConfig {
+            sched_path: Default::default(),
+            record_assignments: true,
             params: LoopParams::new(N, cluster.total_ranks()),
             technique: TechniqueKind::Fac2,
             model: ExecutionModel::HierDca,
@@ -262,7 +321,7 @@ fn auto_watermark_never_worse_than_fetch_on_exhaustion() {
             hier,
         };
         let r = simulate(&cfg).unwrap();
-        verify_coverage(&sorted_des(&r), N).unwrap();
+        verify_coverage(&r.sorted_assignments(), N).unwrap();
         r
     };
     let inner = HierParams::with_inner(TechniqueKind::Ss);
@@ -318,7 +377,7 @@ fn threaded_auto_watermark_covers() {
 fn depth3_confines_expensive_traffic_to_the_top_level() {
     let cfg = depth3_des_cfg(8_192, TechniqueKind::Fac2, racked_cluster(100e-6));
     let r = simulate(&cfg).unwrap();
-    verify_coverage(&sorted_des(&r), 8_192).unwrap();
+    verify_coverage(&r.sorted_assignments(), 8_192).unwrap();
     assert!(
         r.level_messages[0] * 10 < r.level_messages[2],
         "root protocol {} should be ≫ rarer than the leaf protocol {}",

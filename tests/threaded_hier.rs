@@ -8,14 +8,96 @@
 
 use std::sync::Arc;
 
-use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams};
+use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use dca_dls::coordinator::{self, EngineConfig, RunResult};
-use dca_dls::des::{simulate, DesConfig};
+use dca_dls::des::{simulate, DesConfig, DesResult};
 use dca_dls::sched::{verify_coverage, Assignment};
 use dca_dls::substrate::delay::InjectedDelay;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
 use dca_dls::workload::synthetic::{CostShape, Synthetic};
 use dca_dls::workload::{IterationCost, Workload};
+
+/// The schedule-equivalence property scenario: a **dedicated** master
+/// (`break_after = 0`) serving a uniform-latency single-node group. With
+/// every requester identical, two-phase commits land in reservation order,
+/// so the two-phase schedule *is* the canonical table schedule the CAS
+/// path always emits — and the equality below is deterministic, not a
+/// race-prone coincidence. (On heterogeneous-latency geometries the
+/// two-phase tail legitimately shifts by commit order — §3 only requires
+/// disjoint coverage — which is why the property pins this geometry.)
+fn equivalence_des_cfg(kind: TechniqueKind, path: SchedPath, levels: u32) -> DesConfig {
+    let cluster = ClusterConfig {
+        nodes: 1,
+        ranks_per_node: 8,
+        break_after: 0,
+        ..ClusterConfig::minihpc()
+    };
+    let mut cfg = DesConfig::new(
+        LoopParams::new(4_096, cluster.total_ranks()),
+        kind,
+        if levels == 0 { ExecutionModel::Dca } else { ExecutionModel::HierDca },
+        cluster,
+        IterationCost::Constant(1e-5),
+    );
+    if levels == 2 {
+        cfg.hier = HierParams::default().with_levels(2).with_fanouts(&[1, 8]);
+    } else if levels == 3 {
+        cfg.hier = HierParams::default().with_levels(3).with_fanouts(&[1, 1, 8]);
+    }
+    cfg.sched_path = path;
+    cfg
+}
+
+/// Run one equivalence cell and assert the tentpole property: bit-identical
+/// serial schedules (sorted by start) and chunk counts between the
+/// two-phase ledger and the CAS fast path, with the fast path never slower.
+pub fn assert_equivalent(kind: TechniqueKind, levels: u32) -> (DesResult, DesResult) {
+    let two = simulate(&equivalence_des_cfg(kind, SchedPath::TwoPhase, levels))
+        .unwrap_or_else(|e| panic!("{kind} two-phase: {e}"));
+    let fast = simulate(&equivalence_des_cfg(kind, SchedPath::LockFree, levels))
+        .unwrap_or_else(|e| panic!("{kind} lockfree: {e}"));
+    verify_coverage(&fast.sorted_assignments(), 4_096).unwrap_or_else(|e| panic!("{kind}: {e}"));
+    assert_eq!(
+        two.sorted_assignments(),
+        fast.sorted_assignments(),
+        "{kind} depth {levels}: serial schedules must be bit-identical across grant paths"
+    );
+    assert_eq!(two.stats.chunks, fast.stats.chunks, "{kind}: chunk counts");
+    assert!(
+        fast.t_par() <= two.t_par(),
+        "{kind} depth {levels}: lockfree t_par {} must not exceed two-phase {}",
+        fast.t_par(),
+        two.t_par()
+    );
+    if kind.supports_fast_path() {
+        assert!(fast.fast_grants > 0, "{kind}: CAS grants happened");
+    } else {
+        assert_eq!(fast.fast_grants, 0, "{kind}: AF/TAP fall back to two-phase");
+        assert_eq!(fast.t_par(), two.t_par(), "{kind}: fallback is bit-identical");
+    }
+    (two, fast)
+}
+
+/// Tentpole property, flat: for every technique the lock-free CAS path and
+/// the two-phase DCA protocol emit bit-identical serial schedules.
+#[test]
+fn lockfree_matches_two_phase_schedule_flat() {
+    for kind in TechniqueKind::ALL {
+        let (_, fast) = assert_equivalent(kind, 0);
+        if kind.supports_fast_path() {
+            assert_eq!(fast.stats.messages, 0, "{kind}: flat fast path needs no messages");
+        }
+    }
+}
+
+/// Tentpole property, depth 2: same equality through a leaf ledger that is
+/// installed/replaced chunk by chunk (seq bumps, table re-binding).
+#[test]
+fn lockfree_matches_two_phase_schedule_depth2() {
+    for kind in TechniqueKind::ALL {
+        assert_equivalent(kind, 2);
+    }
+}
 
 fn hier_engine(n: u64, p: u32, nodes: u32, outer: TechniqueKind, hier: HierParams) -> EngineConfig {
     let mut cfg = EngineConfig::new(LoopParams::new(n, p), outer, ExecutionModel::HierDca);
@@ -122,6 +204,8 @@ fn threaded_and_des_hier_grant_identical_serial_schedules() {
 
         let cluster = ClusterConfig { nodes: 1, ranks_per_node: 1, ..ClusterConfig::minihpc() };
         let des_cfg = DesConfig {
+            sched_path: Default::default(),
+            record_assignments: true,
             params: LoopParams::new(N, 1),
             technique: kind,
             model: ExecutionModel::HierDca,
@@ -158,6 +242,8 @@ fn prefetch_beats_fetch_on_exhaustion() {
     };
     let mk = |hier: HierParams| {
         let cfg = DesConfig {
+            sched_path: Default::default(),
+            record_assignments: true,
             params: LoopParams::new(N, cluster.total_ranks()),
             technique: TechniqueKind::Fac2,
             model: ExecutionModel::HierDca,
@@ -190,6 +276,98 @@ fn prefetch_beats_fetch_on_exhaustion() {
     );
 }
 
+/// The threaded engine's lock-free leaf level: exact coverage and matching
+/// checksums for every fast-path technique, with CAS grants happening and
+/// the leaf message traffic collapsing.
+#[test]
+fn threaded_lockfree_leaf_covers_with_matching_checksum() {
+    const N: u64 = 6_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Jittered, 11));
+    let reference = w.execute_range(0, N);
+    for kind in TechniqueKind::EVALUATED {
+        let cfg = hier_engine(N, 4, 2, kind, HierParams::default()).with_lockfree();
+        let r = run_covered(&cfg, &w, N, kind.name());
+        assert_eq!(r.checksum, reference, "{kind}: checksum");
+        if kind.supports_fast_path() {
+            assert!(r.fast_grants > 0, "{kind}: leaf grants took the CAS path");
+        } else {
+            assert_eq!(r.fast_grants, 0, "{kind}: AF/TAP fall back to two-phase");
+            assert!(r.intra_node_messages > 0, "{kind}: two-phase leaf protocol ran");
+        }
+        assert!(r.inter_node_messages > 0, "{kind}: outer protocol stays two-phase");
+    }
+}
+
+/// Threaded lock-free + fixed-watermark prefetch: the worker-side Nudge
+/// path (the master cannot observe CAS grants) keeps coverage and checksum
+/// exact.
+#[test]
+fn threaded_lockfree_prefetch_nudge_covers() {
+    const N: u64 = 4_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Jittered, 23));
+    let reference = w.execute_range(0, N);
+    let hier = HierParams::with_inner(TechniqueKind::Ss).with_watermark(64);
+    let cfg = hier_engine(N, 4, 2, TechniqueKind::Fac2, hier).with_lockfree();
+    let r = run_covered(&cfg, &w, N, "lockfree prefetch");
+    assert_eq!(r.checksum, reference);
+    assert!(r.fast_grants > 0);
+}
+
+/// Lock-free edge geometries: single-rank groups (masters CAS for
+/// themselves), one node, N < P, and fully serial.
+#[test]
+fn threaded_lockfree_edge_geometries() {
+    let cases: [(u64, u32, u32, &str); 4] = [
+        (2_000, 4, 4, "rpn=1 (masters CAS everything)"),
+        (2_000, 4, 1, "nodes=1 (degenerate outer level)"),
+        (5, 8, 2, "N < P (more ranks than iterations)"),
+        (1_000, 1, 1, "serial (one master, no workers)"),
+    ];
+    for (n, p, nodes, label) in cases {
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(n.max(64), 1e-7, CostShape::Uniform, 5));
+        let reference = w.execute_range(0, n);
+        let cfg = hier_engine(n, p, nodes, TechniqueKind::Gss, HierParams::default())
+            .with_lockfree();
+        let r = run_covered(&cfg, &w, n, label);
+        assert_eq!(r.checksum, reference, "{label}: checksum");
+        assert!(r.fast_grants > 0, "{label}: CAS grants happened");
+    }
+}
+
+/// Cross-engine equivalence on the lock-free path: on the fully serial
+/// geometry both engines are deterministic, and because the threaded CAS
+/// loop walks the same precomputed table the DES's fused grants replay,
+/// the serial schedules must be identical (the two-phase twin of this test
+/// is `threaded_and_des_hier_grant_identical_serial_schedules`).
+#[test]
+fn threaded_and_des_lockfree_grant_identical_serial_schedules() {
+    const N: u64 = 3_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-8, CostShape::Uniform, 9));
+    for kind in TechniqueKind::ALL {
+        if kind == TechniqueKind::Af {
+            continue;
+        }
+        let cfg = hier_engine(N, 1, 1, kind, HierParams::default()).with_lockfree();
+        let threaded = run_covered(&cfg, &w, N, kind.name());
+
+        let cluster = ClusterConfig { nodes: 1, ranks_per_node: 1, ..ClusterConfig::minihpc() };
+        let mut des_cfg = DesConfig::new(
+            LoopParams::new(N, 1),
+            kind,
+            ExecutionModel::HierDca,
+            cluster,
+            IterationCost::Constant(1e-6),
+        );
+        des_cfg.sched_path = SchedPath::LockFree;
+        let des = simulate(&des_cfg).unwrap_or_else(|e| panic!("{kind}: {e}"));
+        assert_eq!(
+            threaded.sorted_assignments(),
+            des.sorted_assignments(),
+            "{kind}: lock-free serial schedules must be identical across engines"
+        );
+    }
+}
+
 /// Prefetch keeps exact coverage across the full technique matrix on the
 /// DES (staging + stale-`seq` NACK interplay under every chunk pattern).
 #[test]
@@ -198,6 +376,8 @@ fn prefetch_covers_all_techniques_des() {
     let cluster = ClusterConfig { nodes: 2, ranks_per_node: 4, ..ClusterConfig::minihpc() };
     for kind in TechniqueKind::EVALUATED {
         let cfg = DesConfig {
+            sched_path: Default::default(),
+            record_assignments: true,
             params: LoopParams::new(N, cluster.total_ranks()),
             technique: kind,
             model: ExecutionModel::HierDca,
