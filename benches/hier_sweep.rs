@@ -35,7 +35,7 @@ use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use dca_dls::des::{simulate, DesConfig};
 use dca_dls::report::json::Json;
 use dca_dls::substrate::delay::InjectedDelay;
-use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::techniques::{CandidateSet, LoopParams, TechniqueKind};
 use dca_dls::workload::IterationCost;
 
 const N: u64 = 65_536;
@@ -141,6 +141,48 @@ fn main() {
         assert!(r.stats.chunks > 100_000, "huge scenario really scheduled");
         r
     };
+    // -- the adaptive extreme-slowdown scenario: exponential injected
+    //    calculation delay (mean 100 µs) on the 16×16 hierarchy, FAC outer.
+    //    Three static inner techniques vs the SimAS-style adaptive
+    //    controller starting from the WORST of them (SS): each subtree must
+    //    rebind itself to the overhead-robust choice within its first
+    //    probes and land within 2% of (in the blessed model: beating) the
+    //    best static. Deterministic — the delay draws are keyed on
+    //    (seed, rank, virtual ns).
+    let adapt_label = "adaptive exp-slowdown 100 µs";
+    const ADAPT_N: u64 = 131_072;
+    let adapt_cell = |inner: TechniqueKind, adaptive: bool| {
+        let cluster = ClusterConfig::minihpc();
+        let mut cfg = DesConfig::new(
+            LoopParams::new(ADAPT_N, cluster.total_ranks()),
+            TechniqueKind::Fac2,
+            ExecutionModel::HierDca,
+            cluster,
+            IterationCost::Constant(1e-5),
+        );
+        cfg.delay = InjectedDelay::exponential_calculation(100e-6, 0xAD_0001);
+        cfg.hier = HierParams::with_inner(inner);
+        if adaptive {
+            cfg.hier = cfg
+                .hier
+                .with_adaptive()
+                .with_probe_interval(4)
+                .with_candidates(CandidateSet::parse("ss,gss,fac").expect("candidates"));
+        }
+        simulate(&cfg).expect("simulate adaptive cell")
+    };
+    let ad_ss = adapt_cell(TechniqueKind::Ss, false).t_par();
+    let ad_gss = adapt_cell(TechniqueKind::Gss, false).t_par();
+    let ad_fac = adapt_cell(TechniqueKind::Fac2, false).t_par();
+    let ad_run = adapt_cell(TechniqueKind::Ss, true);
+    let ad_t = ad_run.t_par();
+    let ad_best = ad_gss.min(ad_fac).min(ad_ss);
+    println!(
+        "{adapt_label:<28} SS {ad_ss:>8.4} GSS {ad_gss:>8.4} FAC {ad_fac:>8.4}  \
+         ADAPT {ad_t:>8.4} ({} switches)",
+        ad_run.switch_events.len()
+    );
+
     let huge_t0 = Instant::now();
     let huge_2p = huge(SchedPath::TwoPhase);
     let huge_lf = huge(SchedPath::LockFree);
@@ -190,6 +232,14 @@ fn main() {
             .field("scenario", huge_label)
             .field("HIER-DCA", huge_2p.t_par())
             .field("HIER-DCA-LOCKFREE", huge_lf.t_par()),
+    );
+    rows.push(
+        Json::obj()
+            .field("scenario", adapt_label)
+            .field("HIER-SS", ad_ss)
+            .field("HIER-GSS", ad_gss)
+            .field("HIER-FAC", ad_fac)
+            .field("HIER-DCA+ADAPT", ad_t),
     );
     let doc = Json::obj()
         .field("bench", "hier_sweep")
@@ -252,6 +302,24 @@ fn main() {
     assert!(
         h3_r < cca_r,
         "depth-3: {h3_r:.3}s must beat flat CCA {cca_r:.3}s on the racked cluster"
+    );
+
+    // 5. Adaptive selection under extreme (exponential) slowdown: starting
+    //    from the worst static inner technique, the per-subtree controllers
+    //    must land within 2% of the best static — the ISSUE 5 acceptance
+    //    criterion (the blessed reference model actually beats it).
+    assert!(
+        ad_t <= ad_best * 1.02,
+        "adaptive {ad_t:.4}s must be within 2% of the best static {ad_best:.4}s"
+    );
+    assert!(
+        ad_ss > ad_best * 2.0,
+        "the scenario must have real stakes: SS {ad_ss:.4}s vs best {ad_best:.4}s"
+    );
+    assert!(
+        ad_run.switch_events.len() >= 16,
+        "every subtree should have rebound (got {})",
+        ad_run.switch_events.len()
     );
 
     println!("hier_sweep: all paper-shape assertions hold ✓");

@@ -110,6 +110,166 @@ def splitmix64(z):
     return z ^ (z >> 31)
 
 
+class Delay:
+    """rust/src/substrate/delay.rs::InjectedDelay (calculation site).
+
+    `dist`: "const" (every draw = calc) or "exp" (deterministic exponential
+    keyed on (seed, rank, virtual ns) — line-faithful inverse-CDF draw)."""
+
+    def __init__(self, calc=0.0, dist="const", seed=0):
+        self.calc = calc
+        self.dist = dist
+        self.seed = seed & M64
+
+    def calc_at(self, rank, t_ns):
+        if self.dist == "const":
+            return self.calc
+        if self.calc <= 0.0:
+            return 0.0
+        bits = splitmix64(
+            (self.seed ^ ((rank << 32) & M64) ^ ((t_ns * 0x9E3779B97F4A7C15) & M64)) & M64
+        )
+        u = (bits >> 11) / float(1 << 53)
+        return -self.calc * math.log(max(1.0 - u, 1e-18))
+
+
+# rust/src/sched/adaptive.rs constants
+OBS_EWMA_ALPHA = 0.25
+PROBE_HYSTERESIS = 0.05
+PROBE_STEP_CAP = 1 << 20
+# TechniqueKind::ALL order (AF can never be a candidate).
+ALL_ORDER = ("static", "ss", "fsc", "gss", "tap", "tss",
+             "fac2", "tfss", "fiss", "viss", "rnd", "pls")
+
+
+def bucket_len(length):
+    """rust/src/sched/adaptive.rs::bucket_len (prev power of two)."""
+    length = max(length, 1)
+    return 1 << (length.bit_length() - 1)
+
+
+def schedule_stats(kind, fanout, length):
+    """rust/src/sched/adaptive.rs::schedule_stats — (chunk count, tail
+    chunk) off the capped chunk-table walk; None when over the cap."""
+    start = 0
+    step = 0
+    prev = 0
+    last = 0
+    while start < length:
+        if step >= PROBE_STEP_CAP:
+            return None
+        size = min(max(closed_chunk(kind, step, length, fanout), 1), length - start)
+        prev = start
+        start += size
+        step += 1
+        last = start - prev
+    return (step, last)
+
+
+class ObsEwma:
+    """rust/src/sched/adaptive.rs::Ewma (first sample verbatim)."""
+
+    def __init__(self):
+        self.v = 0.0
+        self.primed = False
+
+    def observe(self, x):
+        if self.primed:
+            self.v = OBS_EWMA_ALPHA * x + (1.0 - OBS_EWMA_ALPHA) * self.v
+        else:
+            self.v = x
+            self.primed = True
+
+    def value(self):
+        return self.v if self.primed else None
+
+
+class AdaptiveController:
+    """rust/src/sched/adaptive.rs::AdaptiveController — line-faithful."""
+
+    def __init__(self, initial, fanout, probe_interval, candidates, fast_only=False):
+        cands = [t for t in ALL_ORDER if t in set(candidates)]
+        if fast_only:
+            cands = [t for t in cands if t in FAST_PATH]
+        self.fanout = max(fanout, 1)
+        self.candidates = cands
+        self.probe_interval = max(probe_interval, 1)
+        self.grants_since_probe = 0
+        self.current = initial
+        self.mu = ObsEwma()
+        self.var = ObsEwma()
+        self.overhead = ObsEwma()
+        self.last_seen = {}
+        self.memo = {}
+        self.switches = 0
+
+    def observe_chunk(self, child, iters, elapsed, now_s):
+        if iters == 0:
+            return
+        rate = elapsed / iters
+        mu = self.mu.value()
+        if mu is not None:
+            dev = rate - mu
+            self.var.observe(dev * dev)
+        self.mu.observe(rate)
+        prev = self.last_seen.get(child)
+        if prev is not None:
+            gap = now_s - prev
+            self.overhead.observe(max(gap - elapsed, 0.0))
+        self.last_seen[child] = now_s
+
+    def tick_grant(self):
+        self.grants_since_probe += 1
+        if self.grants_since_probe >= self.probe_interval:
+            self.grants_since_probe = 0
+            return True
+        return False
+
+    def estimate(self, kind, length):
+        mu = self.mu.value()
+        if mu is None:
+            return None
+        lenb = bucket_len(length)
+        key = (kind, lenb)
+        if key not in self.memo:
+            self.memo[key] = (schedule_stats(kind, self.fanout, lenb)
+                              if kind != "af" else None)
+        stats = self.memo[key]
+        if stats is None:
+            return None
+        chunks, k_tail = stats
+        f = float(self.fanout)
+        o = self.overhead.value() or 0.0
+        var = self.var.value()
+        sigma = math.sqrt(var) if var is not None else 0.0
+        l = float(lenb)
+        return (l * mu + chunks * o) / f + (1.0 - 1.0 / f) * k_tail * (mu + sigma)
+
+    def probe(self, remaining):
+        if remaining == 0 or self.mu.value() is None or self.overhead.value() is None:
+            return None
+        cur_est = self.estimate(self.current, remaining)
+        best = None
+        for kind in self.candidates:
+            if kind == self.current:
+                continue
+            est = self.estimate(kind, remaining)
+            if est is not None and (best is None or est < best[1]):
+                best = (kind, est)
+        if best is None:
+            return None
+        to, best_est = best
+        if cur_est is None:
+            take, ratio = True, 0.0
+        else:
+            take, ratio = best_est < cur_est * (1.0 - PROBE_HYSTERESIS), best_est / cur_est
+        if not take:
+            return None
+        self.current = to
+        self.switches += 1
+        return (to, ratio)
+
+
 def closed_chunk(tech, step, n, p):
     """Closed forms of all twelve tabulable techniques, bound to (n, p).
 
@@ -577,7 +737,13 @@ class PeStats:
 
 
 class Ledger:
-    """rust/src/hier/protocol.rs::NodeLedger (closed-form techniques)."""
+    """rust/src/hier/protocol.rs::NodeLedger (closed-form techniques).
+
+    `tech` is the re-bindable technique SLOT: each installed chunk binds to
+    the slot's value at install time (`chunk_tech`); `rebind` moves the
+    slot for the next install, `rebind_now` additionally splits a live
+    chunk at its unassigned remainder under a fresh seq (in-flight commits
+    NACK via the stale-seq protocol)."""
 
     def __init__(self, tech, fanout, staged_cap=1):
         self.tech = tech
@@ -587,6 +753,7 @@ class Ledger:
         self.q = None  # WorkQueue over [0, len)
         self.offset = 0
         self.len = 0
+        self.chunk_tech_cur = None
         self.staged = deque()
 
     def current_live(self):
@@ -621,6 +788,29 @@ class Ledger:
         self.q = WorkQueue(size)
         self.offset = start
         self.len = size
+        self.chunk_tech_cur = self.tech
+
+    def bound_kind(self):
+        return self.tech
+
+    def chunk_kind(self, seq):
+        if self.q is not None and self.seq == seq:
+            return self.chunk_tech_cur
+        return None
+
+    def rebind(self, tech):
+        self.tech = tech
+
+    def rebind_now(self, tech):
+        """rust NodeLedger::rebind_now — split the live chunk's remainder
+        under the new binding and a fresh seq."""
+        self.tech = tech
+        if self.q is None or self.q.is_done():
+            return False
+        start = self.offset + self.q.next_start
+        size = self.q.remaining()
+        self.install_now(start, size)
+        return True
 
     def reserve(self):
         if not self.current_live():
@@ -640,7 +830,7 @@ class Ledger:
 
     def closed_inner_size(self, step, seq):
         if self.q is not None and self.seq == seq:
-            return closed_chunk(self.tech, step, self.len, self.fanout)
+            return closed_chunk(self.chunk_tech_cur, step, self.len, self.fanout)
         return None
 
     def fast_grant(self):
@@ -682,18 +872,19 @@ def auto_watermark(rtt, mu):
 
 
 class Persona:
-    def __init__(self, rank, tech, fanout, staged_cap, is_root):
+    def __init__(self, rank, tech, fanout, staged_cap, is_root, adapt=None):
         self.rank = rank
         self.ledger = Ledger(tech, fanout, staged_cap)
         self.parked = deque()
         self.fetching = False
         self.global_done = is_root
         self.stats = PeStats()
-        self.pending_report = None  # unused without AF; kept for fidelity
+        self.pending_report = None  # (iters, elapsed) piggyback for MasterGet
         self.installed_ns = 0
         self.installed_iters = 0
         self.fetch_sent_ns = 0
         self.rtt = RttEwma()
+        self.adapt = adapt
 
 
 class Server:
@@ -715,7 +906,11 @@ class TreeSim:
 
     def __init__(self, n, techs, fanouts, cluster=None, delay_calc=0.0,
                  delay_assign=0.0, cost=COST, watermark=None, prefetch_depth=1,
-                 lockfree=False):
+                 lockfree=False, delay=None, adaptive=None, sched_path=None):
+        # `delay`: a Delay object overriding the constant `delay_calc`.
+        # `adaptive`: None (off) or dict(probe_interval=G, candidates=[...]).
+        # `sched_path`: None => "lockfree" if lockfree else "two-phase";
+        #               "auto" enables per-group demotion on TAP rebinds.
         self.n = n
         self.k = len(fanouts)
         assert len(techs) == self.k
@@ -726,12 +921,18 @@ class TreeSim:
         for f in fanouts:
             p *= f
         assert p == self.cl.p, f"fanouts {fanouts} != ranks {self.cl.p}"
-        self.dc = delay_calc
+        self.delay = delay if delay is not None else Delay(calc=delay_calc)
         self.da = delay_assign
         self.cost = cost
         self.watermark = watermark
         self.heap = Heap()
         self.now = 0
+        if sched_path is None:
+            sched_path = "lockfree" if lockfree else "two-phase"
+        self.sched_path = sched_path
+        wants_lf = sched_path in ("lockfree", "auto")
+        fast_initial = wants_lf and techs[-1] in FAST_PATH
+        leaf_fast_only = sched_path == "lockfree" and fast_initial
         self.personas = []
         for d in range(self.k):
             masters = 1
@@ -739,7 +940,12 @@ class TreeSim:
                 masters *= f
             level = [
                 Persona(self.host_rank(d, j), techs[d], fanouts[d],
-                        prefetch_depth, d == 0)
+                        prefetch_depth, d == 0,
+                        adapt=(AdaptiveController(
+                            techs[d], fanouts[d],
+                            adaptive["probe_interval"], adaptive["candidates"],
+                            fast_only=leaf_fast_only and d == self.k - 1)
+                            if adaptive is not None and d > 0 else None))
                 for j in range(masters)
             ]
             self.personas.append(level)
@@ -755,12 +961,14 @@ class TreeSim:
         self.intra_msgs = 0
         self.inter_msgs = 0
         self.level_msgs = [0] * self.k
-        # rust/src/hier/mod.rs::HierSim.fast_leaf — leaf-level lock-free
-        # fast path (master-tier fetches always stay two-phase).
-        self.fast_leaf = lockfree and techs[-1] in FAST_PATH
+        # rust/src/hier/mod.rs::HierSim.fast_group — per-group leaf
+        # lock-free fast path (master-tier fetches always stay two-phase;
+        # "auto" demotes a group on a measurement-coupled rebind).
+        self.fast_group = [fast_initial] * n_servers
         self.atom_queue = [deque() for _ in range(n_servers)]
         self.atom_busy = [False] * n_servers
         self.fast_grants = 0
+        self.switch_events = []
 
     # -- helpers ----------------------------------------------------------
 
@@ -787,7 +995,7 @@ class TreeSim:
             if w % leaf_fanout == 0:
                 continue
             self.req_sent[w] = 0
-            if self.fast_leaf:
+            if self.fast_group[self.server_of_rank(w)]:
                 self.send_atomic(w, 0)
             else:
                 self.send_leaf(w, ("leafget", w), 0)
@@ -831,7 +1039,7 @@ class TreeSim:
         elif kind == "execdone":
             w = ev[1]
             self.req_sent[w] = self.now
-            if self.fast_leaf:
+            if self.fast_group[self.server_of_rank(w)]:
                 self.send_atomic(w, 0)
             else:
                 self.send_leaf(w, ("leafget", w), 0)
@@ -843,6 +1051,24 @@ class TreeSim:
                 self.heap.push(self.now, ("atomfree", s))
         elif kind == "atomfree":
             self.atom_next_op(ev[1])
+
+    def adaptive_tick(self, e, j):
+        """rust/src/hier/mod.rs::HierSim::adaptive_tick."""
+        pr = self.personas[e][j]
+        if pr.adapt is None:
+            return
+        if not pr.adapt.tick_grant():
+            return
+        remaining = pr.ledger.remaining()
+        frm = pr.ledger.bound_kind()
+        dec = pr.adapt.probe(remaining)
+        if dec is None:
+            return
+        to, ratio = dec
+        if e == self.k - 1 and to not in FAST_PATH:
+            self.fast_group[j] = False
+        pr.ledger.rebind_now(to)
+        self.switch_events.append((secs(self.now), e, j, frm, to, ratio))
 
     # -- messaging --------------------------------------------------------
 
@@ -875,14 +1101,21 @@ class TreeSim:
             self.atom_busy[s] = False
             return
         w = self.atom_queue[s].popleft()
-        dur = ns(SERVICE)
         k1 = self.k - 1
+        if not self.fast_group[s]:
+            # Demoted while the fused op was in flight: serve two-phase.
+            self.heap.push(self.now, ("arrive", s, ("leafget", w)))
+            self.heap.push(self.now, ("atomfree", s))
+            self.atom_busy[s] = True
+            return
+        dur = ns(SERVICE)
         pr = self.personas[k1][s]
         r = pr.ledger.fast_grant()
         if r is not None:
             self.fast_grants += 1
             self.granted += r[2]
             self.assignments.append(r)
+            self.adaptive_tick(k1, s)
             mrank = self.servers[s].rank
             self.heap.push(self.now + dur + self.lat_ns(mrank, w),
                            ("workerreply", w, ("chunk", r[1], r[2])))
@@ -937,9 +1170,13 @@ class TreeSim:
             self.leaf_commit(s, w, step, size, seq, dur)
             return dur
         if kind == "masterget":
-            _, d, frm = task
+            _, d, frm, report = task
             jp = frm // self.fanouts[d]
             dur = ns(SERVICE)
+            if report is not None and self.personas[d][jp].adapt is not None:
+                idx = frm - jp * self.fanouts[d]
+                self.personas[d][jp].adapt.observe_chunk(
+                    idx, report[0], report[1], secs(self.now))
             self.serve_master_get(d, jp, frm, dur)
             return dur
         if kind == "mastercommit":
@@ -951,7 +1188,7 @@ class TreeSim:
         if kind == "masterstep":
             _, d, to, step, remaining, seq = task
             child_rank = self.host_rank(d + 1, to)
-            dur = ns(self.dc + CALC)
+            dur = ns(self.delay.calc_at(child_rank, self.now) + CALC)
             size = self.master_calc(d, to, step, remaining, seq)
             parent_rank = self.host_rank(d, to // self.fanouts[d])
             self.count_msg(child_rank, parent_rank, d)
@@ -978,7 +1215,7 @@ class TreeSim:
     def leaf_get(self, s, w, dur):
         k1 = self.k - 1
         pr = self.personas[k1][s]
-        if self.fast_leaf:
+        if self.fast_group[s]:
             # Slow-path refill service: the master CASes on the worker's
             # behalf (rust HierSim::leaf_get, fast branch).
             r = pr.ledger.fast_grant()
@@ -986,6 +1223,7 @@ class TreeSim:
                 self.fast_grants += 1
                 self.granted += r[2]
                 self.assignments.append(r)
+                self.adaptive_tick(k1, s)
                 self.send_worker(s, w, ("chunk", r[1], r[2]), dur)
                 self.maybe_prefetch(k1, s, dur)
             elif pr.global_done:
@@ -1010,6 +1248,7 @@ class TreeSim:
         if out[0] == "granted":
             self.granted += out[3]
             self.assignments.append((out[1], out[2], out[3]))
+            self.adaptive_tick(k1, s)
             self.send_worker(s, w, ("chunk", out[2], out[3]), dur)
             self.maybe_prefetch(k1, s, dur)
         elif out[0] == "stale":
@@ -1035,6 +1274,7 @@ class TreeSim:
         pr = self.personas[d][jp]
         out = pr.ledger.commit(step, size, seq)
         if out[0] == "granted":
+            self.adaptive_tick(d, jp)
             self.send_master_reply(d, jp, frm, ("masterchunk", d, frm, out[2], out[3]), dur)
             self.maybe_prefetch(d, jp, dur)
         elif out[0] == "stale":
@@ -1066,17 +1306,20 @@ class TreeSim:
             iters = pr.installed_iters
             elapsed = max(secs(max(self.now + dur - pr.installed_ns, 0)), 1e-12)
             pr.stats.record(iters, elapsed)
+            pr.pending_report = (iters, elapsed)
             pr.installed_iters = 0
         pr.fetch_sent_ns = self.now + dur
-        # (The Rust engine piggybacks a PerfReport here for AF; the port's
-        # closed-form techniques don't consume it.)
+        # PerfReport piggyback (rust sends it for AF and the adaptive
+        # controllers; the port consumes it at adaptive master tiers).
+        report = pr.pending_report
+        pr.pending_report = None
         pd = e - 1
         child_rank = pr.rank
         parent_rank = self.host_rank(pd, j // self.fanouts[pd])
         self.count_msg(child_rank, parent_rank, pd)
         self.heap.push(
             self.now + dur + self.lat_ns(child_rank, parent_rank),
-            ("arrive", self.server_of_rank(parent_rank), ("masterget", pd, j)),
+            ("arrive", self.server_of_rank(parent_rank), ("masterget", pd, j, report)),
         )
 
     def install_chunk(self, e, j, start, size):
@@ -1098,7 +1341,7 @@ class TreeSim:
             if e == self.k - 1:
                 self.servers[s].queue.append(("leafget", c))
             else:
-                self.servers[s].queue.append(("masterget", e, c))
+                self.servers[s].queue.append(("masterget", e, c, None))
         if e == self.k - 1 and self.servers[s].own_parked:
             self.servers[s].own_parked = False
             self.servers[s].own = ("needwork",)
@@ -1115,11 +1358,19 @@ class TreeSim:
         kind = reply[0]
         if kind == "step":
             _, step, remaining, seq = reply
-            dur = ns(self.dc + CALC)
+            dur = ns(self.delay.calc_at(w, self.now) + CALC)
             size = self.worker_calc(w, step, remaining, seq)
             self.heap.push(self.now + dur, ("calcdone", w, step, size, seq))
         elif kind == "chunk":
             dur = ns(self.cost * reply[2])
+            # Leaf-controller observation at grant time (rust
+            # HierSim::worker_on_reply, WReply::Chunk).
+            k1 = self.k - 1
+            s_idx = self.server_of_rank(w)
+            pr = self.personas[k1][s_idx]
+            if pr.adapt is not None:
+                idx = w - self.servers[s_idx].rank
+                pr.adapt.observe_chunk(idx, reply[2], secs(dur), secs(self.now))
             self.heap.push(self.now + dur, ("execdone", w))
         else:  # done
             self.finish[w] = self.now
@@ -1138,8 +1389,8 @@ class TreeSim:
         own = server.own
         server.own = ("finished",)
         kind = own[0]
-        if kind == "needwork" and self.fast_leaf:
-            # rust HierSim::own_next_action, `Own::NeedWork if fast_leaf`:
+        if kind == "needwork" and self.fast_group[s]:
+            # rust HierSim::own_next_action, `Own::NeedWork if fast group`:
             # one fused CAS on the master's CPU, straight to Exec.
             dur = ns(SERVICE)
             pr = self.personas[k1][s]
@@ -1148,7 +1399,8 @@ class TreeSim:
                 self.fast_grants += 1
                 self.granted += r[2]
                 self.assignments.append(r)
-                server.own = ("exec", r[1], r[1] + r[2])
+                self.adaptive_tick(k1, s)
+                server.own = ("exec", r[1], r[1] + r[2], r[1])
                 self.maybe_prefetch(k1, s, dur)
             elif pr.global_done:
                 self.finish_own(s)
@@ -1171,7 +1423,7 @@ class TreeSim:
             self.finish_server_action(s, dur)
         elif kind == "calc":
             _, step, remaining, seq = own
-            dur = ns(self.dc + CALC)
+            dur = ns(self.delay.calc_at(server.rank, self.now) + CALC)
             size = self.worker_calc(server.rank, step, remaining, seq)
             server.own = ("commit", step, size, seq)
             self.finish_server_action(s, dur)
@@ -1182,7 +1434,8 @@ class TreeSim:
             if out[0] == "granted":
                 self.granted += out[3]
                 self.assignments.append((out[1], out[2], out[3]))
-                server.own = ("exec", out[2], out[2] + out[3])
+                self.adaptive_tick(k1, s)
+                server.own = ("exec", out[2], out[2] + out[3], out[2])
                 self.maybe_prefetch(k1, s, dur)
             elif out[0] == "stale":
                 server.own = ("needwork",)
@@ -1194,12 +1447,19 @@ class TreeSim:
                 self.maybe_fetch(k1, s, dur)
             self.finish_server_action(s, dur)
         elif kind == "exec":
-            _, cursor, end = own
+            _, cursor, end, first = own
             seg = min(max(self.cl.break_after, 1), end - cursor)
             dur = ns(self.cost * seg)
             if cursor + seg < end:
-                server.own = ("exec", cursor + seg, end)
+                server.own = ("exec", cursor + seg, end, first)
             else:
+                # Chunk finished: own-personality controller observation
+                # (rust HierSim Own::Exec end; child index 0).
+                pr = self.personas[k1][s]
+                if pr.adapt is not None:
+                    iters = end - first
+                    pr.adapt.observe_chunk(0, iters, self.cost * iters,
+                                           secs(self.now + dur))
                 server.own = ("needwork",)
             self.finish_server_action(s, dur)
         elif kind == "parked":
@@ -1330,6 +1590,38 @@ def main():
     )
     assert huge["HIER-DCA-LOCKFREE"] <= huge["HIER-DCA"]
     rows.append({"scenario": label, "tol": 0.10, **huge})
+    # Adaptive extreme-slowdown scenario: exponential injected calculation
+    # delay (mean 100 µs) on the 16×16 hierarchy, FAC outer. Three static
+    # inner techniques vs the SimAS-style adaptive controller starting from
+    # the WORST of them (SS) — the controller must rebind each subtree to
+    # the overhead-robust choice within its first probes, landing within 2%
+    # of (here: beating) the best static. The delay draws are
+    # (seed, rank, virtual ns)-keyed, so the whole row is deterministic.
+    label = "adaptive exp-slowdown 100 µs"
+    adapt_n = 131072
+    delay = Delay(calc=100e-6, dist="exp", seed=0xAD0001)
+    cells = {}
+    for key, inner in (("HIER-SS", "ss"), ("HIER-GSS", "gss"), ("HIER-FAC", "fac2")):
+        sim = TreeSim(adapt_n, ["fac2", inner], [NODES, RPN], cluster=Cluster(),
+                      delay=delay, cost=1e-5)
+        cells[key] = sim.run()
+        verify_coverage(sim.assignments, adapt_n)
+    sim = TreeSim(adapt_n, ["fac2", "ss"], [NODES, RPN], cluster=Cluster(),
+                  delay=delay, cost=1e-5,
+                  adaptive=dict(probe_interval=4, candidates=["ss", "gss", "fac2"]))
+    cells["HIER-DCA+ADAPT"] = sim.run()
+    verify_coverage(sim.assignments, adapt_n)
+    best = min(cells["HIER-SS"], cells["HIER-GSS"], cells["HIER-FAC"])
+    print(
+        f"{label:<34} SS {cells['HIER-SS']:8.4f}  GSS {cells['HIER-GSS']:8.4f}  "
+        f"FAC {cells['HIER-FAC']:8.4f}  ADAPT {cells['HIER-DCA+ADAPT']:8.4f}  "
+        f"(adapt/best {cells['HIER-DCA+ADAPT'] / best:.3f}, "
+        f"{len(sim.switch_events)} switches)"
+    )
+    assert cells["HIER-DCA+ADAPT"] <= best * 1.02, \
+        f"adaptive {cells['HIER-DCA+ADAPT']} must be within 2% of best static {best}"
+    assert len(sim.switch_events) >= NODES, "every subtree should have rebound"
+    rows.append({"scenario": label, "tol": 0.15, **cells})
     doc = {"bench": "hier_sweep", "n": N, "ranks": P, "scenarios": rows}
     out_path = os.path.normpath(out_path)
     os.makedirs(os.path.dirname(out_path), exist_ok=True)

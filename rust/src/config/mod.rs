@@ -1,7 +1,7 @@
 //! Experiment configuration — the encoded form of the paper's Table 4
 //! factorial design, serializable to/from JSON for the CLI and benches.
 
-use crate::techniques::{LoopParams, TechniqueKind};
+use crate::techniques::{CandidateSet, LoopParams, TechniqueKind};
 
 
 /// Which chunk-calculation approach drives the run (the paper's central
@@ -54,7 +54,25 @@ impl ExecutionModel {
         }
     }
 
+    /// [`Self::label`] with the adaptive-selection marker: a run whose
+    /// technique slots are controller-driven renders as `HIER-DCA(3)+ADAPT`
+    /// (or `DCA+ADAPT` for the flat engine), so adaptive rows never collide
+    /// with static baselines in reports, JSON exports, or the bench gate.
+    pub fn label_adaptive(&self, levels: u32, adaptive: bool) -> String {
+        let mut l = self.label(levels);
+        if adaptive {
+            l.push_str("+ADAPT");
+        }
+        l
+    }
+
     pub fn parse(s: &str) -> Option<Self> {
+        let s = s.trim();
+        // Adaptive-marked labels parse back to the model (the marker itself
+        // is configuration, like the depth annotation).
+        if let Some(head) = s.strip_suffix("+ADAPT").or_else(|| s.strip_suffix("+adapt")) {
+            return Self::parse(head);
+        }
         match s.to_ascii_uppercase().as_str() {
             "CCA" => Some(ExecutionModel::Cca),
             "DCA" => Some(ExecutionModel::Dca),
@@ -107,7 +125,22 @@ pub enum SchedPath {
     /// endpoint; on shared memory, a one-word CAS). AF/TAP levels, staged
     /// prefetch refills, and cross-level fetches fall back to the two-phase
     /// protocol; both paths emit the identical serial schedule.
+    ///
+    /// Under adaptive selection ([`AdaptiveParams`]), the candidate set is
+    /// restricted to fast-path techniques so a rebind can always republish a
+    /// fresh chunk table and the subtree never has to leave the CAS path.
     LockFree,
+    /// Adaptive: start on the lock-free fast path wherever it applies, and
+    /// **demote per subtree to the two-phase protocol** the moment that
+    /// subtree's adaptive controller rebinds its technique slot to a
+    /// measurement-coupled technique (TAP) whose sizes cannot be tabulated —
+    /// the rebind breaks the "chunk size is a pure function of the step"
+    /// assumption the CAS path is built on, exactly when it happens.
+    /// Without adaptivity, `Auto` behaves like [`SchedPath::LockFree`]
+    /// (including all its fallbacks). The flat DCA engines have no agent
+    /// left to drive rebinding once the coordinator disappears, so flat
+    /// adaptive `Auto` runs the two-phase protocol from the start.
+    Auto,
 }
 
 impl SchedPath {
@@ -115,6 +148,7 @@ impl SchedPath {
         match self {
             SchedPath::TwoPhase => "two-phase",
             SchedPath::LockFree => "lockfree",
+            SchedPath::Auto => "auto",
         }
     }
 
@@ -122,8 +156,14 @@ impl SchedPath {
         match s.to_ascii_lowercase().as_str() {
             "two-phase" | "twophase" | "2p" => Some(SchedPath::TwoPhase),
             "lockfree" | "lock-free" | "cas" => Some(SchedPath::LockFree),
+            "auto" => Some(SchedPath::Auto),
             _ => None,
         }
+    }
+
+    /// Does this path request CAS grants where they are applicable?
+    pub fn wants_lockfree(&self) -> bool {
+        matches!(self, SchedPath::LockFree | SchedPath::Auto)
     }
 }
 
@@ -156,6 +196,52 @@ pub enum WatermarkMode {
 /// protocol root ↔ ranks), 2 = the classic two-level hierarchy, 3 = rack →
 /// node → socket. One spare level beyond the ROADMAP's three-level target.
 pub const MAX_LEVELS: usize = 4;
+
+/// SimAS-style adaptive technique selection (`--adaptive`): each subtree
+/// master owns an [`crate::sched::adaptive::AdaptiveController`] that keeps
+/// per-subtree EWMAs of observed iteration mean/σ, per-grant scheduling
+/// overhead, and drain rate, and at the probe cadence runs a cheap
+/// closed-form probe (chunk-table prefix sums — no nested simulation) over
+/// the candidate set, re-binding the subtree's re-bindable technique slot
+/// when a candidate is predicted to beat the current binding. Applies to
+/// the hierarchical subtree ledgers (levels ≥ 1; the root's outer technique
+/// stays static) and to the flat DCA coordinator.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdaptiveParams {
+    /// Master switch (default off — every committed baseline is static).
+    pub enabled: bool,
+    /// Grants between probes (0 ⇒ [`Self::DEFAULT_PROBE_INTERVAL`]).
+    pub probe_interval: u32,
+    /// Candidate techniques (empty ⇒ [`CandidateSet::default_probe`]).
+    pub candidates: CandidateSet,
+}
+
+impl AdaptiveParams {
+    /// Default probe cadence, in grants served by the subtree's ledger.
+    pub const DEFAULT_PROBE_INTERVAL: u32 = 64;
+
+    /// Adaptive selection with the defaults.
+    pub fn on() -> Self {
+        AdaptiveParams { enabled: true, ..Self::default() }
+    }
+
+    /// Effective probe cadence (≥ 1).
+    pub fn probe_interval(&self) -> u32 {
+        match self.probe_interval {
+            0 => Self::DEFAULT_PROBE_INTERVAL,
+            n => n,
+        }
+    }
+
+    /// Effective candidate set.
+    pub fn candidates(&self) -> CandidateSet {
+        if self.candidates.is_empty() {
+            CandidateSet::default_probe()
+        } else {
+            self.candidates
+        }
+    }
+}
 
 /// One resolved level of the recursive scheduling tree: the technique that
 /// sizes the chunks this level's holder (the root for level 0, a level-d
@@ -246,6 +332,10 @@ pub struct HierParams {
     /// `[nodes, ranks/node]` from the cluster geometry; deeper trees derive
     /// only the *last* unset fanout from the total rank count).
     pub fanouts: [u32; MAX_LEVELS],
+    /// SimAS-style adaptive per-subtree technique selection. Lives here —
+    /// rather than on the per-run configs — so both substrates and the flat
+    /// DCA engines read one policy definition (like the prefetch watermark).
+    pub adaptive: AdaptiveParams,
 }
 
 impl HierParams {
@@ -289,6 +379,24 @@ impl HierParams {
         let mut out = self;
         out.mids[d - 1] = Some(kind);
         out
+    }
+
+    /// Enable SimAS-style adaptive technique selection with the defaults.
+    pub fn with_adaptive(self) -> Self {
+        HierParams { adaptive: AdaptiveParams { enabled: true, ..self.adaptive }, ..self }
+    }
+
+    /// Set the adaptive probe cadence (grants between probes).
+    pub fn with_probe_interval(self, grants: u32) -> Self {
+        HierParams {
+            adaptive: AdaptiveParams { probe_interval: grants, ..self.adaptive },
+            ..self
+        }
+    }
+
+    /// Set the adaptive candidate set.
+    pub fn with_candidates(self, candidates: CandidateSet) -> Self {
+        HierParams { adaptive: AdaptiveParams { candidates, ..self.adaptive }, ..self }
     }
 
     /// Resolve the inner technique given the experiment's outer technique.
@@ -743,11 +851,49 @@ mod tests {
     #[test]
     fn sched_path_parse_roundtrip() {
         assert_eq!(SchedPath::default(), SchedPath::TwoPhase, "baselines stay two-phase");
-        for p in [SchedPath::TwoPhase, SchedPath::LockFree] {
+        for p in [SchedPath::TwoPhase, SchedPath::LockFree, SchedPath::Auto] {
             assert_eq!(SchedPath::parse(p.name()), Some(p));
         }
         assert_eq!(SchedPath::parse("CAS"), Some(SchedPath::LockFree));
         assert_eq!(SchedPath::parse("lock-free"), Some(SchedPath::LockFree));
+        assert_eq!(SchedPath::parse("AUTO"), Some(SchedPath::Auto));
         assert_eq!(SchedPath::parse("???"), None);
+        assert!(!SchedPath::TwoPhase.wants_lockfree());
+        assert!(SchedPath::LockFree.wants_lockfree());
+        assert!(SchedPath::Auto.wants_lockfree());
+    }
+
+    #[test]
+    fn adaptive_params_defaults_and_builders() {
+        let off = HierParams::default();
+        assert!(!off.adaptive.enabled, "adaptive is opt-in: baselines stay static");
+        let on = HierParams::default().with_adaptive();
+        assert!(on.adaptive.enabled);
+        assert_eq!(on.adaptive.probe_interval(), AdaptiveParams::DEFAULT_PROBE_INTERVAL);
+        assert_eq!(on.adaptive.candidates(), CandidateSet::default_probe());
+        let tuned = on
+            .with_probe_interval(8)
+            .with_candidates(CandidateSet::parse("ss,gss").unwrap());
+        assert_eq!(tuned.adaptive.probe_interval(), 8);
+        assert_eq!(tuned.adaptive.candidates().len(), 2);
+        // The knobs compose with the rest of HierParams without clobbering.
+        let combined = HierParams::with_inner(TechniqueKind::Ss).with_adaptive().with_levels(3);
+        assert!(combined.adaptive.enabled);
+        assert_eq!(combined.inner, Some(TechniqueKind::Ss));
+        assert_eq!(combined.depth(), 3);
+    }
+
+    #[test]
+    fn adaptive_labels_render_and_parse() {
+        assert_eq!(ExecutionModel::HierDca.label_adaptive(2, true), "HIER-DCA+ADAPT");
+        assert_eq!(ExecutionModel::HierDca.label_adaptive(3, true), "HIER-DCA(3)+ADAPT");
+        assert_eq!(ExecutionModel::Dca.label_adaptive(1, true), "DCA+ADAPT");
+        assert_eq!(ExecutionModel::HierDca.label_adaptive(2, false), "HIER-DCA");
+        assert_eq!(
+            ExecutionModel::parse("HIER-DCA(3)+ADAPT"),
+            Some(ExecutionModel::HierDca)
+        );
+        assert_eq!(ExecutionModel::parse("dca+adapt"), Some(ExecutionModel::Dca));
+        assert_eq!(ExecutionModel::parse("+ADAPT"), None);
     }
 }

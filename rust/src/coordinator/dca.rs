@@ -22,8 +22,8 @@ use std::time::Instant;
 
 use super::protocol::{AfInfo, CoordMsg, Msg, PerfReport, WorkerMsg};
 use super::{execute_chunk, EngineConfig, RankSummary, RunResult};
-use crate::config::SchedPath;
-use crate::hier::protocol::{fast_len_ok, AtomicLedger};
+use crate::hier::protocol::{fast_len_ok, with_np, AtomicLedger};
+use crate::sched::adaptive::{AdaptiveController, SwitchEvent};
 use crate::sched::WorkQueue;
 use crate::substrate::delay::spin_for;
 use crate::substrate::msg::{fabric, Endpoint};
@@ -37,9 +37,13 @@ use crate::workload::Workload;
 pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<RunResult> {
     let p = cfg.params.p;
     anyhow::ensure!(p >= 1, "need at least one worker");
-    if cfg.sched_path == SchedPath::LockFree
+    // Adaptive runs keep the two-phase protocol: once the coordinator
+    // disappears, nobody is left to rebind the precomputed whole-loop table
+    // (`--lockfree --adaptive` is rejected upstream; `Auto` demotes here).
+    if cfg.sched_path.wants_lockfree()
         && cfg.technique.supports_fast_path()
         && fast_len_ok(cfg.params.n)
+        && !cfg.hier.adaptive.enabled
     {
         // The capped build doubles as the memory guard: an SS-like
         // schedule beyond MAX_FAST_TABLE_STEPS falls back to the
@@ -64,11 +68,13 @@ pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<Ru
         handles.push(thread::spawn(move || worker_loop(&c, ep, p, w, b)));
     }
 
-    coordinator_loop(cfg, coord_ep, &barrier)?;
+    let coord_switches = coordinator_loop(cfg, coord_ep, &barrier)?;
 
     let per_rank: Vec<RankSummary> =
         handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
-    Ok(RunResult::assemble(per_rank, sent.load(Ordering::Relaxed)))
+    let mut out = RunResult::assemble(per_rank, sent.load(Ordering::Relaxed));
+    out.switch_events.extend(coord_switches);
+    Ok(out)
 }
 
 /// The lock-free DCA engine (§4 taken to the arXiv 1901.02773 endpoint, on
@@ -123,18 +129,34 @@ fn lockfree_worker(
 }
 
 /// Coordinator service loop — assignment only, O(1) work per message.
+/// Under adaptive selection the coordinator additionally owns the
+/// technique slot: phase-1 replies announce the slot's current kind, child
+/// reports feed the controller's EWMAs, and every `probe_interval` grants
+/// the closed-form probe may rebind the slot for all *subsequent* steps
+/// (in-flight steps keep the kind their reply carried — the work queue
+/// clips any size, so the mixed schedule still covers exactly). Returns
+/// the switch-event trace.
 fn coordinator_loop(
     cfg: &EngineConfig,
     ep: Endpoint<Msg>,
     barrier: &Barrier,
-) -> anyhow::Result<()> {
+) -> anyhow::Result<Vec<SwitchEvent>> {
     let params = &cfg.params;
     let is_af = cfg.technique == TechniqueKind::Af;
     let mut af = is_af.then(|| AfCalculator::new(params));
+    let mut adapt = cfg.hier.adaptive.enabled.then(|| {
+        AdaptiveController::new(cfg.technique, params, params.p, cfg.hier.adaptive, false)
+    });
+    let mut switches = Vec::new();
     let mut q = WorkQueue::from_params(params);
     let mut active = params.p;
+    // The slot's current binding era: (technique, rebased step 0, bound
+    // length) — switches re-bind to the remainder like a fresh hierarchical
+    // chunk install, so granted sizes match the probe's model.
+    let mut era = (cfg.technique, 0u64, params.n);
 
     barrier.wait();
+    let t0 = Instant::now();
     while active > 0 {
         let env = ep.recv()?;
         match env.payload {
@@ -142,13 +164,27 @@ fn coordinator_loop(
                 if let (Some(af), Some(PerfReport { iters, elapsed })) = (af.as_mut(), report) {
                     af.record(rank as usize, iters, elapsed);
                 }
+                if let (Some(ctl), Some(PerfReport { iters, elapsed })) = (adapt.as_mut(), report)
+                {
+                    ctl.observe_chunk(rank, iters, elapsed, t0.elapsed().as_secs_f64());
+                }
                 match q.begin_step() {
                     Some(ticket) => {
                         let af_info = af
                             .as_ref()
                             .and_then(|a| a.globals())
                             .map(|g| AfInfo { d: g.d, e: g.e });
-                        ep.send(env.src, Msg::ToWorker(CoordMsg::Step { ticket, af: af_info }))?;
+                        let (tech, base_step, bound_n) = era;
+                        ep.send(
+                            env.src,
+                            Msg::ToWorker(CoordMsg::Step {
+                                ticket,
+                                af: af_info,
+                                tech,
+                                base_step,
+                                bound_n,
+                            }),
+                        )?;
                     }
                     None => {
                         ep.send(env.src, Msg::ToWorker(CoordMsg::Done))?;
@@ -166,7 +202,25 @@ fn coordinator_loop(
                     size
                 };
                 match q.commit(ticket, size) {
-                    Some(a) => ep.send(env.src, Msg::ToWorker(CoordMsg::Chunk(a)))?,
+                    Some(a) => {
+                        ep.send(env.src, Msg::ToWorker(CoordMsg::Chunk(a)))?;
+                        if let Some(ctl) = adapt.as_mut() {
+                            if ctl.tick_grant() {
+                                let from = ctl.current();
+                                if let Some((to, predicted_ratio)) = ctl.probe(q.remaining()) {
+                                    era = (to, q.step(), q.remaining().max(1));
+                                    switches.push(SwitchEvent {
+                                        at_s: t0.elapsed().as_secs_f64(),
+                                        level: 0,
+                                        master: 0,
+                                        from,
+                                        to,
+                                        predicted_ratio,
+                                    });
+                                }
+                            }
+                        }
+                    }
                     None => {
                         ep.send(env.src, Msg::ToWorker(CoordMsg::Done))?;
                         active -= 1;
@@ -176,7 +230,7 @@ fn coordinator_loop(
             other => anyhow::bail!("DCA coordinator got unexpected message: {other:?}"),
         }
     }
-    Ok(())
+    Ok(switches)
 }
 
 /// Worker: reserve step → calculate locally (parallel!) → commit → execute.
@@ -188,9 +242,11 @@ fn worker_loop(
     barrier: Arc<Barrier>,
 ) -> RankSummary {
     let rank = ep.rank();
-    let technique = Technique::new(cfg.technique, &cfg.params);
-    let is_af = cfg.technique == TechniqueKind::Af;
     let bootstrap = cfg.params.min_chunk.max(1);
+    // The binding era announced by the last phase-1 reply: technique bound
+    // to `(bound_n, P)` with rebased steps. Static runs bind exactly once
+    // (the configured technique over the whole loop).
+    let mut bound: Option<(TechniqueKind, u64, u64, Technique)> = None;
     let mut my_stats = PeStats::default(); // local µ for AF
     let mut out = RankSummary { rank, ..Default::default() };
     let mut report = None;
@@ -202,17 +258,20 @@ fn worker_loop(
             .expect("coordinator hung up early");
         let env = ep.recv().expect("coordinator hung up early");
         out.sched_wait += t_req.elapsed().as_secs_f64();
-        let (ticket, af_info) = match env.payload {
-            Msg::ToWorker(CoordMsg::Step { ticket, af }) => (ticket, af),
+        let (ticket, af_info, tech, base_step, bound_n) = match env.payload {
+            Msg::ToWorker(CoordMsg::Step { ticket, af, tech, base_step, bound_n }) => {
+                (ticket, af, tech, base_step, bound_n)
+            }
             Msg::ToWorker(CoordMsg::Done) => break 'outer,
             other => panic!("worker {rank}: unexpected {other:?}"),
         };
 
         // Chunk CALCULATION — distributed: happens here, on the worker,
         // concurrently with every other worker's calculation. The injected
-        // slowdown is paid in parallel, not serialized at a master.
+        // slowdown is paid in parallel, not serialized at a master. The
+        // binding is whatever this step's reply announced.
         spin_for(cfg.delay.calculation);
-        let k = if is_af {
+        let k = if tech == TechniqueKind::Af {
             match (my_stats.measured().then(|| my_stats.mu()).flatten(), af_info) {
                 (Some(mu), Some(AfInfo { d, e })) => af_chunk(
                     crate::techniques::af::AfGlobals { d, e },
@@ -223,7 +282,14 @@ fn worker_loop(
                 _ => bootstrap,
             }
         } else {
-            technique.closed_chunk(ticket.step)
+            let same_era = bound
+                .as_ref()
+                .is_some_and(|(k, b, n, _)| (*k, *b, *n) == (tech, base_step, bound_n));
+            if !same_era {
+                let params = with_np(&cfg.params, bound_n, cfg.params.p);
+                bound = Some((tech, base_step, bound_n, Technique::new(tech, &params)));
+            }
+            bound.as_ref().expect("bound above").3.closed_chunk(ticket.step - base_step)
         };
 
         let t_commit = Instant::now();
@@ -333,6 +399,64 @@ mod tests {
             assert_eq!(r.fast_grants, 0, "{kind}: no CAS grants on the fallback");
             assert!(r.stats.messages > 0, "{kind}: two-phase protocol ran");
         }
+    }
+
+    /// The threaded flat coordinator with adaptivity on: coverage and the
+    /// switch-event plumbing hold on real threads (timing-dependent, so
+    /// only structural properties are asserted); a single-candidate set
+    /// still emits the technique's own schedule.
+    #[test]
+    fn adaptive_coordinator_covers_and_traces() {
+        use crate::techniques::CandidateSet;
+        const N: u64 = 8_000;
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 5e-8, CostShape::Uniform, 3));
+        let mut cfg =
+            EngineConfig::new(LoopParams::new(N, 4), TechniqueKind::Ss, ExecutionModel::Dca);
+        cfg.hier = cfg
+            .hier
+            .with_adaptive()
+            .with_probe_interval(8)
+            .with_candidates(CandidateSet::parse("ss,gss,fac").unwrap());
+        let r = run(&cfg, Arc::clone(&w)).unwrap();
+        verify_coverage(&r.sorted_assignments(), N).unwrap();
+        assert_eq!(r.fast_grants, 0, "adaptive keeps the two-phase protocol");
+        for e in &r.switch_events {
+            assert_eq!((e.level, e.master), (0, 0), "flat switches live on the coordinator");
+        }
+        // Single-candidate: never switches, schedule is SS's own.
+        let mut cfg1 =
+            EngineConfig::new(LoopParams::new(N, 4), TechniqueKind::Ss, ExecutionModel::Dca);
+        cfg1.hier = cfg1
+            .hier
+            .with_adaptive()
+            .with_candidates(CandidateSet::EMPTY.try_with(TechniqueKind::Ss).unwrap());
+        let r1 = run(&cfg1, w).unwrap();
+        assert!(r1.switch_events.is_empty());
+        assert_eq!(r1.stats.chunks, N, "SS grants one iteration per chunk");
+    }
+
+    /// `Auto` without adaptivity is the lock-free engine; with adaptivity
+    /// the flat engine stays two-phase (nobody is left to rebind a
+    /// precomputed table), and the contradictory LockFree+adaptive combo
+    /// errors out.
+    #[test]
+    fn auto_path_rules_flat_threaded() {
+        const N: u64 = 4_000;
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 5e-8, CostShape::Uniform, 3));
+        let mut auto =
+            EngineConfig::new(LoopParams::new(N, 4), TechniqueKind::Gss, ExecutionModel::Dca);
+        auto.sched_path = crate::config::SchedPath::Auto;
+        let r = run(&auto, Arc::clone(&w)).unwrap();
+        assert_eq!(r.fast_grants, r.stats.chunks, "static Auto IS lock-free");
+        assert_eq!(r.stats.messages, 0);
+        let mut auto_ad = auto.clone();
+        auto_ad.hier = auto_ad.hier.with_adaptive();
+        let r = run(&auto_ad, Arc::clone(&w)).unwrap();
+        verify_coverage(&r.sorted_assignments(), N).unwrap();
+        assert_eq!(r.fast_grants, 0, "adaptive Auto runs two-phase");
+        let mut bad = auto_ad;
+        bad.sched_path = crate::config::SchedPath::LockFree;
+        assert!(crate::coordinator::run(&bad, w).is_err());
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::hier::protocol::{
     auto_watermark, fast_len_ok, with_np, AtomicLedger, FastLedger, InnerCommit, NodeLedger,
     RttEwma,
 };
+use crate::sched::adaptive::{AdaptiveController, SwitchEvent};
 use crate::sched::Assignment;
 use crate::substrate::delay::spin_for;
 use crate::substrate::msg::{fabric, Endpoint};
@@ -91,9 +92,17 @@ enum Msg {
     // -- leaf tier: leaf rank ↔ its lowest-level master ------------------
     /// Phase 1 request: "reserve me a local step" (+ AF perf piggyback).
     Get { rank: u32, report: Option<PerfReport> },
-    /// Phase 1 reply: reserved step of chunk `seq`; `chunk_len` lets the
-    /// worker bind the leaf technique itself, `remaining` feeds AF.
-    Step { step: u64, remaining: u64, seq: u64, chunk_len: u64, af: Option<AfInfo> },
+    /// Phase 1 reply: reserved step of chunk `seq`; `chunk_len` + `tech`
+    /// let the worker bind the chunk's technique itself (the slot is
+    /// re-bindable, so the wire must carry it), `remaining` feeds AF.
+    Step {
+        step: u64,
+        remaining: u64,
+        seq: u64,
+        chunk_len: u64,
+        tech: TechniqueKind,
+        af: Option<AfInfo>,
+    },
     /// Phase 2 request: "commit my locally calculated `size` for `step`".
     Commit { rank: u32, step: u64, size: u64, seq: u64 },
     /// Phase 2 reply: the granted absolute range.
@@ -105,9 +114,17 @@ enum Msg {
     /// piggyback for AF).
     MGet { level: u32, from: u32, report: Option<PerfReport> },
     /// Parent reply: reserved step (+ AF aggregates + the parent chunk's
-    /// length for technique binding). Handling it *is* the chunk
-    /// calculation, on the child master's CPU.
-    MStep { level: u32, step: u64, remaining: u64, seq: u64, chunk_len: u64, af: Option<AfInfo> },
+    /// length and bound technique). Handling it *is* the chunk calculation,
+    /// on the child master's CPU.
+    MStep {
+        level: u32,
+        step: u64,
+        remaining: u64,
+        seq: u64,
+        chunk_len: u64,
+        tech: TechniqueKind,
+        af: Option<AfInfo>,
+    },
     /// Child master commits its chunk size.
     MCommit { level: u32, from: u32, step: u64, size: u64, seq: u64 },
     /// Parent reply: the committed chunk.
@@ -221,7 +238,7 @@ pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<Ru
     // it. AF/TAP leaves (and over-long loops) stay two-phase.
     let leaf_fanout = geom.fanouts[geom.k() - 1];
     let leaf_tech = cfg.hier.tech_of_level(geom.k() - 1, cfg.technique);
-    let fast_leaf = cfg.sched_path == SchedPath::LockFree
+    let fast_leaf = cfg.sched_path.wants_lockfree()
         && leaf_tech.supports_fast_path()
         && fast_len_ok(cfg.params.n)
         // Memory guard: probe the worst-case leaf table (a node chunk can
@@ -316,6 +333,9 @@ fn coordinator_loop(
                             remaining,
                             seq,
                             chunk_len: ledger.current_len(),
+                            // The root's slot is never rebound (its chunk is
+                            // installed once) — always the outer technique.
+                            tech: ledger.chunk_kind(seq).unwrap_or(cfg.technique),
                             af: info,
                         }
                     }
@@ -383,6 +403,9 @@ struct TPersona {
     /// Child-side closed-form binding for protocol `level - 1`, cached by
     /// the parent chunk's `seq`.
     bound: Option<(u64, Technique)>,
+    /// SimAS-style controller re-binding this persona's technique slot
+    /// (`--adaptive`).
+    adapt: Option<AdaptiveController>,
 }
 
 /// A non-dedicated hosting rank: serves every master persona of its subtree
@@ -404,6 +427,8 @@ struct TreeMaster {
     /// The rank's own worker-personality statistics (AF µ/σ + the adaptive
     /// execution slice's per-iteration cost).
     my_stats: PeStats,
+    /// Wall-clock anchor for controller observations and switch events.
+    t0: Instant,
     out: RankSummary,
 }
 
@@ -429,6 +454,10 @@ impl TreeMaster {
                 staged_cap,
             )
         });
+        // Pure LockFree restricts leaf candidates to fast-path techniques
+        // (rebinds republish, never demote); Auto keeps the full set.
+        let leaf_fast_only = cfg.sched_path == SchedPath::LockFree && fast.is_some();
+        let k1_level = geom.k() - 1;
         let personas = geom
             .levels_of(rank)
             .into_iter()
@@ -453,6 +482,15 @@ impl TreeMaster {
                     fetch_sent: Instant::now(),
                     rtt: RttEwma::default(),
                     bound: None,
+                    adapt: cfg.hier.adaptive.enabled.then(|| {
+                        AdaptiveController::new(
+                            tech,
+                            &cfg.params,
+                            fanout,
+                            cfg.hier.adaptive,
+                            leaf_fast_only && level == k1_level,
+                        )
+                    }),
                 }
             })
             .collect();
@@ -465,6 +503,7 @@ impl TreeMaster {
             personas,
             fast,
             my_stats: PeStats::default(),
+            t0: Instant::now(),
             out: RankSummary { rank, ..Default::default() },
         }
     }
@@ -493,6 +532,7 @@ impl TreeMaster {
     fn run(mut self, barrier: &Barrier) -> RankSummary {
         barrier.wait();
         let t0 = Instant::now();
+        self.t0 = t0;
         for pr in &mut self.personas {
             pr.installed_at = Instant::now();
         }
@@ -610,6 +650,7 @@ impl TreeMaster {
                 match self.personas[slot].ledger.commit(step, size, seq) {
                     InnerCommit::Granted(a) => {
                         self.send_worker(rank, Msg::Chunk(a));
+                        self.adaptive_tick(slot);
                         self.after_grant(slot);
                     }
                     // Stale seq: the chunk was replaced while this commit
@@ -630,19 +671,20 @@ impl TreeMaster {
                 match self.personas[slot].ledger.commit(step, size, seq) {
                     InnerCommit::Granted(a) => {
                         self.send_child_master(slot, from, Msg::MChunk { level, a });
+                        self.adaptive_tick(slot);
                         self.after_grant(slot);
                     }
                     InnerCommit::Stale => self.serve_mget(slot, from),
                     InnerCommit::Drained => self.park_or_done(slot, from),
                 }
             }
-            Msg::MStep { level, step, remaining, seq, chunk_len, af } => {
+            Msg::MStep { level, step, remaining, seq, chunk_len, tech, af } => {
                 // The chunk CALCULATION runs here, on the child master's own
                 // CPU — distributed across the tree, paying the injected
                 // delay in parallel (the DCA idea, at every level).
                 spin_for(self.cfg.delay.calculation);
                 let slot = self.slot(level as usize + 1);
-                let size = self.child_calc(slot, step, remaining, seq, chunk_len, af);
+                let size = self.child_calc(slot, step, remaining, seq, chunk_len, tech, af);
                 let from = self.personas[slot].index;
                 self.send_parent(slot, Msg::MCommit { level, from, step, size, seq });
             }
@@ -666,6 +708,82 @@ impl TreeMaster {
         {
             af.record(local as usize, iters, elapsed);
         }
+        let now_s = self.t0.elapsed().as_secs_f64();
+        let leaf_fast = self.fast.is_some() && slot == self.leaf_slot();
+        if let (Some(ctl), Some(PerfReport { iters, elapsed })) =
+            (self.personas[slot].adapt.as_mut(), report)
+        {
+            if leaf_fast {
+                // CAS-path reports aggregate every chunk since the child's
+                // previous slow-path request — µ̂/σ̂ only; a whole-window
+                // gap is not a per-grant overhead sample.
+                ctl.observe_exec(iters, elapsed);
+            } else {
+                ctl.observe_chunk(local, iters, elapsed, now_s);
+            }
+        }
+    }
+
+    /// Count one grant served from persona `slot`'s ledger toward its probe
+    /// cadence; on a due probe, rebind the slot — mid-chunk on the
+    /// two-phase ledger ([`NodeLedger::rebind_now`], in-flight commits NACK
+    /// via the stale `seq`), freeze-and-republish on the lock-free leaf
+    /// ([`FastLedger::rebind`]), or **demote the leaf to two-phase**
+    /// ([`FastLedger::demote`]) when the new binding is measurement-coupled
+    /// (the `SchedPath::Auto` fallback).
+    fn adaptive_tick(&mut self, slot: usize) {
+        let due = match self.personas[slot].adapt.as_mut() {
+            Some(ctl) => ctl.tick_grant(),
+            None => return,
+        };
+        if !due {
+            return;
+        }
+        let leaf = self.personas[slot].level == self.geom.k() - 1;
+        let remaining = match &self.fast {
+            Some(f) if leaf => f.shared().remaining(),
+            _ => self.personas[slot].ledger.remaining(),
+        };
+        let from = match &self.fast {
+            Some(f) if leaf => f.bound_kind(),
+            _ => self.personas[slot].ledger.bound_kind(),
+        };
+        // On the CAS path the per-grant cost is one atomic op — probe with
+        // zero overhead (tail imbalance is all that is left to optimize);
+        // everywhere else, with the measured overhead EWMA.
+        let ctl = self.personas[slot].adapt.as_mut().expect("checked above");
+        let decision = if leaf && self.fast.is_some() {
+            ctl.probe_on_fast_path(remaining)
+        } else {
+            ctl.probe(remaining)
+        };
+        let Some((to, predicted_ratio)) = decision else { return };
+        if leaf && self.fast.is_some() {
+            if to.supports_fast_path() {
+                self.fast.as_mut().expect("checked").rebind(to);
+            } else {
+                // Demote: freeze the CAS word for good, move every
+                // unassigned range into the two-phase ledger under the new
+                // binding, and serve this group over messages from now on.
+                let moved = self.fast.take().expect("checked").demote();
+                self.personas[slot].ledger.rebind(to);
+                for a in moved {
+                    self.personas[slot].ledger.install(a);
+                }
+                // Parked ranks (if any) re-serve through the slow path.
+                self.unpark(slot);
+            }
+        } else {
+            self.personas[slot].ledger.rebind_now(to);
+        }
+        self.out.switches.push(SwitchEvent {
+            at_s: self.t0.elapsed().as_secs_f64(),
+            level: self.personas[slot].level as u32,
+            master: self.personas[slot].index,
+            from,
+            to,
+            predicted_ratio,
+        });
     }
 
     fn af_info(&self, slot: usize) -> Option<AfInfo> {
@@ -682,8 +800,10 @@ impl TreeMaster {
         match self.personas[slot].ledger.reserve() {
             Some((step, remaining, seq)) => {
                 let af = self.af_info(slot);
-                let chunk_len = self.personas[slot].ledger.current_len();
-                self.send_worker(rank, Msg::Step { step, remaining, seq, chunk_len, af });
+                let ledger = &self.personas[slot].ledger;
+                let chunk_len = ledger.current_len();
+                let tech = ledger.chunk_kind(seq).unwrap_or_else(|| ledger.bound_kind());
+                self.send_worker(rank, Msg::Step { step, remaining, seq, chunk_len, tech, af });
             }
             None if self.personas[slot].global_done => {
                 self.send_worker(rank, Msg::Done);
@@ -703,11 +823,13 @@ impl TreeMaster {
         match self.personas[slot].ledger.reserve() {
             Some((step, remaining, seq)) => {
                 let af = self.af_info(slot);
-                let chunk_len = self.personas[slot].ledger.current_len();
+                let ledger = &self.personas[slot].ledger;
+                let chunk_len = ledger.current_len();
+                let tech = ledger.chunk_kind(seq).unwrap_or_else(|| ledger.bound_kind());
                 self.send_child_master(
                     slot,
                     to,
-                    Msg::MStep { level, step, remaining, seq, chunk_len, af },
+                    Msg::MStep { level, step, remaining, seq, chunk_len, tech, af },
                 );
             }
             None if self.personas[slot].global_done => {
@@ -785,10 +907,16 @@ impl TreeMaster {
     /// staged chunks — or parks it behind a parent fetch.
     fn serve_get_fast(&mut self, rank: u32) {
         let slot = self.leaf_slot();
+        if self.fast.is_none() {
+            // Demoted while this request was queued — serve two-phase.
+            self.serve_get(rank);
+            return;
+        }
         match self.fast.as_mut().expect("fast leaf mode").grant() {
             Some((a, _remaining)) => {
                 self.out.fast_grants += 1;
                 self.send_worker(rank, Msg::Chunk(a));
+                self.adaptive_tick(slot);
                 self.after_grant(slot);
             }
             None if self.personas[slot].global_done => {
@@ -844,8 +972,10 @@ impl TreeMaster {
     }
 
     /// Child-side chunk-size calculation for persona `slot`'s parent
-    /// protocol (AF's Eq. 11 over subtree throughput, or the level
-    /// technique bound to the parent chunk and cached by `seq`).
+    /// protocol (AF's Eq. 11 over subtree throughput, or the technique the
+    /// parent's `MStep` announced, bound to the parent chunk and cached by
+    /// `seq` — rebinds always bump the parent's `seq`, so the cache key
+    /// stays sound).
     fn child_calc(
         &mut self,
         slot: usize,
@@ -853,10 +983,10 @@ impl TreeMaster {
         remaining: u64,
         seq: u64,
         chunk_len: u64,
+        tech: TechniqueKind,
         af: Option<AfInfo>,
     ) -> u64 {
         let d = self.personas[slot].level - 1;
-        let tech = self.cfg.hier.tech_of_level(d, self.cfg.technique);
         if tech == TechniqueKind::Af {
             af_requester_chunk(
                 &self.personas[slot].stats,
@@ -885,10 +1015,12 @@ impl TreeMaster {
     /// calculation delay exists to pay.
     fn own_step(&mut self) {
         let slot = self.leaf_slot();
-        if let Some(f) = self.fast.as_mut() {
-            match f.grant() {
+        if self.fast.is_some() {
+            let granted = self.fast.as_mut().expect("checked").grant();
+            match granted {
                 Some((a, _remaining)) => {
                     self.out.fast_grants += 1;
+                    self.adaptive_tick(slot);
                     self.after_grant(slot);
                     self.execute_own(a);
                 }
@@ -902,6 +1034,7 @@ impl TreeMaster {
         spin_for(self.cfg.delay.assignment);
         match self.personas[slot].ledger.commit(step, size, seq) {
             InnerCommit::Granted(a) => {
+                self.adaptive_tick(slot);
                 self.after_grant(slot);
                 self.execute_own(a);
             }
@@ -915,20 +1048,21 @@ impl TreeMaster {
 
     fn own_calc(&self, slot: usize, step: u64, remaining: u64, seq: u64) -> u64 {
         let k1 = self.geom.k() - 1;
-        let tech = self.cfg.hier.tech_of_level(k1, self.cfg.technique);
-        if tech == TechniqueKind::Af {
-            af_requester_chunk(
+        // The binding follows the CHUNK the step was reserved from — the
+        // slot may have been rebound since the configured level technique.
+        match self.personas[slot].ledger.chunk_kind(seq) {
+            Some(TechniqueKind::Af) => af_requester_chunk(
                 &self.my_stats,
                 self.af_info(slot).map(|i| AfGlobals { d: i.d, e: i.e }),
                 remaining,
                 self.geom.fanouts[k1],
                 self.cfg.params.min_chunk.max(1),
-            )
-        } else {
-            self.personas[slot]
+            ),
+            _ => self
+                .personas[slot]
                 .ledger
                 .closed_inner_size(step, seq)
-                .unwrap_or_else(|| self.cfg.params.min_chunk.max(1))
+                .unwrap_or_else(|| self.cfg.params.min_chunk.max(1)),
         }
     }
 
@@ -956,6 +1090,12 @@ impl TreeMaster {
         if let Some(af) = self.personas[slot].af_calc.as_mut() {
             af.record(0, a.size, elapsed);
         }
+        // Own executions feed the leaf controller's µ̂/σ̂ (exec-only: the
+        // master's inter-chunk gaps are full of its service duties, not
+        // per-grant overhead).
+        if let Some(ctl) = self.personas[slot].adapt.as_mut() {
+            ctl.observe_exec(a.size, elapsed);
+        }
     }
 }
 
@@ -982,10 +1122,10 @@ fn worker_loop(
     let k1 = geom.k() - 1;
     let leaf_fanout = geom.fanouts[k1];
     let master = rank - rank % leaf_fanout;
-    let inner_kind = cfg.hier.tech_of_level(k1, cfg.technique);
-    let is_af = inner_kind == TechniqueKind::Af;
     let bootstrap = cfg.params.min_chunk.max(1);
-    // Leaf technique bound to the current chunk, cached by `seq`.
+    // Leaf technique bound to the current chunk, cached by `seq` (rebinds
+    // always bump the master's `seq`, so the key stays sound; the kind
+    // itself travels on every `Step`).
     let mut bound: Option<(u64, Technique)> = None;
     let mut my_stats = PeStats::default();
     let mut out = RankSummary { rank, ..Default::default() };
@@ -1003,11 +1143,11 @@ fn worker_loop(
         out.sched_wait += t_req.elapsed().as_secs_f64();
         loop {
             match env.payload {
-                Msg::Step { step, remaining, seq, chunk_len, af } => {
+                Msg::Step { step, remaining, seq, chunk_len, tech, af } => {
                     // Distributed leaf calculation, on this rank's CPU — the
                     // injected delay is paid here, in parallel.
                     spin_for(cfg.delay.calculation);
-                    let size = if is_af {
+                    let size = if tech == TechniqueKind::Af {
                         af_requester_chunk(
                             &my_stats,
                             af.map(|i| AfGlobals { d: i.d, e: i.e }),
@@ -1018,7 +1158,7 @@ fn worker_loop(
                     } else {
                         if !bound.as_ref().is_some_and(|(s, _)| *s == seq) {
                             let params = with_np(&cfg.params, chunk_len, leaf_fanout);
-                            bound = Some((seq, Technique::new(inner_kind, &params)));
+                            bound = Some((seq, Technique::new(tech, &params)));
                         }
                         bound.as_ref().expect("technique bound above").1.closed_chunk(step)
                     };
@@ -1051,6 +1191,13 @@ fn worker_loop(
 /// Under a fixed prefetch watermark the worker nudges its master once per
 /// chunk when the tail crosses the watermark — the master cannot observe
 /// CAS grants, so the signal travels as a message.
+///
+/// The slow path also speaks the full two-phase `Step → Commit` exchange:
+/// once a `SchedPath::Auto` master **demotes** the group (an adaptive
+/// rebind to a measurement-coupled technique), the frozen word never
+/// grants again and every subsequent chunk arrives through this protocol,
+/// sized by the technique each `Step` announces (always closed-form — AF
+/// can never be rebound to).
 fn lockfree_leaf_loop(
     cfg: &EngineConfig,
     geom: &Geom,
@@ -1070,14 +1217,18 @@ fn lockfree_leaf_loop(
         _ => None,
     };
     let mut nudged_seq = 0u64;
+    // Chunk-bound technique for the two-phase slow path (post-demotion),
+    // cached by the master's `seq`.
+    let mut bound: Option<(u64, Technique)> = None;
+    // Execution accumulated since the last slow-path request — piggybacked
+    // on the next `Get` so the master's adaptive controller observes the
+    // CAS path's µ/σ (it cannot see the grants themselves).
+    let mut acc_iters = 0u64;
+    let mut acc_elapsed = 0.0f64;
     let mut out = RankSummary { rank, ..Default::default() };
     let send = |dst: u32, msg: Msg| {
         tally.count(geom, k1, rank, dst);
         ep.send(dst, msg).expect("master hung up early");
-    };
-    let execute = |out: &mut RankSummary, a: Assignment| {
-        let (sum, _elapsed) = execute_chunk(workload.as_ref(), a);
-        out.record_chunk(sum, a);
     };
     barrier.wait();
     let t0 = Instant::now();
@@ -1093,16 +1244,50 @@ fn lockfree_leaf_loop(
                         send(master, Msg::Nudge { rank });
                     }
                 }
-                execute(&mut out, a);
+                let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
+                out.record_chunk(sum, a);
+                acc_iters += a.size;
+                acc_elapsed += elapsed;
             }
             None => {
-                send(master, Msg::Get { rank, report: None });
-                let env = ep.recv().expect("master hung up early");
+                let report = (acc_iters > 0)
+                    .then_some(PerfReport { iters: acc_iters, elapsed: acc_elapsed });
+                acc_iters = 0;
+                acc_elapsed = 0.0;
+                send(master, Msg::Get { rank, report });
+                let mut env = ep.recv().expect("master hung up early");
                 out.sched_wait += t_req.elapsed().as_secs_f64();
-                match env.payload {
-                    Msg::Chunk(a) => execute(&mut out, a),
-                    Msg::Done => break 'outer,
-                    other => panic!("rank {rank}: unexpected {other:?}"),
+                loop {
+                    match env.payload {
+                        Msg::Chunk(a) => {
+                            let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
+                            out.record_chunk(sum, a);
+                            acc_iters += a.size;
+                            acc_elapsed += elapsed;
+                            break;
+                        }
+                        Msg::Step { step, remaining: _, seq, chunk_len, tech, af: _ } => {
+                            // Two-phase cycle (post-demotion, or a NACK
+                            // re-serve): calculate with the announced
+                            // technique, commit, handle whatever replies.
+                            spin_for(cfg.delay.calculation);
+                            if !bound.as_ref().is_some_and(|(s, _)| *s == seq) {
+                                let params = with_np(&cfg.params, chunk_len, leaf_fanout);
+                                bound = Some((seq, Technique::new(tech, &params)));
+                            }
+                            let size = bound
+                                .as_ref()
+                                .expect("technique bound above")
+                                .1
+                                .closed_chunk(step);
+                            let t_commit = Instant::now();
+                            send(master, Msg::Commit { rank, step, size, seq });
+                            env = ep.recv().expect("master hung up early");
+                            out.sched_wait += t_commit.elapsed().as_secs_f64();
+                        }
+                        Msg::Done => break 'outer,
+                        other => panic!("rank {rank}: unexpected {other:?}"),
+                    }
                 }
             }
         }

@@ -33,6 +33,7 @@ use std::time::Instant;
 
 use crate::config::{ExecutionModel, HierParams, SchedPath};
 use crate::metrics::LoopStats;
+use crate::sched::adaptive::SwitchEvent;
 use crate::sched::Assignment;
 use crate::substrate::delay::InjectedDelay;
 use crate::techniques::{LoopParams, TechniqueKind};
@@ -97,6 +98,9 @@ pub struct RankSummary {
     pub checksum: u64,
     /// Lock-free CAS grants this rank performed ([`SchedPath::LockFree`]).
     pub fast_grants: u64,
+    /// Technique-slot rebinds this rank's master personas decided
+    /// (adaptive selection; empty for plain workers).
+    pub switches: Vec<SwitchEvent>,
     /// The chunks, for coverage verification.
     pub assignments: Vec<Assignment>,
 }
@@ -136,6 +140,9 @@ pub struct RunResult {
     /// Chunks granted through the lock-free CAS fast path (summed over
     /// ranks); 0 on the two-phase path.
     pub fast_grants: u64,
+    /// Technique-slot rebinds across every master persona (and the flat
+    /// coordinator), ordered by decision time; empty on static runs.
+    pub switch_events: Vec<SwitchEvent>,
 }
 
 impl RunResult {
@@ -147,6 +154,9 @@ impl RunResult {
         let wait = per_rank.iter().map(|r| r.sched_wait).sum();
         let checksum = per_rank.iter().fold(0u64, |a, r| a.wrapping_add(r.checksum));
         let fast_grants = per_rank.iter().map(|r| r.fast_grants).sum();
+        let mut switch_events: Vec<SwitchEvent> =
+            per_rank.iter().flat_map(|r| r.switches.iter().copied()).collect();
+        switch_events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
         RunResult {
             stats: LoopStats::from_finish_times(&finish, chunks, wait, messages),
             per_rank,
@@ -155,6 +165,7 @@ impl RunResult {
             inter_node_messages: 0,
             level_messages: vec![messages],
             fast_grants,
+            switch_events,
         }
     }
 
@@ -202,6 +213,25 @@ pub fn run(cfg: &EngineConfig, workload: Arc<dyn Workload>) -> anyhow::Result<Ru
         "the threaded engine only injects constant delays (it spins wall-clock \
          time); run distributional slowdown scenarios through the DES"
     );
+    if cfg.hier.adaptive.enabled {
+        anyhow::ensure!(
+            matches!(cfg.model, ExecutionModel::Dca | ExecutionModel::HierDca),
+            "adaptive technique selection applies to the DCA protocols \
+             (DCA / HIER-DCA), not {}",
+            cfg.model
+        );
+        anyhow::ensure!(
+            !(cfg.model == ExecutionModel::Dca && cfg.technique == TechniqueKind::Af),
+            "flat adaptive DCA cannot start from AF; start from a closed-form \
+             technique (the hierarchical engine supports AF starts)"
+        );
+        anyhow::ensure!(
+            !(cfg.model == ExecutionModel::Dca && cfg.sched_path == SchedPath::LockFree),
+            "flat DCA cannot combine --lockfree with --adaptive (the CAS path \
+             tabulates the whole loop up front); use --sched-path auto or drop \
+             --adaptive"
+        );
+    }
     match cfg.model {
         ExecutionModel::Cca => cca::run(cfg, workload),
         ExecutionModel::Dca => dca::run(cfg, workload),

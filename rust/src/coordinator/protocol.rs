@@ -10,6 +10,7 @@
 //!   "more communication messages than CCA" trade §7 discusses.
 
 use crate::sched::{Assignment, StepTicket};
+use crate::techniques::TechniqueKind;
 
 /// A worker's performance report for its previously executed chunk —
 /// piggybacked on scheduling requests so AF's per-PE (µ, σ) stay current
@@ -59,8 +60,21 @@ impl WorkerMsg {
 pub enum CoordMsg {
     /// An assigned chunk (CCA reply, or DCA commit reply).
     Chunk(Assignment),
-    /// DCA phase-1 reply: the reserved step + AF aggregates when relevant.
-    Step { ticket: StepTicket, af: Option<AfInfo> },
+    /// DCA phase-1 reply: the reserved step + AF aggregates when relevant,
+    /// plus the coordinator slot's binding at reservation time — the
+    /// configured technique over the whole loop (`base_step = 0`,
+    /// `bound_n = N`) on static runs. An adaptive switch re-binds to the
+    /// unassigned remainder with step indices rebased (the flat analogue of
+    /// the hierarchical fresh-chunk install): the worker sizes with
+    /// `tech@(bound_n, P)` at step `ticket.step − base_step`, so the
+    /// schedule granted after a switch is the schedule the probe modeled.
+    Step {
+        ticket: StepTicket,
+        af: Option<AfInfo>,
+        tech: TechniqueKind,
+        base_step: u64,
+        bound_n: u64,
+    },
     /// No work left — terminate (the `DLS_Terminated` condition).
     Done,
 }

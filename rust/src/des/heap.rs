@@ -28,12 +28,37 @@ use std::collections::BinaryHeap;
 
 /// Ring size (power of two).
 const BUCKETS: usize = 256;
-/// log₂ of the bucket (time-slice) width in ns: 4096 ns ≈ the fabric
-/// latency scale, so protocol bursts share a slice while multi-µs waits
-/// spread across the ring.
+/// log₂ of the **fallback** bucket (time-slice) width in ns: 4096 ns ≈ the
+/// miniHPC fabric latency scale, so protocol bursts share a slice while
+/// multi-µs waits spread across the ring. Queues built with
+/// [`EventHeap::for_latency_scale`] derive their width from the simulated
+/// cluster's smallest latency class instead, so clusters far off the
+/// miniHPC scale keep the per-slice occupancy (and thus the `O(log k)`
+/// cost) where it was tuned. The width only affects performance — pop
+/// order is always exactly `(time, seq)` regardless.
 const BUCKET_SHIFT: u32 = 12;
-/// Bucket width in nanoseconds.
+/// Fallback bucket width in nanoseconds.
 const BUCKET_NS: u64 = 1 << BUCKET_SHIFT;
+/// Bounds on the derived bucket shift: 64 ns (finer slices buy nothing
+/// below the event-duration floor) … 1 ms (coarser would funnel whole
+/// simulations into one slice).
+const MIN_BUCKET_SHIFT: u32 = 6;
+const MAX_BUCKET_SHIFT: u32 = 20;
+
+/// Bucket shift for a cluster whose smallest latency class is
+/// `min_latency_ns`: the power of two at or above `8 ×` that latency —
+/// one slice spans a few protocol round trips, the geometry the 4096 ns
+/// constant encoded for the 0.5 µs miniHPC intra-node class (which this
+/// derivation reproduces exactly). `0` falls back to the constant.
+pub(crate) fn shift_for_latency(min_latency_ns: u64) -> u32 {
+    if min_latency_ns == 0 {
+        return BUCKET_SHIFT;
+    }
+    // Bound before rounding up: next_power_of_two overflows above 2^63.
+    let target = min_latency_ns.saturating_mul(8).min(1 << 62);
+    let shift = 64 - target.next_power_of_two().leading_zeros() - 1;
+    shift.clamp(MIN_BUCKET_SHIFT, MAX_BUCKET_SHIFT)
+}
 
 /// A scheduled occurrence of `E` at an absolute virtual time (nanoseconds).
 /// Ordering ignores the payload: `(at_ns, seq)` min-first.
@@ -68,7 +93,8 @@ pub struct EventHeap<E> {
     wheel: Vec<BinaryHeap<Entry<E>>>,
     /// Events at/after the ring window's end.
     far: BinaryHeap<Entry<E>>,
-    /// Start time of the cursor bucket's slice (multiple of [`BUCKET_NS`]).
+    /// Start time of the cursor bucket's slice (multiple of the bucket
+    /// width).
     floor_ns: u64,
     /// Ring index of the slice starting at `floor_ns`.
     cursor: usize,
@@ -76,6 +102,11 @@ pub struct EventHeap<E> {
     wheel_len: usize,
     len: usize,
     next_seq: u64,
+    /// log₂ of this queue's bucket width (the compile-time constant unless
+    /// derived from a latency scale — see [`Self::for_latency_scale`]).
+    shift: u32,
+    /// Bucket width in ns (`1 << shift`).
+    bucket_ns: u64,
 }
 
 impl<E> Default for EventHeap<E> {
@@ -93,6 +124,18 @@ impl<E> EventHeap<E> {
     /// (one or two per rank is typical — pass `P`): reserves the overflow
     /// heap and the busiest slice so steady state never reallocates.
     pub fn with_capacity(hint: usize) -> Self {
+        Self::with_shift(hint, BUCKET_SHIFT)
+    }
+
+    /// [`Self::with_capacity`], with the bucket width derived from the
+    /// simulated cluster's smallest one-way latency class instead of the
+    /// compile-time constant — see [`shift_for_latency`]. `0` keeps the
+    /// constant.
+    pub fn for_latency_scale(hint: usize, min_latency_ns: u64) -> Self {
+        Self::with_shift(hint, shift_for_latency(min_latency_ns))
+    }
+
+    fn with_shift(hint: usize, shift: u32) -> Self {
         let mut wheel: Vec<BinaryHeap<Entry<E>>> = Vec::with_capacity(BUCKETS);
         for _ in 0..BUCKETS {
             wheel.push(BinaryHeap::new());
@@ -109,17 +152,24 @@ impl<E> EventHeap<E> {
             wheel_len: 0,
             len: 0,
             next_seq: 0,
+            shift,
+            bucket_ns: 1 << shift,
         }
     }
 
+    /// This queue's bucket (time-slice) width in nanoseconds.
+    pub fn bucket_ns(&self) -> u64 {
+        self.bucket_ns
+    }
+
     #[inline]
-    fn bucket_of(at_ns: u64) -> usize {
-        ((at_ns >> BUCKET_SHIFT) as usize) & (BUCKETS - 1)
+    fn bucket_of(&self, at_ns: u64) -> usize {
+        ((at_ns >> self.shift) as usize) & (BUCKETS - 1)
     }
 
     #[inline]
     fn horizon_end(&self) -> u64 {
-        self.floor_ns + (BUCKETS as u64) * BUCKET_NS
+        self.floor_ns + (BUCKETS as u64) * self.bucket_ns
     }
 
     /// Schedule `event` at absolute time `at_ns`.
@@ -132,14 +182,15 @@ impl<E> EventHeap<E> {
             // arbitrary order is part of the queue contract): rewind the
             // cursor to the event's slice. Events already in the ring stay
             // valid — pop re-derives their slice from `at_ns`.
-            self.floor_ns = (at_ns >> BUCKET_SHIFT) << BUCKET_SHIFT;
-            self.cursor = Self::bucket_of(at_ns);
+            self.floor_ns = (at_ns >> self.shift) << self.shift;
+            self.cursor = self.bucket_of(at_ns);
         }
         let entry = Entry { at_ns, seq, event };
         if at_ns >= self.horizon_end() {
             self.far.push(entry);
         } else {
-            self.wheel[Self::bucket_of(at_ns)].push(entry);
+            let b = self.bucket_of(at_ns);
+            self.wheel[b].push(entry);
             self.wheel_len += 1;
         }
     }
@@ -155,9 +206,9 @@ impl<E> EventHeap<E> {
         }
         let mut advances = 0usize;
         loop {
-            let slice = self.floor_ns >> BUCKET_SHIFT;
+            let slice = self.floor_ns >> self.shift;
             if let Some(min) = self.wheel[self.cursor].peek() {
-                if (min.at_ns >> BUCKET_SHIFT) == slice {
+                if (min.at_ns >> self.shift) == slice {
                     let e = self.wheel[self.cursor].pop().expect("peeked above");
                     self.wheel_len -= 1;
                     self.len -= 1;
@@ -181,7 +232,7 @@ impl<E> EventHeap<E> {
     /// Move the cursor one slice forward, migrating newly in-window
     /// overflow events into the ring.
     fn advance_one(&mut self) {
-        self.floor_ns += BUCKET_NS;
+        self.floor_ns += self.bucket_ns;
         self.cursor = (self.cursor + 1) & (BUCKETS - 1);
         self.migrate_far();
     }
@@ -190,8 +241,8 @@ impl<E> EventHeap<E> {
     /// known event time).
     fn jump_to(&mut self, at: u64) {
         debug_assert!(at >= self.floor_ns, "jump must not skip past queued events");
-        self.floor_ns = (at >> BUCKET_SHIFT) << BUCKET_SHIFT;
-        self.cursor = Self::bucket_of(at);
+        self.floor_ns = (at >> self.shift) << self.shift;
+        self.cursor = self.bucket_of(at);
         self.migrate_far();
     }
 
@@ -199,7 +250,8 @@ impl<E> EventHeap<E> {
         let horizon_end = self.horizon_end();
         while self.far.peek().is_some_and(|e| e.at_ns < horizon_end) {
             let e = self.far.pop().expect("peeked above");
-            self.wheel[Self::bucket_of(e.at_ns)].push(e);
+            let b = self.bucket_of(e.at_ns);
+            self.wheel[b].push(e);
             self.wheel_len += 1;
         }
     }
@@ -339,6 +391,84 @@ mod tests {
             assert_eq!(h.pop(), Some((t, i)));
         }
         assert!(h.is_empty());
+    }
+
+    /// The derived bucket width: reproduces the historical 4096 ns constant
+    /// on the miniHPC scale, scales with the latency class, clamps at both
+    /// ends, and falls back to the constant for a degenerate scale.
+    #[test]
+    fn latency_scale_derives_the_bucket_width() {
+        assert_eq!(shift_for_latency(0), BUCKET_SHIFT, "fallback");
+        // miniHPC intra-node class (0.5 µs) ⇒ exactly the old constant.
+        assert_eq!(shift_for_latency(500), 12);
+        assert_eq!(EventHeap::<u32>::for_latency_scale(8, 500).bucket_ns(), BUCKET_NS);
+        assert_eq!(EventHeap::<u32>::with_capacity(8).bucket_ns(), BUCKET_NS);
+        // Exact powers of two stay put; mid-scale rounds up.
+        assert_eq!(shift_for_latency(512), 12);
+        assert_eq!(shift_for_latency(513), 13);
+        // A 100 µs inter-rack-only fabric coarsens the slices…
+        assert_eq!(shift_for_latency(100_000), 20, "clamped at 1 ms slices");
+        // …and a sub-ns NIC clamps at the fine end.
+        assert_eq!(shift_for_latency(1), MIN_BUCKET_SHIFT);
+        assert_eq!(shift_for_latency(u64::MAX), MAX_BUCKET_SHIFT, "no overflow");
+        // Monotone in the latency scale.
+        let shifts: Vec<u32> =
+            [1u64, 10, 100, 1_000, 10_000, 100_000].iter().map(|&l| shift_for_latency(l)).collect();
+        assert!(shifts.windows(2).all(|w| w[0] <= w[1]), "{shifts:?}");
+    }
+
+    /// FIFO tie-break pinned on DERIVED widths too: equal timestamps pop in
+    /// insertion order across bucket and overflow boundaries for a fine and
+    /// a coarse derived queue alike (the satellite's behavioral guard — the
+    /// width must never change pop order).
+    #[test]
+    fn fifo_ties_pinned_across_derived_widths() {
+        for min_lat in [1u64, 500, 7_777, 100_000] {
+            let mut h = EventHeap::for_latency_scale(8, min_lat);
+            let far_time = h.bucket_ns() * (BUCKETS as u64) * 3 + 5;
+            h.push(far_time, "far-1");
+            h.push(1, "near");
+            h.push(far_time, "far-2");
+            assert_eq!(h.pop(), Some((1, "near")), "scale {min_lat}");
+            h.push(far_time, "far-3");
+            assert_eq!(h.pop(), Some((far_time, "far-1")), "scale {min_lat}");
+            assert_eq!(h.pop(), Some((far_time, "far-2")), "scale {min_lat}");
+            assert_eq!(h.pop(), Some((far_time, "far-3")), "scale {min_lat}");
+            assert_eq!(h.pop(), None);
+        }
+    }
+
+    /// Pop order is width-invariant: the same randomized workload pops in
+    /// the identical `(time, seq)` order on the default, a finer, and a
+    /// coarser queue.
+    #[test]
+    fn pop_order_is_bucket_width_invariant() {
+        use crate::techniques::rnd::splitmix64;
+        let mut workload = Vec::new();
+        let mut s = 0x5CA1E_u64;
+        let mut at = 0u64;
+        for i in 0..2_000u64 {
+            s = splitmix64(s);
+            at += s % 50_000;
+            workload.push((at, i));
+            if s % 7 == 0 {
+                workload.push((at, i + 1_000_000)); // same-time tie
+            }
+        }
+        let run = |min_lat: u64| {
+            let mut h = EventHeap::for_latency_scale(16, min_lat);
+            for &(t, id) in &workload {
+                h.push(t, id);
+            }
+            let mut out = Vec::new();
+            while let Some(x) = h.pop() {
+                out.push(x);
+            }
+            out
+        };
+        let a = run(0);
+        assert_eq!(a, run(1), "finest");
+        assert_eq!(a, run(100_000), "coarsest");
     }
 
     /// Randomized comparison against a sorted reference: ten thousand mixed

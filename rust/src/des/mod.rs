@@ -26,6 +26,7 @@ use std::collections::VecDeque;
 use crate::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use crate::coordinator::protocol::{AfInfo, PerfReport};
 use crate::metrics::LoopStats;
+use crate::sched::adaptive::{AdaptiveController, SwitchEvent};
 use crate::sched::{Assignment, StepTicket, WorkQueue};
 use crate::substrate::delay::InjectedDelay;
 use crate::substrate::topology::Topology;
@@ -128,6 +129,10 @@ pub struct DesResult {
     /// Total DES events dispatched — the denominator of the
     /// `sched_throughput` bench's events/sec metric.
     pub events: u64,
+    /// Technique-slot rebinds performed by the adaptive controllers
+    /// ([`crate::config::AdaptiveParams`]), in decision order; empty when
+    /// adaptivity is off.
+    pub switch_events: Vec<SwitchEvent>,
 }
 
 impl DesResult {
@@ -146,6 +151,17 @@ impl DesResult {
     }
 }
 
+/// Smallest one-way latency class of a cluster, in ns — the time scale the
+/// calendar queue's bucket width is derived from (the inter-rack class only
+/// counts once racks exist).
+pub(crate) fn min_latency_ns(cluster: &ClusterConfig) -> u64 {
+    let mut m = cluster.intra_node_latency.min(cluster.inter_node_latency);
+    if cluster.racks > 1 {
+        m = m.min(cluster.inter_rack_latency);
+    }
+    ns(m.max(0.0))
+}
+
 /// Simulate one run. Deterministic: same config ⇒ identical result.
 pub fn simulate(cfg: &DesConfig) -> anyhow::Result<DesResult> {
     anyhow::ensure!(
@@ -158,6 +174,27 @@ pub fn simulate(cfg: &DesConfig) -> anyhow::Result<DesResult> {
         !(cfg.technique == TechniqueKind::Af && cfg.model == ExecutionModel::DcaRma),
         "AF has no straightforward formula; DCA-RMA cannot schedule it (§4)"
     );
+    if cfg.hier.adaptive.enabled {
+        anyhow::ensure!(
+            matches!(cfg.model, ExecutionModel::Dca | ExecutionModel::HierDca),
+            "adaptive technique selection applies to the DCA protocols \
+             (DCA / HIER-DCA), not {}",
+            cfg.model
+        );
+        anyhow::ensure!(
+            !(cfg.model == ExecutionModel::Dca && cfg.technique == TechniqueKind::Af),
+            "flat adaptive DCA cannot start from AF (its commit re-cap is \
+             keyed on the configured technique); start from a closed-form \
+             technique — the hierarchical engine supports AF starts"
+        );
+        anyhow::ensure!(
+            !(cfg.model == ExecutionModel::Dca && cfg.sched_path == SchedPath::LockFree),
+            "flat DCA cannot combine --lockfree with --adaptive: the CAS \
+             path tabulates the whole loop up front and leaves no \
+             coordinator to rebind it; use --sched-path auto (which runs \
+             the two-phase protocol when adaptive) or drop --adaptive"
+        );
+    }
     if cfg.model == ExecutionModel::HierDca {
         // The hierarchical protocol has its own event loop (a recursive
         // tree of master service personas over the latency tiers, any
@@ -200,8 +237,29 @@ enum SvcTask {
 #[derive(Debug, Clone, Copy)]
 enum Reply {
     Chunk(Assignment),
-    Step { ticket: StepTicket, af: Option<AfInfo> },
+    /// Phase-1 reply. `era` indexes the coordinator binding the step was
+    /// reserved under ([`FlatEra`]) — era 0 (the configured technique over
+    /// the whole loop) on static runs; adaptive switches open new eras,
+    /// and in-flight steps keep the era they were reserved under.
+    Step { ticket: StepTicket, af: Option<AfInfo>, era: usize },
     Done,
+}
+
+/// One binding era of the flat DCA coordinator's re-bindable slot: a
+/// technique bound to the unassigned remainder at switch time, with step
+/// indices rebased to its own step 0 — the flat analogue of
+/// [`crate::hier::protocol::NodeLedger::rebind_now`]'s fresh-chunk
+/// install, so the schedule actually granted after a switch IS the
+/// schedule the probe modeled (a decreasing technique restarts at its
+/// first chunk over the remainder instead of evaluating its deep tail at
+/// the continuing global step index).
+#[derive(Debug)]
+struct FlatEra {
+    kind: TechniqueKind,
+    /// Global step index this era's local step 0 maps to.
+    base_step: u64,
+    /// Closed form bound to (remainder at switch, P); `None` for AF.
+    tech: Option<Technique>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -219,8 +277,9 @@ enum RmaOp {
 enum OwnState {
     /// Needs to self-schedule its next chunk.
     NeedWork,
-    /// (DCA) holds a ticket, must run the local calculation next.
-    Calc(StepTicket),
+    /// (DCA) holds a ticket, must run the local calculation next (under
+    /// the binding era the step was reserved in).
+    Calc(StepTicket, usize),
     /// (DCA) calculated `size` for `ticket`, must commit next.
     Commit(StepTicket, u64),
     /// Executing its chunk; `cursor..end` iterations remain (`first` is the
@@ -268,6 +327,14 @@ struct Sim<'a> {
     technique: Technique,
     recursive: RecursiveState,
     af: Option<AfCalculator>,
+    /// Adaptive controller on the coordinator (flat DCA + `--adaptive`):
+    /// rebinds the announced technique between scheduling steps.
+    adapt: Option<AdaptiveController>,
+    /// Binding eras, oldest first (era 0 = the configured technique over
+    /// the whole loop); in-flight steps size with the era their phase-1
+    /// reply carried.
+    eras: Vec<FlatEra>,
+    switch_events: Vec<SwitchEvent>,
     // rank 0
     svc_queue: VecDeque<SvcTask>,
     rank0_busy: bool,
@@ -297,18 +364,40 @@ impl<'a> Sim<'a> {
         let technique = Technique::new(cfg.technique, &cfg.params);
         let af = (cfg.technique == TechniqueKind::Af).then(|| AfCalculator::new(&cfg.params));
         let p = cfg.params.p as usize;
-        let lockfree = cfg.sched_path == SchedPath::LockFree
+        let adaptive = cfg.hier.adaptive.enabled && cfg.model == ExecutionModel::Dca;
+        // Adaptive runs have no agent to rebind a precomputed whole-loop
+        // table once the coordinator disappears, so `Auto` keeps the flat
+        // engine two-phase whenever adaptivity is on.
+        let lockfree = cfg.sched_path.wants_lockfree()
             && cfg.model == ExecutionModel::Dca
-            && cfg.technique.supports_fast_path();
+            && cfg.technique.supports_fast_path()
+            && !adaptive;
+        let adapt = adaptive.then(|| {
+            AdaptiveController::new(
+                cfg.technique,
+                &cfg.params,
+                cfg.params.p,
+                cfg.hier.adaptive,
+                false,
+            )
+        });
+        let eras = vec![FlatEra {
+            kind: cfg.technique,
+            base_step: 0,
+            tech: cfg.technique.has_closed_form().then(|| technique.clone()),
+        }];
         Sim {
             cfg,
             topo: Topology::new(&cfg.cluster),
-            heap: EventHeap::with_capacity(2 * p),
+            heap: EventHeap::for_latency_scale(2 * p, min_latency_ns(&cfg.cluster)),
             now: 0,
             queue: WorkQueue::from_params(&cfg.params),
             recursive: technique.fresh_recursive(),
             technique,
             af,
+            adapt,
+            eras,
+            switch_events: Vec::new(),
             svc_queue: VecDeque::with_capacity(p),
             rank0_busy: false,
             own: OwnState::NeedWork,
@@ -373,10 +462,12 @@ impl<'a> Sim<'a> {
         }
     }
 
-    /// Worker-side chunk calculation (DCA): closed form, or AF's Eq. 11 with
-    /// the synchronized aggregates.
-    fn worker_calc(&self, w: u32, ticket: StepTicket, af: Option<AfInfo>) -> u64 {
-        if self.cfg.technique == TechniqueKind::Af {
+    /// Worker-side chunk calculation (DCA): the reservation era's closed
+    /// form at the era-rebased step index, or AF's Eq. 11 with the
+    /// synchronized aggregates.
+    fn worker_calc(&self, w: u32, ticket: StepTicket, af: Option<AfInfo>, era: usize) -> u64 {
+        let e = &self.eras[era];
+        if e.kind == TechniqueKind::Af {
             let ws = &self.workers[w as usize];
             match (ws.stats.measured().then(|| ws.stats.mu()).flatten(), af) {
                 (Some(mu), Some(AfInfo { d, e })) => {
@@ -385,12 +476,54 @@ impl<'a> Sim<'a> {
                 _ => self.cfg.params.min_chunk.max(1),
             }
         } else {
-            self.technique.closed_chunk(ticket.step)
+            let tech = e.tech.as_ref().expect("closed-form era");
+            tech.closed_chunk(ticket.step - e.base_step)
         }
     }
 
     fn af_info(&self) -> Option<AfInfo> {
         self.af.as_ref().and_then(|a| a.globals()).map(|g| AfInfo { d: g.d, e: g.e })
+    }
+
+    /// Index of the coordinator slot's current binding era.
+    fn current_era(&self) -> usize {
+        self.eras.len() - 1
+    }
+
+    /// Count one flat grant toward the probe cadence; on a due probe, ask
+    /// the controller for a rebind over the loop's unassigned remainder. A
+    /// switch opens a **new era**: the technique re-bound to the remainder
+    /// with step indices rebased to 0 — exactly the fresh-chunk schedule
+    /// the probe modeled. No NACK machinery is needed: in-flight steps
+    /// carry the era their phase-1 reply announced, and the work queue
+    /// clips any size, so the mixed schedule still covers exactly.
+    fn flat_adaptive_tick(&mut self) {
+        let Some(ctl) = self.adapt.as_mut() else { return };
+        if !ctl.tick_grant() {
+            return;
+        }
+        let remaining = self.queue.remaining();
+        let from = ctl.current();
+        if let Some((to, predicted_ratio)) = ctl.probe(remaining) {
+            let params = crate::hier::protocol::with_np(
+                &self.cfg.params,
+                remaining.max(1),
+                self.cfg.params.p,
+            );
+            self.eras.push(FlatEra {
+                kind: to,
+                base_step: self.queue.step(),
+                tech: Some(Technique::new(to, &params)),
+            });
+            self.switch_events.push(SwitchEvent {
+                at_s: secs(self.now),
+                level: 0,
+                master: 0,
+                from,
+                to,
+                predicted_ratio,
+            });
+        }
     }
 
     // -- bootstrap ---------------------------------------------------------
@@ -561,7 +694,7 @@ impl<'a> Sim<'a> {
                     ExecutionModel::Dca => {
                         // Local GetStep: just the service bump.
                         match self.queue.begin_step() {
-                            Some(t) => self.own = OwnState::Calc(t),
+                            Some(t) => self.own = OwnState::Calc(t, self.current_era()),
                             None => self.own = OwnState::Finished,
                         }
                         ns(self.cfg.cluster.service_time / self.speed(0))
@@ -570,14 +703,14 @@ impl<'a> Sim<'a> {
                 };
                 self.finish_own_action(dur);
             }
-            OwnState::Calc(ticket) => {
+            OwnState::Calc(ticket, era) => {
                 // DCA rank-0 local calculation — occupies its CPU, delaying
                 // any queued service work behind it (non-dedicated cost).
                 let dur = ns(
                     (self.cfg.delay.calculation_at(0, self.now) + self.cfg.cluster.calc_time)
                         / self.speed(0),
                 );
-                let size = self.worker_calc(0, ticket, self.af_info());
+                let size = self.worker_calc(0, ticket, self.af_info(), era);
                 self.own = OwnState::Commit(ticket, size);
                 self.finish_own_action(dur);
             }
@@ -589,6 +722,7 @@ impl<'a> Sim<'a> {
                 match self.queue.commit(ticket, size) {
                     Some(a) => {
                         self.grant(0, a);
+                        self.flat_adaptive_tick();
                         self.own = OwnState::Exec { cursor: a.start, end: a.end(), first: a.start };
                     }
                     None => self.own = OwnState::Finished,
@@ -603,13 +737,18 @@ impl<'a> Sim<'a> {
                     self.own = OwnState::Exec { cursor: new_cursor, end, first };
                 } else {
                     // Chunk finished: feed rank 0's own performance report
-                    // into the AF statistics (µ/σ learning, §2 Eq. 11).
+                    // into the AF statistics (µ/σ learning, §2 Eq. 11) and
+                    // the adaptive controller's EWMAs.
                     let iters = end - first;
                     let elapsed = self.cfg.cost.range_cost(first, iters) / self.speed(0);
                     self.workers[0].stats.record(iters, elapsed);
                     self.workers[0].last_report = Some(PerfReport { iters, elapsed });
                     if let Some(af) = self.af.as_mut() {
                         af.record(0, iters, elapsed);
+                    }
+                    let now_s = secs(self.now);
+                    if let Some(ctl) = self.adapt.as_mut() {
+                        ctl.observe_chunk(0, iters, elapsed, now_s);
                     }
                     self.own = OwnState::NeedWork;
                 }
@@ -660,8 +799,14 @@ impl<'a> Sim<'a> {
                 if let (Some(af), Some(r)) = (self.af.as_mut(), report) {
                     af.record(w as usize, r.iters, r.elapsed);
                 }
+                let now_s = secs(self.now);
+                if let (Some(ctl), Some(r)) = (self.adapt.as_mut(), report) {
+                    ctl.observe_chunk(w, r.iters, r.elapsed, now_s);
+                }
                 let reply = match self.queue.begin_step() {
-                    Some(ticket) => Reply::Step { ticket, af: self.af_info() },
+                    Some(ticket) => {
+                        Reply::Step { ticket, af: self.af_info(), era: self.current_era() }
+                    }
                     None => {
                         self.done_replies += 1;
                         Reply::Done
@@ -683,6 +828,7 @@ impl<'a> Sim<'a> {
                 let reply = match self.queue.commit(ticket, size) {
                     Some(a) => {
                         self.grant(w, a);
+                        self.flat_adaptive_tick();
                         Reply::Chunk(a)
                     }
                     None => {
@@ -721,7 +867,7 @@ impl<'a> Sim<'a> {
                 ws.last_report = Some(PerfReport { iters: a.size, elapsed });
                 self.heap.push(self.now + dur, Ev::ExecDone { w });
             }
-            Reply::Step { ticket, af } => {
+            Reply::Step { ticket, af, era } => {
                 // Distributed chunk calculation on this worker's own clock —
                 // the injected delay is paid here, in parallel (§4); a slow
                 // PE calculates slowly too.
@@ -731,7 +877,7 @@ impl<'a> Sim<'a> {
                 );
                 // Stash the AF info via immediate recompute at CalcDone time:
                 // store in the event (sizes are deterministic).
-                let size = self.worker_calc(w, ticket, af);
+                let size = self.worker_calc(w, ticket, af, era);
                 self.heap.push(
                     self.now + dur,
                     Ev::CalcDone { w, ticket: StepTicket { step: ticket.step, remaining: size } },
@@ -775,7 +921,7 @@ impl<'a> Sim<'a> {
                     let back = self.now + dur + self.lat_ns(0, w);
                     let calc =
                         ns(self.cfg.delay.calculation_at(w, back) + self.cfg.cluster.calc_time);
-                    let size = self.worker_calc(w, ticket, None);
+                    let size = self.worker_calc(w, ticket, None, 0);
                     let claim_sent = back + calc + ns(self.cfg.delay.assignment);
                     let arrive = claim_sent + self.lat_ns(w, 0);
                     self.rma_ops += 1;
@@ -852,6 +998,7 @@ impl<'a> Sim<'a> {
             level_messages: vec![self.messages],
             fast_grants: self.fast_grants,
             events: self.events,
+            switch_events: self.switch_events,
         }
     }
 }
@@ -1034,6 +1181,113 @@ mod tests {
         assert_eq!(bare.t_par(), recorded.t_par());
         assert_eq!(bare.events, recorded.events);
         assert!(bare.events > 0);
+    }
+
+    /// Flat adaptive DCA: with a single-candidate set the run is
+    /// bit-identical to the static two-phase run (schedule AND t_par), and
+    /// nothing is ever switched.
+    #[test]
+    fn flat_single_candidate_adaptive_is_bit_identical() {
+        use crate::techniques::CandidateSet;
+        for kind in TechniqueKind::ALL {
+            if !kind.has_closed_form() {
+                continue;
+            }
+            let stat = simulate(&base(4_000, 8, ExecutionModel::Dca, kind)).unwrap();
+            let mut cfg = base(4_000, 8, ExecutionModel::Dca, kind);
+            cfg.hier = cfg
+                .hier
+                .with_adaptive()
+                .with_probe_interval(1)
+                .with_candidates(CandidateSet::EMPTY.try_with(kind).unwrap());
+            let adapt = simulate(&cfg).unwrap();
+            assert_eq!(stat.assignments, adapt.assignments, "{kind}");
+            assert_eq!(stat.t_par(), adapt.t_par(), "{kind}");
+            assert!(adapt.switch_events.is_empty(), "{kind}");
+        }
+    }
+
+    /// Flat adaptive DCA under heavy injected slowdown: the coordinator
+    /// switches away from SS, the mixed schedule still covers exactly,
+    /// replays deterministically, and beats the static SS run.
+    #[test]
+    fn flat_adaptive_switches_and_beats_static_under_slowdown() {
+        use crate::techniques::CandidateSet;
+        let mk = |adaptive: bool| {
+            let mut cfg = base(20_000, 16, ExecutionModel::Dca, TechniqueKind::Ss);
+            cfg.delay = InjectedDelay::exponential_calculation(100e-6, 5);
+            if adaptive {
+                cfg.hier = cfg
+                    .hier
+                    .with_adaptive()
+                    .with_probe_interval(8)
+                    .with_candidates(CandidateSet::parse("ss,gss,fac").unwrap());
+            }
+            simulate(&cfg).unwrap()
+        };
+        let stat = mk(false);
+        let adapt = mk(true);
+        verify_coverage(&adapt.sorted_assignments(), 20_000).unwrap();
+        assert!(!adapt.switch_events.is_empty(), "SS must be switched away from");
+        assert!(adapt.switch_events.iter().all(|e| e.level == 0 && e.master == 0));
+        assert!(
+            adapt.t_par() < stat.t_par(),
+            "adaptive {} must beat static SS {}",
+            adapt.t_par(),
+            stat.t_par()
+        );
+        let replay = mk(true);
+        assert_eq!(adapt.assignments, replay.assignments);
+        assert_eq!(adapt.switch_events, replay.switch_events);
+    }
+
+    /// Flat `Auto` + adaptivity runs the two-phase protocol (no coordinator
+    /// survives the lock-free path to rebind anything) — and the
+    /// incoherent flag combinations are rejected with clear errors.
+    #[test]
+    fn flat_adaptive_path_rules() {
+        use crate::techniques::CandidateSet;
+        // Auto + adaptive: two-phase underneath — no CAS grants, messages flow.
+        let mut cfg = base(2_000, 4, ExecutionModel::Dca, TechniqueKind::Gss);
+        cfg.sched_path = SchedPath::Auto;
+        cfg.hier = cfg
+            .hier
+            .with_adaptive()
+            .with_candidates(CandidateSet::EMPTY.try_with(TechniqueKind::Gss).unwrap());
+        let r = simulate(&cfg).unwrap();
+        assert_eq!(r.fast_grants, 0, "flat adaptive Auto demotes to two-phase");
+        assert!(r.stats.messages > 0);
+        // Explicit LockFree + adaptive is a contradiction → error.
+        let mut bad = base(2_000, 4, ExecutionModel::Dca, TechniqueKind::Gss);
+        bad.sched_path = SchedPath::LockFree;
+        bad.hier = bad.hier.with_adaptive();
+        assert!(simulate(&bad).is_err());
+        // Adaptive on the non-DCA models → error.
+        for model in [ExecutionModel::Cca, ExecutionModel::DcaRma] {
+            let mut bad = base(2_000, 4, model, TechniqueKind::Gss);
+            bad.hier = bad.hier.with_adaptive();
+            assert!(simulate(&bad).is_err(), "{model:?}");
+        }
+        // Flat AF start with adaptivity → error (hier supports AF starts).
+        let mut bad = base(2_000, 4, ExecutionModel::Dca, TechniqueKind::Af);
+        bad.hier = bad.hier.with_adaptive();
+        assert!(simulate(&bad).is_err());
+    }
+
+    /// `Auto` without adaptivity is the lock-free path, bit-for-bit (flat).
+    #[test]
+    fn flat_auto_matches_lockfree_when_static() {
+        for kind in [TechniqueKind::Ss, TechniqueKind::Gss, TechniqueKind::Tap] {
+            let mut lf = base(4_000, 8, ExecutionModel::Dca, kind);
+            lf.sched_path = SchedPath::LockFree;
+            let mut auto = base(4_000, 8, ExecutionModel::Dca, kind);
+            auto.sched_path = SchedPath::Auto;
+            let a = simulate(&lf).unwrap();
+            let b = simulate(&auto).unwrap();
+            assert_eq!(a.assignments, b.assignments, "{kind}");
+            assert_eq!(a.t_par(), b.t_par(), "{kind}");
+            assert_eq!(a.fast_grants, b.fast_grants, "{kind}");
+        }
     }
 
     #[test]

@@ -66,8 +66,9 @@ use std::collections::VecDeque;
 use crate::config::{ClusterConfig, ExecutionModel, HierParams, LevelPlan, SchedPath, WatermarkMode};
 use crate::coordinator::protocol::{AfInfo, PerfReport};
 use crate::des::heap::{ns, secs, EventHeap};
-use crate::des::{DesConfig, DesResult};
+use crate::des::{min_latency_ns, DesConfig, DesResult};
 use crate::metrics::LoopStats;
+use crate::sched::adaptive::{AdaptiveController, SwitchEvent};
 use crate::sched::Assignment;
 use crate::substrate::topology::Topology;
 use crate::techniques::af::{af_requester_chunk, AfCalculator, AfGlobals, PeStats};
@@ -215,6 +216,10 @@ struct Persona {
     fetch_sent_ns: u64,
     /// EWMA of observed parent-fetch round trips (shared protocol policy).
     rtt: RttEwma,
+    /// SimAS-style controller re-binding this persona's technique slot
+    /// (`--adaptive`; levels ≥ 1 — the root's ledger is installed once and
+    /// its outer technique stays static).
+    adapt: Option<AdaptiveController>,
 }
 
 /// One hosting rank (a lowest-level master): serial CPU, task queue, and
@@ -256,9 +261,9 @@ struct HierSim<'a> {
     /// Tree depth `k`.
     k: usize,
     /// Children per level-`d` master (hot copy of `plan`'s fan-outs).
+    /// (Per-level techniques live on the re-bindable ledger slots now —
+    /// the configured plan is only their initial value.)
     fanouts: Vec<u32>,
-    /// Technique of each level.
-    techs: Vec<TechniqueKind>,
     /// `personas[d][j]`: level-`d` master `j` (`personas[0]` = the root).
     personas: Vec<Vec<Persona>>,
     servers: Vec<Server>,
@@ -271,15 +276,19 @@ struct HierSim<'a> {
     level_msgs: Vec<u64>,
     assignments: Vec<Assignment>,
     chunks_granted: u64,
-    /// Leaf-level lock-free fast path active (`SchedPath::LockFree` + a
-    /// closed-form, non-measurement-coupled leaf technique). Master-tier
-    /// fetches always stay two-phase.
-    fast_leaf: bool,
+    /// Per-leaf-group lock-free fast path (`SchedPath::{LockFree, Auto}` +
+    /// a fast-path leaf technique). Master-tier fetches always stay
+    /// two-phase. Under `Auto`, a group is **demoted** to `false` the
+    /// moment its adaptive controller rebinds the slot to a
+    /// measurement-coupled technique (TAP) — per subtree, permanently.
+    fast_group: Vec<bool>,
     /// Per-leaf-group atomic unit: pending fused ops + busy flag.
     atom_queue: Vec<VecDeque<u32>>,
     atom_busy: Vec<bool>,
     fast_grants: u64,
     events: u64,
+    /// Technique-slot rebinds, in decision order.
+    switch_events: Vec<SwitchEvent>,
 }
 
 impl<'a> HierSim<'a> {
@@ -289,6 +298,12 @@ impl<'a> HierSim<'a> {
         let fanouts: Vec<u32> = plan.levels.iter().map(|l| l.fanout).collect();
         let techs: Vec<TechniqueKind> = plan.techs();
         let staged_cap = cfg.hier.staged_capacity();
+        let fast_initial =
+            cfg.sched_path.wants_lockfree() && techs[k - 1].supports_fast_path();
+        // Pure LockFree restricts leaf candidates to fast-path techniques so
+        // a rebind never has to demote the subtree; Auto keeps the full set
+        // and demotes instead.
+        let leaf_fast_only = cfg.sched_path == SchedPath::LockFree && fast_initial;
         let mut personas: Vec<Vec<Persona>> = Vec::with_capacity(k);
         for d in 0..k {
             let masters = plan.masters_at(d);
@@ -309,6 +324,17 @@ impl<'a> HierSim<'a> {
                     installed_iters: 0,
                     fetch_sent_ns: 0,
                     rtt: RttEwma::default(),
+                    // The root's chunk is installed once and never replaced;
+                    // adaptivity drives the subtree ledgers below it.
+                    adapt: (cfg.hier.adaptive.enabled && d > 0).then(|| {
+                        AdaptiveController::new(
+                            techs[d],
+                            &cfg.params,
+                            fanouts[d],
+                            cfg.hier.adaptive,
+                            leaf_fast_only && d == k - 1,
+                        )
+                    }),
                 })
                 .collect();
             personas.push(level);
@@ -329,17 +355,17 @@ impl<'a> HierSim<'a> {
             })
             .collect();
         let n_servers = plan.masters_at(k - 1) as usize;
-        let fast_leaf =
-            cfg.sched_path == SchedPath::LockFree && techs[k - 1].supports_fast_path();
         HierSim {
             cfg,
             topo: Topology::new(&cfg.cluster),
-            heap: EventHeap::with_capacity(2 * cfg.params.p as usize),
+            heap: EventHeap::for_latency_scale(
+                2 * cfg.params.p as usize,
+                min_latency_ns(&cfg.cluster),
+            ),
             now: 0,
             plan: plan.clone(),
             k,
             fanouts,
-            techs,
             personas,
             servers,
             workers: vec![Wstate::default(); cfg.params.p as usize],
@@ -349,12 +375,53 @@ impl<'a> HierSim<'a> {
             level_msgs: vec![0; k],
             assignments: crate::des::assignments_buffer(cfg),
             chunks_granted: 0,
-            fast_leaf,
+            fast_group: vec![fast_initial; n_servers],
             atom_queue: vec![VecDeque::new(); n_servers],
             atom_busy: vec![false; n_servers],
             fast_grants: 0,
             events: 0,
+            switch_events: Vec::new(),
         }
+    }
+
+    /// Is leaf group `s` (still) on the lock-free fast path?
+    fn group_fast(&self, s: u32) -> bool {
+        self.fast_group[s as usize]
+    }
+
+    /// Count one grant served from persona `(e, j)`'s ledger toward its
+    /// probe cadence; on a due probe, rebind the slot mid-chunk
+    /// ([`NodeLedger::rebind_now`] — in-flight commits NACK via the
+    /// stale-`seq` protocol) and, at a leaf group whose new binding cannot
+    /// take the fast path, demote the group to two-phase (`SchedPath::Auto`).
+    fn adaptive_tick(&mut self, e: usize, j: u32) {
+        let ji = j as usize;
+        let due = match self.personas[e][ji].adapt.as_mut() {
+            Some(ctl) => ctl.tick_grant(),
+            None => return,
+        };
+        if !due {
+            return;
+        }
+        let remaining = self.personas[e][ji].ledger.remaining();
+        let from = self.personas[e][ji].ledger.bound_kind();
+        let decision =
+            self.personas[e][ji].adapt.as_mut().expect("checked above").probe(remaining);
+        let Some((to, predicted_ratio)) = decision else { return };
+        if e == self.k - 1 && !to.supports_fast_path() {
+            // Demote BEFORE the rebind so no fused grant can ever race a
+            // measurement-coupled binding.
+            self.fast_group[ji] = false;
+        }
+        self.personas[e][ji].ledger.rebind_now(to);
+        self.switch_events.push(SwitchEvent {
+            at_s: secs(self.now),
+            level: e as u32,
+            master: j,
+            from,
+            to,
+            predicted_ratio,
+        });
     }
 
     // -- small helpers -----------------------------------------------------
@@ -417,7 +484,7 @@ impl<'a> HierSim<'a> {
                 continue;
             }
             self.workers[w as usize].req_sent_ns = 0;
-            if self.fast_leaf {
+            if self.group_fast(self.server_of_rank(w)) {
                 self.send_atomic(w, 0);
             } else {
                 self.send_leaf(w, Task::LeafGet { w, report: None }, 0);
@@ -456,7 +523,7 @@ impl<'a> HierSim<'a> {
             }
             Ev::ExecDone { w } => {
                 self.workers[w as usize].req_sent_ns = self.now;
-                if self.fast_leaf {
+                if self.group_fast(self.server_of_rank(w)) {
                     self.send_atomic(w, 0);
                 } else {
                     let report = self.workers[w as usize].last_report;
@@ -496,12 +563,24 @@ impl<'a> HierSim<'a> {
             self.atom_busy[si] = false;
             return;
         };
-        let dur = ns(self.cfg.cluster.service_time);
         let k1 = self.k - 1;
+        if !self.fast_group[si] {
+            // The group was demoted (`SchedPath::Auto` rebind to a
+            // measurement-coupled technique) while this fused op was in
+            // flight: it lands on the master's service queue as a plain
+            // phase-1 request instead (the op already traveled, so no new
+            // protocol message is charged).
+            self.heap.push(self.now, Ev::Arrive { s, task: Task::LeafGet { w, report: None } });
+            self.heap.push(self.now, Ev::AtomFree { s });
+            self.atom_busy[si] = true;
+            return;
+        }
+        let dur = ns(self.cfg.cluster.service_time);
         match self.personas[k1][si].ledger.fast_grant() {
             Some(a) => {
                 self.fast_grants += 1;
                 self.grant(w, a);
+                self.adaptive_tick(k1, s);
                 let mrank = self.servers[si].rank;
                 let at = self.now + dur + self.lat_ns(mrank, w);
                 self.heap.push(at, Ev::WorkerReply { w, reply: WReply::Chunk(a) });
@@ -608,6 +687,10 @@ impl<'a> HierSim<'a> {
                     if let Some(af) = self.personas[d][jp as usize].af_calc.as_mut() {
                         af.record(idx, r.iters, r.elapsed);
                     }
+                    let now_s = secs(self.now);
+                    if let Some(ctl) = self.personas[d][jp as usize].adapt.as_mut() {
+                        ctl.observe_chunk(idx as u32, r.iters, r.elapsed, now_s);
+                    }
                 }
                 self.serve_master_get(d, jp, from, dur);
                 dur
@@ -674,11 +757,12 @@ impl<'a> HierSim<'a> {
     /// chunk directly — still the canonical table schedule.
     fn leaf_get(&mut self, s: u32, w: u32, dur: u64) {
         let k1 = self.k - 1;
-        if self.fast_leaf {
+        if self.group_fast(s) {
             match self.personas[k1][s as usize].ledger.fast_grant() {
                 Some(a) => {
                     self.fast_grants += 1;
                     self.grant(w, a);
+                    self.adaptive_tick(k1, s);
                     self.send_worker(s, w, WReply::Chunk(a), dur);
                     self.maybe_prefetch(k1, s, dur);
                 }
@@ -708,6 +792,7 @@ impl<'a> HierSim<'a> {
         match self.personas[k1][s as usize].ledger.commit(step, size, seq) {
             InnerCommit::Granted(abs) => {
                 self.grant(w, abs);
+                self.adaptive_tick(k1, s);
                 self.send_worker(s, w, WReply::Chunk(abs), dur);
                 self.maybe_prefetch(k1, s, dur);
             }
@@ -755,6 +840,7 @@ impl<'a> HierSim<'a> {
         let jp = from / self.fanouts[d];
         match self.personas[d][jp as usize].ledger.commit(step, size, seq) {
             InnerCommit::Granted(abs) => {
+                self.adaptive_tick(d, jp);
                 self.send_master_reply(
                     d,
                     jp,
@@ -889,24 +975,28 @@ impl<'a> HierSim<'a> {
         seq: u64,
         af: Option<AfInfo>,
     ) -> u64 {
-        if self.techs[d] == TechniqueKind::Af {
-            af_requester_chunk(
+        // The binding follows the parent CHUNK the step was reserved from
+        // (the slot may have been rebound since — the configured level
+        // technique is only its initial value).
+        let jp = to / self.fanouts[d];
+        match self.personas[d][jp as usize].ledger.chunk_kind(seq) {
+            Some(TechniqueKind::Af) => af_requester_chunk(
                 &self.personas[d + 1][to as usize].stats,
                 af.map(|i| AfGlobals { d: i.d, e: i.e }),
                 remaining,
                 self.fanouts[d],
                 self.min_chunk(),
-            )
-        } else {
+            ),
             // Normal case: the parent chunk this step belongs to is still
-            // installed; evaluate its bound closed form. If it was replaced
-            // while this Step was in flight, the commit will NACK and
-            // re-request, so the size is moot.
-            let jp = to / self.fanouts[d];
-            self.personas[d][jp as usize]
+            // installed; evaluate its bound closed form.
+            Some(_) => self
+                .personas[d][jp as usize]
                 .ledger
                 .closed_inner_size(step, seq)
-                .unwrap_or_else(|| self.min_chunk())
+                .unwrap_or_else(|| self.min_chunk()),
+            // Replaced while this Step was in flight: the commit will NACK
+            // and re-request, so the size is moot.
+            None => self.min_chunk(),
         }
     }
 
@@ -932,6 +1022,18 @@ impl<'a> HierSim<'a> {
                 let ws = &mut self.workers[w as usize];
                 ws.stats.record(a.size, elapsed);
                 ws.last_report = Some(PerfReport { iters: a.size, elapsed });
+                // Leaf-controller observation at chunk-grant time — works on
+                // BOTH grant paths (fused CAS grants carry no piggybacked
+                // report; the simulated atomic unit samples the timing the
+                // way an RMA-side profile would).
+                let s = self.server_of_rank(w);
+                let mrank = self.servers[s as usize].rank;
+                let idx = w - mrank;
+                let k1 = self.k - 1;
+                let now_s = secs(self.now);
+                if let Some(ctl) = self.personas[k1][s as usize].adapt.as_mut() {
+                    ctl.observe_chunk(idx, a.size, elapsed, now_s);
+                }
                 self.heap.push(self.now + dur, Ev::ExecDone { w });
             }
             WReply::Done => {
@@ -944,20 +1046,22 @@ impl<'a> HierSim<'a> {
     /// technique bound to the current chunk, or AF's Eq. 11).
     fn worker_calc(&self, w: u32, step: u64, remaining: u64, seq: u64, af: Option<AfInfo>) -> u64 {
         let k1 = self.k - 1;
-        if self.techs[k1] == TechniqueKind::Af {
-            af_requester_chunk(
+        let s = self.server_of_rank(w);
+        match self.personas[k1][s as usize].ledger.chunk_kind(seq) {
+            Some(TechniqueKind::Af) => af_requester_chunk(
                 &self.workers[w as usize].stats,
                 af.map(|i| AfGlobals { d: i.d, e: i.e }),
                 remaining,
                 self.fanouts[k1],
                 self.min_chunk(),
-            )
-        } else {
-            let s = self.server_of_rank(w);
-            self.personas[k1][s as usize]
+            ),
+            Some(_) => self
+                .personas[k1][s as usize]
                 .ledger
                 .closed_inner_size(step, seq)
-                .unwrap_or_else(|| self.min_chunk())
+                .unwrap_or_else(|| self.min_chunk()),
+            // Chunk replaced in flight — the commit will NACK anyway.
+            None => self.min_chunk(),
         }
     }
 
@@ -971,7 +1075,7 @@ impl<'a> HierSim<'a> {
         let c = &self.cfg.cluster;
         let cluster_break = c.break_after.max(1) as u64;
         match std::mem::replace(&mut self.servers[si].own, Own::Finished) {
-            Own::NeedWork if self.fast_leaf => {
+            Own::NeedWork if self.group_fast(s) => {
                 // Lock-free: the master's own personality grants with one
                 // fused CAS on its CPU — no Calc/Commit states, no
                 // calculation delay (the table already holds the size).
@@ -980,6 +1084,7 @@ impl<'a> HierSim<'a> {
                     Some(a) => {
                         self.fast_grants += 1;
                         self.grant(mrank, a);
+                        self.adaptive_tick(k1, s);
                         self.servers[si].own =
                             Own::Exec { cursor: a.start, end: a.end(), first: a.start };
                         self.maybe_prefetch(k1, s, dur);
@@ -1018,6 +1123,7 @@ impl<'a> HierSim<'a> {
                 match self.personas[k1][si].ledger.commit(step, size, seq) {
                     InnerCommit::Granted(abs) => {
                         self.grant(mrank, abs);
+                        self.adaptive_tick(k1, s);
                         self.servers[si].own =
                             Own::Exec { cursor: abs.start, end: abs.end(), first: abs.start };
                         self.maybe_prefetch(k1, s, dur);
@@ -1048,6 +1154,10 @@ impl<'a> HierSim<'a> {
                     self.workers[mrank as usize].stats.record(iters, elapsed);
                     if let Some(af) = self.personas[k1][si].af_calc.as_mut() {
                         af.record(0, iters, elapsed);
+                    }
+                    let now_s = secs(self.now + dur);
+                    if let Some(ctl) = self.personas[k1][si].adapt.as_mut() {
+                        ctl.observe_chunk(0, iters, elapsed, now_s);
                     }
                     self.servers[si].own = Own::NeedWork;
                 }
@@ -1098,6 +1208,7 @@ impl<'a> HierSim<'a> {
             level_messages: self.level_msgs,
             fast_grants: self.fast_grants,
             events: self.events,
+            switch_events: self.switch_events,
         }
     }
 }
@@ -1370,6 +1481,55 @@ mod tests {
         assert_eq!(bare.t_par(), recorded.t_par());
         assert_eq!(bare.stats.messages, recorded.stats.messages);
         assert_eq!(bare.events, recorded.events);
+    }
+
+    /// Adaptive selection on the DES tree: coverage, deterministic replay,
+    /// switch events at subtree levels only, and the per-group demotion
+    /// accounting staying consistent (`messages = intra + inter = Σ levels`)
+    /// across an Auto run that flips groups mid-flight.
+    #[test]
+    fn adaptive_auto_accounting_stays_consistent() {
+        use crate::techniques::CandidateSet;
+        let mk = || {
+            let mut c = cfg(20_000, 2, 4, TechniqueKind::Fac2);
+            c.hier = HierParams::with_inner(TechniqueKind::Ss)
+                .with_adaptive()
+                .with_probe_interval(8)
+                .with_candidates(CandidateSet::parse("ss,tap").unwrap());
+            c.sched_path = crate::config::SchedPath::Auto;
+            c.delay = InjectedDelay::exponential_calculation(100e-6, 7);
+            c.cost = IterationCost::Constant(1e-5);
+            simulate(&c).unwrap()
+        };
+        let r = mk();
+        verify_coverage(&r.sorted_assignments(), 20_000).unwrap();
+        assert!(r.fast_grants > 0, "started lock-free");
+        assert!(r.switch_events.iter().any(|e| e.to == TechniqueKind::Tap));
+        assert_eq!(r.stats.messages, r.intra_node_messages + r.inter_node_messages);
+        assert_eq!(r.stats.messages, r.level_messages.iter().sum::<u64>());
+        let b = mk();
+        assert_eq!(r.assignments, b.assignments, "auto-demotion replay");
+        assert_eq!(r.t_par(), b.t_par());
+    }
+
+    /// Adaptivity leaves the unrecorded-run invariants intact: stats match
+    /// the recorded twin with zero grant logging.
+    #[test]
+    fn adaptive_unrecorded_run_matches_recorded_stats() {
+        use crate::techniques::CandidateSet;
+        let mut c = cfg(8_000, 2, 4, TechniqueKind::Fac2);
+        c.hier = HierParams::with_inner(TechniqueKind::Ss)
+            .with_adaptive()
+            .with_probe_interval(4)
+            .with_candidates(CandidateSet::parse("ss,gss").unwrap());
+        c.delay = InjectedDelay::exponential_calculation(50e-6, 13);
+        let recorded = simulate(&c).unwrap();
+        c.record_assignments = false;
+        let bare = simulate(&c).unwrap();
+        assert!(bare.assignments.is_empty());
+        assert_eq!(bare.stats.chunks, recorded.assignments.len() as u64);
+        assert_eq!(bare.t_par(), recorded.t_par());
+        assert_eq!(bare.switch_events, recorded.switch_events);
     }
 
     #[test]

@@ -122,14 +122,27 @@ struct Chunk {
     q: WorkQueue,
     offset: u64,
     len: u64,
+    /// Technique this chunk was bound to at install time (the slot's value
+    /// then — rebinds never retroactively change a live chunk's sizing).
+    kind: TechniqueKind,
     /// Inner technique bound to this chunk's size (`None` for AF, which has
     /// no closed form).
     tech: Option<Technique>,
 }
 
 /// Per-level chunk ledger — see the module docs for the protocol.
+///
+/// The inner technique is a **re-bindable slot**: [`NodeLedger::rebind`]
+/// changes what the *next* installed chunk is bound to, and
+/// [`NodeLedger::rebind_now`] additionally splits a live chunk at its
+/// unassigned remainder — re-installed under a fresh `seq`, so in-flight
+/// commits against the replaced chunk NACK through the existing
+/// stale-`seq` protocol and re-reserve against the new binding. Switches
+/// are therefore race-free on both substrates without any new machinery:
+/// the chunk boundary IS the synchronization point.
 #[derive(Debug)]
 pub struct NodeLedger {
+    /// The technique slot: what the next installed chunk binds to.
     inner_kind: TechniqueKind,
     /// Template the inner technique is re-bound from per chunk.
     base: LoopParams,
@@ -231,15 +244,58 @@ impl NodeLedger {
 
     fn install_now(&mut self, a: Assignment) {
         self.seq += 1;
-        let tech = self.inner_kind.has_closed_form().then(|| {
-            Technique::new(self.inner_kind, &with_np(&self.base, a.size, self.rpn))
-        });
+        let kind = self.inner_kind;
+        let tech = kind
+            .has_closed_form()
+            .then(|| Technique::new(kind, &with_np(&self.base, a.size, self.rpn)));
         self.current = Some(Chunk {
             q: WorkQueue::new(a.size, self.base.min_chunk),
             offset: a.start,
             len: a.size,
+            kind,
             tech,
         });
+    }
+
+    /// The slot's current value — what the next installed chunk binds to.
+    pub fn bound_kind(&self) -> TechniqueKind {
+        self.inner_kind
+    }
+
+    /// Technique the chunk identified by `seq` was bound to (`None` when
+    /// that chunk has been replaced — its commit will NACK anyway).
+    pub fn chunk_kind(&self, seq: u64) -> Option<TechniqueKind> {
+        match &self.current {
+            Some(c) if self.seq == seq => Some(c.kind),
+            _ => None,
+        }
+    }
+
+    /// Re-bind the technique slot: takes effect at the **next** chunk
+    /// install (the current chunk, if live, keeps its binding).
+    pub fn rebind(&mut self, kind: TechniqueKind) {
+        self.inner_kind = kind;
+    }
+
+    /// Re-bind the slot **immediately**: if a chunk is live, its unassigned
+    /// remainder is carved off and re-installed as a fresh chunk under the
+    /// new binding — `seq` advances, so every in-flight commit against the
+    /// old chunk NACKs ([`InnerCommit::Stale`]) and re-reserves against the
+    /// new technique. Returns `true` when a live chunk was split (`false`:
+    /// only the slot moved; nothing to re-serve).
+    pub fn rebind_now(&mut self, kind: TechniqueKind) -> bool {
+        self.inner_kind = kind;
+        let Some(c) = self.current.as_ref() else { return false };
+        if c.q.is_done() {
+            return false;
+        }
+        let remainder = Assignment {
+            step: 0,
+            start: c.offset + c.q.lp_start(),
+            size: c.q.remaining(),
+        };
+        self.install_now(remainder);
+        true
     }
 
     /// Phase 1: reserve the next local step, promoting the next staged
@@ -263,7 +319,10 @@ impl NodeLedger {
     pub fn commit(&mut self, step: u64, size: u64, seq: u64) -> InnerCommit {
         let granted = match self.current.as_mut() {
             Some(c) if !c.q.is_done() && self.seq == seq => {
-                let size = if self.inner_kind == TechniqueKind::Af {
+                // The re-cap follows the CHUNK's binding, not the slot's —
+                // a rebound slot must not re-cap a still-live AF chunk's
+                // commits differently (or vice versa).
+                let size = if c.kind == TechniqueKind::Af {
                     af_recap(size, c.q.remaining(), self.rpn)
                 } else {
                     size
@@ -447,6 +506,41 @@ impl AtomicLedger {
         }
     }
 
+    /// Atomically retire the published chunk: CAS the cursor to the chunk's
+    /// end so no further grant can succeed, and return the **unassigned
+    /// remainder** `(absolute start, length)` — `None` when nothing is
+    /// published or it had already drained. Single-writer like
+    /// [`Self::publish`]; racing [`Self::try_grant`]s either land before
+    /// the freeze (their iterations are excluded from the remainder) or
+    /// fail their CAS against the moved cursor and observe a drained
+    /// ledger. This is what makes a mid-chunk technique rebind race-free on
+    /// the lock-free path: freeze, then republish the remainder under the
+    /// new table (and a fresh `seq`).
+    pub fn freeze(&self) -> Option<(u64, u64)> {
+        loop {
+            let word = self.word.load(Ordering::Acquire);
+            let (start, seqm) = unpack(word);
+            if seqm == 0 {
+                return None;
+            }
+            let Some(fc) = self.snapshot().filter(|fc| fc.seq & FAST_SEQ_MASK == seqm) else {
+                std::hint::spin_loop();
+                continue;
+            };
+            let n = fc.table.n();
+            if start >= n {
+                return None; // already drained
+            }
+            if self
+                .word
+                .compare_exchange_weak(word, pack(n, seqm), Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return Some((fc.offset + start, n - start));
+            }
+        }
+    }
+
     /// Unassigned iterations left in the published chunk (0 when empty or
     /// drained) — the prefetch watermark is compared against this.
     pub fn remaining(&self) -> u64 {
@@ -474,6 +568,9 @@ impl AtomicLedger {
 #[derive(Debug)]
 pub struct FastLedger {
     shared: Arc<AtomicLedger>,
+    kind: TechniqueKind,
+    base: LoopParams,
+    rpn: u32,
     cache: TableCache,
     staged: VecDeque<Assignment>,
     staged_cap: usize,
@@ -491,13 +588,61 @@ impl FastLedger {
         rpn: u32,
         staged_cap: usize,
     ) -> Self {
+        let rpn = rpn.max(1);
         FastLedger {
             shared,
-            cache: TableCache::new(inner_kind, base, rpn.max(1)),
+            kind: inner_kind,
+            base: base.clone(),
+            rpn,
+            cache: TableCache::new(inner_kind, base, rpn),
             staged: VecDeque::new(),
             staged_cap: staged_cap.max(1),
             seq: 0,
         }
+    }
+
+    /// The slot's current binding.
+    pub fn bound_kind(&self) -> TechniqueKind {
+        self.kind
+    }
+
+    /// Re-bind the slot to another **fast-path** technique: the memoized
+    /// table cache is invalidated (tables are per-technique), and a live
+    /// published chunk is frozen and immediately republished over its
+    /// unassigned remainder under the new technique's table and a fresh
+    /// `seq` — racing CAS grants either land before the freeze or retry
+    /// against the new word. Returns `true` when a live chunk was split.
+    ///
+    /// # Panics
+    /// When `kind` cannot take the fast path (demote instead — see
+    /// [`Self::demote`]).
+    pub fn rebind(&mut self, kind: TechniqueKind) -> bool {
+        assert!(kind.supports_fast_path(), "{kind} must demote, not rebind, the fast ledger");
+        self.kind = kind;
+        self.cache = TableCache::new(kind, &self.base, self.rpn);
+        match self.shared.freeze() {
+            Some((start, len)) => {
+                self.publish_now(Assignment { step: 0, start, size: len });
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Tear the fast ledger down for a two-phase demotion (the
+    /// `SchedPath::Auto` fallback when adaptivity selects a
+    /// measurement-coupled technique): freezes the published chunk and
+    /// returns every unassigned range — the live remainder first, then the
+    /// staged FIFO in order — for the caller to install into the two-phase
+    /// [`NodeLedger`]. The shared word stays drained forever after, so
+    /// workers fall back to the message protocol on their next grant.
+    pub fn demote(mut self) -> Vec<Assignment> {
+        let mut out = Vec::with_capacity(1 + self.staged.len());
+        if let Some((start, len)) = self.shared.freeze() {
+            out.push(Assignment { step: 0, start, size: len });
+        }
+        out.extend(self.staged.drain(..));
+        out
     }
 
     /// The workers' granting handle.
@@ -884,6 +1029,163 @@ mod tests {
         assert!(fast_len_ok(0));
         assert!(fast_len_ok((1 << 40) - 1));
         assert!(!fast_len_ok(1 << 40));
+    }
+
+    /// The tentpole's race-freedom claim, deterministically: a mid-run
+    /// rebind splits the live chunk at a fresh `seq`, the in-flight commit
+    /// against the old chunk NACKs (`Stale`), and the re-reserve sizes
+    /// against the NEW technique over exactly the unassigned remainder.
+    #[test]
+    fn rebind_now_splits_and_nacks_stale_commits() {
+        let mut l = ledger(TechniqueKind::Ss, 4);
+        l.install(chunk(100, 40));
+        assert_eq!(l.bound_kind(), TechniqueKind::Ss);
+        // Two reserved steps: one committed before the rebind, one left in
+        // flight across it.
+        let (s1, _, q1) = l.reserve().unwrap();
+        let (s2, _, q2) = l.reserve().unwrap();
+        let InnerCommit::Granted(a1) = l.commit(s1, 1, q1) else { panic!("grant") };
+        assert_eq!((a1.start, a1.size), (100, 1));
+        // Rebind mid-chunk: 39 unassigned iterations re-install under GSS.
+        assert!(l.rebind_now(TechniqueKind::Gss));
+        assert_eq!(l.bound_kind(), TechniqueKind::Gss);
+        assert_eq!(l.seq(), q1 + 1, "split bumps the seq");
+        assert_eq!(l.current_len(), 39, "remainder only");
+        assert_eq!(l.chunk_kind(l.seq()), Some(TechniqueKind::Gss));
+        assert_eq!(l.chunk_kind(q1), None, "old chunk is gone");
+        // The in-flight commit NACKs instead of granting into the new chunk.
+        assert_eq!(l.commit(s2, 1, q2), InnerCommit::Stale);
+        // Re-reserve: sized by GSS bound to the 39-iteration remainder.
+        let (s3, _, q3) = l.reserve().unwrap();
+        assert_eq!(q3, l.seq());
+        let size = l.closed_inner_size(s3, q3).unwrap();
+        assert_eq!(size, 10, "GSS step 0 over (39, 4) = ceil(39/4)");
+        let InnerCommit::Granted(a3) = l.commit(s3, size, q3) else { panic!("grant") };
+        assert_eq!(a3.start, 101, "remainder continues where the grants stopped");
+        // Drain and verify the split lost nothing.
+        let mut granted = vec![a1, a3];
+        while let Some((s, _, q)) = l.reserve() {
+            let k = l.closed_inner_size(s, q).unwrap();
+            let InnerCommit::Granted(a) = l.commit(s, k, q) else { panic!("grant") };
+            granted.push(a);
+        }
+        granted.sort_by_key(|a| a.start);
+        let rebased: Vec<Assignment> = granted
+            .iter()
+            .map(|a| Assignment { step: a.step, start: a.start - 100, size: a.size })
+            .collect();
+        verify_coverage(&rebased, 40).unwrap();
+    }
+
+    #[test]
+    fn rebind_defers_to_the_next_install() {
+        let mut l = ledger(TechniqueKind::Ss, 4);
+        l.install(chunk(0, 10));
+        l.rebind(TechniqueKind::Gss);
+        // Current chunk keeps its SS binding…
+        assert_eq!(l.chunk_kind(l.seq()), Some(TechniqueKind::Ss));
+        let (s, _, q) = l.reserve().unwrap();
+        assert_eq!(l.closed_inner_size(s, q), Some(1), "still SS");
+        assert!(matches!(l.commit(s, 1, q), InnerCommit::Granted(_)));
+        // …and the next install binds GSS.
+        l.install(chunk(10, 8));
+        while l.chunk_kind(l.seq()) == Some(TechniqueKind::Ss) {
+            let (s, _, q) = l.reserve().unwrap();
+            l.commit(s, 1, q);
+        }
+        let (s, _, q) = l.reserve().unwrap();
+        assert_eq!(l.chunk_kind(q), Some(TechniqueKind::Gss));
+        assert_eq!(l.closed_inner_size(s, q), Some(2), "GSS over (8, 4)");
+    }
+
+    #[test]
+    fn rebind_now_without_live_chunk_only_moves_the_slot() {
+        let mut l = ledger(TechniqueKind::Ss, 4);
+        assert!(!l.rebind_now(TechniqueKind::Gss), "nothing to split");
+        assert_eq!(l.bound_kind(), TechniqueKind::Gss);
+        l.install(chunk(0, 8));
+        assert_eq!(l.chunk_kind(l.seq()), Some(TechniqueKind::Gss));
+    }
+
+    #[test]
+    fn atomic_ledger_freeze_returns_the_unassigned_remainder() {
+        use crate::techniques::ChunkTable;
+        let params = LoopParams::new(10, 2);
+        let ledger = AtomicLedger::new();
+        assert_eq!(ledger.freeze(), None, "nothing published");
+        let t = std::sync::Arc::new(ChunkTable::build(TechniqueKind::Ss, &params).unwrap());
+        ledger.publish(1, 100, std::sync::Arc::clone(&t));
+        // Take three grants, freeze the rest.
+        for _ in 0..3 {
+            ledger.try_grant().unwrap();
+        }
+        assert_eq!(ledger.freeze(), Some((103, 7)));
+        assert_eq!(ledger.try_grant(), None, "frozen word grants nothing");
+        assert_eq!(ledger.remaining(), 0);
+        assert_eq!(ledger.freeze(), None, "idempotently drained");
+        // Republish over the remainder: grants resume there.
+        ledger.publish(2, 103, t);
+        let (a, _, seq) = ledger.try_grant().unwrap();
+        assert_eq!((a.start, seq), (103, 2));
+    }
+
+    #[test]
+    fn fast_ledger_rebind_republishes_the_remainder() {
+        let base = LoopParams::new(10_000, 8);
+        let shared = Arc::new(AtomicLedger::new());
+        let mut f = FastLedger::new(Arc::clone(&shared), TechniqueKind::Ss, &base, 4, 2);
+        f.install(chunk(0, 40));
+        // Drain 5 SS grants off the CAS word, then rebind to GSS.
+        for _ in 0..5 {
+            shared.try_grant().unwrap();
+        }
+        assert!(f.rebind(TechniqueKind::Gss));
+        assert_eq!(f.bound_kind(), TechniqueKind::Gss);
+        // The republished chunk is the 35-iteration remainder under GSS.
+        let (a, _, seq) = shared.try_grant().unwrap();
+        assert_eq!((a.step, a.start, a.size), (0, 5, 9), "GSS step 0 over (35, 4)");
+        assert_eq!(seq, 2, "republish bumped the seq");
+        let mut starts = vec![a.start];
+        while let Some((a, _rem)) = f.grant() {
+            starts.push(a.start);
+        }
+        starts.sort_unstable();
+        assert_eq!(starts[0], 5);
+        assert!(*starts.last().unwrap() < 40);
+        assert!(!f.has_work());
+    }
+
+    #[test]
+    fn fast_ledger_demote_hands_back_every_unassigned_range() {
+        let base = LoopParams::new(10_000, 8);
+        let shared = Arc::new(AtomicLedger::new());
+        let mut f = FastLedger::new(Arc::clone(&shared), TechniqueKind::Ss, &base, 2, 3);
+        f.install(chunk(0, 10));
+        f.install(chunk(10, 5));
+        f.install(chunk(15, 3));
+        for _ in 0..4 {
+            shared.try_grant().unwrap();
+        }
+        let moved = f.demote();
+        assert_eq!(
+            moved,
+            vec![chunk(4, 6), chunk(10, 5), chunk(15, 3)],
+            "remainder first, staged FIFO after"
+        );
+        assert_eq!(shared.try_grant(), None, "demoted word grants nothing ever again");
+        // The moved ranges install cleanly into a two-phase ledger.
+        let mut l = ledger(TechniqueKind::Tap, 2).with_staged_capacity(3);
+        l.rebind(TechniqueKind::Tap);
+        for a in moved {
+            l.install(a);
+        }
+        let mut total = 0;
+        while let Some((s, _, q)) = l.reserve() {
+            let k = l.closed_inner_size(s, q).unwrap();
+            let InnerCommit::Granted(a) = l.commit(s, k, q) else { panic!("grant") };
+            total += a.size;
+        }
+        assert_eq!(total, 14, "6 + 5 + 3 unassigned iterations survive the demotion");
     }
 
     #[test]

@@ -38,18 +38,34 @@ COMMANDS
   table3             loop characteristics (Table 3)          [--n --ct --cloud]
   fig4               PSIA factorial experiment (Fig 4)       [--quick --reps --delay-site --hier --inner T --watermark W|auto --json F]
   fig5               Mandelbrot factorial experiment (Fig 5) [--quick --reps --delay-site --hier --inner T --watermark W|auto --json F]
-  simulate           one DES cell  [--app --tech --model --inner --delay-us --ranks --n]
+  simulate           one DES cell  [--app --tech --model --inner --delay-us --ranks --n
+                       --sched-path two-phase|lockfree|auto --adaptive --probe-interval G --candidates t,…]
   hier               N-level HIER-DCA vs the flat models     [--app --tech --inner --levels K --fanout a,b,…
                        --techniques t0,t1,… --watermark W|auto --prefetch-depth Q --nodes --rpn
-                       --racks R --rack-latency-us X --n --delay-us --delay-site --lockfree --json F]
+                       --racks R --rack-latency-us X --n --delay-us --delay-site --lockfree
+                       --sched-path auto --adaptive --probe-interval G --candidates t,… --json F]
   run                real threaded engine [--app --tech --model --workers --n --pjrt --delay-us
                        --hier --inner T --nodes K --levels K --fanout a,b,… --techniques t0,t1,…
                        --watermark W|auto (0 = fetch on exhaustion) --prefetch-depth Q
-                       --lockfree (single-CAS grants for closed-form techniques) --json F]
+                       --lockfree (single-CAS grants for closed-form techniques) --sched-path auto
+                       --adaptive --probe-interval G --candidates t,… --json F]
   sweep-breakafter   A3 ablation: master breakAfter sweep [--app --tech]
   select             SimAS-style model auto-selection (§7, 4 models) [--app --tech --inner --levels K
-                       --fanout a,b,… --watermark W|auto --delay-us]
+                       --fanout a,b,… --watermark W|auto --delay-us --lockfree --sched-path P
+                       --adaptive --probe-interval G --candidates t,…]
   validate           PJRT artifacts vs native implementations
+
+ADAPTIVE SELECTION (--adaptive)
+  Every subtree master (and the flat DCA coordinator) re-binds its
+  technique slot online, SimAS-style: per-subtree EWMAs of iteration
+  mean/σ, per-grant overhead and drain rate feed a closed-form probe over
+  the candidate set every --probe-interval grants. `--sched-path auto`
+  starts lock-free and demotes a subtree to the two-phase protocol when
+  its controller selects the measurement-coupled TAP; AF cannot be a
+  candidate (no closed form to probe). Example:
+
+    dca-dls hier --tech fac --inner ss --adaptive --probe-interval 16 \\
+            --candidates ss,gss,fac --sched-path auto --delay-us 100
 
 HIERARCHY DEPTH (--levels)
   The scheduling tree is depth 2 by default (coordinator → node masters →
@@ -150,6 +166,7 @@ fn cmd_table3(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_figure(app: App, title: &str, flags: &HashMap<String, String>) -> anyhow::Result<()> {
     reject_sched_path_flags(flags, title)?;
+    reject_adaptive_flags(flags, title)?;
     let mut cfg = if flags.contains_key("quick") {
         FigureConfig::quick(app)
     } else {
@@ -315,6 +332,48 @@ fn hier_of(flags: &HashMap<String, String>) -> anyhow::Result<HierParams> {
     Ok(hier)
 }
 
+/// Apply `--adaptive` / `--probe-interval G` / `--candidates t0,t1,…` to a
+/// parsed [`HierParams`]. The cadence and candidate flags require
+/// `--adaptive` (silently configuring a disabled controller would be a
+/// trap); candidate parsing rejects AF with a clear error (no closed form
+/// to probe).
+fn apply_adaptive_flags(
+    mut hier: HierParams,
+    flags: &HashMap<String, String>,
+) -> anyhow::Result<HierParams> {
+    let enabled = flags.contains_key("adaptive");
+    anyhow::ensure!(
+        enabled || !(flags.contains_key("probe-interval") || flags.contains_key("candidates")),
+        "--probe-interval/--candidates only apply with --adaptive"
+    );
+    if !enabled {
+        return Ok(hier);
+    }
+    hier = hier.with_adaptive();
+    if let Some(raw) = flags.get("probe-interval") {
+        let g: u32 = raw.parse().map_err(|_| {
+            anyhow::anyhow!("bad --probe-interval '{raw}' (expect a grant count ≥ 1)")
+        })?;
+        anyhow::ensure!(g >= 1, "--probe-interval must be ≥ 1");
+        hier = hier.with_probe_interval(g);
+    }
+    if let Some(raw) = flags.get("candidates") {
+        hier = hier.with_candidates(dca_dls::techniques::CandidateSet::parse(raw)?);
+    }
+    Ok(hier)
+}
+
+/// Commands whose scenarios are static by definition reject the adaptive
+/// flags instead of silently ignoring them.
+fn reject_adaptive_flags(flags: &HashMap<String, String>, cmd: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !["adaptive", "probe-interval", "candidates"].iter().any(|k| flags.contains_key(*k)),
+        "--adaptive/--probe-interval/--candidates are not supported by `{cmd}`; \
+         use `simulate`, `hier`, `run`, or `select`"
+    );
+    Ok(())
+}
+
 /// Apply `--racks R` / `--rack-latency-us X` to a cluster. A rack count
 /// that doesn't evenly divide the nodes is rejected here — `Topology`
 /// would silently collapse it to a single rack while the run's header and
@@ -396,6 +455,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         flags,
     )?;
     let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
+    let hier = apply_adaptive_flags(hier_of(flags)?, flags)?;
     let cfg = DesConfig {
         sched_path: sched_path_of(flags)?,
         record_assignments: true,
@@ -406,14 +466,14 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         cluster,
         cost,
         pe_speed: vec![],
-        hier: hier_of(flags)?,
+        hier,
     };
     let r = simulate(&cfg)?;
     println!(
         "{} {} {} delay={}µs ranks={ranks} N={n}",
         app.name(),
         tech.name(),
-        model.name(),
+        model.label_adaptive(hier.depth() as u32, hier.adaptive.enabled),
         delay * 1e6
     );
     println!(
@@ -424,6 +484,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         r.stats.cov_finish,
         r.stats.imbalance
     );
+    print!("{}", dca_dls::report::render_switch_events(&r.switch_events));
     Ok(())
 }
 
@@ -433,7 +494,16 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let app = app_of(flags);
     let tech = outer_tech_of(flags)?;
-    let hier = hier_of(flags)?;
+    // Adaptivity applies to the hierarchical row only here — the flat rows
+    // are the static baselines the adaptive run is compared against (use
+    // `simulate --model dca --adaptive` for flat adaptivity).
+    let hier = apply_adaptive_flags(hier_of(flags)?, flags)?;
+    let label = |m: ExecutionModel| {
+        m.label_adaptive(
+            hier.depth() as u32,
+            hier.adaptive.enabled && m == ExecutionModel::HierDca,
+        )
+    };
     let levels = hier.depth() as u32;
     let nodes = get(flags, "nodes", 16u32);
     let rpn = get(flags, "rpn", 16u32);
@@ -457,7 +527,7 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         .collect();
     println!(
         "== {} vs flat: {} [{}], {}×{} ranks ({} rack{}), N={n}, {}µs {} delay ==",
-        ExecutionModel::HierDca.label(levels),
+        label(ExecutionModel::HierDca),
         app.name(),
         level_names.join(" ▸ "),
         nodes,
@@ -476,6 +546,10 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             results.push((model, None));
             continue;
         }
+        let mut model_hier = hier;
+        if model != ExecutionModel::HierDca {
+            model_hier.adaptive = Default::default();
+        }
         let cfg = DesConfig {
             sched_path: sched_path_of(flags)?,
             record_assignments: true,
@@ -489,12 +563,12 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             cluster: cluster.clone(),
             cost: cost.clone(),
             pe_speed: vec![],
-            hier,
+            hier: model_hier,
         };
         results.push((model, Some(simulate(&cfg)?)));
     }
     // The model column fits the longest (possibly depth-annotated) label.
-    let mw = results.iter().map(|(m, _)| m.label(levels).len()).max().unwrap_or(10).max(10);
+    let mw = results.iter().map(|(m, _)| label(*m).len()).max().unwrap_or(10).max(10);
     println!(
         "{:<mw$} {:>12} {:>9} {:>11} {:>14}",
         "model", "T_par[s]", "chunks", "messages", "rank0 busy[s]"
@@ -503,13 +577,26 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         match r {
             Some(r) => println!(
                 "{:<mw$} {:>12.3} {:>9} {:>11} {:>14.3}",
-                model.label(levels),
+                label(*model),
                 r.t_par(),
                 r.stats.chunks,
                 r.stats.messages,
                 r.rank0_service_busy
             ),
-            None => println!("{:<mw$} {:>12}", model.label(levels), "n/a (AF)"),
+            None => println!("{:<mw$} {:>12}", label(*model), "n/a (AF)"),
+        }
+    }
+    if hier.adaptive.enabled {
+        let switches = results
+            .iter()
+            .find(|(m, _)| *m == ExecutionModel::HierDca)
+            .and_then(|(_, r)| r.as_ref())
+            .map(|r| r.switch_events.as_slice())
+            .unwrap_or_default();
+        if switches.is_empty() {
+            println!("adaptive switches = 0");
+        } else {
+            print!("{}", dca_dls::report::render_switch_events(switches));
         }
     }
     if let Some(path) = flags.get("json") {
@@ -519,8 +606,12 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 .filter_map(|(m, r)| r.as_ref().map(|r| (m, r)))
                 .map(|(m, r)| {
                     Json::obj()
-                        .field("model", m.label(levels))
+                        .field("model", label(*m))
                         .field("levels", levels)
+                        .field(
+                            "adaptive",
+                            hier.adaptive.enabled && *m == ExecutionModel::HierDca,
+                        )
                         .field("technique", tech)
                         .field(
                             "level_techniques",
@@ -547,6 +638,11 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                         .field("messages_intra_node", r.intra_node_messages)
                         .field("messages_inter_node", r.inter_node_messages)
                         .field("messages_per_level", r.level_messages.clone())
+                        .field("switches", r.switch_events.len() as u64)
+                        .field(
+                            "switch_events",
+                            dca_dls::report::json::switch_events_json(&r.switch_events),
+                        )
                 })
                 .collect(),
         );
@@ -602,6 +698,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             cfg.hier = cfg.hier.with_watermark((workers / cfg.nodes.max(1)) as u64);
         }
     }
+    cfg.hier = apply_adaptive_flags(cfg.hier, flags)?;
     // Flat engines are depth-1 trees by definition (root ↔ ranks) — keeps
     // the exported `levels` consistent with their one-entry per-level split.
     let levels = if model == ExecutionModel::HierDca { cfg.hier.depth() as u32 } else { 1 };
@@ -612,7 +709,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         app.name(),
         if pjrt { "PJRT artifacts" } else { "native" },
         tech.name(),
-        model.label(levels),
+        model.label_adaptive(levels, cfg.hier.adaptive.enabled),
         cfg.nodes
     );
     println!("wall = {:.3}s", t0.elapsed().as_secs_f64());
@@ -627,6 +724,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             model,
             cfg.nodes,
             levels,
+            cfg.hier.adaptive.enabled,
             n,
             &r,
         );
@@ -638,6 +736,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 
 fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     reject_sched_path_flags(flags, "sweep-breakafter")?;
+    reject_adaptive_flags(flags, "sweep-breakafter")?;
     let app = app_of(flags);
     let tech = tech_of(flags)?;
     let cost = app.cost_model(0xF1605, 2_000);
@@ -673,10 +772,13 @@ fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    reject_sched_path_flags(flags, "select")?;
     let app = app_of(flags);
     let tech = outer_tech_of(flags)?;
-    let hier = hier_of(flags)?;
+    let hier = apply_adaptive_flags(hier_of(flags)?, flags)?;
+    // PR 4 wired --lockfree/--sched-path through `hier`/`run` only; the
+    // selector probes each candidate on the requested grant path now, with
+    // the same invalid-value error handling.
+    let sched_path = sched_path_of(flags)?;
     let levels = hier.depth() as u32;
     let delay = get(flags, "delay-us", 0.0f64) * 1e-6;
     let cluster = apply_rack_flags(ClusterConfig::minihpc(), flags)?;
@@ -688,18 +790,23 @@ fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         &cost,
         InjectedDelay::calculation_only(delay),
         hier,
+        sched_path,
     )?;
     println!(
-        "{} {} delay={}µs — predicted T_par on a {:.0}% prefix:",
+        "{} {} delay={}µs sched-path={} — predicted T_par on a {:.0}% prefix:",
         app.name(),
         tech.name(),
         delay * 1e6,
+        sched_path.name(),
         s.prefix_fraction * 100.0
     );
-    let mw = s.predictions.iter().map(|(m, _)| m.label(levels).len()).max().unwrap_or(8).max(8);
+    let label = |m: ExecutionModel| {
+        m.label_adaptive(levels, hier.adaptive.enabled && m == ExecutionModel::HierDca)
+    };
+    let mw = s.predictions.iter().map(|(m, _)| label(*m).len()).max().unwrap_or(8).max(8);
     for (m, t) in &s.predictions {
         let mark = if *m == s.model { "  ← selected" } else { "" };
-        println!("  {:<mw$} {t:.3}s{mark}", m.label(levels));
+        println!("  {:<mw$} {t:.3}s{mark}", label(*m));
     }
     Ok(())
 }

@@ -131,24 +131,45 @@ impl Json {
     }
 }
 
+/// One adaptive technique-slot rebind as a JSON object — the switch-event
+/// trace entry shared by the DES and threaded exports.
+pub fn switch_event_json(e: &crate::sched::adaptive::SwitchEvent) -> Json {
+    Json::obj()
+        .field("at_s", e.at_s)
+        .field("level", e.level)
+        .field("master", e.master)
+        .field("from", e.from)
+        .field("to", e.to)
+        .field("predicted_ratio", e.predicted_ratio)
+}
+
+/// The switch-event trace as a JSON array.
+pub fn switch_events_json(events: &[crate::sched::adaptive::SwitchEvent]) -> Json {
+    Json::Arr(events.iter().map(switch_event_json).collect())
+}
+
 /// Export one threaded-engine run (any model, including the N-level hier
 /// engine) for external plotting — the same fields the DES export carries,
 /// plus the two-tier and per-level message splits. `levels` is the
-/// scheduling-tree depth of hierarchical runs (drives the model label).
+/// scheduling-tree depth of hierarchical runs; `adaptive` marks
+/// controller-driven runs (both drive the model label), whose switch-event
+/// trace is exported alongside.
 pub fn run_result_json(
     app: &str,
     technique: crate::techniques::TechniqueKind,
     model: crate::config::ExecutionModel,
     nodes: u32,
     levels: u32,
+    adaptive: bool,
     n: u64,
     r: &crate::coordinator::RunResult,
 ) -> Json {
     Json::obj()
         .field("app", app)
         .field("technique", technique)
-        .field("model", model.label(levels))
+        .field("model", model.label_adaptive(levels, adaptive))
         .field("levels", levels)
+        .field("adaptive", adaptive)
         .field("workers", r.per_rank.len() as u64)
         .field("nodes", nodes)
         .field("n", n)
@@ -160,6 +181,8 @@ pub fn run_result_json(
         .field("messages_per_level", r.level_messages.clone())
         .field("sched_wait", r.stats.sched_overhead)
         .field("imbalance", r.stats.imbalance)
+        .field("switches", r.switch_events.len() as u64)
+        .field("switch_events", switch_events_json(&r.switch_events))
         .field("checksum", format!("{:#x}", r.checksum))
 }
 
@@ -424,6 +447,7 @@ mod tests {
             inter_node_messages: 8,
             level_messages: vec![8, 28],
             fast_grants: 0,
+            switch_events: vec![],
         };
         let j = run_result_json(
             "PSIA",
@@ -431,6 +455,7 @@ mod tests {
             crate::config::ExecutionModel::HierDca,
             2,
             2,
+            false,
             4096,
             &r,
         );
@@ -454,10 +479,58 @@ mod tests {
             crate::config::ExecutionModel::HierDca,
             2,
             3,
+            false,
             4096,
             &r,
         );
         let parsed3 = Json::parse(&j3.render()).unwrap();
         assert_eq!(parsed3.get("model").unwrap().as_str(), Some("HIER-DCA(3)"));
+    }
+
+    #[test]
+    fn adaptive_export_labels_and_traces_switches() {
+        use crate::coordinator::{RankSummary, RunResult};
+        use crate::metrics::LoopStats;
+        use crate::sched::adaptive::SwitchEvent;
+        use crate::techniques::TechniqueKind;
+        let r = RunResult {
+            stats: LoopStats::from_finish_times(&[1.0], 3, 0.0, 12),
+            per_rank: vec![RankSummary::default()],
+            checksum: 0,
+            intra_node_messages: 12,
+            inter_node_messages: 0,
+            level_messages: vec![12],
+            fast_grants: 0,
+            switch_events: vec![SwitchEvent {
+                at_s: 0.25,
+                level: 1,
+                master: 3,
+                from: TechniqueKind::Ss,
+                to: TechniqueKind::Fac2,
+                predicted_ratio: 0.4,
+            }],
+        };
+        let j = run_result_json(
+            "PSIA",
+            TechniqueKind::Fac2,
+            crate::config::ExecutionModel::HierDca,
+            2,
+            2,
+            true,
+            1024,
+            &r,
+        );
+        let parsed = Json::parse(&j.render()).unwrap();
+        assert_eq!(parsed.get("model").unwrap().as_str(), Some("HIER-DCA+ADAPT"));
+        assert!(matches!(parsed.get("adaptive"), Some(Json::Bool(true))));
+        assert_eq!(parsed.get("switches").unwrap().as_u64(), Some(1));
+        let Json::Arr(events) = parsed.get("switch_events").unwrap() else {
+            panic!("switch_events must be an array")
+        };
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("from").unwrap().as_str(), Some("SS"));
+        assert_eq!(events[0].get("to").unwrap().as_str(), Some("FAC"));
+        assert_eq!(events[0].get("level").unwrap().as_u64(), Some(1));
+        assert_eq!(events[0].get("master").unwrap().as_u64(), Some(3));
     }
 }

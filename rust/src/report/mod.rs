@@ -105,7 +105,7 @@ pub fn render_figure(title: &str, rows: &[FigureRow], hier_levels: u32) -> Strin
 /// shared across all four models, with the two-tier message split the hier
 /// engine produces (flat engines report all traffic as intra-node).
 pub fn render_run_summary(r: &crate::coordinator::RunResult) -> String {
-    format!(
+    let mut out = format!(
         "T_par = {:.3}s   chunks = {}   messages = {} (intra-node {}, inter-node {})   \
          sched-wait = {:.3}s   imbalance = {:.4}   checksum = {:#x}\n",
         r.stats.t_par,
@@ -116,7 +116,35 @@ pub fn render_run_summary(r: &crate::coordinator::RunResult) -> String {
         r.stats.sched_overhead,
         r.stats.imbalance,
         r.checksum,
-    )
+    );
+    out.push_str(&render_switch_events(&r.switch_events));
+    out
+}
+
+/// Render an adaptive switch-event trace (empty string for static runs) —
+/// the one definition behind the `run` summary and the `simulate`/`hier`
+/// console reports.
+pub fn render_switch_events(events: &[crate::sched::adaptive::SwitchEvent]) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    if events.is_empty() {
+        return out;
+    }
+    writeln!(out, "adaptive switches = {}:", events.len()).unwrap();
+    for e in events {
+        writeln!(
+            out,
+            "  t={:.4}s level {} master {}: {} → {} (predicted ratio {:.3})",
+            e.at_s,
+            e.level,
+            e.master,
+            e.from.name(),
+            e.to.name(),
+            e.predicted_ratio
+        )
+        .unwrap();
+    }
+    out
 }
 
 /// Render the Table 2 layout (chunk sequences per technique).
@@ -246,10 +274,26 @@ mod tests {
             inter_node_messages: 12,
             level_messages: vec![12, 40],
             fast_grants: 0,
+            switch_events: vec![],
         };
         let s = render_run_summary(&r);
         assert!(s.contains("intra-node 40"), "{s}");
         assert!(s.contains("inter-node 12"), "{s}");
         assert!(s.contains("0xbeef"), "{s}");
+        assert!(!s.contains("adaptive switches"), "static runs stay clean: {s}");
+        let adaptive = RunResult {
+            switch_events: vec![crate::sched::adaptive::SwitchEvent {
+                at_s: 0.5,
+                level: 1,
+                master: 2,
+                from: TechniqueKind::Ss,
+                to: TechniqueKind::Gss,
+                predicted_ratio: 0.3,
+            }],
+            ..r
+        };
+        let s = render_run_summary(&adaptive);
+        assert!(s.contains("adaptive switches = 1"), "{s}");
+        assert!(s.contains("SS → GSS"), "{s}");
     }
 }

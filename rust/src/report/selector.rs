@@ -8,7 +8,7 @@
 //! it cheap) for every candidate execution model and returns the model with
 //! the lowest predicted `T_loop^par`.
 
-use crate::config::{ClusterConfig, ExecutionModel, HierParams};
+use crate::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use crate::des::{simulate, DesConfig};
 use crate::substrate::delay::InjectedDelay;
 use crate::techniques::{LoopParams, TechniqueKind};
@@ -36,6 +36,7 @@ pub fn select_approach(
     cost: &IterationCost,
     delay: InjectedDelay,
     hier: HierParams,
+    sched_path: SchedPath,
     candidates: &[ExecutionModel],
     prefix_fraction: f64,
 ) -> anyhow::Result<Selection> {
@@ -49,8 +50,18 @@ pub fn select_approach(
         if model == ExecutionModel::HierDca && !crate::hier::hier_feasible(cluster, &hier) {
             continue;
         }
+        // Adaptive selection only exists on the DCA protocols; the other
+        // candidates are probed statically rather than rejected (and the
+        // flat DCA adaptive restrictions — AF start, pure lock-free — fall
+        // back to a static probe the same way).
+        let mut hier = hier;
+        let flat_adaptive_ok = technique != TechniqueKind::Af && sched_path != SchedPath::LockFree;
+        if !(model == ExecutionModel::HierDca || (model == ExecutionModel::Dca && flat_adaptive_ok))
+        {
+            hier.adaptive = Default::default();
+        }
         let cfg = DesConfig {
-            sched_path: Default::default(),
+            sched_path,
             record_assignments: true,
             params: LoopParams::new(prefix_n.min(n), cluster.total_ranks()),
             technique,
@@ -87,6 +98,7 @@ pub fn select_cca_or_dca(
         cost,
         delay,
         HierParams::default(),
+        SchedPath::default(),
         &[ExecutionModel::Cca, ExecutionModel::Dca],
         0.15,
     )
@@ -102,8 +114,19 @@ pub fn select_model(
     cost: &IterationCost,
     delay: InjectedDelay,
     hier: HierParams,
+    sched_path: SchedPath,
 ) -> anyhow::Result<Selection> {
-    select_approach(technique, n, cluster, cost, delay, hier, &ExecutionModel::ALL, 0.15)
+    select_approach(
+        technique,
+        n,
+        cluster,
+        cost,
+        delay,
+        hier,
+        sched_path,
+        &ExecutionModel::ALL,
+        0.15,
+    )
 }
 
 #[cfg(test)]
@@ -160,6 +183,7 @@ mod tests {
             &IterationCost::Constant(1e-4),
             InjectedDelay::none(),
             HierParams::default(),
+            SchedPath::default(),
             &[ExecutionModel::Dca, ExecutionModel::DcaRma],
             0.2,
         )
@@ -177,6 +201,7 @@ mod tests {
             &IterationCost::psia_table3(3),
             InjectedDelay::none(),
             HierParams::default(),
+            SchedPath::default(),
             &[ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma],
             0.1,
         )
@@ -199,6 +224,7 @@ mod tests {
             &IterationCost::Constant(1e-4),
             InjectedDelay::none(),
             HierParams::default(),
+            SchedPath::default(),
         )
         .unwrap();
         assert_eq!(s.predictions.len(), 4);
@@ -233,6 +259,7 @@ mod tests {
             &IterationCost::Constant(1e-4),
             InjectedDelay::none(),
             hier,
+            SchedPath::default(),
         )
         .unwrap();
         assert_eq!(s.predictions.len(), 4);
@@ -249,6 +276,7 @@ mod tests {
             &IterationCost::Constant(1e-4),
             InjectedDelay::none(),
             bad,
+            SchedPath::default(),
         )
         .unwrap();
         assert_eq!(s.predictions.len(), 3);
@@ -270,6 +298,7 @@ mod tests {
             &IterationCost::Constant(0.0005),
             InjectedDelay::assignment_only(100e-6),
             HierParams::default(),
+            SchedPath::default(),
         )
         .unwrap();
         let hier = s

@@ -1,0 +1,510 @@
+//! SimAS-style adaptive per-subtree technique selection (arXiv 1912.02050's
+//! online-selection idea, driven by the lightweight runtime measurements of
+//! arXiv 2007.07977 instead of a nested simulation).
+//!
+//! Every subtree master (and the flat DCA coordinator) owns one
+//! [`AdaptiveController`]. The controller maintains **per-subtree EWMAs**
+//! of what the master can actually observe on either substrate:
+//!
+//! * `µ̂` — mean per-iteration execution time, from the per-chunk
+//!   performance reports its children already piggyback on scheduling
+//!   requests (the same channel AF uses);
+//! * `σ̂` — dispersion of those per-iteration rates (the imbalance risk of
+//!   a large tail chunk);
+//! * `ô` — per-grant scheduling overhead: the gap between a child's
+//!   consecutive chunk completions minus the chunk's execution time. This
+//!   is the full round trip *including the injected calculation delay* —
+//!   exactly the quantity that decides whether fine-grained techniques (SS)
+//!   drown in overhead under slowdown.
+//!
+//! At the probe cadence (every `probe_interval` grants) the controller runs
+//! a **closed-form probe** over the candidate set: each candidate's chunk
+//! count `C` and tail-chunk size `K_tail` are read off its precomputed
+//! [`ChunkTable`] prefix sums (memoized per bucketed length — no nested DES,
+//! no schedule materialization kept around), and plugged into the cost
+//! model
+//!
+//! ```text
+//! t̂(tech) = (L·µ̂ + C·ô) / f  +  (1 − 1/f) · K_tail · (µ̂ + σ̂)
+//! ```
+//!
+//! — parallel work plus per-chunk overhead spread over the `f` children,
+//! plus a straggler term for the schedule's final chunk (executed by one
+//! child while its `f − 1` peers idle, padded by the observed dispersion).
+//! The model is deliberately coarse: it only has to *rank* candidates, and
+//! every input is an EWMA that tracks the perturbation the run is actually
+//! experiencing. A switch is taken only when the best candidate is
+//! predicted to beat the current binding by more than
+//! [`PROBE_HYSTERESIS`], so a single-candidate set (or a probe that keeps
+//! confirming the current technique) never perturbs the schedule at all —
+//! the property the bit-identical regression tests pin.
+//!
+//! Probes are charged no virtual time on the DES: the real cost is a few
+//! table walks amortized over `probe_interval` grants, off the grant
+//! critical path (the threaded engine simply pays it inline).
+//!
+//! AF can never be switched *to* — it has no closed form to probe
+//! ([`crate::techniques::CandidateSet`] cannot represent it) — but a run
+//! *starting* on AF is switched away from as soon as the EWMAs are primed
+//! (its unprobeable current binding scores `+∞`).
+
+use std::collections::HashMap;
+
+use crate::config::AdaptiveParams;
+use crate::techniques::{ChunkTable, LoopParams, TechniqueKind};
+
+/// Relative margin a candidate must beat the current binding by before the
+/// controller switches — hysteresis against estimate noise and thrashing.
+pub const PROBE_HYSTERESIS: f64 = 0.05;
+
+/// Step-count budget per probed table: an SS-like schedule beyond this is
+/// scored unviable (`+∞`) instead of materialized — it could never win a
+/// probe it takes that many grants to execute.
+pub const PROBE_STEP_CAP: u64 = 1 << 20;
+
+/// EWMA weight of the newest observation sample.
+pub const OBS_EWMA_ALPHA: f64 = 0.25;
+
+/// One technique-slot rebind, as recorded in run results and JSON exports
+/// (the switch-event trace).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwitchEvent {
+    /// When the rebind was decided (virtual seconds on the DES, wall-clock
+    /// seconds since the run barrier on the threaded engine).
+    pub at_s: f64,
+    /// Protocol level of the rebound ledger (0 = flat DCA coordinator).
+    pub level: u32,
+    /// Master index within the level (0 for the flat coordinator).
+    pub master: u32,
+    pub from: TechniqueKind,
+    pub to: TechniqueKind,
+    /// Predicted `t̂(to) / t̂(from)` at switch time (< 1 − hysteresis; 0.0
+    /// when the current binding was unprobeable, i.e. AF).
+    pub predicted_ratio: f64,
+}
+
+/// Scalar EWMA (first sample taken verbatim).
+#[derive(Debug, Clone, Copy, Default)]
+struct Ewma {
+    v: f64,
+    primed: bool,
+}
+
+impl Ewma {
+    fn observe(&mut self, x: f64) {
+        if self.primed {
+            self.v = OBS_EWMA_ALPHA * x + (1.0 - OBS_EWMA_ALPHA) * self.v;
+        } else {
+            self.v = x;
+            self.primed = true;
+        }
+    }
+
+    fn value(&self) -> Option<f64> {
+        self.primed.then_some(self.v)
+    }
+}
+
+/// The probe's schedule statistics for one `(technique, length)` binding:
+/// chunk count and tail-chunk size, read off the table's prefix sums.
+/// `None` = unviable (no closed form, or over the step cap).
+type ScheduleStats = Option<(u64, u64)>;
+
+/// Per-subtree adaptive controller — see the module docs.
+#[derive(Debug)]
+pub struct AdaptiveController {
+    base: LoopParams,
+    fanout: u32,
+    candidates: Vec<TechniqueKind>,
+    probe_interval: u32,
+    grants_since_probe: u32,
+    current: TechniqueKind,
+    /// EWMA of per-iteration execution time (s/iter).
+    mu: Ewma,
+    /// EWMA of squared deviation of per-iteration rates around `µ̂`.
+    var: Ewma,
+    /// EWMA of per-grant scheduling overhead (s/chunk).
+    overhead: Ewma,
+    /// Per-child last observation timestamp (s) for the overhead gap.
+    last_seen_s: Vec<Option<f64>>,
+    /// Probe-stat memo, keyed by `(kind, bucketed length)`.
+    memo: HashMap<(TechniqueKind, u64), ScheduleStats>,
+    switches: u32,
+}
+
+/// Round a probe length down to a power of two so the memo stays
+/// logarithmic in the lengths seen (flat probes shrink every time).
+fn bucket_len(len: u64) -> u64 {
+    let len = len.max(1);
+    1u64 << (63 - len.leading_zeros() as u64)
+}
+
+impl AdaptiveController {
+    /// Controller for a subtree whose ledger subdivides chunks among
+    /// `fanout` children, currently bound to `initial`. `fast_only`
+    /// restricts the candidates to fast-path techniques (the pure
+    /// `SchedPath::LockFree` rule — rebinding must never force a demotion).
+    pub fn new(
+        initial: TechniqueKind,
+        base: &LoopParams,
+        fanout: u32,
+        params: AdaptiveParams,
+        fast_only: bool,
+    ) -> Self {
+        let set = if fast_only {
+            params.candidates().fast_path_only()
+        } else {
+            params.candidates()
+        };
+        AdaptiveController {
+            base: base.clone(),
+            fanout: fanout.max(1),
+            candidates: set.iter().collect(),
+            probe_interval: params.probe_interval().max(1),
+            grants_since_probe: 0,
+            current: initial,
+            mu: Ewma::default(),
+            var: Ewma::default(),
+            overhead: Ewma::default(),
+            last_seen_s: vec![None; fanout.max(1) as usize],
+            memo: HashMap::new(),
+            switches: 0,
+        }
+    }
+
+    /// The technique the controller currently considers bound.
+    pub fn current(&self) -> TechniqueKind {
+        self.current
+    }
+
+    /// Rebinds performed so far.
+    pub fn switch_count(&self) -> u32 {
+        self.switches
+    }
+
+    /// Fold in one finished chunk observed from `child` (local index) at
+    /// time `now_s`: `iters` iterations took `elapsed_s` of pure execution.
+    /// The gap since the child's previous observation, minus the execution
+    /// time, is the per-grant overhead sample.
+    pub fn observe_chunk(&mut self, child: u32, iters: u64, elapsed_s: f64, now_s: f64) {
+        if iters == 0 {
+            return;
+        }
+        self.observe_exec(iters, elapsed_s);
+        let c = child as usize;
+        if c >= self.last_seen_s.len() {
+            self.last_seen_s.resize(c + 1, None);
+        }
+        if let Some(prev) = self.last_seen_s[c] {
+            let gap = now_s - prev;
+            self.overhead.observe((gap - elapsed_s).max(0.0));
+        }
+        self.last_seen_s[c] = Some(now_s);
+    }
+
+    /// µ̂/σ̂-only observation, for samples whose round-trip gap cannot be
+    /// attributed to single grants — the threaded lock-free leaf's
+    /// aggregated reports (a slow-path `Get` summarizes every CAS-granted
+    /// chunk since the previous one), and the master's own executions.
+    /// Feeding these through [`Self::observe_chunk`] would poison the
+    /// per-grant overhead EWMA with whole-window gaps.
+    pub fn observe_exec(&mut self, iters: u64, elapsed_s: f64) {
+        if iters == 0 {
+            return;
+        }
+        let rate = elapsed_s / iters as f64;
+        if let Some(mu) = self.mu.value() {
+            let dev = rate - mu;
+            self.var.observe(dev * dev);
+        }
+        self.mu.observe(rate);
+    }
+
+    /// Count one grant served from the subtree's ledger; `true` when a
+    /// probe is due.
+    pub fn tick_grant(&mut self) -> bool {
+        self.grants_since_probe += 1;
+        if self.grants_since_probe >= self.probe_interval {
+            self.grants_since_probe = 0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Predicted completion time of a `len`-iteration chunk under `kind`
+    /// with per-grant overhead `o` — the closed-form cost model of the
+    /// module docs. `None` until `µ̂` is primed; `+∞`-equivalent (`None`)
+    /// for unviable schedules.
+    fn estimate(&mut self, kind: TechniqueKind, len: u64, o: f64) -> Option<f64> {
+        let mu = self.mu.value()?;
+        let lenb = bucket_len(len);
+        let stats = *self
+            .memo
+            .entry((kind, lenb))
+            .or_insert_with(|| schedule_stats(kind, &self.base, self.fanout, lenb));
+        let (chunks, k_tail) = stats?;
+        let f = self.fanout as f64;
+        let sigma = self.var.value().map(f64::sqrt).unwrap_or(0.0);
+        let l = lenb as f64;
+        Some((l * mu + chunks as f64 * o) / f + (1.0 - 1.0 / f) * k_tail as f64 * (mu + sigma))
+    }
+
+    /// Run one probe over `remaining` unassigned iterations, with the
+    /// **measured** per-grant overhead EWMA. Returns the switch to take —
+    /// `(new kind, predicted ratio)` — or `None` when the current binding
+    /// survives (including: measurements not primed yet, no viable
+    /// candidate, or no candidate beating the hysteresis margin). On
+    /// `Some`, the controller's notion of the current binding is already
+    /// updated; the caller performs the actual ledger rebind.
+    pub fn probe(&mut self, remaining: u64) -> Option<(TechniqueKind, f64)> {
+        let o = self.overhead.value()?;
+        self.probe_at(remaining, o)
+    }
+
+    /// [`Self::probe`] for a subtree currently granting over the lock-free
+    /// CAS word: the per-grant cost there is a single atomic op, charged as
+    /// **zero** (the threaded master cannot observe per-CAS gaps, and any
+    /// aggregated estimate would be a whole-window artifact — see
+    /// [`Self::observe_exec`]). Probes then need only `µ̂` and rank the
+    /// candidates by work + tail imbalance, which is exactly what is left
+    /// to optimize on a path with no exchange to amortize.
+    pub fn probe_on_fast_path(&mut self, remaining: u64) -> Option<(TechniqueKind, f64)> {
+        self.probe_at(remaining, 0.0)
+    }
+
+    fn probe_at(&mut self, remaining: u64, o: f64) -> Option<(TechniqueKind, f64)> {
+        if remaining == 0 || self.mu.value().is_none() {
+            return None;
+        }
+        let current = self.current;
+        let cur_est = self.estimate(current, remaining, o);
+        let mut best: Option<(TechniqueKind, f64)> = None;
+        for kind in self.candidates.clone() {
+            if kind == current {
+                continue;
+            }
+            if let Some(est) = self.estimate(kind, remaining, o) {
+                // Strict `<` keeps ties on the earliest candidate in ALL
+                // order — deterministic.
+                if best.is_none_or(|(_, b)| est < b) {
+                    best = Some((kind, est));
+                }
+            }
+        }
+        let (to, best_est) = best?;
+        let (take, ratio) = match cur_est {
+            // An unprobeable current binding (AF) loses to any viable
+            // candidate the moment measurements exist.
+            None => (true, 0.0),
+            Some(cur) => (best_est < cur * (1.0 - PROBE_HYSTERESIS), best_est / cur),
+        };
+        if !take {
+            return None;
+        }
+        self.current = to;
+        self.switches += 1;
+        Some((to, ratio))
+    }
+}
+
+/// `(chunk count, tail-chunk size)` of `kind` bound to a `len`-iteration
+/// chunk subdivided among `fanout` requesters — read off the precomputed
+/// [`ChunkTable`] prefix sums; `None` when `kind` has no closed form or the
+/// schedule blows the probe step cap.
+fn schedule_stats(
+    kind: TechniqueKind,
+    base: &LoopParams,
+    fanout: u32,
+    len: u64,
+) -> ScheduleStats {
+    let params = crate::hier::protocol::with_np(base, len, fanout);
+    let table = ChunkTable::build_capped(kind, &params, PROBE_STEP_CAP)?;
+    Some((table.steps(), table.last_chunk()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AdaptiveParams;
+    use crate::techniques::CandidateSet;
+
+    fn params(interval: u32, cands: &str) -> AdaptiveParams {
+        AdaptiveParams {
+            enabled: true,
+            probe_interval: interval,
+            candidates: CandidateSet::parse(cands).unwrap(),
+        }
+    }
+
+    fn ctl(initial: TechniqueKind, cands: &str) -> AdaptiveController {
+        AdaptiveController::new(
+            initial,
+            &LoopParams::new(100_000, 64),
+            16,
+            params(1, cands),
+            false,
+        )
+    }
+
+    /// Prime the EWMAs with a uniform workload: per-iteration cost `mu`,
+    /// per-grant overhead `o` (each child reports chunks `elapsed + o`
+    /// apart, so the gap-minus-exec overhead sample is exactly `o`).
+    fn prime(c: &mut AdaptiveController, mu: f64, o: f64) {
+        for round in 0..4u32 {
+            for child in 0..4u32 {
+                let iters = 32u64;
+                let elapsed = iters as f64 * mu;
+                let now = (round + 1) as f64 * (elapsed + o) + child as f64 * 1e-9;
+                c.observe_chunk(child, iters, elapsed, now);
+            }
+        }
+    }
+
+    #[test]
+    fn probe_needs_primed_measurements() {
+        let mut c = ctl(TechniqueKind::Ss, "ss,fac");
+        assert!(c.tick_grant());
+        assert_eq!(c.probe(10_000), None, "no µ̂/ô yet ⇒ no switch");
+        assert_eq!(c.current(), TechniqueKind::Ss);
+    }
+
+    #[test]
+    fn heavy_overhead_switches_away_from_ss() {
+        let mut c = ctl(TechniqueKind::Ss, "ss,gss,fac");
+        // 10 µs iterations, 100 µs per-grant overhead: SS pays the overhead
+        // once per iteration — a batched candidate must win the probe.
+        prime(&mut c, 1e-5, 1e-4);
+        let (to, ratio) = c.probe(8_192).expect("must switch");
+        assert_ne!(to, TechniqueKind::Ss);
+        assert!(ratio < 1.0 - PROBE_HYSTERESIS, "ratio {ratio}");
+        assert_eq!(c.current(), to);
+        assert_eq!(c.switch_count(), 1);
+        // Re-probing from the better binding never thrashes back to SS.
+        if let Some((again, _)) = c.probe(8_192) {
+            assert_ne!(again, TechniqueKind::Ss, "switched back into the overhead trap");
+        }
+    }
+
+    #[test]
+    fn single_candidate_set_never_switches() {
+        let mut c = ctl(TechniqueKind::Gss, "gss");
+        prime(&mut c, 1e-5, 1e-3);
+        assert_eq!(c.probe(8_192), None, "only candidate == current");
+        assert_eq!(c.switch_count(), 0);
+    }
+
+    #[test]
+    fn hysteresis_holds_near_parity() {
+        // Candidates whose estimates are close (GSS vs FAC under mild
+        // overhead) must not flip the binding back and forth.
+        let mut c = ctl(TechniqueKind::Fac2, "gss,fac");
+        prime(&mut c, 1e-5, 1e-7);
+        let first = c.probe(8_192);
+        if let Some((to, _)) = first {
+            // If it switched once, the reverse probe must not undo it.
+            assert_eq!(c.probe(8_192), None, "thrash after switch to {to}");
+        }
+    }
+
+    #[test]
+    fn unprobeable_current_is_replaced_once_measured() {
+        let mut c = ctl(TechniqueKind::Af, "gss,fac");
+        assert_eq!(c.probe(8_192), None, "unprimed");
+        prime(&mut c, 1e-5, 1e-5);
+        let (to, ratio) = c.probe(8_192).expect("AF must be switched away from");
+        assert!(to == TechniqueKind::Gss || to == TechniqueKind::Fac2);
+        assert_eq!(ratio, 0.0, "AF's estimate is unprobeable");
+    }
+
+    #[test]
+    fn fast_only_strips_tap() {
+        let c = AdaptiveController::new(
+            TechniqueKind::Ss,
+            &LoopParams::new(10_000, 16),
+            4,
+            params(4, "ss,tap,gss"),
+            true,
+        );
+        assert!(!c.candidates.contains(&TechniqueKind::Tap));
+        assert!(c.candidates.contains(&TechniqueKind::Ss));
+        assert!(c.candidates.contains(&TechniqueKind::Gss));
+    }
+
+    /// The CAS-path probe variant: runs on µ̂ alone (exec-only
+    /// observations — no gaps, so the measured-overhead probe stays
+    /// silent), charges zero per-grant overhead, and therefore never flees
+    /// a fine-grained technique for overhead reasons — only tail imbalance
+    /// can drive a switch.
+    #[test]
+    fn fast_path_probe_runs_on_exec_observations_alone() {
+        let mut c = ctl(TechniqueKind::Static, "static,ss,tap");
+        // Jittered per-iteration rates: σ̂ > 0 primes the imbalance term.
+        for (i, rate) in [1e-5, 3e-5, 1e-5, 4e-5, 2e-5, 3e-5].iter().enumerate() {
+            c.observe_exec(32, 32.0 * rate * ((i % 2) as f64 + 1.0));
+        }
+        assert_eq!(c.probe(8_192), None, "no gap samples ⇒ the measured probe waits");
+        // STATIC's huge tail chunk loses to a small-tail candidate even at
+        // zero overhead.
+        let (to, _) = c.probe_on_fast_path(8_192).expect("tail imbalance drives the switch");
+        assert_ne!(to, TechniqueKind::Static);
+        // From SS (tail = 1), zero overhead gives nothing to improve.
+        let mut c = ctl(TechniqueKind::Ss, "static,ss,tap");
+        for _ in 0..4 {
+            c.observe_exec(32, 32.0 * 1e-5);
+        }
+        assert_eq!(c.probe_on_fast_path(8_192), None, "SS is tail-optimal at ô = 0");
+    }
+
+    #[test]
+    fn tick_grant_fires_every_interval() {
+        let mut c = AdaptiveController::new(
+            TechniqueKind::Ss,
+            &LoopParams::new(1_000, 8),
+            4,
+            params(3, "ss,gss"),
+            false,
+        );
+        let fired: Vec<bool> = (0..7).map(|_| c.tick_grant()).collect();
+        assert_eq!(fired, vec![false, false, true, false, false, true, false]);
+    }
+
+    #[test]
+    fn bucketing_keeps_the_memo_small_and_deterministic() {
+        assert_eq!(bucket_len(1), 1);
+        assert_eq!(bucket_len(0), 1);
+        assert_eq!(bucket_len(1023), 512);
+        assert_eq!(bucket_len(1024), 1024);
+        assert_eq!(bucket_len(1025), 1024);
+        let mut c = ctl(TechniqueKind::Ss, "ss,gss");
+        prime(&mut c, 1e-5, 1e-4);
+        for len in [4_000u64, 4_001, 4_095] {
+            c.probe(len);
+        }
+        // All three lengths share one bucket per kind (+ the Ss current).
+        assert!(c.memo.len() <= 4, "memo holds {} entries", c.memo.len());
+    }
+
+    #[test]
+    fn schedule_stats_match_the_chunk_table() {
+        let base = LoopParams::new(100_000, 64);
+        let (c, k_tail) =
+            schedule_stats(TechniqueKind::Ss, &base, 4, 500).expect("SS fits the cap");
+        assert_eq!((c, k_tail), (500, 1));
+        assert!(schedule_stats(TechniqueKind::Af, &base, 4, 500).is_none());
+        // Over-cap schedules are unviable rather than materialized.
+        assert!(schedule_stats(TechniqueKind::Ss, &base, 4, PROBE_STEP_CAP + 1).is_none());
+    }
+
+    /// Determinism: identical observation sequences produce identical
+    /// probe decisions.
+    #[test]
+    fn probe_is_deterministic() {
+        let run = || {
+            let mut c = ctl(TechniqueKind::Ss, "ss,gss,fac,tss");
+            prime(&mut c, 2e-5, 5e-5);
+            c.probe(10_000)
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -8,6 +8,8 @@
 //! two-phase [`WorkQueue::begin_step`]/[`WorkQueue::commit`] protocol; the
 //! RMA variant mirrors it with atomics in [`crate::substrate::rma`].
 
+pub mod adaptive;
+
 use crate::techniques::{LoopParams, Technique};
 
 

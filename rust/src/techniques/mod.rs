@@ -178,6 +178,98 @@ impl std::fmt::Display for TechniqueKind {
     }
 }
 
+/// A set of techniques, packed into a bitmask over [`TechniqueKind::ALL`] —
+/// the candidate set the adaptive controller probes when re-binding a
+/// subtree's [`crate::hier::protocol::NodeLedger`] technique slot. `Copy`
+/// (it rides inside [`crate::config::HierParams`]) and deterministic:
+/// [`CandidateSet::iter`] yields kinds in `ALL` order.
+///
+/// AF is not representable: the probe sizes candidates from their closed
+/// forms ([`ChunkTable`] prefix sums), and §4 proves AF has none — it can
+/// only ever be switched *away from*, never *to*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct CandidateSet(u16);
+
+impl CandidateSet {
+    /// The empty set (the config default — resolved to
+    /// [`Self::default_probe`] by `AdaptiveParams::candidates`).
+    pub const EMPTY: CandidateSet = CandidateSet(0);
+
+    fn bit(kind: TechniqueKind) -> u16 {
+        let idx = TechniqueKind::ALL
+            .iter()
+            .position(|k| *k == kind)
+            .expect("every kind is in ALL");
+        1 << idx
+    }
+
+    /// The default probe set: every technique eligible for the lock-free
+    /// fast path (closed form, not measurement-coupled) — the set a
+    /// `SchedPath::Auto` run can rebind through without ever demoting.
+    pub fn default_probe() -> Self {
+        let mut s = CandidateSet::EMPTY;
+        for k in TechniqueKind::ALL {
+            if k.supports_fast_path() {
+                s.0 |= Self::bit(k);
+            }
+        }
+        s
+    }
+
+    /// Insert `kind`. Errors for AF, which has no closed form to probe.
+    pub fn try_with(self, kind: TechniqueKind) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            kind.has_closed_form(),
+            "{kind} has no closed form and cannot be a probe candidate \
+             (the probe sizes candidates from their chunk tables)"
+        );
+        Ok(CandidateSet(self.0 | Self::bit(kind)))
+    }
+
+    pub fn contains(self, kind: TechniqueKind) -> bool {
+        self.0 & Self::bit(kind) != 0
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn len(self) -> usize {
+        self.0.count_ones() as usize
+    }
+
+    /// Intersect with the fast-path-eligible techniques (drops TAP) — the
+    /// restriction a pure `SchedPath::LockFree` run applies so rebinding
+    /// never has to demote the subtree.
+    pub fn fast_path_only(self) -> Self {
+        let mut s = CandidateSet::EMPTY;
+        for k in self.iter() {
+            if k.supports_fast_path() {
+                s.0 |= Self::bit(k);
+            }
+        }
+        s
+    }
+
+    /// Members in [`TechniqueKind::ALL`] order (deterministic).
+    pub fn iter(self) -> impl Iterator<Item = TechniqueKind> {
+        TechniqueKind::ALL.into_iter().filter(move |k| self.contains(*k))
+    }
+
+    /// Parse a comma-separated candidate list (`"ss,gss,fac"`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let mut out = CandidateSet::EMPTY;
+        for name in s.split(',') {
+            let name = name.trim();
+            let kind = TechniqueKind::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown candidate technique '{name}'"))?;
+            out = out.try_with(kind)?;
+        }
+        anyhow::ensure!(!out.is_empty(), "empty candidate set");
+        Ok(out)
+    }
+}
+
 /// Chunk-size pattern categories of Fig. 1.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Pattern {
@@ -480,6 +572,17 @@ impl ChunkTable {
         *self.bounds.last().expect("table is never empty")
     }
 
+    /// Size of the schedule's final chunk — the tail a straggler executes
+    /// while its peers idle; the adaptive probe's imbalance term
+    /// ([`crate::sched::adaptive`]) reads it straight off the prefix sums.
+    pub fn last_chunk(&self) -> u64 {
+        let m = self.bounds.len();
+        if m < 2 {
+            return 0;
+        }
+        self.bounds[m - 1] - self.bounds[m - 2]
+    }
+
     /// The chunk granted when the shared cursor sits at `start`:
     /// `(step, size)`, or `None` once the table is drained (`start = N`).
     ///
@@ -683,5 +786,47 @@ mod tests {
     #[should_panic(expected = "no closed form")]
     fn table_cache_rejects_af() {
         TableCache::new(TechniqueKind::Af, &LoopParams::new(100, 4), 4);
+    }
+
+    #[test]
+    fn candidate_set_roundtrips_and_rejects_af() {
+        let s = CandidateSet::parse("ss,gss,fac").unwrap();
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(TechniqueKind::Ss));
+        assert!(s.contains(TechniqueKind::Gss));
+        assert!(s.contains(TechniqueKind::Fac2));
+        assert!(!s.contains(TechniqueKind::Tss));
+        let kinds: Vec<TechniqueKind> = s.iter().collect();
+        // ALL order: SS before GSS before FAC.
+        assert_eq!(kinds, vec![TechniqueKind::Ss, TechniqueKind::Gss, TechniqueKind::Fac2]);
+        assert!(CandidateSet::parse("af").is_err(), "AF has no closed form to probe");
+        assert!(CandidateSet::parse("ss,nope").is_err());
+        assert!(CandidateSet::parse("").is_err());
+        assert!(CandidateSet::EMPTY.is_empty());
+        assert_eq!(CandidateSet::EMPTY.try_with(TechniqueKind::Af).err().map(|_| ()), Some(()));
+    }
+
+    #[test]
+    fn candidate_set_default_probe_is_the_fast_path_set() {
+        let s = CandidateSet::default_probe();
+        for k in TechniqueKind::ALL {
+            assert_eq!(s.contains(k), k.supports_fast_path(), "{k}");
+        }
+        // TAP parses into a custom set (closed form) but is stripped by the
+        // fast-path restriction.
+        let with_tap = CandidateSet::parse("ss,tap").unwrap();
+        assert!(with_tap.contains(TechniqueKind::Tap));
+        let stripped = with_tap.fast_path_only();
+        assert!(!stripped.contains(TechniqueKind::Tap));
+        assert!(stripped.contains(TechniqueKind::Ss));
+    }
+
+    #[test]
+    fn chunk_table_last_chunk_matches_schedule_tail() {
+        let params = LoopParams::new(1_000, 4);
+        let t = ChunkTable::build(TechniqueKind::Gss, &params).unwrap();
+        let tech = Technique::new(TechniqueKind::Gss, &params);
+        let schedule = crate::sched::closed_form_schedule(&tech, &params);
+        assert_eq!(t.last_chunk(), schedule.last().unwrap().size);
     }
 }

@@ -14,7 +14,7 @@ use dca_dls::coordinator::{self, EngineConfig, RunResult};
 use dca_dls::des::{simulate, DesConfig, DesResult};
 use dca_dls::sched::verify_coverage;
 use dca_dls::substrate::delay::InjectedDelay;
-use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::techniques::{CandidateSet, LoopParams, TechniqueKind};
 use dca_dls::workload::synthetic::{CostShape, Synthetic};
 use dca_dls::workload::{IterationCost, Workload};
 
@@ -63,6 +63,104 @@ fn lockfree_matches_two_phase_schedule_depth3() {
         );
         assert_eq!(fast.fast_grants > 0, kind.supports_fast_path(), "{kind}: CAS eligibility");
     }
+}
+
+/// ISSUE 5 regression property at depth 3: single-candidate adaptivity
+/// (the controller probes every grant but can never switch) emits serial
+/// schedules and t_par bit-identical to the static run, on the two-phase,
+/// lock-free, and auto grant paths alike.
+#[test]
+fn single_candidate_adaptive_is_bit_identical_depth3() {
+    let mk = |kind: TechniqueKind, path: SchedPath, adaptive: bool| {
+        let cluster = ClusterConfig {
+            nodes: 1,
+            ranks_per_node: 8,
+            break_after: 0,
+            ..ClusterConfig::minihpc()
+        };
+        let mut cfg = DesConfig::new(
+            LoopParams::new(4_096, cluster.total_ranks()),
+            kind,
+            ExecutionModel::HierDca,
+            cluster,
+            IterationCost::Constant(1e-5),
+        );
+        cfg.hier = HierParams::default().with_levels(3).with_fanouts(&[1, 1, 8]);
+        cfg.sched_path = path;
+        if adaptive {
+            cfg.hier = cfg
+                .hier
+                .with_adaptive()
+                .with_probe_interval(1)
+                .with_candidates(CandidateSet::EMPTY.try_with(kind).unwrap());
+        }
+        simulate(&cfg).unwrap_or_else(|e| panic!("{kind} {path} adaptive={adaptive}: {e}"))
+    };
+    for kind in TechniqueKind::ALL {
+        if !kind.has_closed_form() {
+            continue;
+        }
+        let mut pairs = vec![(SchedPath::TwoPhase, SchedPath::TwoPhase)];
+        if kind.supports_fast_path() {
+            pairs.push((SchedPath::LockFree, SchedPath::LockFree));
+            pairs.push((SchedPath::LockFree, SchedPath::Auto));
+        } else {
+            pairs.push((SchedPath::TwoPhase, SchedPath::Auto));
+        }
+        for (static_path, adaptive_path) in pairs {
+            let s = mk(kind, static_path, false);
+            let a = mk(kind, adaptive_path, true);
+            assert_eq!(
+                s.sorted_assignments(),
+                a.sorted_assignments(),
+                "{kind} depth 3 {static_path}/{adaptive_path}: schedules"
+            );
+            assert_eq!(s.t_par(), a.t_par(), "{kind} {static_path}/{adaptive_path}");
+            assert!(a.switch_events.is_empty(), "{kind}");
+        }
+    }
+}
+
+/// Adaptive rebinding at depth 3 under exponential slowdown: the mid-tier
+/// AND leaf-tier controllers may rebind, coverage stays exact across the
+/// three protocol levels, and the run replays deterministically.
+#[test]
+fn depth3_adaptive_rebinds_and_covers() {
+    const N: u64 = 20_000;
+    let mk = || {
+        let cluster = ClusterConfig {
+            nodes: 4,
+            ranks_per_node: 4,
+            racks: 2,
+            ..ClusterConfig::minihpc()
+        };
+        let mut cfg = DesConfig::new(
+            LoopParams::new(N, cluster.total_ranks()),
+            TechniqueKind::Fac2,
+            ExecutionModel::HierDca,
+            cluster,
+            IterationCost::Constant(1e-5),
+        );
+        cfg.delay = InjectedDelay::exponential_calculation(100e-6, 11);
+        cfg.hier = HierParams::with_inner(TechniqueKind::Ss)
+            .with_levels(3)
+            .with_fanouts(&[2, 2, 4])
+            .with_adaptive()
+            .with_probe_interval(4)
+            .with_candidates(CandidateSet::parse("ss,gss,fac").unwrap());
+        simulate(&cfg).unwrap()
+    };
+    let r = mk();
+    verify_coverage(&r.sorted_assignments(), N).unwrap();
+    assert!(!r.switch_events.is_empty(), "slowdown must trigger rebinds");
+    assert!(
+        r.switch_events.iter().all(|e| e.level >= 1),
+        "the root's outer technique stays static: {:?}",
+        r.switch_events
+    );
+    let replay = mk();
+    assert_eq!(r.assignments, replay.assignments, "depth-3 adaptive replay");
+    assert_eq!(r.switch_events, replay.switch_events);
 }
 
 /// The threaded engine's lock-free leaf at depth 3: coverage + checksum

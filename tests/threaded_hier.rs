@@ -13,7 +13,7 @@ use dca_dls::coordinator::{self, EngineConfig, RunResult};
 use dca_dls::des::{simulate, DesConfig, DesResult};
 use dca_dls::sched::{verify_coverage, Assignment};
 use dca_dls::substrate::delay::InjectedDelay;
-use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::techniques::{CandidateSet, LoopParams, TechniqueKind};
 use dca_dls::workload::synthetic::{CostShape, Synthetic};
 use dca_dls::workload::{IterationCost, Workload};
 
@@ -96,6 +96,241 @@ fn lockfree_matches_two_phase_schedule_flat() {
 fn lockfree_matches_two_phase_schedule_depth2() {
     for kind in TechniqueKind::ALL {
         assert_equivalent(kind, 2);
+    }
+}
+
+/// `SchedPath::Auto` without adaptivity IS the lock-free path: bit-identical
+/// schedules, t_par, and CAS accounting for every technique, flat and
+/// depth 2 (including the AF/TAP two-phase fallbacks).
+#[test]
+fn auto_path_matches_lockfree_when_static() {
+    for levels in [0u32, 2] {
+        for kind in TechniqueKind::ALL {
+            let lf = simulate(&equivalence_des_cfg(kind, SchedPath::LockFree, levels))
+                .unwrap_or_else(|e| panic!("{kind} lockfree: {e}"));
+            let auto = simulate(&equivalence_des_cfg(kind, SchedPath::Auto, levels))
+                .unwrap_or_else(|e| panic!("{kind} auto: {e}"));
+            assert_eq!(lf.assignments, auto.assignments, "{kind} depth {levels}");
+            assert_eq!(lf.t_par(), auto.t_par(), "{kind} depth {levels}");
+            assert_eq!(lf.fast_grants, auto.fast_grants, "{kind} depth {levels}");
+            assert_eq!(lf.stats.messages, auto.stats.messages, "{kind} depth {levels}");
+        }
+    }
+}
+
+/// ISSUE 5 regression property: with adaptivity driven by a
+/// **single-candidate set** (probing every grant, so the controller runs
+/// constantly but can never switch), the emitted serial schedules and
+/// t_par are bit-identical to the static PR 4 paths — for every
+/// closed-form technique × {flat, depth-2} × every applicable grant path.
+/// (AF cannot be a candidate; its static runs are untouched by
+/// construction since `adaptive` defaults off.)
+#[test]
+fn single_candidate_adaptive_is_bit_identical() {
+    for levels in [0u32, 2] {
+        for kind in TechniqueKind::ALL {
+            if !kind.has_closed_form() {
+                continue;
+            }
+            // (static path, adaptive path) pairs that must coincide exactly.
+            // Flat adaptive runs two-phase under Auto (once the coordinator
+            // disappears nobody could rebind); a non-fast-path leaf (TAP)
+            // starts two-phase under Auto as well.
+            let mut pairs = vec![(SchedPath::TwoPhase, SchedPath::TwoPhase)];
+            if levels != 0 && kind.supports_fast_path() {
+                pairs.push((SchedPath::LockFree, SchedPath::LockFree));
+                pairs.push((SchedPath::LockFree, SchedPath::Auto));
+            } else {
+                pairs.push((SchedPath::TwoPhase, SchedPath::Auto));
+            }
+            for (static_path, adaptive_path) in pairs {
+                let s = simulate(&equivalence_des_cfg(kind, static_path, levels))
+                    .unwrap_or_else(|e| panic!("{kind} static {static_path}: {e}"));
+                let mut cfg = equivalence_des_cfg(kind, adaptive_path, levels);
+                cfg.hier = cfg
+                    .hier
+                    .with_adaptive()
+                    .with_probe_interval(1)
+                    .with_candidates(CandidateSet::EMPTY.try_with(kind).unwrap());
+                let a = simulate(&cfg)
+                    .unwrap_or_else(|e| panic!("{kind} adaptive {adaptive_path}: {e}"));
+                assert_eq!(
+                    s.sorted_assignments(),
+                    a.sorted_assignments(),
+                    "{kind} depth {levels} {static_path}/{adaptive_path}: schedules"
+                );
+                assert_eq!(
+                    s.t_par(),
+                    a.t_par(),
+                    "{kind} depth {levels} {static_path}/{adaptive_path}: t_par"
+                );
+                assert!(a.switch_events.is_empty(), "{kind}: nothing to switch to");
+            }
+        }
+    }
+}
+
+/// The adaptive controller under extreme (exponential) slowdown, on the
+/// DES: starting every subtree on SS — the worst inner technique for an
+/// overhead-dominated regime — the controllers must rebind (switch events
+/// recorded), keep exact coverage through the mid-chunk stale-`seq` NACKs,
+/// replay deterministically, and beat the static SS run outright.
+/// (Validated numerically through the Python reference model, which also
+/// blesses the bench row: adapt/best-static = 0.966 on the bench cell.)
+#[test]
+fn adaptive_rebinds_under_slowdown_and_covers() {
+    const N: u64 = 30_000;
+    let cluster = ClusterConfig { nodes: 4, ranks_per_node: 4, ..ClusterConfig::minihpc() };
+    let mk = |adaptive: bool| {
+        let mut cfg = DesConfig::new(
+            LoopParams::new(N, cluster.total_ranks()),
+            TechniqueKind::Fac2,
+            ExecutionModel::HierDca,
+            cluster.clone(),
+            IterationCost::Constant(1e-5),
+        );
+        cfg.delay = InjectedDelay::exponential_calculation(100e-6, 3);
+        cfg.hier = HierParams::with_inner(TechniqueKind::Ss);
+        if adaptive {
+            cfg.hier = cfg
+                .hier
+                .with_adaptive()
+                .with_probe_interval(4)
+                .with_candidates(CandidateSet::parse("ss,gss,fac").unwrap());
+        }
+        simulate(&cfg).unwrap()
+    };
+    let stat = mk(false);
+    let adapt = mk(true);
+    verify_coverage(&adapt.sorted_assignments(), N).unwrap();
+    assert!(
+        !adapt.switch_events.is_empty(),
+        "the controllers must have rebound under a 10× overhead regime"
+    );
+    assert!(adapt.switch_events.iter().all(|e| e.level == 1), "leaf-level rebinds");
+    assert!(
+        adapt.t_par() < stat.t_par(),
+        "adaptive {} must beat its own static starting technique {}",
+        adapt.t_par(),
+        stat.t_par()
+    );
+    assert!(stat.switch_events.is_empty(), "static runs record no switches");
+    let replay = mk(true);
+    assert_eq!(adapt.assignments, replay.assignments, "adaptive replay");
+    assert_eq!(adapt.t_par(), replay.t_par());
+    assert_eq!(adapt.switch_events, replay.switch_events);
+}
+
+/// `SchedPath::Auto` demotion, deterministically on the DES: a lock-free
+/// SS leaf whose only alternative candidate is the measurement-coupled TAP
+/// must start with CAS grants, rebind to TAP once the overhead EWMAs are
+/// primed, demote those subtrees to the two-phase protocol, and still
+/// cover the loop exactly with a deterministic replay.
+#[test]
+fn auto_demotes_subtree_on_tap_rebind() {
+    const N: u64 = 20_000;
+    let cluster = ClusterConfig { nodes: 2, ranks_per_node: 4, ..ClusterConfig::minihpc() };
+    let mk = || {
+        let mut cfg = DesConfig::new(
+            LoopParams::new(N, cluster.total_ranks()),
+            TechniqueKind::Fac2,
+            ExecutionModel::HierDca,
+            cluster.clone(),
+            IterationCost::Constant(1e-5),
+        );
+        cfg.delay = InjectedDelay::exponential_calculation(100e-6, 7);
+        cfg.sched_path = SchedPath::Auto;
+        cfg.hier = HierParams::with_inner(TechniqueKind::Ss)
+            .with_adaptive()
+            .with_probe_interval(8)
+            .with_candidates(CandidateSet::parse("ss,tap").unwrap());
+        simulate(&cfg).unwrap()
+    };
+    let r = mk();
+    verify_coverage(&r.sorted_assignments(), N).unwrap();
+    assert!(r.fast_grants > 0, "the run started on the CAS path");
+    assert!(
+        r.switch_events.iter().any(|e| e.to == TechniqueKind::Tap),
+        "a TAP rebind must have demoted a subtree: {:?}",
+        r.switch_events
+    );
+    assert!(r.stats.messages > 0, "post-demotion grants travel as messages");
+    let replay = mk();
+    assert_eq!(r.assignments, replay.assignments, "demotion replay");
+    assert_eq!(r.switch_events, replay.switch_events);
+}
+
+/// Pure `SchedPath::LockFree` + adaptivity: TAP is stripped from the
+/// candidate set, so rebinds republish fresh tables and the leaf NEVER
+/// demotes — every switch lands on a fast-path technique and CAS grants
+/// keep flowing.
+#[test]
+fn lockfree_adaptive_rebinds_without_demoting() {
+    const N: u64 = 20_000;
+    let cluster = ClusterConfig { nodes: 2, ranks_per_node: 4, ..ClusterConfig::minihpc() };
+    let mut cfg = DesConfig::new(
+        LoopParams::new(N, cluster.total_ranks()),
+        TechniqueKind::Fac2,
+        ExecutionModel::HierDca,
+        cluster,
+        IterationCost::Constant(1e-5),
+    );
+    cfg.delay = InjectedDelay::exponential_calculation(100e-6, 7);
+    cfg.sched_path = SchedPath::LockFree;
+    cfg.hier = HierParams::with_inner(TechniqueKind::Ss)
+        .with_adaptive()
+        .with_probe_interval(8)
+        .with_candidates(CandidateSet::parse("ss,tap,gss").unwrap());
+    let r = simulate(&cfg).unwrap();
+    verify_coverage(&r.sorted_assignments(), N).unwrap();
+    assert!(r.fast_grants > 0);
+    assert!(!r.switch_events.is_empty(), "overhead regime must trigger rebinds");
+    assert!(
+        r.switch_events.iter().all(|e| e.to.supports_fast_path()),
+        "pure lock-free never rebinds to TAP: {:?}",
+        r.switch_events
+    );
+}
+
+/// The threaded engine under adaptivity: coverage and checksum stay exact
+/// while the real master threads rebind their slots (timing-dependent, so
+/// only structural properties are asserted).
+#[test]
+fn threaded_adaptive_covers_with_matching_checksum() {
+    const N: u64 = 6_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Jittered, 11));
+    let reference = w.execute_range(0, N);
+    let hier = HierParams::with_inner(TechniqueKind::Ss)
+        .with_adaptive()
+        .with_probe_interval(4)
+        .with_candidates(CandidateSet::parse("ss,gss,fac").unwrap());
+    let cfg = hier_engine(N, 4, 2, TechniqueKind::Fac2, hier);
+    let r = run_covered(&cfg, &w, N, "threaded adaptive");
+    assert_eq!(r.checksum, reference);
+}
+
+/// The threaded `SchedPath::Auto` engine with a TAP candidate in play:
+/// starting from STATIC (the worst tail chunk) on a jittered workload, the
+/// zero-overhead fast-path probe is imbalance-driven, so a TAP rebind —
+/// and with it the freeze-and-demote machinery plus the hybrid worker
+/// loop's post-demotion `Step → Commit` branch — is reachable on real
+/// threads. Timing-dependent, so coverage and checksum are the hard
+/// assertions; when switches fire they must all land on TAP.
+#[test]
+fn threaded_auto_adaptive_with_tap_candidate_covers() {
+    const N: u64 = 6_000;
+    let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 1e-7, CostShape::Jittered, 23));
+    let reference = w.execute_range(0, N);
+    let hier = HierParams::with_inner(TechniqueKind::Static)
+        .with_adaptive()
+        .with_probe_interval(2)
+        .with_candidates(CandidateSet::parse("static,tap").unwrap());
+    let mut cfg = hier_engine(N, 4, 2, TechniqueKind::Fac2, hier);
+    cfg.sched_path = SchedPath::Auto;
+    let r = run_covered(&cfg, &w, N, "threaded auto adaptive");
+    assert_eq!(r.checksum, reference);
+    for e in &r.switch_events {
+        assert_eq!(e.to, TechniqueKind::Tap, "only TAP is on offer: {e:?}");
     }
 }
 
