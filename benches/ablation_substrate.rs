@@ -35,16 +35,8 @@ fn run(
         ..ClusterConfig::minihpc()
     };
     let cfg = DesConfig {
-        sched_path: Default::default(),
-        record_assignments: true,
-        params: LoopParams::new(n, cluster.total_ranks()),
-        technique: tech,
-        model,
         delay,
-        cluster,
-        cost: cost.clone(),
-        pe_speed: vec![],
-        hier: Default::default(),
+        ..DesConfig::new(LoopParams::new(n, ranks), tech, model, cluster, cost.clone())
     };
     simulate(&cfg).expect("sim").t_par()
 }

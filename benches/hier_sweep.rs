@@ -55,16 +55,15 @@ fn run_on(
         (TechniqueKind::Ss, HierParams::default())
     };
     let cfg = DesConfig {
-        sched_path: Default::default(),
-        record_assignments: true,
-        params: LoopParams::new(N, cluster.total_ranks()),
-        technique,
-        model,
         delay,
-        cluster: cluster.clone(),
-        cost: IterationCost::Constant(5e-3),
-        pe_speed: vec![],
         hier,
+        ..DesConfig::new(
+            LoopParams::new(N, cluster.total_ranks()),
+            technique,
+            model,
+            cluster.clone(),
+            IterationCost::Constant(5e-3),
+        )
     };
     simulate(&cfg).expect("simulate").t_par()
 }

@@ -17,6 +17,10 @@
 //! tie exactly). A two-level FAC▸SS hierarchy row measures the same on the
 //! leaf fast path, and a threaded spot-check runs the real CAS loop.
 //!
+//! A multi-tenant session row (64 staggered SS loops over one shared node)
+//! gates the mean per-tenant slowdown under fair-share vs FIFO arbitration
+//! and asserts fair share wins the gap.
+//!
 //! Run: `cargo bench --bench sched_throughput` (plain harness). Emits
 //! `BENCH_sched_throughput.json` (path override:
 //! `BENCH_SCHED_THROUGHPUT_JSON`); regenerate the baseline with
@@ -30,6 +34,7 @@ use dca_dls::coordinator::{self, EngineConfig};
 use dca_dls::des::{simulate, DesConfig, DesResult};
 use dca_dls::report::json::Json;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::tenant::{session_slowdowns, ArbitrationPolicy, SessionConfig, TenantSpec, TenantState};
 use dca_dls::workload::synthetic::{CostShape, Synthetic};
 use dca_dls::workload::{IterationCost, Workload};
 
@@ -38,6 +43,16 @@ const NODES: u32 = 4;
 const RPN: u32 = 16;
 const COST: f64 = 1e-5;
 const TOL: f64 = 0.10;
+
+// Multi-tenant session cell: one bulk SS loop plus 63 small SS loops
+// arriving every 2 ms, all over ONE shared 16-rank node. The gated quantity
+// is the mean per-tenant slowdown (turnaround vs memoized solo run) under
+// fair-share vs FIFO arbitration — keep in lockstep with `tenant_specs()`
+// in python/tools/sched_throughput_model.py.
+const TENANTS: u32 = 64;
+const TENANT_RANKS: u32 = 16;
+const BULK_N: u64 = 40_000;
+const SMALL_N: u64 = 800;
 
 struct Cell {
     r: DesResult,
@@ -73,6 +88,23 @@ fn run_hier(path: SchedPath) -> Cell {
     let t0 = Instant::now();
     let r = simulate(&cfg).expect("simulate");
     Cell { r, wall: t0.elapsed().as_secs_f64() }
+}
+
+fn tenant_session(policy: ArbitrationPolicy) -> SessionConfig {
+    let mut cfg = SessionConfig::new(ClusterConfig::small(TENANT_RANKS))
+        .with_policy(policy)
+        .admit(
+            TenantSpec::new("bulk", BULK_N, TechniqueKind::Ss)
+                .with_cost(IterationCost::Constant(COST)),
+        );
+    for i in 1..TENANTS {
+        cfg = cfg.admit(
+            TenantSpec::new(format!("t{i}"), SMALL_N, TechniqueKind::Ss)
+                .arriving_at(0.002 * i as f64)
+                .with_cost(IterationCost::Constant(COST)),
+        );
+    }
+    cfg
 }
 
 /// Ungated per-cell diagnostics: virtual overhead + wall throughput.
@@ -188,6 +220,50 @@ fn main() {
     );
     info.push(info_row("HIER-DCA FAC\u{25b8}SS", SchedPath::TwoPhase, &two));
     info.push(info_row("HIER-DCA FAC\u{25b8}SS", SchedPath::LockFree, &fast));
+
+    // Multi-tenant session: 64 staggered SS loops sharing one node. The
+    // slowdown gap is the whole point of arbitration — fair share must
+    // decisively beat run-to-completion FIFO on mean per-tenant slowdown.
+    let tenant_scenario = format!("TENANTS {TENANTS}x{TENANT_RANKS} SS");
+    let mut cells: Vec<(f64, f64)> = Vec::new();
+    for policy in [ArbitrationPolicy::FairShare, ArbitrationPolicy::Fifo] {
+        let cfg = tenant_session(policy);
+        let t0c = Instant::now();
+        let (outcome, _slowdowns, mean) = session_slowdowns(&cfg).expect("session");
+        let wall = t0c.elapsed().as_secs_f64();
+        assert_eq!(
+            outcome.registry.count_in(TenantState::Completed),
+            TENANTS as usize,
+            "{policy}: every tenant must complete"
+        );
+        for t in &outcome.tenants {
+            assert_eq!(t.dropped_iters, 0, "{policy}/{}: nothing evicted", t.name);
+        }
+        info.push(
+            Json::obj()
+                .field("scenario", tenant_scenario.as_str())
+                .field("path", policy.name())
+                .field("mean_slowdown", mean)
+                .field("jain", outcome.jain_fairness)
+                .field("makespan", outcome.makespan)
+                .field("events", outcome.events)
+                .field("wall_s", wall),
+        );
+        cells.push((mean, outcome.jain_fairness));
+    }
+    let (fair, fifo) = (cells[0].0, cells[1].0);
+    assert!(fair < fifo, "fair-share mean slowdown {fair} must beat FIFO {fifo}");
+    println!(
+        "{tenant_scenario} mean slowdown: fair {fair:.3} (Jain {:.3})  fifo {fifo:.3} (Jain {:.3})",
+        cells[0].1, cells[1].1
+    );
+    rows.push(
+        Json::obj()
+            .field("scenario", tenant_scenario.as_str())
+            .field("tol", TOL)
+            .field("FAIR-SHARE", fair)
+            .field("FIFO", fifo),
+    );
 
     // Threaded spot-check: the *real* CAS loop vs real messages (wall
     // clock, machine-dependent — info only). Sub-µs synthetic iterations

@@ -28,16 +28,14 @@ fn main() -> anyhow::Result<()> {
         for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
             let cluster = ClusterConfig::minihpc();
             let cfg = DesConfig {
-                sched_path: Default::default(),
-                record_assignments: true,
-                params: LoopParams::new(262_144, cluster.total_ranks()),
-                technique: tech,
-                model,
                 delay: InjectedDelay::calculation_only(delay_us * 1e-6),
-                cluster,
-                cost: cost.clone(),
-                pe_speed: vec![],
-                hier: Default::default(),
+                ..DesConfig::new(
+                    LoopParams::new(262_144, cluster.total_ranks()),
+                    tech,
+                    model,
+                    cluster,
+                    cost.clone(),
+                )
             };
             let r = simulate(&cfg)?;
             t.push(r.t_par());

@@ -33,16 +33,14 @@ fn main() -> anyhow::Result<()> {
         for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
             let cluster = ClusterConfig::minihpc();
             let cfg = DesConfig {
-                sched_path: Default::default(),
-                record_assignments: true,
-                params: LoopParams::new(262_144, cluster.total_ranks()),
-                technique: tech,
-                model,
                 delay: InjectedDelay::calculation_only(100e-6),
-                cluster,
-                cost: IterationCost::psia_table3(0xF16_4),
-                pe_speed: vec![],
-                hier: Default::default(),
+                ..DesConfig::new(
+                    LoopParams::new(262_144, cluster.total_ranks()),
+                    tech,
+                    model,
+                    cluster,
+                    IterationCost::psia_table3(0xF16_4),
+                )
             };
             t.push(simulate(&cfg)?.t_par());
         }

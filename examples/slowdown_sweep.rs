@@ -10,7 +10,7 @@
 //!
 //! Run: `cargo run --release --example slowdown_sweep`
 
-use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams};
+use dca_dls::config::{ClusterConfig, ExecutionModel};
 use dca_dls::des::{simulate, DesConfig};
 use dca_dls::substrate::delay::InjectedDelay;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
@@ -36,16 +36,14 @@ fn main() -> anyhow::Result<()> {
             }
             let cluster = ClusterConfig::minihpc();
             let cfg = DesConfig {
-                sched_path: Default::default(),
-                record_assignments: true,
-                params: LoopParams::new(262_144, cluster.total_ranks()),
-                technique: tech,
-                model,
                 delay: InjectedDelay::calculation_only(delay_us * 1e-6),
-                cluster,
-                cost: cost.clone(),
-                pe_speed: vec![],
-                hier: HierParams::default(),
+                ..DesConfig::new(
+                    LoopParams::new(262_144, cluster.total_ranks()),
+                    tech,
+                    model,
+                    cluster,
+                    cost.clone(),
+                )
             };
             cells.push(Some(simulate(&cfg)?.t_par()));
         }

@@ -714,6 +714,571 @@ class FlatSim:
 
 
 # ---------------------------------------------------------------------------
+# multi-tenant sessions (rust/src/tenant/des_loop.rs + arbiter.rs)
+
+
+class Tenant:
+    """rust/src/tenant/mod.rs::TenantSpec (constant-cost model only)."""
+
+    def __init__(self, n, tech, arrival=0.0, weight=1, priority=0,
+                 offset=0, span=0, cost=1e-6, cancel_at=None):
+        self.n = n
+        self.tech = tech
+        self.arrival = arrival
+        self.weight = max(weight, 1)
+        self.priority = priority
+        self.offset = offset
+        self.span = span
+        self.cost = cost
+        self.cancel_at = cancel_at
+
+
+class Arbiter:
+    """rust/src/tenant/arbiter.rs::Arbiter — exact integer cross-mult
+    fair-share scores, in-flight picks charged at the last chunk size."""
+
+    def __init__(self, policy):
+        assert policy in ("fair", "priority", "fifo"), policy
+        self.policy = policy
+        self.acc = []  # [weight, priority, arrival_ns, granted, inflight, est]
+
+    def register(self, weight, priority, arrival_ns):
+        self.acc.append([max(weight, 1), priority, arrival_ns, 0, 0, 1])
+
+    def charged(self, t):
+        a = self.acc[t]
+        return a[3] + a[4] * max(a[5], 1)
+
+    def pick(self, eligible):
+        best = None
+        for t in eligible:
+            if best is None:
+                best = t
+            elif self.policy == "fair":
+                sa = self.charged(t) * self.acc[best][0]
+                sb = self.charged(best) * self.acc[t][0]
+                if sa < sb or (sa == sb and t < best):
+                    best = t
+            elif self.policy == "priority":
+                if (self.acc[t][1], self.acc[t][2], t) < \
+                        (self.acc[best][1], self.acc[best][2], best):
+                    best = t
+            else:  # fifo
+                if (self.acc[t][2], t) < (self.acc[best][2], best):
+                    best = t
+        if best is not None:
+            self.acc[best][4] += 1
+        return best
+
+    def on_grant(self, t, size):
+        a = self.acc[t]
+        a[4] = max(a[4] - 1, 0)
+        a[3] += size
+        a[5] = max(size, 1)
+
+    def on_miss(self, t):
+        a = self.acc[t]
+        a[4] = max(a[4] - 1, 0)
+
+
+def placement_block(offset, span, cluster_ranks):
+    """rust/src/tenant/placement.rs::Placement::block (wrapping block)."""
+    span = cluster_ranks if span == 0 else span
+    assert 0 < span <= cluster_ranks and 0 <= offset < cluster_ranks
+    return [(offset + i) % cluster_ranks for i in range(span)]
+
+
+class _TenantRt:
+    def __init__(self, spec, ranks, host_computes, record_assignments):
+        span = len(ranks)
+        self.queue = WorkQueue(spec.n)
+        self.lockfree = False  # set by SessionSim
+        self.ranks = ranks
+        self.arrived = False
+        self.evicting = False
+        self.done = [False] * span
+        self.done_ranks = 0
+        self.participants = span if host_computes else span - 1
+        # per-worker (chunks, iters, finish_ns, wait_ns, req_sent_ns)
+        self.w_finish = [0] * span
+        self.w_wait = [0] * span
+        self.w_sent = [0] * span
+        self.host_cpu_finish = 0
+        self.host_service = 0
+        self.messages = 0
+        self.intra_msgs = 0
+        self.inter_msgs = 0
+        self.assignments = [] if record_assignments else None
+        self.chunks_granted = 0
+        self.fast_grants = 0
+        self.granted_iters = 0
+        self.dropped_iters = 0
+        self._local = {r: i for i, r in enumerate(ranks)}
+
+    def local_of(self, r):
+        return self._local[r]
+
+
+class _RankRt:
+    def __init__(self):
+        self.attached = []
+        self.svc = deque()
+        self.busy = False
+        self.act = ("parked",)
+        self.nic = deque()
+        self.nic_busy = False
+
+
+class SessionSim:
+    """rust/src/tenant/des_loop.rs::TenantSim — many concurrent DCA loops
+    over one shared cluster, arbitrated at grant-cycle boundaries. With one
+    tenant the schedule is bit-identical to FlatSim('dca', ...), both
+    protocols (asserted by sched_throughput_model.py)."""
+
+    def __init__(self, tenants, cluster=None, policy="fair", lockfree=False,
+                 delay_calc=0.0, delay_assign=0.0, pe_speed=(),
+                 record_assignments=True, record_grant_trace=False):
+        self.cl = cluster or Cluster()
+        self.specs = tenants
+        self.policy = policy
+        self.dc = delay_calc
+        self.da = delay_assign
+        self.pe_speed = list(pe_speed)
+        self.record_assignments = record_assignments
+        self.record_grant_trace = record_grant_trace
+        assert tenants, "session admits no tenants"
+        host_computes = self.cl.break_after > 0
+        p = self.cl.p
+        self.arbiter = Arbiter(policy)
+        self.ranks = [_RankRt() for _ in range(p)]
+        self.tenants = []
+        self.state = []
+        for tid, spec in enumerate(tenants):
+            assert spec.n > 0 and spec.tech in CLOSED_FORM, spec.tech
+            assert spec.arrival >= 0.0
+            ranks = placement_block(spec.offset, spec.span, p)
+            assert host_computes or len(ranks) > 1, \
+                "dedicated host on a single-rank placement executes nothing"
+            self.arbiter.register(spec.weight, spec.priority, ns(spec.arrival))
+            for li, r in enumerate(ranks):
+                if li > 0 or host_computes:
+                    self.ranks[r].attached.append(tid)
+            tn = _TenantRt(spec, ranks, host_computes, record_assignments)
+            tn.lockfree = lockfree and spec.tech in FAST_PATH
+            tn.host_computes = host_computes
+            self.tenants.append(tn)
+            self.state.append("placed")
+        self.heap = Heap()
+        self.now = 0
+        self.events = 0
+        self.grant_trace = []
+
+    # -- helpers ----------------------------------------------------------
+
+    def speed(self, w):
+        s = self.pe_speed[w] if w < len(self.pe_speed) else 1.0
+        return max(s, 1e-9)
+
+    def chunk(self, t, step):
+        spec = self.specs[t]
+        return closed_chunk(spec.tech, step, spec.n, len(self.tenants[t].ranks))
+
+    def exec_ns(self, t, w, size):
+        return ns(self.specs[t].cost * size / self.speed(w))
+
+    def host_of(self, t):
+        return self.tenants[t].ranks[0]
+
+    def eligible(self, r):
+        out = []
+        for t in self.ranks[r].attached:
+            tn = self.tenants[t]
+            if tn.arrived and not tn.done[tn.local_of(r)]:
+                out.append(t)
+        return out
+
+    # -- bootstrap --------------------------------------------------------
+
+    def run(self):
+        for t, spec in enumerate(self.specs):
+            if spec.arrival == 0.0:
+                self.tenant_arrive(t)
+            else:
+                self.heap.push(ns(spec.arrival), ("arrive", t))
+        for t, spec in enumerate(self.specs):
+            if spec.cancel_at is not None:
+                self.heap.push(ns(spec.cancel_at), ("cancel", t))
+        while True:
+            popped = self.heap.pop()
+            if popped is None:
+                break
+            self.now, ev = popped
+            self.events += 1
+            self.dispatch(ev)
+        return self.into_outcome()
+
+    def tenant_arrive(self, t):
+        tn = self.tenants[t]
+        if tn.evicting:
+            return  # cancelled before it ever arrived
+        tn.arrived = True
+        self.state[t] = "running"
+        host = tn.ranks[0]
+        for li in range(1, len(tn.ranks)):
+            r = tn.ranks[li]
+            if self.ranks[r].act == ("parked",):
+                self.start_next(r)
+        if tn.lockfree:
+            if tn.host_computes and self.ranks[host].act == ("parked",):
+                self.start_next(host)
+        else:
+            if tn.host_computes and self.ranks[host].act == ("parked",):
+                self.ranks[host].act = ("needwork",)
+            if not self.ranks[host].busy:
+                self.heap.push(self.now, ("rankfree", host))
+                self.ranks[host].busy = True
+
+    def tenant_cancel(self, t):
+        if self.state[t] in ("completed", "evicted"):
+            return
+        tn = self.tenants[t]
+        dropped = tn.queue.n - tn.queue.next_start  # WorkQueue::drain_remaining
+        tn.queue.next_start = tn.queue.n
+        tn.dropped_iters += dropped
+        if not tn.arrived:
+            tn.evicting = True
+            self.state[t] = "evicted"
+            return
+        if dropped > 0:
+            tn.evicting = True
+            self.note_drained(t)
+
+    def note_drained(self, t):
+        if self.state[t] == "running":
+            self.state[t] = "draining"
+
+    def mark_done(self, t, r):
+        tn = self.tenants[t]
+        li = tn.local_of(r)
+        if tn.done[li]:
+            return
+        tn.done[li] = True
+        tn.done_ranks += 1
+        if tn.done_ranks == tn.participants:
+            self.state[t] = "evicted" if tn.evicting else "completed"
+
+    # -- messaging --------------------------------------------------------
+
+    def count_msg(self, t, w):
+        tn = self.tenants[t]
+        tn.messages += 1
+        if self.cl.node_of(w) == self.cl.node_of(tn.ranks[0]):
+            tn.intra_msgs += 1
+        else:
+            tn.inter_msgs += 1
+
+    def send_reply(self, t, w, reply, at):
+        self.count_msg(t, w)
+        host = self.host_of(t)
+        self.heap.push(at + self.cl.lat_ns(host, w), ("reply", w, t, reply))
+
+    def send_getstep(self, r, t):
+        tn = self.tenants[t]
+        tn.w_sent[tn.local_of(r)] = self.now
+        self.count_msg(t, r)
+        host = self.host_of(t)
+        at = self.now + self.cl.lat_ns(r, host)
+        self.heap.push(at, ("svc", host, t, ("getstep", r)))
+
+    def send_fused(self, r, t):
+        host = self.host_of(t)
+        self.heap.push(self.now + self.cl.lat_ns(r, host), ("nic", host, t, r))
+
+    def start_next(self, r):
+        t = self.arbiter.pick(self.eligible(r))
+        if t is None:
+            self.ranks[r].act = ("parked",)
+        elif self.tenants[t].lockfree:
+            self.ranks[r].act = ("wait", t)
+            self.send_fused(r, t)
+        elif self.host_of(t) == r:
+            self.ranks[r].act = ("needworkfor", t)
+            if not self.ranks[r].busy:
+                self.heap.push(self.now, ("rankfree", r))
+                self.ranks[r].busy = True
+        else:
+            self.ranks[r].act = ("wait", t)
+            self.send_getstep(r, t)
+
+    # -- dispatch ---------------------------------------------------------
+
+    def dispatch(self, ev):
+        kind = ev[0]
+        if kind == "arrive":
+            self.tenant_arrive(ev[1])
+        elif kind == "cancel":
+            self.tenant_cancel(ev[1])
+        elif kind == "svc":
+            _, host, t, task = ev
+            self.ranks[host].svc.append((t, task))
+            if not self.ranks[host].busy:
+                self.heap.push(self.now, ("rankfree", host))
+                self.ranks[host].busy = True
+        elif kind == "rankfree":
+            self.rank_next_action(ev[1])
+        elif kind == "reply":
+            self.worker_on_reply(ev[1], ev[2], ev[3])
+        elif kind == "calcdone":
+            _, w, t, step, size = ev
+            self.count_msg(t, w)
+            host = self.host_of(t)
+            at = self.now + self.cl.lat_ns(w, host)
+            self.heap.push(at, ("svc", host, t, ("commit", w, step, size)))
+        elif kind == "execdone":
+            _, w, t = ev
+            tn = self.tenants[t]
+            tn.w_finish[tn.local_of(w)] = self.now
+            self.start_next(w)
+        elif kind == "nic":
+            _, host, t, w = ev
+            self.ranks[host].nic.append((t, w))
+            if not self.ranks[host].nic_busy:
+                self.heap.push(self.now, ("nicfree", host))
+                self.ranks[host].nic_busy = True
+        elif kind == "nicfree":
+            self.nic_next_op(ev[1])
+        elif kind == "chainnext":
+            self.start_next(ev[1])
+
+    # -- a host rank's serial CPU (mirror of the flat Sim's rank 0) -------
+
+    def rank_next_action(self, r):
+        rk = self.ranks[r]
+        if rk.svc:
+            t, task = rk.svc.popleft()
+            dur = int(self.service(r, t, task) / self.speed(r))
+            tn = self.tenants[t]
+            tn.host_service += dur
+            tn.host_cpu_finish = self.now + dur
+            rk.busy = True
+            self.heap.push(self.now + dur, ("rankfree", r))
+            return
+        cluster_break = max(self.cl.break_after, 1)
+        act = rk.act
+        rk.act = ("parked",)
+        kind = act[0]
+        if kind == "needwork":
+            t = self.arbiter.pick(self.eligible(r))
+            if t is None:
+                rk.busy = False
+            else:
+                self.launch_pick(r, t)
+        elif kind == "needworkfor":
+            self.launch_pick(r, act[1])
+        elif kind == "calc":
+            _, t, step = act
+            dur = ns((self.dc + self.cl.calc) / self.speed(r))
+            rk.act = ("commit", t, step, self.chunk(t, step))
+            self.finish_own(r, t, dur)
+        elif kind == "commit":
+            _, t, step, size = act
+            dur = ns((self.cl.service + self.da) / self.speed(r))
+            a = self.tenants[t].queue.commit(step, size)
+            if a is not None:
+                self.grant(t, r, a)
+                rk.act = ("exec", t, a[1], a[1] + a[2])
+            else:
+                self.arbiter.on_miss(t)
+                self.mark_done(t, r)
+                rk.act = ("needwork",)
+            self.finish_own(r, t, dur)
+        elif kind == "exec":
+            _, t, cursor, end = act
+            seg = min(cluster_break, end - cursor)
+            dur = ns(self.specs[t].cost * seg / self.speed(r))
+            if cursor + seg < end:
+                rk.act = ("exec", t, cursor + seg, end)
+            else:
+                rk.act = ("needwork",)
+            self.finish_own(r, t, dur)
+        elif kind == "parked":
+            rk.busy = False
+        else:  # wait: a chain is in flight, the CPU just goes idle
+            rk.act = act
+            rk.busy = False
+
+    def launch_pick(self, r, t):
+        rk = self.ranks[r]
+        tn = self.tenants[t]
+        if tn.lockfree:
+            rk.act = ("wait", t)
+            self.send_fused(r, t)
+            rk.busy = False
+        elif self.host_of(t) == r:
+            dur = ns(self.cl.service / self.speed(r))
+            tk = tn.queue.begin_step()
+            if tk is not None:
+                rk.act = ("calc", t, tk[0])
+            else:
+                self.arbiter.on_miss(t)
+                self.note_drained(t)
+                self.mark_done(t, r)
+                rk.act = ("needwork",)
+            self.finish_own(r, t, dur)
+        else:
+            rk.act = ("wait", t)
+            self.send_getstep(r, t)
+            rk.busy = False
+
+    def finish_own(self, r, t, dur):
+        self.ranks[r].busy = True
+        self.tenants[t].host_cpu_finish = self.now + dur
+        self.heap.push(self.now + dur, ("rankfree", r))
+
+    def service(self, r, t, task):
+        tn = self.tenants[t]
+        if task[0] == "getstep":
+            w = task[1]
+            dur = ns(self.cl.service)
+            tk = tn.queue.begin_step()
+            if tk is not None:
+                self.send_reply(t, w, ("step", tk[0]), self.now + dur)
+            else:
+                self.arbiter.on_miss(t)
+                self.note_drained(t)
+                self.send_reply(t, w, ("done",), self.now + dur)
+            return dur
+        _, w, step, size = task  # commit
+        dur = ns(self.cl.service + self.da)
+        a = tn.queue.commit(step, size)
+        if a is not None:
+            self.grant(t, w, a)
+            self.send_reply(t, w, ("chunk", a[1], a[2]), self.now + dur)
+        else:
+            self.arbiter.on_miss(t)
+            self.send_reply(t, w, ("done",), self.now + dur)
+        return dur
+
+    def grant(self, t, w, a):
+        tn = self.tenants[t]
+        li = tn.local_of(w)
+        tn.chunks_granted += 1
+        tn.granted_iters += a[2]
+        if tn.assignments is not None:
+            tn.assignments.append(a)
+        self.arbiter.on_grant(t, a[2])
+        if self.record_grant_trace:
+            self.grant_trace.append((t, a[2]))
+        if tn.queue.is_done():
+            self.note_drained(t)
+
+    # -- remote worker chains ---------------------------------------------
+
+    def worker_on_reply(self, w, t, reply):
+        tn = self.tenants[t]
+        li = tn.local_of(w)
+        tn.w_wait[li] += max(self.now - tn.w_sent[li], 0)
+        kind = reply[0]
+        if kind == "chunk":
+            dur = self.exec_ns(t, w, reply[2])
+            self.heap.push(self.now + dur, ("execdone", w, t))
+        elif kind == "step":
+            dur = ns((self.dc + self.cl.calc) / self.speed(w))
+            step = reply[1]
+            self.heap.push(self.now + dur,
+                           ("calcdone", w, t, step, self.chunk(t, step)))
+        else:  # done
+            tn.w_finish[li] = self.now
+            self.mark_done(t, w)
+            self.start_next(w)
+
+    # -- ledger-host NIC (lock-free fused grants) -------------------------
+
+    def nic_next_op(self, host):
+        rk = self.ranks[host]
+        if not rk.nic:
+            rk.nic_busy = False
+            return
+        t, w = rk.nic.popleft()
+        tn = self.tenants[t]
+        dur = ns(self.cl.service)
+        tk = tn.queue.begin_step()
+        a = tn.queue.commit(tk[0], self.chunk(t, tk[0])) if tk is not None else None
+        if a is not None:
+            tn.fast_grants += 1
+            self.grant(t, w, a)
+            start_exec = self.now + dur + self.cl.lat_ns(host, w)
+            self.heap.push(start_exec + self.exec_ns(t, w, a[2]),
+                           ("execdone", w, t))
+        else:
+            self.arbiter.on_miss(t)
+            self.note_drained(t)
+            notify = self.now + dur + self.cl.lat_ns(host, w)
+            tn.w_finish[tn.local_of(w)] = notify
+            self.mark_done(t, w)
+            if len(self.ranks[w].attached) > 1:
+                self.heap.push(notify, ("chainnext", w))
+        self.heap.push(self.now + dur, ("nicfree", host))
+        rk.nic_busy = True
+
+    # -- results ----------------------------------------------------------
+
+    def into_outcome(self):
+        self.completions = []
+        self.turnarounds = []
+        self.messages_total = 0
+        self.makespan = 0.0
+        for t, tn in enumerate(self.tenants):
+            assert self.state[t] in ("completed", "evicted"), \
+                f"tenant {t} ended {self.state[t]} — session deadlock"
+            finish = [secs(f) for f in tn.w_finish]
+            finish[0] = max(finish[0], secs(tn.host_cpu_finish))
+            completion = max(finish)
+            self.completions.append(completion)
+            self.turnarounds.append(max(completion - self.specs[t].arrival, 0.0))
+            self.messages_total += tn.messages
+            self.makespan = max(self.makespan, completion)
+        rates = [tn.granted_iters / (self.specs[t].weight * ta)
+                 for t, (tn, ta) in enumerate(zip(self.tenants, self.turnarounds))
+                 if ta > 0.0 and tn.granted_iters > 0]
+        self.jain = jain_index(rates)
+        return self.makespan
+
+
+def jain_index(xs):
+    """rust/src/tenant/des_loop.rs::jain_index — (Σx)²/(n·Σx²)."""
+    if not xs:
+        return 1.0
+    s = sum(xs)
+    s2 = sum(x * x for x in xs)
+    return (s * s) / (len(xs) * s2) if s2 > 0.0 else 1.0
+
+
+def session_slowdowns(tenants, **kw):
+    """rust/src/tenant/des_loop.rs::session_slowdowns — per-tenant
+    turnaround vs a memoized solo re-run; returns (sim, slowdowns, mean)."""
+    sim = SessionSim(tenants, **kw)
+    sim.run()
+    cache = {}
+    slowdowns = []
+    for i, spec in enumerate(tenants):
+        key = (spec.n, spec.tech, spec.offset, spec.span, spec.cost)
+        if key not in cache:
+            solo = Tenant(spec.n, spec.tech, weight=spec.weight,
+                          priority=spec.priority, offset=spec.offset,
+                          span=spec.span, cost=spec.cost)
+            solo_kw = dict(kw, record_assignments=False)
+            ssim = SessionSim([solo], **solo_kw)
+            ssim.run()
+            cache[key] = ssim.turnarounds[0]
+        solo_t = cache[key]
+        t = sim.turnarounds[i]
+        slowdowns.append(t / solo_t if solo_t > 0.0 else 1.0)
+    mean = sum(slowdowns) / len(slowdowns) if slowdowns else 0.0
+    return sim, slowdowns, mean
+
+
+# ---------------------------------------------------------------------------
 # recursive N-level HIER-DCA (rust/src/hier/mod.rs + protocol.rs)
 
 

@@ -66,6 +66,55 @@ def hier_cell(lockfree):
     return t, len(sim.assignments), sim.fast_grants
 
 
+# Multi-tenant session cell — keep in lockstep with the bench's
+# `tenant_session()`: one bulk SS loop plus 63 small SS loops arriving
+# every 2 ms, all over one shared 16-rank node. The gated quantity is the
+# mean per-tenant slowdown (turnaround vs memoized solo run) under
+# FAIR-SHARE vs FIFO arbitration.
+TENANTS = 64
+TENANT_RANKS = 16
+BULK_N = 40_000
+SMALL_N = 800
+
+
+def tenant_specs():
+    specs = [m.Tenant(BULK_N, "ss", cost=COST)]
+    for i in range(1, TENANTS):
+        specs.append(m.Tenant(SMALL_N, "ss", arrival=0.002 * i, cost=COST))
+    return specs
+
+
+def tenant_cell(policy):
+    sim, _slow, mean = m.session_slowdowns(
+        tenant_specs(), cluster=m.Cluster(nodes=1, rpn=TENANT_RANKS),
+        policy=policy)
+    for t, tn in enumerate(sim.tenants):
+        assert sim.state[t] == "completed"
+        m.verify_coverage(tn.assignments, sim.specs[t].n)
+    return sim, mean
+
+
+def tenant_self_check():
+    """Single-tenant sessions must be bit-identical to the flat DES on both
+    grant paths (the Rust property pinned in tests/tenants.rs)."""
+    n = 6_000
+    for tech in ("ss", "gss", "fac2"):
+        for lockfree in (False, True):
+            flat = m.FlatSim("dca", 0.0, 0.0,
+                             cluster=m.Cluster(nodes=NODES, rpn=RPN),
+                             tech=tech, n=n, cost=COST, lockfree=lockfree)
+            t_flat = flat.run()
+            sess = m.SessionSim([m.Tenant(n, tech, cost=COST)],
+                                cluster=m.Cluster(nodes=NODES, rpn=RPN),
+                                lockfree=lockfree)
+            sess.run()
+            tn = sess.tenants[0]
+            assert sess.completions[0] == t_flat, (tech, lockfree)
+            assert tn.assignments == flat.assignments, (tech, lockfree)
+            assert tn.fast_grants == flat.fast_grants, (tech, lockfree)
+    print("tenant self-check: single-tenant sessions ≡ flat DES ✓")
+
+
 def main():
     out_path = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
         os.path.dirname(__file__), "..", "..", "benches", "baselines",
@@ -93,6 +142,16 @@ def main():
           f"lockfree {tl:.5f}s ({fl} CAS grants)  ratio {tl / t2:.3f}")
     rows.append({"scenario": "HIER-DCA FAC▸SS", "tol": TOL,
                  "TWO-PHASE": t2, "LOCKFREE": tl})
+
+    tenant_self_check()
+    fair_sim, fair = tenant_cell("fair")
+    fifo_sim, fifo = tenant_cell("fifo")
+    assert fair < fifo, f"fair-share mean slowdown {fair} must beat FIFO {fifo}"
+    print(f"TENANTS {TENANTS}x{TENANT_RANKS} SS mean slowdown: "
+          f"fair {fair:.3f} (Jain {fair_sim.jain:.3f})  "
+          f"fifo {fifo:.3f} (Jain {fifo_sim.jain:.3f})")
+    rows.append({"scenario": f"TENANTS {TENANTS}x{TENANT_RANKS} SS",
+                 "tol": TOL, "FAIR-SHARE": fair, "FIFO": fifo})
 
     doc = {"bench": "sched_throughput", "n": N, "ranks": NODES * RPN,
            "scenarios": rows}

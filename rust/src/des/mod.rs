@@ -87,6 +87,21 @@ impl DesConfig {
         }
     }
 
+    /// The canonical small test configuration shared by tests and benches:
+    /// GSS over flat DCA on a single-node cluster of `p` ranks, constant
+    /// 1 µs iterations, no injected delay, assignments recorded. Tests
+    /// mutate the one or two fields under study instead of hand-rolling
+    /// the whole literal.
+    pub fn for_test(n: u64, p: u32) -> Self {
+        DesConfig::new(
+            LoopParams::new(n, p),
+            TechniqueKind::Gss,
+            ExecutionModel::Dca,
+            ClusterConfig::small(p),
+            IterationCost::Constant(1e-6),
+        )
+    }
+
     /// Switch the grant protocol to the lock-free CAS fast path.
     pub fn with_lockfree(mut self) -> Self {
         self.sched_path = SchedPath::LockFree;

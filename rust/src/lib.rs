@@ -44,6 +44,7 @@ pub mod runtime;
 pub mod sched;
 pub mod substrate;
 pub mod techniques;
+pub mod tenant;
 pub mod workload;
 
 /// Commonly used items, re-exported for examples and downstream users.

@@ -23,6 +23,10 @@ use dca_dls::runtime::workload::{PjrtMandelbrot, PjrtPsia};
 use dca_dls::runtime::Runtime;
 use dca_dls::substrate::delay::InjectedDelay;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::tenant::spec::{parse_session_spec, render_session_json};
+use dca_dls::tenant::{
+    session_slowdowns, simulate_session, ArbitrationPolicy, SessionConfig, TenantSpec,
+};
 use dca_dls::workload::mandelbrot::Mandelbrot;
 use dca_dls::workload::psia::Psia;
 use dca_dls::workload::Workload;
@@ -53,7 +57,22 @@ COMMANDS
   select             SimAS-style model auto-selection (§7, 4 models) [--app --tech --inner --levels K
                        --fanout a,b,… --watermark W|auto --delay-us --lockfree --sched-path P
                        --adaptive --probe-interval G --candidates t,…]
+  tenants            multi-tenant DES session: many loops over ONE shared cluster
+                       [--spec FILE | --demo K --seed S] [--ranks R
+                        --policy fair|priority|fifo --lockfree --sched-path P
+                        --slowdown --json F]
   validate           PJRT artifacts vs native implementations
+
+MULTI-TENANT SESSIONS (tenants)
+  Admits many self-scheduled loops (tenants) to one shared cluster; every
+  rank arbitrates between the per-tenant chunk ledgers it hosts using the
+  session policy (fair = weighted fair-share over granted iterations,
+  priority = strict classes, fifo = arrival order). `--spec FILE` loads a
+  JSON session spec (see rust/src/README.md); `--demo K` synthesizes K
+  seeded tenants with staggered arrivals and overlapping placements.
+  `--slowdown` re-runs each tenant solo and reports per-tenant slowdown.
+
+    dca-dls tenants --demo 12 --ranks 64 --policy fair --slowdown
 
 ADAPTIVE SELECTION (--adaptive)
   Every subtree master (and the flat DCA coordinator) re-binds its
@@ -99,6 +118,7 @@ fn main() {
         "run" => cmd_run(&flags),
         "sweep-breakafter" => cmd_sweep_breakafter(&flags),
         "select" => cmd_select(&flags),
+        "tenants" => cmd_tenants(&flags),
         "validate" => cmd_validate(),
         _ => {
             eprint!("{USAGE}");
@@ -751,18 +771,13 @@ fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 break_after: ba,
                 ..ClusterConfig::minihpc()
             };
-            let cfg = DesConfig {
-                sched_path: Default::default(),
-                record_assignments: true,
-                params: LoopParams::new(65_536, cluster.total_ranks()),
-                technique: tech,
+            let cfg = DesConfig::new(
+                LoopParams::new(65_536, cluster.total_ranks()),
+                tech,
                 model,
-                delay: InjectedDelay::none(),
                 cluster,
-                cost: cost.clone(),
-                pe_speed: vec![],
-                hier: HierParams::default(),
-            };
+                cost.clone(),
+            );
             t.push(simulate(&cfg)?.t_par());
         }
         let label = if ba == 0 { "dedicated".to_string() } else { ba.to_string() };
@@ -809,6 +824,121 @@ fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         println!("  {:<mw$} {t:.3}s{mark}", label(*m));
     }
     Ok(())
+}
+
+/// `tenants`: run a multi-tenant session on the DES substrate — from a
+/// JSON spec file or a seeded `--demo` tenant set — and report per-tenant
+/// turnaround, granted/dropped iterations and session-level fairness.
+fn cmd_tenants(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let ranks = get(flags, "ranks", 64u32);
+    let cluster = apply_rack_flags(
+        if ranks == 256 { ClusterConfig::minihpc() } else { ClusterConfig::small(ranks) },
+        flags,
+    )?;
+    let mut cfg = match flags.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read session spec '{path}': {e}"))?;
+            parse_session_spec(&text, cluster)?
+        }
+        None => demo_session(cluster, get(flags, "demo", 8u32), get(flags, "seed", 42u64)),
+    };
+    if let Some(raw) = flags.get("policy") {
+        cfg.policy = ArbitrationPolicy::parse(raw)?;
+    }
+    if flags.contains_key("lockfree") || flags.contains_key("sched-path") {
+        cfg.sched_path = sched_path_of(flags)?;
+    }
+    let (outcome, slowdowns) = if flags.contains_key("slowdown") {
+        let (o, s, mean) = session_slowdowns(&cfg)?;
+        (o, Some((s, mean)))
+    } else {
+        (simulate_session(&cfg)?, None)
+    };
+    println!(
+        "session: {} tenants over {} ranks  policy={}  path={:?}",
+        outcome.tenants.len(),
+        cfg.cluster.total_ranks(),
+        cfg.policy,
+        cfg.sched_path,
+    );
+    println!(
+        "makespan = {:.4}s   events = {}   messages = {}   Jain fairness = {:.3}",
+        outcome.makespan, outcome.events, outcome.messages, outcome.jain_fairness
+    );
+    if let Some((_, mean)) = &slowdowns {
+        println!("mean slowdown vs solo = {mean:.3}");
+    }
+    println!(
+        "{:>3}  {:<12} {:<5} {:>7} {:>6} {:>9} {:>9} {:>9} {:>8} {:>8}  {}",
+        "id",
+        "name",
+        "tech",
+        "N",
+        "span",
+        "arrival",
+        "done",
+        "turnarnd",
+        "granted",
+        "dropped",
+        "state"
+    );
+    for t in &outcome.tenants {
+        let spec = &cfg.tenants[t.id as usize];
+        let span = if spec.span == 0 { cfg.cluster.total_ranks() } else { spec.span };
+        println!(
+            "{:>3}  {:<12} {:<5} {:>7} {:>6} {:>9.4} {:>9.4} {:>9.4} {:>8} {:>8}  {}",
+            t.id,
+            t.name,
+            spec.technique.name(),
+            spec.n,
+            span,
+            t.arrival,
+            t.completion,
+            t.turnaround,
+            t.granted_iters,
+            t.dropped_iters,
+            t.state
+        );
+    }
+    if let Some(path) = flags.get("json") {
+        let rendered =
+            render_session_json(&cfg, &outcome, slowdowns.as_ref().map(|(s, _)| s.as_slice()));
+        std::fs::write(path, rendered)?;
+        println!("\nwrote {path}");
+    }
+    Ok(())
+}
+
+/// Synthesize a seeded `--demo` tenant set: K loops with mixed closed-form
+/// techniques, staggered arrivals, varied weights, and overlapping block
+/// placements across the shared cluster.
+fn demo_session(cluster: ClusterConfig, k: u32, seed: u64) -> SessionConfig {
+    use dca_dls::techniques::rnd::splitmix64;
+    const TECHS: [TechniqueKind; 5] = [
+        TechniqueKind::Ss,
+        TechniqueKind::Gss,
+        TechniqueKind::Tss,
+        TechniqueKind::Fac2,
+        TechniqueKind::Fiss,
+    ];
+    let ranks = cluster.total_ranks();
+    let mut cfg = SessionConfig::new(cluster);
+    for i in 0..k.max(1) {
+        let h = splitmix64(seed ^ (0xD15C0 + i as u64));
+        let n = 500 + h % 1500;
+        let tech = TECHS[((h >> 8) % TECHS.len() as u64) as usize];
+        let span = (2u32 << ((h >> 16) % 4)).min(ranks);
+        let offset = ((h >> 24) % ranks as u64) as u32;
+        let weight = 1 + (h >> 32) % 4;
+        cfg = cfg.admit(
+            TenantSpec::new(format!("demo-{i}"), n, tech)
+                .arriving_at(i as f64 * 2e-4)
+                .weighted(weight)
+                .placed_at(offset, span),
+        );
+    }
+    cfg
 }
 
 fn cmd_validate() -> anyhow::Result<()> {

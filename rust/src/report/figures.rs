@@ -164,16 +164,16 @@ pub fn run_figure(cfg: &FigureConfig) -> anyhow::Result<Vec<FigureRow>> {
                         })
                         .collect();
                     let des = DesConfig {
-                        sched_path: Default::default(),
-                        record_assignments: true,
-                        params,
-                        technique,
-                        model,
                         delay,
-                        cluster: cfg.cluster.clone(),
-                        cost: (*base_cost).clone(),
                         pe_speed,
                         hier: cfg.hier,
+                        ..DesConfig::new(
+                            params,
+                            technique,
+                            model,
+                            cfg.cluster.clone(),
+                            (*base_cost).clone(),
+                        )
                     };
                     let r = simulate(&des)?;
                     if rep == 0 {

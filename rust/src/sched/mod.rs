@@ -103,6 +103,17 @@ impl WorkQueue {
         Some(t)
     }
 
+    /// Forcibly retire every unassigned iteration (tenant eviction /
+    /// session drain): the queue reports done from here on, outstanding
+    /// [`WorkQueue::begin_step`] tickets fail their commit, and the granted
+    /// prefix `[0, lp_start)` stays exactly as scheduled. Returns the
+    /// number of iterations dropped.
+    pub fn drain_remaining(&mut self) -> u64 {
+        let dropped = self.remaining();
+        self.next_start = self.n;
+        dropped
+    }
+
     /// **Phase 2 of the DCA protocol**: commit a worker-calculated size for a
     /// previously reserved step. Iteration ranges are granted in commit
     /// order (disjointness is what matters — DLS assumes independent
@@ -223,6 +234,20 @@ mod tests {
         let a1 = q.commit(t1, 30).unwrap();
         assert_eq!(a2.start, 0);
         assert_eq!(a1.start, 30);
+    }
+
+    #[test]
+    fn drain_kills_outstanding_tickets_but_keeps_granted_prefix() {
+        let mut q = WorkQueue::new(100, 1);
+        let t1 = q.begin_step().unwrap();
+        let a1 = q.commit(t1, 30).unwrap();
+        let t2 = q.begin_step().unwrap();
+        assert_eq!(q.drain_remaining(), 70);
+        assert!(q.is_done());
+        assert!(q.commit(t2, 30).is_none());
+        assert!(q.begin_step().is_none());
+        assert_eq!(q.drain_remaining(), 0);
+        verify_coverage(&[a1], 30).unwrap();
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Session arbitration: when a rank is eligible to draw work for several
+//! tenants at once, whose ledger does it hit next?
+//!
+//! The decision point is always a **grant-cycle boundary** — a rank never
+//! abandons a chunk mid-flight — so the arbiter only ranks tenants; the
+//! protocol machinery (two-phase exchange or lock-free CAS) is untouched
+//! and a single-tenant session degenerates to "always that tenant",
+//! bit-identical to the single-loop engines.
+
+use super::TenantId;
+
+/// Per-session arbitration policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArbitrationPolicy {
+    /// Weighted fair share: pick the tenant with the smallest
+    /// weight-normalized granted-iteration account (deficit-round-robin
+    /// flavor — in-flight picks are charged at the tenant's last chunk
+    /// size so K simultaneous requests spread over K tenants instead of
+    /// dog-piling the momentary minimum).
+    #[default]
+    FairShare,
+    /// Strict priority classes (lower class first), FIFO inside a class.
+    StrictPriority,
+    /// Arrival order — tenants run back-to-back, the sequential-execution
+    /// baseline the bench's slowdown cell compares fair share against.
+    Fifo,
+}
+
+impl ArbitrationPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArbitrationPolicy::FairShare => "fair",
+            ArbitrationPolicy::StrictPriority => "priority",
+            ArbitrationPolicy::Fifo => "fifo",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "fair" | "fair-share" | "fairshare" => Ok(ArbitrationPolicy::FairShare),
+            "priority" | "strict" | "strict-priority" => Ok(ArbitrationPolicy::StrictPriority),
+            "fifo" | "sequential" => Ok(ArbitrationPolicy::Fifo),
+            other => anyhow::bail!("unknown arbitration policy '{other}' (fair|priority|fifo)"),
+        }
+    }
+}
+
+impl std::fmt::Display for ArbitrationPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct Account {
+    weight: u64,
+    priority: u32,
+    arrival_ns: u64,
+    /// Iterations actually granted so far.
+    granted: u64,
+    /// Picks charged but not yet granted (requests in flight).
+    inflight: u64,
+    /// Last granted chunk size — the in-flight charge estimate.
+    est: u64,
+}
+
+/// The session-wide arbitration account book. Deterministic: scores are
+/// compared with exact integer cross-multiplication, ties broken by
+/// tenant id.
+#[derive(Debug, Clone)]
+pub struct Arbiter {
+    policy: ArbitrationPolicy,
+    accounts: Vec<Account>,
+}
+
+impl Arbiter {
+    pub fn new(policy: ArbitrationPolicy) -> Self {
+        Arbiter { policy, accounts: Vec::new() }
+    }
+
+    pub fn policy(&self) -> ArbitrationPolicy {
+        self.policy
+    }
+
+    /// Register tenant `id` (ids must be registered densely, in order).
+    pub fn register(&mut self, id: TenantId, weight: u64, priority: u32, arrival_ns: u64) {
+        assert_eq!(id as usize, self.accounts.len(), "register tenants in id order");
+        self.accounts.push(Account {
+            weight: weight.max(1),
+            priority,
+            arrival_ns,
+            granted: 0,
+            inflight: 0,
+            est: 1,
+        });
+    }
+
+    /// Pick the next tenant among `eligible` and charge one in-flight
+    /// request against it. `None` when `eligible` is empty.
+    pub fn pick(&mut self, eligible: impl Iterator<Item = TenantId>) -> Option<TenantId> {
+        let best = match self.policy {
+            ArbitrationPolicy::FairShare => eligible.min_by(|&a, &b| {
+                self.fair_score_lt(a, b)
+                    .then_with(|| a.cmp(&b))
+            }),
+            ArbitrationPolicy::StrictPriority => eligible.min_by_key(|&t| {
+                let acct = &self.accounts[t as usize];
+                (acct.priority, acct.arrival_ns, t)
+            }),
+            ArbitrationPolicy::Fifo => eligible.min_by_key(|&t| {
+                let acct = &self.accounts[t as usize];
+                (acct.arrival_ns, t)
+            }),
+        };
+        if let Some(t) = best {
+            self.accounts[t as usize].inflight += 1;
+        }
+        best
+    }
+
+    /// Exact comparison of weight-normalized accounts:
+    /// `(granted_a + inflight_a·est_a)/w_a  <=>  (granted_b + …)/w_b`
+    /// cross-multiplied in u128 (no float ties).
+    fn fair_score_lt(&self, a: TenantId, b: TenantId) -> std::cmp::Ordering {
+        let sa = self.charged(a) as u128 * self.accounts[b as usize].weight as u128;
+        let sb = self.charged(b) as u128 * self.accounts[a as usize].weight as u128;
+        sa.cmp(&sb)
+    }
+
+    fn charged(&self, t: TenantId) -> u64 {
+        let acct = &self.accounts[t as usize];
+        acct.granted + acct.inflight * acct.est.max(1)
+    }
+
+    /// A charged request landed `size` iterations.
+    pub fn on_grant(&mut self, t: TenantId, size: u64) {
+        let acct = &mut self.accounts[t as usize];
+        acct.inflight = acct.inflight.saturating_sub(1);
+        acct.granted += size;
+        acct.est = size.max(1);
+    }
+
+    /// A charged request came back empty (loop drained).
+    pub fn on_miss(&mut self, t: TenantId) {
+        let acct = &mut self.accounts[t as usize];
+        acct.inflight = acct.inflight.saturating_sub(1);
+    }
+
+    /// Iterations granted to `t` so far.
+    pub fn granted(&self, t: TenantId) -> u64 {
+        self.accounts[t as usize].granted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arb(policy: ArbitrationPolicy, n: u32) -> Arbiter {
+        let mut a = Arbiter::new(policy);
+        for id in 0..n {
+            a.register(id, 1, 0, 0);
+        }
+        a
+    }
+
+    #[test]
+    fn fair_share_spreads_simultaneous_picks() {
+        // 4 simultaneous requests over 2 tenants: in-flight charging makes
+        // them alternate instead of all hitting tenant 0.
+        let mut a = arb(ArbitrationPolicy::FairShare, 2);
+        let picks: Vec<_> = (0..4).map(|_| a.pick(0..2).unwrap()).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn fair_share_respects_weights() {
+        let mut a = Arbiter::new(ArbitrationPolicy::FairShare);
+        a.register(0, 1, 0, 0);
+        a.register(1, 3, 0, 0);
+        // Grant in lockstep; tenant 1 (weight 3) should take ~3 of 4 picks.
+        let mut counts = [0u32; 2];
+        for _ in 0..400 {
+            let t = a.pick(0..2).unwrap();
+            counts[t as usize] += 1;
+            a.on_grant(t, 10);
+        }
+        assert_eq!(counts[0] + counts[1], 400);
+        assert!((counts[1] as i64 - 300).abs() <= 2, "weighted split was {counts:?}");
+    }
+
+    #[test]
+    fn strict_priority_and_fifo_orders() {
+        let mut a = Arbiter::new(ArbitrationPolicy::StrictPriority);
+        a.register(0, 1, 5, 0);
+        a.register(1, 1, 1, 100);
+        a.register(2, 1, 1, 50);
+        assert_eq!(a.pick(0..3), Some(2)); // class 1, earliest arrival
+        let mut f = Arbiter::new(ArbitrationPolicy::Fifo);
+        f.register(0, 1, 0, 100);
+        f.register(1, 1, 0, 10);
+        assert_eq!(f.pick(0..2), Some(1));
+        // FIFO sticks with the earliest arrival until it is filtered out
+        // of the eligible set (drained), regardless of granted counts.
+        f.on_grant(1, 1_000);
+        assert_eq!(f.pick(0..2), Some(1));
+        assert_eq!(f.pick(std::iter::once(0)), Some(0));
+    }
+
+    #[test]
+    fn misses_release_inflight_charges() {
+        let mut a = arb(ArbitrationPolicy::FairShare, 2);
+        let t = a.pick(0..2).unwrap();
+        a.on_miss(t);
+        // Nothing granted, nothing charged: next pick repeats tenant 0.
+        assert_eq!(a.pick(0..2), Some(0));
+    }
+}

@@ -1,0 +1,1003 @@
+//! The DES substrate of scheduler-as-a-service: one deterministic event
+//! loop simulating **many concurrent DCA loops over one shared cluster**.
+//!
+//! Structure: every tenant owns a private [`WorkQueue`] + closed-form
+//! technique hosted at its placement's first rank; every rank runs at most
+//! one *worker activity* at a time (a two-phase request cycle, a lock-free
+//! fused chain, or — on ranks that host a tenant — the CPU-mediated own
+//! personality of [`crate::des`]'s flat `Sim`). Whenever a rank reaches a
+//! grant-cycle boundary it asks the session [`Arbiter`] whose loop to
+//! advance next. Because arbitration only happens at cycle boundaries and
+//! each rank is single-activity, **no rank ever executes iterations of two
+//! tenants at the same instant** — the per-rank exec spans the session can
+//! record are disjoint by construction (and tested).
+//!
+//! **Bit-identity**: with exactly one tenant (arrival 0, whole-cluster
+//! placement) the event stream — times, push order, event *count* — is
+//! identical to [`crate::des::simulate`] on the equivalent [`DesConfig`],
+//! on both the two-phase and lock-free paths. Every multi-tenant-only
+//! mechanism (arrival events, chain-continuation wakeups, cancel events)
+//! is structured to emit **zero events** in the single-tenant case: zero
+//! arrivals are bootstrapped inline, and the post-miss wakeup is only
+//! pushed on ranks attached to more than one tenant.
+
+use std::collections::VecDeque;
+
+use crate::config::{ClusterConfig, SchedPath};
+use crate::des::heap::{ns, secs, EventHeap};
+use crate::des::{min_latency_ns, DesResult};
+use crate::metrics::LoopStats;
+use crate::sched::{Assignment, StepTicket, WorkQueue};
+use crate::substrate::delay::InjectedDelay;
+use crate::substrate::topology::Topology;
+use crate::techniques::{LoopParams, Technique};
+
+use super::arbiter::{Arbiter, ArbitrationPolicy};
+use super::placement::Placement;
+use super::{TenantId, TenantRegistry, TenantSpec, TenantState};
+
+/// One multi-tenant DES session over a shared cluster.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub cluster: ClusterConfig,
+    pub policy: ArbitrationPolicy,
+    /// Grant protocol, session-wide: tenants whose technique supports the
+    /// fast path go lock-free under [`SchedPath::LockFree`]/`Auto` exactly
+    /// like the flat engine; the rest stay two-phase.
+    pub sched_path: SchedPath,
+    pub delay: InjectedDelay,
+    /// Per-PE speed factors by **global** rank (empty ⇒ all 1.0).
+    pub pe_speed: Vec<f64>,
+    pub record_assignments: bool,
+    /// Record per-rank `(start, end, tenant)` execution intervals — the
+    /// no-overlap acceptance evidence.
+    pub record_exec_spans: bool,
+    /// Record the session-wide grant order `(tenant, size)` — what the
+    /// fair-share within-one-chunk property test replays.
+    pub record_grant_trace: bool,
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl SessionConfig {
+    pub fn new(cluster: ClusterConfig) -> Self {
+        SessionConfig {
+            cluster,
+            policy: ArbitrationPolicy::default(),
+            sched_path: SchedPath::default(),
+            delay: InjectedDelay::none(),
+            pe_speed: vec![],
+            record_assignments: true,
+            record_exec_spans: false,
+            record_grant_trace: false,
+            tenants: vec![],
+        }
+    }
+
+    pub fn with_policy(mut self, policy: ArbitrationPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_sched_path(mut self, path: SchedPath) -> Self {
+        self.sched_path = path;
+        self
+    }
+
+    pub fn admit(mut self, spec: TenantSpec) -> Self {
+        self.tenants.push(spec);
+        self
+    }
+}
+
+/// One rank's recorded execution interval for one tenant (virtual ns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecSpan {
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub tenant: TenantId,
+}
+
+/// Per-tenant session result.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    pub id: TenantId,
+    pub name: String,
+    pub state: TenantState,
+    /// Virtual arrival time (s).
+    pub arrival: f64,
+    /// Absolute virtual completion time (s) — `result.t_par()`.
+    pub completion: f64,
+    /// `completion − arrival` (s).
+    pub turnaround: f64,
+    /// Iterations actually granted (= N unless evicted).
+    pub granted_iters: u64,
+    /// Iterations force-dropped by eviction.
+    pub dropped_iters: u64,
+    /// The tenant's own per-run statistics, in the same shape the
+    /// single-loop DES reports (`events` is session-wide).
+    pub result: DesResult,
+}
+
+/// The whole session's result.
+#[derive(Debug, Clone)]
+pub struct SessionOutcome {
+    pub tenants: Vec<TenantOutcome>,
+    /// Final lifecycle states (every tenant terminal).
+    pub registry: TenantRegistry,
+    /// Latest per-tenant completion (s).
+    pub makespan: f64,
+    /// Total DES events dispatched.
+    pub events: u64,
+    /// Total scheduling messages across tenants.
+    pub messages: u64,
+    /// Per global rank, in schedule order (when `record_exec_spans`).
+    pub exec_spans: Vec<Vec<ExecSpan>>,
+    /// Session-wide grant order (when `record_grant_trace`).
+    pub grant_trace: Vec<(TenantId, u64)>,
+    /// Jain index over weight-normalized granted-iteration rates.
+    pub jain_fairness: f64,
+}
+
+/// Simulate a session. Deterministic: same config ⇒ identical outcome.
+pub fn simulate_session(cfg: &SessionConfig) -> anyhow::Result<SessionOutcome> {
+    let mut sim = TenantSim::new(cfg)?;
+    sim.run();
+    sim.into_outcome()
+}
+
+/// [`simulate_session`] plus per-tenant slowdowns: each tenant is re-run
+/// **solo** (arrival 0, same placement, otherwise empty cluster) and
+/// `slowdown = turnaround / solo_turnaround`. Returns
+/// `(outcome, slowdowns, mean_slowdown)`. Solo runs are memoized by loop
+/// shape, so K identical tenants cost one extra simulation.
+pub fn session_slowdowns(
+    cfg: &SessionConfig,
+) -> anyhow::Result<(SessionOutcome, Vec<f64>, f64)> {
+    let outcome = simulate_session(cfg)?;
+    let mut cache: std::collections::HashMap<String, f64> = std::collections::HashMap::new();
+    let mut slowdowns = Vec::with_capacity(cfg.tenants.len());
+    for (i, spec) in cfg.tenants.iter().enumerate() {
+        let key = format!(
+            "{}|{}|{}|{}|{:?}",
+            spec.n, spec.technique, spec.offset, spec.span, spec.cost
+        );
+        let solo = match cache.get(&key) {
+            Some(&s) => s,
+            None => {
+                let mut solo_spec = spec.clone();
+                solo_spec.arrival = 0.0;
+                solo_spec.cancel_at = None;
+                let solo_cfg = SessionConfig {
+                    tenants: vec![solo_spec],
+                    record_assignments: false,
+                    record_exec_spans: false,
+                    record_grant_trace: false,
+                    ..cfg.clone()
+                };
+                let s = simulate_session(&solo_cfg)?.tenants[0].turnaround;
+                cache.insert(key, s);
+                s
+            }
+        };
+        let t = outcome.tenants[i].turnaround;
+        slowdowns.push(if solo > 0.0 { t / solo } else { 1.0 });
+    }
+    let mean = if slowdowns.is_empty() {
+        0.0
+    } else {
+        slowdowns.iter().sum::<f64>() / slowdowns.len() as f64
+    };
+    Ok((outcome, slowdowns, mean))
+}
+
+// ---------------------------------------------------------------------------
+// events
+
+#[derive(Debug)]
+enum Ev {
+    /// Tenant arrives (only pushed for arrival > 0).
+    Arrive(TenantId),
+    /// Tenant evicted at its `cancel_at` time.
+    Cancel(TenantId),
+    /// A scheduling message arrives at a host's service queue.
+    Svc { host: u32, t: TenantId, task: SvcTask },
+    /// A rank's CPU finished its current action (≡ flat `Rank0Free`).
+    RankFree { r: u32 },
+    /// A coordinator reply reaches rank `w`.
+    Reply { w: u32, t: TenantId, reply: Reply },
+    /// Rank `w` finished its local chunk calculation (size precomputed).
+    CalcDone { w: u32, t: TenantId, step: u64, size: u64 },
+    /// Rank `w` finished executing a chunk of tenant `t`.
+    ExecDone { w: u32, t: TenantId },
+    /// A fused lock-free grant op arrives at the ledger host's NIC.
+    Nic { host: u32, t: TenantId, w: u32 },
+    /// The host NIC finished its current op.
+    NicFree { host: u32 },
+    /// Multi-tenant only: a fused miss finished notifying rank `r` — pick
+    /// the rank's next tenant. Never pushed on single-tenant ranks, so
+    /// single-tenant sessions stay event-count-identical to the flat DES.
+    ChainNext { r: u32 },
+}
+
+#[derive(Debug)]
+enum SvcTask {
+    GetStep { w: u32 },
+    Commit { w: u32, step: u64, size: u64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Reply {
+    Chunk(Assignment),
+    Step { step: u64 },
+    Done,
+}
+
+/// A rank's single worker-activity slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Act {
+    /// No activity; revived by arrivals / chain wakeups.
+    Parked,
+    /// A request/fused chain for `t` is in flight (replies, local calc and
+    /// exec all live in the event chain — the rank's CPU stays free to
+    /// serve its own tenants' scheduling requests meanwhile).
+    Wait { t: TenantId },
+    /// (Host personality) must pick a tenant at the next CPU slot.
+    NeedWork,
+    /// (Host personality) like `NeedWork` but the arbiter already charged
+    /// the pick to `t` at a chain boundary.
+    NeedWorkFor { t: TenantId },
+    /// (Host personality) holds a reserved step of its own tenant `t`;
+    /// local calculation next.
+    Calc { t: TenantId, step: u64 },
+    /// (Host personality) calculated `size`; local commit next.
+    Commit { t: TenantId, step: u64, size: u64 },
+    /// (Host personality) executing its own chunk in `breakAfter` segments.
+    Exec { t: TenantId, cursor: u64, end: u64 },
+}
+
+#[derive(Debug, Default, Clone)]
+struct TWorker {
+    chunks: u64,
+    iters: u64,
+    finish_ns: u64,
+    wait_ns: u64,
+    req_sent_ns: u64,
+}
+
+struct TenantRt {
+    queue: WorkQueue,
+    technique: Technique,
+    lockfree: bool,
+    placement: Placement,
+    arrived: bool,
+    evicting: bool,
+    host_computes: bool,
+    /// Per local rank: received its `Done` (or finished locally).
+    done: Vec<bool>,
+    done_ranks: u32,
+    participants: u32,
+    // per-tenant accounting, mirroring the flat Sim's fields
+    workers: Vec<TWorker>,
+    host_cpu_finish_ns: u64,
+    host_service_ns: u64,
+    messages: u64,
+    intra_msgs: u64,
+    inter_msgs: u64,
+    assignments: Vec<Assignment>,
+    chunks_granted: u64,
+    fast_grants: u64,
+    granted_iters: u64,
+    dropped_iters: u64,
+}
+
+struct RankRt {
+    attached: Vec<TenantId>,
+    svc: VecDeque<(TenantId, SvcTask)>,
+    busy: bool,
+    act: Act,
+    nic: VecDeque<(TenantId, u32)>,
+    nic_busy: bool,
+}
+
+struct TenantSim<'a> {
+    cfg: &'a SessionConfig,
+    topo: Topology,
+    heap: EventHeap<Ev>,
+    now: u64,
+    tenants: Vec<TenantRt>,
+    ranks: Vec<RankRt>,
+    arbiter: Arbiter,
+    registry: TenantRegistry,
+    events: u64,
+    exec_spans: Vec<Vec<ExecSpan>>,
+    grant_trace: Vec<(TenantId, u64)>,
+}
+
+impl<'a> TenantSim<'a> {
+    fn new(cfg: &'a SessionConfig) -> anyhow::Result<Self> {
+        let cluster_ranks = cfg.cluster.total_ranks();
+        anyhow::ensure!(!cfg.tenants.is_empty(), "session admits no tenants");
+        anyhow::ensure!(cluster_ranks > 0, "session over an empty cluster");
+        let host_computes = cfg.cluster.break_after > 0;
+        let mut registry = TenantRegistry::new();
+        let mut arbiter = Arbiter::new(cfg.policy);
+        let mut tenants = Vec::with_capacity(cfg.tenants.len());
+        let mut ranks: Vec<RankRt> = (0..cluster_ranks)
+            .map(|_| RankRt {
+                attached: vec![],
+                svc: VecDeque::new(),
+                busy: false,
+                act: Act::Parked,
+                nic: VecDeque::new(),
+                nic_busy: false,
+            })
+            .collect();
+        for spec in &cfg.tenants {
+            anyhow::ensure!(spec.n > 0, "tenant '{}': empty loop", spec.name);
+            anyhow::ensure!(
+                spec.technique.has_closed_form(),
+                "tenant '{}': {} has no closed form — measurement-coupled \
+                 sizing (AF) is not admitted to multi-tenant sessions",
+                spec.name,
+                spec.technique
+            );
+            anyhow::ensure!(
+                spec.arrival.is_finite() && spec.arrival >= 0.0,
+                "tenant '{}': bad arrival {}",
+                spec.name,
+                spec.arrival
+            );
+            if let Some(c) = spec.cancel_at {
+                anyhow::ensure!(
+                    c.is_finite() && c >= 0.0,
+                    "tenant '{}': bad cancel_at {c}",
+                    spec.name
+                );
+            }
+            let placement = Placement::block(spec.offset, spec.span, cluster_ranks)
+                .map_err(|e| anyhow::anyhow!("tenant '{}': {e}", spec.name))?;
+            anyhow::ensure!(
+                host_computes || placement.span() > 1,
+                "tenant '{}': a dedicated host (breakAfter=0) on a \
+                 single-rank placement would execute nothing",
+                spec.name
+            );
+            let id = registry.attach(spec.clone());
+            registry.place(id, placement.clone())?;
+            arbiter.register(id, spec.weight, spec.priority, ns(spec.arrival));
+            let span = placement.span();
+            let params = LoopParams::new(spec.n, span);
+            let technique = Technique::new(spec.technique, &params);
+            let lockfree =
+                cfg.sched_path.wants_lockfree() && spec.technique.supports_fast_path();
+            let participants = if host_computes { span } else { span - 1 };
+            for (li, &r) in placement.ranks().iter().enumerate() {
+                if li > 0 || host_computes {
+                    ranks[r as usize].attached.push(id);
+                }
+            }
+            tenants.push(TenantRt {
+                queue: WorkQueue::from_params(&params),
+                technique,
+                lockfree,
+                placement,
+                arrived: false,
+                evicting: false,
+                host_computes,
+                done: vec![false; span as usize],
+                done_ranks: 0,
+                participants,
+                workers: vec![TWorker::default(); span as usize],
+                host_cpu_finish_ns: 0,
+                host_service_ns: 0,
+                messages: 0,
+                intra_msgs: 0,
+                inter_msgs: 0,
+                assignments: if cfg.record_assignments {
+                    Vec::with_capacity(64.min(spec.n as usize))
+                } else {
+                    Vec::new()
+                },
+                chunks_granted: 0,
+                fast_grants: 0,
+                granted_iters: 0,
+                dropped_iters: 0,
+            });
+        }
+        let p = cluster_ranks as usize;
+        Ok(TenantSim {
+            cfg,
+            topo: Topology::new(&cfg.cluster),
+            heap: EventHeap::for_latency_scale(2 * p, min_latency_ns(&cfg.cluster)),
+            now: 0,
+            tenants,
+            ranks,
+            arbiter,
+            registry,
+            events: 0,
+            exec_spans: if cfg.record_exec_spans { vec![Vec::new(); p] } else { vec![] },
+            grant_trace: Vec::new(),
+        })
+    }
+
+    fn speed(&self, w: u32) -> f64 {
+        self.cfg.pe_speed.get(w as usize).copied().unwrap_or(1.0).max(1e-9)
+    }
+
+    fn lat_ns(&self, a: u32, b: u32) -> u64 {
+        ns(self.topo.latency(a, b))
+    }
+
+    fn exec_ns(&self, t: TenantId, w: u32, a: Assignment) -> u64 {
+        ns(self.cfg.tenants[t as usize].cost.range_cost(a.start, a.size) / self.speed(w))
+    }
+
+    fn host_of(&self, t: TenantId) -> u32 {
+        self.tenants[t as usize].placement.host()
+    }
+
+    fn local_of(&self, t: TenantId, r: u32) -> usize {
+        self.tenants[t as usize]
+            .placement
+            .local_of(r)
+            .expect("rank is in the tenant's placement")
+    }
+
+    fn record_span(&mut self, r: u32, t: TenantId, start_ns: u64, end_ns: u64) {
+        if self.cfg.record_exec_spans {
+            self.exec_spans[r as usize].push(ExecSpan { start_ns, end_ns, tenant: t });
+        }
+    }
+
+    /// Tenants rank `r` could draw work for right now: arrived, attached as
+    /// a computing participant, and not yet individually done at `r`.
+    /// Drained-but-unnotified tenants stay eligible — the rank's next
+    /// request collects its `Done`.
+    fn eligible(&self, r: u32) -> Vec<TenantId> {
+        self.ranks[r as usize]
+            .attached
+            .iter()
+            .copied()
+            .filter(|&t| {
+                let tn = &self.tenants[t as usize];
+                tn.arrived && !tn.done[self.local_of(t, r)]
+            })
+            .collect()
+    }
+
+    // -- bootstrap ----------------------------------------------------------
+
+    fn run(&mut self) {
+        // Zero-arrival tenants bootstrap inline (id order) — no Arrive
+        // event, keeping single-tenant sessions event-count-identical to
+        // the flat Sim. Later arrivals and cancels become events.
+        for t in 0..self.tenants.len() as TenantId {
+            let arrival = self.cfg.tenants[t as usize].arrival;
+            if arrival == 0.0 {
+                self.tenant_arrive(t);
+            } else {
+                self.heap.push(ns(arrival), Ev::Arrive(t));
+            }
+        }
+        for t in 0..self.tenants.len() as TenantId {
+            if let Some(c) = self.cfg.tenants[t as usize].cancel_at {
+                self.heap.push(ns(c), Ev::Cancel(t));
+            }
+        }
+        while let Some((at, ev)) = self.heap.pop() {
+            debug_assert!(at >= self.now, "time went backwards");
+            self.now = at;
+            self.events += 1;
+            self.dispatch(ev);
+        }
+    }
+
+    fn tenant_arrive(&mut self, t: TenantId) {
+        if self.tenants[t as usize].evicting {
+            return; // cancelled before it ever arrived
+        }
+        self.tenants[t as usize].arrived = true;
+        self.registry.advance(t, TenantState::Running).expect("placed → running");
+        let (span, host, lockfree) = {
+            let tn = &self.tenants[t as usize];
+            (tn.placement.span(), tn.placement.host(), tn.lockfree)
+        };
+        // Workers first, host last — the flat Sim's bootstrap push order.
+        for li in 1..span {
+            let r = self.tenants[t as usize].placement.ranks()[li as usize];
+            if self.ranks[r as usize].act == Act::Parked {
+                self.start_next(r);
+            }
+        }
+        if lockfree {
+            // No host CPU personality at all on the fast path (flat mirror:
+            // `own = Finished`, no Rank0Free push).
+            if self.tenants[t as usize].host_computes
+                && self.ranks[host as usize].act == Act::Parked
+            {
+                self.start_next(host);
+            }
+        } else {
+            if self.tenants[t as usize].host_computes
+                && self.ranks[host as usize].act == Act::Parked
+            {
+                self.ranks[host as usize].act = Act::NeedWork;
+            }
+            // The flat Sim pushes Rank0Free at boot unconditionally (it
+            // fires into the Finished arm when the host is dedicated).
+            if !self.ranks[host as usize].busy {
+                self.heap.push(self.now, Ev::RankFree { r: host });
+                self.ranks[host as usize].busy = true;
+            }
+        }
+    }
+
+    fn tenant_cancel(&mut self, t: TenantId) {
+        let state = self.registry.get(t).expect("registered").state;
+        if state.is_terminal() {
+            return;
+        }
+        let dropped = self.tenants[t as usize].queue.drain_remaining();
+        self.tenants[t as usize].dropped_iters += dropped;
+        if !self.tenants[t as usize].arrived {
+            // Never ran: straight to Evicted; its Arrive event will no-op.
+            self.tenants[t as usize].evicting = true;
+            self.registry.detach(t).expect("non-terminal → evicted");
+            return;
+        }
+        if dropped > 0 {
+            self.tenants[t as usize].evicting = true;
+            self.note_drained(t);
+        }
+        // dropped == 0: the loop was already fully granted — the tenant
+        // finishes normally as Completed.
+    }
+
+    /// First observation of "every iteration assigned": `Running → Draining`.
+    fn note_drained(&mut self, t: TenantId) {
+        if self.registry.get(t).expect("registered").state == TenantState::Running {
+            self.registry.advance(t, TenantState::Draining).expect("running → draining");
+        }
+    }
+
+    /// Rank `r` (local index of `t`) has no more work for `t`.
+    fn mark_done(&mut self, t: TenantId, r: u32) {
+        let li = self.local_of(t, r);
+        let tn = &mut self.tenants[t as usize];
+        if tn.done[li] {
+            return;
+        }
+        tn.done[li] = true;
+        tn.done_ranks += 1;
+        if tn.done_ranks == tn.participants {
+            let terminal =
+                if tn.evicting { TenantState::Evicted } else { TenantState::Completed };
+            self.registry.advance(t, terminal).expect("draining → terminal");
+        }
+    }
+
+    // -- messaging ----------------------------------------------------------
+
+    fn count_msg(&mut self, t: TenantId, w: u32) {
+        let host = self.host_of(t);
+        let tn = &mut self.tenants[t as usize];
+        tn.messages += 1;
+        if self.topo.node_of(w) == self.topo.node_of(host) {
+            tn.intra_msgs += 1;
+        } else {
+            tn.inter_msgs += 1;
+        }
+    }
+
+    fn send_reply(&mut self, t: TenantId, w: u32, reply: Reply, at: u64) {
+        self.count_msg(t, w);
+        let host = self.host_of(t);
+        self.heap.push(at + self.lat_ns(host, w), Ev::Reply { w, t, reply });
+    }
+
+    fn send_getstep(&mut self, r: u32, t: TenantId) {
+        let li = self.local_of(t, r);
+        self.tenants[t as usize].workers[li].req_sent_ns = self.now;
+        self.count_msg(t, r);
+        let host = self.host_of(t);
+        let at = self.now + self.lat_ns(r, host);
+        self.heap.push(at, Ev::Svc { host, t, task: SvcTask::GetStep { w: r } });
+    }
+
+    fn send_fused(&mut self, r: u32, t: TenantId) {
+        let host = self.host_of(t);
+        let at = self.now + self.lat_ns(r, host);
+        self.heap.push(at, Ev::Nic { host, t, w: r });
+    }
+
+    /// Grant-cycle boundary on rank `r`: ask the arbiter whose loop to
+    /// advance next and launch that tenant's protocol. Remote and
+    /// lock-free work starts as an event chain; a rank picking its OWN
+    /// tenant hands the (already charged) pick to its CPU personality.
+    fn start_next(&mut self, r: u32) {
+        let eligible = self.eligible(r);
+        match self.arbiter.pick(eligible.into_iter()) {
+            None => self.ranks[r as usize].act = Act::Parked,
+            Some(t) if self.tenants[t as usize].lockfree => {
+                self.ranks[r as usize].act = Act::Wait { t };
+                self.send_fused(r, t);
+            }
+            Some(t) if self.host_of(t) == r => {
+                self.ranks[r as usize].act = Act::NeedWorkFor { t };
+                if !self.ranks[r as usize].busy {
+                    self.heap.push(self.now, Ev::RankFree { r });
+                    self.ranks[r as usize].busy = true;
+                }
+            }
+            Some(t) => {
+                self.ranks[r as usize].act = Act::Wait { t };
+                self.send_getstep(r, t);
+            }
+        }
+    }
+
+    // -- dispatch -----------------------------------------------------------
+
+    fn dispatch(&mut self, ev: Ev) {
+        match ev {
+            Ev::Arrive(t) => self.tenant_arrive(t),
+            Ev::Cancel(t) => self.tenant_cancel(t),
+            Ev::Svc { host, t, task } => {
+                self.ranks[host as usize].svc.push_back((t, task));
+                if !self.ranks[host as usize].busy {
+                    self.heap.push(self.now, Ev::RankFree { r: host });
+                    self.ranks[host as usize].busy = true;
+                }
+            }
+            Ev::RankFree { r } => self.rank_next_action(r),
+            Ev::Reply { w, t, reply } => self.worker_on_reply(w, t, reply),
+            Ev::CalcDone { w, t, step, size } => {
+                self.count_msg(t, w);
+                let host = self.host_of(t);
+                let at = self.now + self.lat_ns(w, host);
+                self.heap.push(at, Ev::Svc { host, t, task: SvcTask::Commit { w, step, size } });
+            }
+            Ev::ExecDone { w, t } => {
+                let li = self.local_of(t, w);
+                self.tenants[t as usize].workers[li].finish_ns = self.now;
+                self.start_next(w);
+            }
+            Ev::Nic { host, t, w } => {
+                self.ranks[host as usize].nic.push_back((t, w));
+                if !self.ranks[host as usize].nic_busy {
+                    self.heap.push(self.now, Ev::NicFree { host });
+                    self.ranks[host as usize].nic_busy = true;
+                }
+            }
+            Ev::NicFree { host } => self.nic_next_op(host),
+            Ev::ChainNext { r } => self.start_next(r),
+        }
+    }
+
+    // -- a host rank's serial CPU (mirror of the flat Sim's rank 0) ---------
+
+    fn rank_next_action(&mut self, r: u32) {
+        // Priority 1: pending service requests for tenants hosted here.
+        if let Some((t, task)) = self.ranks[r as usize].svc.pop_front() {
+            let dur_raw = self.service(r, t, task);
+            let dur = (dur_raw as f64 / self.speed(r)) as u64;
+            self.tenants[t as usize].host_service_ns += dur;
+            self.tenants[t as usize].host_cpu_finish_ns = self.now + dur;
+            self.ranks[r as usize].busy = true;
+            self.heap.push(self.now + dur, Ev::RankFree { r });
+            return;
+        }
+        // Priority 2: own worker personality.
+        let cluster_break = self.cfg.cluster.break_after.max(1) as u64;
+        match std::mem::replace(&mut self.ranks[r as usize].act, Act::Parked) {
+            Act::NeedWork => {
+                let eligible = self.eligible(r);
+                match self.arbiter.pick(eligible.into_iter()) {
+                    None => self.ranks[r as usize].busy = false,
+                    Some(t) => self.launch_pick(r, t),
+                }
+            }
+            Act::NeedWorkFor { t } => self.launch_pick(r, t),
+            Act::Calc { t, step } => {
+                let dur = ns(
+                    (self.cfg.delay.calculation_at(r, self.now) + self.cfg.cluster.calc_time)
+                        / self.speed(r),
+                );
+                let size = self.tenants[t as usize].technique.closed_chunk(step);
+                self.ranks[r as usize].act = Act::Commit { t, step, size };
+                self.finish_own(r, t, dur);
+            }
+            Act::Commit { t, step, size } => {
+                let dur = ns(
+                    (self.cfg.cluster.service_time + self.cfg.delay.assignment)
+                        / self.speed(r),
+                );
+                let ticket = StepTicket { step, remaining: 0 };
+                match self.tenants[t as usize].queue.commit(ticket, size) {
+                    Some(a) => {
+                        self.grant(t, r, a);
+                        self.ranks[r as usize].act =
+                            Act::Exec { t, cursor: a.start, end: a.end() };
+                    }
+                    None => {
+                        self.arbiter.on_miss(t);
+                        self.mark_done(t, r);
+                        self.ranks[r as usize].act = Act::NeedWork;
+                    }
+                }
+                self.finish_own(r, t, dur);
+            }
+            Act::Exec { t, cursor, end } => {
+                let seg = cluster_break.min(end - cursor);
+                let dur = ns(
+                    self.cfg.tenants[t as usize].cost.range_cost(cursor, seg) / self.speed(r),
+                );
+                self.record_span(r, t, self.now, self.now + dur);
+                let new_cursor = cursor + seg;
+                self.ranks[r as usize].act = if new_cursor < end {
+                    Act::Exec { t, cursor: new_cursor, end }
+                } else {
+                    Act::NeedWork
+                };
+                self.finish_own(r, t, dur);
+            }
+            Act::Parked => self.ranks[r as usize].busy = false,
+            Act::Wait { t } => {
+                // A chain for `t` is in flight; the CPU just goes idle and
+                // the Act must survive the mem::replace above.
+                self.ranks[r as usize].act = Act::Wait { t };
+                self.ranks[r as usize].busy = false;
+            }
+        }
+    }
+
+    /// The (charged) pick `t` starts on rank `r`'s CPU slot: the flat
+    /// NeedWork arm for the rank's own tenant, a zero-CPU chain launch for
+    /// anything else.
+    fn launch_pick(&mut self, r: u32, t: TenantId) {
+        if self.tenants[t as usize].lockfree {
+            self.ranks[r as usize].act = Act::Wait { t };
+            self.send_fused(r, t);
+            self.ranks[r as usize].busy = false;
+        } else if self.host_of(t) == r {
+            // Local GetStep: just the service bump (flat Sim mirror).
+            let dur = ns(self.cfg.cluster.service_time / self.speed(r));
+            match self.tenants[t as usize].queue.begin_step() {
+                Some(tk) => self.ranks[r as usize].act = Act::Calc { t, step: tk.step },
+                None => {
+                    self.arbiter.on_miss(t);
+                    self.note_drained(t);
+                    self.mark_done(t, r);
+                    self.ranks[r as usize].act = Act::NeedWork;
+                }
+            }
+            self.finish_own(r, t, dur);
+        } else {
+            self.ranks[r as usize].act = Act::Wait { t };
+            self.send_getstep(r, t);
+            self.ranks[r as usize].busy = false;
+        }
+    }
+
+    fn finish_own(&mut self, r: u32, t: TenantId, dur: u64) {
+        self.ranks[r as usize].busy = true;
+        self.tenants[t as usize].host_cpu_finish_ns = self.now + dur;
+        self.heap.push(self.now + dur, Ev::RankFree { r });
+    }
+
+    /// Service one queued request on host `r` for tenant `t`; returns the
+    /// raw (unscaled) CPU occupancy in ns and schedules the reply — the
+    /// flat Sim's `service()`, per tenant.
+    fn service(&mut self, _r: u32, t: TenantId, task: SvcTask) -> u64 {
+        let c = &self.cfg.cluster;
+        match task {
+            SvcTask::GetStep { w } => {
+                let dur = ns(c.service_time);
+                let reply = match self.tenants[t as usize].queue.begin_step() {
+                    Some(ticket) => Reply::Step { step: ticket.step },
+                    None => {
+                        self.arbiter.on_miss(t);
+                        self.note_drained(t);
+                        Reply::Done
+                    }
+                };
+                self.send_reply(t, w, reply, self.now + dur);
+                dur
+            }
+            SvcTask::Commit { w, step, size } => {
+                let dur = ns(c.service_time + self.cfg.delay.assignment);
+                let ticket = StepTicket { step, remaining: 0 };
+                let reply = match self.tenants[t as usize].queue.commit(ticket, size) {
+                    Some(a) => {
+                        self.grant(t, w, a);
+                        Reply::Chunk(a)
+                    }
+                    None => {
+                        self.arbiter.on_miss(t);
+                        Reply::Done
+                    }
+                };
+                self.send_reply(t, w, reply, self.now + dur);
+                dur
+            }
+        }
+    }
+
+    fn grant(&mut self, t: TenantId, w: u32, a: Assignment) {
+        let li = self.local_of(t, w);
+        {
+            let tn = &mut self.tenants[t as usize];
+            tn.chunks_granted += 1;
+            tn.granted_iters += a.size;
+            if self.cfg.record_assignments {
+                tn.assignments.push(a);
+            }
+            tn.workers[li].chunks += 1;
+            tn.workers[li].iters += a.size;
+        }
+        self.arbiter.on_grant(t, a.size);
+        if self.cfg.record_grant_trace {
+            self.grant_trace.push((t, a.size));
+        }
+        if self.tenants[t as usize].queue.is_done() {
+            self.note_drained(t);
+        }
+    }
+
+    // -- remote worker chains ----------------------------------------------
+
+    fn worker_on_reply(&mut self, w: u32, t: TenantId, reply: Reply) {
+        let li = self.local_of(t, w);
+        let sent = self.tenants[t as usize].workers[li].req_sent_ns;
+        self.tenants[t as usize].workers[li].wait_ns += self.now.saturating_sub(sent);
+        match reply {
+            Reply::Chunk(a) => {
+                let dur = self.exec_ns(t, w, a);
+                self.record_span(w, t, self.now, self.now + dur);
+                self.heap.push(self.now + dur, Ev::ExecDone { w, t });
+            }
+            Reply::Step { step } => {
+                let dur = ns(
+                    (self.cfg.delay.calculation_at(w, self.now) + self.cfg.cluster.calc_time)
+                        / self.speed(w),
+                );
+                let size = self.tenants[t as usize].technique.closed_chunk(step);
+                self.heap.push(self.now + dur, Ev::CalcDone { w, t, step, size });
+            }
+            Reply::Done => {
+                self.tenants[t as usize].workers[li].finish_ns = self.now;
+                self.mark_done(t, w);
+                self.start_next(w);
+            }
+        }
+    }
+
+    // -- ledger-host NIC (lock-free fused grants) ---------------------------
+
+    fn nic_next_op(&mut self, host: u32) {
+        let Some((t, w)) = self.ranks[host as usize].nic.pop_front() else {
+            self.ranks[host as usize].nic_busy = false;
+            return;
+        };
+        let dur = ns(self.cfg.cluster.service_time);
+        let granted = {
+            let tn = &mut self.tenants[t as usize];
+            tn.queue
+                .begin_step()
+                .map(|tk| (tk, tn.technique.closed_chunk(tk.step)))
+                .and_then(|(tk, size)| tn.queue.commit(tk, size))
+        };
+        match granted {
+            Some(a) => {
+                self.tenants[t as usize].fast_grants += 1;
+                self.grant(t, w, a);
+                let start_exec = self.now + dur + self.lat_ns(host, w);
+                let exec = self.exec_ns(t, w, a);
+                self.record_span(w, t, start_exec, start_exec + exec);
+                self.heap.push(start_exec + exec, Ev::ExecDone { w, t });
+            }
+            None => {
+                self.arbiter.on_miss(t);
+                self.note_drained(t);
+                let li = self.local_of(t, w);
+                let notify = self.now + dur + self.lat_ns(host, w);
+                self.tenants[t as usize].workers[li].finish_ns = notify;
+                self.mark_done(t, w);
+                // Multi-tenant ranks need a wakeup at notification time to
+                // pick their next tenant; single-tenant ranks just stop —
+                // zero extra events, the flat-Sim mirror.
+                if self.ranks[w as usize].attached.len() > 1 {
+                    self.heap.push(notify, Ev::ChainNext { r: w });
+                }
+            }
+        }
+        self.heap.push(self.now + dur, Ev::NicFree { host });
+        self.ranks[host as usize].nic_busy = true;
+    }
+
+    // -- results ------------------------------------------------------------
+
+    fn into_outcome(self) -> anyhow::Result<SessionOutcome> {
+        let events = self.events;
+        let mut outcomes = Vec::with_capacity(self.tenants.len());
+        let mut messages_total = 0u64;
+        let mut makespan = 0.0f64;
+        for (i, tn) in self.tenants.into_iter().enumerate() {
+            let id = i as TenantId;
+            let spec = &self.cfg.tenants[i];
+            let state = self.registry.get(id).expect("registered").state;
+            anyhow::ensure!(
+                state.is_terminal(),
+                "tenant '{}' ended non-terminal ({state}) — session deadlock",
+                spec.name
+            );
+            let mut finish: Vec<f64> = tn.workers.iter().map(|w| secs(w.finish_ns)).collect();
+            finish[0] = finish[0].max(secs(tn.host_cpu_finish_ns));
+            let wait: f64 = tn.workers.iter().map(|w| secs(w.wait_ns)).sum();
+            let result = DesResult {
+                stats: LoopStats::from_finish_times(
+                    &finish,
+                    tn.chunks_granted,
+                    wait,
+                    tn.messages,
+                ),
+                finish,
+                rank0_service_busy: secs(tn.host_service_ns),
+                assignments: tn.assignments,
+                rma_ops: 0,
+                intra_node_messages: tn.intra_msgs,
+                inter_node_messages: tn.inter_msgs,
+                level_messages: vec![tn.messages],
+                fast_grants: tn.fast_grants,
+                events,
+                switch_events: vec![],
+            };
+            messages_total += tn.messages;
+            let completion = result.t_par();
+            makespan = makespan.max(completion);
+            outcomes.push(TenantOutcome {
+                id,
+                name: spec.name.clone(),
+                state,
+                arrival: spec.arrival,
+                completion,
+                turnaround: (completion - spec.arrival).max(0.0),
+                granted_iters: tn.granted_iters,
+                dropped_iters: tn.dropped_iters,
+                result,
+            });
+        }
+        let jain_fairness = jain_index(
+            &outcomes
+                .iter()
+                .zip(&self.cfg.tenants)
+                .filter(|(o, _)| o.turnaround > 0.0 && o.granted_iters > 0)
+                .map(|(o, s)| o.granted_iters as f64 / (s.weight.max(1) as f64 * o.turnaround))
+                .collect::<Vec<_>>(),
+        );
+        Ok(SessionOutcome {
+            tenants: outcomes,
+            registry: self.registry,
+            makespan,
+            events,
+            messages: messages_total,
+            exec_spans: self.exec_spans,
+            grant_trace: self.grant_trace,
+            jain_fairness,
+        })
+    }
+}
+
+/// Jain's fairness index `(Σx)² / (n·Σx²)` — 1.0 means perfectly even
+/// weighted rates (and, by convention, an empty sample).
+fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let s: f64 = xs.iter().sum();
+    let s2: f64 = xs.iter().map(|x| x * x).sum();
+    if s2 <= 0.0 {
+        return 1.0;
+    }
+    (s * s) / (xs.len() as f64 * s2)
+}

@@ -1,0 +1,322 @@
+//! Scheduler-as-a-service: a **multi-tenant session** layer that admits
+//! many concurrent self-scheduled loops over ONE shared cluster.
+//!
+//! Every engine below this module owns the process for the lifetime of
+//! exactly one loop. The paper's point (arXiv 2101.07050) is that DCA
+//! removes the central chunk-calculation bottleneck precisely so the
+//! scheduling state can live near the workers — which is also what makes
+//! the state *shareable*: a rank can hold several per-tenant ledgers and
+//! decide, each time it goes idle, whose loop it advances next. This
+//! module is that decision layer:
+//!
+//! * [`TenantRegistry`] — slot map of admitted tenants with an explicit
+//!   lifecycle (`Submitted → Placed → Running → Draining →
+//!   Completed/Evicted`) and attach/detach, in the shape of neon's
+//!   pageserver tenant manager: every transition is validated, terminal
+//!   states are final, and detaching mid-flight force-drains the tenant's
+//!   [`crate::sched::WorkQueue`].
+//! * [`Placement`](placement::Placement) — maps a tenant onto a
+//!   (possibly overlapping) rank subset of the shared cluster, reusing
+//!   [`crate::config::LevelPlan`]'s `subtree_ranks`/`host_rank` math.
+//! * [`Arbiter`](arbiter::Arbiter) — the per-session arbitration policy
+//!   (fair-share weighted, strict-priority, or FIFO) consulted whenever a
+//!   rank could grant for several tenants at once.
+//! * [`des_loop`] — the DES substrate: hundreds of concurrent tenants
+//!   with staggered arrivals, seeded-deterministic, one
+//!   [`crate::des::DesResult`] per tenant. A single-tenant session is
+//!   **bit-identical** to [`crate::des::simulate`] (pinned by property
+//!   tests).
+//! * [`scheduler`] — the threaded substrate:
+//!   [`Scheduler::submit`](scheduler::Scheduler::submit) /
+//!   [`poll`](scheduler::Scheduler::poll) /
+//!   [`drain`](scheduler::Scheduler::drain) with per-tenant streamed
+//!   [`crate::coordinator::RunResult`]s.
+
+pub mod arbiter;
+pub mod des_loop;
+pub mod placement;
+pub mod scheduler;
+pub mod spec;
+
+use crate::techniques::TechniqueKind;
+use crate::workload::IterationCost;
+
+pub use arbiter::{Arbiter, ArbitrationPolicy};
+pub use des_loop::{
+    session_slowdowns, simulate_session, SessionConfig, SessionOutcome, TenantOutcome,
+};
+pub use placement::Placement;
+pub use scheduler::{JobSpec, Scheduler, SchedulerOptions};
+pub use spec::parse_session_spec;
+
+/// Session-scoped tenant handle (index into the registry's slot map).
+pub type TenantId = u32;
+
+/// Tenant lifecycle, in admission order. Transitions only ever move
+/// forward; `Completed` and `Evicted` are terminal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum TenantState {
+    /// Attached to the registry; placement not yet resolved.
+    Submitted,
+    /// Placement resolved against the shared cluster; waiting for arrival
+    /// (DES) or a first grant (threaded).
+    Placed,
+    /// At least one chunk of its loop is in flight.
+    Running,
+    /// Every iteration is assigned (or force-dropped); outstanding `Done`
+    /// notifications are still propagating to its ranks.
+    Draining,
+    /// All participating ranks finished; the full loop was covered.
+    Completed,
+    /// Detached/cancelled before covering its loop; the granted prefix is
+    /// still exactly scheduled.
+    Evicted,
+}
+
+impl TenantState {
+    pub fn name(self) -> &'static str {
+        match self {
+            TenantState::Submitted => "submitted",
+            TenantState::Placed => "placed",
+            TenantState::Running => "running",
+            TenantState::Draining => "draining",
+            TenantState::Completed => "completed",
+            TenantState::Evicted => "evicted",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, TenantState::Completed | TenantState::Evicted)
+    }
+
+    /// Is `self → next` a legal lifecycle edge? Forward-only, with
+    /// `Evicted` reachable from every non-terminal state (detach/cancel)
+    /// and `Completed` only via `Draining`.
+    pub fn can_advance_to(self, next: TenantState) -> bool {
+        use TenantState::*;
+        match (self, next) {
+            (Submitted, Placed) => true,
+            (Placed, Running) => true,
+            (Running, Draining) => true,
+            (Draining, Completed) => true,
+            (Submitted | Placed | Running | Draining, Evicted) => true,
+            _ => false,
+        }
+    }
+}
+
+impl std::fmt::Display for TenantState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One tenant's loop + scheduling contract, as submitted to a session.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Loop size N.
+    pub n: u64,
+    /// DLS technique (closed-form only — AF's measurement-coupled sizing
+    /// is not admitted to shared sessions).
+    pub technique: TechniqueKind,
+    /// Virtual arrival time (s) in the DES session; 0 = present at boot.
+    pub arrival: f64,
+    /// Fair-share weight (≥ 1): a weight-2 tenant is entitled to twice the
+    /// granted-iteration rate of a weight-1 tenant under contention.
+    pub weight: u64,
+    /// Strict-priority class (lower = more urgent; ties by arrival, id).
+    pub priority: u32,
+    /// First cluster rank of the placement block (wraps around).
+    pub offset: u32,
+    /// Placement span in ranks; 0 = the whole cluster.
+    pub span: u32,
+    /// Per-iteration execution-time model of this tenant's loop body.
+    pub cost: IterationCost,
+    /// Evict (force-drain) the tenant at this virtual time, if ever.
+    pub cancel_at: Option<f64>,
+}
+
+impl TenantSpec {
+    pub fn new(name: impl Into<String>, n: u64, technique: TechniqueKind) -> Self {
+        TenantSpec {
+            name: name.into(),
+            n,
+            technique,
+            arrival: 0.0,
+            weight: 1,
+            priority: 0,
+            offset: 0,
+            span: 0,
+            cost: IterationCost::Constant(1e-6),
+            cancel_at: None,
+        }
+    }
+
+    pub fn arriving_at(mut self, t: f64) -> Self {
+        self.arrival = t;
+        self
+    }
+
+    pub fn weighted(mut self, w: u64) -> Self {
+        self.weight = w.max(1);
+        self
+    }
+
+    pub fn with_priority(mut self, class: u32) -> Self {
+        self.priority = class;
+        self
+    }
+
+    /// Place on the block of `span` ranks starting at `offset` (wrapping).
+    pub fn placed_at(mut self, offset: u32, span: u32) -> Self {
+        self.offset = offset;
+        self.span = span;
+        self
+    }
+
+    pub fn with_cost(mut self, cost: IterationCost) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    pub fn cancelled_at(mut self, t: f64) -> Self {
+        self.cancel_at = Some(t);
+        self
+    }
+}
+
+/// One registry slot: the spec, its resolved placement, and where the
+/// tenant sits in its lifecycle.
+#[derive(Debug, Clone)]
+pub struct TenantEntry {
+    pub id: TenantId,
+    pub spec: TenantSpec,
+    pub state: TenantState,
+    pub placement: Option<Placement>,
+}
+
+/// Slot map of a session's tenants with validated lifecycle transitions —
+/// the bookkeeping half of scheduler-as-a-service, shared by both
+/// substrates. Slots are append-only (ids stay stable for the session);
+/// detach marks the slot `Evicted` rather than reusing it.
+#[derive(Debug, Default, Clone)]
+pub struct TenantRegistry {
+    slots: Vec<TenantEntry>,
+}
+
+impl TenantRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit a tenant in `Submitted` state; returns its stable id.
+    pub fn attach(&mut self, spec: TenantSpec) -> TenantId {
+        let id = self.slots.len() as TenantId;
+        self.slots.push(TenantEntry { id, spec, state: TenantState::Submitted, placement: None });
+        id
+    }
+
+    /// Resolve the tenant's placement: `Submitted → Placed`.
+    pub fn place(&mut self, id: TenantId, placement: Placement) -> anyhow::Result<()> {
+        let entry = self.entry_mut(id)?;
+        anyhow::ensure!(
+            entry.state == TenantState::Submitted,
+            "tenant {id} ({}) is {}, not submitted",
+            entry.spec.name,
+            entry.state
+        );
+        entry.placement = Some(placement);
+        entry.state = TenantState::Placed;
+        Ok(())
+    }
+
+    /// Advance the lifecycle along a validated edge.
+    pub fn advance(&mut self, id: TenantId, to: TenantState) -> anyhow::Result<()> {
+        let entry = self.entry_mut(id)?;
+        anyhow::ensure!(
+            entry.state.can_advance_to(to),
+            "tenant {id} ({}): illegal lifecycle transition {} → {}",
+            entry.spec.name,
+            entry.state,
+            to
+        );
+        entry.state = to;
+        Ok(())
+    }
+
+    /// Detach a tenant: any non-terminal state → `Evicted`. The caller is
+    /// responsible for force-draining its work queue (the registry only
+    /// tracks lifecycle).
+    pub fn detach(&mut self, id: TenantId) -> anyhow::Result<()> {
+        self.advance(id, TenantState::Evicted)
+    }
+
+    pub fn get(&self, id: TenantId) -> Option<&TenantEntry> {
+        self.slots.get(id as usize)
+    }
+
+    fn entry_mut(&mut self, id: TenantId) -> anyhow::Result<&mut TenantEntry> {
+        let n = self.slots.len();
+        self.slots
+            .get_mut(id as usize)
+            .ok_or_else(|| anyhow::anyhow!("tenant {id} not in registry ({n} slots)"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TenantEntry> {
+        self.slots.iter()
+    }
+
+    /// How many tenants currently sit in `state`.
+    pub fn count_in(&self, state: TenantState) -> usize {
+        self.slots.iter().filter(|e| e.state == state).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_edges_are_validated() {
+        let mut reg = TenantRegistry::new();
+        let id = reg.attach(TenantSpec::new("a", 100, TechniqueKind::Gss));
+        assert_eq!(reg.get(id).unwrap().state, TenantState::Submitted);
+        // Cannot run before being placed.
+        assert!(reg.advance(id, TenantState::Running).is_err());
+        reg.place(id, Placement::block(0, 4, 4).unwrap()).unwrap();
+        reg.advance(id, TenantState::Running).unwrap();
+        // No going backwards, no skipping to Completed.
+        assert!(reg.advance(id, TenantState::Placed).is_err());
+        assert!(reg.advance(id, TenantState::Completed).is_err());
+        reg.advance(id, TenantState::Draining).unwrap();
+        reg.advance(id, TenantState::Completed).unwrap();
+        // Terminal states are final — even detach refuses.
+        assert!(reg.detach(id).is_err());
+    }
+
+    #[test]
+    fn detach_evicts_from_any_nonterminal_state() {
+        let mut reg = TenantRegistry::new();
+        for _ in 0..3 {
+            reg.attach(TenantSpec::new("t", 10, TechniqueKind::Ss));
+        }
+        reg.place(1, Placement::block(0, 2, 8).unwrap()).unwrap();
+        reg.advance(1, TenantState::Running).unwrap();
+        for id in 0..3 {
+            reg.detach(id).unwrap();
+            assert_eq!(reg.get(id).unwrap().state, TenantState::Evicted);
+        }
+        assert_eq!(reg.count_in(TenantState::Evicted), 3);
+        // Double-place on an evicted slot is rejected.
+        assert!(reg.place(0, Placement::block(0, 2, 8).unwrap()).is_err());
+    }
+}

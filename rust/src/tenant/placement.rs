@@ -1,0 +1,133 @@
+//! Placement: which ranks of the shared cluster a tenant's scheduling
+//! tree lands on.
+//!
+//! A placement is an ordered rank subset; index 0 is the tenant's **host**
+//! (its coordinator/ledger rank — the generalization of "rank 0" in the
+//! single-loop engines). Subsets of different tenants may overlap freely:
+//! arbitration, not placement, decides who a shared rank works for next.
+//!
+//! The rank math is [`LevelPlan`]'s: a tenant submitted with a scheduling
+//! tree occupies `subtree_ranks(0)` consecutive ranks and its per-level
+//! masters sit at `host_rank(d, j)` offsets inside the block — the same
+//! layout [`crate::hier`] uses for a whole-cluster tree, just shifted by
+//! the placement offset (with wrap-around, so a 256-rank cluster can hold
+//! staggered 96-rank blocks).
+
+use crate::config::LevelPlan;
+
+/// An ordered rank subset of the shared cluster; `ranks()[0]` hosts the
+/// tenant's ledger.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    ranks: Vec<u32>,
+}
+
+impl Placement {
+    /// The block of `span` ranks starting at `offset`, wrapping modulo
+    /// `cluster_ranks`; `span == 0` means the whole cluster.
+    pub fn block(offset: u32, span: u32, cluster_ranks: u32) -> anyhow::Result<Placement> {
+        anyhow::ensure!(cluster_ranks > 0, "placement over an empty cluster");
+        let span = if span == 0 { cluster_ranks } else { span };
+        anyhow::ensure!(
+            span <= cluster_ranks,
+            "placement span {span} exceeds the cluster's {cluster_ranks} ranks"
+        );
+        anyhow::ensure!(
+            offset < cluster_ranks,
+            "placement offset {offset} outside the cluster's {cluster_ranks} ranks"
+        );
+        let ranks = (0..span).map(|i| (offset + i) % cluster_ranks).collect();
+        Ok(Placement { ranks })
+    }
+
+    /// Place a tenant's [`LevelPlan`] at `offset`: the block spans
+    /// `plan.subtree_ranks(0)` ranks (the tree's total leaf count). Only
+    /// depth-1 plans are admitted to shared sessions today — a deeper
+    /// per-tenant tree still *places* (the masters are computable, see
+    /// [`Placement::masters`]) but the session event loops reject it.
+    pub fn from_plan(plan: &LevelPlan, offset: u32, cluster_ranks: u32) -> anyhow::Result<Placement> {
+        let span = plan.subtree_ranks(0);
+        anyhow::ensure!(span > 0, "level plan spans zero ranks");
+        Self::block(offset, span, cluster_ranks)
+    }
+
+    /// Global ranks of the plan's per-level masters inside this placement:
+    /// `(level, master_index, global_rank)` rows, reusing
+    /// [`LevelPlan::masters_at`] / [`LevelPlan::host_rank`].
+    pub fn masters(&self, plan: &LevelPlan) -> Vec<(usize, u32, u32)> {
+        let mut out = Vec::new();
+        for d in 0..plan.depth() {
+            for j in 0..plan.masters_at(d) {
+                let local = plan.host_rank(d, j) as usize;
+                if local < self.ranks.len() {
+                    out.push((d, j, self.ranks[local]));
+                }
+            }
+        }
+        out
+    }
+
+    pub fn ranks(&self) -> &[u32] {
+        &self.ranks
+    }
+
+    pub fn span(&self) -> u32 {
+        self.ranks.len() as u32
+    }
+
+    /// The tenant's coordinator/ledger rank.
+    pub fn host(&self) -> u32 {
+        self.ranks[0]
+    }
+
+    pub fn contains(&self, global: u32) -> bool {
+        self.local_of(global).is_some()
+    }
+
+    /// Tenant-local index of a global rank (0 = host), if placed here.
+    pub fn local_of(&self, global: u32) -> Option<usize> {
+        self.ranks.iter().position(|&r| r == global)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LevelSpec;
+    use crate::techniques::TechniqueKind;
+
+    #[test]
+    fn block_wraps_around_the_cluster() {
+        let p = Placement::block(6, 4, 8).unwrap();
+        assert_eq!(p.ranks(), &[6, 7, 0, 1]);
+        assert_eq!(p.host(), 6);
+        assert_eq!(p.local_of(0), Some(2));
+        assert!(!p.contains(3));
+        // span 0 = whole cluster, identity order.
+        let all = Placement::block(0, 0, 4).unwrap();
+        assert_eq!(all.ranks(), &[0, 1, 2, 3]);
+        // Oversized span and out-of-range offset are rejected.
+        assert!(Placement::block(0, 9, 8).is_err());
+        assert!(Placement::block(8, 2, 8).is_err());
+    }
+
+    #[test]
+    fn plan_placement_reuses_levelplan_rank_math() {
+        // depth-2 tree: 4 subtrees of 8 ranks = 32-rank block at offset 16.
+        let plan = LevelPlan {
+            levels: vec![
+                LevelSpec { technique: TechniqueKind::Gss, fanout: 4, latency: 2e-6 },
+                LevelSpec { technique: TechniqueKind::Ss, fanout: 8, latency: 0.5e-6 },
+            ],
+        };
+        let p = Placement::from_plan(&plan, 16, 64).unwrap();
+        assert_eq!(p.span(), 32);
+        assert_eq!(p.host(), 16);
+        let masters = p.masters(&plan);
+        // Level 0: one root at local 0; level 1: 4 masters every 8 ranks.
+        assert!(masters.contains(&(0, 0, 16)));
+        assert!(masters.contains(&(1, 1, 24)));
+        assert!(masters.contains(&(1, 3, 40)));
+        assert_eq!(masters.len(), 1 + 4);
+    }
+}

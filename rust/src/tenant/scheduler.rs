@@ -1,0 +1,530 @@
+//! The threaded substrate of scheduler-as-a-service: a resident pool of
+//! `P` worker threads draining **many** tenants' ledgers concurrently,
+//! with `submit` / `poll` / `drain` semantics instead of the one-shot
+//! [`crate::coordinator::run`].
+//!
+//! Each tenant's scheduling state is one of the engine-proven ledgers:
+//!
+//! * **Locked** — a [`WorkQueue`] + closed-form [`Technique`] behind one
+//!   mutex; reserve + size + commit happen under a single lock hold, so
+//!   the emitted schedule is the technique's canonical serial schedule no
+//!   matter how threads interleave.
+//! * **Fast** — the one-CAS-per-chunk [`AtomicLedger`] over a precomputed
+//!   [`ChunkTable`] (the [`crate::coordinator::dca`] lock-free path),
+//!   chosen when the session's [`SchedPath`] wants it and the technique
+//!   supports it.
+//!
+//! Workers pick *which* tenant to serve next from atomic granted-iteration
+//! counters (weighted fair share, strict priority, or FIFO). The pick is
+//! advisory — counters are read without a global lock — but every grant
+//! itself is exact, so coverage and checksums are deterministic even
+//! though interleaving is not. The worker that executes a tenant's last
+//! outstanding iteration assembles its [`RunResult`] and parks it for
+//! [`Scheduler::poll`] / [`Scheduler::drain`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::SchedPath;
+use crate::coordinator::{execute_chunk, RankSummary, RunResult};
+use crate::hier::protocol::{fast_len_ok, AtomicLedger};
+use crate::sched::WorkQueue;
+use crate::techniques::{ChunkTable, LoopParams, Technique, TechniqueKind, MAX_FAST_TABLE_STEPS};
+use crate::workload::Workload;
+
+use super::arbiter::ArbitrationPolicy;
+use super::placement::Placement;
+use super::{TenantId, TenantRegistry, TenantSpec, TenantState};
+
+/// One job submitted to the resident scheduler.
+pub struct JobSpec {
+    pub name: String,
+    /// Loop size; must not exceed `workload.n()`.
+    pub n: u64,
+    /// Closed-form technique (AF is rejected, as in the DES sessions).
+    pub technique: TechniqueKind,
+    /// Fair-share weight (≥ 1).
+    pub weight: u64,
+    /// Strict-priority class (lower first).
+    pub priority: u32,
+    pub workload: Arc<dyn Workload>,
+}
+
+impl JobSpec {
+    pub fn new(name: impl Into<String>, n: u64, technique: TechniqueKind, workload: Arc<dyn Workload>) -> Self {
+        JobSpec { name: name.into(), n, technique, weight: 1, priority: 0, workload }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerOptions {
+    /// Worker-thread pool size.
+    pub workers: u32,
+    pub policy: ArbitrationPolicy,
+    /// `LockFree`/`Auto` route eligible techniques through the CAS ledger.
+    pub sched_path: SchedPath,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions {
+            workers: 4,
+            policy: ArbitrationPolicy::default(),
+            sched_path: SchedPath::default(),
+        }
+    }
+}
+
+enum Ledger {
+    Locked(Mutex<(WorkQueue, Technique)>),
+    Fast(AtomicLedger),
+}
+
+struct Job {
+    id: TenantId,
+    weight: u64,
+    priority: u32,
+    n: u64,
+    workload: Arc<dyn Workload>,
+    ledger: Ledger,
+    /// Iterations granted (reserved+committed) so far — fair-share score.
+    granted: AtomicU64,
+    /// Grant attempts currently between ledger op and chunk completion.
+    /// Incremented BEFORE the ledger op (SeqCst), so an observer that sees
+    /// the ledger exhausted is guaranteed to also see any in-flight chunk
+    /// the exhausting grant produced — no early finalize.
+    inflight: AtomicU64,
+    /// Two-phase grants cost 4 messages each on the flat fabric; CAS
+    /// grants cost none — same accounting as the DES substrates.
+    messages: AtomicU64,
+    evicted: AtomicBool,
+    finalized: AtomicBool,
+    /// One summary cell per pool worker (each locked only by its owner and
+    /// once more at assembly).
+    cells: Vec<Mutex<RankSummary>>,
+    result: Mutex<Option<RunResult>>,
+    started: Instant,
+}
+
+impl Job {
+    fn exhausted(&self) -> bool {
+        match &self.ledger {
+            Ledger::Locked(m) => m.lock().expect("ledger lock").0.is_done(),
+            Ledger::Fast(l) => l.remaining() == 0,
+        }
+    }
+
+    fn live(&self) -> bool {
+        !self.finalized.load(Ordering::SeqCst) && !self.exhausted()
+    }
+}
+
+struct Shared {
+    policy: ArbitrationPolicy,
+    jobs: Mutex<Vec<Arc<Job>>>,
+    registry: Mutex<TenantRegistry>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+    workers: u32,
+}
+
+/// The resident multi-tenant scheduler.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    sched_path: SchedPath,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Scheduler {
+    pub fn new(opts: SchedulerOptions) -> Self {
+        let workers = opts.workers.max(1);
+        let shared = Arc::new(Shared {
+            policy: opts.policy,
+            jobs: Mutex::new(Vec::new()),
+            registry: Mutex::new(TenantRegistry::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            workers,
+        });
+        let handles = (0..workers)
+            .map(|rank| {
+                let s = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(rank, &s))
+            })
+            .collect();
+        Scheduler { shared, sched_path: opts.sched_path, handles }
+    }
+
+    /// Admit a job; workers start draining it immediately.
+    pub fn submit(&self, spec: JobSpec) -> anyhow::Result<TenantId> {
+        anyhow::ensure!(spec.n > 0, "job '{}': empty loop", spec.name);
+        anyhow::ensure!(
+            spec.technique.has_closed_form(),
+            "job '{}': {} has no closed form — not admitted to shared sessions",
+            spec.name,
+            spec.technique
+        );
+        anyhow::ensure!(
+            spec.n <= spec.workload.n(),
+            "job '{}': loop ({}) larger than workload ({})",
+            spec.name,
+            spec.n,
+            spec.workload.n()
+        );
+        let params = LoopParams::new(spec.n, self.shared.workers);
+        let ledger = if self.sched_path.wants_lockfree()
+            && spec.technique.supports_fast_path()
+            && fast_len_ok(spec.n)
+        {
+            match ChunkTable::build_capped(spec.technique, &params, MAX_FAST_TABLE_STEPS) {
+                Some(table) => {
+                    let l = AtomicLedger::new();
+                    l.publish(1, 0, Arc::new(table));
+                    Ledger::Fast(l)
+                }
+                None => Ledger::Locked(Mutex::new((
+                    WorkQueue::from_params(&params),
+                    Technique::new(spec.technique, &params),
+                ))),
+            }
+        } else {
+            Ledger::Locked(Mutex::new((
+                WorkQueue::from_params(&params),
+                Technique::new(spec.technique, &params),
+            )))
+        };
+        let id = {
+            let mut reg = self.shared.registry.lock().expect("registry lock");
+            let mut tspec = TenantSpec::new(spec.name.clone(), spec.n, spec.technique)
+                .weighted(spec.weight)
+                .with_priority(spec.priority);
+            tspec.cost = crate::workload::IterationCost::Constant(0.0); // wall-clock substrate
+            let id = reg.attach(tspec);
+            reg.place(id, Placement::block(0, 0, self.shared.workers)?)?;
+            reg.advance(id, TenantState::Running)?;
+            id
+        };
+        let job = Arc::new(Job {
+            id,
+            weight: spec.weight.max(1),
+            priority: spec.priority,
+            n: spec.n,
+            workload: spec.workload,
+            ledger,
+            granted: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            messages: AtomicU64::new(0),
+            evicted: AtomicBool::new(false),
+            finalized: AtomicBool::new(false),
+            cells: (0..self.shared.workers)
+                .map(|rank| Mutex::new(RankSummary { rank, ..Default::default() }))
+                .collect(),
+            result: Mutex::new(None),
+            started: Instant::now(),
+        });
+        self.shared.jobs.lock().expect("jobs lock").push(job);
+        self.shared.cv.notify_all();
+        Ok(id)
+    }
+
+    /// Take a finished tenant's result, if ready.
+    pub fn poll(&self, id: TenantId) -> Option<RunResult> {
+        let job = {
+            let jobs = self.shared.jobs.lock().expect("jobs lock");
+            jobs.get(id as usize).cloned()?
+        };
+        job.result.lock().expect("result lock").take()
+    }
+
+    /// Lifecycle state of a tenant, if admitted.
+    pub fn state(&self, id: TenantId) -> Option<TenantState> {
+        self.shared.registry.lock().expect("registry lock").get(id).map(|e| e.state)
+    }
+
+    /// Force-drain a tenant: every unassigned iteration is dropped, the
+    /// granted prefix still executes, and the tenant finishes `Evicted`.
+    /// Returns the number of iterations dropped.
+    pub fn evict(&self, id: TenantId) -> anyhow::Result<u64> {
+        let job = {
+            let jobs = self.shared.jobs.lock().expect("jobs lock");
+            jobs.get(id as usize)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("tenant {id} not admitted"))?
+        };
+        anyhow::ensure!(
+            !job.finalized.load(Ordering::SeqCst),
+            "tenant {id} already finished"
+        );
+        job.evicted.store(true, Ordering::SeqCst);
+        let dropped = match &job.ledger {
+            Ledger::Locked(m) => m.lock().expect("ledger lock").0.drain_remaining(),
+            Ledger::Fast(l) => l.freeze().map(|(_, len)| len).unwrap_or(0),
+        };
+        // A fully-idle tenant has no in-flight chunk to trigger assembly.
+        try_finalize(&job, &self.shared);
+        self.shared.cv.notify_all();
+        Ok(dropped)
+    }
+
+    /// Wait for every admitted tenant to finish, stop the pool, and return
+    /// all unpolled results in admission order.
+    pub fn drain(mut self) -> Vec<(TenantId, RunResult)> {
+        {
+            let mut jobs = self.shared.jobs.lock().expect("jobs lock");
+            loop {
+                if jobs.iter().all(|j| j.finalized.load(Ordering::SeqCst)) {
+                    break;
+                }
+                let (guard, _) = self
+                    .shared
+                    .cv
+                    .wait_timeout(jobs, Duration::from_millis(1))
+                    .expect("jobs lock");
+                jobs = guard;
+            }
+        }
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            h.join().expect("worker panicked");
+        }
+        let jobs = self.shared.jobs.lock().expect("jobs lock");
+        jobs.iter()
+            .filter_map(|j| j.result.lock().expect("result lock").take().map(|r| (j.id, r)))
+            .collect()
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Snapshot-based arbitration over the live job set (advisory — exactness
+/// lives in the grants, not the pick).
+fn pick_job(policy: ArbitrationPolicy, live: &[Arc<Job>]) -> Option<Arc<Job>> {
+    match policy {
+        ArbitrationPolicy::FairShare => live
+            .iter()
+            .min_by(|a, b| {
+                let sa = a.granted.load(Ordering::Relaxed) as u128 * b.weight as u128;
+                let sb = b.granted.load(Ordering::Relaxed) as u128 * a.weight as u128;
+                sa.cmp(&sb).then_with(|| a.id.cmp(&b.id))
+            })
+            .cloned(),
+        ArbitrationPolicy::StrictPriority => {
+            live.iter().min_by_key(|j| (j.priority, j.id)).cloned()
+        }
+        // Admission order ≡ arrival order on this substrate.
+        ArbitrationPolicy::Fifo => live.iter().min_by_key(|j| j.id).cloned(),
+    }
+}
+
+fn worker_loop(rank: u32, shared: &Shared) {
+    loop {
+        let live: Vec<Arc<Job>> = {
+            let jobs = shared.jobs.lock().expect("jobs lock");
+            jobs.iter().filter(|j| j.live()).cloned().collect()
+        };
+        let Some(job) = pick_job(shared.policy, &live) else {
+            if shared.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            // Park until a submit/evict/finalize nudge (timeout so an
+            // in-flight completion elsewhere can't strand us).
+            let jobs = shared.jobs.lock().expect("jobs lock");
+            let _ = shared.cv.wait_timeout(jobs, Duration::from_millis(1)).expect("jobs lock");
+            continue;
+        };
+        let t_req = Instant::now();
+        job.inflight.fetch_add(1, Ordering::SeqCst);
+        let grant = match &job.ledger {
+            Ledger::Locked(m) => {
+                let mut g = m.lock().expect("ledger lock");
+                let (q, tech) = &mut *g;
+                let got = q
+                    .begin_step()
+                    .map(|tk| (tk, tech.closed_chunk(tk.step)))
+                    .and_then(|(tk, size)| q.commit(tk, size));
+                if got.is_some() {
+                    job.messages.fetch_add(4, Ordering::Relaxed);
+                }
+                got.map(|a| (a, false))
+            }
+            Ledger::Fast(l) => l.try_grant().map(|(a, _rem, _seq)| (a, true)),
+        };
+        let Some((a, fast)) = grant else {
+            // Drained under us: the tenant may be finishable right now if
+            // no other worker holds an in-flight chunk.
+            job.inflight.fetch_sub(1, Ordering::SeqCst);
+            try_finalize(&job, shared);
+            continue;
+        };
+        job.granted.fetch_add(a.size, Ordering::Relaxed);
+        let wait = t_req.elapsed().as_secs_f64();
+        let (sum, _elapsed) = execute_chunk(job.workload.as_ref(), a);
+        {
+            let mut cell = job.cells[rank as usize].lock().expect("cell lock");
+            cell.sched_wait += wait;
+            if fast {
+                cell.fast_grants += 1;
+            }
+            cell.record_chunk(sum, a);
+            cell.finish = job.started.elapsed().as_secs_f64();
+        }
+        job.inflight.fetch_sub(1, Ordering::SeqCst);
+        try_finalize(&job, shared);
+    }
+}
+
+/// Finish a tenant whose ledger is exhausted and whose every granted chunk
+/// has finished executing. Exactly one caller wins the finalized flag,
+/// assembles the [`RunResult`], and advances the lifecycle. The check
+/// order (exhausted, then inflight) plus the pre-grant inflight increment
+/// guarantees no chunk is ever in flight once both reads pass.
+fn try_finalize(job: &Arc<Job>, shared: &Shared) {
+    if !job.exhausted() {
+        return;
+    }
+    if job.inflight.load(Ordering::SeqCst) != 0 {
+        return; // someone is still between ledger op and chunk completion
+    }
+    if job.finalized.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let per_rank: Vec<RankSummary> = job
+        .cells
+        .iter()
+        .map(|c| std::mem::take(&mut *c.lock().expect("cell lock")))
+        .collect();
+    let result = RunResult::assemble(per_rank, job.messages.load(Ordering::SeqCst));
+    *job.result.lock().expect("result lock") = Some(result);
+    {
+        let mut reg = shared.registry.lock().expect("registry lock");
+        if reg.get(job.id).map(|e| e.state) == Some(TenantState::Running) {
+            reg.advance(job.id, TenantState::Draining).expect("running → draining");
+        }
+        let terminal = if job.evicted.load(Ordering::SeqCst) {
+            TenantState::Evicted
+        } else {
+            TenantState::Completed
+        };
+        reg.advance(job.id, terminal).expect("draining → terminal");
+    }
+    shared.cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{closed_form_schedule, verify_coverage};
+    use crate::workload::synthetic::{CostShape, Synthetic};
+
+    fn wl(n: u64) -> Arc<dyn Workload> {
+        Arc::new(Synthetic::new(n, 1e-8, CostShape::Jittered, 7))
+    }
+
+    /// A single job through the pool emits the technique's canonical
+    /// closed-form schedule (coverage + checksum), on both ledger kinds.
+    #[test]
+    fn single_job_matches_closed_form_schedule() {
+        for path in [SchedPath::TwoPhase, SchedPath::LockFree] {
+            let sched = Scheduler::new(SchedulerOptions {
+                workers: 4,
+                policy: ArbitrationPolicy::FairShare,
+                sched_path: path,
+            });
+            let w = wl(3_000);
+            let reference = w.execute_range(0, 3_000);
+            let id = sched
+                .submit(JobSpec::new("solo", 3_000, TechniqueKind::Gss, Arc::clone(&w)))
+                .unwrap();
+            let mut results = sched.drain();
+            assert_eq!(results.len(), 1);
+            let (rid, r) = results.remove(0);
+            assert_eq!(rid, id);
+            let got = r.sorted_assignments();
+            let params = LoopParams::new(3_000, 4);
+            let want = closed_form_schedule(&Technique::new(TechniqueKind::Gss, &params), &params);
+            assert_eq!(got, want, "canonical schedule on {path:?}");
+            verify_coverage(&got, 3_000).unwrap();
+            assert_eq!(r.checksum, reference);
+            if path == SchedPath::LockFree {
+                assert_eq!(r.fast_grants, r.stats.chunks);
+                assert_eq!(r.stats.messages, 0);
+            } else {
+                assert_eq!(r.fast_grants, 0);
+                assert_eq!(r.stats.messages, 4 * r.stats.chunks);
+            }
+        }
+    }
+
+    /// Several concurrent jobs all cover exactly; poll streams results.
+    #[test]
+    fn concurrent_jobs_cover_and_stream() {
+        let sched = Scheduler::new(SchedulerOptions::default());
+        let sizes = [2_000u64, 500, 1_200];
+        let mut ids = Vec::new();
+        for (i, &n) in sizes.iter().enumerate() {
+            let w = wl(n);
+            let spec = JobSpec::new(format!("job-{i}"), n, TechniqueKind::Fac2, w);
+            ids.push(sched.submit(spec).unwrap());
+        }
+        // Every job eventually becomes pollable.
+        let mut seen = vec![false; ids.len()];
+        let t0 = Instant::now();
+        while seen.iter().any(|s| !s) && t0.elapsed() < Duration::from_secs(30) {
+            for (i, &id) in ids.iter().enumerate() {
+                if !seen[i] {
+                    if let Some(r) = sched.poll(id) {
+                        verify_coverage(&r.sorted_assignments(), sizes[i]).unwrap();
+                        assert_eq!(sched.state(id), Some(TenantState::Completed));
+                        seen[i] = true;
+                    }
+                }
+            }
+            std::thread::yield_now();
+        }
+        assert!(seen.iter().all(|s| *s), "all jobs completed");
+        assert!(sched.drain().is_empty(), "results already streamed out");
+    }
+
+    /// Eviction drops the tail, keeps the granted prefix exactly
+    /// scheduled, and lands the tenant in `Evicted`.
+    #[test]
+    fn evicted_job_keeps_exact_granted_prefix() {
+        let sched = Scheduler::new(SchedulerOptions {
+            workers: 2,
+            policy: ArbitrationPolicy::Fifo,
+            sched_path: SchedPath::TwoPhase,
+        });
+        // A big slow loop so eviction lands mid-flight.
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(200_000, 2e-7, CostShape::Uniform, 3));
+        let id = sched
+            .submit(JobSpec::new("victim", 200_000, TechniqueKind::Ss, w))
+            .unwrap();
+        while sched.state(id) == Some(TenantState::Running) {
+            let granted = {
+                let jobs = sched.shared.jobs.lock().unwrap();
+                jobs[id as usize].granted.load(Ordering::SeqCst)
+            };
+            if granted > 0 {
+                break;
+            }
+            std::thread::yield_now();
+        }
+        let dropped = sched.evict(id).unwrap();
+        let results = sched.drain();
+        let (_, r) = &results[0];
+        let granted: u64 = r.sorted_assignments().iter().map(|a| a.size).sum();
+        assert_eq!(granted + dropped, 200_000);
+        verify_coverage(&r.sorted_assignments(), granted).unwrap();
+    }
+}

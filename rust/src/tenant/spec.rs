@@ -1,0 +1,191 @@
+//! Session spec files and session result export.
+//!
+//! A session spec is a JSON object naming the arbitration policy and the
+//! tenant list; everything placement/technique-shaped a tenant can carry
+//! is settable per entry:
+//!
+//! ```json
+//! {
+//!   "policy": "fair",
+//!   "sched_path": "two-phase",
+//!   "tenants": [
+//!     { "name": "bulk", "n": 40000, "technique": "SS",
+//!       "arrival": 0.0, "weight": 4, "offset": 0, "span": 16,
+//!       "cost": 1.0e-5 },
+//!     { "name": "spike", "n": 800, "technique": "GSS",
+//!       "arrival": 0.002, "priority": 1, "cancel_at": 0.5 }
+//!   ]
+//! }
+//! ```
+//!
+//! Only `name`, `n` and `technique` are required; the rest default to the
+//! [`TenantSpec::new`] defaults (arrive at boot, weight 1, whole cluster,
+//! constant 1 µs iterations). `cost` is the constant per-iteration time in
+//! seconds — richer cost models are API-only.
+
+use crate::config::{ClusterConfig, SchedPath};
+use crate::report::json::Json;
+use crate::techniques::TechniqueKind;
+use crate::workload::IterationCost;
+
+use super::arbiter::ArbitrationPolicy;
+use super::des_loop::{SessionConfig, SessionOutcome};
+use super::TenantSpec;
+
+/// Parse a session spec document against a cluster chosen by the caller.
+pub fn parse_session_spec(text: &str, cluster: ClusterConfig) -> anyhow::Result<SessionConfig> {
+    let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("bad session spec JSON: {e}"))?;
+    let mut cfg = SessionConfig::new(cluster);
+    if let Some(p) = doc.get("policy").and_then(Json::as_str) {
+        cfg.policy = ArbitrationPolicy::parse(p)?;
+    }
+    if let Some(p) = doc.get("sched_path").and_then(Json::as_str) {
+        cfg.sched_path = SchedPath::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown sched_path '{p}' (two-phase|lockfree|auto)"))?;
+    }
+    let Some(Json::Arr(entries)) = doc.get("tenants") else {
+        anyhow::bail!("session spec needs a \"tenants\" array");
+    };
+    anyhow::ensure!(!entries.is_empty(), "session spec admits no tenants");
+    for (i, entry) in entries.iter().enumerate() {
+        cfg.tenants.push(parse_tenant(entry, i)?);
+    }
+    Ok(cfg)
+}
+
+fn parse_tenant(entry: &Json, i: usize) -> anyhow::Result<TenantSpec> {
+    let name = entry
+        .get("name")
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("tenant-{i}"));
+    let n = entry
+        .get("n")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("tenant '{name}': missing loop size \"n\""))?;
+    let tech_name = entry
+        .get("technique")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("tenant '{name}': missing \"technique\""))?;
+    let technique = TechniqueKind::parse(tech_name)
+        .ok_or_else(|| anyhow::anyhow!("tenant '{name}': unknown technique '{tech_name}'"))?;
+    let mut spec = TenantSpec::new(name, n, technique);
+    if let Some(a) = entry.get("arrival").and_then(Json::as_f64) {
+        spec.arrival = a;
+    }
+    if let Some(w) = entry.get("weight").and_then(Json::as_u64) {
+        spec.weight = w.max(1);
+    }
+    if let Some(p) = entry.get("priority").and_then(Json::as_u64) {
+        spec.priority = p as u32;
+    }
+    if let Some(o) = entry.get("offset").and_then(Json::as_u64) {
+        spec.offset = o as u32;
+    }
+    if let Some(s) = entry.get("span").and_then(Json::as_u64) {
+        spec.span = s as u32;
+    }
+    if let Some(c) = entry.get("cost").and_then(Json::as_f64) {
+        anyhow::ensure!(
+            c.is_finite() && c > 0.0,
+            "tenant '{}': cost must be a positive per-iteration time, got {c}",
+            spec.name
+        );
+        spec.cost = IterationCost::Constant(c);
+    }
+    if let Some(c) = entry.get("cancel_at").and_then(Json::as_f64) {
+        spec.cancel_at = Some(c);
+    }
+    Ok(spec)
+}
+
+/// Render a session's outcome (plus optional per-tenant slowdowns) as the
+/// `tenants --json` export document.
+pub fn render_session_json(
+    cfg: &SessionConfig,
+    outcome: &SessionOutcome,
+    slowdowns: Option<&[f64]>,
+) -> String {
+    let mut tenants = Vec::with_capacity(outcome.tenants.len());
+    for t in &outcome.tenants {
+        let mut obj = Json::obj()
+            .field("id", t.id as f64)
+            .field("name", t.name.as_str())
+            .field("state", t.state.name())
+            .field("technique", cfg.tenants[t.id as usize].technique.name())
+            .field("n", cfg.tenants[t.id as usize].n as f64)
+            .field("arrival", t.arrival)
+            .field("completion", t.completion)
+            .field("turnaround", t.turnaround)
+            .field("t_par", t.result.t_par())
+            .field("granted_iters", t.granted_iters as f64)
+            .field("dropped_iters", t.dropped_iters as f64)
+            .field("chunks", t.result.stats.chunks as f64)
+            .field("messages", t.result.stats.messages as f64)
+            .field("fast_grants", t.result.fast_grants as f64);
+        if let Some(s) = slowdowns {
+            obj = obj.field("slowdown", s[t.id as usize]);
+        }
+        tenants.push(obj);
+    }
+    let mut doc = Json::obj()
+        .field("policy", cfg.policy.name())
+        .field("ranks", cfg.cluster.total_ranks() as f64)
+        .field("tenants_admitted", outcome.tenants.len() as f64)
+        .field("makespan", outcome.makespan)
+        .field("events", outcome.events as f64)
+        .field("messages", outcome.messages as f64)
+        .field("jain_fairness", outcome.jain_fairness);
+    if let Some(s) = slowdowns {
+        let mean = if s.is_empty() { 0.0 } else { s.iter().sum::<f64>() / s.len() as f64 };
+        doc = doc.field("mean_slowdown", mean);
+    }
+    doc.field("tenants", Json::Arr(tenants)).render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trip_with_defaults() {
+        let cfg = parse_session_spec(
+            r#"{ "policy": "priority", "sched_path": "lockfree", "tenants": [
+                { "name": "bulk", "n": 40000, "technique": "SS", "weight": 4,
+                  "offset": 8, "span": 16, "cost": 1.0e-5 },
+                { "n": 800, "technique": "GSS", "arrival": 0.002,
+                  "priority": 1, "cancel_at": 0.5 }
+            ]}"#,
+            ClusterConfig::small(32),
+        )
+        .unwrap();
+        assert_eq!(cfg.policy, ArbitrationPolicy::StrictPriority);
+        assert_eq!(cfg.sched_path, SchedPath::LockFree);
+        assert_eq!(cfg.tenants.len(), 2);
+        let b = &cfg.tenants[0];
+        assert_eq!((b.name.as_str(), b.n, b.weight, b.offset, b.span), ("bulk", 40000, 4, 8, 16));
+        assert_eq!(b.technique, TechniqueKind::Ss);
+        assert_eq!(b.arrival, 0.0);
+        let s = &cfg.tenants[1];
+        assert_eq!(s.name, "tenant-1"); // defaulted name
+        assert_eq!((s.priority, s.span), (1, 0));
+        assert_eq!(s.cancel_at, Some(0.5));
+    }
+
+    #[test]
+    fn spec_rejects_malformed_documents() {
+        let c = ClusterConfig::small(4);
+        assert!(parse_session_spec("{}", c.clone()).is_err()); // no tenants
+        assert!(parse_session_spec(r#"{ "tenants": [] }"#, c.clone()).is_err());
+        assert!(parse_session_spec(
+            r#"{ "tenants": [ { "n": 10, "technique": "WAT" } ] }"#,
+            c.clone()
+        )
+        .is_err());
+        assert!(parse_session_spec(
+            r#"{ "policy": "lifo", "tenants": [ { "n": 10, "technique": "SS" } ] }"#,
+            c
+        )
+        .is_err());
+    }
+}

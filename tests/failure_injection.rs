@@ -3,7 +3,7 @@
 
 use std::sync::Arc;
 
-use dca_dls::config::{ClusterConfig, DelaySite, ExecutionModel};
+use dca_dls::config::{ClusterConfig, DelaySite, ExecutionModel, HierParams};
 use dca_dls::coordinator::{self, EngineConfig};
 use dca_dls::des::{simulate, DesConfig};
 use dca_dls::report::figures::{run_figure, App, FigureConfig};
@@ -13,24 +13,19 @@ use dca_dls::techniques::{LoopParams, TechniqueKind};
 use dca_dls::workload::synthetic::{CostShape, Synthetic};
 use dca_dls::workload::{IterationCost, Workload};
 
-fn small_des(n: u64, p: u32) -> DesConfig {
+/// A hierarchical variant of [`DesConfig::for_test`] on a `nodes × rpn`
+/// miniHPC-latency geometry.
+fn hier_des(n: u64, nodes: u32, rpn: u32) -> DesConfig {
     DesConfig {
-        sched_path: Default::default(),
-        record_assignments: true,
-        params: LoopParams::new(n, p),
-        technique: TechniqueKind::Gss,
-        model: ExecutionModel::Dca,
-        delay: InjectedDelay::none(),
-        cluster: ClusterConfig::small(p),
-        cost: IterationCost::Constant(1e-6),
-        pe_speed: vec![],
-        hier: Default::default(),
+        model: ExecutionModel::HierDca,
+        cluster: ClusterConfig { nodes, ranks_per_node: rpn, ..ClusterConfig::minihpc() },
+        ..DesConfig::for_test(n, nodes * rpn)
     }
 }
 
 #[test]
 fn des_more_ranks_than_iterations() {
-    let mut cfg = small_des(5, 32);
+    let mut cfg = DesConfig::for_test(5, 32);
     for model in [ExecutionModel::Cca, ExecutionModel::Dca, ExecutionModel::DcaRma] {
         cfg.model = model;
         let r = simulate(&cfg).unwrap();
@@ -42,14 +37,62 @@ fn des_more_ranks_than_iterations() {
 
 #[test]
 fn des_single_iteration_single_rank() {
-    let r = simulate(&small_des(1, 1)).unwrap();
+    let r = simulate(&DesConfig::for_test(1, 1)).unwrap();
     assert_eq!(r.assignments.len(), 1);
     assert_eq!(r.assignments[0].size, 1);
 }
 
 #[test]
+fn hier_more_ranks_than_iterations() {
+    // 32 ranks chasing 5 iterations through a two-level tree: most node
+    // masters receive nothing, every level must still drain cleanly.
+    let r = simulate(&hier_des(5, 4, 8)).unwrap();
+    verify_coverage(&r.sorted_assignments(), 5).unwrap();
+}
+
+#[test]
+fn hier_single_iteration_any_depth() {
+    // N=1: exactly one master wins the only chunk — at depth 2 and with a
+    // third tree level stacked on top.
+    let r = simulate(&hier_des(1, 4, 4)).unwrap();
+    verify_coverage(&r.sorted_assignments(), 1).unwrap();
+    assert_eq!(r.assignments.len(), 1);
+    let mut deep = hier_des(1, 4, 4);
+    deep.hier = HierParams::default().with_levels(3).with_fanouts(&[2, 2, 4]);
+    let r = simulate(&deep).unwrap();
+    verify_coverage(&r.sorted_assignments(), 1).unwrap();
+}
+
+#[test]
+fn hier_single_rank_cluster() {
+    // One rank IS the whole tree: coordinator, node master and worker
+    // collapse onto rank 0 (which computes, breakAfter > 0).
+    let r = simulate(&hier_des(100, 1, 1)).unwrap();
+    verify_coverage(&r.sorted_assignments(), 100).unwrap();
+}
+
+#[test]
+fn hier_zero_cost_iterations_deep_tree() {
+    // Zero-cost iterations collapse all execution onto identical
+    // timestamps; scheduling must stay deterministic and exact at depth 2
+    // and depth 3 (FIFO event ordering, not time, is the tiebreak).
+    for levels in [2u32, 3] {
+        let mut cfg = hier_des(2_000, 4, 4);
+        cfg.cost = IterationCost::Constant(0.0);
+        if levels == 3 {
+            cfg.hier = HierParams::default().with_levels(3).with_fanouts(&[2, 2, 4]);
+        }
+        let a = simulate(&cfg).unwrap_or_else(|e| panic!("depth {levels}: {e}"));
+        verify_coverage(&a.sorted_assignments(), 2_000)
+            .unwrap_or_else(|e| panic!("depth {levels}: {e}"));
+        let b = simulate(&cfg).unwrap();
+        assert_eq!(a.assignments, b.assignments, "depth {levels}: replay drifted");
+    }
+}
+
+#[test]
 fn des_extreme_slowdown_still_terminates() {
-    let mut cfg = small_des(500, 8);
+    let mut cfg = DesConfig::for_test(500, 8);
     // 50 ms each!
     cfg.delay = InjectedDelay { calculation: 0.05, assignment: 0.05, ..InjectedDelay::none() };
     for model in [ExecutionModel::Cca, ExecutionModel::Dca] {
@@ -69,7 +112,7 @@ fn des_heterogeneous_speeds() {
     // must still roughly halve STATIC's makespan (the floor is FAC2's
     // first-batch chunk on the slow PE: 3125 iters at 10×).
     let run = |tech| {
-        let mut cfg = small_des(50_000, 8);
+        let mut cfg = DesConfig::for_test(50_000, 8);
         cfg.technique = tech;
         cfg.pe_speed = vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 0.1];
         simulate(&cfg).unwrap()
@@ -95,18 +138,14 @@ fn des_master_slowdown_scenario() {
     let mut speeds = vec![1.0; 64];
     speeds[0] = 0.25; // master/coordinator 4× slower
     let mk = |model| {
-        let cluster = ClusterConfig { nodes: 4, ranks_per_node: 16, ..ClusterConfig::minihpc() };
         let cfg = DesConfig {
-            sched_path: Default::default(),
-            record_assignments: true,
-            params: LoopParams::new(65_536, 64),
             technique: TechniqueKind::Ss, // maximal scheduling traffic
             model,
             delay: InjectedDelay::calculation_only(100e-6),
-            cluster,
+            cluster: ClusterConfig { nodes: 4, ranks_per_node: 16, ..ClusterConfig::minihpc() },
             cost: IterationCost::Constant(0.002),
             pe_speed: speeds.clone(),
-            hier: Default::default(),
+            ..DesConfig::for_test(65_536, 64)
         };
         simulate(&cfg).unwrap().t_par()
     };
@@ -164,7 +203,7 @@ fn assignment_site_delay_runs_everywhere() {
 
 #[test]
 fn des_rejects_af_on_rma() {
-    let mut cfg = small_des(100, 4);
+    let mut cfg = DesConfig::for_test(100, 4);
     cfg.technique = TechniqueKind::Af;
     cfg.model = ExecutionModel::DcaRma;
     assert!(simulate(&cfg).is_err());
@@ -172,7 +211,7 @@ fn des_rejects_af_on_rma() {
 
 #[test]
 fn des_rejects_rank_mismatch() {
-    let mut cfg = small_des(100, 4);
+    let mut cfg = DesConfig::for_test(100, 4);
     cfg.params = LoopParams::new(100, 8); // ≠ cluster ranks
     assert!(simulate(&cfg).is_err());
 }

@@ -17,16 +17,15 @@ const N: u64 = 8_192;
 fn hier_cfg(kind: TechniqueKind, delay: InjectedDelay, inner: HierParams) -> DesConfig {
     let cluster = ClusterConfig::minihpc(); // 16 × 16 = 256 ranks
     DesConfig {
-        sched_path: Default::default(),
-        record_assignments: true,
-        params: LoopParams::new(N, cluster.total_ranks()),
-        technique: kind,
-        model: ExecutionModel::HierDca,
         delay,
-        cluster,
-        cost: IterationCost::Constant(1e-5),
-        pe_speed: vec![],
         hier: inner,
+        ..DesConfig::new(
+            LoopParams::new(N, cluster.total_ranks()),
+            kind,
+            ExecutionModel::HierDca,
+            cluster,
+            IterationCost::Constant(1e-5),
+        )
     }
 }
 

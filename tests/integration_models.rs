@@ -4,7 +4,7 @@
 use std::sync::Arc;
 use std::thread;
 
-use dca_dls::config::{ClusterConfig, ExecutionModel};
+use dca_dls::config::ExecutionModel;
 use dca_dls::coordinator::{self, EngineConfig};
 use dca_dls::des::{simulate, DesConfig};
 use dca_dls::lb4mpi::*;
@@ -18,18 +18,11 @@ const N: u64 = 8_192;
 const P: u32 = 4;
 
 fn des_chunk_multiset(model: ExecutionModel, kind: TechniqueKind) -> Vec<u64> {
-    let cluster = ClusterConfig::small(P);
     let cfg = DesConfig {
-        sched_path: Default::default(),
-        record_assignments: true,
-        params: LoopParams::new(N, P),
         technique: kind,
         model,
-        delay: InjectedDelay::none(),
-        cluster,
         cost: IterationCost::Constant(1e-5),
-        pe_speed: vec![],
-        hier: Default::default(),
+        ..DesConfig::for_test(N, P)
     };
     let r = simulate(&cfg).unwrap();
     let mut v: Vec<u64> = r.assignments.iter().map(|a| a.size).collect();
@@ -88,18 +81,10 @@ fn single_rank_lb4mpi_matches_des_cca() {
 }
 
 fn des_chunk_multiset_1rank(kind: TechniqueKind) -> Vec<u64> {
-    let cluster = ClusterConfig::small(1);
     let cfg = DesConfig {
-        sched_path: Default::default(),
-        record_assignments: true,
-        params: LoopParams::new(N, 1),
         technique: kind,
         model: ExecutionModel::Cca,
-        delay: InjectedDelay::none(),
-        cluster,
-        cost: IterationCost::Constant(1e-6),
-        pe_speed: vec![],
-        hier: Default::default(),
+        ..DesConfig::for_test(N, 1)
     };
     let r = simulate(&cfg).unwrap();
     r.assignments.iter().map(|a| a.size).collect()

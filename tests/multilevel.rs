@@ -407,16 +407,14 @@ fn auto_watermark_never_worse_than_fetch_on_exhaustion() {
     };
     let mk = |hier: HierParams| {
         let cfg = DesConfig {
-            sched_path: Default::default(),
-            record_assignments: true,
-            params: LoopParams::new(N, cluster.total_ranks()),
-            technique: TechniqueKind::Fac2,
-            model: ExecutionModel::HierDca,
-            delay: InjectedDelay::none(),
-            cluster: cluster.clone(),
-            cost: IterationCost::Constant(2e-5),
-            pe_speed: vec![],
             hier,
+            ..DesConfig::new(
+                LoopParams::new(N, cluster.total_ranks()),
+                TechniqueKind::Fac2,
+                ExecutionModel::HierDca,
+                cluster.clone(),
+                IterationCost::Constant(2e-5),
+            )
         };
         let r = simulate(&cfg).unwrap();
         verify_coverage(&r.sorted_assignments(), N).unwrap();

@@ -1,0 +1,321 @@
+//! Multi-tenant session tests (scheduler-as-a-service, PR 6).
+//!
+//! The three load-bearing properties:
+//!
+//! 1. **Single-tenant bit-identity** — a one-tenant session over the whole
+//!    cluster reproduces [`dca_dls::des::simulate`]'s flat DCA run *exactly*
+//!    (t_par, finish vector, assignments, message/event counts) on both the
+//!    two-phase and lock-free paths: the arbitration layer costs nothing
+//!    when there is nothing to arbitrate.
+//! 2. **Fair-share tightness** — K identical tenants under fair share stay
+//!    within one chunk of each other at every grant (probe point) when
+//!    requests are serialized, and within an in-flight-bounded envelope on
+//!    a parallel cluster.
+//! 3. **The acceptance scenario** — 100+ seeded tenants over the shared
+//!    256-rank cluster: deterministic, per-tenant coverage exact, and no
+//!    rank ever executes two tenants' iterations at overlapping instants.
+
+use dca_dls::config::{ClusterConfig, ExecutionModel, SchedPath};
+use dca_dls::des::{simulate, DesConfig};
+use dca_dls::sched::verify_coverage;
+use dca_dls::techniques::{rnd::splitmix64, LoopParams, TechniqueKind};
+use dca_dls::tenant::{
+    simulate_session, ArbitrationPolicy, SessionConfig, TenantSpec, TenantState,
+};
+use dca_dls::workload::IterationCost;
+
+/// Techniques admitted to sessions that also support the CAS fast path.
+const TECHS: [TechniqueKind; 5] = [
+    TechniqueKind::Ss,
+    TechniqueKind::Gss,
+    TechniqueKind::Tss,
+    TechniqueKind::Fac2,
+    TechniqueKind::Fiss,
+];
+
+/// The flat-DES config equivalent to a default single-tenant session:
+/// whole-cluster placement, constant 1 µs iterations, no delay.
+fn flat_cfg(n: u64, p: u32, tech: TechniqueKind, path: SchedPath) -> DesConfig {
+    let mut cfg = DesConfig::new(
+        LoopParams::new(n, p),
+        tech,
+        ExecutionModel::Dca,
+        ClusterConfig::small(p),
+        IterationCost::Constant(1e-6),
+    );
+    cfg.sched_path = path;
+    cfg
+}
+
+#[test]
+fn single_tenant_session_is_bit_identical_to_flat_des() {
+    for path in [SchedPath::TwoPhase, SchedPath::LockFree] {
+        for tech in TECHS {
+            let (n, p) = (3_000, 8);
+            let flat = simulate(&flat_cfg(n, p, tech, path)).unwrap();
+            let session = SessionConfig::new(ClusterConfig::small(p))
+                .with_sched_path(path)
+                .admit(TenantSpec::new("solo", n, tech));
+            let out = simulate_session(&session).unwrap();
+            assert_eq!(out.tenants.len(), 1);
+            let t = &out.tenants[0];
+            assert_eq!(t.state, TenantState::Completed, "{tech} {path:?}");
+            let r = &t.result;
+            assert_eq!(r.t_par(), flat.t_par(), "{tech} {path:?}: t_par");
+            assert_eq!(r.finish, flat.finish, "{tech} {path:?}: finish vector");
+            assert_eq!(r.assignments, flat.assignments, "{tech} {path:?}: schedule");
+            assert_eq!(r.stats.messages, flat.stats.messages, "{tech} {path:?}: messages");
+            assert_eq!(r.stats.chunks, flat.stats.chunks, "{tech} {path:?}: chunks");
+            assert_eq!(r.fast_grants, flat.fast_grants, "{tech} {path:?}: fast grants");
+            assert_eq!(r.events, flat.events, "{tech} {path:?}: event count");
+            assert_eq!(
+                r.rank0_service_busy, flat.rank0_service_busy,
+                "{tech} {path:?}: host service busy"
+            );
+            assert_eq!(
+                (r.intra_node_messages, r.inter_node_messages),
+                (flat.intra_node_messages, flat.inter_node_messages),
+                "{tech} {path:?}: message classes"
+            );
+            if path == SchedPath::LockFree {
+                assert_eq!(r.stats.messages, 0, "{tech}: lock-free sends no messages");
+            }
+        }
+    }
+}
+
+/// Replay a session's grant trace: per-tenant running totals plus the
+/// largest chunk seen so far at every probe point.
+fn replay(
+    trace: &[(u32, u64)],
+    k: usize,
+    mut probe: impl FnMut(usize, &[u64], u64),
+) {
+    let mut granted = vec![0u64; k];
+    let mut cmax = 0u64;
+    for (i, &(t, size)) in trace.iter().enumerate() {
+        granted[t as usize] += size;
+        cmax = cmax.max(size);
+        probe(i, &granted, cmax);
+    }
+}
+
+#[test]
+fn fair_share_keeps_identical_tenants_within_one_chunk_when_serialized() {
+    // One rank hosting K identical loops ⇒ at most one request in flight,
+    // so granted totals ARE the arbiter's accounts: after every grant the
+    // spread must be at most the largest chunk granted so far.
+    for tech in [TechniqueKind::Ss, TechniqueKind::Gss] {
+        let k = 4;
+        let mut cfg = SessionConfig::new(ClusterConfig::small(1))
+            .with_policy(ArbitrationPolicy::FairShare);
+        cfg.record_grant_trace = true;
+        for i in 0..k {
+            cfg = cfg.admit(TenantSpec::new(format!("t{i}"), 400, tech));
+        }
+        let out = simulate_session(&cfg).unwrap();
+        assert!(!out.grant_trace.is_empty());
+        replay(&out.grant_trace, k, |i, granted, cmax| {
+            let hi = *granted.iter().max().unwrap();
+            let lo = *granted.iter().min().unwrap();
+            assert!(
+                hi - lo <= cmax,
+                "{tech} probe {i}: spread {} > one chunk ({cmax}); totals {granted:?}",
+                hi - lo
+            );
+        });
+        for t in &out.tenants {
+            assert_eq!(t.granted_iters, 400);
+            assert_eq!(t.state, TenantState::Completed);
+        }
+    }
+}
+
+#[test]
+fn fair_share_spread_is_inflight_bounded_on_a_parallel_cluster() {
+    // On p ranks up to p requests are in flight, so granted totals can
+    // momentarily trail the (one-chunk-tight) arbiter accounts by one
+    // chunk per in-flight request: spread ≤ (p + 1) · cmax. FIFO has no
+    // such bound — its spread reaches a whole tenant's loop.
+    let (k, p, n) = (4usize, 8u32, 800u64);
+    for tech in [TechniqueKind::Ss, TechniqueKind::Gss] {
+        let mut cfg = SessionConfig::new(ClusterConfig::small(p))
+            .with_policy(ArbitrationPolicy::FairShare);
+        cfg.record_grant_trace = true;
+        for i in 0..k {
+            cfg = cfg.admit(TenantSpec::new(format!("t{i}"), n, tech));
+        }
+        let out = simulate_session(&cfg).unwrap();
+        let bound = |cmax: u64| (p as u64 + 1) * cmax;
+        replay(&out.grant_trace, k, |i, granted, cmax| {
+            let hi = *granted.iter().max().unwrap();
+            let lo = *granted.iter().min().unwrap();
+            assert!(
+                hi - lo <= bound(cmax),
+                "{tech} probe {i}: spread {} > {}; totals {granted:?}",
+                hi - lo,
+                bound(cmax)
+            );
+        });
+        for t in &out.tenants {
+            assert_eq!(t.granted_iters, n, "{tech}: full coverage");
+        }
+        assert!(out.jain_fairness > 0.9, "{tech}: Jain {}", out.jain_fairness);
+    }
+}
+
+#[test]
+fn strict_priority_and_fifo_order_completions() {
+    // Two same-shaped loops on one rank: under strict priority the urgent
+    // class finishes first regardless of id; under FIFO the earlier
+    // arrival does, regardless of granted balance.
+    let base = |policy| {
+        SessionConfig::new(ClusterConfig::small(1)).with_policy(policy)
+    };
+    let cfg = base(ArbitrationPolicy::StrictPriority)
+        .admit(TenantSpec::new("laid-back", 500, TechniqueKind::Ss).with_priority(5))
+        .admit(TenantSpec::new("urgent", 500, TechniqueKind::Ss).with_priority(0));
+    let out = simulate_session(&cfg).unwrap();
+    assert!(
+        out.tenants[1].completion < out.tenants[0].completion,
+        "urgent ({}) should beat laid-back ({})",
+        out.tenants[1].completion,
+        out.tenants[0].completion
+    );
+    let cfg = base(ArbitrationPolicy::Fifo)
+        .admit(TenantSpec::new("late", 500, TechniqueKind::Ss).arriving_at(1e-5))
+        .admit(TenantSpec::new("early", 500, TechniqueKind::Ss));
+    let out = simulate_session(&cfg).unwrap();
+    assert!(
+        out.tenants[1].completion < out.tenants[0].completion,
+        "FIFO must finish the earlier arrival first"
+    );
+}
+
+#[test]
+fn eviction_keeps_an_exactly_scheduled_granted_prefix() {
+    // Cancel a big loop mid-run: the tenant ends Evicted, granted+dropped
+    // accounts for every iteration, and the granted prefix is a gapless
+    // schedule of [0, granted).
+    let cfg = SessionConfig::new(ClusterConfig::small(8))
+        .admit(TenantSpec::new("victim", 200_000, TechniqueKind::Ss).cancelled_at(2e-3))
+        .admit(TenantSpec::new("survivor", 2_000, TechniqueKind::Gss));
+    let out = simulate_session(&cfg).unwrap();
+    let victim = &out.tenants[0];
+    assert_eq!(victim.state, TenantState::Evicted);
+    assert!(victim.dropped_iters > 0, "cancel_at landed after the loop drained");
+    assert!(victim.granted_iters > 0, "cancel_at landed before any grant");
+    assert_eq!(victim.granted_iters + victim.dropped_iters, 200_000);
+    verify_coverage(&victim.result.sorted_assignments(), victim.granted_iters)
+        .expect("granted prefix is exactly scheduled");
+    let survivor = &out.tenants[1];
+    assert_eq!(survivor.state, TenantState::Completed);
+    verify_coverage(&survivor.result.sorted_assignments(), 2_000).unwrap();
+    // A pre-arrival cancel evicts without ever running.
+    let cfg = SessionConfig::new(ClusterConfig::small(4))
+        .admit(TenantSpec::new("never-ran", 10_000, TechniqueKind::Ss).arriving_at(1.0).cancelled_at(0.5))
+        .admit(TenantSpec::new("runs", 1_000, TechniqueKind::Ss));
+    let out = simulate_session(&cfg).unwrap();
+    assert_eq!(out.tenants[0].state, TenantState::Evicted);
+    assert_eq!(out.tenants[0].granted_iters, 0);
+    assert_eq!(out.tenants[0].dropped_iters, 10_000);
+    assert_eq!(out.tenants[1].state, TenantState::Completed);
+}
+
+/// The acceptance scenario's seeded tenant population: `k` loops with
+/// mixed techniques, staggered arrivals, varied weights and overlapping
+/// block placements over a `ranks`-rank cluster.
+fn acceptance_session(seed: u64, k: u32, ranks: u32, path: SchedPath) -> SessionConfig {
+    let mut cfg =
+        SessionConfig::new(ClusterConfig::minihpc()).with_sched_path(path);
+    assert_eq!(cfg.cluster.total_ranks(), ranks);
+    cfg.record_exec_spans = true;
+    for i in 0..k {
+        let h = splitmix64(seed ^ (0xACCE97 + i as u64));
+        let n = 500 + h % 1_501; // 500..=2000
+        let tech = TECHS[((h >> 8) % TECHS.len() as u64) as usize];
+        let span = (4u32 << ((h >> 16) % 5)).min(ranks); // 4..64 ranks
+        let offset = ((h >> 24) % ranks as u64) as u32;
+        let weight = 1 + (h >> 32) % 4;
+        let arrival = (i as f64) * 5e-5;
+        cfg = cfg.admit(
+            TenantSpec::new(format!("t{i}"), n, tech)
+                .arriving_at(arrival)
+                .weighted(weight)
+                .placed_at(offset, span),
+        );
+    }
+    cfg
+}
+
+#[test]
+fn hundred_tenant_session_is_deterministic_covered_and_overlap_free() {
+    for path in [SchedPath::TwoPhase, SchedPath::LockFree] {
+        let cfg = acceptance_session(0x5E55, 120, 256, path);
+        let out = simulate_session(&cfg).unwrap();
+        // Determinism: a second run of the same config is identical.
+        let again = simulate_session(&cfg).unwrap();
+        assert_eq!(out.events, again.events, "{path:?}: event count drifted");
+        assert_eq!(out.makespan, again.makespan, "{path:?}: makespan drifted");
+        for (a, b) in out.tenants.iter().zip(&again.tenants) {
+            assert_eq!(a.completion, b.completion, "{path:?}: tenant {} drifted", a.id);
+            assert_eq!(a.granted_iters, b.granted_iters);
+        }
+        // Every tenant completed with exact coverage of its own loop.
+        assert_eq!(out.tenants.len(), 120);
+        for t in &out.tenants {
+            assert_eq!(t.state, TenantState::Completed, "{path:?}: tenant {}", t.id);
+            let n = cfg.tenants[t.id as usize].n;
+            assert_eq!(t.granted_iters, n);
+            verify_coverage(&t.result.sorted_assignments(), n)
+                .unwrap_or_else(|e| panic!("{path:?}: tenant {}: {e}", t.id));
+        }
+        // No rank ever executes two tenants' iterations at the same
+        // instant: per-rank exec spans are disjoint.
+        assert_eq!(out.exec_spans.len(), 256);
+        let mut multi_tenant_ranks = 0;
+        for (r, spans) in out.exec_spans.iter().enumerate() {
+            let mut sorted = spans.clone();
+            sorted.sort_by_key(|s| (s.start_ns, s.end_ns));
+            if sorted.windows(2).any(|w| w[0].tenant != w[1].tenant) {
+                multi_tenant_ranks += 1;
+            }
+            for w in sorted.windows(2) {
+                assert!(
+                    w[1].start_ns >= w[0].end_ns,
+                    "{path:?}: rank {r}: span [{}, {}) of tenant {} overlaps \
+                     [{}, {}) of tenant {}",
+                    w[1].start_ns,
+                    w[1].end_ns,
+                    w[1].tenant,
+                    w[0].start_ns,
+                    w[0].end_ns,
+                    w[0].tenant
+                );
+            }
+        }
+        // The scenario genuinely exercises sharing: most ranks served
+        // several tenants.
+        assert!(
+            multi_tenant_ranks > 64,
+            "{path:?}: only {multi_tenant_ranks} ranks saw more than one tenant"
+        );
+    }
+}
+
+#[test]
+fn session_rejects_bad_specs() {
+    let c = ClusterConfig::small(4);
+    // AF has no closed form.
+    let cfg = SessionConfig::new(c.clone())
+        .admit(TenantSpec::new("af", 100, TechniqueKind::Af));
+    assert!(simulate_session(&cfg).is_err());
+    // Empty sessions, empty loops, out-of-range placements.
+    assert!(simulate_session(&SessionConfig::new(c.clone())).is_err());
+    let cfg = SessionConfig::new(c.clone())
+        .admit(TenantSpec::new("empty", 0, TechniqueKind::Ss));
+    assert!(simulate_session(&cfg).is_err());
+    let cfg = SessionConfig::new(c)
+        .admit(TenantSpec::new("wide", 100, TechniqueKind::Ss).placed_at(0, 9));
+    assert!(simulate_session(&cfg).is_err());
+}

@@ -439,16 +439,10 @@ fn threaded_and_des_hier_grant_identical_serial_schedules() {
 
         let cluster = ClusterConfig { nodes: 1, ranks_per_node: 1, ..ClusterConfig::minihpc() };
         let des_cfg = DesConfig {
-            sched_path: Default::default(),
-            record_assignments: true,
-            params: LoopParams::new(N, 1),
             technique: kind,
             model: ExecutionModel::HierDca,
-            delay: InjectedDelay::none(),
             cluster,
-            cost: IterationCost::Constant(1e-6),
-            pe_speed: vec![],
-            hier: HierParams::default(),
+            ..DesConfig::for_test(N, 1)
         };
         let des = simulate(&des_cfg).unwrap_or_else(|e| panic!("{kind}: {e}"));
         let mut des_sorted: Vec<Assignment> = des.assignments.clone();
@@ -477,16 +471,14 @@ fn prefetch_beats_fetch_on_exhaustion() {
     };
     let mk = |hier: HierParams| {
         let cfg = DesConfig {
-            sched_path: Default::default(),
-            record_assignments: true,
-            params: LoopParams::new(N, cluster.total_ranks()),
-            technique: TechniqueKind::Fac2,
-            model: ExecutionModel::HierDca,
-            delay: InjectedDelay::none(),
-            cluster: cluster.clone(),
-            cost: IterationCost::Constant(2e-5),
-            pe_speed: vec![],
             hier,
+            ..DesConfig::new(
+                LoopParams::new(N, cluster.total_ranks()),
+                TechniqueKind::Fac2,
+                ExecutionModel::HierDca,
+                cluster.clone(),
+                IterationCost::Constant(2e-5),
+            )
         };
         let r = simulate(&cfg).unwrap();
         let mut sorted = r.assignments.clone();
@@ -611,16 +603,15 @@ fn prefetch_covers_all_techniques_des() {
     let cluster = ClusterConfig { nodes: 2, ranks_per_node: 4, ..ClusterConfig::minihpc() };
     for kind in TechniqueKind::EVALUATED {
         let cfg = DesConfig {
-            sched_path: Default::default(),
-            record_assignments: true,
-            params: LoopParams::new(N, cluster.total_ranks()),
-            technique: kind,
-            model: ExecutionModel::HierDca,
             delay: InjectedDelay::calculation_only(10e-6),
-            cluster: cluster.clone(),
-            cost: IterationCost::Constant(1e-5),
-            pe_speed: vec![],
             hier: HierParams::default().with_watermark(64),
+            ..DesConfig::new(
+                LoopParams::new(N, cluster.total_ranks()),
+                kind,
+                ExecutionModel::HierDca,
+                cluster.clone(),
+                IterationCost::Constant(1e-5),
+            )
         };
         let r = simulate(&cfg).unwrap_or_else(|e| panic!("{kind}: {e}"));
         let mut sorted = r.assignments.clone();
