@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Verify intra-repository markdown links.
+
+Scans the repo's documentation surface — ``docs/*.md``, every ``README.md``,
+``ROADMAP.md``, ``PAPER.md``, ``CHANGES.md`` — for inline markdown links and
+checks that every *relative* target resolves to a file or directory in the
+tree. External links (``http://``, ``https://``, ``mailto:``) and pure
+in-page anchors (``#...``) are skipped; a relative link's ``#anchor``
+fragment is stripped before resolution (anchor existence is not checked —
+headings move too freely for that to stay green).
+
+Exit codes: 0 = all links resolve, 1 = at least one dangling link.
+
+Run from anywhere: paths resolve against the repository root (the parent
+of this script's directory).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — non-greedy text, target up to the first unescaped ')'.
+# Markdown images ![alt](src) are matched too (the leading '!' is ignored).
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "ftp://")
+
+# Directories never scanned for source documents.
+PRUNE = {".git", "target", "__pycache__", ".venv", "node_modules"}
+
+
+def doc_files() -> list[Path]:
+    docs: set[Path] = set()
+    docs.update((ROOT / "docs").glob("*.md"))
+    for name in ("ROADMAP.md", "PAPER.md", "PAPERS.md", "CHANGES.md", "SNIPPETS.md"):
+        p = ROOT / name
+        if p.exists():
+            docs.add(p)
+    for readme in ROOT.rglob("README.md"):
+        if not PRUNE.intersection(readme.relative_to(ROOT).parts):
+            docs.add(readme)
+    return sorted(docs)
+
+
+def strip_code(text: str) -> str:
+    """Remove fenced code blocks and inline code spans — links inside
+    code are illustrative, not navigable."""
+    text = re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+    return re.sub(r"`[^`\n]*`", "", text)
+
+
+def check(path: Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(strip_code(path.read_text(encoding="utf-8"))):
+        if target.startswith(SKIP_PREFIXES) or target.startswith("#"):
+            continue
+        bare = target.split("#", 1)[0]
+        if not bare:
+            continue
+        resolved = (path.parent / bare).resolve()
+        try:
+            resolved.relative_to(ROOT)
+        except ValueError:
+            errors.append(f"{path.relative_to(ROOT)}: link escapes the repo: {target}")
+            continue
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(ROOT)}: dangling link: {target}")
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    if not files:
+        print("check_doc_links: no documentation files found", file=sys.stderr)
+        return 1
+    errors = [e for f in files for e in check(f)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_doc_links: {len(files)} files, {len(errors)} dangling links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

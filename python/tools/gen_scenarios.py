@@ -1,0 +1,203 @@
+#!/usr/bin/env python3
+"""Generate the committed `scenarios/` spec files and cross-validate every
+expected value against the Python port (`hier_sweep_model.py`).
+
+Each committed scenario pins a bench cell the repo already tracks in
+`benches/baselines/` (plus one prefetch cell whose expectation is computed
+here, since no baseline row exists for it). Run from anywhere:
+
+    python3 python/tools/gen_scenarios.py
+
+The script fails loudly if a freshly computed port value drifts outside the
+scenario's own tolerance of the committed expectation, so regenerating the
+files is itself a validation pass.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import hier_sweep_model as m  # noqa: E402
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", ".."))
+OUT = os.path.join(ROOT, "scenarios")
+SCHEMA = "dca-dls/scenario/v1"
+
+
+def jain(xs):
+    s = sum(xs)
+    s2 = sum(x * x for x in xs)
+    return (s * s) / (len(xs) * s2) if s2 > 0.0 else 1.0
+
+
+def check(label, got, want, tol):
+    rel = abs(got - want) / want
+    status = "ok" if rel <= tol else "DRIFT"
+    print(f"  {label:<32} port={got:.9g}  expect={want:.9g}  rel={rel:.3%}  {status}")
+    assert rel <= tol, f"{label}: port value {got} drifted from expectation {want}"
+
+
+def write(name, doc):
+    path = os.path.join(OUT, name)
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {path}")
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+
+    # --- 1. hier_sweep "calc 100 µs (extreme)" HIER-DCA row -----------------
+    print("[1/5] hier-calc-100us")
+    sim = m.TreeSim(65536, ["fac2", "ss"], [16, 16], cluster=m.Cluster(),
+                    delay_calc=100e-6)
+    t = sim.run()
+    m.verify_coverage(sim.assignments, 65536)
+    expect_t = 1.3168688
+    check("t_par", t, expect_t, 0.10)
+    write("hier-calc-100us.json", {
+        "schema": SCHEMA,
+        "name": "hier-calc-100us",
+        "description": "hier_sweep 'calc 100 us (extreme)' HIER-DCA row: "
+                       "FAC2 outer / SS inner on the 16x16 miniHPC geometry "
+                       "with a constant 100 us injected calculation delay.",
+        "kind": "des",
+        "des": {
+            "n": 65536,
+            "technique": "fac2",
+            "model": "hier",
+            "inner": "ss",
+            "cost": 5e-3,
+            "delay": {"site": "calculation", "us": 100.0},
+        },
+        "expect": {"t_par": expect_t, "tol": 0.10},
+    })
+
+    # --- 2. hier_sweep "adaptive exp-slowdown 100 µs" HIER-DCA+ADAPT row ----
+    print("[2/5] adaptive-exp-slowdown")
+    delay = m.Delay(calc=100e-6, dist="exp", seed=0xAD0001)
+    sim = m.TreeSim(131072, ["fac2", "ss"], [16, 16], cluster=m.Cluster(),
+                    delay=delay, cost=1e-5,
+                    adaptive=dict(probe_interval=4, candidates=["ss", "gss", "fac2"]))
+    t = sim.run()
+    m.verify_coverage(sim.assignments, 131072)
+    expect_t = 0.014587665
+    check("t_par", t, expect_t, 0.15)
+    switches = len(sim.switch_events)
+    print(f"  {'switches':<32} port={switches}  floor=16")
+    assert switches >= 16, f"adaptive cell rebound only {switches} times"
+    write("adaptive-exp-slowdown.json", {
+        "schema": SCHEMA,
+        "name": "adaptive-exp-slowdown",
+        "description": "hier_sweep 'adaptive exp-slowdown 100 us' row: the "
+                       "SimAS-style controller starts every subtree on SS "
+                       "under exponential injected delay (mean 100 us) and "
+                       "must rebind toward the overhead-robust technique.",
+        "kind": "des",
+        "des": {
+            "n": 131072,
+            "technique": "fac2",
+            "model": "hier",
+            "inner": "ss",
+            "cost": 1e-5,
+            "delay": {"site": "calculation", "us": 100.0,
+                      "dist": "exponential", "seed": 11403265},
+            "adaptive": {"probe_interval": 4, "candidates": "ss,gss,fac"},
+        },
+        "expect": {"t_par": expect_t, "tol": 0.15, "min_switches": 16},
+    })
+
+    # --- 3. sched_throughput "DCA SS" LOCKFREE row --------------------------
+    print("[3/5] dca-ss-lockfree")
+    t = m.FlatSim("dca", 0.0, 0.0, cluster=m.Cluster(nodes=4, rpn=16),
+                  tech="ss", n=50000, cost=1e-5, lockfree=True).run()
+    expect_t = 0.025034
+    check("t_par", t, expect_t, 0.10)
+    write("dca-ss-lockfree.json", {
+        "schema": SCHEMA,
+        "name": "dca-ss-lockfree",
+        "description": "sched_throughput 'DCA SS' lock-free row: flat DCA "
+                       "self-scheduling over 4x16 ranks on the single-sided "
+                       "grant path.",
+        "kind": "des",
+        "des": {
+            "n": 50000,
+            "technique": "ss",
+            "model": "dca",
+            "cost": 1e-5,
+            "sched_path": "lockfree",
+            "cluster": {"nodes": 4, "ranks_per_node": 16},
+        },
+        "expect": {"t_par": expect_t, "tol": 0.10},
+    })
+
+    # --- 4. sched_throughput "TENANTS 64x16 SS" FAIR-SHARE row --------------
+    print("[4/5] tenants-fair-share")
+    specs = [m.Tenant(40000, "ss", cost=1e-5)] + [
+        m.Tenant(800, "ss", arrival=0.002 * i, cost=1e-5) for i in range(1, 64)
+    ]
+    sim, slowdowns, mean = m.session_slowdowns(
+        specs, cluster=m.Cluster(nodes=1, rpn=16), policy="fair")
+    expect_mean = 1.0343031249823362
+    check("mean_slowdown", mean, expect_mean, 0.10)
+    j = jain(slowdowns)
+    print(f"  {'jain_fairness':<32} port={j:.6f}  floor=0.9")
+    assert j >= 0.9, f"fair-share Jain index {j} below floor"
+    tenants = [{"name": "bulk", "n": 40000, "technique": "ss", "cost": 1e-5}] + [
+        {"name": f"t{i}", "n": 800, "technique": "ss",
+         "arrival": round(0.002 * i, 6), "cost": 1e-5}
+        for i in range(1, 64)
+    ]
+    write("tenants-fair-share.json", {
+        "schema": SCHEMA,
+        "name": "tenants-fair-share",
+        "description": "sched_throughput 'TENANTS 64x16 SS' fair-share row: "
+                       "one bulk SS loop plus 63 small SS loops arriving "
+                       "every 2 ms on a shared 16-rank cluster.",
+        "kind": "session",
+        "cluster": {"ranks": 16},
+        "session": {"policy": "fair", "tenants": tenants},
+        "expect": {"mean_slowdown": expect_mean, "tol": 0.10, "min_jain": 0.9},
+    })
+
+    # --- 5. prefetch cell (no baseline row; expectation computed here) ------
+    # The PR 2 threaded prefetch test uses a custom inter-node latency the
+    # scenario cluster block cannot express, so this cell pins the DES
+    # equivalent: a fixed watermark hiding a 100 µs *assignment* delay on the
+    # default geometry. The no-watermark port run is printed for context.
+    print("[5/5] hier-prefetch")
+    base = m.TreeSim(65536, ["fac2", "ss"], [16, 16], cluster=m.Cluster(),
+                     delay_assign=100e-6, cost=1e-5).run()
+    sim = m.TreeSim(65536, ["fac2", "ss"], [16, 16], cluster=m.Cluster(),
+                    delay_assign=100e-6, cost=1e-5, watermark=64)
+    t = sim.run()
+    m.verify_coverage(sim.assignments, 65536)
+    print(f"  {'t_par (no watermark)':<32} port={base:.9g}")
+    print(f"  {'t_par (watermark 64)':<32} port={t:.9g}  (speedup {base / t:.3f}x)")
+    assert t < base, "watermark prefetch should beat the unbuffered tree here"
+    write("hier-prefetch.json", {
+        "schema": SCHEMA,
+        "name": "hier-prefetch",
+        "description": "Prefetch cell: FAC2/SS tree on the 16x16 geometry "
+                       "with a 100 us assignment delay; a fixed watermark of "
+                       "64 keeps mid-level queues deep enough to hide it.",
+        "kind": "des",
+        "des": {
+            "n": 65536,
+            "technique": "fac2",
+            "model": "hier",
+            "inner": "ss",
+            "cost": 1e-5,
+            "delay": {"site": "assignment", "us": 100.0},
+            "watermark": 64,
+        },
+        "expect": {"t_par": round(t, 9), "tol": 0.10},
+    })
+
+    print("all scenario expectations validated against the port")
+
+
+if __name__ == "__main__":
+    main()

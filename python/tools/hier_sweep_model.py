@@ -436,12 +436,100 @@ class Heap:
 
 
 # ---------------------------------------------------------------------------
+# observability stream (rust/src/obs/stream.rs) — NDJSON record generation.
+# Pass `stream_interval=<seconds>` to FlatSim/TreeSim/SessionSim; the
+# records land in `sim.stream` (list of dicts, virtual-time order) and
+# `write_ndjson` serialises them one object per line. Sampling only reads
+# state, so a streamed run's schedule is bit-identical to a quiet one.
+
+STREAM_SCHEMA = "dca-dls/stream/v1"
+MAX_STREAM_RECORDS = 100_000
+
+
+class Sampler:
+    """rust/src/obs/stream.rs::Sampler — virtual-time tick source."""
+
+    def __init__(self, interval_s):
+        assert interval_s > 0.0
+        self.interval_ns = max(int(round(interval_s * 1e9)), 1)
+        self.next_ns = self.interval_ns
+        self.emitted = 0
+
+    def interval_s(self):
+        return self.interval_ns * 1e-9
+
+    def due(self, now_ns):
+        if self.emitted >= MAX_STREAM_RECORDS or now_ns < self.next_ns:
+            return None
+        t = self.next_ns * 1e-9
+        self.next_ns += self.interval_ns
+        self.emitted += 1
+        return t
+
+
+def interval_record(t, chunks, chunks_delta, interval_s, messages,
+                    fast_grants, remaining):
+    rate = chunks_delta / interval_s if interval_s > 0.0 else 0.0
+    return {"schema": STREAM_SCHEMA, "event": "interval", "t": t,
+            "chunks": chunks, "grant_rate": rate, "messages": messages,
+            "fast_grants": fast_grants, "remaining": remaining}
+
+
+def append_ewmas(record, ctl):
+    """`mu_hat`/`sigma_hat`/`overhead_hat` for a primed controller."""
+    mu = ctl.mu.value()
+    if mu is not None:
+        record["mu_hat"] = mu
+    var = ctl.var.value()
+    if var is not None:
+        record["sigma_hat"] = math.sqrt(max(var, 0.0))
+    oh = ctl.overhead.value()
+    if oh is not None:
+        record["overhead_hat"] = oh
+    return record
+
+
+def switch_record(e):
+    """One record per TreeSim `switch_events` tuple."""
+    at_s, level, master, frm, to, ratio = e
+    return {"schema": STREAM_SCHEMA, "event": "switch", "t": at_s,
+            "level": level, "master": master, "from": frm.upper(),
+            "to": to.upper(), "predicted_ratio": ratio}
+
+
+def tenant_entry(tid, name, state, technique, granted_iters, n):
+    return {"tenant": tid, "name": name, "state": state,
+            "technique": technique.upper(), "granted_iters": granted_iters,
+            "n": n}
+
+
+def tenant_record(tid, name, state, arrival_s, completion_s):
+    return {"schema": STREAM_SCHEMA, "event": "tenant", "t": completion_s,
+            "tenant": tid, "name": name, "state": state,
+            "arrival": arrival_s, "turnaround": completion_s - arrival_s}
+
+
+def sorted_by_time(records):
+    return sorted(records, key=lambda r: r.get("t", 0.0))
+
+
+def write_ndjson(dest, records):
+    """Write records as NDJSON to `dest` — a file path, or `-` for stdout."""
+    text = "".join(json.dumps(r) + "\n" for r in records)
+    if dest == "-":
+        sys.stdout.write(text)
+    else:
+        with open(dest, "w") as fh:
+            fh.write(text)
+
+
+# ---------------------------------------------------------------------------
 # flat models (rust/src/des/mod.rs), SS technique: every chunk size is 1
 
 
 class FlatSim:
     def __init__(self, model, delay_calc, delay_assign, cluster=None, tech="ss",
-                 n=N, cost=COST, lockfree=False):
+                 n=N, cost=COST, lockfree=False, stream_interval=0.0):
         self.model = model  # 'cca' | 'dca' | 'rma'
         self.cl = cluster or Cluster()
         self.tech = tech
@@ -467,8 +555,27 @@ class FlatSim:
         self.granted = 0
         self.assignments = []
         self.fast_grants = 0
+        self.messages = 0
+        self.sampler = Sampler(stream_interval) if stream_interval > 0.0 else None
+        self.stream = []
+        self.last_tick_chunks = 0
 
     # -- helpers ----------------------------------------------------------
+
+    def sample_ticks(self):
+        while True:
+            t = self.sampler.due(self.now)
+            if t is None:
+                return
+            chunks = len(self.assignments)
+            record = interval_record(
+                t, chunks, chunks - self.last_tick_chunks,
+                self.sampler.interval_s(), self.messages, self.fast_grants,
+                self.queue.remaining())
+            record["queue_depth"] = len(self.svc)
+            record["technique"] = self.tech.upper()
+            self.stream.append(record)
+            self.last_tick_chunks = chunks
 
     def chunk(self, step):
         return closed_chunk(self.tech, step, self.n, self.cl.p)
@@ -481,9 +588,11 @@ class FlatSim:
         return ns(self.cost * size)
 
     def send_svc(self, src, task):
+        self.messages += 1
         self.heap.push(self.now + self.cl.lat_ns(src, 0), ("svc", task))
 
     def send_reply(self, w, reply, at):
+        self.messages += 1
         self.heap.push(at + self.cl.lat_ns(0, w), ("reply", w, reply))
 
     def send_nic(self, w, op, extra):
@@ -495,6 +604,7 @@ class FlatSim:
 
     def worker_send_request(self, w):
         task = ("request", w) if self.model == "cca" else ("getstep", w)
+        self.messages += 1
         self.heap.push(self.now + self.cl.lat_ns(w, 0), ("svc", task))
 
     # -- bootstrap --------------------------------------------------------
@@ -526,12 +636,25 @@ class FlatSim:
             if popped is None:
                 break
             self.now, ev = popped
+            if self.sampler is not None:
+                self.sample_ticks()
             self.dispatch(ev)
         assert self.granted == self.n, f"{self.model}: granted {self.granted} != {self.n}"
         finish = [secs(f) for f in self.finish]
         if self.model != "rma":
             finish[0] = max(finish[0], secs(self.rank0_finish))
-        return max(finish)
+        t_par = max(finish)
+        if self.sampler is not None:
+            chunks = len(self.assignments)
+            record = interval_record(
+                t_par, chunks, chunks - self.last_tick_chunks,
+                self.sampler.interval_s(), self.messages, self.fast_grants,
+                self.queue.remaining())
+            record["queue_depth"] = len(self.svc)
+            record["technique"] = self.tech.upper()
+            self.stream.append(record)
+            self.stream = sorted_by_time(self.stream)
+        return t_par
 
     def dispatch(self, ev):
         kind = ev[0]
@@ -837,7 +960,8 @@ class SessionSim:
 
     def __init__(self, tenants, cluster=None, policy="fair", lockfree=False,
                  delay_calc=0.0, delay_assign=0.0, pe_speed=(),
-                 record_assignments=True, record_grant_trace=False):
+                 record_assignments=True, record_grant_trace=False,
+                 stream_interval=0.0):
         self.cl = cluster or Cluster()
         self.specs = tenants
         self.policy = policy
@@ -872,8 +996,41 @@ class SessionSim:
         self.now = 0
         self.events = 0
         self.grant_trace = []
+        self.sampler = Sampler(stream_interval) if stream_interval > 0.0 else None
+        self.stream = []
+        self.last_tick_chunks = 0
 
     # -- helpers ----------------------------------------------------------
+
+    def session_record(self, t, chunks, chunks_delta):
+        messages = sum(tn.messages for tn in self.tenants)
+        fast_grants = sum(tn.fast_grants for tn in self.tenants)
+        remaining = sum(tn.queue.remaining() for tn in self.tenants)
+        active = 0
+        entries = []
+        for tid, tn in enumerate(self.tenants):
+            state = self.state[tid]
+            if state not in ("completed", "evicted"):
+                active += 1
+            entries.append(tenant_entry(tid, f"t{tid}", state,
+                                        self.specs[tid].tech,
+                                        tn.granted_iters, self.specs[tid].n))
+        record = interval_record(t, chunks, chunks_delta,
+                                 self.sampler.interval_s(), messages,
+                                 fast_grants, remaining)
+        record["active_tenants"] = active
+        record["tenants"] = entries
+        return record
+
+    def sample_ticks(self):
+        while True:
+            t = self.sampler.due(self.now)
+            if t is None:
+                return
+            chunks = sum(tn.chunks_granted for tn in self.tenants)
+            self.stream.append(
+                self.session_record(t, chunks, chunks - self.last_tick_chunks))
+            self.last_tick_chunks = chunks
 
     def speed(self, w):
         s = self.pe_speed[w] if w < len(self.pe_speed) else 1.0
@@ -914,6 +1071,8 @@ class SessionSim:
                 break
             self.now, ev = popped
             self.events += 1
+            if self.sampler is not None:
+                self.sample_ticks()
             self.dispatch(ev)
         return self.into_outcome()
 
@@ -1242,6 +1401,15 @@ class SessionSim:
                  for t, (tn, ta) in enumerate(zip(self.tenants, self.turnarounds))
                  if ta > 0.0 and tn.granted_iters > 0]
         self.jain = jain_index(rates)
+        if self.sampler is not None:
+            chunks = sum(tn.chunks_granted for tn in self.tenants)
+            self.stream.append(self.session_record(
+                self.makespan, chunks, chunks - self.last_tick_chunks))
+            self.stream.extend(
+                tenant_record(t, f"t{t}", self.state[t],
+                              self.specs[t].arrival, self.completions[t])
+                for t in range(len(self.tenants)))
+            self.stream = sorted_by_time(self.stream)
         return self.makespan
 
 
@@ -1471,7 +1639,8 @@ class TreeSim:
 
     def __init__(self, n, techs, fanouts, cluster=None, delay_calc=0.0,
                  delay_assign=0.0, cost=COST, watermark=None, prefetch_depth=1,
-                 lockfree=False, delay=None, adaptive=None, sched_path=None):
+                 lockfree=False, delay=None, adaptive=None, sched_path=None,
+                 stream_interval=0.0):
         # `delay`: a Delay object overriding the constant `delay_calc`.
         # `adaptive`: None (off) or dict(probe_interval=G, candidates=[...]).
         # `sched_path`: None => "lockfree" if lockfree else "two-phase";
@@ -1534,8 +1703,38 @@ class TreeSim:
         self.atom_busy = [False] * n_servers
         self.fast_grants = 0
         self.switch_events = []
+        self.sampler = Sampler(stream_interval) if stream_interval > 0.0 else None
+        self.stream = []
+        self.last_tick_chunks = 0
 
     # -- helpers ----------------------------------------------------------
+
+    def subtree_entries(self):
+        entries = []
+        for d, level in enumerate(self.personas):
+            for j, pr in enumerate(level):
+                e = {"level": d, "master": j,
+                     "technique": pr.ledger.tech.upper(),
+                     "remaining": pr.ledger.remaining(),
+                     "parked": len(pr.parked)}
+                if pr.adapt is not None:
+                    append_ewmas(e, pr.adapt)
+                entries.append(e)
+        return entries
+
+    def sample_ticks(self):
+        while True:
+            t = self.sampler.due(self.now)
+            if t is None:
+                return
+            chunks = len(self.assignments)
+            record = interval_record(
+                t, chunks, chunks - self.last_tick_chunks,
+                self.sampler.interval_s(), self.messages, self.fast_grants,
+                self.n - self.granted)
+            record["subtrees"] = self.subtree_entries()
+            self.stream.append(record)
+            self.last_tick_chunks = chunks
 
     def subtree(self, d):
         s = 1
@@ -1574,6 +1773,8 @@ class TreeSim:
             if popped is None:
                 break
             self.now, ev = popped
+            if self.sampler is not None:
+                self.sample_ticks()
             self.dispatch(ev)
         assert self.granted == self.n, f"tree: granted {self.granted} != {self.n}"
         finish = [secs(f) for f in self.finish]
@@ -1582,6 +1783,16 @@ class TreeSim:
             finish[r] = max(finish[r], secs(server.cpu_busy_until))
         self.t_par = max(finish)
         self.sched_wait = sum(secs(w) for w in self.wait_ns)
+        if self.sampler is not None:
+            chunks = len(self.assignments)
+            record = interval_record(
+                self.t_par, chunks, chunks - self.last_tick_chunks,
+                self.sampler.interval_s(), self.messages, self.fast_grants,
+                self.n - self.granted)
+            record["subtrees"] = self.subtree_entries()
+            self.stream.append(record)
+            self.stream.extend(switch_record(e) for e in self.switch_events)
+            self.stream = sorted_by_time(self.stream)
         return self.t_par
 
     def dispatch(self, ev):

@@ -23,6 +23,7 @@ use std::time::Instant;
 use super::protocol::{AfInfo, CoordMsg, Msg, PerfReport, WorkerMsg};
 use super::{execute_chunk, EngineConfig, RankSummary, RunResult};
 use crate::hier::protocol::{fast_len_ok, with_np, AtomicLedger};
+use crate::obs::EngineMetrics;
 use crate::sched::adaptive::{AdaptiveController, SwitchEvent};
 use crate::sched::WorkQueue;
 use crate::substrate::delay::spin_for;
@@ -94,12 +95,14 @@ fn run_lockfree(
     let ledger = Arc::new(AtomicLedger::new());
     ledger.publish(1, 0, table);
     let barrier = Arc::new(Barrier::new(p as usize));
+    let em = cfg.metrics.as_deref().map(EngineMetrics::register);
     let mut handles = Vec::with_capacity(p as usize);
     for rank in 0..p {
         let w = Arc::clone(&workload);
         let b = Arc::clone(&barrier);
         let l = Arc::clone(&ledger);
-        handles.push(thread::spawn(move || lockfree_worker(rank, &l, w, &b)));
+        let m = em.clone();
+        handles.push(thread::spawn(move || lockfree_worker(rank, &l, w, &b, m)));
     }
     let per_rank: Vec<RankSummary> =
         handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
@@ -112,6 +115,7 @@ fn lockfree_worker(
     ledger: &AtomicLedger,
     workload: Arc<dyn Workload>,
     barrier: &Barrier,
+    em: Option<EngineMetrics>,
 ) -> RankSummary {
     let mut out = RankSummary { rank, ..Default::default() };
     barrier.wait();
@@ -119,8 +123,12 @@ fn lockfree_worker(
     loop {
         let t_req = Instant::now();
         let Some((a, _remaining, _seq)) = ledger.try_grant() else { break };
-        out.sched_wait += t_req.elapsed().as_secs_f64();
+        let wait = t_req.elapsed().as_secs_f64();
+        out.sched_wait += wait;
         out.fast_grants += 1;
+        if let Some(m) = &em {
+            m.on_grant(a.size, wait, true);
+        }
         let (sum, _elapsed) = execute_chunk(workload.as_ref(), a);
         out.record_chunk(sum, a);
     }
@@ -147,6 +155,7 @@ fn coordinator_loop(
     let mut adapt = cfg.hier.adaptive.enabled.then(|| {
         AdaptiveController::new(cfg.technique, params, params.p, cfg.hier.adaptive, false)
     });
+    let em = cfg.metrics.as_deref().map(EngineMetrics::register);
     let mut switches = Vec::new();
     let mut q = WorkQueue::from_params(params);
     let mut active = params.p;
@@ -209,6 +218,9 @@ fn coordinator_loop(
                                 let from = ctl.current();
                                 if let Some((to, predicted_ratio)) = ctl.probe(q.remaining()) {
                                     era = (to, q.step(), q.remaining().max(1));
+                                    if let Some(m) = &em {
+                                        m.switches.inc();
+                                    }
                                     switches.push(SwitchEvent {
                                         at_s: t0.elapsed().as_secs_f64(),
                                         level: 0,
@@ -242,6 +254,7 @@ fn worker_loop(
     barrier: Arc<Barrier>,
 ) -> RankSummary {
     let rank = ep.rank();
+    let em = cfg.metrics.as_deref().map(EngineMetrics::register);
     let bootstrap = cfg.params.min_chunk.max(1);
     // The binding era announced by the last phase-1 reply: technique bound
     // to `(bound_n, P)` with rebased steps. Static runs bind exactly once
@@ -257,7 +270,8 @@ fn worker_loop(
         ep.send(coord, Msg::ToCoord(WorkerMsg::GetStep { rank, report }))
             .expect("coordinator hung up early");
         let env = ep.recv().expect("coordinator hung up early");
-        out.sched_wait += t_req.elapsed().as_secs_f64();
+        let reserve_wait = t_req.elapsed().as_secs_f64();
+        out.sched_wait += reserve_wait;
         let (ticket, af_info, tech, base_step, bound_n) = match env.payload {
             Msg::ToWorker(CoordMsg::Step { ticket, af, tech, base_step, bound_n }) => {
                 (ticket, af, tech, base_step, bound_n)
@@ -296,9 +310,13 @@ fn worker_loop(
         ep.send(coord, Msg::ToCoord(WorkerMsg::Commit { rank, ticket, size: k }))
             .expect("coordinator hung up early");
         let env = ep.recv().expect("coordinator hung up early");
-        out.sched_wait += t_commit.elapsed().as_secs_f64();
+        let commit_wait = t_commit.elapsed().as_secs_f64();
+        out.sched_wait += commit_wait;
         match env.payload {
             Msg::ToWorker(CoordMsg::Chunk(a)) => {
+                if let Some(m) = &em {
+                    m.on_grant(a.size, reserve_wait + commit_wait, false);
+                }
                 let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
                 out.record_chunk(sum, a);
                 my_stats.record(a.size, elapsed);
@@ -457,6 +475,35 @@ mod tests {
         let mut bad = auto_ad;
         bad.sched_path = crate::config::SchedPath::LockFree;
         assert!(crate::coordinator::run(&bad, w).is_err());
+    }
+
+    /// With a registry attached, both grant paths account every chunk:
+    /// two-phase pays 4 protocol messages per grant, the CAS path none.
+    #[test]
+    fn metrics_registry_accounts_grants_on_both_paths() {
+        use crate::obs::MetricsRegistry;
+        const N: u64 = 4_000;
+        let w: Arc<dyn Workload> = Arc::new(Synthetic::new(N, 5e-8, CostShape::Uniform, 3));
+        let reg = Arc::new(MetricsRegistry::new());
+        let cfg =
+            EngineConfig::new(LoopParams::new(N, 4), TechniqueKind::Gss, ExecutionModel::Dca)
+                .with_metrics(Arc::clone(&reg));
+        let r = run(&cfg, Arc::clone(&w)).unwrap();
+        let em = EngineMetrics::register(&reg);
+        assert_eq!(em.grants.get(), r.stats.chunks);
+        assert_eq!(em.iters.get(), N);
+        assert_eq!(em.messages.get(), 4 * r.stats.chunks);
+        assert_eq!(em.fast_grants.get(), 0);
+        assert_eq!(em.chunk_iters.count(), r.stats.chunks);
+        assert!(em.chunk_iters.sum() as u64 == N);
+        assert!(reg.render_prometheus().contains("dcadls_sched_grants_total"));
+
+        let reg2 = Arc::new(MetricsRegistry::new());
+        let fast = run(&cfg.clone().with_lockfree().with_metrics(Arc::clone(&reg2)), w).unwrap();
+        let em2 = EngineMetrics::register(&reg2);
+        assert_eq!(em2.fast_grants.get(), fast.stats.chunks);
+        assert_eq!(em2.grants.get(), fast.stats.chunks);
+        assert_eq!(em2.messages.get(), 0, "no protocol messages on the CAS path");
     }
 
     #[test]

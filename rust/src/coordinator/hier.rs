@@ -52,6 +52,7 @@ use crate::hier::protocol::{
     auto_watermark, fast_len_ok, with_np, AtomicLedger, FastLedger, InnerCommit, NodeLedger,
     RttEwma,
 };
+use crate::obs::EngineMetrics;
 use crate::sched::adaptive::{AdaptiveController, SwitchEvent};
 use crate::sched::Assignment;
 use crate::substrate::delay::spin_for;
@@ -430,6 +431,8 @@ struct TreeMaster {
     /// Wall-clock anchor for controller observations and switch events.
     t0: Instant,
     out: RankSummary,
+    /// Streaming-observability handles (None when no registry is attached).
+    em: Option<EngineMetrics>,
 }
 
 impl TreeMaster {
@@ -494,6 +497,7 @@ impl TreeMaster {
                 }
             })
             .collect();
+        let em = cfg.metrics.as_deref().map(EngineMetrics::register);
         TreeMaster {
             cfg,
             geom,
@@ -505,6 +509,7 @@ impl TreeMaster {
             my_stats: PeStats::default(),
             t0: Instant::now(),
             out: RankSummary { rank, ..Default::default() },
+            em,
         }
     }
 
@@ -776,6 +781,9 @@ impl TreeMaster {
         } else {
             self.personas[slot].ledger.rebind_now(to);
         }
+        if let Some(m) = &self.em {
+            m.switches.inc();
+        }
         self.out.switches.push(SwitchEvent {
             at_s: self.t0.elapsed().as_secs_f64(),
             level: self.personas[slot].level as u32,
@@ -1020,6 +1028,9 @@ impl TreeMaster {
             match granted {
                 Some((a, _remaining)) => {
                     self.out.fast_grants += 1;
+                    if let Some(m) = &self.em {
+                        m.on_grant(a.size, 0.0, true);
+                    }
                     self.adaptive_tick(slot);
                     self.after_grant(slot);
                     self.execute_own(a);
@@ -1034,6 +1045,11 @@ impl TreeMaster {
         spin_for(self.cfg.delay.assignment);
         match self.personas[slot].ledger.commit(step, size, seq) {
             InnerCommit::Granted(a) => {
+                // The master's own grants never cross the wire — account
+                // them on the message-free path whatever the ledger form.
+                if let Some(m) = &self.em {
+                    m.on_grant(a.size, 0.0, true);
+                }
                 self.adaptive_tick(slot);
                 self.after_grant(slot);
                 self.execute_own(a);
@@ -1130,6 +1146,7 @@ fn worker_loop(
     let mut my_stats = PeStats::default();
     let mut out = RankSummary { rank, ..Default::default() };
     let mut report = None;
+    let em = cfg.metrics.as_deref().map(EngineMetrics::register);
     let send = |dst: u32, msg: Msg| {
         tally.count(geom, k1, rank, dst);
         ep.send(dst, msg).expect("master hung up early");
@@ -1140,7 +1157,8 @@ fn worker_loop(
         let t_req = Instant::now();
         send(master, Msg::Get { rank, report });
         let mut env = ep.recv().expect("master hung up early");
-        out.sched_wait += t_req.elapsed().as_secs_f64();
+        let mut wait = t_req.elapsed().as_secs_f64();
+        out.sched_wait += wait;
         loop {
             match env.payload {
                 Msg::Step { step, remaining, seq, chunk_len, tech, af } => {
@@ -1165,11 +1183,16 @@ fn worker_loop(
                     let t_commit = Instant::now();
                     send(master, Msg::Commit { rank, step, size, seq });
                     env = ep.recv().expect("master hung up early");
-                    out.sched_wait += t_commit.elapsed().as_secs_f64();
+                    let commit_wait = t_commit.elapsed().as_secs_f64();
+                    out.sched_wait += commit_wait;
+                    wait += commit_wait;
                     // The reply is a Chunk, a NACK Step (stale seq), or Done
                     // — loop to handle whichever arrived.
                 }
                 Msg::Chunk(a) => {
+                    if let Some(m) = &em {
+                        m.on_grant(a.size, wait, false);
+                    }
                     let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
                     out.record_chunk(sum, a);
                     my_stats.record(a.size, elapsed);
@@ -1226,6 +1249,7 @@ fn lockfree_leaf_loop(
     let mut acc_iters = 0u64;
     let mut acc_elapsed = 0.0f64;
     let mut out = RankSummary { rank, ..Default::default() };
+    let em = cfg.metrics.as_deref().map(EngineMetrics::register);
     let send = |dst: u32, msg: Msg| {
         tally.count(geom, k1, rank, dst);
         ep.send(dst, msg).expect("master hung up early");
@@ -1236,8 +1260,12 @@ fn lockfree_leaf_loop(
         let t_req = Instant::now();
         match ledger.try_grant() {
             Some((a, remaining, seq)) => {
-                out.sched_wait += t_req.elapsed().as_secs_f64();
+                let grant_wait = t_req.elapsed().as_secs_f64();
+                out.sched_wait += grant_wait;
                 out.fast_grants += 1;
+                if let Some(m) = &em {
+                    m.on_grant(a.size, grant_wait, true);
+                }
                 if let Some(wm) = fixed_watermark {
                     if remaining <= wm && nudged_seq != seq {
                         nudged_seq = seq;
@@ -1256,10 +1284,14 @@ fn lockfree_leaf_loop(
                 acc_elapsed = 0.0;
                 send(master, Msg::Get { rank, report });
                 let mut env = ep.recv().expect("master hung up early");
-                out.sched_wait += t_req.elapsed().as_secs_f64();
+                let mut wait = t_req.elapsed().as_secs_f64();
+                out.sched_wait += wait;
                 loop {
                     match env.payload {
                         Msg::Chunk(a) => {
+                            if let Some(m) = &em {
+                                m.on_grant(a.size, wait, false);
+                            }
                             let (sum, elapsed) = execute_chunk(workload.as_ref(), a);
                             out.record_chunk(sum, a);
                             acc_iters += a.size;
@@ -1283,7 +1315,9 @@ fn lockfree_leaf_loop(
                             let t_commit = Instant::now();
                             send(master, Msg::Commit { rank, step, size, seq });
                             env = ep.recv().expect("master hung up early");
-                            out.sched_wait += t_commit.elapsed().as_secs_f64();
+                            let commit_wait = t_commit.elapsed().as_secs_f64();
+                            out.sched_wait += commit_wait;
+                            wait += commit_wait;
                         }
                         Msg::Done => break 'outer,
                         other => panic!("rank {rank}: unexpected {other:?}"),

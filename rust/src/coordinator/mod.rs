@@ -33,6 +33,7 @@ use std::time::Instant;
 
 use crate::config::{ExecutionModel, HierParams, SchedPath};
 use crate::metrics::LoopStats;
+use crate::obs::MetricsRegistry;
 use crate::sched::adaptive::SwitchEvent;
 use crate::sched::Assignment;
 use crate::substrate::delay::InjectedDelay;
@@ -60,6 +61,12 @@ pub struct EngineConfig {
     /// coordinator disappears) and by [`hier`]'s leaf level. AF/TAP and the
     /// other models ignore it.
     pub sched_path: SchedPath,
+    /// Observability sink: when set, every engine registers the
+    /// [`crate::obs::EngineMetrics`] bundle here and accounts grants,
+    /// messages, waits and switches on the grant path (registration is
+    /// idempotent — threads share one set of atomics). `None` (the
+    /// default) costs nothing.
+    pub metrics: Option<Arc<MetricsRegistry>>,
 }
 
 impl EngineConfig {
@@ -72,7 +79,14 @@ impl EngineConfig {
             hier: HierParams::default(),
             nodes: 1,
             sched_path: SchedPath::default(),
+            metrics: None,
         }
+    }
+
+    /// Attach a metrics registry the run's engines will update.
+    pub fn with_metrics(mut self, registry: Arc<MetricsRegistry>) -> Self {
+        self.metrics = Some(registry);
+        self
     }
 
     /// Switch the grant protocol to the lock-free CAS fast path.

@@ -26,6 +26,8 @@ use std::collections::VecDeque;
 use crate::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use crate::coordinator::protocol::{AfInfo, PerfReport};
 use crate::metrics::LoopStats;
+use crate::obs::stream::{self, IntervalSample, Sampler};
+use crate::report::json::Json;
 use crate::sched::adaptive::{AdaptiveController, SwitchEvent};
 use crate::sched::{Assignment, StepTicket, WorkQueue};
 use crate::substrate::delay::InjectedDelay;
@@ -63,6 +65,12 @@ pub struct DesConfig {
     /// this off: a 4096-rank × 10⁷-iteration SS run would otherwise log
     /// 10⁷ × 24 bytes of grants nobody reads.
     pub record_assignments: bool,
+    /// Virtual-time observability sampling interval in seconds
+    /// (`--stream-metrics`); 0 (the default) disables streaming. When on,
+    /// [`DesResult::stream`] holds one `interval` record per elapsed tick
+    /// plus the run's `switch` records, in virtual-time order — see
+    /// `docs/metrics-schema.md`.
+    pub stream_interval: f64,
 }
 
 impl DesConfig {
@@ -84,6 +92,7 @@ impl DesConfig {
             hier: HierParams::default(),
             sched_path: SchedPath::default(),
             record_assignments: true,
+            stream_interval: 0.0,
         }
     }
 
@@ -111,6 +120,13 @@ impl DesConfig {
     /// Disable assignment recording (huge-scale scenarios).
     pub fn without_assignment_recording(mut self) -> Self {
         self.record_assignments = false;
+        self
+    }
+
+    /// Enable observability streaming at the given virtual-time interval
+    /// (seconds; ≤ 0 keeps it off).
+    pub fn with_stream_interval(mut self, interval_s: f64) -> Self {
+        self.stream_interval = interval_s;
         self
     }
 }
@@ -148,6 +164,9 @@ pub struct DesResult {
     /// ([`crate::config::AdaptiveParams`]), in decision order; empty when
     /// adaptivity is off.
     pub switch_events: Vec<SwitchEvent>,
+    /// Observability stream records (`interval` + `switch`, virtual-time
+    /// order) when [`DesConfig::stream_interval`] > 0; empty otherwise.
+    pub stream: Vec<Json>,
 }
 
 impl DesResult {
@@ -372,6 +391,10 @@ struct Sim<'a> {
     lockfree: bool,
     fast_grants: u64,
     events: u64,
+    // observability stream
+    sampler: Option<Sampler>,
+    stream: Vec<Json>,
+    last_tick_chunks: u64,
 }
 
 impl<'a> Sim<'a> {
@@ -431,6 +454,9 @@ impl<'a> Sim<'a> {
             lockfree,
             fast_grants: 0,
             events: 0,
+            sampler: Sampler::from_interval_s(cfg.stream_interval),
+            stream: Vec::new(),
+            last_tick_chunks: 0,
         }
     }
 
@@ -582,8 +608,39 @@ impl<'a> Sim<'a> {
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;
             self.events += 1;
+            if self.sampler.is_some() {
+                self.sample_ticks();
+            }
             self.dispatch(ev);
         }
+    }
+
+    /// Emit one `interval` stream record per virtual-time tick boundary the
+    /// event loop just crossed (the counters are the state *at* the tick —
+    /// no event fires between boundaries, so sampling at the first event
+    /// past each boundary is exact).
+    fn sample_ticks(&mut self) {
+        let Some(mut sampler) = self.sampler.take() else { return };
+        while let Some(t) = sampler.due(self.now) {
+            let record = stream::interval_record(&IntervalSample {
+                t,
+                chunks: self.chunks_granted,
+                chunks_delta: self.chunks_granted - self.last_tick_chunks,
+                interval_s: sampler.interval_s(),
+                messages: self.messages,
+                fast_grants: self.fast_grants,
+                remaining: self.queue.remaining(),
+            })
+            .field("queue_depth", self.svc_queue.len() as u64)
+            .field("technique", self.eras[self.current_era()].kind);
+            let record = match self.adapt.as_ref() {
+                Some(ctl) => stream::append_ewmas(record, ctl),
+                None => record,
+            };
+            self.stream.push(record);
+            self.last_tick_chunks = self.chunks_granted;
+        }
+        self.sampler = Some(sampler);
     }
 
     fn dispatch(&mut self, ev: Ev) {
@@ -1002,8 +1059,30 @@ impl<'a> Sim<'a> {
             finish[0] = finish[0].max(secs(self.rank0_finish_ns));
         }
         let wait: f64 = self.workers.iter().map(|w| secs(w.wait_ns)).sum();
+        let stats =
+            LoopStats::from_finish_times(&finish, self.chunks_granted, wait, self.messages);
+        let mut stream = self.stream;
+        if self.sampler.is_some() {
+            // Final cumulative record at t_par, then the run's switch
+            // records, merged into virtual-time order.
+            stream.push(
+                stream::interval_record(&IntervalSample {
+                    t: stats.t_par,
+                    chunks: self.chunks_granted,
+                    chunks_delta: self.chunks_granted - self.last_tick_chunks,
+                    interval_s: self.cfg.stream_interval,
+                    messages: self.messages,
+                    fast_grants: self.fast_grants,
+                    remaining: self.queue.remaining(),
+                })
+                .field("queue_depth", self.svc_queue.len() as u64)
+                .field("technique", self.eras[self.eras.len() - 1].kind),
+            );
+            stream.extend(self.switch_events.iter().map(stream::switch_record));
+            stream = stream::sorted_by_time(stream);
+        }
         DesResult {
-            stats: LoopStats::from_finish_times(&finish, self.chunks_granted, wait, self.messages),
+            stats,
             finish,
             rank0_service_busy: secs(self.rank0_service_ns),
             assignments: self.assignments,
@@ -1014,6 +1093,7 @@ impl<'a> Sim<'a> {
             fast_grants: self.fast_grants,
             events: self.events,
             switch_events: self.switch_events,
+            stream,
         }
     }
 }
@@ -1303,6 +1383,53 @@ mod tests {
             assert_eq!(a.t_par(), b.t_par(), "{kind}");
             assert_eq!(a.fast_grants, b.fast_grants, "{kind}");
         }
+    }
+
+    /// Streaming is observational only: enabling it changes neither the
+    /// schedule nor t_par, the records are in virtual-time order, cover the
+    /// run's counters cumulatively, and adaptive runs interleave their
+    /// switch records.
+    #[test]
+    fn stream_records_are_ordered_and_inert() {
+        let quiet = simulate(&base(20_000, 8, ExecutionModel::Dca, TechniqueKind::Ss)).unwrap();
+        let cfg = base(20_000, 8, ExecutionModel::Dca, TechniqueKind::Ss)
+            .with_stream_interval(1e-3);
+        let streamed = simulate(&cfg).unwrap();
+        assert_eq!(quiet.t_par(), streamed.t_par());
+        assert_eq!(quiet.assignments, streamed.assignments);
+        assert!(quiet.stream.is_empty());
+        assert!(streamed.stream.len() >= 2, "ticks + final record");
+        let ts: Vec<f64> = streamed
+            .stream
+            .iter()
+            .map(|r| r.get("t").and_then(Json::as_f64).unwrap())
+            .collect();
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]), "virtual-time order");
+        let last = streamed.stream.last().unwrap();
+        assert_eq!(
+            last.get("chunks").and_then(Json::as_u64),
+            Some(streamed.stats.chunks),
+            "final record is cumulative"
+        );
+        assert_eq!(last.get("remaining").and_then(Json::as_u64), Some(0));
+        // An adaptive streamed run carries its switch records inline.
+        use crate::techniques::CandidateSet;
+        let mut acfg = base(20_000, 16, ExecutionModel::Dca, TechniqueKind::Ss)
+            .with_stream_interval(1e-3);
+        acfg.delay = InjectedDelay::exponential_calculation(100e-6, 5);
+        acfg.hier = acfg
+            .hier
+            .with_adaptive()
+            .with_probe_interval(8)
+            .with_candidates(CandidateSet::parse("ss,gss,fac").unwrap());
+        let adapt = simulate(&acfg).unwrap();
+        let switches = adapt
+            .stream
+            .iter()
+            .filter(|r| r.get("event").and_then(Json::as_str) == Some("switch"))
+            .count();
+        assert_eq!(switches, adapt.switch_events.len());
+        assert!(switches > 0);
     }
 
     #[test]

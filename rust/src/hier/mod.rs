@@ -68,6 +68,8 @@ use crate::coordinator::protocol::{AfInfo, PerfReport};
 use crate::des::heap::{ns, secs, EventHeap};
 use crate::des::{min_latency_ns, DesConfig, DesResult};
 use crate::metrics::LoopStats;
+use crate::obs::stream::{self, IntervalSample, Sampler};
+use crate::report::json::Json;
 use crate::sched::adaptive::{AdaptiveController, SwitchEvent};
 use crate::sched::Assignment;
 use crate::substrate::topology::Topology;
@@ -289,6 +291,13 @@ struct HierSim<'a> {
     events: u64,
     /// Technique-slot rebinds, in decision order.
     switch_events: Vec<SwitchEvent>,
+    /// Iterations granted so far (`remaining = n - iters_granted` for the
+    /// observability stream — cheaper than summing per-rank counters).
+    iters_granted: u64,
+    // observability stream
+    sampler: Option<Sampler>,
+    stream: Vec<Json>,
+    last_tick_chunks: u64,
 }
 
 impl<'a> HierSim<'a> {
@@ -381,6 +390,10 @@ impl<'a> HierSim<'a> {
             fast_grants: 0,
             events: 0,
             switch_events: Vec::new(),
+            iters_granted: 0,
+            sampler: Sampler::from_interval_s(cfg.stream_interval),
+            stream: Vec::new(),
+            last_tick_chunks: 0,
         }
     }
 
@@ -463,6 +476,7 @@ impl<'a> HierSim<'a> {
 
     fn grant(&mut self, rank: u32, a: Assignment) {
         self.chunks_granted += 1;
+        self.iters_granted += a.size;
         if self.cfg.record_assignments {
             self.assignments.push(a);
         }
@@ -501,8 +515,52 @@ impl<'a> HierSim<'a> {
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;
             self.events += 1;
+            if self.sampler.is_some() {
+                self.sample_ticks();
+            }
             self.dispatch(ev);
         }
+    }
+
+    /// One `subtrees` entry per master persona: the slot's current binding,
+    /// its ledger's unconsumed iterations, parked children, and (when
+    /// adaptive) its controller's EWMAs.
+    fn subtree_entries(&self) -> Vec<Json> {
+        let mut entries = Vec::new();
+        for (d, level) in self.personas.iter().enumerate() {
+            for (j, pr) in level.iter().enumerate() {
+                entries.push(stream::subtree_entry(
+                    d as u32,
+                    j as u32,
+                    pr.ledger.bound_kind(),
+                    pr.ledger.remaining(),
+                    pr.parked.len() as u64,
+                    pr.adapt.as_ref(),
+                ));
+            }
+        }
+        entries
+    }
+
+    /// Emit one `interval` record (core counters + the per-subtree array)
+    /// per virtual-time tick boundary the event loop just crossed.
+    fn sample_ticks(&mut self) {
+        let Some(mut sampler) = self.sampler.take() else { return };
+        while let Some(t) = sampler.due(self.now) {
+            let record = stream::interval_record(&IntervalSample {
+                t,
+                chunks: self.chunks_granted,
+                chunks_delta: self.chunks_granted - self.last_tick_chunks,
+                interval_s: sampler.interval_s(),
+                messages: self.messages,
+                fast_grants: self.fast_grants,
+                remaining: self.cfg.params.n - self.iters_granted,
+            })
+            .field("subtrees", self.subtree_entries());
+            self.stream.push(record);
+            self.last_tick_chunks = self.chunks_granted;
+        }
+        self.sampler = Some(sampler);
     }
 
     fn dispatch(&mut self, ev: Ev) {
@@ -1197,8 +1255,28 @@ impl<'a> HierSim<'a> {
             finish[r] = finish[r].max(secs(server.cpu_busy_until_ns));
         }
         let wait: f64 = self.workers.iter().map(|w| secs(w.wait_ns)).sum();
+        let stats =
+            LoopStats::from_finish_times(&finish, self.chunks_granted, wait, self.messages);
+        let final_record = self.sampler.is_some().then(|| {
+            stream::interval_record(&IntervalSample {
+                t: stats.t_par,
+                chunks: self.chunks_granted,
+                chunks_delta: self.chunks_granted - self.last_tick_chunks,
+                interval_s: self.cfg.stream_interval,
+                messages: self.messages,
+                fast_grants: self.fast_grants,
+                remaining: self.cfg.params.n - self.iters_granted,
+            })
+            .field("subtrees", self.subtree_entries())
+        });
+        let mut stream = self.stream;
+        if let Some(record) = final_record {
+            stream.push(record);
+            stream.extend(self.switch_events.iter().map(stream::switch_record));
+            stream = stream::sorted_by_time(stream);
+        }
         DesResult {
-            stats: LoopStats::from_finish_times(&finish, self.chunks_granted, wait, self.messages),
+            stats,
             finish,
             rank0_service_busy: secs(self.servers[0].service_ns),
             assignments: self.assignments,
@@ -1209,6 +1287,7 @@ impl<'a> HierSim<'a> {
             fast_grants: self.fast_grants,
             events: self.events,
             switch_events: self.switch_events,
+            stream,
         }
     }
 }

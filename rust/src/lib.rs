@@ -39,8 +39,10 @@ pub mod des;
 pub mod hier;
 pub mod lb4mpi;
 pub mod metrics;
+pub mod obs;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod sched;
 pub mod substrate;
 pub mod techniques;

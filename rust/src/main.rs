@@ -20,6 +20,10 @@ use dca_dls::report::figures::{
 use dca_dls::report::json::Json;
 use dca_dls::report::{render_figure, render_table2, render_table3};
 use dca_dls::runtime::workload::{PjrtMandelbrot, PjrtPsia};
+use dca_dls::obs::stream::write_ndjson;
+use dca_dls::obs::MetricsRegistry;
+use dca_dls::scenario::{explain, parse_scenario, run_scenario, Body, RunReport};
+use dca_dls::tenant::scheduler::{JobSpec, Scheduler, SchedulerOptions};
 use dca_dls::runtime::Runtime;
 use dca_dls::substrate::delay::InjectedDelay;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
@@ -34,75 +38,315 @@ use dca_dls::workload::Workload;
 const USAGE: &str = "\
 dca-dls — Distributed Chunk Calculation for DLS (Eleliemy & Ciorba 2021)
 
-USAGE: dca-dls <command> [--flag value]...
+USAGE
+  dca-dls <command> [--flag value]...
+  dca-dls help <command>        full flags + one worked example per command
 
-COMMANDS
-  table2             chunk sequences, N=1000 P=4 (Table 2)   [--n --p]
-  fig1               chunk-size series per technique (Fig 1) [--n --p]
-  table3             loop characteristics (Table 3)          [--n --ct --cloud]
-  fig4               PSIA factorial experiment (Fig 4)       [--quick --reps --delay-site --hier --inner T --watermark W|auto --json F]
-  fig5               Mandelbrot factorial experiment (Fig 5) [--quick --reps --delay-site --hier --inner T --watermark W|auto --json F]
-  simulate           one DES cell  [--app --tech --model --inner --delay-us --ranks --n
-                       --sched-path two-phase|lockfree|auto --adaptive --probe-interval G --candidates t,…]
-  hier               N-level HIER-DCA vs the flat models     [--app --tech --inner --levels K --fanout a,b,…
-                       --techniques t0,t1,… --watermark W|auto --prefetch-depth Q --nodes --rpn
-                       --racks R --rack-latency-us X --n --delay-us --delay-site --lockfree
-                       --sched-path auto --adaptive --probe-interval G --candidates t,… --json F]
-  run                real threaded engine [--app --tech --model --workers --n --pjrt --delay-us
-                       --hier --inner T --nodes K --levels K --fanout a,b,… --techniques t0,t1,…
-                       --watermark W|auto (0 = fetch on exhaustion) --prefetch-depth Q
-                       --lockfree (single-CAS grants for closed-form techniques) --sched-path auto
-                       --adaptive --probe-interval G --candidates t,… --json F]
-  sweep-breakafter   A3 ablation: master breakAfter sweep [--app --tech]
-  select             SimAS-style model auto-selection (§7, 4 models) [--app --tech --inner --levels K
-                       --fanout a,b,… --watermark W|auto --delay-us --lockfree --sched-path P
-                       --adaptive --probe-interval G --candidates t,…]
-  tenants            multi-tenant DES session: many loops over ONE shared cluster
-                       [--spec FILE | --demo K --seed S] [--ranks R
-                        --policy fair|priority|fifo --lockfree --sched-path P
-                        --slowdown --json F]
-  validate           PJRT artifacts vs native implementations
+PAPER ARTIFACTS
+  table2           chunk sequences, N=1000 P=4 (Table 2)
+  fig1             chunk-size series per technique (Fig 1)
+  table3           loop characteristics (Table 3)
+  fig4 / fig5      PSIA / Mandelbrot factorial experiments (Figs 4–5)
 
-MULTI-TENANT SESSIONS (tenants)
-  Admits many self-scheduled loops (tenants) to one shared cluster; every
-  rank arbitrates between the per-tenant chunk ledgers it hosts using the
-  session policy (fair = weighted fair-share over granted iterations,
-  priority = strict classes, fifo = arrival order). `--spec FILE` loads a
-  JSON session spec (see rust/src/README.md); `--demo K` synthesizes K
-  seeded tenants with staggered arrivals and overlapping placements.
-  `--slowdown` re-runs each tenant solo and reports per-tenant slowdown.
+DES SUBSTRATE (virtual time)
+  simulate         one DES cell: technique × execution model × delay
+  hier             N-level HIER-DCA vs the flat models, side by side
+  select           SimAS-style execution-model auto-selection (§7)
+  tenants          multi-tenant session — many loops, ONE shared cluster
 
-    dca-dls tenants --demo 12 --ranks 64 --policy fair --slowdown
+THREADED SUBSTRATE (real threads, wall clock)
+  run              flat or hierarchical engine, optionally PJRT-backed
+  sweep-breakafter A3 ablation: master breakAfter sweep
+  metrics-dump     one instrumented run → Prometheus text on stdout
 
-ADAPTIVE SELECTION (--adaptive)
-  Every subtree master (and the flat DCA coordinator) re-binds its
-  technique slot online, SimAS-style: per-subtree EWMAs of iteration
-  mean/σ, per-grant overhead and drain rate feed a closed-form probe over
-  the candidate set every --probe-interval grants. `--sched-path auto`
-  starts lock-free and demotes a subtree to the two-phase protocol when
-  its controller selects the measurement-coupled TAP; AF cannot be a
-  candidate (no closed form to probe). Example:
+SCENARIO SUITE (versioned JSON specs — docs/scenario-spec.md)
+  scenario list [DIR]          summarize the committed spec files
+  scenario validate FILE...    parse-check specs without running them
+  scenario explain FILE...     human summary of what a spec runs
+  scenario run FILE [--json]   run the spec and check its expectations
+                               exit 0 = pass, 1 = failed check, 2 = spec error
 
-    dca-dls hier --tech fac --inner ss --adaptive --probe-interval 16 \\
-            --candidates ss,gss,fac --sched-path auto --delay-us 100
+VALIDATION
+  validate         PJRT artifacts vs the native implementations
 
-HIERARCHY DEPTH (--levels)
-  The scheduling tree is depth 2 by default (coordinator → node masters →
-  ranks). `--levels 3` nests a third tier — rack → node → socket — over the
-  cluster's latency triple; fan-outs multiply to the rank count (a trailing
-  entry may be omitted and is derived), and `--techniques` names one
-  technique per level, outer first. Example: a 256-rank depth-3 sweep with
-  4 racks of 4 nodes, FAC outer, GSS per rack, FSC within the node:
-
-    dca-dls hier --levels 3 --fanout 4,4 --techniques fac,gss,fsc \\
-            --racks 4 --rack-latency-us 100 --watermark auto
-
-  `run --hier --levels 3 --fanout 2,2 --workers 16` drives the same tree on
-  real threads.
+OBSERVABILITY
+  --stream-metrics <path|->    (simulate, hier, tenants, scenario run)
+      stream NDJSON interval/switch/tenant records in virtual-time order;
+      '-' writes to stdout. --stream-interval S sets the sampling tick in
+      virtual seconds (default 0.001). Schema: docs/metrics-schema.md.
 ";
+
+/// The section `dca-dls help <command>` prints: grouped flags plus one
+/// worked example per command. Kept in sync with [`USAGE`]'s command list.
+fn help_section(cmd: &str) -> Option<&'static str> {
+    Some(match cmd {
+        "table2" => {
+            "dca-dls table2 — chunk sequences per technique (paper Table 2)\n\
+             \n\
+             FLAGS\n\
+             \x20 --n N        loop size (default 1000)\n\
+             \x20 --p P        processing elements (default 4)\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls table2 --n 1000 --p 4\n"
+        }
+        "fig1" => {
+            "dca-dls fig1 — chunk-size series per scheduling step (paper Fig 1)\n\
+             \n\
+             FLAGS\n\
+             \x20 --n N        loop size (default 1000)\n\
+             \x20 --p P        processing elements (default 4)\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls fig1 --n 2048 --p 8\n"
+        }
+        "table3" => {
+            "dca-dls table3 — loop characteristics of the two applications (Table 3)\n\
+             \n\
+             FLAGS\n\
+             \x20 --n N        loop size (default 262144)\n\
+             \x20 --ct C       Mandelbrot iteration cap (default 2000)\n\
+             \x20 --cloud K    PSIA point-cloud size (default 2048)\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls table3 --ct 2000\n"
+        }
+        "fig4" | "fig5" => {
+            "dca-dls fig4|fig5 — factorial experiments (PSIA = Fig 4, Mandelbrot = Fig 5)\n\
+             \n\
+             SCOPE\n\
+             \x20 --quick                  CI-sized factorial instead of the paper grid\n\
+             \x20 --reps R                 repetitions per cell\n\
+             \x20 --json FILE              also write the rows as JSON\n\
+             \n\
+             DELAY\n\
+             \x20 --delay-site calculation|assignment   where the injected overhead is paid\n\
+             \n\
+             HIERARCHY (optional extra model)\n\
+             \x20 --hier                   add HIER-DCA to the sweep\n\
+             \x20 --inner T                deepest-level technique\n\
+             \x20 --levels K  --fanout a,b,…   tree shape (outer first)\n\
+             \x20 --watermark W|auto  --prefetch-depth Q   prefetch policy\n\
+             \x20 --racks R  --rack-latency-us X           racked topology\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls fig4 --quick --reps 3 --hier --inner ss --watermark auto\n"
+        }
+        "simulate" => {
+            "dca-dls simulate — one DES cell (virtual time)\n\
+             \n\
+             CELL\n\
+             \x20 --app psia|mandelbrot    workload cost model (default psia)\n\
+             \x20 --tech T                 scheduling technique (default gss)\n\
+             \x20 --model cca|dca|dca-rma|hier   execution model (default dca)\n\
+             \x20 --n N                    loop size (default 262144)\n\
+             \x20 --ranks R                cluster size (default 256 = miniHPC)\n\
+             \x20 --delay-us D             injected per-chunk calculation delay\n\
+             \x20 --racks R  --rack-latency-us X   racked topology\n\
+             \n\
+             GRANT PATH\n\
+             \x20 --sched-path two-phase|lockfree|auto   (--lockfree = shorthand)\n\
+             \n\
+             HIERARCHY (--model hier)\n\
+             \x20 --inner T  --levels K  --fanout a,b,…  --techniques t0,t1,…\n\
+             \x20 --watermark W|auto  --prefetch-depth Q\n\
+             \n\
+             ADAPTIVE SELECTION\n\
+             \x20 --adaptive  --probe-interval G  --candidates t,…\n\
+             \n\
+             OBSERVABILITY\n\
+             \x20 --stream-metrics <path|->   NDJSON interval/switch records\n\
+             \x20 --stream-interval S         sampling tick, virtual s (default 0.001)\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls simulate --tech fac --model hier --inner ss --delay-us 100 \\\n\
+             \x20         --stream-metrics - --stream-interval 0.01\n"
+        }
+        "hier" => {
+            "dca-dls hier — N-level HIER-DCA vs the flat models, one scenario\n\
+             \n\
+             CELL\n\
+             \x20 --app psia|mandelbrot    workload cost model (default psia)\n\
+             \x20 --tech T                 outer technique (default gss)\n\
+             \x20 --n N                    loop size (default 262144)\n\
+             \x20 --nodes K  --rpn R       cluster shape (default 16×16)\n\
+             \x20 --racks R  --rack-latency-us X   racked topology\n\
+             \x20 --delay-us D  --delay-site calculation|assignment\n\
+             \n\
+             TREE\n\
+             \x20 --inner T                deepest-level technique\n\
+             \x20 --levels K  --fanout a,b,…    depth + per-level fan-outs (outer first;\n\
+             \x20                               a trailing fan-out may be omitted)\n\
+             \x20 --techniques t0,t1,…     one technique per level, outer first\n\
+             \x20 --watermark W|auto       prefetch watermark (0 = fetch on exhaustion)\n\
+             \x20 --prefetch-depth Q       staged-queue capacity\n\
+             \n\
+             GRANT PATH / ADAPTIVE\n\
+             \x20 --sched-path two-phase|lockfree|auto   (--lockfree = shorthand)\n\
+             \x20 --adaptive  --probe-interval G  --candidates t,…\n\
+             \n\
+             OUTPUT\n\
+             \x20 --json FILE              write all model rows as JSON\n\
+             \x20 --stream-metrics <path|->  --stream-interval S\n\
+             \x20                          NDJSON stream of the HIER-DCA row\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls hier --levels 3 --fanout 4,4 --techniques fac,gss,fsc \\\n\
+             \x20         --racks 4 --rack-latency-us 100 --watermark auto\n"
+        }
+        "run" => {
+            "dca-dls run — the real threaded engine (wall clock)\n\
+             \n\
+             CELL\n\
+             \x20 --app psia|mandelbrot    workload (default psia)\n\
+             \x20 --tech T                 technique (default gss)\n\
+             \x20 --model cca|dca|dca-rma|hier   execution model (--hier = model hier)\n\
+             \x20 --workers P              rank threads (default 4)\n\
+             \x20 --n N                    loop size\n\
+             \x20 --delay-us D             injected calculation delay\n\
+             \x20 --pjrt                   execute through the PJRT artifacts\n\
+             \n\
+             HIERARCHY (--hier)\n\
+             \x20 --nodes K  --levels K  --fanout a,b,…  --techniques t0,t1,…\n\
+             \x20 --inner T  --watermark W|auto (0 = fetch on exhaustion)\n\
+             \x20 --prefetch-depth Q\n\
+             \n\
+             GRANT PATH / ADAPTIVE\n\
+             \x20 --lockfree | --sched-path two-phase|lockfree|auto\n\
+             \x20 --adaptive  --probe-interval G  --candidates t,…\n\
+             \n\
+             OUTPUT\n\
+             \x20 --json FILE              write the run summary as JSON\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls run --hier --levels 3 --fanout 2,2 --workers 16 --lockfree\n"
+        }
+        "sweep-breakafter" => {
+            "dca-dls sweep-breakafter — A3 ablation: master breakAfter sweep\n\
+             \n\
+             FLAGS\n\
+             \x20 --app psia|mandelbrot    workload cost model (default psia)\n\
+             \x20 --tech T                 technique (default gss)\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls sweep-breakafter --app mandelbrot --tech fac\n"
+        }
+        "select" => {
+            "dca-dls select — SimAS-style execution-model auto-selection (§7)\n\
+             \n\
+             Probes every execution model on a loop prefix and selects the\n\
+             lowest predicted T_par.\n\
+             \n\
+             CELL\n\
+             \x20 --app psia|mandelbrot  --tech T  --delay-us D\n\
+             \x20 --racks R  --rack-latency-us X\n\
+             \n\
+             TREE / GRANT PATH / ADAPTIVE\n\
+             \x20 --inner T  --levels K  --fanout a,b,…  --watermark W|auto\n\
+             \x20 --lockfree | --sched-path P\n\
+             \x20 --adaptive  --probe-interval G  --candidates t,…\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls select --tech fac --inner ss --delay-us 100 --sched-path auto\n"
+        }
+        "tenants" => {
+            "dca-dls tenants — multi-tenant DES session over ONE shared cluster\n\
+             \n\
+             Admits many self-scheduled loops to one cluster; every rank\n\
+             arbitrates between the per-tenant ledgers it hosts.\n\
+             \n\
+             TENANT SET\n\
+             \x20 --spec FILE     JSON session spec (docs/scenario-spec.md §session)\n\
+             \x20 --demo K        synthesize K seeded tenants   --seed S\n\
+             \n\
+             SESSION\n\
+             \x20 --ranks R       shared cluster size (default 64)\n\
+             \x20 --policy fair|priority|fifo\n\
+             \x20 --lockfree | --sched-path P\n\
+             \x20 --slowdown      re-run each tenant solo, report slowdown vs solo\n\
+             \x20 --json FILE     write the session report as JSON\n\
+             \n\
+             OBSERVABILITY\n\
+             \x20 --stream-metrics <path|->  --stream-interval S\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls tenants --demo 12 --ranks 64 --policy fair --slowdown\n"
+        }
+        "scenario" => {
+            "dca-dls scenario — versioned scenario specs (docs/scenario-spec.md)\n\
+             \n\
+             SUBCOMMANDS\n\
+             \x20 list [DIR]         summarize every *.json spec (default scenarios/)\n\
+             \x20 validate FILE...   parse-check without running\n\
+             \x20 explain FILE...    print what each spec would run and check\n\
+             \x20 run FILE [--json] [--stream-metrics <path|->] [--stream-interval S]\n\
+             \n\
+             EXIT CODES (stable — scriptable)\n\
+             \x20 0   every expectation held\n\
+             \x20 1   the run finished but an expectation failed\n\
+             \x20 2   spec error (bad JSON, unknown field, bad schema) or usage error\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls scenario run scenarios/hier-calc-100us.json --json\n"
+        }
+        "metrics-dump" => {
+            "dca-dls metrics-dump — one-shot Prometheus dump (no network)\n\
+             \n\
+             Runs a small instrumented threaded engine plus a two-job resident\n\
+             scheduler pool against one shared MetricsRegistry, then prints the\n\
+             Prometheus text exposition to stdout. Every metric it emits is\n\
+             documented in docs/metrics-schema.md.\n\
+             \n\
+             FLAGS\n\
+             \x20 --n N          loop size (default 16384)\n\
+             \x20 --workers P    pool size (default 4)\n\
+             \x20 --tech T       technique (default gss)\n\
+             \x20 --lockfree | --sched-path two-phase|lockfree|auto\n\
+             \x20 --adaptive  --probe-interval G  --candidates t,…\n\
+             \x20                exercise the switch counter too\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls metrics-dump --n 20000 --workers 8 --lockfree\n"
+        }
+        "validate" => {
+            "dca-dls validate — PJRT artifacts vs the native implementations\n\
+             \n\
+             Cross-checks the compiled PJRT workloads against the native Rust\n\
+             implementations (bit-exact Mandelbrot modulo FMA contraction,\n\
+             tolerance-bounded PSIA binning). No flags.\n\
+             \n\
+             EXAMPLE\n\
+             \x20 dca-dls validate\n"
+        }
+        "help" => {
+            "dca-dls help [command] — this overview, or one command's section\n"
+        }
+        _ => return None,
+    })
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    // `help` and `scenario` take positional operands, which the flag parser
+    // rejects by design — dispatch them before it runs.
+    match args.first().map(String::as_str) {
+        Some("help") => {
+            match args.get(1) {
+                None => print!("{USAGE}"),
+                Some(c) => match help_section(c) {
+                    Some(section) => print!("{section}"),
+                    None => {
+                        eprintln!("no help for unknown command '{c}'\n");
+                        eprint!("{USAGE}");
+                        std::process::exit(2);
+                    }
+                },
+            }
+            return;
+        }
+        Some("scenario") => cmd_scenario(&args[1..]),
+        _ => {}
+    }
     let Some((cmd, flags)) = parse(&args) else {
         eprint!("{USAGE}");
         std::process::exit(2);
@@ -119,6 +363,7 @@ fn main() {
         "sweep-breakafter" => cmd_sweep_breakafter(&flags),
         "select" => cmd_select(&flags),
         "tenants" => cmd_tenants(&flags),
+        "metrics-dump" => cmd_metrics_dump(&flags),
         "validate" => cmd_validate(),
         _ => {
             eprint!("{USAGE}");
@@ -457,6 +702,254 @@ fn reject_sched_path_flags(flags: &HashMap<String, String>, cmd: &str) -> anyhow
     Ok(())
 }
 
+/// Sampling tick used when `--stream-metrics` is given without an explicit
+/// `--stream-interval` (virtual seconds).
+const DEFAULT_STREAM_INTERVAL: f64 = 1e-3;
+
+/// `--stream-metrics <path|->` + `--stream-interval S`: NDJSON streaming of
+/// the DES observability records — `Some((dest, interval_s))` when on.
+fn stream_flags(flags: &HashMap<String, String>) -> anyhow::Result<Option<(String, f64)>> {
+    let Some(dest) = flags.get("stream-metrics") else {
+        anyhow::ensure!(
+            !flags.contains_key("stream-interval"),
+            "--stream-interval only applies with --stream-metrics"
+        );
+        return Ok(None);
+    };
+    anyhow::ensure!(!dest.is_empty(), "--stream-metrics needs a path (or '-' for stdout)");
+    let s = get(flags, "stream-interval", DEFAULT_STREAM_INTERVAL);
+    anyhow::ensure!(s > 0.0, "--stream-interval must be > 0 (virtual seconds)");
+    Ok(Some((dest.clone(), s)))
+}
+
+/// Write a run's stream records and (for file destinations) say where.
+fn write_stream(dest: &str, records: &[Json]) -> anyhow::Result<()> {
+    write_ndjson(dest, records)?;
+    if dest != "-" {
+        println!("streamed {} records to {dest}", records.len());
+    }
+    Ok(())
+}
+
+/// `scenario list|validate|explain|run` with the stable exit codes the
+/// suite documents: 0 = ok, 1 = scenario failure, 2 = spec/usage error.
+fn cmd_scenario(args: &[String]) -> ! {
+    let code = match scenario_dispatch(args) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn scenario_dispatch(args: &[String]) -> anyhow::Result<i32> {
+    let rest = args.get(1..).unwrap_or_default();
+    match args.first().map(String::as_str) {
+        Some("list") => scenario_list(rest),
+        Some("validate") => scenario_validate(rest),
+        Some("explain") => scenario_explain(rest),
+        Some("run") => scenario_run(rest),
+        _ => anyhow::bail!(
+            "usage: dca-dls scenario <list|validate|explain|run> … \
+             (see `dca-dls help scenario`)"
+        ),
+    }
+}
+
+fn load_scenario(path: &str) -> anyhow::Result<dca_dls::scenario::Scenario> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read scenario '{path}': {e}"))?;
+    parse_scenario(&text).map_err(|e| anyhow::anyhow!("{path}: {e:#}"))
+}
+
+fn scenario_list(args: &[String]) -> anyhow::Result<i32> {
+    let dir = args.first().map(String::as_str).unwrap_or("scenarios");
+    let mut paths: Vec<_> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("cannot read scenario directory '{dir}': {e}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        println!("no scenario files (*.json) in '{dir}'");
+        return Ok(0);
+    }
+    let mut bad = false;
+    for path in &paths {
+        match load_scenario(&path.display().to_string()) {
+            Ok(sc) => {
+                let kind = match &sc.body {
+                    Body::Des(_) => "des",
+                    Body::Session { .. } => "session",
+                };
+                println!("{:<28} {:<8} {}", sc.name, kind, sc.description);
+            }
+            Err(e) => {
+                bad = true;
+                eprintln!("spec error: {e:#}");
+            }
+        }
+    }
+    Ok(if bad { 2 } else { 0 })
+}
+
+fn scenario_validate(paths: &[String]) -> anyhow::Result<i32> {
+    anyhow::ensure!(!paths.is_empty(), "usage: dca-dls scenario validate <spec.json>…");
+    let mut bad = false;
+    for path in paths {
+        match load_scenario(path) {
+            Ok(sc) => println!("{path}: ok ({})", sc.name),
+            Err(e) => {
+                bad = true;
+                eprintln!("spec error: {e:#}");
+            }
+        }
+    }
+    Ok(if bad { 2 } else { 0 })
+}
+
+fn scenario_explain(paths: &[String]) -> anyhow::Result<i32> {
+    anyhow::ensure!(!paths.is_empty(), "usage: dca-dls scenario explain <spec.json>…");
+    for path in paths {
+        print!("{}", explain(&load_scenario(path)?));
+    }
+    Ok(0)
+}
+
+/// `scenario run <spec.json>… [--json] [--stream-metrics <path|->]
+/// [--stream-interval S]` — any failed expectation makes the whole
+/// invocation exit 1; parse or simulation errors exit 2.
+fn scenario_run(args: &[String]) -> anyhow::Result<i32> {
+    let mut paths = Vec::new();
+    let mut json = false;
+    let mut stream_dest: Option<String> = None;
+    let mut interval = 0.0f64;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => json = true,
+            "--stream-metrics" => {
+                let dest = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--stream-metrics needs a path (or '-')"))?;
+                stream_dest = Some(dest.clone());
+                i += 1;
+            }
+            "--stream-interval" => {
+                let raw = args
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("--stream-interval needs a value"))?;
+                interval = raw
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --stream-interval '{raw}' (expect s)"))?;
+                anyhow::ensure!(interval > 0.0, "--stream-interval must be > 0");
+                i += 1;
+            }
+            flag if flag.starts_with("--") => {
+                anyhow::bail!("unknown flag '{flag}' for `scenario run`")
+            }
+            path => paths.push(path.to_string()),
+        }
+        i += 1;
+    }
+    anyhow::ensure!(
+        !paths.is_empty(),
+        "usage: dca-dls scenario run <spec.json>… [--json] \
+         [--stream-metrics <path|->] [--stream-interval S]"
+    );
+    anyhow::ensure!(
+        stream_dest.is_some() || interval == 0.0,
+        "--stream-interval only applies with --stream-metrics"
+    );
+    anyhow::ensure!(
+        stream_dest.is_none() || paths.len() == 1,
+        "--stream-metrics takes exactly one scenario per invocation"
+    );
+    if stream_dest.is_some() && interval == 0.0 {
+        interval = DEFAULT_STREAM_INTERVAL;
+    }
+    let mut failed = false;
+    for path in &paths {
+        let sc = load_scenario(path)?;
+        // A spec that parsed but whose run errors out is a *scenario*
+        // failure (exit 1), not a spec error.
+        let report = match run_scenario(&sc, interval) {
+            Ok(report) => report,
+            Err(e) => {
+                eprintln!("{path}: run failed: {e:#}");
+                failed = true;
+                continue;
+            }
+        };
+        if let Some(dest) = &stream_dest {
+            write_ndjson(dest, &report.stream)?;
+        }
+        if json {
+            println!("{}", scenario_report_json(&report).render());
+        } else {
+            for c in &report.checks {
+                println!("  [{}] {}: {}", if c.ok { "PASS" } else { "FAIL" }, c.label, c.detail);
+            }
+            println!("{}: {}", report.name, if report.passed { "PASS" } else { "FAIL" });
+        }
+        failed |= !report.passed;
+    }
+    Ok(if failed { 1 } else { 0 })
+}
+
+/// The `scenario run --json` report document (one JSON object per line for
+/// multi-spec invocations) — see docs/scenario-spec.md.
+fn scenario_report_json(r: &RunReport) -> Json {
+    Json::obj()
+        .field("schema", "dca-dls/scenario-report/v1")
+        .field("name", r.name.as_str())
+        .field("passed", r.passed)
+        .field(
+            "checks",
+            Json::Arr(
+                r.checks
+                    .iter()
+                    .map(|c| {
+                        Json::obj()
+                            .field("label", c.label.as_str())
+                            .field("ok", c.ok)
+                            .field("detail", c.detail.as_str())
+                    })
+                    .collect(),
+            ),
+        )
+        .field("observed", r.observed.clone())
+}
+
+/// `metrics-dump`: drive one small instrumented threaded engine plus a
+/// two-job resident scheduler pool against a shared registry, then print
+/// the Prometheus text exposition — a one-shot, network-free stand-in for
+/// a `/metrics` endpoint.
+fn cmd_metrics_dump(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let workers = get(flags, "workers", 4u32);
+    let tech = outer_tech_of(flags)?;
+    let registry = Arc::new(MetricsRegistry::new());
+    let workload: Arc<dyn Workload> = Arc::new(Psia::synthetic(512, 4096, 7));
+    let n = get(flags, "n", 16_384u64).min(workload.n());
+    let mut cfg = EngineConfig::new(LoopParams::new(n, workers), tech, ExecutionModel::Dca)
+        .with_metrics(Arc::clone(&registry));
+    cfg.sched_path = sched_path_of(flags)?;
+    cfg.hier = apply_adaptive_flags(cfg.hier, flags)?;
+    coordinator::run(&cfg, Arc::clone(&workload))?;
+    // A tiny resident pool exercises the tenant metrics in the same dump.
+    let pool = Scheduler::new_instrumented(
+        SchedulerOptions { workers, ..SchedulerOptions::default() },
+        Some(Arc::clone(&registry)),
+    );
+    pool.submit(JobSpec::new("dump-a", (n / 4).max(1), tech, Arc::clone(&workload)))?;
+    pool.submit(JobSpec::new("dump-b", (n / 8).max(1), TechniqueKind::Ss, workload))?;
+    pool.drain();
+    print!("{}", registry.render_prometheus());
+    Ok(())
+}
+
 fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let app = app_of(flags);
     let tech = outer_tech_of(flags)?;
@@ -476,9 +969,11 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     )?;
     let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
     let hier = apply_adaptive_flags(hier_of(flags)?, flags)?;
+    let stream = stream_flags(flags)?;
     let cfg = DesConfig {
         sched_path: sched_path_of(flags)?,
         record_assignments: true,
+        stream_interval: stream.as_ref().map_or(0.0, |(_, s)| *s),
         params: LoopParams::new(n, cluster.total_ranks()),
         technique: tech,
         model,
@@ -489,6 +984,9 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         hier,
     };
     let r = simulate(&cfg)?;
+    if let Some((dest, _)) = &stream {
+        write_stream(dest, &r.stream)?;
+    }
     println!(
         "{} {} {} delay={}µs ranks={ranks} N={n}",
         app.name(),
@@ -560,6 +1058,7 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             DelaySite::Assignment => "assignment",
         },
     );
+    let stream = stream_flags(flags)?;
     let mut results: Vec<(ExecutionModel, Option<dca_dls::des::DesResult>)> = Vec::new();
     for model in ExecutionModel::ALL {
         if tech == TechniqueKind::Af && model == ExecutionModel::DcaRma {
@@ -570,9 +1069,16 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         if model != ExecutionModel::HierDca {
             model_hier.adaptive = Default::default();
         }
+        // The stream follows the headline HIER-DCA row only — one file,
+        // one run's virtual-time order.
+        let stream_interval = match (&stream, model) {
+            (Some((_, s)), ExecutionModel::HierDca) => *s,
+            _ => 0.0,
+        };
         let cfg = DesConfig {
             sched_path: sched_path_of(flags)?,
             record_assignments: true,
+            stream_interval,
             params: LoopParams::new(n, cluster.total_ranks()),
             technique: tech,
             model,
@@ -586,6 +1092,14 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             hier: model_hier,
         };
         results.push((model, Some(simulate(&cfg)?)));
+    }
+    if let Some((dest, _)) = &stream {
+        let r = results
+            .iter()
+            .find(|(m, _)| *m == ExecutionModel::HierDca)
+            .and_then(|(_, r)| r.as_ref())
+            .expect("the hier command always runs the HIER-DCA model");
+        write_stream(dest, &r.stream)?;
     }
     // The model column fits the longest (possibly depth-annotated) label.
     let mw = results.iter().map(|(m, _)| label(*m).len()).max().unwrap_or(10).max(10);
@@ -849,12 +1363,19 @@ fn cmd_tenants(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if flags.contains_key("lockfree") || flags.contains_key("sched-path") {
         cfg.sched_path = sched_path_of(flags)?;
     }
+    let stream = stream_flags(flags)?;
+    if let Some((_, s)) = &stream {
+        cfg = cfg.with_stream_interval(*s);
+    }
     let (outcome, slowdowns) = if flags.contains_key("slowdown") {
         let (o, s, mean) = session_slowdowns(&cfg)?;
         (o, Some((s, mean)))
     } else {
         (simulate_session(&cfg)?, None)
     };
+    if let Some((dest, _)) = &stream {
+        write_stream(dest, &outcome.stream)?;
+    }
     println!(
         "session: {} tenants over {} ranks  policy={}  path={:?}",
         outcome.tenants.len(),

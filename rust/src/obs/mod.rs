@@ -1,0 +1,468 @@
+//! Streaming observability: a lock-cheap metrics registry for the threaded
+//! engines plus the NDJSON stream-record vocabulary sampled by the DES
+//! loops at virtual-time ticks.
+//!
+//! Two exposure surfaces, both **normatively documented** in
+//! `docs/metrics-schema.md` (the doc-sync test `tests/docs_schema.rs` fails
+//! the build when either side drifts):
+//!
+//! * [`MetricsRegistry::render_prometheus`] — the Prometheus text
+//!   exposition format, served offline by `dca-dls metrics-dump` (no
+//!   network listener; production deployments shell out or mount the
+//!   one-shot into a textfile collector).
+//! * [`stream`] — one self-describing JSON record per virtual-time
+//!   interval (`--stream-metrics <path|->`): per-subtree grant rates,
+//!   µ̂/σ̂/ô EWMAs, queue depths, switch/rebind events, per-tenant state.
+//!
+//! The registry is built for the grant path: counters are single relaxed
+//! atomic adds, gauges one atomic store, histograms one relaxed add into a
+//! fixed log-bucketed array plus a CAS-loop float sum — no locks anywhere
+//! after registration (registration itself takes the registry mutex once
+//! per engine start and is idempotent, so every thread can re-register and
+//! receive the same handles).
+
+pub mod stream;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonically increasing event count (Prometheus `counter`).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (Prometheus `gauge`), stored as
+/// `f64` bits in one atomic word.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, x: f64) {
+        self.bits.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Atomic increment (CAS loop — gauges move rarely compared to the
+    /// counter hot path).
+    pub fn add(&self, dx: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + dx).to_bits();
+            match self
+                .bits
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Log-bucket count of a [`Histogram`]: bucket `i` covers
+/// `(base·2^(i−1), base·2^i]`, so the buckets span `base … base·2^(B−1)`
+/// with one `+Inf` overflow bucket — fixed at registration, never resized.
+pub const HISTOGRAM_BUCKETS: usize = 24;
+
+/// Fixed log-bucketed histogram (Prometheus `histogram`): observation cost
+/// is one relaxed atomic add into the bucket array plus a CAS-loop float
+/// sum — no locks, no allocation.
+#[derive(Debug)]
+pub struct Histogram {
+    /// Upper bound of the first bucket; each subsequent bound doubles.
+    base: f64,
+    /// `HISTOGRAM_BUCKETS` finite buckets + the `+Inf` overflow bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(base: f64) -> Self {
+        Histogram {
+            base: if base > 0.0 { base } else { 1.0 },
+            buckets: (0..=HISTOGRAM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Upper bound of finite bucket `i`.
+    fn bound(&self, i: usize) -> f64 {
+        self.base * (1u64 << i) as f64
+    }
+
+    pub fn observe(&self, x: f64) {
+        let mut idx = HISTOGRAM_BUCKETS; // +Inf overflow
+        for i in 0..HISTOGRAM_BUCKETS {
+            if x <= self.bound(i) {
+                idx = i;
+                break;
+            }
+        }
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + x).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> f64 {
+        match self.count() {
+            0 => 0.0,
+            n => self.sum() / n as f64,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    name: String,
+    help: String,
+    metric: Metric,
+}
+
+/// The process-wide (or run-scoped) metric registry. Registration is
+/// idempotent by name — every engine thread can call the `register_*`
+/// helpers with the same name and receive clones of one shared handle —
+/// and takes the only lock in the subsystem; reads and updates afterwards
+/// are lock-free.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn register(&self, name: &str, help: &str, make: impl FnOnce() -> Metric) -> Metric {
+        debug_assert!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                && name.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_'),
+            "invalid metric name {name:?}"
+        );
+        let mut entries = self.entries.lock().expect("metrics registry lock");
+        if let Some(e) = entries.iter().find(|e| e.name == name) {
+            return e.metric.clone();
+        }
+        let metric = make();
+        entries.push(Entry { name: name.to_string(), help: help.to_string(), metric: metric.clone() });
+        metric
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        match self.register(name, help, || Metric::Counter(Arc::new(Counter::default()))) {
+            Metric::Counter(c) => c,
+            m => panic!("metric {name:?} already registered as a {}", m.type_name()),
+        }
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        match self.register(name, help, || Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => g,
+            m => panic!("metric {name:?} already registered as a {}", m.type_name()),
+        }
+    }
+
+    /// Register a log-bucketed histogram whose first bucket tops out at
+    /// `base` (each of the [`HISTOGRAM_BUCKETS`] bounds doubles the last).
+    pub fn histogram(&self, name: &str, help: &str, base: f64) -> Arc<Histogram> {
+        match self.register(name, help, || Metric::Histogram(Arc::new(Histogram::new(base)))) {
+            Metric::Histogram(h) => h,
+            m => panic!("metric {name:?} already registered as a {}", m.type_name()),
+        }
+    }
+
+    /// Render every registered metric in the Prometheus text exposition
+    /// format (`# HELP` / `# TYPE` / samples), sorted by metric name so the
+    /// dump is deterministic.
+    pub fn render_prometheus(&self) -> String {
+        let entries = self.entries.lock().expect("metrics registry lock");
+        let mut sorted: Vec<&Entry> = entries.iter().collect();
+        sorted.sort_by(|a, b| a.name.cmp(&b.name));
+        let mut out = String::new();
+        for e in sorted {
+            out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+            out.push_str(&format!("# TYPE {} {}\n", e.name, e.metric.type_name()));
+            match &e.metric {
+                Metric::Counter(c) => out.push_str(&format!("{} {}\n", e.name, c.get())),
+                Metric::Gauge(g) => out.push_str(&format!("{} {}\n", e.name, g.get())),
+                Metric::Histogram(h) => {
+                    let mut cum = 0u64;
+                    for i in 0..HISTOGRAM_BUCKETS {
+                        cum += h.buckets[i].load(Ordering::Relaxed);
+                        out.push_str(&format!(
+                            "{}_bucket{{le=\"{}\"}} {}\n",
+                            e.name,
+                            h.bound(i),
+                            cum
+                        ));
+                    }
+                    cum += h.buckets[HISTOGRAM_BUCKETS].load(Ordering::Relaxed);
+                    out.push_str(&format!("{}_bucket{{le=\"+Inf\"}} {}\n", e.name, cum));
+                    out.push_str(&format!("{}_sum {}\n", e.name, h.sum()));
+                    out.push_str(&format!("{}_count {}\n", e.name, h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The grant-path handle bundle every threaded engine updates — registered
+/// idempotently, so each worker/coordinator thread re-registers and shares
+/// the same underlying atomics. Names and semantics are normative in
+/// `docs/metrics-schema.md`.
+#[derive(Debug, Clone)]
+pub struct EngineMetrics {
+    /// `dcadls_sched_grants_total` — chunks granted (both protocols).
+    pub grants: Arc<Counter>,
+    /// `dcadls_sched_fast_grants_total` — CAS fast-path grants.
+    pub fast_grants: Arc<Counter>,
+    /// `dcadls_sched_messages_total` — scheduling-protocol messages.
+    pub messages: Arc<Counter>,
+    /// `dcadls_sched_iters_total` — iterations granted.
+    pub iters: Arc<Counter>,
+    /// `dcadls_sched_switches_total` — adaptive technique rebinds.
+    pub switches: Arc<Counter>,
+    /// `dcadls_sched_chunk_iters` — granted chunk sizes, iterations.
+    pub chunk_iters: Arc<Histogram>,
+    /// `dcadls_sched_grant_wait_seconds` — per-grant scheduling wait.
+    pub grant_wait: Arc<Histogram>,
+}
+
+impl EngineMetrics {
+    pub fn register(r: &MetricsRegistry) -> Self {
+        EngineMetrics {
+            grants: r.counter(
+                "dcadls_sched_grants_total",
+                "Chunks granted by the scheduling protocol (both grant paths).",
+            ),
+            fast_grants: r.counter(
+                "dcadls_sched_fast_grants_total",
+                "Chunks granted through the lock-free CAS fast path.",
+            ),
+            messages: r.counter(
+                "dcadls_sched_messages_total",
+                "Scheduling-protocol messages exchanged (two-phase grants cost 4).",
+            ),
+            iters: r.counter(
+                "dcadls_sched_iters_total",
+                "Loop iterations granted to workers.",
+            ),
+            switches: r.counter(
+                "dcadls_sched_switches_total",
+                "Adaptive technique-slot rebinds decided by controllers.",
+            ),
+            chunk_iters: r.histogram(
+                "dcadls_sched_chunk_iters",
+                "Granted chunk sizes, in iterations (log buckets from 1).",
+                1.0,
+            ),
+            grant_wait: r.histogram(
+                "dcadls_sched_grant_wait_seconds",
+                "Wall-clock wait per scheduling grant, seconds (log buckets from 100ns).",
+                1e-7,
+            ),
+        }
+    }
+
+    /// Account one granted chunk of `iters` iterations obtained after
+    /// `wait_s` seconds of scheduling wait (`fast` = CAS fast path; a
+    /// two-phase grant also pays its 4 protocol messages).
+    pub fn on_grant(&self, iters: u64, wait_s: f64, fast: bool) {
+        self.grants.inc();
+        self.iters.add(iters);
+        self.chunk_iters.observe(iters as f64);
+        self.grant_wait.observe(wait_s);
+        if fast {
+            self.fast_grants.inc();
+        } else {
+            self.messages.add(4);
+        }
+    }
+}
+
+/// Multi-tenant session gauges/counters updated by
+/// [`crate::tenant::scheduler::Scheduler`].
+#[derive(Debug, Clone)]
+pub struct SessionMetrics {
+    /// `dcadls_tenants_active` — tenants admitted and not yet terminal.
+    pub active: Arc<Gauge>,
+    /// `dcadls_tenants_admitted_total` — tenants ever admitted.
+    pub admitted: Arc<Counter>,
+}
+
+impl SessionMetrics {
+    pub fn register(r: &MetricsRegistry) -> Self {
+        SessionMetrics {
+            active: r.gauge(
+                "dcadls_tenants_active",
+                "Tenants currently admitted and not yet Completed/Evicted.",
+            ),
+            admitted: r.counter(
+                "dcadls_tenants_admitted_total",
+                "Tenants admitted to the session scheduler since start.",
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("t_total", "help");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = r.gauge("t_gauge", "help");
+        g.set(2.5);
+        g.add(-1.0);
+        assert!((g.get() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn registration_is_idempotent_and_shares_state() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("shared_total", "help");
+        let b = r.counter("shared_total", "help");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "both handles hit one atomic");
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let r = MetricsRegistry::new();
+        r.counter("m", "help");
+        r.gauge("m", "help");
+    }
+
+    #[test]
+    fn histogram_log_buckets() {
+        let h = Histogram::new(1.0);
+        for x in [0.5, 1.0, 3.0, 100.0, 1e9] {
+            h.observe(x);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - (0.5 + 1.0 + 3.0 + 100.0 + 1e9)).abs() < 1.0);
+        // 0.5 and 1.0 land in bucket 0 (≤ 1); 3.0 in bucket 2 (≤ 4);
+        // 100.0 in bucket 7 (≤ 128); 1e9 overflows to +Inf.
+        assert_eq!(h.buckets[0].load(Ordering::Relaxed), 2);
+        assert_eq!(h.buckets[2].load(Ordering::Relaxed), 1);
+        assert_eq!(h.buckets[7].load(Ordering::Relaxed), 1);
+        assert_eq!(h.buckets[HISTOGRAM_BUCKETS].load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn prometheus_render_shape() {
+        let r = MetricsRegistry::new();
+        let m = EngineMetrics::register(&r);
+        m.on_grant(128, 2e-6, false);
+        m.on_grant(64, 1e-6, true);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE dcadls_sched_grants_total counter"));
+        assert!(text.contains("dcadls_sched_grants_total 2"));
+        assert!(text.contains("dcadls_sched_fast_grants_total 1"));
+        assert!(text.contains("dcadls_sched_messages_total 4"));
+        assert!(text.contains("dcadls_sched_iters_total 192"));
+        assert!(text.contains("# TYPE dcadls_sched_chunk_iters histogram"));
+        assert!(text.contains("dcadls_sched_chunk_iters_count 2"));
+        assert!(text.contains("_bucket{le=\"+Inf\"} 2"));
+        // Deterministic ordering: every # HELP line sorted by name.
+        let helps: Vec<&str> =
+            text.lines().filter(|l| l.starts_with("# HELP")).collect();
+        let mut sorted = helps.clone();
+        sorted.sort();
+        assert_eq!(helps, sorted);
+    }
+
+    #[test]
+    fn histogram_cumulative_buckets_render() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram("lat_seconds", "help", 1e-6);
+        h.observe(0.5e-6);
+        h.observe(1.5e-6);
+        h.observe(3e-6);
+        let text = r.render_prometheus();
+        assert!(text.contains("lat_seconds_bucket{le=\"0.000001\"} 1"));
+        assert!(text.contains("lat_seconds_bucket{le=\"0.000002\"} 2"));
+        assert!(text.contains("lat_seconds_bucket{le=\"0.000004\"} 3"));
+        assert!(text.contains("lat_seconds_count 3"));
+        assert!((h.mean() - (0.5e-6 + 1.5e-6 + 3e-6) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn session_metrics_register() {
+        let r = MetricsRegistry::new();
+        let s = SessionMetrics::register(&r);
+        s.admitted.inc();
+        s.active.add(1.0);
+        s.active.add(-1.0);
+        let text = r.render_prometheus();
+        assert!(text.contains("dcadls_tenants_admitted_total 1"));
+        assert!(text.contains("dcadls_tenants_active 0"));
+    }
+}

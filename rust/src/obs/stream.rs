@@ -1,0 +1,297 @@
+//! NDJSON stream records: the self-describing events emitted by
+//! `--stream-metrics <path|->`. One JSON object per line; every record
+//! carries the `schema` tag so consumers can dispatch without sniffing.
+//!
+//! Record vocabulary (normative field tables live in
+//! `docs/metrics-schema.md`):
+//!
+//! * `interval` — sampled by the DES loops at virtual-time ticks; the
+//!   common core built by [`interval_record`], extended per loop with
+//!   `queue_depth` (flat), `subtrees` (hierarchical), or
+//!   `tenants`/`active_tenants` (session).
+//! * `switch` — one per adaptive technique rebind, generated from the
+//!   run's recorded [`SwitchEvent`]s and merged into virtual-time order.
+//! * `tenant` — one terminal record per tenant with turnaround/slowdown.
+
+use crate::report::json::Json;
+use crate::sched::adaptive::{AdaptiveController, SwitchEvent};
+use crate::techniques::TechniqueKind;
+
+/// Schema tag stamped on every stream record.
+pub const STREAM_SCHEMA: &str = "dca-dls/stream/v1";
+
+/// Hard cap on interval records per run, so a tiny `--stream-interval`
+/// against a long virtual horizon cannot exhaust memory. When the cap is
+/// hit sampling stops; the truncation is visible as a gap before the run's
+/// final record.
+pub const MAX_STREAM_RECORDS: usize = 100_000;
+
+/// Virtual-time tick source for the DES loops: `due(now_ns)` is polled
+/// right after the event loop advances `now`, and yields each elapsed tick
+/// boundary (in seconds) at most [`MAX_STREAM_RECORDS`] times.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    interval_ns: u64,
+    next_ns: u64,
+    emitted: usize,
+}
+
+impl Sampler {
+    /// `None` when `interval_s` is zero/negative (streaming disabled).
+    pub fn from_interval_s(interval_s: f64) -> Option<Self> {
+        if !(interval_s > 0.0) {
+            return None;
+        }
+        let interval_ns = ((interval_s * 1e9).round() as u64).max(1);
+        Some(Sampler { interval_ns, next_ns: interval_ns, emitted: 0 })
+    }
+
+    /// Sampling interval in seconds (used for grant-rate normalisation).
+    pub fn interval_s(&self) -> f64 {
+        self.interval_ns as f64 * 1e-9
+    }
+
+    /// Next elapsed tick at or before `now_ns`, if any. Call in a loop to
+    /// drain multiple boundaries crossed by one large event-time jump.
+    pub fn due(&mut self, now_ns: u64) -> Option<f64> {
+        if self.emitted >= MAX_STREAM_RECORDS || now_ns < self.next_ns {
+            return None;
+        }
+        let t = self.next_ns as f64 * 1e-9;
+        self.next_ns += self.interval_ns;
+        self.emitted += 1;
+        Some(t)
+    }
+}
+
+/// Envelope shared by every stream record: `schema`, `event`, `t`
+/// (virtual seconds).
+fn envelope(event: &str, t_s: f64) -> Json {
+    Json::obj().field("schema", STREAM_SCHEMA).field("event", event).field("t", t_s)
+}
+
+/// Core counters every `interval` record carries; loop-specific fields are
+/// appended by the caller with [`Json::field`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IntervalSample {
+    /// Tick time, virtual seconds.
+    pub t: f64,
+    /// Cumulative chunks granted at the tick.
+    pub chunks: u64,
+    /// Chunks granted during this interval (for `grant_rate`).
+    pub chunks_delta: u64,
+    /// Interval length in seconds.
+    pub interval_s: f64,
+    /// Cumulative scheduling messages.
+    pub messages: u64,
+    /// Cumulative lock-free fast-path grants.
+    pub fast_grants: u64,
+    /// Loop iterations not yet granted.
+    pub remaining: u64,
+}
+
+/// Build the common core of an `interval` record.
+pub fn interval_record(s: &IntervalSample) -> Json {
+    let rate = if s.interval_s > 0.0 { s.chunks_delta as f64 / s.interval_s } else { 0.0 };
+    envelope("interval", s.t)
+        .field("chunks", s.chunks)
+        .field("grant_rate", rate)
+        .field("messages", s.messages)
+        .field("fast_grants", s.fast_grants)
+        .field("remaining", s.remaining)
+}
+
+/// Per-subtree entry for hierarchical `interval` records: the master's
+/// bound technique, ledger state, and (when adaptive) its EWMAs.
+pub fn subtree_entry(
+    level: u32,
+    master: u32,
+    technique: TechniqueKind,
+    remaining: u64,
+    parked: u64,
+    adapt: Option<&AdaptiveController>,
+) -> Json {
+    let mut j = envelope_free()
+        .field("level", u64::from(level))
+        .field("master", u64::from(master))
+        .field("technique", technique)
+        .field("remaining", remaining)
+        .field("parked", parked);
+    if let Some(ctl) = adapt {
+        j = append_ewmas(j, ctl);
+    }
+    j
+}
+
+/// Bare object for nested entries (no envelope — only top-level records
+/// carry `schema`/`event`/`t`).
+fn envelope_free() -> Json {
+    Json::obj()
+}
+
+/// Append `mu_hat`/`sigma_hat`/`overhead_hat` for a primed controller.
+pub fn append_ewmas(mut j: Json, ctl: &AdaptiveController) -> Json {
+    if let Some(mu) = ctl.mu_hat() {
+        j = j.field("mu_hat", mu);
+    }
+    if let Some(sigma) = ctl.sigma_hat() {
+        j = j.field("sigma_hat", sigma);
+    }
+    if let Some(oh) = ctl.overhead_hat() {
+        j = j.field("overhead_hat", oh);
+    }
+    j
+}
+
+/// Per-tenant entry for session `interval` records.
+pub fn tenant_entry(
+    id: u64,
+    name: &str,
+    state: &str,
+    technique: TechniqueKind,
+    granted_iters: u64,
+    n: u64,
+) -> Json {
+    envelope_free()
+        .field("tenant", id)
+        .field("name", name)
+        .field("state", state)
+        .field("technique", technique)
+        .field("granted_iters", granted_iters)
+        .field("n", n)
+}
+
+/// One `switch` record per adaptive rebind, generated post-run from the
+/// recorded [`SwitchEvent`]s (same fields as `report::json::switch_event_json`,
+/// wrapped in the stream envelope).
+pub fn switch_record(e: &SwitchEvent) -> Json {
+    envelope("switch", e.at_s)
+        .field("level", u64::from(e.level))
+        .field("master", u64::from(e.master))
+        .field("from", e.from)
+        .field("to", e.to)
+        .field("predicted_ratio", e.predicted_ratio)
+}
+
+/// Terminal `tenant` record: one per tenant after the session drains.
+pub fn tenant_record(
+    id: u64,
+    name: &str,
+    state: &str,
+    arrival_s: f64,
+    completion_s: f64,
+    slowdown: Option<f64>,
+) -> Json {
+    let mut j = envelope("tenant", completion_s)
+        .field("tenant", id)
+        .field("name", name)
+        .field("state", state)
+        .field("arrival", arrival_s)
+        .field("turnaround", completion_s - arrival_s);
+    if let Some(s) = slowdown {
+        j = j.field("slowdown", s);
+    }
+    j
+}
+
+/// Merge streams (interval + post-run switch/tenant records) into
+/// virtual-time order; the sort is stable so same-tick records keep their
+/// relative order.
+pub fn sorted_by_time(mut records: Vec<Json>) -> Vec<Json> {
+    records.sort_by(|a, b| {
+        let ta = a.get("t").and_then(Json::as_f64).unwrap_or(0.0);
+        let tb = b.get("t").and_then(Json::as_f64).unwrap_or(0.0);
+        ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    records
+}
+
+/// Write records as NDJSON to `dest` — a file path, or `-` for stdout.
+pub fn write_ndjson(dest: &str, records: &[Json]) -> anyhow::Result<()> {
+    let mut out = String::with_capacity(records.len() * 128);
+    for r in records {
+        out.push_str(&r.render());
+        out.push('\n');
+    }
+    if dest == "-" {
+        use std::io::Write;
+        std::io::stdout().write_all(out.as_bytes())?;
+    } else {
+        std::fs::write(dest, out)
+            .map_err(|e| anyhow::anyhow!("writing stream to {dest}: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_yields_each_crossed_tick_once() {
+        let mut s = Sampler::from_interval_s(1e-3).expect("enabled");
+        assert_eq!(s.due(500_000), None, "before first tick");
+        let t1 = s.due(1_000_000).expect("first tick");
+        assert!((t1 - 1e-3).abs() < 1e-12);
+        assert_eq!(s.due(1_000_000), None, "tick consumed");
+        // A large jump drains multiple boundaries one at a time.
+        let t2 = s.due(3_500_000).expect("second tick");
+        let t3 = s.due(3_500_000).expect("third tick");
+        assert!((t2 - 2e-3).abs() < 1e-12);
+        assert!((t3 - 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampler_disabled_for_zero_interval() {
+        assert!(Sampler::from_interval_s(0.0).is_none());
+        assert!(Sampler::from_interval_s(-1.0).is_none());
+    }
+
+    #[test]
+    fn interval_record_core_fields() {
+        let r = interval_record(&IntervalSample {
+            t: 0.25,
+            chunks: 100,
+            chunks_delta: 10,
+            interval_s: 0.05,
+            messages: 400,
+            fast_grants: 0,
+            remaining: 5_000,
+        });
+        assert_eq!(r.get("schema").and_then(Json::as_str), Some(STREAM_SCHEMA));
+        assert_eq!(r.get("event").and_then(Json::as_str), Some("interval"));
+        assert_eq!(r.get("chunks").and_then(Json::as_u64), Some(100));
+        assert!((r.get("grant_rate").and_then(Json::as_f64).unwrap() - 200.0).abs() < 1e-9);
+        assert_eq!(r.get("remaining").and_then(Json::as_u64), Some(5_000));
+    }
+
+    #[test]
+    fn records_sort_by_virtual_time() {
+        let records = vec![
+            envelope("interval", 0.2),
+            envelope("switch", 0.05),
+            envelope("interval", 0.1),
+        ];
+        let sorted = sorted_by_time(records);
+        let ts: Vec<f64> =
+            sorted.iter().map(|r| r.get("t").and_then(Json::as_f64).unwrap()).collect();
+        assert_eq!(ts, vec![0.05, 0.1, 0.2]);
+    }
+
+    #[test]
+    fn ndjson_is_one_parseable_object_per_line() {
+        let dir = std::env::temp_dir().join("dca_dls_stream_test.ndjson");
+        let dest = dir.to_str().expect("utf8 tmp path");
+        let records =
+            vec![envelope("interval", 0.1).field("chunks", 1u64), envelope("switch", 0.2)];
+        write_ndjson(dest, &records).expect("write");
+        let text = std::fs::read_to_string(dest).expect("read back");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).expect("valid JSON per line");
+            assert_eq!(j.get("schema").and_then(Json::as_str), Some(STREAM_SCHEMA));
+        }
+        let _ = std::fs::remove_file(dest);
+    }
+}

@@ -1,0 +1,643 @@
+//! Versioned scenario specs: one JSON document = one reproducible cell.
+//!
+//! The `dca-dls scenario` subcommand family (`list | validate | explain |
+//! run`) operates on documents of schema [`SCENARIO_SCHEMA`], which unify
+//! what `benches/hier_sweep.rs`, `benches/sched_throughput.rs` and
+//! `tenants --demo` previously hand-rolled: a named DES cell (flat or
+//! hierarchical, any grant path, optional adaptive controller) or a
+//! multi-tenant session, plus the expectations the run is checked against.
+//! The committed cells live under `scenarios/`; their expected values come
+//! from `benches/baselines/` and are cross-validated by the Python port.
+//!
+//! The document format is normative in `docs/scenario-spec.md`. Exit codes
+//! of `scenario run` (stable, scriptable):
+//!
+//! * `0` — every scenario ran and every expectation held,
+//! * `1` — a scenario ran but an expectation failed,
+//! * `2` — the spec itself was unreadable or invalid.
+
+use crate::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
+use crate::des::{simulate, DesConfig};
+use crate::report::json::Json;
+use crate::substrate::delay::InjectedDelay;
+use crate::techniques::{CandidateSet, LoopParams, TechniqueKind};
+use crate::tenant::spec::parse_session_spec;
+use crate::tenant::{session_slowdowns, simulate_session, SessionConfig};
+use crate::workload::IterationCost;
+
+/// Schema tag every scenario document must carry — bump on breaking
+/// changes to the document format.
+pub const SCENARIO_SCHEMA: &str = "dca-dls/scenario/v1";
+
+/// Relative tolerance applied to value expectations when the document
+/// does not set `expect.tol`.
+pub const DEFAULT_TOL: f64 = 0.10;
+
+/// A parsed, fully resolved scenario document.
+pub struct Scenario {
+    pub name: String,
+    pub description: String,
+    pub body: Body,
+    pub expect: Expectations,
+}
+
+/// What a scenario runs: one DES cell, or one multi-tenant session.
+pub enum Body {
+    Des(Box<DesConfig>),
+    Session {
+        cfg: Box<SessionConfig>,
+        /// Re-run each tenant solo and report slowdowns (forced on when
+        /// `expect.mean_slowdown` is set).
+        slowdown: bool,
+    },
+}
+
+/// The checks `scenario run` applies after the run. Value expectations are
+/// relative (`|observed − expected| ≤ tol · expected`); bound expectations
+/// are absolute.
+#[derive(Debug, Clone, Default)]
+pub struct Expectations {
+    /// Expected `t_par` in seconds (DES scenarios only).
+    pub t_par: Option<f64>,
+    /// Relative tolerance for the value expectations ([`DEFAULT_TOL`]).
+    pub tol: f64,
+    /// Minimum adaptive switch count (DES scenarios only).
+    pub min_switches: Option<u64>,
+    /// Expected mean per-tenant slowdown vs solo (session scenarios only).
+    pub mean_slowdown: Option<f64>,
+    /// Minimum Jain fairness index (session scenarios only).
+    pub min_jain: Option<f64>,
+}
+
+impl Expectations {
+    fn is_empty(&self) -> bool {
+        self.t_par.is_none()
+            && self.min_switches.is_none()
+            && self.mean_slowdown.is_none()
+            && self.min_jain.is_none()
+    }
+}
+
+/// One evaluated expectation.
+pub struct Check {
+    pub label: String,
+    pub ok: bool,
+    pub detail: String,
+}
+
+/// The outcome of `run_scenario`: per-expectation verdicts, the observed
+/// quantities (for `--json`), and the run's stream records when a
+/// `stream_interval` was requested.
+pub struct RunReport {
+    pub name: String,
+    pub passed: bool,
+    pub checks: Vec<Check>,
+    pub observed: Json,
+    pub stream: Vec<Json>,
+}
+
+fn as_bool(j: &Json) -> Option<bool> {
+    match j {
+        Json::Bool(b) => Some(*b),
+        _ => None,
+    }
+}
+
+fn req_str<'a>(doc: &'a Json, key: &str) -> anyhow::Result<&'a str> {
+    doc.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("scenario is missing the string field \"{key}\""))
+}
+
+/// Parse and fully resolve one scenario document. Every error out of here
+/// is a *spec* error (exit code 2 territory): unknown fields' spellings,
+/// missing requirements, unresolvable techniques/models, bad geometry.
+pub fn parse_scenario(text: &str) -> anyhow::Result<Scenario> {
+    let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("bad scenario JSON: {e}"))?;
+    let schema = req_str(&doc, "schema")?;
+    anyhow::ensure!(
+        schema == SCENARIO_SCHEMA,
+        "unsupported scenario schema \"{schema}\" (this build understands \"{SCENARIO_SCHEMA}\")"
+    );
+    let name = req_str(&doc, "name")?.to_string();
+    let description =
+        doc.get("description").and_then(Json::as_str).unwrap_or_default().to_string();
+    let expect = parse_expect(doc.get("expect"))?;
+    let kind = req_str(&doc, "kind")?;
+    let body = match kind {
+        "des" => {
+            anyhow::ensure!(
+                expect.mean_slowdown.is_none() && expect.min_jain.is_none(),
+                "expect.mean_slowdown/min_jain apply to session scenarios only"
+            );
+            let des = doc
+                .get("des")
+                .ok_or_else(|| anyhow::anyhow!("kind \"des\" needs a \"des\" object"))?;
+            Body::Des(Box::new(parse_des(des)?))
+        }
+        "session" => {
+            anyhow::ensure!(
+                expect.t_par.is_none() && expect.min_switches.is_none(),
+                "expect.t_par/min_switches apply to des scenarios only"
+            );
+            let session = doc
+                .get("session")
+                .ok_or_else(|| anyhow::anyhow!("kind \"session\" needs a \"session\" object"))?;
+            let cluster = parse_cluster(doc.get("cluster"))?;
+            // The session sub-object is exactly the `tenants --spec` file
+            // format — re-render it and reuse that parser verbatim.
+            let cfg = parse_session_spec(&session.render(), cluster)?;
+            let slowdown = doc.get("slowdown").and_then(as_bool).unwrap_or(false)
+                || expect.mean_slowdown.is_some();
+            Body::Session { cfg: Box::new(cfg), slowdown }
+        }
+        other => anyhow::bail!("unknown scenario kind \"{other}\" (expect \"des\" or \"session\")"),
+    };
+    Ok(Scenario { name, description, body, expect })
+}
+
+fn parse_expect(j: Option<&Json>) -> anyhow::Result<Expectations> {
+    let mut e = Expectations { tol: DEFAULT_TOL, ..Default::default() };
+    let Some(j) = j else { return Ok(e) };
+    anyhow::ensure!(matches!(j, Json::Obj(_)), "\"expect\" must be an object");
+    e.t_par = j.get("t_par").and_then(Json::as_f64);
+    if let Some(tol) = j.get("tol").and_then(Json::as_f64) {
+        anyhow::ensure!(tol > 0.0 && tol < 1.0, "expect.tol must be in (0, 1), got {tol}");
+        e.tol = tol;
+    }
+    e.min_switches = j.get("min_switches").and_then(Json::as_u64);
+    e.mean_slowdown = j.get("mean_slowdown").and_then(Json::as_f64);
+    e.min_jain = j.get("min_jain").and_then(Json::as_f64);
+    if let Json::Obj(fields) = j {
+        for (k, _) in fields {
+            anyhow::ensure!(
+                ["t_par", "tol", "min_switches", "mean_slowdown", "min_jain"]
+                    .contains(&k.as_str()),
+                "unknown expectation \"{k}\""
+            );
+        }
+    }
+    Ok(e)
+}
+
+/// `cluster` resolution: absent ⇒ the paper's 16×16 miniHPC; `{"ranks": R}`
+/// ⇒ a single-node cluster of `R` ranks; otherwise miniHPC with `nodes` /
+/// `ranks_per_node` / `racks` / `rack_latency_us` overridden.
+fn parse_cluster(j: Option<&Json>) -> anyhow::Result<ClusterConfig> {
+    let Some(j) = j else { return Ok(ClusterConfig::minihpc()) };
+    anyhow::ensure!(matches!(j, Json::Obj(_)), "\"cluster\" must be an object");
+    if let Some(ranks) = j.get("ranks").and_then(Json::as_u64) {
+        anyhow::ensure!(
+            j.get("nodes").is_none() && j.get("ranks_per_node").is_none(),
+            "cluster.ranks is exclusive with nodes/ranks_per_node"
+        );
+        return Ok(ClusterConfig::small(ranks as u32));
+    }
+    let mut cluster = ClusterConfig::minihpc();
+    if let Some(nodes) = j.get("nodes").and_then(Json::as_u64) {
+        cluster.nodes = nodes as u32;
+    }
+    if let Some(rpn) = j.get("ranks_per_node").and_then(Json::as_u64) {
+        cluster.ranks_per_node = rpn as u32;
+    }
+    if let Some(racks) = j.get("racks").and_then(Json::as_u64) {
+        cluster.racks = racks as u32;
+    }
+    if let Some(us) = j.get("rack_latency_us").and_then(Json::as_f64) {
+        cluster.inter_rack_latency = us * 1e-6;
+    }
+    anyhow::ensure!(
+        cluster.racks >= 1 && cluster.nodes % cluster.racks == 0,
+        "cluster.racks ({}) must evenly divide the node count ({})",
+        cluster.racks,
+        cluster.nodes
+    );
+    Ok(cluster)
+}
+
+fn parse_des(j: &Json) -> anyhow::Result<DesConfig> {
+    let n = j
+        .get("n")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("des.n (loop size) is required"))?;
+    let tech_name = req_str(j, "technique")?;
+    let technique = TechniqueKind::parse(tech_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown technique \"{tech_name}\""))?;
+    let model = match j.get("model").and_then(Json::as_str) {
+        None => ExecutionModel::Dca,
+        Some(m) => ExecutionModel::parse(m)
+            .ok_or_else(|| anyhow::anyhow!("unknown model \"{m}\" (cca|dca|rma|hier)"))?,
+    };
+    let cluster = parse_cluster(j.get("cluster"))?;
+    let cost = match j.get("cost") {
+        None => IterationCost::Constant(1e-5),
+        Some(c) => IterationCost::Constant(
+            c.as_f64()
+                .filter(|x| x.is_finite() && *x > 0.0)
+                .ok_or_else(|| anyhow::anyhow!("des.cost must be a positive seconds number"))?,
+        ),
+    };
+    let params = LoopParams::new(n, cluster.total_ranks());
+    let mut cfg = DesConfig::new(params, technique, model, cluster, cost);
+    cfg.record_assignments =
+        j.get("record_assignments").and_then(as_bool).unwrap_or(false);
+    if let Some(p) = j.get("sched_path").and_then(Json::as_str) {
+        cfg.sched_path = SchedPath::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown sched_path \"{p}\" (two-phase|lockfree|auto)"))?;
+    }
+    cfg.delay = parse_delay(j.get("delay"))?;
+    cfg.hier = parse_hier(j, model)?;
+    Ok(cfg)
+}
+
+fn parse_delay(j: Option<&Json>) -> anyhow::Result<InjectedDelay> {
+    let Some(j) = j else { return Ok(InjectedDelay::none()) };
+    anyhow::ensure!(matches!(j, Json::Obj(_)), "\"delay\" must be an object");
+    let us = j
+        .get("us")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("delay.us (microseconds) is required"))?;
+    let site = j.get("site").and_then(Json::as_str).unwrap_or("calculation");
+    let dist = j.get("dist").and_then(Json::as_str).unwrap_or("constant");
+    let seconds = us * 1e-6;
+    match (site, dist) {
+        ("calculation", "constant") => Ok(InjectedDelay::calculation_only(seconds)),
+        ("assignment", "constant") => Ok(InjectedDelay::assignment_only(seconds)),
+        ("calculation", "exponential") => {
+            let seed = j.get("seed").and_then(Json::as_u64).unwrap_or(0);
+            Ok(InjectedDelay::exponential_calculation(seconds, seed))
+        }
+        ("assignment", "exponential") => {
+            anyhow::bail!("exponential delays apply to the calculation site only")
+        }
+        (s, d) => anyhow::bail!(
+            "unknown delay site/dist \"{s}\"/\"{d}\" \
+             (site: calculation|assignment, dist: constant|exponential)"
+        ),
+    }
+}
+
+fn parse_hier(j: &Json, model: ExecutionModel) -> anyhow::Result<HierParams> {
+    let hier_keys =
+        ["inner", "levels", "fanouts", "watermark", "prefetch_depth", "adaptive"];
+    if model != ExecutionModel::HierDca {
+        for k in hier_keys {
+            // `adaptive` also applies to flat DCA — everything else is
+            // hierarchy-only.
+            if k != "adaptive" {
+                anyhow::ensure!(
+                    j.get(k).is_none(),
+                    "des.{k} only applies to the hierarchical model (\"model\": \"hier\")"
+                );
+            }
+        }
+    }
+    let mut hier = match j.get("inner").and_then(Json::as_str) {
+        None => HierParams::default(),
+        Some(name) => HierParams::with_inner(
+            TechniqueKind::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown inner technique \"{name}\""))?,
+        ),
+    };
+    if let Some(k) = j.get("levels").and_then(Json::as_u64) {
+        anyhow::ensure!(
+            (1..=crate::config::MAX_LEVELS as u64).contains(&k),
+            "des.levels must be in 1..={}",
+            crate::config::MAX_LEVELS
+        );
+        hier = hier.with_levels(k as u32);
+    }
+    if let Some(Json::Arr(raw)) = j.get("fanouts") {
+        let fanouts: Vec<u32> = raw
+            .iter()
+            .map(|x| {
+                x.as_u64()
+                    .filter(|f| *f >= 1)
+                    .map(|f| f as u32)
+                    .ok_or_else(|| anyhow::anyhow!("des.fanouts entries must be counts ≥ 1"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            !fanouts.is_empty() && fanouts.len() <= hier.depth(),
+            "des.fanouts takes at most des.levels ({}) entries",
+            hier.depth()
+        );
+        hier = hier.with_fanouts(&fanouts);
+    }
+    match j.get("watermark") {
+        None => {}
+        Some(w) => match (w.as_str(), w.as_u64()) {
+            (Some("auto"), _) => hier = hier.with_auto_watermark(),
+            (None, Some(0)) => {}
+            (None, Some(w)) => hier = hier.with_watermark(w),
+            _ => anyhow::bail!("des.watermark must be an iteration count or \"auto\""),
+        },
+    }
+    if let Some(q) = j.get("prefetch_depth").and_then(Json::as_u64) {
+        anyhow::ensure!(q >= 1, "des.prefetch_depth must be ≥ 1");
+        hier = hier.with_prefetch_depth(q as u32);
+    }
+    if let Some(a) = j.get("adaptive") {
+        anyhow::ensure!(matches!(a, Json::Obj(_)), "des.adaptive must be an object");
+        hier = hier.with_adaptive();
+        if let Some(g) = a.get("probe_interval").and_then(Json::as_u64) {
+            anyhow::ensure!(g >= 1, "adaptive.probe_interval must be ≥ 1");
+            hier = hier.with_probe_interval(g as u32);
+        }
+        if let Some(c) = a.get("candidates").and_then(Json::as_str) {
+            hier = hier.with_candidates(CandidateSet::parse(c)?);
+        }
+    }
+    Ok(hier)
+}
+
+/// Human-readable summary of a resolved scenario (the `explain` verb).
+pub fn explain(sc: &Scenario) -> String {
+    let mut out = format!("{}: {}\n", sc.name, sc.description);
+    match &sc.body {
+        Body::Des(cfg) => {
+            out.push_str(&format!(
+                "  kind      des — {} on {}, N = {}, {} ranks ({}×{}, {} rack{})\n",
+                cfg.technique.name(),
+                cfg.model.label_adaptive(cfg.hier.depth() as u32, cfg.hier.adaptive.enabled),
+                cfg.params.n,
+                cfg.cluster.total_ranks(),
+                cfg.cluster.nodes,
+                cfg.cluster.ranks_per_node,
+                cfg.cluster.racks,
+                if cfg.cluster.racks == 1 { "" } else { "s" },
+            ));
+            out.push_str(&format!(
+                "  grants    {} path, cost {:?}, delay {:?}\n",
+                cfg.sched_path.name(),
+                cfg.cost,
+                cfg.delay,
+            ));
+            if cfg.model == ExecutionModel::HierDca {
+                out.push_str(&format!(
+                    "  tree      depth {}, inner {}\n",
+                    cfg.hier.depth(),
+                    cfg.hier.inner.map(|t| t.name()).unwrap_or("(outer)"),
+                ));
+            }
+        }
+        Body::Session { cfg, slowdown } => {
+            out.push_str(&format!(
+                "  kind      session — {} tenants over {} shared ranks, policy {}, {} path{}\n",
+                cfg.tenants.len(),
+                cfg.cluster.total_ranks(),
+                cfg.policy,
+                cfg.sched_path.name(),
+                if *slowdown { ", with solo slowdown re-runs" } else { "" },
+            ));
+        }
+    }
+    let e = &sc.expect;
+    if e.is_empty() {
+        out.push_str("  expect    (nothing — the run only has to complete)\n");
+    }
+    if let Some(t) = e.t_par {
+        out.push_str(&format!("  expect    t_par = {t} ± {:.0}%\n", e.tol * 100.0));
+    }
+    if let Some(k) = e.min_switches {
+        out.push_str(&format!("  expect    ≥ {k} adaptive switches\n"));
+    }
+    if let Some(s) = e.mean_slowdown {
+        out.push_str(&format!("  expect    mean slowdown = {s} ± {:.0}%\n", e.tol * 100.0));
+    }
+    if let Some(jn) = e.min_jain {
+        out.push_str(&format!("  expect    Jain fairness ≥ {jn}\n"));
+    }
+    out
+}
+
+fn rel_check(label: &str, observed: f64, expected: f64, tol: f64) -> Check {
+    let ok = (observed - expected).abs() <= tol * expected.abs();
+    Check {
+        label: label.to_string(),
+        ok,
+        detail: format!(
+            "observed {observed:.7}, expected {expected:.7} ± {:.0}% ({})",
+            tol * 100.0,
+            if ok { "ok" } else { "FAIL" }
+        ),
+    }
+}
+
+fn bound_check(label: &str, observed: f64, min: f64) -> Check {
+    let ok = observed >= min;
+    Check {
+        label: label.to_string(),
+        ok,
+        detail: format!("observed {observed}, need ≥ {min} ({})", if ok { "ok" } else { "FAIL" }),
+    }
+}
+
+/// Run one scenario and evaluate its expectations. `stream_interval > 0`
+/// additionally collects the run's NDJSON stream records. Errors out of
+/// here are *run* infrastructure failures (still exit code 1 — the spec
+/// was valid).
+pub fn run_scenario(sc: &Scenario, stream_interval: f64) -> anyhow::Result<RunReport> {
+    let mut checks = Vec::new();
+    let (observed, stream) = match &sc.body {
+        Body::Des(cfg) => {
+            let mut cfg = (**cfg).clone();
+            cfg.stream_interval = stream_interval;
+            let r = simulate(&cfg)?;
+            if let Some(t) = sc.expect.t_par {
+                checks.push(rel_check("t_par", r.t_par(), t, sc.expect.tol));
+            }
+            if let Some(k) = sc.expect.min_switches {
+                checks.push(bound_check("switches", r.switch_events.len() as f64, k as f64));
+            }
+            let observed = Json::obj()
+                .field("t_par", r.t_par())
+                .field("chunks", r.stats.chunks)
+                .field("messages", r.stats.messages)
+                .field("fast_grants", r.fast_grants)
+                .field("events", r.events)
+                .field("switches", r.switch_events.len() as u64);
+            (observed, r.stream)
+        }
+        Body::Session { cfg, slowdown } => {
+            let mut cfg = (**cfg).clone();
+            cfg.stream_interval = stream_interval;
+            let (outcome, mean) = if *slowdown {
+                let (o, _, mean) = session_slowdowns(&cfg)?;
+                (o, Some(mean))
+            } else {
+                (simulate_session(&cfg)?, None)
+            };
+            if let (Some(s), Some(mean)) = (sc.expect.mean_slowdown, mean) {
+                checks.push(rel_check("mean_slowdown", mean, s, sc.expect.tol));
+            }
+            if let Some(jn) = sc.expect.min_jain {
+                checks.push(bound_check("jain_fairness", outcome.jain_fairness, jn));
+            }
+            let mut observed = Json::obj()
+                .field("makespan", outcome.makespan)
+                .field("events", outcome.events)
+                .field("messages", outcome.messages)
+                .field("tenants", outcome.tenants.len() as u64)
+                .field("jain_fairness", outcome.jain_fairness);
+            if let Some(mean) = mean {
+                observed = observed.field("mean_slowdown", mean);
+            }
+            (observed, outcome.stream)
+        }
+    };
+    let passed = checks.iter().all(|c| c.ok);
+    Ok(RunReport { name: sc.name.clone(), passed, checks, observed, stream })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn des_doc(expect: &str) -> String {
+        format!(
+            r#"{{
+              "schema": "dca-dls/scenario/v1",
+              "name": "unit-des",
+              "kind": "des",
+              "des": {{
+                "n": 2000, "technique": "GSS",
+                "cluster": {{"ranks": 4}}, "cost": 1e-6
+              }},
+              "expect": {expect}
+            }}"#
+        )
+    }
+
+    #[test]
+    fn des_scenario_round_trips_and_passes() {
+        let sc = parse_scenario(&des_doc(r#"{"t_par": 5.1e-4, "tol": 0.5}"#)).unwrap();
+        assert_eq!(sc.name, "unit-des");
+        let Body::Des(cfg) = &sc.body else { panic!("des body") };
+        assert_eq!(cfg.params.n, 2000);
+        assert_eq!(cfg.cluster.total_ranks(), 4);
+        let report = run_scenario(&sc, 0.0).unwrap();
+        assert!(report.passed, "{:?}", report.checks.iter().map(|c| &c.detail).collect::<Vec<_>>());
+        assert!(report.stream.is_empty(), "no stream requested");
+        assert!(report.observed.get("t_par").is_some());
+    }
+
+    #[test]
+    fn failed_expectation_reports_not_errors() {
+        let sc = parse_scenario(&des_doc(r#"{"t_par": 99.0, "tol": 0.01}"#)).unwrap();
+        let report = run_scenario(&sc, 0.0).unwrap();
+        assert!(!report.passed);
+        assert_eq!(report.checks.len(), 1);
+        assert!(report.checks[0].detail.contains("FAIL"));
+    }
+
+    #[test]
+    fn run_with_stream_interval_collects_records() {
+        let sc = parse_scenario(&des_doc("{}")).unwrap();
+        let report = run_scenario(&sc, 1e-5).unwrap();
+        assert!(report.passed, "no expectations ⇒ pass");
+        assert!(!report.stream.is_empty(), "streaming requested");
+    }
+
+    #[test]
+    fn spec_errors_are_rejected() {
+        for (doc, why) in [
+            ("{", "unterminated"),
+            (r#"{"schema": "nope/v0", "name": "x", "kind": "des", "des": {}}"#, "schema"),
+            (r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "wat"}"#, "kind"),
+            (
+                r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "des",
+                   "des": {"technique": "GSS"}}"#,
+                "missing n",
+            ),
+            (
+                r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "des",
+                   "des": {"n": 100, "technique": "WAT"}}"#,
+                "unknown technique",
+            ),
+            (
+                r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "des",
+                   "des": {"n": 100, "technique": "GSS", "inner": "SS"}}"#,
+                "hier-only key on flat model",
+            ),
+            (
+                r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "des",
+                   "des": {"n": 100, "technique": "GSS"},
+                   "expect": {"t_per": 1.0}}"#,
+                "unknown expectation",
+            ),
+            (
+                r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "session",
+                   "session": {"tenants": []}}"#,
+                "empty session",
+            ),
+            (
+                r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "session",
+                   "session": {"tenants": [{"name": "t", "n": 10, "technique": "SS"}]},
+                   "expect": {"t_par": 1.0}}"#,
+                "des expectation on session",
+            ),
+        ] {
+            assert!(parse_scenario(doc).is_err(), "{why} must be a spec error");
+        }
+    }
+
+    #[test]
+    fn session_scenario_runs_with_slowdown() {
+        let sc = parse_scenario(
+            r#"{
+              "schema": "dca-dls/scenario/v1",
+              "name": "unit-session",
+              "kind": "session",
+              "cluster": {"ranks": 4},
+              "session": {
+                "policy": "fair",
+                "tenants": [
+                  {"name": "a", "n": 400, "technique": "SS", "cost": 1e-6},
+                  {"name": "b", "n": 400, "technique": "GSS", "arrival": 1e-4, "cost": 1e-6}
+                ]
+              },
+              "expect": {"mean_slowdown": 1.0, "tol": 0.9, "min_jain": 0.5}
+            }"#,
+        )
+        .unwrap();
+        let Body::Session { slowdown, .. } = &sc.body else { panic!("session body") };
+        assert!(slowdown, "mean_slowdown expectation forces solo re-runs");
+        let report = run_scenario(&sc, 0.0).unwrap();
+        assert!(report.passed, "{:?}", report.checks.iter().map(|c| &c.detail).collect::<Vec<_>>());
+        assert!(report.observed.get("mean_slowdown").is_some());
+    }
+
+    #[test]
+    fn explain_names_the_cell() {
+        let sc = parse_scenario(&des_doc(r#"{"t_par": 1.0}"#)).unwrap();
+        let text = explain(&sc);
+        assert!(text.contains("unit-des"));
+        assert!(text.contains("GSS"));
+        assert!(text.contains("t_par = 1"));
+    }
+
+    #[test]
+    fn hier_des_with_adaptive_parses() {
+        let sc = parse_scenario(
+            r#"{
+              "schema": "dca-dls/scenario/v1",
+              "name": "unit-hier",
+              "kind": "des",
+              "des": {
+                "n": 4000, "technique": "FAC2", "model": "hier", "inner": "SS",
+                "cluster": {"nodes": 2, "ranks_per_node": 2}, "cost": 1e-6,
+                "delay": {"site": "calculation", "us": 10, "dist": "exponential", "seed": 7},
+                "adaptive": {"probe_interval": 4, "candidates": "ss,gss,fac"}
+              }
+            }"#,
+        )
+        .unwrap();
+        let Body::Des(cfg) = &sc.body else { panic!("des body") };
+        assert_eq!(cfg.model, ExecutionModel::HierDca);
+        assert!(cfg.hier.adaptive.enabled);
+        assert_eq!(cfg.cluster.total_ranks(), 4);
+        let report = run_scenario(&sc, 0.0).unwrap();
+        assert!(report.passed);
+    }
+}

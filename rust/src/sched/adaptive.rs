@@ -182,6 +182,24 @@ impl AdaptiveController {
         self.switches
     }
 
+    /// Current `µ̂` EWMA — mean per-iteration execution time (s/iter) — if
+    /// primed. Exposed for the observability stream.
+    pub fn mu_hat(&self) -> Option<f64> {
+        self.mu.value()
+    }
+
+    /// Current `σ̂` — square root of the squared-deviation EWMA (s/iter) —
+    /// if primed.
+    pub fn sigma_hat(&self) -> Option<f64> {
+        self.var.value().map(f64::sqrt)
+    }
+
+    /// Current `ô` EWMA — per-grant scheduling overhead (s/chunk) — if
+    /// primed.
+    pub fn overhead_hat(&self) -> Option<f64> {
+        self.overhead.value()
+    }
+
     /// Fold in one finished chunk observed from `child` (local index) at
     /// time `now_s`: `iters` iterations took `elapsed_s` of pure execution.
     /// The gap since the child's previous observation, minus the execution

@@ -27,6 +27,8 @@ use crate::config::{ClusterConfig, SchedPath};
 use crate::des::heap::{ns, secs, EventHeap};
 use crate::des::{min_latency_ns, DesResult};
 use crate::metrics::LoopStats;
+use crate::obs::stream::{self, IntervalSample, Sampler};
+use crate::report::json::Json;
 use crate::sched::{Assignment, StepTicket, WorkQueue};
 use crate::substrate::delay::InjectedDelay;
 use crate::substrate::topology::Topology;
@@ -55,6 +57,10 @@ pub struct SessionConfig {
     /// Record the session-wide grant order `(tenant, size)` — what the
     /// fair-share within-one-chunk property test replays.
     pub record_grant_trace: bool,
+    /// Virtual-time observability sampling interval in seconds
+    /// (`--stream-metrics`); 0 disables streaming — see
+    /// `docs/metrics-schema.md` and [`SessionOutcome::stream`].
+    pub stream_interval: f64,
     pub tenants: Vec<TenantSpec>,
 }
 
@@ -69,8 +75,16 @@ impl SessionConfig {
             record_assignments: true,
             record_exec_spans: false,
             record_grant_trace: false,
+            stream_interval: 0.0,
             tenants: vec![],
         }
+    }
+
+    /// Enable observability streaming at the given virtual-time interval
+    /// (seconds; ≤ 0 keeps it off).
+    pub fn with_stream_interval(mut self, interval_s: f64) -> Self {
+        self.stream_interval = interval_s;
+        self
     }
 
     pub fn with_policy(mut self, policy: ArbitrationPolicy) -> Self {
@@ -136,6 +150,10 @@ pub struct SessionOutcome {
     pub grant_trace: Vec<(TenantId, u64)>,
     /// Jain index over weight-normalized granted-iteration rates.
     pub jain_fairness: f64,
+    /// Observability stream records (`interval` + terminal `tenant`
+    /// records, virtual-time order) when
+    /// [`SessionConfig::stream_interval`] > 0; empty otherwise.
+    pub stream: Vec<Json>,
 }
 
 /// Simulate a session. Deterministic: same config ⇒ identical outcome.
@@ -311,6 +329,10 @@ struct TenantSim<'a> {
     events: u64,
     exec_spans: Vec<Vec<ExecSpan>>,
     grant_trace: Vec<(TenantId, u64)>,
+    // observability stream
+    sampler: Option<Sampler>,
+    stream: Vec<Json>,
+    last_tick_chunks: u64,
 }
 
 impl<'a> TenantSim<'a> {
@@ -417,6 +439,9 @@ impl<'a> TenantSim<'a> {
             events: 0,
             exec_spans: if cfg.record_exec_spans { vec![Vec::new(); p] } else { vec![] },
             grant_trace: Vec::new(),
+            sampler: Sampler::from_interval_s(cfg.stream_interval),
+            stream: Vec::new(),
+            last_tick_chunks: 0,
         })
     }
 
@@ -488,8 +513,71 @@ impl<'a> TenantSim<'a> {
             debug_assert!(at >= self.now, "time went backwards");
             self.now = at;
             self.events += 1;
+            if self.sampler.is_some() {
+                self.sample_ticks();
+            }
             self.dispatch(ev);
         }
+    }
+
+    /// One session `interval` record: tenant-summed core counters, the
+    /// count of non-terminal tenants, and one per-tenant entry.
+    fn session_record(&self, t: f64, chunks_delta: u64, interval_s: f64) -> Json {
+        let mut chunks = 0u64;
+        let mut messages = 0u64;
+        let mut fast_grants = 0u64;
+        let mut remaining = 0u64;
+        for tn in &self.tenants {
+            chunks += tn.chunks_granted;
+            messages += tn.messages;
+            fast_grants += tn.fast_grants;
+            remaining += tn.queue.remaining();
+        }
+        let mut active = 0u64;
+        let entries: Vec<Json> = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(i, tn)| {
+                let id = i as TenantId;
+                let spec = &self.cfg.tenants[i];
+                let state = self.registry.get(id).expect("registered").state;
+                if !state.is_terminal() {
+                    active += 1;
+                }
+                stream::tenant_entry(
+                    u64::from(id),
+                    &spec.name,
+                    &state.to_string(),
+                    spec.technique,
+                    tn.granted_iters,
+                    spec.n,
+                )
+            })
+            .collect();
+        stream::interval_record(&IntervalSample {
+            t,
+            chunks,
+            chunks_delta,
+            interval_s,
+            messages,
+            fast_grants,
+            remaining,
+        })
+        .field("active_tenants", active)
+        .field("tenants", entries)
+    }
+
+    /// Emit one `interval` record per virtual-time tick boundary crossed.
+    fn sample_ticks(&mut self) {
+        let Some(mut sampler) = self.sampler.take() else { return };
+        while let Some(t) = sampler.due(self.now) {
+            let chunks: u64 = self.tenants.iter().map(|tn| tn.chunks_granted).sum();
+            let record = self.session_record(t, chunks - self.last_tick_chunks, sampler.interval_s());
+            self.stream.push(record);
+            self.last_tick_chunks = chunks;
+        }
+        self.sampler = Some(sampler);
     }
 
     fn tenant_arrive(&mut self, t: TenantId) {
@@ -919,6 +1007,18 @@ impl<'a> TenantSim<'a> {
 
     fn into_outcome(self) -> anyhow::Result<SessionOutcome> {
         let events = self.events;
+        // Final cumulative interval record at the session's last event time
+        // (≥ every tenant completion), built before `self.tenants` is
+        // consumed below.
+        let final_record = self.sampler.is_some().then(|| {
+            let chunks: u64 = self.tenants.iter().map(|tn| tn.chunks_granted).sum();
+            self.session_record(
+                secs(self.now),
+                chunks - self.last_tick_chunks,
+                self.cfg.stream_interval,
+            )
+        });
+        let mut stream = self.stream;
         let mut outcomes = Vec::with_capacity(self.tenants.len());
         let mut messages_total = 0u64;
         let mut makespan = 0.0f64;
@@ -951,6 +1051,7 @@ impl<'a> TenantSim<'a> {
                 fast_grants: tn.fast_grants,
                 events,
                 switch_events: vec![],
+                stream: vec![],
             };
             messages_total += tn.messages;
             let completion = result.t_par();
@@ -975,6 +1076,20 @@ impl<'a> TenantSim<'a> {
                 .map(|(o, s)| o.granted_iters as f64 / (s.weight.max(1) as f64 * o.turnaround))
                 .collect::<Vec<_>>(),
         );
+        if let Some(record) = final_record {
+            stream.push(record);
+            stream.extend(outcomes.iter().map(|o| {
+                stream::tenant_record(
+                    u64::from(o.id),
+                    &o.name,
+                    &o.state.to_string(),
+                    o.arrival,
+                    o.completion,
+                    None,
+                )
+            }));
+            stream = stream::sorted_by_time(stream);
+        }
         Ok(SessionOutcome {
             tenants: outcomes,
             registry: self.registry,
@@ -984,6 +1099,7 @@ impl<'a> TenantSim<'a> {
             exec_spans: self.exec_spans,
             grant_trace: self.grant_trace,
             jain_fairness,
+            stream,
         })
     }
 }

@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 use crate::config::SchedPath;
 use crate::coordinator::{execute_chunk, RankSummary, RunResult};
 use crate::hier::protocol::{fast_len_ok, AtomicLedger};
+use crate::obs::{EngineMetrics, MetricsRegistry, SessionMetrics};
 use crate::sched::WorkQueue;
 use crate::techniques::{ChunkTable, LoopParams, Technique, TechniqueKind, MAX_FAST_TABLE_STEPS};
 use crate::workload::Workload;
@@ -128,6 +129,9 @@ struct Shared {
     cv: Condvar,
     shutdown: AtomicBool,
     workers: u32,
+    /// Streaming-observability handles (None when no registry is attached).
+    em: Option<EngineMetrics>,
+    sm: Option<SessionMetrics>,
 }
 
 /// The resident multi-tenant scheduler.
@@ -139,6 +143,16 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn new(opts: SchedulerOptions) -> Self {
+        Self::new_instrumented(opts, None)
+    }
+
+    /// Like [`Scheduler::new`], but every grant, admission, and tenant
+    /// lifecycle transition also updates `metrics` (registration is
+    /// idempotent — sharing one registry across engines merges counters).
+    pub fn new_instrumented(
+        opts: SchedulerOptions,
+        metrics: Option<Arc<MetricsRegistry>>,
+    ) -> Self {
         let workers = opts.workers.max(1);
         let shared = Arc::new(Shared {
             policy: opts.policy,
@@ -147,6 +161,8 @@ impl Scheduler {
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             workers,
+            em: metrics.as_deref().map(EngineMetrics::register),
+            sm: metrics.as_deref().map(SessionMetrics::register),
         });
         let handles = (0..workers)
             .map(|rank| {
@@ -225,6 +241,10 @@ impl Scheduler {
             started: Instant::now(),
         });
         self.shared.jobs.lock().expect("jobs lock").push(job);
+        if let Some(sm) = &self.shared.sm {
+            sm.admitted.inc();
+            sm.active.add(1.0);
+        }
         self.shared.cv.notify_all();
         Ok(id)
     }
@@ -369,6 +389,9 @@ fn worker_loop(rank: u32, shared: &Shared) {
         };
         job.granted.fetch_add(a.size, Ordering::Relaxed);
         let wait = t_req.elapsed().as_secs_f64();
+        if let Some(m) = &shared.em {
+            m.on_grant(a.size, wait, fast);
+        }
         let (sum, _elapsed) = execute_chunk(job.workload.as_ref(), a);
         {
             let mut cell = job.cells[rank as usize].lock().expect("cell lock");
@@ -417,6 +440,9 @@ fn try_finalize(job: &Arc<Job>, shared: &Shared) {
             TenantState::Completed
         };
         reg.advance(job.id, terminal).expect("draining → terminal");
+    }
+    if let Some(sm) = &shared.sm {
+        sm.active.add(-1.0);
     }
     shared.cv.notify_all();
 }
@@ -494,6 +520,36 @@ mod tests {
         }
         assert!(seen.iter().all(|s| *s), "all jobs completed");
         assert!(sched.drain().is_empty(), "results already streamed out");
+    }
+
+    /// An instrumented pool accounts every grant and tenant lifecycle
+    /// transition in the attached registry; the gauge returns to zero once
+    /// all tenants are terminal.
+    #[test]
+    fn instrumented_pool_accounts_grants_and_tenants() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let sched = Scheduler::new_instrumented(
+            SchedulerOptions {
+                workers: 2,
+                policy: ArbitrationPolicy::FairShare,
+                sched_path: SchedPath::TwoPhase,
+            },
+            Some(Arc::clone(&reg)),
+        );
+        let w = wl(2_000);
+        sched.submit(JobSpec::new("a", 2_000, TechniqueKind::Gss, Arc::clone(&w))).unwrap();
+        sched.submit(JobSpec::new("b", 1_000, TechniqueKind::Ss, w)).unwrap();
+        let results = sched.drain();
+        let chunks: u64 = results.iter().map(|(_, r)| r.stats.chunks).sum();
+        let em = EngineMetrics::register(&reg);
+        let sm = SessionMetrics::register(&reg);
+        assert_eq!(em.grants.get(), chunks);
+        assert_eq!(em.iters.get(), 3_000);
+        assert_eq!(em.fast_grants.get(), 0, "two-phase path only");
+        assert_eq!(em.messages.get(), 4 * chunks);
+        assert_eq!(sm.admitted.get(), 2);
+        assert_eq!(sm.active.get(), 0.0, "all tenants terminal");
+        assert!(reg.render_prometheus().contains("dcadls_tenants_active"));
     }
 
     /// Eviction drops the tail, keeps the granted prefix exactly

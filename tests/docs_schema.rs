@@ -1,0 +1,246 @@
+//! Doc-sync gate for `docs/metrics-schema.md`.
+//!
+//! The schema doc is normative: every Prometheus metric the registry
+//! renders and every NDJSON field the stream producers emit must have a
+//! first-column backticked row in the doc, and every documented name must
+//! still be produced by the code (modulo a small allowlist for fields
+//! that only appear under producers this test does not drive, e.g.
+//! `slowdown`). Adding a metric without a doc row — or deleting a metric
+//! while its row lingers — fails here, not in review.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams};
+use dca_dls::des::{simulate, DesConfig};
+use dca_dls::obs::stream;
+use dca_dls::obs::{EngineMetrics, MetricsRegistry, SessionMetrics};
+use dca_dls::report::json::Json;
+use dca_dls::sched::adaptive::SwitchEvent;
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{CandidateSet, LoopParams, TechniqueKind};
+use dca_dls::tenant::{simulate_session, SessionConfig, TenantSpec};
+use dca_dls::workload::IterationCost;
+
+fn doc_text() -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("../docs/metrics-schema.md");
+    std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()))
+}
+
+/// First-column backticked names: lines shaped `| `name` | ...`.
+fn documented_names(doc: &str) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for line in doc.lines() {
+        let Some(rest) = line.strip_prefix("| `") else {
+            continue;
+        };
+        let Some(end) = rest.find('`') else { continue };
+        let name = &rest[..end];
+        if !name.is_empty()
+            && name
+                .chars()
+                .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        {
+            names.insert(name.to_string());
+        }
+    }
+    names
+}
+
+/// Metric names from the `# TYPE <name> <kind>` exposition lines.
+fn prometheus_names(rendered: &str) -> BTreeSet<String> {
+    rendered
+        .lines()
+        .filter_map(|l| l.strip_prefix("# TYPE "))
+        .filter_map(|l| l.split_whitespace().next())
+        .map(str::to_string)
+        .collect()
+}
+
+/// Every object key in a record tree, plus each record's `event` value
+/// (the record-type vocabulary is documented in the same table style).
+fn collect_emitted(j: &Json, keys: &mut BTreeSet<String>, events: &mut BTreeSet<String>) {
+    match j {
+        Json::Obj(fields) => {
+            for (k, v) in fields {
+                keys.insert(k.clone());
+                if k == "event" {
+                    if let Some(e) = v.as_str() {
+                        events.insert(e.to_string());
+                    }
+                }
+                collect_emitted(v, keys, events);
+            }
+        }
+        Json::Arr(items) => {
+            for item in items {
+                collect_emitted(item, keys, events);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Drive every stream producer once and return all records:
+/// flat interval records, hierarchical+adaptive interval records with
+/// subtree entries (and switch records when the controller rebinds), a
+/// session with interval + terminal tenant records — plus one synthetic
+/// switch record so its fields are covered even if the adaptive cell
+/// happens not to rebind.
+fn all_stream_records() -> Vec<Json> {
+    let mut records = Vec::new();
+
+    let flat = DesConfig::new(
+        LoopParams::new(4_000, 16),
+        TechniqueKind::Gss,
+        ExecutionModel::Dca,
+        ClusterConfig::small(16),
+        IterationCost::Constant(1e-5),
+    )
+    .with_stream_interval(1e-4);
+    let flat = simulate(&flat).expect("flat stream cell");
+    assert!(
+        flat.stream.len() >= 2,
+        "flat cell must emit interval records (got {})",
+        flat.stream.len()
+    );
+    records.extend(flat.stream);
+
+    // Mirrors the Python-port smoke cell (4×4 ranks, exp calculation
+    // delay, probe every 4 grants) where the controller primes its EWMAs
+    // and rebinds several times.
+    let mut hier = DesConfig::new(
+        LoopParams::new(8_192, 16),
+        TechniqueKind::Fac2,
+        ExecutionModel::HierDca,
+        ClusterConfig {
+            nodes: 4,
+            ranks_per_node: 4,
+            ..ClusterConfig::minihpc()
+        },
+        IterationCost::Constant(1e-5),
+    )
+    .with_stream_interval(1e-3);
+    hier.hier = HierParams::with_inner(TechniqueKind::Ss)
+        .with_adaptive()
+        .with_probe_interval(4)
+        .with_candidates(CandidateSet::parse("ss,gss,fac").expect("candidate set"));
+    hier.delay = InjectedDelay::exponential_calculation(100e-6, 0xAD0001);
+    let hier = simulate(&hier).expect("hier stream cell");
+    assert!(
+        hier.stream
+            .iter()
+            .any(|r| r.get("subtrees").is_some()),
+        "hier interval records must carry subtree entries"
+    );
+    records.extend(hier.stream);
+
+    let mut session = SessionConfig::new(ClusterConfig::small(16)).with_stream_interval(1e-3);
+    session = session
+        .admit(
+            TenantSpec::new("bulk", 40_000, TechniqueKind::Ss)
+                .with_cost(IterationCost::Constant(1e-5)),
+        )
+        .admit(
+            TenantSpec::new("late", 2_000, TechniqueKind::Gss)
+                .with_cost(IterationCost::Constant(1e-5))
+                .arriving_at(2e-3),
+        );
+    let outcome = simulate_session(&session).expect("session stream cell");
+    assert!(
+        outcome
+            .stream
+            .iter()
+            .any(|r| r.get("event").and_then(Json::as_str) == Some("tenant")),
+        "session stream must end with terminal tenant records"
+    );
+    records.extend(outcome.stream);
+
+    records.push(stream::switch_record(&SwitchEvent {
+        at_s: 0.0,
+        level: 1,
+        master: 0,
+        from: TechniqueKind::Ss,
+        to: TechniqueKind::Gss,
+        predicted_ratio: 0.8,
+    }));
+
+    records
+}
+
+#[test]
+fn prometheus_metrics_are_documented_and_vice_versa() {
+    let doc = documented_names(&doc_text());
+
+    let registry = MetricsRegistry::new();
+    let engine = EngineMetrics::register(&registry);
+    let session = SessionMetrics::register(&registry);
+    engine.on_grant(64, 1e-6, false);
+    engine.on_grant(32, 0.0, true);
+    session.admitted.inc();
+    session.active.add(1.0);
+
+    let rendered = registry.render_prometheus();
+    let metrics = prometheus_names(&rendered);
+    assert!(!metrics.is_empty(), "registry rendered no metrics");
+
+    let undocumented: Vec<_> = metrics.difference(&doc).collect();
+    assert!(
+        undocumented.is_empty(),
+        "metrics missing from docs/metrics-schema.md: {undocumented:?}"
+    );
+}
+
+#[test]
+fn stream_fields_are_documented_and_vice_versa() {
+    let doc = documented_names(&doc_text());
+    assert!(
+        doc.len() >= 30,
+        "doc table extraction looks broken: only {} names found",
+        doc.len()
+    );
+
+    let mut keys = BTreeSet::new();
+    let mut events = BTreeSet::new();
+    for record in all_stream_records() {
+        collect_emitted(&record, &mut keys, &mut events);
+    }
+
+    // Code → docs: every emitted key and record type needs a row.
+    let undocumented: Vec<_> = keys
+        .iter()
+        .filter(|k| !doc.contains(*k))
+        .chain(events.iter().filter(|e| !doc.contains(*e)))
+        .collect();
+    assert!(
+        undocumented.is_empty(),
+        "stream fields missing from docs/metrics-schema.md: {undocumented:?}"
+    );
+
+    // Docs → code: every documented name must be produced by this test's
+    // runs, be a Prometheus metric (checked above), or sit on the
+    // allowlist of fields only emitted by producers not driven here
+    // (`slowdown` needs a solo-baseline sweep; the EWMAs appear only once
+    // a controller primes — the adaptive cell primes them, but they stay
+    // listed so a seed tweak cannot break the docs build).
+    const ALLOWLIST: &[&str] = &["slowdown", "mu_hat", "sigma_hat", "overhead_hat"];
+    let registry = MetricsRegistry::new();
+    EngineMetrics::register(&registry);
+    SessionMetrics::register(&registry);
+    let metrics = prometheus_names(&registry.render_prometheus());
+
+    let stale: Vec<_> = doc
+        .iter()
+        .filter(|name| {
+            !keys.contains(*name)
+                && !events.contains(*name)
+                && !metrics.contains(*name)
+                && !ALLOWLIST.contains(&name.as_str())
+        })
+        .collect();
+    assert!(
+        stale.is_empty(),
+        "docs/metrics-schema.md documents names the code never emits: {stale:?}"
+    );
+}

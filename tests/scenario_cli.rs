@@ -1,0 +1,204 @@
+//! End-to-end tests for the `dca-dls scenario` subcommand family and its
+//! documented exit-code contract (docs/scenario-spec.md):
+//!
+//!   0 — every expectation of every spec held,
+//!   1 — a spec parsed and ran but an expectation failed (or the run
+//!       errored),
+//!   2 — a spec (or the command line) could not be understood.
+//!
+//! The fixtures under `tests/fixtures/` pin one spec per exit code; the
+//! committed suite under `scenarios/` is parse-validated spec-by-spec and
+//! the cheapest cell is run end-to-end against its blessed baseline.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output};
+
+use dca_dls::report::json::Json;
+use dca_dls::scenario::parse_scenario;
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+fn fixture(name: &str) -> String {
+    repo_root().join("tests/fixtures").join(name).display().to_string()
+}
+
+/// Run the built binary from the repository root (so the default
+/// `scenarios` directory of `scenario list` resolves).
+fn dca_dls(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_dca-dls"))
+        .args(args)
+        .current_dir(repo_root())
+        .output()
+        .expect("spawn dca-dls")
+}
+
+fn code(out: &Output) -> i32 {
+    out.status.code().expect("exit code (not signal)")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).into_owned()
+}
+
+#[test]
+fn passing_spec_exits_zero() {
+    let out = dca_dls(&["scenario", "run", &fixture("scenario_pass.json")]);
+    assert_eq!(code(&out), 0, "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    assert!(text.contains("fixture-pass: PASS"), "stdout: {text}");
+    assert!(text.contains("[PASS] t_par"), "stdout: {text}");
+}
+
+#[test]
+fn failed_expectation_exits_one() {
+    let out = dca_dls(&["scenario", "run", &fixture("scenario_fail.json")]);
+    assert_eq!(code(&out), 1);
+    let text = stdout(&out);
+    assert!(text.contains("fixture-fail: FAIL"), "stdout: {text}");
+    assert!(text.contains("[FAIL] t_par"), "stdout: {text}");
+}
+
+#[test]
+fn malformed_spec_exits_two() {
+    for verb in ["run", "validate", "explain"] {
+        let out = dca_dls(&["scenario", verb, &fixture("scenario_bad.json")]);
+        assert_eq!(code(&out), 2, "`scenario {verb}` on a bad spec");
+        assert!(
+            stderr(&out).contains("error"),
+            "`scenario {verb}` stderr: {}",
+            stderr(&out)
+        );
+    }
+}
+
+#[test]
+fn one_failure_taints_a_multi_spec_run() {
+    let out = dca_dls(&[
+        "scenario",
+        "run",
+        &fixture("scenario_pass.json"),
+        &fixture("scenario_fail.json"),
+    ]);
+    assert_eq!(code(&out), 1);
+    let text = stdout(&out);
+    assert!(text.contains("fixture-pass: PASS"), "stdout: {text}");
+    assert!(text.contains("fixture-fail: FAIL"), "stdout: {text}");
+}
+
+#[test]
+fn unknown_verb_and_missing_args_exit_two() {
+    assert_eq!(code(&dca_dls(&["scenario", "frobnicate"])), 2);
+    assert_eq!(code(&dca_dls(&["scenario"])), 2);
+    assert_eq!(code(&dca_dls(&["scenario", "run"])), 2);
+    assert_eq!(code(&dca_dls(&["scenario", "validate"])), 2);
+    assert_eq!(
+        code(&dca_dls(&["scenario", "run", "--no-such-flag", &fixture("scenario_pass.json")])),
+        2
+    );
+}
+
+#[test]
+fn validate_and_explain_accept_good_specs() {
+    let out = dca_dls(&["scenario", "validate", &fixture("scenario_pass.json")]);
+    assert_eq!(code(&out), 0);
+    assert!(stdout(&out).contains("ok (fixture-pass)"), "stdout: {}", stdout(&out));
+
+    let out = dca_dls(&["scenario", "explain", &fixture("scenario_pass.json")]);
+    assert_eq!(code(&out), 0);
+    assert!(stdout(&out).contains("fixture-pass"), "stdout: {}", stdout(&out));
+}
+
+#[test]
+fn json_report_has_the_documented_schema() {
+    let out = dca_dls(&["scenario", "run", "--json", &fixture("scenario_pass.json")]);
+    assert_eq!(code(&out), 0, "stderr: {}", stderr(&out));
+    let report = Json::parse(stdout(&out).trim()).expect("report parses as JSON");
+    assert_eq!(
+        report.get("schema").and_then(Json::as_str),
+        Some("dca-dls/scenario-report/v1")
+    );
+    assert_eq!(report.get("name").and_then(Json::as_str), Some("fixture-pass"));
+    assert_eq!(report.get("passed").map(|j| j.render()), Some("true".into()));
+    let Some(Json::Arr(checks)) = report.get("checks") else {
+        panic!("report has no checks array: {}", report.render());
+    };
+    assert!(!checks.is_empty());
+    let t_par = report
+        .get("observed")
+        .and_then(|o| o.get("t_par"))
+        .and_then(Json::as_f64)
+        .expect("observed.t_par");
+    assert!(t_par > 0.0);
+}
+
+#[test]
+fn stream_metrics_writes_schema_tagged_ndjson() {
+    let dest = std::env::temp_dir().join(format!("dcadls-scenario-stream-{}.ndjson", std::process::id()));
+    let dest_s = dest.display().to_string();
+    let out = dca_dls(&["scenario", "run", &fixture("scenario_pass.json"), "--stream-metrics", &dest_s]);
+    assert_eq!(code(&out), 0, "stderr: {}", stderr(&out));
+    let text = std::fs::read_to_string(&dest).expect("stream file written");
+    std::fs::remove_file(&dest).ok();
+    let lines: Vec<_> = text.lines().filter(|l| !l.is_empty()).collect();
+    assert!(!lines.is_empty(), "stream file is empty");
+    for line in &lines {
+        let record = Json::parse(line).expect("NDJSON line parses");
+        assert_eq!(
+            record.get("schema").and_then(Json::as_str),
+            Some("dca-dls/stream/v1"),
+            "line: {line}"
+        );
+        assert!(record.get("event").is_some() && record.get("t").is_some(), "line: {line}");
+    }
+}
+
+#[test]
+fn scenario_list_reads_the_committed_suite() {
+    let out = dca_dls(&["scenario", "list"]);
+    assert_eq!(code(&out), 0, "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    for name in [
+        "hier-calc-100us",
+        "adaptive-exp-slowdown",
+        "dca-ss-lockfree",
+        "tenants-fair-share",
+        "hier-prefetch",
+    ] {
+        assert!(text.contains(name), "`scenario list` is missing {name}: {text}");
+    }
+}
+
+#[test]
+fn committed_scenarios_all_parse() {
+    let dir = repo_root().join("scenarios");
+    let mut seen = 0;
+    for entry in std::fs::read_dir(&dir).expect("scenarios/ exists") {
+        let path = entry.expect("dir entry").path();
+        if !path.extension().is_some_and(|x| x == "json") {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).expect("read spec");
+        let sc = parse_scenario(&text)
+            .unwrap_or_else(|e| panic!("{} does not parse: {e:#}", path.display()));
+        assert!(!sc.name.is_empty());
+        seen += 1;
+    }
+    assert!(seen >= 5, "expected the five committed scenarios, found {seen}");
+}
+
+/// The cheapest committed baseline cell (flat DCA SS over the lock-free
+/// path, 50 000 iterations on 64 ranks) must reproduce end-to-end.
+#[test]
+fn committed_lockfree_cell_reproduces_its_baseline() {
+    let spec = repo_root().join("scenarios/dca-ss-lockfree.json");
+    let out = dca_dls(&["scenario", "run", "--json", &spec.display().to_string()]);
+    assert_eq!(code(&out), 0, "stderr: {}", stderr(&out));
+    let report = Json::parse(stdout(&out).trim()).expect("report parses");
+    assert_eq!(report.get("passed").map(|j| j.render()), Some("true".into()));
+}
