@@ -21,6 +21,15 @@
 //! gates the mean per-tenant slowdown under fair-share vs FIFO arbitration
 //! and asserts fair share wins the gap.
 //!
+//! A huge-scale PDES cell (2^20 simulated ranks × 2^30 iterations,
+//! FAC▸STATIC with the fused master tier — docs/pdes.md) runs the
+//! sequential loop against the subtree-sharded executor, asserts the two
+//! are bit-identical, and gates the exact schedule counts with
+//! `direction: "higher"` rows. `DES_THREADS=N` (CI runs 1 and 4) routes
+//! every DES cell through the PDES executor — the gated numbers must not
+//! move. `BENCH_ASSERT_PDES_SPEEDUP=1` additionally asserts the ≥2.5×
+//! events/sec PDES speedup on the huge cell (off by default: wall clock).
+//!
 //! Run: `cargo bench --bench sched_throughput` (plain harness). Emits
 //! `BENCH_sched_throughput.json` (path override:
 //! `BENCH_SCHED_THROUGHPUT_JSON`); regenerate the baseline with
@@ -54,6 +63,21 @@ const TENANT_RANKS: u32 = 16;
 const BULK_N: u64 = 40_000;
 const SMALL_N: u64 = 800;
 
+// Huge-scale PDES cell — keep in lockstep with the HUGE_* constants in
+// python/tools/sched_throughput_model.py (which blesses its baseline row
+// from the closed-form schedule).
+const HUGE_NODES: u32 = 4_096;
+const HUGE_RPN: u32 = 256;
+const HUGE_N: u64 = 1 << 30;
+const HUGE_COST: f64 = 1e-6;
+
+/// CI legs run `DES_THREADS={1,4}`: above 1, every DES cell goes through
+/// the subtree-sharded PDES executor and the gated rows must not move
+/// (the determinism guarantee of docs/pdes.md, pinned here end-to-end).
+fn des_threads() -> u32 {
+    std::env::var("DES_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1).max(1)
+}
+
 struct Cell {
     r: DesResult,
     wall: f64,
@@ -69,6 +93,7 @@ fn run_flat(kind: TechniqueKind, path: SchedPath) -> Cell {
         IterationCost::Constant(COST),
     );
     cfg.sched_path = path;
+    cfg.des_threads = des_threads();
     let t0 = Instant::now();
     let r = simulate(&cfg).expect("simulate");
     Cell { r, wall: t0.elapsed().as_secs_f64() }
@@ -85,6 +110,30 @@ fn run_hier(path: SchedPath) -> Cell {
     );
     cfg.hier = HierParams::with_inner(TechniqueKind::Ss);
     cfg.sched_path = path;
+    cfg.des_threads = des_threads();
+    let t0 = Instant::now();
+    let r = simulate(&cfg).expect("simulate");
+    Cell { r, wall: t0.elapsed().as_secs_f64() }
+}
+
+/// The huge PDES cell: 2^20 ranks × 2^30 iterations, FAC2 over the node
+/// masters, STATIC inside each node, fused grants at both tiers.
+/// Assignment recording is off — the gated quantities are the exact
+/// schedule counts, blessed closed-form by the reference model.
+fn run_huge(threads: u32) -> Cell {
+    let cluster =
+        ClusterConfig { nodes: HUGE_NODES, ranks_per_node: HUGE_RPN, ..ClusterConfig::minihpc() };
+    let mut cfg = DesConfig::new(
+        LoopParams::new(HUGE_N, cluster.total_ranks()),
+        TechniqueKind::Fac2,
+        ExecutionModel::HierDca,
+        cluster,
+        IterationCost::Constant(HUGE_COST),
+    );
+    cfg.hier = HierParams::with_inner(TechniqueKind::Static).with_master_lockfree();
+    cfg.sched_path = SchedPath::LockFree;
+    cfg.record_assignments = false;
+    cfg.des_threads = threads;
     let t0 = Instant::now();
     let r = simulate(&cfg).expect("simulate");
     Cell { r, wall: t0.elapsed().as_secs_f64() }
@@ -93,6 +142,7 @@ fn run_hier(path: SchedPath) -> Cell {
 fn tenant_session(policy: ArbitrationPolicy) -> SessionConfig {
     let mut cfg = SessionConfig::new(ClusterConfig::small(TENANT_RANKS))
         .with_policy(policy)
+        .with_des_threads(des_threads())
         .admit(
             TenantSpec::new("bulk", BULK_N, TechniqueKind::Ss)
                 .with_cost(IterationCost::Constant(COST)),
@@ -182,6 +232,7 @@ fn main() {
                 Json::obj()
                     .field("scenario", format!("DCA {}", kind.name()).as_str())
                     .field("tol", TOL)
+                    .field("direction", "lower")
                     .field("TWO-PHASE", two.r.t_par())
                     .field("LOCKFREE", fast.r.t_par()),
             );
@@ -215,6 +266,7 @@ fn main() {
         Json::obj()
             .field("scenario", "HIER-DCA FAC\u{25b8}SS")
             .field("tol", TOL)
+            .field("direction", "lower")
             .field("TWO-PHASE", two.r.t_par())
             .field("LOCKFREE", fast.r.t_par()),
     );
@@ -261,9 +313,70 @@ fn main() {
         Json::obj()
             .field("scenario", tenant_scenario.as_str())
             .field("tol", TOL)
+            .field("direction", "lower")
             .field("FAIR-SHARE", fair)
             .field("FIFO", fifo),
     );
+
+    // Huge-scale PDES cell: the sequential loop vs the subtree-sharded
+    // executor on 2^20 ranks × 2^30 iterations. The sharded run must be
+    // bit-identical (docs/pdes.md); the gated row carries the exact
+    // schedule counts (tol 0, direction "higher" — losing CAS grants
+    // means a fast-path gate silently flipped off).
+    let huge_scenario = format!("HUGE FAC\u{25b8}STATIC {HUGE_NODES}x{HUGE_RPN}");
+    let seq = run_huge(1);
+    let par = run_huge(des_threads().max(4));
+    assert!(seq.r.pdes.is_none(), "one thread keeps the sequential loop");
+    let p = par.r.pdes.as_ref().expect("the sharded run reports PDES counters");
+    assert!(p.shards > 1, "the huge tree must shard");
+    assert_eq!(seq.r.stats.chunks, par.r.stats.chunks, "huge: chunk count invariant");
+    assert_eq!(seq.r.fast_grants, par.r.fast_grants, "huge: fast-grant count invariant");
+    assert_eq!(seq.r.t_par(), par.r.t_par(), "huge: t_par bit-identical");
+    assert_eq!(seq.r.events, par.r.events, "huge: event count invariant");
+    let speedup =
+        (par.r.events as f64 / par.wall.max(1e-9)) / (seq.r.events as f64 / seq.wall.max(1e-9));
+    println!(
+        "{huge_scenario} N=2^30: t_par {:.3}s, {} chunks, {} CAS grants, {} events — \
+         seq {:.2}s vs PDES×{} {:.2}s ({} shards): speedup {speedup:.2}x",
+        seq.r.t_par(),
+        seq.r.stats.chunks,
+        seq.r.fast_grants,
+        seq.r.events,
+        seq.wall,
+        p.threads,
+        par.wall,
+        p.shards
+    );
+    if std::env::var("BENCH_ASSERT_PDES_SPEEDUP").as_deref() == Ok("1") {
+        assert!(
+            speedup >= 2.5,
+            "PDES events/sec speedup {speedup:.2}x < 2.5x on the huge cell \
+             (seq {:.2}s, par {:.2}s)",
+            seq.wall,
+            par.wall
+        );
+    }
+    rows.push(
+        Json::obj()
+            .field("scenario", huge_scenario.as_str())
+            .field("tol", 0.0)
+            .field("direction", "higher")
+            .field("CHUNKS", seq.r.stats.chunks)
+            .field("FAST-GRANTS", seq.r.fast_grants),
+    );
+    for (label, c) in [("sequential", &seq), ("pdes", &par)] {
+        let mut row = info_row(&huge_scenario, SchedPath::LockFree, c).field("engine", label);
+        if let Some(p) = &c.r.pdes {
+            row = row
+                .field("pdes_shards", u64::from(p.shards))
+                .field("pdes_threads", u64::from(p.threads))
+                .field("pdes_rounds", p.rounds)
+                .field("pdes_lookahead_ns", p.lookahead_ns)
+                .field("pdes_horizon_stalls", p.horizon_stalls)
+                .field("pdes_mailbox_depth_max", p.mailbox_depth_max);
+        }
+        info.push(row);
+    }
 
     // Threaded spot-check: the *real* CAS loop vs real messages (wall
     // clock, machine-dependent — info only). Sub-µs synthetic iterations

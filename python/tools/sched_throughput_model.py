@@ -14,6 +14,11 @@ measured-µ feedback loop.
 Wall-clock metrics (ns/grant, events/sec) are machine-dependent and live in
 the bench JSON's ungated "info" section only.
 
+The huge-scale PDES row (HUGE FAC▸STATIC, 2^20 ranks × 2^30 iterations) is
+blessed from the closed-form schedule alone — see `huge_cell()` — and
+carries `direction: "higher"` with tol 0: the chunk/fast-grant counts are
+exact and thread-count-invariant (docs/pdes.md).
+
 Usage:  python3 python/tools/sched_throughput_model.py [out.json]
 """
 
@@ -30,6 +35,14 @@ NODES = 4
 RPN = 16
 COST = 1e-5
 TOL = 0.10
+
+# Huge-scale PDES cell (docs/pdes.md): 2^20 simulated ranks × 2^30
+# iterations, FAC2 at the root over the node masters, STATIC inside each
+# node, both tiers on the lock-free fast path. Keep in lockstep with the
+# HUGE_* constants in benches/sched_throughput.rs.
+HUGE_NODES = 4096
+HUGE_RPN = 256
+HUGE_N = 1 << 30
 
 # The bench's technique order (TechniqueKind::EVALUATED minus AF), by the
 # port's names; keys in the JSON use the Rust display names.
@@ -94,6 +107,34 @@ def tenant_cell(policy):
     return sim, mean
 
 
+def huge_cell():
+    """Closed-form bless of the huge PDES row — the DES is **not** run.
+
+    Both gated quantities are schedule counts, and the whole schedule is
+    timing-independent: the root serves FAC2 grants by walking the chunk
+    table of the full loop (each grant's size depends only on what
+    remains), and every installment of length `s` subdivides through the
+    per-length STATIC table `ChunkTable(static, s, rpn)`
+    (`TableCache::get` in rust/src/techniques/mod.rs). So
+
+      CHUNKS      = Σ over root chunks s of steps(table(static, s, rpn)),
+      FAST-GRANTS = CHUNKS + root chunk count
+
+    — under `--master-lockfree` + the lock-free leaf path every grant at
+    both tiers is a CAS. PDES bit-identity (tests/pdes_determinism.rs)
+    makes the same numbers hold for every DES_THREADS value.
+    """
+    bounds = m.chunk_table("fac2", HUGE_N, HUGE_NODES)
+    sizes = [b - a for a, b in zip(bounds, bounds[1:])]
+    leaf_per_len = {}
+    for s in sizes:
+        if s not in leaf_per_len:
+            leaf_per_len[s] = len(m.chunk_table("static", s, HUGE_RPN)) - 1
+    leaf = sum(leaf_per_len[s] for s in sizes)
+    assert bounds[-1] == HUGE_N and leaf >= len(sizes) > 0
+    return len(sizes), leaf
+
+
 def tenant_self_check():
     """Single-tenant sessions must be bit-identical to the flat DES on both
     grant paths (the Rust property pinned in tests/tenants.rs)."""
@@ -134,14 +175,14 @@ def main():
         print(f"DCA {name:7s} two-phase {t2:.5f}s ({c2} chunks)  "
               f"lockfree {tl:.5f}s ({fl} CAS grants)  ratio {tl / t2:.3f}")
         rows.append({"scenario": f"DCA {name}", "tol": TOL,
-                     "TWO-PHASE": t2, "LOCKFREE": tl})
+                     "direction": "lower", "TWO-PHASE": t2, "LOCKFREE": tl})
     t2, c2, _ = hier_cell(False)
     tl, cl, fl = hier_cell(True)
     assert fl > 0 and tl <= t2, (fl, tl, t2)
     print(f"HIER FAC▸SS two-phase {t2:.5f}s ({c2} chunks)  "
           f"lockfree {tl:.5f}s ({fl} CAS grants)  ratio {tl / t2:.3f}")
     rows.append({"scenario": "HIER-DCA FAC▸SS", "tol": TOL,
-                 "TWO-PHASE": t2, "LOCKFREE": tl})
+                 "direction": "lower", "TWO-PHASE": t2, "LOCKFREE": tl})
 
     tenant_self_check()
     fair_sim, fair = tenant_cell("fair")
@@ -151,7 +192,20 @@ def main():
           f"fair {fair:.3f} (Jain {fair_sim.jain:.3f})  "
           f"fifo {fifo:.3f} (Jain {fifo_sim.jain:.3f})")
     rows.append({"scenario": f"TENANTS {TENANTS}x{TENANT_RANKS} SS",
-                 "tol": TOL, "FAIR-SHARE": fair, "FIFO": fifo})
+                 "tol": TOL, "direction": "lower",
+                 "FAIR-SHARE": fair, "FIFO": fifo})
+
+    master, leaf = huge_cell()
+    print(f"HUGE FAC▸STATIC {HUGE_NODES}x{HUGE_RPN} N=2^30: "
+          f"{master} root chunks, {leaf} leaf chunks, "
+          f"{master + leaf} CAS grants (closed form)")
+    # Exact integers (tol 0): the schedule is deterministic and the PDES
+    # executor must be bit-identical at every thread count. Direction
+    # "higher": losing fast-path grants is the regression this row exists
+    # to catch (a gate flipping off silently falls back to two-phase).
+    rows.append({"scenario": f"HUGE FAC▸STATIC {HUGE_NODES}x{HUGE_RPN}",
+                 "tol": 0.0, "direction": "higher",
+                 "CHUNKS": leaf, "FAST-GRANTS": master + leaf})
 
     doc = {"bench": "sched_throughput", "n": N, "ranks": NODES * RPN,
            "scenarios": rows}

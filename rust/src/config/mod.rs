@@ -336,6 +336,14 @@ pub struct HierParams {
     /// rather than on the per-run configs — so both substrates and the flat
     /// DCA engines read one policy definition (like the prefetch watermark).
     pub adaptive: AdaptiveParams,
+    /// Extend the lock-free CAS fast path to **master-tier** fetches
+    /// (levels `0..k-1`): a child master's parent fetch becomes one fused
+    /// op at the parent's atomic unit instead of the four-message two-phase
+    /// exchange, feeding the child ledger through the staged-chunk MPSC.
+    /// Opt-in; requires `SchedPath::{LockFree, Auto}`, takes effect only at
+    /// levels whose technique has a closed form, and is mutually exclusive
+    /// with `adaptive`.
+    pub master_lockfree: bool,
 }
 
 impl HierParams {
@@ -397,6 +405,11 @@ impl HierParams {
     /// Set the adaptive candidate set.
     pub fn with_candidates(self, candidates: CandidateSet) -> Self {
         HierParams { adaptive: AdaptiveParams { candidates, ..self.adaptive }, ..self }
+    }
+
+    /// Extend the lock-free fast path to master-tier fetches.
+    pub fn with_master_lockfree(self) -> Self {
+        HierParams { master_lockfree: true, ..self }
     }
 
     /// Resolve the inner technique given the experiment's outer technique.

@@ -248,11 +248,42 @@ impl<E> EventHeap<E> {
 
     fn migrate_far(&mut self) {
         let horizon_end = self.horizon_end();
+        if !self.far.peek().is_some_and(|e| e.at_ns < horizon_end) {
+            return;
+        }
+        // Batch the drain per target bucket: overflow entries pop in
+        // ascending `(at_ns, seq)` order and one drain spans less than a
+        // full ring window, so same-slice entries are contiguous — collect
+        // each run and rebuild its bucket with one O(k) heapify instead of
+        // k individual O(log n) pushes (the re-heapify spike a long idle
+        // jump used to pay when draining a large overflow population).
+        let mut run: Vec<Entry<E>> = Vec::new();
+        let mut run_bucket = 0usize;
         while self.far.peek().is_some_and(|e| e.at_ns < horizon_end) {
             let e = self.far.pop().expect("peeked above");
             let b = self.bucket_of(e.at_ns);
-            self.wheel[b].push(e);
+            if b != run_bucket && !run.is_empty() {
+                self.flush_run(run_bucket, &mut run);
+            }
+            run_bucket = b;
+            run.push(e);
             self.wheel_len += 1;
+        }
+        if !run.is_empty() {
+            self.flush_run(run_bucket, &mut run);
+        }
+    }
+
+    /// Move one drained same-slice run into bucket `b` with a single
+    /// heapify. FIFO ties are safe: heap order is the full `(at_ns, seq)`
+    /// key, so rebuild order within a bucket never leaks into pop order.
+    fn flush_run(&mut self, b: usize, run: &mut Vec<Entry<E>>) {
+        if self.wheel[b].is_empty() {
+            self.wheel[b] = BinaryHeap::from(std::mem::take(run));
+        } else {
+            let mut v = std::mem::take(&mut self.wheel[b]).into_vec();
+            v.append(run);
+            self.wheel[b] = BinaryHeap::from(v);
         }
     }
 
@@ -266,6 +297,15 @@ impl<E> EventHeap<E> {
             (None, Some(f)) => Some(f.0),
             (None, None) => None,
         }
+    }
+
+    /// Earliest scheduled time without popping (`None` when empty) — the
+    /// PDES executor's per-shard GVT probe.
+    pub fn next_at(&self) -> Option<u64> {
+        if self.len == 0 {
+            return None;
+        }
+        self.global_min_at()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -339,6 +379,43 @@ mod tests {
         for i in 0..10_000u32 {
             assert_eq!(h.pop(), Some((7, i)), "FIFO within a timestamp");
         }
+    }
+
+    /// Batched far-drain guard: a long idle jump that migrates a large,
+    /// many-slice overflow population (the sparse-timeline spike) must
+    /// preserve exact `(time, seq)` pop order, including FIFO ties.
+    #[test]
+    fn batched_far_drain_preserves_order() {
+        let mut h = EventHeap::with_capacity(8);
+        let base = BUCKET_NS * (BUCKETS as u64) * 7; // far beyond the window
+        let mut expect = Vec::new();
+        for i in 0..2_000u64 {
+            // Several entries per slice, several ties, spread over ~200
+            // slices so one jump drains a multi-bucket batch.
+            let at = base + (i % 200) * BUCKET_NS + (i / 200) * 3;
+            h.push(at, i);
+            expect.push((at, i));
+        }
+        h.push(1, 9_999);
+        assert_eq!(h.pop(), Some((1, 9_999)));
+        expect.sort_by_key(|&(at, i)| (at, i)); // seq order == push order
+        for (at, i) in expect {
+            assert_eq!(h.pop(), Some((at, i)));
+        }
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn next_at_reports_global_min_without_popping() {
+        let mut h = EventHeap::new();
+        assert_eq!(h.next_at(), None);
+        h.push(BUCKET_NS * (BUCKETS as u64) * 5, "far");
+        assert_eq!(h.next_at(), Some(BUCKET_NS * (BUCKETS as u64) * 5));
+        h.push(42, "near");
+        assert_eq!(h.next_at(), Some(42));
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.pop(), Some((42, "near")));
+        assert_eq!(h.next_at(), Some(BUCKET_NS * (BUCKETS as u64) * 5));
     }
 
     /// The satellite guard: FIFO tie-break survives the bucket machinery —

@@ -20,6 +20,7 @@
 //! Mandelbrot + 100 µs being the blow-up case of Fig. 5c).
 
 pub mod heap;
+pub mod pdes;
 
 use std::collections::VecDeque;
 
@@ -71,6 +72,13 @@ pub struct DesConfig {
     /// plus the run's `switch` records, in virtual-time order — see
     /// `docs/metrics-schema.md`.
     pub stream_interval: f64,
+    /// Worker threads for the parallel DES core (`--des-threads`); 1 (the
+    /// default) runs the classic sequential event loop. With more, the
+    /// simulation is partitioned into shards at subtree (hier) or rank
+    /// -range (flat) boundaries and executed by [`pdes::run_conservative`]
+    /// — results are bit-identical to the sequential core for every
+    /// thread count (see `docs/pdes.md`).
+    pub des_threads: u32,
 }
 
 impl DesConfig {
@@ -93,6 +101,7 @@ impl DesConfig {
             sched_path: SchedPath::default(),
             record_assignments: true,
             stream_interval: 0.0,
+            des_threads: 1,
         }
     }
 
@@ -127,6 +136,13 @@ impl DesConfig {
     /// (seconds; ≤ 0 keeps it off).
     pub fn with_stream_interval(mut self, interval_s: f64) -> Self {
         self.stream_interval = interval_s;
+        self
+    }
+
+    /// Run on the parallel DES core with `n` worker threads (1 = the
+    /// sequential event loop).
+    pub fn with_threads(mut self, n: u32) -> Self {
+        self.des_threads = n;
         self
     }
 }
@@ -167,6 +183,42 @@ pub struct DesResult {
     /// Observability stream records (`interval` + `switch`, virtual-time
     /// order) when [`DesConfig::stream_interval`] > 0; empty otherwise.
     pub stream: Vec<Json>,
+    /// Parallel-core execution summary when the run used
+    /// `--des-threads > 1`; `None` on the classic sequential loop.
+    pub pdes: Option<PdesSummary>,
+}
+
+/// Executor-side accounting of a sharded ([`pdes`]) run, condensed from
+/// [`pdes::PdesReport`] for the result/JSON surface.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PdesSummary {
+    /// Shards the simulation was partitioned into (fixed by the partition
+    /// geometry, never by the thread count).
+    pub shards: u32,
+    /// Worker threads actually used (clamped to the shard count).
+    pub threads: u32,
+    /// Conservative synchronization rounds executed.
+    pub rounds: u64,
+    /// The conservative lookahead Δ, ns (smallest cross-shard latency).
+    pub lookahead_ns: u64,
+    /// Shard-rounds that idled at the horizon with pending events (summed
+    /// over shards) — the conservative-sync cost signal.
+    pub horizon_stalls: u64,
+    /// Deepest one-round inbound mailbox backlog observed on any shard.
+    pub mailbox_depth_max: u64,
+}
+
+impl PdesSummary {
+    pub(crate) fn from_report(r: &pdes::PdesReport) -> Self {
+        PdesSummary {
+            shards: r.shards as u32,
+            threads: r.threads as u32,
+            rounds: r.rounds,
+            lookahead_ns: r.lookahead_ns,
+            horizon_stalls: r.horizon_stalls.iter().sum(),
+            mailbox_depth_max: r.mailbox_depth_max.iter().copied().max().unwrap_or(0),
+        }
+    }
 }
 
 impl DesResult {
@@ -229,11 +281,20 @@ pub fn simulate(cfg: &DesConfig) -> anyhow::Result<DesResult> {
              the two-phase protocol when adaptive) or drop --adaptive"
         );
     }
+    anyhow::ensure!(
+        !(cfg.des_threads > 1 && cfg.stream_interval > 0.0),
+        "--stream-metrics needs the sequential event loop (one global \
+         virtual-time order); drop --des-threads or the stream flags"
+    );
     if cfg.model == ExecutionModel::HierDca {
         // The hierarchical protocol has its own event loop (a recursive
         // tree of master service personas over the latency tiers, any
-        // depth) — see `crate::hier`.
+        // depth) — see `crate::hier`. It dispatches to its sharded PDES
+        // form itself when `des_threads > 1`.
         return crate::hier::simulate_hier(cfg);
+    }
+    if cfg.des_threads > 1 {
+        return simulate_flat_pdes(cfg);
     }
     let mut sim = Sim::new(cfg);
     sim.run();
@@ -395,6 +456,28 @@ struct Sim<'a> {
     sampler: Option<Sampler>,
     stream: Vec<Json>,
     last_tick_chunks: u64,
+    // parallel-core sharding (None ⇒ the classic sequential loop)
+    shard: Option<ShardSpan>,
+    /// Cross-shard sends staged during the current window:
+    /// `(destination shard, arrival time, event)`.
+    outbound: Vec<(u32, u64, Ev)>,
+}
+
+/// One flat-PDES shard's identity: which shard this [`Sim`] instance is
+/// and the (shared) rank → shard map. Shards group whole *nodes* — the
+/// flat machine's only latency boundary — contiguously, so every
+/// cross-shard message crosses at least the inter-node latency class
+/// (the conservative lookahead) and rank order equals shard order.
+#[derive(Debug, Clone)]
+struct ShardSpan {
+    id: u32,
+    of_rank: std::sync::Arc<Vec<u32>>,
+}
+
+impl ShardSpan {
+    fn shard_of(&self, rank: u32) -> u32 {
+        self.of_rank[rank as usize]
+    }
 }
 
 impl<'a> Sim<'a> {
@@ -457,6 +540,49 @@ impl<'a> Sim<'a> {
             sampler: Sampler::from_interval_s(cfg.stream_interval),
             stream: Vec::new(),
             last_tick_chunks: 0,
+            shard: None,
+            outbound: Vec::new(),
+        }
+    }
+
+    /// Construct one shard of a partitioned run (see [`simulate_flat_pdes`]).
+    fn new_shard(cfg: &'a DesConfig, span: ShardSpan) -> Self {
+        let mut sim = Sim::new(cfg);
+        sim.shard = Some(span);
+        sim
+    }
+
+    /// Does this instance own rank `r`'s state and events? Always true on
+    /// the sequential loop.
+    fn owns(&self, r: u32) -> bool {
+        match &self.shard {
+            None => true,
+            Some(s) => s.shard_of(r) == s.id,
+        }
+    }
+
+    /// The rank whose resources process an event — rank 0 for everything
+    /// addressed at the coordinator's CPU or NIC, the worker otherwise.
+    fn dest_rank(ev: &Ev) -> u32 {
+        match ev {
+            Ev::SvcArrive(_) | Ev::Rank0Free | Ev::NicArrive { .. } | Ev::NicFree => 0,
+            Ev::Reply { w, .. } | Ev::CalcDone { w, .. } | Ev::ExecDone { w } => *w,
+        }
+    }
+
+    /// Schedule `ev` at `at`: locally when this instance owns the
+    /// destination rank, staged for cross-shard delivery otherwise.
+    fn route(&mut self, at: u64, ev: Ev) {
+        match &self.shard {
+            None => self.heap.push(at, ev),
+            Some(s) => {
+                let dst = s.shard_of(Self::dest_rank(&ev));
+                if dst == s.id {
+                    self.heap.push(at, ev);
+                } else {
+                    self.outbound.push((dst, at, ev));
+                }
+            }
         }
     }
 
@@ -569,7 +695,11 @@ impl<'a> Sim<'a> {
 
     // -- bootstrap ---------------------------------------------------------
 
-    fn run(&mut self) {
+    /// Emit each rank's opening move. On a shard, only the moves that
+    /// *originate* on owned ranks run here (their request-send bookkeeping
+    /// and message counting belong to the owning shard); the resulting
+    /// arrivals route to their destination shard like any other send.
+    fn bootstrap(&mut self) {
         match self.cfg.model {
             ExecutionModel::Dca if self.lockfree => {
                 // Lock-free fast path: no coordinator personality at all —
@@ -577,9 +707,11 @@ impl<'a> Sim<'a> {
                 // atomic ops at the ledger host (rank 0's memory). Rank 0
                 // still computes (it is Dca) unless configured dedicated.
                 for w in 1..self.p() {
-                    self.send_fused(w, 0);
+                    if self.owns(w) {
+                        self.send_fused(w, 0);
+                    }
                 }
-                if self.rank0_computes() {
+                if self.rank0_computes() && self.owns(0) {
                     self.send_fused(0, 0);
                 }
                 self.own = OwnState::Finished;
@@ -587,16 +719,22 @@ impl<'a> Sim<'a> {
             ExecutionModel::Cca | ExecutionModel::Dca => {
                 // Workers 1..P send their first request; rank 0 kicks itself.
                 for w in 1..self.p() {
-                    self.worker_send_request(w, 0);
+                    if self.owns(w) {
+                        self.worker_send_request(w, 0);
+                    }
                 }
-                self.heap.push(0, Ev::Rank0Free);
+                if self.owns(0) {
+                    self.heap.push(0, Ev::Rank0Free);
+                }
                 if !self.rank0_computes() {
                     self.own = OwnState::Finished;
                 }
             }
             ExecutionModel::DcaRma => {
                 for w in 0..self.p() {
-                    self.send_nic(w, RmaOp::Reserve, 0);
+                    if self.owns(w) {
+                        self.send_nic(w, RmaOp::Reserve, 0);
+                    }
                 }
                 self.own = OwnState::Finished;
             }
@@ -604,6 +742,10 @@ impl<'a> Sim<'a> {
                 unreachable!("HierDca is dispatched to hier::simulate_hier")
             }
         }
+    }
+
+    fn run(&mut self) {
+        self.bootstrap();
         while let Some((t, ev)) = self.heap.pop() {
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;
@@ -686,25 +828,25 @@ impl<'a> Sim<'a> {
     fn send_svc(&mut self, from: u32, task: SvcTask) {
         self.count_msg(from);
         let at = self.now + self.lat_ns(from, 0);
-        self.heap.push(at, Ev::SvcArrive(task));
+        self.route(at, Ev::SvcArrive(task));
     }
 
     fn send_reply(&mut self, w: u32, reply: Reply, at: u64) {
         self.count_msg(w);
-        self.heap.push(at + self.lat_ns(0, w), Ev::Reply { w, reply });
+        self.route(at + self.lat_ns(0, w), Ev::Reply { w, reply });
     }
 
     fn send_nic(&mut self, w: u32, op: RmaOp, delay_extra: u64) {
         self.rma_ops += 1;
         let at = self.now + delay_extra + self.lat_ns(w, 0);
-        self.heap.push(at, Ev::NicArrive { w, op });
+        self.route(at, Ev::NicArrive { w, op });
     }
 
     /// Issue one fused lock-free grant op (not a message, not an RMA op —
     /// counted as a fast grant when it lands work).
     fn send_fused(&mut self, w: u32, delay_extra: u64) {
         let at = self.now + delay_extra + self.lat_ns(w, 0);
-        self.heap.push(at, Ev::NicArrive { w, op: RmaOp::Fused });
+        self.route(at, Ev::NicArrive { w, op: RmaOp::Fused });
     }
 
     fn worker_send_request(&mut self, w: u32, extra_ns: u64) {
@@ -719,7 +861,7 @@ impl<'a> Sim<'a> {
         };
         self.count_msg(w);
         let at = self.now + extra_ns + self.lat_ns(w, 0);
-        self.heap.push(at, Ev::SvcArrive(task));
+        self.route(at, Ev::SvcArrive(task));
     }
 
     // -- rank 0's serial CPU -------------------------------------------------
@@ -1013,7 +1155,7 @@ impl<'a> Sim<'a> {
                         self.grant(w, a);
                         let start_exec = self.now + dur + self.lat_ns(0, w);
                         let exec = self.exec_ns(w, a);
-                        self.heap.push(start_exec + exec, Ev::ExecDone { w });
+                        self.route(start_exec + exec, Ev::ExecDone { w });
                     }
                     None => {
                         self.workers[w as usize].finish_ns = self.now + dur + self.lat_ns(0, w);
@@ -1039,7 +1181,7 @@ impl<'a> Sim<'a> {
                         self.grant(w, a);
                         let start_exec = self.now + dur + self.lat_ns(0, w);
                         let exec = self.exec_ns(w, a);
-                        self.heap.push(start_exec + exec, Ev::ExecDone { w });
+                        self.route(start_exec + exec, Ev::ExecDone { w });
                     }
                     None => {
                         self.workers[w as usize].finish_ns = self.now + dur + self.lat_ns(0, w);
@@ -1094,7 +1236,180 @@ impl<'a> Sim<'a> {
             events: self.events,
             switch_events: self.switch_events,
             stream,
+            pdes: None,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flat parallel core
+
+/// One shard of the flat engine under the [`pdes`] executor: the identical
+/// event-loop code over the ranks this instance owns, with cross-shard
+/// arrivals exchanged through the conservative rounds.
+struct FlatShard<'a> {
+    sim: Sim<'a>,
+}
+
+impl<'a> pdes::Shard for FlatShard<'a> {
+    type Msg = Ev;
+
+    fn next_at(&self) -> Option<u64> {
+        self.sim.heap.next_at()
+    }
+
+    fn advance(&mut self, horizon: u64, outbox: &mut pdes::Outbox<Ev>) {
+        while self.sim.heap.next_at().is_some_and(|t| t < horizon) {
+            let (t, ev) = self.sim.heap.pop().expect("probed non-empty");
+            self.sim.now = t;
+            self.sim.events += 1;
+            self.sim.dispatch(ev);
+        }
+        for (dst, at, ev) in self.sim.outbound.drain(..) {
+            outbox.send(dst as usize, at, ev);
+        }
+    }
+
+    fn deliver(&mut self, at: u64, msg: Ev) {
+        self.sim.heap.push(at, msg);
+    }
+}
+
+/// Upper bound on flat shard groups. Each shard is a full [`Sim`] whose
+/// per-rank arrays span the whole machine (only the owned slice is ever
+/// touched), so the bound caps the O(shards × P) state duplication while
+/// staying above any realistic `--des-threads`. Geometry-derived and
+/// thread-independent, as the determinism contract requires.
+const FLAT_SHARD_GROUPS_MAX: u32 = 8;
+
+/// Smallest latency any cross-shard (≡ cross-node) message pays — the
+/// conservative lookahead of the flat partition.
+fn flat_lookahead_ns(cluster: &ClusterConfig) -> u64 {
+    let mut m = cluster.inter_node_latency;
+    if cluster.racks > 1 {
+        m = m.min(cluster.inter_rack_latency);
+    }
+    ns(m.max(0.0))
+}
+
+/// The flat engine's sharded (PDES) form: whole nodes are grouped into at
+/// most [`FLAT_SHARD_GROUPS_MAX`] contiguous shards (rank 0's coordinator
+/// resources live in shard 0 with the rest of node 0), each shard runs
+/// its own calendar queue, and every cross-shard arrival — always a
+/// cross-node message, so never earlier than the lookahead — is exchanged
+/// through [`pdes::run_conservative`]. See `docs/pdes.md`.
+fn simulate_flat_pdes(cfg: &DesConfig) -> anyhow::Result<DesResult> {
+    anyhow::ensure!(
+        !cfg.hier.adaptive.enabled,
+        "--adaptive needs the sequential event loop (the rebinding \
+         coordinator slot is global state); drop --des-threads or --adaptive"
+    );
+    let p = cfg.params.p;
+    let nodes = cfg.cluster.nodes.max(1);
+    let shards_n = nodes.min(FLAT_SHARD_GROUPS_MAX);
+    if shards_n > 1 {
+        anyhow::ensure!(
+            flat_lookahead_ns(&cfg.cluster) > 0,
+            "zero cross-node latency leaves no conservative lookahead; \
+             run --des-threads 1"
+        );
+    }
+    let topo = Topology::new(&cfg.cluster);
+    let of_rank: std::sync::Arc<Vec<u32>> = std::sync::Arc::new(
+        (0..p)
+            .map(|r| ((topo.node_of(r) as u64 * shards_n as u64) / nodes as u64) as u32)
+            .collect(),
+    );
+    let mut shards: Vec<FlatShard<'_>> = (0..shards_n)
+        .map(|id| {
+            let span = ShardSpan { id, of_rank: of_rank.clone() };
+            FlatShard { sim: Sim::new_shard(cfg, span) }
+        })
+        .collect();
+    // Bootstrap each shard; staged cross-shard arrivals deliver in sender
+    // order, which IS the sequential bootstrap's ascending-rank push order
+    // because shards group contiguous ranks.
+    let mut staged = Vec::with_capacity(shards.len());
+    for s in shards.iter_mut() {
+        s.sim.bootstrap();
+        let mut out = pdes::Outbox::new(shards_n as usize);
+        for (dst, at, ev) in s.sim.outbound.drain(..) {
+            out.send(dst as usize, at, ev);
+        }
+        staged.push(out);
+    }
+    pdes::deliver_staged(&mut shards, staged);
+    let (shards, report) =
+        pdes::run_conservative(shards, flat_lookahead_ns(&cfg.cluster), cfg.des_threads);
+    Ok(merge_flat_shards(cfg, shards, &report))
+}
+
+/// Combine the per-shard states into the one [`DesResult`] the sequential
+/// loop would have produced: each quantity has exactly one writer (the
+/// owning shard; rank 0's coordinator-side writes all live in shard 0),
+/// so the merge is sums of disjoint counters, element-wise maxima of
+/// write-once finish times, and shard 0's grant log.
+fn merge_flat_shards(
+    cfg: &DesConfig,
+    shards: Vec<FlatShard<'_>>,
+    report: &pdes::PdesReport,
+) -> DesResult {
+    let p = cfg.params.p as usize;
+    let mut finish_ns = vec![0u64; p];
+    let mut wait = 0.0f64;
+    let mut messages = 0u64;
+    let mut intra = 0u64;
+    let mut inter = 0u64;
+    let mut events = 0u64;
+    let mut rma_ops = 0u64;
+    let mut fast_grants = 0u64;
+    let mut chunks = 0u64;
+    let mut assignments = Vec::new();
+    let mut rank0_service_ns = 0u64;
+    let mut rank0_finish_ns = 0u64;
+    for (i, s) in shards.iter().enumerate() {
+        let sim = &s.sim;
+        for (r, ws) in sim.workers.iter().enumerate() {
+            // Worker finishes are written by the owning shard and — on the
+            // NIC paths — once more by shard 0 at the final empty-queue op;
+            // the later (larger) write is the sequential last-write.
+            finish_ns[r] = finish_ns[r].max(ws.finish_ns);
+            wait += secs(ws.wait_ns);
+        }
+        messages += sim.messages;
+        intra += sim.intra_msgs;
+        inter += sim.inter_msgs;
+        events += sim.events;
+        rma_ops += sim.rma_ops;
+        fast_grants += sim.fast_grants;
+        chunks += sim.chunks_granted;
+        if i == 0 {
+            rank0_service_ns = sim.rank0_service_ns;
+            rank0_finish_ns = sim.rank0_finish_ns;
+        }
+    }
+    if let Some(first) = shards.into_iter().next() {
+        assignments = first.sim.assignments;
+    }
+    let mut finish: Vec<f64> = finish_ns.iter().map(|&t| secs(t)).collect();
+    if cfg.model != ExecutionModel::DcaRma {
+        finish[0] = finish[0].max(secs(rank0_finish_ns));
+    }
+    let stats = LoopStats::from_finish_times(&finish, chunks, wait, messages);
+    DesResult {
+        stats,
+        finish,
+        rank0_service_busy: secs(rank0_service_ns),
+        assignments,
+        rma_ops,
+        intra_node_messages: intra,
+        inter_node_messages: inter,
+        level_messages: vec![messages],
+        fast_grants,
+        events,
+        switch_events: Vec::new(),
+        stream: Vec::new(),
+        pdes: Some(PdesSummary::from_report(report)),
     }
 }
 

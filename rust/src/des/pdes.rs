@@ -1,0 +1,381 @@
+//! Parallel DES core (PDES): a **conservative, horizon-synchronized**
+//! round executor over statically partitioned shards.
+//!
+//! Each shard owns a disjoint slice of the simulated machine (a
+//! `LevelSpec` subtree in the hierarchical engine, a worker rank range in
+//! the flat one) and runs its own calendar queue independently. Shards
+//! synchronize only at horizon boundaries:
+//!
+//! 1. every shard publishes its earliest pending event time;
+//! 2. the global minimum (GVT) plus the **lookahead** — the smallest
+//!    cross-shard latency class — bounds a window `[GVT, GVT + Δ)`;
+//! 3. shards process all local events inside the window in parallel,
+//!    capturing cross-shard sends in per-pair SPSC mailboxes;
+//! 4. after a barrier, each shard drains its inbound mailboxes in sender
+//!    order and the next round begins.
+//!
+//! Conservatism: a message created at local time `t ≥ GVT` travels a
+//! cross-shard link of latency `≥ Δ`, so it arrives at `t + lat ≥ GVT + Δ`
+//! — never inside the window that created it. Delivering all mailboxes at
+//! round start therefore never delivers into a shard's past.
+//!
+//! **Determinism is structural, not scheduled.** The shard count is fixed
+//! by the partition geometry (never by the thread count), each shard's
+//! event order is its own `(time, seq)` calendar order, window boundaries
+//! are a pure function of shard states, and mailbox drains run in
+//! `(sender shard, FIFO)` order — so the outcome is a function of the
+//! partition alone. Threads only decide *which core* runs a shard's
+//! window; `--des-threads 1` and `--des-threads 8` walk bit-identical
+//! per-shard histories.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Barrier;
+
+/// One shard of a partitioned simulation.
+///
+/// `advance` must process **every** local event strictly before `horizon`
+/// (including events it creates inside the window) and route any event
+/// addressed to another shard through the outbox instead of its own queue.
+pub trait Shard: Send {
+    /// A cross-shard message: the destination shard reinjects it into its
+    /// calendar queue at the carried arrival time.
+    type Msg: Send;
+
+    /// Earliest pending local event time (`None` when the queue is empty).
+    fn next_at(&self) -> Option<u64>;
+
+    /// Process all local events with `time < horizon`.
+    fn advance(&mut self, horizon: u64, outbox: &mut Outbox<Self::Msg>);
+
+    /// Inject a cross-shard arrival at absolute time `at`.
+    fn deliver(&mut self, at: u64, msg: Self::Msg);
+}
+
+/// Per-sender staging area for cross-shard messages: one FIFO lane per
+/// destination shard, appended during `advance`, drained by the executor
+/// at the barrier.
+pub struct Outbox<M> {
+    lanes: Vec<Vec<(u64, M)>>,
+}
+
+impl<M> Outbox<M> {
+    pub fn new(shards: usize) -> Self {
+        Outbox { lanes: (0..shards).map(|_| Vec::new()).collect() }
+    }
+
+    /// Stage a message for shard `dst`, arriving at absolute time `at`.
+    pub fn send(&mut self, dst: usize, at: u64, msg: M) {
+        self.lanes[dst].push((at, msg));
+    }
+
+    fn is_empty(&self) -> bool {
+        self.lanes.iter().all(Vec::is_empty)
+    }
+}
+
+/// A single-producer / single-consumer mailbox for one (sender, receiver)
+/// shard pair. There are no internal locks: the round protocol itself is
+/// the synchronization. The sender's thread appends only during the
+/// advance phase, the receiver's thread drains only during the delivery
+/// phase, and a [`Barrier`] separates the phases (barrier waits establish
+/// the happens-before edge), so the two sides never touch the cell
+/// concurrently.
+struct SpscMailbox<M>(UnsafeCell<Vec<(u64, M)>>);
+
+// Safety: see the type docs — phase discipline guarantees exclusive
+// access, the barrier publishes writes.
+unsafe impl<M: Send> Sync for SpscMailbox<M> {}
+
+impl<M> SpscMailbox<M> {
+    fn new() -> Self {
+        SpscMailbox(UnsafeCell::new(Vec::new()))
+    }
+
+    /// Safety: caller must hold phase-exclusive access (sender in the
+    /// advance phase, receiver in the delivery phase).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get(&self) -> &mut Vec<(u64, M)> {
+        &mut *self.0.get()
+    }
+}
+
+/// A shard plus its executor-side counters. Only the owning thread ever
+/// touches a cell (static shard→thread map), so the `UnsafeCell` wrapper
+/// below is exclusive by construction.
+struct WorkerShard<S> {
+    shard: S,
+    /// Rounds where this shard had pending events but none inside the
+    /// window — it idled at the barrier while other shards progressed.
+    horizon_stalls: u64,
+    /// Largest number of messages drained from this shard's inbound
+    /// mailboxes in one round.
+    mailbox_depth_max: u64,
+    /// Total cross-shard messages delivered to this shard.
+    delivered: u64,
+}
+
+struct ShardCell<S>(UnsafeCell<WorkerShard<S>>);
+
+// Safety: each cell is read/written only by its statically assigned
+// thread; barriers order the phases.
+unsafe impl<S: Send> Sync for ShardCell<S> {}
+
+impl<S> ShardCell<S> {
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get(&self) -> &mut WorkerShard<S> {
+        &mut *self.0.get()
+    }
+}
+
+/// Executor-level accounting of one PDES run — the source of the
+/// per-shard `horizon_stalls` / `mailbox_depth_max` observability fields.
+#[derive(Debug, Clone)]
+pub struct PdesReport {
+    pub shards: usize,
+    pub threads: usize,
+    pub lookahead_ns: u64,
+    /// Synchronization rounds executed.
+    pub rounds: u64,
+    /// Per-shard horizon-stall counts (see [`WorkerShard::horizon_stalls`]).
+    pub horizon_stalls: Vec<u64>,
+    /// Per-shard max messages drained in one round.
+    pub mailbox_depth_max: Vec<u64>,
+    /// Total cross-shard messages routed.
+    pub messages_routed: u64,
+}
+
+/// Deliver pre-round (bootstrap) outboxes: sender-order FIFO per
+/// destination, exactly like the in-round delivery phase.
+pub fn deliver_staged<S: Shard>(shards: &mut [S], mut staged: Vec<Outbox<S::Msg>>) {
+    for dst in 0..shards.len() {
+        for src_outbox in staged.iter_mut() {
+            for (at, msg) in src_outbox.lanes[dst].drain(..) {
+                shards[dst].deliver(at, msg);
+            }
+        }
+    }
+}
+
+/// Run the conservative round loop to completion and hand the shards
+/// back together with the executor report.
+///
+/// `threads` is clamped to `[1, shards]`; the result is independent of it
+/// by construction. `lookahead_ns` must be positive whenever more than
+/// one shard exists (a zero-latency cross-shard link admits no
+/// conservative window — partition callers must collapse to one shard).
+pub fn run_conservative<S: Shard>(
+    shards: Vec<S>,
+    lookahead_ns: u64,
+    threads: u32,
+) -> (Vec<S>, PdesReport) {
+    let s_count = shards.len();
+    assert!(s_count > 0, "PDES needs at least one shard");
+    assert!(
+        s_count == 1 || lookahead_ns > 0,
+        "conservative PDES needs a positive lookahead across shards"
+    );
+    let threads = (threads.max(1) as usize).min(s_count);
+
+    let cells: Vec<ShardCell<S>> = shards
+        .into_iter()
+        .map(|shard| {
+            ShardCell(UnsafeCell::new(WorkerShard {
+                shard,
+                horizon_stalls: 0,
+                mailbox_depth_max: 0,
+                delivered: 0,
+            }))
+        })
+        .collect();
+    let next_slots: Vec<AtomicU64> = (0..s_count).map(|_| AtomicU64::new(u64::MAX)).collect();
+    let mailbox: Vec<Vec<SpscMailbox<S::Msg>>> = (0..s_count)
+        .map(|_| (0..s_count).map(|_| SpscMailbox::new()).collect())
+        .collect();
+    let barrier = Barrier::new(threads);
+    let rounds = AtomicU64::new(0);
+
+    std::thread::scope(|scope| {
+        for tid in 1..threads {
+            let cells = &cells;
+            let next_slots = &next_slots;
+            let mailbox = &mailbox;
+            let barrier = &barrier;
+            let rounds = &rounds;
+            scope.spawn(move || {
+                worker_loop(tid, threads, lookahead_ns, barrier, next_slots, cells, mailbox, rounds)
+            });
+        }
+        worker_loop(0, threads, lookahead_ns, &barrier, &next_slots, &cells, &mailbox, &rounds);
+    });
+
+    let mut shards = Vec::with_capacity(s_count);
+    let mut horizon_stalls = Vec::with_capacity(s_count);
+    let mut mailbox_depth_max = Vec::with_capacity(s_count);
+    let mut messages_routed = 0;
+    for cell in cells {
+        let ws = cell.0.into_inner();
+        horizon_stalls.push(ws.horizon_stalls);
+        mailbox_depth_max.push(ws.mailbox_depth_max);
+        messages_routed += ws.delivered;
+        shards.push(ws.shard);
+    }
+    let report = PdesReport {
+        shards: s_count,
+        threads,
+        lookahead_ns,
+        rounds: rounds.load(Ordering::Relaxed),
+        horizon_stalls,
+        mailbox_depth_max,
+        messages_routed,
+    };
+    (shards, report)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<S: Shard>(
+    tid: usize,
+    threads: usize,
+    lookahead_ns: u64,
+    barrier: &Barrier,
+    next_slots: &[AtomicU64],
+    cells: &[ShardCell<S>],
+    mailbox: &[Vec<SpscMailbox<S::Msg>>],
+    rounds: &AtomicU64,
+) {
+    let s_count = cells.len();
+    let mut outbox = Outbox::new(s_count);
+    loop {
+        // Phase A — publish each owned shard's earliest event time.
+        for j in (tid..s_count).step_by(threads) {
+            let ws = unsafe { cells[j].get() };
+            next_slots[j].store(ws.shard.next_at().unwrap_or(u64::MAX), Ordering::Relaxed);
+        }
+        barrier.wait();
+
+        // Every thread derives the same GVT and horizon from the slots.
+        let gvt = next_slots.iter().map(|a| a.load(Ordering::Relaxed)).min().unwrap_or(u64::MAX);
+        if gvt == u64::MAX {
+            break;
+        }
+        let horizon = if s_count == 1 { u64::MAX } else { gvt.saturating_add(lookahead_ns) };
+
+        // Phase B — advance owned shards through the window, staging
+        // cross-shard sends into this shard's outbound mailbox row.
+        for j in (tid..s_count).step_by(threads) {
+            let ws = unsafe { cells[j].get() };
+            if ws.shard.next_at().is_some_and(|t| t >= horizon) {
+                ws.horizon_stalls += 1;
+            }
+            ws.shard.advance(horizon, &mut outbox);
+            if !outbox.is_empty() {
+                for (dst, lane) in outbox.lanes.iter_mut().enumerate() {
+                    if !lane.is_empty() {
+                        // Sender side of the (j, dst) SPSC pair.
+                        unsafe { mailbox[j][dst].get() }.append(lane);
+                    }
+                }
+            }
+        }
+        barrier.wait();
+
+        // Phase C — drain inbound mailboxes in sender order.
+        for j in (tid..s_count).step_by(threads) {
+            let ws = unsafe { cells[j].get() };
+            let mut depth = 0u64;
+            for row in mailbox.iter() {
+                // Receiver side of the (src, j) SPSC pair.
+                let inbox = unsafe { row[j].get() };
+                depth += inbox.len() as u64;
+                for (at, msg) in inbox.drain(..) {
+                    ws.shard.deliver(at, msg);
+                }
+            }
+            ws.mailbox_depth_max = ws.mailbox_depth_max.max(depth);
+            ws.delivered += depth;
+        }
+        if tid == 0 {
+            rounds.fetch_add(1, Ordering::Relaxed);
+        }
+        // Close the round: nobody may start the next advance (and write
+        // mailboxes) until every drain above has finished.
+        barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::des::heap::EventHeap;
+
+    /// Toy shard: relays a token to its peer `hops` times over a
+    /// 100 ns link, doing 7 ns of "local work" per hop.
+    struct PingShard {
+        id: usize,
+        heap: EventHeap<u64>,
+        hops_left: u64,
+        log: Vec<(u64, u64)>,
+    }
+
+    impl Shard for PingShard {
+        type Msg = u64;
+
+        fn next_at(&self) -> Option<u64> {
+            self.heap.next_at()
+        }
+
+        fn advance(&mut self, horizon: u64, outbox: &mut Outbox<u64>) {
+            while self.heap.next_at().is_some_and(|t| t < horizon) {
+                let (now, token) = self.heap.pop().unwrap();
+                self.log.push((now, token));
+                if self.hops_left > 0 {
+                    self.hops_left -= 1;
+                    outbox.send(1 - self.id, now + 7 + 100, token + 1);
+                }
+            }
+        }
+
+        fn deliver(&mut self, at: u64, msg: u64) {
+            self.heap.push(at, msg);
+        }
+    }
+
+    fn ping_run(threads: u32) -> (Vec<Vec<(u64, u64)>>, PdesReport) {
+        let mut shards: Vec<PingShard> = (0..2)
+            .map(|id| PingShard { id, heap: EventHeap::new(), hops_left: 20, log: Vec::new() })
+            .collect();
+        shards[0].heap.push(0, 0);
+        let (shards, report) = run_conservative(shards, 100, threads);
+        (shards.into_iter().map(|s| s.log).collect(), report)
+    }
+
+    #[test]
+    fn ping_pong_is_thread_count_invariant() {
+        let (logs1, r1) = ping_run(1);
+        let (logs2, r2) = ping_run(2);
+        assert_eq!(logs1, logs2, "logs must not depend on thread count");
+        assert_eq!(r1.rounds, r2.rounds);
+        assert_eq!(r1.messages_routed, r2.messages_routed);
+        // 40 hops total (20 per side), alternating shards, 107 ns apart.
+        assert_eq!(logs1[0].len() + logs1[1].len(), 41);
+        assert_eq!(logs1[0][0], (0, 0));
+        assert_eq!(logs1[1][0], (107, 1));
+        assert_eq!(r1.messages_routed, 40);
+        assert!(r1.horizon_stalls.iter().sum::<u64>() > 0, "the idle side stalls");
+        assert_eq!(r1.mailbox_depth_max, vec![1, 1]);
+    }
+
+    #[test]
+    fn staged_bootstrap_delivery_is_sender_ordered() {
+        let mut shards: Vec<PingShard> = (0..2)
+            .map(|id| PingShard { id, heap: EventHeap::new(), hops_left: 0, log: Vec::new() })
+            .collect();
+        let mut o0 = Outbox::new(2);
+        let mut o1 = Outbox::new(2);
+        o1.send(0, 5, 99); // later sender, same time: delivered second
+        o0.send(0, 5, 42);
+        deliver_staged(&mut shards, vec![o0, o1]);
+        let (shards, _report) = run_conservative(shards, 100, 1);
+        assert_eq!(shards[0].log, vec![(5, 42), (5, 99)]);
+    }
+}

@@ -62,11 +62,12 @@
 pub mod protocol;
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::config::{ClusterConfig, ExecutionModel, HierParams, LevelPlan, SchedPath, WatermarkMode};
 use crate::coordinator::protocol::{AfInfo, PerfReport};
 use crate::des::heap::{ns, secs, EventHeap};
-use crate::des::{min_latency_ns, DesConfig, DesResult};
+use crate::des::{min_latency_ns, pdes, DesConfig, DesResult, PdesSummary};
 use crate::metrics::LoopStats;
 use crate::obs::stream::{self, IntervalSample, Sampler};
 use crate::report::json::Json;
@@ -111,6 +112,14 @@ pub fn simulate_hier(cfg: &DesConfig) -> anyhow::Result<DesResult> {
         "dedicated masters (break_after = 0) need a leaf fan-out ≥ 2, \
          otherwise no rank executes iterations"
     );
+    anyhow::ensure!(
+        !(cfg.hier.master_lockfree && cfg.hier.adaptive.enabled),
+        "--master-lockfree cannot run with --adaptive: a rebind would race \
+         in-flight fused master fetches"
+    );
+    if cfg.des_threads > 1 {
+        return simulate_hier_pdes(cfg, &plan);
+    }
     let mut sim = HierSim::new(cfg, &plan);
     sim.run();
     Ok(sim.into_result())
@@ -174,6 +183,12 @@ enum Ev {
     AtomArrive { s: u32, w: u32 },
     /// Group `s`'s atomic unit finished its current op.
     AtomFree { s: u32 },
+    /// Master-tier fast path (`--master-lockfree`): child master `from`'s
+    /// fused fetch arrives at persona `(d, j)`'s atomic unit — the parent
+    /// ledger's cache line, bypassing the parent's CPU.
+    MasterAtomArrive { d: u32, j: u32, from: u32 },
+    /// Persona `(d, j)`'s atomic unit finished its current op.
+    MasterAtomFree { d: u32, j: u32 },
 }
 
 // ---------------------------------------------------------------------------
@@ -287,6 +302,14 @@ struct HierSim<'a> {
     /// Per-leaf-group atomic unit: pending fused ops + busy flag.
     atom_queue: Vec<VecDeque<u32>>,
     atom_busy: Vec<bool>,
+    /// Master-tier fast path per protocol level `d < k-1`
+    /// (`--master-lockfree` + a closed-form level technique): parent
+    /// fetches become fused ops at the parent persona's atomic unit.
+    master_fast: Vec<bool>,
+    /// Per-persona master-tier atomic units (`[d][j]`, levels `0..k-1`):
+    /// pending fused fetches (child master indices) + busy flag.
+    matom_queue: Vec<Vec<VecDeque<u32>>>,
+    matom_busy: Vec<Vec<bool>>,
     fast_grants: u64,
     events: u64,
     /// Technique-slot rebinds, in decision order.
@@ -298,6 +321,20 @@ struct HierSim<'a> {
     sampler: Option<Sampler>,
     stream: Vec<Json>,
     last_tick_chunks: u64,
+    // parallel-core sharding (None ⇒ the classic sequential loop)
+    shard: Option<HierShardSpan>,
+    /// Cross-shard sends staged during the current window:
+    /// `(destination shard, arrival time, event)`.
+    outbound: Vec<(u32, u64, Ev)>,
+}
+
+/// A shard's identity in the sharded (PDES) run. Shards group *contiguous
+/// level-1 subtrees* — the only boundary whose traffic is exclusively the
+/// level-0 protocol — so `of_server[s]` maps every hosting server to its
+/// owning shard. The grouping is geometry-derived and thread-independent.
+struct HierShardSpan {
+    id: u32,
+    of_server: Arc<Vec<u32>>,
 }
 
 impl<'a> HierSim<'a> {
@@ -364,6 +401,22 @@ impl<'a> HierSim<'a> {
             })
             .collect();
         let n_servers = plan.masters_at(k - 1) as usize;
+        // Master-tier fast path per level: opt-in, lock-free sched path,
+        // closed-form technique, and never adaptive (rebinds would race the
+        // fused fetches the same way measurement-coupled leaves would).
+        let master_fast: Vec<bool> = (0..k)
+            .map(|d| {
+                d < k - 1
+                    && cfg.hier.master_lockfree
+                    && cfg.sched_path.wants_lockfree()
+                    && techs[d].supports_fast_path()
+                    && !cfg.hier.adaptive.enabled
+            })
+            .collect();
+        let matom_queue: Vec<Vec<VecDeque<u32>>> =
+            (0..k).map(|d| vec![VecDeque::new(); plan.masters_at(d) as usize]).collect();
+        let matom_busy: Vec<Vec<bool>> =
+            (0..k).map(|d| vec![false; plan.masters_at(d) as usize]).collect();
         HierSim {
             cfg,
             topo: Topology::new(&cfg.cluster),
@@ -387,6 +440,9 @@ impl<'a> HierSim<'a> {
             fast_group: vec![fast_initial; n_servers],
             atom_queue: vec![VecDeque::new(); n_servers],
             atom_busy: vec![false; n_servers],
+            master_fast,
+            matom_queue,
+            matom_busy,
             fast_grants: 0,
             events: 0,
             switch_events: Vec::new(),
@@ -394,6 +450,55 @@ impl<'a> HierSim<'a> {
             sampler: Sampler::from_interval_s(cfg.stream_interval),
             stream: Vec::new(),
             last_tick_chunks: 0,
+            shard: None,
+            outbound: Vec::new(),
+        }
+    }
+
+    fn new_shard(cfg: &'a DesConfig, plan: &LevelPlan, span: HierShardSpan) -> Self {
+        let mut sim = HierSim::new(cfg, plan);
+        sim.shard = Some(span);
+        sim
+    }
+
+    fn owns_server(&self, s: u32) -> bool {
+        match &self.shard {
+            None => true,
+            Some(sh) => sh.of_server[s as usize] == sh.id,
+        }
+    }
+
+    /// Hosting server whose shard must process this event.
+    fn dest_server(&self, ev: &Ev) -> u32 {
+        match ev {
+            Ev::Arrive { s, .. }
+            | Ev::ServerFree { s }
+            | Ev::AtomArrive { s, .. }
+            | Ev::AtomFree { s } => *s,
+            Ev::WorkerReply { w, .. } | Ev::CalcDone { w, .. } | Ev::ExecDone { w } => {
+                self.server_of_rank(*w)
+            }
+            Ev::MasterAtomArrive { d, j, .. } | Ev::MasterAtomFree { d, j } => {
+                self.server_of_rank(self.host_rank(*d as usize, *j))
+            }
+        }
+    }
+
+    /// Push an event, staging it for the barrier exchange when its
+    /// destination lives on another shard. Only the level-0 protocol can
+    /// cross shards (the partition follows level-1 subtree boundaries), so
+    /// just the three root↔child send sites go through here.
+    fn route(&mut self, at: u64, ev: Ev) {
+        let dst = match &self.shard {
+            None => {
+                self.heap.push(at, ev);
+                return;
+            }
+            Some(sh) => sh.of_server[self.dest_server(&ev) as usize],
+        };
+        match &self.shard {
+            Some(sh) if dst != sh.id => self.outbound.push((dst, at, ev)),
+            _ => self.heap.push(at, ev),
         }
     }
 
@@ -487,14 +592,18 @@ impl<'a> HierSim<'a> {
 
     // -- bootstrap ---------------------------------------------------------
 
-    fn run(&mut self) {
+    /// Seed the opening events. On a sharded run each shard seeds only the
+    /// leaf groups it owns; every bootstrap send is group-local (worker →
+    /// own master), so nothing is staged across shards here — the first
+    /// root fetch chain starts inside the event loop proper.
+    fn bootstrap(&mut self) {
         // Every non-master rank opens with a LeafGet to its master (a fused
         // CAS op on the fast path); hosting ranks kick their own CPU, which
         // parks its worker personality and triggers the first fetch chain
         // up to the root.
         let leaf_fanout = self.fanouts[self.k - 1];
         for w in 0..self.cfg.params.p {
-            if w % leaf_fanout == 0 {
+            if w % leaf_fanout == 0 || !self.owns_server(self.server_of_rank(w)) {
                 continue;
             }
             self.workers[w as usize].req_sent_ns = 0;
@@ -505,12 +614,19 @@ impl<'a> HierSim<'a> {
             }
         }
         for s in 0..self.servers.len() as u32 {
+            if !self.owns_server(s) {
+                continue;
+            }
             if self.cfg.cluster.break_after == 0 {
                 self.servers[s as usize].own = Own::Finished;
             }
             self.servers[s as usize].busy = true;
             self.heap.push(0, Ev::ServerFree { s });
         }
+    }
+
+    fn run(&mut self) {
+        self.bootstrap();
         while let Some((t, ev)) = self.heap.pop() {
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;
@@ -596,6 +712,14 @@ impl<'a> HierSim<'a> {
                 }
             }
             Ev::AtomFree { s } => self.atom_next_op(s),
+            Ev::MasterAtomArrive { d, j, from } => {
+                self.matom_queue[d as usize][j as usize].push_back(from);
+                if !self.matom_busy[d as usize][j as usize] {
+                    self.matom_busy[d as usize][j as usize] = true;
+                    self.heap.push(self.now, Ev::MasterAtomFree { d, j });
+                }
+            }
+            Ev::MasterAtomFree { d, j } => self.matom_next_op(d as usize, j),
         }
     }
 
@@ -658,6 +782,49 @@ impl<'a> HierSim<'a> {
         self.atom_busy[si] = true;
     }
 
+    /// Serve one fused master-tier fetch at persona `(d, j)`'s atomic unit:
+    /// reserve + table lookup + commit in one `service_time` occupancy on
+    /// the parent ledger's cache line — no parent CPU service, no chunk
+    /// calculation, zero protocol messages. A drained parent parks the
+    /// child on the two-phase slow path (re-served after the next install).
+    fn matom_next_op(&mut self, d: usize, j: u32) {
+        let ji = j as usize;
+        let Some(from) = self.matom_queue[d][ji].pop_front() else {
+            self.matom_busy[d][ji] = false;
+            return;
+        };
+        let dur = ns(self.cfg.cluster.service_time);
+        match self.personas[d][ji].ledger.fast_grant() {
+            Some(a) => {
+                self.fast_grants += 1;
+                let task = Task::MasterChunk { level: d as u32, to: from, a };
+                self.send_master_atom_reply(d, j, from, task, dur);
+                self.maybe_prefetch(d, j, dur);
+            }
+            None if self.personas[d][ji].global_done => {
+                let task = Task::MasterDone { level: d as u32, to: from };
+                self.send_master_atom_reply(d, j, from, task, dur);
+            }
+            None => {
+                self.personas[d][ji].parked.push_back(from);
+                self.maybe_fetch(d, j, dur);
+            }
+        }
+        self.heap.push(self.now + dur, Ev::MasterAtomFree { d: d as u32, j });
+        self.matom_busy[d][ji] = true;
+    }
+
+    /// Deliver a fused-fetch reply to child master `to`: same travel as
+    /// [`Self::send_master_reply`], charged zero protocol messages (the
+    /// fused op is an RMA-style access, not a message exchange).
+    fn send_master_atom_reply(&mut self, d: usize, j: u32, to: u32, task: Task, dur: u64) {
+        let parent_rank = self.host_rank(d, j);
+        let child_rank = self.host_rank(d + 1, to);
+        let at = self.now + dur + self.lat_ns(parent_rank, child_rank);
+        let s = self.server_of_rank(child_rank);
+        self.route(at, Ev::Arrive { s, task });
+    }
+
     // -- messaging ---------------------------------------------------------
 
     /// Count one message of protocol level `d`, classified by the
@@ -696,7 +863,8 @@ impl<'a> HierSim<'a> {
         let child_rank = self.host_rank(d + 1, to);
         self.count_msg(parent_rank, child_rank, d);
         let at = self.now + dur + self.lat_ns(parent_rank, child_rank);
-        self.heap.push(at, Ev::Arrive { s: self.server_of_rank(child_rank), task });
+        let s = self.server_of_rank(child_rank);
+        self.route(at, Ev::Arrive { s, task });
     }
 
     // -- hosting-rank CPU --------------------------------------------------
@@ -771,13 +939,9 @@ impl<'a> HierSim<'a> {
                 let parent_rank = self.host_rank(d, to / self.fanouts[d]);
                 self.count_msg(child_rank, parent_rank, d);
                 let at = self.now + dur + self.lat_ns(child_rank, parent_rank);
-                self.heap.push(
-                    at,
-                    Ev::Arrive {
-                        s: self.server_of_rank(parent_rank),
-                        task: Task::MasterCommit { level, from: to, step, size, seq },
-                    },
-                );
+                let s = self.server_of_rank(parent_rank);
+                let commit = Task::MasterCommit { level, from: to, step, size, seq };
+                self.route(at, Ev::Arrive { s, task: commit });
                 dur
             }
             Task::MasterChunk { level, to, a } => {
@@ -876,6 +1040,29 @@ impl<'a> HierSim<'a> {
     /// master `from` — the same reserve/terminate/park logic as the leaf
     /// path, one level up.
     fn serve_master_get(&mut self, d: usize, jp: u32, from: u32, dur: u64) {
+        if self.master_fast[d] {
+            // Slow-path refill under `--master-lockfree` (a parked child
+            // re-served after an install): the parent performs the fused
+            // grant on the child's behalf and replies with the chunk
+            // directly — the same shape as the leaf path's refill.
+            match self.personas[d][jp as usize].ledger.fast_grant() {
+                Some(a) => {
+                    self.fast_grants += 1;
+                    let task = Task::MasterChunk { level: d as u32, to: from, a };
+                    self.send_master_reply(d, jp, from, task, dur);
+                    self.maybe_prefetch(d, jp, dur);
+                }
+                None if self.personas[d][jp as usize].global_done => {
+                    let done = Task::MasterDone { level: d as u32, to: from };
+                    self.send_master_reply(d, jp, from, done, dur);
+                }
+                None => {
+                    self.personas[d][jp as usize].parked.push_back(from);
+                    self.maybe_fetch(d, jp, dur);
+                }
+            }
+            return;
+        }
         let af = self.persona_af_info(d, jp);
         if let Some((step, remaining, seq)) = self.personas[d][jp as usize].ledger.reserve() {
             self.send_master_reply(
@@ -973,16 +1160,20 @@ impl<'a> HierSim<'a> {
         let report = self.personas[e][ji].pending_report.take();
         let pd = e - 1;
         let child_rank = self.personas[e][ji].rank;
-        let parent_rank = self.host_rank(pd, j / self.fanouts[pd]);
-        self.count_msg(child_rank, parent_rank, pd);
+        let jp = j / self.fanouts[pd];
+        let parent_rank = self.host_rank(pd, jp);
         let at = self.now + dur + self.lat_ns(child_rank, parent_rank);
-        self.heap.push(
-            at,
-            Ev::Arrive {
-                s: self.server_of_rank(parent_rank),
-                task: Task::MasterGet { level: pd as u32, from: j, report },
-            },
-        );
+        if self.master_fast[pd] {
+            // Fused fetch: one atomic op on the parent's ledger line — no
+            // protocol message, no parent CPU. The dropped report has no
+            // consumer here: the gate excludes AF parents and adaptivity.
+            self.route(at, Ev::MasterAtomArrive { d: pd as u32, j: jp, from: j });
+        } else {
+            self.count_msg(child_rank, parent_rank, pd);
+            let s = self.server_of_rank(parent_rank);
+            let task = Task::MasterGet { level: pd as u32, from: j, report };
+            self.route(at, Ev::Arrive { s, task });
+        }
     }
 
     /// Install a chunk fetched over protocol `e-1` into persona `(e, j)`'s
@@ -1288,7 +1479,166 @@ impl<'a> HierSim<'a> {
             events: self.events,
             switch_events: self.switch_events,
             stream,
+            pdes: None,
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sharded (PDES) execution
+
+/// Cap on shard groups: contiguous level-1 subtrees fold into at most this
+/// many shards, bounding the per-shard full-state copies (each shard keeps
+/// a complete `HierSim` but touches only its owned slice).
+const HIER_SHARD_GROUPS_MAX: u32 = 8;
+
+struct HierShard<'a> {
+    sim: HierSim<'a>,
+}
+
+impl<'a> pdes::Shard for HierShard<'a> {
+    type Msg = Ev;
+
+    fn next_at(&self) -> Option<u64> {
+        self.sim.heap.next_at()
+    }
+
+    fn advance(&mut self, horizon: u64, outbox: &mut pdes::Outbox<Ev>) {
+        while self.sim.heap.next_at().is_some_and(|t| t < horizon) {
+            let (t, ev) = self.sim.heap.pop().expect("probed non-empty");
+            self.sim.now = t;
+            self.sim.events += 1;
+            self.sim.dispatch(ev);
+        }
+        for (dst, at, ev) in self.sim.outbound.drain(..) {
+            outbox.send(dst as usize, at, ev);
+        }
+    }
+
+    fn deliver(&mut self, at: u64, msg: Ev) {
+        self.sim.heap.push(at, msg);
+    }
+}
+
+/// Sharded (PDES) counterpart of the sequential hierarchical loop: shards
+/// own contiguous level-1 subtrees, the conservative lookahead is the
+/// smallest level-0 hop to an off-shard subtree host, and only root↔child
+/// protocol traffic crosses the barrier exchange. Deterministic for a fixed
+/// config regardless of `des_threads` (the partition is geometry-derived,
+/// and cross-shard delivery order is fixed by the executor).
+fn simulate_hier_pdes(cfg: &DesConfig, plan: &LevelPlan) -> anyhow::Result<DesResult> {
+    anyhow::ensure!(
+        !cfg.hier.adaptive.enabled,
+        "--des-threads > 1 cannot run with --adaptive: the rebinding \
+         controllers couple subtrees through global probe state"
+    );
+    let k = plan.depth();
+    let n_servers = plan.masters_at(k - 1);
+    let n_sub = plan.levels[0].fanout;
+    let shards_n = if k < 2 { 1 } else { n_sub.min(HIER_SHARD_GROUPS_MAX) };
+    let mut of_server = vec![0u32; n_servers as usize];
+    if shards_n > 1 {
+        let per_sub = (n_servers / n_sub).max(1);
+        for (s, slot) in of_server.iter_mut().enumerate() {
+            let subtree = s as u32 / per_sub;
+            *slot = ((subtree as u64 * shards_n as u64) / n_sub as u64) as u32;
+        }
+    }
+    // Conservative lookahead: the cheapest level-0 hop between the root
+    // host and a level-1 master on another shard. Every cross-shard event
+    // pays at least this much travel on top of its send time.
+    let topo = Topology::new(&cfg.cluster);
+    let leaf_fanout = plan.levels[k - 1].fanout;
+    let mut lookahead = 0u64;
+    if shards_n > 1 {
+        let root = plan.host_rank(0, 0);
+        lookahead = u64::MAX;
+        for j in 1..n_sub {
+            let host = plan.host_rank(1, j);
+            if of_server[(host / leaf_fanout) as usize] != 0 {
+                lookahead = lookahead.min(ns(topo.latency(root, host)));
+            }
+        }
+        anyhow::ensure!(
+            lookahead > 0 && lookahead < u64::MAX,
+            "--des-threads > 1 needs a nonzero level-0 latency between subtree hosts"
+        );
+    }
+    let of_server = Arc::new(of_server);
+    let mut shards: Vec<HierShard<'_>> = (0..shards_n)
+        .map(|id| {
+            let span = HierShardSpan { id, of_server: of_server.clone() };
+            HierShard { sim: HierSim::new_shard(cfg, plan, span) }
+        })
+        .collect();
+    for sh in shards.iter_mut() {
+        sh.sim.bootstrap();
+        debug_assert!(sh.sim.outbound.is_empty(), "hier bootstrap is shard-local");
+    }
+    let (shards, report) = pdes::run_conservative(shards, lookahead, cfg.des_threads);
+    Ok(merge_hier_shards(cfg, shards, &report))
+}
+
+/// Fold per-shard state into one [`DesResult`]. Every mutable quantity has
+/// exactly one writer shard (ownership follows the hosting server), so the
+/// merge is exact: element-wise max of finish times, sums of disjoint
+/// counters, and grant logs concatenated in shard order.
+fn merge_hier_shards(
+    cfg: &DesConfig,
+    shards: Vec<HierShard<'_>>,
+    report: &pdes::PdesReport,
+) -> DesResult {
+    let k = shards[0].sim.k;
+    let mut finish = vec![0f64; cfg.params.p as usize];
+    let mut wait = 0.0f64;
+    let mut rank0_service_ns = 0u64;
+    let mut messages = 0u64;
+    let mut intra = 0u64;
+    let mut inter = 0u64;
+    let mut level_msgs = vec![0u64; k];
+    let mut fast_grants = 0u64;
+    let mut chunks = 0u64;
+    let mut events = 0u64;
+    let mut assignments = Vec::new();
+    for (i, sh) in shards.into_iter().enumerate() {
+        let sim = sh.sim;
+        for (r, w) in sim.workers.iter().enumerate() {
+            finish[r] = finish[r].max(secs(w.finish_ns));
+            wait += secs(w.wait_ns);
+        }
+        for server in &sim.servers {
+            let r = server.rank as usize;
+            finish[r] = finish[r].max(secs(server.cpu_busy_until_ns));
+        }
+        if i == 0 {
+            rank0_service_ns = sim.servers[0].service_ns;
+        }
+        messages += sim.messages;
+        intra += sim.intra_msgs;
+        inter += sim.inter_msgs;
+        for (d, m) in sim.level_msgs.iter().enumerate() {
+            level_msgs[d] += *m;
+        }
+        fast_grants += sim.fast_grants;
+        chunks += sim.chunks_granted;
+        events += sim.events;
+        assignments.extend(sim.assignments);
+    }
+    let stats = LoopStats::from_finish_times(&finish, chunks, wait, messages);
+    DesResult {
+        stats,
+        finish,
+        rank0_service_busy: secs(rank0_service_ns),
+        assignments,
+        rma_ops: 0,
+        intra_node_messages: intra,
+        inter_node_messages: inter,
+        level_messages: level_msgs,
+        fast_grants,
+        events,
+        switch_events: Vec::new(),
+        stream: Vec::new(),
+        pdes: Some(PdesSummary::from_report(report)),
     }
 }
 
@@ -1545,6 +1895,147 @@ mod tests {
             assert_eq!(a.assignments, b.assignments);
             assert_eq!(a.t_par(), b.t_par());
         }
+    }
+
+    /// `--master-lockfree`: master-tier fetches take the fused path —
+    /// exact coverage, deterministic replay, more fast grants than the
+    /// leaf-only fast path, and the level-0 message count collapses.
+    #[test]
+    fn master_lockfree_covers_replays_and_cuts_outer_messages() {
+        let mk = |mlf: bool| {
+            let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
+            c.hier = HierParams::with_inner(TechniqueKind::Ss);
+            if mlf {
+                c.hier = c.hier.with_master_lockfree();
+            }
+            c.sched_path = crate::config::SchedPath::LockFree;
+            simulate(&c).unwrap()
+        };
+        let leaf_only = mk(false);
+        let fused = mk(true);
+        verify_coverage(&fused.sorted_assignments(), 6_000).unwrap();
+        assert!(
+            fused.fast_grants > leaf_only.fast_grants,
+            "master-tier fetches joined the fast path ({} vs {})",
+            fused.fast_grants,
+            leaf_only.fast_grants
+        );
+        assert!(
+            fused.level_messages[0] < leaf_only.level_messages[0],
+            "fused fetches must replace level-0 messages ({} vs {})",
+            fused.level_messages[0],
+            leaf_only.level_messages[0]
+        );
+        assert!(fused.t_par() <= leaf_only.t_par());
+        let replay = mk(true);
+        assert_eq!(fused.assignments, replay.assignments, "master-lockfree replay");
+        assert_eq!(fused.t_par(), replay.t_par());
+    }
+
+    /// Depth 3 under `--master-lockfree`: intermediate masters both serve
+    /// fused fetches from below and issue fused fetches upward.
+    #[test]
+    fn master_lockfree_depth3_covers_and_replays() {
+        let mk = || {
+            let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
+            c.cluster.racks = 2;
+            c.hier = HierParams::with_inner(TechniqueKind::Ss)
+                .with_levels(3)
+                .with_fanouts(&[2, 2, 4])
+                .with_master_lockfree();
+            c.sched_path = crate::config::SchedPath::LockFree;
+            simulate(&c).unwrap()
+        };
+        let a = mk();
+        verify_coverage(&a.sorted_assignments(), 6_000).unwrap();
+        assert!(a.fast_grants > 0);
+        let b = mk();
+        assert_eq!(a.assignments, b.assignments, "depth-3 master-lockfree replay");
+        assert_eq!(a.t_par(), b.t_par());
+    }
+
+    /// Without a lock-free sched path the flag is inert: bit-identical to
+    /// the plain two-phase run.
+    #[test]
+    fn master_lockfree_inert_under_two_phase() {
+        let mk = |mlf: bool| {
+            let mut c = cfg(3_000, 2, 4, TechniqueKind::Fac2);
+            c.hier = HierParams::with_inner(TechniqueKind::Ss);
+            if mlf {
+                c.hier = c.hier.with_master_lockfree();
+            }
+            c.sched_path = crate::config::SchedPath::TwoPhase;
+            simulate(&c).unwrap()
+        };
+        let plain = mk(false);
+        let flagged = mk(true);
+        assert_eq!(plain.assignments, flagged.assignments);
+        assert_eq!(plain.t_par(), flagged.t_par());
+        assert_eq!(plain.stats.messages, flagged.stats.messages);
+        assert_eq!(flagged.fast_grants, 0);
+    }
+
+    #[test]
+    fn master_lockfree_rejects_adaptive() {
+        let mut c = cfg(3_000, 2, 4, TechniqueKind::Fac2);
+        c.hier = HierParams::with_inner(TechniqueKind::Ss).with_adaptive().with_master_lockfree();
+        c.sched_path = crate::config::SchedPath::Auto;
+        assert!(simulate(&c).is_err());
+    }
+
+    /// The sharded engine (`--des-threads > 1`) is bit-identical to the
+    /// sequential loop: same schedule, same makespan, same counters, for
+    /// every thread count.
+    #[test]
+    fn pdes_matches_sequential_engine() {
+        let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
+        c.hier = HierParams::with_inner(TechniqueKind::Ss);
+        let seq = simulate(&c).unwrap();
+        assert!(seq.pdes.is_none());
+        for threads in [2u32, 4, 8] {
+            c.des_threads = threads;
+            let par = simulate(&c).unwrap();
+            assert_eq!(seq.sorted_assignments(), par.sorted_assignments(), "t={threads}");
+            assert_eq!(seq.t_par(), par.t_par(), "t={threads}");
+            assert_eq!(seq.fast_grants, par.fast_grants, "t={threads}");
+            assert_eq!(seq.level_messages, par.level_messages, "t={threads}");
+            assert_eq!(seq.stats.messages, par.stats.messages, "t={threads}");
+            let p = par.pdes.expect("sharded run reports its executor summary");
+            assert!(p.shards > 1, "4 subtrees must shard");
+            assert_eq!(p.threads, threads.min(p.shards));
+            assert!(p.lookahead_ns > 0);
+        }
+    }
+
+    /// Sharded depth-3 with the fused master tier: still bit-identical to
+    /// sequential — cross-shard traffic is exclusively level-0 protocol.
+    #[test]
+    fn pdes_depth3_master_lockfree_matches_sequential() {
+        let mut c = cfg(6_000, 4, 4, TechniqueKind::Fac2);
+        c.cluster.racks = 2;
+        c.hier = HierParams::with_inner(TechniqueKind::Ss)
+            .with_levels(3)
+            .with_fanouts(&[2, 2, 4])
+            .with_master_lockfree();
+        c.sched_path = crate::config::SchedPath::LockFree;
+        let seq = simulate(&c).unwrap();
+        c.des_threads = 4;
+        let par = simulate(&c).unwrap();
+        assert_eq!(seq.sorted_assignments(), par.sorted_assignments());
+        assert_eq!(seq.t_par(), par.t_par());
+        assert_eq!(seq.fast_grants, par.fast_grants);
+        assert_eq!(seq.level_messages, par.level_messages);
+    }
+
+    /// A single-node tree has one level-1 subtree — the PDES path
+    /// degenerates to one shard and still covers the loop.
+    #[test]
+    fn pdes_single_shard_degenerates() {
+        let mut c = cfg(3_000, 1, 8, TechniqueKind::Gss);
+        c.des_threads = 4;
+        let r = simulate(&c).unwrap();
+        verify_coverage(&r.sorted_assignments(), 3_000).unwrap();
+        assert_eq!(r.pdes.as_ref().unwrap().shards, 1);
     }
 
     /// `record_assignments = false` still schedules everything (stats keep

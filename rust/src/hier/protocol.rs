@@ -36,7 +36,9 @@
 //! deeper queues keep hiding them across multi-chunk stalls on very
 //! high-latency fabrics.
 
+use std::cell::UnsafeCell;
 use std::collections::VecDeque;
+use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
@@ -700,6 +702,137 @@ impl FastLedger {
             None => false,
         }
     }
+
+    /// Drain a master-tier staging ring into this ledger: every chunk a
+    /// fused parent fetch deposited since the last drain is installed in
+    /// FIFO order (published immediately or staged, like any install).
+    pub fn absorb_staged(&mut self, staged: &StagedChunkQueue) -> usize {
+        let mut n = 0;
+        while let Some(a) = staged.pop() {
+            self.install(a);
+            n += 1;
+        }
+        n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// master-tier chunk staging (threaded form)
+
+/// A small bounded **lock-free MPSC ring** of parent-granted chunks — the
+/// master-tier extension of the CAS fast path. Whoever completes a fused
+/// master-tier fetch on a subtree's behalf stages the granted chunk here
+/// (multi-producer: sibling helpers race), and the subtree's owning master
+/// drains it into [`FastLedger::install`] between grants
+/// ([`FastLedger::absorb_staged`]) — the parent round trip feeds the ledger
+/// without ever serializing on the parent's CPU or taking a lock.
+///
+/// Classic bounded ring with per-slot sequence counters: a producer claims
+/// a slot with one CAS on `tail`, writes the chunk, then publishes by
+/// bumping the slot's counter; the single consumer reads in FIFO order
+/// guarded by the same counters. [`Self::push`] hands the chunk back when
+/// the ring is full — callers treat that as backpressure and fall back to
+/// the two-phase protocol.
+#[derive(Debug)]
+pub struct StagedChunkQueue {
+    slots: Box<[StagedSlot]>,
+    mask: u64,
+    /// Next producer position (claimed by CAS).
+    tail: AtomicU64,
+    /// Next consumer position (single consumer — plain stores).
+    head: AtomicU64,
+}
+
+#[derive(Debug)]
+struct StagedSlot {
+    seq: AtomicU64,
+    chunk: UnsafeCell<MaybeUninit<Assignment>>,
+}
+
+// SAFETY: slot payloads are only written by the producer that claimed the
+// slot's position (unique by the `tail` CAS) and only read after its
+// publishing `seq` store, with Acquire/Release pairing on `seq`.
+unsafe impl Send for StagedChunkQueue {}
+unsafe impl Sync for StagedChunkQueue {}
+
+impl StagedChunkQueue {
+    /// A ring of at least `capacity` slots (rounded up to a power of two,
+    /// minimum 2).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two() as u64;
+        let slots = (0..cap)
+            .map(|i| StagedSlot {
+                seq: AtomicU64::new(i),
+                chunk: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        StagedChunkQueue {
+            slots,
+            mask: cap - 1,
+            tail: AtomicU64::new(0),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    /// Stage one granted chunk (any thread). `Err(a)` hands the chunk back
+    /// when the ring is full.
+    pub fn push(&self, a: Assignment) -> Result<(), Assignment> {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[(pos & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq.wrapping_sub(pos) as i64;
+            if diff == 0 {
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: the CAS gave this thread exclusive claim
+                        // on `pos`; the consumer waits for the `seq` bump.
+                        unsafe { (*slot.chunk.get()).write(a) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if diff < 0 {
+                return Err(a); // a full lap behind: the ring is full
+            } else {
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Take the oldest staged chunk (the owning master only — single
+    /// consumer).
+    pub fn pop(&self) -> Option<Assignment> {
+        let pos = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[(pos & self.mask) as usize];
+        let seq = slot.seq.load(Ordering::Acquire);
+        if seq.wrapping_sub(pos.wrapping_add(1)) as i64 != 0 {
+            return None; // nothing published at the head yet
+        }
+        // SAFETY: the producer's Release store on `seq` published this
+        // slot's payload; no other consumer exists.
+        let a = unsafe { (*slot.chunk.get()).assume_init() };
+        slot.seq.store(pos.wrapping_add(self.mask + 1), Ordering::Release);
+        self.head.store(pos.wrapping_add(1), Ordering::Relaxed);
+        Some(a)
+    }
+
+    /// Chunks currently staged (approximate under concurrent pushes).
+    pub fn len(&self) -> usize {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Relaxed);
+        tail.wrapping_sub(head) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
 }
 
 #[cfg(test)]
@@ -1186,6 +1319,81 @@ mod tests {
             total += a.size;
         }
         assert_eq!(total, 14, "6 + 5 + 3 unassigned iterations survive the demotion");
+    }
+
+    #[test]
+    fn staged_queue_is_fifo_and_bounded() {
+        let q = StagedChunkQueue::with_capacity(2);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+        q.push(chunk(0, 4)).unwrap();
+        q.push(chunk(4, 4)).unwrap();
+        assert_eq!(q.len(), 2);
+        // Full ring: the chunk is handed back, not dropped.
+        assert_eq!(q.push(chunk(8, 4)), Err(chunk(8, 4)));
+        assert_eq!(q.pop(), Some(chunk(0, 4)));
+        q.push(chunk(8, 4)).unwrap();
+        assert_eq!(q.pop(), Some(chunk(4, 4)));
+        assert_eq!(q.pop(), Some(chunk(8, 4)));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    /// Multi-producer smoke test: racing stagers lose no chunk and the
+    /// consumer drains every one exactly once.
+    #[test]
+    fn staged_queue_concurrent_producers_lose_nothing() {
+        let q = Arc::new(StagedChunkQueue::with_capacity(8));
+        const PRODUCERS: u64 = 4;
+        const PER: u64 = 256;
+        let mut handles = Vec::new();
+        for t in 0..PRODUCERS {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER {
+                    let a = chunk(t * PER + i, 1);
+                    let mut item = a;
+                    while let Err(back) = q.push(item) {
+                        item = back;
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let mut got = Vec::new();
+        while got.len() < (PRODUCERS * PER) as usize {
+            match q.pop() {
+                Some(a) => got.push(a),
+                None => std::thread::yield_now(),
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(q.pop(), None, "nothing beyond the staged total");
+        got.sort_unstable_by_key(|a| a.start);
+        verify_coverage(&got, PRODUCERS * PER).unwrap();
+    }
+
+    /// The staging ring feeds [`FastLedger`] installs: drained chunks
+    /// publish/stage exactly like direct installs and grants cover them.
+    #[test]
+    fn staged_queue_drains_into_fast_ledger() {
+        let base = LoopParams::new(10_000, 8);
+        let shared = Arc::new(AtomicLedger::new());
+        let mut f = FastLedger::new(Arc::clone(&shared), TechniqueKind::Ss, &base, 2, 4);
+        let q = StagedChunkQueue::with_capacity(4);
+        q.push(chunk(0, 3)).unwrap();
+        q.push(chunk(3, 2)).unwrap();
+        q.push(chunk(5, 4)).unwrap();
+        assert_eq!(f.absorb_staged(&q), 3);
+        assert!(q.is_empty());
+        let mut starts = Vec::new();
+        while let Some((a, _rem)) = f.grant() {
+            starts.push(a.start);
+        }
+        assert_eq!(starts, vec![0, 1, 2, 3, 4, 5, 6, 7, 8], "FIFO installs, no gaps");
+        assert!(!f.has_work());
     }
 
     #[test]

@@ -21,7 +21,7 @@ use dca_dls::report::json::Json;
 use dca_dls::report::{render_figure, render_table2, render_table3};
 use dca_dls::runtime::workload::{PjrtMandelbrot, PjrtPsia};
 use dca_dls::obs::stream::write_ndjson;
-use dca_dls::obs::MetricsRegistry;
+use dca_dls::obs::{EngineMetrics, MetricsRegistry};
 use dca_dls::scenario::{explain, parse_scenario, run_scenario, Body, RunReport};
 use dca_dls::tenant::scheduler::{JobSpec, Scheduler, SchedulerOptions};
 use dca_dls::runtime::Runtime;
@@ -33,7 +33,7 @@ use dca_dls::tenant::{
 };
 use dca_dls::workload::mandelbrot::Mandelbrot;
 use dca_dls::workload::psia::Psia;
-use dca_dls::workload::Workload;
+use dca_dls::workload::{IterationCost, Workload};
 
 const USAGE: &str = "\
 dca-dls — Distributed Chunk Calculation for DLS (Eleliemy & Ciorba 2021)
@@ -63,11 +63,20 @@ SCENARIO SUITE (versioned JSON specs — docs/scenario-spec.md)
   scenario list [DIR]          summarize the committed spec files
   scenario validate FILE...    parse-check specs without running them
   scenario explain FILE...     human summary of what a spec runs
-  scenario run FILE [--json]   run the spec and check its expectations
+  scenario run FILE... [--json] [--jobs N]
+                               run the specs and check their expectations
                                exit 0 = pass, 1 = failed check, 2 = spec error
 
 VALIDATION
   validate         PJRT artifacts vs the native implementations
+
+PARALLEL DES CORE (docs/pdes.md)
+  --des-threads N              (simulate, hier, tenants)
+      shard the event loop across N worker threads (subtree/node-group
+      partition, conservative lookahead); results are bit-identical to the
+      sequential engine. tenants: fans out the --slowdown solo baselines.
+  --master-lockfree            (simulate --model hier, hier)
+      fused master-tier grants through the staged-chunk MPSC fast path
 
 OBSERVABILITY
   --stream-metrics <path|->    (simulate, hier, tenants, scenario run)
@@ -147,6 +156,11 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              GRANT PATH\n\
              \x20 --sched-path two-phase|lockfree|auto   (--lockfree = shorthand)\n\
              \n\
+             PARALLEL CORE (docs/pdes.md)\n\
+             \x20 --des-threads N          sharded PDES event loop (bit-identical)\n\
+             \x20 --master-lockfree        fused master-tier grants (--model hier,\n\
+             \x20                          needs a lock-free path, excludes --adaptive)\n\
+             \n\
              HIERARCHY (--model hier)\n\
              \x20 --inner T  --levels K  --fanout a,b,…  --techniques t0,t1,…\n\
              \x20 --watermark W|auto  --prefetch-depth Q\n\
@@ -184,6 +198,11 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              GRANT PATH / ADAPTIVE\n\
              \x20 --sched-path two-phase|lockfree|auto   (--lockfree = shorthand)\n\
              \x20 --adaptive  --probe-interval G  --candidates t,…\n\
+             \n\
+             PARALLEL CORE (docs/pdes.md)\n\
+             \x20 --des-threads N          sharded PDES event loop (bit-identical)\n\
+             \x20 --master-lockfree        fused master-tier grants (needs a\n\
+             \x20                          lock-free path, excludes --adaptive)\n\
              \n\
              OUTPUT\n\
              \x20 --json FILE              write all model rows as JSON\n\
@@ -264,6 +283,8 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 --policy fair|priority|fifo\n\
              \x20 --lockfree | --sched-path P\n\
              \x20 --slowdown      re-run each tenant solo, report slowdown vs solo\n\
+             \x20 --des-threads N fan the --slowdown solo baselines out over N\n\
+             \x20                 worker threads (identical report, less wall time)\n\
              \x20 --json FILE     write the session report as JSON\n\
              \n\
              OBSERVABILITY\n\
@@ -279,7 +300,13 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 list [DIR]         summarize every *.json spec (default scenarios/)\n\
              \x20 validate FILE...   parse-check without running\n\
              \x20 explain FILE...    print what each spec would run and check\n\
-             \x20 run FILE [--json] [--stream-metrics <path|->] [--stream-interval S]\n\
+             \x20 run FILE... [--json] [--jobs N] [--stream-metrics <path|->]\n\
+             \x20             [--stream-interval S]\n\
+             \n\
+             PARALLELISM\n\
+             \x20 --jobs N   run the specs on up to N worker threads; reports print\n\
+             \x20            in list order and the worst exit code wins (not\n\
+             \x20            combinable with --stream-metrics)\n\
              \n\
              EXIT CODES (stable — scriptable)\n\
              \x20 0   every expectation held\n\
@@ -287,15 +314,16 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 2   spec error (bad JSON, unknown field, bad schema) or usage error\n\
              \n\
              EXAMPLE\n\
-             \x20 dca-dls scenario run scenarios/hier-calc-100us.json --json\n"
+             \x20 dca-dls scenario run scenarios/*.json --jobs 4\n"
         }
         "metrics-dump" => {
             "dca-dls metrics-dump — one-shot Prometheus dump (no network)\n\
              \n\
              Runs a small instrumented threaded engine plus a two-job resident\n\
-             scheduler pool against one shared MetricsRegistry, then prints the\n\
-             Prometheus text exposition to stdout. Every metric it emits is\n\
-             documented in docs/metrics-schema.md.\n\
+             scheduler pool against one shared MetricsRegistry, then a small\n\
+             sharded DES cell that feeds the dcadls_pdes_* family (docs/pdes.md),\n\
+             and prints the Prometheus text exposition to stdout. Every metric it\n\
+             emits is documented in docs/metrics-schema.md.\n\
              \n\
              FLAGS\n\
              \x20 --n N          loop size (default 16384)\n\
@@ -304,6 +332,9 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 --lockfree | --sched-path two-phase|lockfree|auto\n\
              \x20 --adaptive  --probe-interval G  --candidates t,…\n\
              \x20                exercise the switch counter too\n\
+             \x20 --des-threads N  shard count of the PDES sampler cell\n\
+             \x20                (default 2; 1 leaves dcadls_pdes_* at zero)\n\
+             \x20 --master-lockfree  fuse the sampler's root tier\n\
              \n\
              EXAMPLE\n\
              \x20 dca-dls metrics-dump --n 20000 --workers 8 --lockfree\n"
@@ -432,6 +463,7 @@ fn cmd_table3(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 fn cmd_figure(app: App, title: &str, flags: &HashMap<String, String>) -> anyhow::Result<()> {
     reject_sched_path_flags(flags, title)?;
     reject_adaptive_flags(flags, title)?;
+    reject_pdes_flags(flags, title)?;
     let mut cfg = if flags.contains_key("quick") {
         FigureConfig::quick(app)
     } else {
@@ -666,7 +698,7 @@ fn apply_rack_flags(
 /// Flags that only make sense for the hierarchical model. (`--racks` /
 /// `--rack-latency-us` are *cluster* properties, valid for any DES model —
 /// see [`apply_rack_flags`].)
-const HIER_ONLY_FLAGS: [&str; 7] = [
+const HIER_ONLY_FLAGS: [&str; 8] = [
     "inner",
     "nodes",
     "watermark",
@@ -674,7 +706,35 @@ const HIER_ONLY_FLAGS: [&str; 7] = [
     "fanout",
     "techniques",
     "prefetch-depth",
+    "master-lockfree",
 ];
+
+/// `--des-threads N`: worker threads for the sharded parallel DES core
+/// (PDES) — see docs/pdes.md. 1 (the default) keeps the classic sequential
+/// event loop; results are bit-identical either way.
+fn des_threads_of(flags: &HashMap<String, String>) -> anyhow::Result<u32> {
+    match flags.get("des-threads") {
+        None => Ok(1),
+        Some(raw) => {
+            let t: u32 = raw.parse().map_err(|_| {
+                anyhow::anyhow!("bad --des-threads '{raw}' (expect a thread count ≥ 1)")
+            })?;
+            anyhow::ensure!(t >= 1, "--des-threads must be ≥ 1");
+            Ok(t)
+        }
+    }
+}
+
+/// Commands that never run the sharded DES core reject its flags instead
+/// of silently ignoring them.
+fn reject_pdes_flags(flags: &HashMap<String, String>, cmd: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !(flags.contains_key("des-threads") || flags.contains_key("master-lockfree")),
+        "--des-threads/--master-lockfree are not supported by `{cmd}`; \
+         use `simulate`, `hier`, `metrics-dump`, or `tenants` (--des-threads only)"
+    );
+    Ok(())
+}
 
 /// `--lockfree` (or `--sched-path lockfree|two-phase`): grant protocol of
 /// the DCA/HIER-DCA chunk exchange — see [`SchedPath`]. Unparsable values
@@ -818,18 +878,30 @@ fn scenario_explain(paths: &[String]) -> anyhow::Result<i32> {
     Ok(0)
 }
 
-/// `scenario run <spec.json>… [--json] [--stream-metrics <path|->]
-/// [--stream-interval S]` — any failed expectation makes the whole
-/// invocation exit 1; parse or simulation errors exit 2.
+/// `scenario run <spec.json>… [--json] [--jobs N] [--stream-metrics
+/// <path|->] [--stream-interval S]` — any failed expectation makes the
+/// whole invocation exit 1; parse or simulation errors exit 2. With
+/// `--jobs N` the specs execute on up to N worker threads; reports still
+/// print in list order and the exit code is the worst across all specs.
 fn scenario_run(args: &[String]) -> anyhow::Result<i32> {
     let mut paths = Vec::new();
     let mut json = false;
+    let mut jobs = 1usize;
     let mut stream_dest: Option<String> = None;
     let mut interval = 0.0f64;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--json" => json = true,
+            "--jobs" => {
+                let raw =
+                    args.get(i + 1).ok_or_else(|| anyhow::anyhow!("--jobs needs a count"))?;
+                jobs = raw
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad --jobs '{raw}' (expect a count ≥ 1)"))?;
+                anyhow::ensure!(jobs >= 1, "--jobs must be ≥ 1");
+                i += 1;
+            }
             "--stream-metrics" => {
                 let dest = args
                     .get(i + 1)
@@ -870,12 +942,15 @@ fn scenario_run(args: &[String]) -> anyhow::Result<i32> {
     if stream_dest.is_some() && interval == 0.0 {
         interval = DEFAULT_STREAM_INTERVAL;
     }
+    anyhow::ensure!(
+        jobs == 1 || stream_dest.is_none(),
+        "--stream-metrics needs one run's virtual-time order; drop --jobs"
+    );
     let mut failed = false;
-    for path in &paths {
-        let sc = load_scenario(path)?;
+    for (path, report) in run_scenario_set(&paths, interval, jobs.min(paths.len()))? {
         // A spec that parsed but whose run errors out is a *scenario*
         // failure (exit 1), not a spec error.
-        let report = match run_scenario(&sc, interval) {
+        let report = match report {
             Ok(report) => report,
             Err(e) => {
                 eprintln!("{path}: run failed: {e:#}");
@@ -897,6 +972,49 @@ fn scenario_run(args: &[String]) -> anyhow::Result<i32> {
         failed |= !report.passed;
     }
     Ok(if failed { 1 } else { 0 })
+}
+
+/// Run every spec, sequentially (`jobs == 1`, specs load lazily exactly as
+/// before) or on a small worker pool. Either way the returned reports are
+/// in list order, so the printed output is independent of the thread
+/// count; spec *parse* errors abort the whole invocation (exit 2) while
+/// run errors stay per-scenario.
+fn run_scenario_set(
+    paths: &[String],
+    interval: f64,
+    jobs: usize,
+) -> anyhow::Result<Vec<(String, anyhow::Result<RunReport>)>> {
+    if jobs <= 1 {
+        let mut out = Vec::with_capacity(paths.len());
+        for path in paths {
+            let sc = load_scenario(path)?;
+            out.push((path.clone(), run_scenario(&sc, interval)));
+        }
+        return Ok(out);
+    }
+    let scs: Vec<_> = paths.iter().map(|p| load_scenario(p)).collect::<anyhow::Result<_>>()?;
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut slots: Vec<Option<anyhow::Result<RunReport>>> = Vec::new();
+    slots.resize_with(scs.len(), || None);
+    let slots = std::sync::Mutex::new(slots);
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= scs.len() {
+                    break;
+                }
+                let r = run_scenario(&scs[i], interval);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    let reports = slots.into_inner().unwrap();
+    Ok(paths
+        .iter()
+        .cloned()
+        .zip(reports.into_iter().map(|r| r.expect("every scenario ran")))
+        .collect())
 }
 
 /// The `scenario run --json` report document (one JSON object per line for
@@ -926,7 +1044,8 @@ fn scenario_report_json(r: &RunReport) -> Json {
 /// `metrics-dump`: drive one small instrumented threaded engine plus a
 /// two-job resident scheduler pool against a shared registry, then print
 /// the Prometheus text exposition — a one-shot, network-free stand-in for
-/// a `/metrics` endpoint.
+/// a `/metrics` endpoint. A small sharded DES cell runs last so the
+/// `dcadls_pdes_*` family is fed by a real PDES execution.
 fn cmd_metrics_dump(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let workers = get(flags, "workers", 4u32);
     let tech = outer_tech_of(flags)?;
@@ -946,6 +1065,33 @@ fn cmd_metrics_dump(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     pool.submit(JobSpec::new("dump-a", (n / 4).max(1), tech, Arc::clone(&workload)))?;
     pool.submit(JobSpec::new("dump-b", (n / 8).max(1), TechniqueKind::Ss, workload))?;
     pool.drain();
+    // The PDES sampler cell: FAC2 over four node masters, SS inside each
+    // node, sharded two ways by default (`--des-threads` overrides,
+    // `--master-lockfree` fuses the root tier). `--des-threads 1` keeps
+    // the sequential loop and leaves the dcadls_pdes_* family at zero.
+    let des_threads = match flags.get("des-threads") {
+        Some(_) => des_threads_of(flags)?,
+        None => 2,
+    };
+    let cl = ClusterConfig { nodes: 4, ranks_per_node: 4, ..ClusterConfig::minihpc() };
+    let mut des_hier = HierParams::with_inner(TechniqueKind::Ss);
+    if flags.contains_key("master-lockfree") {
+        des_hier = des_hier.with_master_lockfree();
+    }
+    let mut des_cfg = DesConfig::new(
+        LoopParams::new(4_096, cl.total_ranks()),
+        TechniqueKind::Fac2,
+        ExecutionModel::HierDca,
+        cl,
+        IterationCost::Constant(1e-5),
+    )
+    .with_threads(des_threads);
+    des_cfg.hier = des_hier;
+    des_cfg.sched_path = sched_path_of(flags)?;
+    let r = simulate(&des_cfg)?;
+    if let Some(p) = &r.pdes {
+        EngineMetrics::register(&registry).on_pdes(p.rounds, p.horizon_stalls, p.mailbox_depth_max);
+    }
     print!("{}", registry.render_prometheus());
     Ok(())
 }
@@ -968,12 +1114,16 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         flags,
     )?;
     let cost = app.cost_model(0xF1605, get(flags, "ct", 2_000u32));
-    let hier = apply_adaptive_flags(hier_of(flags)?, flags)?;
+    let mut hier = apply_adaptive_flags(hier_of(flags)?, flags)?;
+    if flags.contains_key("master-lockfree") {
+        hier = hier.with_master_lockfree();
+    }
     let stream = stream_flags(flags)?;
     let cfg = DesConfig {
         sched_path: sched_path_of(flags)?,
         record_assignments: true,
         stream_interval: stream.as_ref().map_or(0.0, |(_, s)| *s),
+        des_threads: des_threads_of(flags)?,
         params: LoopParams::new(n, cluster.total_ranks()),
         technique: tech,
         model,
@@ -1002,6 +1152,18 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         r.stats.cov_finish,
         r.stats.imbalance
     );
+    if let Some(p) = &r.pdes {
+        println!(
+            "PDES: {} shards × {} threads, {} rounds, lookahead {}ns, \
+             {} horizon stalls, mailbox depth ≤ {}",
+            p.shards,
+            p.threads,
+            p.rounds,
+            p.lookahead_ns,
+            p.horizon_stalls,
+            p.mailbox_depth_max
+        );
+    }
     print!("{}", dca_dls::report::render_switch_events(&r.switch_events));
     Ok(())
 }
@@ -1015,7 +1177,11 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     // Adaptivity applies to the hierarchical row only here — the flat rows
     // are the static baselines the adaptive run is compared against (use
     // `simulate --model dca --adaptive` for flat adaptivity).
-    let hier = apply_adaptive_flags(hier_of(flags)?, flags)?;
+    let mut hier = apply_adaptive_flags(hier_of(flags)?, flags)?;
+    if flags.contains_key("master-lockfree") {
+        hier = hier.with_master_lockfree();
+    }
+    let des_threads = des_threads_of(flags)?;
     let label = |m: ExecutionModel| {
         m.label_adaptive(
             hier.depth() as u32,
@@ -1079,6 +1245,7 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             sched_path: sched_path_of(flags)?,
             record_assignments: true,
             stream_interval,
+            des_threads,
             params: LoopParams::new(n, cluster.total_ranks()),
             technique: tech,
             model,
@@ -1120,6 +1287,21 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             None => println!("{:<mw$} {:>12}", label(*model), "n/a (AF)"),
         }
     }
+    for (model, r) in &results {
+        if let Some(p) = r.as_ref().and_then(|r| r.pdes.as_ref()) {
+            println!(
+                "PDES {:<mw$} {} shards × {} threads, {} rounds, lookahead {}ns, \
+                 {} stalls, mailbox ≤ {}",
+                label(*model),
+                p.shards,
+                p.threads,
+                p.rounds,
+                p.lookahead_ns,
+                p.horizon_stalls,
+                p.mailbox_depth_max
+            );
+        }
+    }
     if hier.adaptive.enabled {
         let switches = results
             .iter()
@@ -1139,7 +1321,7 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 .iter()
                 .filter_map(|(m, r)| r.as_ref().map(|r| (m, r)))
                 .map(|(m, r)| {
-                    Json::obj()
+                    let mut row = Json::obj()
                         .field("model", label(*m))
                         .field("levels", levels)
                         .field(
@@ -1176,7 +1358,22 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                         .field(
                             "switch_events",
                             dca_dls::report::json::switch_events_json(&r.switch_events),
-                        )
+                        );
+                    // Present only when the run was sharded (--des-threads
+                    // ≥ 2): docs/metrics-schema.md §PDES summary.
+                    if let Some(p) = &r.pdes {
+                        row = row.field(
+                            "pdes",
+                            Json::obj()
+                                .field("shards", p.shards)
+                                .field("threads", p.threads)
+                                .field("rounds", p.rounds)
+                                .field("lookahead_ns", p.lookahead_ns)
+                                .field("horizon_stalls", p.horizon_stalls)
+                                .field("mailbox_depth_max", p.mailbox_depth_max),
+                        );
+                    }
+                    row
                 })
                 .collect(),
         );
@@ -1187,6 +1384,7 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    reject_pdes_flags(flags, "run")?;
     let app = app_of(flags);
     let tech = outer_tech_of(flags)?;
     let model = if flags.contains_key("hier") {
@@ -1271,6 +1469,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     reject_sched_path_flags(flags, "sweep-breakafter")?;
     reject_adaptive_flags(flags, "sweep-breakafter")?;
+    reject_pdes_flags(flags, "sweep-breakafter")?;
     let app = app_of(flags);
     let tech = tech_of(flags)?;
     let cost = app.cost_model(0xF1605, 2_000);
@@ -1301,6 +1500,7 @@ fn cmd_sweep_breakafter(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_select(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    reject_pdes_flags(flags, "select")?;
     let app = app_of(flags);
     let tech = outer_tech_of(flags)?;
     let hier = apply_adaptive_flags(hier_of(flags)?, flags)?;
@@ -1363,6 +1563,13 @@ fn cmd_tenants(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if flags.contains_key("lockfree") || flags.contains_key("sched-path") {
         cfg.sched_path = sched_path_of(flags)?;
     }
+    anyhow::ensure!(
+        !flags.contains_key("master-lockfree"),
+        "--master-lockfree applies to the hierarchical DES (`simulate --model hier`, `hier`)"
+    );
+    // `--des-threads` fans the `--slowdown` solo baselines out; the shared
+    // session itself keeps one global virtual-time order.
+    cfg = cfg.with_des_threads(des_threads_of(flags)?);
     let stream = stream_flags(flags)?;
     if let Some((_, s)) = &stream {
         cfg = cfg.with_stream_interval(*s);

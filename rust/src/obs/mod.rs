@@ -286,6 +286,12 @@ pub struct EngineMetrics {
     pub chunk_iters: Arc<Histogram>,
     /// `dcadls_sched_grant_wait_seconds` — per-grant scheduling wait.
     pub grant_wait: Arc<Histogram>,
+    /// `dcadls_pdes_rounds_total` — PDES horizon rounds completed.
+    pub pdes_rounds: Arc<Counter>,
+    /// `dcadls_pdes_horizon_stalls_total` — rounds that advanced no event.
+    pub pdes_horizon_stalls: Arc<Counter>,
+    /// `dcadls_pdes_mailbox_depth` — high-water cross-shard mailbox depth.
+    pub pdes_mailbox_depth: Arc<Gauge>,
 }
 
 impl EngineMetrics {
@@ -321,6 +327,18 @@ impl EngineMetrics {
                 "Wall-clock wait per scheduling grant, seconds (log buckets from 100ns).",
                 1e-7,
             ),
+            pdes_rounds: r.counter(
+                "dcadls_pdes_rounds_total",
+                "PDES horizon rounds completed by the sharded event loop.",
+            ),
+            pdes_horizon_stalls: r.counter(
+                "dcadls_pdes_horizon_stalls_total",
+                "Shard-rounds that reached the barrier without executing any event.",
+            ),
+            pdes_mailbox_depth: r.gauge(
+                "dcadls_pdes_mailbox_depth",
+                "High-water depth of any cross-shard SPSC mailbox, messages.",
+            ),
         }
     }
 
@@ -336,6 +354,17 @@ impl EngineMetrics {
             self.fast_grants.inc();
         } else {
             self.messages.add(4);
+        }
+    }
+
+    /// Fold one finished PDES run (`DesResult::pdes`) into the registry:
+    /// rounds and stalls accumulate across runs, the mailbox gauge keeps
+    /// the high-water mark seen by any run.
+    pub fn on_pdes(&self, rounds: u64, horizon_stalls: u64, mailbox_depth_max: u64) {
+        self.pdes_rounds.add(rounds);
+        self.pdes_horizon_stalls.add(horizon_stalls);
+        if mailbox_depth_max as f64 > self.pdes_mailbox_depth.get() {
+            self.pdes_mailbox_depth.set(mailbox_depth_max as f64);
         }
     }
 }
@@ -431,6 +460,10 @@ mod tests {
         assert!(text.contains("# TYPE dcadls_sched_chunk_iters histogram"));
         assert!(text.contains("dcadls_sched_chunk_iters_count 2"));
         assert!(text.contains("_bucket{le=\"+Inf\"} 2"));
+        // PDES counters render (at zero) even when no sharded run fed them.
+        assert!(text.contains("# TYPE dcadls_pdes_rounds_total counter"));
+        assert!(text.contains("# TYPE dcadls_pdes_horizon_stalls_total counter"));
+        assert!(text.contains("# TYPE dcadls_pdes_mailbox_depth gauge"));
         // Deterministic ordering: every # HELP line sorted by name.
         let helps: Vec<&str> =
             text.lines().filter(|l| l.starts_with("# HELP")).collect();
@@ -452,6 +485,21 @@ mod tests {
         assert!(text.contains("lat_seconds_bucket{le=\"0.000004\"} 3"));
         assert!(text.contains("lat_seconds_count 3"));
         assert!((h.mean() - (0.5e-6 + 1.5e-6 + 3e-6) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pdes_fold_accumulates_and_keeps_high_water() {
+        let r = MetricsRegistry::new();
+        let m = EngineMetrics::register(&r);
+        m.on_pdes(10, 2, 7);
+        m.on_pdes(5, 0, 3); // lower mailbox mark must not regress the gauge
+        assert_eq!(m.pdes_rounds.get(), 15);
+        assert_eq!(m.pdes_horizon_stalls.get(), 2);
+        assert!((m.pdes_mailbox_depth.get() - 7.0).abs() < 1e-12);
+        let text = r.render_prometheus();
+        assert!(text.contains("dcadls_pdes_rounds_total 15"));
+        assert!(text.contains("dcadls_pdes_horizon_stalls_total 2"));
+        assert!(text.contains("dcadls_pdes_mailbox_depth 7"));
     }
 
     #[test]

@@ -61,6 +61,11 @@ pub struct SessionConfig {
     /// (`--stream-metrics`); 0 disables streaming — see
     /// `docs/metrics-schema.md` and [`SessionOutcome::stream`].
     pub stream_interval: f64,
+    /// Worker threads for the `--slowdown` solo-baseline fan-out
+    /// ([`session_slowdowns`]). The session simulation itself always runs
+    /// on one global virtual-time order (tenants couple through the shared
+    /// arbiters); only the independent solo re-runs parallelize.
+    pub des_threads: u32,
     pub tenants: Vec<TenantSpec>,
 }
 
@@ -76,8 +81,16 @@ impl SessionConfig {
             record_exec_spans: false,
             record_grant_trace: false,
             stream_interval: 0.0,
+            des_threads: 1,
             tenants: vec![],
         }
+    }
+
+    /// Fan the `--slowdown` solo baselines out over `n` worker threads
+    /// (1 = fully sequential; the session run itself is unaffected).
+    pub fn with_des_threads(mut self, n: u32) -> Self {
+        self.des_threads = n.max(1);
+        self
     }
 
     /// Enable observability streaming at the given virtual-time interval
@@ -167,36 +180,76 @@ pub fn simulate_session(cfg: &SessionConfig) -> anyhow::Result<SessionOutcome> {
 /// **solo** (arrival 0, same placement, otherwise empty cluster) and
 /// `slowdown = turnaround / solo_turnaround`. Returns
 /// `(outcome, slowdowns, mean_slowdown)`. Solo runs are memoized by loop
-/// shape, so K identical tenants cost one extra simulation.
+/// shape, so K identical tenants cost one extra simulation; with
+/// [`SessionConfig::des_threads`] > 1 the distinct baselines — independent
+/// single-tenant simulations — fan out over that many worker threads.
+/// First-occurrence order keys the memo table either way, so the report
+/// is identical for every thread count.
 pub fn session_slowdowns(
     cfg: &SessionConfig,
 ) -> anyhow::Result<(SessionOutcome, Vec<f64>, f64)> {
     let outcome = simulate_session(cfg)?;
-    let mut cache: std::collections::HashMap<String, f64> = std::collections::HashMap::new();
-    let mut slowdowns = Vec::with_capacity(cfg.tenants.len());
+    // Distinct loop shapes, in first-occurrence order.
+    let mut keys: Vec<String> = Vec::with_capacity(cfg.tenants.len());
+    let mut slot: std::collections::HashMap<String, usize> = std::collections::HashMap::new();
+    let mut firsts: Vec<usize> = Vec::new();
     for (i, spec) in cfg.tenants.iter().enumerate() {
         let key = format!(
             "{}|{}|{}|{}|{:?}",
             spec.n, spec.technique, spec.offset, spec.span, spec.cost
         );
-        let solo = match cache.get(&key) {
-            Some(&s) => s,
-            None => {
-                let mut solo_spec = spec.clone();
-                solo_spec.arrival = 0.0;
-                solo_spec.cancel_at = None;
-                let solo_cfg = SessionConfig {
-                    tenants: vec![solo_spec],
-                    record_assignments: false,
-                    record_exec_spans: false,
-                    record_grant_trace: false,
-                    ..cfg.clone()
-                };
-                let s = simulate_session(&solo_cfg)?.tenants[0].turnaround;
-                cache.insert(key, s);
-                s
-            }
+        if !slot.contains_key(&key) {
+            slot.insert(key.clone(), firsts.len());
+            firsts.push(i);
+        }
+        keys.push(key);
+    }
+    let solo_turnaround = |i: usize| -> anyhow::Result<f64> {
+        let mut solo_spec = cfg.tenants[i].clone();
+        solo_spec.arrival = 0.0;
+        solo_spec.cancel_at = None;
+        let solo_cfg = SessionConfig {
+            tenants: vec![solo_spec],
+            record_assignments: false,
+            record_exec_spans: false,
+            record_grant_trace: false,
+            ..cfg.clone()
         };
+        Ok(simulate_session(&solo_cfg)?.tenants[0].turnaround)
+    };
+    let threads = (cfg.des_threads as usize).clamp(1, firsts.len().max(1));
+    let solos: Vec<f64> = if threads > 1 {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let mut slots: Vec<Option<anyhow::Result<f64>>> = Vec::new();
+        slots.resize_with(firsts.len(), || None);
+        let slots = std::sync::Mutex::new(slots);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let d = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if d >= firsts.len() {
+                        break;
+                    }
+                    let r = solo_turnaround(firsts[d]);
+                    slots.lock().unwrap()[d] = Some(r);
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(firsts.len());
+        for r in slots.into_inner().unwrap() {
+            out.push(r.expect("every solo baseline ran")?);
+        }
+        out
+    } else {
+        let mut out = Vec::with_capacity(firsts.len());
+        for &i in &firsts {
+            out.push(solo_turnaround(i)?);
+        }
+        out
+    };
+    let mut slowdowns = Vec::with_capacity(cfg.tenants.len());
+    for (i, key) in keys.iter().enumerate() {
+        let solo = solos[slot[key]];
         let t = outcome.tenants[i].turnaround;
         slowdowns.push(if solo > 0.0 { t / solo } else { 1.0 });
     }
@@ -1052,6 +1105,7 @@ impl<'a> TenantSim<'a> {
                 events,
                 switch_events: vec![],
                 stream: vec![],
+                pdes: None,
             };
             messages_total += tn.messages;
             let completion = result.t_par();

@@ -87,7 +87,8 @@ fn collect_emitted(j: &Json, keys: &mut BTreeSet<String>, events: &mut BTreeSet<
 /// subtree entries (and switch records when the controller rebinds), a
 /// session with interval + terminal tenant records — plus one synthetic
 /// switch record so its fields are covered even if the adaptive cell
-/// happens not to rebind.
+/// happens not to rebind, and the `pdes` summary object from a sharded
+/// run (documented alongside the stream vocabulary).
 fn all_stream_records() -> Vec<Json> {
     let mut records = Vec::new();
 
@@ -165,6 +166,37 @@ fn all_stream_records() -> Vec<Json> {
         to: TechniqueKind::Gss,
         predicted_ratio: 0.8,
     }));
+
+    // Not a stream record: the `pdes` summary object exactly as
+    // `dca-dls hier --json` emits it, built from a really-sharded run so
+    // the doc's PDES table stays pinned to the executor (no allowlist).
+    let mut sharded = DesConfig::new(
+        LoopParams::new(8_192, 16),
+        TechniqueKind::Fac2,
+        ExecutionModel::HierDca,
+        ClusterConfig {
+            nodes: 4,
+            ranks_per_node: 4,
+            ..ClusterConfig::minihpc()
+        },
+        IterationCost::Constant(1e-5),
+    )
+    .with_threads(2);
+    sharded.hier = HierParams::with_inner(TechniqueKind::Ss);
+    let p = simulate(&sharded)
+        .expect("sharded cell")
+        .pdes
+        .expect("two DES threads must shard this tree");
+    records.push(Json::obj().field(
+        "pdes",
+        Json::obj()
+            .field("shards", p.shards)
+            .field("threads", p.threads)
+            .field("rounds", p.rounds)
+            .field("lookahead_ns", p.lookahead_ns)
+            .field("horizon_stalls", p.horizon_stalls)
+            .field("mailbox_depth_max", p.mailbox_depth_max),
+    ));
 
     records
 }

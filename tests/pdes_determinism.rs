@@ -1,0 +1,139 @@
+//! Property tests pinning the PDES determinism guarantee (docs/pdes.md):
+//! for every thread count, the sharded engine returns a result
+//! bit-identical to the sequential event loop — same schedule, same
+//! makespan, same protocol counters. The partition is geometry-derived
+//! (node groups for the flat models, level-1 subtrees for HIER-DCA), so
+//! the thread count only changes who *executes* a shard, never what any
+//! shard observes.
+
+use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
+use dca_dls::des::{simulate, DesConfig, DesResult};
+use dca_dls::sched::Assignment;
+use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::tenant::{session_slowdowns, SessionConfig, TenantSpec};
+use dca_dls::workload::IterationCost;
+
+const THREADS: [u32; 3] = [2, 4, 8];
+
+fn cluster(nodes: u32, rpn: u32) -> ClusterConfig {
+    ClusterConfig { nodes, ranks_per_node: rpn, ..ClusterConfig::minihpc() }
+}
+
+/// Everything the guarantee covers, in one comparable value.
+fn fingerprint(r: &DesResult) -> (Vec<Assignment>, f64, u64, Vec<u64>, u64) {
+    (
+        r.sorted_assignments(),
+        r.t_par(),
+        r.fast_grants,
+        r.level_messages.clone(),
+        r.stats.messages,
+    )
+}
+
+#[test]
+fn flat_dca_is_thread_count_invariant() {
+    for path in [SchedPath::TwoPhase, SchedPath::LockFree] {
+        let mk = |threads: u32| {
+            let cl = cluster(4, 4);
+            let mut cfg = DesConfig::new(
+                LoopParams::new(40_000, cl.total_ranks()),
+                TechniqueKind::Fac2,
+                ExecutionModel::Dca,
+                cl,
+                IterationCost::Constant(1e-5),
+            )
+            .with_threads(threads);
+            cfg.sched_path = path;
+            simulate(&cfg).unwrap()
+        };
+        let seq = mk(1);
+        assert!(seq.pdes.is_none(), "{path:?}: one thread keeps the sequential loop");
+        let base = fingerprint(&seq);
+        for t in THREADS {
+            let par = mk(t);
+            assert_eq!(base, fingerprint(&par), "{path:?} t={t}");
+            assert!(par.pdes.is_some(), "{path:?} t={t}");
+        }
+    }
+}
+
+#[test]
+fn hier_depth3_is_thread_count_invariant() {
+    for path in [SchedPath::TwoPhase, SchedPath::LockFree] {
+        let mk = |threads: u32| {
+            let cl = ClusterConfig { racks: 2, ..cluster(4, 4) };
+            let mut cfg = DesConfig::new(
+                LoopParams::new(24_000, cl.total_ranks()),
+                TechniqueKind::Fac2,
+                ExecutionModel::HierDca,
+                cl,
+                IterationCost::Constant(1e-5),
+            )
+            .with_threads(threads);
+            cfg.hier = HierParams::with_inner(TechniqueKind::Ss)
+                .with_levels(3)
+                .with_fanouts(&[2, 2, 4]);
+            cfg.sched_path = path;
+            simulate(&cfg).unwrap()
+        };
+        let base = fingerprint(&mk(1));
+        for t in THREADS {
+            assert_eq!(base, fingerprint(&mk(t)), "{path:?} t={t}");
+        }
+    }
+}
+
+/// The fused master tier (`--master-lockfree`) routes its atom ops through
+/// the same level-0 choke point, so it must shard just as exactly.
+#[test]
+fn hier_master_lockfree_is_thread_count_invariant() {
+    let mk = |threads: u32| {
+        let cl = cluster(4, 4);
+        let mut cfg = DesConfig::new(
+            LoopParams::new(24_000, cl.total_ranks()),
+            TechniqueKind::Fac2,
+            ExecutionModel::HierDca,
+            cl,
+            IterationCost::Constant(1e-5),
+        )
+        .with_threads(threads);
+        cfg.hier = HierParams::with_inner(TechniqueKind::Ss).with_master_lockfree();
+        cfg.sched_path = SchedPath::LockFree;
+        simulate(&cfg).unwrap()
+    };
+    let seq = mk(1);
+    assert!(seq.fast_grants > 0, "the fused master tier must actually engage");
+    let base = fingerprint(&seq);
+    for t in THREADS {
+        assert_eq!(base, fingerprint(&mk(t)), "t={t}");
+    }
+}
+
+/// A seeded multi-tenant session: `des_threads` fans the `--slowdown` solo
+/// baselines out, and the whole report — session outcome and every
+/// slowdown ratio — must not depend on the thread count.
+#[test]
+fn session_slowdowns_are_thread_count_invariant() {
+    const TECHS: [TechniqueKind; 3] =
+        [TechniqueKind::Ss, TechniqueKind::Gss, TechniqueKind::Fac2];
+    let mk = |threads: u32| {
+        let mut cfg = SessionConfig::new(ClusterConfig::small(16)).with_des_threads(threads);
+        for i in 0..6u64 {
+            cfg = cfg.admit(
+                TenantSpec::new(format!("t{i}"), 400 + 97 * i, TECHS[(i % 3) as usize])
+                    .arriving_at(i as f64 * 1e-4),
+            );
+        }
+        session_slowdowns(&cfg).unwrap()
+    };
+    let (o1, s1, m1) = mk(1);
+    assert_eq!(s1.len(), 6);
+    for t in THREADS {
+        let (o, s, m) = mk(t);
+        assert_eq!(s1, s, "t={t}");
+        assert_eq!(m1, m, "t={t}");
+        assert_eq!(o1.makespan, o.makespan, "t={t}");
+        assert_eq!(o1.messages, o.messages, "t={t}");
+        assert_eq!(o1.jain_fairness, o.jain_fairness, "t={t}");
+    }
+}

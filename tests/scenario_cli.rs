@@ -103,6 +103,39 @@ fn unknown_verb_and_missing_args_exit_two() {
     );
 }
 
+/// `--jobs N` executes the specs on worker threads but still prints the
+/// reports in list order and keeps the worst exit code.
+#[test]
+fn parallel_jobs_keep_order_and_worst_exit_code() {
+    let out = dca_dls(&[
+        "scenario",
+        "run",
+        "--jobs",
+        "2",
+        &fixture("scenario_pass.json"),
+        &fixture("scenario_fail.json"),
+    ]);
+    assert_eq!(code(&out), 1, "stderr: {}", stderr(&out));
+    let text = stdout(&out);
+    let pass = text.find("fixture-pass: PASS").expect("pass report");
+    let fail = text.find("fixture-fail: FAIL").expect("fail report");
+    assert!(pass < fail, "reports must print in list order: {text}");
+
+    // Usage errors: a zero job count, and --jobs with --stream-metrics.
+    let out = dca_dls(&["scenario", "run", "--jobs", "0", &fixture("scenario_pass.json")]);
+    assert_eq!(code(&out), 2, "--jobs 0 is a usage error");
+    let out = dca_dls(&[
+        "scenario",
+        "run",
+        "--jobs",
+        "2",
+        "--stream-metrics",
+        "-",
+        &fixture("scenario_pass.json"),
+    ]);
+    assert_eq!(code(&out), 2, "--jobs cannot stream one virtual-time order");
+}
+
 #[test]
 fn validate_and_explain_accept_good_specs() {
     let out = dca_dls(&["scenario", "validate", &fixture("scenario_pass.json")]);
