@@ -25,10 +25,21 @@
 //! FAC▸STATIC with the fused master tier — docs/pdes.md) runs the
 //! sequential loop against the subtree-sharded executor, asserts the two
 //! are bit-identical, and gates the exact schedule counts with
-//! `direction: "higher"` rows. `DES_THREADS=N` (CI runs 1 and 4) routes
-//! every DES cell through the PDES executor — the gated numbers must not
-//! move. `BENCH_ASSERT_PDES_SPEEDUP=1` additionally asserts the ≥2.5×
-//! events/sec PDES speedup on the huge cell (off by default: wall clock).
+//! `direction: "higher"` rows. `DES_THREADS=N` (CI runs 1, 4 and 8)
+//! routes every DES cell through the PDES executor — the gated numbers
+//! must not move. `BENCH_ASSERT_PDES_SPEEDUP=1` additionally asserts the
+//! ≥2.5× events/sec PDES speedup on the huge cell (off by default: wall
+//! clock).
+//!
+//! A tight-latency PDES cell (SS over 8×8 ranks at 1 µs iterations — the
+//! smallest cross-shard latency class sits within ~2× of the mean event
+//! spacing) runs the conservative and hybrid executors against the
+//! sequential loop, asserts both bit-identical, and reports both
+//! events/sec speedups; this is the adversarial regime where
+//! conservative horizon rounds carry only a handful of events each and
+//! only the optimistic window recovers the parallelism.
+//! `BENCH_ASSERT_PDES_OPT_SPEEDUP=1` hard-asserts hybrid ≥ 2× at 4
+//! threads while conservative stays under 1.3× (off by default).
 //!
 //! Run: `cargo bench --bench sched_throughput` (plain harness). Emits
 //! `BENCH_sched_throughput.json` (path override:
@@ -40,7 +51,7 @@ use std::time::Instant;
 
 use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use dca_dls::coordinator::{self, EngineConfig};
-use dca_dls::des::{simulate, DesConfig, DesResult};
+use dca_dls::des::{pdes::PdesMode, simulate, DesConfig, DesResult};
 use dca_dls::report::json::Json;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
 use dca_dls::tenant::{session_slowdowns, ArbitrationPolicy, SessionConfig, TenantSpec, TenantState};
@@ -70,6 +81,16 @@ const HUGE_NODES: u32 = 4_096;
 const HUGE_RPN: u32 = 256;
 const HUGE_N: u64 = 1 << 30;
 const HUGE_COST: f64 = 1e-6;
+
+// Tight-latency PDES cell — the adversarial regime for conservative
+// horizon rounds: SS keeps every grant a cross-shard round trip and the
+// 2 µs inter-node class is within ~2× of the mean event spacing, so each
+// conservative round carries only a handful of events. Keep in lockstep
+// with the TIGHT_* constants in python/tools/sched_throughput_model.py.
+const TIGHT_NODES: u32 = 8;
+const TIGHT_RPN: u32 = 8;
+const TIGHT_N: u64 = 200_000;
+const TIGHT_COST: f64 = 1e-6;
 
 /// CI legs run `DES_THREADS={1,4}`: above 1, every DES cell goes through
 /// the subtree-sharded PDES executor and the gated rows must not move
@@ -132,6 +153,25 @@ fn run_huge(threads: u32) -> Cell {
     );
     cfg.hier = HierParams::with_inner(TechniqueKind::Static).with_master_lockfree();
     cfg.sched_path = SchedPath::LockFree;
+    cfg.record_assignments = false;
+    cfg.des_threads = threads;
+    let t0 = Instant::now();
+    let r = simulate(&cfg).expect("simulate");
+    Cell { r, wall: t0.elapsed().as_secs_f64() }
+}
+
+/// The tight-latency cell: flat DCA SS over 8×8 ranks at 1 µs iterations.
+fn run_tight(threads: u32, mode: PdesMode) -> Cell {
+    let cluster =
+        ClusterConfig { nodes: TIGHT_NODES, ranks_per_node: TIGHT_RPN, ..ClusterConfig::minihpc() };
+    let mut cfg = DesConfig::new(
+        LoopParams::new(TIGHT_N, cluster.total_ranks()),
+        TechniqueKind::Ss,
+        ExecutionModel::Dca,
+        cluster,
+        IterationCost::Constant(TIGHT_COST),
+    )
+    .with_pdes_mode(mode);
     cfg.record_assignments = false;
     cfg.des_threads = threads;
     let t0 = Instant::now();
@@ -370,10 +410,86 @@ fn main() {
             row = row
                 .field("pdes_shards", u64::from(p.shards))
                 .field("pdes_threads", u64::from(p.threads))
+                .field("pdes_mode", p.mode.as_str())
                 .field("pdes_rounds", p.rounds)
                 .field("pdes_lookahead_ns", p.lookahead_ns)
+                .field("pdes_window_ns", p.window_ns)
                 .field("pdes_horizon_stalls", p.horizon_stalls)
-                .field("pdes_mailbox_depth_max", p.mailbox_depth_max);
+                .field("pdes_mailbox_depth_max", p.mailbox_depth_max)
+                .field("pdes_rollbacks", p.rollbacks)
+                .field("pdes_speculated_events", p.speculated_events);
+        }
+        info.push(row);
+    }
+
+    // Tight-latency PDES cell: the regime the optimistic window exists
+    // for. The 2 µs cross-shard class bounds each conservative round to a
+    // sliver of virtual time, so barrier overhead eats the parallelism;
+    // the hybrid executor speculates past the horizon and wins it back.
+    // Both executors must still be bit-identical to the sequential loop.
+    let tight_scenario = format!("TIGHT SS {TIGHT_NODES}x{TIGHT_RPN}");
+    let tight_threads = des_threads().max(4);
+    let tseq = run_tight(1, PdesMode::Hybrid);
+    let tcons = run_tight(tight_threads, PdesMode::Conservative);
+    let thyb = run_tight(tight_threads, PdesMode::Hybrid);
+    assert!(tseq.r.pdes.is_none(), "one thread keeps the sequential loop");
+    for (mode, c) in [("conservative", &tcons), ("hybrid", &thyb)] {
+        let p = c.r.pdes.as_ref().expect("sharded run reports PDES counters");
+        assert!(p.shards > 1, "{mode}: the tight cell must shard");
+        assert_eq!(tseq.r.stats.chunks, c.r.stats.chunks, "tight/{mode}: chunk count");
+        assert_eq!(tseq.r.stats.messages, c.r.stats.messages, "tight/{mode}: message count");
+        assert_eq!(tseq.r.t_par(), c.r.t_par(), "tight/{mode}: t_par bit-identical");
+        assert_eq!(tseq.r.events, c.r.events, "tight/{mode}: event count");
+    }
+    let hp = thyb.r.pdes.as_ref().unwrap();
+    assert!(hp.speculated_events > 0, "the window must open on the tight cell");
+    assert_eq!(tcons.r.pdes.as_ref().unwrap().rollbacks, 0, "conservative never rolls back");
+    let seq_eps = tseq.r.events as f64 / tseq.wall.max(1e-9);
+    let cons_speedup = (tcons.r.events as f64 / tcons.wall.max(1e-9)) / seq_eps;
+    let hyb_speedup = (thyb.r.events as f64 / thyb.wall.max(1e-9)) / seq_eps;
+    println!(
+        "{tight_scenario} N={TIGHT_N}: t_par {:.4}s, {} events — seq {:.2}s; \
+         ×{tight_threads} conservative {:.2}s ({cons_speedup:.2}x) vs hybrid {:.2}s \
+         ({hyb_speedup:.2}x, {} speculated, {} rollbacks)",
+        tseq.r.t_par(),
+        tseq.r.events,
+        tseq.wall,
+        tcons.wall,
+        thyb.wall,
+        hp.speculated_events,
+        hp.rollbacks
+    );
+    if std::env::var("BENCH_ASSERT_PDES_OPT_SPEEDUP").as_deref() == Ok("1") {
+        assert!(
+            hyb_speedup >= 2.0,
+            "hybrid events/sec speedup {hyb_speedup:.2}x < 2x on the tight cell \
+             (conservative got {cons_speedup:.2}x)"
+        );
+        assert!(
+            cons_speedup < 1.3,
+            "conservative got {cons_speedup:.2}x on the tight cell — it is no \
+             longer adversarial; retune TIGHT_* so the optimistic window stays \
+             load-bearing"
+        );
+    }
+    rows.push(
+        Json::obj()
+            .field("scenario", tight_scenario.as_str())
+            .field("tol", TOL)
+            .field("direction", "lower")
+            .field("T-PAR", tseq.r.t_par()),
+    );
+    for (label, c) in [("sequential", &tseq), ("conservative", &tcons), ("hybrid", &thyb)] {
+        let mut row = info_row(&tight_scenario, SchedPath::TwoPhase, c).field("engine", label);
+        if let Some(p) = &c.r.pdes {
+            row = row
+                .field("pdes_shards", u64::from(p.shards))
+                .field("pdes_threads", u64::from(p.threads))
+                .field("pdes_mode", p.mode.as_str())
+                .field("pdes_rounds", p.rounds)
+                .field("pdes_window_ns", p.window_ns)
+                .field("pdes_rollbacks", p.rollbacks)
+                .field("pdes_speculated_events", p.speculated_events);
         }
         info.push(row);
     }

@@ -50,7 +50,7 @@ def main():
     os.makedirs(OUT, exist_ok=True)
 
     # --- 1. hier_sweep "calc 100 µs (extreme)" HIER-DCA row -----------------
-    print("[1/5] hier-calc-100us")
+    print("[1/6] hier-calc-100us")
     sim = m.TreeSim(65536, ["fac2", "ss"], [16, 16], cluster=m.Cluster(),
                     delay_calc=100e-6)
     t = sim.run()
@@ -76,7 +76,7 @@ def main():
     })
 
     # --- 2. hier_sweep "adaptive exp-slowdown 100 µs" HIER-DCA+ADAPT row ----
-    print("[2/5] adaptive-exp-slowdown")
+    print("[2/6] adaptive-exp-slowdown")
     delay = m.Delay(calc=100e-6, dist="exp", seed=0xAD0001)
     sim = m.TreeSim(131072, ["fac2", "ss"], [16, 16], cluster=m.Cluster(),
                     delay=delay, cost=1e-5,
@@ -110,7 +110,7 @@ def main():
     })
 
     # --- 3. sched_throughput "DCA SS" LOCKFREE row --------------------------
-    print("[3/5] dca-ss-lockfree")
+    print("[3/6] dca-ss-lockfree")
     t = m.FlatSim("dca", 0.0, 0.0, cluster=m.Cluster(nodes=4, rpn=16),
                   tech="ss", n=50000, cost=1e-5, lockfree=True).run()
     expect_t = 0.025034
@@ -134,7 +134,7 @@ def main():
     })
 
     # --- 4. sched_throughput "TENANTS 64x16 SS" FAIR-SHARE row --------------
-    print("[4/5] tenants-fair-share")
+    print("[4/6] tenants-fair-share")
     specs = [m.Tenant(40000, "ss", cost=1e-5)] + [
         m.Tenant(800, "ss", arrival=0.002 * i, cost=1e-5) for i in range(1, 64)
     ]
@@ -167,7 +167,7 @@ def main():
     # scenario cluster block cannot express, so this cell pins the DES
     # equivalent: a fixed watermark hiding a 100 µs *assignment* delay on the
     # default geometry. The no-watermark port run is printed for context.
-    print("[5/5] hier-prefetch")
+    print("[5/6] hier-prefetch")
     base = m.TreeSim(65536, ["fac2", "ss"], [16, 16], cluster=m.Cluster(),
                      delay_assign=100e-6, cost=1e-5).run()
     sim = m.TreeSim(65536, ["fac2", "ss"], [16, 16], cluster=m.Cluster(),
@@ -192,6 +192,41 @@ def main():
             "cost": 1e-5,
             "delay": {"site": "assignment", "us": 100.0},
             "watermark": 64,
+        },
+        "expect": {"t_par": round(t, 9), "tol": 0.10},
+    })
+
+    # --- 6. PDES cell: sharded run pinned to the sequential port value ------
+    # The PDES executor is bit-identical to the sequential loop at every
+    # thread count and in both modes (docs/pdes.md), so the sequential port
+    # number *is* the expectation for the sharded cell — no parallel port
+    # needed. The cell pins the hybrid executor on a racked geometry (2
+    # racks -> two-tier sharding) at 4 DES threads.
+    print("[6/6] pdes-hybrid-gss")
+    # inter_rack pinned to the Rust miniHPC default (6 us), not the port's
+    # depth-3 scenario class.
+    sim = m.FlatSim("dca", 0.0, 0.0,
+                    cluster=m.Cluster(nodes=8, rpn=8, racks=2, inter_rack=6e-6),
+                    tech="gss", n=65536, cost=1e-5)
+    t = sim.run()
+    print(f"  {'t_par (sequential port)':<32} port={t:.9g}")
+    write("pdes-hybrid-gss.json", {
+        "schema": SCHEMA,
+        "name": "pdes-hybrid-gss",
+        "description": "PDES cell: flat DCA GSS over 8x8 ranks run on the "
+                       "hybrid sharded executor at 4 DES threads; the "
+                       "expectation is the sequential port value, which the "
+                       "sharded run must match by the PDES determinism "
+                       "guarantee.",
+        "kind": "des",
+        "des": {
+            "n": 65536,
+            "technique": "gss",
+            "model": "dca",
+            "cost": 1e-5,
+            "cluster": {"nodes": 8, "ranks_per_node": 8, "racks": 2},
+            "des_threads": 4,
+            "des_mode": "hybrid",
         },
         "expect": {"t_par": round(t, 9), "tol": 0.10},
     })

@@ -44,6 +44,17 @@ HUGE_NODES = 4096
 HUGE_RPN = 256
 HUGE_N = 1 << 30
 
+# Tight-latency PDES cell (docs/pdes.md §Bench & CI): flat DCA SS over
+# 8×8 ranks at 1 µs iterations — the adversarial regime for conservative
+# horizon rounds. The row gates the sequential t_par; the sharded runs
+# (both modes) must match it bit for bit, so one blessed number covers
+# every DES_THREADS leg. Keep in lockstep with the TIGHT_* constants in
+# benches/sched_throughput.rs.
+TIGHT_NODES = 8
+TIGHT_RPN = 8
+TIGHT_N = 200_000
+TIGHT_COST = 1e-6
+
 # The bench's technique order (TechniqueKind::EVALUATED minus AF), by the
 # port's names; keys in the JSON use the Rust display names.
 TECHS = [
@@ -105,6 +116,15 @@ def tenant_cell(policy):
         assert sim.state[t] == "completed"
         m.verify_coverage(tn.assignments, sim.specs[t].n)
     return sim, mean
+
+
+def tight_cell():
+    sim = m.FlatSim("dca", 0.0, 0.0,
+                    cluster=m.Cluster(nodes=TIGHT_NODES, rpn=TIGHT_RPN),
+                    tech="ss", n=TIGHT_N, cost=TIGHT_COST)
+    t = sim.run()
+    m.verify_coverage(sim.assignments, TIGHT_N)
+    return t
 
 
 def huge_cell():
@@ -206,6 +226,13 @@ def main():
     rows.append({"scenario": f"HUGE FAC▸STATIC {HUGE_NODES}x{HUGE_RPN}",
                  "tol": 0.0, "direction": "higher",
                  "CHUNKS": leaf, "FAST-GRANTS": master + leaf})
+
+    t_tight = tight_cell()
+    print(f"TIGHT SS {TIGHT_NODES}x{TIGHT_RPN} N={TIGHT_N}: "
+          f"t_par {t_tight:.5f}s (sequential port; PDES bit-identity makes "
+          f"this the conservative AND hybrid number)")
+    rows.append({"scenario": f"TIGHT SS {TIGHT_NODES}x{TIGHT_RPN}",
+                 "tol": TOL, "direction": "lower", "T-PAR": t_tight})
 
     doc = {"bench": "sched_throughput", "n": N, "ranks": NODES * RPN,
            "scenarios": rows}

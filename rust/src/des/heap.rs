@@ -61,7 +61,9 @@ pub(crate) fn shift_for_latency(min_latency_ns: u64) -> u32 {
 }
 
 /// A scheduled occurrence of `E` at an absolute virtual time (nanoseconds).
-/// Ordering ignores the payload: `(at_ns, seq)` min-first.
+/// Ordering ignores the payload: `(at_ns, seq)` min-first. `Clone` so a
+/// whole queue can serve as (part of) a PDES rollback checkpoint.
+#[derive(Clone)]
 struct Entry<E> {
     at_ns: u64,
     seq: u64,
@@ -87,7 +89,10 @@ impl<E> Ord for Entry<E> {
 }
 
 /// Deterministic calendar event queue (kept under its historical name —
-/// every DES event loop owns one).
+/// every DES event loop owns one). `Clone` clones the full calendar —
+/// including `next_seq`, so a restored clone replays identical tie order —
+/// which is what makes it usable as a PDES rollback checkpoint.
+#[derive(Clone)]
 pub struct EventHeap<E> {
     /// The ring: bucket `i` collects events whose slice index maps to `i`.
     wheel: Vec<BinaryHeap<Entry<E>>>,

@@ -23,6 +23,7 @@ pub mod heap;
 pub mod pdes;
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use crate::coordinator::protocol::{AfInfo, PerfReport};
@@ -75,10 +76,16 @@ pub struct DesConfig {
     /// Worker threads for the parallel DES core (`--des-threads`); 1 (the
     /// default) runs the classic sequential event loop. With more, the
     /// simulation is partitioned into shards at subtree (hier) or rank
-    /// -range (flat) boundaries and executed by [`pdes::run_conservative`]
-    /// — results are bit-identical to the sequential core for every
-    /// thread count (see `docs/pdes.md`).
+    /// -range (flat) boundaries and executed by [`pdes::run_sharded`] —
+    /// results are bit-identical to the sequential core for every thread
+    /// count (see `docs/pdes.md`). 0 means **auto**: clamp to available
+    /// parallelism (and, inside the executor, to the shard count).
     pub des_threads: u32,
+    /// Round protocol of the parallel core: conservative horizon rounds,
+    /// or the hybrid loop whose per-shard controller may open an
+    /// optimistic window (the default — still bit-identical, see
+    /// [`pdes::PdesMode`]). Ignored when `des_threads == 1`.
+    pub pdes_mode: pdes::PdesMode,
 }
 
 impl DesConfig {
@@ -102,6 +109,7 @@ impl DesConfig {
             record_assignments: true,
             stream_interval: 0.0,
             des_threads: 1,
+            pdes_mode: pdes::PdesMode::default(),
         }
     }
 
@@ -140,10 +148,28 @@ impl DesConfig {
     }
 
     /// Run on the parallel DES core with `n` worker threads (1 = the
-    /// sequential event loop).
+    /// sequential event loop, 0 = auto).
     pub fn with_threads(mut self, n: u32) -> Self {
         self.des_threads = n;
         self
+    }
+
+    /// Select the parallel core's round protocol (no effect sequentially).
+    pub fn with_pdes_mode(mut self, mode: pdes::PdesMode) -> Self {
+        self.pdes_mode = mode;
+        self
+    }
+}
+
+/// Resolve `des_threads` (0 = auto) to a concrete worker-thread count:
+/// the machine's available parallelism, which [`pdes::run_sharded`] then
+/// clamps to the shard count. Pure config resolution — the simulated
+/// result is thread-count independent either way.
+pub fn resolved_des_threads(cfg: &DesConfig) -> u32 {
+    if cfg.des_threads == 0 {
+        std::thread::available_parallelism().map_or(1, |n| n.get() as u32)
+    } else {
+        cfg.des_threads
     }
 }
 
@@ -197,15 +223,26 @@ pub struct PdesSummary {
     pub shards: u32,
     /// Worker threads actually used (clamped to the shard count).
     pub threads: u32,
-    /// Conservative synchronization rounds executed.
+    /// Round protocol the executor ran ([`pdes::PdesMode`]).
+    pub mode: pdes::PdesMode,
+    /// Synchronization rounds executed.
     pub rounds: u64,
     /// The conservative lookahead Δ, ns (smallest cross-shard latency).
     pub lookahead_ns: u64,
+    /// Optimistic window bound, ns (= lookahead in hybrid mode, 0 when
+    /// conservative or single-shard).
+    pub window_ns: u64,
     /// Shard-rounds that idled at the horizon with pending events (summed
     /// over shards) — the conservative-sync cost signal.
     pub horizon_stalls: u64,
     /// Deepest one-round inbound mailbox backlog observed on any shard.
     pub mailbox_depth_max: u64,
+    /// Optimistic windows invalidated by a straggler (rolled back and
+    /// replayed in sender order), summed over shards.
+    pub rollbacks: u64,
+    /// Events executed past the conservative horizon (including replayed
+    /// ones), summed over shards.
+    pub speculated_events: u64,
 }
 
 impl PdesSummary {
@@ -213,10 +250,14 @@ impl PdesSummary {
         PdesSummary {
             shards: r.shards as u32,
             threads: r.threads as u32,
+            mode: r.mode,
             rounds: r.rounds,
             lookahead_ns: r.lookahead_ns,
+            window_ns: r.window_ns,
             horizon_stalls: r.horizon_stalls.iter().sum(),
             mailbox_depth_max: r.mailbox_depth_max.iter().copied().max().unwrap_or(0),
+            rollbacks: r.rollbacks.iter().sum(),
+            speculated_events: r.speculated_events.iter().sum(),
         }
     }
 }
@@ -281,19 +322,14 @@ pub fn simulate(cfg: &DesConfig) -> anyhow::Result<DesResult> {
              the two-phase protocol when adaptive) or drop --adaptive"
         );
     }
-    anyhow::ensure!(
-        !(cfg.des_threads > 1 && cfg.stream_interval > 0.0),
-        "--stream-metrics needs the sequential event loop (one global \
-         virtual-time order); drop --des-threads or the stream flags"
-    );
     if cfg.model == ExecutionModel::HierDca {
         // The hierarchical protocol has its own event loop (a recursive
         // tree of master service personas over the latency tiers, any
         // depth) — see `crate::hier`. It dispatches to its sharded PDES
-        // form itself when `des_threads > 1`.
+        // form itself when `des_threads != 1`.
         return crate::hier::simulate_hier(cfg);
     }
-    if cfg.des_threads > 1 {
+    if cfg.des_threads != 1 {
         return simulate_flat_pdes(cfg);
     }
     let mut sim = Sim::new(cfg);
@@ -304,7 +340,7 @@ pub fn simulate(cfg: &DesConfig) -> anyhow::Result<DesResult> {
 // ---------------------------------------------------------------------------
 // events
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 enum Ev {
     /// A scheduling message arrives at rank 0's service queue.
     SvcArrive(SvcTask),
@@ -322,21 +358,25 @@ enum Ev {
     NicFree,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 enum SvcTask {
     Request { w: u32, report: Option<PerfReport> },
     GetStep { w: u32, report: Option<PerfReport> },
     Commit { w: u32, ticket: StepTicket, size: u64 },
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 enum Reply {
     Chunk(Assignment),
-    /// Phase-1 reply. `era` indexes the coordinator binding the step was
+    /// Phase-1 reply. `era` is the coordinator binding the step was
     /// reserved under ([`FlatEra`]) — era 0 (the configured technique over
     /// the whole loop) on static runs; adaptive switches open new eras,
-    /// and in-flight steps keep the era they were reserved under.
-    Step { ticket: StepTicket, af: Option<AfInfo>, era: usize },
+    /// and in-flight steps keep the era they were reserved under. The
+    /// binding travels *in the message* (shared, immutable) rather than as
+    /// an index into coordinator state, so a worker shard can size the
+    /// chunk under the right era even when the reply crosses shards in the
+    /// same round the era was opened — no cross-shard era table to merge.
+    Step { ticket: StepTicket, af: Option<AfInfo>, era: Arc<FlatEra> },
     Done,
 }
 
@@ -368,13 +408,13 @@ enum RmaOp {
 }
 
 /// Rank 0's worker personality state.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 enum OwnState {
     /// Needs to self-schedule its next chunk.
     NeedWork,
     /// (DCA) holds a ticket, must run the local calculation next (under
     /// the binding era the step was reserved in).
-    Calc(StepTicket, usize),
+    Calc(StepTicket, Arc<FlatEra>),
     /// (DCA) calculated `size` for `ticket`, must commit next.
     Commit(StepTicket, u64),
     /// Executing its chunk; `cursor..end` iterations remain (`first` is the
@@ -413,6 +453,30 @@ pub(crate) fn assignments_buffer(cfg: &DesConfig) -> Vec<Assignment> {
 
 // ---------------------------------------------------------------------------
 
+/// One raw stream-tick sample recorded by a *sharded* run (the sequential
+/// loop builds its `interval` JSON records inline instead). Counters are
+/// the shard's state at the tick; the post-run fixed-order merge
+/// ([`merge_flat_stream`]) combines series across shards — exact because
+/// every counter has one writing shard, and a shard whose series ended
+/// holds that counter at its final value.
+#[derive(Debug, Clone)]
+struct FlatTick {
+    chunks: u64,
+    messages: u64,
+    fast_grants: u64,
+    remaining: u64,
+    queue_depth: u64,
+    kind: TechniqueKind,
+    /// `(mu_hat, sigma_hat, overhead_hat)` when the adaptive controller
+    /// exists (each inner value present once its EWMA is primed).
+    ewmas: Option<(Option<f64>, Option<f64>, Option<f64>)>,
+}
+
+/// The simulator core is `Clone`: a shard checkpoint for the optimistic
+/// PDES window is a full snapshot of this struct (calendar queue included
+/// — `EventHeap` clones its seq counter, so replayed pushes renumber
+/// identically).
+#[derive(Clone)]
 struct Sim<'a> {
     cfg: &'a DesConfig,
     topo: Topology,
@@ -427,8 +491,9 @@ struct Sim<'a> {
     adapt: Option<AdaptiveController>,
     /// Binding eras, oldest first (era 0 = the configured technique over
     /// the whole loop); in-flight steps size with the era their phase-1
-    /// reply carried.
-    eras: Vec<FlatEra>,
+    /// reply carried (shared by `Arc` so replies stay self-contained
+    /// across shards).
+    eras: Vec<Arc<FlatEra>>,
     switch_events: Vec<SwitchEvent>,
     // rank 0
     svc_queue: VecDeque<SvcTask>,
@@ -456,6 +521,9 @@ struct Sim<'a> {
     sampler: Option<Sampler>,
     stream: Vec<Json>,
     last_tick_chunks: u64,
+    /// Raw per-tick samples on a *sharded* run (merged post-run); the
+    /// sequential loop leaves this empty and fills `stream` directly.
+    ticks: Vec<FlatTick>,
     // parallel-core sharding (None ⇒ the classic sequential loop)
     shard: Option<ShardSpan>,
     /// Cross-shard sends staged during the current window:
@@ -502,11 +570,11 @@ impl<'a> Sim<'a> {
                 false,
             )
         });
-        let eras = vec![FlatEra {
+        let eras = vec![Arc::new(FlatEra {
             kind: cfg.technique,
             base_step: 0,
             tech: cfg.technique.has_closed_form().then(|| technique.clone()),
-        }];
+        })];
         Sim {
             cfg,
             topo: Topology::new(&cfg.cluster),
@@ -540,6 +608,7 @@ impl<'a> Sim<'a> {
             sampler: Sampler::from_interval_s(cfg.stream_interval),
             stream: Vec::new(),
             last_tick_chunks: 0,
+            ticks: Vec::new(),
             shard: None,
             outbound: Vec::new(),
         }
@@ -632,8 +701,7 @@ impl<'a> Sim<'a> {
     /// Worker-side chunk calculation (DCA): the reservation era's closed
     /// form at the era-rebased step index, or AF's Eq. 11 with the
     /// synchronized aggregates.
-    fn worker_calc(&self, w: u32, ticket: StepTicket, af: Option<AfInfo>, era: usize) -> u64 {
-        let e = &self.eras[era];
+    fn worker_calc(&self, w: u32, ticket: StepTicket, af: Option<AfInfo>, e: &FlatEra) -> u64 {
         if e.kind == TechniqueKind::Af {
             let ws = &self.workers[w as usize];
             match (ws.stats.measured().then(|| ws.stats.mu()).flatten(), af) {
@@ -652,9 +720,10 @@ impl<'a> Sim<'a> {
         self.af.as_ref().and_then(|a| a.globals()).map(|g| AfInfo { d: g.d, e: g.e })
     }
 
-    /// Index of the coordinator slot's current binding era.
-    fn current_era(&self) -> usize {
-        self.eras.len() - 1
+    /// The coordinator slot's current binding era (handed out by value —
+    /// replies carry their era).
+    fn current_binding(&self) -> Arc<FlatEra> {
+        self.eras.last().expect("era 0 always exists").clone()
     }
 
     /// Count one flat grant toward the probe cadence; on a due probe, ask
@@ -677,11 +746,11 @@ impl<'a> Sim<'a> {
                 remaining.max(1),
                 self.cfg.params.p,
             );
-            self.eras.push(FlatEra {
+            self.eras.push(Arc::new(FlatEra {
                 kind: to,
                 base_step: self.queue.step(),
                 tech: Some(Technique::new(to, &params)),
-            });
+            }));
             self.switch_events.push(SwitchEvent {
                 at_s: secs(self.now),
                 level: 0,
@@ -760,10 +829,19 @@ impl<'a> Sim<'a> {
     /// Emit one `interval` stream record per virtual-time tick boundary the
     /// event loop just crossed (the counters are the state *at* the tick —
     /// no event fires between boundaries, so sampling at the first event
-    /// past each boundary is exact).
+    /// past each boundary is exact). On a shard, raw [`FlatTick`] samples
+    /// are recorded instead and the JSON records are built by the post-run
+    /// merge; the tick grid is the same (each shard samples while *its*
+    /// events keep crossing boundaries, and beyond its last tick its
+    /// counters are final — exactly what the merge extends with).
     fn sample_ticks(&mut self) {
         let Some(mut sampler) = self.sampler.take() else { return };
         while let Some(t) = sampler.due(self.now) {
+            if self.shard.is_some() {
+                let sample = self.tick_sample();
+                self.ticks.push(sample);
+                continue;
+            }
             let record = stream::interval_record(&IntervalSample {
                 t,
                 chunks: self.chunks_granted,
@@ -774,7 +852,7 @@ impl<'a> Sim<'a> {
                 remaining: self.queue.remaining(),
             })
             .field("queue_depth", self.svc_queue.len() as u64)
-            .field("technique", self.eras[self.current_era()].kind);
+            .field("technique", self.eras.last().expect("era 0").kind);
             let record = match self.adapt.as_ref() {
                 Some(ctl) => stream::append_ewmas(record, ctl),
                 None => record,
@@ -783,6 +861,23 @@ impl<'a> Sim<'a> {
             self.last_tick_chunks = self.chunks_granted;
         }
         self.sampler = Some(sampler);
+    }
+
+    /// This shard's counters as one raw tick sample — also the "final
+    /// value" the stream merge extends a finished shard's series with.
+    fn tick_sample(&self) -> FlatTick {
+        FlatTick {
+            chunks: self.chunks_granted,
+            messages: self.messages,
+            fast_grants: self.fast_grants,
+            remaining: self.queue.remaining(),
+            queue_depth: self.svc_queue.len() as u64,
+            kind: self.eras.last().expect("era 0").kind,
+            ewmas: self
+                .adapt
+                .as_ref()
+                .map(|ctl| (ctl.mu_hat(), ctl.sigma_hat(), ctl.overhead_hat())),
+        }
     }
 
     fn dispatch(&mut self, ev: Ev) {
@@ -908,7 +1003,7 @@ impl<'a> Sim<'a> {
                     ExecutionModel::Dca => {
                         // Local GetStep: just the service bump.
                         match self.queue.begin_step() {
-                            Some(t) => self.own = OwnState::Calc(t, self.current_era()),
+                            Some(t) => self.own = OwnState::Calc(t, self.current_binding()),
                             None => self.own = OwnState::Finished,
                         }
                         ns(self.cfg.cluster.service_time / self.speed(0))
@@ -924,7 +1019,7 @@ impl<'a> Sim<'a> {
                     (self.cfg.delay.calculation_at(0, self.now) + self.cfg.cluster.calc_time)
                         / self.speed(0),
                 );
-                let size = self.worker_calc(0, ticket, self.af_info(), era);
+                let size = self.worker_calc(0, ticket, self.af_info(), &era);
                 self.own = OwnState::Commit(ticket, size);
                 self.finish_own_action(dur);
             }
@@ -1019,7 +1114,7 @@ impl<'a> Sim<'a> {
                 }
                 let reply = match self.queue.begin_step() {
                     Some(ticket) => {
-                        Reply::Step { ticket, af: self.af_info(), era: self.current_era() }
+                        Reply::Step { ticket, af: self.af_info(), era: self.current_binding() }
                     }
                     None => {
                         self.done_replies += 1;
@@ -1091,7 +1186,7 @@ impl<'a> Sim<'a> {
                 );
                 // Stash the AF info via immediate recompute at CalcDone time:
                 // store in the event (sizes are deterministic).
-                let size = self.worker_calc(w, ticket, af, era);
+                let size = self.worker_calc(w, ticket, af, &era);
                 self.heap.push(
                     self.now + dur,
                     Ev::CalcDone { w, ticket: StepTicket { step: ticket.step, remaining: size } },
@@ -1135,7 +1230,7 @@ impl<'a> Sim<'a> {
                     let back = self.now + dur + self.lat_ns(0, w);
                     let calc =
                         ns(self.cfg.delay.calculation_at(w, back) + self.cfg.cluster.calc_time);
-                    let size = self.worker_calc(w, ticket, None, 0);
+                    let size = self.worker_calc(w, ticket, None, &self.eras[0]);
                     let claim_sent = back + calc + ns(self.cfg.delay.assignment);
                     let arrive = claim_sent + self.lat_ns(w, 0);
                     self.rma_ops += 1;
@@ -1253,32 +1348,53 @@ struct FlatShard<'a> {
 
 impl<'a> pdes::Shard for FlatShard<'a> {
     type Msg = Ev;
+    /// A checkpoint is a full clone of the shard's simulator state —
+    /// calendar queue (seq counter included), work-queue cursors, worker
+    /// table, stream samples. Rollback = swap the clone back in.
+    type Ckpt = Sim<'a>;
 
     fn next_at(&self) -> Option<u64> {
         self.sim.heap.next_at()
     }
 
-    fn advance(&mut self, horizon: u64, outbox: &mut pdes::Outbox<Ev>) {
+    fn advance(&mut self, horizon: u64, outbox: &mut pdes::Outbox<Ev>) -> u64 {
+        let mut n = 0;
         while self.sim.heap.next_at().is_some_and(|t| t < horizon) {
             let (t, ev) = self.sim.heap.pop().expect("probed non-empty");
             self.sim.now = t;
             self.sim.events += 1;
+            n += 1;
+            if self.sim.sampler.is_some() {
+                self.sim.sample_ticks();
+            }
             self.sim.dispatch(ev);
         }
         for (dst, at, ev) in self.sim.outbound.drain(..) {
             outbox.send(dst as usize, at, ev);
         }
+        n
     }
 
     fn deliver(&mut self, at: u64, msg: Ev) {
         self.sim.heap.push(at, msg);
     }
+
+    fn save(&self) -> Sim<'a> {
+        self.sim.clone()
+    }
+
+    fn restore(&mut self, ckpt: Sim<'a>) {
+        self.sim = ckpt;
+    }
 }
 
-/// Upper bound on flat shard groups. Each shard is a full [`Sim`] whose
-/// per-rank arrays span the whole machine (only the owned slice is ever
-/// touched), so the bound caps the O(shards × P) state duplication while
-/// staying above any realistic `--des-threads`. Geometry-derived and
+/// Upper bound on flat shard groups *per rack tier*. Each shard is a full
+/// [`Sim`] whose per-rank arrays span the whole machine (only the owned
+/// slice is ever touched), so the bound caps the O(shards × P) state
+/// duplication while staying above any realistic `--des-threads`.
+/// Single-rack clusters get at most 8 shards (the PR 8 partition); racked
+/// clusters get up to `min(racks, 8)` rack groups × 8 node subgroups —
+/// shard counts follow the machine geometry past 8. Geometry-derived and
 /// thread-independent, as the determinism contract requires.
 const FLAT_SHARD_GROUPS_MAX: u32 = 8;
 
@@ -1292,21 +1408,23 @@ fn flat_lookahead_ns(cluster: &ClusterConfig) -> u64 {
     ns(m.max(0.0))
 }
 
-/// The flat engine's sharded (PDES) form: whole nodes are grouped into at
-/// most [`FLAT_SHARD_GROUPS_MAX`] contiguous shards (rank 0's coordinator
-/// resources live in shard 0 with the rest of node 0), each shard runs
-/// its own calendar queue, and every cross-shard arrival — always a
-/// cross-node message, so never earlier than the lookahead — is exchanged
-/// through [`pdes::run_conservative`]. See `docs/pdes.md`.
+/// The flat engine's sharded (PDES) form: whole nodes are grouped into
+/// contiguous shards (rank 0's coordinator resources live in shard 0 with
+/// the rest of node 0), each shard runs its own calendar queue, and every
+/// cross-shard arrival — always a cross-node message, so never earlier
+/// than the lookahead — is exchanged through [`pdes::run_sharded`] in the
+/// configured [`pdes::PdesMode`]. On racked clusters the shard count
+/// follows the rack tier (`min(racks, 8)` groups × up to 8 node
+/// subgroups) and the executor's routing table collapses cross-rack
+/// channel pairs into per-rack lanes. See `docs/pdes.md`.
 fn simulate_flat_pdes(cfg: &DesConfig) -> anyhow::Result<DesResult> {
-    anyhow::ensure!(
-        !cfg.hier.adaptive.enabled,
-        "--adaptive needs the sequential event loop (the rebinding \
-         coordinator slot is global state); drop --des-threads or --adaptive"
-    );
     let p = cfg.params.p;
     let nodes = cfg.cluster.nodes.max(1);
-    let shards_n = nodes.min(FLAT_SHARD_GROUPS_MAX);
+    let topo = Topology::new(&cfg.cluster);
+    // Effective rack count (1 when the tier doesn't divide the nodes).
+    let racks = topo.racks().max(1);
+    let rack_groups = racks.min(FLAT_SHARD_GROUPS_MAX);
+    let shards_n = nodes.min(rack_groups.saturating_mul(FLAT_SHARD_GROUPS_MAX));
     if shards_n > 1 {
         anyhow::ensure!(
             flat_lookahead_ns(&cfg.cluster) > 0,
@@ -1314,12 +1432,16 @@ fn simulate_flat_pdes(cfg: &DesConfig) -> anyhow::Result<DesResult> {
              run --des-threads 1"
         );
     }
-    let topo = Topology::new(&cfg.cluster);
-    let of_rank: std::sync::Arc<Vec<u32>> = std::sync::Arc::new(
+    let of_rank: Arc<Vec<u32>> = Arc::new(
         (0..p)
             .map(|r| ((topo.node_of(r) as u64 * shards_n as u64) / nodes as u64) as u32)
             .collect(),
     );
+    // Shard → rack-group map for the executor's two-tier routing table
+    // (contiguous, mirroring the node split above). Routing-topology only:
+    // delivery order and results are identical to the flat mesh.
+    let shard_rack: Vec<u32> =
+        (0..shards_n).map(|s| (s as u64 * rack_groups as u64 / shards_n as u64) as u32).collect();
     let mut shards: Vec<FlatShard<'_>> = (0..shards_n)
         .map(|id| {
             let span = ShardSpan { id, of_rank: of_rank.clone() };
@@ -1339,16 +1461,93 @@ fn simulate_flat_pdes(cfg: &DesConfig) -> anyhow::Result<DesResult> {
         staged.push(out);
     }
     pdes::deliver_staged(&mut shards, staged);
-    let (shards, report) =
-        pdes::run_conservative(shards, flat_lookahead_ns(&cfg.cluster), cfg.des_threads);
+    let opts = pdes::PdesOpts { mode: cfg.pdes_mode, reduce: false, rack_of: shard_rack };
+    let (shards, report) = pdes::run_sharded(
+        shards,
+        flat_lookahead_ns(&cfg.cluster),
+        resolved_des_threads(cfg),
+        &opts,
+    );
     Ok(merge_flat_shards(cfg, shards, &report))
+}
+
+/// Deterministic horizon reduction of the per-shard stream-tick series
+/// into the exact `interval`/`switch` record sequence the sequential loop
+/// emits. Fixed shard order, pure post-run merge:
+///
+/// * Every counter has one writing shard — grants, fast grants, the work
+///   queue, the service queue, eras, and the adaptive EWMAs all live on
+///   shard 0 (rank 0's coordinator side); only `messages` is distributed
+///   (sender-side counting), so per tick it is the sum over shards.
+/// * Tick grids align by construction: [`Sampler::due`] yields boundary
+///   `k` at index `k` on every shard, and a shard stops ticking exactly
+///   when it has no later event — beyond its series end its counters sit
+///   at their final values, which is what the merge extends with.
+fn merge_flat_stream(cfg: &DesConfig, shards: &[FlatShard<'_>], t_par: f64) -> Vec<Json> {
+    let Some(sampler) = Sampler::from_interval_s(cfg.stream_interval) else {
+        return Vec::new();
+    };
+    let zero = &shards[0].sim;
+    let zfinal = zero.tick_sample();
+    let max_ticks = shards.iter().map(|s| s.sim.ticks.len()).max().unwrap_or(0);
+    let mut stream = Vec::with_capacity(max_ticks + zero.switch_events.len() + 1);
+    let mut last_chunks = 0u64;
+    for i in 0..max_ticks {
+        let z = zero.ticks.get(i).unwrap_or(&zfinal);
+        let messages: u64 = shards
+            .iter()
+            .map(|s| s.sim.ticks.get(i).map_or(s.sim.messages, |t| t.messages))
+            .sum();
+        let mut record = stream::interval_record(&IntervalSample {
+            t: sampler.tick_at(i),
+            chunks: z.chunks,
+            chunks_delta: z.chunks - last_chunks,
+            interval_s: sampler.interval_s(),
+            messages,
+            fast_grants: z.fast_grants,
+            remaining: z.remaining,
+        })
+        .field("queue_depth", z.queue_depth)
+        .field("technique", z.kind);
+        if let Some((mu, sigma, oh)) = z.ewmas {
+            if let Some(v) = mu {
+                record = record.field("mu_hat", v);
+            }
+            if let Some(v) = sigma {
+                record = record.field("sigma_hat", v);
+            }
+            if let Some(v) = oh {
+                record = record.field("overhead_hat", v);
+            }
+        }
+        stream.push(record);
+        last_chunks = z.chunks;
+    }
+    // Final cumulative record at t_par + the switch records, exactly as
+    // `into_result` emits them.
+    let messages: u64 = shards.iter().map(|s| s.sim.messages).sum();
+    stream.push(
+        stream::interval_record(&IntervalSample {
+            t: t_par,
+            chunks: zfinal.chunks,
+            chunks_delta: zfinal.chunks - last_chunks,
+            interval_s: cfg.stream_interval,
+            messages,
+            fast_grants: zfinal.fast_grants,
+            remaining: zfinal.remaining,
+        })
+        .field("queue_depth", zfinal.queue_depth)
+        .field("technique", zfinal.kind),
+    );
+    stream.extend(zero.switch_events.iter().map(stream::switch_record));
+    stream::sorted_by_time(stream)
 }
 
 /// Combine the per-shard states into the one [`DesResult`] the sequential
 /// loop would have produced: each quantity has exactly one writer (the
 /// owning shard; rank 0's coordinator-side writes all live in shard 0),
 /// so the merge is sums of disjoint counters, element-wise maxima of
-/// write-once finish times, and shard 0's grant log.
+/// write-once finish times, and shard 0's grant/switch/stream logs.
 fn merge_flat_shards(
     cfg: &DesConfig,
     shards: Vec<FlatShard<'_>>,
@@ -1388,14 +1587,17 @@ fn merge_flat_shards(
             rank0_finish_ns = sim.rank0_finish_ns;
         }
     }
-    if let Some(first) = shards.into_iter().next() {
-        assignments = first.sim.assignments;
-    }
     let mut finish: Vec<f64> = finish_ns.iter().map(|&t| secs(t)).collect();
     if cfg.model != ExecutionModel::DcaRma {
         finish[0] = finish[0].max(secs(rank0_finish_ns));
     }
     let stats = LoopStats::from_finish_times(&finish, chunks, wait, messages);
+    let stream = merge_flat_stream(cfg, &shards, stats.t_par);
+    let mut switch_events = Vec::new();
+    if let Some(first) = shards.into_iter().next() {
+        assignments = first.sim.assignments;
+        switch_events = first.sim.switch_events;
+    }
     DesResult {
         stats,
         finish,
@@ -1407,8 +1609,8 @@ fn merge_flat_shards(
         level_messages: vec![messages],
         fast_grants,
         events,
-        switch_events: Vec::new(),
-        stream: Vec::new(),
+        switch_events,
+        stream,
         pdes: Some(PdesSummary::from_report(report)),
     }
 }

@@ -1,5 +1,5 @@
-//! Parallel DES core (PDES): a **conservative, horizon-synchronized**
-//! round executor over statically partitioned shards.
+//! Parallel DES core (PDES): a **two-mode, horizon-synchronized** round
+//! executor over statically partitioned shards.
 //!
 //! Each shard owns a disjoint slice of the simulated machine (a
 //! `LevelSpec` subtree in the hierarchical engine, a worker rank range in
@@ -10,27 +10,122 @@
 //! 2. the global minimum (GVT) plus the **lookahead** — the smallest
 //!    cross-shard latency class — bounds a window `[GVT, GVT + Δ)`;
 //! 3. shards process all local events inside the window in parallel,
-//!    capturing cross-shard sends in per-pair SPSC mailboxes;
-//! 4. after a barrier, each shard drains its inbound mailboxes in sender
+//!    capturing cross-shard sends in the two-tier routing table;
+//! 4. after a barrier, each shard drains its inbound channels in sender
 //!    order and the next round begins.
 //!
 //! Conservatism: a message created at local time `t ≥ GVT` travels a
 //! cross-shard link of latency `≥ Δ`, so it arrives at `t + lat ≥ GVT + Δ`
-//! — never inside the window that created it. Delivering all mailboxes at
+//! — never inside the window that created it. Delivering all channels at
 //! round start therefore never delivers into a shard's past.
+//!
+//! **The hybrid round** ([`PdesMode::Hybrid`]) stretches each
+//! synchronization round to cover up to `3Δ` of simulated time in three
+//! slices, so tight-latency clusters stop paying one barrier set per `Δ`:
+//!
+//! * **committed** `[GVT, H)`, `H = GVT + Δ` — exactly the conservative
+//!   window; its cross-shard sends are staged into the *committed* lane
+//!   set and drained (sender order) right after the advance barrier, so
+//!   tie order inside the committed window is identical to the
+//!   conservative loop's.
+//! * **safe extension** `[H, H + Δ)` — unconditionally advanced by every
+//!   shard after the committed drain. This is still provably
+//!   conservative: a message arriving before `H + Δ` was sent before `H`,
+//!   i.e. inside the committed window, and was just delivered. Extension
+//!   sends go to the *safe* lane set; they arrive in `[H + Δ, H + 2Δ)`.
+//! * **optimistic overhang** `[H + Δ, H + Δ + w)`, `w ≤ Δ` — entered only
+//!   when the per-shard [`WindowController`] opened a window. The shard
+//!   checkpoints at `H + Δ` ([`Shard::save`]), speculates through the
+//!   overhang with sends staged into the *opt* lane set, and resolves
+//!   after the next barrier: if any safe-lane straggler arrives before
+//!   `H + Δ + w` — inside the speculated past — the shard rolls back to
+//!   the checkpoint, drops its staged opt sends, delivers the safe batch
+//!   in sender order, and **replays** the overhang. The replay is exact:
+//!   every message that can arrive before `H + 2Δ ≥ H + Δ + w` was sent
+//!   before `H + Δ` (committed ∪ extension) and is in hand. Opt sends
+//!   were created at `t ≥ H + Δ`, so they arrive at `≥ H + 2Δ`, beyond
+//!   everything any shard executed this round — they are drained in a
+//!   final phase and can never invalidate anyone's window.
+//!
+//! The [`WindowController`] — EWMA of realized cross-shard slack and
+//! committed-window event load, the `sched/adaptive.rs` idiom — picks
+//! conservative vs. optimistic per round and per shard, so the overhang
+//! only opens in regimes where rounds are barrier-bound (sparse windows)
+//! or speculation is observed to be safe (high slack).
 //!
 //! **Determinism is structural, not scheduled.** The shard count is fixed
 //! by the partition geometry (never by the thread count), each shard's
 //! event order is its own `(time, seq)` calendar order, window boundaries
-//! are a pure function of shard states, and mailbox drains run in
-//! `(sender shard, FIFO)` order — so the outcome is a function of the
-//! partition alone. Threads only decide *which core* runs a shard's
-//! window; `--des-threads 1` and `--des-threads 8` walk bit-identical
-//! per-shard histories.
+//! and controller decisions are pure functions of shard states, and
+//! channel drains run in `(sender shard, FIFO)` order — so the outcome is
+//! a function of the partition alone, in both modes. Threads only decide
+//! *which core* runs a shard's window; `--des-threads 1` and
+//! `--des-threads 8` walk bit-identical per-shard histories, and a
+//! rollback replay reconverges exactly.
 
 use std::cell::UnsafeCell;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Barrier;
+
+/// Optimistic window controller: open the window when the realized slack
+/// EWMA says stragglers are rare (≥ this fraction of Δ)…
+const SLACK_SAFE: f64 = 0.95;
+/// …or when the committed window is this sparse (events per round) — the
+/// barrier-bound regime where even a replayed window is cheaper than an
+/// extra synchronization round.
+const SPARSE_EVENTS: f64 = 48.0;
+/// Same smoothing as `sched/adaptive.rs::OBS_EWMA_ALPHA`.
+const PDES_EWMA_ALPHA: f64 = 0.25;
+
+/// Executor mode: pure conservative horizon rounds (PR 8 behavior) or the
+/// hybrid loop whose per-shard controller may open the optimistic window.
+/// Both modes produce bit-identical results; they differ only in how much
+/// wall-clock a synchronization round buys.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PdesMode {
+    Conservative,
+    #[default]
+    Hybrid,
+}
+
+impl PdesMode {
+    pub fn parse(s: &str) -> Option<PdesMode> {
+        match s {
+            "conservative" => Some(PdesMode::Conservative),
+            "hybrid" => Some(PdesMode::Hybrid),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PdesMode::Conservative => "conservative",
+            PdesMode::Hybrid => "hybrid",
+        }
+    }
+}
+
+/// Executor options beyond the lookahead/thread pair.
+#[derive(Debug, Clone, Default)]
+pub struct PdesOpts {
+    pub mode: PdesMode,
+    /// Run [`Shard::reduce`] single-threaded between rounds (its own
+    /// barrier pair). Callers enable this only when shards share
+    /// deterministic global state — e.g. the flat engine's adaptive era
+    /// table.
+    pub reduce: bool,
+    /// Rack id per shard for the two-tier routing table. Empty means one
+    /// rack (a full direct mesh, the PR 8 topology). Same-rack pairs get a
+    /// direct SPSC lane; cross-rack sends share one `(sender, rack)` lane
+    /// scanned read-only by the rack's shards.
+    pub rack_of: Vec<u32>,
+}
+
+impl PdesOpts {
+    pub fn conservative() -> Self {
+        PdesOpts { mode: PdesMode::Conservative, ..Default::default() }
+    }
+}
 
 /// One shard of a partitioned simulation.
 ///
@@ -39,22 +134,44 @@ use std::sync::Barrier;
 /// addressed to another shard through the outbox instead of its own queue.
 pub trait Shard: Send {
     /// A cross-shard message: the destination shard reinjects it into its
-    /// calendar queue at the carried arrival time.
-    type Msg: Send;
+    /// calendar queue at the carried arrival time. `Clone` because
+    /// cross-rack lanes are scanned (not drained) by their rack's shards.
+    type Msg: Send + Clone;
+
+    /// State snapshot taken at overhang entry (`H + Δ`); restoring it
+    /// must rewind the shard exactly (calendar queue, ledgers, counters,
+    /// samplers).
+    type Ckpt: Send;
 
     /// Earliest pending local event time (`None` when the queue is empty).
     fn next_at(&self) -> Option<u64>;
 
-    /// Process all local events with `time < horizon`.
-    fn advance(&mut self, horizon: u64, outbox: &mut Outbox<Self::Msg>);
+    /// Process all local events with `time < horizon`; returns the number
+    /// of events executed (the speculated-events accounting).
+    fn advance(&mut self, horizon: u64, outbox: &mut Outbox<Self::Msg>) -> u64;
 
     /// Inject a cross-shard arrival at absolute time `at`.
     fn deliver(&mut self, at: u64, msg: Self::Msg);
+
+    /// Snapshot the shard for a possible rollback.
+    fn save(&self) -> Self::Ckpt;
+
+    /// Rewind to a snapshot taken by [`Shard::save`].
+    fn restore(&mut self, ckpt: Self::Ckpt);
+
+    /// Deterministic fixed-order cross-shard merge of shared state at a
+    /// round boundary, run by one thread while all others hold at a
+    /// barrier. Default: nothing is shared.
+    fn reduce(_shards: &mut [&mut Self])
+    where
+        Self: Sized,
+    {
+    }
 }
 
 /// Per-sender staging area for cross-shard messages: one FIFO lane per
-/// destination shard, appended during `advance`, drained by the executor
-/// at the barrier.
+/// destination shard, appended during `advance`, moved into the routing
+/// table by the executor.
 pub struct Outbox<M> {
     lanes: Vec<Vec<(u64, M)>>,
 }
@@ -68,60 +185,244 @@ impl<M> Outbox<M> {
     pub fn send(&mut self, dst: usize, at: u64, msg: M) {
         self.lanes[dst].push((at, msg));
     }
+}
 
-    fn is_empty(&self) -> bool {
-        self.lanes.iter().all(Vec::is_empty)
+/// A phase-synchronized channel cell. There are no internal locks: the
+/// round protocol itself is the synchronization — writers touch a cell
+/// only in their exclusive phase, readers only after the barrier that
+/// publishes the writes (the barrier waits establish the happens-before
+/// edge). Direct lanes are single-producer/single-consumer; cross-rack
+/// lanes are single-producer/multi-*reader* (receivers scan a shared
+/// borrow and the producer clears the lane in its next write phase).
+struct PhaseCell<T>(UnsafeCell<Vec<T>>);
+
+// Safety: see the type docs — phase discipline guarantees exclusive
+// mutable access, the barrier publishes writes.
+unsafe impl<T: Send> Sync for PhaseCell<T> {}
+
+impl<T> PhaseCell<T> {
+    fn new() -> Self {
+        PhaseCell(UnsafeCell::new(Vec::new()))
+    }
+
+    /// Safety: caller must hold phase-exclusive *write* access.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get(&self) -> &mut Vec<T> {
+        &mut *self.0.get()
+    }
+
+    /// Safety: caller must be in a phase where no writer is active.
+    unsafe fn get_ref(&self) -> &Vec<T> {
+        &*self.0.get()
     }
 }
 
-/// A single-producer / single-consumer mailbox for one (sender, receiver)
-/// shard pair. There are no internal locks: the round protocol itself is
-/// the synchronization. The sender's thread appends only during the
-/// advance phase, the receiver's thread drains only during the delivery
-/// phase, and a [`Barrier`] separates the phases (barrier waits establish
-/// the happens-before edge), so the two sides never touch the cell
-/// concurrently.
-struct SpscMailbox<M>(UnsafeCell<Vec<(u64, M)>>);
+/// The two-tier routing table for one lane set (committed, safe, or
+/// opt): `direct[src][dst]` carries same-rack pairs, a
+/// `shared[src][rack]` lane carries everything `src` sends into another
+/// rack (entries tagged with the destination shard). Every (src, dst)
+/// pair travels exactly one channel, so `(sender shard, FIFO)` drain
+/// order is preserved; live channel state drops from the `S²` pair mesh
+/// to `Σ_r S_r²` direct lanes plus `S · R` rack lanes.
+struct RoutingTable<M> {
+    rack_of: Vec<u32>,
+    direct: Vec<Vec<PhaseCell<(u64, M)>>>,
+    shared: Vec<Vec<PhaseCell<(usize, u64, M)>>>,
+}
 
-// Safety: see the type docs — phase discipline guarantees exclusive
-// access, the barrier publishes writes.
-unsafe impl<M: Send> Sync for SpscMailbox<M> {}
-
-impl<M> SpscMailbox<M> {
-    fn new() -> Self {
-        SpscMailbox(UnsafeCell::new(Vec::new()))
+impl<M: Clone> RoutingTable<M> {
+    fn new(rack_of: &[u32]) -> Self {
+        let s_count = rack_of.len();
+        let racks = rack_of.iter().copied().max().unwrap_or(0) as usize + 1;
+        RoutingTable {
+            rack_of: rack_of.to_vec(),
+            direct: (0..s_count)
+                .map(|_| (0..s_count).map(|_| PhaseCell::new()).collect())
+                .collect(),
+            shared: (0..s_count)
+                .map(|_| (0..racks).map(|_| PhaseCell::new()).collect())
+                .collect(),
+        }
     }
 
-    /// Safety: caller must hold phase-exclusive access (sender in the
-    /// advance phase, receiver in the delivery phase).
-    #[allow(clippy::mut_from_ref)]
-    unsafe fn get(&self) -> &mut Vec<(u64, M)> {
-        &mut *self.0.get()
+    /// Sender `src` resets the scan-only rack lanes it produced last
+    /// round (their readers finished at the close barrier; direct lanes
+    /// were drained by their receivers).
+    ///
+    /// Safety: write phase of `src`'s owning thread.
+    unsafe fn clear_sent(&self, src: usize) {
+        for lane in &self.shared[src] {
+            lane.get().clear();
+        }
+    }
+
+    /// Sender `src` drops everything it staged this round (rollback).
+    ///
+    /// Safety: write phase of `src`'s owning thread.
+    unsafe fn drop_staged(&self, src: usize) {
+        for lane in &self.direct[src] {
+            lane.get().clear();
+        }
+        for lane in &self.shared[src] {
+            lane.get().clear();
+        }
+    }
+
+    /// Move an outbox into the table. Safety: write phase of `src`.
+    unsafe fn stage(&self, src: usize, outbox: &mut Outbox<M>) {
+        for (dst, lane) in outbox.lanes.iter_mut().enumerate() {
+            if lane.is_empty() {
+                continue;
+            }
+            if self.rack_of[src] == self.rack_of[dst] {
+                self.direct[src][dst].get().append(lane);
+            } else {
+                let shared = self.shared[src][self.rack_of[dst] as usize].get();
+                shared.extend(lane.drain(..).map(|(at, m)| (dst, at, m)));
+            }
+        }
+    }
+
+    /// Earliest inbound arrival staged for `dst` (`u64::MAX` when none).
+    /// Safety: read phase of `dst`'s owning thread.
+    unsafe fn min_arrival(&self, dst: usize) -> u64 {
+        let mut min = u64::MAX;
+        let my_rack = self.rack_of[dst] as usize;
+        for src in 0..self.rack_of.len() {
+            if self.rack_of[src] as usize == my_rack {
+                for (at, _) in self.direct[src][dst].get_ref() {
+                    min = min.min(*at);
+                }
+            } else {
+                for (d, at, _) in self.shared[src][my_rack].get_ref() {
+                    if *d == dst {
+                        min = min.min(*at);
+                    }
+                }
+            }
+        }
+        min
+    }
+
+    /// Deliver everything staged for `dst` in `(sender shard, FIFO)`
+    /// order; returns the message count. Direct lanes are drained (the
+    /// receiver is their single consumer), shared rack lanes are scanned
+    /// read-only — every shard of the rack walks the same lane and picks
+    /// its own entries; the producer clears it next round.
+    ///
+    /// Safety: read phase of `dst`'s owning thread.
+    unsafe fn drain_into<S: Shard<Msg = M>>(&self, dst: usize, shard: &mut S) -> u64 {
+        let mut delivered = 0u64;
+        let my_rack = self.rack_of[dst] as usize;
+        for src in 0..self.rack_of.len() {
+            if self.rack_of[src] as usize == my_rack {
+                for (at, msg) in self.direct[src][dst].get().drain(..) {
+                    shard.deliver(at, msg);
+                    delivered += 1;
+                }
+            } else {
+                for (d, at, msg) in self.shared[src][my_rack].get_ref() {
+                    if *d == dst {
+                        shard.deliver(*at, msg.clone());
+                        delivered += 1;
+                    }
+                }
+            }
+        }
+        delivered
+    }
+}
+
+/// Per-shard EWMA driving the optimistic window decision — the
+/// `sched/adaptive.rs` idiom (first sample taken verbatim).
+#[derive(Debug, Clone, Copy, Default)]
+struct Ewma {
+    v: f64,
+    primed: bool,
+}
+
+impl Ewma {
+    fn observe(&mut self, x: f64) {
+        if self.primed {
+            self.v += PDES_EWMA_ALPHA * (x - self.v);
+        } else {
+            self.v = x;
+            self.primed = true;
+        }
+    }
+}
+
+/// Adaptive lookahead controller: one per shard, fed only by that shard's
+/// own round observations, so its decisions are thread-count independent.
+#[derive(Debug, Clone, Copy, Default)]
+struct WindowController {
+    /// Realized cross-shard slack: (earliest inbound arrival − H) / Δ,
+    /// clamped to [0, 1]; 1.0 on rounds with no inbound.
+    slack: Ewma,
+    /// Events executed inside the committed window per round.
+    load: Ewma,
+}
+
+impl WindowController {
+    fn observe_round(&mut self, slack_norm: f64, committed_events: u64) {
+        self.slack.observe(slack_norm);
+        self.load.observe(committed_events as f64);
+    }
+
+    /// Window for the next round: conservative (0) until primed, then the
+    /// full lookahead when stragglers are rare or rounds are sparse
+    /// enough that even a replayed window beats an extra synchronization
+    /// round.
+    fn window(&self, lookahead_ns: u64) -> u64 {
+        if !self.slack.primed {
+            return 0;
+        }
+        if self.slack.v >= SLACK_SAFE || self.load.v <= SPARSE_EVENTS {
+            lookahead_ns
+        } else {
+            0
+        }
     }
 }
 
 /// A shard plus its executor-side counters. Only the owning thread ever
 /// touches a cell (static shard→thread map), so the `UnsafeCell` wrapper
 /// below is exclusive by construction.
-struct WorkerShard<S> {
+struct WorkerShard<S: Shard> {
     shard: S,
+    ctl: WindowController,
+    /// Window granted for the current round (0 = conservative round).
+    window: u64,
+    /// Snapshot taken at overhang entry, held until rollback resolution.
+    ckpt: Option<S::Ckpt>,
+    /// Events executed inside the committed window this round.
+    committed_events: u64,
+    /// Committed inbound messages drained this round (depth bookkeeping
+    /// across the Phase C/D split).
+    inbound_depth: u64,
     /// Rounds where this shard had pending events but none inside the
     /// window — it idled at the barrier while other shards progressed.
     horizon_stalls: u64,
-    /// Largest number of messages drained from this shard's inbound
-    /// mailboxes in one round.
+    /// Largest number of messages drained by this shard in one round.
     mailbox_depth_max: u64,
     /// Total cross-shard messages delivered to this shard.
     delivered: u64,
+    /// Optimistic windows that a straggler invalidated (rolled back and
+    /// replayed in sender order).
+    rollbacks: u64,
+    /// Events executed past the conservative horizon, including events a
+    /// rollback discarded and the replay then re-executed.
+    speculated_events: u64,
 }
 
-struct ShardCell<S>(UnsafeCell<WorkerShard<S>>);
+struct ShardCell<S: Shard>(UnsafeCell<WorkerShard<S>>);
 
 // Safety: each cell is read/written only by its statically assigned
-// thread; barriers order the phases.
-unsafe impl<S: Send> Sync for ShardCell<S> {}
+// thread (plus the single-threaded reduce step, barrier-fenced on both
+// sides); barriers order the phases.
+unsafe impl<S: Shard> Sync for ShardCell<S> {}
 
-impl<S> ShardCell<S> {
+impl<S: Shard> ShardCell<S> {
     #[allow(clippy::mut_from_ref)]
     unsafe fn get(&self) -> &mut WorkerShard<S> {
         &mut *self.0.get()
@@ -129,18 +430,27 @@ impl<S> ShardCell<S> {
 }
 
 /// Executor-level accounting of one PDES run — the source of the
-/// per-shard `horizon_stalls` / `mailbox_depth_max` observability fields.
+/// per-shard `horizon_stalls` / `mailbox_depth_max` / `rollbacks` /
+/// `speculated_events` observability fields.
 #[derive(Debug, Clone)]
 pub struct PdesReport {
     pub shards: usize,
     pub threads: usize,
     pub lookahead_ns: u64,
+    pub mode: PdesMode,
+    /// Optimistic window bound (= lookahead in hybrid mode, 0 when the
+    /// run is conservative or single-shard).
+    pub window_ns: u64,
     /// Synchronization rounds executed.
     pub rounds: u64,
     /// Per-shard horizon-stall counts (see [`WorkerShard::horizon_stalls`]).
     pub horizon_stalls: Vec<u64>,
     /// Per-shard max messages drained in one round.
     pub mailbox_depth_max: Vec<u64>,
+    /// Per-shard rollback counts (invalidated optimistic windows).
+    pub rollbacks: Vec<u64>,
+    /// Per-shard events executed past the conservative horizon.
+    pub speculated_events: Vec<u64>,
     /// Total cross-shard messages routed.
     pub messages_routed: u64,
 }
@@ -157,17 +467,28 @@ pub fn deliver_staged<S: Shard>(shards: &mut [S], mut staged: Vec<Outbox<S::Msg>
     }
 }
 
-/// Run the conservative round loop to completion and hand the shards
-/// back together with the executor report.
+/// Run the conservative round loop to completion — PR 8's executor,
+/// expressed as the two-mode loop with every window pinned to zero.
+pub fn run_conservative<S: Shard>(
+    shards: Vec<S>,
+    lookahead_ns: u64,
+    threads: u32,
+) -> (Vec<S>, PdesReport) {
+    run_sharded(shards, lookahead_ns, threads, &PdesOpts::conservative())
+}
+
+/// Run the round loop to completion and hand the shards back together
+/// with the executor report.
 ///
 /// `threads` is clamped to `[1, shards]`; the result is independent of it
 /// by construction. `lookahead_ns` must be positive whenever more than
 /// one shard exists (a zero-latency cross-shard link admits no
 /// conservative window — partition callers must collapse to one shard).
-pub fn run_conservative<S: Shard>(
+pub fn run_sharded<S: Shard>(
     shards: Vec<S>,
     lookahead_ns: u64,
     threads: u32,
+    opts: &PdesOpts,
 ) -> (Vec<S>, PdesReport) {
     let s_count = shards.len();
     assert!(s_count > 0, "PDES needs at least one shard");
@@ -175,48 +496,74 @@ pub fn run_conservative<S: Shard>(
         s_count == 1 || lookahead_ns > 0,
         "conservative PDES needs a positive lookahead across shards"
     );
+    assert!(
+        opts.rack_of.is_empty() || opts.rack_of.len() == s_count,
+        "rack_of must map every shard"
+    );
     let threads = (threads.max(1) as usize).min(s_count);
+    let rack_of: Vec<u32> =
+        if opts.rack_of.is_empty() { vec![0; s_count] } else { opts.rack_of.clone() };
 
     let cells: Vec<ShardCell<S>> = shards
         .into_iter()
         .map(|shard| {
             ShardCell(UnsafeCell::new(WorkerShard {
                 shard,
+                ctl: WindowController::default(),
+                window: 0,
+                ckpt: None,
+                committed_events: 0,
+                inbound_depth: 0,
                 horizon_stalls: 0,
                 mailbox_depth_max: 0,
                 delivered: 0,
+                rollbacks: 0,
+                speculated_events: 0,
             }))
         })
         .collect();
     let next_slots: Vec<AtomicU64> = (0..s_count).map(|_| AtomicU64::new(u64::MAX)).collect();
-    let mailbox: Vec<Vec<SpscMailbox<S::Msg>>> = (0..s_count)
-        .map(|_| (0..s_count).map(|_| SpscMailbox::new()).collect())
-        .collect();
+    let committed: RoutingTable<S::Msg> = RoutingTable::new(&rack_of);
+    let safe: RoutingTable<S::Msg> = RoutingTable::new(&rack_of);
+    let opt: RoutingTable<S::Msg> = RoutingTable::new(&rack_of);
     let barrier = Barrier::new(threads);
     let rounds = AtomicU64::new(0);
+    let hybrid = opts.mode == PdesMode::Hybrid && s_count > 1;
 
     std::thread::scope(|scope| {
         for tid in 1..threads {
             let cells = &cells;
             let next_slots = &next_slots;
-            let mailbox = &mailbox;
+            let committed = &committed;
+            let safe = &safe;
+            let opt = &opt;
             let barrier = &barrier;
             let rounds = &rounds;
             scope.spawn(move || {
-                worker_loop(tid, threads, lookahead_ns, barrier, next_slots, cells, mailbox, rounds)
+                worker_loop(
+                    tid, threads, lookahead_ns, hybrid, opts.reduce, barrier, next_slots, cells,
+                    committed, safe, opt, rounds,
+                )
             });
         }
-        worker_loop(0, threads, lookahead_ns, &barrier, &next_slots, &cells, &mailbox, &rounds);
+        worker_loop(
+            0, threads, lookahead_ns, hybrid, opts.reduce, &barrier, &next_slots, &cells,
+            &committed, &safe, &opt, &rounds,
+        );
     });
 
     let mut shards = Vec::with_capacity(s_count);
     let mut horizon_stalls = Vec::with_capacity(s_count);
     let mut mailbox_depth_max = Vec::with_capacity(s_count);
+    let mut rollbacks = Vec::with_capacity(s_count);
+    let mut speculated_events = Vec::with_capacity(s_count);
     let mut messages_routed = 0;
     for cell in cells {
         let ws = cell.0.into_inner();
         horizon_stalls.push(ws.horizon_stalls);
         mailbox_depth_max.push(ws.mailbox_depth_max);
+        rollbacks.push(ws.rollbacks);
+        speculated_events.push(ws.speculated_events);
         messages_routed += ws.delivered;
         shards.push(ws.shard);
     }
@@ -224,9 +571,13 @@ pub fn run_conservative<S: Shard>(
         shards: s_count,
         threads,
         lookahead_ns,
+        mode: opts.mode,
+        window_ns: if hybrid { lookahead_ns } else { 0 },
         rounds: rounds.load(Ordering::Relaxed),
         horizon_stalls,
         mailbox_depth_max,
+        rollbacks,
+        speculated_events,
         messages_routed,
     };
     (shards, report)
@@ -237,10 +588,14 @@ fn worker_loop<S: Shard>(
     tid: usize,
     threads: usize,
     lookahead_ns: u64,
+    hybrid: bool,
+    reduce: bool,
     barrier: &Barrier,
     next_slots: &[AtomicU64],
     cells: &[ShardCell<S>],
-    mailbox: &[Vec<SpscMailbox<S::Msg>>],
+    committed: &RoutingTable<S::Msg>,
+    safe: &RoutingTable<S::Msg>,
+    opt: &RoutingTable<S::Msg>,
     rounds: &AtomicU64,
 ) {
     let s_count = cells.len();
@@ -260,45 +615,134 @@ fn worker_loop<S: Shard>(
         }
         let horizon = if s_count == 1 { u64::MAX } else { gvt.saturating_add(lookahead_ns) };
 
-        // Phase B — advance owned shards through the window, staging
-        // cross-shard sends into this shard's outbound mailbox row.
+        // Phase B — advance owned shards through the committed window,
+        // staging cross-shard sends into the committed lane set. This is
+        // exactly the conservative window, in both modes.
         for j in (tid..s_count).step_by(threads) {
             let ws = unsafe { cells[j].get() };
+            unsafe { committed.clear_sent(j) };
+            if hybrid {
+                unsafe {
+                    safe.clear_sent(j);
+                    opt.clear_sent(j);
+                }
+            }
             if ws.shard.next_at().is_some_and(|t| t >= horizon) {
                 ws.horizon_stalls += 1;
             }
-            ws.shard.advance(horizon, &mut outbox);
-            if !outbox.is_empty() {
-                for (dst, lane) in outbox.lanes.iter_mut().enumerate() {
-                    if !lane.is_empty() {
-                        // Sender side of the (j, dst) SPSC pair.
-                        unsafe { mailbox[j][dst].get() }.append(lane);
-                    }
+            ws.committed_events = ws.shard.advance(horizon, &mut outbox);
+            unsafe { committed.stage(j, &mut outbox) };
+        }
+        barrier.wait();
+
+        if !hybrid {
+            // Conservative rounds: straight sender-order drain and close,
+            // as in PR 8 — three barriers per Δ of simulated time.
+            for j in (tid..s_count).step_by(threads) {
+                let ws = unsafe { cells[j].get() };
+                let depth = unsafe { committed.drain_into(j, &mut ws.shard) };
+                ws.mailbox_depth_max = ws.mailbox_depth_max.max(depth);
+                ws.delivered += depth;
+            }
+            close_round(tid, reduce, barrier, cells, rounds);
+            continue;
+        }
+
+        // Phase C — drain the committed batch in sender order (identical
+        // placement to the conservative loop, so committed-window tie
+        // order matches), feed the controller, then advance through the
+        // safe extension [H, H+Δ) — sound unconditionally: anything
+        // arriving before H+Δ was sent before H and was just delivered.
+        // Finally, window permitting, checkpoint at H+Δ and speculate
+        // through the overhang [H+Δ, H+Δ+w) into the opt lane set.
+        let safe_end = horizon.saturating_add(lookahead_ns);
+        for j in (tid..s_count).step_by(threads) {
+            let ws = unsafe { cells[j].get() };
+            let min_arrival = unsafe { committed.min_arrival(j) };
+            let depth = unsafe { committed.drain_into(j, &mut ws.shard) };
+            ws.delivered += depth;
+            ws.inbound_depth = depth;
+            let slack_norm = if min_arrival == u64::MAX {
+                1.0
+            } else {
+                (min_arrival.saturating_sub(horizon) as f64 / lookahead_ns as f64).clamp(0.0, 1.0)
+            };
+            ws.ctl.observe_round(slack_norm, ws.committed_events);
+            ws.shard.advance(safe_end, &mut outbox);
+            unsafe { safe.stage(j, &mut outbox) };
+            if ws.window > 0 {
+                let spec_end = safe_end.saturating_add(ws.window);
+                if ws.shard.next_at().is_some_and(|t| t < spec_end) {
+                    ws.ckpt = Some(ws.shard.save());
+                    ws.speculated_events += ws.shard.advance(spec_end, &mut outbox);
+                    unsafe { opt.stage(j, &mut outbox) };
                 }
             }
         }
         barrier.wait();
 
-        // Phase C — drain inbound mailboxes in sender order.
+        // Phase D — resolve: safe-extension stragglers arrive inside
+        // [H+Δ, H+2Δ); one landing before this shard's spec_end is in its
+        // speculated past and forces rollback + sender-order replay. The
+        // replay is exact — all traffic below H+2Δ ≥ spec_end is in hand.
+        // The controller's next-round window is applied only here, after
+        // every use of the current one.
         for j in (tid..s_count).step_by(threads) {
             let ws = unsafe { cells[j].get() };
-            let mut depth = 0u64;
-            for row in mailbox.iter() {
-                // Receiver side of the (src, j) SPSC pair.
-                let inbox = unsafe { row[j].get() };
-                depth += inbox.len() as u64;
-                for (at, msg) in inbox.drain(..) {
-                    ws.shard.deliver(at, msg);
-                }
+            let min_safe = unsafe { safe.min_arrival(j) };
+            let spec_end = safe_end.saturating_add(ws.window);
+            let depth;
+            if ws.ckpt.is_some() && min_safe < spec_end {
+                ws.rollbacks += 1;
+                let ckpt = ws.ckpt.take().expect("checkpoint just observed");
+                ws.shard.restore(ckpt);
+                unsafe { opt.drop_staged(j) };
+                depth = unsafe { safe.drain_into(j, &mut ws.shard) };
+                ws.speculated_events += ws.shard.advance(spec_end, &mut outbox);
+                unsafe { opt.stage(j, &mut outbox) };
+            } else {
+                ws.ckpt = None;
+                depth = unsafe { safe.drain_into(j, &mut ws.shard) };
             }
-            ws.mailbox_depth_max = ws.mailbox_depth_max.max(depth);
             ws.delivered += depth;
+            ws.inbound_depth += depth;
+            ws.window = ws.ctl.window(lookahead_ns);
         }
+        barrier.wait();
+
+        // Phase E — drain the opt lanes. Opt sends were created at
+        // t ≥ H+Δ, so they arrive at ≥ H+2Δ — beyond everything any shard
+        // executed this round; delivery is never into a past.
+        for j in (tid..s_count).step_by(threads) {
+            let ws = unsafe { cells[j].get() };
+            let depth = unsafe { opt.drain_into(j, &mut ws.shard) };
+            ws.delivered += depth;
+            ws.mailbox_depth_max = ws.mailbox_depth_max.max(ws.inbound_depth + depth);
+        }
+        close_round(tid, reduce, barrier, cells, rounds);
+    }
+}
+
+/// Round epilogue shared by both modes: count the round, hold everyone at
+/// the close barrier (nobody may start the next advance — and write lanes
+/// — until every drain has finished), then run the optional single-thread
+/// reduction between two more barriers.
+fn close_round<S: Shard>(
+    tid: usize,
+    reduce: bool,
+    barrier: &Barrier,
+    cells: &[ShardCell<S>],
+    rounds: &AtomicU64,
+) {
+    if tid == 0 {
+        rounds.fetch_add(1, Ordering::Relaxed);
+    }
+    barrier.wait();
+    if reduce {
         if tid == 0 {
-            rounds.fetch_add(1, Ordering::Relaxed);
+            let mut all: Vec<&mut S> = cells.iter().map(|c| unsafe { &mut c.get().shard }).collect();
+            S::reduce(&mut all);
         }
-        // Close the round: nobody may start the next advance (and write
-        // mailboxes) until every drain above has finished.
         barrier.wait();
     }
 }
@@ -308,44 +752,101 @@ mod tests {
     use super::*;
     use crate::des::heap::EventHeap;
 
-    /// Toy shard: relays a token to its peer `hops` times over a
-    /// 100 ns link, doing 7 ns of "local work" per hop.
+    /// Toy shard: relays a token to the next shard over a 200 ns link,
+    /// doing 14 ns of "local work" per hop, optionally with an
+    /// independent local ticker chain (dense enough to keep the
+    /// optimistic overhang busy). Relay events land on even times and
+    /// ticks on odd times, so no two events ever tie — the logs are
+    /// strictly time-ordered and strict equality across modes is the
+    /// honest invariant. A relay executed inside the safe extension
+    /// arrives 14 ns past the receiver's next safe horizon — inside any
+    /// open overhang — so open windows are repeatedly violated.
+    #[derive(Clone)]
     struct PingShard {
         id: usize,
+        peers: usize,
         heap: EventHeap<u64>,
         hops_left: u64,
         log: Vec<(u64, u64)>,
+        shared_max: u64,
     }
+
+    const TICK: u64 = u64::MAX; // marker event for the local ticker
 
     impl Shard for PingShard {
         type Msg = u64;
+        type Ckpt = PingShard;
 
         fn next_at(&self) -> Option<u64> {
             self.heap.next_at()
         }
 
-        fn advance(&mut self, horizon: u64, outbox: &mut Outbox<u64>) {
+        fn advance(&mut self, horizon: u64, outbox: &mut Outbox<u64>) -> u64 {
+            let mut n = 0;
             while self.heap.next_at().is_some_and(|t| t < horizon) {
                 let (now, token) = self.heap.pop().unwrap();
+                n += 1;
+                if token == TICK {
+                    self.log.push((now, TICK));
+                    if now < 20_000 {
+                        self.heap.push(now + 26, TICK);
+                    }
+                    continue;
+                }
                 self.log.push((now, token));
                 if self.hops_left > 0 {
                     self.hops_left -= 1;
-                    outbox.send(1 - self.id, now + 7 + 100, token + 1);
+                    outbox.send((self.id + 1) % self.peers, now + 14 + 200, token + 1);
                 }
             }
+            n
         }
 
         fn deliver(&mut self, at: u64, msg: u64) {
             self.heap.push(at, msg);
         }
+
+        fn save(&self) -> PingShard {
+            self.clone()
+        }
+
+        fn restore(&mut self, ckpt: PingShard) {
+            *self = ckpt;
+        }
+
+        fn reduce(shards: &mut [&mut Self]) {
+            // Fixed-order merge of a shared high-water mark.
+            let max = shards.iter().map(|s| s.log.len() as u64).max().unwrap_or(0);
+            for s in shards.iter_mut() {
+                s.shared_max = s.shared_max.max(max);
+            }
+        }
+    }
+
+    fn make_shards(n: usize, hops: u64, ticker: bool, seed_token: bool) -> Vec<PingShard> {
+        let mut shards: Vec<PingShard> = (0..n)
+            .map(|id| PingShard {
+                id,
+                peers: n,
+                heap: EventHeap::new(),
+                hops_left: hops,
+                log: Vec::new(),
+                shared_max: 0,
+            })
+            .collect();
+        if seed_token {
+            shards[0].heap.push(0, 0);
+        }
+        if ticker {
+            for s in shards.iter_mut() {
+                s.heap.push(1, TICK);
+            }
+        }
+        shards
     }
 
     fn ping_run(threads: u32) -> (Vec<Vec<(u64, u64)>>, PdesReport) {
-        let mut shards: Vec<PingShard> = (0..2)
-            .map(|id| PingShard { id, heap: EventHeap::new(), hops_left: 20, log: Vec::new() })
-            .collect();
-        shards[0].heap.push(0, 0);
-        let (shards, report) = run_conservative(shards, 100, threads);
+        let (shards, report) = run_conservative(make_shards(2, 20, false, true), 200, threads);
         (shards.into_iter().map(|s| s.log).collect(), report)
     }
 
@@ -356,26 +857,112 @@ mod tests {
         assert_eq!(logs1, logs2, "logs must not depend on thread count");
         assert_eq!(r1.rounds, r2.rounds);
         assert_eq!(r1.messages_routed, r2.messages_routed);
-        // 40 hops total (20 per side), alternating shards, 107 ns apart.
+        // 40 hops total (20 per side), alternating shards, 214 ns apart.
         assert_eq!(logs1[0].len() + logs1[1].len(), 41);
         assert_eq!(logs1[0][0], (0, 0));
-        assert_eq!(logs1[1][0], (107, 1));
+        assert_eq!(logs1[1][0], (214, 1));
         assert_eq!(r1.messages_routed, 40);
         assert!(r1.horizon_stalls.iter().sum::<u64>() > 0, "the idle side stalls");
         assert_eq!(r1.mailbox_depth_max, vec![1, 1]);
+        assert_eq!(r1.mode, PdesMode::Conservative);
+        assert_eq!(r1.window_ns, 0);
+        assert_eq!(r1.rollbacks, vec![0, 0]);
+        assert_eq!(r1.speculated_events, vec![0, 0]);
     }
 
     #[test]
     fn staged_bootstrap_delivery_is_sender_ordered() {
-        let mut shards: Vec<PingShard> = (0..2)
-            .map(|id| PingShard { id, heap: EventHeap::new(), hops_left: 0, log: Vec::new() })
-            .collect();
+        let mut shards = make_shards(2, 0, false, false);
         let mut o0 = Outbox::new(2);
         let mut o1 = Outbox::new(2);
         o1.send(0, 5, 99); // later sender, same time: delivered second
         o0.send(0, 5, 42);
         deliver_staged(&mut shards, vec![o0, o1]);
-        let (shards, _report) = run_conservative(shards, 100, 1);
+        let (shards, _report) = run_conservative(shards, 200, 1);
         assert_eq!(shards[0].log, vec![(5, 42), (5, 99)]);
+    }
+
+    /// The adversarial shape from docs/pdes.md: relays executed inside
+    /// the safe extension arrive 14 ns into the receiver's optimistic
+    /// overhang, while a dense local ticker keeps both shards
+    /// speculating — open windows are repeatedly violated, so the hybrid
+    /// run must roll back, replay, and still converge on the
+    /// conservative (and 1-thread) history exactly.
+    #[test]
+    fn hybrid_rolls_back_and_reconverges() {
+        let (cons, rc) =
+            run_sharded(make_shards(2, 40, true, true), 200, 2, &PdesOpts::conservative());
+        let cons_logs: Vec<_> = cons.into_iter().map(|s| s.log).collect();
+        for threads in [1, 2] {
+            let (hyb, rh) = run_sharded(
+                make_shards(2, 40, true, true),
+                200,
+                threads,
+                &PdesOpts { mode: PdesMode::Hybrid, ..Default::default() },
+            );
+            let hyb_logs: Vec<_> = hyb.into_iter().map(|s| s.log).collect();
+            assert_eq!(hyb_logs, cons_logs, "hybrid must be bit-identical (threads={threads})");
+            assert_eq!(rh.mode, PdesMode::Hybrid);
+            assert_eq!(rh.window_ns, 200);
+            assert!(
+                rh.rollbacks.iter().sum::<u64>() > 0,
+                "straggler relays must invalidate open windows: {:?}",
+                rh.rollbacks
+            );
+            assert!(rh.speculated_events.iter().sum::<u64>() > 0);
+            assert!(
+                rh.rounds < rc.rounds,
+                "the optimistic window must buy rounds ({} vs {})",
+                rh.rounds,
+                rc.rounds
+            );
+        }
+    }
+
+    /// Hybrid rollback accounting is itself thread-count invariant: the
+    /// controller sees only per-shard observations.
+    #[test]
+    fn hybrid_report_is_thread_count_invariant() {
+        let opts = PdesOpts { mode: PdesMode::Hybrid, ..Default::default() };
+        let (_, r1) = run_sharded(make_shards(2, 40, true, true), 200, 1, &opts);
+        let (_, r2) = run_sharded(make_shards(2, 40, true, true), 200, 2, &opts);
+        assert_eq!(r1.rounds, r2.rounds);
+        assert_eq!(r1.rollbacks, r2.rollbacks);
+        assert_eq!(r1.speculated_events, r2.speculated_events);
+        assert_eq!(r1.messages_routed, r2.messages_routed);
+    }
+
+    /// Two-tier routing: a 4-shard ring across 2 racks must behave
+    /// exactly like the flat mesh, in both modes.
+    #[test]
+    fn rack_routing_matches_the_flat_mesh() {
+        let (mesh, rm) =
+            run_sharded(make_shards(4, 60, true, true), 200, 2, &PdesOpts::conservative());
+        let mesh_logs: Vec<_> = mesh.into_iter().map(|s| s.log).collect();
+        for mode in [PdesMode::Conservative, PdesMode::Hybrid] {
+            let opts = PdesOpts { mode, reduce: false, rack_of: vec![0, 0, 1, 1] };
+            for threads in [1, 4] {
+                let (racked, rr) = run_sharded(make_shards(4, 60, true, true), 200, threads, &opts);
+                let logs: Vec<_> = racked.into_iter().map(|s| s.log).collect();
+                assert_eq!(logs, mesh_logs, "{mode:?} threads={threads}");
+                assert_eq!(rr.messages_routed, rm.messages_routed);
+            }
+        }
+    }
+
+    /// The reduce hook runs between rounds, single-threaded, and its
+    /// fixed-order merge lands identically at every thread count.
+    #[test]
+    fn reduce_hook_is_deterministic() {
+        let run = |threads| {
+            let opts =
+                PdesOpts { mode: PdesMode::Hybrid, reduce: true, rack_of: vec![0, 0, 1, 1] };
+            let (shards, _) = run_sharded(make_shards(4, 30, true, true), 200, threads, &opts);
+            shards.into_iter().map(|s| s.shared_max).collect::<Vec<_>>()
+        };
+        let base = run(1);
+        assert!(base.iter().all(|&m| m > 0), "reduce must have run: {base:?}");
+        assert_eq!(base, run(2));
+        assert_eq!(base, run(4));
     }
 }

@@ -67,7 +67,7 @@ use std::sync::Arc;
 use crate::config::{ClusterConfig, ExecutionModel, HierParams, LevelPlan, SchedPath, WatermarkMode};
 use crate::coordinator::protocol::{AfInfo, PerfReport};
 use crate::des::heap::{ns, secs, EventHeap};
-use crate::des::{min_latency_ns, pdes, DesConfig, DesResult, PdesSummary};
+use crate::des::{min_latency_ns, pdes, resolved_des_threads, DesConfig, DesResult, PdesSummary};
 use crate::metrics::LoopStats;
 use crate::obs::stream::{self, IntervalSample, Sampler};
 use crate::report::json::Json;
@@ -117,7 +117,7 @@ pub fn simulate_hier(cfg: &DesConfig) -> anyhow::Result<DesResult> {
         "--master-lockfree cannot run with --adaptive: a rebind would race \
          in-flight fused master fetches"
     );
-    if cfg.des_threads > 1 {
+    if cfg.des_threads != 1 {
         return simulate_hier_pdes(cfg, &plan);
     }
     let mut sim = HierSim::new(cfg, &plan);
@@ -132,7 +132,7 @@ pub fn simulate_hier(cfg: &DesConfig) -> anyhow::Result<DesResult> {
 /// *protocol* level `d` (0 = root ↔ level-1 masters, `k-1` = leaf-serving
 /// masters ↔ leaf ranks); master-tier child identities are level-`d+1`
 /// master indices.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 enum Task {
     /// A leaf rank asks its master for a scheduling step (phase 1).
     LeafGet { w: u32, report: Option<PerfReport> },
@@ -165,7 +165,7 @@ enum WReply {
     Done,
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 enum Ev {
     /// A message arrives at hosting rank `s`'s service queue.
     Arrive { s: u32, task: Task },
@@ -196,7 +196,7 @@ enum Ev {
 
 /// The lowest master's own worker personality (mirrors the flat DES's
 /// `OwnState`).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 enum Own {
     NeedWork,
     Calc { step: u64, remaining: u64, seq: u64 },
@@ -211,7 +211,7 @@ enum Own {
 /// children) plus its child side in protocol `d-1` (fetch state and subtree
 /// throughput — unused for the root, which has no parent and is born
 /// `global_done` with the whole loop installed).
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Persona {
     rank: u32,
     ledger: NodeLedger,
@@ -242,7 +242,7 @@ struct Persona {
 /// One hosting rank (a lowest-level master): serial CPU, task queue, and
 /// the own worker personality. Host 0 additionally runs the root persona
 /// and every intermediate persona of its subtree spine.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Server {
     rank: u32,
     queue: VecDeque<Task>,
@@ -267,6 +267,10 @@ struct Wstate {
     last_report: Option<PerfReport>,
 }
 
+/// `Clone` because a PDES shard checkpoint (optimistic-window rollback)
+/// is a full snapshot of this struct — `EventHeap` clones its `seq`
+/// counter, so replayed pushes renumber identically.
+#[derive(Clone)]
 struct HierSim<'a> {
     cfg: &'a DesConfig,
     topo: Topology,
@@ -321,6 +325,10 @@ struct HierSim<'a> {
     sampler: Option<Sampler>,
     stream: Vec<Json>,
     last_tick_chunks: u64,
+    /// Sharded-mode raw tick samples (one per sampler boundary), merged
+    /// across shards post-run into the `interval` records a sequential
+    /// run would have produced. Empty in sequential mode.
+    ticks: Vec<HierTick>,
     // parallel-core sharding (None ⇒ the classic sequential loop)
     shard: Option<HierShardSpan>,
     /// Cross-shard sends staged during the current window:
@@ -329,12 +337,30 @@ struct HierSim<'a> {
 }
 
 /// A shard's identity in the sharded (PDES) run. Shards group *contiguous
-/// level-1 subtrees* — the only boundary whose traffic is exclusively the
-/// level-0 protocol — so `of_server[s]` maps every hosting server to its
-/// owning shard. The grouping is geometry-derived and thread-independent.
+/// hosting servers* (leaf-protocol traffic therefore never crosses a
+/// shard); `of_server[s]` maps every hosting server to its owning shard.
+/// The grouping is geometry-derived and thread-independent.
+#[derive(Debug, Clone)]
 struct HierShardSpan {
     id: u32,
     of_server: Arc<Vec<u32>>,
+}
+
+/// One raw stream sample captured by a shard at a tick boundary: the
+/// shard's *local* contribution to the distributed counters plus the
+/// subtree entries of the personas it owns (pre-rendered — a subtree
+/// entry is a pure function of persona state at the tick). The post-run
+/// merge sums counters across shards (extending a finished shard's series
+/// with its final values) and unions the subtree entries in `(level,
+/// master)` order, reproducing the sequential records bit-for-bit.
+#[derive(Debug, Clone)]
+struct HierTick {
+    chunks: u64,
+    messages: u64,
+    fast_grants: u64,
+    iters_granted: u64,
+    /// `(level, master, entry)` for every persona this shard owns.
+    subtrees: Vec<(u32, u32, Json)>,
 }
 
 impl<'a> HierSim<'a> {
@@ -450,6 +476,7 @@ impl<'a> HierSim<'a> {
             sampler: Sampler::from_interval_s(cfg.stream_interval),
             stream: Vec::new(),
             last_tick_chunks: 0,
+            ticks: Vec::new(),
             shard: None,
             outbound: Vec::new(),
         }
@@ -485,9 +512,10 @@ impl<'a> HierSim<'a> {
     }
 
     /// Push an event, staging it for the barrier exchange when its
-    /// destination lives on another shard. Only the level-0 protocol can
-    /// cross shards (the partition follows level-1 subtree boundaries), so
-    /// just the three root↔child send sites go through here.
+    /// destination lives on another shard. Only master-protocol traffic
+    /// (any level `d < k-1`) can cross shards — the partition groups whole
+    /// hosting servers, so leaf sends always stay local — and every
+    /// master-tier send site goes through here.
     fn route(&mut self, at: u64, ev: Ev) {
         let dst = match &self.shard {
             None => {
@@ -658,11 +686,62 @@ impl<'a> HierSim<'a> {
         entries
     }
 
+    /// Raw sharded-mode sample: this shard's contribution to the
+    /// distributed counters plus its owned personas' subtree entries. Also
+    /// serves as a shard's "final value" when the post-run merge extends a
+    /// finished shard's series past its last event.
+    fn tick_sample(&self) -> HierTick {
+        HierTick {
+            chunks: self.chunks_granted,
+            messages: self.messages,
+            fast_grants: self.fast_grants,
+            iters_granted: self.iters_granted,
+            subtrees: self.owned_subtree_entries(),
+        }
+    }
+
+    /// `(level, master, entry)` for every persona hosted on a server this
+    /// shard owns. The ownership partition covers each persona exactly
+    /// once (the root lives on server 0 → shard 0), so the merged union
+    /// over shards reproduces [`Self::subtree_entries`] in `(level,
+    /// master)` order.
+    fn owned_subtree_entries(&self) -> Vec<(u32, u32, Json)> {
+        let mut entries = Vec::new();
+        for (d, level) in self.personas.iter().enumerate() {
+            for (j, pr) in level.iter().enumerate() {
+                if !self.owns_server(self.server_of_rank(self.host_rank(d, j as u32))) {
+                    continue;
+                }
+                entries.push((
+                    d as u32,
+                    j as u32,
+                    stream::subtree_entry(
+                        d as u32,
+                        j as u32,
+                        pr.ledger.bound_kind(),
+                        pr.ledger.remaining(),
+                        pr.parked.len() as u64,
+                        pr.adapt.as_ref(),
+                    ),
+                ));
+            }
+        }
+        entries
+    }
+
     /// Emit one `interval` record (core counters + the per-subtree array)
-    /// per virtual-time tick boundary the event loop just crossed.
+    /// per virtual-time tick boundary the event loop just crossed. Sharded
+    /// runs record raw [`HierTick`] samples instead — every shard observes
+    /// the same boundary grid ([`Sampler::due`] never skips a tick), so
+    /// the post-run merge can sum counters index-by-index.
     fn sample_ticks(&mut self) {
         let Some(mut sampler) = self.sampler.take() else { return };
         while let Some(t) = sampler.due(self.now) {
+            if self.shard.is_some() {
+                let sample = self.tick_sample();
+                self.ticks.push(sample);
+                continue;
+            }
             let record = stream::interval_record(&IntervalSample {
                 t,
                 chunks: self.chunks_granted,
@@ -1487,9 +1566,11 @@ impl<'a> HierSim<'a> {
 // ---------------------------------------------------------------------------
 // sharded (PDES) execution
 
-/// Cap on shard groups: contiguous level-1 subtrees fold into at most this
-/// many shards, bounding the per-shard full-state copies (each shard keeps
-/// a complete `HierSim` but touches only its owned slice).
+/// Cap per sharding tier: at most this many level-1 subtree groups, each
+/// subdivided into at most this many server subgroups on depth-≥3 plans —
+/// shard counts follow the tree geometry past 8 (up to 8 × 8 = 64) while
+/// still bounding the per-shard full-state copies (each shard keeps a
+/// complete `HierSim` but touches only its owned slice).
 const HIER_SHARD_GROUPS_MAX: u32 = 8;
 
 struct HierShard<'a> {
@@ -1498,70 +1579,86 @@ struct HierShard<'a> {
 
 impl<'a> pdes::Shard for HierShard<'a> {
     type Msg = Ev;
+    type Ckpt = HierSim<'a>;
 
     fn next_at(&self) -> Option<u64> {
         self.sim.heap.next_at()
     }
 
-    fn advance(&mut self, horizon: u64, outbox: &mut pdes::Outbox<Ev>) {
+    fn advance(&mut self, horizon: u64, outbox: &mut pdes::Outbox<Ev>) -> u64 {
+        let mut n = 0u64;
         while self.sim.heap.next_at().is_some_and(|t| t < horizon) {
             let (t, ev) = self.sim.heap.pop().expect("probed non-empty");
             self.sim.now = t;
             self.sim.events += 1;
+            n += 1;
+            if self.sim.sampler.is_some() {
+                self.sim.sample_ticks();
+            }
             self.sim.dispatch(ev);
         }
         for (dst, at, ev) in self.sim.outbound.drain(..) {
             outbox.send(dst as usize, at, ev);
         }
+        n
     }
 
     fn deliver(&mut self, at: u64, msg: Ev) {
         self.sim.heap.push(at, msg);
     }
+
+    fn save(&self) -> HierSim<'a> {
+        self.sim.clone()
+    }
+
+    fn restore(&mut self, ckpt: HierSim<'a>) {
+        self.sim = ckpt;
+    }
 }
 
-/// Sharded (PDES) counterpart of the sequential hierarchical loop: shards
-/// own contiguous level-1 subtrees, the conservative lookahead is the
-/// smallest level-0 hop to an off-shard subtree host, and only root↔child
-/// protocol traffic crosses the barrier exchange. Deterministic for a fixed
-/// config regardless of `des_threads` (the partition is geometry-derived,
-/// and cross-shard delivery order is fixed by the executor).
+/// Sharded (PDES) counterpart of the sequential hierarchical loop. Shards
+/// group contiguous hosting servers, aligned to the `LevelPlan` tree: up
+/// to [`HIER_SHARD_GROUPS_MAX`] level-1 subtree groups, each subdivided
+/// into up to the same number of server subgroups on depth-≥3 plans
+/// (rack-level groups containing node subgroups), so shard counts follow
+/// the geometry past 8. Master-protocol traffic at any level may cross
+/// shards; the lookahead below accounts for the cheapest such hop.
+/// Deterministic for a fixed config regardless of `des_threads` *and* of
+/// the partition (cross-shard delivery order is fixed by the executor).
 fn simulate_hier_pdes(cfg: &DesConfig, plan: &LevelPlan) -> anyhow::Result<DesResult> {
-    anyhow::ensure!(
-        !cfg.hier.adaptive.enabled,
-        "--des-threads > 1 cannot run with --adaptive: the rebinding \
-         controllers couple subtrees through global probe state"
-    );
     let k = plan.depth();
     let n_servers = plan.masters_at(k - 1);
     let n_sub = plan.levels[0].fanout;
-    let shards_n = if k < 2 { 1 } else { n_sub.min(HIER_SHARD_GROUPS_MAX) };
-    let mut of_server = vec![0u32; n_servers as usize];
-    if shards_n > 1 {
-        let per_sub = (n_servers / n_sub).max(1);
-        for (s, slot) in of_server.iter_mut().enumerate() {
-            let subtree = s as u32 / per_sub;
-            *slot = ((subtree as u64 * shards_n as u64) / n_sub as u64) as u32;
-        }
-    }
-    // Conservative lookahead: the cheapest level-0 hop between the root
-    // host and a level-1 master on another shard. Every cross-shard event
-    // pays at least this much travel on top of its send time.
+    let groups = n_sub.min(HIER_SHARD_GROUPS_MAX);
+    let sub_split = if k >= 3 { HIER_SHARD_GROUPS_MAX } else { 1 };
+    let shards_n = if k < 2 { 1 } else { n_servers.min(groups.saturating_mul(sub_split)) };
+    let of_server: Vec<u32> = (0..n_servers)
+        .map(|s| ((u64::from(s) * u64::from(shards_n)) / u64::from(n_servers)) as u32)
+        .collect();
+    // Conservative lookahead: the cheapest parent→child hop — at any
+    // protocol level — between masters whose hosts land on different
+    // shards. Every cross-shard event pays at least this much travel on
+    // top of its send time; leaf-protocol traffic never crosses (shards
+    // group whole hosting servers).
     let topo = Topology::new(&cfg.cluster);
     let leaf_fanout = plan.levels[k - 1].fanout;
+    let shard_of_rank = |r: u32| -> u32 { of_server[(r / leaf_fanout) as usize] };
     let mut lookahead = 0u64;
     if shards_n > 1 {
-        let root = plan.host_rank(0, 0);
         lookahead = u64::MAX;
-        for j in 1..n_sub {
-            let host = plan.host_rank(1, j);
-            if of_server[(host / leaf_fanout) as usize] != 0 {
-                lookahead = lookahead.min(ns(topo.latency(root, host)));
+        for d in 0..k - 1 {
+            for j2 in 0..plan.masters_at(d + 1) {
+                let hp = plan.host_rank(d, j2 / plan.levels[d].fanout);
+                let hc = plan.host_rank(d + 1, j2);
+                if shard_of_rank(hp) != shard_of_rank(hc) {
+                    lookahead = lookahead.min(ns(topo.latency(hp, hc)));
+                }
             }
         }
         anyhow::ensure!(
             lookahead > 0 && lookahead < u64::MAX,
-            "--des-threads > 1 needs a nonzero level-0 latency between subtree hosts"
+            "--des-threads needs a nonzero latency on every master hop that \
+             crosses a shard boundary"
         );
     }
     let of_server = Arc::new(of_server);
@@ -1575,20 +1672,31 @@ fn simulate_hier_pdes(cfg: &DesConfig, plan: &LevelPlan) -> anyhow::Result<DesRe
         sh.sim.bootstrap();
         debug_assert!(sh.sim.outbound.is_empty(), "hier bootstrap is shard-local");
     }
-    let (shards, report) = pdes::run_conservative(shards, lookahead, cfg.des_threads);
+    // Two-tier routing: shards fold into their level-1 subtree group, so
+    // same-group traffic rides direct SPSC lanes and cross-group traffic
+    // shares one lane per (source shard, group).
+    let rack_of: Vec<u32> = (0..shards_n)
+        .map(|t| ((u64::from(t) * u64::from(groups)) / u64::from(shards_n)) as u32)
+        .collect();
+    let opts = pdes::PdesOpts { mode: cfg.pdes_mode, reduce: false, rack_of };
+    let (shards, report) =
+        pdes::run_sharded(shards, lookahead, resolved_des_threads(cfg), &opts);
     Ok(merge_hier_shards(cfg, shards, &report))
 }
 
 /// Fold per-shard state into one [`DesResult`]. Every mutable quantity has
 /// exactly one writer shard (ownership follows the hosting server), so the
 /// merge is exact: element-wise max of finish times, sums of disjoint
-/// counters, and grant logs concatenated in shard order.
+/// counters, grant logs concatenated in shard order, switch traces merged
+/// into `(time, level, master)` order, and the observability stream
+/// rebuilt from per-shard tick series ([`merge_hier_stream`]).
 fn merge_hier_shards(
     cfg: &DesConfig,
     shards: Vec<HierShard<'_>>,
     report: &pdes::PdesReport,
 ) -> DesResult {
-    let k = shards[0].sim.k;
+    let sims: Vec<HierSim<'_>> = shards.into_iter().map(|sh| sh.sim).collect();
+    let k = sims[0].k;
     let mut finish = vec![0f64; cfg.params.p as usize];
     let mut wait = 0.0f64;
     let mut rank0_service_ns = 0u64;
@@ -1599,9 +1707,7 @@ fn merge_hier_shards(
     let mut fast_grants = 0u64;
     let mut chunks = 0u64;
     let mut events = 0u64;
-    let mut assignments = Vec::new();
-    for (i, sh) in shards.into_iter().enumerate() {
-        let sim = sh.sim;
+    for (i, sim) in sims.iter().enumerate() {
         for (r, w) in sim.workers.iter().enumerate() {
             finish[r] = finish[r].max(secs(w.finish_ns));
             wait += secs(w.wait_ns);
@@ -1622,9 +1728,24 @@ fn merge_hier_shards(
         fast_grants += sim.fast_grants;
         chunks += sim.chunks_granted;
         events += sim.events;
-        assignments.extend(sim.assignments);
     }
     let stats = LoopStats::from_finish_times(&finish, chunks, wait, messages);
+    // Rebind decisions are per-persona (shard-local); the global trace is
+    // their deterministic merge. Same-instant switches on different shards
+    // order by `(level, master)` — the documented stream tie rule.
+    let mut switch_events: Vec<SwitchEvent> =
+        sims.iter().flat_map(|s| s.switch_events.iter().copied()).collect();
+    switch_events.sort_by(|a, b| {
+        a.at_s
+            .partial_cmp(&b.at_s)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| (a.level, a.master).cmp(&(b.level, b.master)))
+    });
+    let stream = merge_hier_stream(cfg, &sims, stats.t_par, &switch_events);
+    let mut assignments = Vec::new();
+    for sim in sims {
+        assignments.extend(sim.assignments);
+    }
     DesResult {
         stats,
         finish,
@@ -1636,10 +1757,83 @@ fn merge_hier_shards(
         level_messages: level_msgs,
         fast_grants,
         events,
-        switch_events: Vec::new(),
-        stream: Vec::new(),
+        switch_events,
+        stream,
         pdes: Some(PdesSummary::from_report(report)),
     }
+}
+
+/// Rebuild the sequential run's `interval` stream from the per-shard raw
+/// tick series. Exact, not approximate, because every shard observes the
+/// same boundary grid ([`Sampler::due`] yields boundary `k` at index `k`
+/// and never skips one), a shard whose events ended before boundary `k`
+/// holds its counters at their final values from then on (last-value
+/// extension via [`HierSim::tick_sample`]), and the caps align (every
+/// sampler stops at the same `MAX_STREAM_RECORDS`). Counters sum across
+/// shards per boundary; owned subtree entries union in `(level, master)`
+/// order — the sequential iteration order.
+fn merge_hier_stream(
+    cfg: &DesConfig,
+    sims: &[HierSim<'_>],
+    t_par: f64,
+    switch_events: &[SwitchEvent],
+) -> Vec<Json> {
+    let Some(sampler) = Sampler::from_interval_s(cfg.stream_interval) else {
+        return Vec::new();
+    };
+    let finals: Vec<HierTick> = sims.iter().map(HierSim::tick_sample).collect();
+    let max_ticks = sims.iter().map(|s| s.ticks.len()).max().unwrap_or(0);
+    let merged_at = |i: Option<usize>| -> (u64, u64, u64, u64, Vec<Json>) {
+        let mut chunks = 0u64;
+        let mut messages = 0u64;
+        let mut fast = 0u64;
+        let mut iters = 0u64;
+        let mut subtrees: Vec<&(u32, u32, Json)> = Vec::new();
+        for (sim, fin) in sims.iter().zip(&finals) {
+            let tick = i.and_then(|i| sim.ticks.get(i)).unwrap_or(fin);
+            chunks += tick.chunks;
+            messages += tick.messages;
+            fast += tick.fast_grants;
+            iters += tick.iters_granted;
+            subtrees.extend(tick.subtrees.iter());
+        }
+        subtrees.sort_by_key(|(d, j, _)| (*d, *j));
+        let entries = subtrees.into_iter().map(|(_, _, e)| e.clone()).collect();
+        (chunks, messages, fast, iters, entries)
+    };
+    let mut stream = Vec::with_capacity(max_ticks + 1 + switch_events.len());
+    let mut last_chunks = 0u64;
+    for i in 0..max_ticks {
+        let (chunks, messages, fast, iters, entries) = merged_at(Some(i));
+        stream.push(
+            stream::interval_record(&IntervalSample {
+                t: sampler.tick_at(i),
+                chunks,
+                chunks_delta: chunks - last_chunks,
+                interval_s: sampler.interval_s(),
+                messages,
+                fast_grants: fast,
+                remaining: cfg.params.n - iters,
+            })
+            .field("subtrees", entries),
+        );
+        last_chunks = chunks;
+    }
+    let (chunks, messages, fast, iters, entries) = merged_at(None);
+    stream.push(
+        stream::interval_record(&IntervalSample {
+            t: t_par,
+            chunks,
+            chunks_delta: chunks - last_chunks,
+            interval_s: cfg.stream_interval,
+            messages,
+            fast_grants: fast,
+            remaining: cfg.params.n - iters,
+        })
+        .field("subtrees", entries),
+    );
+    stream.extend(switch_events.iter().map(stream::switch_record));
+    stream::sorted_by_time(stream)
 }
 
 #[cfg(test)]

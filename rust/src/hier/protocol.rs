@@ -118,7 +118,7 @@ pub enum InnerCommit {
 }
 
 /// The master's current (and optionally staged) level-chunk.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 struct Chunk {
     /// Local queue over `[0, len)`; granted ranges are offset to absolute.
     q: WorkQueue,
@@ -142,7 +142,7 @@ struct Chunk {
 /// stale-`seq` protocol and re-reserve against the new binding. Switches
 /// are therefore race-free on both substrates without any new machinery:
 /// the chunk boundary IS the synchronization point.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct NodeLedger {
     /// The technique slot: what the next installed chunk binds to.
     inner_kind: TechniqueKind,

@@ -13,7 +13,7 @@ use dca_dls::config::{
     ClusterConfig, DelaySite, ExecutionModel, HierParams, SchedPath, WatermarkMode,
 };
 use dca_dls::coordinator::{self, EngineConfig};
-use dca_dls::des::{simulate, DesConfig};
+use dca_dls::des::{pdes::PdesMode, simulate, DesConfig};
 use dca_dls::report::figures::{
     fig1_series, run_figure, table2_rows, table3_rows, App, FigureConfig,
 };
@@ -73,8 +73,15 @@ VALIDATION
 PARALLEL DES CORE (docs/pdes.md)
   --des-threads N              (simulate, hier, tenants)
       shard the event loop across N worker threads (subtree/node-group
-      partition, conservative lookahead); results are bit-identical to the
-      sequential engine. tenants: fans out the --slowdown solo baselines.
+      partition, conservative or hybrid-optimistic rounds); 0 = auto
+      (available parallelism, clamped to the shard count). Results are
+      bit-identical to the sequential engine at every thread count.
+      tenants: fans out the --slowdown solo baselines instead (the
+      session loop itself stays sequential; see docs/pdes.md).
+  --des-mode conservative|hybrid   (simulate, hier, metrics-dump)
+      round protocol of the parallel core (default hybrid: a per-shard
+      controller opens bounded optimistic windows, with checkpoint/
+      rollback keeping results exact).
   --master-lockfree            (simulate --model hier, hier)
       fused master-tier grants through the staged-chunk MPSC fast path
 
@@ -157,7 +164,9 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 --sched-path two-phase|lockfree|auto   (--lockfree = shorthand)\n\
              \n\
              PARALLEL CORE (docs/pdes.md)\n\
-             \x20 --des-threads N          sharded PDES event loop (bit-identical)\n\
+             \x20 --des-threads N          sharded PDES event loop (bit-identical;\n\
+             \x20                          0 = auto)\n\
+             \x20 --des-mode conservative|hybrid   round protocol (default hybrid)\n\
              \x20 --master-lockfree        fused master-tier grants (--model hier,\n\
              \x20                          needs a lock-free path, excludes --adaptive)\n\
              \n\
@@ -200,7 +209,9 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 --adaptive  --probe-interval G  --candidates t,…\n\
              \n\
              PARALLEL CORE (docs/pdes.md)\n\
-             \x20 --des-threads N          sharded PDES event loop (bit-identical)\n\
+             \x20 --des-threads N          sharded PDES event loop (bit-identical;\n\
+             \x20                          0 = auto)\n\
+             \x20 --des-mode conservative|hybrid   round protocol (default hybrid)\n\
              \x20 --master-lockfree        fused master-tier grants (needs a\n\
              \x20                          lock-free path, excludes --adaptive)\n\
              \n\
@@ -284,7 +295,9 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 --lockfree | --sched-path P\n\
              \x20 --slowdown      re-run each tenant solo, report slowdown vs solo\n\
              \x20 --des-threads N fan the --slowdown solo baselines out over N\n\
-             \x20                 worker threads (identical report, less wall time)\n\
+             \x20                 worker threads (0 = auto; identical report, less\n\
+             \x20                 wall time — the session loop itself is sequential,\n\
+             \x20                 see docs/pdes.md)\n\
              \x20 --json FILE     write the session report as JSON\n\
              \n\
              OBSERVABILITY\n\
@@ -332,8 +345,9 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 --lockfree | --sched-path two-phase|lockfree|auto\n\
              \x20 --adaptive  --probe-interval G  --candidates t,…\n\
              \x20                exercise the switch counter too\n\
-             \x20 --des-threads N  shard count of the PDES sampler cell\n\
-             \x20                (default 2; 1 leaves dcadls_pdes_* at zero)\n\
+             \x20 --des-threads N  worker threads of the PDES sampler cell\n\
+             \x20                (default 2; 0 = auto; 1 leaves dcadls_pdes_* at zero)\n\
+             \x20 --des-mode conservative|hybrid   round protocol (default hybrid)\n\
              \x20 --master-lockfree  fuse the sampler's root tier\n\
              \n\
              EXAMPLE\n\
@@ -711,17 +725,30 @@ const HIER_ONLY_FLAGS: [&str; 8] = [
 
 /// `--des-threads N`: worker threads for the sharded parallel DES core
 /// (PDES) — see docs/pdes.md. 1 (the default) keeps the classic sequential
-/// event loop; results are bit-identical either way.
+/// event loop; 0 means **auto** — clamp to the machine's available
+/// parallelism and, inside the executor, to the shard count. Results are
+/// bit-identical for every value.
 fn des_threads_of(flags: &HashMap<String, String>) -> anyhow::Result<u32> {
     match flags.get("des-threads") {
         None => Ok(1),
-        Some(raw) => {
-            let t: u32 = raw.parse().map_err(|_| {
-                anyhow::anyhow!("bad --des-threads '{raw}' (expect a thread count ≥ 1)")
-            })?;
-            anyhow::ensure!(t >= 1, "--des-threads must be ≥ 1");
-            Ok(t)
-        }
+        Some(raw) => raw.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "bad --des-threads '{raw}' (expect a thread count, or 0 = auto)"
+            )
+        }),
+    }
+}
+
+/// `--des-mode conservative|hybrid`: round protocol of the parallel DES
+/// core. `hybrid` (the default) lets a per-shard controller open bounded
+/// optimistic windows past the conservative horizon; both modes are
+/// bit-identical to the sequential loop — see docs/pdes.md.
+fn des_mode_of(flags: &HashMap<String, String>) -> anyhow::Result<PdesMode> {
+    match flags.get("des-mode") {
+        None => Ok(PdesMode::default()),
+        Some(raw) => PdesMode::parse(raw).ok_or_else(|| {
+            anyhow::anyhow!("bad --des-mode '{raw}' (expect conservative|hybrid)")
+        }),
     }
 }
 
@@ -729,8 +756,10 @@ fn des_threads_of(flags: &HashMap<String, String>) -> anyhow::Result<u32> {
 /// of silently ignoring them.
 fn reject_pdes_flags(flags: &HashMap<String, String>, cmd: &str) -> anyhow::Result<()> {
     anyhow::ensure!(
-        !(flags.contains_key("des-threads") || flags.contains_key("master-lockfree")),
-        "--des-threads/--master-lockfree are not supported by `{cmd}`; \
+        !(flags.contains_key("des-threads")
+            || flags.contains_key("des-mode")
+            || flags.contains_key("master-lockfree")),
+        "--des-threads/--des-mode/--master-lockfree are not supported by `{cmd}`; \
          use `simulate`, `hier`, `metrics-dump`, or `tenants` (--des-threads only)"
     );
     Ok(())
@@ -1085,12 +1114,13 @@ fn cmd_metrics_dump(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         cl,
         IterationCost::Constant(1e-5),
     )
-    .with_threads(des_threads);
+    .with_threads(des_threads)
+    .with_pdes_mode(des_mode_of(flags)?);
     des_cfg.hier = des_hier;
     des_cfg.sched_path = sched_path_of(flags)?;
     let r = simulate(&des_cfg)?;
     if let Some(p) = &r.pdes {
-        EngineMetrics::register(&registry).on_pdes(p.rounds, p.horizon_stalls, p.mailbox_depth_max);
+        EngineMetrics::register(&registry).on_pdes(p);
     }
     print!("{}", registry.render_prometheus());
     Ok(())
@@ -1124,6 +1154,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         record_assignments: true,
         stream_interval: stream.as_ref().map_or(0.0, |(_, s)| *s),
         des_threads: des_threads_of(flags)?,
+        pdes_mode: des_mode_of(flags)?,
         params: LoopParams::new(n, cluster.total_ranks()),
         technique: tech,
         model,
@@ -1154,12 +1185,17 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     );
     if let Some(p) = &r.pdes {
         println!(
-            "PDES: {} shards × {} threads, {} rounds, lookahead {}ns, \
+            "PDES: {} shards × {} threads, {} mode, {} rounds, lookahead {}ns, \
+             window {}ns, {} rollbacks, {} speculated events, \
              {} horizon stalls, mailbox depth ≤ {}",
             p.shards,
             p.threads,
+            p.mode.as_str(),
             p.rounds,
             p.lookahead_ns,
+            p.window_ns,
+            p.rollbacks,
+            p.speculated_events,
             p.horizon_stalls,
             p.mailbox_depth_max
         );
@@ -1182,6 +1218,7 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         hier = hier.with_master_lockfree();
     }
     let des_threads = des_threads_of(flags)?;
+    let des_mode = des_mode_of(flags)?;
     let label = |m: ExecutionModel| {
         m.label_adaptive(
             hier.depth() as u32,
@@ -1246,6 +1283,7 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             record_assignments: true,
             stream_interval,
             des_threads,
+            pdes_mode: des_mode,
             params: LoopParams::new(n, cluster.total_ranks()),
             technique: tech,
             model,
@@ -1290,13 +1328,18 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     for (model, r) in &results {
         if let Some(p) = r.as_ref().and_then(|r| r.pdes.as_ref()) {
             println!(
-                "PDES {:<mw$} {} shards × {} threads, {} rounds, lookahead {}ns, \
+                "PDES {:<mw$} {} shards × {} threads, {} mode, {} rounds, \
+                 lookahead {}ns, window {}ns, {} rollbacks, {} speculated, \
                  {} stalls, mailbox ≤ {}",
                 label(*model),
                 p.shards,
                 p.threads,
+                p.mode.as_str(),
                 p.rounds,
                 p.lookahead_ns,
+                p.window_ns,
+                p.rollbacks,
+                p.speculated_events,
                 p.horizon_stalls,
                 p.mailbox_depth_max
             );
@@ -1367,8 +1410,12 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                             Json::obj()
                                 .field("shards", p.shards)
                                 .field("threads", p.threads)
+                                .field("mode", p.mode.as_str())
                                 .field("rounds", p.rounds)
                                 .field("lookahead_ns", p.lookahead_ns)
+                                .field("window_ns", p.window_ns)
+                                .field("rollbacks", p.rollbacks)
+                                .field("speculated_events", p.speculated_events)
                                 .field("horizon_stalls", p.horizon_stalls)
                                 .field("mailbox_depth_max", p.mailbox_depth_max),
                         );

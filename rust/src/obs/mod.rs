@@ -292,6 +292,13 @@ pub struct EngineMetrics {
     pub pdes_horizon_stalls: Arc<Counter>,
     /// `dcadls_pdes_mailbox_depth` — high-water cross-shard mailbox depth.
     pub pdes_mailbox_depth: Arc<Gauge>,
+    /// `dcadls_pdes_rollbacks_total` — optimistic-window rollbacks replayed.
+    pub pdes_rollbacks: Arc<Counter>,
+    /// `dcadls_pdes_speculated_events_total` — events executed past the
+    /// safe horizon (including any replayed after a rollback).
+    pub pdes_speculated_events: Arc<Counter>,
+    /// `dcadls_pdes_window_ns` — optimistic window bound of the last run.
+    pub pdes_window_ns: Arc<Gauge>,
 }
 
 impl EngineMetrics {
@@ -339,6 +346,19 @@ impl EngineMetrics {
                 "dcadls_pdes_mailbox_depth",
                 "High-water depth of any cross-shard SPSC mailbox, messages.",
             ),
+            pdes_rollbacks: r.counter(
+                "dcadls_pdes_rollbacks_total",
+                "Optimistic-window rollbacks (checkpoint restores + replays).",
+            ),
+            pdes_speculated_events: r.counter(
+                "dcadls_pdes_speculated_events_total",
+                "Events executed past the safe horizon by the hybrid mode.",
+            ),
+            pdes_window_ns: r.gauge(
+                "dcadls_pdes_window_ns",
+                "Optimistic window bound of the most recent sharded run, ns \
+(0 = conservative).",
+            ),
         }
     }
 
@@ -358,14 +378,18 @@ impl EngineMetrics {
     }
 
     /// Fold one finished PDES run (`DesResult::pdes`) into the registry:
-    /// rounds and stalls accumulate across runs, the mailbox gauge keeps
-    /// the high-water mark seen by any run.
-    pub fn on_pdes(&self, rounds: u64, horizon_stalls: u64, mailbox_depth_max: u64) {
-        self.pdes_rounds.add(rounds);
-        self.pdes_horizon_stalls.add(horizon_stalls);
-        if mailbox_depth_max as f64 > self.pdes_mailbox_depth.get() {
-            self.pdes_mailbox_depth.set(mailbox_depth_max as f64);
+    /// rounds, stalls, rollbacks, and speculated events accumulate across
+    /// runs; the mailbox gauge keeps the high-water mark seen by any run;
+    /// the window gauge tracks the most recent run's bound.
+    pub fn on_pdes(&self, p: &crate::des::PdesSummary) {
+        self.pdes_rounds.add(p.rounds);
+        self.pdes_horizon_stalls.add(p.horizon_stalls);
+        if p.mailbox_depth_max as f64 > self.pdes_mailbox_depth.get() {
+            self.pdes_mailbox_depth.set(p.mailbox_depth_max as f64);
         }
+        self.pdes_rollbacks.add(p.rollbacks);
+        self.pdes_speculated_events.add(p.speculated_events);
+        self.pdes_window_ns.set(p.window_ns as f64);
     }
 }
 
@@ -489,17 +513,37 @@ mod tests {
 
     #[test]
     fn pdes_fold_accumulates_and_keeps_high_water() {
+        let summary = |rounds, stalls, mailbox, rollbacks, spec, window| crate::des::PdesSummary {
+            shards: 4,
+            threads: 2,
+            mode: crate::des::pdes::PdesMode::Hybrid,
+            rounds,
+            lookahead_ns: 1_000,
+            window_ns: window,
+            horizon_stalls: stalls,
+            mailbox_depth_max: mailbox,
+            rollbacks,
+            speculated_events: spec,
+        };
         let r = MetricsRegistry::new();
         let m = EngineMetrics::register(&r);
-        m.on_pdes(10, 2, 7);
-        m.on_pdes(5, 0, 3); // lower mailbox mark must not regress the gauge
+        m.on_pdes(&summary(10, 2, 7, 3, 40, 1_000));
+        // Lower mailbox mark must not regress the gauge; the window gauge
+        // tracks the latest run.
+        m.on_pdes(&summary(5, 0, 3, 1, 10, 500));
         assert_eq!(m.pdes_rounds.get(), 15);
         assert_eq!(m.pdes_horizon_stalls.get(), 2);
         assert!((m.pdes_mailbox_depth.get() - 7.0).abs() < 1e-12);
+        assert_eq!(m.pdes_rollbacks.get(), 4);
+        assert_eq!(m.pdes_speculated_events.get(), 50);
+        assert!((m.pdes_window_ns.get() - 500.0).abs() < 1e-12);
         let text = r.render_prometheus();
         assert!(text.contains("dcadls_pdes_rounds_total 15"));
         assert!(text.contains("dcadls_pdes_horizon_stalls_total 2"));
         assert!(text.contains("dcadls_pdes_mailbox_depth 7"));
+        assert!(text.contains("dcadls_pdes_rollbacks_total 4"));
+        assert!(text.contains("dcadls_pdes_speculated_events_total 50"));
+        assert!(text.contains("dcadls_pdes_window_ns 500"));
     }
 
     #[test]

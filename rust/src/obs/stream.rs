@@ -51,6 +51,14 @@ impl Sampler {
         self.interval_ns as f64 * 1e-9
     }
 
+    /// Time of the `k`-th tick (0-based), in seconds — exactly the value
+    /// [`Sampler::due`] yields for it (same integer arithmetic), so a
+    /// post-run merge of per-shard tick series can rebuild the boundary
+    /// grid bit-for-bit.
+    pub fn tick_at(&self, k: usize) -> f64 {
+        ((k as u64 + 1) * self.interval_ns) as f64 * 1e-9
+    }
+
     /// Next elapsed tick at or before `now_ns`, if any. Call in a loop to
     /// drain multiple boundaries crossed by one large event-time jump.
     pub fn due(&mut self, now_ns: u64) -> Option<f64> {

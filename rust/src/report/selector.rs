@@ -62,15 +62,15 @@ pub fn select_approach(
         }
         let cfg = DesConfig {
             sched_path,
-            record_assignments: true,
-            params: LoopParams::new(prefix_n.min(n), cluster.total_ranks()),
-            technique,
-            model,
             delay,
-            cluster: cluster.clone(),
-            cost: cost.clone(),
-            pe_speed: vec![],
             hier,
+            ..DesConfig::new(
+                LoopParams::new(prefix_n.min(n), cluster.total_ranks()),
+                technique,
+                model,
+                cluster.clone(),
+                cost.clone(),
+            )
         };
         predictions.push((model, simulate(&cfg)?.t_par()));
     }

@@ -17,7 +17,7 @@
 //! * `2` — the spec itself was unreadable or invalid.
 
 use crate::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
-use crate::des::{simulate, DesConfig};
+use crate::des::{pdes::PdesMode, simulate, DesConfig};
 use crate::report::json::Json;
 use crate::substrate::delay::InjectedDelay;
 use crate::techniques::{CandidateSet, LoopParams, TechniqueKind};
@@ -247,6 +247,24 @@ fn parse_des(j: &Json) -> anyhow::Result<DesConfig> {
     }
     cfg.delay = parse_delay(j.get("delay"))?;
     cfg.hier = parse_hier(j, model)?;
+    if let Some(t) = j.get("des_threads") {
+        let t = t
+            .as_u64()
+            .filter(|t| *t <= u32::MAX as u64)
+            .ok_or_else(|| anyhow::anyhow!("des.des_threads must be a thread count (0 = auto)"))?;
+        cfg.des_threads = t as u32;
+    }
+    if let Some(m) = j.get("des_mode") {
+        let m = m
+            .as_str()
+            .and_then(PdesMode::parse)
+            .ok_or_else(|| anyhow::anyhow!("des.des_mode must be \"conservative\" or \"hybrid\""))?;
+        anyhow::ensure!(
+            j.get("des_threads").is_some(),
+            "des.des_mode only applies to sharded runs — set des.des_threads too"
+        );
+        cfg.pdes_mode = m;
+    }
     Ok(cfg)
 }
 
@@ -380,6 +398,17 @@ pub fn explain(sc: &Scenario) -> String {
                     cfg.hier.inner.map(|t| t.name()).unwrap_or("(outer)"),
                 ));
             }
+            if cfg.des_threads != 1 {
+                out.push_str(&format!(
+                    "  pdes      {} executor, {} DES threads\n",
+                    cfg.pdes_mode.as_str(),
+                    if cfg.des_threads == 0 {
+                        "auto".to_string()
+                    } else {
+                        cfg.des_threads.to_string()
+                    },
+                ));
+            }
         }
         Body::Session { cfg, slowdown } => {
             out.push_str(&format!(
@@ -450,13 +479,23 @@ pub fn run_scenario(sc: &Scenario, stream_interval: f64) -> anyhow::Result<RunRe
             if let Some(k) = sc.expect.min_switches {
                 checks.push(bound_check("switches", r.switch_events.len() as f64, k as f64));
             }
-            let observed = Json::obj()
+            let mut observed = Json::obj()
                 .field("t_par", r.t_par())
                 .field("chunks", r.stats.chunks)
                 .field("messages", r.stats.messages)
                 .field("fast_grants", r.fast_grants)
                 .field("events", r.events)
                 .field("switches", r.switch_events.len() as u64);
+            if let Some(p) = &r.pdes {
+                observed = observed.field(
+                    "pdes",
+                    Json::obj()
+                        .field("shards", p.shards)
+                        .field("threads", p.threads)
+                        .field("mode", p.mode.as_str())
+                        .field("rollbacks", p.rollbacks),
+                );
+            }
             (observed, r.stream)
         }
         Body::Session { cfg, slowdown } => {
@@ -562,6 +601,22 @@ mod tests {
             ),
             (
                 r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "des",
+                   "des": {"n": 100, "technique": "GSS", "des_threads": "many"}}"#,
+                "non-numeric des_threads",
+            ),
+            (
+                r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "des",
+                   "des": {"n": 100, "technique": "GSS", "des_threads": 4,
+                           "des_mode": "optimistic"}}"#,
+                "unknown des_mode",
+            ),
+            (
+                r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "des",
+                   "des": {"n": 100, "technique": "GSS", "des_mode": "hybrid"}}"#,
+                "des_mode without des_threads",
+            ),
+            (
+                r#"{"schema": "dca-dls/scenario/v1", "name": "x", "kind": "des",
                    "des": {"n": 100, "technique": "GSS"},
                    "expect": {"t_per": 1.0}}"#,
                 "unknown expectation",
@@ -615,6 +670,54 @@ mod tests {
         assert!(text.contains("unit-des"));
         assert!(text.contains("GSS"));
         assert!(text.contains("t_par = 1"));
+    }
+
+    /// A sharded scenario cell must run through the PDES executor (the
+    /// summary is attached) and observe the exact same result the
+    /// sequential run would — the same t_par either way, by the PDES
+    /// determinism guarantee.
+    #[test]
+    fn pdes_des_scenario_runs_sharded_and_matches_sequential() {
+        let doc = |threads: &str| {
+            format!(
+                r#"{{
+                  "schema": "dca-dls/scenario/v1",
+                  "name": "unit-pdes",
+                  "kind": "des",
+                  "des": {{
+                    "n": 4000, "technique": "GSS",
+                    "cluster": {{"nodes": 4, "ranks_per_node": 4}}, "cost": 1e-6,
+                    "des_threads": {threads}, "des_mode": "hybrid"
+                  }}
+                }}"#
+            )
+        };
+        let sc = parse_scenario(&doc("4")).unwrap();
+        let Body::Des(cfg) = &sc.body else { panic!("des body") };
+        assert_eq!(cfg.des_threads, 4);
+        assert_eq!(cfg.pdes_mode, PdesMode::Hybrid);
+        let text = explain(&sc);
+        assert!(text.contains("hybrid executor"), "{text}");
+        let sharded = run_scenario(&sc, 0.0).unwrap();
+        let p = sharded.observed.get("pdes").expect("sharded run attaches a pdes summary");
+        assert!(p.get("shards").and_then(Json::as_u64).unwrap() >= 2);
+
+        // `des_threads: 0` (auto) must also shard, and both must equal the
+        // sequential t_par bit for bit.
+        let auto = run_scenario(&parse_scenario(&doc("0")).unwrap(), 0.0).unwrap();
+        assert!(auto.observed.get("pdes").is_some(), "auto must resolve to ≥ 2 threads here");
+        let mut seq = parse_scenario(&doc("4")).unwrap();
+        if let Body::Des(cfg) = &mut seq.body {
+            cfg.des_threads = 1;
+        }
+        let seq = run_scenario(&seq, 0.0).unwrap();
+        for r in [&sharded, &auto] {
+            assert_eq!(
+                r.observed.get("t_par").and_then(Json::as_f64),
+                seq.observed.get("t_par").and_then(Json::as_f64),
+                "PDES scenario must be bit-identical to sequential"
+            );
+        }
     }
 
     #[test]

@@ -110,8 +110,9 @@ impl Ewma {
 /// `None` = unviable (no closed form, or over the step cap).
 type ScheduleStats = Option<(u64, u64)>;
 
-/// Per-subtree adaptive controller — see the module docs.
-#[derive(Debug)]
+/// Per-subtree adaptive controller — see the module docs. `Clone` so a
+/// PDES shard checkpoint can snapshot it for rollback.
+#[derive(Debug, Clone)]
 pub struct AdaptiveController {
     base: LoopParams,
     fanout: u32,

@@ -62,9 +62,13 @@ pub struct SessionConfig {
     /// `docs/metrics-schema.md` and [`SessionOutcome::stream`].
     pub stream_interval: f64,
     /// Worker threads for the `--slowdown` solo-baseline fan-out
-    /// ([`session_slowdowns`]). The session simulation itself always runs
-    /// on one global virtual-time order (tenants couple through the shared
-    /// arbiters); only the independent solo re-runs parallelize.
+    /// ([`session_slowdowns`]); 0 = auto (the machine's available
+    /// parallelism). The session simulation itself always runs on one
+    /// global virtual-time order — tenants couple through the shared
+    /// arbiters at every event, so there is no shard boundary with a
+    /// nonzero lookahead to split on (see docs/pdes.md);
+    /// only the independent solo re-runs parallelize. The report is
+    /// bit-identical for every value.
     pub des_threads: u32,
     pub tenants: Vec<TenantSpec>,
 }
@@ -87,9 +91,10 @@ impl SessionConfig {
     }
 
     /// Fan the `--slowdown` solo baselines out over `n` worker threads
-    /// (1 = fully sequential; the session run itself is unaffected).
+    /// (1 = fully sequential, 0 = auto; the session run itself is
+    /// unaffected).
     pub fn with_des_threads(mut self, n: u32) -> Self {
-        self.des_threads = n.max(1);
+        self.des_threads = n;
         self
     }
 
@@ -217,7 +222,12 @@ pub fn session_slowdowns(
         };
         Ok(simulate_session(&solo_cfg)?.tenants[0].turnaround)
     };
-    let threads = (cfg.des_threads as usize).clamp(1, firsts.len().max(1));
+    let resolved = if cfg.des_threads == 0 {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    } else {
+        cfg.des_threads as usize
+    };
+    let threads = resolved.clamp(1, firsts.len().max(1));
     let solos: Vec<f64> = if threads > 1 {
         let next = std::sync::atomic::AtomicUsize::new(0);
         let mut slots: Vec<Option<anyhow::Result<f64>>> = Vec::new();

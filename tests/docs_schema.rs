@@ -192,10 +192,14 @@ fn all_stream_records() -> Vec<Json> {
         Json::obj()
             .field("shards", p.shards)
             .field("threads", p.threads)
+            .field("mode", p.mode.as_str())
             .field("rounds", p.rounds)
             .field("lookahead_ns", p.lookahead_ns)
+            .field("window_ns", p.window_ns)
             .field("horizon_stalls", p.horizon_stalls)
-            .field("mailbox_depth_max", p.mailbox_depth_max),
+            .field("mailbox_depth_max", p.mailbox_depth_max)
+            .field("rollbacks", p.rollbacks)
+            .field("speculated_events", p.speculated_events),
     ));
 
     records

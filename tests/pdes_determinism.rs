@@ -7,9 +7,10 @@
 //! shard observes.
 
 use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
-use dca_dls::des::{simulate, DesConfig, DesResult};
+use dca_dls::des::{pdes::PdesMode, simulate, DesConfig, DesResult};
 use dca_dls::sched::Assignment;
-use dca_dls::techniques::{LoopParams, TechniqueKind};
+use dca_dls::substrate::delay::InjectedDelay;
+use dca_dls::techniques::{CandidateSet, LoopParams, TechniqueKind};
 use dca_dls::tenant::{session_slowdowns, SessionConfig, TenantSpec};
 use dca_dls::workload::IterationCost;
 
@@ -106,6 +107,156 @@ fn hier_master_lockfree_is_thread_count_invariant() {
     let base = fingerprint(&seq);
     for t in THREADS {
         assert_eq!(base, fingerprint(&mk(t)), "t={t}");
+    }
+}
+
+/// Adversarial cell for the optimistic window: SS grant traffic over a
+/// tight cross-node latency keeps every round sparse (so the controller
+/// opens the window) while cross-shard replies keep landing exactly one
+/// lookahead past the horizon — inside the speculated span — so the
+/// hybrid executor is forced to roll back and replay, round after round.
+/// The result must still be bit-identical to the sequential loop and to
+/// the conservative executor at every thread count.
+#[test]
+fn hybrid_rollbacks_fire_and_preserve_bit_identity() {
+    let mk = |threads: u32, mode: PdesMode| {
+        let cl = cluster(4, 4);
+        let cfg = DesConfig::new(
+            LoopParams::new(20_000, cl.total_ranks()),
+            TechniqueKind::Ss,
+            ExecutionModel::Dca,
+            cl,
+            IterationCost::Constant(1e-6),
+        )
+        .with_threads(threads)
+        .with_pdes_mode(mode);
+        simulate(&cfg).unwrap()
+    };
+    let base = fingerprint(&mk(1, PdesMode::Hybrid));
+    for t in THREADS {
+        let cons = mk(t, PdesMode::Conservative);
+        let p = cons.pdes.as_ref().unwrap();
+        assert_eq!(p.rollbacks, 0, "conservative never speculates (t={t})");
+        assert_eq!(p.speculated_events, 0, "t={t}");
+        assert_eq!(base, fingerprint(&cons), "conservative t={t}");
+
+        let hyb = mk(t, PdesMode::Hybrid);
+        let p = hyb.pdes.as_ref().unwrap();
+        assert!(p.speculated_events > 0, "the window must open on this cell (t={t})");
+        assert!(p.rollbacks > 0, "stragglers must violate the window here (t={t})");
+        assert_eq!(base, fingerprint(&hyb), "hybrid t={t}");
+    }
+}
+
+/// `--adaptive` under sharding: the rebinding controllers must produce the
+/// exact switch trace the sequential run produces, at every thread count,
+/// for both the flat-DCA controller (shard-0-local eras) and the
+/// hierarchical per-persona controllers (merged in (time, level, master)
+/// order). The heterogeneous exponential delay keeps rebind times distinct.
+#[test]
+fn adaptive_switch_trace_is_thread_count_invariant() {
+    let mk_flat = |threads: u32| {
+        let cl = cluster(4, 4);
+        let mut cfg = DesConfig::new(
+            LoopParams::new(20_000, cl.total_ranks()),
+            TechniqueKind::Ss,
+            ExecutionModel::Dca,
+            cl,
+            IterationCost::Constant(1e-5),
+        )
+        .with_threads(threads);
+        cfg.hier = HierParams::default()
+            .with_adaptive()
+            .with_probe_interval(8)
+            .with_candidates(CandidateSet::parse("ss,gss,fac").unwrap());
+        cfg.delay = InjectedDelay::exponential_calculation(100e-6, 5);
+        simulate(&cfg).unwrap()
+    };
+    let mk_hier = |threads: u32| {
+        let cl = cluster(2, 4);
+        let mut cfg = DesConfig::new(
+            LoopParams::new(20_000, cl.total_ranks()),
+            TechniqueKind::Fac2,
+            ExecutionModel::HierDca,
+            cl,
+            IterationCost::Constant(1e-5),
+        )
+        .with_threads(threads);
+        cfg.hier = HierParams::with_inner(TechniqueKind::Ss)
+            .with_adaptive()
+            .with_probe_interval(8)
+            .with_candidates(CandidateSet::parse("ss,tap").unwrap());
+        cfg.sched_path = SchedPath::Auto;
+        cfg.delay = InjectedDelay::exponential_calculation(100e-6, 7);
+        simulate(&cfg).unwrap()
+    };
+    for (label, mk) in [("flat", &mk_flat as &dyn Fn(u32) -> DesResult), ("hier", &mk_hier)] {
+        let seq = mk(1);
+        assert!(
+            !seq.switch_events.is_empty(),
+            "{label}: the controller must actually rebind on this cell"
+        );
+        let base = fingerprint(&seq);
+        for t in THREADS {
+            let par = mk(t);
+            assert!(par.pdes.is_some(), "{label} t={t}");
+            assert_eq!(seq.switch_events, par.switch_events, "{label} t={t}");
+            assert_eq!(base, fingerprint(&par), "{label} t={t}");
+        }
+    }
+}
+
+/// `--stream-metrics` under sharding: the merged per-shard tick series
+/// must rebuild the sequential stream record-for-record (rendered JSON
+/// compared verbatim), for a flat cell and a hierarchical cell with
+/// subtree entries.
+#[test]
+fn stream_records_are_thread_count_invariant() {
+    let render = |r: &DesResult| -> Vec<String> {
+        r.stream.iter().map(|j| j.render()).collect()
+    };
+    let mk_flat = |threads: u32| {
+        let cl = cluster(4, 4);
+        let cfg = DesConfig::new(
+            LoopParams::new(40_000, cl.total_ranks()),
+            TechniqueKind::Gss,
+            ExecutionModel::Dca,
+            cl,
+            IterationCost::Constant(1e-5),
+        )
+        .with_threads(threads)
+        .with_stream_interval(1e-3);
+        simulate(&cfg).unwrap()
+    };
+    let mk_hier = |threads: u32| {
+        let cl = cluster(4, 4);
+        let mut cfg = DesConfig::new(
+            LoopParams::new(24_000, cl.total_ranks()),
+            TechniqueKind::Fac2,
+            ExecutionModel::HierDca,
+            cl,
+            IterationCost::Constant(1e-5),
+        )
+        .with_threads(threads)
+        .with_stream_interval(1e-3);
+        cfg.hier = HierParams::with_inner(TechniqueKind::Ss);
+        simulate(&cfg).unwrap()
+    };
+    for (label, mk) in [("flat", &mk_flat as &dyn Fn(u32) -> DesResult), ("hier", &mk_hier)] {
+        let seq = mk(1);
+        let base = render(&seq);
+        assert!(base.len() >= 2, "{label}: the cell must emit interval records");
+        if label == "hier" {
+            assert!(
+                seq.stream.iter().any(|r| r.get("subtrees").is_some()),
+                "hier stream must carry subtree entries"
+            );
+        }
+        for t in THREADS {
+            let par = mk(t);
+            assert!(par.pdes.is_some(), "{label} t={t}");
+            assert_eq!(base, render(&par), "{label} t={t}");
+        }
     }
 }
 
