@@ -39,7 +39,17 @@
 //! conservative horizon rounds carry only a handful of events each and
 //! only the optimistic window recovers the parallelism.
 //! `BENCH_ASSERT_PDES_OPT_SPEEDUP=1` hard-asserts hybrid ≥ 2× at 4
-//! threads while conservative stays under 1.3× (off by default).
+//! threads while conservative stays under 1.3× (off by default), and that
+//! multi-Δ windows never lose events/sec to a single-Δ cap (the cell also
+//! runs a `window_mult_max = 1` leg — bit-identical, rollback-free).
+//!
+//! A sharded-session cell (64 fair-share tenants in four disjoint
+//! placement blocks — docs/tenancy.md §Sharded sessions) runs the
+//! sequential session loop against the arbiter-domain-sharded loop,
+//! asserts the outcomes bit-identical (makespan, events, Jain, per-tenant
+//! completions) with zero rollbacks, and gates the makespan.
+//! `BENCH_ASSERT_SESSION_SPEEDUP=1` additionally asserts ≥2× wall speedup
+//! on the sharded leg (off by default: wall clock).
 //!
 //! Run: `cargo bench --bench sched_throughput` (plain harness). Emits
 //! `BENCH_sched_throughput.json` (path override:
@@ -51,10 +61,15 @@ use std::time::Instant;
 
 use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
 use dca_dls::coordinator::{self, EngineConfig};
-use dca_dls::des::{pdes::PdesMode, simulate, DesConfig, DesResult};
+use dca_dls::des::{
+    pdes::{PdesMode, WINDOW_MULT_MAX},
+    simulate, DesConfig, DesResult,
+};
 use dca_dls::report::json::Json;
 use dca_dls::techniques::{LoopParams, TechniqueKind};
-use dca_dls::tenant::{session_slowdowns, ArbitrationPolicy, SessionConfig, TenantSpec, TenantState};
+use dca_dls::tenant::{
+    session_slowdowns, simulate_session, ArbitrationPolicy, SessionConfig, TenantSpec, TenantState,
+};
 use dca_dls::workload::synthetic::{CostShape, Synthetic};
 use dca_dls::workload::{IterationCost, Workload};
 
@@ -91,6 +106,18 @@ const TIGHT_NODES: u32 = 8;
 const TIGHT_RPN: u32 = 8;
 const TIGHT_N: u64 = 200_000;
 const TIGHT_COST: f64 = 1e-6;
+
+// Sharded-session cell — 64 tenants in four disjoint one-node placement
+// blocks over a 4×16 cluster: the placement geometry yields four arbiter
+// domains, so the sharded session loop runs them on parallel workers with
+// demand summaries exchanged at epoch barriers (docs/tenancy.md §Sharded
+// sessions). The gated quantity is the (bit-identical) session makespan;
+// keep in lockstep with `session_sharded_specs()` in
+// python/tools/sched_throughput_model.py.
+const SHARD_NODES: u32 = 4;
+const SHARD_RPN: u32 = 16;
+const SHARD_DOMAINS: u32 = 4;
+const SHARD_TENANTS_PER_DOMAIN: u32 = 16; // 1 bulk + 15 staggered smalls
 
 /// CI legs run `DES_THREADS={1,4}`: above 1, every DES cell goes through
 /// the subtree-sharded PDES executor and the gated rows must not move
@@ -161,7 +188,8 @@ fn run_huge(threads: u32) -> Cell {
 }
 
 /// The tight-latency cell: flat DCA SS over 8×8 ranks at 1 µs iterations.
-fn run_tight(threads: u32, mode: PdesMode) -> Cell {
+/// `cap` bounds the hybrid executor's multi-Δ window (1 = single-Δ).
+fn run_tight(threads: u32, mode: PdesMode, cap: u32) -> Cell {
     let cluster =
         ClusterConfig { nodes: TIGHT_NODES, ranks_per_node: TIGHT_RPN, ..ClusterConfig::minihpc() };
     let mut cfg = DesConfig::new(
@@ -171,12 +199,42 @@ fn run_tight(threads: u32, mode: PdesMode) -> Cell {
         cluster,
         IterationCost::Constant(TIGHT_COST),
     )
-    .with_pdes_mode(mode);
+    .with_pdes_mode(mode)
+    .with_window_mult_max(cap);
     cfg.record_assignments = false;
     cfg.des_threads = threads;
     let t0 = Instant::now();
     let r = simulate(&cfg).expect("simulate");
     Cell { r, wall: t0.elapsed().as_secs_f64() }
+}
+
+/// The sharded-session cell: `SHARD_DOMAINS` identical one-node tenant
+/// populations (one bulk SS loop + 15 staggered smalls each), disjoint by
+/// placement, under fair share.
+fn session_sharded_cfg(threads: u32, mode: PdesMode) -> SessionConfig {
+    let cluster =
+        ClusterConfig { nodes: SHARD_NODES, ranks_per_node: SHARD_RPN, ..ClusterConfig::minihpc() };
+    let mut cfg = SessionConfig::new(cluster)
+        .with_policy(ArbitrationPolicy::FairShare)
+        .with_des_threads(threads)
+        .with_des_mode(mode);
+    for d in 0..SHARD_DOMAINS {
+        let base = d * SHARD_RPN;
+        cfg = cfg.admit(
+            TenantSpec::new(format!("d{d}-bulk"), BULK_N, TechniqueKind::Ss)
+                .with_cost(IterationCost::Constant(COST))
+                .placed_at(base, SHARD_RPN),
+        );
+        for i in 1..SHARD_TENANTS_PER_DOMAIN {
+            cfg = cfg.admit(
+                TenantSpec::new(format!("d{d}-t{i}"), SMALL_N, TechniqueKind::Ss)
+                    .arriving_at(0.002 * i as f64)
+                    .with_cost(IterationCost::Constant(COST))
+                    .placed_at(base, SHARD_RPN),
+            );
+        }
+    }
+    cfg
 }
 
 fn tenant_session(policy: ArbitrationPolicy) -> SessionConfig {
@@ -429,11 +487,12 @@ fn main() {
     // Both executors must still be bit-identical to the sequential loop.
     let tight_scenario = format!("TIGHT SS {TIGHT_NODES}x{TIGHT_RPN}");
     let tight_threads = des_threads().max(4);
-    let tseq = run_tight(1, PdesMode::Hybrid);
-    let tcons = run_tight(tight_threads, PdesMode::Conservative);
-    let thyb = run_tight(tight_threads, PdesMode::Hybrid);
+    let tseq = run_tight(1, PdesMode::Hybrid, WINDOW_MULT_MAX);
+    let tcons = run_tight(tight_threads, PdesMode::Conservative, WINDOW_MULT_MAX);
+    let thyb = run_tight(tight_threads, PdesMode::Hybrid, WINDOW_MULT_MAX);
+    let tcap = run_tight(tight_threads, PdesMode::Hybrid, 1);
     assert!(tseq.r.pdes.is_none(), "one thread keeps the sequential loop");
-    for (mode, c) in [("conservative", &tcons), ("hybrid", &thyb)] {
+    for (mode, c) in [("conservative", &tcons), ("hybrid", &thyb), ("hybrid-1delta", &tcap)] {
         let p = c.r.pdes.as_ref().expect("sharded run reports PDES counters");
         assert!(p.shards > 1, "{mode}: the tight cell must shard");
         assert_eq!(tseq.r.stats.chunks, c.r.stats.chunks, "tight/{mode}: chunk count");
@@ -442,22 +501,40 @@ fn main() {
         assert_eq!(tseq.r.events, c.r.events, "tight/{mode}: event count");
     }
     let hp = thyb.r.pdes.as_ref().unwrap();
+    let cp = tcap.r.pdes.as_ref().unwrap();
     assert!(hp.speculated_events > 0, "the window must open on the tight cell");
     assert_eq!(tcons.r.pdes.as_ref().unwrap().rollbacks, 0, "conservative never rolls back");
+    // Deep-speculation variant: the single-Δ cap changes only the
+    // counters (rollback-free, shallow windows), never the result; the
+    // default cap may escalate but never below the capped depth.
+    assert!(cp.speculated_events > 0, "1Δ speculation still runs on the tight cell");
+    assert!(cp.window_multiple <= 1, "cap ignored: {}", cp.window_multiple);
+    assert_eq!(cp.rollbacks, 0, "1Δ spans admit no stragglers");
+    assert!(
+        hp.window_multiple >= cp.window_multiple,
+        "multi-Δ realized depth {} below the 1Δ leg's {}",
+        hp.window_multiple,
+        cp.window_multiple
+    );
     let seq_eps = tseq.r.events as f64 / tseq.wall.max(1e-9);
     let cons_speedup = (tcons.r.events as f64 / tcons.wall.max(1e-9)) / seq_eps;
     let hyb_speedup = (thyb.r.events as f64 / thyb.wall.max(1e-9)) / seq_eps;
+    let cap_speedup = (tcap.r.events as f64 / tcap.wall.max(1e-9)) / seq_eps;
     println!(
         "{tight_scenario} N={TIGHT_N}: t_par {:.4}s, {} events — seq {:.2}s; \
          ×{tight_threads} conservative {:.2}s ({cons_speedup:.2}x) vs hybrid {:.2}s \
-         ({hyb_speedup:.2}x, {} speculated, {} rollbacks)",
+         ({hyb_speedup:.2}x, ≤{}Δ windows, {} speculated, {} rollbacks, {} ckpt bytes) \
+         vs 1Δ {:.2}s ({cap_speedup:.2}x)",
         tseq.r.t_par(),
         tseq.r.events,
         tseq.wall,
         tcons.wall,
         thyb.wall,
+        hp.window_multiple.max(1),
         hp.speculated_events,
-        hp.rollbacks
+        hp.rollbacks,
+        hp.checkpoint_bytes,
+        tcap.wall,
     );
     if std::env::var("BENCH_ASSERT_PDES_OPT_SPEEDUP").as_deref() == Ok("1") {
         assert!(
@@ -471,6 +548,11 @@ fn main() {
              longer adversarial; retune TIGHT_* so the optimistic window stays \
              load-bearing"
         );
+        assert!(
+            hyb_speedup >= cap_speedup * 0.95,
+            "multi-Δ got {hyb_speedup:.2}x but single-Δ got {cap_speedup:.2}x — \
+             deep windows must not lose events/sec to the 1Δ cap"
+        );
     }
     rows.push(
         Json::obj()
@@ -479,7 +561,9 @@ fn main() {
             .field("direction", "lower")
             .field("T-PAR", tseq.r.t_par()),
     );
-    for (label, c) in [("sequential", &tseq), ("conservative", &tcons), ("hybrid", &thyb)] {
+    for (label, c) in
+        [("sequential", &tseq), ("conservative", &tcons), ("hybrid", &thyb), ("hybrid-1delta", &tcap)]
+    {
         let mut row = info_row(&tight_scenario, SchedPath::TwoPhase, c).field("engine", label);
         if let Some(p) = &c.r.pdes {
             row = row
@@ -489,7 +573,93 @@ fn main() {
                 .field("pdes_rounds", p.rounds)
                 .field("pdes_window_ns", p.window_ns)
                 .field("pdes_rollbacks", p.rollbacks)
-                .field("pdes_speculated_events", p.speculated_events);
+                .field("pdes_speculated_events", p.speculated_events)
+                .field("pdes_checkpoint_bytes", p.checkpoint_bytes)
+                .field("pdes_window_multiple", p.window_multiple);
+        }
+        info.push(row);
+    }
+
+    // Sharded-session cell: four disjoint arbiter domains on parallel
+    // workers, demand summaries exchanged at epoch barriers. The whole
+    // outcome must be bit-identical to the sequential session loop; the
+    // gated row carries the (shared) makespan, blessed by the reference
+    // model's SessionSim.
+    let session_scenario = format!(
+        "SESSION-SHARDED {}x{} SS",
+        SHARD_DOMAINS * SHARD_TENANTS_PER_DOMAIN,
+        SHARD_NODES * SHARD_RPN
+    );
+    let run_session = |threads: u32, mode: PdesMode| {
+        let cfg = session_sharded_cfg(threads, mode);
+        let t0s = Instant::now();
+        let out = simulate_session(&cfg).expect("sharded session");
+        (out, t0s.elapsed().as_secs_f64())
+    };
+    let session_threads = des_threads().max(4);
+    let (sseq, sseq_wall) = run_session(1, PdesMode::Conservative);
+    let (spar, spar_wall) = run_session(session_threads, PdesMode::Hybrid);
+    assert!(sseq.pdes.is_none(), "one worker keeps the sequential session loop");
+    let sp = spar.pdes.as_ref().expect("the sharded session loop must engage");
+    assert_eq!(sp.shards, SHARD_DOMAINS, "domain count");
+    assert_eq!(sp.rollbacks, 0, "arbiter domains leave nothing to misspeculate");
+    assert!(sp.arbiter_epochs > 0, "the epoch exchange must actually run");
+    assert_eq!(sseq.makespan, spar.makespan, "session: makespan bit-identical");
+    assert_eq!(sseq.events, spar.events, "session: event count invariant");
+    assert_eq!(sseq.messages, spar.messages, "session: message count invariant");
+    assert_eq!(sseq.jain_fairness, spar.jain_fairness, "session: Jain index invariant");
+    for (a, b) in sseq.tenants.iter().zip(&spar.tenants) {
+        assert_eq!(a.granted_iters, b.granted_iters, "session tenant {}", a.name);
+        assert_eq!(a.completion, b.completion, "session tenant {}", a.name);
+    }
+    let session_speedup = sseq_wall.max(1e-9) / spar_wall.max(1e-9);
+    println!(
+        "{session_scenario}: makespan {:.4}s, {} events, Jain {:.3} — seq {:.2}s vs \
+         {} workers {:.2}s ({session_speedup:.2}x, {} epochs, ≤{}Δ epochs deep)",
+        sseq.makespan,
+        sseq.events,
+        sseq.jain_fairness,
+        sseq_wall,
+        sp.threads,
+        spar_wall,
+        sp.arbiter_epochs,
+        sp.window_multiple.max(1),
+    );
+    if std::env::var("BENCH_ASSERT_SESSION_SPEEDUP").as_deref() == Ok("1") {
+        assert!(
+            session_speedup >= 2.0,
+            "sharded-session events/sec speedup {session_speedup:.2}x < 2x over \
+             {} domains (seq {sseq_wall:.2}s, sharded {spar_wall:.2}s)",
+            SHARD_DOMAINS
+        );
+    }
+    rows.push(
+        Json::obj()
+            .field("scenario", session_scenario.as_str())
+            .field("tol", TOL)
+            .field("direction", "lower")
+            .field("MAKESPAN", sseq.makespan),
+    );
+    for (label, out, wall) in
+        [("sequential", &sseq, sseq_wall), ("sharded", &spar, spar_wall)]
+    {
+        let mut row = Json::obj()
+            .field("scenario", session_scenario.as_str())
+            .field("engine", label)
+            .field("makespan", out.makespan)
+            .field("jain", out.jain_fairness)
+            .field("events", out.events)
+            .field("wall_events_per_sec", out.events as f64 / wall.max(1e-9))
+            .field("wall_s", wall);
+        if let Some(p) = &out.pdes {
+            row = row
+                .field("pdes_shards", u64::from(p.shards))
+                .field("pdes_threads", u64::from(p.threads))
+                .field("pdes_mode", p.mode.as_str())
+                .field("pdes_arbiter_epochs", p.arbiter_epochs)
+                .field("pdes_window_multiple", p.window_multiple)
+                .field("pdes_speculated_events", p.speculated_events)
+                .field("pdes_rollbacks", p.rollbacks);
         }
         info.push(row);
     }

@@ -14,6 +14,13 @@ measured-µ feedback loop.
 Wall-clock metrics (ns/grant, events/sec) are machine-dependent and live in
 the bench JSON's ungated "info" section only.
 
+The sharded-session row (SESSION-SHARDED, four disjoint placement blocks)
+is blessed from the sequential SessionSim — the Rust sharded loop is
+bit-identical to its sequential loop (tests/pdes_determinism.rs), so one
+sequential makespan covers every DES_THREADS leg — and `session_sharded_cell`
+cross-checks the arbiter-domain decomposition the sharded loop rests on:
+each disjoint block behaves exactly as a session of its own.
+
 The huge-scale PDES row (HUGE FAC▸STATIC, 2^20 ranks × 2^30 iterations) is
 blessed from the closed-form schedule alone — see `huge_cell()` — and
 carries `direction: "higher"` with tol 0: the chunk/fast-grant counts are
@@ -116,6 +123,62 @@ def tenant_cell(policy):
         assert sim.state[t] == "completed"
         m.verify_coverage(tn.assignments, sim.specs[t].n)
     return sim, mean
+
+
+# Sharded-session cell — keep in lockstep with `session_sharded_cfg()` in
+# benches/sched_throughput.rs: four disjoint one-node placement blocks over
+# a 4×16 cluster (one bulk SS loop + 15 staggered smalls each, fair share).
+# The placement geometry yields four arbiter domains, which the Rust
+# sharded session loop runs on parallel workers (docs/tenancy.md §Sharded
+# sessions).
+SHARD_NODES = 4
+SHARD_RPN = 16
+SHARD_DOMAINS = 4
+SHARD_TENANTS_PER_DOMAIN = 16  # 1 bulk + 15 staggered smalls
+
+
+def session_sharded_specs(offset=0, domains=SHARD_DOMAINS):
+    specs = []
+    for d in range(domains):
+        base = offset + d * SHARD_RPN
+        specs.append(m.Tenant(BULK_N, "ss", cost=COST,
+                              offset=base, span=SHARD_RPN))
+        for i in range(1, SHARD_TENANTS_PER_DOMAIN):
+            specs.append(m.Tenant(SMALL_N, "ss", arrival=0.002 * i, cost=COST,
+                                  offset=base, span=SHARD_RPN))
+    return specs
+
+
+def session_sharded_cell():
+    """Bless the sharded-session makespan and cross-check the decomposition.
+
+    The gated number comes from the sequential SessionSim: the Rust sharded
+    loop is bit-identical to its sequential loop at every worker count
+    (tests/pdes_determinism.rs), so one sequential makespan covers every
+    DES_THREADS leg. The cross-check pins the invariant the sharded loop's
+    zero-rollback epoch protocol rests on: tenants in one placement block
+    never couple to another block, so each block's completions and
+    assignments match a session containing that block alone.
+    """
+    cluster = m.Cluster(nodes=SHARD_NODES, rpn=SHARD_RPN)
+    full = m.SessionSim(session_sharded_specs(), cluster=cluster)
+    full.run()
+    per = SHARD_TENANTS_PER_DOMAIN
+    for t in range(len(full.tenants)):
+        assert full.state[t] == "completed", t
+        m.verify_coverage(full.tenants[t].assignments, full.specs[t].n)
+    for d in range(SHARD_DOMAINS):
+        solo = m.SessionSim(
+            session_sharded_specs(offset=d * SHARD_RPN, domains=1),
+            cluster=cluster)
+        solo.run()
+        for li in range(per):
+            g = d * per + li
+            assert full.completions[g] == solo.completions[li], (d, li)
+            assert full.tenants[g].assignments == solo.tenants[li].assignments, (d, li)
+    print(f"sharded-session self-check: {SHARD_DOMAINS} disjoint blocks ≡ "
+          f"{SHARD_DOMAINS} solo sessions ✓")
+    return full
 
 
 def tight_cell():
@@ -233,6 +296,16 @@ def main():
           f"this the conservative AND hybrid number)")
     rows.append({"scenario": f"TIGHT SS {TIGHT_NODES}x{TIGHT_RPN}",
                  "tol": TOL, "direction": "lower", "T-PAR": t_tight})
+
+    shard_sim = session_sharded_cell()
+    shard_label = (f"SESSION-SHARDED "
+                   f"{SHARD_DOMAINS * SHARD_TENANTS_PER_DOMAIN}x"
+                   f"{SHARD_NODES * SHARD_RPN} SS")
+    print(f"{shard_label}: makespan {shard_sim.makespan:.5f}s "
+          f"(Jain {shard_sim.jain:.3f}; sequential port — PDES bit-identity "
+          f"makes this the sharded number at every worker count)")
+    rows.append({"scenario": shard_label, "tol": TOL, "direction": "lower",
+                 "MAKESPAN": shard_sim.makespan})
 
     doc = {"bench": "sched_throughput", "n": N, "ranks": NODES * RPN,
            "scenarios": rows}

@@ -2,17 +2,24 @@
 """Fuzz harness for the hybrid PDES round protocol (rust/src/des/pdes.rs).
 
 Models the executor's exact phase structure — conservative horizon rounds
-vs. the hybrid loop with an optimistic window, checkpoint/rollback/replay,
-speculative lane set, and the per-shard window controller — over a toy
+vs. the multi-Δ hybrid loop: committed window, unconditional safe
+extension, deliver-before-speculate, the global window multiple (minimum
+of the per-shard controller proposals), the fixed-point resolution of
+in-window speculative arrivals, and both checkpoint kinds — over a toy
 event kernel whose behavior is a pure function of (shard, time, token)
-(seeded hashing, never execution order). The invariant under test is the
-one `tests/pdes_determinism.rs` pins for the real engines:
+(seeded hashing, never execution order). The invariants under test are
+the ones `tests/pdes_determinism.rs` pins for the real engines:
 
-    hybrid history == conservative history, for every shard, always —
-    while rollbacks actually happen.
+    1. hybrid history == conservative history, for every shard, at every
+       window-multiple cap — while rollbacks actually happen at ≥ 2Δ;
+    2. incremental-checkpoint (undo-log replay) history == full-state
+       restore history, on every fuzzed topology;
+    3. single-Δ spans never roll back (the deliver-first rule makes them
+       structurally safe).
 
-PR 8 established conservative ≡ sequential; this harness establishes
-hybrid ≡ conservative, closing the chain for the phase-2 executor.
+PR 8 established conservative ≡ sequential; PR 9's harness established
+(single-Δ) hybrid ≡ conservative; this version closes the chain for the
+deep-speculation executor.
 
 Usage:  python3 python/tools/test_pdes_hybrid.py [runs]
 """
@@ -25,6 +32,7 @@ import sys
 SLACK_SAFE = 0.95
 SPARSE_EVENTS = 48.0
 ALPHA = 0.25
+WINDOW_SAT_ROUNDS = 4
 
 
 def h(*parts):
@@ -35,7 +43,14 @@ def h(*parts):
 
 class Shard:
     """Toy kernel: each event may spawn local work and cross-shard sends,
-    all derived from the event identity so replay is exact."""
+    all derived from the event identity so replay is exact. Arrival and
+    local-spawn times are allowed to collide, so within-timestamp tie
+    order is exercised (the multiset invariant below tolerates it).
+
+    Carries both checkpoint kinds of the Rust trait: `save`/`restore`
+    (full clone) and `undo_begin`/`undo_commit`/`undo_rollback` — a
+    line-faithful port of the `des/heap.rs` journal (pre-span pops are
+    recorded, speculative entries filtered by seq, `seq` rewound)."""
 
     def __init__(self, sid, peers, la, seed):
         self.sid = sid
@@ -45,9 +60,12 @@ class Shard:
         self.heap = []  # (at, seq, token)
         self.seq = 0
         self.log = []
+        self.j = None  # armed undo journal
 
     def push(self, at, token):
         heapq.heappush(self.heap, (at, self.seq, token))
+        if self.j is not None:
+            self.j["pushes"] += 1
         self.seq += 1
 
     def next_at(self):
@@ -56,7 +74,9 @@ class Shard:
     def advance(self, horizon, outbox):
         n = 0
         while self.heap and self.heap[0][0] < horizon:
-            at, _seq, token = heapq.heappop(self.heap)
+            at, seq, token = heapq.heappop(self.heap)
+            if self.j is not None and seq < self.j["seq0"]:
+                self.j["popped"].append((at, seq, token))
             n += 1
             self.log.append((at, token))
             ttl = token >> 32
@@ -79,11 +99,37 @@ class Shard:
     def deliver(self, at, token):
         self.push(at, token)
 
+    # Full-clone checkpoint (Shard::save / Shard::restore).
+
     def save(self):
         return (list(self.heap), self.seq, list(self.log))
 
     def restore(self, ck):
         self.heap, self.seq, self.log = list(ck[0]), ck[1], list(ck[2])
+
+    # Incremental checkpoint (Shard::ckpt_begin/commit/rollback — the
+    # des/heap.rs undo journal plus the log-length sidecar).
+
+    def undo_begin(self):
+        assert self.j is None, "undo span already armed"
+        self.j = {"seq0": self.seq, "popped": [], "pushes": 0,
+                  "log_len": len(self.log)}
+
+    def undo_commit(self):
+        j, self.j = self.j, None
+        return len(j["popped"]) * 24 + j["pushes"] * 8
+
+    def undo_rollback(self):
+        j, self.j = self.j, None
+        bytes_ = len(j["popped"]) * 24 + j["pushes"] * 8
+        seq0 = j["seq0"]
+        kept = [e for e in self.heap if e[1] < seq0] + j["popped"]
+        heapq.heapify(kept)
+        self.heap = kept
+        self.seq = seq0
+        self.log = self.log[:j["log_len"]]
+        self.undo_begin()
+        return bytes_
 
 
 class Ewma:
@@ -95,6 +141,37 @@ class Ewma:
             self.v += ALPHA * (x - self.v)
         else:
             self.v, self.primed = x, True
+
+
+class Ctl:
+    """The WindowController: gate on slack/sparseness, escalate the
+    proposed multiple after WINDOW_SAT_ROUNDS consecutive open rounds,
+    demote to 1Δ on rollback."""
+
+    def __init__(self):
+        self.slack, self.load = Ewma(), Ewma()
+        self.sat, self.mult = 0, 1
+
+    def gate_open(self):
+        return self.slack.primed and (
+            self.slack.v >= SLACK_SAFE or self.load.v <= SPARSE_EVENTS)
+
+    def observe_round(self, slack_norm, events, cap):
+        self.slack.observe(slack_norm)
+        self.load.observe(events)
+        if self.gate_open():
+            self.sat += 1
+            if self.sat >= WINDOW_SAT_ROUNDS and self.mult < cap:
+                self.mult = min(self.mult * 2, cap)
+                self.sat = 0
+        else:
+            self.sat = 0
+
+    def proposed(self):
+        return self.mult if self.gate_open() else 0
+
+    def on_rollback(self):
+        self.mult, self.sat = 1, 0
 
 
 def bootstrap(n_shards, la, seed, tokens):
@@ -126,41 +203,42 @@ def run_conservative(shards, la):
         rounds += 1
 
 
-def run_hybrid(shards, la):
-    """The phase-2 hybrid round. Phases (barriers between each):
+def run_hybrid(shards, la, mult_cap, incr):
+    """The multi-Δ hybrid round. Phases (barriers between each):
 
-    B: committed advance to H = GVT+Δ, staging into `committed` lanes.
-    C: drain committed inbound in sender order; observe the controller;
-       then an *unconditional safe extension* advance(H+Δ) into `safe`
-       lanes (sound: anything arriving before H+Δ was sent before H and
-       was delivered by the committed drain); then, window permitting,
-       checkpoint and speculate advance(H+Δ+w) into `opt` lanes.
-    D: stragglers from other shards' safe extensions land in
-       [H+Δ, H+2Δ); if one falls inside this shard's speculated overhang
-       (< H+Δ+w), roll back to the checkpoint, drop staged opt sends,
-       deliver the safe batch, and replay the overhang exactly. Window
-       for the next round is decided here, after all uses of this one.
-    E: drain opt lanes — opt sends were created at t ≥ H+Δ so they
-       arrive at ≥ H+2Δ ≥ H+Δ+w, never in any shard's executed past.
+    B:  committed advance to H = GVT+Δ, staging into `committed` lanes.
+    C:  drain committed inbound in sender order; feed the controller and
+        publish this shard's window proposal; unconditional safe
+        extension advance(H+Δ) into `safe` lanes.
+    D:  global_mult = min(proposals); deliver the safe batch FIRST
+        (sound: safe sends arrive ≥ H+Δ and nothing past H+Δ has
+        executed), then — if global_mult > 0 — checkpoint every shard
+        (undo journal when `incr`, else full clone) and speculate
+        advance(spec_end = H+Δ+mult·Δ) into `opt` lanes.
+    FP: fixed-point resolution — a shard whose per-sender in-window
+        arrival-time sequence changed (or whose sender re-executed last
+        iteration) rolls back, re-delivers clones of ALL current
+        in-window arrivals in sender order, re-speculates, restages.
+        Converges within `mult` iterations (one Δ finalized per pass).
+    E:  commit checkpoints; drain opt lanes, delivering only arrivals
+        ≥ spec_end (in-window ones were already delivered as clones).
     """
     n = len(shards)
-    ctl = [(Ewma(), Ewma()) for _ in range(n)]
-    window = [0] * n
-    rounds = rollbacks = speculated = 0
+    ctls = [Ctl() for _ in range(n)]
+    rounds = rollbacks = speculated = mult_max = ckpt_bytes = 0
     while True:
         live = [s.next_at() for s in shards if s.next_at() is not None]
         if not live:
-            return rounds, rollbacks, speculated
+            return rounds, rollbacks, speculated, mult_max, ckpt_bytes
         horizon = min(live) + la
         # Phase B — committed advance into committed lanes.
         committed = [[] for _ in range(n)]
         committed_n = [0] * n
         for j, s in enumerate(shards):
             committed_n[j] = s.advance(horizon, committed[j])
-        # Phase C — drain committed, observe, safe extension, speculate.
+        # Phase C — drain committed, observe + propose, safe extension.
         safe = [[] for _ in range(n)]
-        opt = [[] for _ in range(n)]
-        ckpt = [None] * n
+        proposals = [0] * n
         for j, s in enumerate(shards):
             inbound = [(at, tok) for src in range(n)
                        for (d, at, tok) in committed[src] if d == j]
@@ -169,38 +247,71 @@ def run_hybrid(shards, la):
             min_arr = min((at for at, _ in inbound), default=None)
             slack = 1.0 if min_arr is None else max(
                 0.0, min(1.0, (min_arr - horizon) / la))
-            ctl[j][0].observe(slack)
-            ctl[j][1].observe(committed_n[j])
+            ctls[j].observe_round(slack, committed_n[j], mult_cap)
+            proposals[j] = ctls[j].proposed()
             s.advance(horizon + la, safe[j])
-            w = window[j]
-            nxt = s.next_at()
-            if w > 0 and nxt is not None and nxt < horizon + la + w:
-                ckpt[j] = s.save()
-                speculated += s.advance(horizon + la + w, opt[j])
-        # Phase D — resolve stragglers from the safe extensions.
+        global_mult = min(proposals)
+        safe_end = horizon + la
+        spec_end = safe_end + global_mult * la
+        # Phase D — deliver safe batch first, then checkpoint + speculate.
+        opt = [[] for _ in range(n)]
+        ckpt = [None] * n
+        last_in = [[[] for _ in range(n)] for _ in range(n)]
+        if global_mult > 0:
+            mult_max = max(mult_max, global_mult)
         for j, s in enumerate(shards):
-            inbound = [(at, tok) for src in range(n)
-                       for (d, at, tok) in safe[src] if d == j]
-            min_arr = min((at for at, _ in inbound), default=None)
-            spec_end = horizon + la + window[j]
-            if ckpt[j] is not None and min_arr is not None and min_arr < spec_end:
-                rollbacks += 1
-                s.restore(ckpt[j])
-                opt[j] = []
-                for at, tok in inbound:
-                    s.deliver(at, tok)
+            for src in range(n):
+                for d, at, tok in safe[src]:
+                    if d == j:
+                        s.deliver(at, tok)
+            if global_mult > 0:
+                if incr:
+                    s.undo_begin()
+                else:
+                    ckpt[j] = s.save()
                 speculated += s.advance(spec_end, opt[j])
-            else:
-                for at, tok in inbound:
-                    s.deliver(at, tok)
-            window[j] = la if ctl[j][0].primed and (
-                ctl[j][0].v >= SLACK_SAFE or ctl[j][1].v <= SPARSE_EVENTS) else 0
-        # Phase E — opt-lane drains (arrivals ≥ H+2Δ, never in any past).
-        for dst in range(n):
+        # Fixed-point resolution of in-window speculative arrivals.
+        if global_mult > 0:
+            prev_dirty = [False] * n
+            for _it in range(mult_cap + 1):
+                pend, dirty = [], []
+                for j in range(n):
+                    cur = [[at for (d, at, tok) in opt[src]
+                            if d == j and at < spec_end] for src in range(n)]
+                    d_j = any(
+                        cur[src] != last_in[j][src]
+                        or (cur[src] and prev_dirty[src])
+                        for src in range(n))
+                    pend.append(cur)
+                    dirty.append(d_j)
+                if not any(dirty):
+                    break
+                for j, s in enumerate(shards):
+                    if not dirty[j]:
+                        continue
+                    rollbacks += 1
+                    ctls[j].on_rollback()
+                    if incr:
+                        ckpt_bytes += s.undo_rollback()
+                    else:
+                        s.restore(ckpt[j])
+                    for src in range(n):
+                        for d, at, tok in opt[src]:
+                            if d == j and at < spec_end:
+                                s.deliver(at, tok)
+                    last_in[j] = pend[j]
+                    new_out = []
+                    speculated += s.advance(spec_end, new_out)
+                    opt[j] = new_out
+                prev_dirty = dirty
+        # Phase E — commit checkpoints, drain opt lanes above spec_end.
+        for j, s in enumerate(shards):
+            if global_mult > 0 and incr:
+                ckpt_bytes += s.undo_commit()
             for src in range(n):
                 for d, at, tok in opt[src]:
-                    if d == dst:
-                        shards[dst].deliver(at, tok)
+                    if d == j and (global_mult == 0 or at >= spec_end):
+                        s.deliver(at, tok)
         rounds += 1
 
 
@@ -208,39 +319,70 @@ def one_case(seed):
     n_shards = 2 + h(seed, "n") % 5
     la = 20 + h(seed, "la") % 80
     tokens = 4 + h(seed, "tok") % 12
+    mult_cap = 1 + h(seed, "cap") % 8
+
     cons = bootstrap(n_shards, la, seed, tokens)
     rc = run_conservative(cons, la)
+    ref = [sorted(s.log) for s in cons]
+
+    def check(shards, label):
+        for j in range(n_shards):
+            # Multiset equality per shard: within-timestamp tie order may
+            # legally permute between modes (the real engines' observable
+            # results are tie-order independent; PR 8 pins that), but the
+            # set of (time, event) pairs each shard executes must match.
+            assert sorted(shards[j].log) == ref[j], (
+                f"seed {seed} [{label}]: shard {j} diverged\n"
+                f"  cons: {ref[j][:12]}…\n"
+                f"  got:  {sorted(shards[j].log)[:12]}…")
+
+    # Deep speculation, full-clone checkpoints.
     hyb = bootstrap(n_shards, la, seed, tokens)
-    rh, rb, spec = run_hybrid(hyb, la)
-    for j in range(n_shards):
-        # Multiset equality per shard: within-timestamp tie order may
-        # legally permute between modes (the real engines' observable
-        # results are tie-order independent; PR 8 pins that), but the
-        # set of (time, event) pairs each shard executes must match.
-        assert sorted(hyb[j].log) == sorted(cons[j].log), (
-            f"seed {seed}: shard {j} diverged\n"
-            f"  cons: {sorted(cons[j].log)[:12]}…\n"
-            f"  hyb:  {sorted(hyb[j].log)[:12]}…")
+    rh, rb, spec, mm, _ = run_hybrid(hyb, la, mult_cap, incr=False)
+    check(hyb, f"full ckpt, cap {mult_cap}")
+    assert rh <= rc, f"seed {seed}: hybrid used MORE rounds ({rh} > {rc})"
+
+    # Same schedule on incremental checkpoints: the undo-log replay must
+    # be indistinguishable from the full-state restore.
+    inc = bootstrap(n_shards, la, seed, tokens)
+    rh2, rb2, spec2, mm2, cb = run_hybrid(inc, la, mult_cap, incr=True)
+    check(inc, f"incr ckpt, cap {mult_cap}")
+    assert (rh2, rb2, spec2, mm2) == (rh, rb, spec, mm), (
+        f"seed {seed}: checkpoint kind steered the protocol "
+        f"({(rh2, rb2, spec2, mm2)} vs {(rh, rb, spec, mm)})")
+    assert (cb > 0) == (mm2 > 0), f"seed {seed}: journal bytes vs spans"
+
+    # Single-Δ cap: deliver-before-speculate makes 1Δ spans structurally
+    # rollback-free, and the history still matches.
+    one = bootstrap(n_shards, la, seed, tokens)
+    r1, rb1, spec1, mm1, _ = run_hybrid(one, la, 1, incr=True)
+    check(one, "cap 1")
+    assert rb1 == 0, f"seed {seed}: 1Δ span rolled back {rb1}×"
+    assert mm1 <= 1 and r1 <= rc
+
     events = sum(len(s.log) for s in cons)
-    return events, rc, rh, rb, spec
+    return events, rc, rh, rb, spec, mm
 
 
 def main():
     runs = int(sys.argv[1]) if len(sys.argv) > 1 else 200
-    tot_ev = tot_rb = tot_spec = 0
+    tot_ev = tot_rb = tot_spec = deep = 0
     saved = 0
     for seed in range(runs):
-        events, rc, rh, rb, spec = one_case(seed)
+        events, rc, rh, rb, spec, mm = one_case(seed)
         tot_ev += events
         tot_rb += rb
         tot_spec += spec
         saved += rc - rh
-        assert rh <= rc, f"seed {seed}: hybrid used MORE rounds ({rh} > {rc})"
+        if mm >= 2:
+            deep += 1
     assert tot_rb > 0, "fuzz never rolled back — straggler pressure too low"
     assert tot_spec > 0, "fuzz never speculated"
+    assert deep > 0, "fuzz never escalated past 1Δ"
     print(f"{runs} cases: {tot_ev} events, {tot_rb} rollbacks, "
-          f"{tot_spec} speculated events, {saved} rounds saved — "
-          f"hybrid ≡ conservative on every shard ✓")
+          f"{tot_spec} speculated events, {saved} rounds saved, "
+          f"{deep} cases ≥ 2Δ — hybrid ≡ conservative ≡ undo-log replay "
+          f"on every shard ✓")
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::mem;
 
 /// Ring size (power of two).
 const BUCKETS: usize = 256;
@@ -88,6 +89,41 @@ impl<E> Ord for Entry<E> {
     }
 }
 
+/// Undo journal over one speculative span — the calendar-queue half of a
+/// PDES **incremental checkpoint** (`docs/pdes.md`). Instead of cloning
+/// the whole queue at speculation entry, the queue logs what the span
+/// *changes*: every pre-span entry it pops (payload cloned, original
+/// `seq` kept) and the landing bucket of every push. Rollback removes all
+/// entries carrying a speculative `seq`, reinserts the popped entries
+/// verbatim, and rewinds `next_seq` — cost proportional to the events
+/// speculated (plus the touched buckets), never to the queue size.
+///
+/// Only *logical* state is restored: cursor position and far-vs-ring
+/// residency are internal layout, and pop order is provably
+/// layout-invariant (always exact `(at_ns, seq)`), so they need no undo.
+#[derive(Clone)]
+struct Journal<E> {
+    /// `next_seq` at span entry; every speculative push carries `seq ≥`
+    /// this, every pre-span entry `seq <` it.
+    seq0: u64,
+    /// Pre-span entries popped during the span, in pop order.
+    popped: Vec<Entry<E>>,
+    /// Ring buckets that may hold speculative pushes (including buckets a
+    /// far-heap migration landed them in); deduplicated at rollback.
+    touched: Vec<usize>,
+    /// A speculative push landed in the far overflow heap.
+    far_touched: bool,
+    /// Speculative pushes logged (bytes accounting).
+    pushes: u64,
+}
+
+impl<E> Journal<E> {
+    fn bytes(&self) -> u64 {
+        (self.popped.len() * mem::size_of::<Entry<E>>()
+            + (self.touched.len() + self.pushes as usize) * mem::size_of::<u64>()) as u64
+    }
+}
+
 /// Deterministic calendar event queue (kept under its historical name —
 /// every DES event loop owns one). `Clone` clones the full calendar —
 /// including `next_seq`, so a restored clone replays identical tie order —
@@ -112,6 +148,8 @@ pub struct EventHeap<E> {
     shift: u32,
     /// Bucket width in ns (`1 << shift`).
     bucket_ns: u64,
+    /// Active undo journal (`None` outside speculative spans).
+    journal: Option<Journal<E>>,
 }
 
 impl<E> Default for EventHeap<E> {
@@ -159,6 +197,7 @@ impl<E> EventHeap<E> {
             next_seq: 0,
             shift,
             bucket_ns: 1 << shift,
+            journal: None,
         }
     }
 
@@ -192,45 +231,37 @@ impl<E> EventHeap<E> {
         }
         let entry = Entry { at_ns, seq, event };
         if at_ns >= self.horizon_end() {
+            if let Some(j) = &mut self.journal {
+                j.pushes += 1;
+                j.far_touched = true;
+            }
             self.far.push(entry);
         } else {
             let b = self.bucket_of(at_ns);
+            if let Some(j) = &mut self.journal {
+                j.pushes += 1;
+                j.touched.push(b);
+            }
             self.wheel[b].push(entry);
             self.wheel_len += 1;
         }
     }
 
-    /// Pop the earliest event `(time_ns, event)`.
-    pub fn pop(&mut self) -> Option<(u64, E)> {
-        if self.len == 0 {
-            return None;
+    /// Reinsert an entry popped during a rolled-back span: original `seq`
+    /// kept, no seq bump, no journal logging (the entry is pre-span by
+    /// construction, so the re-armed journal sees it as such).
+    fn reinsert(&mut self, e: Entry<E>) {
+        self.len += 1;
+        if e.at_ns < self.floor_ns {
+            self.floor_ns = (e.at_ns >> self.shift) << self.shift;
+            self.cursor = self.bucket_of(e.at_ns);
         }
-        if self.wheel_len == 0 {
-            let at = self.far.peek().expect("len > 0 with empty ring").at_ns;
-            self.jump_to(at);
-        }
-        let mut advances = 0usize;
-        loop {
-            let slice = self.floor_ns >> self.shift;
-            if let Some(min) = self.wheel[self.cursor].peek() {
-                if (min.at_ns >> self.shift) == slice {
-                    let e = self.wheel[self.cursor].pop().expect("peeked above");
-                    self.wheel_len -= 1;
-                    self.len -= 1;
-                    return Some((e.at_ns, e.event));
-                }
-            }
-            advances += 1;
-            if advances > BUCKETS {
-                // A full rotation without a due event: everything in the
-                // ring belongs to later rotations — jump to the global
-                // minimum instead of sweeping more empty slices.
-                let at = self.global_min_at().expect("len > 0");
-                self.jump_to(at);
-                advances = 0;
-                continue;
-            }
-            self.advance_one();
+        if e.at_ns >= self.horizon_end() {
+            self.far.push(e);
+        } else {
+            let b = self.bucket_of(e.at_ns);
+            self.wheel[b].push(e);
+            self.wheel_len += 1;
         }
     }
 
@@ -283,6 +314,14 @@ impl<E> EventHeap<E> {
     /// heapify. FIFO ties are safe: heap order is the full `(at_ns, seq)`
     /// key, so rebuild order within a bucket never leaks into pop order.
     fn flush_run(&mut self, b: usize, run: &mut Vec<Entry<E>>) {
+        if let Some(j) = &mut self.journal {
+            // A far→ring migration can carry speculative entries into a
+            // bucket the span never pushed to directly; log the landing
+            // bucket so rollback's removal scan still finds them.
+            if run.iter().any(|e| e.seq >= j.seq0) {
+                j.touched.push(b);
+            }
+        }
         if self.wheel[b].is_empty() {
             self.wheel[b] = BinaryHeap::from(std::mem::take(run));
         } else {
@@ -319,6 +358,127 @@ impl<E> EventHeap<E> {
 
     pub fn len(&self) -> usize {
         self.len
+    }
+}
+
+impl<E: Clone> EventHeap<E> {
+    /// Pop the earliest event `(time_ns, event)`.
+    pub fn pop(&mut self) -> Option<(u64, E)> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.wheel_len == 0 {
+            let at = self.far.peek().expect("len > 0 with empty ring").at_ns;
+            self.jump_to(at);
+        }
+        let mut advances = 0usize;
+        loop {
+            let slice = self.floor_ns >> self.shift;
+            if let Some(min) = self.wheel[self.cursor].peek() {
+                if (min.at_ns >> self.shift) == slice {
+                    let e = self.wheel[self.cursor].pop().expect("peeked above");
+                    self.wheel_len -= 1;
+                    self.len -= 1;
+                    if let Some(j) = &mut self.journal {
+                        // Only pre-span entries are journaled: speculative
+                        // entries (seq ≥ seq0) are *removed* on rollback,
+                        // not restored, so popping one needs no record.
+                        if e.seq < j.seq0 {
+                            j.popped.push(Entry {
+                                at_ns: e.at_ns,
+                                seq: e.seq,
+                                event: e.event.clone(),
+                            });
+                        }
+                    }
+                    return Some((e.at_ns, e.event));
+                }
+            }
+            advances += 1;
+            if advances > BUCKETS {
+                // A full rotation without a due event: everything in the
+                // ring belongs to later rotations — jump to the global
+                // minimum instead of sweeping more empty slices.
+                let at = self.global_min_at().expect("len > 0");
+                self.jump_to(at);
+                advances = 0;
+                continue;
+            }
+            self.advance_one();
+        }
+    }
+
+    /// Arm the undo journal at the current state — the calendar-queue leg
+    /// of a PDES incremental checkpoint. From here until
+    /// [`Self::undo_commit`] or [`Self::undo_rollback`], pushes log their
+    /// landing bucket and pops of pre-span entries log a restore copy, so
+    /// undo cost scales with events touched, not queue size. Arming an
+    /// already-armed queue is a bug.
+    pub fn undo_begin(&mut self) {
+        debug_assert!(self.journal.is_none(), "undo span already armed");
+        self.journal = Some(Journal {
+            seq0: self.next_seq,
+            popped: Vec::new(),
+            touched: Vec::new(),
+            far_touched: false,
+            pushes: 0,
+        });
+    }
+
+    /// Whether an undo span is currently armed.
+    pub fn undo_active(&self) -> bool {
+        self.journal.is_some()
+    }
+
+    /// Keep the span's effects and drop the journal. Returns the bytes the
+    /// journal held (the incremental-checkpoint cost accounting).
+    pub fn undo_commit(&mut self) -> u64 {
+        let j = self.journal.take().expect("undo span armed");
+        j.bytes()
+    }
+
+    /// Rewind every push and pop since [`Self::undo_begin`] and **re-arm**
+    /// a fresh journal at the restored state (a PDES fixed-point iteration
+    /// rolls back, redelivers, and speculates again). Returns the bytes
+    /// the discarded journal held.
+    ///
+    /// Correctness note: only *logical* state (the entry multiset and
+    /// `next_seq`) is rewound — cursor, floor, and far-vs-ring residency
+    /// are layout, and pop order is layout-invariant by the full
+    /// `(at_ns, seq)` key.
+    pub fn undo_rollback(&mut self) -> u64 {
+        let mut j = self.journal.take().expect("undo span armed");
+        let bytes = j.bytes();
+        let seq0 = j.seq0;
+        j.touched.sort_unstable();
+        j.touched.dedup();
+        for &b in &j.touched {
+            if self.wheel[b].iter().all(|e| e.seq < seq0) {
+                continue;
+            }
+            let heap = std::mem::take(&mut self.wheel[b]);
+            let before = heap.len();
+            let kept: Vec<Entry<E>> =
+                heap.into_vec().into_iter().filter(|e| e.seq < seq0).collect();
+            let removed = before - kept.len();
+            self.wheel_len -= removed;
+            self.len -= removed;
+            self.wheel[b] = BinaryHeap::from(kept);
+        }
+        if j.far_touched && self.far.iter().any(|e| e.seq >= seq0) {
+            let heap = std::mem::take(&mut self.far);
+            let before = heap.len();
+            let kept: Vec<Entry<E>> =
+                heap.into_vec().into_iter().filter(|e| e.seq < seq0).collect();
+            self.len -= before - kept.len();
+            self.far = BinaryHeap::from(kept);
+        }
+        for e in j.popped.drain(..) {
+            self.reinsert(e);
+        }
+        self.next_seq = seq0;
+        self.undo_begin();
+        bytes
     }
 }
 
@@ -592,5 +752,115 @@ mod tests {
         // exactly the queue's FIFO tie-break contract.
         reference.sort_by_key(|&(t, _)| t);
         assert_eq!(popped, reference);
+    }
+
+    /// Drain a heap completely, returning the full `(time, id)` sequence.
+    fn drain_all(mut h: EventHeap<u64>) -> Vec<(u64, u64)> {
+        if h.undo_active() {
+            h.undo_commit();
+        }
+        let mut out = Vec::new();
+        while let Some(x) = h.pop() {
+            out.push(x);
+        }
+        out
+    }
+
+    /// The incremental-checkpoint contract: undo-log rollback must be
+    /// indistinguishable from a full clone restore — identical subsequent
+    /// pop sequences — under randomized speculative spans that mix pops of
+    /// pre-span entries, speculative pushes (near, far, and same-time
+    /// ties), and pops of speculative entries, across bucket widths.
+    #[test]
+    fn undo_rollback_matches_clone_restore() {
+        use crate::techniques::rnd::splitmix64;
+        for min_lat in [0u64, 1, 100_000] {
+            let mut s = 0xD15C_0DE5u64 ^ min_lat;
+            let mut h = EventHeap::for_latency_scale(16, min_lat);
+            let mut id = 0u64;
+            let mut now = 0u64;
+            // Pre-span population: bursty near + sparse far entries.
+            for _ in 0..600 {
+                s = splitmix64(s);
+                let at = now + s % 60_000_000;
+                h.push(at, id);
+                id += 1;
+            }
+            for _span in 0..8 {
+                let snapshot = h.clone();
+                h.undo_begin();
+                // Speculative span: interleaved pops and pushes; pushes use
+                // ids ≥ 1<<32 so a leak would be visible in the pop log.
+                let mut spec_id = 1u64 << 32;
+                for _ in 0..200 {
+                    s = splitmix64(s);
+                    if s % 3 == 0 {
+                        if let Some((t, _)) = h.pop() {
+                            now = t;
+                        }
+                    } else {
+                        s = splitmix64(s);
+                        h.push(now + s % 90_000_000, spec_id);
+                        spec_id += 1;
+                    }
+                }
+                let bytes = h.undo_rollback();
+                assert!(bytes > 0, "span touched events, journal empty");
+                assert!(h.undo_active(), "rollback must re-arm");
+                h.undo_commit();
+                assert_eq!(h.len(), snapshot.len(), "scale {min_lat}");
+                assert_eq!(
+                    drain_all(h.clone()),
+                    drain_all(snapshot),
+                    "rollback ≠ clone restore at scale {min_lat}"
+                );
+                now = h.next_at().unwrap_or(now);
+            }
+        }
+    }
+
+    /// Committing a span keeps its effects verbatim: the post-commit pop
+    /// sequence equals an unjournaled run of the same operations, and the
+    /// reported byte count reflects the events touched.
+    #[test]
+    fn undo_commit_is_transparent() {
+        let ops: &[(u64, u64)] = &[(10, 100), (10, 101), (5_000_000, 102), (3, 103)];
+        let mut plain = EventHeap::with_capacity(8);
+        let mut journaled = EventHeap::with_capacity(8);
+        for &(t, v) in &[(7u64, 1u64), (9, 2), (7, 3)] {
+            plain.push(t, v);
+            journaled.push(t, v);
+        }
+        journaled.undo_begin();
+        assert_eq!(journaled.undo_commit(), 0, "empty span holds no bytes");
+        journaled.undo_begin();
+        for &(t, v) in ops {
+            plain.push(t, v);
+            journaled.push(t, v);
+        }
+        assert_eq!(plain.pop(), journaled.pop());
+        let bytes = journaled.undo_commit();
+        assert!(bytes > 0);
+        assert_eq!(drain_all(journaled), drain_all(plain));
+    }
+
+    /// Rollback re-arms: a fixed-point loop of roll-back/redeliver cycles
+    /// always lands back on the pre-span state, and `next_seq` rewinds so
+    /// FIFO ties replay identically on every iteration.
+    #[test]
+    fn repeated_rollback_is_idempotent() {
+        let mut h = EventHeap::with_capacity(8);
+        for i in 0..50u64 {
+            h.push(1_000 + (i % 5), i);
+        }
+        let baseline = drain_all(h.clone());
+        h.undo_begin();
+        for round in 0..5u64 {
+            h.push(1_002, 1_000 + round); // tie against pre-span entries
+            h.pop();
+            h.pop();
+            h.undo_rollback();
+        }
+        assert_eq!(drain_all(h), baseline);
     }
 }

@@ -86,6 +86,17 @@ pub struct DesConfig {
     /// optimistic window (the default — still bit-identical, see
     /// [`pdes::PdesMode`]). Ignored when `des_threads == 1`.
     pub pdes_mode: pdes::PdesMode,
+    /// Best-effort core pinning of the parallel core's worker threads
+    /// (`--pin-shards`): each shard thread — and by first touch its
+    /// calendar queue and SPSC lanes — is bound to its own contiguous CPU
+    /// stripe via `sched_setaffinity`. No-op on unsupported platforms and
+    /// on the sequential loop; never affects results.
+    pub pin_shards: bool,
+    /// Cap on the hybrid executor's multi-Δ window multiple (clamped to
+    /// ≥ 1 by the executor; 1 = single-Δ speculation, the risk-free
+    /// window). Purely a speculation-depth limit — results are
+    /// bit-identical at every value. Default [`pdes::WINDOW_MULT_MAX`].
+    pub window_mult_max: u32,
 }
 
 impl DesConfig {
@@ -110,6 +121,8 @@ impl DesConfig {
             stream_interval: 0.0,
             des_threads: 1,
             pdes_mode: pdes::PdesMode::default(),
+            pin_shards: false,
+            window_mult_max: pdes::WINDOW_MULT_MAX,
         }
     }
 
@@ -157,6 +170,18 @@ impl DesConfig {
     /// Select the parallel core's round protocol (no effect sequentially).
     pub fn with_pdes_mode(mut self, mode: pdes::PdesMode) -> Self {
         self.pdes_mode = mode;
+        self
+    }
+
+    /// Pin parallel-core worker threads to core stripes (best effort).
+    pub fn with_pin_shards(mut self, pin: bool) -> Self {
+        self.pin_shards = pin;
+        self
+    }
+
+    /// Cap the hybrid executor's multi-Δ speculation depth (1 = single-Δ).
+    pub fn with_window_mult_max(mut self, cap: u32) -> Self {
+        self.window_mult_max = cap;
         self
     }
 }
@@ -243,6 +268,17 @@ pub struct PdesSummary {
     /// Events executed past the conservative horizon (including replayed
     /// ones), summed over shards.
     pub speculated_events: u64,
+    /// Incremental-checkpoint journal bytes retired (committed or
+    /// replayed), summed over shards; 0 when every speculating shard fell
+    /// back to full-clone checkpoints (or nothing speculated).
+    pub checkpoint_bytes: u64,
+    /// Deepest realized speculation window, as a multiple of the
+    /// lookahead Δ (max over shards; 0 = never speculated).
+    pub window_multiple: u64,
+    /// Arbiter-epoch demand exchanges performed by a sharded multi-tenant
+    /// session loop ([`crate::tenant`]); 0 for flat/hier runs, whose
+    /// shards share no arbiter.
+    pub arbiter_epochs: u64,
 }
 
 impl PdesSummary {
@@ -258,6 +294,9 @@ impl PdesSummary {
             mailbox_depth_max: r.mailbox_depth_max.iter().copied().max().unwrap_or(0),
             rollbacks: r.rollbacks.iter().sum(),
             speculated_events: r.speculated_events.iter().sum(),
+            checkpoint_bytes: r.checkpoint_bytes.iter().sum(),
+            window_multiple: r.window_multiple.iter().copied().max().unwrap_or(0),
+            arbiter_epochs: 0,
         }
     }
 }
@@ -529,6 +568,14 @@ struct Sim<'a> {
     /// Cross-shard sends staged during the current window:
     /// `(destination shard, arrival time, event)`.
     outbound: Vec<(u32, u64, Ev)>,
+    /// Armed incremental checkpoint ([`Sim::ckpt_begin`]); `None` outside
+    /// speculative spans.
+    undo: Option<SimUndo>,
+    /// Copy-on-dirty bookkeeping for the worker table:
+    /// `undo_stamp[w] == undo_epoch` ⇔ worker `w`'s pre-image is already
+    /// saved in the current span. Allocated once, reused across spans.
+    undo_stamp: Vec<u64>,
+    undo_epoch: u64,
 }
 
 /// One flat-PDES shard's identity: which shard this [`Sim`] instance is
@@ -546,6 +593,54 @@ impl ShardSpan {
     fn shard_of(&self, rank: u32) -> u32 {
         self.of_rank[rank as usize]
     }
+}
+
+/// The simulator's *control head*: every piece of mutable [`Sim`] state
+/// that is O(1) — or bounded by the (usually near-empty) coordinator
+/// queues — cloned wholesale when an incremental checkpoint arms. The
+/// state-size-dominant structures are deliberately absent: the calendar
+/// queue keeps its own undo journal ([`EventHeap::undo_begin`]), the
+/// worker table is saved copy-on-dirty ([`Sim::wmut`]), and the
+/// append-only logs rewind by length truncation.
+#[derive(Clone)]
+struct SimHead {
+    now: u64,
+    queue: WorkQueue,
+    technique: Technique,
+    recursive: RecursiveState,
+    adapt: Option<AdaptiveController>,
+    eras: Vec<Arc<FlatEra>>,
+    svc_queue: VecDeque<SvcTask>,
+    rank0_busy: bool,
+    own: OwnState,
+    rank0_finish_ns: u64,
+    rank0_service_ns: u64,
+    nic_queue: VecDeque<(u32, RmaOp)>,
+    nic_busy: bool,
+    rma_ops: u64,
+    messages: u64,
+    intra_msgs: u64,
+    inter_msgs: u64,
+    chunks_granted: u64,
+    done_replies: u32,
+    fast_grants: u64,
+    events: u64,
+    sampler: Option<Sampler>,
+    last_tick_chunks: u64,
+}
+
+/// One armed incremental checkpoint over a [`Sim`] — the
+/// [`pdes::Shard::ckpt_begin`] journal whose cost scales with the events
+/// the speculative span executes, not with the shard's state size.
+#[derive(Clone)]
+struct SimUndo {
+    head: Box<SimHead>,
+    assignments_len: usize,
+    switch_len: usize,
+    stream_len: usize,
+    ticks_len: usize,
+    /// Pre-images of worker rows first touched inside the span.
+    workers: Vec<(u32, WorkerState)>,
 }
 
 impl<'a> Sim<'a> {
@@ -611,6 +706,9 @@ impl<'a> Sim<'a> {
             ticks: Vec::new(),
             shard: None,
             outbound: Vec::new(),
+            undo: None,
+            undo_stamp: Vec::new(),
+            undo_epoch: 0,
         }
     }
 
@@ -945,8 +1043,9 @@ impl<'a> Sim<'a> {
     }
 
     fn worker_send_request(&mut self, w: u32, extra_ns: u64) {
-        let ws = &mut self.workers[w as usize];
-        ws.req_sent_ns = self.now + extra_ns;
+        let sent_ns = self.now + extra_ns;
+        let ws = self.wmut(w);
+        ws.req_sent_ns = sent_ns;
         let report = ws.last_report;
         let task = match self.cfg.model {
             ExecutionModel::Cca => SvcTask::Request { w, report },
@@ -985,7 +1084,7 @@ impl<'a> Sim<'a> {
                             + self.cfg.cluster.calc_time
                             + self.cfg.delay.assignment)
                             / self.speed(0));
-                        let report = self.workers[0].last_report.take();
+                        let report = self.wmut(0).last_report.take();
                         let k = self.cca_calc(0, report);
                         match self.queue.assign(k) {
                             Some(a) => {
@@ -1050,8 +1149,9 @@ impl<'a> Sim<'a> {
                     // the adaptive controller's EWMAs.
                     let iters = end - first;
                     let elapsed = self.cfg.cost.range_cost(first, iters) / self.speed(0);
-                    self.workers[0].stats.record(iters, elapsed);
-                    self.workers[0].last_report = Some(PerfReport { iters, elapsed });
+                    let ws = self.wmut(0);
+                    ws.stats.record(iters, elapsed);
+                    ws.last_report = Some(PerfReport { iters, elapsed });
                     if let Some(af) = self.af.as_mut() {
                         af.record(0, iters, elapsed);
                     }
@@ -1156,7 +1256,7 @@ impl<'a> Sim<'a> {
         if self.cfg.record_assignments {
             self.assignments.push(a);
         }
-        let ws = &mut self.workers[w as usize];
+        let ws = self.wmut(w);
         ws.chunks += 1;
         ws.iters += a.size;
     }
@@ -1165,13 +1265,14 @@ impl<'a> Sim<'a> {
 
     fn worker_on_reply(&mut self, w: u32, reply: Reply) {
         let sent = self.workers[w as usize].req_sent_ns;
-        self.workers[w as usize].wait_ns += self.now.saturating_sub(sent);
+        let waited = self.now.saturating_sub(sent);
+        self.wmut(w).wait_ns += waited;
         match reply {
             Reply::Chunk(a) => {
                 let dur = self.exec_ns(w, a);
                 // AF learning: the worker now knows its chunk's duration.
                 let elapsed = secs(dur);
-                let ws = &mut self.workers[w as usize];
+                let ws = self.wmut(w);
                 ws.stats.record(a.size, elapsed);
                 ws.last_report = Some(PerfReport { iters: a.size, elapsed });
                 self.heap.push(self.now + dur, Ev::ExecDone { w });
@@ -1193,7 +1294,8 @@ impl<'a> Sim<'a> {
                 );
             }
             Reply::Done => {
-                self.workers[w as usize].finish_ns = self.now;
+                let t = self.now;
+                self.wmut(w).finish_ns = t;
             }
         }
     }
@@ -1205,7 +1307,8 @@ impl<'a> Sim<'a> {
     }
 
     fn worker_on_exec_done(&mut self, w: u32) {
-        self.workers[w as usize].finish_ns = self.now;
+        let t = self.now;
+        self.wmut(w).finish_ns = t;
         match self.cfg.model {
             ExecutionModel::Dca if self.lockfree => self.send_fused(w, 0),
             ExecutionModel::Cca | ExecutionModel::Dca => self.worker_send_request(w, 0),
@@ -1240,7 +1343,8 @@ impl<'a> Sim<'a> {
                     );
                 }
                 None => {
-                    self.workers[w as usize].finish_ns = self.now + dur + self.lat_ns(0, w);
+                    let t = self.now + dur + self.lat_ns(0, w);
+                    self.wmut(w).finish_ns = t;
                 }
             },
             RmaOp::Claim { step, size } => {
@@ -1253,7 +1357,8 @@ impl<'a> Sim<'a> {
                         self.route(start_exec + exec, Ev::ExecDone { w });
                     }
                     None => {
-                        self.workers[w as usize].finish_ns = self.now + dur + self.lat_ns(0, w);
+                        let t = self.now + dur + self.lat_ns(0, w);
+                    self.wmut(w).finish_ns = t;
                     }
                 }
             }
@@ -1279,13 +1384,153 @@ impl<'a> Sim<'a> {
                         self.route(start_exec + exec, Ev::ExecDone { w });
                     }
                     None => {
-                        self.workers[w as usize].finish_ns = self.now + dur + self.lat_ns(0, w);
+                        let t = self.now + dur + self.lat_ns(0, w);
+                    self.wmut(w).finish_ns = t;
                     }
                 }
             }
         }
         self.heap.push(self.now + dur, Ev::NicFree);
         self.nic_busy = true;
+    }
+
+    // -- incremental checkpoints ----------------------------------------------
+
+    /// Mutable access to a worker row, saving its pre-image into the
+    /// armed undo journal on first touch in the current span. Every
+    /// worker-table mutation in the event loop goes through here, so a
+    /// rollback restores exactly the rows the span dirtied.
+    fn wmut(&mut self, w: u32) -> &mut WorkerState {
+        let i = w as usize;
+        if let Some(u) = self.undo.as_mut() {
+            if self.undo_stamp[i] != self.undo_epoch {
+                self.undo_stamp[i] = self.undo_epoch;
+                u.workers.push((w, self.workers[i].clone()));
+            }
+        }
+        &mut self.workers[i]
+    }
+
+    /// Arm an incremental checkpoint (see [`pdes::Shard::ckpt_begin`]):
+    /// journal the calendar queue, remember the append-only log lengths,
+    /// clone the O(1) control head, and start copy-on-dirty tracking of
+    /// the worker table. AF runs decline — the calculator's per-rank
+    /// aggregates are rewritten on nearly every event, so its undo log
+    /// would approach the full clone it is meant to replace.
+    fn ckpt_begin(&mut self) -> bool {
+        if self.af.is_some() {
+            return false;
+        }
+        debug_assert!(self.undo.is_none(), "checkpoint span already armed");
+        debug_assert!(self.outbound.is_empty(), "staged sends at span entry");
+        self.heap.undo_begin();
+        if self.undo_stamp.len() != self.workers.len() {
+            self.undo_stamp = vec![0; self.workers.len()];
+            self.undo_epoch = 0;
+        }
+        self.undo_epoch += 1;
+        self.undo = Some(SimUndo {
+            head: Box::new(self.head_snapshot()),
+            assignments_len: self.assignments.len(),
+            switch_len: self.switch_events.len(),
+            stream_len: self.stream.len(),
+            ticks_len: self.ticks.len(),
+            workers: Vec::new(),
+        });
+        true
+    }
+
+    /// Discard the armed journal, keeping the span's effects; returns its
+    /// byte footprint (the `checkpoint_bytes` accounting).
+    fn ckpt_commit(&mut self) -> u64 {
+        let u = self.undo.take().expect("no checkpoint span armed");
+        let heap_bytes = self.heap.undo_commit();
+        Self::undo_bytes(&u, heap_bytes)
+    }
+
+    /// Replay the armed journal — rewinding this shard exactly to the
+    /// `ckpt_begin` state — and re-arm it for the next fixed-point
+    /// iteration. Returns the replayed journal's byte footprint.
+    fn ckpt_rollback(&mut self) -> u64 {
+        let mut u = self.undo.take().expect("no checkpoint span armed");
+        let heap_bytes = self.heap.undo_rollback(); // rewinds and re-arms
+        let bytes = Self::undo_bytes(&u, heap_bytes);
+        self.apply_head(&u.head);
+        self.assignments.truncate(u.assignments_len);
+        self.switch_events.truncate(u.switch_len);
+        self.stream.truncate(u.stream_len);
+        self.ticks.truncate(u.ticks_len);
+        for (w, row) in u.workers.drain(..) {
+            self.workers[w as usize] = row;
+        }
+        debug_assert!(self.outbound.is_empty(), "staged sends at rollback");
+        self.outbound.clear();
+        self.undo_epoch += 1;
+        self.undo = Some(u);
+        bytes
+    }
+
+    fn undo_bytes(u: &SimUndo, heap_bytes: u64) -> u64 {
+        use std::mem::size_of;
+        heap_bytes
+            + size_of::<SimHead>() as u64
+            + (u.head.svc_queue.len() * size_of::<SvcTask>()) as u64
+            + (u.head.nic_queue.len() * size_of::<(u32, RmaOp)>()) as u64
+            + (u.workers.len() * size_of::<(u32, WorkerState)>()) as u64
+    }
+
+    fn head_snapshot(&self) -> SimHead {
+        SimHead {
+            now: self.now,
+            queue: self.queue.clone(),
+            technique: self.technique.clone(),
+            recursive: self.recursive.clone(),
+            adapt: self.adapt.clone(),
+            eras: self.eras.clone(),
+            svc_queue: self.svc_queue.clone(),
+            rank0_busy: self.rank0_busy,
+            own: self.own.clone(),
+            rank0_finish_ns: self.rank0_finish_ns,
+            rank0_service_ns: self.rank0_service_ns,
+            nic_queue: self.nic_queue.clone(),
+            nic_busy: self.nic_busy,
+            rma_ops: self.rma_ops,
+            messages: self.messages,
+            intra_msgs: self.intra_msgs,
+            inter_msgs: self.inter_msgs,
+            chunks_granted: self.chunks_granted,
+            done_replies: self.done_replies,
+            fast_grants: self.fast_grants,
+            events: self.events,
+            sampler: self.sampler.clone(),
+            last_tick_chunks: self.last_tick_chunks,
+        }
+    }
+
+    fn apply_head(&mut self, h: &SimHead) {
+        self.now = h.now;
+        self.queue = h.queue.clone();
+        self.technique = h.technique.clone();
+        self.recursive = h.recursive.clone();
+        self.adapt = h.adapt.clone();
+        self.eras = h.eras.clone();
+        self.svc_queue = h.svc_queue.clone();
+        self.rank0_busy = h.rank0_busy;
+        self.own = h.own.clone();
+        self.rank0_finish_ns = h.rank0_finish_ns;
+        self.rank0_service_ns = h.rank0_service_ns;
+        self.nic_queue = h.nic_queue.clone();
+        self.nic_busy = h.nic_busy;
+        self.rma_ops = h.rma_ops;
+        self.messages = h.messages;
+        self.intra_msgs = h.intra_msgs;
+        self.inter_msgs = h.inter_msgs;
+        self.chunks_granted = h.chunks_granted;
+        self.done_replies = h.done_replies;
+        self.fast_grants = h.fast_grants;
+        self.events = h.events;
+        self.sampler = h.sampler.clone();
+        self.last_tick_chunks = h.last_tick_chunks;
     }
 
     // -- results ---------------------------------------------------------------
@@ -1348,9 +1593,12 @@ struct FlatShard<'a> {
 
 impl<'a> pdes::Shard for FlatShard<'a> {
     type Msg = Ev;
-    /// A checkpoint is a full clone of the shard's simulator state —
-    /// calendar queue (seq counter included), work-queue cursors, worker
-    /// table, stream samples. Rollback = swap the clone back in.
+    /// The *fallback* checkpoint is a full clone of the shard's simulator
+    /// state — calendar queue (seq counter included), work-queue cursors,
+    /// worker table, stream samples; rollback = swap the clone back in.
+    /// Speculative spans normally use the incremental journal instead
+    /// ([`Sim::ckpt_begin`]), whose cost scales with the events the span
+    /// executes; only AF runs decline it and fall back to the clone.
     type Ckpt = Sim<'a>;
 
     fn next_at(&self) -> Option<u64> {
@@ -1385,6 +1633,18 @@ impl<'a> pdes::Shard for FlatShard<'a> {
 
     fn restore(&mut self, ckpt: Sim<'a>) {
         self.sim = ckpt;
+    }
+
+    fn ckpt_begin(&mut self) -> bool {
+        self.sim.ckpt_begin()
+    }
+
+    fn ckpt_commit(&mut self) -> u64 {
+        self.sim.ckpt_commit()
+    }
+
+    fn ckpt_rollback(&mut self) -> u64 {
+        self.sim.ckpt_rollback()
     }
 }
 
@@ -1461,7 +1721,13 @@ fn simulate_flat_pdes(cfg: &DesConfig) -> anyhow::Result<DesResult> {
         staged.push(out);
     }
     pdes::deliver_staged(&mut shards, staged);
-    let opts = pdes::PdesOpts { mode: cfg.pdes_mode, reduce: false, rack_of: shard_rack };
+    let opts = pdes::PdesOpts {
+        mode: cfg.pdes_mode,
+        rack_of: shard_rack,
+        pin_shards: cfg.pin_shards,
+        window_mult_max: cfg.window_mult_max,
+        ..Default::default()
+    };
     let (shards, report) = pdes::run_sharded(
         shards,
         flat_lookahead_ns(&cfg.cluster),

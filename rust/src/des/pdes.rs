@@ -20,8 +20,9 @@
 //! round start therefore never delivers into a shard's past.
 //!
 //! **The hybrid round** ([`PdesMode::Hybrid`]) stretches each
-//! synchronization round to cover up to `3Δ` of simulated time in three
-//! slices, so tight-latency clusters stop paying one barrier set per `Δ`:
+//! synchronization round to cover up to `(2 + m)Δ` of simulated time,
+//! `m ≤ window_mult_max`, so tight-latency clusters stop paying one
+//! barrier set per `Δ`:
 //!
 //! * **committed** `[GVT, H)`, `H = GVT + Δ` — exactly the conservative
 //!   window; its cross-shard sends are staged into the *committed* lane
@@ -29,42 +30,57 @@
 //!   tie order inside the committed window is identical to the
 //!   conservative loop's.
 //! * **safe extension** `[H, H + Δ)` — unconditionally advanced by every
-//!   shard after the committed drain. This is still provably
-//!   conservative: a message arriving before `H + Δ` was sent before `H`,
-//!   i.e. inside the committed window, and was just delivered. Extension
-//!   sends go to the *safe* lane set; they arrive in `[H + Δ, H + 2Δ)`.
-//! * **optimistic overhang** `[H + Δ, H + Δ + w)`, `w ≤ Δ` — entered only
-//!   when the per-shard [`WindowController`] opened a window. The shard
-//!   checkpoints at `H + Δ` ([`Shard::save`]), speculates through the
-//!   overhang with sends staged into the *opt* lane set, and resolves
-//!   after the next barrier: if any safe-lane straggler arrives before
-//!   `H + Δ + w` — inside the speculated past — the shard rolls back to
-//!   the checkpoint, drops its staged opt sends, delivers the safe batch
-//!   in sender order, and **replays** the overhang. The replay is exact:
-//!   every message that can arrive before `H + 2Δ ≥ H + Δ + w` was sent
-//!   before `H + Δ` (committed ∪ extension) and is in hand. Opt sends
-//!   were created at `t ≥ H + Δ`, so they arrive at `≥ H + 2Δ`, beyond
-//!   everything any shard executed this round — they are drained in a
-//!   final phase and can never invalidate anyone's window.
+//!   shard after the committed drain. Still provably conservative: a
+//!   message arriving before `H + Δ` was sent before `H`, i.e. inside the
+//!   committed window, and was just delivered. Extension sends go to the
+//!   *safe* lane set; they arrive at `≥ H + Δ` and are **delivered before
+//!   any shard executes past `H + Δ`** (the deliver-then-speculate rule),
+//!   so they can never land in an executed past.
+//! * **multi-Δ speculation** `[S, S + mΔ)`, `S = H + Δ` — entered only
+//!   when *every* shard's [`WindowController`] proposes an open window;
+//!   the round's multiple `m` is the global minimum of the per-shard
+//!   proposals (a per-shard depth would let next-round traffic from a
+//!   shallow shard land inside a deep shard's already-executed span).
+//!   Each shard checkpoints at `S` — **incrementally** when the shard
+//!   supports an undo journal ([`Shard::ckpt_begin`], cost scales with
+//!   events speculated), falling back to [`Shard::save`]'s full clone —
+//!   and speculates through the span with sends staged into the *opt*
+//!   lane set. In-window cross-shard arrivals are then resolved by a
+//!   barrier-paced **fixed-point loop**: a shard whose inbound opt
+//!   arrival-time sequence changed (or whose sender re-executed) rolls
+//!   back to its checkpoint, re-delivers clones of all current in-window
+//!   arrivals, and re-speculates. Arrivals in `[S + kΔ, S + (k+1)Δ)` were
+//!   sent before `S + kΔ`, so execution finalizes one `Δ` per iteration
+//!   and the loop converges in at most `m` iterations (it exits the first
+//!   time no shard is dirty — immediately, in the common high-slack
+//!   round). At `m = 1` the span admits no in-window arrivals at all and
+//!   speculation is risk-free. After convergence every history below
+//!   `S + mΔ` is final, so the next round's GVT satisfies the
+//!   conservative invariant again; the final drain delivers only
+//!   arrivals `≥ S + mΔ` (the in-window ones were already delivered as
+//!   clones inside the journal scope).
 //!
 //! The [`WindowController`] — EWMA of realized cross-shard slack and
-//! committed-window event load, the `sched/adaptive.rs` idiom — picks
-//! conservative vs. optimistic per round and per shard, so the overhang
-//! only opens in regimes where rounds are barrier-bound (sparse windows)
-//! or speculation is observed to be safe (high slack).
+//! committed-window event load, the `sched/adaptive.rs` idiom — opens the
+//! window when stragglers are rare (slack EWMA ≥ 0.95) or rounds are
+//! sparse, and **escalates** the proposed multiple (1 → 2 → 4 → … up to
+//! the cap) after [`WINDOW_SAT_ROUNDS`] consecutive open rounds; any
+//! rollback demotes the shard back to 1Δ.
 //!
 //! **Determinism is structural, not scheduled.** The shard count is fixed
 //! by the partition geometry (never by the thread count), each shard's
-//! event order is its own `(time, seq)` calendar order, window boundaries
-//! and controller decisions are pure functions of shard states, and
-//! channel drains run in `(sender shard, FIFO)` order — so the outcome is
-//! a function of the partition alone, in both modes. Threads only decide
-//! *which core* runs a shard's window; `--des-threads 1` and
+//! event order is its own `(time, seq)` calendar order, window boundaries,
+//! controller decisions, and the global multiple are pure functions of
+//! shard states, and channel drains run in `(sender shard, FIFO)` order —
+//! so the outcome is a function of the partition alone, in both modes.
+//! Threads only decide *which core* runs a shard's window (optionally
+//! pinned — [`PdesOpts::pin_shards`]); `--des-threads 1` and
 //! `--des-threads 8` walk bit-identical per-shard histories, and a
 //! rollback replay reconverges exactly.
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::mem;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Barrier;
 
 /// Optimistic window controller: open the window when the realized slack
@@ -76,9 +92,16 @@ const SLACK_SAFE: f64 = 0.95;
 const SPARSE_EVENTS: f64 = 48.0;
 /// Same smoothing as `sched/adaptive.rs::OBS_EWMA_ALPHA`.
 const PDES_EWMA_ALPHA: f64 = 0.25;
+/// Consecutive open rounds before the controller doubles its proposed
+/// window multiple (the slack-saturation threshold of the multi-Δ
+/// escalation).
+pub const WINDOW_SAT_ROUNDS: u32 = 4;
+/// Default cap on the window multiple (speculate at most this many Δ past
+/// the safe extension).
+pub const WINDOW_MULT_MAX: u32 = 8;
 
 /// Executor mode: pure conservative horizon rounds (PR 8 behavior) or the
-/// hybrid loop whose per-shard controller may open the optimistic window.
+/// hybrid loop whose per-shard controllers may open the multi-Δ window.
 /// Both modes produce bit-identical results; they differ only in how much
 /// wall-clock a synchronization round buys.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -106,7 +129,7 @@ impl PdesMode {
 }
 
 /// Executor options beyond the lookahead/thread pair.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct PdesOpts {
     pub mode: PdesMode,
     /// Run [`Shard::reduce`] single-threaded between rounds (its own
@@ -119,6 +142,26 @@ pub struct PdesOpts {
     /// direct SPSC lane; cross-rack sends share one `(sender, rack)` lane
     /// scanned read-only by the rack's shards.
     pub rack_of: Vec<u32>,
+    /// Cap on the hybrid window multiple (clamped to ≥ 1; 1 = single-Δ
+    /// speculation, the risk-free window). Purely a depth limit — results
+    /// are bit-identical at every value.
+    pub window_mult_max: u32,
+    /// Best-effort pin of each worker thread to its own core stripe
+    /// (`sched_setaffinity`; no-op where unsupported), so a shard's
+    /// calendar queue and SPSC lanes stay NUMA-local by first touch.
+    pub pin_shards: bool,
+}
+
+impl Default for PdesOpts {
+    fn default() -> Self {
+        PdesOpts {
+            mode: PdesMode::default(),
+            reduce: false,
+            rack_of: Vec::new(),
+            window_mult_max: WINDOW_MULT_MAX,
+            pin_shards: false,
+        }
+    }
 }
 
 impl PdesOpts {
@@ -135,11 +178,12 @@ impl PdesOpts {
 pub trait Shard: Send {
     /// A cross-shard message: the destination shard reinjects it into its
     /// calendar queue at the carried arrival time. `Clone` because
-    /// cross-rack lanes are scanned (not drained) by their rack's shards.
+    /// cross-rack lanes are scanned (not drained) by their rack's shards,
+    /// and in-window speculative arrivals are delivered as clones.
     type Msg: Send + Clone;
 
-    /// State snapshot taken at overhang entry (`H + Δ`); restoring it
-    /// must rewind the shard exactly (calendar queue, ledgers, counters,
+    /// State snapshot taken at speculation entry; restoring it must
+    /// rewind the shard exactly (calendar queue, ledgers, counters,
     /// samplers).
     type Ckpt: Send;
 
@@ -153,11 +197,36 @@ pub trait Shard: Send {
     /// Inject a cross-shard arrival at absolute time `at`.
     fn deliver(&mut self, at: u64, msg: Self::Msg);
 
-    /// Snapshot the shard for a possible rollback.
+    /// Snapshot the shard for a possible rollback (the full-clone
+    /// checkpoint fallback).
     fn save(&self) -> Self::Ckpt;
 
     /// Rewind to a snapshot taken by [`Shard::save`].
     fn restore(&mut self, ckpt: Self::Ckpt);
+
+    /// Arm an **incremental** checkpoint: an undo journal over the
+    /// shard's mutable state whose cost scales with the events the span
+    /// executes, not the state size. Return `false` (the default) to make
+    /// the executor fall back to [`Shard::save`]'s full clone.
+    fn ckpt_begin(&mut self) -> bool {
+        false
+    }
+
+    /// Discard the armed journal, keeping the span's effects; returns the
+    /// journal's byte footprint (the `checkpoint_bytes` accounting).
+    /// Called only after `ckpt_begin` returned `true`.
+    fn ckpt_commit(&mut self) -> u64 {
+        0
+    }
+
+    /// Replay the armed journal — rewinding the shard exactly to the
+    /// `ckpt_begin` state — and **re-arm** it (a fixed-point iteration
+    /// rolls back, redelivers, and speculates again). Returns the
+    /// discarded journal's byte footprint. Called only after `ckpt_begin`
+    /// returned `true`.
+    fn ckpt_rollback(&mut self) -> u64 {
+        0
+    }
 
     /// Deterministic fixed-order cross-shard merge of shared state at a
     /// round boundary, run by one thread while all others hold at a
@@ -304,6 +373,66 @@ impl<M: Clone> RoutingTable<M> {
         min
     }
 
+    /// Collect, per sender, the arrival-time sequence (in lane order, one
+    /// `Vec` per source shard) of everything staged for `dst` below
+    /// `max_at` — the fixed-point loop's exact change detector.
+    ///
+    /// Safety: read phase of `dst`'s owning thread.
+    unsafe fn collect_arrivals(&self, dst: usize, max_at: u64, out: &mut [Vec<u64>]) {
+        let my_rack = self.rack_of[dst] as usize;
+        for src in 0..self.rack_of.len() {
+            let v = &mut out[src];
+            v.clear();
+            if self.rack_of[src] as usize == my_rack {
+                for (at, _) in self.direct[src][dst].get_ref() {
+                    if *at < max_at {
+                        v.push(*at);
+                    }
+                }
+            } else {
+                for (d, at, _) in self.shared[src][my_rack].get_ref() {
+                    if *d == dst && *at < max_at {
+                        v.push(*at);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Deliver **clones** of every arrival staged for `dst` below
+    /// `max_at`, in `(sender shard, FIFO)` order, leaving all lanes
+    /// intact (senders may still drop/restage them; the receiver's
+    /// journal makes the delivery retraction-safe). Returns the count.
+    ///
+    /// Safety: read phase of `dst`'s owning thread.
+    unsafe fn scan_into_max<S: Shard<Msg = M>>(
+        &self,
+        dst: usize,
+        max_at: u64,
+        shard: &mut S,
+    ) -> u64 {
+        let mut delivered = 0u64;
+        let my_rack = self.rack_of[dst] as usize;
+        for src in 0..self.rack_of.len() {
+            if self.rack_of[src] as usize == my_rack {
+                for (at, msg) in self.direct[src][dst].get_ref() {
+                    if *at < max_at {
+                        shard.deliver(*at, msg.clone());
+                        delivered += 1;
+                    }
+                }
+            } else {
+                for (d, at, msg) in self.shared[src][my_rack].get_ref() {
+                    if *d == dst && *at < max_at {
+                        shard.deliver(*at, msg.clone());
+                        delivered += 1;
+                    }
+                }
+            }
+        }
+        delivered
+    }
+
     /// Deliver everything staged for `dst` in `(sender shard, FIFO)`
     /// order; returns the message count. Direct lanes are drained (the
     /// receiver is their single consumer), shared rack lanes are scanned
@@ -312,24 +441,44 @@ impl<M: Clone> RoutingTable<M> {
     ///
     /// Safety: read phase of `dst`'s owning thread.
     unsafe fn drain_into<S: Shard<Msg = M>>(&self, dst: usize, shard: &mut S) -> u64 {
-        let mut delivered = 0u64;
+        self.drain_into_min(dst, 0, shard)
+    }
+
+    /// Like [`Self::drain_into`] but deliver only arrivals `≥ min_at`:
+    /// the below-bound entries were already delivered as in-window clones
+    /// during the fixed-point loop. Every entry addressed to `dst` counts
+    /// toward the returned total exactly once, delivered or not, so
+    /// `messages_routed` stays the unique-message count.
+    ///
+    /// Safety: read phase of `dst`'s owning thread.
+    unsafe fn drain_into_min<S: Shard<Msg = M>>(
+        &self,
+        dst: usize,
+        min_at: u64,
+        shard: &mut S,
+    ) -> u64 {
+        let mut count = 0u64;
         let my_rack = self.rack_of[dst] as usize;
         for src in 0..self.rack_of.len() {
             if self.rack_of[src] as usize == my_rack {
                 for (at, msg) in self.direct[src][dst].get().drain(..) {
-                    shard.deliver(at, msg);
-                    delivered += 1;
+                    if at >= min_at {
+                        shard.deliver(at, msg);
+                    }
+                    count += 1;
                 }
             } else {
                 for (d, at, msg) in self.shared[src][my_rack].get_ref() {
                     if *d == dst {
-                        shard.deliver(*at, msg.clone());
-                        delivered += 1;
+                        if *at >= min_at {
+                            shard.deliver(*at, msg.clone());
+                        }
+                        count += 1;
                     }
                 }
             }
         }
-        delivered
+        count
     }
 }
 
@@ -352,37 +501,75 @@ impl Ewma {
     }
 }
 
-/// Adaptive lookahead controller: one per shard, fed only by that shard's
+/// Adaptive window controller: one per shard, fed only by that shard's
 /// own round observations, so its decisions are thread-count independent.
-#[derive(Debug, Clone, Copy, Default)]
-struct WindowController {
+///
+/// The gate (slack EWMA ≥ [`SLACK_SAFE`], or committed load ≤
+/// [`SPARSE_EVENTS`]) opens single-Δ speculation; [`WINDOW_SAT_ROUNDS`]
+/// consecutive open rounds — slack saturation — double the proposed
+/// multiple up to the cap, and any rollback demotes it back to 1.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct WindowController {
     /// Realized cross-shard slack: (earliest inbound arrival − H) / Δ,
     /// clamped to [0, 1]; 1.0 on rounds with no inbound.
     slack: Ewma,
     /// Events executed inside the committed window per round.
     load: Ewma,
+    /// Consecutive gate-open rounds since the last escalation/demotion.
+    sat: u32,
+    /// Current window multiple proposed while the gate is open.
+    mult: u32,
+}
+
+impl Default for WindowController {
+    fn default() -> Self {
+        WindowController { slack: Ewma::default(), load: Ewma::default(), sat: 0, mult: 1 }
+    }
 }
 
 impl WindowController {
-    fn observe_round(&mut self, slack_norm: f64, committed_events: u64) {
-        self.slack.observe(slack_norm);
-        self.load.observe(committed_events as f64);
+    fn gate_open(&self) -> bool {
+        self.slack.primed && (self.slack.v >= SLACK_SAFE || self.load.v <= SPARSE_EVENTS)
     }
 
-    /// Window for the next round: conservative (0) until primed, then the
-    /// full lookahead when stragglers are rare or rounds are sparse
-    /// enough that even a replayed window beats an extra synchronization
-    /// round.
-    fn window(&self, lookahead_ns: u64) -> u64 {
-        if !self.slack.primed {
-            return 0;
+    pub(crate) fn observe_round(&mut self, slack_norm: f64, committed_events: u64, mult_cap: u32) {
+        self.slack.observe(slack_norm);
+        self.load.observe(committed_events as f64);
+        if self.gate_open() {
+            self.sat = self.sat.saturating_add(1);
+            if self.sat >= WINDOW_SAT_ROUNDS && self.mult < mult_cap {
+                self.mult = (self.mult * 2).min(mult_cap);
+                self.sat = 0;
+            }
+        } else {
+            self.sat = 0;
         }
-        if self.slack.v >= SLACK_SAFE || self.load.v <= SPARSE_EVENTS {
-            lookahead_ns
+    }
+
+    /// Window multiple this shard proposes for the coming round: 0 keeps
+    /// the round conservative (committed + safe only); the executor takes
+    /// the global minimum across shards.
+    pub(crate) fn proposed_mult(&self) -> u64 {
+        if self.gate_open() {
+            self.mult as u64
         } else {
             0
         }
     }
+
+    /// A straggler invalidated the speculated span: drop back to 1Δ.
+    fn on_rollback(&mut self) {
+        self.mult = 1;
+        self.sat = 0;
+    }
+}
+
+/// Checkpoint held across a speculated span: incremental (the shard's
+/// own undo journal is armed) or the full-clone fallback.
+enum SpecCkpt<C> {
+    None,
+    Full(C),
+    Incr,
 }
 
 /// A shard plus its executor-side counters. Only the owning thread ever
@@ -391,15 +578,18 @@ impl WindowController {
 struct WorkerShard<S: Shard> {
     shard: S,
     ctl: WindowController,
-    /// Window granted for the current round (0 = conservative round).
-    window: u64,
-    /// Snapshot taken at overhang entry, held until rollback resolution.
-    ckpt: Option<S::Ckpt>,
+    /// Checkpoint armed at speculation entry, held until convergence.
+    ckpt: SpecCkpt<S::Ckpt>,
     /// Events executed inside the committed window this round.
     committed_events: u64,
-    /// Committed inbound messages drained this round (depth bookkeeping
-    /// across the Phase C/D split).
+    /// Inbound messages drained this round before the opt phase (depth
+    /// bookkeeping across the phase split).
     inbound_depth: u64,
+    /// Per-sender arrival-time sequences this shard last incorporated
+    /// (the fixed-point change detector's reference).
+    last_in: Vec<Vec<u64>>,
+    /// Scratch for the current iteration's arrival-time sequences.
+    pending_in: Vec<Vec<u64>>,
     /// Rounds where this shard had pending events but none inside the
     /// window — it idled at the barrier while other shards progressed.
     horizon_stalls: u64,
@@ -407,12 +597,17 @@ struct WorkerShard<S: Shard> {
     mailbox_depth_max: u64,
     /// Total cross-shard messages delivered to this shard.
     delivered: u64,
-    /// Optimistic windows that a straggler invalidated (rolled back and
-    /// replayed in sender order).
+    /// Speculated spans a straggler invalidated (rolled back, clones
+    /// redelivered in sender order, re-executed).
     rollbacks: u64,
     /// Events executed past the conservative horizon, including events a
     /// rollback discarded and the replay then re-executed.
     speculated_events: u64,
+    /// Bytes of incremental-checkpoint journal this shard accumulated
+    /// (0 when the shard only supports full-clone checkpoints).
+    ckpt_bytes: u64,
+    /// Largest window multiple this shard actually speculated under.
+    mult_max: u64,
 }
 
 struct ShardCell<S: Shard>(UnsafeCell<WorkerShard<S>>);
@@ -429,17 +624,40 @@ impl<S: Shard> ShardCell<S> {
     }
 }
 
+/// Cross-thread state of the hybrid speculation phases: per-shard window
+/// proposals (written in the controller phase, reduced to a global
+/// minimum after the barrier) and the parity-indexed dirty flags of the
+/// fixed-point loop (each shard writes its own flag in the read phase;
+/// everyone reads the full array after the barrier).
+struct SpecBoard {
+    window_slots: Vec<AtomicU64>,
+    dirty: [Vec<AtomicBool>; 2],
+}
+
+impl SpecBoard {
+    fn new(s_count: usize) -> Self {
+        SpecBoard {
+            window_slots: (0..s_count).map(|_| AtomicU64::new(0)).collect(),
+            dirty: [
+                (0..s_count).map(|_| AtomicBool::new(false)).collect(),
+                (0..s_count).map(|_| AtomicBool::new(false)).collect(),
+            ],
+        }
+    }
+}
+
 /// Executor-level accounting of one PDES run — the source of the
 /// per-shard `horizon_stalls` / `mailbox_depth_max` / `rollbacks` /
-/// `speculated_events` observability fields.
+/// `speculated_events` / `checkpoint_bytes` observability fields.
 #[derive(Debug, Clone)]
 pub struct PdesReport {
     pub shards: usize,
     pub threads: usize,
     pub lookahead_ns: u64,
     pub mode: PdesMode,
-    /// Optimistic window bound (= lookahead in hybrid mode, 0 when the
-    /// run is conservative or single-shard).
+    /// Base optimistic window (= lookahead in hybrid mode, 0 when the
+    /// run is conservative or single-shard); the realized per-round span
+    /// is `window_ns ×` the round's global multiple.
     pub window_ns: u64,
     /// Synchronization rounds executed.
     pub rounds: u64,
@@ -447,10 +665,15 @@ pub struct PdesReport {
     pub horizon_stalls: Vec<u64>,
     /// Per-shard max messages drained in one round.
     pub mailbox_depth_max: Vec<u64>,
-    /// Per-shard rollback counts (invalidated optimistic windows).
+    /// Per-shard rollback counts (invalidated speculated spans).
     pub rollbacks: Vec<u64>,
     /// Per-shard events executed past the conservative horizon.
     pub speculated_events: Vec<u64>,
+    /// Per-shard incremental-checkpoint journal bytes (0 on shards that
+    /// fall back to full-clone checkpoints).
+    pub checkpoint_bytes: Vec<u64>,
+    /// Per-shard maximum realized window multiple (0 = never speculated).
+    pub window_multiple: Vec<u64>,
     /// Total cross-shard messages routed.
     pub messages_routed: u64,
 }
@@ -503,6 +726,7 @@ pub fn run_sharded<S: Shard>(
     let threads = (threads.max(1) as usize).min(s_count);
     let rack_of: Vec<u32> =
         if opts.rack_of.is_empty() { vec![0; s_count] } else { opts.rack_of.clone() };
+    let mult_cap = opts.window_mult_max.max(1);
 
     let cells: Vec<ShardCell<S>> = shards
         .into_iter()
@@ -510,19 +734,23 @@ pub fn run_sharded<S: Shard>(
             ShardCell(UnsafeCell::new(WorkerShard {
                 shard,
                 ctl: WindowController::default(),
-                window: 0,
-                ckpt: None,
+                ckpt: SpecCkpt::None,
                 committed_events: 0,
                 inbound_depth: 0,
+                last_in: vec![Vec::new(); s_count],
+                pending_in: vec![Vec::new(); s_count],
                 horizon_stalls: 0,
                 mailbox_depth_max: 0,
                 delivered: 0,
                 rollbacks: 0,
                 speculated_events: 0,
+                ckpt_bytes: 0,
+                mult_max: 0,
             }))
         })
         .collect();
     let next_slots: Vec<AtomicU64> = (0..s_count).map(|_| AtomicU64::new(u64::MAX)).collect();
+    let board = SpecBoard::new(s_count);
     let committed: RoutingTable<S::Msg> = RoutingTable::new(&rack_of);
     let safe: RoutingTable<S::Msg> = RoutingTable::new(&rack_of);
     let opt: RoutingTable<S::Msg> = RoutingTable::new(&rack_of);
@@ -534,21 +762,30 @@ pub fn run_sharded<S: Shard>(
         for tid in 1..threads {
             let cells = &cells;
             let next_slots = &next_slots;
+            let board = &board;
             let committed = &committed;
             let safe = &safe;
             let opt = &opt;
             let barrier = &barrier;
             let rounds = &rounds;
+            let pin = opts.pin_shards;
+            let reduce = opts.reduce;
             scope.spawn(move || {
+                if pin {
+                    pin_current_thread(tid, threads);
+                }
                 worker_loop(
-                    tid, threads, lookahead_ns, hybrid, opts.reduce, barrier, next_slots, cells,
-                    committed, safe, opt, rounds,
+                    tid, threads, lookahead_ns, hybrid, mult_cap, reduce, barrier, next_slots,
+                    board, cells, committed, safe, opt, rounds,
                 )
             });
         }
+        if opts.pin_shards && threads > 1 {
+            pin_current_thread(0, threads);
+        }
         worker_loop(
-            0, threads, lookahead_ns, hybrid, opts.reduce, &barrier, &next_slots, &cells,
-            &committed, &safe, &opt, &rounds,
+            0, threads, lookahead_ns, hybrid, mult_cap, opts.reduce, &barrier, &next_slots,
+            &board, &cells, &committed, &safe, &opt, &rounds,
         );
     });
 
@@ -557,6 +794,8 @@ pub fn run_sharded<S: Shard>(
     let mut mailbox_depth_max = Vec::with_capacity(s_count);
     let mut rollbacks = Vec::with_capacity(s_count);
     let mut speculated_events = Vec::with_capacity(s_count);
+    let mut checkpoint_bytes = Vec::with_capacity(s_count);
+    let mut window_multiple = Vec::with_capacity(s_count);
     let mut messages_routed = 0;
     for cell in cells {
         let ws = cell.0.into_inner();
@@ -564,6 +803,8 @@ pub fn run_sharded<S: Shard>(
         mailbox_depth_max.push(ws.mailbox_depth_max);
         rollbacks.push(ws.rollbacks);
         speculated_events.push(ws.speculated_events);
+        checkpoint_bytes.push(ws.ckpt_bytes);
+        window_multiple.push(ws.mult_max);
         messages_routed += ws.delivered;
         shards.push(ws.shard);
     }
@@ -578,6 +819,8 @@ pub fn run_sharded<S: Shard>(
         mailbox_depth_max,
         rollbacks,
         speculated_events,
+        checkpoint_bytes,
+        window_multiple,
         messages_routed,
     };
     (shards, report)
@@ -589,9 +832,11 @@ fn worker_loop<S: Shard>(
     threads: usize,
     lookahead_ns: u64,
     hybrid: bool,
+    mult_cap: u32,
     reduce: bool,
     barrier: &Barrier,
     next_slots: &[AtomicU64],
+    board: &SpecBoard,
     cells: &[ShardCell<S>],
     committed: &RoutingTable<S::Msg>,
     safe: &RoutingTable<S::Msg>,
@@ -650,11 +895,10 @@ fn worker_loop<S: Shard>(
 
         // Phase C — drain the committed batch in sender order (identical
         // placement to the conservative loop, so committed-window tie
-        // order matches), feed the controller, then advance through the
-        // safe extension [H, H+Δ) — sound unconditionally: anything
-        // arriving before H+Δ was sent before H and was just delivered.
-        // Finally, window permitting, checkpoint at H+Δ and speculate
-        // through the overhang [H+Δ, H+Δ+w) into the opt lane set.
+        // order matches), feed the controller and publish this shard's
+        // window proposal, then advance through the safe extension
+        // [H, H+Δ) — sound unconditionally: anything arriving before H+Δ
+        // was sent before H and was just delivered.
         let safe_end = horizon.saturating_add(lookahead_ns);
         for j in (tid..s_count).step_by(threads) {
             let ws = unsafe { cells[j].get() };
@@ -667,55 +911,134 @@ fn worker_loop<S: Shard>(
             } else {
                 (min_arrival.saturating_sub(horizon) as f64 / lookahead_ns as f64).clamp(0.0, 1.0)
             };
-            ws.ctl.observe_round(slack_norm, ws.committed_events);
+            ws.ctl.observe_round(slack_norm, ws.committed_events, mult_cap);
+            board.window_slots[j].store(ws.ctl.proposed_mult(), Ordering::Relaxed);
             ws.shard.advance(safe_end, &mut outbox);
             unsafe { safe.stage(j, &mut outbox) };
-            if ws.window > 0 {
-                let spec_end = safe_end.saturating_add(ws.window);
-                if ws.shard.next_at().is_some_and(|t| t < spec_end) {
-                    ws.ckpt = Some(ws.shard.save());
-                    ws.speculated_events += ws.shard.advance(spec_end, &mut outbox);
-                    unsafe { opt.stage(j, &mut outbox) };
-                }
-            }
         }
         barrier.wait();
 
-        // Phase D — resolve: safe-extension stragglers arrive inside
-        // [H+Δ, H+2Δ); one landing before this shard's spec_end is in its
-        // speculated past and forces rollback + sender-order replay. The
-        // replay is exact — all traffic below H+2Δ ≥ spec_end is in hand.
-        // The controller's next-round window is applied only here, after
-        // every use of the current one.
+        // The round's window multiple is the global minimum of the
+        // per-shard proposals: every shard speculates to the same
+        // spec_end or nobody does, so after in-round resolution the next
+        // GVT is ≥ spec_end and the cross-round conservative invariant
+        // holds (a per-shard depth would let next-round sends from a
+        // shallow shard land inside a deep shard's executed span).
+        let global_mult = board
+            .window_slots
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed))
+            .min()
+            .unwrap_or(0);
+        let spec_end = safe_end.saturating_add(lookahead_ns.saturating_mul(global_mult));
+
+        // Phase D — deliver the safe batch FIRST (sender order), then,
+        // window permitting, checkpoint and speculate through
+        // [safe_end, spec_end). Delivering before speculating removes
+        // every safe-lane rollback: safe sends arrive at ≥ H+Δ =
+        // safe_end, and nothing past safe_end has executed yet.
         for j in (tid..s_count).step_by(threads) {
             let ws = unsafe { cells[j].get() };
-            let min_safe = unsafe { safe.min_arrival(j) };
-            let spec_end = safe_end.saturating_add(ws.window);
-            let depth;
-            if ws.ckpt.is_some() && min_safe < spec_end {
-                ws.rollbacks += 1;
-                let ckpt = ws.ckpt.take().expect("checkpoint just observed");
-                ws.shard.restore(ckpt);
-                unsafe { opt.drop_staged(j) };
-                depth = unsafe { safe.drain_into(j, &mut ws.shard) };
-                ws.speculated_events += ws.shard.advance(spec_end, &mut outbox);
-                unsafe { opt.stage(j, &mut outbox) };
-            } else {
-                ws.ckpt = None;
-                depth = unsafe { safe.drain_into(j, &mut ws.shard) };
-            }
+            let depth = unsafe { safe.drain_into(j, &mut ws.shard) };
             ws.delivered += depth;
             ws.inbound_depth += depth;
-            ws.window = ws.ctl.window(lookahead_ns);
+            board.dirty[0][j].store(false, Ordering::Relaxed);
+            board.dirty[1][j].store(false, Ordering::Relaxed);
+            if global_mult > 0 {
+                // Every shard arms a checkpoint — an idle shard can still
+                // receive an in-window arrival and must execute it inside
+                // the same resolution discipline.
+                ws.mult_max = ws.mult_max.max(global_mult);
+                for v in ws.last_in.iter_mut() {
+                    v.clear();
+                }
+                ws.ckpt = if ws.shard.ckpt_begin() {
+                    SpecCkpt::Incr
+                } else {
+                    SpecCkpt::Full(ws.shard.save())
+                };
+                ws.speculated_events += ws.shard.advance(spec_end, &mut outbox);
+                unsafe { opt.stage(j, &mut outbox) };
+            }
         }
         barrier.wait();
 
-        // Phase E — drain the opt lanes. Opt sends were created at
-        // t ≥ H+Δ, so they arrive at ≥ H+2Δ — beyond everything any shard
-        // executed this round; delivery is never into a past.
+        if global_mult > 0 {
+            // Fixed-point resolution of in-window cross-shard arrivals.
+            // Read phase: a shard is dirty when some sender's in-window
+            // arrival-time sequence differs from what it last
+            // incorporated, or when such a sender itself re-executed last
+            // iteration (its payloads may have changed at equal times).
+            // Write phase: dirty shards roll back, redeliver clones of
+            // ALL current in-window arrivals (journal scope makes the
+            // clones retraction-safe), re-speculate, and restage.
+            // Arrivals in [safe_end + kΔ, safe_end + (k+1)Δ) were sent
+            // before safe_end + kΔ, so histories finalize one Δ per
+            // iteration and the loop converges within global_mult
+            // iterations; the cap is a backstop, not a correctness bound.
+            for iter in 0..=(mult_cap as usize) {
+                let cur = iter & 1;
+                let prev = cur ^ 1;
+                for j in (tid..s_count).step_by(threads) {
+                    let ws = unsafe { cells[j].get() };
+                    unsafe { opt.collect_arrivals(j, spec_end, &mut ws.pending_in) };
+                    let mut dirty = false;
+                    for src in 0..s_count {
+                        if ws.pending_in[src] != ws.last_in[src]
+                            || (!ws.pending_in[src].is_empty()
+                                && board.dirty[prev][src].load(Ordering::Relaxed))
+                        {
+                            dirty = true;
+                            break;
+                        }
+                    }
+                    board.dirty[cur][j].store(dirty, Ordering::Relaxed);
+                }
+                barrier.wait();
+                if !board.dirty[cur].iter().any(|d| d.load(Ordering::Relaxed)) {
+                    break;
+                }
+                for j in (tid..s_count).step_by(threads) {
+                    if !board.dirty[cur][j].load(Ordering::Relaxed) {
+                        continue;
+                    }
+                    let ws = unsafe { cells[j].get() };
+                    ws.rollbacks += 1;
+                    ws.ctl.on_rollback();
+                    match mem::replace(&mut ws.ckpt, SpecCkpt::None) {
+                        SpecCkpt::Incr => {
+                            ws.ckpt_bytes += ws.shard.ckpt_rollback();
+                            ws.ckpt = SpecCkpt::Incr;
+                        }
+                        SpecCkpt::Full(c) => {
+                            ws.shard.restore(c);
+                            ws.ckpt = SpecCkpt::Full(ws.shard.save());
+                        }
+                        SpecCkpt::None => unreachable!("speculating shard lost its checkpoint"),
+                    }
+                    unsafe { opt.scan_into_max(j, spec_end, &mut ws.shard) };
+                    mem::swap(&mut ws.last_in, &mut ws.pending_in);
+                    ws.speculated_events += ws.shard.advance(spec_end, &mut outbox);
+                    unsafe {
+                        opt.drop_staged(j);
+                        opt.stage(j, &mut outbox);
+                    }
+                }
+                barrier.wait();
+            }
+        }
+
+        // Phase E — converge: commit the checkpoints and drain the opt
+        // lanes. In-window arrivals (< spec_end) were already delivered
+        // as clones to their (rolled-back) receivers and are dropped
+        // here; arrivals ≥ spec_end are beyond every executed history.
         for j in (tid..s_count).step_by(threads) {
             let ws = unsafe { cells[j].get() };
-            let depth = unsafe { opt.drain_into(j, &mut ws.shard) };
+            match mem::replace(&mut ws.ckpt, SpecCkpt::None) {
+                SpecCkpt::Incr => ws.ckpt_bytes += ws.shard.ckpt_commit(),
+                SpecCkpt::Full(_) | SpecCkpt::None => {}
+            }
+            let depth = unsafe { opt.drain_into_min(j, spec_end, &mut ws.shard) };
             ws.delivered += depth;
             ws.mailbox_depth_max = ws.mailbox_depth_max.max(ws.inbound_depth + depth);
         }
@@ -747,6 +1070,44 @@ fn close_round<S: Shard>(
     }
 }
 
+/// Best-effort pin of the calling thread to a contiguous core stripe
+/// (`tid`-th of `threads` equal slices). Raw `sched_setaffinity` syscall
+/// — no libc dependency; returns whether the kernel accepted the mask.
+/// Memory then follows by first touch: the shard's calendar queue and
+/// lanes are allocated and used from the pinned thread.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+pub(crate) fn pin_current_thread(tid: usize, threads: usize) -> bool {
+    let ncpu = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if threads == 0 || ncpu > 1024 {
+        return false;
+    }
+    let per = (ncpu / threads).max(1);
+    let lo = (tid * per) % ncpu;
+    let mut mask = [0u64; 16]; // CPU_SETSIZE / 64
+    for c in lo..(lo + per).min(ncpu) {
+        mask[c / 64] |= 1u64 << (c % 64);
+    }
+    let ret: i64;
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret, // SYS_sched_setaffinity
+            in("rdi") 0i64,                 // pid 0 = calling thread
+            in("rsi") mask.len() * 8,
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+pub(crate) fn pin_current_thread(_tid: usize, _threads: usize) -> bool {
+    false
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -754,13 +1115,13 @@ mod tests {
 
     /// Toy shard: relays a token to the next shard over a 200 ns link,
     /// doing 14 ns of "local work" per hop, optionally with an
-    /// independent local ticker chain (dense enough to keep the
-    /// optimistic overhang busy). Relay events land on even times and
-    /// ticks on odd times, so no two events ever tie — the logs are
-    /// strictly time-ordered and strict equality across modes is the
-    /// honest invariant. A relay executed inside the safe extension
-    /// arrives 14 ns past the receiver's next safe horizon — inside any
-    /// open overhang — so open windows are repeatedly violated.
+    /// independent local ticker chain (dense enough to keep speculated
+    /// spans busy). Relay events land on even times and ticks on odd
+    /// times, so no two events ever tie — the logs are strictly
+    /// time-ordered and strict equality across modes is the honest
+    /// invariant. A relay executed inside a speculated span arrives
+    /// 214 ns later — inside any span of ≥ 2Δ — so escalated windows are
+    /// repeatedly violated.
     #[derive(Clone)]
     struct PingShard {
         id: usize,
@@ -769,6 +1130,11 @@ mod tests {
         hops_left: u64,
         log: Vec<(u64, u64)>,
         shared_max: u64,
+        /// Offer the executor incremental (undo-journal) checkpoints
+        /// instead of the full-clone fallback.
+        incr: bool,
+        /// Armed journal sidecar: (hops_left, log.len, shared_max).
+        undo: Option<(u64, usize, u64)>,
     }
 
     const TICK: u64 = u64::MAX; // marker event for the local ticker
@@ -814,6 +1180,28 @@ mod tests {
             *self = ckpt;
         }
 
+        fn ckpt_begin(&mut self) -> bool {
+            if !self.incr {
+                return false;
+            }
+            self.heap.undo_begin();
+            self.undo = Some((self.hops_left, self.log.len(), self.shared_max));
+            true
+        }
+
+        fn ckpt_commit(&mut self) -> u64 {
+            self.undo = None;
+            self.heap.undo_commit()
+        }
+
+        fn ckpt_rollback(&mut self) -> u64 {
+            let (hops, log_len, shared_max) = self.undo.expect("incremental ckpt armed");
+            self.hops_left = hops;
+            self.log.truncate(log_len);
+            self.shared_max = shared_max;
+            self.heap.undo_rollback()
+        }
+
         fn reduce(shards: &mut [&mut Self]) {
             // Fixed-order merge of a shared high-water mark.
             let max = shards.iter().map(|s| s.log.len() as u64).max().unwrap_or(0);
@@ -824,6 +1212,16 @@ mod tests {
     }
 
     fn make_shards(n: usize, hops: u64, ticker: bool, seed_token: bool) -> Vec<PingShard> {
+        make_shards_ckpt(n, hops, ticker, seed_token, false)
+    }
+
+    fn make_shards_ckpt(
+        n: usize,
+        hops: u64,
+        ticker: bool,
+        seed_token: bool,
+        incr: bool,
+    ) -> Vec<PingShard> {
         let mut shards: Vec<PingShard> = (0..n)
             .map(|id| PingShard {
                 id,
@@ -832,6 +1230,8 @@ mod tests {
                 hops_left: hops,
                 log: Vec::new(),
                 shared_max: 0,
+                incr,
+                undo: None,
             })
             .collect();
         if seed_token {
@@ -868,6 +1268,8 @@ mod tests {
         assert_eq!(r1.window_ns, 0);
         assert_eq!(r1.rollbacks, vec![0, 0]);
         assert_eq!(r1.speculated_events, vec![0, 0]);
+        assert_eq!(r1.checkpoint_bytes, vec![0, 0]);
+        assert_eq!(r1.window_multiple, vec![0, 0]);
     }
 
     #[test]
@@ -882,11 +1284,11 @@ mod tests {
         assert_eq!(shards[0].log, vec![(5, 42), (5, 99)]);
     }
 
-    /// The adversarial shape from docs/pdes.md: relays executed inside
-    /// the safe extension arrive 14 ns into the receiver's optimistic
-    /// overhang, while a dense local ticker keeps both shards
-    /// speculating — open windows are repeatedly violated, so the hybrid
-    /// run must roll back, replay, and still converge on the
+    /// The adversarial shape from docs/pdes.md: the dense ticker keeps
+    /// both shards in the sparse regime, so their controllers escalate
+    /// to multi-Δ windows — and relays executed inside a ≥ 2Δ span
+    /// arrive inside the receiver's speculated past, forcing rollbacks.
+    /// The hybrid run must roll back, replay, and still converge on the
     /// conservative (and 1-thread) history exactly.
     #[test]
     fn hybrid_rolls_back_and_reconverges() {
@@ -906,21 +1308,55 @@ mod tests {
             assert_eq!(rh.window_ns, 200);
             assert!(
                 rh.rollbacks.iter().sum::<u64>() > 0,
-                "straggler relays must invalidate open windows: {:?}",
+                "straggler relays must invalidate escalated windows: {:?}",
                 rh.rollbacks
             );
             assert!(rh.speculated_events.iter().sum::<u64>() > 0);
             assert!(
+                rh.window_multiple.iter().max().copied().unwrap_or(0) >= 2,
+                "the sparse regime must escalate past 1Δ: {:?}",
+                rh.window_multiple
+            );
+            assert!(
                 rh.rounds < rc.rounds,
-                "the optimistic window must buy rounds ({} vs {})",
+                "the speculated spans must buy rounds ({} vs {})",
                 rh.rounds,
                 rc.rounds
             );
         }
     }
 
+    /// Same workload on incremental (undo-journal) checkpoints: results
+    /// stay bit-identical to the conservative history, rollbacks still
+    /// happen, and the journal bytes are reported instead of full-clone
+    /// silence.
+    #[test]
+    fn incremental_checkpoints_match_full_clones() {
+        let (cons, _) =
+            run_sharded(make_shards(2, 40, true, true), 200, 2, &PdesOpts::conservative());
+        let cons_logs: Vec<_> = cons.into_iter().map(|s| s.log).collect();
+        let opts = PdesOpts { mode: PdesMode::Hybrid, ..Default::default() };
+        let (full, rf) = run_sharded(make_shards_ckpt(2, 40, true, true, false), 200, 2, &opts);
+        let (incr, ri) = run_sharded(make_shards_ckpt(2, 40, true, true, true), 200, 2, &opts);
+        let full_logs: Vec<_> = full.into_iter().map(|s| s.log).collect();
+        let incr_logs: Vec<_> = incr.into_iter().map(|s| s.log).collect();
+        assert_eq!(incr_logs, cons_logs, "incremental ckpts must preserve bit-identity");
+        assert_eq!(full_logs, cons_logs);
+        assert_eq!(ri.rounds, rf.rounds, "ckpt kind must not steer the protocol");
+        assert_eq!(ri.rollbacks, rf.rollbacks);
+        assert_eq!(ri.speculated_events, rf.speculated_events);
+        assert_eq!(rf.checkpoint_bytes, vec![0, 0], "full clones report no journal bytes");
+        assert!(
+            ri.checkpoint_bytes.iter().sum::<u64>() > 0,
+            "journaled spans must report their footprint: {:?}",
+            ri.checkpoint_bytes
+        );
+        assert!(ri.rollbacks.iter().sum::<u64>() > 0);
+    }
+
     /// Hybrid rollback accounting is itself thread-count invariant: the
-    /// controller sees only per-shard observations.
+    /// controller sees only per-shard observations and the global
+    /// multiple is a pure function of their states.
     #[test]
     fn hybrid_report_is_thread_count_invariant() {
         let opts = PdesOpts { mode: PdesMode::Hybrid, ..Default::default() };
@@ -929,7 +1365,27 @@ mod tests {
         assert_eq!(r1.rounds, r2.rounds);
         assert_eq!(r1.rollbacks, r2.rollbacks);
         assert_eq!(r1.speculated_events, r2.speculated_events);
+        assert_eq!(r1.checkpoint_bytes, r2.checkpoint_bytes);
+        assert_eq!(r1.window_multiple, r2.window_multiple);
         assert_eq!(r1.messages_routed, r2.messages_routed);
+    }
+
+    /// Capping the multiple at 1 keeps speculation to the risk-free
+    /// single-Δ span: no in-window arrival can exist, so rollbacks are
+    /// structurally zero — and the history still matches.
+    #[test]
+    fn single_delta_cap_never_rolls_back() {
+        let (cons, _) =
+            run_sharded(make_shards(2, 40, true, true), 200, 2, &PdesOpts::conservative());
+        let cons_logs: Vec<_> = cons.into_iter().map(|s| s.log).collect();
+        let opts =
+            PdesOpts { mode: PdesMode::Hybrid, window_mult_max: 1, ..Default::default() };
+        let (hyb, rh) = run_sharded(make_shards(2, 40, true, true), 200, 2, &opts);
+        let hyb_logs: Vec<_> = hyb.into_iter().map(|s| s.log).collect();
+        assert_eq!(hyb_logs, cons_logs);
+        assert_eq!(rh.rollbacks, vec![0, 0], "1Δ spans admit no stragglers");
+        assert!(rh.speculated_events.iter().sum::<u64>() > 0);
+        assert_eq!(rh.window_multiple.iter().max().copied().unwrap_or(0), 1);
     }
 
     /// Two-tier routing: a 4-shard ring across 2 racks must behave
@@ -940,7 +1396,7 @@ mod tests {
             run_sharded(make_shards(4, 60, true, true), 200, 2, &PdesOpts::conservative());
         let mesh_logs: Vec<_> = mesh.into_iter().map(|s| s.log).collect();
         for mode in [PdesMode::Conservative, PdesMode::Hybrid] {
-            let opts = PdesOpts { mode, reduce: false, rack_of: vec![0, 0, 1, 1] };
+            let opts = PdesOpts { mode, rack_of: vec![0, 0, 1, 1], ..Default::default() };
             for threads in [1, 4] {
                 let (racked, rr) = run_sharded(make_shards(4, 60, true, true), 200, threads, &opts);
                 let logs: Vec<_> = racked.into_iter().map(|s| s.log).collect();
@@ -955,8 +1411,12 @@ mod tests {
     #[test]
     fn reduce_hook_is_deterministic() {
         let run = |threads| {
-            let opts =
-                PdesOpts { mode: PdesMode::Hybrid, reduce: true, rack_of: vec![0, 0, 1, 1] };
+            let opts = PdesOpts {
+                mode: PdesMode::Hybrid,
+                reduce: true,
+                rack_of: vec![0, 0, 1, 1],
+                ..Default::default()
+            };
             let (shards, _) = run_sharded(make_shards(4, 30, true, true), 200, threads, &opts);
             shards.into_iter().map(|s| s.shared_max).collect::<Vec<_>>()
         };
@@ -964,5 +1424,58 @@ mod tests {
         assert!(base.iter().all(|&m| m > 0), "reduce must have run: {base:?}");
         assert_eq!(base, run(2));
         assert_eq!(base, run(4));
+    }
+
+    /// Pinning is declared best-effort: whatever the platform says, the
+    /// run must complete and stay bit-identical to the unpinned one.
+    #[test]
+    fn pinned_run_matches_unpinned() {
+        let opts = PdesOpts { mode: PdesMode::Hybrid, pin_shards: true, ..Default::default() };
+        let (pinned, rp) = run_sharded(make_shards(2, 40, true, true), 200, 2, &opts);
+        let (plain, rr) = run_sharded(
+            make_shards(2, 40, true, true),
+            200,
+            2,
+            &PdesOpts { mode: PdesMode::Hybrid, ..Default::default() },
+        );
+        let pinned_logs: Vec<_> = pinned.into_iter().map(|s| s.log).collect();
+        let plain_logs: Vec<_> = plain.into_iter().map(|s| s.log).collect();
+        assert_eq!(pinned_logs, plain_logs);
+        assert_eq!(rp.rounds, rr.rounds);
+        assert_eq!(rp.rollbacks, rr.rollbacks);
+    }
+
+    /// Controller escalation dynamics: gate-open rounds double the
+    /// multiple after the saturation threshold, a rollback demotes to 1,
+    /// and a closed gate proposes 0 without losing the learned depth.
+    #[test]
+    fn window_controller_escalates_and_demotes() {
+        let mut ctl = WindowController::default();
+        assert_eq!(ctl.proposed_mult(), 0, "unprimed controllers stay conservative");
+        // Sparse rounds (load ≤ SPARSE_EVENTS) open the gate immediately.
+        ctl.observe_round(0.0, 1, 8);
+        assert_eq!(ctl.proposed_mult(), 1);
+        for _ in 0..WINDOW_SAT_ROUNDS {
+            ctl.observe_round(0.0, 1, 8);
+        }
+        assert_eq!(ctl.proposed_mult(), 2, "saturation must double the multiple");
+        for _ in 0..WINDOW_SAT_ROUNDS {
+            ctl.observe_round(0.0, 1, 8);
+        }
+        assert_eq!(ctl.proposed_mult(), 4);
+        ctl.on_rollback();
+        assert_eq!(ctl.proposed_mult(), 1, "rollback demotes to 1Δ");
+        // Dense, low-slack rounds close the gate entirely.
+        let mut busy = WindowController::default();
+        for _ in 0..20 {
+            busy.observe_round(0.0, 10_000, 8);
+        }
+        assert_eq!(busy.proposed_mult(), 0);
+        // The cap clamps escalation (and 3 is not a power of two).
+        let mut capped = WindowController::default();
+        for _ in 0..50 {
+            capped.observe_round(1.0, 1, 3);
+        }
+        assert_eq!(capped.proposed_mult(), 3);
     }
 }

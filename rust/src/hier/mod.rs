@@ -1678,7 +1678,16 @@ fn simulate_hier_pdes(cfg: &DesConfig, plan: &LevelPlan) -> anyhow::Result<DesRe
     let rack_of: Vec<u32> = (0..shards_n)
         .map(|t| ((u64::from(t) * u64::from(groups)) / u64::from(shards_n)) as u32)
         .collect();
-    let opts = pdes::PdesOpts { mode: cfg.pdes_mode, reduce: false, rack_of };
+    // Hier shards keep the full-clone checkpoint fallback (trait default):
+    // their per-subtree state is small and AF-style write-heavy aggregates
+    // live on the hosting masters, so a journal would buy little.
+    let opts = pdes::PdesOpts {
+        mode: cfg.pdes_mode,
+        rack_of,
+        pin_shards: cfg.pin_shards,
+        window_mult_max: cfg.window_mult_max,
+        ..Default::default()
+    };
     let (shards, report) =
         pdes::run_sharded(shards, lookahead, resolved_des_threads(cfg), &opts);
     Ok(merge_hier_shards(cfg, shards, &report))

@@ -13,7 +13,10 @@ use dca_dls::config::{
     ClusterConfig, DelaySite, ExecutionModel, HierParams, SchedPath, WatermarkMode,
 };
 use dca_dls::coordinator::{self, EngineConfig};
-use dca_dls::des::{pdes::PdesMode, simulate, DesConfig};
+use dca_dls::des::{
+    pdes::{PdesMode, WINDOW_MULT_MAX},
+    simulate, DesConfig,
+};
 use dca_dls::report::figures::{
     fig1_series, run_figure, table2_rows, table3_rows, App, FigureConfig,
 };
@@ -76,12 +79,16 @@ PARALLEL DES CORE (docs/pdes.md)
       partition, conservative or hybrid-optimistic rounds); 0 = auto
       (available parallelism, clamped to the shard count). Results are
       bit-identical to the sequential engine at every thread count.
-      tenants: fans out the --slowdown solo baselines instead (the
-      session loop itself stays sequential; see docs/pdes.md).
-  --des-mode conservative|hybrid   (simulate, hier, metrics-dump)
+      tenants: shards the session over its arbiter domains and fans out
+      the --slowdown solo baselines (docs/tenancy.md).
+  --des-mode conservative|hybrid   (simulate, hier, tenants, metrics-dump)
       round protocol of the parallel core (default hybrid: a per-shard
-      controller opens bounded optimistic windows, with checkpoint/
-      rollback keeping results exact).
+      controller opens bounded multi-Δ windows backed by incremental
+      checkpoints, with rollback keeping results exact). tenants:
+      hybrid deepens the arbiter-epoch windows (needs --des-threads).
+  --pin-shards                 (simulate, hier, tenants, metrics-dump)
+      best-effort core pinning of the shard workers (sched_setaffinity;
+      no-op where unsupported). Never affects results.
   --master-lockfree            (simulate --model hier, hier)
       fused master-tier grants through the staged-chunk MPSC fast path
 
@@ -167,6 +174,7 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 --des-threads N          sharded PDES event loop (bit-identical;\n\
              \x20                          0 = auto)\n\
              \x20 --des-mode conservative|hybrid   round protocol (default hybrid)\n\
+             \x20 --pin-shards             best-effort core pinning of shard workers\n\
              \x20 --master-lockfree        fused master-tier grants (--model hier,\n\
              \x20                          needs a lock-free path, excludes --adaptive)\n\
              \n\
@@ -212,6 +220,7 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 --des-threads N          sharded PDES event loop (bit-identical;\n\
              \x20                          0 = auto)\n\
              \x20 --des-mode conservative|hybrid   round protocol (default hybrid)\n\
+             \x20 --pin-shards             best-effort core pinning of shard workers\n\
              \x20 --master-lockfree        fused master-tier grants (needs a\n\
              \x20                          lock-free path, excludes --adaptive)\n\
              \n\
@@ -294,10 +303,14 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 --policy fair|priority|fifo\n\
              \x20 --lockfree | --sched-path P\n\
              \x20 --slowdown      re-run each tenant solo, report slowdown vs solo\n\
-             \x20 --des-threads N fan the --slowdown solo baselines out over N\n\
-             \x20                 worker threads (0 = auto; identical report, less\n\
-             \x20                 wall time — the session loop itself is sequential,\n\
-             \x20                 see docs/pdes.md)\n\
+             \x20 --des-threads N shard the session over its arbiter domains and\n\
+             \x20                 fan the --slowdown solo baselines out over N\n\
+             \x20                 worker threads (0 = auto; bit-identical report,\n\
+             \x20                 less wall time — docs/tenancy.md)\n\
+             \x20 --des-mode conservative|hybrid   epoch protocol of the sharded\n\
+             \x20                 loop (hybrid deepens the arbiter-epoch windows;\n\
+             \x20                 needs --des-threads > 1 or 0 = auto)\n\
+             \x20 --pin-shards    best-effort core pinning of shard workers\n\
              \x20 --json FILE     write the session report as JSON\n\
              \n\
              OBSERVABILITY\n\
@@ -348,6 +361,7 @@ fn help_section(cmd: &str) -> Option<&'static str> {
              \x20 --des-threads N  worker threads of the PDES sampler cell\n\
              \x20                (default 2; 0 = auto; 1 leaves dcadls_pdes_* at zero)\n\
              \x20 --des-mode conservative|hybrid   round protocol (default hybrid)\n\
+             \x20 --pin-shards   best-effort core pinning of the sampler's shards\n\
              \x20 --master-lockfree  fuse the sampler's root tier\n\
              \n\
              EXAMPLE\n\
@@ -758,9 +772,10 @@ fn reject_pdes_flags(flags: &HashMap<String, String>, cmd: &str) -> anyhow::Resu
     anyhow::ensure!(
         !(flags.contains_key("des-threads")
             || flags.contains_key("des-mode")
+            || flags.contains_key("pin-shards")
             || flags.contains_key("master-lockfree")),
-        "--des-threads/--des-mode/--master-lockfree are not supported by `{cmd}`; \
-         use `simulate`, `hier`, `metrics-dump`, or `tenants` (--des-threads only)"
+        "--des-threads/--des-mode/--pin-shards/--master-lockfree are not supported by \
+         `{cmd}`; use `simulate`, `hier`, `metrics-dump`, or `tenants`"
     );
     Ok(())
 }
@@ -1115,7 +1130,8 @@ fn cmd_metrics_dump(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         IterationCost::Constant(1e-5),
     )
     .with_threads(des_threads)
-    .with_pdes_mode(des_mode_of(flags)?);
+    .with_pdes_mode(des_mode_of(flags)?)
+    .with_pin_shards(flags.contains_key("pin-shards"));
     des_cfg.hier = des_hier;
     des_cfg.sched_path = sched_path_of(flags)?;
     let r = simulate(&des_cfg)?;
@@ -1155,6 +1171,8 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         stream_interval: stream.as_ref().map_or(0.0, |(_, s)| *s),
         des_threads: des_threads_of(flags)?,
         pdes_mode: des_mode_of(flags)?,
+        pin_shards: flags.contains_key("pin-shards"),
+        window_mult_max: WINDOW_MULT_MAX,
         params: LoopParams::new(n, cluster.total_ranks()),
         technique: tech,
         model,
@@ -1284,6 +1302,8 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             stream_interval,
             des_threads,
             pdes_mode: des_mode,
+            pin_shards: flags.contains_key("pin-shards"),
+            window_mult_max: WINDOW_MULT_MAX,
             params: LoopParams::new(n, cluster.total_ranks()),
             technique: tech,
             model,
@@ -1416,6 +1436,8 @@ fn cmd_hier(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                                 .field("window_ns", p.window_ns)
                                 .field("rollbacks", p.rollbacks)
                                 .field("speculated_events", p.speculated_events)
+                                .field("checkpoint_bytes", p.checkpoint_bytes)
+                                .field("window_multiple", p.window_multiple)
                                 .field("horizon_stalls", p.horizon_stalls)
                                 .field("mailbox_depth_max", p.mailbox_depth_max),
                         );
@@ -1614,9 +1636,21 @@ fn cmd_tenants(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         !flags.contains_key("master-lockfree"),
         "--master-lockfree applies to the hierarchical DES (`simulate --model hier`, `hier`)"
     );
-    // `--des-threads` fans the `--slowdown` solo baselines out; the shared
-    // session itself keeps one global virtual-time order.
-    cfg = cfg.with_des_threads(des_threads_of(flags)?);
+    // `--des-threads` shards the session over its arbiter domains and fans
+    // the `--slowdown` solo baselines out — bit-identical report either way
+    // (docs/tenancy.md). `--des-mode hybrid` only changes the epoch windows
+    // of the sharded loop, so it demands actual shard workers.
+    let des_threads = des_threads_of(flags)?;
+    if let Some(raw) = flags.get("des-mode") {
+        anyhow::ensure!(
+            des_mode_of(flags)? != PdesMode::Hybrid || des_threads != 1,
+            "bad --des-mode '{raw}' (needs --des-threads > 1, or 0 = auto)"
+        );
+    }
+    cfg = cfg
+        .with_des_threads(des_threads)
+        .with_des_mode(des_mode_of(flags)?)
+        .with_pin_shards(flags.contains_key("pin-shards"));
     let stream = stream_flags(flags)?;
     if let Some((_, s)) = &stream {
         cfg = cfg.with_stream_interval(*s);
@@ -1641,6 +1675,20 @@ fn cmd_tenants(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         "makespan = {:.4}s   events = {}   messages = {}   Jain fairness = {:.3}",
         outcome.makespan, outcome.events, outcome.messages, outcome.jain_fairness
     );
+    if let Some(p) = &outcome.pdes {
+        println!(
+            "PDES: {} shards × {} threads, {} mode, {} arbiter epochs, \
+             epoch {}ns, window multiple ≤ {}, {} speculated events, {} rollbacks",
+            p.shards,
+            p.threads,
+            p.mode.as_str(),
+            p.arbiter_epochs,
+            p.lookahead_ns,
+            p.window_multiple.max(1),
+            p.speculated_events,
+            p.rollbacks,
+        );
+    }
     if let Some((_, mean)) = &slowdowns {
         println!("mean slowdown vs solo = {mean:.3}");
     }

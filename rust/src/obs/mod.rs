@@ -299,6 +299,15 @@ pub struct EngineMetrics {
     pub pdes_speculated_events: Arc<Counter>,
     /// `dcadls_pdes_window_ns` — optimistic window bound of the last run.
     pub pdes_window_ns: Arc<Gauge>,
+    /// `dcadls_pdes_checkpoint_bytes` — incremental-checkpoint journal
+    /// bytes retired (committed or replayed).
+    pub pdes_checkpoint_bytes: Arc<Counter>,
+    /// `dcadls_pdes_window_multiple` — deepest realized speculation
+    /// window of the last run, in lookahead multiples.
+    pub pdes_window_multiple: Arc<Gauge>,
+    /// `dcadls_pdes_arbiter_epochs_total` — demand-summary exchanges of
+    /// sharded multi-tenant session loops.
+    pub pdes_arbiter_epochs: Arc<Counter>,
 }
 
 impl EngineMetrics {
@@ -359,6 +368,21 @@ impl EngineMetrics {
                 "Optimistic window bound of the most recent sharded run, ns \
 (0 = conservative).",
             ),
+            pdes_checkpoint_bytes: r.counter(
+                "dcadls_pdes_checkpoint_bytes",
+                "Incremental-checkpoint journal bytes retired by speculating \
+shards (committed or replayed); full-clone fallbacks contribute 0.",
+            ),
+            pdes_window_multiple: r.gauge(
+                "dcadls_pdes_window_multiple",
+                "Deepest realized speculation window of the most recent \
+sharded run, in lookahead multiples (0 = never speculated).",
+            ),
+            pdes_arbiter_epochs: r.counter(
+                "dcadls_pdes_arbiter_epochs_total",
+                "Demand-summary barrier exchanges performed by sharded \
+multi-tenant session loops.",
+            ),
         }
     }
 
@@ -390,6 +414,9 @@ impl EngineMetrics {
         self.pdes_rollbacks.add(p.rollbacks);
         self.pdes_speculated_events.add(p.speculated_events);
         self.pdes_window_ns.set(p.window_ns as f64);
+        self.pdes_checkpoint_bytes.add(p.checkpoint_bytes);
+        self.pdes_window_multiple.set(p.window_multiple as f64);
+        self.pdes_arbiter_epochs.add(p.arbiter_epochs);
     }
 }
 
@@ -524,12 +551,15 @@ mod tests {
             mailbox_depth_max: mailbox,
             rollbacks,
             speculated_events: spec,
+            checkpoint_bytes: 100 * rollbacks,
+            window_multiple: rollbacks.min(8),
+            arbiter_epochs: rounds / 2,
         };
         let r = MetricsRegistry::new();
         let m = EngineMetrics::register(&r);
         m.on_pdes(&summary(10, 2, 7, 3, 40, 1_000));
-        // Lower mailbox mark must not regress the gauge; the window gauge
-        // tracks the latest run.
+        // Lower mailbox mark must not regress the gauge; the window and
+        // window-multiple gauges track the latest run.
         m.on_pdes(&summary(5, 0, 3, 1, 10, 500));
         assert_eq!(m.pdes_rounds.get(), 15);
         assert_eq!(m.pdes_horizon_stalls.get(), 2);
@@ -537,6 +567,9 @@ mod tests {
         assert_eq!(m.pdes_rollbacks.get(), 4);
         assert_eq!(m.pdes_speculated_events.get(), 50);
         assert!((m.pdes_window_ns.get() - 500.0).abs() < 1e-12);
+        assert_eq!(m.pdes_checkpoint_bytes.get(), 400);
+        assert!((m.pdes_window_multiple.get() - 1.0).abs() < 1e-12);
+        assert_eq!(m.pdes_arbiter_epochs.get(), 7);
         let text = r.render_prometheus();
         assert!(text.contains("dcadls_pdes_rounds_total 15"));
         assert!(text.contains("dcadls_pdes_horizon_stalls_total 2"));
@@ -544,6 +577,9 @@ mod tests {
         assert!(text.contains("dcadls_pdes_rollbacks_total 4"));
         assert!(text.contains("dcadls_pdes_speculated_events_total 50"));
         assert!(text.contains("dcadls_pdes_window_ns 500"));
+        assert!(text.contains("dcadls_pdes_checkpoint_bytes 400"));
+        assert!(text.contains("dcadls_pdes_window_multiple 1"));
+        assert!(text.contains("dcadls_pdes_arbiter_epochs_total 7"));
     }
 
     #[test]

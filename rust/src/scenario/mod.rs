@@ -419,6 +419,17 @@ pub fn explain(sc: &Scenario) -> String {
                 cfg.sched_path.name(),
                 if *slowdown { ", with solo slowdown re-runs" } else { "" },
             ));
+            if cfg.des_threads != 1 {
+                out.push_str(&format!(
+                    "  substrate sharded session loop — {} workers, {} epochs\n",
+                    if cfg.des_threads == 0 {
+                        "auto".to_string()
+                    } else {
+                        cfg.des_threads.to_string()
+                    },
+                    cfg.des_mode.as_str(),
+                ));
+            }
         }
     }
     let e = &sc.expect;
@@ -521,6 +532,17 @@ pub fn run_scenario(sc: &Scenario, stream_interval: f64) -> anyhow::Result<RunRe
                 .field("jain_fairness", outcome.jain_fairness);
             if let Some(mean) = mean {
                 observed = observed.field("mean_slowdown", mean);
+            }
+            if let Some(p) = &outcome.pdes {
+                observed = observed.field(
+                    "pdes",
+                    Json::obj()
+                        .field("shards", p.shards)
+                        .field("threads", p.threads)
+                        .field("mode", p.mode.as_str())
+                        .field("arbiter_epochs", p.arbiter_epochs)
+                        .field("rollbacks", p.rollbacks),
+                );
             }
             (observed, outcome.stream)
         }

@@ -150,6 +150,55 @@ impl Arbiter {
     pub fn granted(&self, t: TenantId) -> u64 {
         self.accounts[t as usize].granted
     }
+
+    /// This arbiter's per-tenant demand rows for a sharded session's
+    /// epoch exchange (ids are the arbiter's own — the session driver
+    /// remaps them to global tenant ids before merging).
+    pub fn demand_summary(&self) -> Vec<DemandSummary> {
+        self.accounts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| DemandSummary {
+                id: i as TenantId,
+                granted: a.granted,
+                inflight: a.inflight,
+                est: a.est,
+            })
+            .collect()
+    }
+
+    /// Absorb the merged session-wide demand summary at an epoch barrier
+    /// (rows already remapped back to this arbiter's local ids; foreign
+    /// domains' rows filtered out by the driver). Every pick between two
+    /// barriers is a pure function of the merged summary restricted to
+    /// the eligible tenants: under the arbiter-domain partition each row
+    /// here *originated* in this arbiter, so absorbing it is the identity
+    /// — asserted, which is exactly the determinism argument for running
+    /// domains in parallel.
+    pub fn sync_epoch(&mut self, merged: &[DemandSummary]) {
+        for row in merged {
+            let a = &mut self.accounts[row.id as usize];
+            debug_assert_eq!(
+                (a.granted, a.inflight, a.est),
+                (row.granted, row.inflight, row.est),
+                "epoch summary diverged from the owning arbiter's account"
+            );
+            a.granted = row.granted;
+            a.inflight = row.inflight;
+            a.est = row.est;
+        }
+    }
+}
+
+/// One tenant's arbitration demand at an epoch boundary — the unit the
+/// sharded session loop exchanges at its barrier so every arbiter
+/// decision is a pure function of the merged session-wide summary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DemandSummary {
+    pub id: TenantId,
+    pub granted: u64,
+    pub inflight: u64,
+    pub est: u64,
 }
 
 #[cfg(test)]
@@ -205,6 +254,28 @@ mod tests {
         f.on_grant(1, 1_000);
         assert_eq!(f.pick(0..2), Some(1));
         assert_eq!(f.pick(std::iter::once(0)), Some(0));
+    }
+
+    #[test]
+    fn epoch_summary_round_trips_and_preserves_picks() {
+        // The demand summary is a faithful snapshot: exchanging it at a
+        // barrier and absorbing it back leaves the pick sequence of a
+        // twin arbiter bit-identical — the sharded session loop's
+        // determinism witness.
+        let mut a = arb(ArbitrationPolicy::FairShare, 3);
+        for _ in 0..5 {
+            let t = a.pick(0..3).unwrap();
+            a.on_grant(t, 7 + t as u64);
+        }
+        let rows = a.demand_summary();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[1].id, 1);
+        let mut b = a.clone();
+        b.sync_epoch(&rows);
+        a.sync_epoch(&rows);
+        for _ in 0..6 {
+            assert_eq!(a.pick(0..3), b.pick(0..3));
+        }
     }
 
     #[test]

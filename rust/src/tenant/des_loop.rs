@@ -22,10 +22,13 @@
 //! pushed on ranks attached to more than one tenant.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
 
 use crate::config::{ClusterConfig, SchedPath};
 use crate::des::heap::{ns, secs, EventHeap};
-use crate::des::{min_latency_ns, DesResult};
+use crate::des::pdes::{self, PdesMode};
+use crate::des::{min_latency_ns, DesResult, PdesSummary};
 use crate::metrics::LoopStats;
 use crate::obs::stream::{self, IntervalSample, Sampler};
 use crate::report::json::Json;
@@ -34,7 +37,7 @@ use crate::substrate::delay::InjectedDelay;
 use crate::substrate::topology::Topology;
 use crate::techniques::{LoopParams, Technique};
 
-use super::arbiter::{Arbiter, ArbitrationPolicy};
+use super::arbiter::{Arbiter, ArbitrationPolicy, DemandSummary};
 use super::placement::Placement;
 use super::{TenantId, TenantRegistry, TenantSpec, TenantState};
 
@@ -61,15 +64,26 @@ pub struct SessionConfig {
     /// (`--stream-metrics`); 0 disables streaming — see
     /// `docs/metrics-schema.md` and [`SessionOutcome::stream`].
     pub stream_interval: f64,
-    /// Worker threads for the `--slowdown` solo-baseline fan-out
-    /// ([`session_slowdowns`]); 0 = auto (the machine's available
-    /// parallelism). The session simulation itself always runs on one
-    /// global virtual-time order — tenants couple through the shared
-    /// arbiters at every event, so there is no shard boundary with a
-    /// nonzero lookahead to split on (see docs/pdes.md);
-    /// only the independent solo re-runs parallelize. The report is
+    /// Worker threads; 0 = auto (the machine's available parallelism).
+    /// With > 1 thread (and streaming off) the session itself shards:
+    /// tenants are partitioned into **arbiter domains** — connected
+    /// components of the placement-overlap graph — and each domain runs
+    /// its own event loop, coupled to the rest of the session only at
+    /// epoch barriers where the domains exchange per-tenant demand
+    /// summaries (docs/tenancy.md). The same value also fans out the
+    /// `--slowdown` solo baselines ([`session_slowdowns`]). The report is
     /// bit-identical for every value.
     pub des_threads: u32,
+    /// Epoch protocol of the sharded loop ([`PdesMode`]): `Conservative`
+    /// keeps every epoch one base window; `Hybrid` lets each domain's
+    /// window controller deepen epochs (fewer barriers) when its slack
+    /// saturates. Results are bit-identical in both modes; ignored on the
+    /// sequential path.
+    pub des_mode: PdesMode,
+    /// Best-effort pin of each sharded-session worker to its own core
+    /// stripe (`sched_setaffinity`; no-op where unsupported). Never
+    /// affects results.
+    pub pin_shards: bool,
     pub tenants: Vec<TenantSpec>,
 }
 
@@ -86,15 +100,29 @@ impl SessionConfig {
             record_grant_trace: false,
             stream_interval: 0.0,
             des_threads: 1,
+            des_mode: PdesMode::default(),
+            pin_shards: false,
             tenants: vec![],
         }
     }
 
-    /// Fan the `--slowdown` solo baselines out over `n` worker threads
-    /// (1 = fully sequential, 0 = auto; the session run itself is
-    /// unaffected).
+    /// Run the session loop sharded over `n` worker threads (1 = fully
+    /// sequential, 0 = auto) and fan the `--slowdown` solo baselines out
+    /// over the same count. Bit-identical for every value.
     pub fn with_des_threads(mut self, n: u32) -> Self {
         self.des_threads = n;
+        self
+    }
+
+    /// Epoch protocol of the sharded loop (conservative | hybrid).
+    pub fn with_des_mode(mut self, mode: PdesMode) -> Self {
+        self.des_mode = mode;
+        self
+    }
+
+    /// Best-effort core pinning for the sharded-session workers.
+    pub fn with_pin_shards(mut self, pin: bool) -> Self {
+        self.pin_shards = pin;
         self
     }
 
@@ -172,13 +200,35 @@ pub struct SessionOutcome {
     /// records, virtual-time order) when
     /// [`SessionConfig::stream_interval`] > 0; empty otherwise.
     pub stream: Vec<Json>,
+    /// Sharded-loop accounting when the session ran with
+    /// `des_threads > 1` (streaming off); `None` on the sequential loop.
+    /// `rounds`/`arbiter_epochs` count the demand-exchange barriers,
+    /// `lookahead_ns` is the base epoch window, and `rollbacks` is 0 by
+    /// construction — the arbiter-domain partition leaves nothing to
+    /// misspeculate across shards (docs/tenancy.md).
+    pub pdes: Option<PdesSummary>,
 }
 
-/// Simulate a session. Deterministic: same config ⇒ identical outcome.
+/// Simulate a session. Deterministic: same config ⇒ identical outcome,
+/// at every `des_threads` value and in both epoch modes.
 pub fn simulate_session(cfg: &SessionConfig) -> anyhow::Result<SessionOutcome> {
+    let threads = resolve_threads(cfg.des_threads);
+    if threads > 1 && cfg.stream_interval <= 0.0 {
+        return simulate_session_sharded(cfg, threads);
+    }
     let mut sim = TenantSim::new(cfg)?;
     sim.run();
     sim.into_outcome()
+}
+
+/// `des_threads` semantics shared by the session loop and the slowdown
+/// fan-out: 0 = the machine's available parallelism.
+fn resolve_threads(n: u32) -> usize {
+    if n == 0 {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    } else {
+        n as usize
+    }
 }
 
 /// [`simulate_session`] plus per-tenant slowdowns: each tenant is re-run
@@ -218,16 +268,14 @@ pub fn session_slowdowns(
             record_assignments: false,
             record_exec_spans: false,
             record_grant_trace: false,
+            // Solo baselines are themselves fanned out below — keep each
+            // one on the sequential loop instead of nesting shard workers.
+            des_threads: 1,
             ..cfg.clone()
         };
         Ok(simulate_session(&solo_cfg)?.tenants[0].turnaround)
     };
-    let resolved = if cfg.des_threads == 0 {
-        std::thread::available_parallelism().map_or(1, |n| n.get())
-    } else {
-        cfg.des_threads as usize
-    };
-    let threads = resolved.clamp(1, firsts.len().max(1));
+    let threads = resolve_threads(cfg.des_threads).clamp(1, firsts.len().max(1));
     let solos: Vec<f64> = if threads > 1 {
         let next = std::sync::atomic::AtomicUsize::new(0);
         let mut slots: Vec<Option<anyhow::Result<f64>>> = Vec::new();
@@ -272,9 +320,399 @@ pub fn session_slowdowns(
 }
 
 // ---------------------------------------------------------------------------
+// the sharded session loop (arbiter domains + epoch barriers)
+
+/// Base epoch window of the sharded session loop, in units of the
+/// cluster's smallest latency class. Purely a barrier-frequency lever:
+/// domains are coupled only through the demand-summary exchange, so any
+/// epoch length produces a bit-identical outcome — longer epochs just
+/// amortize more events per barrier.
+pub const SESSION_EPOCH_MULT: u64 = 512;
+
+/// Arbiter domains: connected components of the tenant placement-overlap
+/// graph, found by union-find over per-rank attachment. Two tenants that
+/// share any rank also share every arbitration decision on that rank, so
+/// they must live in one domain; tenants in different components never
+/// appear in one `eligible` set, and the arbiter's per-tenant accounts
+/// make `pick` a pure function of the eligible tenants' own rows — the
+/// domains are exactly the independent units of the session.
+///
+/// Returns tenant-index groups, each ascending, ordered by smallest
+/// member (so single-domain sessions replay the sequential tenant order).
+fn arbiter_domains(cfg: &SessionConfig) -> Vec<Vec<usize>> {
+    fn find(parent: &mut [usize], mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    let n = cfg.tenants.len();
+    let cluster_ranks = cfg.cluster.total_ranks();
+    let mut parent: Vec<usize> = (0..n).collect();
+    let mut owner: Vec<Option<usize>> = vec![None; cluster_ranks as usize];
+    for (i, spec) in cfg.tenants.iter().enumerate() {
+        // Same block math as `TenantSim::new`; a spec it would reject is
+        // caught by the validation pass before sharding ever starts.
+        let Ok(p) = Placement::block(spec.offset, spec.span, cluster_ranks) else {
+            return vec![(0..n).collect()];
+        };
+        for &r in p.ranks() {
+            match owner[r as usize] {
+                None => owner[r as usize] = Some(i),
+                Some(j) => {
+                    let (a, b) = (find(&mut parent, i), find(&mut parent, j));
+                    if a != b {
+                        parent[a.max(b)] = a.min(b);
+                    }
+                }
+            }
+        }
+    }
+    let mut groups: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+    for i in 0..n {
+        let root = find(&mut parent, i);
+        groups.entry(root).or_default().push(i);
+    }
+    groups.into_values().collect()
+}
+
+/// One arbiter domain's runtime in the sharded loop.
+struct DomainRt<'a> {
+    sim: TenantSim<'a>,
+    /// Local → global tenant ids (ascending).
+    map: Vec<usize>,
+    /// The PDES window controller, reused verbatim: here it proposes how
+    /// many base windows the next epoch should span (hybrid mode).
+    ctl: pdes::WindowController,
+    /// Events executed past the base window of a deepened epoch.
+    speculated: u64,
+    /// Deepest realized epoch multiple (0 = never deepened).
+    mult_max: u64,
+}
+
+/// Barrier-shared state of one sharded-session run.
+struct EpochShared {
+    barrier: Barrier,
+    /// Per-domain next event time (`u64::MAX` = drained).
+    next_at: Vec<AtomicU64>,
+    /// Per-domain window-controller proposal (0 = stay conservative).
+    proposal: Vec<AtomicU64>,
+    /// Leader-computed epoch geometry.
+    base_h: AtomicU64,
+    horizon: AtomicU64,
+    mult: AtomicU64,
+    done: AtomicBool,
+    epochs: AtomicU64,
+    /// Per-domain demand rows, global tenant ids.
+    demands: Vec<Mutex<Vec<(u32, DemandSummary)>>>,
+    /// The merged session-wide summary, sorted by global tenant id.
+    merged: Mutex<Vec<(u32, DemandSummary)>>,
+}
+
+/// The sharded multi-tenant session loop. Every epoch runs the same
+/// exchange: (1) each domain publishes its event frontier, its window
+/// proposal and its per-tenant demand summary; (2) the barrier leader
+/// computes the session GVT, the epoch window (deepened in hybrid mode by
+/// the minimum controller proposal) and the merged summary; (3) every
+/// domain absorbs the merged summary into its arbiter and advances to the
+/// horizon. Cross-shard rollbacks are 0 by construction — the domain
+/// partition leaves no arbitration coupling to misspeculate.
+fn simulate_session_sharded(
+    cfg: &SessionConfig,
+    threads: usize,
+) -> anyhow::Result<SessionOutcome> {
+    // Validate exactly like the sequential path (identical error shape),
+    // then shard.
+    drop(TenantSim::new(cfg)?);
+    let domains = arbiter_domains(cfg);
+    let d_count = domains.len();
+    let workers = threads.min(d_count).max(1);
+    let epoch_base = SESSION_EPOCH_MULT * min_latency_ns(&cfg.cluster).max(1);
+    let mult_cap = pdes::WINDOW_MULT_MAX;
+    let subcfgs: Vec<SessionConfig> = domains
+        .iter()
+        .map(|d| SessionConfig {
+            tenants: d.iter().map(|&i| cfg.tenants[i].clone()).collect(),
+            stream_interval: 0.0,
+            des_threads: 1,
+            ..cfg.clone()
+        })
+        .collect();
+    let mut rts: Vec<Mutex<DomainRt>> = Vec::with_capacity(d_count);
+    for (d, sub) in subcfgs.iter().enumerate() {
+        let mut sim = TenantSim::new(sub)?;
+        sim.bootstrap();
+        rts.push(Mutex::new(DomainRt {
+            sim,
+            map: domains[d].clone(),
+            ctl: pdes::WindowController::default(),
+            speculated: 0,
+            mult_max: 0,
+        }));
+    }
+    let shared = EpochShared {
+        barrier: Barrier::new(workers),
+        next_at: (0..d_count).map(|_| AtomicU64::new(u64::MAX)).collect(),
+        proposal: (0..d_count).map(|_| AtomicU64::new(0)).collect(),
+        base_h: AtomicU64::new(0),
+        horizon: AtomicU64::new(0),
+        mult: AtomicU64::new(1),
+        done: AtomicBool::new(false),
+        epochs: AtomicU64::new(0),
+        demands: (0..d_count).map(|_| Mutex::new(Vec::new())).collect(),
+        merged: Mutex::new(Vec::new()),
+    };
+    std::thread::scope(|s| {
+        for wid in 0..workers {
+            let shared = &shared;
+            let rts = &rts;
+            s.spawn(move || {
+                if cfg.pin_shards {
+                    pdes::pin_current_thread(wid, workers);
+                }
+                let mine: Vec<usize> = (wid..d_count).step_by(workers).collect();
+                loop {
+                    // Phase 1: publish frontier, proposal and demand rows.
+                    for &d in &mine {
+                        let rt = rts[d].lock().unwrap();
+                        shared.next_at[d]
+                            .store(rt.sim.next_at().unwrap_or(u64::MAX), Ordering::Relaxed);
+                        shared.proposal[d].store(rt.ctl.proposed_mult(), Ordering::Relaxed);
+                        let rows: Vec<(u32, DemandSummary)> = rt
+                            .sim
+                            .arbiter
+                            .demand_summary()
+                            .into_iter()
+                            .map(|row| (rt.map[row.id as usize] as u32, row))
+                            .collect();
+                        *shared.demands[d].lock().unwrap() = rows;
+                    }
+                    if shared.barrier.wait().is_leader() {
+                        // Leader: GVT, epoch window, merged summary.
+                        let gvt = shared
+                            .next_at
+                            .iter()
+                            .map(|a| a.load(Ordering::Relaxed))
+                            .min()
+                            .unwrap_or(u64::MAX);
+                        if gvt == u64::MAX {
+                            shared.done.store(true, Ordering::Relaxed);
+                        } else {
+                            let mult = if cfg.des_mode == PdesMode::Hybrid {
+                                shared
+                                    .proposal
+                                    .iter()
+                                    .map(|a| a.load(Ordering::Relaxed))
+                                    .min()
+                                    .unwrap_or(0)
+                                    .max(1)
+                            } else {
+                                1
+                            };
+                            shared.base_h.store(gvt.saturating_add(epoch_base), Ordering::Relaxed);
+                            shared.horizon.store(
+                                gvt.saturating_add(epoch_base.saturating_mul(mult)),
+                                Ordering::Relaxed,
+                            );
+                            shared.mult.store(mult, Ordering::Relaxed);
+                            let mut merged: Vec<(u32, DemandSummary)> = Vec::new();
+                            for dm in &shared.demands {
+                                merged.extend(dm.lock().unwrap().iter().copied());
+                            }
+                            merged.sort_unstable_by_key(|&(g, _)| g);
+                            *shared.merged.lock().unwrap() = merged;
+                            shared.epochs.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    shared.barrier.wait();
+                    if shared.done.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // Phase 2: absorb the merged summary, advance the epoch.
+                    let base_h = shared.base_h.load(Ordering::Relaxed);
+                    let horizon = shared.horizon.load(Ordering::Relaxed);
+                    let mult = shared.mult.load(Ordering::Relaxed);
+                    let merged = shared.merged.lock().unwrap();
+                    for &d in &mine {
+                        let mut rt = rts[d].lock().unwrap();
+                        // The epoch's arbitration base is the merged
+                        // summary restricted to the domain's tenants — a
+                        // pure function of the exchange (`sync_epoch`
+                        // asserts it matches the local account book).
+                        let local: Vec<DemandSummary> = merged
+                            .iter()
+                            .filter_map(|&(g, row)| {
+                                rt.map
+                                    .binary_search(&(g as usize))
+                                    .ok()
+                                    .map(|li| DemandSummary { id: li as u32, ..row })
+                            })
+                            .collect();
+                        rt.sim.arbiter.sync_epoch(&local);
+                        let mut total = rt.sim.advance_until(base_h);
+                        if mult > 1 {
+                            let spec = rt.sim.advance_until(horizon);
+                            rt.speculated += spec;
+                            rt.mult_max = rt.mult_max.max(mult);
+                            total += spec;
+                        }
+                        rt.ctl.observe_round(1.0, total, mult_cap);
+                    }
+                    drop(merged);
+                }
+            });
+        }
+    });
+    let epochs = shared.epochs.load(Ordering::Relaxed);
+    let mut speculated = 0u64;
+    let mut mult_max = 0u64;
+    let mut sims = Vec::with_capacity(d_count);
+    for rt in rts {
+        let rt = rt.into_inner().unwrap();
+        speculated += rt.speculated;
+        mult_max = mult_max.max(rt.mult_max);
+        sims.push(rt.sim);
+    }
+    let summary = PdesSummary {
+        shards: d_count as u32,
+        threads: workers as u32,
+        mode: cfg.des_mode,
+        rounds: epochs,
+        lookahead_ns: epoch_base,
+        window_ns: if cfg.des_mode == PdesMode::Hybrid { epoch_base } else { 0 },
+        horizon_stalls: 0,
+        mailbox_depth_max: 0,
+        rollbacks: 0,
+        speculated_events: speculated,
+        checkpoint_bytes: 0,
+        window_multiple: mult_max,
+        arbiter_epochs: epochs,
+    };
+    merge_outcomes(cfg, &domains, sims, summary)
+}
+
+/// Stitch per-domain outcomes back into one session outcome: remap local
+/// tenant ids to global, patch the session-wide event total, rebuild the
+/// registry by replaying each tenant's lifecycle, k-way-merge the grant
+/// trace by grant time, and recompute the Jain index over the merged
+/// outcomes in global id order (bit-identical to the sequential loop —
+/// only the grant-trace order of *simultaneous* cross-domain grants may
+/// permute, see docs/tenancy.md).
+fn merge_outcomes(
+    cfg: &SessionConfig,
+    domains: &[Vec<usize>],
+    sims: Vec<TenantSim>,
+    summary: PdesSummary,
+) -> anyhow::Result<SessionOutcome> {
+    let n = cfg.tenants.len();
+    let cluster_ranks = cfg.cluster.total_ranks();
+    let mut events = 0u64;
+    let mut messages = 0u64;
+    let mut makespan = 0.0f64;
+    let mut tenants: Vec<Option<TenantOutcome>> = (0..n).map(|_| None).collect();
+    let mut exec_spans: Vec<Vec<ExecSpan>> = if cfg.record_exec_spans {
+        vec![Vec::new(); cluster_ranks as usize]
+    } else {
+        vec![]
+    };
+    let mut traces: Vec<(Vec<(TenantId, u64)>, Vec<u64>)> = Vec::with_capacity(domains.len());
+    for (d, mut sim) in sims.into_iter().enumerate() {
+        let times = std::mem::take(&mut sim.grant_times);
+        let out = sim.into_outcome()?;
+        events += out.events;
+        messages += out.messages;
+        makespan = makespan.max(out.makespan);
+        for (li, mut t) in out.tenants.into_iter().enumerate() {
+            let g = domains[d][li];
+            t.id = g as TenantId;
+            tenants[g] = Some(t);
+        }
+        // Each rank computes for at most one domain, so the per-rank span
+        // lists concatenate without interleaving.
+        for (r, spans) in out.exec_spans.into_iter().enumerate() {
+            if let Some(slot) = exec_spans.get_mut(r) {
+                slot.extend(spans.into_iter().map(|s| ExecSpan {
+                    tenant: domains[d][s.tenant as usize] as TenantId,
+                    ..s
+                }));
+            }
+        }
+        let trace: Vec<(TenantId, u64)> = out
+            .grant_trace
+            .into_iter()
+            .map(|(t, sz)| (domains[d][t as usize] as TenantId, sz))
+            .collect();
+        traces.push((trace, times));
+    }
+    let mut tenants: Vec<TenantOutcome> = tenants
+        .into_iter()
+        .map(|t| t.expect("every tenant lives in exactly one domain"))
+        .collect();
+    // `result.events` is session-wide by contract — patch to the total.
+    for t in &mut tenants {
+        t.result.events = events;
+    }
+    // Registry rebuild: replay each tenant's lifecycle to its recorded
+    // terminal state, in global id order.
+    let mut registry = TenantRegistry::new();
+    for (i, spec) in cfg.tenants.iter().enumerate() {
+        let id = registry.attach(spec.clone());
+        debug_assert_eq!(id as usize, i);
+        let placement = Placement::block(spec.offset, spec.span, cluster_ranks)
+            .map_err(|e| anyhow::anyhow!("tenant '{}': {e}", spec.name))?;
+        registry.place(id, placement)?;
+        match tenants[i].state {
+            TenantState::Completed => {
+                registry.advance(id, TenantState::Running)?;
+                registry.advance(id, TenantState::Draining)?;
+                registry.advance(id, TenantState::Completed)?;
+            }
+            TenantState::Evicted => registry.detach(id)?,
+            other => anyhow::bail!(
+                "tenant '{}' ended non-terminal ({other}) — session deadlock",
+                spec.name
+            ),
+        }
+    }
+    let mut grant_trace = Vec::new();
+    if cfg.record_grant_trace {
+        let mut order: Vec<(u64, usize, usize)> = Vec::new();
+        for (d, (trace, times)) in traces.iter().enumerate() {
+            debug_assert_eq!(trace.len(), times.len());
+            for (i, &at) in times.iter().enumerate() {
+                order.push((at, d, i));
+            }
+        }
+        order.sort_unstable();
+        grant_trace = order.into_iter().map(|(_, d, i)| traces[d].0[i]).collect();
+    }
+    let jain_fairness = jain_index(
+        &tenants
+            .iter()
+            .zip(&cfg.tenants)
+            .filter(|(o, _)| o.turnaround > 0.0 && o.granted_iters > 0)
+            .map(|(o, s)| o.granted_iters as f64 / (s.weight.max(1) as f64 * o.turnaround))
+            .collect::<Vec<_>>(),
+    );
+    Ok(SessionOutcome {
+        tenants,
+        registry,
+        makespan,
+        events,
+        messages,
+        exec_spans,
+        grant_trace,
+        jain_fairness,
+        stream: vec![],
+        pdes: Some(summary),
+    })
+}
+
+// ---------------------------------------------------------------------------
 // events
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 enum Ev {
     /// Tenant arrives (only pushed for arrival > 0).
     Arrive(TenantId),
@@ -300,7 +738,7 @@ enum Ev {
     ChainNext { r: u32 },
 }
 
-#[derive(Debug)]
+#[derive(Debug, Clone, Copy)]
 enum SvcTask {
     GetStep { w: u32 },
     Commit { w: u32, step: u64, size: u64 },
@@ -392,6 +830,9 @@ struct TenantSim<'a> {
     events: u64,
     exec_spans: Vec<Vec<ExecSpan>>,
     grant_trace: Vec<(TenantId, u64)>,
+    /// Virtual grant times parallel to `grant_trace` — the k-way merge key
+    /// of the sharded loop (never exported directly).
+    grant_times: Vec<u64>,
     // observability stream
     sampler: Option<Sampler>,
     stream: Vec<Json>,
@@ -502,6 +943,7 @@ impl<'a> TenantSim<'a> {
             events: 0,
             exec_spans: if cfg.record_exec_spans { vec![Vec::new(); p] } else { vec![] },
             grant_trace: Vec::new(),
+            grant_times: Vec::new(),
             sampler: Sampler::from_interval_s(cfg.stream_interval),
             stream: Vec::new(),
             last_tick_chunks: 0,
@@ -556,6 +998,11 @@ impl<'a> TenantSim<'a> {
     // -- bootstrap ----------------------------------------------------------
 
     fn run(&mut self) {
+        self.bootstrap();
+        self.advance_until(u64::MAX);
+    }
+
+    fn bootstrap(&mut self) {
         // Zero-arrival tenants bootstrap inline (id order) — no Arrive
         // event, keeping single-tenant sessions event-count-identical to
         // the flat Sim. Later arrivals and cancels become events.
@@ -572,15 +1019,34 @@ impl<'a> TenantSim<'a> {
                 self.heap.push(ns(c), Ev::Cancel(t));
             }
         }
-        while let Some((at, ev)) = self.heap.pop() {
+    }
+
+    /// Next pending event time, if any — the sharded loop's GVT input.
+    fn next_at(&self) -> Option<u64> {
+        self.heap.next_at()
+    }
+
+    /// Drain every event strictly before `horizon` (including events
+    /// created inside the window); returns the number processed. The
+    /// sequential loop is `advance_until(u64::MAX)`, and slicing a run
+    /// into epochs pops the exact same event sequence.
+    fn advance_until(&mut self, horizon: u64) -> u64 {
+        let mut n = 0u64;
+        while let Some(at) = self.heap.next_at() {
+            if at >= horizon {
+                break;
+            }
+            let (at, ev) = self.heap.pop().expect("peeked above");
             debug_assert!(at >= self.now, "time went backwards");
             self.now = at;
             self.events += 1;
+            n += 1;
             if self.sampler.is_some() {
                 self.sample_ticks();
             }
             self.dispatch(ev);
         }
+        n
     }
 
     /// One session `interval` record: tenant-summed core counters, the
@@ -989,6 +1455,7 @@ impl<'a> TenantSim<'a> {
         self.arbiter.on_grant(t, a.size);
         if self.cfg.record_grant_trace {
             self.grant_trace.push((t, a.size));
+            self.grant_times.push(self.now);
         }
         if self.tenants[t as usize].queue.is_done() {
             self.note_drained(t);
@@ -1164,6 +1631,7 @@ impl<'a> TenantSim<'a> {
             grant_trace: self.grant_trace,
             jain_fairness,
             stream,
+            pdes: None,
         })
     }
 }

@@ -41,7 +41,7 @@ pub mod spec;
 use crate::techniques::TechniqueKind;
 use crate::workload::IterationCost;
 
-pub use arbiter::{Arbiter, ArbitrationPolicy};
+pub use arbiter::{Arbiter, ArbitrationPolicy, DemandSummary};
 pub use des_loop::{
     session_slowdowns, simulate_session, SessionConfig, SessionOutcome, TenantOutcome,
 };

@@ -22,8 +22,16 @@
 //! [`TenantSpec::new`] defaults (arrive at boot, weight 1, whole cluster,
 //! constant 1 µs iterations). `cost` is the constant per-iteration time in
 //! seconds — richer cost models are API-only.
+//!
+//! Two optional session-level keys pick the execution substrate of the
+//! session loop itself (docs/tenancy.md): `des_threads` (0 = auto, 1 =
+//! sequential, N = shard the session over its arbiter domains —
+//! bit-identical report for every value) and `des_mode`
+//! (`conservative|hybrid`; `hybrid` deepens the sharded loop's
+//! arbiter-epoch windows and therefore needs `des_threads` ≠ 1).
 
 use crate::config::{ClusterConfig, SchedPath};
+use crate::des::pdes::PdesMode;
 use crate::report::json::Json;
 use crate::techniques::TechniqueKind;
 use crate::workload::IterationCost;
@@ -42,6 +50,23 @@ pub fn parse_session_spec(text: &str, cluster: ClusterConfig) -> anyhow::Result<
     if let Some(p) = doc.get("sched_path").and_then(Json::as_str) {
         cfg.sched_path = SchedPath::parse(p)
             .ok_or_else(|| anyhow::anyhow!("unknown sched_path '{p}' (two-phase|lockfree|auto)"))?;
+    }
+    if let Some(t) = doc.get("des_threads") {
+        let t = t
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("bad des_threads (expect a thread count, 0 = auto)"))?;
+        cfg.des_threads = t as u32;
+    }
+    if let Some(m) = doc.get("des_mode") {
+        let raw = m
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("bad des_mode (expect conservative|hybrid)"))?;
+        cfg.des_mode = PdesMode::parse(raw)
+            .ok_or_else(|| anyhow::anyhow!("bad des_mode '{raw}' (expect conservative|hybrid)"))?;
+        anyhow::ensure!(
+            cfg.des_mode != PdesMode::Hybrid || cfg.des_threads != 1,
+            "bad des_mode '{raw}' (needs des_threads > 1, or 0 = auto)"
+        );
     }
     let Some(Json::Arr(entries)) = doc.get("tenants") else {
         anyhow::bail!("session spec needs a \"tenants\" array");
@@ -140,6 +165,19 @@ pub fn render_session_json(
         let mean = if s.is_empty() { 0.0 } else { s.iter().sum::<f64>() / s.len() as f64 };
         doc = doc.field("mean_slowdown", mean);
     }
+    if let Some(p) = &outcome.pdes {
+        doc = doc.field(
+            "pdes",
+            Json::obj()
+                .field("shards", p.shards as f64)
+                .field("threads", p.threads as f64)
+                .field("mode", p.mode.as_str())
+                .field("arbiter_epochs", p.arbiter_epochs as f64)
+                .field("window_multiple", p.window_multiple as f64)
+                .field("speculated_events", p.speculated_events as f64)
+                .field("rollbacks", p.rollbacks as f64),
+        );
+    }
     doc.field("tenants", Json::Arr(tenants)).render()
 }
 
@@ -170,6 +208,37 @@ mod tests {
         assert_eq!(s.name, "tenant-1"); // defaulted name
         assert_eq!((s.priority, s.span), (1, 0));
         assert_eq!(s.cancel_at, Some(0.5));
+    }
+
+    #[test]
+    fn spec_session_des_keys_parse_and_validate() {
+        let cfg = parse_session_spec(
+            r#"{ "des_threads": 4, "des_mode": "hybrid", "tenants": [
+                { "n": 100, "technique": "SS" } ] }"#,
+            ClusterConfig::small(8),
+        )
+        .unwrap();
+        assert_eq!(cfg.des_threads, 4);
+        assert_eq!(cfg.des_mode, PdesMode::Hybrid);
+        // 0 = auto is a legal substrate for hybrid epochs.
+        assert!(parse_session_spec(
+            r#"{ "des_threads": 0, "des_mode": "hybrid", "tenants": [
+                { "n": 100, "technique": "SS" } ] }"#,
+            ClusterConfig::small(8),
+        )
+        .is_ok());
+        // hybrid without shard workers is rejected, same shape as the CLI.
+        let err = parse_session_spec(
+            r#"{ "des_mode": "hybrid", "tenants": [ { "n": 100, "technique": "SS" } ] }"#,
+            ClusterConfig::small(8),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("needs des_threads"), "{err}");
+        assert!(parse_session_spec(
+            r#"{ "des_mode": "wat", "tenants": [ { "n": 100, "technique": "SS" } ] }"#,
+            ClusterConfig::small(8),
+        )
+        .is_err());
     }
 
     #[test]

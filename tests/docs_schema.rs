@@ -199,7 +199,44 @@ fn all_stream_records() -> Vec<Json> {
             .field("horizon_stalls", p.horizon_stalls)
             .field("mailbox_depth_max", p.mailbox_depth_max)
             .field("rollbacks", p.rollbacks)
-            .field("speculated_events", p.speculated_events),
+            .field("speculated_events", p.speculated_events)
+            .field("checkpoint_bytes", p.checkpoint_bytes)
+            .field("window_multiple", p.window_multiple),
+    ));
+
+    // And the session-side summary as `dca-dls tenants --json` emits it,
+    // from a really-sharded session (two disjoint placement blocks ⇒ two
+    // arbiter domains) so the doc's arbiter-epoch row stays pinned to the
+    // sharded session loop.
+    let session = SessionConfig::new(ClusterConfig::small(16))
+        .with_des_threads(2)
+        .admit(
+            TenantSpec::new("left", 3_000, TechniqueKind::Ss)
+                .with_cost(IterationCost::Constant(1e-5))
+                .placed_at(0, 8),
+        )
+        .admit(
+            TenantSpec::new("right", 3_000, TechniqueKind::Gss)
+                .with_cost(IterationCost::Constant(1e-5))
+                .placed_at(8, 8),
+        );
+    let p = simulate_session(&session)
+        .expect("sharded session cell")
+        .pdes
+        .expect("two workers over two domains must shard this session");
+    assert_eq!(p.shards, 2, "two disjoint blocks must form two arbiter domains");
+    assert!(p.arbiter_epochs > 0, "the epoch exchange must actually run");
+    assert_eq!(p.rollbacks, 0, "arbiter domains leave nothing to misspeculate");
+    records.push(Json::obj().field(
+        "pdes",
+        Json::obj()
+            .field("shards", p.shards)
+            .field("threads", p.threads)
+            .field("mode", p.mode.as_str())
+            .field("arbiter_epochs", p.arbiter_epochs)
+            .field("window_multiple", p.window_multiple)
+            .field("speculated_events", p.speculated_events)
+            .field("rollbacks", p.rollbacks),
     ));
 
     records

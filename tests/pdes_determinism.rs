@@ -7,11 +7,16 @@
 //! shard observes.
 
 use dca_dls::config::{ClusterConfig, ExecutionModel, HierParams, SchedPath};
-use dca_dls::des::{pdes::PdesMode, simulate, DesConfig, DesResult};
+use dca_dls::des::{
+    pdes::{PdesMode, WINDOW_MULT_MAX},
+    simulate, DesConfig, DesResult,
+};
 use dca_dls::sched::Assignment;
 use dca_dls::substrate::delay::InjectedDelay;
-use dca_dls::techniques::{CandidateSet, LoopParams, TechniqueKind};
-use dca_dls::tenant::{session_slowdowns, SessionConfig, TenantSpec};
+use dca_dls::techniques::{rnd::splitmix64, CandidateSet, LoopParams, TechniqueKind};
+use dca_dls::tenant::{
+    session_slowdowns, simulate_session, SessionConfig, SessionOutcome, TenantId, TenantSpec,
+};
 use dca_dls::workload::IterationCost;
 
 const THREADS: [u32; 3] = [2, 4, 8];
@@ -260,6 +265,57 @@ fn stream_records_are_thread_count_invariant() {
     }
 }
 
+/// The tentpole cell for multi-Δ speculation: the same adversarial SS
+/// cell as above, now asserting the controller's *depth*. A single-Δ span
+/// provably admits no stragglers (every in-span send arrives ≥ Δ later,
+/// past the span's end), so the rollbacks the previous test pins can only
+/// come from deepened windows. This cell makes that explicit: the sparse
+/// regime must escalate to ≥ 2Δ, rollbacks must fire inside the deepened
+/// span and charge the incremental-checkpoint journal, and both the deep
+/// run and a run capped at 1Δ must stay bit-identical to the sequential
+/// loop — the cap moves counters, never results.
+#[test]
+fn multi_delta_windows_escalate_and_stay_bit_identical() {
+    let mk = |threads: u32, cap: u32| {
+        let cl = cluster(4, 4);
+        let cfg = DesConfig::new(
+            LoopParams::new(20_000, cl.total_ranks()),
+            TechniqueKind::Ss,
+            ExecutionModel::Dca,
+            cl,
+            IterationCost::Constant(1e-6),
+        )
+        .with_threads(threads)
+        .with_pdes_mode(PdesMode::Hybrid)
+        .with_window_mult_max(cap);
+        simulate(&cfg).unwrap()
+    };
+    let base = fingerprint(&mk(1, WINDOW_MULT_MAX));
+    for t in THREADS {
+        let deep = mk(t, WINDOW_MULT_MAX);
+        let p = deep.pdes.as_ref().unwrap();
+        assert!(p.speculated_events > 0, "the window must open on this cell (t={t})");
+        assert!(
+            p.window_multiple >= 2,
+            "the sparse regime must escalate past 1Δ (t={t}, got {})",
+            p.window_multiple
+        );
+        assert!(p.rollbacks > 0, "stragglers must land inside the deepened span (t={t})");
+        assert!(
+            p.checkpoint_bytes > 0,
+            "deepened windows must charge the undo journal (t={t})"
+        );
+        assert_eq!(base, fingerprint(&deep), "deep t={t}");
+
+        let capped = mk(t, 1);
+        let p = capped.pdes.as_ref().unwrap();
+        assert!(p.speculated_events > 0, "1Δ speculation still runs (t={t})");
+        assert!(p.window_multiple <= 1, "t={t}: cap ignored ({})", p.window_multiple);
+        assert_eq!(p.rollbacks, 0, "1Δ spans admit no stragglers (t={t})");
+        assert_eq!(base, fingerprint(&capped), "capped t={t}");
+    }
+}
+
 /// A seeded multi-tenant session: `des_threads` fans the `--slowdown` solo
 /// baselines out, and the whole report — session outcome and every
 /// slowdown ratio — must not depend on the thread count.
@@ -286,5 +342,141 @@ fn session_slowdowns_are_thread_count_invariant() {
         assert_eq!(o1.makespan, o.makespan, "t={t}");
         assert_eq!(o1.messages, o.messages, "t={t}");
         assert_eq!(o1.jain_fairness, o.jain_fairness, "t={t}");
+    }
+}
+
+/// Per-tenant grant sequences must match exactly; the merged interleaving
+/// is allowed to permute only *simultaneous* cross-domain grants
+/// (docs/tenancy.md), which per-tenant projection is blind to.
+fn per_tenant_traces(trace: &[(TenantId, u64)], tenants: usize) -> Vec<Vec<u64>> {
+    let mut per: Vec<Vec<u64>> = vec![Vec::new(); tenants];
+    for &(id, sz) in trace {
+        per[id as usize].push(sz);
+    }
+    per
+}
+
+/// The 120-tenant acceptance mix (the `tests/tenants.rs` geometry: seeded
+/// sizes, five techniques, staggered arrivals, varied weights, random
+/// overlapping block placements over the 256-rank cluster) run through the
+/// sharded session loop. Everything the session reports — per-tenant
+/// assignments, completions, turnarounds, the Jain index, per-rank exec
+/// spans, the grant trace — must be bit-identical to the sequential loop
+/// at every worker count, with zero rollbacks: the arbiter-domain
+/// partition leaves nothing to misspeculate.
+#[test]
+fn sharded_session_matches_sequential_on_the_acceptance_mix() {
+    const TECHS: [TechniqueKind; 5] = [
+        TechniqueKind::Ss,
+        TechniqueKind::Gss,
+        TechniqueKind::Tss,
+        TechniqueKind::Fac2,
+        TechniqueKind::Fiss,
+    ];
+    let mk = |threads: u32| -> SessionOutcome {
+        let mut cfg = SessionConfig::new(ClusterConfig::minihpc()).with_des_threads(threads);
+        cfg.record_exec_spans = true;
+        cfg.record_grant_trace = true;
+        let ranks = cfg.cluster.total_ranks();
+        for i in 0..120u32 {
+            let h = splitmix64(0x5E55 ^ (0xACCE97 + i as u64));
+            let n = 500 + h % 1_501; // 500..=2000
+            let tech = TECHS[((h >> 8) % TECHS.len() as u64) as usize];
+            let span = (4u32 << ((h >> 16) % 5)).min(ranks); // 4..64 ranks
+            let offset = ((h >> 24) % ranks as u64) as u32;
+            let weight = 1 + (h >> 32) % 4;
+            cfg = cfg.admit(
+                TenantSpec::new(format!("t{i}"), n, tech)
+                    .arriving_at(i as f64 * 5e-5)
+                    .weighted(weight)
+                    .placed_at(offset, span),
+            );
+        }
+        simulate_session(&cfg).unwrap()
+    };
+    let seq = mk(1);
+    assert!(seq.pdes.is_none(), "one thread keeps the sequential loop");
+    let seq_traces = per_tenant_traces(&seq.grant_trace, seq.tenants.len());
+    for t in THREADS {
+        let par = mk(t);
+        let p = par.pdes.as_ref().expect("the sharded loop must engage");
+        assert_eq!(p.rollbacks, 0, "nothing to misspeculate across domains (t={t})");
+        assert!(p.arbiter_epochs > 0, "t={t}");
+        assert_eq!(seq.makespan, par.makespan, "t={t}");
+        assert_eq!(seq.events, par.events, "t={t}");
+        assert_eq!(seq.messages, par.messages, "t={t}");
+        assert_eq!(seq.jain_fairness, par.jain_fairness, "t={t}");
+        assert_eq!(seq.exec_spans, par.exec_spans, "t={t}");
+        for (a, b) in seq.tenants.iter().zip(&par.tenants) {
+            assert_eq!(a.state, b.state, "t={t} tenant {}", a.id);
+            assert_eq!(a.completion, b.completion, "t={t} tenant {}", a.id);
+            assert_eq!(a.turnaround, b.turnaround, "t={t} tenant {}", a.id);
+            assert_eq!(a.granted_iters, b.granted_iters, "t={t} tenant {}", a.id);
+            assert_eq!(
+                a.result.sorted_assignments(),
+                b.result.sorted_assignments(),
+                "t={t} tenant {}",
+                a.id
+            );
+        }
+        assert_eq!(seq.grant_trace.len(), par.grant_trace.len(), "t={t}");
+        assert_eq!(
+            seq_traces,
+            per_tenant_traces(&par.grant_trace, par.tenants.len()),
+            "t={t}"
+        );
+    }
+}
+
+/// Four disjoint placement blocks form four arbiter domains: the sharded
+/// loop must report `shards == 4` with rollback-free hybrid epochs, and
+/// the whole `--slowdown` report — every ratio, the mean, the session
+/// outcome — must be bit-identical to the sequential loop.
+#[test]
+fn disjoint_placements_shard_into_domains_and_stay_bit_identical() {
+    const TECHS: [TechniqueKind; 4] =
+        [TechniqueKind::Ss, TechniqueKind::Gss, TechniqueKind::Tss, TechniqueKind::Fac2];
+    let mk = |threads: u32| {
+        let mut cfg = SessionConfig::new(ClusterConfig::small(32))
+            .with_des_threads(threads)
+            .with_des_mode(PdesMode::Hybrid);
+        cfg.record_grant_trace = true;
+        for d in 0..4u64 {
+            let base = (d * 8) as u32;
+            cfg = cfg
+                .admit(
+                    TenantSpec::new(format!("d{d}-bulk"), 6_000, TECHS[d as usize])
+                        .placed_at(base, 8),
+                )
+                .admit(
+                    TenantSpec::new(format!("d{d}-spike"), 1_200, TECHS[((d + 1) % 4) as usize])
+                        .arriving_at(2e-3 * (d + 1) as f64)
+                        .weighted(2)
+                        .placed_at(base, 8),
+                );
+        }
+        session_slowdowns(&cfg).unwrap()
+    };
+    let (seq, s1, m1) = mk(1);
+    assert!(seq.pdes.is_none());
+    let seq_traces = per_tenant_traces(&seq.grant_trace, seq.tenants.len());
+    for t in THREADS {
+        let (out, s, m) = mk(t);
+        let p = out.pdes.as_ref().expect("the sharded loop must engage");
+        assert_eq!(p.shards, 4, "four disjoint blocks ⇒ four arbiter domains (t={t})");
+        assert_eq!(p.mode, PdesMode::Hybrid, "t={t}");
+        assert_eq!(p.rollbacks, 0, "t={t}");
+        assert!(p.arbiter_epochs > 0, "t={t}");
+        assert_eq!(s1, s, "t={t}");
+        assert_eq!(m1, m, "t={t}");
+        assert_eq!(seq.makespan, out.makespan, "t={t}");
+        assert_eq!(seq.events, out.events, "t={t}");
+        assert_eq!(seq.messages, out.messages, "t={t}");
+        assert_eq!(seq.jain_fairness, out.jain_fairness, "t={t}");
+        assert_eq!(
+            seq_traces,
+            per_tenant_traces(&out.grant_trace, out.tenants.len()),
+            "t={t}"
+        );
     }
 }
